@@ -1,0 +1,124 @@
+//! End-to-end driver (DESIGN.md §6 / EXPERIMENTS.md §E6): load the REAL
+//! AOT-compiled transformer (prefill + decode HLO via PJRT-CPU), serve
+//! batched requests from the embedded corpus over the simulated 4-node
+//! cluster, and report throughput/latency — healthy, under an injected
+//! pathology, and with the DPU closed loop mitigating it.
+//!
+//! Requires artifacts: `make artifacts` first. Run:
+//!
+//!     cargo run --release --example serve_cluster
+
+use dpulens::coordinator::{Scenario, ScenarioCfg};
+use dpulens::dpu::detectors::Condition;
+use dpulens::engine::ComputeBackend;
+use dpulens::metrics::ServeMetrics;
+use dpulens::runtime::{cpu_client, ArtifactSet, TransformerSession};
+use dpulens::sim::{SimDur, SimTime, MS};
+use dpulens::util::table::Table;
+use dpulens::workload::tokenizer::ToyTokenizer;
+
+fn cfg_base() -> ScenarioCfg {
+    let mut cfg = ScenarioCfg::default();
+    cfg.duration = SimDur::from_ms(900);
+    cfg.calib_windows = 150;
+    cfg.max_requests = 96; // bound real-compute wallclock
+    cfg.workload.arrival = dpulens::sim::dist::Arrival::Poisson { rate: 400.0 };
+    cfg.workload.prompt_len = dpulens::sim::dist::LengthDist::Uniform { lo: 8, hi: 48 };
+    cfg.workload.output_len = dpulens::sim::dist::LengthDist::Uniform { lo: 4, hi: 10 };
+    cfg
+}
+
+fn real_backends(cfg: &ScenarioCfg) -> Vec<Box<dyn ComputeBackend>> {
+    let client = cpu_client().expect("PJRT CPU client");
+    let arts = ArtifactSet::open_default().expect("run `make artifacts` first");
+    println!(
+        "loaded artifacts: preset={} ({} layers, d={}, vocab={}), batch={}",
+        arts.manifest.preset,
+        arts.manifest.layers,
+        arts.manifest.d_model,
+        arts.manifest.vocab,
+        arts.manifest.batch
+    );
+    let n_rep = dpulens::engine::build_replicas(&cfg.cluster, cfg.engine.nodes_per_stage).len();
+    (0..n_rep)
+        .map(|_| {
+            Box::new(TransformerSession::load(&client, &arts).expect("compile artifacts"))
+                as Box<dyn ComputeBackend>
+        })
+        .collect()
+}
+
+fn main() {
+    println!("=== dpulens end-to-end: real compiled transformer over the simulated cluster ===\n");
+
+    // Show a real generation first: tokens in, tokens out, through PJRT.
+    {
+        let client = cpu_client().expect("PJRT CPU client");
+        let arts = ArtifactSet::open_default().expect("run `make artifacts` first");
+        let mut session = TransformerSession::load(&client, &arts).expect("load");
+        let tok = ToyTokenizer::new(arts.manifest.vocab);
+        let prompt_text = dpulens::workload::corpus::prompt(0);
+        let prompt = tok.encode(prompt_text);
+        let n = prompt.len().min(arts.manifest.prefill_len);
+        let slots = [0usize];
+        let first = session.prefill(&slots, &[prompt[..n].to_vec()]);
+        let mut generated = vec![first[0]];
+        let mut pos = n as u32;
+        for _ in 0..8 {
+            let next = session.decode(&slots, &[*generated.last().unwrap()], &[pos]);
+            generated.push(next[0]);
+            pos += 1;
+        }
+        println!("prompt ({} tokens): {:.60}...", n, prompt_text);
+        println!("generated ids via compiled HLO: {}", tok.render(&generated));
+        println!(
+            "(PJRT calls so far: {} prefill, {} decode)\n",
+            session.prefill_calls, session.decode_calls
+        );
+    }
+
+    let mut table = Table::new("E6: end-to-end serving (real compute)")
+        .header(&ServeMetrics::table_header());
+
+    // Phase 1: healthy.
+    let cfg = cfg_base();
+    let res_healthy = Scenario::with_backends(cfg.clone(), real_backends(&cfg)).run();
+    println!("[healthy]   {}", res_healthy.metrics.brief());
+    table.row(res_healthy.metrics.row_cells("healthy"));
+
+    // Phase 2: PC1 (H2D starvation) injected, no mitigation.
+    let mut cfg_inj = cfg_base();
+    cfg_inj.inject = Some((Condition::Pc1H2dStarvation, SimTime(350 * MS)));
+    let res_inj = Scenario::with_backends(cfg_inj.clone(), real_backends(&cfg_inj)).run();
+    println!(
+        "[injected]  {} | detected PC1: {}",
+        res_inj.metrics.brief(),
+        res_inj.detected(Condition::Pc1H2dStarvation)
+    );
+    table.row(res_inj.metrics.row_cells("PC1 injected"));
+
+    // Phase 3: same injection, closed loop on.
+    let mut cfg_mit = cfg_inj.clone();
+    cfg_mit.mitigate = true;
+    let res_mit = Scenario::with_backends(cfg_mit.clone(), real_backends(&cfg_mit)).run();
+    println!(
+        "[mitigated] {} | actions: {:?}",
+        res_mit.metrics.brief(),
+        res_mit.actions.iter().map(|a| format!("{:?}", a.directive)).collect::<Vec<_>>()
+    );
+    table.row(res_mit.metrics.row_cells("PC1 + closed loop"));
+
+    println!("\n{}", table.render());
+    let lat = res_inj
+        .detection_latency(Condition::Pc1H2dStarvation)
+        .map(|d| format!("{d}"))
+        .unwrap_or_else(|| "-".into());
+    println!("PC1 detection latency: {lat}");
+    println!(
+        "tok/s: healthy {:.0} -> injected {:.0} -> mitigated {:.0}",
+        res_healthy.metrics.tok_per_s(),
+        res_inj.metrics.tok_per_s(),
+        res_mit.metrics.tok_per_s()
+    );
+    println!("\nreal compute: {}", res_healthy.real_compute);
+}

@@ -1,0 +1,187 @@
+"""AOT compile path: lower L2/L1 to HLO **text** artifacts for the Rust runtime.
+
+Run once at build time (``make artifacts``). Emits into ``--outdir``:
+
+  prefill.hlo.txt      prefill(tokens, lens, *weights) -> (logits, kv)
+  decode_step.hlo.txt  decode_step(tokens, positions, kv, *weights) -> (logits, kv)
+  detector.hlo.txt     window_features(windows, baseline) -> (features, z)
+  weights.bin          flat f32 weights, param_specs order (self-describing)
+  MANIFEST.txt         key=value config echo + param table (validated by Rust)
+  golden.txt           numeric goldens for the Rust integration tests
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published ``xla`` 0.1.6 crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import functools
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .config import DETECTOR, PRESETS, DEFAULT_PRESET
+from .kernels import scorer
+
+MAGIC = b"DPLW0001"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_weights_bin(path, cfg, params):
+    """Self-describing little-endian container; order == param_specs order."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        specs = cfg.param_specs()
+        f.write(struct.pack("<I", len(specs)))
+        for (name, shape), arr in zip(specs, params):
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", len(shape)))
+            for d in shape:
+                f.write(struct.pack("<I", d))
+            data = np.asarray(arr, dtype="<f4").tobytes()
+            f.write(struct.pack("<Q", len(data)))
+            f.write(data)
+
+
+def golden_inputs(cfg):
+    """Deterministic prompt block both sides can derive without sharing RNGs."""
+    b, s0 = cfg.batch, cfg.prefill_len
+    tokens = np.fromfunction(
+        lambda i, j: (7 * i + 11 * j + 3) % cfg.vocab, (b, s0), dtype=np.int64
+    ).astype(np.int32)
+    lens = np.array(
+        [max(1, (s0 // 2 + 5 * i + 1) % s0 + 1) for i in range(b)], dtype=np.int32
+    )
+    return jnp.asarray(tokens), jnp.asarray(lens)
+
+
+def emit_golden(path, cfg, params, steps):
+    """Run prefill + greedy decode in python; record logit samples for Rust."""
+    tokens, lens = golden_inputs(cfg)
+    logits, kv = model.prefill(cfg, tokens, lens, *params)
+    lines = [f"# golden for preset={cfg.name} steps={steps}"]
+    logits_np = np.asarray(logits)
+    for b in range(cfg.batch):
+        for j in range(8):
+            lines.append(f"prefill_logit {b} {j} {logits_np[b, j]:.6e}")
+    cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    positions = lens  # next slot after the prompt
+    for t in range(steps):
+        for b in range(cfg.batch):
+            lines.append(f"greedy_token {t} {b} {int(cur[b])}")
+        logits, kv = model.decode_step(cfg, cur, positions, kv, *params)
+        logits_np = np.asarray(logits)
+        for b in range(cfg.batch):
+            for j in range(8):
+                lines.append(f"decode_logit {t} {b} {j} {logits_np[b, j]:.6e}")
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        positions = positions + 1
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def emit_manifest(path, cfg, det, artifacts):
+    lines = [
+        "format=1",
+        f"preset={cfg.name}",
+        f"layers={cfg.layers}",
+        f"d_model={cfg.d_model}",
+        f"n_heads={cfg.n_heads}",
+        f"head_dim={cfg.head_dim}",
+        f"ffn={cfg.ffn}",
+        f"vocab={cfg.vocab}",
+        f"max_seq={cfg.max_seq}",
+        f"prefill_len={cfg.prefill_len}",
+        f"batch={cfg.batch}",
+        f"detector_windows={det.windows}",
+        f"detector_samples={det.samples}",
+        f"detector_features={det.features}",
+    ]
+    lines += [f"artifact={a}" for a in artifacts]
+    for name, shape in cfg.param_specs():
+        lines.append(f"param={name}:{'x'.join(str(d) for d in shape)}")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--preset", default=DEFAULT_PRESET, choices=sorted(PRESETS))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--golden-steps", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    det = DETECTOR
+    os.makedirs(args.outdir, exist_ok=True)
+    params = model.init_params(cfg, args.seed)
+    wspecs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in cfg.param_specs()]
+
+    def emit(name, fn, example_args):
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.outdir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    i32 = jnp.int32
+    emit(
+        "prefill.hlo.txt",
+        functools.partial(model.prefill, cfg),
+        [
+            jax.ShapeDtypeStruct((cfg.batch, cfg.prefill_len), i32),
+            jax.ShapeDtypeStruct((cfg.batch,), i32),
+            *wspecs,
+        ],
+    )
+    emit(
+        "decode_step.hlo.txt",
+        functools.partial(model.decode_step, cfg),
+        [
+            jax.ShapeDtypeStruct((cfg.batch,), i32),
+            jax.ShapeDtypeStruct((cfg.batch,), i32),
+            jax.ShapeDtypeStruct(cfg.kv_shape(), jnp.float32),
+            *wspecs,
+        ],
+    )
+    emit(
+        "detector.hlo.txt",
+        scorer.window_features,
+        [
+            jax.ShapeDtypeStruct((det.windows, det.samples), jnp.float32),
+            jax.ShapeDtypeStruct((det.windows, 2), jnp.float32),
+        ],
+    )
+
+    write_weights_bin(os.path.join(args.outdir, "weights.bin"), cfg, params)
+    emit_golden(os.path.join(args.outdir, "golden.txt"), cfg, params, args.golden_steps)
+    emit_manifest(
+        os.path.join(args.outdir, "MANIFEST.txt"),
+        cfg,
+        det,
+        ["prefill.hlo.txt", "decode_step.hlo.txt", "detector.hlo.txt"],
+    )
+    print("AOT artifacts complete", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

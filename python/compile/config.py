@@ -1,0 +1,115 @@
+"""Model + detector configuration shared by the L1/L2 compile path.
+
+The Rust side never imports this; everything it needs is echoed into
+``artifacts/MANIFEST.txt`` by ``aot.py`` and validated at load time.
+"""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A small decoder-only transformer preset.
+
+    ``d_model == n_heads * head_dim`` is required (checked below). ``batch``
+    and ``prefill_len`` are baked into the AOT artifacts: PJRT executables are
+    fixed-shape, so the serving engine packs/pads to these.
+    """
+
+    name: str
+    layers: int
+    d_model: int
+    n_heads: int
+    head_dim: int
+    ffn: int
+    vocab: int
+    max_seq: int
+    prefill_len: int
+    batch: int
+
+    def __post_init__(self) -> None:
+        assert self.d_model == self.n_heads * self.head_dim, (
+            f"{self.name}: d_model {self.d_model} != n_heads*head_dim "
+            f"{self.n_heads}*{self.head_dim}"
+        )
+        assert self.prefill_len <= self.max_seq
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Ordered (name, shape) list — THE parameter order contract.
+
+        ``aot.py`` writes weights.bin in exactly this order and the lowered
+        HLO entry computations take weights as trailing positional parameters
+        in exactly this order. The LM head is tied to ``embed``.
+        """
+        d, h = self.d_model, self.n_heads * self.head_dim
+        specs: List[Tuple[str, Tuple[int, ...]]] = [
+            ("embed", (self.vocab, d)),
+            ("pos_embed", (self.max_seq, d)),
+        ]
+        for l in range(self.layers):
+            p = f"layer{l}."
+            specs += [
+                (p + "ln1_scale", (d,)),
+                (p + "ln1_bias", (d,)),
+                (p + "wq", (d, h)),
+                (p + "wk", (d, h)),
+                (p + "wv", (d, h)),
+                (p + "wo", (h, d)),
+                (p + "ln2_scale", (d,)),
+                (p + "ln2_bias", (d,)),
+                (p + "w_up", (d, self.ffn)),
+                (p + "b_up", (self.ffn,)),
+                (p + "w_down", (self.ffn, d)),
+                (p + "b_down", (d,)),
+            ]
+        specs += [("ln_f_scale", (d,)), ("ln_f_bias", (d,))]
+        return specs
+
+    def n_params(self) -> int:
+        total = 0
+        for _, shape in self.param_specs():
+            n = 1
+            for s in shape:
+                n *= s
+            total += n
+        return total
+
+    def kv_shape(self) -> Tuple[int, ...]:
+        """KV cache layout: [layers, 2 (k/v), batch, heads, max_seq, head_dim]."""
+        return (
+            self.layers,
+            2,
+            self.batch,
+            self.n_heads,
+            self.max_seq,
+            self.head_dim,
+        )
+
+
+@dataclass(frozen=True)
+class DetectorConfig:
+    """Telemetry window scorer shapes (DPU-offloaded anomaly scoring)."""
+
+    windows: int = 64   # windows scored per call (W)
+    samples: int = 256  # telemetry samples per window (N)
+    features: int = 8   # features per window (F) — see kernels/scorer.py
+
+
+PRESETS = {
+    "toy": ModelConfig(
+        name="toy", layers=2, d_model=128, n_heads=4, head_dim=32,
+        ffn=512, vocab=512, max_seq=64, prefill_len=32, batch=2,
+    ),
+    "small": ModelConfig(
+        name="small", layers=4, d_model=256, n_heads=8, head_dim=32,
+        ffn=1024, vocab=2048, max_seq=128, prefill_len=64, batch=4,
+    ),
+    "base": ModelConfig(
+        name="base", layers=8, d_model=512, n_heads=8, head_dim=64,
+        ffn=2048, vocab=4096, max_seq=256, prefill_len=128, batch=8,
+    ),
+}
+
+DEFAULT_PRESET = "small"
+DETECTOR = DetectorConfig()

@@ -1,0 +1,128 @@
+"""L1 Pallas attention kernels (prefill + decode).
+
+Hardware adaptation (paper targets CUDA GPUs; we target the TPU-shaped Pallas
+model, run under interpret=True on CPU — see DESIGN.md §Hardware-Adaptation):
+
+* The CUDA version of this hot-spot would tile Q into threadblocks and stream
+  K/V through shared memory. Here the same schedule is expressed as the
+  Pallas ``grid`` (batch, head, q-block) plus an in-kernel flash-style loop
+  over K-chunks, so each grid step touches a bounded VMEM working set:
+  ``BQ*Dh + KB*Dh + BQ*KB`` floats instead of ``S*S``.
+* Contractions are plain ``jnp.dot``s shaped for the MXU (``[BQ,Dh]x[Dh,KB]``)
+  rather than WMMA fragments.
+
+``interpret=True`` is mandatory in this environment: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT client cannot execute. Interpret mode lowers
+to plain HLO, which is exactly what the Rust runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_prefill_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, *, bq, kb, s):
+    """One (batch, head, q-block) grid step of flash-style causal attention."""
+    iq = pl.program_id(2)
+    q = q_ref[0, 0]  # [BQ, Dh] — this q-tile's VMEM block
+    k = k_ref[0, 0]  # [S, Dh]
+    v = v_ref[0, 0]  # [S, Dh]
+    seq_len = lens_ref[0]
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)  # [BQ,1]
+    n_chunks = s // kb
+
+    def body(c, carry):
+        m, l, acc = carry
+        k_chunk = jax.lax.dynamic_slice(k, (c * kb, 0), (kb, dh))  # [KB, Dh]
+        v_chunk = jax.lax.dynamic_slice(v, (c * kb, 0), (kb, dh))
+        scores = jnp.dot(q, k_chunk.T) * scale  # [BQ, KB]
+        k_pos = c * kb + jax.lax.broadcasted_iota(jnp.int32, (1, kb), 1)
+        mask = (k_pos <= q_pos) & (k_pos < seq_len)  # causal & within-prompt
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new)
+        l_new = l * alpha + p.sum(axis=1, keepdims=True)
+        acc_new = acc * alpha + jnp.dot(p, v_chunk)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq, 1), jnp.float32)
+    acc0 = jnp.zeros((bq, dh), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, acc0))
+    o_ref[0, 0] = acc / jnp.maximum(l, 1e-30)
+
+
+def mha_prefill(q, k, v, lens, *, block_q=32, block_k=32):
+    """Flash-style masked causal attention over a padded prompt block.
+
+    q, k, v: [B, H, S, Dh] f32;  lens: [B] i32. Returns [B, H, S, Dh].
+    Matches ``ref.mha_prefill_ref`` on rows < len (rows >= len are garbage by
+    contract). S must be divisible by the block sizes (engine pads prompts).
+    """
+    b, h, s, dh = q.shape
+    bq = min(block_q, s)
+    kb = min(block_k, s)
+    assert s % bq == 0 and s % kb == 0, (s, bq, kb)
+    grid = (b, h, s // bq)
+    kernel = functools.partial(_flash_prefill_kernel, bq=bq, kb=kb, s=s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, qi: (bi,)),
+            pl.BlockSpec((1, 1, bq, dh), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, s, dh), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, dh), lambda bi, hi, qi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dh), jnp.float32),
+        interpret=True,
+    )(lens, q, k, v)
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref):
+    """One (batch, head) grid step: single-query attention over the KV cache."""
+    q = q_ref[0, 0]  # [Dh]
+    k = k_ref[0, 0]  # [S, Dh]
+    v = v_ref[0, 0]  # [S, Dh]
+    pos = pos_ref[0]
+    s, dh = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.dot(k, q) * scale  # [S]
+    slot = jax.lax.broadcasted_iota(jnp.int32, (s,), 0)
+    scores = jnp.where(slot <= pos, scores, NEG_INF)
+    m = scores.max()
+    p = jnp.exp(scores - m)
+    o_ref[0, 0] = jnp.dot(p, v) / p.sum()
+
+
+def mha_decode(q, k_cache, v_cache, positions):
+    """Single-token decode attention against the KV cache.
+
+    q: [B, H, Dh];  k_cache/v_cache: [B, H, S, Dh];  positions: [B] i32
+    (slot of the current token, already written into the cache).
+    Returns [B, H, Dh]. Matches ``ref.mha_decode_ref``.
+    """
+    b, h, s, dh = k_cache.shape
+    grid = (b, h)
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi: (bi,)),
+            pl.BlockSpec((1, 1, dh), lambda bi, hi: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, s, dh), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, dh), lambda bi, hi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda bi, hi: (bi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+        interpret=True,
+    )(positions, q, k_cache, v_cache)

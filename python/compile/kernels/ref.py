@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: pytest asserts the Pallas kernels
+(interpret=True) match these within tolerance, and hypothesis sweeps shapes
+against them. They are deliberately written in the most obvious way possible.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_prefill_ref(q, k, v, lens):
+    """Masked causal multi-head attention over a padded prompt block.
+
+    q, k, v: [B, H, S, Dh] float32
+    lens:    [B] int32 -- true prompt length per sequence (<= S)
+    returns: [B, H, S, Dh]
+
+    Mask: query i attends key j iff j <= i and j < len_b. Rows with
+    i >= len_b are garbage by contract (callers gather only row len_b-1).
+    """
+    b, h, s, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    causal = kj <= qi  # [S, S]
+    valid = jnp.arange(s)[None, :] < lens[:, None]  # [B, S] keys within prompt
+    mask = causal[None, :, :] & valid[:, None, :]  # [B, S, S]
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def mha_decode_ref(q, k_cache, v_cache, positions):
+    """Single-token decode attention against a KV cache.
+
+    q:         [B, H, Dh]      -- current token's query
+    k_cache:   [B, H, S, Dh]   -- keys, valid at slots 0..=pos_b
+    v_cache:   [B, H, S, Dh]
+    positions: [B] int32       -- slot of the current token (already written)
+    returns:   [B, H, Dh]
+    """
+    b, h, s, dh = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.einsum("bhd,bhkd->bhk", q, k_cache) * scale
+    kj = jnp.arange(s)[None, :]  # [1, S]
+    mask = kj <= positions[:, None]  # [B, S]
+    scores = jnp.where(mask[:, None, :], scores, NEG_INF)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhk,bhkd->bhd", p, v_cache)
+
+
+def window_features_ref(windows, baseline):
+    """Telemetry window featurizer + anomaly z-score.
+
+    windows:  [W, N] float32 -- per-window raw samples (e.g. inter-arrival
+              gaps in ns, DMA sizes, queue depths)
+    baseline: [W, 2] float32 -- (mean, std) of the healthy baseline for the
+              window's stream
+    returns:  (features [W, 8], z [W])
+
+    Features per window (order is a contract with the Rust side):
+      0 mean, 1 std, 2 max, 3 min, 4 cov (std/mean), 5 burstiness (max/mean),
+      6 spread (max-min), 7 z-score of mean vs baseline.
+    """
+    eps = 1e-6
+    mean = windows.mean(axis=1)
+    var = windows.var(axis=1)
+    std = jnp.sqrt(var)
+    mx = windows.max(axis=1)
+    mn = windows.min(axis=1)
+    cov = std / (jnp.abs(mean) + eps)
+    burst = mx / (jnp.abs(mean) + eps)
+    spread = mx - mn
+    z = (mean - baseline[:, 0]) / (baseline[:, 1] + eps)
+    feats = jnp.stack([mean, std, mx, mn, cov, burst, spread, z], axis=1)
+    return feats, z
+
+
+def layernorm_ref(x, scale, bias, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias

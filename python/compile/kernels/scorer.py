@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: DPU telemetry window featurizer + anomaly z-score.
+
+The paper positions the BlueField-3 as an observability node that scores
+telemetry inline without burdening the host. This kernel is that scoring
+hot-spot: it turns a batch of raw telemetry windows (inter-arrival gaps, DMA
+sizes, queue depths, ...) into the feature vector the Rust-side detectors
+consume, plus a z-score against the healthy baseline.
+
+Feature order is a contract with ``rust/src/dpu/scorer.rs`` (and mirrored by
+``ref.window_features_ref``):
+  0 mean, 1 std, 2 max, 3 min, 4 cov, 5 burstiness, 6 spread, 7 z.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-6
+N_FEATURES = 8
+
+
+def _scorer_kernel(w_ref, b_ref, f_ref, z_ref):
+    x = w_ref[0]  # [N]
+    base_mean = b_ref[0, 0]
+    base_std = b_ref[0, 1]
+    n = x.shape[0]
+    mean = x.sum() / n
+    var = ((x - mean) ** 2).sum() / n
+    std = jnp.sqrt(var)
+    mx = x.max()
+    mn = x.min()
+    cov = std / (jnp.abs(mean) + EPS)
+    burst = mx / (jnp.abs(mean) + EPS)
+    spread = mx - mn
+    z = (mean - base_mean) / (base_std + EPS)
+    f_ref[0] = jnp.stack([mean, std, mx, mn, cov, burst, spread, z])
+    z_ref[0] = z
+
+
+def window_features(windows, baseline):
+    """windows [W, N] f32, baseline [W, 2] f32 -> (features [W, 8], z [W])."""
+    w, n = windows.shape
+    return pl.pallas_call(
+        _scorer_kernel,
+        grid=(w,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda wi: (wi, 0)),
+            pl.BlockSpec((1, 2), lambda wi: (wi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, N_FEATURES), lambda wi: (wi, 0)),
+            pl.BlockSpec((1,), lambda wi: (wi,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((w, N_FEATURES), jnp.float32),
+            jax.ShapeDtypeStruct((w,), jnp.float32),
+        ],
+        interpret=True,
+    )(windows, baseline)

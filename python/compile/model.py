@@ -1,0 +1,148 @@
+"""L2: decoder-only transformer (prefill + single-step decode) in JAX.
+
+Calls the L1 Pallas kernels for the attention hot-spot. Lowered ONCE by
+``aot.py`` to HLO text; the Rust runtime executes the compiled artifacts on
+the request path — Python never serves.
+
+Parameter passing contract: both entry points take the flat, ordered weight
+list produced by ``ModelConfig.param_specs()`` as trailing positional
+arguments (see ``config.py``). ``weights.bin`` is written in the same order.
+
+KV cache layout: ``[L, 2, B, H, S_max, Dh]`` f32 (2 = key/value). Prefill
+fills slots ``[0, prefill_len)``; decode writes slot ``positions[b]`` then
+attends over ``slot <= positions[b]``.
+"""
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import attention
+
+LN_EPS = 1e-5
+
+
+def _layernorm(x, scale, bias):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + LN_EPS) * scale + bias
+
+
+def _unflatten(cfg: ModelConfig, flat: Sequence[jax.Array]) -> dict:
+    specs = cfg.param_specs()
+    assert len(flat) == len(specs), (len(flat), len(specs))
+    params = {}
+    for (name, shape), arr in zip(specs, flat):
+        assert tuple(arr.shape) == tuple(shape), (name, arr.shape, shape)
+        params[name] = arr
+    return params
+
+
+def _split_heads(x, n_heads, head_dim):
+    # [B, S, H*Dh] -> [B, H, S, Dh]
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    # [B, H, S, Dh] -> [B, S, H*Dh]
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def _mlp(x, p, prefix):
+    hcur = jnp.dot(x, p[prefix + "w_up"]) + p[prefix + "b_up"]
+    hcur = jax.nn.gelu(hcur)
+    return jnp.dot(hcur, p[prefix + "w_down"]) + p[prefix + "b_down"]
+
+
+def prefill(cfg: ModelConfig, tokens, lens, *flat_weights):
+    """Prefill a padded prompt block.
+
+    tokens: [B, S0] i32 (padded with any id beyond lens)
+    lens:   [B] i32, 1 <= lens <= S0
+    returns (logits [B, V] f32 — next-token logits at position len-1 per seq,
+             kv [L, 2, B, H, S_max, Dh] f32 — slots [0, S0) filled)
+    """
+    p = _unflatten(cfg, flat_weights)
+    b, s0 = tokens.shape
+    assert s0 == cfg.prefill_len and b == cfg.batch
+
+    x = p["embed"][tokens] + p["pos_embed"][None, :s0, :]  # [B, S0, D]
+
+    kv_layers = []
+    for l in range(cfg.layers):
+        pre = f"layer{l}."
+        hnorm = _layernorm(x, p[pre + "ln1_scale"], p[pre + "ln1_bias"])
+        q = _split_heads(jnp.dot(hnorm, p[pre + "wq"]), cfg.n_heads, cfg.head_dim)
+        k = _split_heads(jnp.dot(hnorm, p[pre + "wk"]), cfg.n_heads, cfg.head_dim)
+        v = _split_heads(jnp.dot(hnorm, p[pre + "wv"]), cfg.n_heads, cfg.head_dim)
+        attn = attention.mha_prefill(q, k, v, lens)  # [B, H, S0, Dh]
+        x = x + jnp.dot(_merge_heads(attn), p[pre + "wo"])
+        hnorm2 = _layernorm(x, p[pre + "ln2_scale"], p[pre + "ln2_bias"])
+        x = x + _mlp(hnorm2, p, pre)
+        pad = cfg.max_seq - s0
+        k_pad = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_layers.append(jnp.stack([k_pad, v_pad], axis=0))  # [2,B,H,Smax,Dh]
+
+    kv = jnp.stack(kv_layers, axis=0)  # [L, 2, B, H, Smax, Dh]
+
+    x = _layernorm(x, p["ln_f_scale"], p["ln_f_bias"])
+    # Gather the hidden state at the last real token of each sequence.
+    last = jnp.clip(lens - 1, 0, s0 - 1).astype(jnp.int32)  # [B]
+    h_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0, :]
+    logits = jnp.dot(h_last, p["embed"].T)  # tied LM head, [B, V]
+    return logits, kv
+
+
+def decode_step(cfg: ModelConfig, tokens, positions, kv, *flat_weights):
+    """One autoregressive step for a ragged batch.
+
+    tokens:    [B] i32 — current input token per sequence
+    positions: [B] i32 — its slot (0-based); KV slots < pos already filled
+    kv:        [L, 2, B, H, S_max, Dh] f32
+    returns (logits [B, V], kv')
+    """
+    p = _unflatten(cfg, flat_weights)
+    (b,) = tokens.shape
+    assert b == cfg.batch
+
+    x = p["embed"][tokens] + p["pos_embed"][positions]  # [B, D]
+    batch_ix = jnp.arange(cfg.batch)
+
+    for l in range(cfg.layers):
+        pre = f"layer{l}."
+        hnorm = _layernorm(x, p[pre + "ln1_scale"], p[pre + "ln1_bias"])
+        q = jnp.dot(hnorm, p[pre + "wq"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        k = jnp.dot(hnorm, p[pre + "wk"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        v = jnp.dot(hnorm, p[pre + "wv"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        # Scatter this token's K/V into its per-sequence slot.
+        kv = kv.at[l, 0, batch_ix, :, positions, :].set(k)
+        kv = kv.at[l, 1, batch_ix, :, positions, :].set(v)
+        attn = attention.mha_decode(q, kv[l, 0], kv[l, 1], positions)  # [B,H,Dh]
+        x = x + jnp.dot(attn.reshape(b, -1), p[pre + "wo"])
+        hnorm2 = _layernorm(x, p[pre + "ln2_scale"], p[pre + "ln2_bias"])
+        x = x + _mlp(hnorm2, p, pre)
+
+    x = _layernorm(x, p["ln_f_scale"], p["ln_f_bias"])
+    logits = jnp.dot(x, p["embed"].T)
+    return logits, kv
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jax.Array]:
+    """Deterministic random init in param_specs order (shared with Rust via
+    weights.bin — Rust never re-derives these, it loads the file)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith("_scale"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_bias", "b_up", "b_down")):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            out.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+    return out

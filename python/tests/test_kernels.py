@@ -1,0 +1,193 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Fixed-shape allclose checks plus hypothesis sweeps over shapes/lengths/seeds.
+All Pallas calls run interpret=True (CPU), same as the AOT lowering path.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, ref, scorer
+
+RTOL, ATOL = 2e-4, 2e-5
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+def assert_prefill_matches(b, h, s, dh, lens, seed=0, block_q=32, block_k=32):
+    rng = np.random.default_rng(seed)
+    q, k, v = (_rand(rng, b, h, s, dh) for _ in range(3))
+    lens = jnp.asarray(lens, dtype=jnp.int32)
+    got = np.asarray(
+        attention.mha_prefill(q, k, v, lens, block_q=block_q, block_k=block_k)
+    )
+    want = np.asarray(ref.mha_prefill_ref(q, k, v, lens))
+    for bi in range(b):
+        n = int(lens[bi])
+        np.testing.assert_allclose(
+            got[bi, :, :n], want[bi, :, :n], rtol=RTOL, atol=ATOL
+        )
+
+
+class TestPrefill:
+    def test_full_length(self):
+        assert_prefill_matches(2, 2, 64, 32, [64, 64])
+
+    def test_ragged_lengths(self):
+        assert_prefill_matches(4, 2, 64, 32, [64, 33, 1, 17])
+
+    def test_min_length_one(self):
+        assert_prefill_matches(2, 1, 32, 16, [1, 1])
+
+    def test_single_head(self):
+        assert_prefill_matches(1, 1, 64, 32, [40])
+
+    def test_small_blocks(self):
+        assert_prefill_matches(2, 2, 64, 32, [64, 50], block_q=16, block_k=8)
+
+    def test_block_equals_seq(self):
+        assert_prefill_matches(1, 2, 32, 32, [32], block_q=32, block_k=32)
+
+    def test_causality(self):
+        """Changing tokens after position t must not change outputs <= t."""
+        rng = np.random.default_rng(7)
+        b, h, s, dh = 1, 2, 32, 16
+        q, k, v = (_rand(rng, b, h, s, dh) for _ in range(3))
+        lens = jnp.asarray([s], dtype=jnp.int32)
+        base = np.asarray(attention.mha_prefill(q, k, v, lens))
+        k2 = k.at[:, :, 20:, :].set(0.0)
+        v2 = v.at[:, :, 20:, :].set(0.0)
+        pert = np.asarray(attention.mha_prefill(q, k2, v2, lens))
+        np.testing.assert_allclose(base[:, :, :20], pert[:, :, :20], rtol=RTOL, atol=ATOL)
+
+    def test_softmax_rows_unit_norm_via_constant_v(self):
+        """With V = all-ones, every output row must be exactly 1 (softmax sums)."""
+        rng = np.random.default_rng(3)
+        b, h, s, dh = 2, 2, 32, 16
+        q, k = (_rand(rng, b, h, s, dh) for _ in range(2))
+        v = jnp.ones((b, h, s, dh), jnp.float32)
+        lens = jnp.asarray([s, 11], dtype=jnp.int32)
+        out = np.asarray(attention.mha_prefill(q, k, v, lens))
+        for bi, n in enumerate([s, 11]):
+            np.testing.assert_allclose(
+                out[bi, :, :n], np.ones_like(out[bi, :, :n]), rtol=1e-4, atol=1e-5
+            )
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.integers(1, 3),
+        s_pow=st.integers(3, 6),  # S = 8..64
+        dh=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**16),
+        data=st.data(),
+    )
+    def test_hypothesis_sweep(self, b, h, s_pow, dh, seed, data):
+        s = 2**s_pow
+        lens = data.draw(
+            st.lists(st.integers(1, s), min_size=b, max_size=b), label="lens"
+        )
+        assert_prefill_matches(b, h, s, dh, lens, seed=seed, block_q=8, block_k=8)
+
+
+class TestDecode:
+    def _case(self, b, h, s, dh, positions, seed=0):
+        rng = np.random.default_rng(seed)
+        q = _rand(rng, b, h, dh)
+        k, v = (_rand(rng, b, h, s, dh) for _ in range(2))
+        pos = jnp.asarray(positions, dtype=jnp.int32)
+        got = np.asarray(attention.mha_decode(q, k, v, pos))
+        want = np.asarray(ref.mha_decode_ref(q, k, v, pos))
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_basic(self):
+        self._case(2, 2, 64, 32, [5, 63])
+
+    def test_position_zero(self):
+        self._case(2, 1, 32, 16, [0, 0])
+
+    def test_last_slot(self):
+        self._case(1, 4, 128, 32, [127])
+
+    def test_ragged_positions(self):
+        self._case(4, 2, 64, 32, [0, 1, 31, 63])
+
+    def test_mask_excludes_future_slots(self):
+        """Garbage beyond pos must not affect the result."""
+        rng = np.random.default_rng(11)
+        b, h, s, dh = 1, 2, 32, 16
+        q = _rand(rng, b, h, dh)
+        k, v = (_rand(rng, b, h, s, dh) for _ in range(2))
+        pos = jnp.asarray([10], dtype=jnp.int32)
+        base = np.asarray(attention.mha_decode(q, k, v, pos))
+        k2 = k.at[:, :, 11:, :].set(999.0)
+        v2 = v.at[:, :, 11:, :].set(-999.0)
+        pert = np.asarray(attention.mha_decode(q, k2, v2, pos))
+        np.testing.assert_allclose(base, pert, rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        h=st.integers(1, 4),
+        s=st.sampled_from([16, 32, 64, 128]),
+        dh=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**16),
+        data=st.data(),
+    )
+    def test_hypothesis_sweep(self, b, h, s, dh, seed, data):
+        pos = data.draw(
+            st.lists(st.integers(0, s - 1), min_size=b, max_size=b), label="pos"
+        )
+        self._case(b, h, s, dh, pos, seed=seed)
+
+
+class TestScorer:
+    def _case(self, w, n, seed=0, scale=1.0):
+        rng = np.random.default_rng(seed)
+        windows = jnp.asarray(scale * rng.normal(size=(w, n)).astype(np.float32))
+        baseline = jnp.stack(
+            [windows.mean(axis=1) * 0.8, windows.std(axis=1) + 0.1], axis=1
+        )
+        f, z = scorer.window_features(windows, baseline)
+        fr, zr = ref.window_features_ref(windows, baseline)
+        np.testing.assert_allclose(np.asarray(f), np.asarray(fr), rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(np.asarray(z), np.asarray(zr), rtol=RTOL, atol=ATOL)
+
+    def test_basic(self):
+        self._case(8, 256)
+
+    def test_single_window(self):
+        self._case(1, 64)
+
+    def test_aot_shape(self):
+        from compile.config import DETECTOR
+
+        self._case(DETECTOR.windows, DETECTOR.samples)
+
+    def test_large_magnitudes(self):
+        self._case(4, 128, scale=1e6)
+
+    def test_feature_order_contract(self):
+        """Feature index layout is a cross-language contract — pin it."""
+        w = jnp.asarray(np.array([[1.0, 2.0, 3.0, 6.0]], dtype=np.float32))
+        base = jnp.asarray(np.array([[2.0, 1.0]], dtype=np.float32))
+        f, z = scorer.window_features(w, base)
+        f = np.asarray(f)[0]
+        assert abs(f[0] - 3.0) < 1e-5  # mean
+        assert abs(f[2] - 6.0) < 1e-5  # max
+        assert abs(f[3] - 1.0) < 1e-5  # min
+        assert abs(f[6] - 5.0) < 1e-5  # spread
+        assert abs(f[7] - np.asarray(z)[0]) < 1e-6  # z mirrored in features
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        w=st.integers(1, 16),
+        n=st.sampled_from([16, 64, 256]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, w, n, seed):
+        self._case(w, n, seed=seed)

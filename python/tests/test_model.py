@@ -1,0 +1,150 @@
+"""L2 model correctness: shapes, prefill/decode consistency, causality."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.config import PRESETS, ModelConfig
+
+CFG = PRESETS["toy"]  # smallest preset keeps interpret-mode tracing fast
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, seed=0)
+
+
+def _tokens(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.prefill_len))
+    return jnp.asarray(toks.astype(np.int32))
+
+
+class TestShapes:
+    def test_prefill_shapes(self, params):
+        toks = _tokens(CFG)
+        lens = jnp.asarray([CFG.prefill_len] * CFG.batch, dtype=jnp.int32)
+        logits, kv = model.prefill(CFG, toks, lens, *params)
+        assert logits.shape == (CFG.batch, CFG.vocab)
+        assert kv.shape == CFG.kv_shape()
+        assert not np.any(np.isnan(np.asarray(logits)))
+
+    def test_decode_shapes(self, params):
+        toks = _tokens(CFG)
+        lens = jnp.asarray([CFG.prefill_len] * CFG.batch, dtype=jnp.int32)
+        _, kv = model.prefill(CFG, toks, lens, *params)
+        cur = jnp.zeros((CFG.batch,), jnp.int32)
+        logits, kv2 = model.decode_step(CFG, cur, lens, kv, *params)
+        assert logits.shape == (CFG.batch, CFG.vocab)
+        assert kv2.shape == kv.shape
+        assert not np.any(np.isnan(np.asarray(logits)))
+
+    def test_param_specs_cover_init(self):
+        specs = CFG.param_specs()
+        ps = model.init_params(CFG, seed=1)
+        assert len(specs) == len(ps)
+        for (name, shape), arr in zip(specs, ps):
+            assert tuple(arr.shape) == tuple(shape), name
+
+    def test_n_params_reasonable(self):
+        # toy preset should be order 100k-2M params
+        n = CFG.n_params()
+        assert 10_000 < n < 5_000_000
+
+
+class TestConsistency:
+    def test_decode_matches_prefill(self, params):
+        """Prefill over t+1 tokens == prefill over t tokens + one decode step.
+
+        This is THE invariant that validates the KV cache write/read path:
+        the next-token logits must agree between the two code paths.
+        """
+        toks = _tokens(CFG, seed=3)
+        t = CFG.prefill_len // 2
+        # Path A: prefill with len t+1 -> logits at position t
+        lens_a = jnp.asarray([t + 1] * CFG.batch, dtype=jnp.int32)
+        logits_a, _ = model.prefill(CFG, toks, lens_a, *params)
+        # Path B: prefill with len t, then decode token[t] at position t
+        lens_b = jnp.asarray([t] * CFG.batch, dtype=jnp.int32)
+        _, kv = model.prefill(CFG, toks, lens_b, *params)
+        cur = toks[:, t]
+        logits_b, _ = model.decode_step(CFG, cur, lens_b, kv, *params)
+        np.testing.assert_allclose(
+            np.asarray(logits_a), np.asarray(logits_b), rtol=5e-4, atol=5e-4
+        )
+
+    def test_decode_matches_prefill_ragged(self, params):
+        """Same invariant with per-sequence lengths (continuous batching)."""
+        toks = _tokens(CFG, seed=4)
+        base = [CFG.prefill_len // 2, CFG.prefill_len // 4]
+        lens_t = jnp.asarray(
+            [base[i % 2] for i in range(CFG.batch)], dtype=jnp.int32
+        )
+        lens_t1 = lens_t + 1
+        logits_a, _ = model.prefill(CFG, toks, lens_t1, *params)
+        _, kv = model.prefill(CFG, toks, lens_t, *params)
+        cur = jnp.take_along_axis(toks, lens_t[:, None], axis=1)[:, 0]
+        logits_b, _ = model.decode_step(CFG, cur, lens_t, kv, *params)
+        np.testing.assert_allclose(
+            np.asarray(logits_a), np.asarray(logits_b), rtol=5e-4, atol=5e-4
+        )
+
+    def test_prefill_causal_wrt_padding(self, params):
+        """Tokens beyond len must not affect the gathered logits."""
+        toks = _tokens(CFG, seed=5)
+        t = CFG.prefill_len // 2
+        lens = jnp.asarray([t] * CFG.batch, dtype=jnp.int32)
+        logits_a, _ = model.prefill(CFG, toks, lens, *params)
+        toks2 = toks.at[:, t:].set(0)
+        logits_b, _ = model.prefill(CFG, toks2, lens, *params)
+        np.testing.assert_allclose(
+            np.asarray(logits_a), np.asarray(logits_b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_decode_steps_accumulate(self, params):
+        """Multi-step greedy decode is deterministic and stays finite."""
+        toks = _tokens(CFG, seed=6)
+        lens = jnp.asarray([CFG.prefill_len // 2] * CFG.batch, dtype=jnp.int32)
+        logits, kv = model.prefill(CFG, toks, lens, *params)
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        pos = lens
+        seq1 = []
+        for _ in range(4):
+            logits, kv = model.decode_step(CFG, cur, pos, kv, *params)
+            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            seq1.append(np.asarray(cur).copy())
+            pos = pos + 1
+            assert not np.any(np.isnan(np.asarray(logits)))
+        # Re-run: determinism
+        logits, kv = model.prefill(CFG, toks, lens, *params)
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        pos = lens
+        for t in range(4):
+            logits, kv = model.decode_step(CFG, cur, pos, kv, *params)
+            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            np.testing.assert_array_equal(seq1[t], np.asarray(cur))
+            pos = pos + 1
+
+
+class TestConfig:
+    def test_presets_valid(self):
+        for name, cfg in PRESETS.items():
+            assert cfg.d_model == cfg.n_heads * cfg.head_dim, name
+            assert cfg.prefill_len <= cfg.max_seq, name
+
+    def test_bad_config_rejected(self):
+        with pytest.raises(AssertionError):
+            ModelConfig(
+                name="bad", layers=1, d_model=100, n_heads=3, head_dim=32,
+                ffn=64, vocab=16, max_seq=8, prefill_len=4, batch=1,
+            )
+
+    def test_param_spec_order_stable(self):
+        """Weight order is a cross-language ABI — pin its head and tail."""
+        specs = [n for n, _ in PRESETS["small"].param_specs()]
+        assert specs[0] == "embed"
+        assert specs[1] == "pos_embed"
+        assert specs[2] == "layer0.ln1_scale"
+        assert specs[-1] == "ln_f_bias"
+        assert specs[-2] == "ln_f_scale"

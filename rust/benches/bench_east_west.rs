@@ -1,0 +1,81 @@
+//! E3 — paper Table 3(c): the East-West sensing runbook.
+//!
+//! EW1..EW9 over a compute-dominated profile (7B-class cost model) so that
+//! stragglers and stage imbalance actually move collective-burst arrivals —
+//! the paper's "max-min arrival gap" red flag.
+//!
+//! `cargo bench --bench bench_east_west`
+
+use dpulens::coordinator::experiment::{
+    condition_experiment, report_header, report_row, standard_cfg,
+};
+use dpulens::coordinator::ScenarioCfg;
+use dpulens::dpu::detectors::{Condition, ALL_CONDITIONS};
+use dpulens::dpu::runbook;
+use dpulens::engine::preset;
+use dpulens::util::table::Table;
+
+fn ew_cfg(c: Condition) -> ScenarioCfg {
+    let mut cfg = standard_cfg();
+    // Compute-skew rows need a compute-dominated profile; queue/loss rows
+    // are clearest at the default profile (big transfers mask bimodality).
+    if matches!(
+        c,
+        Condition::Ew1TpStraggler
+            | Condition::Ew3CrossNodeSkew
+            | Condition::Ew4Congestion
+            | Condition::Ew9EarlyStopSkew
+    ) {
+        cfg.engine.profile = preset("7b").unwrap();
+        cfg.engine.policy.max_batch = 8;
+        cfg.workload.arrival = dpulens::sim::dist::Arrival::Poisson { rate: 150.0 };
+        cfg.workload.output_len = dpulens::sim::dist::LengthDist::Uniform { lo: 4, hi: 12 };
+    }
+    if c == Condition::Ew2PpBubble {
+        // Cadence detection needs a busy pipeline (see DESIGN.md §10).
+        cfg.engine.profile = preset("7b").unwrap();
+        cfg.engine.policy.max_batch = 8;
+        cfg.workload.arrival = dpulens::sim::dist::Arrival::Poisson { rate: 500.0 };
+        cfg.workload.output_len = dpulens::sim::dist::LengthDist::Uniform { lo: 8, hi: 16 };
+    }
+    cfg
+}
+
+fn main() {
+    let conditions: Vec<Condition> =
+        ALL_CONDITIONS.into_iter().filter(|c| c.table() == "3c").collect();
+    let mut t = Table::new("E3 — Table 3(c) East-West sensing runbook, reproduced")
+        .header(&report_header());
+    let t0 = std::time::Instant::now();
+    let mut detected = 0;
+    for c in conditions.iter().copied() {
+        let cfg = ew_cfg(c);
+        let rep = condition_experiment(c, &cfg, true);
+        if rep.detected {
+            detected += 1;
+        }
+        eprintln!(
+            "[{}] {} -> detected={} latency={:?} impact={:.2}x fired={:?}",
+            c.id(),
+            rep.injection_desc,
+            rep.detected,
+            rep.detection_latency.map(|d| format!("{d}")),
+            rep.throughput_impact(),
+            rep.fired.iter().map(|(c, n)| format!("{}x{}", c.id(), n)).collect::<Vec<_>>(),
+        );
+        t.row(report_row(&rep));
+    }
+    print!("{}", t.render());
+    let mut meta =
+        Table::new("Table 3(c) rows (paper text)").header(&["id", "signal", "effect"]);
+    for c in conditions.iter().copied() {
+        let e = runbook::entry(c);
+        meta.row(vec![c.id().into(), e.signal.into(), e.effect.into()]);
+    }
+    print!("{}", meta.render());
+    println!(
+        "east-west: {detected}/{} detected from fabric vantage; wallclock {:.1}s",
+        conditions.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

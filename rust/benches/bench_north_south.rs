@@ -1,0 +1,53 @@
+//! E1 — paper Table 3(a): the North-South runbook.
+//!
+//! For each of NS1..NS9: run healthy + injected scenarios, verify the DPU's
+//! NIC-vantage detector fires, and report detection latency plus the
+//! serving-side impact (the table's "Effect" column, measured).
+//!
+//! `cargo bench --bench bench_north_south` (harness = false: criterion is
+//! not vendored offline; methodology is warm, seeded, deterministic runs).
+
+use dpulens::coordinator::experiment::{
+    condition_experiment, report_header, report_row, standard_cfg,
+};
+use dpulens::dpu::detectors::{Condition, ALL_CONDITIONS};
+use dpulens::dpu::runbook;
+use dpulens::util::table::Table;
+
+fn main() {
+    let conditions: Vec<Condition> =
+        ALL_CONDITIONS.into_iter().filter(|c| c.table() == "3a").collect();
+    let cfg = standard_cfg();
+    let mut t = Table::new("E1 — Table 3(a) North-South runbook, reproduced")
+        .header(&report_header());
+    let t0 = std::time::Instant::now();
+    let mut detected = 0;
+    for c in conditions.iter().copied() {
+        let rep = condition_experiment(c, &cfg, true);
+        if rep.detected {
+            detected += 1;
+        }
+        eprintln!(
+            "[{}] {} -> detected={} latency={:?} impact={:.2}x",
+            c.id(),
+            rep.injection_desc,
+            rep.detected,
+            rep.detection_latency.map(|d| format!("{d}")),
+            rep.throughput_impact(),
+        );
+        t.row(report_row(&rep));
+    }
+    print!("{}", t.render());
+    // Paper-table echo: signal + lifecycle stages per row.
+    let mut meta = Table::new("Table 3(a) rows (paper text)").header(&["id", "signal", "stages"]);
+    for c in conditions.iter().copied() {
+        let e = runbook::entry(c);
+        meta.row(vec![c.id().into(), e.signal.into(), e.stages.into()]);
+    }
+    print!("{}", meta.render());
+    println!(
+        "north-south: {detected}/{} detected from NIC vantage; wallclock {:.1}s",
+        conditions.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

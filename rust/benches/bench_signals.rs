@@ -1,0 +1,178 @@
+//! E4 — paper Table 2(b): the real-time signal inventory.
+//!
+//! Three measurements:
+//!  1. DPU hot path: raw telemetry ingest throughput (events/s through
+//!     WindowAccum) and full 28-detector sweep cost per window tick.
+//!  2. SW sensing cost: per-signal collection overhead (record-keeping vs
+//!     NVML-style polling), per Table 2(b)'s Origin column.
+//!  3. Telemetry scorer: native Rust vs the AOT-compiled Pallas kernel
+//!     (PJRT), same feature math (skips gracefully if artifacts missing).
+//!
+//! `cargo bench --bench bench_signals`
+
+use std::time::Instant;
+
+use dpulens::dpu::detectors::{all_detectors, Baseline, DetectConfig, DetectCtx};
+use dpulens::dpu::scorer::{NativeScorer, ScorerBackend};
+use dpulens::ids::{FlowId, GpuId, NodeId};
+use dpulens::sim::SimTime;
+use dpulens::telemetry::event::{Phase, TelemetryEvent, TelemetryKind};
+use dpulens::telemetry::window::WindowAccum;
+use dpulens::telemetry::ALL_SW_SIGNALS;
+use dpulens::util::rng::Rng;
+use dpulens::util::table::{fmt_rate, Table};
+
+fn synth_events(n: usize, seed: u64) -> Vec<TelemetryEvent> {
+    let mut rng = Rng::seeded(seed);
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = SimTime(i as u64 * 120);
+        let kind = match rng.below(6) {
+            0 => TelemetryKind::DmaH2d {
+                gpu: GpuId(rng.below(4) as u32),
+                bytes: 4096 + rng.below(65536),
+                latency_ns: 2000 + rng.below(3000),
+                phase: if rng.chance(0.3) { Phase::Prefill } else { Phase::Decode },
+            },
+            1 => TelemetryKind::DmaD2h {
+                gpu: GpuId(rng.below(4) as u32),
+                bytes: 1024 + rng.below(8192),
+                latency_ns: 1500 + rng.below(2000),
+                phase: Phase::Decode,
+            },
+            2 => TelemetryKind::Doorbell { gpu: GpuId(rng.below(4) as u32) },
+            3 => TelemetryKind::NicRx {
+                flow: FlowId(rng.below(64) as u32),
+                bytes: 256 + rng.below(4096),
+                queue_depth: rng.below(16) as u32,
+            },
+            4 => TelemetryKind::NicTx {
+                flow: FlowId(rng.below(64) as u32),
+                bytes: 128,
+                queue_depth: rng.below(16) as u32,
+                wait_ns: rng.below(4000),
+            },
+            _ => TelemetryKind::RdmaOp {
+                qp: dpulens::ids::QpId(rng.below(12) as u32),
+                bytes: 65536,
+                credit_wait_ns: 0,
+                latency_ns: 20_000 + rng.below(5_000),
+            },
+        };
+        out.push(TelemetryEvent { t, node: NodeId(0), kind });
+    }
+    out
+}
+
+fn main() {
+    println!("== E4 — Table 2(b) signal inventory, measured ==\n");
+
+    // --- 1. DPU ingest hot path ---
+    const N: usize = 2_000_000;
+    let events = synth_events(N, 7);
+    let mut accum = WindowAccum::new(NodeId(0), 4);
+    let t0 = Instant::now();
+    for ev in &events {
+        accum.ingest(ev);
+    }
+    let ingest_s = t0.elapsed().as_secs_f64();
+    let ingest_rate = N as f64 / ingest_s;
+    let snap = accum.snapshot(SimTime(N as u64 * 120));
+
+    // Detector sweep cost per window.
+    let detectors = all_detectors();
+    let mut baseline = Baseline::new();
+    for d in &detectors {
+        d.calibrate(&snap, &mut baseline);
+    }
+    baseline.freeze();
+    let cfg = DetectConfig::default();
+    let history = vec![snap.clone()];
+    let sweeps = 10_000;
+    let t1 = Instant::now();
+    let mut fired = 0usize;
+    for _ in 0..sweeps {
+        let ctx = DetectCtx { snap: &snap, baseline: &baseline, history: &history, cfg: &cfg };
+        for d in &detectors {
+            if d.check(&ctx).is_some() {
+                fired += 1;
+            }
+        }
+    }
+    let sweep_ns = t1.elapsed().as_nanos() as f64 / sweeps as f64;
+
+    let mut hot = Table::new("DPU hot path").header(&["metric", "value"]);
+    hot.row(vec!["telemetry ingest".into(), fmt_rate(ingest_rate)]);
+    hot.row(vec!["ingest cost/event".into(), format!("{:.0}ns", 1e9 / ingest_rate)]);
+    hot.row(vec!["28-detector sweep/window".into(), format!("{sweep_ns:.0}ns")]);
+    hot.row(vec!["window budget (1ms) used".into(), format!("{:.2}%", sweep_ns / 1e4)]);
+    print!("{}", hot.render());
+    let _ = fired;
+
+    // --- 2. SW signal inventory (Table 2(b) echo with measured overheads) ---
+    let mut t = Table::new("Table 2(b) — signals: origin and per-sample cost").header(&[
+        "signal", "origin", "overhead/sample", "samples/s @1% of one core",
+    ]);
+    for sig in ALL_SW_SIGNALS {
+        let ovh = sig.overhead_ns();
+        t.row(vec![
+            sig.name().into(),
+            sig.origin().into(),
+            format!("{ovh}ns"),
+            fmt_rate(0.01 * 1e9 / ovh as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "shape check: NVML-style HW polling is {}x the cost of SW record-keeping;\n\
+         the DPU ingests the same HW facts inline at {} with zero host cost.\n",
+        dpulens::telemetry::SwSignal::GpuUtil.overhead_ns()
+            / dpulens::telemetry::SwSignal::RequestArrival.overhead_ns(),
+        fmt_rate(ingest_rate)
+    );
+
+    // --- 3. Scorer: native vs compiled Pallas kernel ---
+    let mut native = NativeScorer;
+    let windows: Vec<Vec<f32>> = (0..64)
+        .map(|i| (0..256).map(|j| ((i * 37 + j * 11) % 97) as f32).collect())
+        .collect();
+    let baseline_rows: Vec<(f32, f32)> = (0..64).map(|_| (48.0, 28.0)).collect();
+    let iters = 2000;
+    let t2 = Instant::now();
+    for _ in 0..iters {
+        let _ = native.score(&windows, &baseline_rows);
+    }
+    let native_us = t2.elapsed().as_micros() as f64 / iters as f64;
+    println!("scorer native:   {native_us:.1}us / 64-window block");
+
+    match (dpulens::runtime::cpu_client(), dpulens::runtime::ArtifactSet::open_default()) {
+        (Ok(client), Ok(arts)) => {
+            match dpulens::runtime::CompiledScorer::load(&client, &arts) {
+                Ok(mut compiled) => {
+                    // Correctness parity first.
+                    let (fn_, zn) = native.score(&windows, &baseline_rows);
+                    let (fc, zc) = compiled.score(&windows, &baseline_rows);
+                    let mut max_err = 0f32;
+                    for (a, b) in fn_.iter().flatten().zip(fc.iter().flatten()) {
+                        max_err = max_err.max((a - b).abs() / (1.0 + a.abs()));
+                    }
+                    for (a, b) in zn.iter().zip(&zc) {
+                        max_err = max_err.max((a - b).abs() / (1.0 + a.abs()));
+                    }
+                    let iters_c = 50;
+                    let t3 = Instant::now();
+                    for _ in 0..iters_c {
+                        let _ = compiled.score(&windows, &baseline_rows);
+                    }
+                    let compiled_us = t3.elapsed().as_micros() as f64 / iters_c as f64;
+                    println!(
+                        "scorer compiled: {compiled_us:.1}us / block (Pallas kernel via PJRT), \
+                         max rel err vs native {max_err:.2e}"
+                    );
+                }
+                Err(e) => println!("compiled scorer unavailable: {e:#}"),
+            }
+        }
+        _ => println!("artifacts not built; skipping compiled-scorer comparison"),
+    }
+}

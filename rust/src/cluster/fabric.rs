@@ -1,0 +1,261 @@
+//! Inter-node fabric: per-node uplinks into a fat-tree core, RDMA queue
+//! pairs with credit flow-control, loss, head-of-line blocking, and hot-link
+//! oversubscription — the east-west substrate for Table 3(c).
+
+use std::collections::HashMap;
+
+use crate::cluster::models::{LinkModel, Outbox};
+use crate::cluster::topology::{ClusterSpec, FabricKnobs};
+use crate::ids::{NodeId, QpId};
+use crate::sim::{SimDur, SimTime};
+use crate::telemetry::event::TelemetryKind;
+use crate::util::rng::Rng;
+
+/// Retransmission timeout inside the fabric.
+const FABRIC_RETX_NS: u64 = 80_000;
+/// Credit-update round trip once the window empties.
+const CREDIT_RTT_NS: u64 = 12_000;
+
+/// One RDMA queue pair's flow-control state.
+#[derive(Debug, Clone, Default)]
+struct QpState {
+    in_flight: u32,
+    next_credit_at: SimTime,
+}
+
+/// The cluster fabric: per-node up/down links + a shared core.
+#[derive(Debug)]
+pub struct Fabric {
+    pub uplinks: Vec<LinkModel>,
+    pub downlinks: Vec<LinkModel>,
+    pub core: LinkModel,
+    base_lat_ns: u64,
+    qps: HashMap<QpId, QpState>,
+    /// Serializer used when HOL blocking is injected: all flows share it.
+    hol_queue: LinkModel,
+    pub transfers: u64,
+    pub loss_events: u64,
+}
+
+impl Fabric {
+    pub fn new(spec: &ClusterSpec) -> Self {
+        let core_bw = spec.nic_bw * spec.n_nodes as f64 / spec.oversubscription;
+        Fabric {
+            uplinks: (0..spec.n_nodes).map(|_| LinkModel::new(spec.nic_bw, 200)).collect(),
+            downlinks: (0..spec.n_nodes).map(|_| LinkModel::new(spec.nic_bw, 200)).collect(),
+            core: LinkModel::new(core_bw, spec.fabric_base_lat_ns),
+            base_lat_ns: spec.fabric_base_lat_ns,
+            qps: HashMap::new(),
+            hol_queue: LinkModel::new(spec.nic_bw, 0),
+            transfers: 0,
+            loss_events: 0,
+        }
+    }
+
+    /// QP id for a (src, dst) node pair — one QP per directed pair.
+    pub fn qp_for(&self, from: NodeId, to: NodeId) -> QpId {
+        QpId(from.0 * 1024 + to.0)
+    }
+
+    /// Transfer `bytes` from `from` to `to` as one RDMA burst.
+    ///
+    /// Emits, at the *destination* node (where that node's DPU sees it):
+    /// RdmaOp (+credit wait), plus loss/retransmit signals on the path.
+    /// Returns arrival time of the last byte.
+    #[allow(clippy::too_many_arguments)]
+    pub fn rdma(
+        &mut self,
+        now: SimTime,
+        from: NodeId,
+        to: NodeId,
+        bytes: u64,
+        knobs: &FabricKnobs,
+        rng: &mut Rng,
+        out: &mut Outbox,
+    ) -> SimTime {
+        self.transfers += 1;
+        let qp = self.qp_for(from, to);
+        // --- credit flow control (EW7) ---
+        let window = knobs.credit_window.max(1);
+        let st = self.qps.entry(qp).or_default();
+        let mut start = now;
+        let mut credit_wait = 0u64;
+        if st.in_flight >= window {
+            // Stall until the remote returns credits.
+            let credit_at = st.next_credit_at.max(now + SimDur(CREDIT_RTT_NS));
+            credit_wait = (credit_at - now).ns();
+            start = credit_at;
+            st.in_flight = 0;
+            out.emit(credit_at, to, TelemetryKind::CreditUpdate { qp });
+        }
+        st.in_flight += 1;
+        st.next_credit_at = start + SimDur(CREDIT_RTT_NS);
+
+        // --- loss / retransmit (EW6) ---
+        let mut attempt = start;
+        let mut rounds = 0;
+        while rounds < 3 && rng.chance(knobs.loss_prob) {
+            rounds += 1;
+            self.loss_events += 1;
+            out.emit(
+                attempt,
+                to,
+                TelemetryKind::PktDrop { flow: crate::ids::FlowId(qp.0), ingress: true, fabric: true },
+            );
+            let retx = attempt + SimDur(FABRIC_RETX_NS);
+            out.emit(
+                retx,
+                to,
+                TelemetryKind::Retransmit { flow: crate::ids::FlowId(qp.0), ingress: true, fabric: true },
+            );
+            attempt = retx;
+        }
+
+        // --- path: src uplink -> core -> dst downlink ---
+        let hot = knobs.hot_node.map_or(knobs.hot_uplink_load > 0.0, |n| n == from)
+            && knobs.hot_uplink_load > 0.0;
+        let up_factor = if hot { 1.0 / (1.0 + knobs.hot_uplink_load) } else { 1.0 };
+        let (_, up_done) = self.uplinks[from.idx()].transfer(attempt, bytes, up_factor);
+        let (_, core_done) = self.core.transfer(up_done, bytes, 1.0);
+        // HOL blocking (EW5): flows hashed to the exhausted queue serialize
+        // behind each other while other flows pass — the bimodal signature.
+        let hol_hash = ((qp.0 >> 10) + (qp.0 & 1023)) % 2 == 0;
+        let pre_down = if knobs.hol_blocking && hol_hash {
+            let (_, hol_done) = self.hol_queue.transfer(core_done, bytes, 0.25);
+            hol_done
+        } else {
+            core_done
+        };
+        let (_, down_done) = self.downlinks[to.idx()].transfer(pre_down, bytes, 1.0);
+        let arrival = down_done + SimDur(self.base_lat_ns);
+
+        let latency_ns = (arrival - now).ns();
+        out.emit(
+            arrival,
+            to,
+            TelemetryKind::RdmaOp { qp, bytes, credit_wait_ns: credit_wait, latency_ns },
+        );
+        arrival
+    }
+
+    /// Observable backlog on a node's uplink.
+    pub fn uplink_backlog_ns(&self, node: NodeId, now: SimTime) -> u64 {
+        self.uplinks[node.idx()].backlog_ns(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Fabric, FabricKnobs, Rng, Outbox) {
+        (
+            Fabric::new(&ClusterSpec::default()),
+            FabricKnobs::default(),
+            Rng::seeded(1),
+            Outbox::new(),
+        )
+    }
+
+    #[test]
+    fn rdma_emits_op_at_destination() {
+        let (mut f, knobs, mut rng, mut out) = setup();
+        let arr = f.rdma(SimTime(0), NodeId(0), NodeId(1), 1 << 20, &knobs, &mut rng, &mut out);
+        assert!(arr.ns() > 0);
+        let (t, node, kind) = out.items.last().unwrap();
+        assert_eq!(*node, NodeId(1));
+        assert_eq!(*t, arr);
+        assert!(matches!(kind, TelemetryKind::RdmaOp { .. }));
+    }
+
+    #[test]
+    fn small_credit_window_stalls() {
+        let (mut f, mut knobs, mut rng, mut out) = setup();
+        knobs.credit_window = 1;
+        let mut last = SimTime(0);
+        let mut credit_waits = 0;
+        for _ in 0..8 {
+            last = f.rdma(last, NodeId(0), NodeId(1), 4096, &knobs, &mut rng, &mut out);
+        }
+        for (_, _, k) in &out.items {
+            if let TelemetryKind::RdmaOp { credit_wait_ns, .. } = k {
+                if *credit_wait_ns > 0 {
+                    credit_waits += 1;
+                }
+            }
+        }
+        assert!(credit_waits >= 3, "credit_waits={credit_waits}");
+        let updates = out
+            .items
+            .iter()
+            .filter(|(_, _, k)| matches!(k, TelemetryKind::CreditUpdate { .. }))
+            .count();
+        assert!(updates >= 3);
+    }
+
+    #[test]
+    fn hot_uplink_slows_only_hot_node() {
+        let (mut f, mut knobs, mut rng, mut out) = setup();
+        knobs.hot_uplink_load = 4.0;
+        knobs.hot_node = Some(NodeId(0));
+        let a_hot = f.rdma(SimTime(0), NodeId(0), NodeId(2), 1 << 22, &knobs, &mut rng, &mut out);
+        let mut f2 = Fabric::new(&ClusterSpec::default());
+        let a_cool =
+            f2.rdma(SimTime(0), NodeId(1), NodeId(2), 1 << 22, &knobs, &mut rng, &mut out);
+        assert!(a_hot.ns() > a_cool.ns() * 2, "hot={} cool={}", a_hot.ns(), a_cool.ns());
+    }
+
+    #[test]
+    fn loss_adds_retransmits() {
+        let (mut f, mut knobs, mut rng, mut out) = setup();
+        knobs.loss_prob = 1.0;
+        f.rdma(SimTime(0), NodeId(0), NodeId(1), 4096, &knobs, &mut rng, &mut out);
+        let retx = out
+            .items
+            .iter()
+            .filter(|(_, _, k)| matches!(k, TelemetryKind::Retransmit { .. }))
+            .count();
+        assert_eq!(retx, 3);
+        assert_eq!(f.loss_events, 3);
+    }
+
+    #[test]
+    fn hol_blocking_stalls_only_hashed_flows() {
+        // HOL blocking exhausts one shared queue: flows hashed onto it
+        // (even qp ids) stall; other flows pass — the bimodal signature
+        // EW5's detector keys on.
+        let (mut f, mut knobs, mut rng, mut out) = setup();
+        knobs.hol_blocking = true;
+        // hash = (from+to)%2: (0->2) blocked, (1->0) free (disjoint links).
+        let blocked = f.rdma(SimTime(0), NodeId(0), NodeId(2), 1 << 22, &knobs, &mut rng, &mut out);
+        let free = f.rdma(SimTime(0), NodeId(1), NodeId(0), 1 << 22, &knobs, &mut rng, &mut out);
+        assert!(blocked.ns() > free.ns() * 2, "blocked={} free={}", blocked.ns(), free.ns());
+        // Without HOL, the blocked-hash path is as fast as any other.
+        let (mut f2, knobs2, mut rng2, mut out2) = setup();
+        let b2 = f2.rdma(SimTime(0), NodeId(0), NodeId(2), 1 << 22, &knobs2, &mut rng2, &mut out2);
+        assert!(blocked.ns() > b2.ns() * 2, "hol={} healthy={}", blocked.ns(), b2.ns());
+    }
+
+    #[test]
+    fn oversubscribed_core_is_slower_under_fanin(){
+        let mut spec = ClusterSpec::default();
+        spec.oversubscription = 8.0;
+        let mut f_over = Fabric::new(&spec);
+        let f_knobs = FabricKnobs::default();
+        let mut rng = Rng::seeded(2);
+        let mut out = Outbox::new();
+        // all nodes send to node 0 simultaneously
+        let mut worst_over = SimTime(0);
+        for n in 1..4u32 {
+            let a = f_over.rdma(SimTime(0), NodeId(n), NodeId(0), 1 << 22, &f_knobs, &mut rng, &mut out);
+            worst_over = worst_over.max(a);
+        }
+        let mut f_nb = Fabric::new(&ClusterSpec::default());
+        let mut worst_nb = SimTime(0);
+        for n in 1..4u32 {
+            let a = f_nb.rdma(SimTime(0), NodeId(n), NodeId(0), 1 << 22, &f_knobs, &mut rng, &mut out);
+            worst_nb = worst_nb.max(a);
+        }
+        assert!(worst_over > worst_nb);
+    }
+}

@@ -1,0 +1,291 @@
+//! Simulated GPU cluster substrate: topology, per-node hardware (PCIe
+//! complex, NIC, GPUs), the inter-node fabric, and the pathology knobs.
+
+pub mod fabric;
+pub mod models;
+pub mod topology;
+
+pub use fabric::Fabric;
+pub use models::{GpuModel, LinkModel, Nic, Outbox, PcieComplex};
+pub use topology::{ClusterSpec, FabricKnobs, NodeKnobs};
+
+use crate::ids::{GpuId, NodeId};
+use crate::sim::SimTime;
+use crate::telemetry::event::{Phase, TelemetryKind};
+use crate::util::rng::Rng;
+
+/// One host node's hardware.
+#[derive(Debug)]
+pub struct NodeHw {
+    pub node: NodeId,
+    pub pcie: PcieComplex,
+    pub nic: Nic,
+    pub gpus: Vec<GpuModel>,
+    pub knobs: NodeKnobs,
+    pub rng: Rng,
+}
+
+/// The whole cluster: nodes + fabric + fabric knobs.
+#[derive(Debug)]
+pub struct Cluster {
+    pub spec: ClusterSpec,
+    pub nodes: Vec<NodeHw>,
+    pub fabric: Fabric,
+    pub fabric_knobs: FabricKnobs,
+}
+
+/// Default simulated GPU peak throughput (FLOP/s) — A100-class bf16 order.
+pub const GPU_FLOPS: f64 = 150e12;
+
+impl Cluster {
+    pub fn new(spec: ClusterSpec, seed: u64) -> Self {
+        spec.validate().expect("invalid cluster spec");
+        let mut root = Rng::new(seed, 0xC1);
+        let nodes = (0..spec.n_nodes)
+            .map(|n| {
+                let node = NodeId(n as u32);
+                NodeHw {
+                    node,
+                    pcie: PcieComplex::new(node, &spec),
+                    nic: Nic::new(node, &spec),
+                    gpus: spec
+                        .gpus_of_node(node)
+                        .into_iter()
+                        .map(|g| GpuModel::new(g, node, GPU_FLOPS))
+                        .collect(),
+                    knobs: NodeKnobs::healthy(spec.gpus_per_node),
+                    rng: root.fork(n as u64),
+                }
+            })
+            .collect();
+        let fabric = Fabric::new(&spec);
+        Cluster { spec, nodes, fabric, fabric_knobs: FabricKnobs::default() }
+    }
+
+    pub fn node(&self, n: NodeId) -> &NodeHw {
+        &self.nodes[n.idx()]
+    }
+
+    pub fn node_mut(&mut self, n: NodeId) -> &mut NodeHw {
+        &mut self.nodes[n.idx()]
+    }
+
+    pub fn node_of(&self, gpu: GpuId) -> NodeId {
+        self.spec.node_of_gpu(gpu)
+    }
+
+    /// H2D DMA to `gpu`; returns completion time.
+    pub fn h2d(
+        &mut self,
+        now: SimTime,
+        gpu: GpuId,
+        bytes: u64,
+        phase: Phase,
+        out: &mut Outbox,
+    ) -> SimTime {
+        let n = self.node_of(gpu);
+        let hw = &mut self.nodes[n.idx()];
+        hw.pcie.h2d(now, gpu, bytes, phase, &hw.knobs, out)
+    }
+
+    /// D2H DMA from `gpu`; returns completion time.
+    pub fn d2h(
+        &mut self,
+        now: SimTime,
+        gpu: GpuId,
+        bytes: u64,
+        phase: Phase,
+        out: &mut Outbox,
+    ) -> SimTime {
+        let n = self.node_of(gpu);
+        let hw = &mut self.nodes[n.idx()];
+        hw.pcie.d2h(now, gpu, bytes, phase, &hw.knobs, out)
+    }
+
+    /// Launch a kernel on `gpu` when its inputs are ready; returns completion.
+    pub fn gpu_launch(&mut self, ready: SimTime, gpu: GpuId, flops: f64, out: &mut Outbox) -> SimTime {
+        let n = self.node_of(gpu);
+        let hw = &mut self.nodes[n.idx()];
+        let local = gpu.idx() % self.spec.gpus_per_node;
+        hw.gpus[local].launch(ready, flops, &hw.knobs, out)
+    }
+
+    /// Intra-node GPU-to-GPU transfer: NVLink when available (DPU-invisible)
+    /// unless forced over PCIe; returns completion.
+    pub fn p2p(
+        &mut self,
+        now: SimTime,
+        from: GpuId,
+        to: GpuId,
+        bytes: u64,
+        out: &mut Outbox,
+    ) -> SimTime {
+        debug_assert_eq!(self.node_of(from), self.node_of(to));
+        let n = self.node_of(from);
+        let use_nvlink = self.spec.nvlink && !self.nodes[n.idx()].knobs.p2p_over_pcie;
+        if use_nvlink {
+            let dur_ns = (bytes as f64 / self.spec.nvlink_bw * 1e9).ceil() as u64 + 300;
+            let done = now + crate::sim::SimDur(dur_ns);
+            out.emit(done, n, TelemetryKind::NvlinkBurst { from, to, bytes });
+            done
+        } else {
+            let hw = &mut self.nodes[n.idx()];
+            hw.pcie.p2p(now, from, to, bytes, &hw.knobs, out)
+        }
+    }
+
+    /// Client -> node ingress (north-south).
+    pub fn ingress(
+        &mut self,
+        now: SimTime,
+        node: NodeId,
+        flow: crate::ids::FlowId,
+        bytes: u64,
+        out: &mut Outbox,
+    ) -> SimTime {
+        let hw = &mut self.nodes[node.idx()];
+        hw.nic.ingress(now, flow, bytes, &hw.knobs, &mut hw.rng, out)
+    }
+
+    /// Node -> client egress (north-south).
+    pub fn egress(
+        &mut self,
+        now: SimTime,
+        node: NodeId,
+        flow: crate::ids::FlowId,
+        bytes: u64,
+        out: &mut Outbox,
+    ) -> SimTime {
+        let hw = &mut self.nodes[node.idx()];
+        hw.nic.egress(now, flow, bytes, &hw.knobs, &mut hw.rng, out)
+    }
+
+    /// Inter-node RDMA (east-west). KV-transfer budgets apply the fabric
+    /// knob's budget factor (EW8) by inflating effective bytes.
+    pub fn rdma(
+        &mut self,
+        now: SimTime,
+        from: NodeId,
+        to: NodeId,
+        bytes: u64,
+        kv_transfer: bool,
+        out: &mut Outbox,
+    ) -> SimTime {
+        let eff_bytes = if kv_transfer {
+            (bytes as f64 / self.fabric_knobs.kv_link_budget_factor.max(0.05)) as u64
+        } else {
+            bytes
+        };
+        let hw_rng = &mut self.nodes[from.idx()].rng;
+        self.fabric.rdma(now, from, to, eff_bytes, &self.fabric_knobs, hw_rng, out)
+    }
+
+    /// Window-tick maintenance: background load + PCIe utilization samples.
+    pub fn on_window_tick(&mut self, now: SimTime, window_ns: u64, out: &mut Outbox) {
+        for hw in &mut self.nodes {
+            hw.pcie.apply_background(now, window_ns, &hw.knobs);
+            hw.nic.apply_background(now, window_ns, &hw.knobs);
+            hw.pcie.sample_util(now, out);
+            // A background tenant's packets are traffic the DPU sees too
+            // (NS9: shared NIC with storage/other jobs).
+            if hw.knobs.nic_background_frac > 0.0 {
+                let bytes =
+                    (hw.knobs.nic_background_frac * hw.nic.rx.bw * window_ns as f64 / 1e9) as u64;
+                let depth = (hw.knobs.nic_background_frac * 128.0) as u32;
+                let bg_flow = crate::ids::FlowId(u32::MAX);
+                out.emit(now, hw.node, TelemetryKind::NicRx {
+                    flow: bg_flow, bytes, queue_depth: depth,
+                });
+                out.emit(now, hw.node, TelemetryKind::NicTx {
+                    flow: bg_flow, bytes, queue_depth: depth,
+                    wait_ns: (window_ns / 100).max(1_000),
+                });
+            }
+        }
+    }
+
+    /// Reset all pathology knobs to healthy.
+    pub fn heal(&mut self) {
+        let g = self.spec.gpus_per_node;
+        for hw in &mut self.nodes {
+            hw.knobs = NodeKnobs::healthy(g);
+        }
+        self.fabric_knobs = FabricKnobs::default();
+    }
+
+    pub fn all_healthy(&self) -> bool {
+        self.fabric_knobs.is_healthy() && self.nodes.iter().all(|n| n.knobs.is_healthy())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::FlowId;
+
+    #[test]
+    fn build_and_route() {
+        let c = Cluster::new(ClusterSpec::default(), 42);
+        assert_eq!(c.nodes.len(), 4);
+        assert_eq!(c.nodes[2].gpus.len(), 4);
+        assert_eq!(c.node_of(GpuId(9)), NodeId(2));
+        assert!(c.all_healthy());
+    }
+
+    #[test]
+    fn p2p_uses_nvlink_by_default_and_pcie_when_forced() {
+        let mut c = Cluster::new(ClusterSpec::default(), 1);
+        let mut out = Outbox::new();
+        c.p2p(SimTime(0), GpuId(0), GpuId(1), 1 << 20, &mut out);
+        assert!(matches!(out.items.last().unwrap().2, TelemetryKind::NvlinkBurst { .. }));
+        c.nodes[0].knobs.p2p_over_pcie = true;
+        c.p2p(SimTime(0), GpuId(0), GpuId(1), 1 << 20, &mut out);
+        assert!(matches!(out.items.last().unwrap().2, TelemetryKind::P2pPcie { .. }));
+    }
+
+    #[test]
+    fn heal_restores_health() {
+        let mut c = Cluster::new(ClusterSpec::default(), 1);
+        c.nodes[1].knobs.gpu_speed_factor[0] = 0.3;
+        c.fabric_knobs.loss_prob = 0.1;
+        assert!(!c.all_healthy());
+        c.heal();
+        assert!(c.all_healthy());
+    }
+
+    #[test]
+    fn kv_budget_factor_slows_kv_transfers() {
+        let mut c = Cluster::new(ClusterSpec::default(), 1);
+        let mut out = Outbox::new();
+        let base = c.rdma(SimTime(0), NodeId(0), NodeId(1), 1 << 22, true, &mut out);
+        let mut c2 = Cluster::new(ClusterSpec::default(), 1);
+        c2.fabric_knobs.kv_link_budget_factor = 0.25;
+        let slow = c2.rdma(SimTime(0), NodeId(0), NodeId(1), 1 << 22, true, &mut out);
+        assert!(slow.ns() > base.ns() * 2);
+    }
+
+    #[test]
+    fn ingress_egress_roundtrip_emits_rx_tx() {
+        let mut c = Cluster::new(ClusterSpec::default(), 1);
+        let mut out = Outbox::new();
+        let t1 = c.ingress(SimTime(0), NodeId(0), FlowId(5), 2048, &mut out);
+        let t2 = c.egress(t1, NodeId(0), FlowId(5), 4096, &mut out);
+        assert!(t2 > t1);
+        let classes: Vec<&str> = out.items.iter().map(|(_, _, k)| k.class()).collect();
+        assert!(classes.contains(&"nic_rx"));
+        assert!(classes.contains(&"nic_tx"));
+    }
+
+    #[test]
+    fn window_tick_emits_util_samples() {
+        let mut c = Cluster::new(ClusterSpec::default(), 1);
+        let mut out = Outbox::new();
+        c.on_window_tick(SimTime(1_000_000), 1_000_000, &mut out);
+        let utils = out
+            .items
+            .iter()
+            .filter(|(_, _, k)| matches!(k, TelemetryKind::PcieUtil { .. }))
+            .count();
+        assert_eq!(utils, 4); // one per node
+    }
+}

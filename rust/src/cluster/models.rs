@@ -1,0 +1,578 @@
+//! Hardware component models: bandwidth-queued links, the per-node PCIe
+//! complex, NIC queues with loss/retransmit, and a GPU execution model.
+//!
+//! Every model is a passive state machine: callers pass `now`, models return
+//! completion times and emit telemetry into an [`Outbox`]. All timing flows
+//! through busy-until bandwidth queueing — simple, O(1), and it produces the
+//! queueing/burst/starvation signatures the runbooks describe.
+
+use crate::cluster::topology::{ClusterSpec, NodeKnobs};
+use crate::ids::{GpuId, LinkId, NodeId};
+use crate::sim::{SimDur, SimTime};
+use crate::telemetry::event::{Phase, TelemetryKind};
+use crate::util::rng::Rng;
+
+/// Deferred telemetry emissions: (timestamp, node, kind), drained into the
+/// sim calendar by the scenario loop so observers see time-ordered events.
+#[derive(Debug, Default)]
+pub struct Outbox {
+    pub items: Vec<(SimTime, NodeId, TelemetryKind)>,
+}
+
+impl Outbox {
+    pub fn new() -> Self {
+        Outbox { items: Vec::new() }
+    }
+
+    #[inline]
+    pub fn emit(&mut self, t: SimTime, node: NodeId, kind: TelemetryKind) {
+        self.items.push((t, node, kind));
+    }
+
+    pub fn drain(&mut self) -> Vec<(SimTime, NodeId, TelemetryKind)> {
+        std::mem::take(&mut self.items)
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+/// A bandwidth-queued link: transfers serialize; queueing delay emerges from
+/// `busy_until`. Tracks busy-time for utilization sampling.
+#[derive(Debug, Clone)]
+pub struct LinkModel {
+    pub bw: f64, // bytes/sec
+    pub base_lat_ns: u64,
+    busy_until: SimTime,
+    busy_ns_accum: u64,
+    last_sample: SimTime,
+    pub bytes_total: u64,
+}
+
+impl LinkModel {
+    pub fn new(bw: f64, base_lat_ns: u64) -> Self {
+        LinkModel {
+            bw,
+            base_lat_ns,
+            busy_until: SimTime::ZERO,
+            busy_ns_accum: 0,
+            last_sample: SimTime::ZERO,
+            bytes_total: 0,
+        }
+    }
+
+    /// Queue a transfer of `bytes` at `now` with an effective bandwidth
+    /// factor; returns (service_start, completion).
+    pub fn transfer(&mut self, now: SimTime, bytes: u64, bw_factor: f64) -> (SimTime, SimTime) {
+        let start = now.max(self.busy_until);
+        let eff_bw = (self.bw * bw_factor).max(1.0);
+        let service_ns = (bytes as f64 / eff_bw * 1e9).ceil() as u64;
+        let done = start + SimDur(service_ns + self.base_lat_ns);
+        self.busy_until = SimTime(start.ns() + service_ns);
+        self.busy_ns_accum += service_ns;
+        self.bytes_total += bytes;
+        (start, done)
+    }
+
+    /// Instantaneous backlog at `now`, in ns of queued service time.
+    pub fn backlog_ns(&self, now: SimTime) -> u64 {
+        self.busy_until.ns().saturating_sub(now.ns())
+    }
+
+    /// Busy fraction since the last utilization sample.
+    pub fn utilization_sample(&mut self, now: SimTime) -> f64 {
+        let span = (now - self.last_sample).ns().max(1);
+        let frac = (self.busy_ns_accum as f64 / span as f64).min(1.0);
+        self.busy_ns_accum = 0;
+        self.last_sample = now;
+        frac
+    }
+
+    /// Reserve a fraction of this link (background tenant): advances
+    /// busy_until as if `frac` of the elapsed window were consumed.
+    pub fn consume_background(&mut self, now: SimTime, window_ns: u64, frac: f64) {
+        if frac <= 0.0 {
+            return;
+        }
+        let burn = (window_ns as f64 * frac) as u64;
+        let base = now.max(self.busy_until);
+        self.busy_until = SimTime(base.ns() + burn);
+        self.busy_ns_accum += burn;
+    }
+}
+
+/// Fragment size when the pinned pool is fragmented (PC7).
+const FRAG_BYTES: u64 = 64 * 1024;
+/// Max fragments per logical DMA (bounds event volume).
+const MAX_FRAGS: u64 = 8;
+/// Registration (map/unmap) cost when churn is active (PC9).
+const MEM_REG_NS: u64 = 2_000;
+/// Extra staging latency for pageable buffers (PC1 flavor).
+const UNPINNED_STAGE_NS: u64 = 15_000;
+
+/// Per-node PCIe root complex: per-GPU x16 links plus a shared switch uplink
+/// that P2P and background tenants contend on.
+#[derive(Debug)]
+pub struct PcieComplex {
+    node: NodeId,
+    pub per_gpu: Vec<LinkModel>,
+    pub switch_uplink: LinkModel,
+    dma_seq: u64,
+}
+
+impl PcieComplex {
+    pub fn new(node: NodeId, spec: &ClusterSpec) -> Self {
+        PcieComplex {
+            node,
+            per_gpu: (0..spec.gpus_per_node)
+                .map(|_| LinkModel::new(spec.pcie_bw, spec.pcie_base_lat_ns))
+                .collect(),
+            // Switch uplink is shared: model at 2x a single GPU link.
+            switch_uplink: LinkModel::new(spec.pcie_bw * 2.0, spec.pcie_base_lat_ns),
+            dma_seq: 0,
+        }
+    }
+
+    fn local_idx(&self, gpu: GpuId) -> usize {
+        gpu.idx() % self.per_gpu.len()
+    }
+
+    /// Host-to-device DMA. Returns completion time.
+    pub fn h2d(
+        &mut self,
+        now: SimTime,
+        gpu: GpuId,
+        bytes: u64,
+        phase: Phase,
+        knobs: &NodeKnobs,
+        out: &mut Outbox,
+    ) -> SimTime {
+        self.dma(now, gpu, bytes, phase, knobs, out, /*h2d=*/ true)
+    }
+
+    /// Device-to-host DMA. Returns completion time.
+    pub fn d2h(
+        &mut self,
+        now: SimTime,
+        gpu: GpuId,
+        bytes: u64,
+        phase: Phase,
+        knobs: &NodeKnobs,
+        out: &mut Outbox,
+    ) -> SimTime {
+        self.dma(now, gpu, bytes, phase, knobs, out, /*h2d=*/ false)
+    }
+
+    fn dma(
+        &mut self,
+        now: SimTime,
+        gpu: GpuId,
+        bytes: u64,
+        phase: Phase,
+        knobs: &NodeKnobs,
+        out: &mut Outbox,
+        h2d: bool,
+    ) -> SimTime {
+        self.dma_seq += 1;
+        let node = self.node;
+        let idx = self.local_idx(gpu);
+        let bw_factor = if h2d { knobs.h2d_bw_factor } else { knobs.d2h_bw_factor }
+            * (1.0 - knobs.pcie_background_load).max(0.05);
+        let mut issue = now;
+        // Pageable buffers stage through a bounce buffer first.
+        if knobs.unpinned_buffers {
+            issue = issue + SimDur(UNPINNED_STAGE_NS);
+        }
+        // Registration churn maps before and unmaps after.
+        if knobs.mem_reg_churn {
+            out.emit(issue, node, TelemetryKind::MemRegistration { gpu, bytes, unmap: false });
+            issue = issue + SimDur(MEM_REG_NS);
+        }
+        // Fragmentation splits the logical DMA into small transactions.
+        let n_frags = if knobs.pinned_pool_frag {
+            (bytes / FRAG_BYTES).clamp(4, MAX_FRAGS)
+        } else {
+            1
+        };
+        let frag_bytes = bytes / n_frags;
+        let extra = SimDur(knobs.pcie_extra_lat_ns);
+        let mut done = issue;
+        for _ in 0..n_frags {
+            let (start, frag_done) = self.per_gpu[idx].transfer(issue, frag_bytes, bw_factor);
+            let frag_done = frag_done + extra;
+            let lat = (frag_done - start).ns();
+            let kind = if h2d {
+                TelemetryKind::DmaH2d { gpu, bytes: frag_bytes, latency_ns: lat, phase }
+            } else {
+                TelemetryKind::DmaD2h { gpu, bytes: frag_bytes, latency_ns: lat, phase }
+            };
+            out.emit(frag_done, node, kind);
+            done = frag_done;
+            issue = start; // fragments pipeline behind each other
+        }
+        done
+    }
+
+    /// GPU-to-GPU transfer over the PCIe switch (when NVLink is absent or
+    /// disabled). Returns completion.
+    pub fn p2p(
+        &mut self,
+        now: SimTime,
+        from: GpuId,
+        to: GpuId,
+        bytes: u64,
+        knobs: &NodeKnobs,
+        out: &mut Outbox,
+    ) -> SimTime {
+        let bw_factor = (1.0 - knobs.pcie_background_load).max(0.05);
+        let (start, done) = self.switch_uplink.transfer(now, bytes, bw_factor);
+        let lat = (done - start).ns();
+        out.emit(done, self.node, TelemetryKind::P2pPcie { from, to, bytes, latency_ns: lat });
+        done
+    }
+
+    /// Periodic utilization sample across the per-GPU links.
+    pub fn sample_util(&mut self, now: SimTime, out: &mut Outbox) {
+        let mut total = 0.0;
+        let n = self.per_gpu.len();
+        for link in &mut self.per_gpu {
+            total += link.utilization_sample(now);
+        }
+        let busy = total / n.max(1) as f64;
+        out.emit(now, self.node, TelemetryKind::PcieUtil { link: LinkId(self.node.0), busy });
+    }
+
+    /// Apply background tenant load for the elapsed window (PC5).
+    pub fn apply_background(&mut self, now: SimTime, window_ns: u64, knobs: &NodeKnobs) {
+        if knobs.pcie_background_load > 0.0 {
+            for link in &mut self.per_gpu {
+                link.consume_background(now, window_ns, knobs.pcie_background_load);
+            }
+            self.switch_uplink.consume_background(now, window_ns, knobs.pcie_background_load);
+        }
+    }
+
+    pub fn backlog_ns(&self, now: SimTime, gpu: GpuId) -> u64 {
+        self.per_gpu[self.local_idx(gpu)].backlog_ns(now)
+    }
+}
+
+/// Retransmission timeout for lost packets.
+const RETX_TIMEOUT_NS: u64 = 50_000;
+/// Max retransmission attempts before we give up and deliver anyway (the
+/// transport eventually succeeds; we only model added latency + signals).
+const MAX_RETX: u32 = 3;
+/// Nominal packet size for queue-depth estimation.
+const PKT_BYTES: u64 = 4096;
+
+/// NIC model: RX and TX queues at line rate with loss/retransmit and
+/// background-traffic contention.
+#[derive(Debug)]
+pub struct Nic {
+    node: NodeId,
+    pub rx: LinkModel,
+    pub tx: LinkModel,
+    queue_cap: u32,
+    pub rx_drops: u64,
+    pub tx_drops: u64,
+}
+
+impl Nic {
+    pub fn new(node: NodeId, spec: &ClusterSpec) -> Self {
+        Nic {
+            node,
+            rx: LinkModel::new(spec.nic_bw, 500),
+            tx: LinkModel::new(spec.nic_bw, 500),
+            queue_cap: spec.nic_queue_cap,
+            rx_drops: 0,
+            tx_drops: 0,
+        }
+    }
+
+    fn qdepth(link: &LinkModel, now: SimTime, bw: f64) -> u32 {
+        let ns_per_pkt = (PKT_BYTES as f64 / bw * 1e9).max(1.0);
+        (link.backlog_ns(now) as f64 / ns_per_pkt) as u32
+    }
+
+    /// Ingress delivery: returns when the payload reaches the host.
+    /// Loss inflates latency by retransmission rounds and emits signals.
+    pub fn ingress(
+        &mut self,
+        now: SimTime,
+        flow: crate::ids::FlowId,
+        bytes: u64,
+        knobs: &NodeKnobs,
+        rng: &mut Rng,
+        out: &mut Outbox,
+    ) -> SimTime {
+        let bw_factor = (1.0 - knobs.nic_background_frac).max(0.05);
+        let mut attempt_start = now;
+        let mut attempts = 0;
+        while attempts < MAX_RETX && rng.chance(knobs.nic_rx_loss) {
+            attempts += 1;
+            self.rx_drops += 1;
+            out.emit(attempt_start, self.node, TelemetryKind::PktDrop { flow, ingress: true, fabric: false });
+            let retx_at = attempt_start + SimDur(RETX_TIMEOUT_NS);
+            out.emit(retx_at, self.node, TelemetryKind::Retransmit { flow, ingress: true, fabric: false });
+            attempt_start = retx_at;
+        }
+        let (start, done) = self.rx.transfer(attempt_start, bytes, bw_factor);
+        let depth = Self::qdepth(&self.rx, start, self.rx.bw);
+        out.emit(done, self.node, TelemetryKind::NicRx { flow, bytes, queue_depth: depth });
+        done
+    }
+
+    /// Egress: returns when the last byte leaves the wire.
+    pub fn egress(
+        &mut self,
+        now: SimTime,
+        flow: crate::ids::FlowId,
+        bytes: u64,
+        knobs: &NodeKnobs,
+        rng: &mut Rng,
+        out: &mut Outbox,
+    ) -> SimTime {
+        // Host-side copy cost (CPU contention) before the NIC sees it.
+        let copy_ns = (2_000.0 * knobs.cpu_contention) as u64;
+        // Egress scheduler jitter (NS6).
+        let jitter_ns = if knobs.egress_jitter > 0.0 {
+            (rng.exponential(1.0 / (knobs.egress_jitter * 20_000.0)).min(500_000.0)) as u64
+        } else {
+            0
+        };
+        let enqueue = now + SimDur(copy_ns + jitter_ns);
+        let bw_factor =
+            (1.0 - knobs.nic_background_frac).max(0.05) * knobs.nic_tx_buffer_factor.min(1.0);
+        let mut attempt_start = enqueue;
+        let mut attempts = 0;
+        while attempts < MAX_RETX && rng.chance(knobs.nic_tx_loss) {
+            attempts += 1;
+            self.tx_drops += 1;
+            out.emit(attempt_start, self.node, TelemetryKind::PktDrop { flow, ingress: false, fabric: false });
+            let retx_at = attempt_start + SimDur(RETX_TIMEOUT_NS);
+            out.emit(retx_at, self.node, TelemetryKind::Retransmit { flow, ingress: false, fabric: false });
+            attempt_start = retx_at;
+        }
+        let (start, done) = self.tx.transfer(attempt_start, bytes, bw_factor);
+        // Wait = request-to-wire delay: host copy + scheduler jitter +
+        // retransmit rounds + queueing. This is what a DPU timestamps.
+        let wait = (start - now).ns();
+        let cap = (self.queue_cap as f64 * knobs.nic_tx_buffer_factor) as u32;
+        let depth = Self::qdepth(&self.tx, start, self.tx.bw).min(cap.max(1));
+        out.emit(
+            done,
+            self.node,
+            TelemetryKind::NicTx { flow, bytes, queue_depth: depth, wait_ns: wait },
+        );
+        done
+    }
+
+    pub fn apply_background(&mut self, now: SimTime, window_ns: u64, knobs: &NodeKnobs) {
+        if knobs.nic_background_frac > 0.0 {
+            self.rx.consume_background(now, window_ns, knobs.nic_background_frac);
+            self.tx.consume_background(now, window_ns, knobs.nic_background_frac);
+        }
+    }
+}
+
+/// Fixed kernel-launch overhead (doorbell to execution start).
+const KERNEL_LAUNCH_NS: u64 = 4_000;
+
+/// GPU execution model: serial kernel slots with a per-GPU speed factor.
+#[derive(Debug)]
+pub struct GpuModel {
+    pub gpu: GpuId,
+    node: NodeId,
+    /// Peak throughput, FLOP/s.
+    pub flops_per_s: f64,
+    busy_until: SimTime,
+    pub kernels_run: u64,
+    pub busy_ns_total: u64,
+}
+
+impl GpuModel {
+    pub fn new(gpu: GpuId, node: NodeId, flops_per_s: f64) -> Self {
+        GpuModel {
+            gpu,
+            node,
+            flops_per_s,
+            busy_until: SimTime::ZERO,
+            kernels_run: 0,
+            busy_ns_total: 0,
+        }
+    }
+
+    /// Issue the doorbell (DPU-visible) then run the kernel (DPU-invisible).
+    /// Returns kernel completion time.
+    pub fn launch(
+        &mut self,
+        ready: SimTime,
+        flops: f64,
+        knobs: &NodeKnobs,
+        out: &mut Outbox,
+    ) -> SimTime {
+        let local = self.gpu.idx() % knobs.gpu_speed_factor.len().max(1);
+        let speed = knobs.gpu_speed_factor.get(local).copied().unwrap_or(1.0).max(0.01);
+        let fission = knobs.kernel_fission.max(1) as u64;
+        // Host-side launch path: doorbell delayed by CPU contention + knob.
+        let db_delay = (knobs.doorbell_delay_ns as f64 * knobs.cpu_contention) as u64
+            + ((knobs.cpu_contention - 1.0).max(0.0) * 10_000.0) as u64;
+        let mut t = ready + SimDur(db_delay);
+        let flops_per_kernel = flops / fission as f64;
+        for _ in 0..fission {
+            out.emit(t, self.node, TelemetryKind::Doorbell { gpu: self.gpu });
+            let start = t.max(self.busy_until) + SimDur(KERNEL_LAUNCH_NS);
+            let dur_ns = (flops_per_kernel / (self.flops_per_s * speed) * 1e9).ceil() as u64;
+            let done = start + SimDur(dur_ns);
+            out.emit(
+                done,
+                self.node,
+                TelemetryKind::GpuKernel { gpu: self.gpu, dur_ns, flops: flops_per_kernel },
+            );
+            self.busy_until = done;
+            self.kernels_run += 1;
+            self.busy_ns_total += dur_ns;
+            t = done;
+        }
+        self.busy_until
+    }
+
+    pub fn busy_until(&self) -> SimTime {
+        self.busy_until
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::FlowId;
+
+    fn spec() -> ClusterSpec {
+        ClusterSpec::default()
+    }
+
+    #[test]
+    fn link_serializes_transfers() {
+        let mut l = LinkModel::new(1e9, 0); // 1 GB/s
+        let (s1, d1) = l.transfer(SimTime(0), 1_000_000, 1.0); // 1ms service
+        assert_eq!(s1, SimTime(0));
+        assert_eq!(d1.ns(), 1_000_000);
+        let (s2, d2) = l.transfer(SimTime(0), 1_000_000, 1.0);
+        assert_eq!(s2.ns(), 1_000_000); // queued behind first
+        assert_eq!(d2.ns(), 2_000_000);
+        assert_eq!(l.backlog_ns(SimTime(0)), 2_000_000);
+    }
+
+    #[test]
+    fn bw_factor_slows_transfer() {
+        let mut l = LinkModel::new(1e9, 0);
+        let (_, d) = l.transfer(SimTime(0), 1_000_000, 0.5);
+        assert_eq!(d.ns(), 2_000_000);
+    }
+
+    #[test]
+    fn h2d_emits_event_and_respects_knobs() {
+        let mut pcie = PcieComplex::new(NodeId(0), &spec());
+        let knobs = NodeKnobs::healthy(4);
+        let mut out = Outbox::new();
+        let done = pcie.h2d(SimTime(0), GpuId(0), 1 << 20, Phase::Prefill, &knobs, &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(done.ns() > 0);
+        // Slow H2D doubles the time.
+        let mut pcie2 = PcieComplex::new(NodeId(0), &spec());
+        let mut slow = NodeKnobs::healthy(4);
+        slow.h2d_bw_factor = 0.5;
+        let done_slow =
+            pcie2.h2d(SimTime(0), GpuId(0), 1 << 20, Phase::Prefill, &slow, &mut out);
+        assert!(done_slow > done);
+    }
+
+    #[test]
+    fn fragmentation_raises_dma_count() {
+        let mut pcie = PcieComplex::new(NodeId(0), &spec());
+        let mut knobs = NodeKnobs::healthy(4);
+        knobs.pinned_pool_frag = true;
+        let mut out = Outbox::new();
+        pcie.h2d(SimTime(0), GpuId(0), 1 << 20, Phase::Prefill, &knobs, &mut out);
+        assert!(out.len() >= 2, "expected multiple fragment DMAs, got {}", out.len());
+    }
+
+    #[test]
+    fn reg_churn_emits_registration() {
+        let mut pcie = PcieComplex::new(NodeId(0), &spec());
+        let mut knobs = NodeKnobs::healthy(4);
+        knobs.mem_reg_churn = true;
+        let mut out = Outbox::new();
+        pcie.h2d(SimTime(0), GpuId(0), 4096, Phase::Decode, &knobs, &mut out);
+        let has_reg = out
+            .items
+            .iter()
+            .any(|(_, _, k)| matches!(k, TelemetryKind::MemRegistration { .. }));
+        assert!(has_reg);
+    }
+
+    #[test]
+    fn nic_loss_adds_retransmit_latency() {
+        let s = spec();
+        let mut nic = Nic::new(NodeId(0), &s);
+        let healthy = NodeKnobs::healthy(4);
+        let mut lossy = NodeKnobs::healthy(4);
+        lossy.nic_rx_loss = 1.0; // always lose (capped at MAX_RETX)
+        let mut rng = Rng::seeded(1);
+        let mut out = Outbox::new();
+        let d_ok = nic.ingress(SimTime(0), FlowId(0), 4096, &healthy, &mut rng, &mut out);
+        let mut nic2 = Nic::new(NodeId(0), &s);
+        let d_lossy = nic2.ingress(SimTime(0), FlowId(0), 4096, &lossy, &mut rng, &mut out);
+        assert!(d_lossy.ns() >= d_ok.ns() + RETX_TIMEOUT_NS);
+        let retx = out
+            .items
+            .iter()
+            .filter(|(_, _, k)| matches!(k, TelemetryKind::Retransmit { .. }))
+            .count();
+        assert_eq!(retx, MAX_RETX as usize);
+    }
+
+    #[test]
+    fn gpu_speed_factor_stretches_kernels() {
+        let mut g = GpuModel::new(GpuId(0), NodeId(0), 100e12);
+        let mut out = Outbox::new();
+        let healthy = NodeKnobs::healthy(1);
+        let d1 = g.launch(SimTime(0), 1e12, &healthy, &mut out);
+        let mut g2 = GpuModel::new(GpuId(0), NodeId(0), 100e12);
+        let mut slow = NodeKnobs::healthy(1);
+        slow.gpu_speed_factor[0] = 0.5;
+        let d2 = g2.launch(SimTime(0), 1e12, &slow, &mut out);
+        assert!(d2.ns() > (d1.ns() as f64 * 1.8) as u64);
+    }
+
+    #[test]
+    fn kernel_fission_multiplies_doorbells() {
+        let mut g = GpuModel::new(GpuId(0), NodeId(0), 100e12);
+        let mut out = Outbox::new();
+        let mut knobs = NodeKnobs::healthy(1);
+        knobs.kernel_fission = 8;
+        g.launch(SimTime(0), 1e9, &knobs, &mut out);
+        let doorbells = out
+            .items
+            .iter()
+            .filter(|(_, _, k)| matches!(k, TelemetryKind::Doorbell { .. }))
+            .count();
+        assert_eq!(doorbells, 8);
+        assert_eq!(g.kernels_run, 8);
+    }
+
+    #[test]
+    fn utilization_sample_resets() {
+        let mut l = LinkModel::new(1e9, 0);
+        l.transfer(SimTime(0), 500_000, 1.0); // 0.5ms busy
+        let u = l.utilization_sample(SimTime(1_000_000));
+        assert!((u - 0.5).abs() < 0.01, "u={u}");
+        let u2 = l.utilization_sample(SimTime(2_000_000));
+        assert_eq!(u2, 0.0);
+    }
+}

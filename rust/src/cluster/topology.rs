@@ -1,0 +1,276 @@
+//! Cluster topology: nodes × GPUs, PCIe tree, NICs, fabric — plus the
+//! pathology knobs that injectors turn.
+//!
+//! Defaults approximate a DGX-class node: PCIe Gen4 x16 per GPU (~24 GB/s
+//! effective), 400 Gb/s NIC, NVLink intra-node, fat-tree fabric with a
+//! configurable oversubscription factor.
+
+use crate::ids::{GpuId, NodeId};
+
+/// Static description of the simulated cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub n_nodes: usize,
+    pub gpus_per_node: usize,
+    /// Effective per-GPU PCIe bandwidth, bytes/sec.
+    pub pcie_bw: f64,
+    /// PCIe base (propagation + root-complex) latency per transaction, ns.
+    pub pcie_base_lat_ns: u64,
+    /// Whether GPUs within a node have an NVLink path (DPU-invisible).
+    pub nvlink: bool,
+    /// NVLink bandwidth, bytes/sec.
+    pub nvlink_bw: f64,
+    /// NIC line rate, bytes/sec.
+    pub nic_bw: f64,
+    /// NIC queue capacity (packets) before tail drops.
+    pub nic_queue_cap: u32,
+    /// Fabric per-hop base latency, ns.
+    pub fabric_base_lat_ns: u64,
+    /// Fat-tree oversubscription factor (1.0 = non-blocking).
+    pub oversubscription: f64,
+    /// Tensor-parallel degree (GPUs per shard group, intra-node).
+    pub tp_degree: usize,
+    /// Pipeline-parallel degree (stages, across nodes).
+    pub pp_degree: usize,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        ClusterSpec {
+            n_nodes: 4,
+            gpus_per_node: 4,
+            pcie_bw: 24e9,
+            pcie_base_lat_ns: 900,
+            nvlink: true,
+            nvlink_bw: 300e9,
+            nic_bw: 50e9, // 400 Gb/s
+            nic_queue_cap: 2048,
+            fabric_base_lat_ns: 1_500,
+            oversubscription: 1.0,
+            tp_degree: 4,
+            pp_degree: 2,
+        }
+    }
+}
+
+impl ClusterSpec {
+    pub fn n_gpus(&self) -> usize {
+        self.n_nodes * self.gpus_per_node
+    }
+
+    pub fn node_of_gpu(&self, gpu: GpuId) -> NodeId {
+        NodeId((gpu.idx() / self.gpus_per_node) as u32)
+    }
+
+    pub fn gpus_of_node(&self, node: NodeId) -> Vec<GpuId> {
+        let base = node.idx() * self.gpus_per_node;
+        (0..self.gpus_per_node).map(|i| GpuId((base + i) as u32)).collect()
+    }
+
+    /// Validate internal consistency (TP fits in a node, PP fits the cluster).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_nodes == 0 || self.gpus_per_node == 0 {
+            return Err("empty cluster".into());
+        }
+        if self.tp_degree == 0 || self.tp_degree > self.gpus_per_node {
+            return Err(format!(
+                "tp_degree {} must be in 1..={}",
+                self.tp_degree, self.gpus_per_node
+            ));
+        }
+        if self.pp_degree == 0 || self.pp_degree > self.n_nodes {
+            return Err(format!(
+                "pp_degree {} must be in 1..={}",
+                self.pp_degree, self.n_nodes
+            ));
+        }
+        if self.oversubscription < 1.0 {
+            return Err("oversubscription < 1.0".into());
+        }
+        Ok(())
+    }
+}
+
+/// Per-node pathology knobs. All default to "healthy"; injectors mutate these
+/// (possibly time-varying via scheduled toggle events).
+#[derive(Debug, Clone)]
+pub struct NodeKnobs {
+    /// Multiplies effective H2D bandwidth (PC1: cap it).
+    pub h2d_bw_factor: f64,
+    /// Multiplies effective D2H bandwidth (PC2).
+    pub d2h_bw_factor: f64,
+    /// Extra per-transaction PCIe latency, ns (PC2 IOMMU contention).
+    pub pcie_extra_lat_ns: u64,
+    /// Pageable (unpinned) host buffers: extra staging copy + latency (PC1).
+    pub unpinned_buffers: bool,
+    /// Pinned-pool fragmentation: DMAs split into many small transactions (PC7).
+    pub pinned_pool_frag: bool,
+    /// Added delay between data-ready and kernel doorbell, ns (PC3).
+    pub doorbell_delay_ns: u64,
+    /// Tiny-kernel storm: multiplies kernel-launch count per step (PC3).
+    pub kernel_fission: u32,
+    /// Host CPU contention factor >= 1.0: slows host-side ops (PC8, NS5).
+    pub cpu_contention: f64,
+    /// Registration churn: map/unmap around every DMA (PC9).
+    pub mem_reg_churn: bool,
+    /// Per-local-GPU compute speed factor (1.0 healthy; <1.0 slow) (PC4, EW1).
+    pub gpu_speed_factor: Vec<f64>,
+    /// Force intra-node P2P over PCIe even when NVLink exists (PC6).
+    pub p2p_over_pcie: bool,
+    /// Fraction of PCIe bandwidth consumed by a competing tenant (PC5).
+    pub pcie_background_load: f64,
+    /// Ingress packet loss probability (NS4).
+    pub nic_rx_loss: f64,
+    /// Egress packet loss probability (NS7).
+    pub nic_tx_loss: f64,
+    /// Fraction of NIC line rate consumed by background traffic (NS9).
+    pub nic_background_frac: f64,
+    /// Shrink TX buffering (NS5): queue capacity factor.
+    pub nic_tx_buffer_factor: f64,
+    /// Egress scheduler jitter multiplier (NS6).
+    pub egress_jitter: f64,
+    /// Probability this node goes silent in a collective (EW9: early-stop
+    /// ranks not masked by the scheduler).
+    pub collective_silence: f64,
+}
+
+impl Default for NodeKnobs {
+    fn default() -> Self {
+        NodeKnobs {
+            h2d_bw_factor: 1.0,
+            d2h_bw_factor: 1.0,
+            pcie_extra_lat_ns: 0,
+            unpinned_buffers: false,
+            pinned_pool_frag: false,
+            doorbell_delay_ns: 0,
+            kernel_fission: 1,
+            cpu_contention: 1.0,
+            mem_reg_churn: false,
+            gpu_speed_factor: Vec::new(), // sized by Cluster::new
+            p2p_over_pcie: false,
+            pcie_background_load: 0.0,
+            nic_rx_loss: 0.0,
+            nic_tx_loss: 0.0,
+            nic_background_frac: 0.0,
+            nic_tx_buffer_factor: 1.0,
+            egress_jitter: 0.0,
+            collective_silence: 0.0,
+        }
+    }
+}
+
+impl NodeKnobs {
+    pub fn healthy(n_gpus: usize) -> Self {
+        let mut k = NodeKnobs::default();
+        k.gpu_speed_factor = vec![1.0; n_gpus];
+        k
+    }
+
+    pub fn is_healthy(&self) -> bool {
+        let d = NodeKnobs::default();
+        self.h2d_bw_factor == d.h2d_bw_factor
+            && self.d2h_bw_factor == d.d2h_bw_factor
+            && self.pcie_extra_lat_ns == 0
+            && !self.unpinned_buffers
+            && !self.pinned_pool_frag
+            && self.doorbell_delay_ns == 0
+            && self.kernel_fission == 1
+            && self.cpu_contention == 1.0
+            && !self.mem_reg_churn
+            && self.gpu_speed_factor.iter().all(|&f| f == 1.0)
+            && !self.p2p_over_pcie
+            && self.pcie_background_load == 0.0
+            && self.nic_rx_loss == 0.0
+            && self.nic_tx_loss == 0.0
+            && self.nic_background_frac == 0.0
+            && self.nic_tx_buffer_factor == 1.0
+            && self.egress_jitter == 0.0
+            && self.collective_silence == 0.0
+    }
+}
+
+/// Fabric-level pathology knobs (shared across nodes).
+#[derive(Debug, Clone)]
+pub struct FabricKnobs {
+    /// Extra load factor on "hot" uplinks (EW4); 0 = none.
+    pub hot_uplink_load: f64,
+    /// Which node's uplink is hot (EW4); None = all equally.
+    pub hot_node: Option<NodeId>,
+    /// Packet/burst loss probability in the fabric (EW6).
+    pub loss_prob: f64,
+    /// Head-of-line blocking: serialize flows through one queue (EW5).
+    pub hol_blocking: bool,
+    /// RDMA credit window (messages in flight before requiring a credit
+    /// update); small values starve (EW7).
+    pub credit_window: u32,
+    /// Multiplies KV-transfer link budget (EW8: <1 shrinks it).
+    pub kv_link_budget_factor: f64,
+}
+
+impl Default for FabricKnobs {
+    fn default() -> Self {
+        FabricKnobs {
+            hot_uplink_load: 0.0,
+            hot_node: None,
+            loss_prob: 0.0,
+            hol_blocking: false,
+            credit_window: 64,
+            kv_link_budget_factor: 1.0,
+        }
+    }
+}
+
+impl FabricKnobs {
+    pub fn is_healthy(&self) -> bool {
+        self.hot_uplink_load == 0.0
+            && self.loss_prob == 0.0
+            && !self.hol_blocking
+            && self.credit_window >= 64
+            && self.kv_link_budget_factor == 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_validates() {
+        assert!(ClusterSpec::default().validate().is_ok());
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        let mut s = ClusterSpec::default();
+        s.tp_degree = 8; // > gpus_per_node
+        assert!(s.validate().is_err());
+        let mut s = ClusterSpec::default();
+        s.pp_degree = 9;
+        assert!(s.validate().is_err());
+        let mut s = ClusterSpec::default();
+        s.oversubscription = 0.5;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn gpu_node_mapping() {
+        let s = ClusterSpec::default(); // 4 nodes x 4 gpus
+        assert_eq!(s.node_of_gpu(GpuId(0)), NodeId(0));
+        assert_eq!(s.node_of_gpu(GpuId(5)), NodeId(1));
+        assert_eq!(s.node_of_gpu(GpuId(15)), NodeId(3));
+        assert_eq!(s.gpus_of_node(NodeId(1)), vec![GpuId(4), GpuId(5), GpuId(6), GpuId(7)]);
+    }
+
+    #[test]
+    fn knob_health_checks() {
+        let k = NodeKnobs::healthy(4);
+        assert!(k.is_healthy());
+        let mut k2 = k.clone();
+        k2.gpu_speed_factor[2] = 0.5;
+        assert!(!k2.is_healthy());
+        assert!(FabricKnobs::default().is_healthy());
+        let mut f = FabricKnobs::default();
+        f.loss_prob = 0.01;
+        assert!(!f.is_healthy());
+    }
+}

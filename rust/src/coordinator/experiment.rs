@@ -1,0 +1,155 @@
+//! Experiment runner: the shared harness behind every bench and example.
+//! One condition-experiment = healthy run + injected run (+ optionally a
+//! mitigated run), with detection quality and serving-impact deltas.
+
+use crate::dpu::detectors::Condition;
+use crate::dpu::runbook;
+use crate::sim::{SimDur, SimTime, MS};
+use crate::coordinator::scenario::{RunResult, Scenario, ScenarioCfg};
+
+/// Standard experiment timing: calibration + measurement phases.
+pub fn standard_cfg() -> ScenarioCfg {
+    let mut cfg = ScenarioCfg::default();
+    cfg.duration = SimDur::from_ms(2600);
+    cfg.warmup_windows = 20; // 200ms startup transient discarded
+    cfg.calib_windows = 100; // 1s calibration at 10ms windows
+    cfg.workload.arrival = crate::sim::dist::Arrival::Poisson { rate: 400.0 };
+    cfg.workload.prompt_len = crate::sim::dist::LengthDist::Uniform { lo: 8, hi: 48 };
+    cfg.workload.output_len = crate::sim::dist::LengthDist::Uniform { lo: 4, hi: 16 };
+    cfg
+}
+
+/// Injection time used by condition experiments (after calibration).
+pub fn inject_time(cfg: &ScenarioCfg) -> SimTime {
+    SimTime((cfg.warmup_windows + cfg.calib_windows) * cfg.window.ns() + 300 * MS)
+}
+
+/// Outcome of one condition's inject-and-detect experiment.
+#[derive(Debug)]
+pub struct ConditionReport {
+    pub condition: Condition,
+    pub injection_desc: String,
+    /// Did the matching detector fire after injection?
+    pub detected: bool,
+    /// Injection -> first correct detection.
+    pub detection_latency: Option<SimDur>,
+    /// All conditions that fired after injection (cross-talk view).
+    pub fired: Vec<(Condition, usize)>,
+    /// Serving metrics: healthy vs injected.
+    pub healthy: RunResult,
+    pub injected: RunResult,
+    /// Optional third phase: injected with the closed loop enabled.
+    pub mitigated: Option<RunResult>,
+}
+
+impl ConditionReport {
+    /// Throughput ratio injected/healthy (the condition's serving impact).
+    pub fn throughput_impact(&self) -> f64 {
+        let h = self.healthy.metrics.tok_per_s();
+        if h <= 0.0 {
+            return 1.0;
+        }
+        self.injected.metrics.tok_per_s() / h
+    }
+
+    /// p99 TTFT inflation factor under injection.
+    pub fn p99_inflation(&self) -> f64 {
+        let h = self.healthy.metrics.ttft_ns.p99();
+        if h <= 0.0 {
+            return 1.0;
+        }
+        self.injected.metrics.ttft_ns.p99() / h
+    }
+
+    /// Fraction of lost throughput recovered by mitigation.
+    pub fn recovery(&self) -> Option<f64> {
+        let m = self.mitigated.as_ref()?;
+        let h = self.healthy.metrics.tok_per_s();
+        let i = self.injected.metrics.tok_per_s();
+        let mm = m.metrics.tok_per_s();
+        if h - i < 1e-9 {
+            return Some(1.0);
+        }
+        Some(((mm - i) / (h - i)).clamp(0.0, 1.5))
+    }
+}
+
+/// Run the standard three-phase experiment for one condition.
+pub fn condition_experiment(
+    c: Condition,
+    base: &ScenarioCfg,
+    with_mitigation: bool,
+) -> ConditionReport {
+    let healthy = Scenario::new(base.clone()).run();
+
+    let mut inj_cfg = base.clone();
+    inj_cfg.inject = Some((c, inject_time(base)));
+    let injected = Scenario::new(inj_cfg.clone()).run();
+
+    let mitigated = if with_mitigation {
+        let mut mit_cfg = inj_cfg.clone();
+        mit_cfg.mitigate = true;
+        Some(Scenario::new(mit_cfg).run())
+    } else {
+        None
+    };
+
+    let t0 = injected.injected_at.unwrap_or(SimTime::ZERO);
+    let detected = injected.detections.iter().any(|d| d.condition == c && d.at >= t0);
+    let detection_latency = injected.detection_latency(c);
+    let mut fired_map = std::collections::BTreeMap::new();
+    for d in &injected.detections {
+        if d.at >= t0 {
+            *fired_map.entry(d.condition).or_insert(0usize) += 1;
+        }
+    }
+    ConditionReport {
+        condition: c,
+        injection_desc: injected.injection_desc.clone().unwrap_or_default(),
+        detected,
+        detection_latency,
+        fired: fired_map.into_iter().collect(),
+        healthy,
+        injected,
+        mitigated,
+    }
+}
+
+/// Render a paper-style runbook row + measured columns.
+pub fn report_row(r: &ConditionReport) -> Vec<String> {
+    let e = runbook::entry(r.condition);
+    vec![
+        r.condition.id().to_string(),
+        if r.detected { "yes".into() } else { "NO".into() },
+        r.detection_latency
+            .map(|d| crate::util::table::fmt_ns(d.ns() as f64))
+            .unwrap_or_else(|| "-".into()),
+        format!("{:.2}x", r.throughput_impact()),
+        format!("{:.1}x", r.p99_inflation()),
+        match r.recovery() {
+            Some(f) => format!("{:.0}%", f * 100.0),
+            None => "-".into(),
+        },
+        format!("{:?}", e.directive),
+    ]
+}
+
+pub fn report_header() -> [&'static str; 7] {
+    ["id", "detected", "latency", "tput(inj/healthy)", "p99 ttft infl", "recovered", "directive"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn condition_experiment_ew7_detects() {
+        let mut cfg = standard_cfg();
+        cfg.duration = SimDur::from_ms(2200);
+        let rep = condition_experiment(Condition::Ew7CreditStarvation, &cfg, false);
+        assert!(rep.detected, "EW7 undetected; fired={:?}", rep.fired);
+        assert!(rep.detection_latency.is_some());
+        let row = report_row(&rep);
+        assert_eq!(row.len(), report_header().len());
+    }
+}

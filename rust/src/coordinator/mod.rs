@@ -1,0 +1,9 @@
+//! Orchestration: the scenario world (event loop), experiment runner, and
+//! the CLI surface.
+
+pub mod experiment;
+pub mod report;
+pub mod scenario;
+
+pub use experiment::{condition_experiment, ConditionReport};
+pub use scenario::{target_node_for, RunResult, Scenario, ScenarioCfg};

@@ -1,0 +1,176 @@
+//! Machine-readable experiment reports: serialize run results, detections,
+//! attributions, and runbook metadata to JSON for downstream tooling
+//! (dashboards, CI trend lines, the paper's tables as data).
+
+use crate::coordinator::scenario::RunResult;
+use crate::dpu::detectors::Condition;
+use crate::dpu::runbook;
+use crate::util::json::Json;
+
+/// Serialize the serving metrics of a run.
+pub fn metrics_json(res: &RunResult) -> Json {
+    Json::obj()
+        .set("completed", res.metrics.completed)
+        .set("rejected", res.metrics.rejected)
+        .set("tokens_out", res.metrics.tokens_out)
+        .set("req_per_s", res.metrics.req_per_s())
+        .set("tok_per_s", res.metrics.tok_per_s())
+        .set("ttft_p50_ns", res.metrics.ttft_ns.p50())
+        .set("ttft_p95_ns", res.metrics.ttft_ns.p95())
+        .set("ttft_p99_ns", res.metrics.ttft_ns.p99())
+        .set("tpot_p50_ns", res.metrics.tpot_ns.p50())
+        .set("tpot_p99_ns", res.metrics.tpot_ns.p99())
+}
+
+/// Serialize a full run: metrics + telemetry accounting + detections.
+pub fn run_json(label: &str, res: &RunResult) -> Json {
+    let mut detections = Json::arr();
+    for d in &res.detections {
+        detections.push(
+            Json::obj()
+                .set("condition", d.condition.id())
+                .set("node", d.node.0)
+                .set("at_ns", d.at.ns())
+                .set("severity", d.severity)
+                .set("evidence", d.evidence.as_str()),
+        );
+    }
+    let mut actions = Json::arr();
+    for a in &res.actions {
+        actions.push(
+            Json::obj()
+                .set("at_ns", a.at.ns())
+                .set("directive", format!("{:?}", a.directive))
+                .set("detail", a.detail.as_str()),
+        );
+    }
+    let mut attributions = Json::arr();
+    for a in &res.attributions {
+        attributions.push(
+            Json::obj()
+                .set("cause", format!("{:?}", a.cause))
+                .set("confidence", a.confidence)
+                .set("evidence", a.evidence.as_str()),
+        );
+    }
+    Json::obj()
+        .set("label", label)
+        .set("real_compute", res.real_compute)
+        .set("metrics", metrics_json(res))
+        .set("telemetry_published", res.telemetry_published)
+        .set("dpu_ingested", res.dpu_ingested)
+        .set("dpu_invisible_dropped", res.dpu_invisible_dropped)
+        .set("windows", res.windows)
+        .set("iterations", res.iterations)
+        .set(
+            "injected_at_ns",
+            res.injected_at.map(|t| Json::Int(t.ns() as i64)).unwrap_or(Json::Null),
+        )
+        .set(
+            "injection",
+            res.injection_desc
+                .as_deref()
+                .map(|d| Json::Str(d.to_string()))
+                .unwrap_or(Json::Null),
+        )
+        .set("detections", detections)
+        .set("actions", actions)
+        .set("attributions", attributions)
+}
+
+/// The encoded paper runbooks (Tables 3a-c) as JSON — the tables as data.
+pub fn runbook_json() -> Json {
+    let mut rows = Json::arr();
+    for e in runbook::all_entries() {
+        rows.push(
+            Json::obj()
+                .set("id", e.condition.id())
+                .set("table", e.condition.table())
+                .set("signal", e.signal)
+                .set("stages", e.stages)
+                .set("effect", e.effect)
+                .set("root_cause", e.root_cause)
+                .set("directive", format!("{:?}", e.directive))
+                .set("directive_paper_text", e.directive.paper_text()),
+        );
+    }
+    Json::obj().set("paper", "Khan & Moye 2025").set("conditions", rows)
+}
+
+/// Condition-experiment row as JSON (the bench tables as data).
+pub fn condition_json(rep: &crate::coordinator::experiment::ConditionReport) -> Json {
+    let mut fired = Json::arr();
+    for (c, n) in &rep.fired {
+        fired.push(Json::obj().set("condition", c.id()).set("count", *n));
+    }
+    Json::obj()
+        .set("condition", rep.condition.id())
+        .set("injection", rep.injection_desc.as_str())
+        .set("detected", rep.detected)
+        .set(
+            "detection_latency_ns",
+            rep.detection_latency.map(|d| Json::Int(d.ns() as i64)).unwrap_or(Json::Null),
+        )
+        .set("throughput_impact", rep.throughput_impact())
+        .set("p99_ttft_inflation", rep.p99_inflation())
+        .set(
+            "recovery",
+            rep.recovery().map(Json::Num).unwrap_or(Json::Null),
+        )
+        .set("fired", fired)
+}
+
+/// Convenience: does this JSON document mention a condition id?
+pub fn mentions(json: &Json, condition: Condition) -> bool {
+    json.render().contains(condition.id())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scenario::{Scenario, ScenarioCfg};
+    use crate::sim::SimDur;
+
+    fn tiny_run() -> RunResult {
+        let mut cfg = ScenarioCfg::default();
+        cfg.duration = SimDur::from_ms(300);
+        cfg.warmup_windows = 5;
+        cfg.calib_windows = 10;
+        Scenario::new(cfg).run()
+    }
+
+    #[test]
+    fn run_json_is_valid_and_complete() {
+        let res = tiny_run();
+        let j = run_json("unit", &res);
+        let s = j.render();
+        assert!(s.starts_with('{') && s.ends_with('}'));
+        for key in [
+            "\"label\"",
+            "\"metrics\"",
+            "\"telemetry_published\"",
+            "\"detections\"",
+            "\"dpu_invisible_dropped\"",
+        ] {
+            assert!(s.contains(key), "missing {key} in {s:.200}");
+        }
+    }
+
+    #[test]
+    fn runbook_json_covers_all_28() {
+        let j = runbook_json();
+        let s = j.render();
+        for c in crate::dpu::detectors::ALL_CONDITIONS {
+            assert!(s.contains(&format!("\"{}\"", c.id())), "{} missing", c.id());
+        }
+        assert!(mentions(&j, Condition::Ew8KvBottleneck));
+    }
+
+    #[test]
+    fn metrics_json_has_finite_numbers() {
+        let res = tiny_run();
+        let s = metrics_json(&res).render();
+        assert!(!s.contains("NaN") && !s.contains("inf"));
+        assert!(s.contains("\"tok_per_s\""));
+    }
+}

@@ -1,0 +1,357 @@
+//! The DPU plane: one agent per node, each a bump-in-the-wire observer with
+//! the §4.3 visibility boundary enforced, plus the shared detector registry,
+//! calibration, and the detection log.
+
+use crate::dpu::detectors::{
+    all_detectors, Baseline, Condition, DetectConfig, DetectCtx, Detection, Detector,
+};
+use crate::ids::NodeId;
+use crate::sim::SimTime;
+use crate::telemetry::event::TelemetryEvent;
+use crate::telemetry::window::{WindowAccum, WindowSnapshot};
+
+/// Snapshots of history kept per agent for trend detectors.
+const HISTORY_DEPTH: usize = 8;
+/// Confirmation hysteresis: a detection is reported when the condition
+/// fires in 2 windows within any 3-window span (kills one-window noise
+/// without suppressing intermittent-but-real anomalies).
+const CONFIRM_SPAN: u64 = 3;
+
+/// One node's DPU agent.
+#[derive(Debug)]
+pub struct Agent {
+    pub node: NodeId,
+    accum: WindowAccum,
+    pub baseline: Baseline,
+    history: Vec<WindowSnapshot>,
+    /// Events rejected by the §4.3 visibility boundary.
+    pub invisible_dropped: u64,
+    pub events_ingested: u64,
+    /// Last window index each condition fired in (confirmation hysteresis).
+    last_fired: std::collections::HashMap<Condition, u64>,
+    window_idx: u64,
+}
+
+impl Agent {
+    pub fn new(node: NodeId, n_gpus: usize) -> Self {
+        Agent {
+            node,
+            accum: WindowAccum::new(node, n_gpus),
+            baseline: Baseline::new(),
+            history: Vec::with_capacity(HISTORY_DEPTH),
+            invisible_dropped: 0,
+            events_ingested: 0,
+            last_fired: std::collections::HashMap::new(),
+            window_idx: 0,
+        }
+    }
+
+    /// Ingest a batch of events, applying the DPU visibility filter.
+    pub fn ingest(&mut self, events: &[TelemetryEvent]) {
+        for ev in events {
+            if !ev.kind.dpu_visible() {
+                self.invisible_dropped += 1;
+                continue;
+            }
+            self.events_ingested += 1;
+            self.accum.ingest(ev);
+        }
+    }
+
+    /// Close the current window; returns the snapshot.
+    pub fn tick(&mut self, now: SimTime) -> WindowSnapshot {
+        let snap = self.accum.snapshot(now);
+        if self.history.len() == HISTORY_DEPTH {
+            self.history.remove(0);
+        }
+        self.history.push(snap.clone());
+        snap
+    }
+
+    pub fn history(&self) -> &[WindowSnapshot] {
+        &self.history
+    }
+}
+
+/// The whole DPU observability plane.
+pub struct DpuPlane {
+    pub agents: Vec<Agent>,
+    detectors: Vec<Box<dyn Detector>>,
+    pub cfg: DetectConfig,
+    calibrating: bool,
+    /// Windows discarded before calibration starts (startup transient).
+    pub warmup_windows: u64,
+    /// Full detection log (node-attributed, timestamped).
+    pub detections: Vec<Detection>,
+    pub windows_processed: u64,
+}
+
+impl std::fmt::Debug for DpuPlane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DpuPlane")
+            .field("agents", &self.agents.len())
+            .field("detections", &self.detections.len())
+            .field("calibrating", &self.calibrating)
+            .finish()
+    }
+}
+
+impl DpuPlane {
+    pub fn new(n_nodes: usize, gpus_per_node: usize, cfg: DetectConfig) -> Self {
+        DpuPlane {
+            agents: (0..n_nodes).map(|n| Agent::new(NodeId(n as u32), gpus_per_node)).collect(),
+            detectors: all_detectors(),
+            cfg,
+            calibrating: true,
+            warmup_windows: 50,
+            detections: Vec::new(),
+            windows_processed: 0,
+        }
+    }
+
+    pub fn is_calibrating(&self) -> bool {
+        self.calibrating
+    }
+
+    /// End the calibration phase; baselines freeze, detectors go live.
+    pub fn go_live(&mut self) {
+        for a in &mut self.agents {
+            a.baseline.freeze();
+        }
+        self.calibrating = false;
+    }
+
+    /// Route drained telemetry to the owning agent.
+    pub fn ingest(&mut self, node: NodeId, events: &[TelemetryEvent]) {
+        self.agents[node.idx()].ingest(events);
+    }
+
+    /// Window tick across all agents: snapshot, then calibrate or detect.
+    /// Returns the detections fired this tick.
+    pub fn window_tick(&mut self, now: SimTime) -> Vec<Detection> {
+        let mut fired = Vec::new();
+        let in_warmup = self.calibrating
+            && self.windows_processed < self.warmup_windows * self.agents.len() as u64;
+        for a in &mut self.agents {
+            self.windows_processed += 1;
+            let snap = a.tick(now);
+            if in_warmup {
+                // Startup transient: observe nothing.
+            } else if self.calibrating {
+                for d in &self.detectors {
+                    d.calibrate(&snap, &mut a.baseline);
+                }
+                a.baseline.end_window();
+            } else {
+                // History excludes the snapshot just taken (it's the last
+                // element) so trend detectors compare against the past.
+                let hist_len = a.history.len().saturating_sub(1);
+                let ctx = DetectCtx {
+                    snap: &snap,
+                    baseline: &a.baseline,
+                    history: &a.history[..hist_len],
+                    cfg: &self.cfg,
+                };
+                if std::env::var("DPULENS_DEBUG").is_ok() && snap.node.0 <= 3 {
+                    eprintln!(
+                        "[dbg n{} t={}ms] h2d_rate={:.0} z={:.2} db2h={:.0}us z={:.2} beyond={:.2} busy={:.2} | hgap={:.0}us z={:.2} beyond={:.2} cnt={} | ends={} ratio={:.2} z={:.2} act={}",
+                        snap.node.0, now.ns()/1_000_000,
+                        snap.h2d_rate(), a.baseline.z("pc8.h2d_rate", snap.h2d_rate()),
+                        snap.h2d_to_doorbell_ns.mean()/1e3, a.baseline.z("pc8.h2d_to_db", snap.h2d_to_doorbell_ns.mean()),
+                        a.baseline.above_max("pc8.h2d_to_db", snap.h2d_to_doorbell_ns.mean()),
+                        snap.pcie_busy.mean(),
+                        snap.handoff_gap_ns.mean()/1e3, a.baseline.z("ew2.handoff_gap", snap.handoff_gap_ns.mean()),
+                        a.baseline.above_max("ew2.handoff_gap", snap.handoff_gap_ns.mean()),
+                        snap.handoff_count,
+                        snap.flow_ends, snap.end_len_ratio, a.baseline.z("ns8.end_ratio", snap.end_len_ratio),
+                        snap.active_flows,
+                    );
+                    eprintln!(
+                        "[dbg2 n{} t={}ms] span={:.0}us n={} z={:.2} beyond={:.2} | d2h_dec_bytes={:.0} z={:.2} cnt={}",
+                        snap.node.0, now.ns()/1_000_000,
+                        snap.db_to_handoff_ns.mean()/1e3, snap.db_to_handoff_ns.count(),
+                        a.baseline.z("ew2.stage_span", snap.db_to_handoff_ns.mean()),
+                        a.baseline.above_max("ew2.stage_span", snap.db_to_handoff_ns.mean()),
+                        snap.d2h.decode_bytes.mean(),
+                        a.baseline.z("pc10.decode_bytes", snap.d2h.decode_bytes.mean()),
+                        snap.d2h.decode_count,
+                    );
+                }
+                let mut this_window: Vec<Detection> = Vec::new();
+                for d in &self.detectors {
+                    if let Some(det) = d.check(&ctx) {
+                        this_window.push(det);
+                    }
+                }
+                // Confirmation hysteresis: report when the condition fired
+                // twice within a CONFIRM_SPAN-window span on this node.
+                a.window_idx += 1;
+                for det in this_window {
+                    let prev = a.last_fired.insert(det.condition, a.window_idx);
+                    if let Some(p) = prev {
+                        if a.window_idx - p < CONFIRM_SPAN {
+                            fired.push(det);
+                        }
+                    }
+                }
+            }
+        }
+        self.detections.extend(fired.iter().cloned());
+        fired
+    }
+
+    /// Detection counts per condition (reporting).
+    pub fn counts_by_condition(&self) -> std::collections::BTreeMap<Condition, usize> {
+        let mut m = std::collections::BTreeMap::new();
+        for d in &self.detections {
+            *m.entry(d.condition).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// First detection of a condition at/after `t0` (detection latency).
+    pub fn first_detection_after(&self, c: Condition, t0: SimTime) -> Option<&Detection> {
+        self.detections.iter().filter(|d| d.condition == c && d.at >= t0).min_by_key(|d| d.at)
+    }
+
+    /// Total events the visibility boundary rejected (§4.3 proof).
+    pub fn total_invisible_dropped(&self) -> u64 {
+        self.agents.iter().map(|a| a.invisible_dropped).sum()
+    }
+
+    pub fn total_ingested(&self) -> u64 {
+        self.agents.iter().map(|a| a.events_ingested).sum()
+    }
+
+    pub fn clear_detections(&mut self) {
+        self.detections.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::GpuId;
+    use crate::telemetry::event::{Phase, TelemetryKind};
+
+    fn h2d_ev(t: u64, node: u32, lat: u64) -> TelemetryEvent {
+        TelemetryEvent {
+            t: SimTime(t),
+            node: NodeId(node),
+            kind: TelemetryKind::DmaH2d {
+                gpu: GpuId(0),
+                bytes: 65536,
+                latency_ns: lat,
+                phase: Phase::Prefill,
+            },
+        }
+    }
+
+    fn invisible_ev(t: u64, node: u32) -> TelemetryEvent {
+        TelemetryEvent {
+            t: SimTime(t),
+            node: NodeId(node),
+            kind: TelemetryKind::GpuKernel { gpu: GpuId(0), dur_ns: 100, flops: 1.0 },
+        }
+    }
+
+    #[test]
+    fn visibility_boundary_enforced() {
+        let mut plane = DpuPlane::new(1, 4, DetectConfig::default());
+        plane.ingest(NodeId(0), &[h2d_ev(1, 0, 100), invisible_ev(2, 0), invisible_ev(3, 0)]);
+        assert_eq!(plane.total_ingested(), 1);
+        assert_eq!(plane.total_invisible_dropped(), 2);
+    }
+
+    #[test]
+    fn calibrate_then_detect_pc2() {
+        let mut plane = DpuPlane::new(1, 4, DetectConfig::default());
+        plane.warmup_windows = 0;
+        // Calibration: 20 healthy windows of D2H at ~3us.
+        for w in 0..20u64 {
+            let base = w * 1_000_000;
+            for i in 0..10u64 {
+                plane.ingest(
+                    NodeId(0),
+                    &[TelemetryEvent {
+                        t: SimTime(base + i * 50_000),
+                        node: NodeId(0),
+                        kind: TelemetryKind::DmaD2h {
+                            gpu: GpuId(0),
+                            bytes: 4096,
+                            latency_ns: 3_000 + (i % 3) * 100,
+                            phase: Phase::Decode,
+                        },
+                    }],
+                );
+            }
+            let fired = plane.window_tick(SimTime(base + 1_000_000));
+            assert!(fired.is_empty(), "no detections during calibration");
+        }
+        plane.go_live();
+        // Healthy window: no fire.
+        for i in 0..10u64 {
+            plane.ingest(
+                NodeId(0),
+                &[TelemetryEvent {
+                    t: SimTime(20_000_000 + i * 50_000),
+                    node: NodeId(0),
+                    kind: TelemetryKind::DmaD2h {
+                        gpu: GpuId(0),
+                        bytes: 4096,
+                        latency_ns: 3_100,
+                        phase: Phase::Decode,
+                    },
+                }],
+            );
+        }
+        let fired = plane.window_tick(SimTime(21_000_000));
+        assert!(
+            !fired.iter().any(|d| d.condition == Condition::Pc2D2hBottleneck),
+            "healthy window must not fire PC2: {fired:?}"
+        );
+        // Pathological: slow D2H across two windows (confirmation).
+        let mut fired_any = Vec::new();
+        for w in 0..2u64 {
+            let base = 21_000_000 + w * 1_000_000;
+            for i in 0..10u64 {
+                plane.ingest(
+                    NodeId(0),
+                    &[TelemetryEvent {
+                        t: SimTime(base + i * 50_000),
+                        node: NodeId(0),
+                        kind: TelemetryKind::DmaD2h {
+                            gpu: GpuId(0),
+                            bytes: 4096,
+                            latency_ns: 90_000,
+                            phase: Phase::Decode,
+                        },
+                    }],
+                );
+            }
+            fired_any.extend(plane.window_tick(SimTime(base + 1_000_000)));
+        }
+        assert!(
+            fired_any.iter().any(|d| d.condition == Condition::Pc2D2hBottleneck),
+            "slow D2H must fire PC2, got {fired_any:?}"
+        );
+        assert!(plane.first_detection_after(Condition::Pc2D2hBottleneck, SimTime(21_000_000)).is_some());
+    }
+
+    #[test]
+    fn invisible_events_cannot_trigger_anything() {
+        // NVLink-only anomaly: the DPU plane must stay silent (§4.3).
+        let mut plane = DpuPlane::new(1, 4, DetectConfig::default());
+        plane.warmup_windows = 0;
+        for w in 0..10u64 {
+            plane.window_tick(SimTime((w + 1) * 1_000_000));
+        }
+        plane.go_live();
+        for i in 0..1000u64 {
+            plane.ingest(NodeId(0), &[invisible_ev(11_000_000 + i, 0)]);
+        }
+        let fired = plane.window_tick(SimTime(12_000_000));
+        assert!(fired.is_empty());
+        assert_eq!(plane.total_invisible_dropped(), 1000);
+    }
+}

@@ -1,0 +1,204 @@
+//! Root-cause attribution (paper §4.2): combine detections across vantage
+//! points and nodes to decide *where* a skew originates — host-side (CPU,
+//! PCIe, memory), GPU-side, network-side, or workload shape.
+//!
+//! "If one GPU consistently exhibits delayed PCIe activity after ingress,
+//!  the DPU can attribute the slowdown to local imbalance rather than
+//!  network effects. Conversely, if PCIe patterns are healthy but responses
+//!  stall at egress, the issue is likely network-side."
+
+use std::collections::BTreeMap;
+
+use crate::dpu::detectors::{Condition, Detection};
+use crate::ids::NodeId;
+
+/// Where the root cause lives.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RootCause {
+    /// Host-side on a specific node: CPU, pinned memory, PCIe feed.
+    HostLocal(NodeId),
+    /// A specific node's GPU(s) lag (straggler).
+    GpuSide(NodeId),
+    /// The inter-node fabric or NIC path.
+    NetworkSide,
+    /// The workload's own shape (length variance, early stops).
+    WorkloadShape,
+    /// External clients / upstream services.
+    ClientSide,
+}
+
+/// An attribution verdict with supporting evidence.
+#[derive(Debug, Clone)]
+pub struct Attribution {
+    pub cause: RootCause,
+    pub confidence: f64,
+    pub conditions: Vec<Condition>,
+    pub evidence: String,
+}
+
+fn default_cause(c: Condition, node: NodeId) -> RootCause {
+    use Condition::*;
+    match c {
+        // Host-local PCIe/CPU/memory problems.
+        Pc1H2dStarvation | Pc2D2hBottleneck | Pc3LaunchLatency | Pc5PcieSaturation
+        | Pc6P2pThrottling | Pc7PinnedShortage | Pc8HostCpuBottleneck | Pc9RegistrationChurn => {
+            RootCause::HostLocal(node)
+        }
+        // GPU-side stragglers.
+        Pc4IntraNodeSkew => RootCause::GpuSide(node),
+        // Network path.
+        Ns4IngressRetx | Ns5EgressBacklog | Ns6EgressJitter | Ns7EgressRetx
+        | Ns9BandwidthSaturation | Ew4Congestion | Ew5HolBlocking | Ew6Retransmissions
+        | Ew7CreditStarvation | Ew8KvBottleneck => RootCause::NetworkSide,
+        // Workload shape.
+        Ns8EarlyCompletion | Pc10DecodeEarlyStop | Ew9EarlyStopSkew => RootCause::WorkloadShape,
+        // Client-side arrival patterns.
+        Ns1BurstBacklog | Ns2IngressStarvation | Ns3FlowSkew => RootCause::ClientSide,
+        // Cross-node compute imbalance: attribute to the straggling side if
+        // corroborated, else network-visible compute skew.
+        Ew1TpStraggler | Ew2PpBubble | Ew3CrossNodeSkew => RootCause::GpuSide(node),
+    }
+}
+
+/// Attribute a window's detections. The refinement rules implement §4.2:
+///
+/// * EW straggler + PCIe-vantage anomaly on a node ⇒ that node's host/GPU is
+///   the root cause (high confidence) — not the network.
+/// * EW straggler with *healthy* PCIe everywhere ⇒ network-side.
+/// * PCIe anomalies alone stay host-local.
+pub fn attribute(detections: &[Detection]) -> Vec<Attribution> {
+    if detections.is_empty() {
+        return Vec::new();
+    }
+    let mut by_node: BTreeMap<NodeId, Vec<&Detection>> = BTreeMap::new();
+    for d in detections {
+        by_node.entry(d.node).or_default().push(d);
+    }
+
+    let ew_compute: Vec<&Detection> = detections
+        .iter()
+        .filter(|d| {
+            matches!(
+                d.condition,
+                Condition::Ew1TpStraggler | Condition::Ew2PpBubble | Condition::Ew3CrossNodeSkew
+            )
+        })
+        .collect();
+    let pcie_nodes: Vec<NodeId> = detections
+        .iter()
+        .filter(|d| d.condition.table() == "3b")
+        .map(|d| d.node)
+        .collect();
+
+    let mut out = Vec::new();
+
+    if !ew_compute.is_empty() {
+        if let Some(&culprit) = pcie_nodes.first() {
+            // §4.2 local-imbalance branch: PCIe evidence localizes the skew.
+            let conds: Vec<Condition> = detections
+                .iter()
+                .filter(|d| d.node == culprit || !ew_compute.is_empty())
+                .map(|d| d.condition)
+                .collect();
+            out.push(Attribution {
+                cause: RootCause::GpuSide(culprit),
+                confidence: 0.9,
+                conditions: conds,
+                evidence: format!(
+                    "collective skew corroborated by PCIe-vantage anomaly on {culprit}: \
+                     local imbalance, not network"
+                ),
+            });
+        } else {
+            // §4.2 network branch: healthy PCIe, stalling collectives.
+            out.push(Attribution {
+                cause: RootCause::NetworkSide,
+                confidence: 0.75,
+                conditions: ew_compute.iter().map(|d| d.condition).collect(),
+                evidence: "collective skew with healthy PCIe on all nodes: network-side".into(),
+            });
+        }
+    }
+
+    // Remaining detections get their default attribution, grouped by cause.
+    let mut grouped: BTreeMap<String, Attribution> = BTreeMap::new();
+    for d in detections {
+        if !ew_compute.is_empty()
+            && matches!(
+                d.condition,
+                Condition::Ew1TpStraggler | Condition::Ew2PpBubble | Condition::Ew3CrossNodeSkew
+            )
+        {
+            continue; // already covered by the refined verdict
+        }
+        let cause = default_cause(d.condition, d.node);
+        let key = format!("{cause:?}");
+        let slot = grouped.entry(key).or_insert_with(|| Attribution {
+            cause: cause.clone(),
+            confidence: 0.6,
+            conditions: Vec::new(),
+            evidence: String::new(),
+        });
+        slot.conditions.push(d.condition);
+        slot.confidence = (slot.confidence + 0.1).min(0.95);
+        if !slot.evidence.is_empty() {
+            slot.evidence.push_str("; ");
+        }
+        slot.evidence.push_str(&format!("{} @ {}", d.condition.id(), d.node));
+    }
+    out.extend(grouped.into_values());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimTime;
+
+    fn det(c: Condition, node: u32) -> Detection {
+        Detection {
+            condition: c,
+            node: NodeId(node),
+            at: SimTime(1000),
+            severity: 5.0,
+            evidence: "test".into(),
+        }
+    }
+
+    #[test]
+    fn straggler_with_pcie_evidence_is_local() {
+        let ds = vec![det(Condition::Ew1TpStraggler, 0), det(Condition::Pc4IntraNodeSkew, 1)];
+        let attr = attribute(&ds);
+        assert!(attr
+            .iter()
+            .any(|a| a.cause == RootCause::GpuSide(NodeId(1)) && a.confidence >= 0.9));
+    }
+
+    #[test]
+    fn straggler_without_pcie_evidence_is_network() {
+        let ds = vec![det(Condition::Ew1TpStraggler, 0)];
+        let attr = attribute(&ds);
+        assert_eq!(attr.len(), 1);
+        assert_eq!(attr[0].cause, RootCause::NetworkSide);
+    }
+
+    #[test]
+    fn pcie_alone_is_host_local() {
+        let ds = vec![det(Condition::Pc8HostCpuBottleneck, 2)];
+        let attr = attribute(&ds);
+        assert_eq!(attr.len(), 1);
+        assert_eq!(attr[0].cause, RootCause::HostLocal(NodeId(2)));
+    }
+
+    #[test]
+    fn early_stop_family_is_workload_shape() {
+        let ds = vec![det(Condition::Ns8EarlyCompletion, 0), det(Condition::Pc10DecodeEarlyStop, 0)];
+        let attr = attribute(&ds);
+        assert!(attr.iter().any(|a| a.cause == RootCause::WorkloadShape));
+    }
+
+    #[test]
+    fn empty_detections_empty_attribution() {
+        assert!(attribute(&[]).is_empty());
+    }
+}

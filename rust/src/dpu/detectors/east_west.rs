@@ -1,0 +1,497 @@
+//! Table 3(c) detectors — the East-West sensing runbook: conditions visible
+//! in inter-node RDMA/collective traffic at the NIC.
+
+use super::{fire, Baseline, Condition, DetectCtx, Detection, Detector};
+use crate::telemetry::window::WindowSnapshot;
+
+pub fn detectors() -> Vec<Box<dyn Detector>> {
+    vec![
+        Box::new(TpStraggler),
+        Box::new(PpBubble),
+        Box::new(CrossNodeSkew),
+        Box::new(Congestion),
+        Box::new(HolBlocking),
+        Box::new(Retransmissions),
+        Box::new(CreditStarvation),
+        Box::new(KvBottleneck),
+        Box::new(EarlyStopSkew),
+    ]
+}
+
+/// EW1 — wide max-min arrival spread of TP collective bursts.
+pub struct TpStraggler;
+
+impl Detector for TpStraggler {
+    fn condition(&self) -> Condition {
+        Condition::Ew1TpStraggler
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        if s.tp.completed > 0 {
+            b.observe("ew1.tp_spread", s.tp.spread_ns.mean());
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        if s.tp.completed < 2 {
+            return None;
+        }
+        let z = ctx.baseline.z("ew1.tp_spread", s.tp.spread_ns.mean());
+        let beyond = ctx.baseline.above_max("ew1.tp_spread", s.tp.spread_ns.mean());
+        if z > ctx.cfg.z_fire && beyond > 1.3 {
+            return fire(
+                self.condition(),
+                s,
+                z,
+                format!(
+                    "TP burst arrival spread {:.0}us (z={:.1}) over {} collectives",
+                    s.tp.spread_ns.mean() / 1e3,
+                    z,
+                    s.tp.completed
+                ),
+            );
+        }
+        None
+    }
+}
+
+/// EW2 — large/growing gaps between stage handoff bursts.
+pub struct PpBubble;
+
+impl Detector for PpBubble {
+    fn condition(&self) -> Condition {
+        Condition::Ew2PpBubble
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        // The stage's compute span: last doorbell -> outbound handoff send.
+        // Arrival-rate independent (unlike inter-handoff gaps, which are
+        // dominated by workload cadence when the pipeline isn't saturated).
+        if s.db_to_handoff_ns.count() >= 3 {
+            b.observe("ew2.stage_span", s.db_to_handoff_ns.mean());
+        }
+        if s.handoff_count >= 5 {
+            b.observe("ew2.handoff_gap", s.handoff_gap_ns.mean());
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        // Upstream (sending) nodes carry the compute-span signal and receive
+        // no handoffs themselves; don't gate on inbound traffic.
+        if s.handoff_count < 2 && s.pp.stalled == 0 && s.db_to_handoff_ns.count() < 3 {
+            return None;
+        }
+        let z_span = ctx.baseline.z("ew2.stage_span", s.db_to_handoff_ns.mean());
+        let span_beyond = ctx.baseline.above_max("ew2.stage_span", s.db_to_handoff_ns.mean());
+        let z_gap = ctx.baseline.z("ew2.handoff_gap", s.handoff_gap_ns.mean());
+        let beyond = ctx.baseline.above_max("ew2.handoff_gap", s.handoff_gap_ns.mean());
+        if (s.db_to_handoff_ns.count() >= 3 && z_span > 2.5 && span_beyond > 1.1)
+            || (z_gap > ctx.cfg.z_fire && beyond > 1.3 && s.handoff_count >= 5)
+            || s.pp.stalled > 0
+        {
+            return fire(
+                self.condition(),
+                s,
+                z_span.max(z_gap).max(s.pp.stalled as f64 * 4.0),
+                format!(
+                    "stage compute span {:.0}us (z={:.1}), handoff gap z={:.1}, {} stalled",
+                    s.db_to_handoff_ns.mean() / 1e3,
+                    z_span,
+                    z_gap,
+                    s.pp.stalled
+                ),
+            );
+        }
+        None
+    }
+}
+
+/// EW3 — uneven per-node traffic volume for the same collectives.
+pub struct CrossNodeSkew;
+
+impl Detector for CrossNodeSkew {
+    fn condition(&self) -> Condition {
+        Condition::Ew3CrossNodeSkew
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        if s.node_coll_dispersion.count() >= 2 {
+            b.observe("ew3.node_cov", s.node_coll_dispersion.cov());
+            b.observe("ew3.bytes_cov", s.tp.bytes_per_rank_cov.mean());
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        if s.node_coll_dispersion.count() < 2 {
+            return None;
+        }
+        let cov = s.node_coll_dispersion.cov();
+        let z = ctx.baseline.z("ew3.node_cov", cov);
+        let z_b = ctx.baseline.z("ew3.bytes_cov", s.tp.bytes_per_rank_cov.mean());
+        if (z > ctx.cfg.z_fire && cov > 0.3) || z_b > ctx.cfg.z_fire {
+            return fire(
+                self.condition(),
+                s,
+                z.max(z_b),
+                format!(
+                    "per-node collective bytes CoV {:.2} (z={:.1}), per-rank bytes CoV z={:.1}",
+                    cov, z, z_b
+                ),
+            );
+        }
+        None
+    }
+}
+
+/// EW4 — periodic latency+jitter spikes across many links.
+pub struct Congestion;
+
+impl Detector for Congestion {
+    fn condition(&self) -> Condition {
+        Condition::Ew4Congestion
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        if s.rdma_count > 0 {
+            b.observe("ew4.rdma_lat", s.rdma_latency_ns.mean());
+            b.observe("ew4.rdma_lat_cov", s.rdma_latency_ns.cov());
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        if s.rdma_count < 4 {
+            return None;
+        }
+        let z_lat = ctx.baseline.z("ew4.rdma_lat", s.rdma_latency_ns.mean());
+        let beyond = ctx.baseline.above_max("ew4.rdma_lat", s.rdma_latency_ns.mean());
+        // Congestion raises latency across the board (jitter secondary);
+        // loss-free (distinguishes from EW6) and affecting the mean
+        // (distinguishes from EW5's bimodal stall pattern).
+        if z_lat > ctx.cfg.z_fire && beyond > 1.3 && s.retx_fabric < 3 {
+            return fire(
+                self.condition(),
+                s,
+                z_lat,
+                format!(
+                    "fabric RDMA latency {:.0}us (z={:.1}) across {} ops, no loss",
+                    s.rdma_latency_ns.mean() / 1e3,
+                    z_lat,
+                    s.rdma_count
+                ),
+            );
+        }
+        None
+    }
+}
+
+/// EW5 — some streams stall while others flow (shared-queue HOL).
+pub struct HolBlocking;
+
+impl Detector for HolBlocking {
+    fn condition(&self) -> Condition {
+        Condition::Ew5HolBlocking
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        if s.rdma_count > 0 {
+            b.observe("ew5.lat_cov", s.rdma_latency_ns.cov());
+            b.observe("ew5.lat_burst", s.rdma_latency_ns.burstiness());
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        if s.rdma_count < 6 {
+            return None;
+        }
+        let cov = s.rdma_latency_ns.cov();
+        let burst = s.rdma_latency_ns.burstiness();
+        let z_cov = ctx.baseline.z("ew5.lat_cov", cov);
+        let z_b = ctx.baseline.z("ew5.lat_burst", burst);
+        let beyond = ctx.baseline.above_max("ew5.lat_cov", cov);
+        // Bimodal latencies: tail blows out while median stays — the classic
+        // head-of-line signature (vs EW4's uniform inflation).
+        if z_cov > ctx.cfg.z_fire && beyond > 1.2 && z_b > 1.5 && s.retx_fabric < 3 {
+            return fire(
+                self.condition(),
+                s,
+                z_cov,
+                format!(
+                    "RDMA latency CoV {:.2} (z={:.1}), max/mean {:.1}x — stalled streams",
+                    cov, z_cov, burst
+                ),
+            );
+        }
+        None
+    }
+}
+
+/// EW6 — retransmit storms / packet loss in the fabric.
+pub struct Retransmissions;
+
+impl Detector for Retransmissions {
+    fn condition(&self) -> Condition {
+        Condition::Ew6Retransmissions
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        b.observe("ew6.retx", s.retx_fabric as f64);
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        let recent: u64 = s.retx_fabric
+            + ctx.history.iter().rev().take(4).map(|h| h.retx_fabric).sum::<u64>();
+        let z = ctx.baseline.z("ew6.retx", s.retx_fabric as f64);
+        if recent >= 3 && s.retx_fabric >= 1 && z > ctx.cfg.z_fire {
+            return fire(
+                self.condition(),
+                s,
+                z,
+                format!(
+                    "{} fabric retransmits, {} drops (z={:.1})",
+                    s.retx_fabric, s.drop_fabric, z
+                ),
+            );
+        }
+        None
+    }
+}
+
+/// EW7 — long silences until remote credit updates (RDMA flow control).
+pub struct CreditStarvation;
+
+impl Detector for CreditStarvation {
+    fn condition(&self) -> Condition {
+        Condition::Ew7CreditStarvation
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        if s.rdma_count > 0 {
+            b.observe("ew7.credit_wait", s.rdma_credit_wait_ns.mean());
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        if s.rdma_count < 4 {
+            return None;
+        }
+        let z = ctx.baseline.z("ew7.credit_wait", s.rdma_credit_wait_ns.mean());
+        let beyond = ctx.baseline.above_max("ew7.credit_wait", s.rdma_credit_wait_ns.mean());
+        if z > ctx.cfg.z_fire && (beyond > 1.5 || beyond == 0.0)
+            && s.rdma_credit_wait_ns.mean() > 1_000.0 {
+            return fire(
+                self.condition(),
+                s,
+                z,
+                format!(
+                    "mean credit wait {:.0}us (z={:.1}) over {} RDMA ops",
+                    s.rdma_credit_wait_ns.mean() / 1e3,
+                    z,
+                    s.rdma_count
+                ),
+            );
+        }
+        None
+    }
+}
+
+/// EW8 — repeated large KV bursts for some tokens, others silent.
+pub struct KvBottleneck;
+
+impl Detector for KvBottleneck {
+    fn condition(&self) -> Condition {
+        Condition::Ew8KvBottleneck
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        if s.kv.burst_count > 0 {
+            b.observe("ew8.kv_lat", s.kv.latency_ns.mean());
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        if s.kv.burst_count == 0 {
+            return None;
+        }
+        // Sharded KV exceeding the link budget shows as KV bursts taking
+        // far longer than the healthy baseline (while others go silent).
+        let z = ctx.baseline.z("ew8.kv_lat", s.kv.latency_ns.mean());
+        let beyond = ctx.baseline.above_max("ew8.kv_lat", s.kv.latency_ns.mean());
+        if (z > ctx.cfg.z_fire && beyond > 1.4) || s.kv.stalled > 0 {
+            return fire(
+                self.condition(),
+                s,
+                z.max(s.kv.stalled as f64 * 4.0),
+                format!(
+                    "KV burst latency {:.0}us (z={:.1}), {} stalled, {:.1}MB moved",
+                    s.kv.latency_ns.mean() / 1e3,
+                    z,
+                    s.kv.stalled,
+                    s.kv.total_bytes as f64 / 1e6
+                ),
+            );
+        }
+        None
+    }
+}
+
+/// EW9 — some nodes stop sending mid-iteration while peers continue.
+pub struct EarlyStopSkew;
+
+impl Detector for EarlyStopSkew {
+    fn condition(&self) -> Condition {
+        Condition::Ew9EarlyStopSkew
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        b.observe("ew9.tp_stalled", s.tp.stalled as f64);
+        if s.node_coll_dispersion.count() >= 2 {
+            b.observe("ew9.node_cov", s.node_coll_dispersion.cov());
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        let z_st = ctx.baseline.z("ew9.tp_stalled", s.tp.stalled as f64);
+        // Stalled collectives (peers gone silent) are the primary red flag;
+        // per-node send volume divergence corroborates.
+        if s.tp.stalled >= 2 && z_st > ctx.cfg.z_fire {
+            let cov = s.node_coll_dispersion.cov();
+            return fire(
+                self.condition(),
+                s,
+                z_st,
+                format!(
+                    "{} collectives waiting on silent peers (z={:.1}), node volume CoV {:.2}",
+                    s.tp.stalled, z_st, cov
+                ),
+            );
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::NodeId;
+    use crate::sim::SimTime;
+    use crate::telemetry::window::WindowSnapshot;
+    use crate::util::stats::Welford;
+
+    fn wf(vals: &[f64]) -> Welford {
+        let mut w = Welford::new();
+        for &v in vals {
+            w.push(v);
+        }
+        w
+    }
+
+    fn healthy_snap() -> WindowSnapshot {
+        let mut s = WindowSnapshot::default();
+        s.node = NodeId(0);
+        s.end = SimTime(1_000_000);
+        s.tp.completed = 10;
+        s.tp.spread_ns = wf(&[8_000.0, 8_500.0, 7_500.0]);
+        s.tp.bytes_per_rank_cov = wf(&[0.02, 0.03]);
+        s.pp.completed = 5;
+        s.pp.spread_ns = wf(&[6_000.0, 6_200.0]);
+        s.handoff_count = 10;
+        s.handoff_gap_ns = wf(&[50_000.0, 52_000.0, 48_000.0]);
+        s.kv.completed = 5;
+        s.kv.burst_count = 10;
+        s.kv.spread_ns = wf(&[9_000.0, 9_300.0]);
+        s.rdma_count = 30;
+        s.rdma_latency_ns = wf(&[30_000.0, 31_000.0, 29_000.0, 30_500.0]);
+        s.rdma_credit_wait_ns = wf(&[0.0, 0.0, 100.0]);
+        s.node_coll_dispersion = wf(&[1_000_000.0, 1_050_000.0, 980_000.0]);
+        s
+    }
+
+    fn calib(det: &dyn Detector, n: usize) -> Baseline {
+        let mut b = Baseline::new();
+        for _ in 0..n {
+            det.calibrate(&healthy_snap(), &mut b);
+            b.end_window();
+        }
+        b.freeze();
+        b
+    }
+
+    #[test]
+    fn ew1_fires_on_wide_spread() {
+        let det = TpStraggler;
+        let b = calib(&det, 20);
+        let cfg = super::super::DetectConfig::default();
+        let healthy = healthy_snap();
+        let ctx = DetectCtx { snap: &healthy, baseline: &b, history: &[], cfg: &cfg };
+        assert!(det.check(&ctx).is_none());
+        let mut s = healthy_snap();
+        s.tp.spread_ns = wf(&[300_000.0, 280_000.0]);
+        let ctx = DetectCtx { snap: &s, baseline: &b, history: &[], cfg: &cfg };
+        let d = det.check(&ctx).expect("straggler fires");
+        assert!(d.severity > 3.0);
+    }
+
+    #[test]
+    fn ew4_vs_ew6_distinguished_by_loss() {
+        let cong = Congestion;
+        let retx = Retransmissions;
+        let b_c = calib(&cong, 20);
+        let b_r = calib(&retx, 20);
+        let cfg = super::super::DetectConfig::default();
+        // Pure congestion: latency up, no retransmits.
+        let mut s = healthy_snap();
+        s.rdma_latency_ns = wf(&[300_000.0, 310_000.0, 290_000.0, 305_000.0]);
+        let ctx = DetectCtx { snap: &s, baseline: &b_c, history: &[], cfg: &cfg };
+        assert!(cong.check(&ctx).is_some());
+        let ctx = DetectCtx { snap: &s, baseline: &b_r, history: &[], cfg: &cfg };
+        assert!(retx.check(&ctx).is_none());
+        // Loss storm: EW6 fires, EW4 suppressed.
+        s.retx_fabric = 20;
+        let ctx = DetectCtx { snap: &s, baseline: &b_r, history: &[], cfg: &cfg };
+        assert!(retx.check(&ctx).is_some());
+        let ctx = DetectCtx { snap: &s, baseline: &b_c, history: &[], cfg: &cfg };
+        assert!(cong.check(&ctx).is_none());
+    }
+
+    #[test]
+    fn ew5_needs_bimodal_not_uniform() {
+        let det = HolBlocking;
+        let b = calib(&det, 20);
+        let cfg = super::super::DetectConfig::default();
+        // Uniform inflation (congestion-like): CoV unchanged -> no fire.
+        let mut s = healthy_snap();
+        s.rdma_latency_ns = wf(&[300_000.0, 310_000.0, 290_000.0, 305_000.0, 300_000.0, 295_000.0]);
+        let ctx = DetectCtx { snap: &s, baseline: &b, history: &[], cfg: &cfg };
+        assert!(det.check(&ctx).is_none());
+        // Bimodal: most fast, some stalled -> fire.
+        s.rdma_latency_ns =
+            wf(&[30_000.0, 31_000.0, 29_000.0, 30_000.0, 900_000.0, 950_000.0]);
+        let ctx = DetectCtx { snap: &s, baseline: &b, history: &[], cfg: &cfg };
+        assert!(det.check(&ctx).is_some());
+    }
+
+    #[test]
+    fn ew7_fires_on_credit_waits() {
+        let det = CreditStarvation;
+        let b = calib(&det, 20);
+        let cfg = super::super::DetectConfig::default();
+        let mut s = healthy_snap();
+        s.rdma_credit_wait_ns = wf(&[50_000.0, 60_000.0, 55_000.0]);
+        let ctx = DetectCtx { snap: &s, baseline: &b, history: &[], cfg: &cfg };
+        assert!(det.check(&ctx).is_some());
+    }
+
+    #[test]
+    fn all_nine_present() {
+        assert_eq!(detectors().len(), 9);
+    }
+}

@@ -1,0 +1,322 @@
+//! Detector framework: the 28 runbook conditions (paper Tables 3a-c), the
+//! healthy-baseline model, and the `Detector` trait each condition
+//! implements.
+
+pub mod east_west;
+pub mod north_south;
+pub mod pcie;
+
+use std::collections::HashMap;
+
+use crate::ids::NodeId;
+use crate::sim::SimTime;
+use crate::telemetry::window::WindowSnapshot;
+use crate::util::stats::Welford;
+
+/// Every skew/imbalance/pathological condition in the paper's runbooks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Condition {
+    // Table 3(a) — North-South
+    Ns1BurstBacklog,
+    Ns2IngressStarvation,
+    Ns3FlowSkew,
+    Ns4IngressRetx,
+    Ns5EgressBacklog,
+    Ns6EgressJitter,
+    Ns7EgressRetx,
+    Ns8EarlyCompletion,
+    Ns9BandwidthSaturation,
+    // Table 3(b) — PCIe Observer
+    Pc1H2dStarvation,
+    Pc2D2hBottleneck,
+    Pc3LaunchLatency,
+    Pc4IntraNodeSkew,
+    Pc5PcieSaturation,
+    Pc6P2pThrottling,
+    Pc7PinnedShortage,
+    Pc8HostCpuBottleneck,
+    Pc9RegistrationChurn,
+    Pc10DecodeEarlyStop,
+    // Table 3(c) — East-West
+    Ew1TpStraggler,
+    Ew2PpBubble,
+    Ew3CrossNodeSkew,
+    Ew4Congestion,
+    Ew5HolBlocking,
+    Ew6Retransmissions,
+    Ew7CreditStarvation,
+    Ew8KvBottleneck,
+    Ew9EarlyStopSkew,
+}
+
+pub const ALL_CONDITIONS: [Condition; 28] = [
+    Condition::Ns1BurstBacklog,
+    Condition::Ns2IngressStarvation,
+    Condition::Ns3FlowSkew,
+    Condition::Ns4IngressRetx,
+    Condition::Ns5EgressBacklog,
+    Condition::Ns6EgressJitter,
+    Condition::Ns7EgressRetx,
+    Condition::Ns8EarlyCompletion,
+    Condition::Ns9BandwidthSaturation,
+    Condition::Pc1H2dStarvation,
+    Condition::Pc2D2hBottleneck,
+    Condition::Pc3LaunchLatency,
+    Condition::Pc4IntraNodeSkew,
+    Condition::Pc5PcieSaturation,
+    Condition::Pc6P2pThrottling,
+    Condition::Pc7PinnedShortage,
+    Condition::Pc8HostCpuBottleneck,
+    Condition::Pc9RegistrationChurn,
+    Condition::Pc10DecodeEarlyStop,
+    Condition::Ew1TpStraggler,
+    Condition::Ew2PpBubble,
+    Condition::Ew3CrossNodeSkew,
+    Condition::Ew4Congestion,
+    Condition::Ew5HolBlocking,
+    Condition::Ew6Retransmissions,
+    Condition::Ew7CreditStarvation,
+    Condition::Ew8KvBottleneck,
+    Condition::Ew9EarlyStopSkew,
+];
+
+impl Condition {
+    pub fn id(&self) -> &'static str {
+        use Condition::*;
+        match self {
+            Ns1BurstBacklog => "NS1",
+            Ns2IngressStarvation => "NS2",
+            Ns3FlowSkew => "NS3",
+            Ns4IngressRetx => "NS4",
+            Ns5EgressBacklog => "NS5",
+            Ns6EgressJitter => "NS6",
+            Ns7EgressRetx => "NS7",
+            Ns8EarlyCompletion => "NS8",
+            Ns9BandwidthSaturation => "NS9",
+            Pc1H2dStarvation => "PC1",
+            Pc2D2hBottleneck => "PC2",
+            Pc3LaunchLatency => "PC3",
+            Pc4IntraNodeSkew => "PC4",
+            Pc5PcieSaturation => "PC5",
+            Pc6P2pThrottling => "PC6",
+            Pc7PinnedShortage => "PC7",
+            Pc8HostCpuBottleneck => "PC8",
+            Pc9RegistrationChurn => "PC9",
+            Pc10DecodeEarlyStop => "PC10",
+            Ew1TpStraggler => "EW1",
+            Ew2PpBubble => "EW2",
+            Ew3CrossNodeSkew => "EW3",
+            Ew4Congestion => "EW4",
+            Ew5HolBlocking => "EW5",
+            Ew6Retransmissions => "EW6",
+            Ew7CreditStarvation => "EW7",
+            Ew8KvBottleneck => "EW8",
+            Ew9EarlyStopSkew => "EW9",
+        }
+    }
+
+    /// Which paper table the condition belongs to.
+    pub fn table(&self) -> &'static str {
+        match self.id().as_bytes()[0] {
+            b'N' => "3a",
+            b'P' => "3b",
+            _ => "3c",
+        }
+    }
+
+    pub fn from_id(id: &str) -> Option<Condition> {
+        ALL_CONDITIONS.iter().copied().find(|c| c.id() == id)
+    }
+}
+
+/// A fired detection.
+#[derive(Debug, Clone)]
+pub struct Detection {
+    pub condition: Condition,
+    pub node: NodeId,
+    pub at: SimTime,
+    /// Anomaly magnitude (z-score-like; larger = stronger).
+    pub severity: f64,
+    /// Human-readable evidence string for the report.
+    pub evidence: String,
+}
+
+/// Healthy-baseline model: per-feature mean/std learned during calibration.
+#[derive(Debug, Clone, Default)]
+pub struct Baseline {
+    feats: HashMap<&'static str, Welford>,
+    pub windows_observed: u64,
+    frozen: bool,
+}
+
+impl Baseline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a feature sample (calibration phase only).
+    pub fn observe(&mut self, name: &'static str, value: f64) {
+        if !self.frozen {
+            self.feats.entry(name).or_default().push(value);
+        }
+    }
+
+    pub fn end_window(&mut self) {
+        if !self.frozen {
+            self.windows_observed += 1;
+        }
+    }
+
+    /// Stop learning; z-scores become stable.
+    pub fn freeze(&mut self) {
+        self.frozen = true;
+    }
+
+    pub fn is_frozen(&self) -> bool {
+        self.frozen
+    }
+
+    /// z-score of `value` against the learned distribution of `name`.
+    /// The std is floored at 10% of |mean| (and an absolute epsilon) so
+    /// near-constant healthy features don't explode into infinite z.
+    pub fn z(&self, name: &'static str, value: f64) -> f64 {
+        match self.feats.get(name) {
+            None => 0.0,
+            Some(w) if w.count() < 3 => 0.0,
+            Some(w) => {
+                let floor = (0.1 * w.mean().abs()).max(1e-6);
+                (value - w.mean()) / w.std().max(floor)
+            }
+        }
+    }
+
+    pub fn mean(&self, name: &'static str) -> f64 {
+        self.feats.get(name).map(|w| w.mean()).unwrap_or(0.0)
+    }
+
+    /// Largest value seen during calibration (heavy-tail guard).
+    pub fn max_seen(&self, name: &'static str) -> f64 {
+        self.feats.get(name).map(|w| w.max()).unwrap_or(0.0)
+    }
+
+    /// Ratio of `value` to the calibration max (one-sided anomaly gate for
+    /// heavy-tailed features like max-gaps and spreads). 0 when unknown.
+    pub fn above_max(&self, name: &'static str, value: f64) -> f64 {
+        match self.feats.get(name) {
+            // A zero calibration max means the feature never moved when
+            // healthy — any positive value is infinitely beyond it.
+            Some(w) if w.count() >= 3 => value / w.max().max(1e-9),
+            _ => 0.0,
+        }
+    }
+
+    pub fn has(&self, name: &'static str) -> bool {
+        self.feats.get(name).map(|w| w.count() >= 3).unwrap_or(false)
+    }
+}
+
+/// Static context shared by detectors (line rates for saturation checks).
+#[derive(Debug, Clone)]
+pub struct DetectConfig {
+    /// NIC line rate, bytes/sec (NS9 threshold).
+    pub nic_bw: f64,
+    /// Fire threshold on z-scores.
+    pub z_fire: f64,
+}
+
+impl Default for DetectConfig {
+    fn default() -> Self {
+        DetectConfig { nic_bw: 50e9, z_fire: 4.0 }
+    }
+}
+
+/// Everything a detector sees at a window tick.
+pub struct DetectCtx<'a> {
+    pub snap: &'a WindowSnapshot,
+    pub baseline: &'a Baseline,
+    /// Recent prior snapshots, newest last (trend detectors).
+    pub history: &'a [WindowSnapshot],
+    pub cfg: &'a DetectConfig,
+}
+
+/// One runbook-row detector.
+pub trait Detector: Send {
+    fn condition(&self) -> Condition;
+    /// Update the baseline with this window's features (calibration phase).
+    fn calibrate(&self, snap: &WindowSnapshot, baseline: &mut Baseline);
+    /// Check one window; return a detection if the red flag fires.
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection>;
+}
+
+/// The full 28-detector registry, runbook order.
+pub fn all_detectors() -> Vec<Box<dyn Detector>> {
+    let mut v: Vec<Box<dyn Detector>> = Vec::with_capacity(28);
+    v.extend(north_south::detectors());
+    v.extend(pcie::detectors());
+    v.extend(east_west::detectors());
+    v
+}
+
+/// Helper: build a Detection from snapshot context.
+pub(crate) fn fire(
+    condition: Condition,
+    snap: &WindowSnapshot,
+    severity: f64,
+    evidence: String,
+) -> Option<Detection> {
+    Some(Detection { condition, node: snap.node, at: snap.end, severity, evidence })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_28_uniquely() {
+        let dets = all_detectors();
+        assert_eq!(dets.len(), 28);
+        let mut seen = std::collections::HashSet::new();
+        for d in &dets {
+            assert!(seen.insert(d.condition()), "duplicate {:?}", d.condition());
+        }
+        for c in ALL_CONDITIONS {
+            assert!(seen.contains(&c), "missing detector for {c:?}");
+        }
+    }
+
+    #[test]
+    fn condition_ids_roundtrip() {
+        for c in ALL_CONDITIONS {
+            assert_eq!(Condition::from_id(c.id()), Some(c));
+        }
+        assert_eq!(Condition::from_id("XX"), None);
+        assert_eq!(Condition::Ns1BurstBacklog.table(), "3a");
+        assert_eq!(Condition::Pc5PcieSaturation.table(), "3b");
+        assert_eq!(Condition::Ew8KvBottleneck.table(), "3c");
+    }
+
+    #[test]
+    fn baseline_z_scores() {
+        let mut b = Baseline::new();
+        for i in 0..50 {
+            b.observe("x", 100.0 + (i % 5) as f64);
+        }
+        b.freeze();
+        assert!(b.z("x", 102.0).abs() < 1.0);
+        assert!(b.z("x", 200.0) > 5.0);
+        assert_eq!(b.z("unknown", 42.0), 0.0);
+        // frozen: further observes are ignored
+        b.observe("x", 1e9);
+        assert!(b.z("x", 102.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn baseline_floors_constant_features() {
+        let mut b = Baseline::new();
+        for _ in 0..10 {
+            b.observe("c", 50.0);
+        }
+        // std=0 -> floored at 10% of mean -> z = (55-50)/5 = 1
+        assert!((b.z("c", 55.0) - 1.0).abs() < 1e-9);
+    }
+}

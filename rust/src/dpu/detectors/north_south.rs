@@ -1,0 +1,491 @@
+//! Table 3(a) detectors — the North-South runbook: conditions visible at
+//! the ingress/egress NIC from the DPU's bump-in-the-wire vantage.
+
+use super::{fire, Baseline, Condition, DetectCtx, Detection, Detector};
+use crate::telemetry::window::WindowSnapshot;
+
+pub fn detectors() -> Vec<Box<dyn Detector>> {
+    vec![
+        Box::new(BurstBacklog),
+        Box::new(IngressStarvation),
+        Box::new(FlowSkew),
+        Box::new(IngressRetx),
+        Box::new(EgressBacklog),
+        Box::new(EgressJitter),
+        Box::new(EgressRetx),
+        Box::new(EarlyCompletion),
+        Box::new(BandwidthSaturation),
+    ]
+}
+
+/// NS1 — sudden ingress spikes followed by queueing delay.
+pub struct BurstBacklog;
+
+impl Detector for BurstBacklog {
+    fn condition(&self) -> Condition {
+        Condition::Ns1BurstBacklog
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        b.observe("ns1.rx_qdepth", s.nic_rx_qdepth.mean());
+        b.observe("ns1.rx_gap_cov", s.nic_rx_gap_ns.cov());
+        b.observe("ns1.rx_count", s.nic_rx_count as f64);
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        if s.nic_rx_count < 4 {
+            return None;
+        }
+        let z_q = ctx.baseline.z("ns1.rx_qdepth", s.nic_rx_qdepth.mean());
+        let z_burst = ctx.baseline.z("ns1.rx_gap_cov", s.nic_rx_gap_ns.cov());
+        let z_cnt = ctx.baseline.z("ns1.rx_count", s.nic_rx_count as f64);
+        // Two routes to the red flag: queue buildup with bursty arrivals, or
+        // an outright arrival-count spike with burst-shaped gaps (the NIC
+        // queue may absorb short spikes that still clump downstream load).
+        if (z_q > ctx.cfg.z_fire && (z_burst > 1.5 || z_cnt > 1.5))
+            || (z_cnt > ctx.cfg.z_fire && z_burst > ctx.cfg.z_fire)
+        {
+            return fire(
+                self.condition(),
+                s,
+                z_q,
+                format!(
+                    "RX queue depth {:.1} (z={:.1}), inter-arrival CoV {:.2} (z={:.1}), {} pkts",
+                    s.nic_rx_qdepth.mean(),
+                    z_q,
+                    s.nic_rx_gap_ns.cov(),
+                    z_burst,
+                    s.nic_rx_count
+                ),
+            );
+        }
+        None
+    }
+}
+
+/// NS2 — long gaps between ingress packets while queues sit empty.
+pub struct IngressStarvation;
+
+impl Detector for IngressStarvation {
+    fn condition(&self) -> Condition {
+        Condition::Ns2IngressStarvation
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        b.observe("ns2.rx_count", s.nic_rx_count as f64);
+        b.observe("ns2.rx_gap_max", s.nic_rx_gap_ns.max());
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        // Starvation is a *persistent absence*: the feed goes silent for
+        // windows at a time on a NIC that normally sees steady arrivals.
+        let base_count = ctx.baseline.mean("ns2.rx_count");
+        if base_count >= 2.0 && s.nic_rx_count == 0 {
+            return fire(
+                self.condition(),
+                s,
+                base_count,
+                format!("zero ingress this window vs {base_count:.1}/window baseline"),
+            );
+        }
+        // Or: a resuming burst after an anomalously long silence.
+        let z_gap = ctx.baseline.z("ns2.rx_gap_max", s.nic_rx_gap_ns.max());
+        let beyond = ctx.baseline.above_max("ns2.rx_gap_max", s.nic_rx_gap_ns.max());
+        if s.nic_rx_count >= 1 && z_gap > ctx.cfg.z_fire && beyond > 3.0 {
+            return fire(
+                self.condition(),
+                s,
+                z_gap,
+                format!("ingress resumed after {:.1}ms silence", s.nic_rx_gap_ns.max() / 1e6),
+            );
+        }
+        None
+    }
+}
+
+/// NS3 — some ingress flows high-volume, others sparse.
+pub struct FlowSkew;
+
+impl Detector for FlowSkew {
+    fn condition(&self) -> Condition {
+        Condition::Ns3FlowSkew
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        if s.top_flow_share > 0.0 {
+            b.observe("ns3.top_share", s.top_flow_share);
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        if s.top_flow_share <= 0.0 {
+            return None;
+        }
+        let z = ctx.baseline.z("ns3.top_share", s.top_flow_share);
+        let beyond = ctx.baseline.above_max("ns3.top_share", s.top_flow_share);
+        if z > ctx.cfg.z_fire && beyond > 1.3 {
+            return fire(
+                self.condition(),
+                s,
+                z,
+                format!(
+                    "hottest flow owns {:.0}% of ingress bytes (z={:.1})",
+                    s.top_flow_share * 100.0,
+                    z
+                ),
+            );
+        }
+        None
+    }
+}
+
+/// NS4 — missing/retransmitted ingress packets.
+pub struct IngressRetx;
+
+impl Detector for IngressRetx {
+    fn condition(&self) -> Condition {
+        Condition::Ns4IngressRetx
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        b.observe("ns4.retx_in", s.retx_in as f64);
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        // Loss events are sparse; accumulate over the recent past.
+        let recent: u64 = s.retx_in
+            + ctx.history.iter().rev().take(4).map(|h| h.retx_in).sum::<u64>();
+        let z = ctx.baseline.z("ns4.retx_in", s.retx_in as f64);
+        if recent >= 3 && s.retx_in >= 1 && z > ctx.cfg.z_fire {
+            return fire(
+                self.condition(),
+                s,
+                z,
+                format!("{} ingress retransmits, {} drops (z={:.1})", s.retx_in, s.drop_in, z),
+            );
+        }
+        None
+    }
+}
+
+/// NS5 — responses accumulate in NIC TX queues before send.
+pub struct EgressBacklog;
+
+impl Detector for EgressBacklog {
+    fn condition(&self) -> Condition {
+        Condition::Ns5EgressBacklog
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        b.observe("ns5.tx_wait", s.nic_tx_wait_ns.mean());
+        b.observe("ns5.tx_qdepth", s.nic_tx_qdepth.mean());
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        if s.nic_tx_count < 4 {
+            return None;
+        }
+        let z_wait = ctx.baseline.z("ns5.tx_wait", s.nic_tx_wait_ns.mean());
+        let z_q = ctx.baseline.z("ns5.tx_qdepth", s.nic_tx_qdepth.mean());
+        // Systemic pre-wire delay: mean wait inflated with LOW dispersion
+        // (a copy bottleneck delays every response uniformly; contrast
+        // NS6's jitter, which blows up the variance instead).
+        let wait_cov = s.nic_tx_wait_ns.cov();
+        if z_wait > ctx.cfg.z_fire && wait_cov < 0.6 && z_q > -1.0 {
+            return fire(
+                self.condition(),
+                s,
+                z_wait,
+                format!(
+                    "TX queue wait {:.0}us (z={:.1}), depth {:.1}",
+                    s.nic_tx_wait_ns.mean() / 1e3,
+                    z_wait,
+                    s.nic_tx_qdepth.mean()
+                ),
+            );
+        }
+        None
+    }
+}
+
+/// NS6 — outgoing packets for a token stream spread unevenly in time.
+pub struct EgressJitter;
+
+impl Detector for EgressJitter {
+    fn condition(&self) -> Condition {
+        Condition::Ns6EgressJitter
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        if s.nic_tx_count > 0 {
+            b.observe("ns6.wait_cov", s.nic_tx_wait_ns.cov());
+            b.observe("ns6.wait_mean", s.nic_tx_wait_ns.mean());
+        }
+        if s.egress_jitter_cov > 0.0 {
+            b.observe("ns6.jitter_cov", s.egress_jitter_cov);
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        if s.nic_tx_count < 8 {
+            return None;
+        }
+        // Scheduler variance: send-path delay becomes *erratic* — wait mean
+        // AND dispersion inflate together (vs NS5's uniform copy delay).
+        let z_mean = ctx.baseline.z("ns6.wait_mean", s.nic_tx_wait_ns.mean());
+        let z_cov = ctx.baseline.z("ns6.wait_cov", s.nic_tx_wait_ns.cov());
+        let z_flow = ctx.baseline.z("ns6.jitter_cov", s.egress_jitter_cov);
+        if (z_mean > ctx.cfg.z_fire && z_cov > 1.5 && s.nic_tx_wait_ns.cov() > 0.6)
+            || z_flow > 2.0 * ctx.cfg.z_fire
+        {
+            return fire(
+                self.condition(),
+                s,
+                z_mean.max(z_flow),
+                format!(
+                    "TX wait {:.0}us CoV {:.2} (z mean={:.1}, cov={:.1}), per-flow cadence z={:.1}",
+                    s.nic_tx_wait_ns.mean() / 1e3,
+                    s.nic_tx_wait_ns.cov(),
+                    z_mean,
+                    z_cov,
+                    z_flow
+                ),
+            );
+        }
+        None
+    }
+}
+
+/// NS7 — retransmissions/gaps in final response streams.
+pub struct EgressRetx;
+
+impl Detector for EgressRetx {
+    fn condition(&self) -> Condition {
+        Condition::Ns7EgressRetx
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        b.observe("ns7.retx_out", s.retx_out as f64);
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        let recent: u64 = s.retx_out
+            + ctx.history.iter().rev().take(4).map(|h| h.retx_out).sum::<u64>();
+        let z = ctx.baseline.z("ns7.retx_out", s.retx_out as f64);
+        if recent >= 3 && s.retx_out >= 1 && z > ctx.cfg.z_fire {
+            return fire(
+                self.condition(),
+                s,
+                z,
+                format!("{} egress retransmits, {} drops (z={:.1})", s.retx_out, s.drop_out, z),
+            );
+        }
+        None
+    }
+}
+
+/// NS8 — some egress flows terminate far earlier than their peers.
+pub struct EarlyCompletion;
+
+impl Detector for EarlyCompletion {
+    fn condition(&self) -> Condition {
+        Condition::Ns8EarlyCompletion
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        b.observe("ns8.early_ends", s.early_end_count as f64);
+        if s.end_len_ratio < 1.0 {
+            b.observe("ns8.end_ratio", s.end_len_ratio);
+        }
+        if s.ended_len_cov > 0.0 {
+            b.observe("ns8.end_cov", s.ended_len_cov);
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        let z = ctx.baseline.z("ns8.early_ends", s.early_end_count as f64);
+        // Ended streams are dramatically shorter than their still-running
+        // peers (bimodal completion shape).
+        let z_ratio = ctx.baseline.z("ns8.end_ratio", s.end_len_ratio);
+        let z_cov = ctx.baseline.z("ns8.end_cov", s.ended_len_cov);
+        if (s.early_end_count >= 2 && s.active_flows >= 2 && z > ctx.cfg.z_fire)
+            || (s.flow_ends >= 2
+                && s.active_flows >= 2
+                && s.end_len_ratio < 0.3
+                && z_ratio < -2.0)
+            || (s.flow_ends >= 3 && s.ended_len_cov > 0.8 && z_cov > ctx.cfg.z_fire)
+        {
+            return fire(
+                self.condition(),
+                s,
+                z.max(-z_ratio),
+                format!(
+                    "{} flows ended; completion-length CoV {:.2} (z={:.1}), \
+                     end/peer ratio {:.0}%, {} peers active",
+                    s.flow_ends,
+                    s.ended_len_cov,
+                    z_cov,
+                    s.end_len_ratio * 100.0,
+                    s.active_flows
+                ),
+            );
+        }
+        None
+    }
+}
+
+/// NS9 — NIC RX/TX at or near line capacity with queue buildup.
+pub struct BandwidthSaturation;
+
+impl Detector for BandwidthSaturation {
+    fn condition(&self) -> Condition {
+        Condition::Ns9BandwidthSaturation
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        b.observe("ns9.tx_qdepth", s.nic_tx_qdepth.mean());
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        let line = ctx.cfg.nic_bw;
+        let rx_frac = s.rx_byte_rate() / line;
+        let tx_frac = s.tx_byte_rate() / line;
+        let frac = rx_frac.max(tx_frac);
+        let z_q = ctx.baseline.z("ns9.tx_qdepth", s.nic_tx_qdepth.mean());
+        if frac > 0.75 && z_q > 1.5 {
+            return fire(
+                self.condition(),
+                s,
+                frac * 4.0,
+                format!(
+                    "NIC at {:.0}% line rate (rx {:.0}%, tx {:.0}%), TX queue z={:.1}",
+                    frac * 100.0,
+                    rx_frac * 100.0,
+                    tx_frac * 100.0,
+                    z_q
+                ),
+            );
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::NodeId;
+    use crate::sim::SimTime;
+    use crate::telemetry::window::WindowSnapshot;
+    use crate::util::stats::Welford;
+
+    fn healthy_snap() -> WindowSnapshot {
+        let mut s = WindowSnapshot::default();
+        s.node = NodeId(0);
+        s.start = SimTime(0);
+        s.end = SimTime(1_000_000);
+        s.nic_rx_count = 50;
+        s.nic_tx_count = 50;
+        let mut q = Welford::new();
+        for _ in 0..50 {
+            q.push(2.0);
+        }
+        s.nic_rx_qdepth = q.clone();
+        s.nic_tx_qdepth = q.clone();
+        let mut gap = Welford::new();
+        for i in 0..50 {
+            gap.push(20_000.0 + (i % 3) as f64 * 1000.0);
+        }
+        s.nic_rx_gap_ns = gap.clone();
+        s.nic_tx_gap_ns = gap;
+        let mut w = Welford::new();
+        for _ in 0..50 {
+            w.push(1_000.0);
+        }
+        s.nic_tx_wait_ns = w;
+        s
+    }
+
+    fn calibrated(det: &dyn Detector, n: usize) -> Baseline {
+        let mut b = Baseline::new();
+        for _ in 0..n {
+            det.calibrate(&healthy_snap(), &mut b);
+            b.end_window();
+        }
+        b.freeze();
+        b
+    }
+
+    #[test]
+    fn ns1_fires_on_burst_not_on_healthy() {
+        let det = BurstBacklog;
+        let b = calibrated(&det, 20);
+        let cfg = super::super::DetectConfig::default();
+        let healthy = healthy_snap();
+        let ctx = DetectCtx { snap: &healthy, baseline: &b, history: &[], cfg: &cfg };
+        assert!(det.check(&ctx).is_none());
+        // Pathological: queue depth 40, bursty gaps
+        let mut s = healthy_snap();
+        let mut q = Welford::new();
+        for _ in 0..50 {
+            q.push(40.0);
+        }
+        s.nic_rx_qdepth = q;
+        let mut gap = Welford::new();
+        for i in 0..50 {
+            gap.push(if i % 10 == 0 { 500_000.0 } else { 100.0 });
+        }
+        s.nic_rx_gap_ns = gap;
+        let ctx = DetectCtx { snap: &s, baseline: &b, history: &[], cfg: &cfg };
+        let d = det.check(&ctx).expect("should fire");
+        assert!(d.severity > 3.0);
+        assert_eq!(d.condition.id(), "NS1");
+    }
+
+    #[test]
+    fn ns4_needs_absolute_floor() {
+        let det = IngressRetx;
+        let b = calibrated(&det, 20);
+        let cfg = super::super::DetectConfig::default();
+        let mut s = healthy_snap();
+        s.retx_in = 2; // below floor of 3
+        let ctx = DetectCtx { snap: &s, baseline: &b, history: &[], cfg: &cfg };
+        assert!(det.check(&ctx).is_none());
+        s.retx_in = 20;
+        let ctx = DetectCtx { snap: &s, baseline: &b, history: &[], cfg: &cfg };
+        assert!(det.check(&ctx).is_some());
+    }
+
+    #[test]
+    fn ns9_requires_both_rate_and_queue() {
+        let det = BandwidthSaturation;
+        let b = calibrated(&det, 20);
+        let cfg = super::super::DetectConfig::default();
+        // High rate but healthy queue: no fire.
+        let mut s = healthy_snap();
+        s.nic_rx_bytes = (0.9 * cfg.nic_bw * 0.001) as u64; // 90% over 1ms window
+        let ctx = DetectCtx { snap: &s, baseline: &b, history: &[], cfg: &cfg };
+        assert!(det.check(&ctx).is_none());
+        // Rate + queue buildup: fire.
+        let mut q = Welford::new();
+        for _ in 0..50 {
+            q.push(64.0);
+        }
+        s.nic_tx_qdepth = q;
+        let ctx = DetectCtx { snap: &s, baseline: &b, history: &[], cfg: &cfg };
+        assert!(det.check(&ctx).is_some());
+    }
+
+    #[test]
+    fn all_nine_present() {
+        assert_eq!(detectors().len(), 9);
+    }
+}

@@ -1,0 +1,531 @@
+//! Table 3(b) detectors — the PCIe Observer runbook: conditions visible to a
+//! DPU as a PCIe peer on the root complex (DMA transactions, doorbells,
+//! registrations, link utilization).
+
+use super::{fire, Baseline, Condition, DetectCtx, Detection, Detector};
+use crate::telemetry::window::WindowSnapshot;
+
+pub fn detectors() -> Vec<Box<dyn Detector>> {
+    vec![
+        Box::new(H2dStarvation),
+        Box::new(D2hBottleneck),
+        Box::new(LaunchLatency),
+        Box::new(IntraNodeSkew),
+        Box::new(PcieSaturation),
+        Box::new(P2pThrottling),
+        Box::new(PinnedShortage),
+        Box::new(HostCpuBottleneck),
+        Box::new(RegistrationChurn),
+        Box::new(DecodeEarlyStop),
+    ]
+}
+
+/// Dispersion (max/min) of a per-GPU counter across GPUs that saw activity.
+fn gpu_ratio(per_gpu: &[crate::telemetry::window::GpuWindow], f: impl Fn(&crate::telemetry::window::GpuWindow) -> u64) -> Option<f64> {
+    let counts: Vec<u64> = per_gpu.iter().map(f).collect();
+    let active: Vec<u64> = counts.iter().copied().filter(|&c| c > 0).collect();
+    if active.len() < 2 {
+        return None;
+    }
+    let mx = *counts.iter().max().unwrap() as f64;
+    let mn = *counts.iter().min().unwrap() as f64;
+    Some(mx / mn.max(1.0))
+}
+
+/// PC1 — H2D DMAs slow/clustered; GPU starves before doorbells.
+pub struct H2dStarvation;
+
+impl Detector for H2dStarvation {
+    fn condition(&self) -> Condition {
+        Condition::Pc1H2dStarvation
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        if s.h2d.count > 0 {
+            b.observe("pc1.h2d_lat", s.h2d.latency_ns.mean());
+            b.observe("pc1.h2d_lat_max", s.h2d.latency_ns.max());
+            b.observe("pc1.h2d_gap_max", s.h2d.gap_ns.max());
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        if s.h2d.count < 4 {
+            return None;
+        }
+        // The big prefill feed DMAs carry the signal; decode's tiny control
+        // DMAs drown the mean, so gate on the worst transaction.
+        let z_lat = ctx.baseline.z("pc1.h2d_lat", s.h2d.latency_ns.mean());
+        let z_max = ctx.baseline.z("pc1.h2d_lat_max", s.h2d.latency_ns.max());
+        let beyond = ctx.baseline.above_max("pc1.h2d_lat_max", s.h2d.latency_ns.max());
+        if (z_lat > ctx.cfg.z_fire || (z_max > ctx.cfg.z_fire && beyond > 2.0)) && s.h2d.count >= 4 {
+            return fire(
+                self.condition(),
+                s,
+                z_lat,
+                format!(
+                    "H2D latency {:.0}us (z={:.1}), max inter-DMA gap {:.0}us",
+                    s.h2d.latency_ns.mean() / 1e3,
+                    z_lat,
+                    s.h2d.gap_ns.max() / 1e3
+                ),
+            );
+        }
+        None
+    }
+}
+
+/// PC2 — D2H return path lingers; backlog after kernels.
+pub struct D2hBottleneck;
+
+impl Detector for D2hBottleneck {
+    fn condition(&self) -> Condition {
+        Condition::Pc2D2hBottleneck
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        if s.d2h.count > 0 {
+            b.observe("pc2.d2h_lat", s.d2h.latency_ns.mean());
+            b.observe("pc2.d2h_lat_max", s.d2h.latency_ns.max());
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        if s.d2h.count < 2 {
+            return None;
+        }
+        let z = ctx.baseline.z("pc2.d2h_lat", s.d2h.latency_ns.mean());
+        let z_max = ctx.baseline.z("pc2.d2h_lat_max", s.d2h.latency_ns.max());
+        let beyond = ctx.baseline.above_max("pc2.d2h_lat_max", s.d2h.latency_ns.max());
+        if z > ctx.cfg.z_fire || (z_max > ctx.cfg.z_fire && beyond > 2.0) {
+            return fire(
+                self.condition(),
+                s,
+                z,
+                format!("D2H latency {:.0}us (z={:.1})", s.d2h.latency_ns.mean() / 1e3, z),
+            );
+        }
+        None
+    }
+}
+
+/// PC3 — doorbells sporadic: long idle gap between data-ready and launch.
+pub struct LaunchLatency;
+
+impl Detector for LaunchLatency {
+    fn condition(&self) -> Condition {
+        Condition::Pc3LaunchLatency
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        if s.doorbell_count > 0 {
+            b.observe("pc3.h2d_to_db", s.h2d_to_doorbell_ns.mean());
+            b.observe("pc3.db_count", s.doorbell_count as f64);
+            b.observe("pc3.h2d_lat", s.h2d.latency_ns.mean());
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        if s.doorbell_count < 2 {
+            return None;
+        }
+        let z_d = ctx.baseline.z("pc3.h2d_to_db", s.h2d_to_doorbell_ns.mean());
+        let z_lat = ctx.baseline.z("pc3.h2d_lat", s.h2d.latency_ns.mean());
+        let z_cnt = ctx.baseline.z("pc3.db_count", s.doorbell_count as f64);
+        // Either launches lag behind healthy DMAs, or a tiny-kernel storm
+        // multiplies doorbells — both are control-path, not data-path.
+        if (z_d > ctx.cfg.z_fire && z_lat < 2.0) || z_cnt > 2.0 * ctx.cfg.z_fire {
+            return fire(
+                self.condition(),
+                s,
+                z_d.max(z_cnt),
+                format!(
+                    "data-to-doorbell {:.0}us (z={:.1}), {} doorbells (z={:.1}), H2D z={:.1}",
+                    s.h2d_to_doorbell_ns.mean() / 1e3,
+                    z_d,
+                    s.doorbell_count,
+                    z_cnt,
+                    z_lat
+                ),
+            );
+        }
+        None
+    }
+}
+
+/// PC4 — one GPU's DMA stream thin/irregular while peers are steady.
+pub struct IntraNodeSkew;
+
+impl Detector for IntraNodeSkew {
+    fn condition(&self) -> Condition {
+        Condition::Pc4IntraNodeSkew
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        if let Some(r) = gpu_ratio(&s.per_gpu, |g| g.h2d_bytes + g.doorbell_count) {
+            b.observe("pc4.gpu_ratio", r);
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        let r = gpu_ratio(&s.per_gpu, |g| g.h2d_bytes + g.doorbell_count)?;
+        let z = ctx.baseline.z("pc4.gpu_ratio", r);
+        if z > ctx.cfg.z_fire && r > 2.0 {
+            return fire(
+                self.condition(),
+                s,
+                z,
+                format!("per-GPU activity max/min ratio {r:.1} (z={z:.1})"),
+            );
+        }
+        None
+    }
+}
+
+/// PC5 — sustained near-peak PCIe utilization, compute stalls periodically.
+pub struct PcieSaturation;
+
+impl Detector for PcieSaturation {
+    fn condition(&self) -> Condition {
+        Condition::Pc5PcieSaturation
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        if s.pcie_busy.count() > 0 {
+            b.observe("pc5.busy", s.pcie_busy.mean());
+            b.observe("pc5.h2d_lat", s.h2d.latency_ns.mean());
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        if s.pcie_busy.count() == 0 {
+            return None;
+        }
+        let busy = s.pcie_busy.mean();
+        let z_busy = ctx.baseline.z("pc5.busy", busy);
+        let z_lat = ctx.baseline.z("pc5.h2d_lat", s.h2d.latency_ns.mean());
+        if busy > 0.7 && z_busy > ctx.cfg.z_fire && z_lat > 1.0 {
+            return fire(
+                self.condition(),
+                s,
+                z_busy,
+                format!("PCIe busy {:.0}% (z={:.1}), H2D latency z={:.1}", busy * 100.0, z_busy, z_lat),
+            );
+        }
+        None
+    }
+}
+
+/// PC6 — P2P DMAs slow/variable over PCIe with no NVLink path.
+pub struct P2pThrottling;
+
+impl Detector for P2pThrottling {
+    fn condition(&self) -> Condition {
+        Condition::Pc6P2pThrottling
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        b.observe("pc6.p2p_count", s.p2p_pcie.count as f64);
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        let z = ctx.baseline.z("pc6.p2p_count", s.p2p_pcie.count as f64);
+        // Healthy clusters with NVLink show ~zero PCIe P2P; a surge of PCIe
+        // P2P traffic is itself the red flag.
+        if s.p2p_pcie.count >= 4 && z > ctx.cfg.z_fire {
+            return fire(
+                self.condition(),
+                s,
+                z,
+                format!(
+                    "{} P2P DMAs routed over PCIe (z={:.1}), mean latency {:.0}us",
+                    s.p2p_pcie.count,
+                    z,
+                    s.p2p_pcie.latency_ns.mean() / 1e3
+                ),
+            );
+        }
+        None
+    }
+}
+
+/// PC7 — many small DMAs instead of large coalesced ones.
+pub struct PinnedShortage;
+
+impl Detector for PinnedShortage {
+    fn condition(&self) -> Condition {
+        Condition::Pc7PinnedShortage
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        if s.h2d.count > 0 {
+            b.observe("pc7.h2d_count", s.h2d.count as f64);
+            b.observe("pc7.h2d_mean_bytes", s.h2d.bytes.mean());
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        if s.h2d.count < 8 {
+            return None;
+        }
+        let z_cnt = ctx.baseline.z("pc7.h2d_count", s.h2d.count as f64);
+        let z_sz = ctx.baseline.z("pc7.h2d_mean_bytes", s.h2d.bytes.mean());
+        if z_cnt > ctx.cfg.z_fire && z_sz < -1.5 {
+            return fire(
+                self.condition(),
+                s,
+                z_cnt,
+                format!(
+                    "{} DMAs (z={:.1}) with mean size {:.0}B (z={:.1}) — fragmentation",
+                    s.h2d.count, z_cnt, s.h2d.bytes.mean(), z_sz
+                ),
+            );
+        }
+        None
+    }
+}
+
+/// PC8 — low DMA rate despite idle PCIe; doorbells delayed (host CPU bound).
+pub struct HostCpuBottleneck;
+
+impl Detector for HostCpuBottleneck {
+    fn condition(&self) -> Condition {
+        Condition::Pc8HostCpuBottleneck
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        b.observe("pc8.h2d_rate", s.h2d_rate());
+        if s.doorbell_count > 0 {
+            b.observe("pc8.h2d_to_db", s.h2d_to_doorbell_ns.mean());
+        }
+        if s.pcie_busy.count() > 0 {
+            b.observe("pc8.busy", s.pcie_busy.mean());
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        if s.doorbell_count < 2 {
+            return None;
+        }
+        let z_rate = ctx.baseline.z("pc8.h2d_rate", s.h2d_rate());
+        let z_db = ctx.baseline.z("pc8.h2d_to_db", s.h2d_to_doorbell_ns.mean());
+        let db_beyond =
+            ctx.baseline.above_max("pc8.h2d_to_db", s.h2d_to_doorbell_ns.mean());
+        let busy = s.pcie_busy.mean();
+        if z_db > ctx.cfg.z_fire && db_beyond > 1.5 && z_rate < -0.3 && busy < 0.5 {
+            return fire(
+                self.condition(),
+                s,
+                z_db,
+                format!(
+                    "H2D rate z={:.1} with doorbell delay z={:.1} and idle PCIe ({:.0}%)",
+                    z_rate,
+                    z_db,
+                    busy * 100.0
+                ),
+            );
+        }
+        None
+    }
+}
+
+/// PC9 — frequent map/unmap registration churn around DMAs.
+pub struct RegistrationChurn;
+
+impl Detector for RegistrationChurn {
+    fn condition(&self) -> Condition {
+        Condition::Pc9RegistrationChurn
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        b.observe("pc9.reg_count", (s.mem_reg_count + s.mem_unreg_count) as f64);
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        let total = s.mem_reg_count + s.mem_unreg_count;
+        let z = ctx.baseline.z("pc9.reg_count", total as f64);
+        if total >= 8 && z > ctx.cfg.z_fire {
+            return fire(
+                self.condition(),
+                s,
+                z,
+                format!("{} registration ops around {} DMAs (z={:.1})", total, s.h2d.count, z),
+            );
+        }
+        None
+    }
+}
+
+/// PC10 — D2H drops off early on some streams/GPUs during decode.
+pub struct DecodeEarlyStop;
+
+impl Detector for DecodeEarlyStop {
+    fn condition(&self) -> Condition {
+        Condition::Pc10DecodeEarlyStop
+    }
+
+    fn calibrate(&self, s: &WindowSnapshot, b: &mut Baseline) {
+        if s.d2h.decode_count > 0 {
+            b.observe("pc10.decode_d2h", s.d2h.decode_count as f64);
+            b.observe("pc10.decode_bytes", s.d2h.decode_bytes.mean());
+        }
+    }
+
+    fn check(&self, ctx: &DetectCtx) -> Option<Detection> {
+        let s = ctx.snap;
+        // Decode-phase D2H rate collapsed vs baseline while prefill-phase
+        // traffic continues — streams going silent mid-decode.
+        if !ctx.baseline.has("pc10.decode_d2h") {
+            return None;
+        }
+        let base = ctx.baseline.mean("pc10.decode_d2h");
+        let cur = s.d2h.decode_count as f64;
+        let z = ctx.baseline.z("pc10.decode_d2h", cur);
+        // Primary signature: decode-phase D2H transactions SHRINK — streams
+        // went silent mid-batch, so each returned logits block covers fewer
+        // live sequences (early-stop without remapping).
+        let bytes_base = ctx.baseline.mean("pc10.decode_bytes");
+        let bytes_cur = s.d2h.decode_bytes.mean();
+        let z_bytes = ctx.baseline.z("pc10.decode_bytes", bytes_cur);
+        // Require history: the drop must follow observed decode activity.
+        let had_recent = ctx
+            .history
+            .iter()
+            .rev()
+            .take(3)
+            .any(|h| h.d2h.decode_count as f64 > 0.5 * base);
+        if had_recent
+            && ((z < -1.2 && cur < 0.8 * base)
+                || (s.d2h.decode_count >= 4 && z_bytes < -2.5 && bytes_cur < 0.9 * bytes_base))
+        {
+            return fire(
+                self.condition(),
+                s,
+                (-z).max(-z_bytes),
+                format!(
+                    "decode D2H {cur:.0}/window (base {base:.0}), txn {bytes_cur:.0}B vs                      {bytes_base:.0}B (z={z_bytes:.1}) — streams going silent"
+                ),
+            );
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::NodeId;
+    use crate::sim::SimTime;
+    use crate::telemetry::window::{GpuWindow, WindowSnapshot};
+    use crate::util::stats::Welford;
+
+    fn wf(vals: &[f64]) -> Welford {
+        let mut w = Welford::new();
+        for &v in vals {
+            w.push(v);
+        }
+        w
+    }
+
+    fn healthy_snap() -> WindowSnapshot {
+        let mut s = WindowSnapshot::default();
+        s.node = NodeId(0);
+        s.end = SimTime(1_000_000);
+        s.h2d.count = 40;
+        s.h2d.bytes = wf(&[65536.0; 40]);
+        s.h2d.latency_ns = wf(&[4000.0, 4100.0, 3900.0, 4000.0]);
+        s.h2d.gap_ns = wf(&[20_000.0, 21_000.0, 19_000.0]);
+        s.d2h.count = 20;
+        s.d2h.latency_ns = wf(&[3000.0, 3100.0, 2900.0]);
+        s.d2h.decode_count = 16;
+        s.doorbell_count = 40;
+        s.h2d_to_doorbell_ns = wf(&[5_000.0, 5_200.0, 4_800.0]);
+        s.pcie_busy = wf(&[0.3, 0.32, 0.28]);
+        s.per_gpu = vec![
+            GpuWindow { h2d_count: 10, h2d_bytes: 655360, doorbell_count: 10, ..Default::default() };
+            4
+        ];
+        s
+    }
+
+    fn calib(det: &dyn Detector, n: usize) -> Baseline {
+        let mut b = Baseline::new();
+        for _ in 0..n {
+            det.calibrate(&healthy_snap(), &mut b);
+            b.end_window();
+        }
+        b.freeze();
+        b
+    }
+
+    #[test]
+    fn pc2_fires_on_slow_d2h_only() {
+        let det = D2hBottleneck;
+        let b = calib(&det, 20);
+        let cfg = super::super::DetectConfig::default();
+        let healthy = healthy_snap();
+        let ctx = DetectCtx { snap: &healthy, baseline: &b, history: &[], cfg: &cfg };
+        assert!(det.check(&ctx).is_none());
+        let mut s = healthy_snap();
+        s.d2h.latency_ns = wf(&[80_000.0, 90_000.0, 85_000.0]);
+        let ctx = DetectCtx { snap: &s, baseline: &b, history: &[], cfg: &cfg };
+        assert!(det.check(&ctx).is_some());
+    }
+
+    #[test]
+    fn pc4_fires_on_gpu_imbalance() {
+        let det = IntraNodeSkew;
+        let b = calib(&det, 20);
+        let cfg = super::super::DetectConfig::default();
+        let mut s = healthy_snap();
+        s.per_gpu[2] = GpuWindow { h2d_count: 10, h2d_bytes: 4096, doorbell_count: 10, ..Default::default() };
+        let ctx = DetectCtx { snap: &s, baseline: &b, history: &[], cfg: &cfg };
+        let d = det.check(&ctx).expect("skew should fire");
+        assert!(d.evidence.contains("ratio"));
+    }
+
+    #[test]
+    fn pc7_needs_count_up_and_size_down() {
+        let det = PinnedShortage;
+        let b = calib(&det, 20);
+        let cfg = super::super::DetectConfig::default();
+        // more DMAs of the same size: no fire (that's just load)
+        let mut s = healthy_snap();
+        s.h2d.count = 400;
+        let ctx = DetectCtx { snap: &s, baseline: &b, history: &[], cfg: &cfg };
+        assert!(det.check(&ctx).is_none());
+        // more + smaller: fire
+        s.h2d.bytes = wf(&[2048.0; 40]);
+        let ctx = DetectCtx { snap: &s, baseline: &b, history: &[], cfg: &cfg };
+        assert!(det.check(&ctx).is_some());
+    }
+
+    #[test]
+    fn pc10_requires_recent_decode_activity() {
+        let det = DecodeEarlyStop;
+        let b = calib(&det, 20);
+        let cfg = super::super::DetectConfig::default();
+        let mut s = healthy_snap();
+        s.d2h.decode_count = 2;
+        // no history -> no fire
+        let ctx = DetectCtx { snap: &s, baseline: &b, history: &[], cfg: &cfg };
+        assert!(det.check(&ctx).is_none());
+        // with recent healthy history -> fire
+        let hist = vec![healthy_snap(), healthy_snap()];
+        let ctx = DetectCtx { snap: &s, baseline: &b, history: &hist, cfg: &cfg };
+        assert!(det.check(&ctx).is_some());
+    }
+
+    #[test]
+    fn all_ten_present() {
+        assert_eq!(detectors().len(), 10);
+    }
+}

@@ -1,0 +1,22 @@
+//! The paper's contribution: the DPU observability plane.
+//!
+//! Per-node agents tap the NIC + PCIe telemetry streams (and ONLY those —
+//! `visibility` enforces §4.3's blindness to NVLink/intra-GPU/CPU-local
+//! events), extract windowed features, run the 28 runbook detectors of
+//! Tables 3(a)-(c), attribute root causes across vantage points (§4.2), and
+//! hand mitigation directives to the controller.
+
+pub mod agent;
+pub mod attribution;
+pub mod detectors;
+pub mod runbook;
+pub mod scorer;
+pub mod swdet;
+pub mod visibility;
+
+pub use agent::{Agent, DpuPlane};
+pub use attribution::{attribute, Attribution, RootCause};
+pub use detectors::{Baseline, Condition, DetectConfig, Detection, ALL_CONDITIONS};
+pub use runbook::{all_entries, entry, RunbookEntry};
+pub use scorer::{NativeScorer, ScorerBackend};
+pub use swdet::{SwAlarm, SwSuite};

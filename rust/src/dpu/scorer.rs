@@ -1,0 +1,116 @@
+//! Telemetry window scoring: the feature/z-score computation that the paper
+//! positions as offloadable to the DPU's own compute.
+//!
+//! Two interchangeable backends:
+//! * [`NativeScorer`] — plain Rust (what BlueField ARM cores would run).
+//! * `runtime::CompiledScorer` — the AOT-compiled Pallas kernel
+//!   (`artifacts/detector.hlo.txt`) executed via PJRT, implementing the same
+//!   [`ScorerBackend`] trait; pytest + an integration test pin both to the
+//!   same numbers.
+//!
+//! Feature order contract (must match `python/compile/kernels/scorer.py`):
+//! `0 mean, 1 std, 2 max, 3 min, 4 cov, 5 burstiness, 6 spread, 7 z`.
+
+pub const N_FEATURES: usize = 8;
+const EPS: f32 = 1e-6;
+
+/// Scores batches of raw telemetry windows.
+pub trait ScorerBackend {
+    /// windows: W rows of N samples; baseline: W rows of (mean, std).
+    /// Returns (features `[W][8]`, z `[W]`).
+    fn score(
+        &mut self,
+        windows: &[Vec<f32>],
+        baseline: &[(f32, f32)],
+    ) -> (Vec<[f32; N_FEATURES]>, Vec<f32>);
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust scorer; mirrors the Pallas kernel arithmetic exactly.
+#[derive(Debug, Default)]
+pub struct NativeScorer;
+
+impl ScorerBackend for NativeScorer {
+    fn score(
+        &mut self,
+        windows: &[Vec<f32>],
+        baseline: &[(f32, f32)],
+    ) -> (Vec<[f32; N_FEATURES]>, Vec<f32>) {
+        assert_eq!(windows.len(), baseline.len());
+        let mut feats = Vec::with_capacity(windows.len());
+        let mut zs = Vec::with_capacity(windows.len());
+        for (row, &(bmean, bstd)) in windows.iter().zip(baseline) {
+            let n = row.len().max(1) as f32;
+            let mean = row.iter().sum::<f32>() / n;
+            let var = row.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / n;
+            let std = var.sqrt();
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mn = row.iter().cloned().fold(f32::INFINITY, f32::min);
+            let cov = std / (mean.abs() + EPS);
+            let burst = mx / (mean.abs() + EPS);
+            let spread = mx - mn;
+            let z = (mean - bmean) / (bstd + EPS);
+            feats.push([mean, std, mx, mn, cov, burst, spread, z]);
+            zs.push(z);
+        }
+        (feats, zs)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Pack a ragged set of telemetry series into fixed-shape scorer input
+/// (pad/truncate each series to `n_samples`); used when feeding the
+/// compiled kernel, whose shapes are baked at AOT time.
+pub fn pack_windows(series: &[Vec<f32>], n_samples: usize) -> Vec<Vec<f32>> {
+    series
+        .iter()
+        .map(|s| {
+            let mut row = s.clone();
+            row.truncate(n_samples);
+            // Pad with the series mean so padding doesn't shift features.
+            let pad = if row.is_empty() { 0.0 } else { row.iter().sum::<f32>() / row.len() as f32 };
+            while row.len() < n_samples {
+                row.push(pad);
+            }
+            row
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_scorer_matches_hand_math() {
+        let mut s = NativeScorer;
+        let (f, z) = s.score(&[vec![1.0, 2.0, 3.0, 6.0]], &[(2.0, 1.0)]);
+        let row = f[0];
+        assert!((row[0] - 3.0).abs() < 1e-5); // mean
+        assert!((row[2] - 6.0).abs() < 1e-5); // max
+        assert!((row[3] - 1.0).abs() < 1e-5); // min
+        assert!((row[6] - 5.0).abs() < 1e-5); // spread
+        assert!((z[0] - 1.0).abs() < 1e-4); // (3-2)/(1+eps)
+        assert!((row[7] - z[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pack_pads_with_mean() {
+        let packed = pack_windows(&[vec![2.0, 4.0]], 4);
+        assert_eq!(packed[0], vec![2.0, 4.0, 3.0, 3.0]);
+        let truncated = pack_windows(&[vec![1.0; 10]], 4);
+        assert_eq!(truncated[0].len(), 4);
+    }
+
+    #[test]
+    fn constant_window_zero_variance() {
+        let mut s = NativeScorer;
+        let (f, _) = s.score(&[vec![5.0; 16]], &[(5.0, 1.0)]);
+        assert!(f[0][1].abs() < 1e-6); // std
+        assert!(f[0][6].abs() < 1e-6); // spread
+    }
+}

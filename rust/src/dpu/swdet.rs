@@ -1,0 +1,163 @@
+//! Software-only observability baseline (the comparator for E5): detectors
+//! that see ONLY the engine's own record-keeping (`telemetry::sw`), i.e.
+//! what vLLM/TGI could do without a DPU.
+//!
+//! SW sensing notices *that* something is wrong (step times inflate, queues
+//! grow) but — lacking PCIe/NIC vantage — mostly cannot say *which* runbook
+//! condition is at fault. The bench reports both "noticed" and "identified".
+
+use crate::dpu::detectors::Condition;
+use crate::sim::SimTime;
+use crate::telemetry::sw::{SwSignal, SwSnapshot};
+use crate::util::stats::Welford;
+
+/// Alarms a software-only observer can raise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SwAlarm {
+    /// Request queue / wait time growth.
+    QueueGrowth,
+    /// Iteration (step) time inflated.
+    StepTimeAnomaly,
+    /// KV occupancy pressure.
+    KvPressure,
+    /// Arrival-rate burst.
+    ArrivalBurst,
+    /// Transport-level latency inflation (client-visible).
+    TransportLatency,
+    /// GPU under-utilization (NVML-style, coarse).
+    GpuUnderutilized,
+}
+
+#[derive(Debug, Clone)]
+pub struct SwDetection {
+    pub alarm: SwAlarm,
+    pub at: SimTime,
+    pub severity: f64,
+}
+
+/// Which runbook conditions a SW alarm correctly *identifies* (vs merely
+/// noticing). Encodes Table 2(b)'s "Use" column: software signals identify
+/// application-level causes only.
+pub fn identifies(alarm: SwAlarm) -> &'static [Condition] {
+    match alarm {
+        SwAlarm::QueueGrowth => &[Condition::Ns1BurstBacklog],
+        SwAlarm::ArrivalBurst => &[Condition::Ns1BurstBacklog],
+        SwAlarm::KvPressure => &[],
+        SwAlarm::StepTimeAnomaly => &[],
+        SwAlarm::TransportLatency => &[],
+        SwAlarm::GpuUnderutilized => &[],
+    }
+}
+
+/// Software-only detector suite with its own baseline.
+#[derive(Debug, Default)]
+pub struct SwSuite {
+    base: [Welford; 6],
+    calibrating: bool,
+    pub detections: Vec<SwDetection>,
+}
+
+const Z_FIRE: f64 = 3.0;
+
+impl SwSuite {
+    pub fn new() -> Self {
+        SwSuite { base: Default::default(), calibrating: true, detections: Vec::new() }
+    }
+
+    pub fn go_live(&mut self) {
+        self.calibrating = false;
+    }
+
+    fn z(&self, i: usize, v: f64) -> f64 {
+        let w = &self.base[i];
+        if w.count() < 3 {
+            return 0.0;
+        }
+        let floor = (0.1 * w.mean().abs()).max(1e-6);
+        (v - w.mean()) / w.std().max(floor)
+    }
+
+    /// Feed one window's SW snapshot; returns alarms fired.
+    pub fn window_tick(&mut self, snap: &SwSnapshot) -> Vec<SwDetection> {
+        let feats = [
+            snap.get(SwSignal::QueueDepth).mean(),
+            snap.get(SwSignal::StepTime).mean(),
+            snap.get(SwSignal::KvOccupancy).mean(),
+            snap.get(SwSignal::RequestArrival).count() as f64,
+            snap.get(SwSignal::TransportLatency).mean(),
+            -snap.get(SwSignal::GpuUtil).mean(), // inverted: low util fires
+        ];
+        if self.calibrating {
+            for (w, &f) in self.base.iter_mut().zip(&feats) {
+                w.push(f);
+            }
+            return Vec::new();
+        }
+        let alarms = [
+            SwAlarm::QueueGrowth,
+            SwAlarm::StepTimeAnomaly,
+            SwAlarm::KvPressure,
+            SwAlarm::ArrivalBurst,
+            SwAlarm::TransportLatency,
+            SwAlarm::GpuUnderutilized,
+        ];
+        let mut fired = Vec::new();
+        for (i, alarm) in alarms.iter().enumerate() {
+            let z = self.z(i, feats[i]);
+            if z > Z_FIRE {
+                fired.push(SwDetection { alarm: *alarm, at: snap.end, severity: z });
+            }
+        }
+        self.detections.extend(fired.iter().cloned());
+        fired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::sw::SwWindow;
+
+    fn window(queue: f64, step: f64) -> SwSnapshot {
+        let mut w = SwWindow::new();
+        for _ in 0..10 {
+            w.record(SwSignal::QueueDepth, queue);
+            w.record(SwSignal::StepTime, step);
+            w.record(SwSignal::KvOccupancy, 0.4);
+            w.record(SwSignal::RequestArrival, 1.0);
+            w.record(SwSignal::TransportLatency, 500.0);
+            w.record(SwSignal::GpuUtil, 0.8);
+        }
+        w.snapshot(SimTime(1_000_000))
+    }
+
+    #[test]
+    fn fires_on_queue_growth_after_calibration() {
+        let mut suite = SwSuite::new();
+        for _ in 0..20 {
+            suite.window_tick(&window(3.0, 1000.0));
+        }
+        suite.go_live();
+        assert!(suite.window_tick(&window(3.2, 1010.0)).is_empty());
+        let fired = suite.window_tick(&window(80.0, 1000.0));
+        assert!(fired.iter().any(|d| d.alarm == SwAlarm::QueueGrowth));
+    }
+
+    #[test]
+    fn identification_mapping_is_narrow() {
+        // SW alarms identify at most the application-level conditions.
+        assert_eq!(identifies(SwAlarm::QueueGrowth), &[Condition::Ns1BurstBacklog]);
+        assert!(identifies(SwAlarm::StepTimeAnomaly).is_empty());
+        // No SW alarm identifies any PCIe-table condition.
+        for alarm in [
+            SwAlarm::QueueGrowth,
+            SwAlarm::StepTimeAnomaly,
+            SwAlarm::KvPressure,
+            SwAlarm::ArrivalBurst,
+            SwAlarm::TransportLatency,
+            SwAlarm::GpuUnderutilized,
+        ] {
+            assert!(identifies(alarm).iter().all(|c| c.table() != "3b"));
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! §4.3 visibility boundary, as a standalone filter with accounting.
+//!
+//! The DPU sits inline with the NIC and as a PCIe peer: it observes all
+//! NIC traffic and all root-complex DMA/doorbell activity, but it CANNOT see
+//! intra-GPU kernels, NVLink/NVSwitch collectives, or CPU-only work. The
+//! filter here is the single place that boundary is decided; `Agent::ingest`
+//! applies it, and the E5 negative controls verify it end to end.
+
+use crate::telemetry::event::TelemetryEvent;
+
+/// Split events into (dpu_visible, invisible).
+pub fn partition(events: Vec<TelemetryEvent>) -> (Vec<TelemetryEvent>, Vec<TelemetryEvent>) {
+    events.into_iter().partition(|e| e.kind.dpu_visible())
+}
+
+/// Visibility accounting over a stream.
+#[derive(Debug, Clone, Default)]
+pub struct VisibilityStats {
+    pub visible: u64,
+    pub invisible: u64,
+    pub invisible_by_class: std::collections::BTreeMap<&'static str, u64>,
+}
+
+impl VisibilityStats {
+    pub fn observe(&mut self, ev: &TelemetryEvent) {
+        if ev.kind.dpu_visible() {
+            self.visible += 1;
+        } else {
+            self.invisible += 1;
+            *self.invisible_by_class.entry(ev.kind.class()).or_insert(0) += 1;
+        }
+    }
+
+    /// Fraction of the total stream a DPU can see.
+    pub fn coverage(&self) -> f64 {
+        let total = self.visible + self.invisible;
+        if total == 0 {
+            return 1.0;
+        }
+        self.visible as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::{GpuId, NodeId};
+    use crate::sim::SimTime;
+    use crate::telemetry::event::TelemetryKind;
+
+    fn ev(kind: TelemetryKind) -> TelemetryEvent {
+        TelemetryEvent { t: SimTime(0), node: NodeId(0), kind }
+    }
+
+    #[test]
+    fn partition_and_stats_agree() {
+        let events = vec![
+            ev(TelemetryKind::Doorbell { gpu: GpuId(0) }),
+            ev(TelemetryKind::NvlinkBurst { from: GpuId(0), to: GpuId(1), bytes: 8 }),
+            ev(TelemetryKind::GpuKernel { gpu: GpuId(0), dur_ns: 5, flops: 1.0 }),
+            ev(TelemetryKind::CpuLocal { dur_ns: 5 }),
+        ];
+        let mut stats = VisibilityStats::default();
+        for e in &events {
+            stats.observe(e);
+        }
+        let (vis, invis) = partition(events);
+        assert_eq!(vis.len(), 1);
+        assert_eq!(invis.len(), 3);
+        assert_eq!(stats.visible, 1);
+        assert_eq!(stats.invisible, 3);
+        assert!((stats.coverage() - 0.25).abs() < 1e-12);
+        assert_eq!(stats.invisible_by_class.len(), 3);
+    }
+}

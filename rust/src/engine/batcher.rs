@@ -1,0 +1,396 @@
+//! Continuous batcher + admission queue for one replica.
+//!
+//! Implements the engine policies the paper's Table 2(a) survey contrasts:
+//! continuous (vLLM-style) vs static batching, optional length bucketing,
+//! and in-flight remapping of freed decode slots (the mitigation for
+//! early-completion skew, NS8/PC10/EW9).
+
+use std::collections::VecDeque;
+
+use crate::ids::ReqId;
+use crate::sim::SimTime;
+
+/// Engine batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Decode slots (also the prefill batch cap).
+    pub max_batch: usize,
+    /// Continuous batching: admit new prefills while others decode.
+    /// When false (static batching), a batch runs to full completion first.
+    pub continuous: bool,
+    /// Sort waiting requests by prompt length before forming prefill batches.
+    pub length_bucketing: bool,
+    /// Refill freed decode slots mid-flight (early-stop mitigation).
+    pub inflight_remap: bool,
+    /// Admission queue capacity (requests beyond this are rejected).
+    pub queue_cap: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 4,
+            continuous: true,
+            length_bucketing: true,
+            inflight_remap: true,
+            queue_cap: 512,
+        }
+    }
+}
+
+/// A sequence occupying a decode slot.
+#[derive(Debug, Clone)]
+pub struct RunningSeq {
+    pub req: ReqId,
+    /// Next KV slot to write (== tokens so far: prompt + generated).
+    pub position: u32,
+    pub generated: u32,
+    pub budget: u32,
+}
+
+impl RunningSeq {
+    pub fn remaining(&self) -> u32 {
+        self.budget.saturating_sub(self.generated)
+    }
+}
+
+/// What the executor should run next.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Work {
+    /// Prefill these queued requests (<= max_batch).
+    Prefill(Vec<ReqId>),
+    /// One decode step over the current running set.
+    DecodeRound(Vec<ReqId>),
+    /// Nothing to do.
+    Idle,
+}
+
+#[derive(Debug, Clone)]
+struct Waiting {
+    req: ReqId,
+    prompt_len: u32,
+    enqueued: SimTime,
+}
+
+/// Per-replica batcher state.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    waiting: VecDeque<Waiting>,
+    running: Vec<RunningSeq>,
+    /// Static-batching latch: set while a batch is draining.
+    draining: bool,
+    pub rejected: u64,
+    pub admitted: u64,
+    /// Peak queue depth (Table 2(b) signal).
+    pub peak_queue: usize,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            policy,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            draining: false,
+            rejected: 0,
+            admitted: 0,
+            peak_queue: 0,
+        }
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    pub fn policy_mut(&mut self) -> &mut BatchPolicy {
+        &mut self.policy
+    }
+
+    /// Try to enqueue an arrived request. Returns false if rejected.
+    pub fn enqueue(&mut self, req: ReqId, prompt_len: u32, now: SimTime) -> bool {
+        if self.waiting.len() >= self.policy.queue_cap {
+            self.rejected += 1;
+            return false;
+        }
+        self.waiting.push_back(Waiting { req, prompt_len, enqueued: now });
+        self.peak_queue = self.peak_queue.max(self.waiting.len());
+        self.admitted += 1;
+        true
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running(&self) -> &[RunningSeq] {
+        &self.running
+    }
+
+    pub fn running_mut(&mut self) -> &mut [RunningSeq] {
+        &mut self.running
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.policy.max_batch.saturating_sub(self.running.len())
+    }
+
+    /// Oldest enqueue time in the waiting queue (admission-wait signal).
+    pub fn oldest_wait(&self, now: SimTime) -> Option<crate::sim::SimDur> {
+        self.waiting.front().map(|w| now - w.enqueued)
+    }
+
+    /// Decide the next unit of work.
+    pub fn next_work(&mut self) -> Work {
+        let can_prefill = if self.policy.continuous {
+            // Continuous: prefill whenever there are free slots, but avoid
+            // starving decode: require either an empty running set or at
+            // least one fully free slot.
+            self.free_slots() > 0 && !self.waiting.is_empty()
+        } else {
+            // Static: only start a new batch when the previous fully drained.
+            !self.draining && self.running.is_empty() && !self.waiting.is_empty()
+        };
+
+        if can_prefill {
+            let n = self.free_slots().min(self.waiting.len());
+            let picked = self.pick_waiting(n);
+            if !picked.is_empty() {
+                if !self.policy.continuous {
+                    self.draining = true;
+                }
+                return Work::Prefill(picked);
+            }
+        }
+        if !self.running.is_empty() {
+            return Work::DecodeRound(self.running.iter().map(|r| r.req).collect());
+        }
+        self.draining = false;
+        Work::Idle
+    }
+
+    fn pick_waiting(&mut self, n: usize) -> Vec<ReqId> {
+        if self.policy.length_bucketing && self.waiting.len() > 1 {
+            // Group similar lengths: pick the n with the smallest spread by
+            // sorting a snapshot of the queue by length, taking the best
+            // contiguous run (FIFO-fair tiebreak: earliest enqueue first).
+            let mut snapshot: Vec<(u32, usize)> = self
+                .waiting
+                .iter()
+                .enumerate()
+                .map(|(i, w)| (w.prompt_len, i))
+                .collect();
+            snapshot.sort();
+            let mut best_start = 0;
+            let mut best_spread = u32::MAX;
+            for s in 0..snapshot.len().saturating_sub(n - 1) {
+                let spread = snapshot[s + n - 1].0 - snapshot[s].0;
+                if spread < best_spread {
+                    best_spread = spread;
+                    best_start = s;
+                }
+            }
+            let mut idxs: Vec<usize> =
+                snapshot[best_start..best_start + n].iter().map(|&(_, i)| i).collect();
+            idxs.sort_unstable_by(|a, b| b.cmp(a)); // remove back-to-front
+            let mut out = Vec::with_capacity(n);
+            for i in idxs {
+                out.push(self.waiting.remove(i).unwrap().req);
+            }
+            out.reverse();
+            out
+        } else {
+            (0..n).filter_map(|_| self.waiting.pop_front().map(|w| w.req)).collect()
+        }
+    }
+
+    /// Prefill finished: move requests into decode slots.
+    pub fn start_decode(&mut self, reqs: &[(ReqId, u32 /*prompt_len*/, u32 /*budget*/)]) {
+        for &(req, prompt_len, budget) in reqs {
+            debug_assert!(self.running.len() < self.policy.max_batch);
+            self.running.push(RunningSeq { req, position: prompt_len, generated: 0, budget });
+        }
+    }
+
+    /// Record one generated token for `req`; returns true if it finished.
+    pub fn on_token(&mut self, req: ReqId) -> bool {
+        let Some(seq) = self.running.iter_mut().find(|s| s.req == req) else {
+            return false;
+        };
+        seq.generated += 1;
+        seq.position += 1;
+        seq.generated >= seq.budget
+    }
+
+    /// Remove a finished sequence; returns whether its slot can be refilled
+    /// immediately (in-flight remap policy).
+    pub fn finish(&mut self, req: ReqId) -> bool {
+        self.running.retain(|s| s.req != req);
+        if self.running.is_empty() {
+            self.draining = false;
+        }
+        self.policy.inflight_remap
+    }
+
+    /// Without in-flight remap, a freed slot stays empty until the whole
+    /// batch drains — this helper says whether prefill may refill now.
+    pub fn may_refill(&self) -> bool {
+        if self.policy.inflight_remap {
+            true
+        } else {
+            self.running.is_empty()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{check, PropConfig};
+
+    fn rid(i: u32) -> ReqId {
+        ReqId(i)
+    }
+
+    #[test]
+    fn continuous_prefers_prefill_when_slots_free() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        b.enqueue(rid(1), 16, SimTime(0));
+        b.enqueue(rid(2), 16, SimTime(0));
+        match b.next_work() {
+            Work::Prefill(v) => assert_eq!(v.len(), 2),
+            w => panic!("expected prefill, got {w:?}"),
+        }
+        b.start_decode(&[(rid(1), 16, 4), (rid(2), 16, 4)]);
+        assert_eq!(b.free_slots(), 2);
+        // No waiting -> decode round
+        match b.next_work() {
+            Work::DecodeRound(v) => assert_eq!(v.len(), 2),
+            w => panic!("expected decode, got {w:?}"),
+        }
+    }
+
+    #[test]
+    fn static_batching_waits_for_drain() {
+        let mut pol = BatchPolicy::default();
+        pol.continuous = false;
+        pol.max_batch = 2;
+        let mut b = Batcher::new(pol);
+        b.enqueue(rid(1), 8, SimTime(0));
+        b.enqueue(rid(2), 8, SimTime(0));
+        b.enqueue(rid(3), 8, SimTime(0));
+        let Work::Prefill(v) = b.next_work() else { panic!() };
+        assert_eq!(v.len(), 2);
+        b.start_decode(&[(rid(1), 8, 2), (rid(2), 8, 2)]);
+        // Even though a request waits, static policy decodes the batch.
+        assert!(matches!(b.next_work(), Work::DecodeRound(_)));
+        b.finish(rid(1));
+        assert!(matches!(b.next_work(), Work::DecodeRound(_)));
+        b.finish(rid(2));
+        // Drained: now the next batch may start.
+        assert!(matches!(b.next_work(), Work::Prefill(_)));
+    }
+
+    #[test]
+    fn length_bucketing_groups_similar() {
+        let mut pol = BatchPolicy::default();
+        pol.max_batch = 2;
+        let mut b = Batcher::new(pol);
+        b.enqueue(rid(1), 100, SimTime(0));
+        b.enqueue(rid(2), 8, SimTime(0));
+        b.enqueue(rid(3), 96, SimTime(0));
+        b.enqueue(rid(4), 10, SimTime(0));
+        let Work::Prefill(v) = b.next_work() else { panic!() };
+        // Best contiguous pair by length is {8,10}.
+        assert!(v.contains(&rid(2)) && v.contains(&rid(4)), "picked {v:?}");
+    }
+
+    #[test]
+    fn queue_cap_rejects() {
+        let mut pol = BatchPolicy::default();
+        pol.queue_cap = 2;
+        let mut b = Batcher::new(pol);
+        assert!(b.enqueue(rid(1), 4, SimTime(0)));
+        assert!(b.enqueue(rid(2), 4, SimTime(0)));
+        assert!(!b.enqueue(rid(3), 4, SimTime(0)));
+        assert_eq!(b.rejected, 1);
+    }
+
+    #[test]
+    fn token_and_finish_lifecycle() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        b.start_decode(&[(rid(1), 8, 2)]);
+        assert!(!b.on_token(rid(1)));
+        assert!(b.on_token(rid(1))); // budget reached
+        assert!(b.finish(rid(1)));
+        assert!(b.running().is_empty());
+    }
+
+    #[test]
+    fn no_remap_blocks_refill_until_drain() {
+        let mut pol = BatchPolicy::default();
+        pol.inflight_remap = false;
+        let mut b = Batcher::new(pol);
+        b.start_decode(&[(rid(1), 8, 4), (rid(2), 8, 4)]);
+        b.finish(rid(1));
+        assert!(!b.may_refill());
+        b.finish(rid(2));
+        assert!(b.may_refill());
+    }
+
+    #[test]
+    fn prop_no_request_lost_or_duplicated() {
+        check("batcher-conservation", PropConfig::default().cases(40), |g| {
+            let mut pol = BatchPolicy::default();
+            pol.max_batch = g.usize_in(1, 6);
+            pol.queue_cap = 64;
+            pol.continuous = g.bool();
+            pol.length_bucketing = g.bool();
+            let mut b = Batcher::new(pol);
+            let mut next = 0u32;
+            let mut in_queue = 0usize;
+            let mut seen_prefill: std::collections::HashSet<u32> = Default::default();
+            for _ in 0..200 {
+                if g.rng.chance(0.5) {
+                    let id = next;
+                    next += 1;
+                    if b.enqueue(rid(id), g.usize_in(1, 64) as u32, SimTime(0)) {
+                        in_queue += 1;
+                    }
+                }
+                match b.next_work() {
+                    Work::Prefill(v) => {
+                        prop_assert!(v.len() <= b.policy().max_batch, "prefill too big");
+                        for r in &v {
+                            prop_assert!(seen_prefill.insert(r.0), "req {r} prefilled twice");
+                        }
+                        in_queue -= v.len();
+                        let specs: Vec<_> = v.iter().map(|r| (*r, 8u32, 2u32)).collect();
+                        b.start_decode(&specs);
+                    }
+                    Work::DecodeRound(v) => {
+                        prop_assert!(!v.is_empty(), "empty decode round");
+                        for r in v {
+                            if b.on_token(r) {
+                                b.finish(r);
+                            }
+                        }
+                    }
+                    Work::Idle => {}
+                }
+                prop_assert!(
+                    b.queue_depth() == in_queue,
+                    "queue depth {} != tracked {}",
+                    b.queue_depth(),
+                    in_queue
+                );
+                prop_assert!(
+                    b.running().len() <= b.policy().max_batch,
+                    "running overflow"
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,465 @@
+//! Iteration executor: expands one engine iteration (prefill batch or decode
+//! round) into its full causal hardware chain over the simulated cluster —
+//! H2D feeds → doorbells → sharded compute → intra-node NVLink reduce →
+//! cross-node TP allreduce → PP handoff (+KV streaming) → D2H logits.
+//!
+//! Every step emits the telemetry a DPU (or software observer) would see.
+//! Token *content* is produced by a [`ComputeBackend`]: either the real
+//! PJRT-compiled transformer (`runtime::model`) or a fast surrogate sampler.
+
+use crate::cluster::{Cluster, Outbox};
+use crate::engine::parallel::ParallelPlan;
+use crate::engine::profile::ModelProfile;
+use crate::ids::{CollId, NodeId, ReqId};
+use crate::sim::SimTime;
+use crate::telemetry::event::{CollKind, Phase, TelemetryKind};
+
+/// Produces actual next tokens for sequences. Implemented by the PJRT
+/// runtime (real model) and by [`SurrogateBackend`] (hash sampler).
+pub trait ComputeBackend {
+    /// Prefill `prompts` into the given batch slots; returns the first
+    /// generated token per sequence (same order as `slots`).
+    fn prefill(&mut self, slots: &[usize], prompts: &[Vec<i32>]) -> Vec<i32>;
+    /// One decode step for the given slots: last tokens + KV positions ->
+    /// next token per sequence.
+    fn decode(&mut self, slots: &[usize], last_tokens: &[i32], positions: &[u32]) -> Vec<i32>;
+    /// True when this backend runs the real compiled model.
+    fn is_real(&self) -> bool {
+        false
+    }
+}
+
+/// Deterministic hash-based token sampler (sim-only runs). EOS is decided by
+/// the engine's budget bookkeeping, not the backend.
+#[derive(Debug, Default)]
+pub struct SurrogateBackend {
+    pub vocab: i32,
+}
+
+impl SurrogateBackend {
+    pub fn new(vocab: usize) -> Self {
+        SurrogateBackend { vocab: vocab as i32 }
+    }
+
+    fn hash_next(&self, seedlike: i64) -> i32 {
+        let mut x = seedlike as u64 ^ 0x9E3779B97F4A7C15;
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        x ^= x >> 31;
+        (3 + (x % (self.vocab as u64 - 3).max(1))) as i32
+    }
+}
+
+impl ComputeBackend for SurrogateBackend {
+    fn prefill(&mut self, _slots: &[usize], prompts: &[Vec<i32>]) -> Vec<i32> {
+        prompts
+            .iter()
+            .map(|p| {
+                let sum: i64 = p.iter().map(|&t| t as i64).sum();
+                self.hash_next(sum)
+            })
+            .collect()
+    }
+
+    fn decode(&mut self, _slots: &[usize], last_tokens: &[i32], positions: &[u32]) -> Vec<i32> {
+        last_tokens
+            .iter()
+            .zip(positions)
+            .map(|(&t, &p)| self.hash_next(t as i64 * 131 + p as i64))
+            .collect()
+    }
+}
+
+/// One iteration's description.
+#[derive(Debug, Clone)]
+pub enum IterKind {
+    /// Prefill of `reqs` with these (padded) prompt lengths.
+    Prefill { reqs: Vec<ReqId>, prompt_lens: Vec<u32> },
+    /// One decode step across `reqs` at these context lengths.
+    Decode { reqs: Vec<ReqId>, ctx_lens: Vec<u32> },
+}
+
+/// Timing outcome of an executed iteration.
+#[derive(Debug, Clone)]
+pub struct IterTiming {
+    /// When the iteration's compute chain finished (logits at host).
+    pub done: SimTime,
+    /// Per-stage completion times.
+    pub stage_done: Vec<SimTime>,
+    /// Total FLOPs executed (metrics).
+    pub flops: f64,
+}
+
+/// Monotonic collective-id allocator (one per replica executor).
+#[derive(Debug, Default)]
+pub struct CollSeq(u64);
+
+impl CollSeq {
+    pub fn next(&mut self) -> CollId {
+        self.0 += 1;
+        CollId(self.0 as u32)
+    }
+}
+
+/// Execute one iteration over the cluster, emitting telemetry into `out`.
+pub fn run_iteration(
+    now: SimTime,
+    kind: &IterKind,
+    cluster: &mut Cluster,
+    plan: &ParallelPlan,
+    profile: &ModelProfile,
+    colls: &mut CollSeq,
+    out: &mut Outbox,
+) -> IterTiming {
+    let (phase, total_tokens, batch, mean_ctx) = match kind {
+        IterKind::Prefill { prompt_lens, .. } => {
+            let toks: u32 = prompt_lens.iter().sum();
+            let mean = (toks / prompt_lens.len().max(1) as u32).max(1);
+            (Phase::Prefill, toks as usize, prompt_lens.len(), mean as usize)
+        }
+        IterKind::Decode { reqs, ctx_lens } => {
+            let mean = (ctx_lens.iter().sum::<u32>() / ctx_lens.len().max(1) as u32).max(1);
+            (Phase::Decode, reqs.len(), reqs.len(), mean as usize)
+        }
+    };
+
+    let total_flops = match phase {
+        Phase::Prefill => profile.flops_prefill(total_tokens, mean_ctx),
+        Phase::Decode => profile.flops_decode(batch, mean_ctx),
+    };
+
+    let mut stage_done: Vec<SimTime> = Vec::with_capacity(plan.n_stages());
+    let mut stage_input_ready = now;
+
+    for (si, stage) in plan.stages.iter().enumerate() {
+        let stage_flops = total_flops * stage.layer_frac;
+        let n_nodes = stage.nodes.len();
+
+        // --- input feed ---
+        // Stage 0 gets embeddings/ids over PCIe from the host; later stages
+        // receive activations via the PP handoff (already accounted below).
+        let feed_bytes = if si == 0 {
+            profile.embed_bytes(total_tokens.max(batch))
+        } else {
+            0
+        };
+
+        // --- per-GPU compute, fed by per-GPU H2D slices ---
+        let mut node_done: Vec<SimTime> = Vec::with_capacity(n_nodes);
+        for (ni, &node) in stage.nodes.iter().enumerate() {
+            let mut gpu_done_max = stage_input_ready;
+            let gpus_here: Vec<usize> = (0..stage.gpus.len())
+                .filter(|&gi| cluster.node_of(stage.gpus[gi]) == node)
+                .collect();
+            for &gi in &gpus_here {
+                let gpu = stage.gpus[gi];
+                let frac = stage.shard_frac[gi];
+                let ready = if feed_bytes > 0 {
+                    let slice = ((feed_bytes as f64) * frac).ceil() as u64;
+                    cluster.h2d(stage_input_ready, gpu, slice.max(256), phase, out)
+                } else {
+                    // Decode/later stages still issue small control H2D
+                    // (token ids / stage inputs land via handoff).
+                    let ctrl = (batch * 8).max(64) as u64;
+                    cluster.h2d(stage_input_ready, gpu, ctrl, phase, out)
+                };
+                let done = cluster.gpu_launch(ready, gpu, stage_flops * frac, out);
+                gpu_done_max = gpu_done_max.max(done);
+            }
+            // Intra-node TP reduce over NVLink (DPU-invisible): lead GPU
+            // gathers peers' partials.
+            if gpus_here.len() > 1 {
+                let lead = stage.gpus[gpus_here[0]];
+                let part_bytes = profile.activation_bytes(total_tokens.max(batch))
+                    / gpus_here.len() as u64;
+                let mut reduce_done = gpu_done_max;
+                for &gi in &gpus_here[1..] {
+                    let done =
+                        cluster.p2p(gpu_done_max, stage.gpus[gi], lead, part_bytes.max(64), out);
+                    reduce_done = reduce_done.max(done);
+                }
+                gpu_done_max = reduce_done;
+            }
+            node_done.push(gpu_done_max);
+            let _ = ni;
+        }
+
+        // --- cross-node TP allreduce (DPU-visible collective bursts) ---
+        let mut stage_complete = *node_done.iter().max().unwrap_or(&stage_input_ready);
+        if n_nodes > 1 {
+            let coll = colls.next();
+            let total_act = profile.activation_bytes(total_tokens.max(batch)).max(256);
+            // Per-node payload follows that node's shard ownership: a
+            // misaligned activation partitioning (EW3) shows up as uneven
+            // per-source volume at every destination DPU.
+            let node_frac: Vec<f64> = stage
+                .nodes
+                .iter()
+                .map(|&n| {
+                    stage
+                        .gpus
+                        .iter()
+                        .zip(&stage.shard_frac)
+                        .filter(|(g, _)| cluster.node_of(**g) == n)
+                        .map(|(_, f)| *f)
+                        .sum::<f64>()
+                })
+                .collect();
+            let expected = n_nodes as u32;
+            let mut last_arrival = stage_complete;
+            // EW9: a node early-stopping without remap goes silent — its
+            // bursts never arrive and destination collectives stall.
+            let silent: Vec<bool> = stage
+                .nodes
+                .iter()
+                .map(|&n| {
+                    let p = cluster.nodes[n.idx()].knobs.collective_silence;
+                    p > 0.0 && cluster.nodes[n.idx()].rng.chance(p)
+                })
+                .collect();
+            for &dst in stage.nodes.iter() {
+                // Each destination sees: its own shard completion ("self burst",
+                // the outgoing RDMA doorbell) + one burst per peer.
+                for (bi, &src) in stage.nodes.iter().enumerate() {
+                    if silent[bi] && src != dst {
+                        continue;
+                    }
+                    let act_bytes =
+                        ((total_act as f64) * node_frac[bi] * n_nodes as f64).max(256.0) as u64;
+                    let t_arrive = if src == dst {
+                        node_done[bi]
+                    } else {
+                        cluster.rdma(node_done[bi], src, dst, act_bytes, false, out)
+                    };
+                    out.emit(
+                        t_arrive,
+                        dst,
+                        TelemetryKind::CollectiveBurst {
+                            coll,
+                            kind: CollKind::TpAllreduce,
+                            from_node: src,
+                            rank: bi as u32,
+                            expected_ranks: expected,
+                            bytes: act_bytes,
+                            latency_ns: (t_arrive - node_done[bi]).ns(),
+                        },
+                    );
+                    last_arrival = last_arrival.max(t_arrive);
+                }
+            }
+            stage_complete = last_arrival;
+        }
+
+        // --- PP handoff to the next stage (activations; KV stream on prefill) ---
+        if si + 1 < plan.n_stages() {
+            let next = &plan.stages[si + 1];
+            let act_bytes = profile.activation_bytes(total_tokens.max(batch)).max(256);
+            let coll = colls.next();
+            let mut handoff_done = stage_complete;
+            for (pi, (&src, &dst)) in
+                stage.nodes.iter().zip(next.nodes.iter().cycle()).enumerate().take(n_nodes).map(|(i, p)| (i, p))
+            {
+                let arrive = cluster.rdma(stage_complete, src, dst, act_bytes, false, out);
+                out.emit(
+                    stage_complete,
+                    src,
+                    TelemetryKind::StageHandoff {
+                        from_stage: stage.id,
+                        to_stage: next.id,
+                        bytes: act_bytes,
+                        outbound: true,
+                        phase,
+                    },
+                );
+                out.emit(
+                    arrive,
+                    dst,
+                    TelemetryKind::StageHandoff {
+                        from_stage: stage.id,
+                        to_stage: next.id,
+                        bytes: act_bytes,
+                        outbound: false,
+                        phase,
+                    },
+                );
+                // 1:1 pairing: each destination sees exactly one handoff
+                // burst per collective instance.
+                out.emit(
+                    arrive,
+                    dst,
+                    TelemetryKind::CollectiveBurst {
+                        coll,
+                        kind: CollKind::PpHandoff,
+                        from_node: src,
+                        rank: pi as u32,
+                        expected_ranks: 1,
+                        bytes: act_bytes,
+                        latency_ns: (arrive - stage_complete).ns(),
+                    },
+                );
+                handoff_done = handoff_done.max(arrive);
+            }
+            // Prefill streams the new KV blocks for later-stage reuse
+            // (disaggregated-style KV shipping; the EW8 path).
+            if phase == Phase::Prefill {
+                let kv_bytes = profile.kv_bytes(total_tokens).max(512) / n_nodes as u64;
+                let kv_coll = colls.next();
+                for (pi, (&src, &dst)) in
+                    stage.nodes.iter().zip(next.nodes.iter().cycle()).enumerate().take(n_nodes).map(|(i, p)| (i, p))
+                {
+                    let arrive = cluster.rdma(stage_complete, src, dst, kv_bytes, true, out);
+                    out.emit(
+                        arrive,
+                        dst,
+                        TelemetryKind::CollectiveBurst {
+                            coll: kv_coll,
+                            kind: CollKind::KvTransfer,
+                            from_node: src,
+                            rank: pi as u32,
+                            expected_ranks: 1,
+                            bytes: kv_bytes,
+                            latency_ns: (arrive - stage_complete).ns(),
+                        },
+                    );
+                    handoff_done = handoff_done.max(arrive);
+                }
+            }
+            stage_input_ready = handoff_done;
+        }
+        stage_done.push(stage_complete);
+    }
+
+    // --- D2H logits on the exit stage's lead node ---
+    let exit = plan.exit_nodes()[0];
+    let exit_gpu = *plan.stages[plan.n_stages() - 1]
+        .gpus
+        .iter()
+        .find(|&&g| cluster.node_of(g) == exit)
+        .expect("exit node has gpus");
+    let logits_at = cluster.d2h(
+        *stage_done.last().unwrap(),
+        exit_gpu,
+        profile.logits_bytes(batch).max(256),
+        phase,
+        out,
+    );
+
+    IterTiming { done: logits_at, stage_done, flops: total_flops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::engine::parallel::build_replicas;
+    use crate::engine::profile::preset;
+
+    fn setup() -> (Cluster, ParallelPlan, ModelProfile) {
+        let spec = ClusterSpec::default();
+        let plans = build_replicas(&spec, 2);
+        (Cluster::new(spec, 7), plans.into_iter().next().unwrap(), preset("small").unwrap())
+    }
+
+    #[test]
+    fn prefill_chain_produces_all_event_classes() {
+        let (mut cluster, plan, profile) = setup();
+        let mut out = Outbox::new();
+        let mut colls = CollSeq::default();
+        let kind = IterKind::Prefill {
+            reqs: vec![ReqId(1), ReqId(2)],
+            prompt_lens: vec![64, 32],
+        };
+        let t = run_iteration(SimTime(1000), &kind, &mut cluster, &plan, &profile, &mut colls, &mut out);
+        assert!(t.done > SimTime(1000));
+        assert_eq!(t.stage_done.len(), 2);
+        let classes: std::collections::HashSet<&str> =
+            out.items.iter().map(|(_, _, k)| k.class()).collect();
+        for want in ["dma_h2d", "doorbell", "gpu_kernel", "collective", "stage_handoff", "dma_d2h", "rdma_op"] {
+            assert!(classes.contains(want), "missing {want}: {classes:?}");
+        }
+        // Prefill ships KV to the next stage.
+        let kv_bursts = out
+            .items
+            .iter()
+            .filter(|(_, _, k)| {
+                matches!(k, TelemetryKind::CollectiveBurst { kind: CollKind::KvTransfer, .. })
+            })
+            .count();
+        assert!(kv_bursts > 0);
+    }
+
+    #[test]
+    fn decode_is_cheaper_than_prefill() {
+        let (mut cluster, plan, profile) = setup();
+        let mut out = Outbox::new();
+        let mut colls = CollSeq::default();
+        let pre = IterKind::Prefill { reqs: vec![ReqId(1)], prompt_lens: vec![64] };
+        let t_pre =
+            run_iteration(SimTime(0), &pre, &mut cluster, &plan, &profile, &mut colls, &mut out);
+        let (mut cluster2, plan2, _) = setup();
+        let dec = IterKind::Decode { reqs: vec![ReqId(1)], ctx_lens: vec![65] };
+        let t_dec =
+            run_iteration(SimTime(0), &dec, &mut cluster2, &plan2, &profile, &mut colls, &mut out);
+        assert!(
+            t_dec.done < t_pre.done,
+            "decode {:?} !< prefill {:?}",
+            t_dec.done,
+            t_pre.done
+        );
+        assert!(t_dec.flops < t_pre.flops);
+    }
+
+    #[test]
+    fn straggler_gpu_widens_collective_spread() {
+        // Use a compute-dominated profile: with the tiny "small" model the
+        // iteration is network-bound and a slow GPU barely moves arrivals.
+        let (mut cluster, plan, _) = setup();
+        let profile = preset("7b").unwrap();
+        // Slow one GPU on node 1 (stage 0 spans nodes 0-1).
+        cluster.nodes[1].knobs.gpu_speed_factor[0] = 0.2;
+        let mut out = Outbox::new();
+        let mut colls = CollSeq::default();
+        let kind = IterKind::Decode { reqs: vec![ReqId(1); 4], ctx_lens: vec![64; 4] };
+        run_iteration(SimTime(0), &kind, &mut cluster, &plan, &profile, &mut colls, &mut out);
+        // Find TP collective arrivals at node 0 and compute spread.
+        let mut arrivals: Vec<u64> = Vec::new();
+        for (t, node, k) in &out.items {
+            if *node == NodeId(0) {
+                if let TelemetryKind::CollectiveBurst { kind: CollKind::TpAllreduce, .. } = k {
+                    arrivals.push(t.ns());
+                }
+            }
+        }
+        assert!(arrivals.len() >= 2);
+        let spread = arrivals.iter().max().unwrap() - arrivals.iter().min().unwrap();
+        // Healthy baseline for comparison.
+        let (mut c2, plan2, _) = setup();
+        let profile2 = preset("7b").unwrap();
+        let mut out2 = Outbox::new();
+        let kind2 = IterKind::Decode { reqs: vec![ReqId(1); 4], ctx_lens: vec![64; 4] };
+        run_iteration(SimTime(0), &kind2, &mut c2, &plan2, &profile2, &mut colls, &mut out2);
+        let mut arr2: Vec<u64> = Vec::new();
+        for (t, node, k) in &out2.items {
+            if *node == NodeId(0) {
+                if let TelemetryKind::CollectiveBurst { kind: CollKind::TpAllreduce, .. } = k {
+                    arr2.push(t.ns());
+                }
+            }
+        }
+        let spread2 = arr2.iter().max().unwrap() - arr2.iter().min().unwrap();
+        assert!(spread > spread2 * 3, "straggler spread {spread} vs healthy {spread2}");
+    }
+
+    #[test]
+    fn surrogate_backend_deterministic() {
+        let mut b = SurrogateBackend::new(512);
+        let p1 = b.prefill(&[0, 1], &[vec![1, 2, 3], vec![4, 5]]);
+        let p2 = b.prefill(&[0, 1], &[vec![1, 2, 3], vec![4, 5]]);
+        assert_eq!(p1, p2);
+        assert!(p1.iter().all(|&t| (3..512).contains(&t)));
+        let d1 = b.decode(&[0, 1], &[7, 9], &[10, 20]);
+        let d2 = b.decode(&[0, 1], &[7, 9], &[10, 20]);
+        assert_eq!(d1, d2);
+        assert_ne!(d1[0], d1[1]);
+        assert!(!b.is_real());
+    }
+}

@@ -1,0 +1,219 @@
+//! Paged KV-cache manager (vLLM-style): fixed-size pages, on-demand growth,
+//! occupancy accounting, and allocation-failure signaling for admission.
+
+use std::collections::HashMap;
+
+use crate::ids::ReqId;
+
+/// Outcome of a page allocation attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocResult {
+    Ok,
+    /// Not enough free pages; caller must queue, evict, or reject.
+    OutOfPages,
+}
+
+#[derive(Debug, Clone)]
+struct SeqAlloc {
+    pages: u32,
+    tokens: u32,
+}
+
+/// Paged allocator for one replica's KV memory.
+#[derive(Debug)]
+pub struct KvCache {
+    total_pages: u32,
+    page_tokens: u32,
+    free_pages: u32,
+    seqs: HashMap<ReqId, SeqAlloc>,
+    /// Cumulative counters for metrics / Table 2(b) kv-occupancy signal.
+    pub alloc_ops: u64,
+    pub free_ops: u64,
+    pub alloc_failures: u64,
+}
+
+impl KvCache {
+    pub fn new(total_pages: u32, page_tokens: u32) -> Self {
+        assert!(total_pages > 0 && page_tokens > 0);
+        KvCache {
+            total_pages,
+            page_tokens,
+            free_pages: total_pages,
+            seqs: HashMap::new(),
+            alloc_ops: 0,
+            free_ops: 0,
+            alloc_failures: 0,
+        }
+    }
+
+    fn pages_for(&self, tokens: u32) -> u32 {
+        tokens.div_ceil(self.page_tokens)
+    }
+
+    /// Admit a sequence with `prompt_tokens` already known.
+    pub fn admit(&mut self, req: ReqId, prompt_tokens: u32) -> AllocResult {
+        debug_assert!(!self.seqs.contains_key(&req), "double admit {req}");
+        let need = self.pages_for(prompt_tokens.max(1));
+        if need > self.free_pages {
+            self.alloc_failures += 1;
+            return AllocResult::OutOfPages;
+        }
+        self.free_pages -= need;
+        self.alloc_ops += 1;
+        self.seqs.insert(req, SeqAlloc { pages: need, tokens: prompt_tokens.max(1) });
+        AllocResult::Ok
+    }
+
+    /// Grow a sequence by one generated token; may allocate a page.
+    pub fn append_token(&mut self, req: ReqId) -> AllocResult {
+        let Some(s) = self.seqs.get_mut(&req) else {
+            debug_assert!(false, "append on unknown {req}");
+            return AllocResult::OutOfPages;
+        };
+        s.tokens += 1;
+        let need = s.tokens.div_ceil(self.page_tokens);
+        if need > s.pages {
+            if self.free_pages == 0 {
+                s.tokens -= 1;
+                self.alloc_failures += 1;
+                return AllocResult::OutOfPages;
+            }
+            self.free_pages -= 1;
+            s.pages += 1;
+            self.alloc_ops += 1;
+        }
+        AllocResult::Ok
+    }
+
+    /// Release a finished (or evicted) sequence.
+    pub fn release(&mut self, req: ReqId) {
+        if let Some(s) = self.seqs.remove(&req) {
+            self.free_pages += s.pages;
+            self.free_ops += 1;
+        }
+    }
+
+    pub fn can_admit(&self, prompt_tokens: u32) -> bool {
+        self.pages_for(prompt_tokens.max(1)) <= self.free_pages
+    }
+
+    pub fn occupancy(&self) -> f64 {
+        1.0 - self.free_pages as f64 / self.total_pages as f64
+    }
+
+    pub fn free_pages(&self) -> u32 {
+        self.free_pages
+    }
+
+    pub fn total_pages(&self) -> u32 {
+        self.total_pages
+    }
+
+    pub fn used_pages(&self) -> u32 {
+        self.total_pages - self.free_pages
+    }
+
+    pub fn active_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn tokens_of(&self, req: ReqId) -> Option<u32> {
+        self.seqs.get(&req).map(|s| s.tokens)
+    }
+
+    /// Invariant check used by property tests: page accounting conserves.
+    pub fn check_conservation(&self) -> bool {
+        let used: u32 = self.seqs.values().map(|s| s.pages).sum();
+        used + self.free_pages == self.total_pages
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, PropConfig};
+    use crate::prop_assert;
+
+    #[test]
+    fn admit_grow_release_conserves() {
+        let mut kv = KvCache::new(16, 8);
+        assert_eq!(kv.admit(ReqId(1), 10), AllocResult::Ok); // 2 pages
+        assert_eq!(kv.used_pages(), 2);
+        // grow within page
+        for _ in 0..6 {
+            assert_eq!(kv.append_token(ReqId(1)), AllocResult::Ok);
+        }
+        assert_eq!(kv.used_pages(), 2);
+        // 17th token needs page 3
+        assert_eq!(kv.append_token(ReqId(1)), AllocResult::Ok);
+        assert_eq!(kv.used_pages(), 3);
+        kv.release(ReqId(1));
+        assert_eq!(kv.used_pages(), 0);
+        assert!(kv.check_conservation());
+    }
+
+    #[test]
+    fn out_of_pages_rejects_and_rolls_back() {
+        let mut kv = KvCache::new(2, 4);
+        assert_eq!(kv.admit(ReqId(1), 8), AllocResult::Ok); // uses both pages
+        assert_eq!(kv.admit(ReqId(2), 1), AllocResult::OutOfPages);
+        assert_eq!(kv.alloc_failures, 1);
+        // growth failure rolls back the token count
+        assert_eq!(kv.append_token(ReqId(1)), AllocResult::OutOfPages);
+        assert_eq!(kv.tokens_of(ReqId(1)), Some(8));
+        assert!(kv.check_conservation());
+    }
+
+    #[test]
+    fn occupancy_tracks() {
+        let mut kv = KvCache::new(10, 4);
+        assert_eq!(kv.occupancy(), 0.0);
+        kv.admit(ReqId(1), 20); // 5 pages
+        assert!((kv.occupancy() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_alloc_free_conservation() {
+        check("kv-conservation", PropConfig::default().cases(48), |g| {
+            let total = g.usize_in(4, 64) as u32;
+            let page = g.usize_in(1, 16) as u32;
+            let mut kv = KvCache::new(total, page);
+            let mut live: Vec<ReqId> = Vec::new();
+            let mut next = 0u32;
+            for _ in 0..200 {
+                let coin = g.rng.f64();
+                if coin < 0.5 {
+                    let toks = g.usize_in(1, 40) as u32;
+                    let id = ReqId(next);
+                    next += 1;
+                    if kv.admit(id, toks) == AllocResult::Ok {
+                        live.push(id);
+                    }
+                } else if coin < 0.8 && !live.is_empty() {
+                    let idx = g.rng.index(live.len());
+                    let _ = kv.append_token(live[idx]);
+                } else if !live.is_empty() {
+                    let idx = g.rng.index(live.len());
+                    let id = live.swap_remove(idx);
+                    kv.release(id);
+                }
+                prop_assert!(kv.check_conservation(), "conservation violated");
+                prop_assert!(
+                    kv.active_seqs() == live.len(),
+                    "live mismatch {} vs {}",
+                    kv.active_seqs(),
+                    live.len()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn release_unknown_is_noop() {
+        let mut kv = KvCache::new(4, 4);
+        kv.release(ReqId(99));
+        assert!(kv.check_conservation());
+        assert_eq!(kv.free_ops, 0);
+    }
+}

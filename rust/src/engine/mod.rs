@@ -1,0 +1,184 @@
+//! vLLM-like inference engine substrate: router → admission/batcher → paged
+//! KV cache → TP/PP execution over the simulated cluster.
+//!
+//! The [`Engine`] struct composes per-replica state; the scenario loop
+//! (`coordinator::scenario`) drives it through the discrete-event calendar.
+
+pub mod batcher;
+pub mod exec;
+pub mod kvcache;
+pub mod parallel;
+pub mod profile;
+pub mod router;
+
+pub use batcher::{BatchPolicy, Batcher, Work};
+pub use exec::{CollSeq, ComputeBackend, IterKind, IterTiming, SurrogateBackend};
+pub use kvcache::{AllocResult, KvCache};
+pub use parallel::{build_replicas, ParallelPlan};
+pub use profile::{preset, ModelProfile};
+pub use router::{RoutePolicy, Router};
+
+use std::collections::HashMap;
+
+use crate::ids::ReqId;
+use crate::workload::request::InferenceRequest;
+
+/// Engine-wide configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub profile: ModelProfile,
+    pub policy: BatchPolicy,
+    pub route_policy: RoutePolicy,
+    /// KV pages per replica and tokens per page.
+    pub kv_pages: u32,
+    pub kv_page_tokens: u32,
+    /// Nodes per pipeline stage (TP span across the fabric).
+    pub nodes_per_stage: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        let profile = preset("small").unwrap();
+        let mut policy = BatchPolicy::default();
+        policy.max_batch = profile.batch;
+        EngineConfig {
+            profile,
+            policy,
+            route_policy: RoutePolicy::FlowHash,
+            kv_pages: 1024,
+            kv_page_tokens: 16,
+            nodes_per_stage: 2,
+        }
+    }
+}
+
+/// Per-replica serving state.
+#[derive(Debug)]
+pub struct Replica {
+    pub plan: ParallelPlan,
+    pub batcher: Batcher,
+    pub kv: KvCache,
+    pub colls: CollSeq,
+    /// Whether an iteration is currently in flight (next one scheduled).
+    pub busy: bool,
+    pub iterations: u64,
+    pub prefills: u64,
+    pub decodes: u64,
+}
+
+/// The serving engine: router + replicas + request registry.
+#[derive(Debug)]
+pub struct Engine {
+    pub cfg: EngineConfig,
+    pub router: Router,
+    pub replicas: Vec<Replica>,
+    pub requests: HashMap<ReqId, InferenceRequest>,
+    /// Which replica each request landed on.
+    pub placement: HashMap<ReqId, usize>,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig, plans: Vec<ParallelPlan>) -> Self {
+        assert!(!plans.is_empty());
+        let n = plans.len();
+        let replicas = plans
+            .into_iter()
+            .map(|plan| Replica {
+                plan,
+                batcher: Batcher::new(cfg.policy.clone()),
+                kv: KvCache::new(cfg.kv_pages, cfg.kv_page_tokens),
+                colls: CollSeq::default(),
+                busy: false,
+                iterations: 0,
+                prefills: 0,
+                decodes: 0,
+            })
+            .collect();
+        Engine {
+            router: Router::new(n, cfg.route_policy),
+            cfg,
+            replicas,
+            requests: HashMap::new(),
+            placement: HashMap::new(),
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Register an arriving request and route it. Returns the replica index.
+    pub fn register(&mut self, req: InferenceRequest) -> usize {
+        let r = self.router.route(req.flow);
+        self.placement.insert(req.id, r);
+        self.requests.insert(req.id, req);
+        r
+    }
+
+    pub fn request(&self, id: ReqId) -> &InferenceRequest {
+        &self.requests[&id]
+    }
+
+    pub fn request_mut(&mut self, id: ReqId) -> &mut InferenceRequest {
+        self.requests.get_mut(&id).expect("unknown request")
+    }
+
+    /// Total tokens generated so far across all requests.
+    pub fn total_tokens(&self) -> u64 {
+        self.requests.values().map(|r| r.tokens_generated() as u64).sum()
+    }
+
+    /// Aggregate queue depth (Table 2(b) signal).
+    pub fn queue_depth(&self) -> usize {
+        self.replicas.iter().map(|r| r.batcher.queue_depth()).sum()
+    }
+
+    /// Mean KV occupancy across replicas.
+    pub fn kv_occupancy(&self) -> f64 {
+        let n = self.replicas.len() as f64;
+        self.replicas.iter().map(|r| r.kv.occupancy()).sum::<f64>() / n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::ids::FlowId;
+    use crate::sim::SimTime;
+
+    fn engine() -> Engine {
+        let cfg = EngineConfig::default();
+        let spec = ClusterSpec::default();
+        let plans = build_replicas(&spec, cfg.nodes_per_stage);
+        Engine::new(cfg, plans)
+    }
+
+    fn req(id: u32, flow: u32) -> InferenceRequest {
+        InferenceRequest::new(ReqId(id), FlowId(flow), SimTime(0), vec![1, 2, 3, 4], 4)
+    }
+
+    #[test]
+    fn register_routes_and_tracks() {
+        let mut e = engine();
+        let r = e.register(req(1, 5));
+        assert!(r < e.n_replicas());
+        assert_eq!(e.placement[&ReqId(1)], r);
+        assert_eq!(e.request(ReqId(1)).flow, FlowId(5));
+    }
+
+    #[test]
+    fn default_config_consistent_with_profile() {
+        let e = engine();
+        assert_eq!(e.cfg.policy.max_batch, e.cfg.profile.batch);
+        assert_eq!(e.n_replicas(), 1); // 4 nodes / (pp2 * 2 nodes-per-stage)
+    }
+
+    #[test]
+    fn queue_and_kv_signals_start_clean() {
+        let e = engine();
+        assert_eq!(e.queue_depth(), 0);
+        assert_eq!(e.kv_occupancy(), 0.0);
+        assert_eq!(e.total_tokens(), 0);
+    }
+}

@@ -1,0 +1,202 @@
+//! Tensor/pipeline parallel plan: which nodes/GPUs form a replica, how
+//! layers split across pipeline stages, and how work shards across GPUs
+//! within a stage. Imbalance knobs here create EW2 (stage imbalance) and
+//! EW3 (shard imbalance).
+
+use crate::cluster::topology::ClusterSpec;
+use crate::ids::{GpuId, NodeId, StageId};
+
+/// One pipeline stage: the nodes (and their GPUs) executing a layer slice.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub id: StageId,
+    pub nodes: Vec<NodeId>,
+    pub gpus: Vec<GpuId>,
+    /// Fraction of total model FLOPs this stage owns (sums to 1 across stages).
+    pub layer_frac: f64,
+    /// Per-GPU shard fractions within the stage (sums to 1).
+    pub shard_frac: Vec<f64>,
+}
+
+/// A replica: a full copy of the model across `pp` stages.
+#[derive(Debug, Clone)]
+pub struct ParallelPlan {
+    pub replica: usize,
+    pub stages: Vec<Stage>,
+}
+
+impl ParallelPlan {
+    /// Build the canonical plan for one replica: stages take consecutive
+    /// node groups; every GPU of a stage's nodes participates (TP spans the
+    /// stage's nodes, so TP collectives cross the fabric and are
+    /// DPU-observable — see DESIGN.md).
+    pub fn build(spec: &ClusterSpec, replica: usize, nodes: &[NodeId]) -> Self {
+        assert!(!nodes.is_empty());
+        assert_eq!(nodes.len() % spec.pp_degree, 0, "nodes must split evenly into stages");
+        let nodes_per_stage = nodes.len() / spec.pp_degree;
+        let stages = (0..spec.pp_degree)
+            .map(|s| {
+                let snodes: Vec<NodeId> =
+                    nodes[s * nodes_per_stage..(s + 1) * nodes_per_stage].to_vec();
+                let gpus: Vec<GpuId> =
+                    snodes.iter().flat_map(|&n| spec.gpus_of_node(n)).collect();
+                let n_gpus = gpus.len();
+                Stage {
+                    id: StageId(s as u32),
+                    nodes: snodes,
+                    gpus,
+                    layer_frac: 1.0 / spec.pp_degree as f64,
+                    shard_frac: vec![1.0 / n_gpus as f64; n_gpus],
+                }
+            })
+            .collect();
+        ParallelPlan { replica, stages }
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// All nodes of the replica, stage order.
+    pub fn all_nodes(&self) -> Vec<NodeId> {
+        self.stages.iter().flat_map(|s| s.nodes.clone()).collect()
+    }
+
+    /// First-stage nodes (where ingress feeds) and last-stage nodes (where
+    /// logits come back / egress happens).
+    pub fn entry_nodes(&self) -> &[NodeId] {
+        &self.stages[0].nodes
+    }
+
+    pub fn exit_nodes(&self) -> &[NodeId] {
+        &self.stages[self.stages.len() - 1].nodes
+    }
+
+    /// EW2 injector variant: a mispartitioned stage *recomputes* part of
+    /// its slice (bad split boundaries), so its work inflates WITHOUT the
+    /// other stages shrinking — this is what stretches the pipeline cadence.
+    pub fn overload_stage(&mut self, stage: usize, factor: f64) {
+        assert!(stage < self.stages.len());
+        self.stages[stage].layer_frac *= factor;
+    }
+
+    /// EW2 injector: skew stage compute fractions (renormalized).
+    pub fn skew_stages(&mut self, hot_stage: usize, factor: f64) {
+        assert!(hot_stage < self.stages.len());
+        let mut fr: Vec<f64> = self.stages.iter().map(|s| s.layer_frac).collect();
+        fr[hot_stage] *= factor;
+        let total: f64 = fr.iter().sum();
+        for (s, f) in self.stages.iter_mut().zip(fr) {
+            s.layer_frac = f / total;
+        }
+    }
+
+    /// EW3 injector: skew shard fractions within a stage (renormalized).
+    pub fn skew_shards(&mut self, stage: usize, hot_gpu: usize, factor: f64) {
+        let st = &mut self.stages[stage];
+        assert!(hot_gpu < st.shard_frac.len());
+        st.shard_frac[hot_gpu] *= factor;
+        let total: f64 = st.shard_frac.iter().sum();
+        for f in &mut st.shard_frac {
+            *f /= total;
+        }
+    }
+
+    /// Rebalance mitigation: restore uniform fractions.
+    pub fn rebalance(&mut self) {
+        let n_stages = self.stages.len() as f64;
+        for st in &mut self.stages {
+            st.layer_frac = 1.0 / n_stages;
+            let n = st.shard_frac.len() as f64;
+            for f in &mut st.shard_frac {
+                *f = 1.0 / n;
+            }
+        }
+    }
+
+    /// Sanity: fractions normalized.
+    pub fn check(&self) -> Result<(), String> {
+        let lf: f64 = self.stages.iter().map(|s| s.layer_frac).sum();
+        if (lf - 1.0).abs() > 1e-9 {
+            return Err(format!("layer fractions sum {lf}"));
+        }
+        for st in &self.stages {
+            let sf: f64 = st.shard_frac.iter().sum();
+            if (sf - 1.0).abs() > 1e-9 {
+                return Err(format!("stage {} shard fractions sum {sf}", st.id));
+            }
+            if st.gpus.len() != st.shard_frac.len() {
+                return Err("shard/gpu length mismatch".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Partition the cluster's nodes into replicas of `pp_degree *
+/// nodes_per_stage` nodes each.
+pub fn build_replicas(spec: &ClusterSpec, nodes_per_stage: usize) -> Vec<ParallelPlan> {
+    let per_replica = spec.pp_degree * nodes_per_stage;
+    assert!(per_replica > 0 && spec.n_nodes >= per_replica, "cluster too small for plan");
+    let n_replicas = spec.n_nodes / per_replica;
+    (0..n_replicas)
+        .map(|r| {
+            let nodes: Vec<NodeId> =
+                (0..per_replica).map(|i| NodeId((r * per_replica + i) as u32)).collect();
+            ParallelPlan::build(spec, r, &nodes)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_shapes() {
+        let spec = ClusterSpec::default(); // 4 nodes, pp=2
+        let plans = build_replicas(&spec, 2);
+        assert_eq!(plans.len(), 1);
+        let p = &plans[0];
+        assert_eq!(p.n_stages(), 2);
+        assert_eq!(p.stages[0].nodes, vec![NodeId(0), NodeId(1)]);
+        assert_eq!(p.stages[1].nodes, vec![NodeId(2), NodeId(3)]);
+        assert_eq!(p.stages[0].gpus.len(), 8);
+        p.check().unwrap();
+    }
+
+    #[test]
+    fn two_replicas_when_single_node_stages() {
+        let spec = ClusterSpec::default();
+        let plans = build_replicas(&spec, 1);
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[1].all_nodes(), vec![NodeId(2), NodeId(3)]);
+        for p in &plans {
+            p.check().unwrap();
+        }
+    }
+
+    #[test]
+    fn skew_and_rebalance() {
+        let spec = ClusterSpec::default();
+        let mut p = build_replicas(&spec, 2).remove(0);
+        p.skew_stages(0, 3.0);
+        assert!(p.stages[0].layer_frac > 0.7);
+        p.check().unwrap();
+        p.skew_shards(1, 0, 4.0);
+        assert!(p.stages[1].shard_frac[0] > 0.3);
+        p.check().unwrap();
+        p.rebalance();
+        assert!((p.stages[0].layer_frac - 0.5).abs() < 1e-12);
+        assert!((p.stages[1].shard_frac[0] - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_small_cluster_panics() {
+        let mut spec = ClusterSpec::default();
+        spec.n_nodes = 1;
+        spec.pp_degree = 1;
+        build_replicas(&spec, 2);
+    }
+}

@@ -1,0 +1,161 @@
+//! Model profiles: dimensions + analytic cost model (FLOPs, bytes) used by
+//! the simulated execution path. The `toy`/`small`/`base` presets mirror
+//! `python/compile/config.py` (the AOT artifacts); the larger profiles are
+//! sim-only and follow the open-weight families of paper Table 1.
+
+/// Dimensions of a decoder-only transformer + serving block shapes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    pub layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    /// AOT prefill block length (sequences pad/truncate to this).
+    pub prefill_len: usize,
+    /// AOT batch size (the compiled executable's fixed batch).
+    pub batch: usize,
+}
+
+pub const BYTES_F32: u64 = 4;
+
+impl ModelProfile {
+    /// Approximate parameter count.
+    pub fn params(&self) -> f64 {
+        let d = self.d_model as f64;
+        let attn = 4.0 * d * d;
+        let mlp = 2.0 * d * self.ffn as f64;
+        self.vocab as f64 * d
+            + self.max_seq as f64 * d
+            + self.layers as f64 * (attn + mlp)
+    }
+
+    /// FLOPs to prefill `tokens` total tokens (2*params per token, plus the
+    /// quadratic attention term).
+    pub fn flops_prefill(&self, tokens: usize, mean_len: usize) -> f64 {
+        let linear = 2.0 * self.params() * tokens as f64;
+        let attn = 2.0
+            * self.layers as f64
+            * (self.n_heads * self.head_dim) as f64
+            * tokens as f64
+            * mean_len as f64;
+        linear + attn
+    }
+
+    /// FLOPs for one decode step over `batch` sequences at ~`ctx` context.
+    pub fn flops_decode(&self, batch: usize, ctx: usize) -> f64 {
+        let linear = 2.0 * self.params() * batch as f64;
+        let attn = 2.0
+            * self.layers as f64
+            * (self.n_heads * self.head_dim) as f64
+            * batch as f64
+            * ctx as f64;
+        linear + attn
+    }
+
+    /// H2D bytes to feed `tokens` of embeddings/ids for an iteration.
+    pub fn embed_bytes(&self, tokens: usize) -> u64 {
+        (tokens * self.d_model) as u64 * BYTES_F32
+    }
+
+    /// D2H bytes for logits of `batch` sequences.
+    pub fn logits_bytes(&self, batch: usize) -> u64 {
+        (batch * self.vocab) as u64 * BYTES_F32
+    }
+
+    /// KV-cache bytes per token (all layers, K+V).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (2 * self.layers * self.n_heads * self.head_dim) as u64 * BYTES_F32
+    }
+
+    /// Activation bytes for `tokens` (TP allreduce / PP handoff payloads).
+    pub fn activation_bytes(&self, tokens: usize) -> u64 {
+        (tokens * self.d_model) as u64 * BYTES_F32
+    }
+
+    /// Per-sequence KV bytes at context length `ctx`.
+    pub fn kv_bytes(&self, ctx: usize) -> u64 {
+        self.kv_bytes_per_token() * ctx as u64
+    }
+}
+
+/// Presets matching the AOT artifacts (`python/compile/config.py`).
+pub fn preset(name: &str) -> Option<ModelProfile> {
+    Some(match name {
+        "toy" => ModelProfile {
+            name: "toy", layers: 2, d_model: 128, n_heads: 4, head_dim: 32,
+            ffn: 512, vocab: 512, max_seq: 64, prefill_len: 32, batch: 2,
+        },
+        "small" => ModelProfile {
+            name: "small", layers: 4, d_model: 256, n_heads: 8, head_dim: 32,
+            ffn: 1024, vocab: 2048, max_seq: 128, prefill_len: 64, batch: 4,
+        },
+        "base" => ModelProfile {
+            name: "base", layers: 8, d_model: 512, n_heads: 8, head_dim: 64,
+            ffn: 2048, vocab: 4096, max_seq: 256, prefill_len: 128, batch: 8,
+        },
+        // Sim-only profiles in the spirit of Table 1 (LLaMA-style dims).
+        "7b" => ModelProfile {
+            name: "7b", layers: 32, d_model: 4096, n_heads: 32, head_dim: 128,
+            ffn: 11008, vocab: 32000, max_seq: 2048, prefill_len: 512, batch: 16,
+        },
+        "13b" => ModelProfile {
+            name: "13b", layers: 40, d_model: 5120, n_heads: 40, head_dim: 128,
+            ffn: 13824, vocab: 32000, max_seq: 2048, prefill_len: 512, batch: 16,
+        },
+        "70b" => ModelProfile {
+            name: "70b", layers: 80, d_model: 8192, n_heads: 64, head_dim: 128,
+            ffn: 28672, vocab: 32000, max_seq: 2048, prefill_len: 512, batch: 16,
+        },
+        _ => return None,
+    })
+}
+
+pub const ALL_PRESETS: [&str; 6] = ["toy", "small", "base", "7b", "13b", "70b"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for name in ALL_PRESETS {
+            let p = preset(name).unwrap();
+            assert_eq!(p.name, name);
+            assert_eq!(p.d_model, p.n_heads * p.head_dim, "{name}");
+        }
+        assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn param_counts_in_expected_range() {
+        let small = preset("small").unwrap();
+        let n = small.params();
+        assert!((1e6..1e7).contains(&n), "small params {n}");
+        let b7 = preset("7b").unwrap().params();
+        assert!((5e9..9e9).contains(&b7), "7b params {b7}");
+    }
+
+    #[test]
+    fn cost_model_monotone() {
+        let p = preset("small").unwrap();
+        assert!(p.flops_prefill(256, 64) > p.flops_prefill(128, 64));
+        assert!(p.flops_decode(8, 128) > p.flops_decode(4, 128));
+        assert!(p.flops_decode(4, 256) > p.flops_decode(4, 64));
+        assert!(p.kv_bytes(128) == 128 * p.kv_bytes_per_token());
+    }
+
+    #[test]
+    fn small_matches_python_config() {
+        // Pin the cross-language contract (python/compile/config.py "small").
+        let p = preset("small").unwrap();
+        assert_eq!(
+            (p.layers, p.d_model, p.n_heads, p.head_dim, p.ffn, p.vocab,
+             p.max_seq, p.prefill_len, p.batch),
+            (4, 256, 8, 32, 1024, 2048, 128, 64, 4)
+        );
+    }
+}

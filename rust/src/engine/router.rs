@@ -1,0 +1,184 @@
+//! Request router: session-affinity flow hashing across replicas, with load
+//! accounting and the rebalance hooks the mitigation controller uses
+//! (NS2/NS3 directives: "balance load balancer hashing", "rebalance RPC
+//! streams").
+
+use std::collections::HashMap;
+
+use crate::ids::FlowId;
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Pure hash(flow) -> replica: session affinity, skew-prone.
+    FlowHash,
+    /// Least-loaded replica (by outstanding requests), ignores affinity.
+    LeastLoaded,
+    /// Flow hash, but flows the mitigation controller remapped go to their
+    /// override replica.
+    HashWithOverrides,
+}
+
+#[derive(Debug)]
+pub struct Router {
+    n_replicas: usize,
+    policy: RoutePolicy,
+    overrides: HashMap<FlowId, usize>,
+    outstanding: Vec<i64>,
+    pub routed: u64,
+}
+
+impl Router {
+    pub fn new(n_replicas: usize, policy: RoutePolicy) -> Self {
+        assert!(n_replicas > 0);
+        Router {
+            n_replicas,
+            policy,
+            overrides: HashMap::new(),
+            outstanding: vec![0; n_replicas],
+            routed: 0,
+        }
+    }
+
+    fn hash_flow(&self, flow: FlowId) -> usize {
+        // splitmix-style avalanche so consecutive flow ids spread.
+        let mut x = flow.0 as u64 + 0x9E3779B97F4A7C15;
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+        (x ^ (x >> 31)) as usize % self.n_replicas
+    }
+
+    /// Route a request's flow to a replica index.
+    pub fn route(&mut self, flow: FlowId) -> usize {
+        self.routed += 1;
+        let r = match self.policy {
+            RoutePolicy::FlowHash => self.hash_flow(flow),
+            RoutePolicy::LeastLoaded => {
+                let mut best = 0;
+                for i in 1..self.n_replicas {
+                    if self.outstanding[i] < self.outstanding[best] {
+                        best = i;
+                    }
+                }
+                best
+            }
+            RoutePolicy::HashWithOverrides => self
+                .overrides
+                .get(&flow)
+                .copied()
+                .unwrap_or_else(|| self.hash_flow(flow)),
+        };
+        self.outstanding[r] += 1;
+        r
+    }
+
+    /// A request finished on replica `r` (load accounting).
+    pub fn complete(&mut self, r: usize) {
+        self.outstanding[r] -= 1;
+        debug_assert!(self.outstanding[r] >= 0);
+    }
+
+    /// Mitigation hook: steer a flow to a specific replica.
+    pub fn set_override(&mut self, flow: FlowId, replica: usize) {
+        assert!(replica < self.n_replicas);
+        self.overrides.insert(flow, replica);
+    }
+
+    pub fn clear_overrides(&mut self) {
+        self.overrides.clear();
+    }
+
+    pub fn set_policy(&mut self, p: RoutePolicy) {
+        self.policy = p;
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    pub fn outstanding(&self) -> &[i64] {
+        &self.outstanding
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.n_replicas
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{check, PropConfig};
+
+    #[test]
+    fn same_flow_same_replica() {
+        let mut r = Router::new(4, RoutePolicy::FlowHash);
+        let a = r.route(FlowId(42));
+        for _ in 0..10 {
+            assert_eq!(r.route(FlowId(42)), a);
+        }
+    }
+
+    #[test]
+    fn hash_spreads_flows() {
+        let mut r = Router::new(4, RoutePolicy::FlowHash);
+        let mut counts = [0u32; 4];
+        for f in 0..4000u32 {
+            counts[r.route(FlowId(f))] += 1;
+        }
+        for &c in &counts {
+            assert!((700..1300).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn least_loaded_balances_exactly() {
+        let mut r = Router::new(3, RoutePolicy::LeastLoaded);
+        for f in 0..9u32 {
+            r.route(FlowId(f));
+        }
+        assert_eq!(r.outstanding(), &[3, 3, 3]);
+    }
+
+    #[test]
+    fn overrides_steer() {
+        let mut r = Router::new(4, RoutePolicy::HashWithOverrides);
+        let natural = r.route(FlowId(7));
+        r.complete(natural);
+        let target = (natural + 1) % 4;
+        r.set_override(FlowId(7), target);
+        assert_eq!(r.route(FlowId(7)), target);
+    }
+
+    #[test]
+    fn prop_affinity_and_load_accounting() {
+        check("router-invariants", PropConfig::default().cases(48), |g| {
+            let n = g.usize_in(1, 8);
+            let mut r = Router::new(n, RoutePolicy::FlowHash);
+            let mut first: std::collections::HashMap<u32, usize> = Default::default();
+            let mut live: Vec<usize> = Vec::new();
+            for _ in 0..300 {
+                if g.rng.chance(0.7) || live.is_empty() {
+                    let f = g.rng.below(64) as u32;
+                    let got = r.route(FlowId(f));
+                    prop_assert!(got < n, "replica {got} out of range {n}");
+                    let prev = *first.entry(f).or_insert(got);
+                    prop_assert!(prev == got, "affinity broken for flow {f}");
+                    live.push(got);
+                } else {
+                    let idx = g.rng.index(live.len());
+                    r.complete(live.swap_remove(idx));
+                }
+                let total: i64 = r.outstanding().iter().sum();
+                prop_assert!(
+                    total == live.len() as i64,
+                    "outstanding {total} != live {}",
+                    live.len()
+                );
+                prop_assert!(r.outstanding().iter().all(|&x| x >= 0), "negative load");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,67 @@
+//! Shared identifier newtypes. Kept crate-root so cluster, telemetry, engine
+//! and dpu modules can all speak the same vocabulary without cycles.
+
+macro_rules! id_type {
+    ($(#[$doc:meta])* $name:ident) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+        pub struct $name(pub u32);
+
+        impl $name {
+            pub fn idx(self) -> usize {
+                self.0 as usize
+            }
+        }
+
+        impl std::fmt::Display for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "{}{}", stringify!($name), self.0)
+            }
+        }
+    };
+}
+
+id_type!(
+    /// A host node (CPU + GPUs + NIC + DPU).
+    NodeId
+);
+id_type!(
+    /// A GPU within the cluster (globally indexed).
+    GpuId
+);
+id_type!(
+    /// A network flow (one client session / RPC stream).
+    FlowId
+);
+id_type!(
+    /// A fabric or PCIe link.
+    LinkId
+);
+id_type!(
+    /// An RDMA queue pair.
+    QpId
+);
+id_type!(
+    /// One collective operation instance (allreduce / handoff / kv transfer).
+    CollId
+);
+id_type!(
+    /// An inference request.
+    ReqId
+);
+id_type!(
+    /// A pipeline-parallel stage.
+    StageId
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_ordered_and_displayable() {
+        assert!(NodeId(1) < NodeId(2));
+        assert_eq!(GpuId(3).idx(), 3);
+        assert_eq!(format!("{}", ReqId(7)), "ReqId7");
+    }
+}

@@ -1,0 +1,35 @@
+//! # dpulens
+//!
+//! DPU-vantage observability for LLM inference clusters: a reproduction of
+//! Khan & Moye, *"A Study of Skews, Imbalances, and Pathological Conditions
+//! in LLM Inference Deployment on GPU Clusters detectable from DPU"* (2025).
+//!
+//! The crate is a three-layer system (see DESIGN.md):
+//!
+//! * **L3 (this crate)** — simulated GPU cluster + vLLM-like serving engine +
+//!   the paper's contribution: per-node DPU telemetry agents, 28 runbook
+//!   detectors (Tables 3a-c), root-cause attribution, and a closed
+//!   mitigation loop.
+//! * **L2/L1 (build-time Python)** — a JAX transformer with Pallas attention
+//!   kernels plus a Pallas telemetry-scoring kernel, AOT-lowered to HLO text
+//!   and executed from Rust via PJRT (`runtime/`). Python never serves.
+
+pub mod ids;
+pub mod util;
+
+pub mod sim;
+pub mod telemetry;
+
+pub mod cluster;
+
+pub mod workload;
+pub mod engine;
+
+pub mod dpu;
+pub mod mitigation;
+pub mod pathology;
+
+pub mod metrics;
+pub mod runtime;
+
+pub mod coordinator;

@@ -1,0 +1,196 @@
+//! dpulens CLI — the leader entrypoint.
+//!
+//! Subcommands (hand-rolled parsing; clap is not vendored offline):
+//!   serve     [--real] [--duration-ms N] [--rate R] [--seed S]
+//!   inject    <COND> [--mitigate] [--duration-ms N]
+//!   sweep     [--mitigate]           run all 28 condition experiments
+//!   runbook                          print the encoded Tables 3(a)-(c)
+//!   signals                          print the Table 2(b) signal inventory
+//!   attribution <COND>               inject + show root-cause attribution
+
+use dpulens::coordinator::{condition_experiment, experiment, Scenario, ScenarioCfg};
+use dpulens::dpu::detectors::{Condition, ALL_CONDITIONS};
+use dpulens::dpu::runbook;
+use dpulens::metrics::ServeMetrics;
+use dpulens::sim::{SimDur, SimTime, MS};
+use dpulens::telemetry::ALL_SW_SIGNALS;
+use dpulens::util::table::Table;
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt_val(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn base_cfg(args: &[String]) -> ScenarioCfg {
+    let mut cfg = experiment::standard_cfg();
+    if let Some(ms) = opt_val(args, "--duration-ms").and_then(|v| v.parse::<u64>().ok()) {
+        cfg.duration = SimDur::from_ms(ms);
+    }
+    if let Some(rate) = opt_val(args, "--rate").and_then(|v| v.parse::<f64>().ok()) {
+        cfg.workload.arrival = dpulens::sim::dist::Arrival::Poisson { rate };
+    }
+    if let Some(seed) = opt_val(args, "--seed").and_then(|v| v.parse::<u64>().ok()) {
+        cfg.seed = seed;
+    }
+    if let Some(p) = opt_val(args, "--profile") {
+        cfg.engine.profile = dpulens::engine::preset(&p).expect("unknown profile");
+        cfg.engine.policy.max_batch = cfg.engine.profile.batch.min(8);
+    }
+    cfg.mitigate = flag(args, "--mitigate");
+    cfg
+}
+
+fn cmd_serve(args: &[String]) {
+    let cfg = base_cfg(args);
+    let real = flag(args, "--real");
+    let res = if real {
+        let client = dpulens::runtime::cpu_client().expect("PJRT client");
+        let arts = dpulens::runtime::ArtifactSet::open_default()
+            .expect("artifacts missing; run `make artifacts`");
+        let n_rep = {
+            let plans =
+                dpulens::engine::build_replicas(&cfg.cluster, cfg.engine.nodes_per_stage);
+            plans.len()
+        };
+        let backends: Vec<Box<dyn dpulens::engine::ComputeBackend>> = (0..n_rep)
+            .map(|_| {
+                Box::new(
+                    dpulens::runtime::TransformerSession::load(&client, &arts)
+                        .expect("artifact load"),
+                ) as Box<dyn dpulens::engine::ComputeBackend>
+            })
+            .collect();
+        Scenario::with_backends(cfg, backends).run()
+    } else {
+        Scenario::new(cfg).run()
+    };
+    let mut t = Table::new("serve").header(&ServeMetrics::table_header());
+    t.row(res.metrics.row_cells(if real { "real-compute" } else { "simulated" }));
+    print!("{}", t.render());
+    println!(
+        "telemetry: {} events published, {} DPU-ingested, {} invisible (§4.3), {} windows",
+        res.telemetry_published, res.dpu_ingested, res.dpu_invisible_dropped, res.windows
+    );
+    println!("detections: {} | sw alarms: {}", res.detections.len(), res.sw_detections);
+}
+
+fn cmd_inject(args: &[String]) {
+    let Some(id) = args.first() else {
+        eprintln!("usage: dpulens inject <COND> (e.g. EW1, PC5, NS4)");
+        std::process::exit(2);
+    };
+    let Some(cond) = Condition::from_id(&id.to_uppercase()) else {
+        eprintln!("unknown condition {id}; one of {:?}", ALL_CONDITIONS.map(|c| c.id()));
+        std::process::exit(2);
+    };
+    let cfg = base_cfg(args);
+    let rep = condition_experiment(cond, &cfg, flag(args, "--mitigate"));
+    let entry = runbook::entry(cond);
+    println!("== {} — {} ==", cond.id(), entry.signal);
+    println!("injected: {}", rep.injection_desc);
+    println!(
+        "detected: {} (latency {:?}), fired: {:?}",
+        rep.detected,
+        rep.detection_latency.map(|d| format!("{d}")),
+        rep.fired.iter().map(|(c, n)| format!("{}x{}", c.id(), n)).collect::<Vec<_>>()
+    );
+    println!(
+        "throughput impact {:.2}x, p99 TTFT inflation {:.1}x",
+        rep.throughput_impact(),
+        rep.p99_inflation()
+    );
+    if let Some(r) = rep.recovery() {
+        println!("mitigation recovered {:.0}% of lost throughput", r * 100.0);
+    }
+    println!("paper directive: {}", entry.directive.paper_text());
+}
+
+fn cmd_sweep(args: &[String]) {
+    let cfg = base_cfg(args);
+    let mitigate = flag(args, "--mitigate");
+    let mut t = Table::new("runbook sweep").header(&experiment::report_header());
+    for c in ALL_CONDITIONS {
+        let rep = condition_experiment(c, &cfg, mitigate);
+        t.row(experiment::report_row(&rep));
+    }
+    print!("{}", t.render());
+}
+
+fn cmd_runbook() {
+    for table in ["3a", "3b", "3c"] {
+        let title = match table {
+            "3a" => "Table 3(a) North-South Runbook",
+            "3b" => "Table 3(b) PCIe Observer Runbook",
+            _ => "Table 3(c) East-West Sensing Runbook",
+        };
+        let mut t =
+            Table::new(title).header(&["id", "signal (red flag)", "root cause", "directive"]);
+        for e in runbook::all_entries().into_iter().filter(|e| e.condition.table() == table) {
+            t.row(vec![
+                e.condition.id().into(),
+                e.signal.into(),
+                e.root_cause.into(),
+                e.directive.paper_text().into(),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+}
+
+fn cmd_signals() {
+    let mut t = Table::new("Table 2(b) — real-time signals")
+        .header(&["signal", "origin", "overhead/sample"]);
+    for sig in ALL_SW_SIGNALS {
+        t.row(vec![
+            sig.name().into(),
+            sig.origin().into(),
+            format!("{}ns", sig.overhead_ns()),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn cmd_attribution(args: &[String]) {
+    let Some(id) = args.first().and_then(|i| Condition::from_id(&i.to_uppercase())) else {
+        eprintln!("usage: dpulens attribution <COND>");
+        std::process::exit(2);
+    };
+    let mut cfg = base_cfg(args);
+    cfg.inject = Some((id, SimTime(cfg.calib_windows * cfg.window.ns() + 200 * MS)));
+    let res = Scenario::new(cfg).run();
+    println!("== attributions for injected {} ==", id.id());
+    for a in &res.attributions {
+        println!(
+            "  {:?} (confidence {:.0}%): {}",
+            a.cause,
+            a.confidence * 100.0,
+            a.evidence
+        );
+    }
+    if res.attributions.is_empty() {
+        println!("  (none — condition not detected)");
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("inject") => cmd_inject(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
+        Some("runbook") => cmd_runbook(),
+        Some("signals") => cmd_signals(),
+        Some("attribution") => cmd_attribution(&args[1..]),
+        _ => {
+            eprintln!(
+                "dpulens — DPU-vantage observability for LLM inference clusters\n\
+                 usage: dpulens <serve|inject|sweep|runbook|signals|attribution> [flags]\n\
+                 flags: --real --mitigate --duration-ms N --rate R --seed S"
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,291 @@
+//! Serving metrics (TTFT/TPOT/throughput), detection-quality metrics
+//! (confusion matrix, detection latency), and the paper-style report
+//! renderers used by every bench.
+
+use std::collections::BTreeMap;
+
+use crate::dpu::detectors::{Condition, Detection, ALL_CONDITIONS};
+use crate::sim::{SimDur, SimTime};
+use crate::util::stats::Summary;
+use crate::util::table::{fmt_ns, Table};
+use crate::workload::request::InferenceRequest;
+
+/// Aggregated serving-quality metrics for one run.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    pub ttft_ns: Summary,
+    pub tpot_ns: Summary,
+    pub e2e_ns: Summary,
+    pub completed: u64,
+    pub rejected: u64,
+    pub tokens_out: u64,
+    pub span: SimDur,
+}
+
+impl ServeMetrics {
+    /// Collect from finished requests; `span` is the measured sim interval.
+    pub fn collect<'a>(reqs: impl Iterator<Item = &'a InferenceRequest>, span: SimDur) -> Self {
+        let mut m = ServeMetrics { span, ..Default::default() };
+        for r in reqs {
+            match r.state {
+                crate::workload::request::ReqState::Done => {
+                    m.completed += 1;
+                    m.tokens_out += r.tokens_generated() as u64;
+                    if let Some(ttft) = r.ttft() {
+                        m.ttft_ns.push(ttft.ns() as f64);
+                    }
+                    if let Some(tpot) = r.tpot_ns() {
+                        m.tpot_ns.push(tpot);
+                    }
+                    if let Some(done) = r.done_at {
+                        m.e2e_ns.push((done - r.arrival).ns() as f64);
+                    }
+                }
+                crate::workload::request::ReqState::Rejected => m.rejected += 1,
+                _ => {}
+            }
+        }
+        m
+    }
+
+    pub fn req_per_s(&self) -> f64 {
+        self.completed as f64 / self.span.as_secs_f64().max(1e-9)
+    }
+
+    pub fn tok_per_s(&self) -> f64 {
+        self.tokens_out as f64 / self.span.as_secs_f64().max(1e-9)
+    }
+
+    /// One-line summary for logs.
+    pub fn brief(&self) -> String {
+        format!(
+            "{} done ({} rejected), {:.0} tok/s, TTFT p50 {} p99 {}, TPOT p50 {}",
+            self.completed,
+            self.rejected,
+            self.tok_per_s(),
+            fmt_ns(self.ttft_ns.p50()),
+            fmt_ns(self.ttft_ns.p99()),
+            fmt_ns(self.tpot_ns.p50()),
+        )
+    }
+
+    /// Table row cells (shared layout across benches).
+    pub fn row_cells(&self, label: &str) -> Vec<String> {
+        vec![
+            label.to_string(),
+            format!("{}", self.completed),
+            format!("{:.1}", self.req_per_s()),
+            format!("{:.0}", self.tok_per_s()),
+            fmt_ns(self.ttft_ns.p50()),
+            fmt_ns(self.ttft_ns.p95()),
+            fmt_ns(self.ttft_ns.p99()),
+            fmt_ns(self.tpot_ns.p50()),
+            fmt_ns(self.tpot_ns.p99()),
+        ]
+    }
+
+    pub fn table_header() -> [&'static str; 9] {
+        ["scenario", "done", "req/s", "tok/s", "ttft p50", "ttft p95", "ttft p99", "tpot p50", "tpot p99"]
+    }
+}
+
+/// Injection × detection confusion accounting for E5.
+#[derive(Debug, Default)]
+pub struct ConfusionMatrix {
+    /// counts[injected][detected]
+    counts: BTreeMap<Condition, BTreeMap<Condition, u64>>,
+    /// Windows where the injected condition produced no detection at all.
+    misses: BTreeMap<Condition, u64>,
+    /// Detections fired during healthy (no-injection) runs.
+    pub false_alarms: BTreeMap<Condition, u64>,
+    pub healthy_windows: u64,
+}
+
+impl ConfusionMatrix {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record the detections observed while `injected` was active.
+    pub fn record(&mut self, injected: Condition, detections: &[Detection], detected_any: bool) {
+        let row = self.counts.entry(injected).or_default();
+        for d in detections {
+            *row.entry(d.condition).or_insert(0) += 1;
+        }
+        if !detected_any {
+            *self.misses.entry(injected).or_insert(0) += 1;
+        }
+    }
+
+    pub fn record_healthy(&mut self, detections: &[Detection], windows: u64) {
+        self.healthy_windows += windows;
+        for d in detections {
+            *self.false_alarms.entry(d.condition).or_insert(0) += 1;
+        }
+    }
+
+    pub fn count(&self, injected: Condition, detected: Condition) -> u64 {
+        self.counts.get(&injected).and_then(|r| r.get(&detected)).copied().unwrap_or(0)
+    }
+
+    /// True-positive: the injected condition itself fired.
+    pub fn hit(&self, injected: Condition) -> bool {
+        self.count(injected, injected) > 0
+    }
+
+    /// Precision of the diagonal for an injected run: fraction of fired
+    /// detections that name the injected condition (or a sibling sharing
+    /// the same directive — the runbook treats those as equivalent actions).
+    pub fn diagonal_precision(&self, injected: Condition) -> f64 {
+        let Some(row) = self.counts.get(&injected) else { return 0.0 };
+        let total: u64 = row.values().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let inj_dir = crate::dpu::runbook::entry(injected).directive;
+        let good: u64 = row
+            .iter()
+            .filter(|(c, _)| **c == injected || crate::dpu::runbook::entry(**c).directive == inj_dir)
+            .map(|(_, n)| *n)
+            .sum();
+        good as f64 / total as f64
+    }
+
+    /// Macro recall over all conditions recorded.
+    pub fn macro_recall(&self) -> f64 {
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for c in self.counts.keys() {
+            total += 1;
+            if self.hit(*c) {
+                hits += 1;
+            }
+        }
+        if total == 0 { 0.0 } else { hits as f64 / total as f64 }
+    }
+
+    /// Render the full 28x28 matrix (sparse rows elided to non-zero cells).
+    pub fn render(&self) -> String {
+        let mut t = Table::new("Injection x Detection (rows=injected)").header(&[
+            "injected", "self-hits", "other detections", "diag precision",
+        ]);
+        for c in ALL_CONDITIONS {
+            if let Some(row) = self.counts.get(&c) {
+                let others: Vec<String> = row
+                    .iter()
+                    .filter(|(k, _)| **k != c)
+                    .map(|(k, v)| format!("{}:{}", k.id(), v))
+                    .collect();
+                t.row(vec![
+                    c.id().to_string(),
+                    format!("{}", self.count(c, c)),
+                    if others.is_empty() { "-".into() } else { others.join(" ") },
+                    format!("{:.2}", self.diagonal_precision(c)),
+                ]);
+            }
+        }
+        t.render()
+    }
+}
+
+/// Detection latency: injection time -> first correct detection.
+pub fn detection_latency(
+    detections: &[Detection],
+    condition: Condition,
+    injected_at: SimTime,
+) -> Option<SimDur> {
+    detections
+        .iter()
+        .filter(|d| d.condition == condition && d.at >= injected_at)
+        .map(|d| d.at - injected_at)
+        .min()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::{FlowId, NodeId, ReqId};
+    use crate::workload::request::ReqState;
+
+    fn done_req(id: u32, arrival: u64, first: u64, done: u64, toks: usize) -> InferenceRequest {
+        let mut r =
+            InferenceRequest::new(ReqId(id), FlowId(0), SimTime(arrival), vec![1, 2], toks);
+        r.state = ReqState::Done;
+        r.first_token_at = Some(SimTime(first));
+        r.done_at = Some(SimTime(done));
+        r.generated = vec![5; toks];
+        r
+    }
+
+    #[test]
+    fn serve_metrics_aggregate() {
+        let reqs = vec![
+            done_req(1, 0, 1000, 5000, 5),
+            done_req(2, 100, 2000, 6000, 5),
+        ];
+        let m = ServeMetrics::collect(reqs.iter(), SimDur(10_000));
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.tokens_out, 10);
+        assert!(m.tok_per_s() > 0.0);
+        assert_eq!(m.ttft_ns.count(), 2);
+        assert!(!m.brief().is_empty());
+        assert_eq!(m.row_cells("x").len(), ServeMetrics::table_header().len());
+    }
+
+    #[test]
+    fn confusion_hits_and_precision() {
+        let mut cm = ConfusionMatrix::new();
+        let d = |c: Condition| Detection {
+            condition: c,
+            node: NodeId(0),
+            at: SimTime(5),
+            severity: 4.0,
+            evidence: String::new(),
+        };
+        cm.record(
+            Condition::Ew6Retransmissions,
+            &[d(Condition::Ew6Retransmissions), d(Condition::Ew6Retransmissions), d(Condition::Ew4Congestion)],
+            true,
+        );
+        assert!(cm.hit(Condition::Ew6Retransmissions));
+        let p = cm.diagonal_precision(Condition::Ew6Retransmissions);
+        assert!((p - 2.0 / 3.0).abs() < 1e-9);
+        assert_eq!(cm.macro_recall(), 1.0);
+        assert!(cm.render().contains("EW6"));
+    }
+
+    #[test]
+    fn sibling_directives_count_as_precision() {
+        // NS8 and PC10 share EnableInflightRemap: detecting PC10 under NS8
+        // injection still drives the right action.
+        let mut cm = ConfusionMatrix::new();
+        let d = |c: Condition| Detection {
+            condition: c,
+            node: NodeId(0),
+            at: SimTime(5),
+            severity: 4.0,
+            evidence: String::new(),
+        };
+        cm.record(Condition::Ns8EarlyCompletion, &[d(Condition::Pc10DecodeEarlyStop)], true);
+        assert_eq!(cm.diagonal_precision(Condition::Ns8EarlyCompletion), 1.0);
+    }
+
+    #[test]
+    fn detection_latency_first_match() {
+        let d = |c: Condition, at: u64| Detection {
+            condition: c,
+            node: NodeId(0),
+            at: SimTime(at),
+            severity: 4.0,
+            evidence: String::new(),
+        };
+        let ds = vec![
+            d(Condition::Ew6Retransmissions, 500), // before injection
+            d(Condition::Ew6Retransmissions, 2000),
+            d(Condition::Ew6Retransmissions, 3000),
+        ];
+        let lat = detection_latency(&ds, Condition::Ew6Retransmissions, SimTime(1000)).unwrap();
+        assert_eq!(lat.ns(), 1000);
+        assert!(detection_latency(&ds, Condition::Ew4Congestion, SimTime(0)).is_none());
+    }
+}

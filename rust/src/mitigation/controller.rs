@@ -1,0 +1,306 @@
+//! Mitigation controller: applies runbook directives to the live system —
+//! the actuation half of the paper's closed feedback loop (§5).
+//!
+//! Each directive maps to concrete knob changes on the cluster, fabric,
+//! engine policy, or parallel plan. (In a real deployment these would be
+//! ncclreconfig / driver / scheduler calls; here they operate the same
+//! levers the injectors pathologized.)
+
+use crate::cluster::Cluster;
+use crate::dpu::detectors::Detection;
+use crate::dpu::runbook;
+use crate::engine::Engine;
+use crate::ids::NodeId;
+use crate::mitigation::directive::Directive;
+use crate::sim::SimTime;
+
+/// One applied action, for the audit log.
+#[derive(Debug, Clone)]
+pub struct AppliedAction {
+    pub at: SimTime,
+    pub directive: Directive,
+    pub node: Option<NodeId>,
+    pub detail: String,
+}
+
+/// The controller: consumes detections, applies directives, keeps a log.
+#[derive(Debug, Default)]
+pub struct Controller {
+    pub log: Vec<AppliedAction>,
+    /// Directives applied at most once per (directive, node) pair.
+    applied: std::collections::HashSet<(Directive, Option<NodeId>)>,
+    pub enabled: bool,
+}
+
+impl Controller {
+    pub fn new(enabled: bool) -> Self {
+        Controller { log: Vec::new(), applied: Default::default(), enabled }
+    }
+
+    /// React to a window's detections. Returns the number of new actions.
+    pub fn react(
+        &mut self,
+        now: SimTime,
+        detections: &[Detection],
+        cluster: &mut Cluster,
+        engine: &mut Engine,
+    ) -> usize {
+        if !self.enabled {
+            return 0;
+        }
+        let mut applied = 0;
+        for det in detections {
+            let directive = runbook::entry(det.condition).directive;
+            let node_scope = match directive {
+                // Node-scoped host fixes target the detected node.
+                Directive::PinMemoryPools
+                | Directive::FixReturnPath
+                | Directive::FuseKernelsIsolateCpu
+                | Directive::MovePcieTenants
+                | Directive::PreferNvlink
+                | Directive::PersistentRegistration
+                | Directive::ZeroCopyEgress
+                | Directive::PinIrqsIsolateThreads
+                | Directive::FixIngressPath
+                | Directive::FixEgressPath
+                | Directive::QosPartitionNic
+                | Directive::SmoothAdmission => Some(det.node),
+                _ => None,
+            };
+            if !self.applied.insert((directive, node_scope)) {
+                continue; // already applied
+            }
+            let detail = self.apply(directive, node_scope, cluster, engine);
+            self.log.push(AppliedAction { at: now, directive, node: node_scope, detail });
+            applied += 1;
+        }
+        applied
+    }
+
+    fn apply(
+        &self,
+        directive: Directive,
+        node: Option<NodeId>,
+        cluster: &mut Cluster,
+        engine: &mut Engine,
+    ) -> String {
+        use Directive::*;
+        fn node_knobs<'a>(
+            c: &'a mut Cluster,
+            n: Option<NodeId>,
+        ) -> &'a mut crate::cluster::NodeKnobs {
+            let idx = n.map(|n| n.idx()).unwrap_or(0);
+            &mut c.nodes[idx].knobs
+        }
+        match directive {
+            SmoothAdmission => {
+                for r in &mut engine.replicas {
+                    r.batcher.policy_mut().queue_cap = r.batcher.policy().queue_cap.max(2048);
+                }
+                "admission smoothing: deepened queues, paced intake".into()
+            }
+            RebalanceFlows => {
+                engine.router.set_policy(crate::engine::RoutePolicy::LeastLoaded);
+                "router switched to least-loaded (affinity hash bypassed)".into()
+            }
+            FixIngressPath => {
+                let k = node_knobs(cluster, node);
+                k.nic_rx_loss = 0.0;
+                "ingress offloads/MTU fixed: RX loss cleared".into()
+            }
+            ZeroCopyEgress => {
+                let k = node_knobs(cluster, node);
+                k.cpu_contention = 1.0;
+                k.nic_tx_buffer_factor = 1.0;
+                "zero-copy egress: CPU copy removed, TX buffers restored".into()
+            }
+            PinIrqsIsolateThreads => {
+                let k = node_knobs(cluster, node);
+                k.egress_jitter = 0.0;
+                "IRQs pinned, runtime threads isolated: egress jitter cleared".into()
+            }
+            FixEgressPath => {
+                let k = node_knobs(cluster, node);
+                k.nic_tx_loss = 0.0;
+                "egress offloads/ECN fixed: TX loss cleared".into()
+            }
+            EnableInflightRemap => {
+                for r in &mut engine.replicas {
+                    r.batcher.policy_mut().inflight_remap = true;
+                    r.batcher.policy_mut().continuous = true;
+                }
+                "in-flight remapping enabled: freed decode slots refill".into()
+            }
+            QosPartitionNic => {
+                let k = node_knobs(cluster, node);
+                k.nic_background_frac = 0.0;
+                "NIC QoS partition: background tenant isolated".into()
+            }
+            PinMemoryPools => {
+                let k = node_knobs(cluster, node);
+                k.unpinned_buffers = false;
+                k.pinned_pool_frag = false;
+                k.h2d_bw_factor = 1.0;
+                "pinned pools pre-allocated: staging + fragmentation removed".into()
+            }
+            FixReturnPath => {
+                let k = node_knobs(cluster, node);
+                k.d2h_bw_factor = 1.0;
+                k.pcie_extra_lat_ns = 0;
+                "return path fixed: IOMMU/copy overhead removed".into()
+            }
+            FuseKernelsIsolateCpu => {
+                let k = node_knobs(cluster, node);
+                k.kernel_fission = 1;
+                k.doorbell_delay_ns = 0;
+                k.cpu_contention = 1.0;
+                "kernels fused, CPU cores isolated: launch path restored".into()
+            }
+            RebalanceShards => {
+                // Speed-aware shard fractions: give slow GPUs less work.
+                for r in &mut engine.replicas {
+                    for stage in &mut r.plan.stages {
+                        let speeds: Vec<f64> = stage
+                            .gpus
+                            .iter()
+                            .map(|&g| {
+                                let n = cluster.spec.node_of_gpu(g);
+                                let local = g.idx() % cluster.spec.gpus_per_node;
+                                cluster.nodes[n.idx()].knobs.gpu_speed_factor[local].max(0.01)
+                            })
+                            .collect();
+                        let total: f64 = speeds.iter().sum();
+                        for (f, s) in stage.shard_frac.iter_mut().zip(&speeds) {
+                            *f = s / total;
+                        }
+                    }
+                }
+                "shards rebalanced proportional to measured GPU speed".into()
+            }
+            MovePcieTenants => {
+                let k = node_knobs(cluster, node);
+                k.pcie_background_load = 0.0;
+                "competing DMA tenant moved off the PCIe switch".into()
+            }
+            PreferNvlink => {
+                let k = node_knobs(cluster, node);
+                k.p2p_over_pcie = false;
+                "P2P restored to NVLink path".into()
+            }
+            PersistentRegistration => {
+                let k = node_knobs(cluster, node);
+                k.mem_reg_churn = false;
+                "persistent MRs: registration churn removed".into()
+            }
+            RebalanceStages => {
+                for r in &mut engine.replicas {
+                    r.plan.rebalance();
+                }
+                "pipeline stages repartitioned evenly".into()
+            }
+            RebalanceAcrossNodes => {
+                for r in &mut engine.replicas {
+                    r.plan.rebalance();
+                }
+                "activation partitioning realigned across nodes".into()
+            }
+            AdaptiveRouting => {
+                cluster.fabric_knobs.hot_uplink_load = 0.0;
+                cluster.fabric_knobs.hot_node = None;
+                "adaptive routing: ranks spread off hot uplink".into()
+            }
+            FixQueueSharing => {
+                cluster.fabric_knobs.hol_blocking = false;
+                "per-flow queues restored: HOL blocking removed".into()
+            }
+            LosslessFabricConfig => {
+                cluster.fabric_knobs.loss_prob = 0.0;
+                "PFC/ECN verified: fabric loss cleared".into()
+            }
+            TuneCreditWindow => {
+                cluster.fabric_knobs.credit_window = cluster.fabric_knobs.credit_window.max(64);
+                "QP window raised: credit starvation cleared".into()
+            }
+            CompressKvTransfers => {
+                cluster.fabric_knobs.kv_link_budget_factor =
+                    cluster.fabric_knobs.kv_link_budget_factor.max(1.0);
+                "KV compressed/resharded to fit link budget".into()
+            }
+        }
+    }
+
+    pub fn actions_taken(&self) -> usize {
+        self.log.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::dpu::detectors::Condition;
+    use crate::engine::{build_replicas, EngineConfig};
+
+    fn setup() -> (Cluster, Engine) {
+        let cfg = EngineConfig::default();
+        let spec = ClusterSpec::default();
+        let plans = build_replicas(&spec, cfg.nodes_per_stage);
+        (Cluster::new(spec, 1), Engine::new(cfg, plans))
+    }
+
+    fn det(c: Condition, node: u32) -> Detection {
+        Detection {
+            condition: c,
+            node: NodeId(node),
+            at: SimTime(0),
+            severity: 5.0,
+            evidence: String::new(),
+        }
+    }
+
+    #[test]
+    fn reacts_once_per_directive_and_node() {
+        let (mut cluster, mut engine) = setup();
+        cluster.nodes[1].knobs.nic_rx_loss = 0.2;
+        let mut ctl = Controller::new(true);
+        let d = det(Condition::Ns4IngressRetx, 1);
+        assert_eq!(ctl.react(SimTime(0), &[d.clone()], &mut cluster, &mut engine), 1);
+        assert_eq!(cluster.nodes[1].knobs.nic_rx_loss, 0.0);
+        // Re-fire: no duplicate action.
+        assert_eq!(ctl.react(SimTime(1), &[d], &mut cluster, &mut engine), 0);
+        assert_eq!(ctl.actions_taken(), 1);
+    }
+
+    #[test]
+    fn disabled_controller_does_nothing() {
+        let (mut cluster, mut engine) = setup();
+        cluster.fabric_knobs.loss_prob = 0.1;
+        let mut ctl = Controller::new(false);
+        ctl.react(SimTime(0), &[det(Condition::Ew6Retransmissions, 0)], &mut cluster, &mut engine);
+        assert_eq!(cluster.fabric_knobs.loss_prob, 0.1);
+    }
+
+    #[test]
+    fn shard_rebalance_is_speed_aware() {
+        let (mut cluster, mut engine) = setup();
+        cluster.nodes[0].knobs.gpu_speed_factor[0] = 0.25; // GPU0 4x slower
+        let mut ctl = Controller::new(true);
+        ctl.react(SimTime(0), &[det(Condition::Ew1TpStraggler, 0)], &mut cluster, &mut engine);
+        let stage0 = &engine.replicas[0].plan.stages[0];
+        // GPU0's shard must now be the smallest.
+        let f0 = stage0.shard_frac[0];
+        assert!(stage0.shard_frac[1..].iter().all(|&f| f > f0), "{:?}", stage0.shard_frac);
+        engine.replicas[0].plan.check().unwrap();
+    }
+
+    #[test]
+    fn remap_directive_flips_engine_policy() {
+        let (mut cluster, mut engine) = setup();
+        for r in &mut engine.replicas {
+            r.batcher.policy_mut().inflight_remap = false;
+        }
+        let mut ctl = Controller::new(true);
+        ctl.react(SimTime(0), &[det(Condition::Ns8EarlyCompletion, 0)], &mut cluster, &mut engine);
+        assert!(engine.replicas.iter().all(|r| r.batcher.policy().inflight_remap));
+    }
+}

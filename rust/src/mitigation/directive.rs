@@ -1,0 +1,99 @@
+//! Mitigation directives — the actionable form of every "Mitigation
+//! Directives" cell in paper Tables 3(a)-(c). The controller
+//! (`mitigation::controller`) applies them to the cluster/engine knobs.
+
+/// An action the orchestrator can take in response to a detection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Directive {
+    /// NS1: smooth input batching / rate-limit clients / deepen NIC queues.
+    SmoothAdmission,
+    /// NS2/NS3: rebalance load-balancer hashing / RPC streams.
+    RebalanceFlows,
+    /// NS4: enable NIC offloads, fix MTU/link errors (clears ingress loss).
+    FixIngressPath,
+    /// NS5: zero-copy send + bigger TX buffers + offload checksums.
+    ZeroCopyEgress,
+    /// NS6: isolate runtime threads, pin NIC IRQs, widen batching window.
+    PinIrqsIsolateThreads,
+    /// NS7: fix offload config / congestion control (clears egress loss).
+    FixEgressPath,
+    /// NS8/PC10/EW9: in-flight request remapping / load stealing for decode.
+    EnableInflightRemap,
+    /// NS9: QoS partitioning / move background tenants off the NIC.
+    QosPartitionNic,
+    /// PC1/PC7: pin memory, pre-allocate larger pinned pools, coalesce DMAs.
+    PinMemoryPools,
+    /// PC2: large pinned buffers, fewer copies, fix IOMMU/ATS config.
+    FixReturnPath,
+    /// PC3/PC8: batch ops, fuse kernels, isolate CPU cores for the runtime.
+    FuseKernelsIsolateCpu,
+    /// PC4/EW1: rebalance shards across GPUs (speed-aware fractions).
+    RebalanceShards,
+    /// PC5: move competing DMA tenants off the shared PCIe switch.
+    MovePcieTenants,
+    /// PC6: prefer NVLink / place GPUs under the same switch.
+    PreferNvlink,
+    /// PC9: reuse registered buffers / persistent memory regions.
+    PersistentRegistration,
+    /// EW2: repartition microbatches / reassign stages.
+    RebalanceStages,
+    /// EW3: validate shard sizes, rebalance across nodes.
+    RebalanceAcrossNodes,
+    /// EW4: adaptive routing / spread ranks off the hot uplink.
+    AdaptiveRouting,
+    /// EW5: deepen NIC queues, QoS/ECN, verify fair sharing.
+    FixQueueSharing,
+    /// EW6: verify lossless config (PFC/ECN), buffers, optics.
+    LosslessFabricConfig,
+    /// EW7: increase QP window / tune flow-control credits.
+    TuneCreditWindow,
+    /// EW8: compress KV, shard differently, apply caching policies.
+    CompressKvTransfers,
+}
+
+impl Directive {
+    /// The paper's own wording for the directive (report rendering).
+    pub fn paper_text(&self) -> &'static str {
+        use Directive::*;
+        match self {
+            SmoothAdmission => "Smooth input batching, rate-limit clients, increase NIC queue depth",
+            RebalanceFlows => "Balance load balancer hashing, check NIC RSS/flow steering",
+            FixIngressPath => "Enable NIC offloads (TSO/GRO), verify MTU settings, check cabling",
+            ZeroCopyEgress => "Offload checksums, use zero-copy send, increase NIC buffer size",
+            PinIrqsIsolateThreads => "Isolate runtime threads, pin NIC IRQs, increase batching window",
+            FixEgressPath => "Check offload settings, enable congestion control (ECN/PFC)",
+            EnableInflightRemap => "Enable inflight remapping / load stealing for decode",
+            QosPartitionNic => "Upgrade NIC, QoS partitioning, stagger workloads",
+            PinMemoryPools => "Pin memory, bind to correct NUMA socket, pre-allocate pinned pools",
+            FixReturnPath => "Enable large pinned buffers, reduce copies, check IOMMU/ATS config",
+            FuseKernelsIsolateCpu => "Batch ops, fuse kernels, raise launch queues, isolate CPU cores",
+            RebalanceShards => "Rebalance shards, check PCIe feeds per node, adjust affinity",
+            MovePcieTenants => "Verify x16 lanes, move devices off shared switch, stagger I/O",
+            PreferNvlink => "Prefer NVLink/NVSwitch; place GPUs under same switch, tune ACS/ATS",
+            PersistentRegistration => "Reuse registered buffers; RDMA/GPUDirect with persistent MR",
+            RebalanceStages => "Adjust microbatch partitioning, reassign stages, speculative fill",
+            RebalanceAcrossNodes => "Validate shard sizes, rebalance across nodes",
+            AdaptiveRouting => "Check fabric counters, enable adaptive routing, spread ranks",
+            FixQueueSharing => "Increase NIC queue depth, enable QoS/ECN, verify fair sharing",
+            LosslessFabricConfig => "Verify lossless config, tune buffer thresholds, check optics",
+            TuneCreditWindow => "Increase QP window, tune flow control params",
+            CompressKvTransfers => "Compress KV, shard differently, apply caching policies",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_text_nonempty() {
+        for d in [
+            Directive::SmoothAdmission,
+            Directive::EnableInflightRemap,
+            Directive::CompressKvTransfers,
+        ] {
+            assert!(!d.paper_text().is_empty());
+        }
+    }
+}

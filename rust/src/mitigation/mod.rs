@@ -1,0 +1,8 @@
+//! Closed-loop mitigation: directives (the actionable runbook cells) and the
+//! controller that applies them to the live cluster/engine.
+
+pub mod controller;
+pub mod directive;
+
+pub use controller::{AppliedAction, Controller};
+pub use directive::Directive;

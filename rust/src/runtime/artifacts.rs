@@ -1,0 +1,235 @@
+//! Artifact discovery + validation: MANIFEST.txt, weights.bin, golden.txt.
+//!
+//! The manifest is the cross-language contract: the Rust side refuses to run
+//! against artifacts whose shapes disagree with its expectations.
+
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::kv::KvFile;
+
+/// Parsed MANIFEST.txt.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub prefill_len: usize,
+    pub batch: usize,
+    pub detector_windows: usize,
+    pub detector_samples: usize,
+    pub detector_features: usize,
+    /// (name, shape) in weights.bin order.
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let kv = KvFile::parse(text)?;
+        let mut params = Vec::new();
+        for p in kv.get_all("param") {
+            let (name, dims) = p
+                .split_once(':')
+                .with_context(|| format!("bad param line {p:?}"))?;
+            let shape: Vec<usize> = dims
+                .split('x')
+                .map(|d| d.parse().with_context(|| format!("bad dim in {p:?}")))
+                .collect::<Result<_>>()?;
+            params.push((name.to_string(), shape));
+        }
+        Ok(Manifest {
+            preset: kv.require("preset")?.to_string(),
+            layers: kv.require_usize("layers")?,
+            d_model: kv.require_usize("d_model")?,
+            n_heads: kv.require_usize("n_heads")?,
+            head_dim: kv.require_usize("head_dim")?,
+            ffn: kv.require_usize("ffn")?,
+            vocab: kv.require_usize("vocab")?,
+            max_seq: kv.require_usize("max_seq")?,
+            prefill_len: kv.require_usize("prefill_len")?,
+            batch: kv.require_usize("batch")?,
+            detector_windows: kv.require_usize("detector_windows")?,
+            detector_samples: kv.require_usize("detector_samples")?,
+            detector_features: kv.require_usize("detector_features")?,
+            params,
+        })
+    }
+
+    /// KV cache shape `[L, 2, B, H, S_max, Dh]`.
+    pub fn kv_dims(&self) -> [usize; 6] {
+        [self.layers, 2, self.batch, self.n_heads, self.max_seq, self.head_dim]
+    }
+
+    pub fn kv_elems(&self) -> usize {
+        self.kv_dims().iter().product()
+    }
+}
+
+/// A resolved artifact directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+const WEIGHTS_MAGIC: &[u8; 8] = b"DPLW0001";
+
+impl ArtifactSet {
+    /// Open and validate an artifact directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<ArtifactSet> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("MANIFEST.txt");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let manifest = Manifest::parse(&text)?;
+        for name in ["prefill.hlo.txt", "decode_step.hlo.txt", "detector.hlo.txt", "weights.bin"] {
+            if !dir.join(name).exists() {
+                bail!("artifact {name} missing from {dir:?}");
+            }
+        }
+        Ok(ArtifactSet { dir, manifest })
+    }
+
+    /// Default location: `$DPULENS_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<ArtifactSet> {
+        let dir = std::env::var("DPULENS_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    /// Load weights.bin as flat f32 vectors, validated against the manifest.
+    pub fn load_weights(&self) -> Result<Vec<(String, Vec<usize>, Vec<f32>)>> {
+        let mut f = std::fs::File::open(self.path("weights.bin"))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != WEIGHTS_MAGIC {
+            bail!("weights.bin bad magic {magic:?}");
+        }
+        let mut u32buf = [0u8; 4];
+        f.read_exact(&mut u32buf)?;
+        let count = u32::from_le_bytes(u32buf) as usize;
+        if count != self.manifest.params.len() {
+            bail!("weights.bin has {count} params, manifest {}", self.manifest.params.len());
+        }
+        let mut out = Vec::with_capacity(count);
+        for (want_name, want_shape) in &self.manifest.params {
+            f.read_exact(&mut u32buf)?;
+            let nlen = u32::from_le_bytes(u32buf) as usize;
+            let mut name_buf = vec![0u8; nlen];
+            f.read_exact(&mut name_buf)?;
+            let name = String::from_utf8(name_buf)?;
+            if &name != want_name {
+                bail!("weights order mismatch: got {name}, want {want_name}");
+            }
+            f.read_exact(&mut u32buf)?;
+            let ndim = u32::from_le_bytes(u32buf) as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                f.read_exact(&mut u32buf)?;
+                shape.push(u32::from_le_bytes(u32buf) as usize);
+            }
+            if &shape != want_shape {
+                bail!("shape mismatch for {name}: {shape:?} vs {want_shape:?}");
+            }
+            let mut u64buf = [0u8; 8];
+            f.read_exact(&mut u64buf)?;
+            let nbytes = u64::from_le_bytes(u64buf) as usize;
+            let n_elems: usize = shape.iter().product();
+            if nbytes != 4 * n_elems {
+                bail!("byte count mismatch for {name}");
+            }
+            let mut data = vec![0u8; nbytes];
+            f.read_exact(&mut data)?;
+            let floats: Vec<f32> = data
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            out.push((name, shape, floats));
+        }
+        Ok(out)
+    }
+
+    /// Parse golden.txt into (prefill_logits[b][j], greedy_tokens[t][b],
+    /// decode_logits[t][b][j]).
+    #[allow(clippy::type_complexity)]
+    pub fn load_golden(&self) -> Result<(Vec<Vec<f32>>, Vec<Vec<i32>>, Vec<Vec<Vec<f32>>>)> {
+        let text = std::fs::read_to_string(self.path("golden.txt"))?;
+        let b = self.manifest.batch;
+        let mut prefill = vec![vec![0f32; 8]; b];
+        let mut tokens: Vec<Vec<i32>> = Vec::new();
+        let mut decode: Vec<Vec<Vec<f32>>> = Vec::new();
+        for line in text.lines() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            match parts.first().copied() {
+                Some("prefill_logit") => {
+                    let (bi, j, v): (usize, usize, f32) =
+                        (parts[1].parse()?, parts[2].parse()?, parts[3].parse()?);
+                    prefill[bi][j] = v;
+                }
+                Some("greedy_token") => {
+                    let (t, bi, tok): (usize, usize, i32) =
+                        (parts[1].parse()?, parts[2].parse()?, parts[3].parse()?);
+                    while tokens.len() <= t {
+                        tokens.push(vec![0; b]);
+                    }
+                    tokens[t][bi] = tok;
+                }
+                Some("decode_logit") => {
+                    let (t, bi, j, v): (usize, usize, usize, f32) = (
+                        parts[1].parse()?,
+                        parts[2].parse()?,
+                        parts[3].parse()?,
+                        parts[4].parse()?,
+                    );
+                    while decode.len() <= t {
+                        decode.push(vec![vec![0f32; 8]; b]);
+                    }
+                    decode[t][bi][j] = v;
+                }
+                _ => {}
+            }
+        }
+        Ok((prefill, tokens, decode))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = "format=1\npreset=small\nlayers=4\nd_model=256\nn_heads=8\n\
+        head_dim=32\nffn=1024\nvocab=2048\nmax_seq=128\nprefill_len=64\nbatch=4\n\
+        detector_windows=64\ndetector_samples=256\ndetector_features=8\n\
+        param=embed:2048x256\nparam=pos_embed:128x256\n";
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.preset, "small");
+        assert_eq!(m.layers, 4);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].1, vec![2048, 256]);
+        assert_eq!(m.kv_dims(), [4, 2, 4, 8, 128, 32]);
+    }
+
+    #[test]
+    fn bad_manifest_rejected() {
+        assert!(Manifest::parse("preset=x\n").is_err());
+        assert!(Manifest::parse(&MANIFEST.replace("param=embed:2048x256", "param=embed")).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(ArtifactSet::open("/nonexistent/dir").is_err());
+    }
+}

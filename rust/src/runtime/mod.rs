@@ -1,0 +1,28 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, HLO text)
+//! produced by `python/compile/aot.py`, compiles them on the CPU PJRT
+//! client, and exposes:
+//!
+//! * [`TransformerSession`] — real prefill/decode with a persistent KV cache
+//!   (implements `engine::ComputeBackend`, so the serving engine generates
+//!   *actual* tokens through the compiled model), and
+//! * [`CompiledScorer`] — the Pallas telemetry-scoring kernel as a
+//!   `dpu::ScorerBackend`.
+//!
+//! Python never runs at serving time; these executables are self-contained.
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
+//! jax>=0.5 serialized protos — see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod model;
+pub mod scorerrt;
+
+pub use artifacts::{ArtifactSet, Manifest};
+pub use model::TransformerSession;
+pub use scorerrt::CompiledScorer;
+
+use anyhow::Result;
+
+/// Create the PJRT CPU client (one per process is plenty).
+pub fn cpu_client() -> Result<xla::PjRtClient> {
+    Ok(xla::PjRtClient::cpu()?)
+}

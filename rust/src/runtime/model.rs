@@ -1,0 +1,204 @@
+//! The real compiled transformer: prefill + decode executables with a
+//! persistent host-side KV cache and per-slot KV surgery, so the engine's
+//! continuous batching works against fixed-shape PJRT executables.
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::engine::exec::ComputeBackend;
+use crate::runtime::artifacts::ArtifactSet;
+
+/// A loaded, compiled transformer with serving state.
+pub struct TransformerSession {
+    prefill_exe: PjRtLoadedExecutable,
+    decode_exe: PjRtLoadedExecutable,
+    /// Weight literals in param order (shared by both executables).
+    weights: Vec<Literal>,
+    /// Host copy of the KV cache `[L,2,B,H,S,Dh]` (persistent across calls).
+    kv_host: Vec<f32>,
+    pub batch: usize,
+    pub prefill_len: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+    layers: usize,
+    n_heads: usize,
+    head_dim: usize,
+    /// Executions performed (metrics).
+    pub prefill_calls: u64,
+    pub decode_calls: u64,
+}
+
+impl std::fmt::Debug for TransformerSession {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TransformerSession")
+            .field("batch", &self.batch)
+            .field("prefill_calls", &self.prefill_calls)
+            .field("decode_calls", &self.decode_calls)
+            .finish()
+    }
+}
+
+fn compile(client: &PjRtClient, path: &std::path::Path) -> Result<PjRtLoadedExecutable> {
+    let proto = HloModuleProto::from_text_file(path.to_str().context("bad path")?)?;
+    let comp = XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+impl TransformerSession {
+    /// Load + compile from an artifact directory.
+    pub fn load(client: &PjRtClient, arts: &ArtifactSet) -> Result<Self> {
+        let m = &arts.manifest;
+        let prefill_exe = compile(client, &arts.path("prefill.hlo.txt"))?;
+        let decode_exe = compile(client, &arts.path("decode_step.hlo.txt"))?;
+        let mut weights = Vec::new();
+        for (name, shape, data) in arts.load_weights()? {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = Literal::vec1(&data)
+                .reshape(&dims)
+                .with_context(|| format!("reshaping weight {name}"))?;
+            weights.push(lit);
+        }
+        Ok(TransformerSession {
+            prefill_exe,
+            decode_exe,
+            weights,
+            kv_host: vec![0f32; m.kv_elems()],
+            batch: m.batch,
+            prefill_len: m.prefill_len,
+            max_seq: m.max_seq,
+            vocab: m.vocab,
+            layers: m.layers,
+            n_heads: m.n_heads,
+            head_dim: m.head_dim,
+            prefill_calls: 0,
+            decode_calls: 0,
+        })
+    }
+
+    fn kv_literal(&self) -> Result<Literal> {
+        let dims = [
+            self.layers as i64,
+            2,
+            self.batch as i64,
+            self.n_heads as i64,
+            self.max_seq as i64,
+            self.head_dim as i64,
+        ];
+        Ok(Literal::vec1(&self.kv_host).reshape(&dims)?)
+    }
+
+    /// Prefill a full padded block. `tokens` is `[B][S0]`, `lens` `[B]`.
+    /// Returns per-sequence logits `[B][V]` and replaces the WHOLE KV cache.
+    pub fn prefill_block(&mut self, tokens: &[Vec<i32>], lens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        if tokens.len() != self.batch || lens.len() != self.batch {
+            bail!("prefill batch mismatch: {} vs {}", tokens.len(), self.batch);
+        }
+        let flat: Vec<i32> = tokens.iter().flat_map(|row| {
+            debug_assert_eq!(row.len(), self.prefill_len);
+            row.iter().copied()
+        }).collect();
+        let tok_lit =
+            Literal::vec1(&flat).reshape(&[self.batch as i64, self.prefill_len as i64])?;
+        let lens_lit = Literal::vec1(lens);
+        let mut args: Vec<&Literal> = vec![&tok_lit, &lens_lit];
+        args.extend(self.weights.iter());
+        let result = self.prefill_exe.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
+        let (logits, kv) = result.to_tuple2()?;
+        self.kv_host = kv.to_vec::<f32>()?;
+        self.prefill_calls += 1;
+        let flat_logits = logits.to_vec::<f32>()?;
+        Ok(flat_logits.chunks(self.vocab).map(|c| c.to_vec()).collect())
+    }
+
+    /// Prefill new sequences into specific slots WITHOUT disturbing other
+    /// slots' KV: runs a full prefill block (pad slots get a dummy prompt),
+    /// then splices only the named slots' KV into the persistent cache.
+    pub fn prefill_slots(
+        &mut self,
+        slots: &[usize],
+        prompts: &[Vec<i32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        assert_eq!(slots.len(), prompts.len());
+        let mut tokens = vec![vec![0i32; self.prefill_len]; self.batch];
+        let mut lens = vec![1i32; self.batch];
+        for (&slot, prompt) in slots.iter().zip(prompts) {
+            let n = prompt.len().min(self.prefill_len).max(1);
+            tokens[slot][..n].copy_from_slice(&prompt[..n]);
+            lens[slot] = n as i32;
+        }
+        let keep = self.kv_host.clone();
+        let logits = self.prefill_block(&tokens, &lens)?;
+        // Splice: restore every slot that was NOT prefilled from the saved
+        // cache (prefill_block overwrote everything).
+        let fresh = std::mem::replace(&mut self.kv_host, keep);
+        for &slot in slots {
+            self.copy_slot(&fresh, slot);
+        }
+        Ok(slots.iter().map(|&s| logits[s].clone()).collect())
+    }
+
+    /// Copy one batch slot's KV from `src` into the persistent cache.
+    fn copy_slot(&mut self, src: &[f32], slot: usize) {
+        let block = self.n_heads * self.max_seq * self.head_dim; // [H,S,Dh]
+        let per_lkv = self.batch * block; // [B,H,S,Dh]
+        for lkv in 0..self.layers * 2 {
+            let off = lkv * per_lkv + slot * block;
+            self.kv_host[off..off + block].copy_from_slice(&src[off..off + block]);
+        }
+    }
+
+    /// One decode step over all slots. `tokens`/`positions` are full-batch
+    /// (`[B]`); inactive slots should pass token 0 / position 0 (their KV
+    /// slot gets scratch writes at position 0, overwritten at next prefill).
+    pub fn decode_step(&mut self, tokens: &[i32], positions: &[i32]) -> Result<Vec<Vec<f32>>> {
+        if tokens.len() != self.batch || positions.len() != self.batch {
+            bail!("decode batch mismatch");
+        }
+        let tok_lit = Literal::vec1(tokens);
+        let pos_lit = Literal::vec1(positions);
+        let kv_lit = self.kv_literal()?;
+        let mut args: Vec<&Literal> = vec![&tok_lit, &pos_lit, &kv_lit];
+        args.extend(self.weights.iter());
+        let result = self.decode_exe.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
+        let (logits, kv) = result.to_tuple2()?;
+        self.kv_host = kv.to_vec::<f32>()?;
+        self.decode_calls += 1;
+        let flat = logits.to_vec::<f32>()?;
+        Ok(flat.chunks(self.vocab).map(|c| c.to_vec()).collect())
+    }
+
+    /// Greedy argmax over logits.
+    pub fn argmax(logits: &[f32]) -> i32 {
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+}
+
+impl ComputeBackend for TransformerSession {
+    fn prefill(&mut self, slots: &[usize], prompts: &[Vec<i32>]) -> Vec<i32> {
+        let logits = self
+            .prefill_slots(slots, prompts)
+            .expect("PJRT prefill failed");
+        logits.iter().map(|l| Self::argmax(l)).collect()
+    }
+
+    fn decode(&mut self, slots: &[usize], last_tokens: &[i32], positions: &[u32]) -> Vec<i32> {
+        let mut toks = vec![0i32; self.batch];
+        let mut pos = vec![0i32; self.batch];
+        for (i, &slot) in slots.iter().enumerate() {
+            toks[slot] = last_tokens[i];
+            pos[slot] = (positions[i] as i32).min(self.max_seq as i32 - 1);
+        }
+        let logits = self.decode_step(&toks, &pos).expect("PJRT decode failed");
+        slots.iter().map(|&s| Self::argmax(&logits[s])).collect()
+    }
+
+    fn is_real(&self) -> bool {
+        true
+    }
+}

@@ -1,0 +1,97 @@
+//! The compiled Pallas telemetry scorer (`artifacts/detector.hlo.txt`) as a
+//! `dpu::ScorerBackend` — the "DPU-offloaded scoring" path.
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::dpu::scorer::{ScorerBackend, N_FEATURES};
+use crate::runtime::artifacts::ArtifactSet;
+
+pub struct CompiledScorer {
+    exe: PjRtLoadedExecutable,
+    pub windows: usize,
+    pub samples: usize,
+    pub calls: u64,
+}
+
+impl std::fmt::Debug for CompiledScorer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompiledScorer")
+            .field("windows", &self.windows)
+            .field("samples", &self.samples)
+            .finish()
+    }
+}
+
+impl CompiledScorer {
+    pub fn load(client: &PjRtClient, arts: &ArtifactSet) -> Result<Self> {
+        let path = arts.path("detector.hlo.txt");
+        let proto = HloModuleProto::from_text_file(path.to_str().context("bad path")?)?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(CompiledScorer {
+            exe,
+            windows: arts.manifest.detector_windows,
+            samples: arts.manifest.detector_samples,
+            calls: 0,
+        })
+    }
+
+    /// Run one fixed-shape scoring call: `[W,N]` windows + `[W,2]` baseline.
+    pub fn score_block(
+        &mut self,
+        windows_flat: &[f32],
+        baseline_flat: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let w = self.windows as i64;
+        let n = self.samples as i64;
+        let win = Literal::vec1(windows_flat).reshape(&[w, n])?;
+        let base = Literal::vec1(baseline_flat).reshape(&[w, 2])?;
+        let result = self.exe.execute::<&Literal>(&[&win, &base])?[0][0].to_literal_sync()?;
+        let (feats, z) = result.to_tuple2()?;
+        self.calls += 1;
+        Ok((feats.to_vec::<f32>()?, z.to_vec::<f32>()?))
+    }
+}
+
+impl ScorerBackend for CompiledScorer {
+    fn score(
+        &mut self,
+        windows: &[Vec<f32>],
+        baseline: &[(f32, f32)],
+    ) -> (Vec<[f32; N_FEATURES]>, Vec<f32>) {
+        assert_eq!(windows.len(), baseline.len());
+        let mut out_feats = Vec::with_capacity(windows.len());
+        let mut out_z = Vec::with_capacity(windows.len());
+        // Process in fixed-shape blocks of W windows (pad the tail).
+        for chunk_start in (0..windows.len()).step_by(self.windows) {
+            let end = (chunk_start + self.windows).min(windows.len());
+            let mut win_flat = Vec::with_capacity(self.windows * self.samples);
+            let mut base_flat = Vec::with_capacity(self.windows * 2);
+            for i in chunk_start..chunk_start + self.windows {
+                if i < end {
+                    let row = &windows[i];
+                    assert_eq!(row.len(), self.samples, "pack windows to {} samples", self.samples);
+                    win_flat.extend_from_slice(row);
+                    base_flat.push(baseline[i].0);
+                    base_flat.push(baseline[i].1);
+                } else {
+                    win_flat.extend(std::iter::repeat(0.0).take(self.samples));
+                    base_flat.extend_from_slice(&[0.0, 1.0]);
+                }
+            }
+            let (feats, z) = self.score_block(&win_flat, &base_flat).expect("PJRT scorer failed");
+            for i in 0..(end - chunk_start) {
+                let mut row = [0f32; N_FEATURES];
+                row.copy_from_slice(&feats[i * N_FEATURES..(i + 1) * N_FEATURES]);
+                out_feats.push(row);
+                out_z.push(z[i]);
+            }
+        }
+        (out_feats, out_z)
+    }
+
+    fn name(&self) -> &'static str {
+        "compiled-pallas"
+    }
+}

@@ -1,0 +1,213 @@
+//! Workload-shaping stochastic processes on top of `util::rng`.
+//!
+//! These produce the traffic *shapes* the paper's runbook conditions are
+//! sensitive to: Poisson vs bursty (ON-OFF) arrivals, heavy-tailed and
+//! bimodal sequence lengths, and diurnal-style rate modulation.
+
+use crate::sim::time::{SimDur, SEC};
+use crate::util::rng::Rng;
+
+/// Inter-arrival process for requests.
+#[derive(Debug, Clone)]
+pub enum Arrival {
+    /// Poisson arrivals at `rate` req/s.
+    Poisson { rate: f64 },
+    /// Markov-modulated ON-OFF bursts: exponential dwell in each phase,
+    /// Poisson arrivals at `on_rate` during ON, `off_rate` during OFF.
+    OnOff {
+        on_rate: f64,
+        off_rate: f64,
+        mean_on_s: f64,
+        mean_off_s: f64,
+    },
+    /// Fixed-interval arrivals (closed-loop benchmarks).
+    Uniform { rate: f64 },
+}
+
+/// Stateful sampler for an [`Arrival`] process.
+#[derive(Debug, Clone)]
+pub struct ArrivalSampler {
+    proc: Arrival,
+    rng: Rng,
+    in_on_phase: bool,
+    phase_left_s: f64,
+}
+
+impl ArrivalSampler {
+    pub fn new(proc: Arrival, rng: Rng) -> Self {
+        ArrivalSampler { proc, rng, in_on_phase: true, phase_left_s: 0.0 }
+    }
+
+    /// Next inter-arrival gap.
+    pub fn next_gap(&mut self) -> SimDur {
+        match self.proc {
+            Arrival::Poisson { rate } => SimDur::from_secs_f64(self.rng.exponential(rate)),
+            Arrival::Uniform { rate } => SimDur::from_secs_f64(1.0 / rate),
+            Arrival::OnOff { on_rate, off_rate, mean_on_s, mean_off_s } => {
+                // Advance through phases until an arrival lands inside one.
+                let mut gap_s = 0.0;
+                loop {
+                    if self.phase_left_s <= 0.0 {
+                        self.in_on_phase = !self.in_on_phase;
+                        let mean = if self.in_on_phase { mean_on_s } else { mean_off_s };
+                        self.phase_left_s = self.rng.exponential(1.0 / mean.max(1e-9));
+                    }
+                    let rate = if self.in_on_phase { on_rate } else { off_rate };
+                    if rate <= 1e-9 {
+                        gap_s += self.phase_left_s;
+                        self.phase_left_s = 0.0;
+                        continue;
+                    }
+                    let draw = self.rng.exponential(rate);
+                    if draw <= self.phase_left_s {
+                        self.phase_left_s -= draw;
+                        gap_s += draw;
+                        return SimDur::from_secs_f64(gap_s);
+                    }
+                    gap_s += self.phase_left_s;
+                    self.phase_left_s = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Sequence-length distribution for prompts and outputs.
+#[derive(Debug, Clone)]
+pub enum LengthDist {
+    /// All sequences the same length.
+    Fixed(usize),
+    /// Uniform in [lo, hi].
+    Uniform { lo: usize, hi: usize },
+    /// Log-normal (token counts), clamped to [lo, hi].
+    LogNormal { mu: f64, sigma: f64, lo: usize, hi: usize },
+    /// Bimodal mixture: short with prob p_short, else long — the shape that
+    /// drives early-completion skew (NS8/PC10/EW9).
+    Bimodal { short: usize, long: usize, p_short: f64 },
+}
+
+impl LengthDist {
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            LengthDist::Fixed(n) => n,
+            LengthDist::Uniform { lo, hi } => rng.range_u64(lo as u64, hi as u64) as usize,
+            LengthDist::LogNormal { mu, sigma, lo, hi } => {
+                (rng.lognormal(mu, sigma).round() as usize).clamp(lo, hi)
+            }
+            LengthDist::Bimodal { short, long, p_short } => {
+                if rng.chance(p_short) { short } else { long }
+            }
+        }
+    }
+
+    /// Mean of the distribution (analytic where possible; used by cost models).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LengthDist::Fixed(n) => n as f64,
+            LengthDist::Uniform { lo, hi } => (lo + hi) as f64 / 2.0,
+            LengthDist::LogNormal { mu, sigma, lo, hi } => {
+                (mu + sigma * sigma / 2.0).exp().clamp(lo as f64, hi as f64)
+            }
+            LengthDist::Bimodal { short, long, p_short } => {
+                p_short * short as f64 + (1.0 - p_short) * long as f64
+            }
+        }
+    }
+}
+
+/// Multiplicative rate modulation over sim time (diurnal / ramp shapes).
+#[derive(Debug, Clone)]
+pub enum RateShape {
+    Constant,
+    /// Sinusoidal between `min_factor` and 1.0 with the given period.
+    Diurnal { period_s: f64, min_factor: f64 },
+    /// Linear ramp from `from` to `to` across `ramp_s`, then hold.
+    Ramp { from: f64, to: f64, ramp_s: f64 },
+}
+
+impl RateShape {
+    pub fn factor_at(&self, t_ns: u64) -> f64 {
+        let t_s = t_ns as f64 / SEC as f64;
+        match *self {
+            RateShape::Constant => 1.0,
+            RateShape::Diurnal { period_s, min_factor } => {
+                let phase = (t_s / period_s) * std::f64::consts::TAU;
+                let x = (phase.sin() + 1.0) / 2.0; // 0..1
+                min_factor + (1.0 - min_factor) * x
+            }
+            RateShape::Ramp { from, to, ramp_s } => {
+                if t_s >= ramp_s {
+                    to
+                } else {
+                    from + (to - from) * (t_s / ramp_s)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate() {
+        let mut s = ArrivalSampler::new(Arrival::Poisson { rate: 100.0 }, Rng::seeded(1));
+        let n = 20_000;
+        let total: f64 = (0..n).map(|_| s.next_gap().as_secs_f64()).sum();
+        let rate = n as f64 / total;
+        assert!((rate - 100.0).abs() < 5.0, "rate={rate}");
+    }
+
+    #[test]
+    fn onoff_burstier_than_poisson() {
+        let cv = |mut s: ArrivalSampler| {
+            let xs: Vec<f64> = (0..20_000).map(|_| s.next_gap().as_secs_f64()).collect();
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+            var.sqrt() / mean
+        };
+        let poisson = cv(ArrivalSampler::new(Arrival::Poisson { rate: 100.0 }, Rng::seeded(2)));
+        let onoff = cv(ArrivalSampler::new(
+            Arrival::OnOff { on_rate: 500.0, off_rate: 1.0, mean_on_s: 0.05, mean_off_s: 0.2 },
+            Rng::seeded(2),
+        ));
+        assert!(onoff > poisson * 1.5, "onoff={onoff} poisson={poisson}");
+    }
+
+    #[test]
+    fn uniform_gap_is_constant() {
+        let mut s = ArrivalSampler::new(Arrival::Uniform { rate: 10.0 }, Rng::seeded(3));
+        let a = s.next_gap();
+        let b = s.next_gap();
+        assert_eq!(a, b);
+        assert!((a.as_secs_f64() - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn length_dists_within_bounds() {
+        let mut r = Rng::seeded(4);
+        let d = LengthDist::LogNormal { mu: 3.0, sigma: 1.0, lo: 4, hi: 64 };
+        for _ in 0..1000 {
+            let n = d.sample(&mut r);
+            assert!((4..=64).contains(&n));
+        }
+        let bi = LengthDist::Bimodal { short: 4, long: 60, p_short: 0.7 };
+        let xs: Vec<usize> = (0..5000).map(|_| bi.sample(&mut r)).collect();
+        let n_short = xs.iter().filter(|&&x| x == 4).count();
+        assert!((3000..4000).contains(&n_short), "n_short={n_short}");
+    }
+
+    #[test]
+    fn rate_shapes() {
+        let d = RateShape::Diurnal { period_s: 10.0, min_factor: 0.2 };
+        for t in 0..100 {
+            let f = d.factor_at(t * SEC / 10);
+            assert!((0.2..=1.0001).contains(&f));
+        }
+        let r = RateShape::Ramp { from: 1.0, to: 3.0, ramp_s: 10.0 };
+        assert!((r.factor_at(0) - 1.0).abs() < 1e-9);
+        assert!((r.factor_at(5 * SEC) - 2.0).abs() < 1e-9);
+        assert!((r.factor_at(20 * SEC) - 3.0).abs() < 1e-9);
+    }
+}

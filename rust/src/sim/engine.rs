@@ -1,0 +1,158 @@
+//! Discrete-event simulation core: a calendar of timestamped events with a
+//! deterministic tie-break (insertion sequence), popped in time order.
+//!
+//! Generic over the world's event payload type `E`. The world (see
+//! `coordinator::scenario`) owns all state; this engine only orders time.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::time::{SimDur, SimTime};
+
+#[derive(Debug, Clone)]
+struct Scheduled<E> {
+    at: SimTime,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, o: &Self) -> bool {
+        self.at == o.at && self.seq == o.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, o: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        o.at.cmp(&self.at).then(o.seq.cmp(&self.seq))
+    }
+}
+
+/// The event calendar + clock.
+#[derive(Debug)]
+pub struct Engine<E> {
+    now: SimTime,
+    seq: u64,
+    heap: BinaryHeap<Scheduled<E>>,
+    processed: u64,
+}
+
+impl<E> Default for Engine<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Engine<E> {
+    pub fn new() -> Self {
+        Engine { now: SimTime::ZERO, seq: 0, heap: BinaryHeap::new(), processed: 0 }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events popped so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `payload` at absolute time `at` (clamped to now if in the past).
+    pub fn schedule_at(&mut self, at: SimTime, payload: E) {
+        let at = at.max(self.now);
+        self.heap.push(Scheduled { at, seq: self.seq, payload });
+        self.seq += 1;
+    }
+
+    /// Schedule `payload` after a delay from now.
+    pub fn schedule_in(&mut self, delay: SimDur, payload: E) {
+        self.schedule_at(self.now + delay, payload);
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.at >= self.now, "time went backwards");
+        self.now = ev.at;
+        self.processed += 1;
+        Some((ev.at, ev.payload))
+    }
+
+    /// Peek the next event time without popping.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    /// Drop all pending events (scenario teardown).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule_at(SimTime(30), 3);
+        e.schedule_at(SimTime(10), 1);
+        e.schedule_at(SimTime(20), 2);
+        let order: Vec<u32> = std::iter::from_fn(|| e.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut e: Engine<u32> = Engine::new();
+        for i in 0..10 {
+            e.schedule_at(SimTime(5), i);
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| e.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule_at(SimTime(100), 0);
+        e.schedule_at(SimTime(50), 1);
+        let mut last = SimTime::ZERO;
+        while let Some((t, _)) = e.pop() {
+            assert!(t >= last);
+            last = t;
+        }
+        assert_eq!(e.now(), SimTime(100));
+        assert_eq!(e.processed(), 2);
+    }
+
+    #[test]
+    fn past_schedules_clamp_to_now() {
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule_at(SimTime(100), 0);
+        e.pop();
+        e.schedule_at(SimTime(10), 1); // in the past
+        let (t, _) = e.pop().unwrap();
+        assert_eq!(t, SimTime(100));
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule_at(SimTime(1000), 0);
+        e.pop();
+        e.schedule_in(SimDur(500), 1);
+        assert_eq!(e.peek_time(), Some(SimTime(1500)));
+    }
+}

@@ -1,0 +1,9 @@
+//! Discrete-event simulation core: sim-time, the event calendar, and the
+//! stochastic processes that shape workloads.
+
+pub mod dist;
+pub mod engine;
+pub mod time;
+
+pub use engine::Engine;
+pub use time::{SimDur, SimTime, MS, NS, SEC, US};

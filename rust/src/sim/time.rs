@@ -1,0 +1,143 @@
+//! Simulated time: u64 nanoseconds since scenario start.
+//!
+//! A newtype keeps sim-time from ever mixing with wallclock. All hardware
+//! models and telemetry timestamps use [`SimTime`]; only the bench harness
+//! measures wallclock (for *our* code's performance, not the simulated
+//! cluster's).
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// Nanoseconds since simulation start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+/// A span of simulated time, in nanoseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimDur(pub u64);
+
+pub const NS: u64 = 1;
+pub const US: u64 = 1_000;
+pub const MS: u64 = 1_000_000;
+pub const SEC: u64 = 1_000_000_000;
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn ns(self) -> u64 {
+        self.0
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / SEC as f64
+    }
+
+    pub fn as_ms_f64(self) -> f64 {
+        self.0 as f64 / MS as f64
+    }
+
+    pub fn since(self, earlier: SimTime) -> SimDur {
+        SimDur(self.0.saturating_sub(earlier.0))
+    }
+}
+
+impl SimDur {
+    pub const ZERO: SimDur = SimDur(0);
+
+    pub fn from_ns(ns: u64) -> SimDur {
+        SimDur(ns)
+    }
+
+    pub fn from_us(us: u64) -> SimDur {
+        SimDur(us * US)
+    }
+
+    pub fn from_ms(ms: u64) -> SimDur {
+        SimDur(ms * MS)
+    }
+
+    pub fn from_secs_f64(s: f64) -> SimDur {
+        SimDur((s * SEC as f64).round().max(0.0) as u64)
+    }
+
+    pub fn ns(self) -> u64 {
+        self.0
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / SEC as f64
+    }
+
+    pub fn as_us_f64(self) -> f64 {
+        self.0 as f64 / US as f64
+    }
+
+    pub fn scale(self, factor: f64) -> SimDur {
+        SimDur((self.0 as f64 * factor).round().max(0.0) as u64)
+    }
+}
+
+impl Add<SimDur> for SimTime {
+    type Output = SimTime;
+    fn add(self, d: SimDur) -> SimTime {
+        SimTime(self.0 + d.0)
+    }
+}
+
+impl AddAssign<SimDur> for SimTime {
+    fn add_assign(&mut self, d: SimDur) {
+        self.0 += d.0;
+    }
+}
+
+impl Sub<SimTime> for SimTime {
+    type Output = SimDur;
+    fn sub(self, o: SimTime) -> SimDur {
+        SimDur(self.0.saturating_sub(o.0))
+    }
+}
+
+impl Add<SimDur> for SimDur {
+    type Output = SimDur;
+    fn add(self, o: SimDur) -> SimDur {
+        SimDur(self.0 + o.0)
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", crate::util::table::fmt_ns(self.0 as f64))
+    }
+}
+
+impl fmt::Display for SimDur {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", crate::util::table::fmt_ns(self.0 as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let t = SimTime(100) + SimDur::from_us(1);
+        assert_eq!(t.ns(), 1_100);
+        assert_eq!((t - SimTime(100)).ns(), 1_000);
+        assert_eq!(t.since(SimTime(2_000)).ns(), 0); // saturating
+    }
+
+    #[test]
+    fn conversions() {
+        assert_eq!(SimDur::from_ms(2).ns(), 2_000_000);
+        assert!((SimDur::from_secs_f64(0.5).as_secs_f64() - 0.5).abs() < 1e-12);
+        assert_eq!(SimDur::from_ns(1500).as_us_f64(), 1.5);
+    }
+
+    #[test]
+    fn scale_rounds() {
+        assert_eq!(SimDur(100).scale(2.5).ns(), 250);
+        assert_eq!(SimDur(100).scale(0.0).ns(), 0);
+    }
+}

@@ -1,0 +1,139 @@
+//! Per-node telemetry distribution: hardware models publish, observers drain.
+//!
+//! Single-threaded and deterministic: the scenario loop drains pending
+//! events into each observer after every simulation event, so observers see
+//! a causally-ordered stream exactly as a bump-in-the-wire DPU would.
+
+use crate::ids::NodeId;
+use crate::telemetry::event::{TelemetryEvent, TelemetryKind};
+use crate::util::ring::Ring;
+use std::collections::HashMap;
+
+/// Pending event queues, one per node, plus class counters and an optional
+/// bounded trace recorder.
+#[derive(Debug)]
+pub struct TelemetryBus {
+    pending: Vec<Vec<TelemetryEvent>>,
+    class_counts: HashMap<&'static str, u64>,
+    total: u64,
+    recorder: Option<Ring<TelemetryEvent>>,
+}
+
+impl TelemetryBus {
+    pub fn new(n_nodes: usize) -> Self {
+        TelemetryBus {
+            pending: (0..n_nodes).map(|_| Vec::new()).collect(),
+            class_counts: HashMap::new(),
+            total: 0,
+            recorder: None,
+        }
+    }
+
+    /// Attach a bounded full-event recorder (debugging / evidence dumps).
+    pub fn with_recorder(mut self, capacity: usize) -> Self {
+        self.recorder = Some(Ring::with_capacity(capacity));
+        self
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Publish an event to its node's queue.
+    #[inline]
+    pub fn publish(&mut self, ev: TelemetryEvent) {
+        debug_assert!((ev.node.idx()) < self.pending.len());
+        self.total += 1;
+        *self.class_counts.entry(ev.kind.class()).or_insert(0) += 1;
+        if let Some(rec) = &mut self.recorder {
+            rec.push(ev.clone());
+        }
+        self.pending[ev.node.idx()].push(ev);
+    }
+
+    /// Convenience: publish by parts.
+    #[inline]
+    pub fn emit(&mut self, t: crate::sim::SimTime, node: NodeId, kind: TelemetryKind) {
+        self.publish(TelemetryEvent { t, node, kind });
+    }
+
+    /// Drain a node's pending events (ownership moves to the observer).
+    pub fn drain_node(&mut self, node: NodeId) -> Vec<TelemetryEvent> {
+        std::mem::take(&mut self.pending[node.idx()])
+    }
+
+    /// Visit-and-clear every node's queue.
+    pub fn drain_all(&mut self, mut f: impl FnMut(NodeId, Vec<TelemetryEvent>)) {
+        for i in 0..self.pending.len() {
+            if !self.pending[i].is_empty() {
+                f(NodeId(i as u32), std::mem::take(&mut self.pending[i]));
+            }
+        }
+    }
+
+    pub fn total_published(&self) -> u64 {
+        self.total
+    }
+
+    pub fn count_for_class(&self, class: &str) -> u64 {
+        self.class_counts.get(class).copied().unwrap_or(0)
+    }
+
+    pub fn class_counts(&self) -> &HashMap<&'static str, u64> {
+        &self.class_counts
+    }
+
+    pub fn recorded(&self) -> Option<&Ring<TelemetryEvent>> {
+        self.recorder.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::GpuId;
+    use crate::sim::SimTime;
+
+    fn doorbell(t: u64, node: u32) -> TelemetryEvent {
+        TelemetryEvent {
+            t: SimTime(t),
+            node: NodeId(node),
+            kind: TelemetryKind::Doorbell { gpu: GpuId(0) },
+        }
+    }
+
+    #[test]
+    fn publish_and_drain_per_node() {
+        let mut bus = TelemetryBus::new(2);
+        bus.publish(doorbell(1, 0));
+        bus.publish(doorbell(2, 1));
+        bus.publish(doorbell(3, 0));
+        let n0 = bus.drain_node(NodeId(0));
+        assert_eq!(n0.len(), 2);
+        assert!(bus.drain_node(NodeId(0)).is_empty());
+        assert_eq!(bus.drain_node(NodeId(1)).len(), 1);
+        assert_eq!(bus.total_published(), 3);
+        assert_eq!(bus.count_for_class("doorbell"), 3);
+    }
+
+    #[test]
+    fn drain_all_visits_nonempty_nodes() {
+        let mut bus = TelemetryBus::new(3);
+        bus.publish(doorbell(1, 0));
+        bus.publish(doorbell(1, 2));
+        let mut seen = Vec::new();
+        bus.drain_all(|n, evs| seen.push((n, evs.len())));
+        assert_eq!(seen, vec![(NodeId(0), 1), (NodeId(2), 1)]);
+    }
+
+    #[test]
+    fn recorder_caps() {
+        let mut bus = TelemetryBus::new(1).with_recorder(2);
+        for i in 0..5 {
+            bus.publish(doorbell(i, 0));
+        }
+        let rec = bus.recorded().unwrap();
+        assert_eq!(rec.len(), 2);
+        assert_eq!(rec.dropped(), 3);
+    }
+}

@@ -1,0 +1,173 @@
+//! Telemetry event vocabulary — everything any vantage point could observe.
+//!
+//! Emission is unconditional (the *cluster* produces all events); which
+//! events a given observer can *see* is decided by `dpu::visibility` (the
+//! DPU sees NIC + PCIe; it must NOT see NVLink, intra-GPU, or CPU-local
+//! events — paper §4.3) and by `telemetry::sw` (software-level signals per
+//! Table 2(b)).
+
+use crate::ids::{CollId, FlowId, GpuId, LinkId, NodeId, QpId, ReqId, StageId};
+use crate::sim::SimTime;
+
+/// Which lifecycle phase generated a PCIe transaction (prefill bursts vs
+/// decode's many small reads — §4.2's phase-level tracing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+/// Collective operation families the fabric carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollKind {
+    /// Tensor-parallel allreduce within a layer group.
+    TpAllreduce,
+    /// Pipeline-parallel activation handoff between stages.
+    PpHandoff,
+    /// Sharded KV-cache block transfer (decode phase).
+    KvTransfer,
+}
+
+/// One observable happening, timestamped with sub-microsecond resolution.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TelemetryKind {
+    // ---- PCIe observer vantage (DPU-visible, Table 3b) ----
+    /// Host-to-device DMA completion.
+    DmaH2d { gpu: GpuId, bytes: u64, latency_ns: u64, phase: Phase },
+    /// Device-to-host DMA completion.
+    DmaD2h { gpu: GpuId, bytes: u64, latency_ns: u64, phase: Phase },
+    /// Kernel-launch doorbell write observed on the root complex.
+    Doorbell { gpu: GpuId },
+    /// Memory registration (map/unmap) around DMA buffers.
+    MemRegistration { gpu: GpuId, bytes: u64, unmap: bool },
+    /// GPU peer-to-peer DMA routed over PCIe (NVLink P2P is a separate,
+    /// DPU-invisible event).
+    P2pPcie { from: GpuId, to: GpuId, bytes: u64, latency_ns: u64 },
+    /// Periodic PCIe link busy-fraction sample.
+    PcieUtil { link: LinkId, busy: f64 },
+
+    // ---- NIC vantage, north-south (DPU-visible, Table 3a) ----
+    /// Ingress packet/burst delivered to the host.
+    NicRx { flow: FlowId, bytes: u64, queue_depth: u32 },
+    /// Egress packet leaving the NIC; `wait_ns` = time spent queued.
+    NicTx { flow: FlowId, bytes: u64, queue_depth: u32, wait_ns: u64 },
+    /// Retransmission observed (dup ACK / handshake retry / storm member).
+    /// `fabric` marks east-west RDMA retransmits vs north-south client flows.
+    Retransmit { flow: FlowId, ingress: bool, fabric: bool },
+    /// Packet drop inside NIC queues.
+    PktDrop { flow: FlowId, ingress: bool, fabric: bool },
+    /// An egress response stream finished (last token sent).
+    FlowEnd { flow: FlowId, req: ReqId },
+
+    // ---- NIC vantage, east-west (DPU-visible, Table 3c) ----
+    /// One rank's burst for a collective arrived at this node's NIC.
+    CollectiveBurst {
+        coll: CollId,
+        kind: CollKind,
+        from_node: NodeId,
+        rank: u32,
+        expected_ranks: u32,
+        bytes: u64,
+        /// Send-to-arrival latency of this rank's burst, ns.
+        latency_ns: u64,
+    },
+    /// Pipeline stage handoff burst observed leaving (`outbound`) the
+    /// source node or arriving at the destination.
+    StageHandoff {
+        from_stage: StageId,
+        to_stage: StageId,
+        bytes: u64,
+        outbound: bool,
+        phase: Phase,
+    },
+    /// RDMA op completed; `credit_wait_ns` = stall waiting for remote
+    /// credit, `latency_ns` = send-to-arrival path latency (DPUs derive this
+    /// from RDMA ACK timing / header timestamps).
+    RdmaOp { qp: QpId, bytes: u64, credit_wait_ns: u64, latency_ns: u64 },
+    /// Remote credit update arrived for a QP.
+    CreditUpdate { qp: QpId },
+
+    // ---- DPU-INVISIBLE events (paper §4.3) ----
+    /// GPU-to-GPU transfer over NVLink/NVSwitch — bypasses the root complex.
+    NvlinkBurst { from: GpuId, to: GpuId, bytes: u64 },
+    /// Intra-GPU kernel execution (never traverses PCIe).
+    GpuKernel { gpu: GpuId, dur_ns: u64, flops: f64 },
+    /// CPU-local work (tokenization, scheduling) with no PCIe/NIC footprint.
+    CpuLocal { dur_ns: u64 },
+}
+
+/// A timestamped, node-attributed telemetry record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetryEvent {
+    pub t: SimTime,
+    pub node: NodeId,
+    pub kind: TelemetryKind,
+}
+
+impl TelemetryKind {
+    /// Short class label, used in reports and per-class accounting.
+    pub fn class(&self) -> &'static str {
+        use TelemetryKind::*;
+        match self {
+            DmaH2d { .. } => "dma_h2d",
+            DmaD2h { .. } => "dma_d2h",
+            Doorbell { .. } => "doorbell",
+            MemRegistration { .. } => "mem_reg",
+            P2pPcie { .. } => "p2p_pcie",
+            PcieUtil { .. } => "pcie_util",
+            NicRx { .. } => "nic_rx",
+            NicTx { .. } => "nic_tx",
+            Retransmit { .. } => "retransmit",
+            PktDrop { .. } => "pkt_drop",
+            FlowEnd { .. } => "flow_end",
+            CollectiveBurst { .. } => "collective",
+            StageHandoff { .. } => "stage_handoff",
+            RdmaOp { .. } => "rdma_op",
+            CreditUpdate { .. } => "credit_update",
+            NvlinkBurst { .. } => "nvlink",
+            GpuKernel { .. } => "gpu_kernel",
+            CpuLocal { .. } => "cpu_local",
+        }
+    }
+
+    /// Is this event observable from the DPU vantage point (NIC inline +
+    /// PCIe peer)? Encodes paper §4.1-§4.3.
+    pub fn dpu_visible(&self) -> bool {
+        use TelemetryKind::*;
+        !matches!(self, NvlinkBurst { .. } | GpuKernel { .. } | CpuLocal { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn visibility_boundary_matches_paper() {
+        // §4.2: PCIe + NIC traffic is visible.
+        assert!(TelemetryKind::DmaH2d {
+            gpu: GpuId(0), bytes: 1, latency_ns: 1, phase: Phase::Prefill
+        }
+        .dpu_visible());
+        assert!(TelemetryKind::Doorbell { gpu: GpuId(0) }.dpu_visible());
+        assert!(TelemetryKind::NicRx { flow: FlowId(0), bytes: 1, queue_depth: 0 }.dpu_visible());
+        assert!(TelemetryKind::RdmaOp { qp: QpId(0), bytes: 1, credit_wait_ns: 0, latency_ns: 0 }.dpu_visible());
+        // §4.3: NVLink, intra-GPU, CPU-local are NOT.
+        assert!(!TelemetryKind::NvlinkBurst { from: GpuId(0), to: GpuId(1), bytes: 1 }
+            .dpu_visible());
+        assert!(!TelemetryKind::GpuKernel { gpu: GpuId(0), dur_ns: 1, flops: 1.0 }.dpu_visible());
+        assert!(!TelemetryKind::CpuLocal { dur_ns: 1 }.dpu_visible());
+    }
+
+    #[test]
+    fn classes_are_distinct() {
+        let classes = [
+            TelemetryKind::Doorbell { gpu: GpuId(0) }.class(),
+            TelemetryKind::NicRx { flow: FlowId(0), bytes: 0, queue_depth: 0 }.class(),
+            TelemetryKind::CreditUpdate { qp: QpId(0) }.class(),
+        ];
+        assert_eq!(classes.len(), 3);
+        assert_ne!(classes[0], classes[1]);
+        assert_ne!(classes[1], classes[2]);
+    }
+}

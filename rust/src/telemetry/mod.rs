@@ -1,0 +1,12 @@
+//! Telemetry plane: event vocabulary, per-node buses, windowed feature
+//! extraction, and the software-signal baseline (Table 2(b)).
+
+pub mod bus;
+pub mod event;
+pub mod sw;
+pub mod window;
+
+pub use bus::TelemetryBus;
+pub use event::{CollKind, Phase, TelemetryEvent, TelemetryKind};
+pub use sw::{SwSignal, SwSnapshot, SwWindow, ALL_SW_SIGNALS};
+pub use window::{WindowAccum, WindowSnapshot};

@@ -1,0 +1,192 @@
+//! Software-side signals (paper Table 2(b)): what the inference engine's own
+//! record-keeping can see *without* a DPU.
+//!
+//! This is the comparison baseline for E4/E5: SW sensing has rich
+//! application-level state (arrival times, queue depth, KV occupancy, decode
+//! progress) but is blind to PCIe/NIC-level phenomena and pays per-sample
+//! instrumentation overhead on the host.
+
+use crate::sim::{SimDur, SimTime};
+use crate::util::stats::Welford;
+
+/// One software-observable signal class, mirroring Table 2(b) rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SwSignal {
+    /// Request arrival timestamp recorded by the scheduler.
+    RequestArrival,
+    /// Tokenized sequence length at admission.
+    SequenceLength,
+    /// Tokens generated so far per running request.
+    DecodeProgress,
+    /// Engine queue depth / wait time.
+    QueueDepth,
+    /// KV-cache occupancy (pages in use).
+    KvOccupancy,
+    /// GPU utilization proxy (what NVML would report, sampled coarsely).
+    GpuUtil,
+    /// GPU memory in use.
+    GpuMemory,
+    /// Host<->GPU copy throughput as seen from the runtime (coarse).
+    CopyThroughput,
+    /// Per-iteration kernel/step execution time (CUDA-events equivalent).
+    StepTime,
+    /// Server transport latency per response.
+    TransportLatency,
+}
+
+pub const ALL_SW_SIGNALS: [SwSignal; 10] = [
+    SwSignal::RequestArrival,
+    SwSignal::SequenceLength,
+    SwSignal::DecodeProgress,
+    SwSignal::QueueDepth,
+    SwSignal::KvOccupancy,
+    SwSignal::GpuUtil,
+    SwSignal::GpuMemory,
+    SwSignal::CopyThroughput,
+    SwSignal::StepTime,
+    SwSignal::TransportLatency,
+];
+
+impl SwSignal {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SwSignal::RequestArrival => "request_arrival",
+            SwSignal::SequenceLength => "sequence_length",
+            SwSignal::DecodeProgress => "decode_progress",
+            SwSignal::QueueDepth => "queue_depth",
+            SwSignal::KvOccupancy => "kv_occupancy",
+            SwSignal::GpuUtil => "gpu_util",
+            SwSignal::GpuMemory => "gpu_memory",
+            SwSignal::CopyThroughput => "copy_throughput",
+            SwSignal::StepTime => "step_time",
+            SwSignal::TransportLatency => "transport_latency",
+        }
+    }
+
+    /// Origin per Table 2(b): software record-keeping vs hardware counters.
+    pub fn origin(&self) -> &'static str {
+        match self {
+            SwSignal::RequestArrival
+            | SwSignal::SequenceLength
+            | SwSignal::DecodeProgress
+            | SwSignal::QueueDepth
+            | SwSignal::KvOccupancy
+            | SwSignal::TransportLatency => "SW (record keeping)",
+            SwSignal::GpuUtil | SwSignal::GpuMemory => "HW counters via NVML",
+            SwSignal::CopyThroughput => "HW counters via driver",
+            SwSignal::StepTime => "HW accessible (CUDA events)",
+        }
+    }
+
+    /// Per-sample host-side collection overhead model, in ns. SW
+    /// record-keeping is cheap; NVML-style polling is notoriously not.
+    pub fn overhead_ns(&self) -> u64 {
+        match self {
+            SwSignal::RequestArrival | SwSignal::SequenceLength => 80,
+            SwSignal::DecodeProgress | SwSignal::QueueDepth => 60,
+            SwSignal::KvOccupancy => 120,
+            SwSignal::TransportLatency => 150,
+            SwSignal::GpuUtil | SwSignal::GpuMemory => 25_000, // NVML ioctl
+            SwSignal::CopyThroughput => 12_000,
+            SwSignal::StepTime => 3_000, // cudaEventElapsedTime sync
+        }
+    }
+}
+
+/// Windowed accumulation of software signals for one engine instance.
+#[derive(Debug, Default)]
+pub struct SwWindow {
+    stats: [Welford; ALL_SW_SIGNALS.len()],
+    samples: u64,
+    overhead_ns: u64,
+    start: SimTime,
+}
+
+/// Snapshot of software-side features for one window.
+#[derive(Debug, Clone, Default)]
+pub struct SwSnapshot {
+    pub start: SimTime,
+    pub end: SimTime,
+    pub stats: [Welford; ALL_SW_SIGNALS.len()],
+    pub samples: u64,
+    /// Host CPU time burned collecting these samples this window.
+    pub overhead_ns: u64,
+}
+
+fn idx(sig: SwSignal) -> usize {
+    ALL_SW_SIGNALS.iter().position(|s| *s == sig).unwrap()
+}
+
+impl SwWindow {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record(&mut self, sig: SwSignal, value: f64) {
+        self.stats[idx(sig)].push(value);
+        self.samples += 1;
+        self.overhead_ns += sig.overhead_ns();
+    }
+
+    pub fn snapshot(&mut self, now: SimTime) -> SwSnapshot {
+        let snap = SwSnapshot {
+            start: self.start,
+            end: now,
+            stats: std::mem::take(&mut self.stats),
+            samples: self.samples,
+            overhead_ns: self.overhead_ns,
+        };
+        self.samples = 0;
+        self.overhead_ns = 0;
+        self.start = now;
+        snap
+    }
+}
+
+impl SwSnapshot {
+    pub fn get(&self, sig: SwSignal) -> &Welford {
+        &self.stats[idx(sig)]
+    }
+
+    pub fn duration(&self) -> SimDur {
+        self.end - self.start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot() {
+        let mut w = SwWindow::new();
+        w.record(SwSignal::QueueDepth, 5.0);
+        w.record(SwSignal::QueueDepth, 7.0);
+        w.record(SwSignal::GpuUtil, 0.9);
+        let s = w.snapshot(SimTime(1000));
+        assert_eq!(s.get(SwSignal::QueueDepth).count(), 2);
+        assert!((s.get(SwSignal::QueueDepth).mean() - 6.0).abs() < 1e-12);
+        assert_eq!(s.samples, 3);
+        // NVML poll dominates overhead
+        assert!(s.overhead_ns > 25_000);
+        // reset after snapshot
+        let s2 = w.snapshot(SimTime(2000));
+        assert_eq!(s2.samples, 0);
+        assert_eq!(s2.start, SimTime(1000));
+    }
+
+    #[test]
+    fn signal_table_is_complete() {
+        for sig in ALL_SW_SIGNALS {
+            assert!(!sig.name().is_empty());
+            assert!(!sig.origin().is_empty());
+            assert!(sig.overhead_ns() > 0);
+        }
+    }
+
+    #[test]
+    fn nvml_polling_costlier_than_record_keeping() {
+        assert!(SwSignal::GpuUtil.overhead_ns() > 100 * SwSignal::RequestArrival.overhead_ns());
+    }
+}

@@ -1,0 +1,770 @@
+//! Sliding-window feature extraction over telemetry streams.
+//!
+//! [`WindowAccum`] ingests [`TelemetryEvent`]s in O(1) each (this is the DPU
+//! hot path — see EXPERIMENTS.md §Perf) and produces a [`WindowSnapshot`] at
+//! every window tick. Detectors consume snapshots, never raw events.
+//!
+//! Cross-window state (last-event times for gap statistics, flow lifetimes,
+//! in-flight collective trackers) survives the snapshot; per-window
+//! accumulators reset.
+
+use crate::util::fastmap::FastMap;
+
+use crate::ids::{CollId, FlowId, NodeId};
+use crate::sim::{SimDur, SimTime};
+use crate::telemetry::event::{CollKind, Phase, TelemetryEvent, TelemetryKind};
+use crate::util::stats::Welford;
+
+/// Per-direction transfer statistics for one window.
+#[derive(Debug, Clone, Default)]
+pub struct XferStats {
+    pub count: u64,
+    pub bytes: Welford,
+    pub gap_ns: Welford,
+    pub latency_ns: Welford,
+    /// Counts split by lifecycle phase (prefill vs decode), §4.2 tracing.
+    pub prefill_count: u64,
+    pub decode_count: u64,
+    /// Decode-phase transaction sizes (batch shrinkage shows here, PC10).
+    pub decode_bytes: Welford,
+}
+
+impl XferStats {
+    fn record(&mut self, bytes: u64, latency_ns: u64, phase: Option<Phase>) {
+        self.count += 1;
+        self.bytes.push(bytes as f64);
+        self.latency_ns.push(latency_ns as f64);
+        match phase {
+            Some(Phase::Prefill) => self.prefill_count += 1,
+            Some(Phase::Decode) => {
+                self.decode_count += 1;
+                self.decode_bytes.push(bytes as f64);
+            }
+            None => {}
+        }
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.bytes.mean() * self.count as f64
+    }
+}
+
+/// Per-GPU activity within one window (intra-node skew detection, PC4/PC10).
+#[derive(Debug, Clone, Default)]
+pub struct GpuWindow {
+    pub h2d_count: u64,
+    pub h2d_bytes: u64,
+    pub d2h_count: u64,
+    pub d2h_bytes: u64,
+    pub doorbell_count: u64,
+    pub p2p_count: u64,
+}
+
+/// Lifetime state for one flow (persists across windows).
+#[derive(Debug, Clone)]
+pub struct FlowState {
+    pub first_seen: SimTime,
+    pub last_tx: Option<SimTime>,
+    pub ended: bool,
+    pub total_tx_count: u64,
+    pub total_rx_bytes: u64,
+    // per-window accumulators (reset each snapshot)
+    pub win_rx_bytes: u64,
+    pub win_tx_count: u64,
+    pub win_tx_gap: Welford,
+    pub win_rx_gap: Welford,
+    pub last_rx: Option<SimTime>,
+}
+
+impl FlowState {
+    fn new(t: SimTime) -> Self {
+        FlowState {
+            first_seen: t,
+            last_tx: None,
+            ended: false,
+            total_tx_count: 0,
+            total_rx_bytes: 0,
+            win_rx_bytes: 0,
+            win_tx_count: 0,
+            win_tx_gap: Welford::new(),
+            win_rx_gap: Welford::new(),
+            last_rx: None,
+        }
+    }
+}
+
+/// In-flight collective arrival tracker.
+#[derive(Debug, Clone)]
+struct CollTrack {
+    kind: CollKind,
+    first: SimTime,
+    last: SimTime,
+    seen: u32,
+    expected: u32,
+    bytes_per_rank: Welford,
+}
+
+/// Per-collective-kind window statistics.
+#[derive(Debug, Clone, Default)]
+pub struct CollStats {
+    pub completed: u64,
+    pub stalled: u64,
+    /// Max-min arrival spread of completed collectives (ns) — the TP
+    /// straggler red flag.
+    pub spread_ns: Welford,
+    pub bytes_per_rank_cov: Welford,
+    pub burst_count: u64,
+    pub total_bytes: u64,
+    /// Per-burst send-to-arrival latency (ns).
+    pub latency_ns: Welford,
+}
+
+/// One finished window of DPU-observable features for a node.
+#[derive(Debug, Clone, Default)]
+pub struct WindowSnapshot {
+    pub node: NodeId,
+    pub start: SimTime,
+    pub end: SimTime,
+
+    // PCIe observer
+    pub h2d: XferStats,
+    pub d2h: XferStats,
+    pub doorbell_count: u64,
+    pub doorbell_gap_ns: Welford,
+    /// Gap from an H2D completion to the next doorbell on the same GPU —
+    /// long gaps mean the GPU got data but nothing launched (PC1/PC3/PC8).
+    pub h2d_to_doorbell_ns: Welford,
+    pub mem_reg_count: u64,
+    pub mem_unreg_count: u64,
+    pub p2p_pcie: XferStats,
+    pub pcie_busy: Welford,
+    pub per_gpu: Vec<GpuWindow>,
+
+    // NIC north-south
+    pub nic_rx_count: u64,
+    pub nic_rx_bytes: u64,
+    pub nic_rx_gap_ns: Welford,
+    pub nic_rx_qdepth: Welford,
+    pub nic_tx_count: u64,
+    pub nic_tx_bytes: u64,
+    pub nic_tx_gap_ns: Welford,
+    pub nic_tx_qdepth: Welford,
+    pub nic_tx_wait_ns: Welford,
+    pub retx_in: u64,
+    pub retx_out: u64,
+    pub retx_fabric: u64,
+    pub drop_in: u64,
+    pub drop_out: u64,
+    pub drop_fabric: u64,
+    pub flow_ends: u64,
+    pub active_flows: u64,
+    /// Dispersion of per-flow ingress volume across flows active this window
+    /// (flow skew, NS3).
+    pub flow_rx_dispersion: Welford,
+    /// EWMA share of ingress bytes owned by the hottest flow (NS3): a
+    /// decayed per-flow byte counter smoothed across windows.
+    pub top_flow_share: f64,
+    /// Mean per-flow egress inter-departure CoV (egress jitter, NS6).
+    pub egress_jitter_cov: f64,
+    /// Flows that ended this window with ≪ median egress activity of their
+    /// still-active peers (early completion skew, NS8).
+    pub early_end_count: u64,
+    /// Median egress length of flows ending this window relative to the
+    /// median of still-active peers (1.0 = equal; small = early stops).
+    pub end_len_ratio: f64,
+    /// Dispersion (CoV) of completed flows' egress lengths this window —
+    /// bimodal completions (early stops among long peers) inflate this.
+    pub ended_len_cov: f64,
+
+    // East-west
+    pub tp: CollStats,
+    pub pp: CollStats,
+    pub kv: CollStats,
+    /// Gap between successive stage-handoff bursts (PP bubble, EW2).
+    pub handoff_gap_ns: Welford,
+    pub handoff_count: u64,
+    pub handoff_bytes: u64,
+    /// Gap from this node's last kernel doorbell to its outbound handoff
+    /// send — the stage's compute span, observable at the source (EW2).
+    /// Decode-phase only: prefill spans are ms-scale and would swamp it.
+    pub db_to_handoff_ns: Welford,
+    /// Per-source-node collective bytes dispersion (cross-node skew, EW3).
+    pub node_coll_dispersion: Welford,
+    pub rdma_count: u64,
+    pub rdma_credit_wait_ns: Welford,
+    pub rdma_latency_ns: Welford,
+    pub credit_update_gap_ns: Welford,
+}
+
+impl WindowSnapshot {
+    pub fn duration(&self) -> SimDur {
+        self.end - self.start
+    }
+
+    fn dur_s(&self) -> f64 {
+        self.duration().as_secs_f64().max(1e-9)
+    }
+
+    /// Events/sec style rate helpers used by the detectors.
+    pub fn h2d_rate(&self) -> f64 {
+        self.h2d.count as f64 / self.dur_s()
+    }
+
+    pub fn d2h_rate(&self) -> f64 {
+        self.d2h.count as f64 / self.dur_s()
+    }
+
+    pub fn rx_byte_rate(&self) -> f64 {
+        self.nic_rx_bytes as f64 / self.dur_s()
+    }
+
+    pub fn tx_byte_rate(&self) -> f64 {
+        self.nic_tx_bytes as f64 / self.dur_s()
+    }
+
+    pub fn doorbell_rate(&self) -> f64 {
+        self.doorbell_count as f64 / self.dur_s()
+    }
+
+    pub fn pcie_byte_rate(&self) -> f64 {
+        (self.h2d.total_bytes() + self.d2h.total_bytes() + self.p2p_pcie.total_bytes())
+            / self.dur_s()
+    }
+}
+
+/// Streaming accumulator; one per (node, vantage).
+#[derive(Debug)]
+pub struct WindowAccum {
+    node: NodeId,
+    n_gpus_hint: usize,
+    window_start: SimTime,
+
+    cur: WindowSnapshot,
+
+    // cross-window gap state
+    last_h2d: Option<SimTime>,
+    last_d2h: Option<SimTime>,
+    last_doorbell: Option<SimTime>,
+    last_h2d_per_gpu: FastMap<u32, SimTime>,
+    last_rx: Option<SimTime>,
+    last_tx: Option<SimTime>,
+    last_handoff: Option<SimTime>,
+    last_credit: FastMap<u32, SimTime>,
+
+    flows: FastMap<u32, FlowState>,
+    colls: FastMap<u32, CollTrack>,
+    node_coll_bytes: FastMap<u32, u64>,
+    /// Decayed cumulative RX bytes per flow (NS3 skew feature).
+    flow_rx_ewma: FastMap<u32, f64>,
+}
+
+/// Cap on tracked flows; beyond this, new flows share an overflow bucket.
+/// A real DPU flow table is similarly bounded (CAM/SRAM limits).
+const FLOW_TABLE_CAP: usize = 4096;
+/// Collectives that have not completed within this many ns by snapshot time
+/// count as stalled.
+const COLL_STALL_NS: u64 = 50_000_000; // 50 ms
+
+impl WindowAccum {
+    pub fn new(node: NodeId, n_gpus_hint: usize) -> Self {
+        let mut cur = WindowSnapshot::default();
+        cur.node = node;
+        cur.per_gpu = vec![GpuWindow::default(); n_gpus_hint];
+        WindowAccum {
+            node,
+            n_gpus_hint,
+            window_start: SimTime::ZERO,
+            cur,
+            last_h2d: None,
+            last_d2h: None,
+            last_doorbell: None,
+            last_h2d_per_gpu: FastMap::default(),
+            last_rx: None,
+            last_tx: None,
+            last_handoff: None,
+            last_credit: FastMap::default(),
+            flows: FastMap::default(),
+            colls: FastMap::default(),
+            node_coll_bytes: FastMap::default(),
+            flow_rx_ewma: FastMap::default(),
+        }
+    }
+
+    fn gpu_slot(&mut self, gpu_global: u32) -> &mut GpuWindow {
+        // Per-node GPU indices: global id modulo the node's GPU count.
+        let idx = (gpu_global as usize) % self.n_gpus_hint.max(1);
+        &mut self.cur.per_gpu[idx]
+    }
+
+    /// Ingest one event. O(1); the telemetry hot path.
+    pub fn ingest(&mut self, ev: &TelemetryEvent) {
+        debug_assert_eq!(ev.node, self.node);
+        let t = ev.t;
+        match &ev.kind {
+            TelemetryKind::DmaH2d { gpu, bytes, latency_ns, phase } => {
+                if let Some(prev) = self.last_h2d.replace(t) {
+                    self.cur.h2d.gap_ns.push((t - prev).ns() as f64);
+                }
+                self.cur.h2d.record(*bytes, *latency_ns, Some(*phase));
+                self.last_h2d_per_gpu.insert(gpu.0, t);
+                let slot = self.gpu_slot(gpu.0);
+                slot.h2d_count += 1;
+                slot.h2d_bytes += bytes;
+            }
+            TelemetryKind::DmaD2h { gpu, bytes, latency_ns, phase } => {
+                if let Some(prev) = self.last_d2h.replace(t) {
+                    self.cur.d2h.gap_ns.push((t - prev).ns() as f64);
+                }
+                self.cur.d2h.record(*bytes, *latency_ns, Some(*phase));
+                let slot = self.gpu_slot(gpu.0);
+                slot.d2h_count += 1;
+                slot.d2h_bytes += bytes;
+            }
+            TelemetryKind::Doorbell { gpu } => {
+                self.cur.doorbell_count += 1;
+                if let Some(prev) = self.last_doorbell.replace(t) {
+                    self.cur.doorbell_gap_ns.push((t - prev).ns() as f64);
+                }
+                if let Some(h2d_t) = self.last_h2d_per_gpu.get(&gpu.0) {
+                    self.cur.h2d_to_doorbell_ns.push((t - *h2d_t).ns() as f64);
+                }
+                self.gpu_slot(gpu.0).doorbell_count += 1;
+            }
+            TelemetryKind::MemRegistration { unmap, .. } => {
+                if *unmap {
+                    self.cur.mem_unreg_count += 1;
+                } else {
+                    self.cur.mem_reg_count += 1;
+                }
+            }
+            TelemetryKind::P2pPcie { from, bytes, latency_ns, .. } => {
+                self.cur.p2p_pcie.record(*bytes, *latency_ns, None);
+                self.gpu_slot(from.0).p2p_count += 1;
+            }
+            TelemetryKind::PcieUtil { busy, .. } => {
+                self.cur.pcie_busy.push(*busy);
+            }
+            TelemetryKind::NicRx { flow, bytes, queue_depth } => {
+                self.cur.nic_rx_count += 1;
+                self.cur.nic_rx_bytes += bytes;
+                self.cur.nic_rx_qdepth.push(*queue_depth as f64);
+                if let Some(prev) = self.last_rx.replace(t) {
+                    self.cur.nic_rx_gap_ns.push((t - prev).ns() as f64);
+                }
+                *self.flow_rx_ewma.entry(flow.0).or_insert(0.0) += *bytes as f64;
+                let fs = self.flow_entry(*flow, t);
+                fs.total_rx_bytes += bytes;
+                fs.win_rx_bytes += bytes;
+                if let Some(prev) = fs.last_rx.replace(t) {
+                    fs.win_rx_gap.push((t - prev).ns() as f64);
+                }
+            }
+            TelemetryKind::NicTx { flow, bytes, queue_depth, wait_ns } => {
+                self.cur.nic_tx_count += 1;
+                self.cur.nic_tx_bytes += bytes;
+                self.cur.nic_tx_qdepth.push(*queue_depth as f64);
+                self.cur.nic_tx_wait_ns.push(*wait_ns as f64);
+                if let Some(prev) = self.last_tx.replace(t) {
+                    self.cur.nic_tx_gap_ns.push((t - prev).ns() as f64);
+                }
+                let fs = self.flow_entry(*flow, t);
+                fs.total_tx_count += 1;
+                fs.win_tx_count += 1;
+                if let Some(prev) = fs.last_tx.replace(t) {
+                    fs.win_tx_gap.push((t - prev).ns() as f64);
+                }
+            }
+            TelemetryKind::Retransmit { ingress, fabric, .. } => {
+                if *fabric {
+                    self.cur.retx_fabric += 1;
+                } else if *ingress {
+                    self.cur.retx_in += 1;
+                } else {
+                    self.cur.retx_out += 1;
+                }
+            }
+            TelemetryKind::PktDrop { ingress, fabric, .. } => {
+                if *fabric {
+                    self.cur.drop_fabric += 1;
+                } else if *ingress {
+                    self.cur.drop_in += 1;
+                } else {
+                    self.cur.drop_out += 1;
+                }
+            }
+            TelemetryKind::FlowEnd { flow, .. } => {
+                self.cur.flow_ends += 1;
+                let fs = self.flow_entry(*flow, t);
+                fs.ended = true;
+            }
+            TelemetryKind::CollectiveBurst {
+                coll, kind, from_node, expected_ranks, bytes, latency_ns, ..
+            } => {
+                *self.node_coll_bytes.entry(from_node.0).or_insert(0) += bytes;
+                let stats = self.coll_stats_mut(*kind);
+                stats.burst_count += 1;
+                stats.total_bytes += bytes;
+                stats.latency_ns.push(*latency_ns as f64);
+                let tr = self.colls.entry(coll.0).or_insert_with(|| CollTrack {
+                    kind: *kind,
+                    first: t,
+                    last: t,
+                    seen: 0,
+                    expected: *expected_ranks,
+                    bytes_per_rank: Welford::new(),
+                });
+                tr.seen += 1;
+                tr.last = t;
+                tr.bytes_per_rank.push(*bytes as f64);
+                if tr.seen >= tr.expected {
+                    let spread = (tr.last - tr.first).ns() as f64;
+                    let cov = tr.bytes_per_rank.cov();
+                    let kind = tr.kind;
+                    self.colls.remove(&coll.0);
+                    let stats = self.coll_stats_mut(kind);
+                    stats.completed += 1;
+                    stats.spread_ns.push(spread);
+                    stats.bytes_per_rank_cov.push(cov);
+                }
+            }
+            TelemetryKind::StageHandoff { bytes, outbound, phase, .. } => {
+                if *outbound {
+                    // Source-side: measure the stage's compute span (last
+                    // doorbell -> handoff send). Decode only: prefill spans
+                    // are orders of magnitude longer and poison the stat.
+                    if *phase == Phase::Decode {
+                        if let Some(db) = self.last_doorbell {
+                            self.cur.db_to_handoff_ns.push((t - db).ns() as f64);
+                        }
+                    }
+                } else {
+                    self.cur.handoff_count += 1;
+                    self.cur.handoff_bytes += bytes;
+                    if let Some(prev) = self.last_handoff.replace(t) {
+                        self.cur.handoff_gap_ns.push((t - prev).ns() as f64);
+                    }
+                }
+            }
+            TelemetryKind::RdmaOp { bytes: _, credit_wait_ns, latency_ns, .. } => {
+                self.cur.rdma_count += 1;
+                self.cur.rdma_credit_wait_ns.push(*credit_wait_ns as f64);
+                self.cur.rdma_latency_ns.push(*latency_ns as f64);
+            }
+            TelemetryKind::CreditUpdate { qp } => {
+                if let Some(prev) = self.last_credit.insert(qp.0, t) {
+                    self.cur.credit_update_gap_ns.push((t - prev).ns() as f64);
+                }
+            }
+            // DPU-invisible kinds must be filtered by the caller
+            // (dpu::visibility); if they reach here we're a software observer
+            // that can legitimately count them — ignore for window features.
+            TelemetryKind::NvlinkBurst { .. }
+            | TelemetryKind::GpuKernel { .. }
+            | TelemetryKind::CpuLocal { .. } => {}
+        }
+    }
+
+    fn flow_entry(&mut self, flow: FlowId, t: SimTime) -> &mut FlowState {
+        if self.flows.len() >= FLOW_TABLE_CAP && !self.flows.contains_key(&flow.0) {
+            // overflow bucket: fold into flow 0 semantics
+            return self.flows.entry(u32::MAX).or_insert_with(|| FlowState::new(t));
+        }
+        self.flows.entry(flow.0).or_insert_with(|| FlowState::new(t))
+    }
+
+    fn coll_stats_mut(&mut self, kind: CollKind) -> &mut CollStats {
+        match kind {
+            CollKind::TpAllreduce => &mut self.cur.tp,
+            CollKind::PpHandoff => &mut self.cur.pp,
+            CollKind::KvTransfer => &mut self.cur.kv,
+        }
+    }
+
+    /// Close the window at `now`, emit the snapshot, and reset per-window state.
+    pub fn snapshot(&mut self, now: SimTime) -> WindowSnapshot {
+        // Finalize flow-derived dispersion features.
+        let mut active = 0u64;
+        let mut rx_disp = Welford::new();
+        let mut jitter_sum = 0.0;
+        let mut jitter_n = 0u64;
+        let mut active_tx: Vec<f64> = Vec::new();
+        let mut ended_tx: Vec<f64> = Vec::new();
+        for fs in self.flows.values() {
+            if fs.ended {
+                ended_tx.push(fs.total_tx_count as f64);
+                continue;
+            }
+            active += 1;
+            if fs.win_rx_bytes > 0 {
+                rx_disp.push(fs.win_rx_bytes as f64);
+            }
+            if fs.win_tx_gap.count() >= 3 {
+                jitter_sum += fs.win_tx_gap.cov();
+                jitter_n += 1;
+            }
+            if fs.win_tx_count > 0 {
+                active_tx.push(fs.total_tx_count as f64);
+            }
+        }
+        self.cur.active_flows = active;
+        self.cur.flow_rx_dispersion = rx_disp;
+        self.cur.egress_jitter_cov = if jitter_n > 0 { jitter_sum / jitter_n as f64 } else { 0.0 };
+        // Early-end: flows that ended this window with well under the median
+        // egress activity of still-active peers.
+        self.cur.early_end_count = 0;
+        self.cur.end_len_ratio = 1.0;
+        self.cur.ended_len_cov = 0.0;
+        if ended_tx.len() >= 3 {
+            let mut w = Welford::new();
+            for &e in &ended_tx {
+                w.push(e);
+            }
+            self.cur.ended_len_cov = w.cov();
+        }
+        if !active_tx.is_empty() && self.cur.flow_ends > 0 && !ended_tx.is_empty() {
+            let mut sorted = active_tx.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let median = sorted[sorted.len() / 2];
+            self.cur.early_end_count = ended_tx
+                .iter()
+                .filter(|&&txc| txc < 0.5 * median && median >= 3.0)
+                .count() as u64;
+            let mut es = ended_tx.clone();
+            es.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let end_median = es[es.len() / 2];
+            if median >= 1.0 {
+                self.cur.end_len_ratio = (end_median / median).min(4.0);
+            }
+        }
+
+        // Top-flow share from the decayed per-flow RX counters.
+        let total_ewma: f64 = self.flow_rx_ewma.values().sum();
+        let top_ewma = self.flow_rx_ewma.values().cloned().fold(0.0, f64::max);
+        self.cur.top_flow_share = if total_ewma > 1.0 { top_ewma / total_ewma } else { 0.0 };
+        for v in self.flow_rx_ewma.values_mut() {
+            *v *= 0.95;
+        }
+        self.flow_rx_ewma.retain(|_, v| *v > 1.0);
+
+        // Cross-node collective byte dispersion.
+        let mut nd = Welford::new();
+        for &b in self.node_coll_bytes.values() {
+            nd.push(b as f64);
+        }
+        self.cur.node_coll_dispersion = nd;
+
+        // Stalled collectives: in flight and old.
+        let stall_before = SimTime(now.ns().saturating_sub(COLL_STALL_NS));
+        let mut stalled: Vec<u32> = Vec::new();
+        for (id, tr) in &self.colls {
+            if tr.first <= stall_before {
+                stalled.push(*id);
+            }
+        }
+        for id in stalled {
+            if let Some(tr) = self.colls.remove(&id) {
+                self.coll_stats_mut(tr.kind).stalled += 1;
+            }
+        }
+
+        let mut snap = WindowSnapshot::default();
+        snap.node = self.node;
+        snap.per_gpu = vec![GpuWindow::default(); self.n_gpus_hint];
+        std::mem::swap(&mut snap, &mut self.cur);
+        snap.start = self.window_start;
+        snap.end = now;
+        self.window_start = now;
+
+        // Reset per-window flow accumulators; drop ended flows (their
+        // lifetime stats have been consumed).
+        self.flows.retain(|_, fs| !fs.ended);
+        for fs in self.flows.values_mut() {
+            fs.win_rx_bytes = 0;
+            fs.win_tx_count = 0;
+            fs.win_tx_gap = Welford::new();
+            fs.win_rx_gap = Welford::new();
+        }
+        self.node_coll_bytes.clear();
+        snap
+    }
+
+    pub fn tracked_flows(&self) -> usize {
+        self.flows.len()
+    }
+
+    pub fn inflight_collectives(&self) -> usize {
+        self.colls.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::{GpuId, QpId, ReqId, StageId};
+
+    fn ev(t: u64, kind: TelemetryKind) -> TelemetryEvent {
+        TelemetryEvent { t: SimTime(t), node: NodeId(0), kind }
+    }
+
+    #[test]
+    fn h2d_gap_and_rate() {
+        let mut w = WindowAccum::new(NodeId(0), 2);
+        for i in 0..10u64 {
+            w.ingest(&ev(
+                i * 1000,
+                TelemetryKind::DmaH2d {
+                    gpu: GpuId(0),
+                    bytes: 4096,
+                    latency_ns: 500,
+                    phase: Phase::Prefill,
+                },
+            ));
+        }
+        let s = w.snapshot(SimTime(10_000));
+        assert_eq!(s.h2d.count, 10);
+        assert_eq!(s.h2d.prefill_count, 10);
+        assert!((s.h2d.gap_ns.mean() - 1000.0).abs() < 1e-9);
+        assert!((s.h2d_rate() - 1e6).abs() / 1e6 < 0.01);
+    }
+
+    #[test]
+    fn gap_state_survives_snapshot() {
+        let mut w = WindowAccum::new(NodeId(0), 1);
+        w.ingest(&ev(1000, TelemetryKind::Doorbell { gpu: GpuId(0) }));
+        let _ = w.snapshot(SimTime(2000));
+        w.ingest(&ev(3000, TelemetryKind::Doorbell { gpu: GpuId(0) }));
+        let s = w.snapshot(SimTime(4000));
+        // Gap spans the window boundary: 3000-1000.
+        assert_eq!(s.doorbell_gap_ns.count(), 1);
+        assert!((s.doorbell_gap_ns.mean() - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn collective_spread_on_completion() {
+        let mut w = WindowAccum::new(NodeId(0), 1);
+        for (rank, t) in [(0u32, 100u64), (1, 200), (2, 900)] {
+            w.ingest(&ev(
+                t,
+                TelemetryKind::CollectiveBurst {
+                    coll: CollId(7),
+                    kind: CollKind::TpAllreduce,
+                    from_node: NodeId(rank),
+                    rank,
+                    expected_ranks: 3,
+                    bytes: 1024,
+                    latency_ns: 500,
+                },
+            ));
+        }
+        let s = w.snapshot(SimTime(10_000));
+        assert_eq!(s.tp.completed, 1);
+        assert_eq!(s.tp.stalled, 0);
+        assert!((s.tp.spread_ns.mean() - 800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn incomplete_old_collective_counts_stalled() {
+        let mut w = WindowAccum::new(NodeId(0), 1);
+        w.ingest(&ev(
+            100,
+            TelemetryKind::CollectiveBurst {
+                coll: CollId(9),
+                kind: CollKind::PpHandoff,
+                from_node: NodeId(1),
+                rank: 0,
+                expected_ranks: 4,
+                bytes: 10,
+                latency_ns: 500,
+            },
+        ));
+        let s = w.snapshot(SimTime(COLL_STALL_NS + 200));
+        assert_eq!(s.pp.stalled, 1);
+        assert_eq!(w.inflight_collectives(), 0);
+    }
+
+    #[test]
+    fn early_end_detected() {
+        let mut w = WindowAccum::new(NodeId(0), 1);
+        // 3 active flows with healthy egress counts
+        for f in 1..=3u32 {
+            for i in 0..20u64 {
+                w.ingest(&ev(
+                    i * 100 + f as u64,
+                    TelemetryKind::NicTx {
+                        flow: FlowId(f),
+                        bytes: 64,
+                        queue_depth: 1,
+                        wait_ns: 10,
+                    },
+                ));
+            }
+        }
+        // flow 9 sends 2 tokens then ends
+        for i in 0..2u64 {
+            w.ingest(&ev(
+                i * 100,
+                TelemetryKind::NicTx { flow: FlowId(9), bytes: 64, queue_depth: 1, wait_ns: 10 },
+            ));
+        }
+        w.ingest(&ev(300, TelemetryKind::FlowEnd { flow: FlowId(9), req: ReqId(0) }));
+        let s = w.snapshot(SimTime(10_000));
+        assert_eq!(s.flow_ends, 1);
+        assert_eq!(s.early_end_count, 1);
+        assert_eq!(s.active_flows, 3);
+    }
+
+    #[test]
+    fn ended_flows_are_dropped_after_snapshot() {
+        let mut w = WindowAccum::new(NodeId(0), 1);
+        w.ingest(&ev(
+            0,
+            TelemetryKind::NicTx { flow: FlowId(1), bytes: 1, queue_depth: 0, wait_ns: 0 },
+        ));
+        w.ingest(&ev(10, TelemetryKind::FlowEnd { flow: FlowId(1), req: ReqId(0) }));
+        let _ = w.snapshot(SimTime(100));
+        assert_eq!(w.tracked_flows(), 0);
+    }
+
+    #[test]
+    fn handoff_gap_tracked() {
+        let mut w = WindowAccum::new(NodeId(0), 1);
+        for t in [0u64, 500, 2500] {
+            w.ingest(&ev(
+                t,
+                TelemetryKind::StageHandoff {
+                    from_stage: StageId(0),
+                    to_stage: StageId(1),
+                    bytes: 100,
+                    outbound: false,
+                    phase: Phase::Decode,
+                },
+            ));
+        }
+        let s = w.snapshot(SimTime(5000));
+        assert_eq!(s.handoff_count, 3);
+        assert_eq!(s.handoff_gap_ns.count(), 2);
+        assert_eq!(s.handoff_gap_ns.max(), 2000.0);
+    }
+
+    #[test]
+    fn credit_gap_per_qp() {
+        let mut w = WindowAccum::new(NodeId(0), 1);
+        w.ingest(&ev(0, TelemetryKind::CreditUpdate { qp: QpId(1) }));
+        w.ingest(&ev(100, TelemetryKind::CreditUpdate { qp: QpId(2) }));
+        w.ingest(&ev(5000, TelemetryKind::CreditUpdate { qp: QpId(1) }));
+        let s = w.snapshot(SimTime(10_000));
+        // Only the QP1 pair forms a gap (5000ns); QP2 has no second update.
+        assert_eq!(s.credit_update_gap_ns.count(), 1);
+        assert!((s.credit_update_gap_ns.mean() - 5000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn invisible_kinds_do_not_crash_or_count(){
+        let mut w = WindowAccum::new(NodeId(0), 1);
+        w.ingest(&ev(0, TelemetryKind::NvlinkBurst { from: GpuId(0), to: GpuId(1), bytes: 10 }));
+        w.ingest(&ev(0, TelemetryKind::GpuKernel { gpu: GpuId(0), dur_ns: 10, flops: 1.0 }));
+        let s = w.snapshot(SimTime(100));
+        assert_eq!(s.h2d.count, 0);
+        assert_eq!(s.nic_rx_count, 0);
+    }
+}

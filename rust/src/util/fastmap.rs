@@ -1,0 +1,71 @@
+//! Multiplicative-hash HashMap for small integer keys on the telemetry hot
+//! path. std's default SipHash is DoS-resistant but costs ~2x on per-event
+//! map ops; DPU window accumulation hashes trusted internal ids only.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Fibonacci-multiplicative hasher for u32/u64-sized keys.
+#[derive(Default)]
+pub struct FibHasher {
+    state: u64,
+}
+
+impl Hasher for FibHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // Generic fallback (rare: composite keys).
+        for &b in bytes {
+            self.state = (self.state ^ b as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        }
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.state = (v as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        self.state ^= self.state >> 29;
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.state = v.wrapping_mul(0x9E3779B97F4A7C15);
+        self.state ^= self.state >> 29;
+    }
+}
+
+/// Drop-in HashMap with the fast hasher.
+pub type FastMap<K, V> = HashMap<K, V, BuildHasherDefault<FibHasher>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn behaves_like_a_map() {
+        let mut m: FastMap<u32, u64> = FastMap::default();
+        for i in 0..1000u32 {
+            m.insert(i, i as u64 * 3);
+        }
+        assert_eq!(m.len(), 1000);
+        for i in 0..1000u32 {
+            assert_eq!(m[&i], i as u64 * 3);
+        }
+        m.retain(|k, _| k % 2 == 0);
+        assert_eq!(m.len(), 500);
+    }
+
+    #[test]
+    fn distributes_sequential_keys() {
+        // Fibonacci hashing must spread consecutive ids across buckets.
+        let mut h1 = FibHasher::default();
+        h1.write_u32(1);
+        let mut h2 = FibHasher::default();
+        h2.write_u32(2);
+        assert_ne!(h1.finish() & 0xFF, h2.finish() & 0xFF);
+    }
+}

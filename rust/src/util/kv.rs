@@ -1,0 +1,109 @@
+//! Tiny `key=value` line-format parser — used for `artifacts/MANIFEST.txt`
+//! and experiment config files (serde/toml are not vendored offline).
+//!
+//! Format: one `key=value` per line; `#` starts a comment; repeated keys
+//! accumulate (used for `param=` and `artifact=` lists).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct KvFile {
+    map: BTreeMap<String, Vec<String>>,
+    order: Vec<(String, String)>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum KvError {
+    #[error("line {0}: missing '=' in {1:?}")]
+    MissingEquals(usize, String),
+    #[error("missing required key {0:?}")]
+    MissingKey(String),
+    #[error("key {0:?}: invalid value {1:?}: {2}")]
+    BadValue(String, String, String),
+}
+
+impl KvFile {
+    pub fn parse(text: &str) -> Result<KvFile, KvError> {
+        let mut kv = KvFile::default();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| KvError::MissingEquals(i + 1, line.to_string()))?;
+            let (key, val) = (key.trim().to_string(), val.trim().to_string());
+            kv.map.entry(key.clone()).or_default().push(val.clone());
+            kv.order.push((key, val));
+        }
+        Ok(kv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).and_then(|v| v.first()).map(String::as_str)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str, KvError> {
+        self.get(key).ok_or_else(|| KvError::MissingKey(key.to_string()))
+    }
+
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.map.get(key).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    pub fn require_usize(&self, key: &str) -> Result<usize, KvError> {
+        let raw = self.require(key)?;
+        raw.parse().map_err(|e: std::num::ParseIntError| {
+            KvError::BadValue(key.to_string(), raw.to_string(), e.to_string())
+        })
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, KvError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => raw.parse().map_err(|e: std::num::ParseFloatError| {
+                KvError::BadValue(key.to_string(), raw.to_string(), e.to_string())
+            }),
+        }
+    }
+
+    /// Ordered (key, value) pairs as they appeared.
+    pub fn entries(&self) -> &[(String, String)] {
+        &self.order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_accumulates() {
+        let kv = KvFile::parse("a=1\n# comment\nb = two \nparam=x:1\nparam=y:2\n").unwrap();
+        assert_eq!(kv.get("a"), Some("1"));
+        assert_eq!(kv.get("b"), Some("two"));
+        assert_eq!(kv.get_all("param"), &["x:1".to_string(), "y:2".to_string()]);
+        assert_eq!(kv.require_usize("a").unwrap(), 1);
+    }
+
+    #[test]
+    fn missing_equals_is_error() {
+        assert!(KvFile::parse("bogus line").is_err());
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        let kv = KvFile::parse("a=1").unwrap();
+        assert!(kv.require("zz").is_err());
+        assert!(kv.require_usize("zz").is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let kv = KvFile::parse("a=xyz").unwrap();
+        assert!(kv.require_usize("a").is_err());
+        assert!(kv.get_f64("a", 0.0).is_err());
+        assert_eq!(kv.get_f64("nope", 1.5).unwrap(), 1.5);
+    }
+}

@@ -1,0 +1,21 @@
+//! Shared utilities: deterministic RNG, streaming statistics, ring buffers,
+//! JSON/table output, `key=value` parsing, and the in-repo property-testing
+//! harness. Everything here is dependency-free (offline vendoring constraint)
+//! and deterministic.
+
+pub mod fastmap;
+pub mod json;
+pub mod kv;
+pub mod prop;
+pub mod ring;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use fastmap::FastMap;
+pub use json::Json;
+pub use kv::KvFile;
+pub use ring::Ring;
+pub use rng::{Rng, Zipf};
+pub use stats::{Histogram, P2Quantile, Summary, Welford};
+pub use table::Table;

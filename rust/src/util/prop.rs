@@ -1,0 +1,154 @@
+//! In-repo property-testing harness.
+//!
+//! `proptest` is not vendored in this offline environment, so we provide the
+//! same methodology with a small engine: N deterministic seeded cases, a
+//! generator context over [`Rng`], and on failure a report of the exact seed
+//! that reproduces the case (re-run by pinning `PropConfig::only_seed`).
+//! Shrinking is approximated by re-running failures at reduced size classes.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    pub cases: u64,
+    pub seed: u64,
+    /// When set, run exactly this case seed (failure reproduction).
+    pub only_seed: Option<u64>,
+    /// Size classes for coarse shrinking: on failure at size s, retry the
+    /// property at each smaller size to report the smallest failing class.
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xD1CE, only_seed: None, max_size: 64 }
+    }
+}
+
+impl PropConfig {
+    pub fn cases(mut self, n: u64) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Per-case generator context: an Rng plus a size class for scaling inputs.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    /// A vector of length <= size scaled by the case's size class.
+    pub fn vec_of<T>(&mut self, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+        let n = self.rng.index(self.size.max(1)) + 1;
+        (0..n).map(|_| f(&mut self.rng)).collect()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+}
+
+/// Run `property` over `cfg.cases` generated cases; panic with a reproducible
+/// seed on the first failure. The property returns `Result<(), String>`.
+pub fn check(
+    name: &str,
+    cfg: PropConfig,
+    mut property: impl FnMut(&mut Gen) -> Result<(), String>,
+) {
+    let run_one = |case_seed: u64, size: usize, property: &mut dyn FnMut(&mut Gen) -> Result<(), String>| {
+        let mut g = Gen { rng: Rng::new(case_seed, 7), size };
+        property(&mut g)
+    };
+
+    if let Some(seed) = cfg.only_seed {
+        if let Err(msg) = run_one(seed, cfg.max_size, &mut property) {
+            panic!("property '{name}' failed (pinned seed {seed}): {msg}");
+        }
+        return;
+    }
+
+    for i in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(i).wrapping_mul(0x9E3779B97F4A7C15);
+        // Grow size classes over the run: early cases are small.
+        let size = 1 + (cfg.max_size - 1) * i as usize / cfg.cases.max(1) as usize;
+        if let Err(msg) = run_one(case_seed, size, &mut property) {
+            // Coarse shrink: find the smallest size class that still fails
+            // with this seed.
+            let mut min_fail = (size, msg.clone());
+            for s in 1..size {
+                if let Err(m2) = run_one(case_seed, s, &mut property) {
+                    min_fail = (s, m2);
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed on case {i} (seed {case_seed}, size {}): {}\n\
+                 reproduce with PropConfig {{ only_seed: Some({case_seed}), .. }}",
+                min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+/// Assert-style helper for inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always-true", PropConfig::default().cases(32), |g| {
+            count += 1;
+            let v = g.vec_of(|r| r.f64());
+            prop_assert!(!v.is_empty(), "empty");
+            Ok(())
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'sum-small' failed")]
+    fn failing_property_reports_seed() {
+        check("sum-small", PropConfig::default().cases(64), |g| {
+            let v = g.vec_of(|r| r.f64());
+            prop_assert!(v.len() < 20, "len {} >= 20", v.len());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sizes_grow_over_run() {
+        let mut max_seen = 0usize;
+        check("observe-size", PropConfig::default().cases(64), |g| {
+            max_seen = max_seen.max(g.size);
+            Ok(())
+        });
+        assert!(max_seen > 32);
+    }
+}

@@ -1,0 +1,150 @@
+//! Fixed-capacity ring buffer — the telemetry bus's backing store.
+//!
+//! Overwrites the oldest entry when full (a DPU has bounded SRAM; dropping
+//! the oldest telemetry is exactly what real hardware counters do).
+
+#[derive(Debug, Clone)]
+pub struct Ring<T> {
+    buf: Vec<T>,
+    head: usize, // next write position
+    len: usize,
+    dropped: u64,
+}
+
+impl<T: Clone> Ring<T> {
+    pub fn with_capacity(cap: usize) -> Self {
+        assert!(cap > 0);
+        Ring { buf: Vec::with_capacity(cap), head: 0, len: 0, dropped: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of entries overwritten before they were read.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: T) {
+        let cap = self.buf.capacity();
+        if self.buf.len() < cap {
+            self.buf.push(x);
+        } else {
+            self.buf[self.head] = x;
+            if self.len == cap {
+                self.dropped += 1;
+            }
+        }
+        self.head = (self.head + 1) % cap;
+        if self.len < cap {
+            self.len += 1;
+        }
+    }
+
+    /// Iterate oldest -> newest.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        let cap = self.buf.capacity().max(1);
+        let start = if self.len == self.buf.len() && self.len == cap {
+            self.head
+        } else {
+            0
+        };
+        (0..self.len).map(move |i| &self.buf[(start + i) % cap.max(1)])
+    }
+
+    /// The most recent entry, if any.
+    pub fn last(&self) -> Option<&T> {
+        if self.len == 0 {
+            return None;
+        }
+        let cap = self.buf.capacity();
+        let idx = (self.head + cap - 1) % cap;
+        Some(&self.buf[idx])
+    }
+
+    /// Drain everything (oldest -> newest), leaving the ring empty.
+    pub fn drain(&mut self) -> Vec<T> {
+        let out: Vec<T> = self.iter().cloned().collect();
+        self.clear();
+        out
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_below_capacity_keeps_order() {
+        let mut r = Ring::with_capacity(8);
+        for i in 0..5 {
+            r.push(i);
+        }
+        assert_eq!(r.iter().cloned().collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn overwrites_oldest_when_full() {
+        let mut r = Ring::with_capacity(4);
+        for i in 0..7 {
+            r.push(i);
+        }
+        assert_eq!(r.iter().cloned().collect::<Vec<_>>(), vec![3, 4, 5, 6]);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 3);
+    }
+
+    #[test]
+    fn last_tracks_most_recent() {
+        let mut r = Ring::with_capacity(3);
+        assert!(r.last().is_none());
+        r.push(10);
+        assert_eq!(*r.last().unwrap(), 10);
+        for i in 0..5 {
+            r.push(i);
+        }
+        assert_eq!(*r.last().unwrap(), 4);
+    }
+
+    #[test]
+    fn drain_empties() {
+        let mut r = Ring::with_capacity(4);
+        for i in 0..6 {
+            r.push(i);
+        }
+        let v = r.drain();
+        assert_eq!(v, vec![2, 3, 4, 5]);
+        assert!(r.is_empty());
+        r.push(99);
+        assert_eq!(*r.last().unwrap(), 99);
+    }
+
+    #[test]
+    fn exact_capacity_boundary() {
+        let mut r = Ring::with_capacity(3);
+        for i in 0..3 {
+            r.push(i);
+        }
+        assert_eq!(r.iter().cloned().collect::<Vec<_>>(), vec![0, 1, 2]);
+        r.push(3);
+        assert_eq!(r.iter().cloned().collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+}

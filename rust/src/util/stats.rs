@@ -1,0 +1,433 @@
+//! Streaming statistics: Welford accumulators, P² quantile estimation,
+//! histograms, and exact-percentile summaries for bench reporting.
+
+/// Numerically stable streaming mean/variance (Welford's algorithm).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.mean }
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.m2 / self.n as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+
+    /// Coefficient of variation: std / |mean| (0 when empty/zero-mean).
+    pub fn cov(&self) -> f64 {
+        let m = self.mean().abs();
+        if m < 1e-12 { 0.0 } else { self.std() / m }
+    }
+
+    /// Burstiness: max / |mean| — the scorer-kernel feature, natively.
+    pub fn burstiness(&self) -> f64 {
+        let m = self.mean().abs();
+        if m < 1e-12 { 0.0 } else { self.max() / m }
+    }
+
+    pub fn spread(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max - self.min }
+    }
+
+    /// Merge another accumulator (parallel Welford combine).
+    pub fn merge(&mut self, o: &Welford) {
+        if o.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = o.clone();
+            return;
+        }
+        let n = (self.n + o.n) as f64;
+        let d = o.mean - self.mean;
+        self.mean += d * o.n as f64 / n;
+        self.m2 += o.m2 + d * d * self.n as f64 * o.n as f64 / n;
+        self.n += o.n;
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+    }
+}
+
+/// P² (Jain & Chlamtac) single-quantile streaming estimator: O(1) memory.
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    q: f64,
+    n: [f64; 5],
+    np: [f64; 5],
+    dn: [f64; 5],
+    heights: [f64; 5],
+    count: usize,
+    init: Vec<f64>,
+}
+
+impl P2Quantile {
+    pub fn new(q: f64) -> Self {
+        assert!((0.0..=1.0).contains(&q));
+        P2Quantile {
+            q,
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+            dn: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+            heights: [0.0; 5],
+            count: 0,
+            init: Vec::with_capacity(5),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        if self.init.len() < 5 {
+            self.init.push(x);
+            if self.init.len() == 5 {
+                self.init.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                for i in 0..5 {
+                    self.heights[i] = self.init[i];
+                }
+            }
+            return;
+        }
+        // Find cell k.
+        let k = if x < self.heights[0] {
+            self.heights[0] = x;
+            0
+        } else if x >= self.heights[4] {
+            self.heights[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            for i in 0..4 {
+                if self.heights[i] <= x && x < self.heights[i + 1] {
+                    k = i;
+                    break;
+                }
+            }
+            k
+        };
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+        // Adjust interior markers with parabolic interpolation.
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let s = d.signum();
+                let h = self.parabolic(i, s);
+                self.heights[i] = if self.heights[i - 1] < h && h < self.heights[i + 1] {
+                    h
+                } else {
+                    self.linear(i, s)
+                };
+                self.n[i] += s;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, s: f64) -> f64 {
+        let (nm, ni, np1) = (self.n[i - 1], self.n[i], self.n[i + 1]);
+        let (hm, hi, hp) = (self.heights[i - 1], self.heights[i], self.heights[i + 1]);
+        hi + s / (np1 - nm)
+            * ((ni - nm + s) * (hp - hi) / (np1 - ni) + (np1 - ni - s) * (hi - hm) / (ni - nm))
+    }
+
+    fn linear(&self, i: usize, s: f64) -> f64 {
+        let j = if s > 0.0 { i + 1 } else { i - 1 };
+        self.heights[i]
+            + s * (self.heights[j] - self.heights[i]) / (self.n[j] - self.n[i])
+    }
+
+    pub fn value(&self) -> f64 {
+        if self.init.len() < 5 {
+            if self.init.is_empty() {
+                return 0.0;
+            }
+            let mut v = self.init.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let idx = ((v.len() - 1) as f64 * self.q).round() as usize;
+            return v[idx];
+        }
+        self.heights[2]
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+}
+
+/// Exact-percentile summary for modest sample counts (bench reporting).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { samples: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        self.samples.extend_from_slice(xs);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0 * (v.len() - 1) as f64).round() as usize;
+        v[rank.min(v.len() - 1)]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+/// Fixed-bucket histogram with power-of-two-ish bounds, for latency spectra.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    /// Exponential buckets from `lo` growing by `factor`, `n` buckets.
+    pub fn exponential(lo: f64, factor: f64, n: usize) -> Self {
+        assert!(lo > 0.0 && factor > 1.0 && n > 0);
+        let mut bounds = Vec::with_capacity(n);
+        let mut b = lo;
+        for _ in 0..n {
+            bounds.push(b);
+            b *= factor;
+        }
+        Histogram { counts: vec![0; n + 1], bounds, total: 0 }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let idx = self.bounds.partition_point(|&b| b <= x);
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i == 0 {
+                    self.bounds[0]
+                } else {
+                    self.bounds[(i - 1).min(self.bounds.len() - 1)]
+                };
+            }
+        }
+        *self.bounds.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0, -1.0, 0.5];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+        assert_eq!(w.min(), -1.0);
+        assert_eq!(w.max(), 5.0);
+    }
+
+    #[test]
+    fn welford_merge_equals_sequential() {
+        let mut r = Rng::seeded(1);
+        let xs: Vec<f64> = (0..1000).map(|_| r.normal()).collect();
+        let mut all = Welford::new();
+        for &x in &xs {
+            all.push(x);
+        }
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for (i, &x) in xs.iter().enumerate() {
+            if i % 2 == 0 { a.push(x) } else { b.push(x) }
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+        assert_eq!(a.count(), all.count());
+    }
+
+    #[test]
+    fn welford_empty_is_zero() {
+        let w = Welford::new();
+        assert_eq!(w.mean(), 0.0);
+        assert_eq!(w.std(), 0.0);
+        assert_eq!(w.cov(), 0.0);
+    }
+
+    #[test]
+    fn p2_approximates_median() {
+        let mut r = Rng::seeded(2);
+        let mut p2 = P2Quantile::new(0.5);
+        let mut v = Vec::new();
+        for _ in 0..20_000 {
+            let x = r.normal();
+            p2.push(x);
+            v.push(x);
+        }
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let exact = v[v.len() / 2];
+        assert!((p2.value() - exact).abs() < 0.05, "p2={} exact={}", p2.value(), exact);
+    }
+
+    #[test]
+    fn p2_approximates_p99() {
+        let mut r = Rng::seeded(3);
+        let mut p2 = P2Quantile::new(0.99);
+        let mut v = Vec::new();
+        for _ in 0..50_000 {
+            let x = r.exponential(1.0);
+            p2.push(x);
+            v.push(x);
+        }
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let exact = v[(0.99 * v.len() as f64) as usize];
+        assert!((p2.value() - exact).abs() / exact < 0.15, "p2={} exact={}", p2.value(), exact);
+    }
+
+    #[test]
+    fn p2_small_sample_fallback() {
+        let mut p2 = P2Quantile::new(0.5);
+        for &x in &[3.0, 1.0, 2.0] {
+            p2.push(x);
+        }
+        assert_eq!(p2.value(), 2.0);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let mut s = Summary::new();
+        for i in 1..=101 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.p50(), 51.0); // true median of 1..=101
+        assert_eq!(s.p99(), 100.0); // rank round(0.99*100)=99 -> value 100
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 101.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = Histogram::exponential(1.0, 2.0, 20);
+        let mut r = Rng::seeded(4);
+        for _ in 0..10_000 {
+            h.record(r.pareto(1.0, 1.5));
+        }
+        assert!(h.quantile(0.5) <= h.quantile(0.9));
+        assert!(h.quantile(0.9) <= h.quantile(0.999));
+        assert_eq!(h.total(), 10_000);
+    }
+}

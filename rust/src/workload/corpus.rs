@@ -1,0 +1,74 @@
+//! Embedded mini-corpus for end-to-end runs: prompts are drawn from real
+//! English text so the toy tokenizer produces realistic token statistics
+//! (the serving path carries *actual* token ids end to end).
+
+/// A small public-domain-style corpus: paraphrased systems-paper prose.
+pub const CORPUS: &[&str] = &[
+    "Autoregressive inference in large transformer language models presents \
+     significant challenges for runtime efficiency, particularly during the \
+     decode phase where load imbalance across GPU shards can cause throughput \
+     degradation and latency spikes.",
+    "Data processing units sit inline with the network interface and process \
+     all ingress and egress traffic before it reaches the host, a vantage \
+     point that makes them uniquely positioned to observe network anomalies \
+     that impact distributed inference.",
+    "Token batching improves average throughput, but the decode phase often \
+     suffers from irregularities in token computation cost, leading to skew \
+     across parallel workers and idle bubbles in the pipeline.",
+    "Every host to device transfer, including embeddings, key value cache \
+     writes and logits, travels as direct memory access transactions across \
+     the root complex where a peer device can observe them at high resolution.",
+    "When phase boundaries stretch abnormally, for example a prolonged prefill \
+     burst before compute begins, the observer can flag potential host side \
+     tokenization or batching bottlenecks without modifying the application.",
+    "Paged attention manages the key value cache like a virtual memory system, \
+     reusing and evicting cache blocks so that memory is not wasted while many \
+     requests share the accelerator concurrently.",
+    "Microbursts are short traffic spikes that overflow switch buffers and \
+     introduce jitter, while persistent congestion inflates token streaming \
+     latency for every user of the cluster.",
+    "The scheduler maintains the number of pending requests per batch, the \
+     queue depth, and wait times, using these to drive admission control and \
+     to balance throughput against latency by adjusting batch sizes.",
+    "If one GPU consistently exhibits delayed bus activity after ingress, the \
+     slowdown can be attributed to local imbalance such as preprocessing lag \
+     rather than to network effects on the fabric.",
+    "Collective operations stall waiting for the slowest peer, so a wide \
+     spread between the first and last arrival of collective bursts is the \
+     classic signature of a straggling shard.",
+];
+
+/// Deterministically pick a prompt string by index.
+pub fn prompt(idx: usize) -> &'static str {
+    CORPUS[idx % CORPUS.len()]
+}
+
+/// Concatenate prompts to reach at least `min_chars` characters.
+pub fn long_prompt(start: usize, min_chars: usize) -> String {
+    let mut s = String::new();
+    let mut i = start;
+    while s.len() < min_chars {
+        s.push_str(prompt(i));
+        s.push(' ');
+        i += 1;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_nonempty_and_indexable() {
+        assert!(CORPUS.len() >= 10);
+        assert!(!prompt(0).is_empty());
+        assert_eq!(prompt(0), prompt(CORPUS.len()));
+    }
+
+    #[test]
+    fn long_prompt_reaches_length() {
+        let p = long_prompt(3, 800);
+        assert!(p.len() >= 800);
+    }
+}

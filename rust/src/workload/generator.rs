@@ -1,0 +1,198 @@
+//! Workload generator: arrival processes × length mixes × session/flow
+//! assignment. Knobs here create the *workload-shaped* pathologies (NS1
+//! bursts, NS2 thin flows, NS3 flow skew, NS8/PC10/EW9 bimodal lengths).
+
+use crate::ids::{FlowId, ReqId};
+use crate::sim::dist::{Arrival, ArrivalSampler, LengthDist, RateShape};
+use crate::sim::SimTime;
+use crate::util::rng::{Rng, Zipf};
+use crate::workload::corpus;
+use crate::workload::request::InferenceRequest;
+use crate::workload::tokenizer::ToyTokenizer;
+
+/// Declarative workload description.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub arrival: Arrival,
+    pub rate_shape: RateShape,
+    pub prompt_len: LengthDist,
+    pub output_len: LengthDist,
+    /// Number of client sessions (flows).
+    pub n_sessions: usize,
+    /// Zipf exponent for session selection (0 = uniform; ≥1 = heavy skew, NS3).
+    pub session_skew: f64,
+    /// Thin-traffic injection (NS2): fraction of sessions that send with long
+    /// idle gaps (their requests are delayed by an extra exponential gap).
+    pub thin_session_frac: f64,
+    pub thin_extra_gap_s: f64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            arrival: Arrival::Poisson { rate: 200.0 },
+            rate_shape: RateShape::Constant,
+            prompt_len: LengthDist::Uniform { lo: 8, hi: 64 },
+            output_len: LengthDist::Uniform { lo: 4, hi: 32 },
+            n_sessions: 64,
+            session_skew: 0.0,
+            thin_session_frac: 0.0,
+            thin_extra_gap_s: 0.0,
+        }
+    }
+}
+
+/// Stateful generator producing timestamped requests with real token ids.
+#[derive(Debug)]
+pub struct WorkloadGen {
+    spec: WorkloadSpec,
+    sampler: ArrivalSampler,
+    zipf: Option<Zipf>,
+    rng: Rng,
+    tok: ToyTokenizer,
+    next_id: u32,
+    clock: SimTime,
+    prompt_cursor: usize,
+}
+
+impl WorkloadGen {
+    pub fn new(spec: WorkloadSpec, vocab: usize, seed: u64) -> Self {
+        let mut root = Rng::new(seed, 0xAB);
+        let sampler_rng = root.fork(1);
+        let zipf = if spec.session_skew > 0.0 {
+            Some(Zipf::new(spec.n_sessions.max(1), spec.session_skew))
+        } else {
+            None
+        };
+        WorkloadGen {
+            sampler: ArrivalSampler::new(spec.arrival.clone(), sampler_rng),
+            spec,
+            zipf,
+            rng: root,
+            tok: ToyTokenizer::new(vocab),
+            next_id: 0,
+            clock: SimTime::ZERO,
+            prompt_cursor: 0,
+        }
+    }
+
+    pub fn tokenizer(&self) -> &ToyTokenizer {
+        &self.tok
+    }
+
+    /// Generate the next request (arrival times strictly increase).
+    pub fn next_request(&mut self) -> InferenceRequest {
+        // Arrival gap, modulated by the rate shape (higher factor = faster).
+        let base_gap = self.sampler.next_gap();
+        let factor = self.spec.rate_shape.factor_at(self.clock.ns()).max(1e-3);
+        let gap = base_gap.scale(1.0 / factor);
+        self.clock = self.clock + gap;
+
+        // Session / flow selection (Zipf skew when configured).
+        let session = match &self.zipf {
+            Some(z) => z.sample(&mut self.rng),
+            None => self.rng.index(self.spec.n_sessions.max(1)),
+        };
+        let mut arrival = self.clock;
+        // Thin sessions (NS2): a slice of sessions dribbles traffic in late.
+        let thin_cut = (self.spec.n_sessions as f64 * self.spec.thin_session_frac) as usize;
+        if session < thin_cut && self.spec.thin_extra_gap_s > 0.0 {
+            let extra = self.rng.exponential(1.0 / self.spec.thin_extra_gap_s);
+            arrival = arrival + crate::sim::SimDur::from_secs_f64(extra);
+        }
+
+        // Real prompt tokens from the corpus.
+        let want_len = self.spec.prompt_len.sample(&mut self.rng).max(2);
+        let text = corpus::long_prompt(self.prompt_cursor, want_len * 6);
+        self.prompt_cursor += 1;
+        let prompt = self.tok.encode_to_len(&text, want_len);
+
+        let out_len = self.spec.output_len.sample(&mut self.rng).max(1);
+        let id = ReqId(self.next_id);
+        self.next_id += 1;
+        InferenceRequest::new(id, FlowId(session as u32), arrival, prompt, out_len)
+    }
+
+    /// Jump the arrival clock forward (used when an injector swaps the
+    /// workload mid-run: the new generator resumes from "now").
+    pub fn fast_forward(&mut self, t: SimTime) {
+        if t > self.clock {
+            self.clock = t;
+        }
+    }
+
+    /// Generate `n` requests (sorted by arrival except thin-session jitter).
+    pub fn take(&mut self, n: usize) -> Vec<InferenceRequest> {
+        let mut v: Vec<InferenceRequest> = (0..n).map(|_| self.next_request()).collect();
+        v.sort_by_key(|r| r.arrival);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_increase_and_tokens_valid() {
+        let mut g = WorkloadGen::new(WorkloadSpec::default(), 2048, 7);
+        let reqs = g.take(100);
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        for r in &reqs {
+            assert!(r.prompt.iter().all(|&t| (0..2048).contains(&t)));
+            assert!(r.prompt_len() >= 2);
+            assert!(r.max_new_tokens >= 1);
+        }
+    }
+
+    #[test]
+    fn session_skew_concentrates_flows() {
+        let mut spec = WorkloadSpec::default();
+        spec.session_skew = 1.4;
+        let mut g = WorkloadGen::new(spec, 2048, 7);
+        let reqs = g.take(500);
+        let mut counts = std::collections::HashMap::new();
+        for r in &reqs {
+            *counts.entry(r.flow).or_insert(0u32) += 1;
+        }
+        let max = counts.values().max().copied().unwrap();
+        assert!(max as f64 > 500.0 / 64.0 * 4.0, "max flow count {max} not skewed");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = WorkloadGen::new(WorkloadSpec::default(), 512, 3);
+        let mut b = WorkloadGen::new(WorkloadSpec::default(), 512, 3);
+        for _ in 0..50 {
+            let (ra, rb) = (a.next_request(), b.next_request());
+            assert_eq!(ra.arrival, rb.arrival);
+            assert_eq!(ra.prompt, rb.prompt);
+            assert_eq!(ra.flow, rb.flow);
+        }
+    }
+
+    #[test]
+    fn bimodal_output_lengths() {
+        let mut spec = WorkloadSpec::default();
+        spec.output_len = LengthDist::Bimodal { short: 2, long: 64, p_short: 0.5 };
+        let mut g = WorkloadGen::new(spec, 512, 9);
+        let reqs = g.take(200);
+        let shorts = reqs.iter().filter(|r| r.max_new_tokens == 2).count();
+        assert!((60..140).contains(&shorts), "shorts={shorts}");
+    }
+
+    #[test]
+    fn rate_ramp_speeds_up_arrivals() {
+        let mut spec = WorkloadSpec::default();
+        spec.arrival = Arrival::Uniform { rate: 100.0 };
+        spec.rate_shape = RateShape::Ramp { from: 1.0, to: 10.0, ramp_s: 0.5 };
+        let mut g = WorkloadGen::new(spec, 512, 1);
+        let reqs = g.take(400);
+        let early_gap = (reqs[1].arrival - reqs[0].arrival).ns();
+        let n = reqs.len();
+        let late_gap = (reqs[n - 1].arrival - reqs[n - 2].arrival).ns();
+        assert!(late_gap < early_gap, "late {late_gap} !< early {early_gap}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Workload substrate: requests, a toy tokenizer over an embedded corpus,
+//! arrival/length generators, and trace record/replay.
+
+pub mod corpus;
+pub mod generator;
+pub mod request;
+pub mod tokenizer;
+pub mod trace;
+
+pub use generator::{WorkloadGen, WorkloadSpec};
+pub use request::{InferenceRequest, ReqState};
+pub use tokenizer::ToyTokenizer;

@@ -1,0 +1,123 @@
+//! The inference request model and its lifecycle states.
+
+use crate::ids::{FlowId, NodeId, ReqId};
+use crate::sim::SimTime;
+
+/// Lifecycle of a request as it moves through the serving stack. Mirrors the
+/// paper's token-lifecycle stages (ingress → PCIe feed → compute → egress).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqState {
+    /// Created; in flight from the client.
+    InFlight,
+    /// Delivered by the NIC, waiting in the admission queue.
+    Queued,
+    /// Scheduled into a prefill batch.
+    Prefilling,
+    /// Generating tokens.
+    Decoding,
+    /// All tokens generated and flushed.
+    Done,
+    /// Rejected by admission control.
+    Rejected,
+}
+
+/// One inference request, including its *real* prompt tokens (decoded output
+/// is also real when the PJRT backend is active).
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: ReqId,
+    pub flow: FlowId,
+    pub arrival: SimTime,
+    /// Prompt token ids (toy-tokenizer output over the corpus).
+    pub prompt: Vec<i32>,
+    /// Generation budget for this request.
+    pub max_new_tokens: usize,
+    pub state: ReqState,
+    /// Node group (replica) the router assigned.
+    pub assigned_node: Option<NodeId>,
+
+    // --- lifecycle timestamps (metrics) ---
+    pub admitted_at: Option<SimTime>,
+    pub prefill_start: Option<SimTime>,
+    pub first_token_at: Option<SimTime>,
+    pub done_at: Option<SimTime>,
+
+    // --- decode progress ---
+    pub generated: Vec<i32>,
+}
+
+impl InferenceRequest {
+    pub fn new(id: ReqId, flow: FlowId, arrival: SimTime, prompt: Vec<i32>, max_new: usize) -> Self {
+        assert!(!prompt.is_empty(), "empty prompt");
+        InferenceRequest {
+            id,
+            flow,
+            arrival,
+            prompt,
+            max_new_tokens: max_new.max(1),
+            state: ReqState::InFlight,
+            assigned_node: None,
+            admitted_at: None,
+            prefill_start: None,
+            first_token_at: None,
+            done_at: None,
+            generated: Vec::new(),
+        }
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.prompt.len()
+    }
+
+    pub fn tokens_generated(&self) -> usize {
+        self.generated.len()
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.state, ReqState::Done | ReqState::Rejected)
+    }
+
+    /// Time to first token, if reached.
+    pub fn ttft(&self) -> Option<crate::sim::SimDur> {
+        self.first_token_at.map(|t| t - self.arrival)
+    }
+
+    /// Mean time per output token after the first, if finished.
+    pub fn tpot_ns(&self) -> Option<f64> {
+        match (self.first_token_at, self.done_at) {
+            (Some(first), Some(done)) if self.generated.len() > 1 => {
+                Some((done - first).ns() as f64 / (self.generated.len() - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_metrics() {
+        let mut r = InferenceRequest::new(ReqId(1), FlowId(2), SimTime(1000), vec![1, 2, 3], 4);
+        assert_eq!(r.prompt_len(), 3);
+        assert!(r.ttft().is_none());
+        r.first_token_at = Some(SimTime(5000));
+        r.done_at = Some(SimTime(11_000));
+        r.generated = vec![7, 8, 9, 10];
+        assert_eq!(r.ttft().unwrap().ns(), 4000);
+        assert!((r.tpot_ns().unwrap() - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prompt")]
+    fn empty_prompt_rejected() {
+        InferenceRequest::new(ReqId(0), FlowId(0), SimTime(0), vec![], 1);
+    }
+
+    #[test]
+    fn max_new_at_least_one() {
+        let r = InferenceRequest::new(ReqId(0), FlowId(0), SimTime(0), vec![1], 0);
+        assert_eq!(r.max_new_tokens, 1);
+    }
+}

@@ -1,0 +1,127 @@
+//! Toy byte-pair-free tokenizer: word pieces hashed into the model's vocab.
+//!
+//! Deterministic and reversible enough for demos (detokenize produces the
+//! id stream's piece labels, not the original text). The model vocabulary is
+//! small (e.g. 2048), so we hash word pieces into `[N_SPECIAL, vocab)`.
+
+/// Reserved special ids.
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const N_SPECIAL: i32 = 3;
+
+#[derive(Debug, Clone)]
+pub struct ToyTokenizer {
+    vocab: i32,
+}
+
+impl ToyTokenizer {
+    pub fn new(vocab: usize) -> Self {
+        assert!(vocab as i32 > N_SPECIAL + 10, "vocab too small");
+        ToyTokenizer { vocab: vocab as i32 }
+    }
+
+    fn hash_piece(&self, piece: &str) -> i32 {
+        // FNV-1a over the piece bytes, folded into the non-special id range.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in piece.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        let range = (self.vocab - N_SPECIAL) as u64;
+        (N_SPECIAL as u64 + h % range) as i32
+    }
+
+    /// Tokenize text into ids: BOS + one id per word piece (words split on
+    /// whitespace; long words chunked to 6 chars).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut ids = vec![BOS];
+        for word in text.split_whitespace() {
+            let chars: Vec<char> = word.chars().collect();
+            for chunk in chars.chunks(6) {
+                let piece: String = chunk.iter().collect();
+                ids.push(self.hash_piece(&piece));
+            }
+        }
+        ids
+    }
+
+    /// Encode and clamp/pad to exactly `len` tokens (pads with PAD).
+    pub fn encode_to_len(&self, text: &str, len: usize) -> Vec<i32> {
+        let mut ids = self.encode(text);
+        ids.truncate(len);
+        while ids.len() < len {
+            ids.push(PAD);
+        }
+        ids
+    }
+
+    /// Human-readable rendering of an id stream.
+    pub fn render(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&id| match id {
+                PAD => "<pad>".to_string(),
+                BOS => "<bos>".to_string(),
+                EOS => "<eos>".to_string(),
+                other => format!("t{other}"),
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab as usize
+    }
+
+    pub fn in_vocab(&self, id: i32) -> bool {
+        (0..self.vocab).contains(&id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_is_deterministic_and_in_vocab() {
+        let tok = ToyTokenizer::new(2048);
+        let a = tok.encode("the quick brown fox");
+        let b = tok.encode("the quick brown fox");
+        assert_eq!(a, b);
+        assert_eq!(a[0], BOS);
+        assert!(a.iter().all(|&id| tok.in_vocab(id)));
+        assert!(a.len() >= 5);
+    }
+
+    #[test]
+    fn different_words_usually_differ() {
+        let tok = ToyTokenizer::new(2048);
+        let a = tok.encode("alpha");
+        let b = tok.encode("omega");
+        assert_ne!(a[1], b[1]);
+    }
+
+    #[test]
+    fn encode_to_len_pads_and_truncates() {
+        let tok = ToyTokenizer::new(512);
+        let short = tok.encode_to_len("hi", 8);
+        assert_eq!(short.len(), 8);
+        assert!(short[4..].iter().all(|&t| t == PAD));
+        let long = tok.encode_to_len(&"word ".repeat(100), 8);
+        assert_eq!(long.len(), 8);
+    }
+
+    #[test]
+    fn long_words_are_chunked() {
+        let tok = ToyTokenizer::new(2048);
+        let ids = tok.encode("internationalization");
+        // 20 chars -> 4 chunks + BOS
+        assert_eq!(ids.len(), 5);
+    }
+
+    #[test]
+    fn render_labels_specials() {
+        let tok = ToyTokenizer::new(512);
+        assert_eq!(tok.render(&[BOS, 100, EOS]), "<bos> t100 <eos>");
+    }
+}

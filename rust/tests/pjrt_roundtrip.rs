@@ -1,0 +1,158 @@
+//! Integration: the AOT bridge end to end — python-lowered HLO artifacts
+//! executed from Rust must reproduce python's own numbers (golden.txt).
+//!
+//! Requires `make artifacts`. These tests are the cross-language correctness
+//! anchor for the whole L1/L2 <-> L3 interface.
+
+use dpulens::dpu::scorer::{NativeScorer, ScorerBackend};
+use dpulens::runtime::{cpu_client, ArtifactSet, CompiledScorer, TransformerSession};
+
+fn artifacts() -> Option<ArtifactSet> {
+    match ArtifactSet::open_default() {
+        Ok(a) => Some(a),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+/// Rebuild the deterministic golden inputs (mirrors aot.golden_inputs).
+fn golden_inputs(m: &dpulens::runtime::Manifest) -> (Vec<Vec<i32>>, Vec<i32>) {
+    let tokens: Vec<Vec<i32>> = (0..m.batch)
+        .map(|i| {
+            (0..m.prefill_len)
+                .map(|j| ((7 * i + 11 * j + 3) % m.vocab) as i32)
+                .collect()
+        })
+        .collect();
+    let lens: Vec<i32> = (0..m.batch)
+        .map(|i| {
+            let v = (m.prefill_len / 2 + 5 * i + 1) % m.prefill_len + 1;
+            v.max(1) as i32
+        })
+        .collect();
+    (tokens, lens)
+}
+
+#[test]
+fn prefill_and_decode_match_python_goldens() {
+    let Some(arts) = artifacts() else { return };
+    let client = cpu_client().expect("PJRT CPU client");
+    let mut session = TransformerSession::load(&client, &arts).expect("load artifacts");
+    let (golden_prefill, golden_tokens, golden_decode) =
+        arts.load_golden().expect("golden.txt");
+
+    let (tokens, lens) = golden_inputs(&arts.manifest);
+    let logits = session.prefill_block(&tokens, &lens).expect("prefill");
+
+    // Prefill logits match python to float tolerance.
+    for b in 0..arts.manifest.batch {
+        for j in 0..8 {
+            let got = logits[b][j];
+            let want = golden_prefill[b][j];
+            assert!(
+                (got - want).abs() < 2e-3 + 1e-3 * want.abs(),
+                "prefill logit[{b}][{j}]: rust {got} vs python {want}"
+            );
+        }
+    }
+
+    // Greedy decode: token-for-token agreement over the golden steps.
+    let mut cur: Vec<i32> = logits.iter().map(|l| TransformerSession::argmax(l)).collect();
+    let mut positions: Vec<i32> = lens.clone();
+    for (t, golden_step) in golden_tokens.iter().enumerate() {
+        assert_eq!(&cur, golden_step, "greedy tokens diverged at step {t}");
+        let logits = session.decode_step(&cur, &positions).expect("decode");
+        for b in 0..arts.manifest.batch {
+            for j in 0..8 {
+                let got = logits[b][j];
+                let want = golden_decode[t][b][j];
+                assert!(
+                    (got - want).abs() < 5e-3 + 2e-3 * want.abs(),
+                    "decode logit step {t} [{b}][{j}]: rust {got} vs python {want}"
+                );
+            }
+        }
+        cur = logits.iter().map(|l| TransformerSession::argmax(l)).collect();
+        for p in &mut positions {
+            *p += 1;
+        }
+    }
+    assert!(session.decode_calls >= golden_tokens.len() as u64);
+}
+
+#[test]
+fn slot_surgery_preserves_other_sequences() {
+    // Prefill slots {0,1}, decode once, then prefill slot 1 with a NEW
+    // prompt: slot 0's next decode must be unaffected (KV splice works).
+    let Some(arts) = artifacts() else { return };
+    let client = cpu_client().expect("client");
+    let m = &arts.manifest;
+    let (tokens, _) = golden_inputs(m);
+    let prompt0: Vec<i32> = tokens[0][..16].to_vec();
+    let prompt1: Vec<i32> = tokens[1][..20].to_vec();
+    let prompt_new: Vec<i32> = tokens[2][..12].to_vec();
+
+    use dpulens::engine::exec::ComputeBackend;
+    // Reference run: only slot 0 live the whole time.
+    let mut a = TransformerSession::load(&client, &arts).expect("load");
+    let t0 = a.prefill(&[0], &[prompt0.clone()])[0];
+    let a1 = a.decode(&[0], &[t0], &[16])[0];
+    let a2 = a.decode(&[0], &[a1], &[17])[0];
+
+    // Test run: slot 1 gets prefilled mid-stream; slot 0 must not notice.
+    let mut b = TransformerSession::load(&client, &arts).expect("load");
+    let u0 = b.prefill(&[0, 1], &[prompt0, prompt1])[0];
+    assert_eq!(t0, u0, "same prompt, same first token");
+    let b1 = b.decode(&[0], &[u0], &[16])[0];
+    assert_eq!(a1, b1);
+    let _ = b.prefill(&[1], &[prompt_new]); // slot-1 replacement
+    let b2 = b.decode(&[0], &[b1], &[17])[0];
+    assert_eq!(a2, b2, "slot-1 prefill corrupted slot 0's KV");
+}
+
+#[test]
+fn compiled_scorer_matches_native_and_python_contract() {
+    let Some(arts) = artifacts() else { return };
+    let client = cpu_client().expect("client");
+    let mut compiled = CompiledScorer::load(&client, &arts).expect("scorer");
+    let mut native = NativeScorer;
+
+    let w = arts.manifest.detector_windows;
+    let n = arts.manifest.detector_samples;
+    let windows: Vec<Vec<f32>> = (0..w)
+        .map(|i| (0..n).map(|j| ((i * 31 + j * 7) % 113) as f32 * 0.5).collect())
+        .collect();
+    let baseline: Vec<(f32, f32)> = (0..w).map(|i| (20.0 + i as f32, 9.0)).collect();
+
+    let (fn_, zn) = native.score(&windows, &baseline);
+    let (fc, zc) = compiled.score(&windows, &baseline);
+    assert_eq!(fn_.len(), fc.len());
+    for (i, (a, b)) in fn_.iter().zip(&fc).enumerate() {
+        for k in 0..8 {
+            assert!(
+                (a[k] - b[k]).abs() < 1e-2 + 1e-3 * a[k].abs(),
+                "feature[{i}][{k}]: native {} vs compiled {}",
+                a[k],
+                b[k]
+            );
+        }
+    }
+    for (a, b) in zn.iter().zip(&zc) {
+        assert!((a - b).abs() < 1e-3 + 1e-3 * a.abs());
+    }
+}
+
+#[test]
+fn manifest_matches_rust_profile() {
+    let Some(arts) = artifacts() else { return };
+    let m = &arts.manifest;
+    let p = dpulens::engine::preset(&m.preset).expect("preset known to rust");
+    assert_eq!(p.layers, m.layers);
+    assert_eq!(p.d_model, m.d_model);
+    assert_eq!(p.vocab, m.vocab);
+    assert_eq!(p.max_seq, m.max_seq);
+    assert_eq!(p.prefill_len, m.prefill_len);
+    assert_eq!(p.batch, m.batch);
+}

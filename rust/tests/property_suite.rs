@@ -1,0 +1,175 @@
+//! Property-based integration suite (in-repo harness; proptest is not
+//! vendored offline). Invariants that must hold for ANY workload shape:
+//! sim-event ordering, telemetry conservation, KV/batcher/router state,
+//! streaming-statistics correctness against exact computation.
+
+use dpulens::prop_assert;
+use dpulens::sim::{Engine, SimTime};
+use dpulens::util::prop::{check, PropConfig};
+use dpulens::util::rng::Rng;
+use dpulens::util::stats::{P2Quantile, Summary, Welford};
+
+#[test]
+fn prop_sim_engine_total_order() {
+    check("sim-total-order", PropConfig::default().cases(48), |g| {
+        let mut e: Engine<u64> = Engine::new();
+        let n = g.usize_in(1, 400);
+        for i in 0..n {
+            e.schedule_at(SimTime(g.rng.below(10_000)), i as u64);
+        }
+        let mut last_t = SimTime::ZERO;
+        let mut seen = std::collections::HashSet::new();
+        let mut count = 0;
+        while let Some((t, p)) = e.pop() {
+            prop_assert!(t >= last_t, "time regressed {t:?} < {last_t:?}");
+            prop_assert!(seen.insert(p), "payload {p} delivered twice");
+            last_t = t;
+            count += 1;
+        }
+        prop_assert!(count == n, "delivered {count} != scheduled {n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_ties_preserve_insertion_order() {
+    check("sim-fifo-ties", PropConfig::default().cases(32), |g| {
+        let mut e: Engine<usize> = Engine::new();
+        let t = SimTime(g.rng.below(100));
+        let n = g.usize_in(2, 100);
+        for i in 0..n {
+            e.schedule_at(t, i);
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| e.pop().map(|(_, p)| p)).collect();
+        prop_assert!(order == (0..n).collect::<Vec<_>>(), "ties reordered: {order:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_welford_matches_exact() {
+    check("welford-exact", PropConfig::default().cases(64), |g| {
+        let xs = g.vec_of(|r: &mut Rng| {
+            let mu = r.range_f64(-100.0, 100.0);
+            r.normal_ms(mu, 5.0)
+        });
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        prop_assert!((w.mean() - mean).abs() < 1e-6 * (1.0 + mean.abs()), "mean mismatch");
+        prop_assert!((w.variance() - var).abs() < 1e-6 * (1.0 + var), "var mismatch");
+        let mn = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mx = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        prop_assert!(w.min() == mn && w.max() == mx, "min/max mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_p2_quantile_tracks_exact_median() {
+    check("p2-median", PropConfig::default().cases(24), |g| {
+        let n = g.usize_in(200, 3000);
+        let mut p2 = P2Quantile::new(0.5);
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            let x = g.rng.exponential(0.5);
+            p2.push(x);
+            v.push(x);
+        }
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let exact = v[v.len() / 2];
+        let err = (p2.value() - exact).abs() / exact.max(1e-9);
+        prop_assert!(err < 0.35, "p2 median err {err:.2} (p2={} exact={exact})", p2.value());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_summary_percentiles_ordered() {
+    check("summary-order", PropConfig::default().cases(48), |g| {
+        let mut s = Summary::new();
+        let n = g.usize_in(1, 500);
+        for _ in 0..n {
+            s.push(g.rng.pareto(1.0, 1.2));
+        }
+        prop_assert!(s.p50() <= s.p95() + 1e-12, "p50 > p95");
+        prop_assert!(s.p95() <= s.p99() + 1e-12, "p95 > p99");
+        prop_assert!(s.min() <= s.p50() && s.p99() <= s.max(), "bounds violated");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_full_scenario_conservation_under_random_workloads() {
+    // The big one: ANY workload shape keeps the system's accounting exact.
+    check("scenario-conservation", PropConfig::default().cases(6), |g| {
+        use dpulens::coordinator::{Scenario, ScenarioCfg};
+        use dpulens::sim::dist::{Arrival, LengthDist};
+        use dpulens::sim::SimDur;
+
+        let mut cfg = ScenarioCfg::default();
+        cfg.seed = g.rng.next_u64();
+        cfg.duration = SimDur::from_ms(400);
+        cfg.warmup_windows = 5;
+        cfg.calib_windows = 10;
+        cfg.workload.arrival = Arrival::Poisson { rate: g.f64_in(50.0, 800.0) };
+        cfg.workload.prompt_len =
+            LengthDist::Uniform { lo: 2, hi: g.usize_in(8, 64) };
+        cfg.workload.output_len = if g.bool() {
+            LengthDist::Uniform { lo: 1, hi: g.usize_in(4, 24) }
+        } else {
+            LengthDist::Bimodal { short: 2, long: g.usize_in(16, 48), p_short: 0.5 }
+        };
+        cfg.engine.policy.continuous = g.bool();
+        cfg.engine.policy.length_bucketing = g.bool();
+        cfg.engine.policy.inflight_remap = g.bool();
+        let res = Scenario::new(cfg).run();
+
+        prop_assert!(
+            res.dpu_ingested + res.dpu_invisible_dropped == res.telemetry_published,
+            "telemetry leak: {} + {} != {}",
+            res.dpu_ingested,
+            res.dpu_invisible_dropped,
+            res.telemetry_published
+        );
+        prop_assert!(
+            res.metrics.tokens_out >= res.metrics.completed,
+            "completed requests without tokens"
+        );
+        // TTFT percentiles ordered and finite.
+        let (p50, p99) = (res.metrics.ttft_ns.p50(), res.metrics.ttft_ns.p99());
+        prop_assert!(p50.is_finite() && p99.is_finite() && p50 <= p99 + 1e-9,
+            "TTFT percentiles broken: p50={p50} p99={p99}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fastmap_model_check() {
+    // FastMap must behave exactly like std HashMap under random ops.
+    check("fastmap-model", PropConfig::default().cases(48), |g| {
+        let mut fast: dpulens::util::FastMap<u32, u64> = Default::default();
+        let mut model: std::collections::HashMap<u32, u64> = Default::default();
+        for _ in 0..300 {
+            let k = g.rng.below(64) as u32;
+            match g.rng.below(3) {
+                0 => {
+                    let v = g.rng.next_u64();
+                    fast.insert(k, v);
+                    model.insert(k, v);
+                }
+                1 => {
+                    prop_assert!(fast.remove(&k) == model.remove(&k), "remove diverged");
+                }
+                _ => {
+                    prop_assert!(fast.get(&k) == model.get(&k), "get diverged for {k}");
+                }
+            }
+            prop_assert!(fast.len() == model.len(), "len diverged");
+        }
+        Ok(())
+    });
+}
