@@ -1,77 +1,37 @@
 //! Sweep all 28 runbook conditions (Tables 3a-c): inject each, report
 //! detection, latency, serving impact, and the mapped directive — the
-//! quick-look version of the bench suite.
+//! quick-look version of the bench suite, fanned out over worker threads by
+//! the shared `coordinator::matrix` subsystem (which also owns the
+//! per-condition scenario shaping).
 //!
 //!     cargo run --release --example runbook_sweep [-- --mitigate]
 
-use dpulens::coordinator::experiment::{
-    condition_experiment, report_header, report_row, standard_cfg,
-};
-use dpulens::dpu::detectors::{Condition, ALL_CONDITIONS};
-use dpulens::engine::preset;
+use dpulens::coordinator::experiment::{report_header, report_row, standard_cfg};
+use dpulens::coordinator::matrix::run_sweep;
 use dpulens::util::table::Table;
-
-/// Per-condition scenario shaping (see DESIGN.md §4).
-fn cfg_for(c: Condition) -> dpulens::coordinator::ScenarioCfg {
-    let mut cfg = standard_cfg();
-    match c {
-        // Compute-skew conditions need a compute-dominated cost profile for
-        // a straggler/mispartition to move collective timing.
-        Condition::Ew1TpStraggler
-        | Condition::Ew3CrossNodeSkew
-        | Condition::Ew4Congestion
-        | Condition::Ew9EarlyStopSkew => {
-            cfg.engine.profile = preset("7b").unwrap();
-            cfg.engine.policy.max_batch = 8;
-            cfg.workload.arrival = dpulens::sim::dist::Arrival::Poisson { rate: 150.0 };
-        }
-        // Pipeline-cadence detection needs a *busy* pipeline: idle lulls
-        // produce ms-scale healthy gaps that mask a mispartitioned stage.
-        Condition::Ew2PpBubble => {
-            cfg.engine.profile = preset("7b").unwrap();
-            cfg.engine.policy.max_batch = 8;
-            cfg.workload.arrival = dpulens::sim::dist::Arrival::Poisson { rate: 500.0 };
-            cfg.workload.output_len = dpulens::sim::dist::LengthDist::Uniform { lo: 8, hi: 16 };
-        }
-        // Early-stop conditions only bite when decode slots are saturated.
-        Condition::Ns8EarlyCompletion => {
-            cfg.workload.arrival = dpulens::sim::dist::Arrival::Poisson { rate: 2000.0 };
-            cfg.workload.prompt_len = dpulens::sim::dist::LengthDist::Uniform { lo: 8, hi: 16 };
-            cfg.workload.output_len = dpulens::sim::dist::LengthDist::Uniform { lo: 8, hi: 24 };
-        }
-        // PC10's PCIe signature (shrinking decode D2H blocks) additionally
-        // needs iterations slow enough that slots actually fill: use the
-        // compute-heavy profile under sustained demand.
-        Condition::Pc10DecodeEarlyStop => {
-            cfg.engine.profile = preset("7b").unwrap();
-            cfg.engine.policy.max_batch = 8;
-            cfg.workload.arrival = dpulens::sim::dist::Arrival::Poisson { rate: 1500.0 };
-            cfg.workload.prompt_len = dpulens::sim::dist::LengthDist::Uniform { lo: 8, hi: 16 };
-            cfg.workload.output_len = dpulens::sim::dist::LengthDist::Uniform { lo: 8, hi: 24 };
-        }
-        _ => {}
-    }
-    cfg
-}
 
 fn main() {
     let mitigate = std::env::args().any(|a| a == "--mitigate");
+    let base = standard_cfg();
+    let t0 = std::time::Instant::now();
+    let reports = run_sweep(&base, mitigate, 0);
     let mut t = Table::new("runbook sweep — all 28 conditions").header(&report_header());
     let mut detected = 0;
-    for c in ALL_CONDITIONS {
-        let cfg = cfg_for(c);
-        let rep = condition_experiment(c, &cfg, mitigate);
+    for rep in &reports {
         if rep.detected {
             detected += 1;
         }
         eprintln!(
             "  {}: detected={} impact={:.2}x",
-            c.id(),
+            rep.condition.id(),
             rep.detected,
             rep.throughput_impact()
         );
-        t.row(report_row(&rep));
+        t.row(report_row(rep));
     }
     print!("{}", t.render());
-    println!("detected {detected}/28 conditions from the DPU vantage point");
+    println!(
+        "detected {detected}/28 conditions from the DPU vantage point ({:.1}s wallclock)",
+        t0.elapsed().as_secs_f64()
+    );
 }

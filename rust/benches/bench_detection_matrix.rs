@@ -1,153 +1,39 @@
 //! E5 — the paper's central thesis (§§4.1-4.3): what a DPU can and cannot
 //! see, versus software-only sensing.
 //!
-//! 1. 28×28 injection × detection confusion matrix (diagonal dominance).
-//! 2. DPU vs SW-only coverage: for each condition, did the DPU identify it;
-//!    did SW-only sensing even notice (any alarm), and could it identify it?
-//! 3. §4.3 negative controls: with TP kept on NVLink (single-node stages),
-//!    a GPU straggler is INVISIBLE to the DPU — detections must stay ~zero.
+//! This bench is a thin wrapper over `coordinator::matrix`, the shared
+//! parallel scorecard subsystem (also behind `dpulens matrix`):
 //!
-//! `cargo bench --bench bench_detection_matrix`
+//! 1. 28×28 injection × detection confusion matrix (diagonal dominance).
+//! 2. Per-condition scorecards: recall, time-to-detect, false-positive rate
+//!    against the other 27 injections, attribution accuracy, DPU-vs-SW
+//!    coverage.
+//! 3. §4.3 negative control: with TP kept on NVLink (single-node stages), a
+//!    GPU straggler is INVISIBLE to the DPU — EW1 detections must stay zero.
+//!
+//! `cargo bench --bench bench_detection_matrix [-- --replicates N --threads N]`
 
-use dpulens::coordinator::experiment::{inject_time, standard_cfg};
-use dpulens::coordinator::Scenario;
-use dpulens::dpu::detectors::{Condition, ALL_CONDITIONS};
-use dpulens::dpu::swdet;
-use dpulens::engine::preset;
-use dpulens::metrics::ConfusionMatrix;
-use dpulens::util::table::Table;
-
-/// Per-condition scenario shaping (see DESIGN.md §4).
-fn cfg_for(c: Condition) -> dpulens::coordinator::ScenarioCfg {
-    let mut cfg = standard_cfg();
-    match c {
-        // Compute-skew conditions need a compute-dominated cost profile for
-        // a straggler/mispartition to move collective timing.
-        Condition::Ew1TpStraggler
-        | Condition::Ew3CrossNodeSkew
-        | Condition::Ew4Congestion
-        | Condition::Ew9EarlyStopSkew => {
-            cfg.engine.profile = preset("7b").unwrap();
-            cfg.engine.policy.max_batch = 8;
-            cfg.workload.arrival = dpulens::sim::dist::Arrival::Poisson { rate: 150.0 };
-        }
-        // Pipeline-cadence detection needs a *busy* pipeline: idle lulls
-        // produce ms-scale healthy gaps that mask a mispartitioned stage.
-        Condition::Ew2PpBubble => {
-            cfg.engine.profile = preset("7b").unwrap();
-            cfg.engine.policy.max_batch = 8;
-            cfg.workload.arrival = dpulens::sim::dist::Arrival::Poisson { rate: 500.0 };
-            cfg.workload.output_len = dpulens::sim::dist::LengthDist::Uniform { lo: 8, hi: 16 };
-        }
-        // Early-stop conditions only bite when decode slots are saturated.
-        Condition::Ns8EarlyCompletion => {
-            cfg.workload.arrival = dpulens::sim::dist::Arrival::Poisson { rate: 2000.0 };
-            cfg.workload.prompt_len = dpulens::sim::dist::LengthDist::Uniform { lo: 8, hi: 16 };
-            cfg.workload.output_len = dpulens::sim::dist::LengthDist::Uniform { lo: 8, hi: 24 };
-        }
-        // PC10's PCIe signature (shrinking decode D2H blocks) additionally
-        // needs iterations slow enough that slots actually fill: use the
-        // compute-heavy profile under sustained demand.
-        Condition::Pc10DecodeEarlyStop => {
-            cfg.engine.profile = preset("7b").unwrap();
-            cfg.engine.policy.max_batch = 8;
-            cfg.workload.arrival = dpulens::sim::dist::Arrival::Poisson { rate: 1500.0 };
-            cfg.workload.prompt_len = dpulens::sim::dist::LengthDist::Uniform { lo: 8, hi: 16 };
-            cfg.workload.output_len = dpulens::sim::dist::LengthDist::Uniform { lo: 8, hi: 24 };
-        }
-        _ => {}
-    }
-    cfg
-}
+use dpulens::coordinator::matrix::{run_matrix, MatrixConfig};
+use dpulens::util::cli::opt_parse;
 
 fn main() {
-    let t0 = std::time::Instant::now();
-    let mut cm = ConfusionMatrix::new();
-    let mut coverage = Table::new("E5 — DPU vs software-only observability").header(&[
-        "injected", "DPU identified", "diag precision", "SW noticed", "SW identified",
-    ]);
-    let mut dpu_hits = 0;
-    let mut sw_notices = 0;
-    let mut sw_idents = 0;
-
-    // Healthy false-alarm floor.
-    let healthy = Scenario::new(standard_cfg()).run();
-    cm.record_healthy(&healthy.detections, healthy.windows);
-
-    for c in ALL_CONDITIONS {
-        let mut cfg = cfg_for(c);
-        cfg.inject = Some((c, inject_time(&cfg)));
-        let res = Scenario::new(cfg).run();
-        let t_inj = res.injected_at.unwrap();
-        let post: Vec<_> =
-            res.detections.iter().filter(|d| d.at >= t_inj).cloned().collect();
-        let hit = post.iter().any(|d| d.condition == c);
-        cm.record(c, &post, hit);
-        if hit {
-            dpu_hits += 1;
-        }
-        // SW-only comparison: alarms raised after injection?
-        let sw_noticed = res.sw_detections > 0;
-        if sw_noticed {
-            sw_notices += 1;
-        }
-        // SW identification: an alarm whose mapping names this condition.
-        // (SwSuite alarms are generic; only application-level conditions map.)
-        let sw_identified = sw_noticed
-            && [
-                swdet::SwAlarm::QueueGrowth,
-                swdet::SwAlarm::ArrivalBurst,
-                swdet::SwAlarm::StepTimeAnomaly,
-                swdet::SwAlarm::KvPressure,
-                swdet::SwAlarm::TransportLatency,
-                swdet::SwAlarm::GpuUnderutilized,
-            ]
-            .iter()
-            .any(|a| swdet::identifies(*a).contains(&c));
-        if sw_identified {
-            sw_idents += 1;
-        }
-        coverage.row(vec![
-            c.id().into(),
-            if hit { "yes".into() } else { "NO".into() },
-            format!("{:.2}", cm.diagonal_precision(c)),
-            if sw_noticed { "yes".into() } else { "no".into() },
-            if sw_identified { "yes".into() } else { "no".into() },
-        ]);
-        eprintln!("[{}] dpu={} sw_noticed={}", c.id(), hit, sw_noticed);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut mc = MatrixConfig::fast();
+    if let Some(r) = opt_parse::<usize>(&args, "--replicates") {
+        mc.replicates = r;
     }
-
-    print!("{}", coverage.render());
-    print!("{}", cm.render());
+    if let Some(t) = opt_parse::<usize>(&args, "--threads") {
+        mc.threads = t;
+    }
+    let t0 = std::time::Instant::now();
+    let report = run_matrix(&mc);
+    print!("{}", report.render_tables());
+    println!("{}", report.summary_line());
     println!(
-        "DPU identified {dpu_hits}/28; SW noticed {sw_notices}/28 but identified {sw_idents}/28 \
-         (software sensing lacks the PCIe/NIC vantage — the paper's thesis)"
+        "wallclock {:.1}s for {} cells on {} threads \
+         (rerun with `-- --threads 1` for the serial baseline)",
+        t0.elapsed().as_secs_f64(),
+        report.cells_run,
+        report.threads_used
     );
-    println!(
-        "healthy false-alarm conditions: {} over {} windows",
-        cm.false_alarms.len(),
-        cm.healthy_windows
-    );
-
-    // --- §4.3 negative control: NVLink blindness ---
-    let mut blind_cfg = standard_cfg();
-    blind_cfg.engine.profile = preset("7b").unwrap();
-    blind_cfg.engine.nodes_per_stage = 1; // TP stays intra-node on NVLink
-    blind_cfg.cluster.pp_degree = 2;
-    blind_cfg.inject = Some((Condition::Ew1TpStraggler, inject_time(&blind_cfg)));
-    let blind = Scenario::new(blind_cfg).run();
-    let t_inj = blind.injected_at.unwrap();
-    let ew1_detected = blind
-        .detections
-        .iter()
-        .any(|d| d.condition == Condition::Ew1TpStraggler && d.at >= t_inj);
-    println!(
-        "\n4.3 negative control (TP on NVLink, straggler injected): EW1 detected = {ew1_detected} \
-         (expected false — NVLink collectives bypass the DPU)"
-    );
-    println!(
-        "  invisible events dropped at the visibility boundary: {}",
-        blind.dpu_invisible_dropped
-    );
-    println!("wallclock {:.1}s", t0.elapsed().as_secs_f64());
 }

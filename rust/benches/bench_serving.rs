@@ -11,7 +11,7 @@
 
 use dpulens::coordinator::{Scenario, ScenarioCfg};
 use dpulens::dpu::detectors::Condition;
-use dpulens::engine::{preset, ComputeBackend};
+use dpulens::engine::preset;
 use dpulens::metrics::ServeMetrics;
 use dpulens::sim::{SimDur, SimTime, MS};
 use dpulens::util::table::Table;
@@ -89,7 +89,15 @@ fn main() {
         if h - f > 1e-9 { (m - f) / (h - f) * 100.0 } else { 100.0 }
     );
 
-    // --- 4. real compute row ---
+    // --- 4. real compute row (pjrt feature only) ---
+    real_compute_section();
+
+    println!("bench_serving wallclock {:.1}s", t0.elapsed().as_secs_f64());
+}
+
+#[cfg(feature = "pjrt")]
+fn real_compute_section() {
+    use dpulens::engine::ComputeBackend;
     match (dpulens::runtime::cpu_client(), dpulens::runtime::ArtifactSet::open_default()) {
         (Ok(client), Ok(arts)) => {
             let mut cfg = base();
@@ -119,6 +127,9 @@ fn main() {
         }
         _ => println!("(artifacts not built; skipping real-compute row — run `make artifacts`)"),
     }
+}
 
-    println!("bench_serving wallclock {:.1}s", t0.elapsed().as_secs_f64());
+#[cfg(not(feature = "pjrt"))]
+fn real_compute_section() {
+    println!("(built without the pjrt feature; skipping real-compute row)");
 }

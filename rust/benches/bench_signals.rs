@@ -145,13 +145,22 @@ fn main() {
     let native_us = t2.elapsed().as_micros() as f64 / iters as f64;
     println!("scorer native:   {native_us:.1}us / 64-window block");
 
+    compiled_scorer_section(&mut native, &windows, &baseline_rows);
+}
+
+#[cfg(feature = "pjrt")]
+fn compiled_scorer_section(
+    native: &mut NativeScorer,
+    windows: &[Vec<f32>],
+    baseline_rows: &[(f32, f32)],
+) {
     match (dpulens::runtime::cpu_client(), dpulens::runtime::ArtifactSet::open_default()) {
         (Ok(client), Ok(arts)) => {
             match dpulens::runtime::CompiledScorer::load(&client, &arts) {
                 Ok(mut compiled) => {
                     // Correctness parity first.
-                    let (fn_, zn) = native.score(&windows, &baseline_rows);
-                    let (fc, zc) = compiled.score(&windows, &baseline_rows);
+                    let (fn_, zn) = native.score(windows, baseline_rows);
+                    let (fc, zc) = compiled.score(windows, baseline_rows);
                     let mut max_err = 0f32;
                     for (a, b) in fn_.iter().flatten().zip(fc.iter().flatten()) {
                         max_err = max_err.max((a - b).abs() / (1.0 + a.abs()));
@@ -162,7 +171,7 @@ fn main() {
                     let iters_c = 50;
                     let t3 = Instant::now();
                     for _ in 0..iters_c {
-                        let _ = compiled.score(&windows, &baseline_rows);
+                        let _ = compiled.score(windows, baseline_rows);
                     }
                     let compiled_us = t3.elapsed().as_micros() as f64 / iters_c as f64;
                     println!(
@@ -175,4 +184,13 @@ fn main() {
         }
         _ => println!("artifacts not built; skipping compiled-scorer comparison"),
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn compiled_scorer_section(
+    _native: &mut NativeScorer,
+    _windows: &[Vec<f32>],
+    _baseline_rows: &[(f32, f32)],
+) {
+    println!("(built without the pjrt feature; skipping compiled-scorer comparison)");
 }

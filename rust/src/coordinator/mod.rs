@@ -2,8 +2,10 @@
 //! the CLI surface.
 
 pub mod experiment;
+pub mod matrix;
 pub mod report;
 pub mod scenario;
 
 pub use experiment::{condition_experiment, ConditionReport};
+pub use matrix::{run_matrix, run_sweep, MatrixConfig, MatrixReport};
 pub use scenario::{target_node_for, RunResult, Scenario, ScenarioCfg};

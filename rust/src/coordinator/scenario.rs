@@ -112,6 +112,9 @@ pub struct RunResult {
     pub detections: Vec<Detection>,
     pub attributions: Vec<Attribution>,
     pub sw_detections: usize,
+    /// Full software-suite alarm log (what fired, when) — the SW-vs-DPU
+    /// coverage comparison needs alarm identities, not just a count.
+    pub sw_alarm_log: Vec<crate::dpu::swdet::SwDetection>,
     pub actions: Vec<crate::mitigation::AppliedAction>,
     pub injected_at: Option<SimTime>,
     pub injection_desc: Option<String>,
@@ -363,11 +366,13 @@ impl Scenario {
 
         let span = self.cfg.duration;
         let metrics = ServeMetrics::collect(self.engine.requests.values(), span);
+        let sw_alarm_log = std::mem::take(&mut self.sw_suite.detections);
         RunResult {
             metrics,
             detections: std::mem::take(&mut self.dpu.detections),
             attributions: self.attributions,
-            sw_detections: self.sw_suite.detections.len(),
+            sw_detections: sw_alarm_log.len(),
+            sw_alarm_log,
             actions: self.controller.log.clone(),
             injected_at: self.injected_at,
             injection_desc: self.injection_desc,

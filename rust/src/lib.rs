@@ -30,6 +30,7 @@ pub mod mitigation;
 pub mod pathology;
 
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 
 pub mod coordinator;

@@ -3,10 +3,20 @@
 //! Subcommands (hand-rolled parsing; clap is not vendored offline):
 //!   serve     [--real] [--duration-ms N] [--rate R] [--seed S]
 //!   inject    <COND> [--mitigate] [--duration-ms N]
-//!   sweep     [--mitigate]           run all 28 condition experiments
+//!   sweep     [--mitigate] [--threads N]   all 28 condition experiments,
+//!                                          fanned out over worker threads
+//!   matrix    [--replicates N] [--threads N] [--json] [--json-out PATH]
+//!             run the full injection × detection scorecard matrix
+//!             (28 conditions × seed replicates + healthy and §4.3
+//!             NVLink-blindness controls, in parallel) and emit the
+//!             per-condition detection-quality scorecard as a table
+//!             and/or deterministic JSON for trajectory tracking
 //!   runbook                          print the encoded Tables 3(a)-(c)
 //!   signals                          print the Table 2(b) signal inventory
 //!   attribution <COND>               inject + show root-cause attribution
+//!
+//! `serve --real` (PJRT-compiled transformer) requires building with
+//! `--features pjrt` and `make artifacts`.
 
 use dpulens::coordinator::{condition_experiment, experiment, Scenario, ScenarioCfg};
 use dpulens::dpu::detectors::{Condition, ALL_CONDITIONS};
@@ -14,25 +24,18 @@ use dpulens::dpu::runbook;
 use dpulens::metrics::ServeMetrics;
 use dpulens::sim::{SimDur, SimTime, MS};
 use dpulens::telemetry::ALL_SW_SIGNALS;
+use dpulens::util::cli::{flag, opt_parse, opt_val};
 use dpulens::util::table::Table;
-
-fn flag(args: &[String], name: &str) -> bool {
-    args.iter().any(|a| a == name)
-}
-
-fn opt_val(args: &[String], name: &str) -> Option<String> {
-    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
-}
 
 fn base_cfg(args: &[String]) -> ScenarioCfg {
     let mut cfg = experiment::standard_cfg();
-    if let Some(ms) = opt_val(args, "--duration-ms").and_then(|v| v.parse::<u64>().ok()) {
+    if let Some(ms) = opt_parse::<u64>(args, "--duration-ms") {
         cfg.duration = SimDur::from_ms(ms);
     }
-    if let Some(rate) = opt_val(args, "--rate").and_then(|v| v.parse::<f64>().ok()) {
+    if let Some(rate) = opt_parse::<f64>(args, "--rate") {
         cfg.workload.arrival = dpulens::sim::dist::Arrival::Poisson { rate };
     }
-    if let Some(seed) = opt_val(args, "--seed").and_then(|v| v.parse::<u64>().ok()) {
+    if let Some(seed) = opt_parse::<u64>(args, "--seed") {
         cfg.seed = seed;
     }
     if let Some(p) = opt_val(args, "--profile") {
@@ -43,30 +46,36 @@ fn base_cfg(args: &[String]) -> ScenarioCfg {
     cfg
 }
 
+#[cfg(feature = "pjrt")]
+fn run_real(cfg: ScenarioCfg) -> dpulens::coordinator::RunResult {
+    let client = dpulens::runtime::cpu_client().expect("PJRT client");
+    let arts = dpulens::runtime::ArtifactSet::open_default()
+        .expect("artifacts missing; run `make artifacts`");
+    let n_rep = {
+        let plans = dpulens::engine::build_replicas(&cfg.cluster, cfg.engine.nodes_per_stage);
+        plans.len()
+    };
+    let backends: Vec<Box<dyn dpulens::engine::ComputeBackend>> = (0..n_rep)
+        .map(|_| {
+            Box::new(
+                dpulens::runtime::TransformerSession::load(&client, &arts)
+                    .expect("artifact load"),
+            ) as Box<dyn dpulens::engine::ComputeBackend>
+        })
+        .collect();
+    Scenario::with_backends(cfg, backends).run()
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_real(_cfg: ScenarioCfg) -> dpulens::coordinator::RunResult {
+    eprintln!("serve --real requires a build with `--features pjrt` (plus `make artifacts`)");
+    std::process::exit(2);
+}
+
 fn cmd_serve(args: &[String]) {
     let cfg = base_cfg(args);
     let real = flag(args, "--real");
-    let res = if real {
-        let client = dpulens::runtime::cpu_client().expect("PJRT client");
-        let arts = dpulens::runtime::ArtifactSet::open_default()
-            .expect("artifacts missing; run `make artifacts`");
-        let n_rep = {
-            let plans =
-                dpulens::engine::build_replicas(&cfg.cluster, cfg.engine.nodes_per_stage);
-            plans.len()
-        };
-        let backends: Vec<Box<dyn dpulens::engine::ComputeBackend>> = (0..n_rep)
-            .map(|_| {
-                Box::new(
-                    dpulens::runtime::TransformerSession::load(&client, &arts)
-                        .expect("artifact load"),
-                ) as Box<dyn dpulens::engine::ComputeBackend>
-            })
-            .collect();
-        Scenario::with_backends(cfg, backends).run()
-    } else {
-        Scenario::new(cfg).run()
-    };
+    let res = if real { run_real(cfg) } else { Scenario::new(cfg).run() };
     let mut t = Table::new("serve").header(&ServeMetrics::table_header());
     t.row(res.metrics.row_cells(if real { "real-compute" } else { "simulated" }));
     print!("{}", t.render());
@@ -111,12 +120,57 @@ fn cmd_inject(args: &[String]) {
 fn cmd_sweep(args: &[String]) {
     let cfg = base_cfg(args);
     let mitigate = flag(args, "--mitigate");
+    let threads = opt_parse::<usize>(args, "--threads").unwrap_or(0);
+    let t0 = std::time::Instant::now();
+    let reports = dpulens::coordinator::matrix::run_sweep(&cfg, mitigate, threads);
     let mut t = Table::new("runbook sweep").header(&experiment::report_header());
-    for c in ALL_CONDITIONS {
-        let rep = condition_experiment(c, &cfg, mitigate);
-        t.row(experiment::report_row(&rep));
+    let mut detected = 0;
+    for rep in &reports {
+        if rep.detected {
+            detected += 1;
+        }
+        t.row(experiment::report_row(rep));
     }
     print!("{}", t.render());
+    println!(
+        "{detected}/{} detected; wallclock {:.1}s",
+        reports.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+fn cmd_matrix(args: &[String]) {
+    use dpulens::coordinator::matrix::{run_matrix, MatrixConfig};
+    let mut mc = MatrixConfig::default();
+    mc.base = base_cfg(args);
+    if let Some(r) = opt_parse::<usize>(args, "--replicates") {
+        mc.replicates = r;
+    }
+    if let Some(t) = opt_parse::<usize>(args, "--threads") {
+        mc.threads = t;
+    }
+    if flag(args, "--no-negative-control") {
+        mc.negative_control = false;
+    }
+    let t0 = std::time::Instant::now();
+    let report = run_matrix(&mc);
+    let wall = t0.elapsed().as_secs_f64();
+    if flag(args, "--json") {
+        println!("{}", report.to_json().render());
+    } else {
+        print!("{}", report.render_tables());
+        println!("{}", report.summary_line());
+        println!(
+            "wallclock {wall:.1}s for {} cells on {} threads",
+            report.cells_run, report.threads_used
+        );
+    }
+    if let Some(path) = opt_val(args, "--json-out") {
+        let mut body = report.to_json().render();
+        body.push('\n');
+        std::fs::write(&path, body).expect("writing scorecard JSON");
+        eprintln!("scorecard JSON written to {path}");
+    }
 }
 
 fn cmd_runbook() {
@@ -181,14 +235,16 @@ fn main() {
         Some("serve") => cmd_serve(&args[1..]),
         Some("inject") => cmd_inject(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
+        Some("matrix") => cmd_matrix(&args[1..]),
         Some("runbook") => cmd_runbook(),
         Some("signals") => cmd_signals(),
         Some("attribution") => cmd_attribution(&args[1..]),
         _ => {
             eprintln!(
                 "dpulens — DPU-vantage observability for LLM inference clusters\n\
-                 usage: dpulens <serve|inject|sweep|runbook|signals|attribution> [flags]\n\
-                 flags: --real --mitigate --duration-ms N --rate R --seed S"
+                 usage: dpulens <serve|inject|sweep|matrix|runbook|signals|attribution> [flags]\n\
+                 flags: --real --mitigate --duration-ms N --rate R --seed S\n\
+                 matrix: --replicates N --threads N --json --json-out PATH --no-negative-control"
             );
             std::process::exit(2);
         }

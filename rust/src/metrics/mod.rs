@@ -124,6 +124,32 @@ impl ConfusionMatrix {
         }
     }
 
+    /// Count-based variant of [`ConfusionMatrix::record`], for callers that
+    /// aggregate detections off-thread and ship back compact per-condition
+    /// counts (the parallel matrix runner).
+    pub fn record_counts(
+        &mut self,
+        injected: Condition,
+        counts: &[(Condition, u64)],
+        detected_any: bool,
+    ) {
+        let row = self.counts.entry(injected).or_default();
+        for (c, n) in counts {
+            *row.entry(*c).or_insert(0) += n;
+        }
+        if !detected_any {
+            *self.misses.entry(injected).or_insert(0) += 1;
+        }
+    }
+
+    /// Count-based variant of [`ConfusionMatrix::record_healthy`].
+    pub fn record_healthy_counts(&mut self, counts: &[(Condition, u64)], windows: u64) {
+        self.healthy_windows += windows;
+        for (c, n) in counts {
+            *self.false_alarms.entry(*c).or_insert(0) += n;
+        }
+    }
+
     pub fn count(&self, injected: Condition, detected: Condition) -> u64 {
         self.counts.get(&injected).and_then(|r| r.get(&detected)).copied().unwrap_or(0)
     }
@@ -185,6 +211,119 @@ impl ConfusionMatrix {
             }
         }
         t.render()
+    }
+}
+
+/// Per-condition detection-quality aggregate across a scenario-matrix run
+/// (the machine-readable form of the paper's §§4.1-4.3 evaluation). One
+/// scorecard summarizes every replicate of one injected condition, plus how
+/// often that condition's detector misfired elsewhere (the false-positive
+/// view against the other 27 injections and the healthy controls).
+#[derive(Debug, Clone)]
+pub struct Scorecard {
+    pub condition: Condition,
+    /// Injected runs of this condition.
+    pub runs: u64,
+    /// Runs where the injected condition itself fired after injection.
+    pub detected_runs: u64,
+    /// Injection -> first correct detection, one sample per detected run.
+    pub latency_ns: Summary,
+    /// Post-injection firings naming this condition, across its own runs.
+    pub self_firings: u64,
+    /// Post-injection firings naming OTHER conditions during this
+    /// condition's runs (cross-talk emitted).
+    pub other_firings: u64,
+    /// Directive-aware diagonal precision (from the confusion matrix).
+    pub diagonal_precision: f64,
+    /// Runs of the OTHER 27 conditions in which this condition fired.
+    pub false_positive_runs: u64,
+    /// Total runs of the other 27 conditions.
+    pub other_condition_runs: u64,
+    /// Firings of this condition during healthy (no-injection) runs.
+    pub healthy_false_alarms: u64,
+    /// Runs whose root-cause attribution matched the expected cause class.
+    pub attribution_hits: u64,
+    /// Runs where the software-only suite raised any alarm post-injection.
+    pub sw_noticed_runs: u64,
+    /// Runs where a fired software alarm *identifies* this condition.
+    pub sw_identified_runs: u64,
+}
+
+impl Scorecard {
+    pub fn new(condition: Condition) -> Self {
+        Scorecard {
+            condition,
+            runs: 0,
+            detected_runs: 0,
+            latency_ns: Summary::new(),
+            self_firings: 0,
+            other_firings: 0,
+            diagonal_precision: 0.0,
+            false_positive_runs: 0,
+            other_condition_runs: 0,
+            healthy_false_alarms: 0,
+            attribution_hits: 0,
+            sw_noticed_runs: 0,
+            sw_identified_runs: 0,
+        }
+    }
+
+    /// Was the condition identified at least once across replicates?
+    pub fn identified(&self) -> bool {
+        self.detected_runs > 0
+    }
+
+    /// Detection recall over replicates.
+    pub fn recall(&self) -> f64 {
+        if self.runs == 0 {
+            0.0
+        } else {
+            self.detected_runs as f64 / self.runs as f64
+        }
+    }
+
+    /// Fraction of other-condition runs in which this detector misfired.
+    pub fn false_positive_rate(&self) -> f64 {
+        if self.other_condition_runs == 0 {
+            0.0
+        } else {
+            self.false_positive_runs as f64 / self.other_condition_runs as f64
+        }
+    }
+
+    /// Fraction of runs whose attribution named the expected cause class.
+    pub fn attribution_accuracy(&self) -> f64 {
+        if self.runs == 0 {
+            0.0
+        } else {
+            self.attribution_hits as f64 / self.runs as f64
+        }
+    }
+
+    pub fn sw_noticed_rate(&self) -> f64 {
+        if self.runs == 0 {
+            0.0
+        } else {
+            self.sw_noticed_runs as f64 / self.runs as f64
+        }
+    }
+
+    pub fn sw_identified_rate(&self) -> f64 {
+        if self.runs == 0 {
+            0.0
+        } else {
+            self.sw_identified_runs as f64 / self.runs as f64
+        }
+    }
+
+    /// DPU-vs-software coverage verdict for the E5 comparison table.
+    pub fn coverage_delta(&self) -> &'static str {
+        match (self.identified(), self.sw_identified_runs > 0) {
+            (true, false) => "DPU-only",
+            (true, true) => "DPU+SW",
+            (false, true) => "SW-only",
+            (false, false) => "neither",
+        }
     }
 }
 
@@ -268,6 +407,62 @@ mod tests {
         };
         cm.record(Condition::Ns8EarlyCompletion, &[d(Condition::Pc10DecodeEarlyStop)], true);
         assert_eq!(cm.diagonal_precision(Condition::Ns8EarlyCompletion), 1.0);
+    }
+
+    #[test]
+    fn record_counts_matches_record() {
+        let mut a = ConfusionMatrix::new();
+        let d = |c: Condition| Detection {
+            condition: c,
+            node: NodeId(0),
+            at: SimTime(5),
+            severity: 4.0,
+            evidence: String::new(),
+        };
+        a.record(
+            Condition::Ew6Retransmissions,
+            &[d(Condition::Ew6Retransmissions), d(Condition::Ew4Congestion)],
+            true,
+        );
+        let mut b = ConfusionMatrix::new();
+        b.record_counts(
+            Condition::Ew6Retransmissions,
+            &[(Condition::Ew6Retransmissions, 1), (Condition::Ew4Congestion, 1)],
+            true,
+        );
+        assert_eq!(
+            a.count(Condition::Ew6Retransmissions, Condition::Ew6Retransmissions),
+            b.count(Condition::Ew6Retransmissions, Condition::Ew6Retransmissions)
+        );
+        assert_eq!(
+            a.diagonal_precision(Condition::Ew6Retransmissions),
+            b.diagonal_precision(Condition::Ew6Retransmissions)
+        );
+        b.record_healthy_counts(&[(Condition::Ns1BurstBacklog, 2)], 100);
+        assert_eq!(b.healthy_windows, 100);
+        assert_eq!(b.false_alarms[&Condition::Ns1BurstBacklog], 2);
+    }
+
+    #[test]
+    fn scorecard_rates() {
+        let mut sc = Scorecard::new(Condition::Ew1TpStraggler);
+        assert!(!sc.identified());
+        assert_eq!(sc.recall(), 0.0);
+        assert_eq!(sc.false_positive_rate(), 0.0);
+        sc.runs = 4;
+        sc.detected_runs = 3;
+        sc.false_positive_runs = 9;
+        sc.other_condition_runs = 108;
+        sc.attribution_hits = 2;
+        sc.sw_noticed_runs = 4;
+        sc.sw_identified_runs = 0;
+        assert!(sc.identified());
+        assert!((sc.recall() - 0.75).abs() < 1e-12);
+        assert!((sc.false_positive_rate() - 9.0 / 108.0).abs() < 1e-12);
+        assert!((sc.attribution_accuracy() - 0.5).abs() < 1e-12);
+        assert_eq!(sc.coverage_delta(), "DPU-only");
+        sc.detected_runs = 0;
+        assert_eq!(sc.coverage_delta(), "neither");
     }
 
     #[test]

@@ -1,0 +1,45 @@
+//! Tiny argv helpers shared by the CLI binary and the bench mains (clap is
+//! not vendored offline). Flags are exact matches; values are positional
+//! (`--name value`).
+
+/// Is the exact flag present?
+pub fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+/// The value following `--name`, if any.
+pub fn opt_val(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// The value following `--name`, parsed, if present and well-formed.
+pub fn opt_parse<T: std::str::FromStr>(args: &[String], name: &str) -> Option<T> {
+    opt_val(args, name).and_then(|v| v.parse().ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_and_values() {
+        let args = argv(&["--mitigate", "--replicates", "3", "--rate", "1.5"]);
+        assert!(flag(&args, "--mitigate"));
+        assert!(!flag(&args, "--real"));
+        assert_eq!(opt_val(&args, "--replicates").as_deref(), Some("3"));
+        assert_eq!(opt_parse::<usize>(&args, "--replicates"), Some(3));
+        assert_eq!(opt_parse::<f64>(&args, "--rate"), Some(1.5));
+        assert_eq!(opt_parse::<u64>(&args, "--rate"), None); // malformed
+        assert_eq!(opt_val(&args, "--missing"), None);
+    }
+
+    #[test]
+    fn value_at_end_is_none() {
+        let args = argv(&["--seed"]);
+        assert_eq!(opt_val(&args, "--seed"), None);
+    }
+}

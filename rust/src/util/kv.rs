@@ -12,15 +12,26 @@ pub struct KvFile {
     order: Vec<(String, String)>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum KvError {
-    #[error("line {0}: missing '=' in {1:?}")]
     MissingEquals(usize, String),
-    #[error("missing required key {0:?}")]
     MissingKey(String),
-    #[error("key {0:?}: invalid value {1:?}: {2}")]
     BadValue(String, String, String),
 }
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::MissingEquals(line, text) => write!(f, "line {line}: missing '=' in {text:?}"),
+            KvError::MissingKey(key) => write!(f, "missing required key {key:?}"),
+            KvError::BadValue(key, val, err) => {
+                write!(f, "key {key:?}: invalid value {val:?}: {err}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
 
 impl KvFile {
     pub fn parse(text: &str) -> Result<KvFile, KvError> {

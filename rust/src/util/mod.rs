@@ -3,9 +3,11 @@
 //! harness. Everything here is dependency-free (offline vendoring constraint)
 //! and deterministic.
 
+pub mod cli;
 pub mod fastmap;
 pub mod json;
 pub mod kv;
+pub mod par;
 pub mod prop;
 pub mod ring;
 pub mod rng;
@@ -15,6 +17,7 @@ pub mod table;
 pub use fastmap::FastMap;
 pub use json::Json;
 pub use kv::KvFile;
+pub use par::parallel_map;
 pub use ring::Ring;
 pub use rng::{Rng, Zipf};
 pub use stats::{Histogram, P2Quantile, Summary, Welford};

@@ -1,0 +1,102 @@
+//! Scoped-thread fan-out for embarrassingly parallel work (rayon is not
+//! vendored offline). Deterministic: results come back in input order
+//! regardless of which worker ran which item, so parallel callers produce
+//! byte-identical reports across runs and thread counts.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count the platform advertises (fallback 1).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The worker count [`parallel_map`] will actually use for `items` work
+/// items when asked for `threads` (0 = auto). Exposed so callers can report
+/// the real pool size without duplicating the clamping policy.
+pub fn resolve_threads(threads: usize, items: usize) -> usize {
+    let n = if threads == 0 { available_threads() } else { threads };
+    n.min(items.max(1))
+}
+
+/// Apply `f` to every item on a pool of scoped workers; results are returned
+/// in input order. `threads == 0` means auto (one worker per core); a single
+/// worker degenerates to a plain serial map with zero thread overhead.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = resolve_threads(threads, items.len());
+    if n <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(items.len()));
+    std::thread::scope(|s| {
+        for _ in 0..n {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                slots.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut v = slots.into_inner().unwrap();
+    v.sort_by_key(|&(i, _)| i);
+    v.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<u64> = (0..257).collect();
+        let out = parallel_map(&items, 8, |&x| x * 3);
+        assert_eq!(out, items.iter().map(|&x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let items: Vec<u64> = (0..64).collect();
+        let f = |&x: &u64| {
+            // Non-uniform work so workers finish out of order.
+            let mut acc = x;
+            for i in 0..(x % 7) * 1000 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+            }
+            acc
+        };
+        let serial = parallel_map(&items, 1, f);
+        let par = parallel_map(&items, 4, f);
+        let auto = parallel_map(&items, 0, f);
+        assert_eq!(serial, par);
+        assert_eq!(serial, auto);
+    }
+
+    #[test]
+    fn empty_and_single_item() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_map(&empty, 4, |&x| x).is_empty());
+        assert_eq!(parallel_map(&[7u32], 4, |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn available_threads_positive() {
+        assert!(available_threads() >= 1);
+    }
+
+    #[test]
+    fn resolve_threads_clamps() {
+        assert_eq!(resolve_threads(4, 2), 2);
+        assert_eq!(resolve_threads(2, 100), 2);
+        assert_eq!(resolve_threads(3, 0), 1);
+        assert_eq!(resolve_threads(0, 100), available_threads().min(100));
+    }
+}

@@ -1,0 +1,80 @@
+//! E2E coverage for `coordinator::matrix` — the parallel detection-quality
+//! scorecard subsystem (paper §§4.1-4.3, Tables 3a-c as data):
+//!
+//! * the fast config (one replicate of the standard shaped scenarios, the
+//!   exact configuration the serial E5 bench ran) identifies all 28 runbook
+//!   conditions, with zero EW1 firings in the §4.3 NVLink negative control;
+//! * the scorecard JSON is byte-identical across repeated runs and across
+//!   worker-thread counts (the `BENCH_*.json` trajectory contract).
+
+use dpulens::coordinator::experiment::standard_cfg;
+use dpulens::coordinator::matrix::{run_matrix, MatrixConfig};
+use dpulens::sim::SimDur;
+
+#[test]
+fn fast_matrix_identifies_all_28_conditions() {
+    let report = run_matrix(&MatrixConfig::fast());
+
+    assert_eq!(report.scorecards.len(), 28);
+    for s in &report.scorecards {
+        assert_eq!(s.runs, 1, "{} unexpected run count", s.condition.id());
+        assert!(
+            s.identified(),
+            "{} not detected on the fast config (self_firings={}, other_firings={})",
+            s.condition.id(),
+            s.self_firings,
+            s.other_firings
+        );
+        assert!(s.self_firings >= 1, "{} diagonal empty", s.condition.id());
+        assert!(
+            !s.latency_ns.is_empty(),
+            "{} detected but no time-to-detect sample",
+            s.condition.id()
+        );
+        assert!(
+            s.sw_identified_runs <= s.sw_noticed_runs,
+            "{} SW identified without noticing",
+            s.condition.id()
+        );
+    }
+    assert_eq!(report.detected_count(), 28, "diagonal not dominant");
+    assert!((report.macro_recall() - 1.0).abs() < 1e-12);
+
+    // Healthy false-alarm floor was measured.
+    assert!(report.healthy_runs >= 1);
+    assert!(report.healthy_windows > 0);
+
+    // §4.3: with TP pinned to NVLink the straggler must stay invisible.
+    let nc = report.negative_control.as_ref().expect("negative control ran");
+    assert!(nc.runs >= 1);
+    assert_eq!(nc.ew1_detections, 0, "EW1 fired despite NVLink blindness");
+    assert!(nc.invisible_dropped > 0, "visibility boundary rejected nothing");
+
+    // The machine-readable form round-trips the headline numbers.
+    let json = report.to_json().render();
+    assert!(json.contains("\"schema\":\"dpulens.matrix.v1\""));
+    assert!(json.contains("\"detected\":28"));
+    assert!(json.contains("\"ew1_detections\":0"));
+}
+
+#[test]
+fn matrix_scorecard_json_is_deterministic() {
+    // Trimmed scenario so this stays cheap: detection success is irrelevant
+    // here, only bit-stable aggregation and serialization.
+    let mut base = standard_cfg();
+    base.duration = SimDur::from_ms(1300);
+    base.warmup_windows = 10;
+    base.calib_windows = 50;
+
+    let mk = |threads: usize| MatrixConfig {
+        base: base.clone(),
+        replicates: 1,
+        threads,
+        negative_control: true,
+    };
+
+    let a = run_matrix(&mk(2)).to_json().render();
+    let b = run_matrix(&mk(3)).to_json().render();
+    assert_eq!(a, b, "scorecard JSON differs across runs/thread counts");
+    assert!(a.contains("\"replicates\":1"));
+}

@@ -1,0 +1,150 @@
+//! Offline stub of the `xla` (xla-rs) PJRT binding surface.
+//!
+//! The real binding links `libxla_extension`, which is not vendorable in this
+//! offline environment. This crate reproduces exactly the API surface
+//! `dpulens::runtime` compiles against, so `--features pjrt` builds
+//! everywhere; every runtime entry point returns a descriptive error instead
+//! of executing. To run the AOT artifacts for real, point the `xla` path
+//! dependency in the workspace `Cargo.toml` at an actual xla-rs checkout (or
+//! use a `[patch]` section) — no `dpulens` source change is needed.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+const STUB_MSG: &str = "xla stub: built `pjrt` against the bundled no-op xla crate; \
+     point the `xla` path dependency at a real xla-rs binding (with \
+     libxla_extension) to execute AOT artifacts";
+
+/// Error type matching the real binding's `xla::Error` role.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn stub() -> Self {
+        Error(STUB_MSG.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a `Literal` can hold.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+impl NativeType for u32 {}
+impl NativeType for u64 {}
+
+/// Host-side tensor value.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _stub: (),
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal { _stub: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::stub())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::stub())
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        Err(Error::stub())
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _stub: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::stub())
+    }
+}
+
+/// A computation ready for compilation.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _stub: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _stub: () }
+    }
+}
+
+/// PJRT client (CPU plugin in the real binding).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _stub: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub())
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _stub: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub())
+    }
+}
+
+/// Device-resident buffer returned by execution.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _stub: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_surface_errors_not_panics() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e}").contains("stub"));
+    }
+}
