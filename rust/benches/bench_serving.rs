@@ -7,13 +7,19 @@
 //! 3. Closed loop: pathological vs mitigated throughput recovery.
 //! 4. Real-compute row (compiled transformer via PJRT) when artifacts exist.
 //!
-//! `cargo bench --bench bench_serving`
+//! `cargo bench --bench bench_serving [-- --json] [-- --json-out PATH]`
+//!
+//! `--json` replaces the tables with a deterministic JSON document;
+//! `--json-out BENCH_serving.json` writes the same document to a file for
+//! trajectory tracking (both reuse `util::cli`).
 
 use dpulens::coordinator::{Scenario, ScenarioCfg};
 use dpulens::dpu::detectors::Condition;
 use dpulens::engine::preset;
 use dpulens::metrics::ServeMetrics;
 use dpulens::sim::{SimDur, SimTime, MS};
+use dpulens::util::cli::{flag, opt_val};
+use dpulens::util::json::Json;
 use dpulens::util::table::Table;
 
 fn base() -> ScenarioCfg {
@@ -26,11 +32,14 @@ fn base() -> ScenarioCfg {
 }
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json_mode = flag(&args, "--json");
     let t0 = std::time::Instant::now();
 
     // --- 1. model-size sweep ---
     let mut t1 = Table::new("E6.1 — model-size presets (Table 1 spirit, sim cost model)")
         .header(&ServeMetrics::table_header());
+    let mut j1 = Json::arr();
     for name in ["small", "base", "7b", "13b"] {
         let mut cfg = base();
         cfg.engine.profile = preset(name).unwrap();
@@ -40,13 +49,14 @@ fn main() {
         }
         let res = Scenario::new(cfg).run();
         t1.row(res.metrics.row_cells(name));
+        j1.push(res.metrics.to_json(name));
         eprintln!("[{name}] {}", res.metrics.brief());
     }
-    print!("{}", t1.render());
 
     // --- 2. engine policy ablation ---
     let mut t2 = Table::new("E6.2 — engine policies (Table 2(a) comparison)")
         .header(&ServeMetrics::table_header());
+    let mut j2 = Json::arr();
     let policies: [(&str, bool, bool, bool); 4] = [
         ("continuous+bucketing (vLLM-like)", true, true, true),
         ("continuous, no bucketing", true, false, true),
@@ -63,36 +73,67 @@ fn main() {
             dpulens::sim::dist::LengthDist::Bimodal { short: 2, long: 32, p_short: 0.5 };
         let res = Scenario::new(cfg).run();
         t2.row(res.metrics.row_cells(label));
+        j2.push(res.metrics.to_json(label));
         eprintln!("[{label}] {}", res.metrics.brief());
     }
-    print!("{}", t2.render());
 
     // --- 3. closed loop recovery (fabric loss) ---
     let mut t3 = Table::new("E6.3 — closed loop (§5): EW6 fabric loss")
         .header(&ServeMetrics::table_header());
+    let mut j3 = Json::arr();
     let healthy = Scenario::new(base()).run();
     t3.row(healthy.metrics.row_cells("healthy"));
+    j3.push(healthy.metrics.to_json("healthy"));
     let mut inj = base();
     inj.inject = Some((Condition::Ew6Retransmissions, SimTime(400 * MS)));
     let faulted = Scenario::new(inj.clone()).run();
     t3.row(faulted.metrics.row_cells("EW6 injected"));
+    j3.push(faulted.metrics.to_json("EW6 injected"));
     let mut mit = inj.clone();
     mit.mitigate = true;
     let healed = Scenario::new(mit).run();
     t3.row(healed.metrics.row_cells("EW6 + closed loop"));
-    print!("{}", t3.render());
+    j3.push(healed.metrics.to_json("EW6 + closed loop"));
     let h = healthy.metrics.tok_per_s();
     let f = faulted.metrics.tok_per_s();
     let m = healed.metrics.tok_per_s();
-    println!(
-        "closed loop recovered {:.0}% of lost throughput (healthy {h:.0}, faulted {f:.0}, healed {m:.0} tok/s)",
-        if h - f > 1e-9 { (m - f) / (h - f) * 100.0 } else { 100.0 }
-    );
+    let recovery = if h - f > 1e-9 { (m - f) / (h - f) } else { 1.0 };
 
-    // --- 4. real compute row (pjrt feature only) ---
-    real_compute_section();
+    let doc = Json::obj()
+        .set("schema", "dpulens.bench_serving.v1")
+        .set("model_sweep", j1)
+        .set("policy_ablation", j2)
+        .set(
+            "closed_loop",
+            Json::obj()
+                .set("rows", j3)
+                .set("healthy_tok_per_s", h)
+                .set("faulted_tok_per_s", f)
+                .set("healed_tok_per_s", m)
+                .set("recovery", recovery),
+        );
 
-    println!("bench_serving wallclock {:.1}s", t0.elapsed().as_secs_f64());
+    if json_mode {
+        println!("{}", doc.render());
+    } else {
+        print!("{}", t1.render());
+        print!("{}", t2.render());
+        print!("{}", t3.render());
+        println!(
+            "closed loop recovered {:.0}% of lost throughput (healthy {h:.0}, faulted {f:.0}, healed {m:.0} tok/s)",
+            recovery * 100.0
+        );
+        // --- 4. real compute row (pjrt feature only) ---
+        real_compute_section();
+        println!("bench_serving wallclock {:.1}s", t0.elapsed().as_secs_f64());
+    }
+
+    if let Some(path) = opt_val(&args, "--json-out") {
+        let mut body = doc.render();
+        body.push('\n');
+        std::fs::write(&path, body).expect("writing BENCH_serving.json");
+        eprintln!("serving metrics JSON written to {path}");
+    }
 }
 
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,485 @@
+//! Fleet sweep: the replicas × routing-policy serving study plus the DP1-DP3
+//! data-parallel condition experiments (inject → detect → mitigate) — the
+//! engine behind `dpulens fleet`.
+//!
+//! A fleet world uses single-node pipeline stages so the default 4-GPU nodes
+//! yield `2 × replicas` nodes and `replicas` data-parallel lanes. The sweep
+//! runs, fanned out over `util::par` worker threads:
+//!
+//! * one healthy cell per routing policy (per-replica skew columns), and
+//! * per DP condition, a healthy / injected / mitigated triple on the
+//!   skew-prone affinity-hash baseline — all three on the same shaped
+//!   config, so recovery is measured against a like-for-like reference.
+//!
+//! Aggregation order is fixed by the cell list, so the JSON form is
+//! byte-identical across runs and `--threads` values.
+
+use crate::coordinator::experiment::{inject_time, standard_cfg};
+use crate::coordinator::scenario::{Scenario, ScenarioCfg};
+use crate::dpu::detectors::{Condition, DP_CONDITIONS};
+use crate::engine::router::ALL_POLICIES;
+use crate::engine::RoutePolicy;
+use crate::sim::{SimDur, SimTime};
+use crate::util::json::Json;
+use crate::util::par::{parallel_map, resolve_threads};
+use crate::util::table::{fmt_ns, Table};
+
+/// Extra measurement time DP cells get past the standard duration, so the
+/// post-mitigation phase is long enough for throughput to visibly recover.
+const DP_EXTRA_MS: u64 = 1600;
+
+/// Fleet-sweep configuration.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Base scenario every cell derives from (already fleet-shaped).
+    pub base: ScenarioCfg,
+    pub replicas: usize,
+    /// Routing policies swept for the healthy study.
+    pub policies: Vec<RoutePolicy>,
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+}
+
+impl FleetConfig {
+    pub fn new(replicas: usize) -> Self {
+        FleetConfig {
+            base: fleet_base_cfg(replicas),
+            replicas,
+            policies: ALL_POLICIES.to_vec(),
+            threads: 0,
+        }
+    }
+}
+
+/// Base scenario for an `n`-replica fleet: single-node pipeline stages
+/// (2 nodes per replica on the default spec), arrival scaled to the fleet,
+/// and the victim replica set to the last (non-zero) lane.
+pub fn fleet_base_cfg(replicas: usize) -> ScenarioCfg {
+    assert!(replicas >= 1);
+    let mut cfg = standard_cfg();
+    cfg.cluster.n_nodes = 2 * replicas;
+    cfg.cluster.pp_degree = 2;
+    cfg.engine.nodes_per_stage = 1;
+    cfg.workload.arrival = crate::sim::dist::Arrival::Poisson { rate: 250.0 * replicas as f64 };
+    cfg.workload.prompt_len = crate::sim::dist::LengthDist::Uniform { lo: 8, hi: 32 };
+    cfg.workload.output_len = crate::sim::dist::LengthDist::Uniform { lo: 4, hi: 12 };
+    cfg.victim_replica = replicas.saturating_sub(1);
+    cfg
+}
+
+/// One cell of the fleet sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FleetCell {
+    Policy(RoutePolicy),
+    /// The DP condition's shaped config WITHOUT the injection — the
+    /// like-for-like recovery baseline.
+    DpHealthy(Condition),
+    DpInjected(Condition),
+    DpMitigated(Condition),
+}
+
+/// The shared shaping every cell of one DP condition's triple (healthy /
+/// injected / mitigated) runs on, so their throughputs are comparable.
+fn dp_shaped(fc: &FleetConfig, c: Condition) -> ScenarioCfg {
+    let mut cfg = fc.base.clone();
+    // DP conditions are studied on the skew-prone affinity baseline.
+    cfg.engine.route_policy = RoutePolicy::FlowHash;
+    cfg.duration = cfg.duration + SimDur::from_ms(DP_EXTRA_MS);
+    match c {
+        // Saturation-sensitive conditions need a compute-dominated cost
+        // profile (cf. `shaped_cfg` for EW1): on the fast `small` model a
+        // hot or slowed replica never runs out of capacity, so flow
+        // concentration / degraded GPUs would not move throughput. The rate
+        // scale keeps the hot/slow lane decisively past the 7b compute
+        // bound while healthy lanes stay inside it.
+        Condition::Dp1RouterFlowSkew => {
+            cfg.engine.profile = crate::engine::preset("7b").unwrap();
+            cfg.engine.policy.max_batch = 8;
+            scale_rate(&mut cfg, 3.0);
+        }
+        Condition::Dp3StragglerReplica => {
+            cfg.engine.profile = crate::engine::preset("7b").unwrap();
+            cfg.engine.policy.max_batch = 8;
+            scale_rate(&mut cfg, 2.0);
+        }
+        // DP2's KV leak is capacity-independent: the victim's pool starves
+        // outright regardless of the cost profile.
+        _ => {}
+    }
+    cfg
+}
+
+fn cell_cfg(fc: &FleetConfig, cell: FleetCell) -> ScenarioCfg {
+    match cell {
+        FleetCell::Policy(p) => {
+            let mut cfg = fc.base.clone();
+            cfg.engine.route_policy = p;
+            cfg
+        }
+        FleetCell::DpHealthy(c) => dp_shaped(fc, c),
+        FleetCell::DpInjected(c) | FleetCell::DpMitigated(c) => {
+            let mut cfg = dp_shaped(fc, c);
+            cfg.inject = Some((c, inject_time(&cfg)));
+            cfg.mitigate = matches!(cell, FleetCell::DpMitigated(_));
+            cfg
+        }
+    }
+}
+
+fn scale_rate(cfg: &mut ScenarioCfg, factor: f64) {
+    if let crate::sim::dist::Arrival::Poisson { rate } = &cfg.workload.arrival {
+        let scaled = rate * factor;
+        cfg.workload.arrival = crate::sim::dist::Arrival::Poisson { rate: scaled };
+    }
+}
+
+fn cells(fc: &FleetConfig) -> Vec<FleetCell> {
+    let mut v: Vec<FleetCell> = fc.policies.iter().map(|&p| FleetCell::Policy(p)).collect();
+    for c in DP_CONDITIONS {
+        v.push(FleetCell::DpHealthy(c));
+        v.push(FleetCell::DpInjected(c));
+        v.push(FleetCell::DpMitigated(c));
+    }
+    v
+}
+
+/// Compact per-cell result shipped back from a worker thread.
+#[derive(Debug, Clone)]
+struct CellOutcome {
+    completed: u64,
+    rejected: u64,
+    tok_per_s: f64,
+    req_per_s: f64,
+    ttft_p50_ns: f64,
+    ttft_p99_ns: f64,
+    token_skew: f64,
+    max_flow_share: f64,
+    replica_tokens: Vec<u64>,
+    kv_peak: Vec<f64>,
+    detected: bool,
+    latency_ns: Option<u64>,
+    actions: u64,
+}
+
+fn run_cell(fc: &FleetConfig, cell: FleetCell) -> CellOutcome {
+    let cfg = cell_cfg(fc, cell);
+    let res = Scenario::new(cfg).run();
+    let injected = match cell {
+        FleetCell::DpInjected(c) | FleetCell::DpMitigated(c) => Some(c),
+        FleetCell::Policy(_) | FleetCell::DpHealthy(_) => None,
+    };
+    let t0 = res.injected_at.unwrap_or(SimTime(u64::MAX));
+    let detected = injected
+        .map(|c| res.detections.iter().any(|d| d.condition == c && d.at >= t0))
+        .unwrap_or(false);
+    let latency_ns = injected.and_then(|c| res.detection_latency(c)).map(|d| d.ns());
+    let total_routed: u64 = res.replica_routed.iter().sum();
+    let max_flow_share = if total_routed == 0 {
+        0.0
+    } else {
+        *res.replica_routed.iter().max().unwrap() as f64 / total_routed as f64
+    };
+    CellOutcome {
+        completed: res.metrics.completed,
+        rejected: res.metrics.rejected,
+        tok_per_s: res.metrics.tok_per_s(),
+        req_per_s: res.metrics.req_per_s(),
+        ttft_p50_ns: res.metrics.ttft_ns.p50(),
+        ttft_p99_ns: res.metrics.ttft_ns.p99(),
+        token_skew: res.metrics.replica_token_skew(),
+        max_flow_share,
+        replica_tokens: res.metrics.per_replica.iter().map(|l| l.tokens_out).collect(),
+        kv_peak: res.replica_kv_peak.clone(),
+        detected,
+        latency_ns,
+        actions: res.actions.len() as u64,
+    }
+}
+
+/// One healthy routing-policy row.
+#[derive(Debug, Clone)]
+pub struct PolicyRow {
+    pub policy: RoutePolicy,
+    pub completed: u64,
+    pub rejected: u64,
+    pub req_per_s: f64,
+    pub tok_per_s: f64,
+    pub ttft_p50_ns: f64,
+    pub ttft_p99_ns: f64,
+    /// Max-over-mean token share across replicas (1.0 = balanced).
+    pub token_skew: f64,
+    /// Largest per-replica share of routed arrivals.
+    pub max_flow_share: f64,
+    pub replica_tokens: Vec<u64>,
+    pub kv_peak: Vec<f64>,
+}
+
+/// One DP condition's inject → detect → mitigate row.
+#[derive(Debug, Clone)]
+pub struct DpRow {
+    pub condition: Condition,
+    pub detected: bool,
+    pub latency_ns: Option<u64>,
+    pub healthy_tok_per_s: f64,
+    pub injected_tok_per_s: f64,
+    pub mitigated_tok_per_s: f64,
+    /// Fraction of lost throughput the closed loop recovered, measured
+    /// against the same shaped config WITHOUT the injection (clamped to
+    /// 0..1.5). For conditions whose injection itself raises demand (DP1's
+    /// flash crowd), the baseline reflects pre-surge demand, so the value
+    /// saturates high once the mitigated fleet outserves it.
+    pub recovery: Option<f64>,
+    pub injected_token_skew: f64,
+    pub mitigated_token_skew: f64,
+    /// Mitigation actions taken in the mitigated run.
+    pub actions: u64,
+}
+
+/// Everything a fleet sweep produces.
+#[derive(Debug)]
+pub struct FleetReport {
+    pub replicas: usize,
+    pub base_seed: u64,
+    pub policy_rows: Vec<PolicyRow>,
+    pub dp_rows: Vec<DpRow>,
+    pub cells_run: usize,
+    pub threads_used: usize,
+}
+
+/// Execute the fleet sweep in parallel and aggregate in cell order.
+pub fn run_fleet(fc: &FleetConfig) -> FleetReport {
+    let cell_list = cells(fc);
+    let threads_used = resolve_threads(fc.threads, cell_list.len());
+    let outcomes = parallel_map(&cell_list, fc.threads, |&cell| run_cell(fc, cell));
+
+    let n_pol = fc.policies.len();
+    let policy_rows: Vec<PolicyRow> = fc
+        .policies
+        .iter()
+        .zip(&outcomes[..n_pol])
+        .map(|(&policy, o)| PolicyRow {
+            policy,
+            completed: o.completed,
+            rejected: o.rejected,
+            req_per_s: o.req_per_s,
+            tok_per_s: o.tok_per_s,
+            ttft_p50_ns: o.ttft_p50_ns,
+            ttft_p99_ns: o.ttft_p99_ns,
+            token_skew: o.token_skew,
+            max_flow_share: o.max_flow_share,
+            replica_tokens: o.replica_tokens.clone(),
+            kv_peak: o.kv_peak.clone(),
+        })
+        .collect();
+
+    let mut dp_rows = Vec::with_capacity(DP_CONDITIONS.len());
+    for (k, c) in DP_CONDITIONS.into_iter().enumerate() {
+        // Each condition's triple runs the SAME shaped config, so the
+        // healthy cell is a like-for-like recovery baseline.
+        let healthy = &outcomes[n_pol + 3 * k];
+        let inj = &outcomes[n_pol + 3 * k + 1];
+        let mit = &outcomes[n_pol + 3 * k + 2];
+        let recovery = if healthy.tok_per_s - inj.tok_per_s < 1e-9 {
+            Some(1.0)
+        } else {
+            Some(
+                ((mit.tok_per_s - inj.tok_per_s) / (healthy.tok_per_s - inj.tok_per_s))
+                    .clamp(0.0, 1.5),
+            )
+        };
+        dp_rows.push(DpRow {
+            condition: c,
+            detected: inj.detected,
+            latency_ns: inj.latency_ns,
+            healthy_tok_per_s: healthy.tok_per_s,
+            injected_tok_per_s: inj.tok_per_s,
+            mitigated_tok_per_s: mit.tok_per_s,
+            recovery,
+            injected_token_skew: inj.token_skew,
+            mitigated_token_skew: mit.token_skew,
+            actions: mit.actions,
+        });
+    }
+
+    FleetReport {
+        replicas: fc.replicas,
+        base_seed: fc.base.seed,
+        policy_rows,
+        dp_rows,
+        cells_run: cell_list.len(),
+        threads_used,
+    }
+}
+
+impl FleetReport {
+    /// Paper-style tables: the policy study and the DP condition study.
+    pub fn render_tables(&self) -> String {
+        let mut t = Table::new(&format!(
+            "Fleet study — {} replicas × routing policies (healthy)",
+            self.replicas
+        ))
+        .header(&[
+            "policy", "done", "rej", "req/s", "tok/s", "ttft p50", "ttft p99", "tok skew",
+            "max share", "kv peak",
+        ]);
+        for r in &self.policy_rows {
+            let kv_peak = r.kv_peak.iter().cloned().fold(0.0_f64, f64::max);
+            t.row(vec![
+                r.policy.id().to_string(),
+                format!("{}", r.completed),
+                format!("{}", r.rejected),
+                format!("{:.1}", r.req_per_s),
+                format!("{:.0}", r.tok_per_s),
+                fmt_ns(r.ttft_p50_ns),
+                fmt_ns(r.ttft_p99_ns),
+                format!("{:.2}", r.token_skew),
+                format!("{:.2}", r.max_flow_share),
+                format!("{:.2}", kv_peak),
+            ]);
+        }
+        let mut out = t.render();
+        let mut d = Table::new("DP condition family — inject, detect, mitigate (affinity baseline)")
+            .header(&[
+                "id", "detected", "latency", "healthy tok/s", "injected", "mitigated",
+                "recovered", "skew inj->mit", "actions",
+            ]);
+        for r in &self.dp_rows {
+            d.row(vec![
+                r.condition.id().to_string(),
+                if r.detected { "yes".into() } else { "NO".into() },
+                r.latency_ns.map(|n| fmt_ns(n as f64)).unwrap_or_else(|| "-".into()),
+                format!("{:.0}", r.healthy_tok_per_s),
+                format!("{:.0}", r.injected_tok_per_s),
+                format!("{:.0}", r.mitigated_tok_per_s),
+                r.recovery.map(|f| format!("{:.0}%", f * 100.0)).unwrap_or_else(|| "-".into()),
+                format!("{:.2} -> {:.2}", r.injected_token_skew, r.mitigated_token_skew),
+                format!("{}", r.actions),
+            ]);
+        }
+        out.push_str(&d.render());
+        out
+    }
+
+    /// One-paragraph human summary.
+    pub fn summary_line(&self) -> String {
+        let best = self
+            .policy_rows
+            .iter()
+            .max_by(|a, b| a.tok_per_s.partial_cmp(&b.tok_per_s).unwrap());
+        let detected = self.dp_rows.iter().filter(|r| r.detected).count();
+        let mut s = format!(
+            "fleet of {} replicas: DP conditions detected {}/{}",
+            self.replicas,
+            detected,
+            self.dp_rows.len()
+        );
+        if let Some(b) = best {
+            s.push_str(&format!(
+                "; best healthy policy {} at {:.0} tok/s (token skew {:.2})",
+                b.policy.id(),
+                b.tok_per_s,
+                b.token_skew
+            ));
+        }
+        s
+    }
+
+    /// Deterministic JSON: same config + seed ⇒ byte-identical output,
+    /// independent of worker-thread count (wallclock/threads excluded).
+    pub fn to_json(&self) -> Json {
+        let mut policies = Json::arr();
+        for r in &self.policy_rows {
+            let mut tokens = Json::arr();
+            for &t in &r.replica_tokens {
+                tokens.push(t);
+            }
+            let mut peaks = Json::arr();
+            for &p in &r.kv_peak {
+                peaks.push(p);
+            }
+            policies.push(
+                Json::obj()
+                    .set("policy", r.policy.id())
+                    .set("completed", r.completed)
+                    .set("rejected", r.rejected)
+                    .set("req_per_s", r.req_per_s)
+                    .set("tok_per_s", r.tok_per_s)
+                    .set("ttft_p50_ns", r.ttft_p50_ns)
+                    .set("ttft_p99_ns", r.ttft_p99_ns)
+                    .set("replica_token_skew", r.token_skew)
+                    .set("max_flow_share", r.max_flow_share)
+                    .set("replica_tokens", tokens)
+                    .set("replica_kv_peak", peaks),
+            );
+        }
+        let mut dp = Json::arr();
+        for r in &self.dp_rows {
+            dp.push(
+                Json::obj()
+                    .set("id", r.condition.id())
+                    .set("detected", r.detected)
+                    .set(
+                        "latency_ns",
+                        r.latency_ns.map(|n| Json::Int(n as i64)).unwrap_or(Json::Null),
+                    )
+                    .set("healthy_tok_per_s", r.healthy_tok_per_s)
+                    .set("injected_tok_per_s", r.injected_tok_per_s)
+                    .set("mitigated_tok_per_s", r.mitigated_tok_per_s)
+                    .set("recovery", r.recovery.map(Json::Num).unwrap_or(Json::Null))
+                    .set("injected_token_skew", r.injected_token_skew)
+                    .set("mitigated_token_skew", r.mitigated_token_skew)
+                    .set("actions", r.actions),
+            );
+        }
+        Json::obj()
+            .set("schema", "dpulens.fleet.v1")
+            .set("replicas", self.replicas)
+            .set("base_seed", self.base_seed)
+            .set("policies", policies)
+            .set("dp_conditions", dp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_base_cfg_scales_the_cluster() {
+        let cfg = fleet_base_cfg(4);
+        assert_eq!(cfg.cluster.n_nodes, 8);
+        assert_eq!(cfg.engine.nodes_per_stage, 1);
+        assert_eq!(cfg.victim_replica, 3);
+        cfg.cluster.validate().unwrap();
+        let plans =
+            crate::engine::build_replicas(&cfg.cluster, cfg.engine.nodes_per_stage);
+        assert_eq!(plans.len(), 4);
+    }
+
+    #[test]
+    fn cells_enumerate_policies_then_dp_triples() {
+        let fc = FleetConfig::new(2);
+        let v = cells(&fc);
+        assert_eq!(v.len(), fc.policies.len() + 3 * DP_CONDITIONS.len());
+        assert_eq!(v[0], FleetCell::Policy(RoutePolicy::FlowHash));
+        let base_idx = fc.policies.len();
+        assert_eq!(v[base_idx], FleetCell::DpHealthy(Condition::Dp1RouterFlowSkew));
+        assert_eq!(v[base_idx + 1], FleetCell::DpInjected(Condition::Dp1RouterFlowSkew));
+        assert_eq!(v[base_idx + 2], FleetCell::DpMitigated(Condition::Dp1RouterFlowSkew));
+        // The triple shares one shaped config; only inject/mitigate differ.
+        let healthy = cell_cfg(&fc, v[base_idx]);
+        let inj = cell_cfg(&fc, v[base_idx + 1]);
+        let mit = cell_cfg(&fc, v[base_idx + 2]);
+        assert_eq!(inj.engine.route_policy, RoutePolicy::FlowHash);
+        assert!(healthy.inject.is_none() && !healthy.mitigate);
+        assert!(inj.inject.is_some() && !inj.mitigate);
+        assert!(mit.inject.is_some() && mit.mitigate);
+        assert_eq!(healthy.duration, inj.duration);
+        assert_eq!(healthy.engine.profile.name, inj.engine.profile.name);
+        assert!(inj.duration > fc.base.duration);
+        // Saturation-sensitive DP cells promote the compute-dominated profile.
+        assert_eq!(inj.engine.profile.name, "7b");
+        let dp2 = cell_cfg(&fc, FleetCell::DpInjected(Condition::Dp2HotReplicaKv));
+        assert_eq!(dp2.engine.profile.name, "small");
+    }
+}

@@ -1,0 +1,159 @@
+//! Ingress/egress boundary of the serving plane: request arrival, routing
+//! and admission, egress completion accounting, and pathology injection
+//! targeting (including the replica-aware victim selection the fleet
+//! scenarios use).
+
+use crate::dpu::detectors::Condition;
+use crate::engine::Engine;
+use crate::ids::{FlowId, NodeId, ReqId};
+use crate::pathology;
+use crate::sim::SimTime;
+use crate::telemetry::event::{TelemetryEvent, TelemetryKind};
+use crate::telemetry::sw::SwSignal;
+use crate::workload::generator::WorkloadGen;
+use crate::workload::request::{InferenceRequest, ReqState};
+
+use super::scenario::Scenario;
+use super::world::Ev;
+
+/// Per-token egress payload bytes (token id + framing).
+pub(crate) const TOKEN_EGRESS_BYTES: u64 = 128;
+/// Per-request ingress overhead bytes.
+const INGRESS_OVERHEAD: u64 = 256;
+
+/// Egress response streams get per-request flow ids (a response stream is a
+/// stream, not a session): high bit marks them.
+pub(crate) fn egress_flow(req: ReqId) -> FlowId {
+    FlowId(0x8000_0000 | req.0)
+}
+
+/// Pick a sensible victim node for a condition on `replica` (ingress/PCIe
+/// conditions hit an entry node; egress conditions the exit node; EW1 a
+/// stage-0 peer; DP conditions resolve their victim replica from this node).
+/// `replica` is clamped to the cluster's replica count.
+pub fn target_node_for(c: Condition, engine: &Engine, replica: usize) -> NodeId {
+    use Condition::*;
+    let replica = replica.min(engine.n_replicas() - 1);
+    let plan = &engine.replicas[replica].plan;
+    match c {
+        Ns5EgressBacklog | Ns6EgressJitter | Ns7EgressRetx | Pc2D2hBottleneck
+        | Pc10DecodeEarlyStop => plan.exit_nodes()[0],
+        Ew1TpStraggler | Ew9EarlyStopSkew => {
+            *plan.stages[0].nodes.last().unwrap_or(&plan.entry_nodes()[0])
+        }
+        _ => plan.entry_nodes()[0],
+    }
+}
+
+impl Scenario {
+    /// A request reaches the cluster boundary: route it, start its ingress
+    /// transfer, and schedule the next arrival.
+    pub(crate) fn on_arrival(&mut self, mut req: InferenceRequest, now: SimTime) {
+        let replica = self.engine.register(req.clone());
+        let node = self.entry_node(replica);
+        req.assigned_node = Some(node);
+        self.engine.requests.get_mut(&req.id).unwrap().assigned_node = Some(node);
+        self.sw_window.record(SwSignal::RequestArrival, 1.0);
+        self.sw_window.record(SwSignal::SequenceLength, req.prompt_len() as f64);
+        let bytes = req.prompt_len() as u64 * 4 + INGRESS_OVERHEAD;
+        let delivered = self.cluster.ingress(now, node, req.flow, bytes, &mut self.outbox);
+        self.flush_outbox();
+        self.cal.schedule_at(delivered, Ev::Delivered(req.id));
+        self.schedule_next_arrival();
+    }
+
+    /// Ingress transfer done: admit into the replica's batcher (or reject).
+    pub(crate) fn on_delivered(&mut self, id: ReqId, now: SimTime) {
+        let replica = self.engine.placement[&id];
+        let prompt_len = self.engine.request(id).prompt_len() as u32;
+        let ok = self.engine.replicas[replica].batcher.enqueue(id, prompt_len, now);
+        let r = self.engine.request_mut(id);
+        if ok {
+            r.state = ReqState::Queued;
+            r.admitted_at = Some(now);
+        } else {
+            r.state = ReqState::Rejected;
+            self.engine.router.complete(replica);
+        }
+        self.sw_window.record(
+            SwSignal::QueueDepth,
+            self.engine.replicas[replica].batcher.queue_depth() as f64,
+        );
+        self.kick(replica, now);
+    }
+
+    /// A response-stream chunk finished leaving the exit node.
+    pub(crate) fn on_egress_done(&mut self, req: ReqId, last: bool, now: SimTime) {
+        let r = self.engine.request_mut(req);
+        if r.first_token_at.is_none() {
+            r.first_token_at = Some(now);
+        }
+        if last {
+            r.done_at = Some(now);
+            r.state = ReqState::Done;
+            let replica = self.engine.placement[&req];
+            self.engine.router.complete(replica);
+            let node = self.exit_node(replica);
+            let flow = egress_flow(req);
+            self.bus.emit(now, node, TelemetryKind::FlowEnd { flow, req });
+            let ev = TelemetryEvent { t: now, node, kind: TelemetryKind::FlowEnd { flow, req } };
+            self.dpu.ingest(node, std::slice::from_ref(&ev));
+            self.sw_window.record(SwSignal::TransportLatency, 1000.0);
+        }
+    }
+
+    /// Apply the configured injection once its time arrives (at window
+    /// granularity, after calibration).
+    pub(crate) fn apply_injection(&mut self, now: SimTime) {
+        let Some((cond, at)) = self.cfg.inject else { return };
+        if self.injected_at.is_some() || now < at {
+            return;
+        }
+        let target = target_node_for(cond, &self.engine, self.cfg.victim_replica);
+        let mut wl = self.cfg.workload.clone();
+        let desc = pathology::inject(cond, target, &mut self.cluster, &mut self.engine, &mut wl);
+        if pathology::site(cond) == pathology::InjectSite::Workload {
+            let mut gen =
+                WorkloadGen::new(wl.clone(), self.cfg.engine.profile.vocab, self.cfg.seed ^ 0x5EED);
+            gen.fast_forward(now);
+            self.gen = gen;
+        }
+        self.cfg.workload = wl;
+        self.injected_at = Some(now);
+        self.injection_desc = Some(desc);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::engine::{build_replicas, EngineConfig};
+
+    fn fleet_engine() -> Engine {
+        let mut cfg = EngineConfig::default();
+        cfg.nodes_per_stage = 1; // 4 nodes / pp2 => 2 replicas
+        let spec = ClusterSpec::default();
+        let plans = build_replicas(&spec, 1);
+        Engine::new(cfg, plans)
+    }
+
+    #[test]
+    fn victim_selection_is_replica_aware() {
+        let e = fleet_engine();
+        let r0 = target_node_for(Condition::Pc1H2dStarvation, &e, 0);
+        let r1 = target_node_for(Condition::Pc1H2dStarvation, &e, 1);
+        assert_ne!(r0, r1, "replica 1 must get its own victim node");
+        assert_eq!(r1, e.replicas[1].plan.entry_nodes()[0]);
+        // Egress-side conditions target the exit node of the same replica.
+        let x1 = target_node_for(Condition::Ns5EgressBacklog, &e, 1);
+        assert_eq!(x1, e.replicas[1].plan.exit_nodes()[0]);
+        // Out-of-range victims clamp instead of panicking.
+        assert_eq!(target_node_for(Condition::Pc1H2dStarvation, &e, 99), r1);
+    }
+
+    #[test]
+    fn egress_flows_are_marked() {
+        assert_eq!(egress_flow(ReqId(5)).0, 0x8000_0005);
+    }
+}

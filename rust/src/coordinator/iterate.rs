@@ -1,0 +1,198 @@
+//! Per-replica iteration driving: batch formation and KV admission, the
+//! prefill/decode execution handoff to the compute backends, token egress,
+//! and retirement of finished sequences.
+
+use crate::engine::exec::{run_iteration, IterKind};
+use crate::engine::Work;
+use crate::ids::ReqId;
+use crate::sim::SimTime;
+use crate::telemetry::sw::SwSignal;
+use crate::workload::request::ReqState;
+
+use super::ingress::{egress_flow, TOKEN_EGRESS_BYTES};
+use super::scenario::Scenario;
+use super::world::{Ev, PendingIter};
+
+impl Scenario {
+    /// Form the next batch of work on `replica` and launch it.
+    pub(crate) fn run_next_iteration(&mut self, replica: usize, now: SimTime) {
+        // KV admission happens at prefill-batch formation.
+        let work = {
+            let rep = &mut self.engine.replicas[replica];
+            if !rep.batcher.may_refill() && !rep.batcher.running().is_empty() {
+                // Static/no-remap mode with a draining batch: decode only.
+                Work::DecodeRound(rep.batcher.running().iter().map(|s| s.req).collect())
+            } else {
+                rep.batcher.next_work()
+            }
+        };
+        match work {
+            Work::Idle => {
+                self.pending[replica] = None;
+            }
+            Work::Prefill(reqs) => {
+                // Admit into KV; anything that doesn't fit goes back.
+                let mut admitted = Vec::new();
+                for id in reqs {
+                    let plen = self.engine.request(id).prompt_len() as u32;
+                    let rep = &mut self.engine.replicas[replica];
+                    if rep.kv.admit(id, plen) == crate::engine::AllocResult::Ok
+                        && !self.free_slots[replica].is_empty()
+                    {
+                        let slot = self.free_slots[replica].pop().unwrap();
+                        self.slot_of.insert(id, slot);
+                        admitted.push(id);
+                    } else {
+                        self.engine.replicas[replica].kv.release(id);
+                        self.engine.replicas[replica].batcher.enqueue(id, plen, now);
+                        break;
+                    }
+                }
+                if admitted.is_empty() {
+                    self.pending[replica] = None;
+                    return;
+                }
+                let prompt_lens: Vec<u32> =
+                    admitted.iter().map(|id| self.engine.request(*id).prompt_len() as u32).collect();
+                for &id in &admitted {
+                    let r = self.engine.request_mut(id);
+                    r.state = ReqState::Prefilling;
+                    r.prefill_start = Some(now);
+                }
+                let kind = IterKind::Prefill { reqs: admitted, prompt_lens };
+                self.execute(replica, now, kind);
+            }
+            Work::DecodeRound(reqs) => {
+                let ctx_lens: Vec<u32> = reqs
+                    .iter()
+                    .map(|id| {
+                        self.engine.replicas[replica]
+                            .batcher
+                            .running()
+                            .iter()
+                            .find(|s| s.req == *id)
+                            .map(|s| s.position)
+                            .unwrap_or(1)
+                    })
+                    .collect();
+                // KV growth for the step.
+                for &id in &reqs {
+                    let rep = &mut self.engine.replicas[replica];
+                    let _ = rep.kv.append_token(id);
+                }
+                let kind = IterKind::Decode { reqs, ctx_lens };
+                self.execute(replica, now, kind);
+            }
+        }
+    }
+
+    /// Run one iteration through the cluster hardware model and schedule its
+    /// completion.
+    pub(crate) fn execute(&mut self, replica: usize, now: SimTime, kind: IterKind) {
+        let timing = {
+            let rep = &mut self.engine.replicas[replica];
+            rep.iterations += 1;
+            match &kind {
+                IterKind::Prefill { .. } => rep.prefills += 1,
+                IterKind::Decode { .. } => rep.decodes += 1,
+            }
+            run_iteration(
+                now,
+                &kind,
+                &mut self.cluster,
+                &rep.plan,
+                &self.cfg.engine.profile,
+                &mut rep.colls,
+                &mut self.outbox,
+            )
+        };
+        self.iterations += 1;
+        self.flush_outbox();
+        self.sw_window.record(SwSignal::StepTime, (timing.done - now).ns() as f64);
+        self.sw_window.record(SwSignal::GpuUtil, 0.8);
+        self.sw_window
+            .record(SwSignal::KvOccupancy, self.engine.replicas[replica].kv.occupancy());
+        self.pending[replica] = Some(PendingIter { kind, started: now });
+        self.cal.schedule_at(timing.done, Ev::IterDone(replica));
+    }
+
+    /// An iteration's hardware time elapsed: produce tokens via the compute
+    /// backend, advance batcher/KV state, and emit egress.
+    pub(crate) fn finish_iteration(&mut self, replica: usize, now: SimTime) {
+        let Some(pending) = self.pending[replica].take() else { return };
+        match pending.kind {
+            IterKind::Prefill { reqs, prompt_lens } => {
+                let slots: Vec<usize> = reqs.iter().map(|id| self.slot_of[id]).collect();
+                let prompts: Vec<Vec<i32>> =
+                    reqs.iter().map(|id| self.engine.request(*id).prompt.clone()).collect();
+                let first_tokens = self.backends[replica].prefill(&slots, &prompts);
+                let specs: Vec<(ReqId, u32, u32)> = reqs
+                    .iter()
+                    .zip(&prompt_lens)
+                    .map(|(id, &plen)| (*id, plen, self.engine.request(*id).max_new_tokens as u32))
+                    .collect();
+                self.engine.replicas[replica].batcher.start_decode(&specs);
+                for ((id, tok), _plen) in reqs.iter().zip(first_tokens).zip(&prompt_lens) {
+                    let r = self.engine.request_mut(*id);
+                    r.state = ReqState::Decoding;
+                    r.generated.push(tok);
+                    self.sw_window.record(SwSignal::DecodeProgress, r.generated.len() as f64);
+                    let finished = self.engine.replicas[replica].batcher.on_token(*id);
+                    self.emit_token(replica, *id, now, finished);
+                    if finished {
+                        self.retire(replica, *id);
+                    }
+                }
+            }
+            IterKind::Decode { reqs, .. } => {
+                let slots: Vec<usize> = reqs.iter().map(|id| self.slot_of[id]).collect();
+                let last_tokens: Vec<i32> = reqs
+                    .iter()
+                    .map(|id| *self.engine.request(*id).generated.last().unwrap_or(&1))
+                    .collect();
+                let positions: Vec<u32> = reqs
+                    .iter()
+                    .map(|id| {
+                        self.engine.replicas[replica]
+                            .batcher
+                            .running()
+                            .iter()
+                            .find(|s| s.req == *id)
+                            .map(|s| s.position)
+                            .unwrap_or(1)
+                            .min(self.cfg.engine.profile.max_seq as u32 - 1)
+                    })
+                    .collect();
+                let next = self.backends[replica].decode(&slots, &last_tokens, &positions);
+                for (id, tok) in reqs.iter().zip(next) {
+                    let r = self.engine.request_mut(*id);
+                    r.generated.push(tok);
+                    let finished = self.engine.replicas[replica].batcher.on_token(*id);
+                    self.emit_token(replica, *id, now, finished);
+                    if finished {
+                        self.retire(replica, *id);
+                    }
+                }
+            }
+        }
+        self.kick(replica, now);
+    }
+
+    /// Stream one generated token out through the replica's exit node.
+    pub(crate) fn emit_token(&mut self, replica: usize, id: ReqId, now: SimTime, last: bool) {
+        let node = self.exit_node(replica);
+        let flow = egress_flow(id);
+        let done = self.cluster.egress(now, node, flow, TOKEN_EGRESS_BYTES, &mut self.outbox);
+        self.flush_outbox();
+        self.cal.schedule_at(done, Ev::EgressDone { req: id, last });
+    }
+
+    /// Free a finished sequence's batcher slot, KV pages, and backend slot.
+    pub(crate) fn retire(&mut self, replica: usize, id: ReqId) {
+        self.engine.replicas[replica].batcher.finish(id);
+        self.engine.replicas[replica].kv.release(id);
+        if let Some(slot) = self.slot_of.remove(&id) {
+            self.free_slots[replica].push(slot);
+        }
+    }
+}

@@ -10,32 +10,31 @@
 //!   out), and
 //! * `replicates` §4.3 negative-control runs (TP pinned to NVLink via
 //!   single-node stages: an injected GPU straggler must stay invisible).
+//!   These run on a 2-replica world and victimize replica 1, so the matrix
+//!   also exercises non-zero-replica victim selection.
 //!
 //! Replicates vary only the scenario seed (`base.seed + rep`), so replicate
 //! 0 reproduces the serial bench bit-for-bit. The aggregate is a
-//! per-condition [`Scorecard`] (recall, time-to-detect, false-positive rate
-//! against the other 27 injections, attribution accuracy, DPU-vs-SW
-//! coverage) plus the full injection × detection [`ConfusionMatrix`],
-//! emitted as a paper-style table and as deterministic JSON for
-//! `BENCH_*.json` trajectory tracking. Two runs with the same config produce
-//! byte-identical JSON regardless of thread count.
+//! per-condition [`Scorecard`] plus the full injection × detection
+//! [`ConfusionMatrix`], assembled into a [`MatrixReport`] (rendering and
+//! JSON live in `coordinator::report`). Two runs with the same config
+//! produce byte-identical JSON regardless of thread count.
 
 use std::collections::BTreeMap;
 
 use crate::coordinator::experiment::{
-    condition_experiment, inject_time, standard_cfg, ConditionReport,
+    cause_class, condition_experiment, expected_cause_classes, inject_time, shaped_cfg,
+    standard_cfg, ConditionReport,
 };
 use crate::coordinator::scenario::{Scenario, ScenarioCfg};
-use crate::dpu::attribution::RootCause;
 use crate::dpu::detectors::{Condition, ALL_CONDITIONS};
-use crate::dpu::runbook;
 use crate::dpu::swdet;
 use crate::engine::preset;
 use crate::metrics::{ConfusionMatrix, Scorecard};
 use crate::sim::SimTime;
-use crate::util::json::Json;
 use crate::util::par::{parallel_map, resolve_threads};
-use crate::util::table::{fmt_ns, Table};
+
+pub use crate::coordinator::report::{MatrixReport, NegativeControlReport};
 
 /// Matrix-run configuration.
 #[derive(Debug, Clone)]
@@ -66,82 +65,6 @@ impl MatrixConfig {
     /// configuration the full 28/28 diagonal is still proven on.
     pub fn fast() -> Self {
         MatrixConfig { replicates: 1, ..MatrixConfig::default() }
-    }
-}
-
-/// Per-condition scenario shaping (see DESIGN.md §4): some runbook rows only
-/// produce their red flag under a compute-dominated profile or a saturated
-/// decode pool. Shared by the matrix, the sweep CLI, and the benches.
-pub fn shaped_cfg(c: Condition, base: &ScenarioCfg) -> ScenarioCfg {
-    let mut cfg = base.clone();
-    match c {
-        // Compute-skew conditions need a compute-dominated cost profile for
-        // a straggler/mispartition to move collective timing.
-        Condition::Ew1TpStraggler
-        | Condition::Ew3CrossNodeSkew
-        | Condition::Ew4Congestion
-        | Condition::Ew9EarlyStopSkew => {
-            cfg.engine.profile = preset("7b").unwrap();
-            cfg.engine.policy.max_batch = 8;
-            cfg.workload.arrival = crate::sim::dist::Arrival::Poisson { rate: 150.0 };
-        }
-        // Pipeline-cadence detection needs a *busy* pipeline: idle lulls
-        // produce ms-scale healthy gaps that mask a mispartitioned stage.
-        Condition::Ew2PpBubble => {
-            cfg.engine.profile = preset("7b").unwrap();
-            cfg.engine.policy.max_batch = 8;
-            cfg.workload.arrival = crate::sim::dist::Arrival::Poisson { rate: 500.0 };
-            cfg.workload.output_len = crate::sim::dist::LengthDist::Uniform { lo: 8, hi: 16 };
-        }
-        // Early-stop conditions only bite when decode slots are saturated.
-        Condition::Ns8EarlyCompletion => {
-            cfg.workload.arrival = crate::sim::dist::Arrival::Poisson { rate: 2000.0 };
-            cfg.workload.prompt_len = crate::sim::dist::LengthDist::Uniform { lo: 8, hi: 16 };
-            cfg.workload.output_len = crate::sim::dist::LengthDist::Uniform { lo: 8, hi: 24 };
-        }
-        // PC10's PCIe signature (shrinking decode D2H blocks) additionally
-        // needs iterations slow enough that slots actually fill: use the
-        // compute-heavy profile under sustained demand.
-        Condition::Pc10DecodeEarlyStop => {
-            cfg.engine.profile = preset("7b").unwrap();
-            cfg.engine.policy.max_batch = 8;
-            cfg.workload.arrival = crate::sim::dist::Arrival::Poisson { rate: 1500.0 };
-            cfg.workload.prompt_len = crate::sim::dist::LengthDist::Uniform { lo: 8, hi: 16 };
-            cfg.workload.output_len = crate::sim::dist::LengthDist::Uniform { lo: 8, hi: 24 };
-        }
-        _ => {}
-    }
-    cfg
-}
-
-/// Which root-cause classes count as a correct attribution per condition.
-/// EW1-EW3 accept both verdicts of the §4.2 refinement: GPU/host-side when a
-/// PCIe-vantage anomaly corroborates, network-side when PCIe looks healthy.
-pub fn expected_cause_classes(c: Condition) -> &'static [&'static str] {
-    use Condition::*;
-    match c {
-        Ns1BurstBacklog | Ns2IngressStarvation | Ns3FlowSkew => &["client"],
-        Ns4IngressRetx | Ns5EgressBacklog | Ns6EgressJitter | Ns7EgressRetx
-        | Ns9BandwidthSaturation => &["network"],
-        Ns8EarlyCompletion | Pc10DecodeEarlyStop | Ew9EarlyStopSkew => &["workload"],
-        Pc1H2dStarvation | Pc2D2hBottleneck | Pc3LaunchLatency | Pc5PcieSaturation
-        | Pc6P2pThrottling | Pc7PinnedShortage | Pc8HostCpuBottleneck
-        | Pc9RegistrationChurn => &["host"],
-        Pc4IntraNodeSkew => &["gpu"],
-        Ew1TpStraggler | Ew2PpBubble | Ew3CrossNodeSkew => &["gpu", "network"],
-        Ew4Congestion | Ew5HolBlocking | Ew6Retransmissions | Ew7CreditStarvation
-        | Ew8KvBottleneck => &["network"],
-    }
-}
-
-/// Cause-class label of an attribution verdict.
-pub(crate) fn cause_class(c: &RootCause) -> &'static str {
-    match c {
-        RootCause::HostLocal(_) => "host",
-        RootCause::GpuSide(_) => "gpu",
-        RootCause::NetworkSide => "network",
-        RootCause::WorkloadShape => "workload",
-        RootCause::ClientSide => "client",
     }
 }
 
@@ -213,6 +136,9 @@ fn cells(mc: &MatrixConfig) -> Vec<Cell> {
             cfg.engine.profile = preset("7b").unwrap();
             cfg.engine.nodes_per_stage = 1; // TP stays intra-node on NVLink
             cfg.cluster.pp_degree = 2;
+            // Two replicas here: victimize the non-zero one, proving the
+            // replica-aware target selection end to end.
+            cfg.victim_replica = 1;
             cfg.seed = mc.base.seed.wrapping_add(rep as u64);
             cfg.inject = Some((Condition::Ew1TpStraggler, inject_time(&cfg)));
             v.push(Cell { kind: CellKind::NegativeControl { rep }, cfg });
@@ -275,33 +201,6 @@ fn run_cell(cell: &Cell) -> CellOutcome {
     }
 }
 
-/// §4.3 negative-control aggregate.
-#[derive(Debug, Clone)]
-pub struct NegativeControlReport {
-    pub runs: u64,
-    /// EW1 firings after injection — must be zero (NVLink blindness).
-    pub ew1_detections: u64,
-    /// Events rejected at the visibility boundary across control runs.
-    pub invisible_dropped: u64,
-}
-
-/// Everything a matrix run produces.
-#[derive(Debug)]
-pub struct MatrixReport {
-    /// One scorecard per condition, ALL_CONDITIONS order.
-    pub scorecards: Vec<Scorecard>,
-    pub confusion: ConfusionMatrix,
-    pub replicates: u64,
-    pub base_seed: u64,
-    pub window_ns: u64,
-    pub healthy_runs: u64,
-    pub healthy_windows: u64,
-    pub healthy_false_alarms: u64,
-    pub negative_control: Option<NegativeControlReport>,
-    pub cells_run: usize,
-    pub threads_used: usize,
-}
-
 /// Execute the full matrix in parallel and aggregate the scorecards.
 pub fn run_matrix(mc: &MatrixConfig) -> MatrixReport {
     let cells = cells(mc);
@@ -332,7 +231,11 @@ fn aggregate(
                 confusion.record_healthy_counts(&out.detections, out.windows);
                 for (c, n) in &out.detections {
                     healthy_false_alarms += *n;
-                    cards.get_mut(c).unwrap().healthy_false_alarms += *n;
+                    // Conditions outside the 28-card diagonal (the DP fleet
+                    // family) are counted in the floor but carry no card.
+                    if let Some(card) = cards.get_mut(c) {
+                        card.healthy_false_alarms += *n;
+                    }
                 }
             }
             CellKind::Injected { condition, .. } => {
@@ -365,7 +268,9 @@ fn aggregate(
                 // it fired during somebody else's injection.
                 for (c, _) in &out.detections {
                     if *c != condition {
-                        cards.get_mut(c).unwrap().false_positive_runs += 1;
+                        if let Some(other) = cards.get_mut(c) {
+                            other.false_positive_runs += 1;
+                        }
                     }
                 }
             }
@@ -405,153 +310,6 @@ fn aggregate(
     }
 }
 
-impl MatrixReport {
-    /// Conditions identified in at least one replicate.
-    pub fn detected_count(&self) -> usize {
-        self.scorecards.iter().filter(|s| s.identified()).count()
-    }
-
-    /// Mean per-condition recall.
-    pub fn macro_recall(&self) -> f64 {
-        if self.scorecards.is_empty() {
-            return 0.0;
-        }
-        self.scorecards.iter().map(|s| s.recall()).sum::<f64>() / self.scorecards.len() as f64
-    }
-
-    /// Paper-style scorecard + confusion tables.
-    pub fn render_tables(&self) -> String {
-        let mut t = Table::new("E5 — detection-quality scorecard (28 conditions × replicates)")
-            .header(&[
-                "id",
-                "recall",
-                "ttd p50",
-                "ttd (win)",
-                "fp rate",
-                "diag prec",
-                "attr acc",
-                "SW id/not",
-                "coverage",
-                "directive",
-            ]);
-        for s in &self.scorecards {
-            let (ttd, ttd_win) = if s.latency_ns.is_empty() {
-                ("-".to_string(), "-".to_string())
-            } else {
-                (
-                    fmt_ns(s.latency_ns.p50()),
-                    format!("{:.1}", s.latency_ns.p50() / self.window_ns.max(1) as f64),
-                )
-            };
-            t.row(vec![
-                s.condition.id().to_string(),
-                format!("{}/{}", s.detected_runs, s.runs),
-                ttd,
-                ttd_win,
-                format!("{:.3}", s.false_positive_rate()),
-                format!("{:.2}", s.diagonal_precision),
-                format!("{:.0}%", s.attribution_accuracy() * 100.0),
-                format!("{}/{}", s.sw_identified_runs, s.sw_noticed_runs),
-                s.coverage_delta().to_string(),
-                format!("{:?}", runbook::entry(s.condition).directive),
-            ]);
-        }
-        let mut out = t.render();
-        out.push_str(&self.confusion.render());
-        out
-    }
-
-    /// One-paragraph human summary (incl. the §4.3 control verdict).
-    pub fn summary_line(&self) -> String {
-        let sw_not = self.scorecards.iter().filter(|s| s.sw_noticed_runs > 0).count();
-        let sw_id = self.scorecards.iter().filter(|s| s.sw_identified_runs > 0).count();
-        let mut s = format!(
-            "DPU identified {}/{} (macro recall {:.2}); SW noticed {}/{} but identified {}/{}; \
-             healthy false alarms {} over {} windows ({} runs)",
-            self.detected_count(),
-            self.scorecards.len(),
-            self.macro_recall(),
-            sw_not,
-            self.scorecards.len(),
-            sw_id,
-            self.scorecards.len(),
-            self.healthy_false_alarms,
-            self.healthy_windows,
-            self.healthy_runs,
-        );
-        if let Some(nc) = &self.negative_control {
-            s.push_str(&format!(
-                "\n4.3 negative control (TP on NVLink, straggler injected): EW1 detections = {} \
-                 across {} runs (expected 0 — NVLink collectives bypass the DPU; {} invisible \
-                 events dropped)",
-                nc.ew1_detections, nc.runs, nc.invisible_dropped
-            ));
-        }
-        s
-    }
-
-    /// Deterministic JSON scorecard: same config + seed ⇒ byte-identical
-    /// output, independent of worker-thread count. Wallclock and thread
-    /// metadata are deliberately excluded.
-    pub fn to_json(&self) -> Json {
-        let mut conds = Json::arr();
-        for s in &self.scorecards {
-            let latency = if s.latency_ns.is_empty() {
-                Json::Null
-            } else {
-                Json::obj()
-                    .set("min_ns", s.latency_ns.min())
-                    .set("p50_ns", s.latency_ns.p50())
-                    .set("max_ns", s.latency_ns.max())
-            };
-            conds.push(
-                Json::obj()
-                    .set("id", s.condition.id())
-                    .set("table", s.condition.table())
-                    .set("runs", s.runs)
-                    .set("detected_runs", s.detected_runs)
-                    .set("recall", s.recall())
-                    .set("latency", latency)
-                    .set("self_firings", s.self_firings)
-                    .set("other_firings", s.other_firings)
-                    .set("diagonal_precision", s.diagonal_precision)
-                    .set("false_positive_runs", s.false_positive_runs)
-                    .set("other_condition_runs", s.other_condition_runs)
-                    .set("false_positive_rate", s.false_positive_rate())
-                    .set("healthy_false_alarms", s.healthy_false_alarms)
-                    .set("attribution_accuracy", s.attribution_accuracy())
-                    .set("sw_noticed_runs", s.sw_noticed_runs)
-                    .set("sw_identified_runs", s.sw_identified_runs)
-                    .set("coverage", s.coverage_delta())
-                    .set("directive", format!("{:?}", runbook::entry(s.condition).directive)),
-            );
-        }
-        let negative = match &self.negative_control {
-            None => Json::Null,
-            Some(nc) => Json::obj()
-                .set("runs", nc.runs)
-                .set("ew1_detections", nc.ew1_detections)
-                .set("invisible_dropped", nc.invisible_dropped),
-        };
-        Json::obj()
-            .set("schema", "dpulens.matrix.v1")
-            .set("replicates", self.replicates)
-            .set("base_seed", self.base_seed)
-            .set("window_ns", self.window_ns)
-            .set("detected", self.detected_count())
-            .set("macro_recall", self.macro_recall())
-            .set(
-                "healthy",
-                Json::obj()
-                    .set("runs", self.healthy_runs)
-                    .set("windows", self.healthy_windows)
-                    .set("false_alarms", self.healthy_false_alarms),
-            )
-            .set("negative_control", negative)
-            .set("conditions", conds)
-    }
-}
-
 /// Parallel all-28 runbook sweep: the three-phase condition experiment
 /// (healthy / injected / optionally mitigated) per condition, each on its
 /// shaped config. The engine behind `dpulens sweep` and the quick-look
@@ -583,6 +341,8 @@ mod tests {
         assert!(matches!(a.last().unwrap().kind, CellKind::NegativeControl { rep: 1 }));
         // Replicate 0 keeps the base seed: it reproduces the serial bench.
         assert_eq!(a[0].cfg.seed, mc.base.seed);
+        // The negative control victimizes a non-zero replica.
+        assert_eq!(a.last().unwrap().cfg.victim_replica, 1);
     }
 
     #[test]
@@ -592,36 +352,5 @@ mod tests {
         let v = cells(&mc);
         assert_eq!(v.len(), 1 + ALL_CONDITIONS.len());
         assert!(v.iter().all(|c| !matches!(c.kind, CellKind::NegativeControl { .. })));
-    }
-
-    #[test]
-    fn expected_classes_cover_all_conditions() {
-        for c in ALL_CONDITIONS {
-            assert!(!expected_cause_classes(c).is_empty(), "{c:?}");
-        }
-        assert!(expected_cause_classes(Condition::Pc8HostCpuBottleneck).contains(&"host"));
-        assert!(expected_cause_classes(Condition::Ew1TpStraggler).contains(&"network"));
-        assert!(expected_cause_classes(Condition::Ns8EarlyCompletion).contains(&"workload"));
-    }
-
-    #[test]
-    fn shaped_cfg_promotes_compute_profiles() {
-        let base = standard_cfg();
-        assert_eq!(shaped_cfg(Condition::Ew1TpStraggler, &base).engine.profile.name, "7b");
-        assert_eq!(shaped_cfg(Condition::Ns4IngressRetx, &base).engine.profile.name, "small");
-        // Shaping never touches the seed or the injection slot.
-        let s = shaped_cfg(Condition::Ew2PpBubble, &base);
-        assert_eq!(s.seed, base.seed);
-        assert!(s.inject.is_none());
-    }
-
-    #[test]
-    fn cause_class_covers_every_variant() {
-        use crate::ids::NodeId;
-        assert_eq!(cause_class(&RootCause::HostLocal(NodeId(0))), "host");
-        assert_eq!(cause_class(&RootCause::GpuSide(NodeId(1))), "gpu");
-        assert_eq!(cause_class(&RootCause::NetworkSide), "network");
-        assert_eq!(cause_class(&RootCause::WorkloadShape), "workload");
-        assert_eq!(cause_class(&RootCause::ClientSide), "client");
     }
 }

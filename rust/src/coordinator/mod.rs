@@ -1,11 +1,34 @@
-//! Orchestration: the scenario world (event loop), experiment runner, and
-//! the CLI surface.
+//! Orchestration: the decomposed serving plane and the runners over it.
+//!
+//! The serving plane is composed of four sub-modules with `scenario` as a
+//! thin orchestrator over them:
+//!
+//! * `world` — world state construction + calendar wiring (event alphabet,
+//!   builders, shared helpers, result assembly)
+//! * `ingress` — arrival, routing/admission, egress completion, and
+//!   replica-aware pathology injection targeting
+//! * `iterate` — per-replica iteration driving (batch formation, KV
+//!   admission, prefill/decode execution, retirement)
+//! * `observe` — DPU/SW window observation, the fleet skew sensor, and the
+//!   closed mitigation loop
+//!
+//! On top sit the runners: `experiment` (three-phase condition experiments),
+//! `matrix` (the parallel 28-condition scorecard), `fleet` (the replicas ×
+//! routing-policy sweep with the DP condition family), and `report`
+//! (machine-readable outputs).
 
 pub mod experiment;
+pub mod fleet;
+pub mod ingress;
+pub mod iterate;
 pub mod matrix;
+pub mod observe;
 pub mod report;
 pub mod scenario;
+pub mod world;
 
 pub use experiment::{condition_experiment, ConditionReport};
+pub use fleet::{run_fleet, FleetConfig, FleetReport};
+pub use ingress::target_node_for;
 pub use matrix::{run_matrix, run_sweep, MatrixConfig, MatrixReport};
-pub use scenario::{target_node_for, RunResult, Scenario, ScenarioCfg};
+pub use scenario::{RunResult, Scenario, ScenarioCfg};

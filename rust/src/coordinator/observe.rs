@@ -1,0 +1,90 @@
+//! Observation plane of the scenario loop: telemetry fan-in to the DPU
+//! agents, the DPU/SW window cadence (calibration → live), the fleet skew
+//! sensor fed from the router vantage, and the closed mitigation loop.
+
+use crate::dpu::attribution::attribute;
+use crate::dpu::fleet::FleetSample;
+use crate::sim::SimTime;
+use crate::telemetry::event::TelemetryEvent;
+
+use super::scenario::Scenario;
+
+impl Scenario {
+    /// Deliver one time-ordered telemetry event to the bus and the owning
+    /// node's DPU agent.
+    pub(crate) fn on_telemetry(&mut self, ev: TelemetryEvent) {
+        self.bus.publish(ev.clone());
+        self.dpu.ingest(ev.node, std::slice::from_ref(&ev));
+    }
+
+    /// Window cadence: close DPU/SW windows, run detectors (or calibrate),
+    /// feed the fleet sensor, react, and apply pending injections.
+    pub(crate) fn on_window_tick(&mut self, now: SimTime) {
+        self.windows_seen += 1;
+        self.cluster.on_window_tick(now, self.cfg.window.ns(), &mut self.outbox);
+        self.flush_outbox();
+        // Calibration -> live transition.
+        if self.dpu.is_calibrating()
+            && self.windows_seen >= self.cfg.warmup_windows + self.cfg.calib_windows
+        {
+            self.dpu.go_live();
+            self.sw_suite.go_live();
+        }
+        let mut detections = self.dpu.window_tick(now);
+        let sw_snap = self.sw_window.snapshot(now);
+        let _ = self.sw_suite.window_tick(&sw_snap);
+
+        // Fleet vantage: refresh the router's per-replica telemetry, track
+        // KV peaks, and run the cross-replica DP skew sensor once live.
+        let n = self.engine.n_replicas();
+        let mut queue_depth = Vec::with_capacity(n);
+        let mut kv_occ = Vec::with_capacity(n);
+        for r in 0..n {
+            let qd = self.engine.replicas[r].batcher.queue_depth() as u64;
+            let occ = self.engine.replicas[r].kv.occupancy();
+            if occ > self.kv_peak[r] {
+                self.kv_peak[r] = occ;
+            }
+            queue_depth.push(qd);
+            kv_occ.push(occ);
+        }
+        for r in 0..n {
+            self.engine.router.update_telemetry(r, queue_depth[r] as f64, kv_occ[r]);
+        }
+        if !self.dpu.is_calibrating() {
+            let sample = FleetSample {
+                routed: self.engine.router.routed_per_replica().to_vec(),
+                queue_depth,
+                kv_occupancy: kv_occ,
+                iterations: self.engine.replicas.iter().map(|r| r.iterations).collect(),
+                alloc_failures: self.engine.replicas.iter().map(|r| r.kv.alloc_failures).collect(),
+            };
+            let fleet_fired = self.fleet.window_tick(now, sample);
+            if !fleet_fired.is_empty() {
+                // Fleet detections join the DPU log: one detection stream
+                // feeds attribution, mitigation, and the result bundle.
+                self.dpu.detections.extend(fleet_fired.iter().cloned());
+                detections.extend(fleet_fired);
+            }
+        }
+
+        if !detections.is_empty() {
+            self.attributions.extend(attribute(&detections));
+            self.controller.react(now, &detections, &mut self.cluster, &mut self.engine);
+        }
+        // Injection is applied at window granularity (after calibration).
+        if !self.dpu.is_calibrating() {
+            self.apply_injection(now);
+        }
+        // Keep replicas alive (an idle replica with queued work can stall if
+        // a kick was missed during rejection paths).
+        for r in 0..self.engine.n_replicas() {
+            if self.pending[r].is_none()
+                && (self.engine.replicas[r].batcher.queue_depth() > 0
+                    || !self.engine.replicas[r].batcher.running().is_empty())
+            {
+                self.kick(r, now);
+            }
+        }
+    }
+}

@@ -1,11 +1,15 @@
 //! Machine-readable experiment reports: serialize run results, detections,
 //! attributions, and runbook metadata to JSON for downstream tooling
-//! (dashboards, CI trend lines, the paper's tables as data).
+//! (dashboards, CI trend lines, the paper's tables as data) — plus the
+//! matrix scorecard report type ([`MatrixReport`]) with its paper-style
+//! table renderer and deterministic JSON form.
 
 use crate::coordinator::scenario::RunResult;
 use crate::dpu::detectors::Condition;
 use crate::dpu::runbook;
+use crate::metrics::{ConfusionMatrix, Scorecard};
 use crate::util::json::Json;
+use crate::util::table::{fmt_ns, Table};
 
 /// Serialize the serving metrics of a run.
 pub fn metrics_json(res: &RunResult) -> Json {
@@ -123,6 +127,180 @@ pub fn condition_json(rep: &crate::coordinator::experiment::ConditionReport) -> 
 /// Convenience: does this JSON document mention a condition id?
 pub fn mentions(json: &Json, condition: Condition) -> bool {
     json.render().contains(condition.id())
+}
+
+/// §4.3 negative-control aggregate.
+#[derive(Debug, Clone)]
+pub struct NegativeControlReport {
+    pub runs: u64,
+    /// EW1 firings after injection — must be zero (NVLink blindness).
+    pub ew1_detections: u64,
+    /// Events rejected at the visibility boundary across control runs.
+    pub invisible_dropped: u64,
+}
+
+/// Everything a matrix run produces (built by `coordinator::matrix`).
+#[derive(Debug)]
+pub struct MatrixReport {
+    /// One scorecard per condition, ALL_CONDITIONS order.
+    pub scorecards: Vec<Scorecard>,
+    pub confusion: ConfusionMatrix,
+    pub replicates: u64,
+    pub base_seed: u64,
+    pub window_ns: u64,
+    pub healthy_runs: u64,
+    pub healthy_windows: u64,
+    pub healthy_false_alarms: u64,
+    pub negative_control: Option<NegativeControlReport>,
+    pub cells_run: usize,
+    pub threads_used: usize,
+}
+
+impl MatrixReport {
+    /// Conditions identified in at least one replicate.
+    pub fn detected_count(&self) -> usize {
+        self.scorecards.iter().filter(|s| s.identified()).count()
+    }
+
+    /// Mean per-condition recall.
+    pub fn macro_recall(&self) -> f64 {
+        if self.scorecards.is_empty() {
+            return 0.0;
+        }
+        self.scorecards.iter().map(|s| s.recall()).sum::<f64>() / self.scorecards.len() as f64
+    }
+
+    /// Paper-style scorecard + confusion tables.
+    pub fn render_tables(&self) -> String {
+        let mut t = Table::new("E5 — detection-quality scorecard (28 conditions × replicates)")
+            .header(&[
+                "id",
+                "recall",
+                "ttd p50",
+                "ttd (win)",
+                "fp rate",
+                "diag prec",
+                "attr acc",
+                "SW id/not",
+                "coverage",
+                "directive",
+            ]);
+        for s in &self.scorecards {
+            let (ttd, ttd_win) = if s.latency_ns.is_empty() {
+                ("-".to_string(), "-".to_string())
+            } else {
+                (
+                    fmt_ns(s.latency_ns.p50()),
+                    format!("{:.1}", s.latency_ns.p50() / self.window_ns.max(1) as f64),
+                )
+            };
+            t.row(vec![
+                s.condition.id().to_string(),
+                format!("{}/{}", s.detected_runs, s.runs),
+                ttd,
+                ttd_win,
+                format!("{:.3}", s.false_positive_rate()),
+                format!("{:.2}", s.diagonal_precision),
+                format!("{:.0}%", s.attribution_accuracy() * 100.0),
+                format!("{}/{}", s.sw_identified_runs, s.sw_noticed_runs),
+                s.coverage_delta().to_string(),
+                format!("{:?}", runbook::entry(s.condition).directive),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&self.confusion.render());
+        out
+    }
+
+    /// One-paragraph human summary (incl. the §4.3 control verdict).
+    pub fn summary_line(&self) -> String {
+        let sw_not = self.scorecards.iter().filter(|s| s.sw_noticed_runs > 0).count();
+        let sw_id = self.scorecards.iter().filter(|s| s.sw_identified_runs > 0).count();
+        let mut s = format!(
+            "DPU identified {}/{} (macro recall {:.2}); SW noticed {}/{} but identified {}/{}; \
+             healthy false alarms {} over {} windows ({} runs)",
+            self.detected_count(),
+            self.scorecards.len(),
+            self.macro_recall(),
+            sw_not,
+            self.scorecards.len(),
+            sw_id,
+            self.scorecards.len(),
+            self.healthy_false_alarms,
+            self.healthy_windows,
+            self.healthy_runs,
+        );
+        if let Some(nc) = &self.negative_control {
+            s.push_str(&format!(
+                "\n4.3 negative control (TP on NVLink, straggler injected): EW1 detections = {} \
+                 across {} runs (expected 0 — NVLink collectives bypass the DPU; {} invisible \
+                 events dropped)",
+                nc.ew1_detections, nc.runs, nc.invisible_dropped
+            ));
+        }
+        s
+    }
+
+    /// Deterministic JSON scorecard: same config + seed ⇒ byte-identical
+    /// output, independent of worker-thread count. Wallclock and thread
+    /// metadata are deliberately excluded.
+    pub fn to_json(&self) -> Json {
+        let mut conds = Json::arr();
+        for s in &self.scorecards {
+            let latency = if s.latency_ns.is_empty() {
+                Json::Null
+            } else {
+                Json::obj()
+                    .set("min_ns", s.latency_ns.min())
+                    .set("p50_ns", s.latency_ns.p50())
+                    .set("max_ns", s.latency_ns.max())
+            };
+            conds.push(
+                Json::obj()
+                    .set("id", s.condition.id())
+                    .set("table", s.condition.table())
+                    .set("runs", s.runs)
+                    .set("detected_runs", s.detected_runs)
+                    .set("recall", s.recall())
+                    .set("latency", latency)
+                    .set("self_firings", s.self_firings)
+                    .set("other_firings", s.other_firings)
+                    .set("diagonal_precision", s.diagonal_precision)
+                    .set("false_positive_runs", s.false_positive_runs)
+                    .set("other_condition_runs", s.other_condition_runs)
+                    .set("false_positive_rate", s.false_positive_rate())
+                    .set("healthy_false_alarms", s.healthy_false_alarms)
+                    .set("attribution_accuracy", s.attribution_accuracy())
+                    .set("sw_noticed_runs", s.sw_noticed_runs)
+                    .set("sw_identified_runs", s.sw_identified_runs)
+                    .set("coverage", s.coverage_delta())
+                    .set("directive", format!("{:?}", runbook::entry(s.condition).directive)),
+            );
+        }
+        let negative = match &self.negative_control {
+            None => Json::Null,
+            Some(nc) => Json::obj()
+                .set("runs", nc.runs)
+                .set("ew1_detections", nc.ew1_detections)
+                .set("invisible_dropped", nc.invisible_dropped),
+        };
+        Json::obj()
+            .set("schema", "dpulens.matrix.v1")
+            .set("replicates", self.replicates)
+            .set("base_seed", self.base_seed)
+            .set("window_ns", self.window_ns)
+            .set("detected", self.detected_count())
+            .set("macro_recall", self.macro_recall())
+            .set(
+                "healthy",
+                Json::obj()
+                    .set("runs", self.healthy_runs)
+                    .set("windows", self.healthy_windows)
+                    .set("false_alarms", self.healthy_false_alarms),
+            )
+            .set("negative_control", negative)
+            .set("conditions", conds)
+    }
 }
 
 #[cfg(test)]

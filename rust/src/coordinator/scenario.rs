@@ -1,35 +1,33 @@
-//! The scenario engine: one deterministic discrete-event world wiring
-//! workload → router/admission → batcher/KV → TP/PP execution over the
-//! simulated cluster → egress, with the DPU plane observing, the SW baseline
-//! sampling, injectors creating pathologies, and the mitigation controller
-//! closing the loop.
+//! The scenario orchestrator: a thin event-loop driver over the decomposed
+//! serving plane.
+//!
+//! One deterministic discrete-event world wires workload → router/admission
+//! (`ingress`) → batcher/KV → TP/PP execution over the simulated cluster
+//! (`iterate`) → egress, with the DPU plane, SW baseline, and fleet sensor
+//! observing (`observe`), injectors creating pathologies, and the mitigation
+//! controller closing the loop. World state and construction live in
+//! `world`; this module owns only the configuration, the result bundle, and
+//! the dispatch loop — byte-deterministic for a given config regardless of
+//! host thread counts.
+
+use std::collections::HashMap;
 
 use crate::cluster::{Cluster, ClusterSpec, Outbox};
-use crate::dpu::attribution::{attribute, Attribution};
-use crate::dpu::detectors::{Condition, DetectConfig, Detection};
 use crate::dpu::agent::DpuPlane;
+use crate::dpu::attribution::Attribution;
+use crate::dpu::detectors::{Condition, Detection};
+use crate::dpu::fleet::FleetSensor;
 use crate::dpu::swdet::SwSuite;
-use crate::engine::exec::{run_iteration, ComputeBackend, IterKind, SurrogateBackend};
-use crate::engine::{build_replicas, Engine, EngineConfig, Work};
-use crate::ids::{NodeId, ReqId};
+use crate::engine::exec::ComputeBackend;
+use crate::engine::{Engine, EngineConfig};
+use crate::ids::ReqId;
 use crate::metrics::ServeMetrics;
-use crate::pathology;
-use crate::sim::{Engine as Calendar, SimDur, SimTime, MS};
-use crate::telemetry::event::{TelemetryEvent, TelemetryKind};
-use crate::telemetry::sw::{SwSignal, SwWindow};
+use crate::sim::{Engine as Calendar, SimDur, SimTime};
+use crate::telemetry::sw::SwWindow;
 use crate::telemetry::TelemetryBus;
 use crate::workload::generator::{WorkloadGen, WorkloadSpec};
-use crate::workload::request::{InferenceRequest, ReqState};
 
-/// Per-token egress payload bytes (token id + framing).
-const TOKEN_EGRESS_BYTES: u64 = 128;
-/// Egress response streams get per-request flow ids (a response stream is a
-/// stream, not a session): high bit marks them.
-fn egress_flow(req: crate::ids::ReqId) -> crate::ids::FlowId {
-    crate::ids::FlowId(0x8000_0000 | req.0)
-}
-/// Per-request ingress overhead bytes.
-const INGRESS_OVERHEAD: u64 = 256;
+use super::world::{Ev, PendingIter};
 
 /// Scenario configuration.
 #[derive(Debug, Clone)]
@@ -48,6 +46,9 @@ pub struct ScenarioCfg {
     pub calib_windows: u64,
     /// Optional pathology injection: (condition, time).
     pub inject: Option<(Condition, SimTime)>,
+    /// Which replica node-scoped injections victimize (clamped to the
+    /// cluster's replica count; 0 preserves the single-replica behavior).
+    pub victim_replica: usize,
     /// Closed-loop mitigation on detection?
     pub mitigate: bool,
     /// Stop generating new arrivals after this many requests (0 = unlimited).
@@ -66,43 +67,11 @@ impl Default for ScenarioCfg {
             warmup_windows: 20,
             calib_windows: 100,
             inject: None,
+            victim_replica: 0,
             mitigate: false,
             max_requests: 0,
         }
     }
-}
-
-/// Pick a sensible victim node for a condition (ingress/PCIe conditions hit
-/// an entry node; egress conditions the exit node; EW1 a stage-0 peer).
-pub fn target_node_for(c: Condition, engine: &Engine) -> NodeId {
-    use Condition::*;
-    let plan = &engine.replicas[0].plan;
-    match c {
-        Ns5EgressBacklog | Ns6EgressJitter | Ns7EgressRetx | Pc2D2hBottleneck
-        | Pc10DecodeEarlyStop => plan.exit_nodes()[0],
-        Ew1TpStraggler | Ew9EarlyStopSkew => {
-            *plan.stages[0].nodes.last().unwrap_or(&plan.entry_nodes()[0])
-        }
-        _ => plan.entry_nodes()[0],
-    }
-}
-
-#[derive(Debug, Clone)]
-enum Ev {
-    Arrival(Box<InferenceRequest>),
-    Delivered(ReqId),
-    Iterate(usize),
-    IterDone(usize),
-    EgressDone { req: ReqId, last: bool },
-    Telem(Box<TelemetryEvent>),
-    WindowTick,
-    End,
-}
-
-#[derive(Debug)]
-struct PendingIter {
-    kind: IterKind,
-    started: SimTime,
 }
 
 /// Everything a run produces.
@@ -123,6 +92,12 @@ pub struct RunResult {
     pub dpu_invisible_dropped: u64,
     pub windows: u64,
     pub iterations: u64,
+    /// Per-replica iteration counts (fleet skew view).
+    pub replica_iterations: Vec<u64>,
+    /// Per-replica cumulative routed arrivals (router accounting).
+    pub replica_routed: Vec<u64>,
+    /// Peak KV occupancy observed per replica (window-sampled).
+    pub replica_kv_peak: Vec<f64>,
     pub real_compute: bool,
     pub class_counts: std::collections::HashMap<&'static str, u64>,
 }
@@ -138,147 +113,36 @@ impl RunResult {
     }
 }
 
-/// The world.
+/// The world: state lives here, behavior is split across the serving-plane
+/// sub-modules (`world` construction, `ingress`, `iterate`, `observe`).
 pub struct Scenario {
     pub cfg: ScenarioCfg,
     pub cluster: Cluster,
     pub engine: Engine,
     pub dpu: DpuPlane,
     pub sw_suite: SwSuite,
-    sw_window: SwWindow,
+    pub(crate) sw_window: SwWindow,
     pub controller: crate::mitigation::Controller,
-    bus: TelemetryBus,
-    cal: Calendar<Ev>,
-    gen: WorkloadGen,
-    backends: Vec<Box<dyn ComputeBackend>>,
-    pending: Vec<Option<PendingIter>>,
-    slot_of: std::collections::HashMap<ReqId, usize>,
-    free_slots: Vec<Vec<usize>>,
-    outbox: Outbox,
-    windows_seen: u64,
-    injected_at: Option<SimTime>,
-    injection_desc: Option<String>,
-    generated: usize,
-    iterations: u64,
-    attributions: Vec<Attribution>,
-    real_compute: bool,
+    pub(crate) fleet: FleetSensor,
+    pub(crate) bus: TelemetryBus,
+    pub(crate) cal: Calendar<Ev>,
+    pub(crate) gen: WorkloadGen,
+    pub(crate) backends: Vec<Box<dyn ComputeBackend>>,
+    pub(crate) pending: Vec<Option<PendingIter>>,
+    pub(crate) slot_of: HashMap<ReqId, usize>,
+    pub(crate) free_slots: Vec<Vec<usize>>,
+    pub(crate) outbox: Outbox,
+    pub(crate) windows_seen: u64,
+    pub(crate) injected_at: Option<SimTime>,
+    pub(crate) injection_desc: Option<String>,
+    pub(crate) generated: usize,
+    pub(crate) iterations: u64,
+    pub(crate) attributions: Vec<Attribution>,
+    pub(crate) kv_peak: Vec<f64>,
+    pub(crate) real_compute: bool,
 }
 
 impl Scenario {
-    /// Build with surrogate (sim-only) compute backends.
-    pub fn new(cfg: ScenarioCfg) -> Self {
-        let vocab = cfg.engine.profile.vocab;
-        let n_rep = {
-            let plans = build_replicas(&cfg.cluster, cfg.engine.nodes_per_stage);
-            plans.len()
-        };
-        let backends: Vec<Box<dyn ComputeBackend>> =
-            (0..n_rep).map(|_| Box::new(SurrogateBackend::new(vocab)) as Box<dyn ComputeBackend>).collect();
-        Self::with_backends(cfg, backends)
-    }
-
-    /// Build with caller-provided compute backends (e.g. the real PJRT
-    /// `TransformerSession`), one per replica.
-    pub fn with_backends(cfg: ScenarioCfg, backends: Vec<Box<dyn ComputeBackend>>) -> Self {
-        cfg.cluster.validate().expect("bad cluster spec");
-        let plans = build_replicas(&cfg.cluster, cfg.engine.nodes_per_stage);
-        assert_eq!(plans.len(), backends.len(), "one backend per replica");
-        let engine = Engine::new(cfg.engine.clone(), plans);
-        let cluster = Cluster::new(cfg.cluster.clone(), cfg.seed);
-        let mut dpu = DpuPlane::new(
-            cfg.cluster.n_nodes,
-            cfg.cluster.gpus_per_node,
-            DetectConfig { nic_bw: cfg.cluster.nic_bw, z_fire: 4.0 },
-        );
-        dpu.warmup_windows = cfg.warmup_windows;
-        let gen = WorkloadGen::new(cfg.workload.clone(), cfg.engine.profile.vocab, cfg.seed);
-        let n_rep = engine.n_replicas();
-        let max_batch = cfg.engine.policy.max_batch;
-        let real = backends.iter().any(|b| b.is_real());
-        Scenario {
-            cluster,
-            dpu,
-            sw_suite: SwSuite::new(),
-            sw_window: SwWindow::new(),
-            controller: crate::mitigation::Controller::new(cfg.mitigate),
-            bus: TelemetryBus::new(cfg.cluster.n_nodes),
-            cal: Calendar::new(),
-            gen,
-            backends,
-            pending: (0..n_rep).map(|_| None).collect(),
-            slot_of: Default::default(),
-            free_slots: (0..n_rep).map(|_| (0..max_batch).rev().collect()).collect(),
-            outbox: Outbox::new(),
-            windows_seen: 0,
-            injected_at: None,
-            injection_desc: None,
-            generated: 0,
-            iterations: 0,
-            attributions: Vec::new(),
-            engine,
-            real_compute: real,
-            cfg,
-        }
-    }
-
-    /// Drain hardware-model emissions into the calendar (time-ordered
-    /// delivery to observers).
-    fn flush_outbox(&mut self) {
-        for (t, node, kind) in self.outbox.drain() {
-            self.cal.schedule_at(
-                t,
-                Ev::Telem(Box::new(TelemetryEvent { t, node, kind })),
-            );
-        }
-    }
-
-    fn schedule_next_arrival(&mut self) {
-        if self.cfg.max_requests > 0 && self.generated >= self.cfg.max_requests {
-            return;
-        }
-        let req = self.gen.next_request();
-        self.generated += 1;
-        self.cal.schedule_at(req.arrival, Ev::Arrival(Box::new(req)));
-    }
-
-    fn entry_node(&self, replica: usize) -> NodeId {
-        self.engine.replicas[replica].plan.entry_nodes()[0]
-    }
-
-    fn exit_node(&self, replica: usize) -> NodeId {
-        self.engine.replicas[replica].plan.exit_nodes()[0]
-    }
-
-    fn kick(&mut self, replica: usize, now: SimTime) {
-        if self.pending[replica].is_none() {
-            self.cal.schedule_at(now, Ev::Iterate(replica));
-            self.pending[replica] = Some(PendingIter {
-                kind: IterKind::Decode { reqs: vec![], ctx_lens: vec![] },
-                started: now,
-            });
-            // Placeholder replaced in Iterate; marks the replica busy so we
-            // don't double-schedule.
-        }
-    }
-
-    fn apply_injection(&mut self, now: SimTime) {
-        let Some((cond, at)) = self.cfg.inject else { return };
-        if self.injected_at.is_some() || now < at {
-            return;
-        }
-        let target = target_node_for(cond, &self.engine);
-        let mut wl = self.cfg.workload.clone();
-        let desc = pathology::inject(cond, target, &mut self.cluster, &mut self.engine, &mut wl);
-        if pathology::site(cond) == pathology::InjectSite::Workload {
-            let mut gen = WorkloadGen::new(wl.clone(), self.cfg.engine.profile.vocab, self.cfg.seed ^ 0x5EED);
-            gen.fast_forward(now);
-            self.gen = gen;
-        }
-        self.cfg.workload = wl;
-        self.injected_at = Some(now);
-        self.injection_desc = Some(desc);
-    }
-
     /// Run to completion; returns the result bundle.
     pub fn run(mut self) -> RunResult {
         let end = SimTime::ZERO + self.cfg.duration;
@@ -289,72 +153,15 @@ impl Scenario {
         while let Some((now, ev)) = self.cal.pop() {
             match ev {
                 Ev::End => break,
-                Ev::Arrival(req) => {
-                    let mut req = *req;
-                    let replica = self.engine.register(req.clone());
-                    let node = self.entry_node(replica);
-                    req.assigned_node = Some(node);
-                    self.engine.requests.get_mut(&req.id).unwrap().assigned_node = Some(node);
-                    self.sw_window.record(SwSignal::RequestArrival, 1.0);
-                    self.sw_window.record(SwSignal::SequenceLength, req.prompt_len() as f64);
-                    let bytes = req.prompt_len() as u64 * 4 + INGRESS_OVERHEAD;
-                    let delivered =
-                        self.cluster.ingress(now, node, req.flow, bytes, &mut self.outbox);
-                    self.flush_outbox();
-                    self.cal.schedule_at(delivered, Ev::Delivered(req.id));
-                    self.schedule_next_arrival();
-                }
-                Ev::Delivered(id) => {
-                    let replica = self.engine.placement[&id];
-                    let prompt_len = self.engine.request(id).prompt_len() as u32;
-                    let ok = self.engine.replicas[replica].batcher.enqueue(id, prompt_len, now);
-                    let r = self.engine.request_mut(id);
-                    if ok {
-                        r.state = ReqState::Queued;
-                        r.admitted_at = Some(now);
-                    } else {
-                        r.state = ReqState::Rejected;
-                        self.engine.router.complete(replica);
-                    }
-                    self.sw_window.record(
-                        SwSignal::QueueDepth,
-                        self.engine.replicas[replica].batcher.queue_depth() as f64,
-                    );
-                    self.kick(replica, now);
-                }
+                Ev::Arrival(req) => self.on_arrival(*req, now),
+                Ev::Delivered(id) => self.on_delivered(id, now),
                 Ev::Iterate(replica) => {
                     self.pending[replica] = None;
                     self.run_next_iteration(replica, now);
                 }
-                Ev::IterDone(replica) => {
-                    self.finish_iteration(replica, now);
-                }
-                Ev::EgressDone { req, last } => {
-                    let r = self.engine.request_mut(req);
-                    if r.first_token_at.is_none() {
-                        r.first_token_at = Some(now);
-                    }
-                    if last {
-                        r.done_at = Some(now);
-                        r.state = ReqState::Done;
-                        let replica = self.engine.placement[&req];
-                        self.engine.router.complete(replica);
-                        let node = self.exit_node(replica);
-                        let flow = egress_flow(req);
-                        self.bus.emit(now, node, TelemetryKind::FlowEnd { flow, req });
-                        let ev = TelemetryEvent {
-                            t: now,
-                            node,
-                            kind: TelemetryKind::FlowEnd { flow, req },
-                        };
-                        self.dpu.ingest(node, std::slice::from_ref(&ev));
-                        self.sw_window.record(SwSignal::TransportLatency, 1000.0);
-                    }
-                }
-                Ev::Telem(ev) => {
-                    self.bus.publish((*ev).clone());
-                    self.dpu.ingest(ev.node, std::slice::from_ref(&*ev));
-                }
+                Ev::IterDone(replica) => self.finish_iteration(replica, now),
+                Ev::EgressDone { req, last } => self.on_egress_done(req, last, now),
+                Ev::Telem(ev) => self.on_telemetry(*ev),
                 Ev::WindowTick => {
                     self.on_window_tick(now);
                     if now < end {
@@ -364,247 +171,14 @@ impl Scenario {
             }
         }
 
-        let span = self.cfg.duration;
-        let metrics = ServeMetrics::collect(self.engine.requests.values(), span);
-        let sw_alarm_log = std::mem::take(&mut self.sw_suite.detections);
-        RunResult {
-            metrics,
-            detections: std::mem::take(&mut self.dpu.detections),
-            attributions: self.attributions,
-            sw_detections: sw_alarm_log.len(),
-            sw_alarm_log,
-            actions: self.controller.log.clone(),
-            injected_at: self.injected_at,
-            injection_desc: self.injection_desc,
-            telemetry_published: self.bus.total_published(),
-            dpu_ingested: self.dpu.total_ingested(),
-            dpu_invisible_dropped: self.dpu.total_invisible_dropped(),
-            windows: self.windows_seen,
-            iterations: self.iterations,
-            real_compute: self.real_compute,
-            class_counts: self.bus.class_counts().clone(),
-        }
-    }
-
-    fn run_next_iteration(&mut self, replica: usize, now: SimTime) {
-        // KV admission happens at prefill-batch formation.
-        let work = {
-            let rep = &mut self.engine.replicas[replica];
-            if !rep.batcher.may_refill() && !rep.batcher.running().is_empty() {
-                // Static/no-remap mode with a draining batch: decode only.
-                if rep.batcher.running().is_empty() {
-                    Work::Idle
-                } else {
-                    Work::DecodeRound(rep.batcher.running().iter().map(|s| s.req).collect())
-                }
-            } else {
-                rep.batcher.next_work()
-            }
-        };
-        match work {
-            Work::Idle => {
-                self.pending[replica] = None;
-            }
-            Work::Prefill(reqs) => {
-                // Admit into KV; anything that doesn't fit goes back.
-                let mut admitted = Vec::new();
-                for id in reqs {
-                    let plen = self.engine.request(id).prompt_len() as u32;
-                    let rep = &mut self.engine.replicas[replica];
-                    if rep.kv.admit(id, plen) == crate::engine::AllocResult::Ok
-                        && !self.free_slots[replica].is_empty()
-                    {
-                        let slot = self.free_slots[replica].pop().unwrap();
-                        self.slot_of.insert(id, slot);
-                        admitted.push(id);
-                    } else {
-                        self.engine.replicas[replica].kv.release(id);
-                        self.engine.replicas[replica].batcher.enqueue(id, plen, now);
-                        break;
-                    }
-                }
-                if admitted.is_empty() {
-                    self.pending[replica] = None;
-                    return;
-                }
-                let prompt_lens: Vec<u32> =
-                    admitted.iter().map(|id| self.engine.request(*id).prompt_len() as u32).collect();
-                for &id in &admitted {
-                    let r = self.engine.request_mut(id);
-                    r.state = ReqState::Prefilling;
-                    r.prefill_start = Some(now);
-                }
-                let kind = IterKind::Prefill { reqs: admitted, prompt_lens };
-                self.execute(replica, now, kind);
-            }
-            Work::DecodeRound(reqs) => {
-                let ctx_lens: Vec<u32> = reqs
-                    .iter()
-                    .map(|id| {
-                        self.engine.replicas[replica]
-                            .batcher
-                            .running()
-                            .iter()
-                            .find(|s| s.req == *id)
-                            .map(|s| s.position)
-                            .unwrap_or(1)
-                    })
-                    .collect();
-                // KV growth for the step.
-                for &id in &reqs {
-                    let rep = &mut self.engine.replicas[replica];
-                    let _ = rep.kv.append_token(id);
-                }
-                let kind = IterKind::Decode { reqs, ctx_lens };
-                self.execute(replica, now, kind);
-            }
-        }
-    }
-
-    fn execute(&mut self, replica: usize, now: SimTime, kind: IterKind) {
-        let timing = {
-            let rep = &mut self.engine.replicas[replica];
-            rep.iterations += 1;
-            match &kind {
-                IterKind::Prefill { .. } => rep.prefills += 1,
-                IterKind::Decode { .. } => rep.decodes += 1,
-            }
-            run_iteration(
-                now,
-                &kind,
-                &mut self.cluster,
-                &rep.plan,
-                &self.cfg.engine.profile,
-                &mut rep.colls,
-                &mut self.outbox,
-            )
-        };
-        self.iterations += 1;
-        self.flush_outbox();
-        self.sw_window.record(SwSignal::StepTime, (timing.done - now).ns() as f64);
-        self.sw_window.record(SwSignal::GpuUtil, 0.8);
-        self.sw_window
-            .record(SwSignal::KvOccupancy, self.engine.replicas[replica].kv.occupancy());
-        self.pending[replica] = Some(PendingIter { kind, started: now });
-        self.cal.schedule_at(timing.done, Ev::IterDone(replica));
-    }
-
-    fn finish_iteration(&mut self, replica: usize, now: SimTime) {
-        let Some(pending) = self.pending[replica].take() else { return };
-        match pending.kind {
-            IterKind::Prefill { reqs, prompt_lens } => {
-                let slots: Vec<usize> = reqs.iter().map(|id| self.slot_of[id]).collect();
-                let prompts: Vec<Vec<i32>> =
-                    reqs.iter().map(|id| self.engine.request(*id).prompt.clone()).collect();
-                let first_tokens = self.backends[replica].prefill(&slots, &prompts);
-                let specs: Vec<(ReqId, u32, u32)> = reqs
-                    .iter()
-                    .zip(&prompt_lens)
-                    .map(|(id, &plen)| {
-                        (*id, plen, self.engine.request(*id).max_new_tokens as u32)
-                    })
-                    .collect();
-                self.engine.replicas[replica].batcher.start_decode(&specs);
-                for ((id, tok), _plen) in reqs.iter().zip(first_tokens).zip(&prompt_lens) {
-                    let r = self.engine.request_mut(*id);
-                    r.state = ReqState::Decoding;
-                    r.generated.push(tok);
-                    self.sw_window.record(SwSignal::DecodeProgress, r.generated.len() as f64);
-                    let finished = self.engine.replicas[replica].batcher.on_token(*id);
-                    self.emit_token(replica, *id, now, finished);
-                    if finished {
-                        self.retire(replica, *id);
-                    }
-                }
-            }
-            IterKind::Decode { reqs, .. } => {
-                let slots: Vec<usize> = reqs.iter().map(|id| self.slot_of[id]).collect();
-                let last_tokens: Vec<i32> = reqs
-                    .iter()
-                    .map(|id| *self.engine.request(*id).generated.last().unwrap_or(&1))
-                    .collect();
-                let positions: Vec<u32> = reqs
-                    .iter()
-                    .map(|id| {
-                        self.engine.replicas[replica]
-                            .batcher
-                            .running()
-                            .iter()
-                            .find(|s| s.req == *id)
-                            .map(|s| s.position)
-                            .unwrap_or(1)
-                            .min(self.cfg.engine.profile.max_seq as u32 - 1)
-                    })
-                    .collect();
-                let next = self.backends[replica].decode(&slots, &last_tokens, &positions);
-                for (id, tok) in reqs.iter().zip(next) {
-                    let r = self.engine.request_mut(*id);
-                    r.generated.push(tok);
-                    let finished = self.engine.replicas[replica].batcher.on_token(*id);
-                    self.emit_token(replica, *id, now, finished);
-                    if finished {
-                        self.retire(replica, *id);
-                    }
-                }
-            }
-        }
-        self.kick(replica, now);
-    }
-
-    fn emit_token(&mut self, replica: usize, id: ReqId, now: SimTime, last: bool) {
-        let node = self.exit_node(replica);
-        let flow = egress_flow(id);
-        let done = self.cluster.egress(now, node, flow, TOKEN_EGRESS_BYTES, &mut self.outbox);
-        self.flush_outbox();
-        self.cal.schedule_at(done, Ev::EgressDone { req: id, last });
-    }
-
-    fn retire(&mut self, replica: usize, id: ReqId) {
-        self.engine.replicas[replica].batcher.finish(id);
-        self.engine.replicas[replica].kv.release(id);
-        if let Some(slot) = self.slot_of.remove(&id) {
-            self.free_slots[replica].push(slot);
-        }
-    }
-
-    fn on_window_tick(&mut self, now: SimTime) {
-        self.windows_seen += 1;
-        self.cluster.on_window_tick(now, self.cfg.window.ns(), &mut self.outbox);
-        self.flush_outbox();
-        // Calibration -> live transition.
-        if self.dpu.is_calibrating()
-            && self.windows_seen >= self.cfg.warmup_windows + self.cfg.calib_windows
-        {
-            self.dpu.go_live();
-            self.sw_suite.go_live();
-        }
-        let detections = self.dpu.window_tick(now);
-        let sw_snap = self.sw_window.snapshot(now);
-        let _ = self.sw_suite.window_tick(&sw_snap);
-        if !detections.is_empty() {
-            self.attributions.extend(attribute(&detections));
-            self.controller.react(now, &detections, &mut self.cluster, &mut self.engine);
-        }
-        // Injection is applied at window granularity (after calibration).
-        if !self.dpu.is_calibrating() {
-            self.apply_injection(now);
-        }
-        // Keep replicas alive (an idle replica with queued work can stall if
-        // a kick was missed during rejection paths).
-        for r in 0..self.engine.n_replicas() {
-            if self.pending[r].is_none()
-                && (self.engine.replicas[r].batcher.queue_depth() > 0
-                    || !self.engine.replicas[r].batcher.running().is_empty())
-            {
-                self.kick(r, now);
-            }
-        }
+        self.finish()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::MS;
 
     fn quick_cfg() -> ScenarioCfg {
         let mut cfg = ScenarioCfg::default();
@@ -682,5 +256,35 @@ mod tests {
             res.telemetry_published,
             "every published event either ingested or dropped by visibility"
         );
+    }
+
+    #[test]
+    fn per_replica_accounting_covers_the_run() {
+        let res = Scenario::new(quick_cfg()).run();
+        // Single default replica: all completions land on lane 0.
+        assert_eq!(res.metrics.per_replica.len(), 1);
+        assert_eq!(res.metrics.per_replica[0].completed, res.metrics.completed);
+        assert_eq!(res.replica_iterations.iter().sum::<u64>(), res.iterations);
+        assert_eq!(res.replica_routed.len(), 1);
+        assert!(res.replica_routed[0] > 0);
+        assert!(res.replica_kv_peak[0] > 0.0);
+    }
+
+    #[test]
+    fn multi_replica_world_serves_on_all_replicas() {
+        let mut cfg = quick_cfg();
+        cfg.engine.nodes_per_stage = 1; // 4 nodes / pp2 => 2 replicas
+        let res = Scenario::new(cfg).run();
+        assert_eq!(res.metrics.per_replica.len(), 2);
+        assert!(res.replica_routed.iter().all(|&n| n > 0), "{:?}", res.replica_routed);
+        assert!(
+            res.metrics.per_replica.iter().all(|l| l.completed > 0),
+            "a replica served nothing: {:?}",
+            res.metrics.per_replica
+        );
+        // Healthy hash routing: no DP fleet alarms.
+        assert!(!res.detected(Condition::Dp1RouterFlowSkew));
+        assert!(!res.detected(Condition::Dp2HotReplicaKv));
+        assert!(!res.detected(Condition::Dp3StragglerReplica));
     }
 }

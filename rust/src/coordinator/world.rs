@@ -1,0 +1,179 @@
+//! World construction + calendar wiring for the serving plane: the event
+//! alphabet the scenario loop dispatches on, the builders that assemble the
+//! full simulated world (cluster, engine, DPU plane, SW baseline, fleet
+//! sensor, workload generator, compute backends), and the shared helpers
+//! every stage of the loop leans on (outbox draining, arrival scheduling,
+//! replica kicks, result assembly).
+
+use crate::cluster::{Cluster, Outbox};
+use crate::dpu::agent::DpuPlane;
+use crate::dpu::detectors::DetectConfig;
+use crate::dpu::fleet::FleetSensor;
+use crate::dpu::swdet::SwSuite;
+use crate::engine::exec::{ComputeBackend, IterKind, SurrogateBackend};
+use crate::engine::{build_replicas, Engine};
+use crate::ids::{NodeId, ReqId};
+use crate::metrics::ServeMetrics;
+use crate::sim::{Engine as Calendar, SimTime};
+use crate::telemetry::event::TelemetryEvent;
+use crate::telemetry::sw::SwWindow;
+use crate::telemetry::TelemetryBus;
+use crate::workload::generator::WorkloadGen;
+use crate::workload::request::InferenceRequest;
+
+use super::scenario::{RunResult, Scenario, ScenarioCfg};
+
+/// The scenario event alphabet (calendar entries).
+#[derive(Debug, Clone)]
+pub(crate) enum Ev {
+    Arrival(Box<InferenceRequest>),
+    Delivered(ReqId),
+    Iterate(usize),
+    IterDone(usize),
+    EgressDone { req: ReqId, last: bool },
+    Telem(Box<TelemetryEvent>),
+    WindowTick,
+    End,
+}
+
+/// An iteration in flight on one replica.
+#[derive(Debug)]
+pub(crate) struct PendingIter {
+    pub(crate) kind: IterKind,
+    #[allow(dead_code)]
+    pub(crate) started: SimTime,
+}
+
+impl Scenario {
+    /// Build with surrogate (sim-only) compute backends.
+    pub fn new(cfg: ScenarioCfg) -> Self {
+        let vocab = cfg.engine.profile.vocab;
+        let n_rep = {
+            let plans = build_replicas(&cfg.cluster, cfg.engine.nodes_per_stage);
+            plans.len()
+        };
+        let backends: Vec<Box<dyn ComputeBackend>> = (0..n_rep)
+            .map(|_| Box::new(SurrogateBackend::new(vocab)) as Box<dyn ComputeBackend>)
+            .collect();
+        Self::with_backends(cfg, backends)
+    }
+
+    /// Build with caller-provided compute backends (e.g. the real PJRT
+    /// `TransformerSession`), one per replica.
+    pub fn with_backends(cfg: ScenarioCfg, backends: Vec<Box<dyn ComputeBackend>>) -> Self {
+        cfg.cluster.validate().expect("bad cluster spec");
+        let plans = build_replicas(&cfg.cluster, cfg.engine.nodes_per_stage);
+        assert_eq!(plans.len(), backends.len(), "one backend per replica");
+        let engine = Engine::new(cfg.engine.clone(), plans);
+        let cluster = Cluster::new(cfg.cluster.clone(), cfg.seed);
+        let mut dpu = DpuPlane::new(
+            cfg.cluster.n_nodes,
+            cfg.cluster.gpus_per_node,
+            DetectConfig { nic_bw: cfg.cluster.nic_bw, z_fire: 4.0 },
+        );
+        dpu.warmup_windows = cfg.warmup_windows;
+        let gen = WorkloadGen::new(cfg.workload.clone(), cfg.engine.profile.vocab, cfg.seed);
+        let n_rep = engine.n_replicas();
+        let entry_nodes: Vec<NodeId> =
+            engine.replicas.iter().map(|r| r.plan.entry_nodes()[0]).collect();
+        let max_batch = cfg.engine.policy.max_batch;
+        let real = backends.iter().any(|b| b.is_real());
+        Scenario {
+            cluster,
+            dpu,
+            sw_suite: SwSuite::new(),
+            sw_window: SwWindow::new(),
+            controller: crate::mitigation::Controller::new(cfg.mitigate),
+            fleet: FleetSensor::new(n_rep, entry_nodes),
+            bus: TelemetryBus::new(cfg.cluster.n_nodes),
+            cal: Calendar::new(),
+            gen,
+            backends,
+            pending: (0..n_rep).map(|_| None).collect(),
+            slot_of: Default::default(),
+            free_slots: (0..n_rep).map(|_| (0..max_batch).rev().collect()).collect(),
+            outbox: Outbox::new(),
+            windows_seen: 0,
+            injected_at: None,
+            injection_desc: None,
+            generated: 0,
+            iterations: 0,
+            attributions: Vec::new(),
+            kv_peak: vec![0.0; n_rep],
+            engine,
+            real_compute: real,
+            cfg,
+        }
+    }
+
+    /// Drain hardware-model emissions into the calendar (time-ordered
+    /// delivery to observers).
+    pub(crate) fn flush_outbox(&mut self) {
+        for (t, node, kind) in self.outbox.drain() {
+            self.cal.schedule_at(t, Ev::Telem(Box::new(TelemetryEvent { t, node, kind })));
+        }
+    }
+
+    pub(crate) fn schedule_next_arrival(&mut self) {
+        if self.cfg.max_requests > 0 && self.generated >= self.cfg.max_requests {
+            return;
+        }
+        let req = self.gen.next_request();
+        self.generated += 1;
+        self.cal.schedule_at(req.arrival, Ev::Arrival(Box::new(req)));
+    }
+
+    pub(crate) fn entry_node(&self, replica: usize) -> NodeId {
+        self.engine.replicas[replica].plan.entry_nodes()[0]
+    }
+
+    pub(crate) fn exit_node(&self, replica: usize) -> NodeId {
+        self.engine.replicas[replica].plan.exit_nodes()[0]
+    }
+
+    /// Schedule an iteration on an idle replica; the placeholder pending
+    /// entry marks it busy so we don't double-schedule (replaced in
+    /// `Ev::Iterate`).
+    pub(crate) fn kick(&mut self, replica: usize, now: SimTime) {
+        if self.pending[replica].is_none() {
+            self.cal.schedule_at(now, Ev::Iterate(replica));
+            self.pending[replica] = Some(PendingIter {
+                kind: IterKind::Decode { reqs: vec![], ctx_lens: vec![] },
+                started: now,
+            });
+        }
+    }
+
+    /// Assemble the result bundle after the loop ends.
+    pub(crate) fn finish(mut self) -> RunResult {
+        let span = self.cfg.duration;
+        let n_rep = self.engine.n_replicas();
+        let metrics = ServeMetrics::collect_fleet(
+            self.engine.requests.values(),
+            &self.engine.placement,
+            n_rep,
+            span,
+        );
+        let sw_alarm_log = std::mem::take(&mut self.sw_suite.detections);
+        RunResult {
+            metrics,
+            detections: std::mem::take(&mut self.dpu.detections),
+            attributions: self.attributions,
+            sw_detections: sw_alarm_log.len(),
+            sw_alarm_log,
+            actions: self.controller.log.clone(),
+            injected_at: self.injected_at,
+            injection_desc: self.injection_desc,
+            telemetry_published: self.bus.total_published(),
+            dpu_ingested: self.dpu.total_ingested(),
+            dpu_invisible_dropped: self.dpu.total_invisible_dropped(),
+            windows: self.windows_seen,
+            iterations: self.iterations,
+            replica_iterations: self.engine.replicas.iter().map(|r| r.iterations).collect(),
+            replica_routed: self.engine.router.routed_per_replica().to_vec(),
+            replica_kv_peak: self.kv_peak,
+            real_compute: self.real_compute,
+            class_counts: self.bus.class_counts().clone(),
+        }
+    }
+}

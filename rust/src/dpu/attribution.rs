@@ -57,6 +57,10 @@ fn default_cause(c: Condition, node: NodeId) -> RootCause {
         // Cross-node compute imbalance: attribute to the straggling side if
         // corroborated, else network-visible compute skew.
         Ew1TpStraggler | Ew2PpBubble | Ew3CrossNodeSkew => RootCause::GpuSide(node),
+        // Data-parallel fleet family: DP1 is the load balancer's hashing
+        // (network infrastructure); DP2/DP3 localize to the hot/slow replica.
+        Dp1RouterFlowSkew => RootCause::NetworkSide,
+        Dp2HotReplicaKv | Dp3StragglerReplica => RootCause::GpuSide(node),
     }
 }
 

@@ -47,6 +47,11 @@ pub enum Condition {
     Ew7CreditStarvation,
     Ew8KvBottleneck,
     Ew9EarlyStopSkew,
+    // Data-parallel fleet family (cross-replica, router/LB vantage) — the
+    // serving-scale extension of the paper's within-replica runbooks.
+    Dp1RouterFlowSkew,
+    Dp2HotReplicaKv,
+    Dp3StragglerReplica,
 }
 
 pub const ALL_CONDITIONS: [Condition; 28] = [
@@ -78,6 +83,16 @@ pub const ALL_CONDITIONS: [Condition; 28] = [
     Condition::Ew7CreditStarvation,
     Condition::Ew8KvBottleneck,
     Condition::Ew9EarlyStopSkew,
+];
+
+/// The data-parallel (cross-replica) condition family. Sensed by
+/// `dpu::fleet::FleetSensor` from the router/LB vantage rather than by the
+/// 28 per-node window detectors, so it is deliberately NOT part of
+/// [`ALL_CONDITIONS`] (the paper's Tables 3a-c diagonal).
+pub const DP_CONDITIONS: [Condition; 3] = [
+    Condition::Dp1RouterFlowSkew,
+    Condition::Dp2HotReplicaKv,
+    Condition::Dp3StragglerReplica,
 ];
 
 impl Condition {
@@ -112,20 +127,33 @@ impl Condition {
             Ew7CreditStarvation => "EW7",
             Ew8KvBottleneck => "EW8",
             Ew9EarlyStopSkew => "EW9",
+            Dp1RouterFlowSkew => "DP1",
+            Dp2HotReplicaKv => "DP2",
+            Dp3StragglerReplica => "DP3",
         }
     }
 
-    /// Which paper table the condition belongs to.
+    /// Which runbook table the condition belongs to ("3a"-"3c" are the
+    /// paper's; "dp" is the data-parallel fleet extension).
     pub fn table(&self) -> &'static str {
-        match self.id().as_bytes()[0] {
-            b'N' => "3a",
-            b'P' => "3b",
-            _ => "3c",
+        let id = self.id();
+        if id.starts_with("NS") {
+            "3a"
+        } else if id.starts_with("PC") {
+            "3b"
+        } else if id.starts_with("EW") {
+            "3c"
+        } else {
+            "dp"
         }
     }
 
     pub fn from_id(id: &str) -> Option<Condition> {
-        ALL_CONDITIONS.iter().copied().find(|c| c.id() == id)
+        ALL_CONDITIONS
+            .iter()
+            .chain(DP_CONDITIONS.iter())
+            .copied()
+            .find(|c| c.id() == id)
     }
 }
 
@@ -289,10 +317,18 @@ mod tests {
         for c in ALL_CONDITIONS {
             assert_eq!(Condition::from_id(c.id()), Some(c));
         }
+        for c in DP_CONDITIONS {
+            assert_eq!(Condition::from_id(c.id()), Some(c));
+        }
         assert_eq!(Condition::from_id("XX"), None);
         assert_eq!(Condition::Ns1BurstBacklog.table(), "3a");
         assert_eq!(Condition::Pc5PcieSaturation.table(), "3b");
         assert_eq!(Condition::Ew8KvBottleneck.table(), "3c");
+        assert_eq!(Condition::Dp1RouterFlowSkew.table(), "dp");
+        // The DP family stays off the per-node detector diagonal.
+        for c in DP_CONDITIONS {
+            assert!(!ALL_CONDITIONS.contains(&c));
+        }
     }
 
     #[test]

@@ -1,0 +1,362 @@
+//! Fleet-level (cross-replica) skew sensing from the router/LB vantage —
+//! the data-parallel condition family DP1-DP3.
+//!
+//! A DPU sitting bump-in-the-wire in front of the load balancer sees
+//! per-replica flow volume, queue drain, and admission behavior even when
+//! intra-replica traffic (NVLink collectives) is invisible to it. This
+//! sensor encodes the three fleet signatures:
+//!
+//! * **DP1 — router flow skew**: one replica's share of routed arrivals far
+//!   exceeds the hash-fair share over a sliding horizon.
+//! * **DP2 — hot-replica KV exhaustion**: one replica's KV occupancy pins
+//!   near capacity with admission failures while peers sit far below it.
+//! * **DP3 — straggler replica**: one replica's backlog dominates the fleet
+//!   while its iteration rate lags the peers that are keeping up.
+//!
+//! The sensor is inert on single-replica worlds (skew across replicas is
+//! undefined there), which keeps the paper's 28-condition matrix byte-stable.
+
+use std::collections::VecDeque;
+
+use crate::dpu::detectors::{Condition, Detection};
+use crate::ids::NodeId;
+use crate::sim::SimTime;
+
+/// One window's per-replica observation. Counter fields are cumulative; the
+/// sensor differences them against its ring.
+#[derive(Debug, Clone)]
+pub struct FleetSample {
+    /// Cumulative requests routed per replica.
+    pub routed: Vec<u64>,
+    /// Instantaneous admission-queue depth per replica.
+    pub queue_depth: Vec<u64>,
+    /// Instantaneous KV occupancy per replica (0..1).
+    pub kv_occupancy: Vec<f64>,
+    /// Cumulative engine iterations per replica.
+    pub iterations: Vec<u64>,
+    /// Cumulative KV allocation failures per replica.
+    pub alloc_failures: Vec<u64>,
+}
+
+/// Windows of history the horizon skew metrics integrate over.
+const HORIZON: usize = 40;
+/// Minimum arrivals across the horizon before flow-share skew is judged.
+const MIN_ARRIVALS: u64 = 32;
+/// Consecutive confirmations required per condition.
+const CONFIRM_DP1: u32 = 3;
+const CONFIRM_DP2: u32 = 2;
+const CONFIRM_DP3: u32 = 2;
+/// DP2: hot-replica occupancy floor and hot-cold disparity floor.
+const KV_HOT_OCC: f64 = 0.85;
+const KV_DISPARITY: f64 = 0.3;
+/// DP3: backlog dominance + lagging iteration rate.
+const STRAGGLER_MIN_QUEUE: u64 = 10;
+const STRAGGLER_QUEUE_FACTOR: f64 = 5.0;
+const STRAGGLER_ITER_RATIO: f64 = 0.8;
+
+/// Cross-replica skew sensor (one per scenario, fed at window ticks).
+#[derive(Debug)]
+pub struct FleetSensor {
+    n_replicas: usize,
+    /// Entry node per replica — the node a fleet detection is attributed to.
+    entry_nodes: Vec<NodeId>,
+    history: VecDeque<FleetSample>,
+    /// Consecutive-hit counters for DP1/DP2/DP3.
+    streaks: [u32; 3],
+}
+
+impl FleetSensor {
+    pub fn new(n_replicas: usize, entry_nodes: Vec<NodeId>) -> Self {
+        assert_eq!(entry_nodes.len(), n_replicas);
+        FleetSensor {
+            n_replicas,
+            entry_nodes,
+            history: VecDeque::with_capacity(HORIZON + 1),
+            streaks: [0; 3],
+        }
+    }
+
+    /// DP1 fires when one replica's arrival share exceeds the hash-fair
+    /// share by an absolute margin. The margin (0.3) sits well above the
+    /// binomial noise of hashing the default 64-session population onto any
+    /// fleet size, while Zipf-concentrated floods land far past it.
+    fn share_threshold(n: usize) -> f64 {
+        (1.0 / n as f64 + 0.3).min(0.92)
+    }
+
+    /// Feed one window's sample; returns the fleet detections fired.
+    pub fn window_tick(&mut self, now: SimTime, sample: FleetSample) -> Vec<Detection> {
+        let n = self.n_replicas;
+        if n < 2 {
+            return Vec::new();
+        }
+        debug_assert_eq!(sample.routed.len(), n);
+        let prev = self.history.back().cloned();
+        self.history.push_back(sample);
+        if self.history.len() > HORIZON + 1 {
+            self.history.pop_front();
+        }
+        let cur = self.history.back().unwrap().clone();
+        let old = self.history.front().unwrap().clone();
+        let mut fired = Vec::new();
+
+        // --- DP1: flow-share skew over the horizon ---
+        let arrivals: Vec<u64> =
+            (0..n).map(|r| cur.routed[r].saturating_sub(old.routed[r])).collect();
+        let total: u64 = arrivals.iter().sum();
+        let mut dp1_hit = false;
+        if total >= MIN_ARRIVALS {
+            let hot = argmax_u64(&arrivals);
+            let share = arrivals[hot] as f64 / total as f64;
+            let threshold = Self::share_threshold(n);
+            if share >= threshold {
+                dp1_hit = true;
+                self.streaks[0] += 1;
+                if self.streaks[0] >= CONFIRM_DP1 {
+                    fired.push(Detection {
+                        condition: Condition::Dp1RouterFlowSkew,
+                        node: self.entry_nodes[hot],
+                        at: now,
+                        severity: share * n as f64,
+                        evidence: format!(
+                            "replica {hot} absorbs {:.0}% of {total} arrivals \
+                             (fair share {:.0}%, threshold {:.0}%)",
+                            share * 100.0,
+                            100.0 / n as f64,
+                            threshold * 100.0
+                        ),
+                    });
+                }
+            }
+        }
+        if !dp1_hit {
+            self.streaks[0] = 0;
+        }
+
+        // --- DP2: hot-replica KV exhaustion (window-level) ---
+        let mut dp2_hit = false;
+        if let Some(prev) = &prev {
+            let hot = argmax_f64(&cur.kv_occupancy);
+            let hot_occ = cur.kv_occupancy[hot];
+            let min_occ = cur
+                .kv_occupancy
+                .iter()
+                .enumerate()
+                .filter(|&(r, _)| r != hot)
+                .map(|(_, &o)| o)
+                .fold(f64::INFINITY, f64::min);
+            let failures = cur.alloc_failures[hot].saturating_sub(prev.alloc_failures[hot]);
+            if hot_occ >= KV_HOT_OCC && failures >= 1 && hot_occ - min_occ >= KV_DISPARITY {
+                dp2_hit = true;
+                self.streaks[1] += 1;
+                if self.streaks[1] >= CONFIRM_DP2 {
+                    fired.push(Detection {
+                        condition: Condition::Dp2HotReplicaKv,
+                        node: self.entry_nodes[hot],
+                        at: now,
+                        severity: hot_occ - min_occ,
+                        evidence: format!(
+                            "replica {hot} KV at {:.0}% with {failures} admission \
+                             failures this window; coldest peer at {:.0}%",
+                            hot_occ * 100.0,
+                            min_occ * 100.0
+                        ),
+                    });
+                }
+            }
+        }
+        if !dp2_hit {
+            self.streaks[1] = 0;
+        }
+
+        // --- DP3: straggler replica (backlog dominance + lagging rate) ---
+        let iters: Vec<u64> =
+            (0..n).map(|r| cur.iterations[r].saturating_sub(old.iterations[r])).collect();
+        let lag = argmax_u64(&cur.queue_depth);
+        let lag_q = cur.queue_depth[lag];
+        let others_q: u64 = cur.queue_depth.iter().enumerate().filter(|&(r, _)| r != lag).map(|(_, &q)| q).sum();
+        let others_mean_q = others_q as f64 / (n - 1) as f64;
+        let others_it: u64 = iters.iter().enumerate().filter(|&(r, _)| r != lag).map(|(_, &i)| i).sum();
+        let others_mean_it = others_it as f64 / (n - 1) as f64;
+        let dp3_hit = lag_q >= STRAGGLER_MIN_QUEUE
+            && lag_q as f64 >= STRAGGLER_QUEUE_FACTOR * (others_mean_q + 1.0)
+            && (iters[lag] as f64) < STRAGGLER_ITER_RATIO * (others_mean_it + 1.0);
+        if dp3_hit {
+            self.streaks[2] += 1;
+            if self.streaks[2] >= CONFIRM_DP3 {
+                fired.push(Detection {
+                    condition: Condition::Dp3StragglerReplica,
+                    node: self.entry_nodes[lag],
+                    at: now,
+                    severity: lag_q as f64 / (others_mean_q + 1.0),
+                    evidence: format!(
+                        "replica {lag} backlog {lag_q} vs peer mean {others_mean_q:.1}; \
+                         {} iterations over the horizon vs peer mean {others_mean_it:.0}",
+                        iters[lag]
+                    ),
+                });
+            }
+        } else {
+            self.streaks[2] = 0;
+        }
+
+        fired
+    }
+}
+
+fn argmax_u64(xs: &[u64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn argmax_f64(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nodes(n: usize) -> Vec<NodeId> {
+        (0..n).map(|i| NodeId(i as u32)).collect()
+    }
+
+    fn sample(routed: Vec<u64>, q: Vec<u64>, kv: Vec<f64>, it: Vec<u64>, af: Vec<u64>) -> FleetSample {
+        FleetSample {
+            routed,
+            queue_depth: q,
+            kv_occupancy: kv,
+            iterations: it,
+            alloc_failures: af,
+        }
+    }
+
+    #[test]
+    fn single_replica_is_inert() {
+        let mut s = FleetSensor::new(1, nodes(1));
+        for w in 0..200u64 {
+            let fired = s.window_tick(
+                SimTime(w * 1_000_000),
+                sample(vec![w * 50], vec![900], vec![1.0], vec![w], vec![w * 3]),
+            );
+            assert!(fired.is_empty());
+        }
+    }
+
+    #[test]
+    fn balanced_fleet_stays_quiet() {
+        let mut s = FleetSensor::new(3, nodes(3));
+        for w in 0..200u64 {
+            let fired = s.window_tick(
+                SimTime(w * 1_000_000),
+                sample(
+                    vec![w * 10, w * 11, w * 9],
+                    vec![1, 0, 2],
+                    vec![0.3, 0.35, 0.28],
+                    vec![w * 5, w * 5, w * 5],
+                    vec![0, 0, 0],
+                ),
+            );
+            assert!(fired.is_empty(), "window {w}: {fired:?}");
+        }
+    }
+
+    #[test]
+    fn dp1_fires_on_flow_concentration() {
+        let mut s = FleetSensor::new(3, nodes(3));
+        let mut fired_any = Vec::new();
+        for w in 0..60u64 {
+            fired_any.extend(s.window_tick(
+                SimTime(w * 1_000_000),
+                // 80% of arrivals land on replica 0.
+                sample(
+                    vec![w * 16, w * 2, w * 2],
+                    vec![5, 0, 0],
+                    vec![0.4, 0.1, 0.1],
+                    vec![w * 5, w * 2, w * 2],
+                    vec![0, 0, 0],
+                ),
+            ));
+        }
+        assert!(
+            fired_any.iter().any(|d| d.condition == Condition::Dp1RouterFlowSkew),
+            "{fired_any:?}"
+        );
+        assert!(fired_any.iter().all(|d| d.condition != Condition::Dp2HotReplicaKv));
+    }
+
+    #[test]
+    fn dp2_fires_on_hot_kv_with_failures() {
+        let mut s = FleetSensor::new(2, nodes(2));
+        let mut fired_any = Vec::new();
+        for w in 0..10u64 {
+            fired_any.extend(s.window_tick(
+                SimTime(w * 1_000_000),
+                sample(
+                    vec![w * 10, w * 10],
+                    vec![3, 1],
+                    vec![0.97, 0.2],
+                    vec![w * 5, w * 5],
+                    vec![w * 4, 0], // failures accumulate on replica 0
+                ),
+            ));
+        }
+        assert!(
+            fired_any.iter().any(|d| d.condition == Condition::Dp2HotReplicaKv),
+            "{fired_any:?}"
+        );
+        assert_eq!(
+            fired_any.iter().find(|d| d.condition == Condition::Dp2HotReplicaKv).unwrap().node,
+            NodeId(0)
+        );
+    }
+
+    #[test]
+    fn dp3_fires_on_backlogged_slow_replica() {
+        let mut s = FleetSensor::new(2, nodes(2));
+        let mut fired_any = Vec::new();
+        for w in 0..60u64 {
+            fired_any.extend(s.window_tick(
+                SimTime(w * 1_000_000),
+                // Replica 1: deep queue, quarter the iteration rate.
+                sample(
+                    vec![w * 10, w * 10],
+                    vec![0, 40 + w],
+                    vec![0.3, 0.5],
+                    vec![w * 8, w * 2],
+                    vec![0, 0],
+                ),
+            ));
+        }
+        let dp3: Vec<_> = fired_any
+            .iter()
+            .filter(|d| d.condition == Condition::Dp3StragglerReplica)
+            .collect();
+        assert!(!dp3.is_empty(), "{fired_any:?}");
+        assert_eq!(dp3[0].node, NodeId(1));
+    }
+
+    #[test]
+    fn confirmation_requires_persistence() {
+        let mut s = FleetSensor::new(2, nodes(2));
+        // A single anomalous window must not fire (DP2 needs 2 consecutive).
+        let quiet = sample(vec![0, 0], vec![0, 0], vec![0.2, 0.2], vec![0, 0], vec![0, 0]);
+        s.window_tick(SimTime(0), quiet.clone());
+        let hot = sample(vec![10, 10], vec![2, 0], vec![0.95, 0.2], vec![5, 5], vec![4, 0]);
+        let fired = s.window_tick(SimTime(1_000_000), hot);
+        assert!(fired.is_empty(), "{fired:?}");
+        let calm = s.window_tick(SimTime(2_000_000), quiet);
+        assert!(calm.is_empty());
+    }
+}

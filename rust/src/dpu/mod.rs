@@ -9,6 +9,7 @@
 pub mod agent;
 pub mod attribution;
 pub mod detectors;
+pub mod fleet;
 pub mod runbook;
 pub mod scorer;
 pub mod swdet;
@@ -16,7 +17,8 @@ pub mod visibility;
 
 pub use agent::{Agent, DpuPlane};
 pub use attribution::{attribute, Attribution, RootCause};
-pub use detectors::{Baseline, Condition, DetectConfig, Detection, ALL_CONDITIONS};
+pub use detectors::{Baseline, Condition, DetectConfig, Detection, ALL_CONDITIONS, DP_CONDITIONS};
+pub use fleet::{FleetSample, FleetSensor};
 pub use runbook::{all_entries, entry, RunbookEntry};
 pub use scorer::{NativeScorer, ScorerBackend};
 pub use swdet::{SwAlarm, SwSuite};

@@ -217,13 +217,39 @@ pub fn entry(c: Condition) -> RunbookEntry {
             "Sequence length divergence; scheduler not masking early exits",
             Directive::EnableInflightRemap,
         ),
+        // ---- data-parallel fleet extension (router/LB vantage) ----
+        Dp1RouterFlowSkew => (
+            "One replica's routed-arrival share far exceeds hash-fair share",
+            "Ingress routing (data-parallel)",
+            "Hot replica queues while peers idle; fleet capped by one replica",
+            "Session-affinity hashing + heavy-tailed session popularity",
+            Directive::RebalanceFlows,
+        ),
+        Dp2HotReplicaKv => (
+            "One replica's KV pinned at capacity with admission failures",
+            "Decode admission (data-parallel)",
+            "Hot replica thrashes admissions; its flows see inflated TTFT",
+            "KV fragmentation/leak or flow concentration on one replica",
+            Directive::KvAwareRouting,
+        ),
+        Dp3StragglerReplica => (
+            "A replica's backlog dominates while its iteration rate lags",
+            "All phases on one replica (data-parallel)",
+            "Affinity keeps feeding the slow replica; it dominates fleet p99",
+            "Degraded node(s) in one replica: thermal/power/faulty GPU",
+            Directive::DrainStragglerReplica,
+        ),
     };
     RunbookEntry { condition: c, signal, stages, effect, root_cause, directive }
 }
 
-/// All 28 rows, table order.
+/// All runbook rows, table order: the paper's 28 plus the DP fleet family.
 pub fn all_entries() -> Vec<RunbookEntry> {
-    crate::dpu::detectors::ALL_CONDITIONS.iter().map(|&c| entry(c)).collect()
+    crate::dpu::detectors::ALL_CONDITIONS
+        .iter()
+        .chain(crate::dpu::detectors::DP_CONDITIONS.iter())
+        .map(|&c| entry(c))
+        .collect()
 }
 
 #[cfg(test)]
@@ -233,9 +259,10 @@ mod tests {
 
     #[test]
     fn runbook_is_complete() {
+        use crate::dpu::detectors::DP_CONDITIONS;
         let entries = all_entries();
-        assert_eq!(entries.len(), 28);
-        for (c, e) in ALL_CONDITIONS.iter().zip(&entries) {
+        assert_eq!(entries.len(), 31);
+        for (c, e) in ALL_CONDITIONS.iter().chain(DP_CONDITIONS.iter()).zip(&entries) {
             assert_eq!(*c, e.condition);
             assert!(!e.signal.is_empty());
             assert!(!e.stages.is_empty());

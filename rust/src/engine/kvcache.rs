@@ -23,8 +23,15 @@ struct SeqAlloc {
 #[derive(Debug)]
 pub struct KvCache {
     total_pages: u32,
+    /// The pool size the cache was built with; `total_pages` can fall below
+    /// this while a DP2 restriction (leak/fragmentation injection) is live.
+    configured_pages: u32,
     page_tokens: u32,
     free_pages: u32,
+    /// Pages lost to an active leak (DP2): freed pages land here instead of
+    /// returning to the free pool.
+    leaked_pages: u32,
+    leaking: bool,
     seqs: HashMap<ReqId, SeqAlloc>,
     /// Cumulative counters for metrics / Table 2(b) kv-occupancy signal.
     pub alloc_ops: u64,
@@ -37,13 +44,58 @@ impl KvCache {
         assert!(total_pages > 0 && page_tokens > 0);
         KvCache {
             total_pages,
+            configured_pages: total_pages,
             page_tokens,
             free_pages: total_pages,
+            leaked_pages: 0,
+            leaking: false,
             seqs: HashMap::new(),
             alloc_ops: 0,
             free_ops: 0,
             alloc_failures: 0,
         }
+    }
+
+    /// Pages currently owned by live sequences.
+    fn seq_used(&self) -> u32 {
+        self.seqs.values().map(|s| s.pages).sum()
+    }
+
+    /// Capacity-restriction variant of the DP2 family: shrink the usable
+    /// pool to `frac` of its configured size (never below what live
+    /// sequences + leak already occupy, so accounting conserves). The stock
+    /// DP2 injector uses the harder [`KvCache::start_leak`]; this knob
+    /// models partial loss (e.g. a neighbor claiming HBM).
+    pub fn restrict_to(&mut self, frac: f64) {
+        let occupied = self.seq_used() + self.leaked_pages;
+        let target =
+            ((self.configured_pages as f64 * frac).ceil() as u32).max(1).max(occupied);
+        self.total_pages = target;
+        self.free_pages = target - occupied;
+    }
+
+    /// DP2 injector: start a hard allocator leak — every currently-free page
+    /// is lost immediately and pages released by finishing sequences never
+    /// return to the pool. Every subsequent admission/growth fails until
+    /// [`KvCache::restore_capacity`] rebuilds the pool.
+    pub fn start_leak(&mut self) {
+        self.leaking = true;
+        self.leaked_pages += self.free_pages;
+        self.free_pages = 0;
+    }
+
+    /// Mitigation: rebuild the pool at configured capacity (clears any leak
+    /// and restriction).
+    pub fn restore_capacity(&mut self) {
+        self.leaking = false;
+        self.leaked_pages = 0;
+        let used = self.seq_used();
+        self.total_pages = self.configured_pages.max(used);
+        self.free_pages = self.total_pages - used;
+    }
+
+    pub fn is_restricted(&self) -> bool {
+        self.leaking || self.total_pages < self.configured_pages
     }
 
     fn pages_for(&self, tokens: u32) -> u32 {
@@ -85,10 +137,15 @@ impl KvCache {
         AllocResult::Ok
     }
 
-    /// Release a finished (or evicted) sequence.
+    /// Release a finished (or evicted) sequence. Under an active leak the
+    /// pages are lost instead of returning to the free pool.
     pub fn release(&mut self, req: ReqId) {
         if let Some(s) = self.seqs.remove(&req) {
-            self.free_pages += s.pages;
+            if self.leaking {
+                self.leaked_pages += s.pages;
+            } else {
+                self.free_pages += s.pages;
+            }
             self.free_ops += 1;
         }
     }
@@ -121,10 +178,10 @@ impl KvCache {
         self.seqs.get(&req).map(|s| s.tokens)
     }
 
-    /// Invariant check used by property tests: page accounting conserves.
+    /// Invariant check used by property tests: page accounting conserves
+    /// (live + free + leaked covers the pool exactly).
     pub fn check_conservation(&self) -> bool {
-        let used: u32 = self.seqs.values().map(|s| s.pages).sum();
-        used + self.free_pages == self.total_pages
+        self.seq_used() + self.free_pages + self.leaked_pages == self.total_pages
     }
 }
 
@@ -207,6 +264,58 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn leak_starves_the_pool_until_restored() {
+        let mut kv = KvCache::new(16, 4);
+        assert_eq!(kv.admit(ReqId(1), 6), AllocResult::Ok); // 2 pages, 2 tokens slack
+        kv.start_leak();
+        assert!(kv.is_restricted());
+        assert_eq!(kv.free_pages(), 0);
+        assert!((kv.occupancy() - 1.0).abs() < 1e-12);
+        assert!(kv.check_conservation());
+        // New admissions and growth fail while the leak is live.
+        assert_eq!(kv.admit(ReqId(2), 1), AllocResult::OutOfPages);
+        for _ in 0..2 {
+            kv.append_token(ReqId(1)); // within page 2
+        }
+        assert_eq!(kv.append_token(ReqId(1)), AllocResult::OutOfPages);
+        // Freed pages leak instead of returning.
+        kv.release(ReqId(1));
+        assert_eq!(kv.free_pages(), 0);
+        assert_eq!(kv.active_seqs(), 0);
+        assert!(kv.check_conservation());
+        // Restore rebuilds the configured pool.
+        kv.restore_capacity();
+        assert!(!kv.is_restricted());
+        assert_eq!(kv.free_pages(), 16);
+        assert_eq!(kv.admit(ReqId(3), 4), AllocResult::Ok);
+        assert!(kv.check_conservation());
+    }
+
+    #[test]
+    fn restrict_and_restore_conserve() {
+        let mut kv = KvCache::new(100, 4);
+        kv.admit(ReqId(1), 16); // 4 pages used
+        kv.restrict_to(0.05); // 5 pages total
+        assert!(kv.is_restricted());
+        assert_eq!(kv.total_pages(), 5);
+        assert_eq!(kv.free_pages(), 1);
+        assert!(kv.check_conservation());
+        assert!((kv.occupancy() - 0.8).abs() < 1e-9);
+        // Restriction never truncates below live sequences.
+        let mut kv2 = KvCache::new(100, 4);
+        kv2.admit(ReqId(2), 64); // 16 pages
+        kv2.restrict_to(0.05);
+        assert_eq!(kv2.total_pages(), 16);
+        assert_eq!(kv2.free_pages(), 0);
+        assert!(kv2.check_conservation());
+        kv2.restore_capacity();
+        assert!(!kv2.is_restricted());
+        assert_eq!(kv2.total_pages(), 100);
+        assert_eq!(kv2.free_pages(), 84);
+        assert!(kv2.check_conservation());
     }
 
     #[test]

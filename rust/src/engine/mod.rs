@@ -107,6 +107,14 @@ impl Engine {
         self.replicas.len()
     }
 
+    /// Which replica's plan owns `node` (victim-replica resolution for the
+    /// DP injectors and the drain directive).
+    pub fn replica_of_node(&self, node: crate::ids::NodeId) -> Option<usize> {
+        self.replicas
+            .iter()
+            .position(|r| r.plan.stages.iter().any(|s| s.nodes.contains(&node)))
+    }
+
     /// Register an arriving request and route it. Returns the replica index.
     pub fn register(&mut self, req: InferenceRequest) -> usize {
         let r = self.router.route(req.flow);

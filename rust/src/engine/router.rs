@@ -1,7 +1,8 @@
-//! Request router: session-affinity flow hashing across replicas, with load
-//! accounting and the rebalance hooks the mitigation controller uses
-//! (NS2/NS3 directives: "balance load balancer hashing", "rebalance RPC
-//! streams").
+//! Request routing across data-parallel replicas — the serving-plane layer
+//! where fleet-scale imbalance is made or broken. Policies range from the
+//! skew-prone session-affinity hash to telemetry-weighted balancing; the
+//! mitigation controller uses the override/drain hooks (NS2/NS3 "rebalance
+//! flows" and the DP1-DP3 data-parallel directives).
 
 use std::collections::HashMap;
 
@@ -12,12 +13,59 @@ use crate::ids::FlowId;
 pub enum RoutePolicy {
     /// Pure hash(flow) -> replica: session affinity, skew-prone.
     FlowHash,
+    /// Strict rotation, ignoring affinity and load.
+    RoundRobin,
     /// Least-loaded replica (by outstanding requests), ignores affinity.
     LeastLoaded,
+    /// Power-of-two-choices: two hash candidates per flow, route to the
+    /// less-loaded of the pair (bounded imbalance at hash-level cost).
+    PowerOfTwo,
+    /// Weighted by per-replica telemetry (queue depth + KV occupancy) plus
+    /// outstanding load — what a DPU-fed load balancer can do.
+    WeightedTelemetry,
     /// Flow hash, but flows the mitigation controller remapped go to their
-    /// override replica.
+    /// override replica. (Overrides actually take precedence under every
+    /// policy; this variant exists as the explicit mitigated-hash mode.)
     HashWithOverrides,
 }
+
+/// The fleet-sweep policy set (excludes the mitigation-internal
+/// `HashWithOverrides` mode, which is hash + steering, not a new strategy).
+pub const ALL_POLICIES: [RoutePolicy; 5] = [
+    RoutePolicy::FlowHash,
+    RoutePolicy::RoundRobin,
+    RoutePolicy::LeastLoaded,
+    RoutePolicy::PowerOfTwo,
+    RoutePolicy::WeightedTelemetry,
+];
+
+impl RoutePolicy {
+    /// Stable identifier for CLI flags, tables, and JSON.
+    pub fn id(&self) -> &'static str {
+        match self {
+            RoutePolicy::FlowHash => "flow-hash",
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastLoaded => "least-loaded",
+            RoutePolicy::PowerOfTwo => "po2",
+            RoutePolicy::WeightedTelemetry => "weighted",
+            RoutePolicy::HashWithOverrides => "hash-overrides",
+        }
+    }
+
+    pub fn from_id(id: &str) -> Option<RoutePolicy> {
+        ALL_POLICIES
+            .into_iter()
+            .chain([RoutePolicy::HashWithOverrides])
+            .find(|p| p.id() == id)
+    }
+}
+
+/// Score weights for [`RoutePolicy::WeightedTelemetry`]: queue depth counts
+/// requests, KV occupancy is 0..1 (scaled up so a near-full cache outweighs
+/// a short queue), outstanding load breaks ties within a window.
+const QUEUE_WEIGHT: f64 = 1.0;
+const KV_WEIGHT: f64 = 64.0;
+const OUTSTANDING_WEIGHT: f64 = 0.5;
 
 #[derive(Debug)]
 pub struct Router {
@@ -25,6 +73,13 @@ pub struct Router {
     policy: RoutePolicy,
     overrides: HashMap<FlowId, usize>,
     outstanding: Vec<i64>,
+    routed_per_replica: Vec<u64>,
+    /// Replicas taken out of rotation (DP3 straggler drain).
+    drained: Vec<bool>,
+    /// Last window's per-replica telemetry (queue depth, KV occupancy).
+    telemetry_queue: Vec<f64>,
+    telemetry_kv: Vec<f64>,
+    rr_next: usize,
     pub routed: u64,
 }
 
@@ -36,39 +91,108 @@ impl Router {
             policy,
             overrides: HashMap::new(),
             outstanding: vec![0; n_replicas],
+            routed_per_replica: vec![0; n_replicas],
+            drained: vec![false; n_replicas],
+            telemetry_queue: vec![0.0; n_replicas],
+            telemetry_kv: vec![0.0; n_replicas],
+            rr_next: 0,
             routed: 0,
         }
     }
 
-    fn hash_flow(&self, flow: FlowId) -> usize {
+    fn hash_flow(&self, flow: FlowId, salt: u64) -> usize {
         // splitmix-style avalanche so consecutive flow ids spread.
-        let mut x = flow.0 as u64 + 0x9E3779B97F4A7C15;
+        let mut x = (flow.0 as u64 ^ salt).wrapping_add(0x9E3779B97F4A7C15);
         x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
         x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
         (x ^ (x >> 31)) as usize % self.n_replicas
     }
 
+    /// Argmin of `key` over non-drained replicas (lowest index wins ties);
+    /// falls back to replica 0 when everything is drained.
+    fn argmin_live(&self, key: impl Fn(usize) -> f64) -> usize {
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..self.n_replicas {
+            if self.drained[i] {
+                continue;
+            }
+            let k = key(i);
+            match best {
+                Some((_, bk)) if bk <= k => {}
+                _ => best = Some((i, k)),
+            }
+        }
+        best.map(|(i, _)| i).unwrap_or(0)
+    }
+
+    /// When a hash-selected replica is drained, deterministically fall back
+    /// to the least-loaded live replica.
+    fn redirect_if_drained(&self, r: usize) -> usize {
+        if self.drained[r] {
+            self.argmin_live(|i| self.outstanding[i] as f64)
+        } else {
+            r
+        }
+    }
+
+    /// The two hash candidates a flow has under power-of-two-choices
+    /// (exposed for the property tests).
+    pub fn po2_candidates(&self, flow: FlowId) -> (usize, usize) {
+        (self.hash_flow(flow, 0), self.hash_flow(flow, 0x51F7_A2C9))
+    }
+
+    fn pick(&mut self, flow: FlowId) -> usize {
+        // Mitigation overrides take precedence under every policy.
+        if let Some(&r) = self.overrides.get(&flow) {
+            return r;
+        }
+        match self.policy {
+            RoutePolicy::FlowHash | RoutePolicy::HashWithOverrides => {
+                self.redirect_if_drained(self.hash_flow(flow, 0))
+            }
+            RoutePolicy::RoundRobin => {
+                let mut r = self.rr_next % self.n_replicas;
+                for _ in 0..self.n_replicas {
+                    if !self.drained[r] {
+                        break;
+                    }
+                    r = (r + 1) % self.n_replicas;
+                }
+                self.rr_next = (r + 1) % self.n_replicas;
+                r
+            }
+            RoutePolicy::LeastLoaded => self.argmin_live(|i| self.outstanding[i] as f64),
+            RoutePolicy::PowerOfTwo => {
+                let (a, b) = self.po2_candidates(flow);
+                let r = match (self.drained[a], self.drained[b]) {
+                    (true, false) => b,
+                    (false, true) => a,
+                    _ => {
+                        if self.outstanding[b] < self.outstanding[a] {
+                            b
+                        } else if self.outstanding[a] < self.outstanding[b] {
+                            a
+                        } else {
+                            a.min(b)
+                        }
+                    }
+                };
+                self.redirect_if_drained(r)
+            }
+            RoutePolicy::WeightedTelemetry => self.argmin_live(|i| {
+                self.telemetry_queue[i] * QUEUE_WEIGHT
+                    + self.telemetry_kv[i] * KV_WEIGHT
+                    + self.outstanding[i] as f64 * OUTSTANDING_WEIGHT
+            }),
+        }
+    }
+
     /// Route a request's flow to a replica index.
     pub fn route(&mut self, flow: FlowId) -> usize {
         self.routed += 1;
-        let r = match self.policy {
-            RoutePolicy::FlowHash => self.hash_flow(flow),
-            RoutePolicy::LeastLoaded => {
-                let mut best = 0;
-                for i in 1..self.n_replicas {
-                    if self.outstanding[i] < self.outstanding[best] {
-                        best = i;
-                    }
-                }
-                best
-            }
-            RoutePolicy::HashWithOverrides => self
-                .overrides
-                .get(&flow)
-                .copied()
-                .unwrap_or_else(|| self.hash_flow(flow)),
-        };
+        let r = self.pick(flow);
         self.outstanding[r] += 1;
+        self.routed_per_replica[r] += 1;
         r
     }
 
@@ -88,6 +212,26 @@ impl Router {
         self.overrides.clear();
     }
 
+    /// Mitigation hook (DP3): take a replica out of / back into rotation.
+    pub fn set_drained(&mut self, replica: usize, drained: bool) {
+        assert!(replica < self.n_replicas);
+        self.drained[replica] = drained;
+    }
+
+    pub fn is_drained(&self, replica: usize) -> bool {
+        self.drained[replica]
+    }
+
+    pub fn clear_drained(&mut self) {
+        self.drained.iter_mut().for_each(|d| *d = false);
+    }
+
+    /// Telemetry feed (window-tick granularity) for the weighted policy.
+    pub fn update_telemetry(&mut self, replica: usize, queue_depth: f64, kv_occupancy: f64) {
+        self.telemetry_queue[replica] = queue_depth;
+        self.telemetry_kv[replica] = kv_occupancy;
+    }
+
     pub fn set_policy(&mut self, p: RoutePolicy) {
         self.policy = p;
     }
@@ -98,6 +242,11 @@ impl Router {
 
     pub fn outstanding(&self) -> &[i64] {
         &self.outstanding
+    }
+
+    /// Cumulative arrivals routed to each replica (DP1 skew signal).
+    pub fn routed_per_replica(&self) -> &[u64] {
+        &self.routed_per_replica
     }
 
     pub fn n_replicas(&self) -> usize {
@@ -142,6 +291,13 @@ mod tests {
     }
 
     #[test]
+    fn round_robin_rotates() {
+        let mut r = Router::new(3, RoutePolicy::RoundRobin);
+        let picks: Vec<usize> = (0..6u32).map(|f| r.route(FlowId(f))).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
     fn overrides_steer() {
         let mut r = Router::new(4, RoutePolicy::HashWithOverrides);
         let natural = r.route(FlowId(7));
@@ -149,6 +305,35 @@ mod tests {
         let target = (natural + 1) % 4;
         r.set_override(FlowId(7), target);
         assert_eq!(r.route(FlowId(7)), target);
+    }
+
+    #[test]
+    fn drained_replica_is_avoided() {
+        let mut r = Router::new(2, RoutePolicy::FlowHash);
+        let natural = r.route(FlowId(9));
+        r.complete(natural);
+        r.set_drained(natural, true);
+        assert_eq!(r.route(FlowId(9)), 1 - natural, "drained replica still routed");
+        r.clear_drained();
+        assert_eq!(r.route(FlowId(9)), natural);
+    }
+
+    #[test]
+    fn weighted_telemetry_avoids_hot_kv() {
+        let mut r = Router::new(3, RoutePolicy::WeightedTelemetry);
+        r.update_telemetry(0, 0.0, 0.99); // KV-exhausted
+        r.update_telemetry(1, 2.0, 0.10);
+        r.update_telemetry(2, 40.0, 0.10); // deep queue
+        assert_eq!(r.route(FlowId(1)), 1);
+    }
+
+    #[test]
+    fn policy_ids_roundtrip() {
+        for p in ALL_POLICIES {
+            assert_eq!(RoutePolicy::from_id(p.id()), Some(p));
+        }
+        assert_eq!(RoutePolicy::from_id("hash-overrides"), Some(RoutePolicy::HashWithOverrides));
+        assert_eq!(RoutePolicy::from_id("nope"), None);
     }
 
     #[test]
@@ -178,6 +363,116 @@ mod tests {
                 );
                 prop_assert!(r.outstanding().iter().all(|&x| x >= 0), "negative load");
             }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_no_request_loss_any_policy() {
+        // Every routed request lands on exactly one in-range replica, and the
+        // router's counters conserve: routed == sum(routed_per_replica) and
+        // sum(outstanding) == live requests — under every policy, with
+        // adversarial flow-id streams (hot single flow / tiny id space).
+        check("router-no-loss", PropConfig::default().cases(48), |g| {
+            let n = g.usize_in(1, 8);
+            let policy = *g.rng.choose(&ALL_POLICIES);
+            let mut r = Router::new(n, policy);
+            let hot = g.rng.below(8) as u32;
+            let mut live: Vec<usize> = Vec::new();
+            for _ in 0..300 {
+                if g.rng.chance(0.7) || live.is_empty() {
+                    // Adversarial stream: mostly one hot flow id.
+                    let f = if g.rng.chance(0.6) { hot } else { g.rng.below(4) as u32 };
+                    let got = r.route(FlowId(f));
+                    prop_assert!(got < n, "replica {got} out of range {n}");
+                    live.push(got);
+                } else {
+                    let idx = g.rng.index(live.len());
+                    r.complete(live.swap_remove(idx));
+                }
+                let per_replica: u64 = r.routed_per_replica().iter().sum();
+                prop_assert!(
+                    per_replica == r.routed,
+                    "routed {} != per-replica sum {per_replica} ({policy:?})",
+                    r.routed
+                );
+                let total: i64 = r.outstanding().iter().sum();
+                prop_assert!(
+                    total == live.len() as i64,
+                    "outstanding {total} != live {} ({policy:?})",
+                    live.len()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_override_precedence_any_policy() {
+        // A mitigation override must win under every policy, regardless of
+        // load state or interleaved traffic.
+        check("router-override-precedence", PropConfig::default().cases(48), |g| {
+            let n = g.usize_in(2, 8);
+            let policy = *g.rng.choose(&ALL_POLICIES);
+            let mut r = Router::new(n, policy);
+            let steered = FlowId(5);
+            let target = g.rng.index(n);
+            r.set_override(steered, target);
+            for _ in 0..200 {
+                if g.rng.chance(0.5) {
+                    let got = r.route(steered);
+                    prop_assert!(
+                        got == target,
+                        "override ignored: {got} != {target} ({policy:?})"
+                    );
+                    r.complete(got);
+                } else {
+                    let f = FlowId(g.rng.below(32) as u32 + 100);
+                    let got = r.route(f);
+                    prop_assert!(got < n, "out of range");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_balanced_policies_bound_outstanding_load() {
+        // Least-loaded keeps max-min <= 1 with no completions; po2 keeps the
+        // max within a small factor of the mean, and never routes to the
+        // heavier of a flow's two candidates.
+        check("router-load-bound", PropConfig::default().cases(48), |g| {
+            let n = g.usize_in(2, 6);
+            let routes = 300usize;
+            // Least-loaded: perfectly bounded spread.
+            let mut ll = Router::new(n, RoutePolicy::LeastLoaded);
+            for _ in 0..routes {
+                ll.route(FlowId(g.rng.below(64) as u32));
+            }
+            let max = *ll.outstanding().iter().max().unwrap();
+            let min = *ll.outstanding().iter().min().unwrap();
+            prop_assert!(max - min <= 1, "least-loaded spread {max}-{min}");
+
+            // Power-of-two: the pick is never the strictly-heavier candidate,
+            // and the max stays within a generous factor of the mean.
+            let mut p2 = Router::new(n, RoutePolicy::PowerOfTwo);
+            for _ in 0..routes {
+                let f = FlowId(g.rng.below(64) as u32);
+                let (a, b) = p2.po2_candidates(f);
+                let (la, lb) = (p2.outstanding()[a], p2.outstanding()[b]);
+                let got = p2.route(f);
+                if got == a {
+                    prop_assert!(la <= lb, "po2 chose heavier candidate a");
+                } else if got == b {
+                    prop_assert!(lb <= la, "po2 chose heavier candidate b");
+                }
+            }
+            let max = *p2.outstanding().iter().max().unwrap() as f64;
+            let mean = routes as f64 / n as f64;
+            prop_assert!(
+                max <= 2.0 * mean + 8.0,
+                "po2 max {max} vs mean {mean} (n={n})"
+            );
             Ok(())
         });
     }

@@ -13,6 +13,23 @@
 //! * **L2/L1 (build-time Python)** — a JAX transformer with Pallas attention
 //!   kernels plus a Pallas telemetry-scoring kernel, AOT-lowered to HLO text
 //!   and executed from Rust via PJRT (`runtime/`). Python never serves.
+//!
+//! ## Coordinator module map
+//!
+//! The serving plane (`coordinator/`) is decomposed into composable
+//! sub-modules, with `scenario` as a thin orchestrator:
+//!
+//! | module | role |
+//! |---|---|
+//! | `coordinator::scenario` | config, result bundle, the event-dispatch loop |
+//! | `coordinator::world` | world construction, event alphabet, calendar wiring |
+//! | `coordinator::ingress` | arrival → routing/admission, egress accounting, replica-aware injection targeting |
+//! | `coordinator::iterate` | per-replica iteration driving: batching, KV, prefill/decode, retirement |
+//! | `coordinator::observe` | DPU/SW windows, fleet (DP1-DP3) skew sensing, closed mitigation loop |
+//! | `coordinator::experiment` | three-phase condition experiments + per-condition shaping |
+//! | `coordinator::matrix` | the parallel 28-condition scorecard matrix |
+//! | `coordinator::fleet` | replicas × routing-policy sweep with the DP condition family (`dpulens fleet`) |
+//! | `coordinator::report` | machine-readable reports (run/runbook/matrix JSON) |
 
 pub mod ids;
 pub mod util;

@@ -11,7 +11,12 @@
 //!             NVLink-blindness controls, in parallel) and emit the
 //!             per-condition detection-quality scorecard as a table
 //!             and/or deterministic JSON for trajectory tracking
-//!   runbook                          print the encoded Tables 3(a)-(c)
+//!   fleet     [--replicas N] [--threads N] [--json] [--json-out PATH]
+//!             replicas × routing-policy sweep plus the DP1-DP3
+//!             data-parallel condition experiments (inject → detect →
+//!             mitigate), with per-replica skew columns; deterministic
+//!             JSON across runs and thread counts
+//!   runbook                          print the encoded runbook tables
 //!   signals                          print the Table 2(b) signal inventory
 //!   attribution <COND>               inject + show root-cause attribution
 //!
@@ -173,12 +178,47 @@ fn cmd_matrix(args: &[String]) {
     }
 }
 
+fn cmd_fleet(args: &[String]) {
+    use dpulens::coordinator::fleet::{run_fleet, FleetConfig};
+    let replicas = opt_parse::<usize>(args, "--replicas").unwrap_or(4).max(1);
+    let mut fc = FleetConfig::new(replicas);
+    if let Some(ms) = opt_parse::<u64>(args, "--duration-ms") {
+        fc.base.duration = SimDur::from_ms(ms);
+    }
+    if let Some(seed) = opt_parse::<u64>(args, "--seed") {
+        fc.base.seed = seed;
+    }
+    if let Some(t) = opt_parse::<usize>(args, "--threads") {
+        fc.threads = t;
+    }
+    let t0 = std::time::Instant::now();
+    let report = run_fleet(&fc);
+    let wall = t0.elapsed().as_secs_f64();
+    if flag(args, "--json") {
+        println!("{}", report.to_json().render());
+    } else {
+        print!("{}", report.render_tables());
+        println!("{}", report.summary_line());
+        println!(
+            "wallclock {wall:.1}s for {} cells on {} threads",
+            report.cells_run, report.threads_used
+        );
+    }
+    if let Some(path) = opt_val(args, "--json-out") {
+        let mut body = report.to_json().render();
+        body.push('\n');
+        std::fs::write(&path, body).expect("writing fleet JSON");
+        eprintln!("fleet JSON written to {path}");
+    }
+}
+
 fn cmd_runbook() {
-    for table in ["3a", "3b", "3c"] {
+    for table in ["3a", "3b", "3c", "dp"] {
         let title = match table {
             "3a" => "Table 3(a) North-South Runbook",
             "3b" => "Table 3(b) PCIe Observer Runbook",
-            _ => "Table 3(c) East-West Sensing Runbook",
+            "3c" => "Table 3(c) East-West Sensing Runbook",
+            _ => "DP Fleet Runbook (data-parallel extension)",
         };
         let mut t =
             Table::new(title).header(&["id", "signal (red flag)", "root cause", "directive"]);
@@ -236,15 +276,17 @@ fn main() {
         Some("inject") => cmd_inject(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("matrix") => cmd_matrix(&args[1..]),
+        Some("fleet") => cmd_fleet(&args[1..]),
         Some("runbook") => cmd_runbook(),
         Some("signals") => cmd_signals(),
         Some("attribution") => cmd_attribution(&args[1..]),
         _ => {
             eprintln!(
                 "dpulens — DPU-vantage observability for LLM inference clusters\n\
-                 usage: dpulens <serve|inject|sweep|matrix|runbook|signals|attribution> [flags]\n\
+                 usage: dpulens <serve|inject|sweep|matrix|fleet|runbook|signals|attribution> [flags]\n\
                  flags: --real --mitigate --duration-ms N --rate R --seed S\n\
-                 matrix: --replicates N --threads N --json --json-out PATH --no-negative-control"
+                 matrix: --replicates N --threads N --json --json-out PATH --no-negative-control\n\
+                 fleet:  --replicas N --threads N --json --json-out PATH"
             );
             std::process::exit(2);
         }

@@ -2,13 +2,23 @@
 //! (confusion matrix, detection latency), and the paper-style report
 //! renderers used by every bench.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::dpu::detectors::{Condition, Detection, ALL_CONDITIONS};
+use crate::ids::ReqId;
 use crate::sim::{SimDur, SimTime};
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 use crate::util::table::{fmt_ns, Table};
 use crate::workload::request::InferenceRequest;
+
+/// One replica's serving lane — the data-parallel skew view of a run.
+#[derive(Debug, Default, Clone)]
+pub struct ReplicaLane {
+    pub completed: u64,
+    pub rejected: u64,
+    pub tokens_out: u64,
+}
 
 /// Aggregated serving-quality metrics for one run.
 #[derive(Debug, Default)]
@@ -20,17 +30,40 @@ pub struct ServeMetrics {
     pub rejected: u64,
     pub tokens_out: u64,
     pub span: SimDur,
+    /// Per-replica lanes (empty for single-lane collectors).
+    pub per_replica: Vec<ReplicaLane>,
 }
 
 impl ServeMetrics {
     /// Collect from finished requests; `span` is the measured sim interval.
     pub fn collect<'a>(reqs: impl Iterator<Item = &'a InferenceRequest>, span: SimDur) -> Self {
-        let mut m = ServeMetrics { span, ..Default::default() };
+        Self::collect_fleet(reqs, &HashMap::new(), 0, span)
+    }
+
+    /// Collect with per-replica lanes: `placement` maps each request to the
+    /// replica that served it (the engine's routing record).
+    pub fn collect_fleet<'a>(
+        reqs: impl Iterator<Item = &'a InferenceRequest>,
+        placement: &HashMap<ReqId, usize>,
+        n_replicas: usize,
+        span: SimDur,
+    ) -> Self {
+        let mut m = ServeMetrics {
+            span,
+            per_replica: vec![ReplicaLane::default(); n_replicas],
+            ..Default::default()
+        };
         for r in reqs {
+            let lane = placement.get(&r.id).copied().filter(|&i| i < n_replicas);
             match r.state {
                 crate::workload::request::ReqState::Done => {
                     m.completed += 1;
-                    m.tokens_out += r.tokens_generated() as u64;
+                    let toks = r.tokens_generated() as u64;
+                    m.tokens_out += toks;
+                    if let Some(i) = lane {
+                        m.per_replica[i].completed += 1;
+                        m.per_replica[i].tokens_out += toks;
+                    }
                     if let Some(ttft) = r.ttft() {
                         m.ttft_ns.push(ttft.ns() as f64);
                     }
@@ -41,11 +74,28 @@ impl ServeMetrics {
                         m.e2e_ns.push((done - r.arrival).ns() as f64);
                     }
                 }
-                crate::workload::request::ReqState::Rejected => m.rejected += 1,
+                crate::workload::request::ReqState::Rejected => {
+                    m.rejected += 1;
+                    if let Some(i) = lane {
+                        m.per_replica[i].rejected += 1;
+                    }
+                }
                 _ => {}
             }
         }
         m
+    }
+
+    /// Max-over-mean token share across replica lanes: 1.0 is perfectly
+    /// balanced, `n_replicas` is total concentration. Degenerate cases
+    /// (no lanes, no tokens) report 1.0.
+    pub fn replica_token_skew(&self) -> f64 {
+        lane_skew(self.per_replica.iter().map(|l| l.tokens_out))
+    }
+
+    /// Max-over-mean completed-request share across replica lanes.
+    pub fn replica_completed_skew(&self) -> f64 {
+        lane_skew(self.per_replica.iter().map(|l| l.completed))
     }
 
     pub fn req_per_s(&self) -> f64 {
@@ -87,6 +137,49 @@ impl ServeMetrics {
     pub fn table_header() -> [&'static str; 9] {
         ["scenario", "done", "req/s", "tok/s", "ttft p50", "ttft p95", "ttft p99", "tpot p50", "tpot p99"]
     }
+
+    /// Machine-readable form (bench trajectory files, fleet reports).
+    pub fn to_json(&self, label: &str) -> Json {
+        let mut lanes = Json::arr();
+        for (i, l) in self.per_replica.iter().enumerate() {
+            lanes.push(
+                Json::obj()
+                    .set("replica", i)
+                    .set("completed", l.completed)
+                    .set("rejected", l.rejected)
+                    .set("tokens_out", l.tokens_out),
+            );
+        }
+        Json::obj()
+            .set("label", label)
+            .set("completed", self.completed)
+            .set("rejected", self.rejected)
+            .set("tokens_out", self.tokens_out)
+            .set("req_per_s", self.req_per_s())
+            .set("tok_per_s", self.tok_per_s())
+            .set("ttft_p50_ns", self.ttft_ns.p50())
+            .set("ttft_p95_ns", self.ttft_ns.p95())
+            .set("ttft_p99_ns", self.ttft_ns.p99())
+            .set("tpot_p50_ns", self.tpot_ns.p50())
+            .set("tpot_p99_ns", self.tpot_ns.p99())
+            .set("replica_token_skew", self.replica_token_skew())
+            .set("per_replica", lanes)
+    }
+}
+
+/// Max-over-mean of a lane counter (shared by the skew columns).
+fn lane_skew(lanes: impl Iterator<Item = u64>) -> f64 {
+    let v: Vec<u64> = lanes.collect();
+    if v.is_empty() {
+        return 1.0;
+    }
+    let total: u64 = v.iter().sum();
+    if total == 0 {
+        return 1.0;
+    }
+    let mean = total as f64 / v.len() as f64;
+    let max = *v.iter().max().unwrap() as f64;
+    max / mean
 }
 
 /// Injection × detection confusion accounting for E5.
@@ -369,6 +462,35 @@ mod tests {
         assert_eq!(m.ttft_ns.count(), 2);
         assert!(!m.brief().is_empty());
         assert_eq!(m.row_cells("x").len(), ServeMetrics::table_header().len());
+    }
+
+    #[test]
+    fn fleet_collect_fills_lanes_and_skew() {
+        let reqs = vec![
+            done_req(1, 0, 1000, 5000, 6),
+            done_req(2, 100, 2000, 6000, 6),
+            done_req(3, 200, 2500, 6500, 6),
+        ];
+        let mut placement = HashMap::new();
+        placement.insert(ReqId(1), 0usize);
+        placement.insert(ReqId(2), 0usize);
+        placement.insert(ReqId(3), 1usize);
+        let m = ServeMetrics::collect_fleet(reqs.iter(), &placement, 2, SimDur(10_000));
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.per_replica.len(), 2);
+        assert_eq!(m.per_replica[0].completed, 2);
+        assert_eq!(m.per_replica[1].completed, 1);
+        assert_eq!(m.per_replica[0].tokens_out, 12);
+        // max/mean: 12 / 9 tokens.
+        assert!((m.replica_token_skew() - 12.0 / 9.0).abs() < 1e-12);
+        assert!((m.replica_completed_skew() - 2.0 / 1.5).abs() < 1e-12);
+        let j = m.to_json("fleet").render();
+        assert!(j.contains("\"replica_token_skew\""));
+        assert!(j.contains("\"per_replica\""));
+        // Single-lane collector: skew degenerates to 1.0 and lanes are empty.
+        let single = ServeMetrics::collect(reqs.iter(), SimDur(10_000));
+        assert!(single.per_replica.is_empty());
+        assert_eq!(single.replica_token_skew(), 1.0);
     }
 
     #[test]

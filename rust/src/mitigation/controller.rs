@@ -64,7 +64,8 @@ impl Controller {
                 | Directive::FixIngressPath
                 | Directive::FixEgressPath
                 | Directive::QosPartitionNic
-                | Directive::SmoothAdmission => Some(det.node),
+                | Directive::SmoothAdmission
+                | Directive::DrainStragglerReplica => Some(det.node),
                 _ => None,
             };
             if !self.applied.insert((directive, node_scope)) {
@@ -226,6 +227,22 @@ impl Controller {
                     cluster.fabric_knobs.kv_link_budget_factor.max(1.0);
                 "KV compressed/resharded to fit link budget".into()
             }
+            KvAwareRouting => {
+                for r in &mut engine.replicas {
+                    r.kv.restore_capacity();
+                }
+                engine.router.set_policy(crate::engine::RoutePolicy::WeightedTelemetry);
+                "KV pools rebuilt; router weighted by queue/KV telemetry".into()
+            }
+            DrainStragglerReplica => {
+                match node.and_then(|n| engine.replica_of_node(n)) {
+                    Some(ri) => {
+                        engine.router.set_drained(ri, true);
+                        format!("replica {ri} drained from rotation (straggler)")
+                    }
+                    None => "straggler replica unresolved; no drain applied".into(),
+                }
+            }
         }
     }
 
@@ -291,6 +308,38 @@ mod tests {
         let f0 = stage0.shard_frac[0];
         assert!(stage0.shard_frac[1..].iter().all(|&f| f > f0), "{:?}", stage0.shard_frac);
         engine.replicas[0].plan.check().unwrap();
+    }
+
+    #[test]
+    fn dp_directives_drain_and_reroute() {
+        // Two replicas (single-node stages) so DP directives have a fleet.
+        let mut cfg = EngineConfig::default();
+        cfg.nodes_per_stage = 1;
+        let spec = ClusterSpec::default();
+        let plans = build_replicas(&spec, 1);
+        let mut engine = Engine::new(cfg, plans);
+        let mut cluster = Cluster::new(ClusterSpec::default(), 1);
+        engine.replicas[1].kv.restrict_to(0.05);
+        let mut ctl = Controller::new(true);
+        // DP3 on replica 1's entry node drains that replica.
+        let entry = engine.replicas[1].plan.entry_nodes()[0];
+        ctl.react(
+            SimTime(0),
+            &[det(Condition::Dp3StragglerReplica, entry.0)],
+            &mut cluster,
+            &mut engine,
+        );
+        assert!(engine.router.is_drained(1));
+        assert!(!engine.router.is_drained(0));
+        // DP2 restores KV capacity and switches to telemetry routing.
+        ctl.react(
+            SimTime(1),
+            &[det(Condition::Dp2HotReplicaKv, entry.0)],
+            &mut cluster,
+            &mut engine,
+        );
+        assert!(!engine.replicas[1].kv.is_restricted());
+        assert_eq!(engine.router.policy(), crate::engine::RoutePolicy::WeightedTelemetry);
     }
 
     #[test]

@@ -49,6 +49,11 @@ pub enum Directive {
     TuneCreditWindow,
     /// EW8: compress KV, shard differently, apply caching policies.
     CompressKvTransfers,
+    /// DP2: rebuild the hot replica's KV pool and weight routing by
+    /// queue-depth/KV-occupancy telemetry.
+    KvAwareRouting,
+    /// DP3: take the straggling replica out of rotation until it recovers.
+    DrainStragglerReplica,
 }
 
 impl Directive {
@@ -78,6 +83,8 @@ impl Directive {
             LosslessFabricConfig => "Verify lossless config, tune buffer thresholds, check optics",
             TuneCreditWindow => "Increase QP window, tune flow control params",
             CompressKvTransfers => "Compress KV, shard differently, apply caching policies",
+            KvAwareRouting => "Rebuild KV pools; weight LB by queue/KV telemetry from the DPU",
+            DrainStragglerReplica => "Drain the straggler replica; respread its sessions",
         }
     }
 }

@@ -30,7 +30,8 @@ pub fn site(c: Condition) -> InjectSite {
     match c {
         Ns1BurstBacklog | Ns2IngressStarvation | Ns3FlowSkew => InjectSite::Workload,
         Ns8EarlyCompletion | Pc10DecodeEarlyStop => InjectSite::Workload,
-        Ew2PpBubble | Ew3CrossNodeSkew => InjectSite::Engine,
+        Dp1RouterFlowSkew => InjectSite::Workload,
+        Ew2PpBubble | Ew3CrossNodeSkew | Dp2HotReplicaKv => InjectSite::Engine,
         Ew4Congestion | Ew5HolBlocking | Ew6Retransmissions | Ew7CreditStarvation
         | Ew8KvBottleneck => InjectSite::Fabric,
         _ => InjectSite::Node,
@@ -217,6 +218,31 @@ pub fn inject(
             wl.prompt_len = LengthDist::Uniform { lo: 48, hi: 64 };
             "sharded KV exceeds link budget (12%) with long prompts".into()
         }
+        // ---- data-parallel fleet family (DP1-DP3) ----
+        Dp1RouterFlowSkew => {
+            wl.n_sessions = 12;
+            wl.session_skew = 2.5;
+            if let Arrival::Poisson { rate } = &wl.arrival {
+                let surged = rate * 2.5;
+                wl.arrival = Arrival::Poisson { rate: surged };
+            }
+            engine.router.set_policy(crate::engine::RoutePolicy::FlowHash);
+            "flash crowd: Zipf(2.5) over 12 sessions at 2.5x rate under affinity hashing".into()
+        }
+        Dp2HotReplicaKv => {
+            let ri = engine.replica_of_node(target).unwrap_or(0);
+            engine.replicas[ri].kv.start_leak();
+            format!("replica {ri} KV allocator leaks: freed pages never return, admissions thrash")
+        }
+        Dp3StragglerReplica => {
+            let ri = engine.replica_of_node(target).unwrap_or(0);
+            for n in engine.replicas[ri].plan.all_nodes() {
+                for f in &mut cluster.nodes[n.idx()].knobs.gpu_speed_factor {
+                    *f = 0.05;
+                }
+            }
+            format!("replica {ri} degraded: every GPU at 5% speed (straggler replica)")
+        }
     }
 }
 
@@ -225,10 +251,13 @@ pub fn heal_all(cluster: &mut Cluster, engine: &mut Engine, wl: &mut WorkloadSpe
     cluster.heal();
     for r in &mut engine.replicas {
         r.plan.rebalance();
+        r.kv.restore_capacity();
         let pol = r.batcher.policy_mut();
         pol.inflight_remap = true;
         pol.continuous = true;
     }
+    engine.router.clear_overrides();
+    engine.router.clear_drained();
     *wl = WorkloadSpec::default();
 }
 
@@ -270,6 +299,53 @@ mod tests {
         assert_eq!(site(Condition::Pc5PcieSaturation), InjectSite::Node);
         assert_eq!(site(Condition::Ew6Retransmissions), InjectSite::Fabric);
         assert_eq!(site(Condition::Ew2PpBubble), InjectSite::Engine);
+        assert_eq!(site(Condition::Dp1RouterFlowSkew), InjectSite::Workload);
+        assert_eq!(site(Condition::Dp2HotReplicaKv), InjectSite::Engine);
+        assert_eq!(site(Condition::Dp3StragglerReplica), InjectSite::Node);
+    }
+
+    #[test]
+    fn dp_family_injects_on_the_victim_replica_and_heals() {
+        use crate::dpu::detectors::DP_CONDITIONS;
+        // Single-node stages => the default 4-node cluster yields 2 replicas.
+        for c in DP_CONDITIONS {
+            let mut ecfg = EngineConfig::default();
+            ecfg.nodes_per_stage = 1;
+            let spec = ClusterSpec::default();
+            let plans = build_replicas(&spec, 1);
+            let mut engine = Engine::new(ecfg, plans);
+            let mut cluster = Cluster::new(spec, 1);
+            let mut wl = WorkloadSpec::default();
+            assert_eq!(engine.n_replicas(), 2);
+            let target = engine.replicas[1].plan.entry_nodes()[0];
+            let desc = inject(c, target, &mut cluster, &mut engine, &mut wl);
+            assert!(!desc.is_empty(), "{c:?}");
+            match c {
+                Condition::Dp2HotReplicaKv => {
+                    assert!(engine.replicas[1].kv.is_restricted());
+                    assert!(!engine.replicas[0].kv.is_restricted());
+                }
+                Condition::Dp3StragglerReplica => {
+                    // Every GPU of replica 1's nodes slowed; replica 0 intact.
+                    for n in engine.replicas[1].plan.all_nodes() {
+                        assert!(cluster.nodes[n.idx()]
+                            .knobs
+                            .gpu_speed_factor
+                            .iter()
+                            .all(|&f| f < 1.0));
+                    }
+                    for n in engine.replicas[0].plan.all_nodes() {
+                        assert!(cluster.nodes[n.idx()].knobs.is_healthy());
+                    }
+                }
+                _ => {
+                    assert!(wl.session_skew > 0.0, "DP1 must skew sessions");
+                }
+            }
+            heal_all(&mut cluster, &mut engine, &mut wl);
+            assert!(cluster.all_healthy(), "{c:?} not healed");
+            assert!(engine.replicas.iter().all(|r| !r.kv.is_restricted()));
+        }
     }
 
     #[test]

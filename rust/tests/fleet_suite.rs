@@ -1,0 +1,117 @@
+//! E2E coverage for `coordinator::fleet` — the fleet-scale serving plane
+//! (data-parallel replicas × routing policies) and the DP condition family:
+//!
+//! * on a ≥2-replica cluster, all three DP conditions (router flow skew,
+//!   hot-replica KV exhaustion, straggler replica) are detected from the
+//!   router/LB vantage and mitigated by the closed loop, with
+//!   post-mitigation throughput recovering above the injected level;
+//! * the fleet JSON (`dpulens fleet --json`) is byte-identical across
+//!   repeated runs and across worker-thread counts.
+
+use dpulens::coordinator::fleet::{fleet_base_cfg, run_fleet, FleetConfig};
+use dpulens::dpu::detectors::{Condition, DP_CONDITIONS};
+use dpulens::engine::RoutePolicy;
+use dpulens::sim::SimDur;
+
+#[test]
+fn dp_family_detected_and_mitigated_on_multi_replica_fleet() {
+    let fc = FleetConfig::new(3);
+    let report = run_fleet(&fc);
+
+    assert_eq!(report.replicas, 3);
+    assert_eq!(report.dp_rows.len(), DP_CONDITIONS.len());
+    for row in &report.dp_rows {
+        assert!(
+            row.detected,
+            "{} not detected on the 3-replica fleet",
+            row.condition.id()
+        );
+        assert!(
+            row.latency_ns.is_some(),
+            "{} detected but no time-to-detect sample",
+            row.condition.id()
+        );
+        assert!(
+            row.actions >= 1,
+            "{} fired but the controller took no action",
+            row.condition.id()
+        );
+        assert!(row.injected_tok_per_s > 0.0, "{} served nothing", row.condition.id());
+        // The acceptance bar: post-mitigation throughput recovers.
+        assert!(
+            row.mitigated_tok_per_s > row.injected_tok_per_s * 1.03,
+            "{}: mitigated {:.0} tok/s did not recover over injected {:.0} tok/s",
+            row.condition.id(),
+            row.mitigated_tok_per_s,
+            row.injected_tok_per_s
+        );
+    }
+
+    // The cross-replica skew study: DP1 concentrates served tokens on the
+    // hot replica; mitigation spreads them back out.
+    let dp1 = report
+        .dp_rows
+        .iter()
+        .find(|r| r.condition == Condition::Dp1RouterFlowSkew)
+        .unwrap();
+    assert!(
+        dp1.injected_token_skew > 1.15,
+        "DP1 injection produced no visible replica skew: {:.2}",
+        dp1.injected_token_skew
+    );
+    assert!(
+        dp1.mitigated_token_skew < dp1.injected_token_skew,
+        "mitigation did not reduce DP1 skew: {:.2} -> {:.2}",
+        dp1.injected_token_skew,
+        dp1.mitigated_token_skew
+    );
+
+    // Healthy policy rows: every policy serves the uniform workload with
+    // bounded cross-replica skew, and every replica participates.
+    assert_eq!(report.policy_rows.len(), 5);
+    for row in &report.policy_rows {
+        assert!(row.completed > 100, "{} barely served", row.policy.id());
+        assert!(
+            row.token_skew < 2.5,
+            "{} skew {:.2} out of bounds on a uniform workload",
+            row.policy.id(),
+            row.token_skew
+        );
+        assert!(
+            row.replica_tokens.iter().all(|&t| t > 0),
+            "{} starved a replica: {:?}",
+            row.policy.id(),
+            row.replica_tokens
+        );
+    }
+    // The balanced policies keep arrival shares tighter than affinity hash.
+    let share_of = |p: RoutePolicy| {
+        report.policy_rows.iter().find(|r| r.policy == p).unwrap().max_flow_share
+    };
+    assert!(share_of(RoutePolicy::RoundRobin) <= share_of(RoutePolicy::FlowHash) + 0.02);
+    assert!(share_of(RoutePolicy::LeastLoaded) <= share_of(RoutePolicy::FlowHash) + 0.02);
+}
+
+#[test]
+fn fleet_json_is_deterministic_across_threads() {
+    // Trimmed scenario so this stays cheap: detection success is irrelevant
+    // here, only bit-stable aggregation and serialization.
+    let mut base = fleet_base_cfg(2);
+    base.duration = SimDur::from_ms(1500);
+    base.warmup_windows = 10;
+    base.calib_windows = 50;
+
+    let mk = |threads: usize| FleetConfig {
+        base: base.clone(),
+        replicas: 2,
+        policies: vec![RoutePolicy::FlowHash, RoutePolicy::PowerOfTwo],
+        threads,
+    };
+
+    let a = run_fleet(&mk(2)).to_json().render();
+    let b = run_fleet(&mk(3)).to_json().render();
+    assert_eq!(a, b, "fleet JSON differs across runs/thread counts");
+    assert!(a.contains("\"schema\":\"dpulens.fleet.v1\""));
+    assert!(a.contains("\"replicas\":2"));
+    assert!(a.contains("\"po2\""));
+}
