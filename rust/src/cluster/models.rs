@@ -12,8 +12,9 @@ use crate::sim::{SimDur, SimTime};
 use crate::telemetry::event::{Phase, TelemetryKind};
 use crate::util::rng::Rng;
 
-/// Deferred telemetry emissions: (timestamp, node, kind), drained into the
-/// sim calendar by the scenario loop so observers see time-ordered events.
+/// Deferred telemetry emissions: (timestamp, node, kind). The scenario loop
+/// drains `items` into the telemetry bus's per-node buffers (capacity is
+/// reused), and the bus batch-delivers them time-ordered at window ticks.
 #[derive(Debug, Default)]
 pub struct Outbox {
     pub items: Vec<(SimTime, NodeId, TelemetryKind)>,
@@ -27,10 +28,6 @@ impl Outbox {
     #[inline]
     pub fn emit(&mut self, t: SimTime, node: NodeId, kind: TelemetryKind) {
         self.items.push((t, node, kind));
-    }
-
-    pub fn drain(&mut self) -> Vec<(SimTime, NodeId, TelemetryKind)> {
-        std::mem::take(&mut self.items)
     }
 
     pub fn len(&self) -> usize {

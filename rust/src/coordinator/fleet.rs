@@ -159,6 +159,8 @@ struct CellOutcome {
     detected: bool,
     latency_ns: Option<u64>,
     actions: u64,
+    /// Telemetry events the cell's pipeline delivered (perf accounting).
+    events: u64,
 }
 
 fn run_cell(fc: &FleetConfig, cell: FleetCell) -> CellOutcome {
@@ -189,10 +191,11 @@ fn run_cell(fc: &FleetConfig, cell: FleetCell) -> CellOutcome {
         token_skew: res.metrics.replica_token_skew(),
         max_flow_share,
         replica_tokens: res.metrics.per_replica.iter().map(|l| l.tokens_out).collect(),
-        kv_peak: res.replica_kv_peak.clone(),
+        kv_peak: res.replica_kv_peak,
         detected,
         latency_ns,
         actions: res.actions.len() as u64,
+        events: res.telemetry_published,
     }
 }
 
@@ -244,19 +247,40 @@ pub struct FleetReport {
     pub dp_rows: Vec<DpRow>,
     pub cells_run: usize,
     pub threads_used: usize,
+    /// Wall-clock of the parallel cell sweep, ms. Perf metadata: reported
+    /// in the human output and `dpulens perf`, excluded from `to_json` so
+    /// the fleet JSON stays byte-identical across thread counts.
+    pub elapsed_ms: f64,
+    /// Telemetry events delivered across all cells' pipelines.
+    pub events_total: u64,
+}
+
+impl FleetReport {
+    /// Pipeline ingest throughput of the whole sweep (events/sec).
+    pub fn events_per_sec(&self) -> f64 {
+        crate::util::perf::events_per_sec(self.events_total, self.elapsed_ms)
+    }
 }
 
 /// Execute the fleet sweep in parallel and aggregate in cell order.
+/// Wall-clock and events/sec land in the report's perf fields (excluded
+/// from the deterministic JSON; see `FleetReport::to_json`).
 pub fn run_fleet(fc: &FleetConfig) -> FleetReport {
     let cell_list = cells(fc);
     let threads_used = resolve_threads(fc.threads, cell_list.len());
-    let outcomes = parallel_map(&cell_list, fc.threads, |&cell| run_cell(fc, cell));
+    let timer = crate::util::perf::PhaseTimer::start();
+    let mut outcomes = parallel_map(&cell_list, fc.threads, |&cell| run_cell(fc, cell));
+    let elapsed_ms = timer.total_ms();
+    let events_total: u64 = outcomes.iter().map(|o| o.events).sum();
 
     let n_pol = fc.policies.len();
+    // The DP triples only need scalar outcomes; the policy rows take the
+    // per-replica vectors by move (no re-clone of worker results).
+    let dp_outcomes = outcomes.split_off(n_pol);
     let policy_rows: Vec<PolicyRow> = fc
         .policies
         .iter()
-        .zip(&outcomes[..n_pol])
+        .zip(outcomes)
         .map(|(&policy, o)| PolicyRow {
             policy,
             completed: o.completed,
@@ -267,8 +291,8 @@ pub fn run_fleet(fc: &FleetConfig) -> FleetReport {
             ttft_p99_ns: o.ttft_p99_ns,
             token_skew: o.token_skew,
             max_flow_share: o.max_flow_share,
-            replica_tokens: o.replica_tokens.clone(),
-            kv_peak: o.kv_peak.clone(),
+            replica_tokens: o.replica_tokens,
+            kv_peak: o.kv_peak,
         })
         .collect();
 
@@ -276,9 +300,9 @@ pub fn run_fleet(fc: &FleetConfig) -> FleetReport {
     for (k, c) in DP_CONDITIONS.into_iter().enumerate() {
         // Each condition's triple runs the SAME shaped config, so the
         // healthy cell is a like-for-like recovery baseline.
-        let healthy = &outcomes[n_pol + 3 * k];
-        let inj = &outcomes[n_pol + 3 * k + 1];
-        let mit = &outcomes[n_pol + 3 * k + 2];
+        let healthy = &dp_outcomes[3 * k];
+        let inj = &dp_outcomes[3 * k + 1];
+        let mit = &dp_outcomes[3 * k + 2];
         let recovery = if healthy.tok_per_s - inj.tok_per_s < 1e-9 {
             Some(1.0)
         } else {
@@ -308,6 +332,8 @@ pub fn run_fleet(fc: &FleetConfig) -> FleetReport {
         dp_rows,
         cells_run: cell_list.len(),
         threads_used,
+        elapsed_ms,
+        events_total,
     }
 }
 

@@ -8,7 +8,7 @@ use crate::engine::Engine;
 use crate::ids::{FlowId, NodeId, ReqId};
 use crate::pathology;
 use crate::sim::SimTime;
-use crate::telemetry::event::{TelemetryEvent, TelemetryKind};
+use crate::telemetry::event::TelemetryKind;
 use crate::telemetry::sw::SwSignal;
 use crate::workload::generator::WorkloadGen;
 use crate::workload::request::{InferenceRequest, ReqState};
@@ -95,9 +95,9 @@ impl Scenario {
             self.engine.router.complete(replica);
             let node = self.exit_node(replica);
             let flow = egress_flow(req);
+            // Single dispatch: the bus delivers this to the node's DPU agent
+            // with the rest of the window's batch (no side-channel ingest).
             self.bus.emit(now, node, TelemetryKind::FlowEnd { flow, req });
-            let ev = TelemetryEvent { t: now, node, kind: TelemetryKind::FlowEnd { flow, req } };
-            self.dpu.ingest(node, std::slice::from_ref(&ev));
             self.sw_window.record(SwSignal::TransportLatency, 1000.0);
         }
     }

@@ -105,6 +105,8 @@ struct CellOutcome {
     detected: bool,
     latency_ns: Option<u64>,
     windows: u64,
+    /// Telemetry events the cell's pipeline delivered (perf accounting).
+    events: u64,
     invisible_dropped: u64,
     sw_noticed: bool,
     sw_identified: bool,
@@ -194,6 +196,7 @@ fn run_cell(cell: &Cell) -> CellOutcome {
         detected,
         latency_ns,
         windows: res.windows,
+        events: res.telemetry_published,
         invisible_dropped: res.dpu_invisible_dropped,
         sw_noticed,
         sw_identified,
@@ -202,11 +205,15 @@ fn run_cell(cell: &Cell) -> CellOutcome {
 }
 
 /// Execute the full matrix in parallel and aggregate the scorecards.
+/// Wall-clock and events/sec land in the report's perf fields (excluded
+/// from the deterministic JSON; see `MatrixReport::to_json`).
 pub fn run_matrix(mc: &MatrixConfig) -> MatrixReport {
     let cells = cells(mc);
     let threads_used = resolve_threads(mc.threads, cells.len());
+    let timer = crate::util::perf::PhaseTimer::start();
     let outcomes = parallel_map(&cells, mc.threads, run_cell);
-    aggregate(mc, outcomes, cells.len(), threads_used)
+    let elapsed_ms = timer.total_ms();
+    aggregate(mc, outcomes, cells.len(), threads_used, elapsed_ms)
 }
 
 fn aggregate(
@@ -214,6 +221,7 @@ fn aggregate(
     outcomes: Vec<CellOutcome>,
     cells_run: usize,
     threads_used: usize,
+    elapsed_ms: f64,
 ) -> MatrixReport {
     let mut confusion = ConfusionMatrix::new();
     let mut cards: BTreeMap<Condition, Scorecard> =
@@ -294,6 +302,7 @@ fn aggregate(
     }
     let scorecards: Vec<Scorecard> =
         ALL_CONDITIONS.iter().map(|c| cards.remove(c).unwrap()).collect();
+    let events_total: u64 = outcomes.iter().map(|o| o.events).sum();
 
     MatrixReport {
         scorecards,
@@ -307,6 +316,8 @@ fn aggregate(
         negative_control: if mc.negative_control { Some(neg) } else { None },
         cells_run,
         threads_used,
+        elapsed_ms,
+        events_total,
     }
 }
 

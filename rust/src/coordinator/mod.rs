@@ -14,7 +14,8 @@
 //!
 //! On top sit the runners: `experiment` (three-phase condition experiments),
 //! `matrix` (the parallel 28-condition scorecard), `fleet` (the replicas ×
-//! routing-policy sweep with the DP condition family), and `report`
+//! routing-policy sweep with the DP condition family), `perf` (the pipeline
+//! benchmark behind `dpulens perf` / `BENCH_pipeline.json`), and `report`
 //! (machine-readable outputs).
 
 pub mod experiment;
@@ -23,6 +24,7 @@ pub mod ingress;
 pub mod iterate;
 pub mod matrix;
 pub mod observe;
+pub mod perf;
 pub mod report;
 pub mod scenario;
 pub mod world;
@@ -31,4 +33,5 @@ pub use experiment::{condition_experiment, ConditionReport};
 pub use fleet::{run_fleet, FleetConfig, FleetReport};
 pub use ingress::target_node_for;
 pub use matrix::{run_matrix, run_sweep, MatrixConfig, MatrixReport};
+pub use perf::{run_perf, PerfConfig, PerfReport};
 pub use scenario::{RunResult, Scenario, ScenarioCfg};

@@ -5,21 +5,30 @@
 use crate::dpu::attribution::attribute;
 use crate::dpu::fleet::FleetSample;
 use crate::sim::SimTime;
-use crate::telemetry::event::TelemetryEvent;
 
 use super::scenario::Scenario;
 
 impl Scenario {
-    /// Deliver one time-ordered telemetry event to the bus and the owning
-    /// node's DPU agent.
-    pub(crate) fn on_telemetry(&mut self, ev: TelemetryEvent) {
-        self.bus.publish(ev.clone());
-        self.dpu.ingest(ev.node, std::slice::from_ref(&ev));
+    /// Single-dispatch fan-out: hand every buffered event with `t < now` to
+    /// its node's DPU agent as one time-ordered slice. Events are borrowed
+    /// from the bus's reusable buffers — zero clones on this path (the
+    /// optional bus recorder is the only clone site). An event stamped
+    /// exactly at the tick belongs to the next window (see
+    /// `TelemetryBus::deliver_due` for the tie-break fine print).
+    pub(crate) fn deliver_telemetry(&mut self, now: SimTime) {
+        let dpu = &mut self.dpu;
+        self.bus.deliver_due(now, |node, events| dpu.ingest(node, events));
     }
 
-    /// Window cadence: close DPU/SW windows, run detectors (or calibrate),
-    /// feed the fleet sensor, react, and apply pending injections.
+    /// Window cadence: deliver the window's telemetry batches, close DPU/SW
+    /// windows, run detectors (or calibrate), feed the fleet sensor, react,
+    /// and apply pending injections.
     pub(crate) fn on_window_tick(&mut self, now: SimTime) {
+        // Deliver before this tick's own hardware-model emissions are
+        // flushed: window-tick emissions (and anything stamped >= now)
+        // accumulate into the *next* window, exactly as the calendar
+        // delivered them after this tick.
+        self.deliver_telemetry(now);
         self.windows_seen += 1;
         self.cluster.on_window_tick(now, self.cfg.window.ns(), &mut self.outbox);
         self.flush_outbox();

@@ -1,0 +1,419 @@
+//! The `dpulens perf` pipeline benchmark — the measured baseline for the
+//! telemetry hot path (see EXPERIMENTS.md §Perf).
+//!
+//! Four phases, each timed with [`crate::util::perf::PhaseTimer`]:
+//!
+//! 1. **ingest** — raw batched throughput of the bus → agent → window path:
+//!    a synthetic, deterministic event mix streamed through one node's DPU
+//!    agent in slices, reported as events/sec;
+//! 2. **snapshot** — `WindowAccum::snapshot` latency under a realistic flow
+//!    population (p50/max µs over many windows);
+//! 3. **matrix** — `run_matrix` end-to-end wall-clock and pipeline events/sec;
+//! 4. **fleet** — `run_fleet` end-to-end wall-clock and pipeline events/sec.
+//!
+//! The JSON form (`BENCH_pipeline.json`, schema `dpulens.perf.v1`) has a
+//! deterministic *shape* — fixed keys, deterministic event counts — while
+//! the timing values vary by machine; CI uploads it per PR so the bench
+//! trajectory accumulates.
+
+use crate::coordinator::fleet::{run_fleet, FleetConfig};
+use crate::coordinator::matrix::{run_matrix, MatrixConfig};
+use crate::dpu::agent::DpuPlane;
+use crate::dpu::detectors::DetectConfig;
+use crate::ids::{FlowId, GpuId, NodeId, QpId, ReqId, StageId};
+use crate::sim::SimTime;
+use crate::telemetry::event::{Phase, TelemetryEvent, TelemetryKind};
+use crate::telemetry::window::WindowAccum;
+use crate::util::json::Json;
+use crate::util::perf::{events_per_sec, PhaseTimer};
+use crate::util::stats::Summary;
+
+/// Perf-harness configuration.
+#[derive(Debug, Clone)]
+pub struct PerfConfig {
+    /// Synthetic events streamed through the ingest microbench.
+    pub ingest_events: usize,
+    /// Slice size per batched `DpuPlane::ingest` call.
+    pub ingest_batch: usize,
+    /// Windows measured in the snapshot-latency microbench.
+    pub snapshot_windows: usize,
+    /// Events accumulated per measured window.
+    pub snapshot_events_per_window: usize,
+    /// Seed replicates for the matrix end-to-end phase.
+    pub matrix_replicates: usize,
+    /// Replica count for the fleet end-to-end phase.
+    pub fleet_replicas: usize,
+    /// Worker threads for the end-to-end phases; 0 = one per core.
+    pub threads: usize,
+    /// Skip the (multi-second) matrix/fleet end-to-end phases.
+    pub micro_only: bool,
+    /// Label recorded in the JSON (`--quick` vs full).
+    pub quick: bool,
+}
+
+impl PerfConfig {
+    /// CI-friendly sizing: small microbenches, one matrix replicate, a
+    /// 2-replica fleet.
+    pub fn quick() -> Self {
+        PerfConfig {
+            ingest_events: 200_000,
+            ingest_batch: 1024,
+            snapshot_windows: 64,
+            snapshot_events_per_window: 2_000,
+            matrix_replicates: 1,
+            fleet_replicas: 2,
+            threads: 0,
+            micro_only: false,
+            quick: true,
+        }
+    }
+
+    /// The full baseline: the acceptance configuration (`matrix
+    /// --replicates 3`, 4-replica fleet) plus larger microbenches.
+    pub fn full() -> Self {
+        PerfConfig {
+            ingest_events: 2_000_000,
+            ingest_batch: 1024,
+            snapshot_windows: 200,
+            snapshot_events_per_window: 4_000,
+            matrix_replicates: 3,
+            fleet_replicas: 4,
+            threads: 0,
+            micro_only: false,
+            quick: false,
+        }
+    }
+}
+
+/// Everything one perf run measures.
+#[derive(Debug)]
+pub struct PerfReport {
+    pub quick: bool,
+    pub ingest_events: u64,
+    pub ingest_ms: f64,
+    pub snapshot_windows: u64,
+    pub snapshot_p50_us: f64,
+    pub snapshot_max_us: f64,
+    pub matrix_cells: u64,
+    pub matrix_replicates: u64,
+    pub matrix_threads: u64,
+    pub matrix_ms: f64,
+    pub matrix_events: u64,
+    pub matrix_detected: u64,
+    pub fleet_cells: u64,
+    pub fleet_replicas: u64,
+    pub fleet_threads: u64,
+    pub fleet_ms: f64,
+    pub fleet_events: u64,
+}
+
+impl PerfReport {
+    pub fn ingest_events_per_sec(&self) -> f64 {
+        events_per_sec(self.ingest_events, self.ingest_ms)
+    }
+
+    pub fn matrix_events_per_sec(&self) -> f64 {
+        events_per_sec(self.matrix_events, self.matrix_ms)
+    }
+
+    pub fn fleet_events_per_sec(&self) -> f64 {
+        events_per_sec(self.fleet_events, self.fleet_ms)
+    }
+
+    /// `dpulens.perf.v1`: fixed key shape; timing values machine-dependent.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("schema", "dpulens.perf.v1")
+            .set("quick", self.quick)
+            .set(
+                "ingest",
+                Json::obj()
+                    .set("events", self.ingest_events)
+                    .set("elapsed_ms", self.ingest_ms)
+                    .set("events_per_sec", self.ingest_events_per_sec()),
+            )
+            .set(
+                "snapshot",
+                Json::obj()
+                    .set("windows", self.snapshot_windows)
+                    .set("p50_us", self.snapshot_p50_us)
+                    .set("max_us", self.snapshot_max_us),
+            )
+            .set(
+                "matrix",
+                Json::obj()
+                    .set("cells", self.matrix_cells)
+                    .set("replicates", self.matrix_replicates)
+                    .set("threads", self.matrix_threads)
+                    .set("elapsed_ms", self.matrix_ms)
+                    .set("events", self.matrix_events)
+                    .set("events_per_sec", self.matrix_events_per_sec())
+                    .set("detected", self.matrix_detected),
+            )
+            .set(
+                "fleet",
+                Json::obj()
+                    .set("cells", self.fleet_cells)
+                    .set("replicas", self.fleet_replicas)
+                    .set("threads", self.fleet_threads)
+                    .set("elapsed_ms", self.fleet_ms)
+                    .set("events", self.fleet_events)
+                    .set("events_per_sec", self.fleet_events_per_sec()),
+            )
+    }
+
+    /// Human-readable summary lines.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "ingest:   {} events in {:.1} ms ({:.0} events/s)\n",
+            self.ingest_events,
+            self.ingest_ms,
+            self.ingest_events_per_sec()
+        ));
+        s.push_str(&format!(
+            "snapshot: {} windows, p50 {:.1} us, max {:.1} us\n",
+            self.snapshot_windows, self.snapshot_p50_us, self.snapshot_max_us
+        ));
+        if self.matrix_cells > 0 {
+            s.push_str(&format!(
+                "matrix:   {} cells ({} replicates) in {:.1} ms on {} threads \
+                 ({} events, {:.0} events/s), {} conditions detected\n",
+                self.matrix_cells,
+                self.matrix_replicates,
+                self.matrix_ms,
+                self.matrix_threads,
+                self.matrix_events,
+                self.matrix_events_per_sec(),
+                self.matrix_detected
+            ));
+        }
+        if self.fleet_cells > 0 {
+            s.push_str(&format!(
+                "fleet:    {} cells ({} replicas) in {:.1} ms on {} threads \
+                 ({} events, {:.0} events/s)\n",
+                self.fleet_cells,
+                self.fleet_replicas,
+                self.fleet_ms,
+                self.fleet_threads,
+                self.fleet_events,
+                self.fleet_events_per_sec()
+            ));
+        }
+        s
+    }
+}
+
+/// Deterministic synthetic event mix: every DPU-relevant vantage plus the
+/// invisible classes (so the visibility filter is part of the measured
+/// path). Node 0; timestamps advance 1 µs per event.
+fn synth_event(i: usize) -> TelemetryEvent {
+    let t = SimTime(1_000 * (i as u64 + 1));
+    let kind = match i % 8 {
+        0 => TelemetryKind::DmaH2d {
+            gpu: GpuId((i % 4) as u32),
+            bytes: 4096,
+            latency_ns: 500 + (i % 7) as u64 * 100,
+            phase: if i % 2 == 0 { Phase::Prefill } else { Phase::Decode },
+        },
+        1 => TelemetryKind::Doorbell { gpu: GpuId((i % 4) as u32) },
+        2 => TelemetryKind::NicRx {
+            flow: FlowId((i % 64) as u32),
+            bytes: 1500,
+            queue_depth: (i % 16) as u32,
+        },
+        3 => TelemetryKind::NicTx {
+            flow: FlowId((i % 64) as u32),
+            bytes: 128,
+            queue_depth: (i % 16) as u32,
+            wait_ns: (i % 1000) as u64,
+        },
+        4 => TelemetryKind::RdmaOp {
+            qp: QpId((i % 16) as u32),
+            bytes: 65_536,
+            credit_wait_ns: (i % 100) as u64,
+            latency_ns: 2_000,
+        },
+        5 => TelemetryKind::StageHandoff {
+            from_stage: StageId(0),
+            to_stage: StageId(1),
+            bytes: 32_768,
+            outbound: false,
+            phase: Phase::Decode,
+        },
+        6 => TelemetryKind::PcieUtil {
+            link: crate::ids::LinkId(0),
+            busy: (i % 100) as f64 / 100.0,
+        },
+        _ => TelemetryKind::NvlinkBurst { from: GpuId(0), to: GpuId(1), bytes: 1 << 20 },
+    };
+    TelemetryEvent { t, node: NodeId(0), kind }
+}
+
+/// Phase 1: batched ingest throughput through a one-node DPU plane. Only
+/// the ingest/window-tick calls are timed — synthetic event generation
+/// happens outside the measured intervals so the headline events/sec is the
+/// pipeline's, not `synth_event`'s.
+fn bench_ingest(cfg: &PerfConfig) -> f64 {
+    let mut plane = DpuPlane::new(1, 4, DetectConfig::default());
+    let mut batch: Vec<TelemetryEvent> = Vec::with_capacity(cfg.ingest_batch);
+    let mut produced = 0usize;
+    let mut elapsed_ms = 0.0;
+    while produced < cfg.ingest_events {
+        batch.clear();
+        let n = cfg.ingest_batch.min(cfg.ingest_events - produced);
+        for k in 0..n {
+            batch.push(synth_event(produced + k));
+        }
+        produced += n;
+        // Tick every ~64 batches so accumulator state stays window-sized.
+        let tick = produced % (64 * cfg.ingest_batch) < cfg.ingest_batch;
+        let timer = PhaseTimer::start();
+        plane.ingest(NodeId(0), &batch);
+        if tick {
+            let _ = plane.window_tick(SimTime(1_000 * produced as u64 + 1));
+        }
+        elapsed_ms += timer.total_ms();
+    }
+    let timer = PhaseTimer::start();
+    let _ = plane.window_tick(SimTime(1_000 * produced as u64 + 1));
+    elapsed_ms + timer.total_ms()
+}
+
+/// Phase 2: snapshot latency under a realistic flow population.
+fn bench_snapshot(cfg: &PerfConfig) -> Summary {
+    let mut accum = WindowAccum::with_hints(NodeId(0), 4, 8);
+    let mut lat_us = Summary::new();
+    let mut i = 0usize;
+    for w in 0..cfg.snapshot_windows {
+        for _ in 0..cfg.snapshot_events_per_window {
+            accum.ingest(&synth_event(i));
+            i += 1;
+        }
+        // A few flows end each window, exercising the median features.
+        for f in 0..4u32 {
+            accum.ingest(&TelemetryEvent {
+                t: SimTime(1_000 * i as u64),
+                node: NodeId(0),
+                kind: TelemetryKind::FlowEnd {
+                    flow: FlowId((w as u32 * 4 + f) % 64),
+                    req: ReqId(w as u32 * 4 + f),
+                },
+            });
+        }
+        let timer = PhaseTimer::start();
+        let snap = accum.snapshot(SimTime(1_000 * i as u64 + 1));
+        lat_us.push(timer.total_ms() * 1e3);
+        std::hint::black_box(&snap);
+    }
+    lat_us
+}
+
+/// Run the full perf harness.
+pub fn run_perf(cfg: &PerfConfig) -> PerfReport {
+    let ingest_ms = bench_ingest(cfg);
+    let snap = bench_snapshot(cfg);
+
+    let (matrix_cells, matrix_threads, matrix_ms, matrix_events, matrix_detected) =
+        if cfg.micro_only {
+            (0, 0, 0.0, 0, 0)
+        } else {
+            let mc = MatrixConfig {
+                replicates: cfg.matrix_replicates,
+                threads: cfg.threads,
+                ..MatrixConfig::default()
+            };
+            let rep = run_matrix(&mc);
+            (
+                rep.cells_run as u64,
+                rep.threads_used as u64,
+                rep.elapsed_ms,
+                rep.events_total,
+                rep.detected_count() as u64,
+            )
+        };
+
+    let (fleet_cells, fleet_threads, fleet_ms, fleet_events) = if cfg.micro_only {
+        (0, 0, 0.0, 0)
+    } else {
+        let mut fc = FleetConfig::new(cfg.fleet_replicas.max(1));
+        fc.threads = cfg.threads;
+        let rep = run_fleet(&fc);
+        (rep.cells_run as u64, rep.threads_used as u64, rep.elapsed_ms, rep.events_total)
+    };
+
+    PerfReport {
+        quick: cfg.quick,
+        ingest_events: cfg.ingest_events as u64,
+        ingest_ms,
+        snapshot_windows: snap.count() as u64,
+        snapshot_p50_us: snap.p50(),
+        snapshot_max_us: snap.max(),
+        matrix_cells,
+        matrix_replicates: cfg.matrix_replicates as u64,
+        matrix_threads,
+        matrix_ms,
+        matrix_events,
+        matrix_detected,
+        fleet_cells,
+        fleet_replicas: cfg.fleet_replicas as u64,
+        fleet_threads,
+        fleet_ms,
+        fleet_events,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn micro_cfg() -> PerfConfig {
+        PerfConfig {
+            ingest_events: 4_000,
+            ingest_batch: 256,
+            snapshot_windows: 8,
+            snapshot_events_per_window: 200,
+            matrix_replicates: 1,
+            fleet_replicas: 2,
+            threads: 1,
+            micro_only: true,
+            quick: true,
+        }
+    }
+
+    #[test]
+    fn micro_perf_report_has_the_v1_shape() {
+        let rep = run_perf(&micro_cfg());
+        assert_eq!(rep.ingest_events, 4_000);
+        assert_eq!(rep.snapshot_windows, 8);
+        assert!(rep.ingest_ms >= 0.0);
+        assert!(rep.snapshot_max_us >= rep.snapshot_p50_us);
+        let json = rep.to_json().render();
+        for key in [
+            "\"schema\":\"dpulens.perf.v1\"",
+            "\"ingest\"",
+            "\"events_per_sec\"",
+            "\"snapshot\"",
+            "\"p50_us\"",
+            "\"matrix\"",
+            "\"fleet\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(!json.contains("NaN") && !json.contains("inf"));
+    }
+
+    #[test]
+    fn synth_mix_covers_visible_and_invisible_classes() {
+        let mut visible = 0;
+        let mut invisible = 0;
+        for i in 0..64 {
+            if synth_event(i).kind.dpu_visible() {
+                visible += 1;
+            } else {
+                invisible += 1;
+            }
+        }
+        assert!(visible > 0 && invisible > 0);
+    }
+}

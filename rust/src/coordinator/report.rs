@@ -154,9 +154,20 @@ pub struct MatrixReport {
     pub negative_control: Option<NegativeControlReport>,
     pub cells_run: usize,
     pub threads_used: usize,
+    /// Wall-clock of the parallel cell sweep, ms. Perf metadata: reported
+    /// in the human output and `dpulens perf`, excluded from `to_json` so
+    /// the scorecard JSON stays byte-identical across thread counts.
+    pub elapsed_ms: f64,
+    /// Telemetry events delivered across all cells' pipelines.
+    pub events_total: u64,
 }
 
 impl MatrixReport {
+    /// Pipeline ingest throughput of the whole sweep (events/sec).
+    pub fn events_per_sec(&self) -> f64 {
+        crate::util::perf::events_per_sec(self.events_total, self.elapsed_ms)
+    }
+
     /// Conditions identified in at least one replicate.
     pub fn detected_count(&self) -> usize {
         self.scorecards.iter().filter(|s| s.identified()).count()
@@ -242,8 +253,10 @@ impl MatrixReport {
     }
 
     /// Deterministic JSON scorecard: same config + seed ⇒ byte-identical
-    /// output, independent of worker-thread count. Wallclock and thread
-    /// metadata are deliberately excluded.
+    /// output, independent of worker-thread count. Wallclock, events/sec,
+    /// and thread metadata are deliberately excluded — they live in
+    /// `elapsed_ms`/`events_total` and surface via `dpulens perf`'s
+    /// `BENCH_pipeline.json` instead.
     pub fn to_json(&self) -> Json {
         let mut conds = Json::arr();
         for s in &self.scorecards {

@@ -161,7 +161,6 @@ impl Scenario {
                 }
                 Ev::IterDone(replica) => self.finish_iteration(replica, now),
                 Ev::EgressDone { req, last } => self.on_egress_done(req, last, now),
-                Ev::Telem(ev) => self.on_telemetry(*ev),
                 Ev::WindowTick => {
                     self.on_window_tick(now);
                     if now < end {
@@ -171,6 +170,11 @@ impl Scenario {
             }
         }
 
+        // Final partial window: events already buffered with t < end would
+        // have been popped from the old calendar before `Ev::End`; deliver
+        // them so every observed event is counted (published == ingested +
+        // invisible_dropped) and nothing pending leaks into the totals.
+        self.deliver_telemetry(end);
         self.finish()
     }
 }

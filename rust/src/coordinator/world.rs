@@ -24,6 +24,10 @@ use crate::workload::request::InferenceRequest;
 use super::scenario::{RunResult, Scenario, ScenarioCfg};
 
 /// The scenario event alphabet (calendar entries).
+///
+/// Telemetry deliberately has no calendar entry: events flow through the
+/// batched [`TelemetryBus`] (outbox → per-node buffer → window-tick slice
+/// delivery), not one-heap-op-per-event through the calendar.
 #[derive(Debug, Clone)]
 pub(crate) enum Ev {
     Arrival(Box<InferenceRequest>),
@@ -31,7 +35,6 @@ pub(crate) enum Ev {
     Iterate(usize),
     IterDone(usize),
     EgressDone { req: ReqId, last: bool },
-    Telem(Box<TelemetryEvent>),
     WindowTick,
     End,
 }
@@ -47,15 +50,13 @@ pub(crate) struct PendingIter {
 impl Scenario {
     /// Build with surrogate (sim-only) compute backends.
     pub fn new(cfg: ScenarioCfg) -> Self {
+        cfg.cluster.validate().expect("bad cluster spec");
         let vocab = cfg.engine.profile.vocab;
-        let n_rep = {
-            let plans = build_replicas(&cfg.cluster, cfg.engine.nodes_per_stage);
-            plans.len()
-        };
-        let backends: Vec<Box<dyn ComputeBackend>> = (0..n_rep)
+        let plans = build_replicas(&cfg.cluster, cfg.engine.nodes_per_stage);
+        let backends: Vec<Box<dyn ComputeBackend>> = (0..plans.len())
             .map(|_| Box::new(SurrogateBackend::new(vocab)) as Box<dyn ComputeBackend>)
             .collect();
-        Self::with_backends(cfg, backends)
+        Self::assemble(cfg, plans, backends)
     }
 
     /// Build with caller-provided compute backends (e.g. the real PJRT
@@ -63,6 +64,16 @@ impl Scenario {
     pub fn with_backends(cfg: ScenarioCfg, backends: Vec<Box<dyn ComputeBackend>>) -> Self {
         cfg.cluster.validate().expect("bad cluster spec");
         let plans = build_replicas(&cfg.cluster, cfg.engine.nodes_per_stage);
+        Self::assemble(cfg, plans, backends)
+    }
+
+    /// Shared assembly: replica plans are built exactly once per scenario
+    /// (the matrix/fleet sweeps construct scenarios in bulk).
+    fn assemble(
+        cfg: ScenarioCfg,
+        plans: Vec<crate::engine::ParallelPlan>,
+        backends: Vec<Box<dyn ComputeBackend>>,
+    ) -> Self {
         assert_eq!(plans.len(), backends.len(), "one backend per replica");
         let engine = Engine::new(cfg.engine.clone(), plans);
         let cluster = Cluster::new(cfg.cluster.clone(), cfg.seed);
@@ -106,11 +117,13 @@ impl Scenario {
         }
     }
 
-    /// Drain hardware-model emissions into the calendar (time-ordered
-    /// delivery to observers).
+    /// Drain hardware-model emissions into the telemetry bus's per-node
+    /// buffers (zero-copy: each event is moved, not boxed into the calendar
+    /// or cloned). Time-ordered batch delivery happens at window ticks via
+    /// [`Scenario::deliver_telemetry`].
     pub(crate) fn flush_outbox(&mut self) {
-        for (t, node, kind) in self.outbox.drain() {
-            self.cal.schedule_at(t, Ev::Telem(Box::new(TelemetryEvent { t, node, kind })));
+        for (t, node, kind) in self.outbox.items.drain(..) {
+            self.bus.enqueue(TelemetryEvent { t, node, kind });
         }
     }
 
@@ -173,7 +186,7 @@ impl Scenario {
             replica_routed: self.engine.router.routed_per_replica().to_vec(),
             replica_kv_peak: self.kv_peak,
             real_compute: self.real_compute,
-            class_counts: self.bus.class_counts().clone(),
+            class_counts: self.bus.class_counts_map(),
         }
     }
 }

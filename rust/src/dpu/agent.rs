@@ -33,10 +33,10 @@ pub struct Agent {
 }
 
 impl Agent {
-    pub fn new(node: NodeId, n_gpus: usize) -> Self {
+    pub fn new(node: NodeId, n_gpus: usize, n_nodes_hint: usize) -> Self {
         Agent {
             node,
-            accum: WindowAccum::new(node, n_gpus),
+            accum: WindowAccum::with_hints(node, n_gpus, n_nodes_hint),
             baseline: Baseline::new(),
             history: Vec::with_capacity(HISTORY_DEPTH),
             invisible_dropped: 0,
@@ -99,7 +99,9 @@ impl std::fmt::Debug for DpuPlane {
 impl DpuPlane {
     pub fn new(n_nodes: usize, gpus_per_node: usize, cfg: DetectConfig) -> Self {
         DpuPlane {
-            agents: (0..n_nodes).map(|n| Agent::new(NodeId(n as u32), gpus_per_node)).collect(),
+            agents: (0..n_nodes)
+                .map(|n| Agent::new(NodeId(n as u32), gpus_per_node, n_nodes))
+                .collect(),
             detectors: all_detectors(),
             cfg,
             calibrating: true,

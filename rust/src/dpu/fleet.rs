@@ -91,13 +91,16 @@ impl FleetSensor {
             return Vec::new();
         }
         debug_assert_eq!(sample.routed.len(), n);
-        let prev = self.history.back().cloned();
         self.history.push_back(sample);
         if self.history.len() > HORIZON + 1 {
             self.history.pop_front();
         }
-        let cur = self.history.back().unwrap().clone();
-        let old = self.history.front().unwrap().clone();
+        // Borrow the horizon endpoints in place — this runs every window of
+        // every multi-replica scenario, so no per-tick sample clones.
+        let len = self.history.len();
+        let cur = &self.history[len - 1];
+        let old = &self.history[0];
+        let prev = if len >= 2 { Some(&self.history[len - 2]) } else { None };
         let mut fired = Vec::new();
 
         // --- DP1: flow-share skew over the horizon ---
@@ -135,7 +138,7 @@ impl FleetSensor {
 
         // --- DP2: hot-replica KV exhaustion (window-level) ---
         let mut dp2_hit = false;
-        if let Some(prev) = &prev {
+        if let Some(prev) = prev {
             let hot = argmax_f64(&cur.kv_occupancy);
             let hot_occ = cur.kv_occupancy[hot];
             let min_occ = cur

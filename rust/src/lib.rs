@@ -29,6 +29,7 @@
 //! | `coordinator::experiment` | three-phase condition experiments + per-condition shaping |
 //! | `coordinator::matrix` | the parallel 28-condition scorecard matrix |
 //! | `coordinator::fleet` | replicas × routing-policy sweep with the DP condition family (`dpulens fleet`) |
+//! | `coordinator::perf` | pipeline benchmark: ingest/snapshot microbenches + matrix/fleet wall-clock (`dpulens perf`) |
 //! | `coordinator::report` | machine-readable reports (run/runbook/matrix JSON) |
 
 pub mod ids;

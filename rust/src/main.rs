@@ -16,6 +16,10 @@
 //!             data-parallel condition experiments (inject → detect →
 //!             mitigate), with per-replica skew columns; deterministic
 //!             JSON across runs and thread counts
+//!   perf      [--quick] [--replicates N] [--threads N] [--json-out PATH]
+//!             pipeline benchmark: batched ingest throughput, snapshot
+//!             latency, and matrix/fleet end-to-end wall-clock, written
+//!             as BENCH_pipeline.json (schema dpulens.perf.v1)
 //!   runbook                          print the encoded runbook tables
 //!   signals                          print the Table 2(b) signal inventory
 //!   attribution <COND>               inject + show root-cause attribution
@@ -157,17 +161,19 @@ fn cmd_matrix(args: &[String]) {
     if flag(args, "--no-negative-control") {
         mc.negative_control = false;
     }
-    let t0 = std::time::Instant::now();
     let report = run_matrix(&mc);
-    let wall = t0.elapsed().as_secs_f64();
     if flag(args, "--json") {
         println!("{}", report.to_json().render());
     } else {
         print!("{}", report.render_tables());
         println!("{}", report.summary_line());
         println!(
-            "wallclock {wall:.1}s for {} cells on {} threads",
-            report.cells_run, report.threads_used
+            "wallclock {:.1}s for {} cells on {} threads ({} telemetry events, {:.0} events/s)",
+            report.elapsed_ms / 1e3,
+            report.cells_run,
+            report.threads_used,
+            report.events_total,
+            report.events_per_sec()
         );
     }
     if let Some(path) = opt_val(args, "--json-out") {
@@ -191,17 +197,19 @@ fn cmd_fleet(args: &[String]) {
     if let Some(t) = opt_parse::<usize>(args, "--threads") {
         fc.threads = t;
     }
-    let t0 = std::time::Instant::now();
     let report = run_fleet(&fc);
-    let wall = t0.elapsed().as_secs_f64();
     if flag(args, "--json") {
         println!("{}", report.to_json().render());
     } else {
         print!("{}", report.render_tables());
         println!("{}", report.summary_line());
         println!(
-            "wallclock {wall:.1}s for {} cells on {} threads",
-            report.cells_run, report.threads_used
+            "wallclock {:.1}s for {} cells on {} threads ({} telemetry events, {:.0} events/s)",
+            report.elapsed_ms / 1e3,
+            report.cells_run,
+            report.threads_used,
+            report.events_total,
+            report.events_per_sec()
         );
     }
     if let Some(path) = opt_val(args, "--json-out") {
@@ -210,6 +218,40 @@ fn cmd_fleet(args: &[String]) {
         std::fs::write(&path, body).expect("writing fleet JSON");
         eprintln!("fleet JSON written to {path}");
     }
+}
+
+fn cmd_perf(args: &[String]) {
+    use dpulens::coordinator::perf::{run_perf, PerfConfig};
+    let mut pc = if flag(args, "--quick") { PerfConfig::quick() } else { PerfConfig::full() };
+    if let Some(r) = opt_parse::<usize>(args, "--replicates") {
+        pc.matrix_replicates = r;
+    }
+    if let Some(r) = opt_parse::<usize>(args, "--replicas") {
+        pc.fleet_replicas = r;
+    }
+    if let Some(t) = opt_parse::<usize>(args, "--threads") {
+        pc.threads = t;
+    }
+    if flag(args, "--micro-only") {
+        pc.micro_only = true;
+    }
+    let report = run_perf(&pc);
+    print!("{}", report.render());
+    // Variant-specific default paths: a micro-only (zeroed matrix/fleet) or
+    // quick run must not clobber a recorded full baseline. CI and scripts
+    // pin the artifact name with --json-out.
+    let default_path = if pc.micro_only {
+        "BENCH_pipeline_micro.json"
+    } else if pc.quick {
+        "BENCH_pipeline_quick.json"
+    } else {
+        "BENCH_pipeline.json"
+    };
+    let path = opt_val(args, "--json-out").unwrap_or_else(|| default_path.to_string());
+    let mut body = report.to_json().render();
+    body.push('\n');
+    std::fs::write(&path, body).expect("writing perf JSON");
+    eprintln!("perf JSON written to {path}");
 }
 
 fn cmd_runbook() {
@@ -277,16 +319,18 @@ fn main() {
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("matrix") => cmd_matrix(&args[1..]),
         Some("fleet") => cmd_fleet(&args[1..]),
+        Some("perf") => cmd_perf(&args[1..]),
         Some("runbook") => cmd_runbook(),
         Some("signals") => cmd_signals(),
         Some("attribution") => cmd_attribution(&args[1..]),
         _ => {
             eprintln!(
                 "dpulens — DPU-vantage observability for LLM inference clusters\n\
-                 usage: dpulens <serve|inject|sweep|matrix|fleet|runbook|signals|attribution> [flags]\n\
+                 usage: dpulens <serve|inject|sweep|matrix|fleet|perf|runbook|signals|attribution> [flags]\n\
                  flags: --real --mitigate --duration-ms N --rate R --seed S\n\
                  matrix: --replicates N --threads N --json --json-out PATH --no-negative-control\n\
-                 fleet:  --replicas N --threads N --json --json-out PATH"
+                 fleet:  --replicas N --threads N --json --json-out PATH\n\
+                 perf:   --quick --micro-only --replicates N --replicas N --threads N --json-out PATH"
             );
             std::process::exit(2);
         }

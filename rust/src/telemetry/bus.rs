@@ -1,20 +1,41 @@
-//! Per-node telemetry distribution: hardware models publish, observers drain.
+//! Per-node telemetry distribution: hardware models enqueue, observers take
+//! time-ordered batches.
 //!
-//! Single-threaded and deterministic: the scenario loop drains pending
-//! events into each observer after every simulation event, so observers see
-//! a causally-ordered stream exactly as a bump-in-the-wire DPU would.
+//! This is the single-dispatch fan-out stage of the event hot path. The
+//! scenario loop enqueues every emission into a reusable, pre-sized per-node
+//! buffer (no calendar entry, no boxing, no per-event clone) and, at each
+//! window tick, `deliver_due` hands each node's due events to its observer
+//! as one slice. Delivery preserves the per-event calendar semantics:
+//! events are ordered by `(t, emission sequence)` per node — a stable sort
+//! on `t` over the emission-ordered buffer — and an event stamped exactly
+//! at the tick time is held for the next window, matching the calendar's
+//! insertion-sequence tie-break for the common case of events emitted
+//! within the window they land in. (An event stamped exactly on a tick
+//! boundary but emitted more than a window ahead of it would, under the
+//! old calendar, have slipped into the closing window; here it always
+//! opens the next one. Same rule every run, so determinism is unaffected.)
+//!
+//! Accounting (total + per-class counters, a dense `[u64; N_CLASSES]` array
+//! indexed by `TelemetryKind::class_id`) happens at delivery, so
+//! `total_published` counts exactly the events observers saw. The optional
+//! bounded [`Ring`] recorder is the only clone site on the pipeline; it
+//! captures events in emission order.
 
 use crate::ids::NodeId;
-use crate::telemetry::event::{TelemetryEvent, TelemetryKind};
+use crate::telemetry::event::{TelemetryEvent, TelemetryKind, CLASS_NAMES};
 use crate::util::ring::Ring;
 use std::collections::HashMap;
 
-/// Pending event queues, one per node, plus class counters and an optional
-/// bounded trace recorder.
+/// Initial capacity of each node's event buffer; window batches on the
+/// standard scenarios run a few hundred to a few thousand events.
+const NODE_BUF_CAPACITY: usize = 1024;
+
+/// Reusable pending-event buffers, one per node, plus class counters and an
+/// optional bounded trace recorder.
 #[derive(Debug)]
 pub struct TelemetryBus {
     pending: Vec<Vec<TelemetryEvent>>,
-    class_counts: HashMap<&'static str, u64>,
+    class_counts: [u64; TelemetryKind::N_CLASSES],
     total: u64,
     recorder: Option<Ring<TelemetryEvent>>,
 }
@@ -22,8 +43,8 @@ pub struct TelemetryBus {
 impl TelemetryBus {
     pub fn new(n_nodes: usize) -> Self {
         TelemetryBus {
-            pending: (0..n_nodes).map(|_| Vec::new()).collect(),
-            class_counts: HashMap::new(),
+            pending: (0..n_nodes).map(|_| Vec::with_capacity(NODE_BUF_CAPACITY)).collect(),
+            class_counts: [0; TelemetryKind::N_CLASSES],
             total: 0,
             recorder: None,
         }
@@ -39,48 +60,86 @@ impl TelemetryBus {
         self.pending.len()
     }
 
-    /// Publish an event to its node's queue.
+    /// Enqueue an event into its node's buffer. The common path moves the
+    /// event straight into the reusable buffer; only the optional recorder
+    /// clones.
     #[inline]
-    pub fn publish(&mut self, ev: TelemetryEvent) {
+    pub fn enqueue(&mut self, ev: TelemetryEvent) {
         debug_assert!((ev.node.idx()) < self.pending.len());
-        self.total += 1;
-        *self.class_counts.entry(ev.kind.class()).or_insert(0) += 1;
         if let Some(rec) = &mut self.recorder {
             rec.push(ev.clone());
         }
         self.pending[ev.node.idx()].push(ev);
     }
 
-    /// Convenience: publish by parts.
+    /// Convenience: enqueue by parts.
     #[inline]
     pub fn emit(&mut self, t: crate::sim::SimTime, node: NodeId, kind: TelemetryKind) {
-        self.publish(TelemetryEvent { t, node, kind });
+        self.enqueue(TelemetryEvent { t, node, kind });
     }
 
-    /// Drain a node's pending events (ownership moves to the observer).
-    pub fn drain_node(&mut self, node: NodeId) -> Vec<TelemetryEvent> {
-        std::mem::take(&mut self.pending[node.idx()])
-    }
-
-    /// Visit-and-clear every node's queue.
-    pub fn drain_all(&mut self, mut f: impl FnMut(NodeId, Vec<TelemetryEvent>)) {
+    /// Deliver every event with `t < now` to its node's observer as one
+    /// time-ordered slice, retaining later events (and the buffers'
+    /// capacity) for the next window. Counts delivered events into the
+    /// total/class accounting.
+    pub fn deliver_due(
+        &mut self,
+        now: crate::sim::SimTime,
+        mut f: impl FnMut(NodeId, &[TelemetryEvent]),
+    ) {
         for i in 0..self.pending.len() {
-            if !self.pending[i].is_empty() {
-                f(NodeId(i as u32), std::mem::take(&mut self.pending[i]));
+            let buf = &mut self.pending[i];
+            if buf.is_empty() {
+                continue;
             }
+            // Stable sort on t keeps emission order within a timestamp —
+            // the old calendar's (t, seq) delivery order for this node.
+            buf.sort_by_key(|e| e.t);
+            let due = buf.partition_point(|e| e.t < now);
+            if due == 0 {
+                continue;
+            }
+            self.total += due as u64;
+            for ev in &buf[..due] {
+                self.class_counts[ev.kind.class_id()] += 1;
+            }
+            f(NodeId(i as u32), &buf[..due]);
+            buf.drain(..due);
         }
     }
 
+    /// Events enqueued but not yet delivered.
+    pub fn pending_events(&self) -> usize {
+        self.pending.iter().map(|b| b.len()).sum()
+    }
+
+    /// Events delivered to observers so far.
     pub fn total_published(&self) -> u64 {
         self.total
     }
 
     pub fn count_for_class(&self, class: &str) -> u64 {
-        self.class_counts.get(class).copied().unwrap_or(0)
+        CLASS_NAMES
+            .iter()
+            .position(|&n| n == class)
+            .map(|i| self.class_counts[i])
+            .unwrap_or(0)
     }
 
-    pub fn class_counts(&self) -> &HashMap<&'static str, u64> {
+    /// Dense per-class delivery counters, `class_id` order.
+    pub fn class_counts(&self) -> &[u64; TelemetryKind::N_CLASSES] {
         &self.class_counts
+    }
+
+    /// Name-keyed view of the class counters (cold path: reports). Only
+    /// classes actually seen carry an entry, matching the old map form.
+    pub fn class_counts_map(&self) -> HashMap<&'static str, u64> {
+        CLASS_NAMES
+            .iter()
+            .zip(self.class_counts.iter())
+            .filter(|(_, &n)| n > 0)
+            .map(|(&name, &n)| (name, n))
+            .collect()
     }
 
     pub fn recorded(&self) -> Option<&Ring<TelemetryEvent>> {
@@ -103,37 +162,98 @@ mod tests {
     }
 
     #[test]
-    fn publish_and_drain_per_node() {
+    fn enqueue_and_deliver_per_node() {
         let mut bus = TelemetryBus::new(2);
-        bus.publish(doorbell(1, 0));
-        bus.publish(doorbell(2, 1));
-        bus.publish(doorbell(3, 0));
-        let n0 = bus.drain_node(NodeId(0));
-        assert_eq!(n0.len(), 2);
-        assert!(bus.drain_node(NodeId(0)).is_empty());
-        assert_eq!(bus.drain_node(NodeId(1)).len(), 1);
+        bus.enqueue(doorbell(1, 0));
+        bus.enqueue(doorbell(2, 1));
+        bus.enqueue(doorbell(3, 0));
+        let mut seen = Vec::new();
+        bus.deliver_due(SimTime(10), |n, evs| seen.push((n, evs.len())));
+        assert_eq!(seen, vec![(NodeId(0), 2), (NodeId(1), 1)]);
         assert_eq!(bus.total_published(), 3);
         assert_eq!(bus.count_for_class("doorbell"), 3);
+        assert_eq!(bus.pending_events(), 0);
+        // Nothing left to deliver.
+        bus.deliver_due(SimTime(20), |_, _| panic!("no events expected"));
     }
 
     #[test]
-    fn drain_all_visits_nonempty_nodes() {
-        let mut bus = TelemetryBus::new(3);
-        bus.publish(doorbell(1, 0));
-        bus.publish(doorbell(1, 2));
-        let mut seen = Vec::new();
-        bus.drain_all(|n, evs| seen.push((n, evs.len())));
-        assert_eq!(seen, vec![(NodeId(0), 1), (NodeId(2), 1)]);
+    fn delivery_holds_events_at_or_past_the_tick() {
+        let mut bus = TelemetryBus::new(1);
+        bus.enqueue(doorbell(5, 0));
+        bus.enqueue(doorbell(10, 0)); // == tick: next window
+        bus.enqueue(doorbell(15, 0)); // future: next window
+        let mut delivered = Vec::new();
+        bus.deliver_due(SimTime(10), |_, evs| {
+            delivered.extend(evs.iter().map(|e| e.t.ns()));
+        });
+        assert_eq!(delivered, vec![5]);
+        assert_eq!(bus.pending_events(), 2);
+        assert_eq!(bus.total_published(), 1);
+        bus.deliver_due(SimTime(20), |_, evs| {
+            delivered.extend(evs.iter().map(|e| e.t.ns()));
+        });
+        assert_eq!(delivered, vec![5, 10, 15]);
+        assert_eq!(bus.total_published(), 3);
+    }
+
+    #[test]
+    fn delivery_is_time_ordered_with_emission_tie_break() {
+        let mut bus = TelemetryBus::new(1);
+        // Emitted out of time order, with a timestamp tie.
+        bus.enqueue(doorbell(30, 0));
+        bus.enqueue(TelemetryEvent {
+            t: SimTime(10),
+            node: NodeId(0),
+            kind: TelemetryKind::Doorbell { gpu: GpuId(1) },
+        });
+        bus.enqueue(TelemetryEvent {
+            t: SimTime(10),
+            node: NodeId(0),
+            kind: TelemetryKind::Doorbell { gpu: GpuId(2) },
+        });
+        let mut order = Vec::new();
+        bus.deliver_due(SimTime(100), |_, evs| {
+            for e in evs {
+                if let TelemetryKind::Doorbell { gpu } = e.kind {
+                    order.push((e.t.ns(), gpu.0));
+                }
+            }
+        });
+        // Time order, and gpu1 before gpu2 at the shared timestamp.
+        assert_eq!(order, vec![(10, 1), (10, 2), (30, 0)]);
+    }
+
+    #[test]
+    fn buffers_retain_capacity_across_windows() {
+        let mut bus = TelemetryBus::new(1);
+        for i in 0..100 {
+            bus.enqueue(doorbell(i, 0));
+        }
+        let cap_before = bus.pending[0].capacity();
+        bus.deliver_due(SimTime(1000), |_, _| {});
+        assert!(bus.pending[0].capacity() >= cap_before, "delivery shrank the buffer");
+        assert_eq!(bus.pending_events(), 0);
     }
 
     #[test]
     fn recorder_caps() {
         let mut bus = TelemetryBus::new(1).with_recorder(2);
         for i in 0..5 {
-            bus.publish(doorbell(i, 0));
+            bus.enqueue(doorbell(i, 0));
         }
         let rec = bus.recorded().unwrap();
         assert_eq!(rec.len(), 2);
         assert_eq!(rec.dropped(), 3);
+    }
+
+    #[test]
+    fn class_counts_map_only_carries_seen_classes() {
+        let mut bus = TelemetryBus::new(1);
+        bus.enqueue(doorbell(1, 0));
+        bus.deliver_due(SimTime(10), |_, _| {});
+        let m = bus.class_counts_map();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m["doorbell"], 1);
     }
 }

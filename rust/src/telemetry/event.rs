@@ -97,37 +97,81 @@ pub enum TelemetryKind {
 }
 
 /// A timestamped, node-attributed telemetry record.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// `Clone` is implemented by hand so the `perf-probe` build can count every
+/// clone on the ingest path: the batched bus → agent pipeline must move or
+/// borrow events, never copy them (the optional recorder ring is the one
+/// sanctioned clone site).
+#[derive(Debug, PartialEq)]
 pub struct TelemetryEvent {
     pub t: SimTime,
     pub node: NodeId,
     pub kind: TelemetryKind,
 }
 
+impl Clone for TelemetryEvent {
+    fn clone(&self) -> Self {
+        crate::util::perf::probe::count_event_clone();
+        TelemetryEvent { t: self.t, node: self.node, kind: self.kind.clone() }
+    }
+}
+
+/// Class labels in `class_id` order (dense per-class accounting).
+pub const CLASS_NAMES: [&str; TelemetryKind::N_CLASSES] = [
+    "dma_h2d",
+    "dma_d2h",
+    "doorbell",
+    "mem_reg",
+    "p2p_pcie",
+    "pcie_util",
+    "nic_rx",
+    "nic_tx",
+    "retransmit",
+    "pkt_drop",
+    "flow_end",
+    "collective",
+    "stage_handoff",
+    "rdma_op",
+    "credit_update",
+    "nvlink",
+    "gpu_kernel",
+    "cpu_local",
+];
+
 impl TelemetryKind {
-    /// Short class label, used in reports and per-class accounting.
-    pub fn class(&self) -> &'static str {
+    /// Number of distinct event classes (the span of `class_id`).
+    pub const N_CLASSES: usize = 18;
+
+    /// Dense class index for array-based per-class counters — the hot-path
+    /// replacement for string-keyed accounting.
+    #[inline]
+    pub fn class_id(&self) -> usize {
         use TelemetryKind::*;
         match self {
-            DmaH2d { .. } => "dma_h2d",
-            DmaD2h { .. } => "dma_d2h",
-            Doorbell { .. } => "doorbell",
-            MemRegistration { .. } => "mem_reg",
-            P2pPcie { .. } => "p2p_pcie",
-            PcieUtil { .. } => "pcie_util",
-            NicRx { .. } => "nic_rx",
-            NicTx { .. } => "nic_tx",
-            Retransmit { .. } => "retransmit",
-            PktDrop { .. } => "pkt_drop",
-            FlowEnd { .. } => "flow_end",
-            CollectiveBurst { .. } => "collective",
-            StageHandoff { .. } => "stage_handoff",
-            RdmaOp { .. } => "rdma_op",
-            CreditUpdate { .. } => "credit_update",
-            NvlinkBurst { .. } => "nvlink",
-            GpuKernel { .. } => "gpu_kernel",
-            CpuLocal { .. } => "cpu_local",
+            DmaH2d { .. } => 0,
+            DmaD2h { .. } => 1,
+            Doorbell { .. } => 2,
+            MemRegistration { .. } => 3,
+            P2pPcie { .. } => 4,
+            PcieUtil { .. } => 5,
+            NicRx { .. } => 6,
+            NicTx { .. } => 7,
+            Retransmit { .. } => 8,
+            PktDrop { .. } => 9,
+            FlowEnd { .. } => 10,
+            CollectiveBurst { .. } => 11,
+            StageHandoff { .. } => 12,
+            RdmaOp { .. } => 13,
+            CreditUpdate { .. } => 14,
+            NvlinkBurst { .. } => 15,
+            GpuKernel { .. } => 16,
+            CpuLocal { .. } => 17,
         }
+    }
+
+    /// Short class label, used in reports and per-class accounting.
+    pub fn class(&self) -> &'static str {
+        CLASS_NAMES[self.class_id()]
     }
 
     /// Is this event observable from the DPU vantage point (NIC inline +
@@ -169,5 +213,19 @@ mod tests {
         assert_eq!(classes.len(), 3);
         assert_ne!(classes[0], classes[1]);
         assert_ne!(classes[1], classes[2]);
+    }
+
+    #[test]
+    fn class_ids_are_dense_and_name_aligned() {
+        // Every name is distinct and class() goes through the dense table.
+        for (i, a) in CLASS_NAMES.iter().enumerate() {
+            for b in CLASS_NAMES.iter().skip(i + 1) {
+                assert_ne!(a, b);
+            }
+        }
+        let ev = TelemetryKind::RdmaOp { qp: QpId(1), bytes: 8, credit_wait_ns: 0, latency_ns: 1 };
+        assert!(ev.class_id() < TelemetryKind::N_CLASSES);
+        assert_eq!(CLASS_NAMES[ev.class_id()], ev.class());
+        assert_eq!(TelemetryKind::CpuLocal { dur_ns: 1 }.class_id(), TelemetryKind::N_CLASSES - 1);
     }
 }

@@ -256,17 +256,51 @@ pub struct WindowAccum {
     node_coll_bytes: FastMap<u32, u64>,
     /// Decayed cumulative RX bytes per flow (NS3 skew feature).
     flow_rx_ewma: FastMap<u32, f64>,
+
+    /// Scratch buffers for the snapshot-time median features; cleared and
+    /// reused every window so the steady state allocates nothing.
+    active_tx_scratch: Vec<f64>,
+    ended_tx_scratch: Vec<f64>,
 }
 
 /// Cap on tracked flows; beyond this, new flows share an overflow bucket.
 /// A real DPU flow table is similarly bounded (CAM/SRAM limits).
 const FLOW_TABLE_CAP: usize = 4096;
+/// Warm-start capacity of the flow-keyed maps: large enough that the
+/// standard scenarios never rehash on the hot path, small enough that a
+/// many-node fleet stays cheap to build.
+const FLOW_WARM_CAPACITY: usize = 256;
 /// Collectives that have not completed within this many ns by snapshot time
 /// count as stalled.
 const COLL_STALL_NS: u64 = 50_000_000; // 50 ms
 
+/// A `FastMap` pre-sized to `n` entries (capacity hints from cluster shape).
+fn warm_map<K, V>(n: usize) -> FastMap<K, V> {
+    FastMap::with_capacity_and_hasher(n, Default::default())
+}
+
+/// Median via in-place quickselect over a reusable scratch buffer (upper
+/// median, matching `sorted[len / 2]`). Returns `None` on an empty slice —
+/// an all-idle window must not panic.
+fn median_of(xs: &mut [f64]) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mid = xs.len() / 2;
+    let (_, m, _) = xs.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+    Some(*m)
+}
+
 impl WindowAccum {
     pub fn new(node: NodeId, n_gpus_hint: usize) -> Self {
+        Self::with_hints(node, n_gpus_hint, 8)
+    }
+
+    /// Build with cluster-shape capacity hints so the per-event maps never
+    /// rehash mid-run: `n_nodes_hint` sizes the per-source collective
+    /// ledger, the GPU count sizes the per-GPU gap state, and the flow maps
+    /// warm-start at a fleet-scale working set.
+    pub fn with_hints(node: NodeId, n_gpus_hint: usize, n_nodes_hint: usize) -> Self {
         let mut cur = WindowSnapshot::default();
         cur.node = node;
         cur.per_gpu = vec![GpuWindow::default(); n_gpus_hint];
@@ -278,15 +312,17 @@ impl WindowAccum {
             last_h2d: None,
             last_d2h: None,
             last_doorbell: None,
-            last_h2d_per_gpu: FastMap::default(),
+            last_h2d_per_gpu: warm_map(n_gpus_hint.max(1)),
             last_rx: None,
             last_tx: None,
             last_handoff: None,
-            last_credit: FastMap::default(),
-            flows: FastMap::default(),
-            colls: FastMap::default(),
-            node_coll_bytes: FastMap::default(),
-            flow_rx_ewma: FastMap::default(),
+            last_credit: warm_map(4 * n_nodes_hint.max(1)),
+            flows: warm_map(FLOW_WARM_CAPACITY),
+            colls: warm_map(64),
+            node_coll_bytes: warm_map(n_nodes_hint.max(1)),
+            flow_rx_ewma: warm_map(FLOW_WARM_CAPACITY),
+            active_tx_scratch: Vec::with_capacity(FLOW_WARM_CAPACITY),
+            ended_tx_scratch: Vec::with_capacity(64),
         }
     }
 
@@ -482,16 +518,18 @@ impl WindowAccum {
 
     /// Close the window at `now`, emit the snapshot, and reset per-window state.
     pub fn snapshot(&mut self, now: SimTime) -> WindowSnapshot {
-        // Finalize flow-derived dispersion features.
+        // Finalize flow-derived dispersion features. The median inputs go
+        // into scratch buffers that persist across windows (capacity reuse;
+        // quickselect instead of clone + full sort).
         let mut active = 0u64;
         let mut rx_disp = Welford::new();
         let mut jitter_sum = 0.0;
         let mut jitter_n = 0u64;
-        let mut active_tx: Vec<f64> = Vec::new();
-        let mut ended_tx: Vec<f64> = Vec::new();
+        self.active_tx_scratch.clear();
+        self.ended_tx_scratch.clear();
         for fs in self.flows.values() {
             if fs.ended {
-                ended_tx.push(fs.total_tx_count as f64);
+                self.ended_tx_scratch.push(fs.total_tx_count as f64);
                 continue;
             }
             active += 1;
@@ -503,43 +541,46 @@ impl WindowAccum {
                 jitter_n += 1;
             }
             if fs.win_tx_count > 0 {
-                active_tx.push(fs.total_tx_count as f64);
+                self.active_tx_scratch.push(fs.total_tx_count as f64);
             }
         }
         self.cur.active_flows = active;
         self.cur.flow_rx_dispersion = rx_disp;
         self.cur.egress_jitter_cov = if jitter_n > 0 { jitter_sum / jitter_n as f64 } else { 0.0 };
         // Early-end: flows that ended this window with well under the median
-        // egress activity of still-active peers.
+        // egress activity of still-active peers. `median_of` is None on an
+        // all-idle window (no active egress / no completions), which must
+        // leave the defaults untouched rather than panic.
         self.cur.early_end_count = 0;
         self.cur.end_len_ratio = 1.0;
         self.cur.ended_len_cov = 0.0;
-        if ended_tx.len() >= 3 {
+        if self.ended_tx_scratch.len() >= 3 {
             let mut w = Welford::new();
-            for &e in &ended_tx {
+            for &e in &self.ended_tx_scratch {
                 w.push(e);
             }
             self.cur.ended_len_cov = w.cov();
         }
-        if !active_tx.is_empty() && self.cur.flow_ends > 0 && !ended_tx.is_empty() {
-            let mut sorted = active_tx.clone();
-            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let median = sorted[sorted.len() / 2];
-            self.cur.early_end_count = ended_tx
-                .iter()
-                .filter(|&&txc| txc < 0.5 * median && median >= 3.0)
-                .count() as u64;
-            let mut es = ended_tx.clone();
-            es.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let end_median = es[es.len() / 2];
-            if median >= 1.0 {
-                self.cur.end_len_ratio = (end_median / median).min(4.0);
+        if self.cur.flow_ends > 0 {
+            if let (Some(median), true) =
+                (median_of(&mut self.active_tx_scratch), !self.ended_tx_scratch.is_empty())
+            {
+                self.cur.early_end_count = self
+                    .ended_tx_scratch
+                    .iter()
+                    .filter(|&&txc| txc < 0.5 * median && median >= 3.0)
+                    .count() as u64;
+                let end_median =
+                    median_of(&mut self.ended_tx_scratch).expect("non-empty by guard");
+                if median >= 1.0 {
+                    self.cur.end_len_ratio = (end_median / median).min(4.0);
+                }
             }
         }
 
         // Top-flow share from the decayed per-flow RX counters.
         let total_ewma: f64 = self.flow_rx_ewma.values().sum();
-        let top_ewma = self.flow_rx_ewma.values().cloned().fold(0.0, f64::max);
+        let top_ewma = self.flow_rx_ewma.values().fold(0.0_f64, |acc, &v| acc.max(v));
         self.cur.top_flow_share = if total_ewma > 1.0 { top_ewma / total_ewma } else { 0.0 };
         for v in self.flow_rx_ewma.values_mut() {
             *v *= 0.95;
@@ -711,6 +752,38 @@ mod tests {
         assert_eq!(s.flow_ends, 1);
         assert_eq!(s.early_end_count, 1);
         assert_eq!(s.active_flows, 3);
+    }
+
+    #[test]
+    fn all_idle_window_snapshot_does_not_panic() {
+        // Regression: an all-idle window (no flows at all) must produce the
+        // neutral defaults instead of indexing an empty median buffer.
+        let mut w = WindowAccum::new(NodeId(0), 1);
+        let s = w.snapshot(SimTime(10_000));
+        assert_eq!(s.early_end_count, 0);
+        assert_eq!(s.end_len_ratio, 1.0);
+        assert_eq!(s.ended_len_cov, 0.0);
+        assert_eq!(s.active_flows, 0);
+        // And again on the next window: scratch reuse must not leak state.
+        let s2 = w.snapshot(SimTime(20_000));
+        assert_eq!(s2.end_len_ratio, 1.0);
+    }
+
+    #[test]
+    fn flow_end_with_no_active_egress_does_not_panic() {
+        // A FlowEnd lands in a window where no active peer sent anything:
+        // flow_ends > 0 with an empty active-egress median input.
+        let mut w = WindowAccum::new(NodeId(0), 1);
+        w.ingest(&ev(
+            0,
+            TelemetryKind::NicTx { flow: FlowId(1), bytes: 64, queue_depth: 0, wait_ns: 0 },
+        ));
+        let _ = w.snapshot(SimTime(1_000));
+        w.ingest(&ev(1_500, TelemetryKind::FlowEnd { flow: FlowId(1), req: ReqId(0) }));
+        let s = w.snapshot(SimTime(2_000));
+        assert_eq!(s.flow_ends, 1);
+        assert_eq!(s.early_end_count, 0);
+        assert_eq!(s.end_len_ratio, 1.0);
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod fastmap;
 pub mod json;
 pub mod kv;
 pub mod par;
+pub mod perf;
 pub mod prop;
 pub mod ring;
 pub mod rng;

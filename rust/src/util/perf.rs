@@ -1,0 +1,130 @@
+//! Wall-clock phase timing for the perf harness (`dpulens perf`, the matrix
+//! and fleet runners) plus the feature-gated hot-path probes that let tests
+//! assert the zero-copy telemetry pipeline really is zero-copy.
+//!
+//! Everything here is measurement-only: nothing in this module may influence
+//! simulated results (the matrix/fleet JSON stays byte-identical whether or
+//! not timing runs). The probes compile to nothing unless the crate is built
+//! with `--features perf-probe`.
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch for one pipeline phase: start it at the phase
+/// boundary, read `total_ms()` at the end. Deliberately minimal — the perf
+/// report carries each phase's duration explicitly.
+#[derive(Debug)]
+pub struct PhaseTimer {
+    t0: Instant,
+}
+
+impl PhaseTimer {
+    pub fn start() -> Self {
+        PhaseTimer { t0: Instant::now() }
+    }
+
+    /// Wall-clock since construction, ms.
+    pub fn total_ms(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Default for PhaseTimer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Events-per-second from an event count and elapsed milliseconds (0 when
+/// the interval is degenerate).
+pub fn events_per_sec(events: u64, elapsed_ms: f64) -> f64 {
+    if elapsed_ms <= 0.0 {
+        0.0
+    } else {
+        events as f64 * 1e3 / elapsed_ms
+    }
+}
+
+/// Hot-path instrumentation counters.
+///
+/// Thread-local so concurrent matrix/fleet worker cells (and parallel test
+/// threads) never observe each other's counts: a test drives one scenario on
+/// its own thread and reads back exactly that scenario's clone count.
+/// Without `--features perf-probe` every function is a no-op that the
+/// optimizer deletes.
+pub mod probe {
+    /// Count one `TelemetryEvent::clone` (called from the manual `Clone`
+    /// impl). Zero on the batched bus → agent path unless a recorder ring
+    /// is attached.
+    #[inline(always)]
+    pub fn count_event_clone() {
+        #[cfg(feature = "perf-probe")]
+        imp::EVENT_CLONES.with(|c| c.set(c.get() + 1));
+    }
+
+    /// Telemetry-event clones observed on this thread since the last reset.
+    #[cfg(feature = "perf-probe")]
+    pub fn event_clones() -> u64 {
+        imp::EVENT_CLONES.with(|c| c.get())
+    }
+
+    /// Telemetry-event clones observed on this thread since the last reset
+    /// (probe disabled: always 0).
+    #[cfg(not(feature = "perf-probe"))]
+    pub fn event_clones() -> u64 {
+        0
+    }
+
+    /// Reset this thread's counters.
+    pub fn reset() {
+        #[cfg(feature = "perf-probe")]
+        imp::EVENT_CLONES.with(|c| c.set(0));
+    }
+
+    #[cfg(feature = "perf-probe")]
+    mod imp {
+        use std::cell::Cell;
+        thread_local! {
+            pub static EVENT_CLONES: Cell<u64> = const { Cell::new(0) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_timer_is_monotone() {
+        let t = PhaseTimer::start();
+        let a = t.total_ms();
+        let b = t.total_ms();
+        assert!(a >= 0.0);
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn events_per_sec_handles_degenerate_intervals() {
+        assert_eq!(events_per_sec(100, 0.0), 0.0);
+        assert_eq!(events_per_sec(100, -1.0), 0.0);
+        assert!((events_per_sec(1000, 500.0) - 2000.0).abs() < 1e-9);
+    }
+
+    #[cfg(feature = "perf-probe")]
+    #[test]
+    fn probe_counts_event_clones_per_thread() {
+        use crate::ids::{GpuId, NodeId};
+        use crate::sim::SimTime;
+        use crate::telemetry::event::{TelemetryEvent, TelemetryKind};
+        probe::reset();
+        let ev = TelemetryEvent {
+            t: SimTime(1),
+            node: NodeId(0),
+            kind: TelemetryKind::Doorbell { gpu: GpuId(0) },
+        };
+        let before = probe::event_clones();
+        let _c = ev.clone();
+        assert_eq!(probe::event_clones(), before + 1);
+        probe::reset();
+        assert_eq!(probe::event_clones(), 0);
+    }
+}

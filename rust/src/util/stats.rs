@@ -408,6 +408,70 @@ mod tests {
     }
 
     #[test]
+    fn p2_empty_and_single_sample() {
+        // The clone+sort fallback path: no samples -> 0; one sample -> it,
+        // at every quantile.
+        assert_eq!(P2Quantile::new(0.5).value(), 0.0);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let mut p2 = P2Quantile::new(q);
+            p2.push(7.5);
+            assert_eq!(p2.value(), 7.5, "q={q}");
+            assert_eq!(p2.count(), 1);
+        }
+    }
+
+    #[test]
+    fn p2_fallback_quantile_rank_under_five_samples() {
+        // Four samples stay on the exact fallback: p99 must pick the max,
+        // p0 the min, and the median the upper-middle rank.
+        let mut hi = P2Quantile::new(0.99);
+        let mut lo = P2Quantile::new(0.0);
+        let mut med = P2Quantile::new(0.5);
+        for &x in &[40.0, 10.0, 30.0, 20.0] {
+            hi.push(x);
+            lo.push(x);
+            med.push(x);
+        }
+        assert_eq!(hi.value(), 40.0);
+        assert_eq!(lo.value(), 10.0);
+        // round(0.5 * 3) = 2 -> third-smallest of four.
+        assert_eq!(med.value(), 30.0);
+    }
+
+    #[test]
+    fn p2_all_duplicates_is_exact() {
+        // Identical samples must estimate exactly that value (marker
+        // heights collapse; no parabolic drift), across the 5-sample
+        // initialization boundary.
+        for n in [3usize, 5, 100] {
+            let mut p2 = P2Quantile::new(0.9);
+            for _ in 0..n {
+                p2.push(42.0);
+            }
+            assert_eq!(p2.value(), 42.0, "n={n}");
+            assert_eq!(p2.count(), n);
+        }
+    }
+
+    #[test]
+    fn p2_monotone_input_tracks_the_quantile() {
+        // Strictly increasing input 1..=1000: the streaming estimate must
+        // land near the true quantile despite the worst-case (sorted)
+        // arrival order.
+        for q in [0.5, 0.9] {
+            let mut p2 = P2Quantile::new(q);
+            for i in 1..=1000 {
+                p2.push(i as f64);
+            }
+            let exact = q * 1000.0;
+            let rel = (p2.value() - exact).abs() / exact;
+            assert!(rel < 0.05, "q={q}: p2={} exact={exact}", p2.value());
+            // Estimates stay inside the observed range.
+            assert!(p2.value() >= 1.0 && p2.value() <= 1000.0);
+        }
+    }
+
+    #[test]
     fn summary_percentiles() {
         let mut s = Summary::new();
         for i in 1..=101 {
