@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Warn-only perf-trajectory step: compare a fresh `dpulens perf` JSON
+against the committed BENCH_pipeline.json baseline and print per-metric
+deltas.
+
+Never fails the build: runner noise is not yet characterized, so this step
+reports trajectory instead of gating on it (see ROADMAP). It exits 0 even on
+regressions; the deltas land in the job log and the fresh JSON is uploaded
+as an artifact.
+
+Usage: ci/perf_trajectory.py BASELINE.json FRESH.json
+"""
+
+import json
+import sys
+
+# (json-path, label, higher-is-better)
+METRICS = [
+    (("ingest", "events_per_sec"), "ingest events/s", True),
+    (("snapshot", "p50_us"), "snapshot p50 us", False),
+    (("snapshot", "max_us"), "snapshot max us", False),
+    (("matrix", "elapsed_ms"), "matrix wall ms", False),
+    (("matrix", "events_per_sec"), "matrix events/s", True),
+    (("fleet", "elapsed_ms"), "fleet wall ms", False),
+    (("fleet", "events_per_sec"), "fleet events/s", True),
+]
+
+
+def lookup(doc, path):
+    for key in path:
+        if not isinstance(doc, dict) or key not in doc:
+            return None
+        doc = doc[key]
+    return doc if isinstance(doc, (int, float)) else None
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 0
+    base_path, fresh_path = sys.argv[1], sys.argv[2]
+    try:
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"perf-trajectory: fresh perf JSON unreadable ({e}); skipping")
+        return 0
+    try:
+        with open(base_path) as f:
+            base = json.load(f)
+    except (OSError, ValueError):
+        base = {}
+
+    recorded = base.get("provenance") != "unrecorded-placeholder" and any(
+        (lookup(base, p) or 0) > 0 for p, _, _ in METRICS
+    )
+    if not recorded:
+        print("perf-trajectory: no recorded baseline yet.")
+        print("Candidate baseline from this run (commit the uploaded")
+        print(f"BENCH_pipeline artifact as {base_path} to start the trajectory):")
+        for path, label, _ in METRICS:
+            v = lookup(fresh, path)
+            if v is not None:
+                print(f"  {label:>18}: {v:,.1f}")
+        return 0
+
+    print(f"perf-trajectory vs committed {base_path} (warn-only):")
+    worse = 0
+    for path, label, higher_better in METRICS:
+        b, f_ = lookup(base, path), lookup(fresh, path)
+        if b is None or f_ is None or b == 0:
+            print(f"  {label:>18}: (no comparable sample)")
+            continue
+        ratio = f_ / b
+        delta_pct = (ratio - 1.0) * 100.0
+        regressed = ratio < 0.9 if higher_better else ratio > 1.1
+        marker = "  <-- WORSE (>10%)" if regressed else ""
+        worse += regressed
+        print(f"  {label:>18}: {b:,.1f} -> {f_:,.1f}  ({delta_pct:+.1f}%){marker}")
+    if worse:
+        print(f"perf-trajectory: {worse} metric(s) regressed >10% (warn-only, not gating)")
+    else:
+        print("perf-trajectory: no metric regressed >10%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,7 +7,7 @@ pub mod topology;
 
 pub use fabric::Fabric;
 pub use models::{GpuModel, LinkModel, Nic, Outbox, PcieComplex};
-pub use topology::{ClusterSpec, FabricKnobs, NodeKnobs};
+pub use topology::{ClusterSpec, FabricKnobs, NodeKnobs, ReplicaRole, ReplicaShape};
 
 use crate::ids::{GpuId, NodeId};
 use crate::sim::SimTime;
@@ -180,6 +180,41 @@ impl Cluster {
         self.fabric.rdma(now, from, to, eff_bytes, &self.fabric_knobs, hw_rng, out)
     }
 
+    /// Prefill→decode KV handoff: the phase-transition transfer that moves a
+    /// sequence's KV pages between pools. It rides the same fabric as every
+    /// other east-west byte, so the destination DPU sees it (RdmaOp plus an
+    /// explicit KvTransfer burst). PD2's knob throttles only this path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn kv_handoff(
+        &mut self,
+        now: SimTime,
+        from: NodeId,
+        to: NodeId,
+        bytes: u64,
+        coll: crate::ids::CollId,
+        out: &mut Outbox,
+    ) -> SimTime {
+        let eff_bytes =
+            (bytes as f64 / self.fabric_knobs.handoff_budget_factor.max(0.05)) as u64;
+        let hw_rng = &mut self.nodes[from.idx()].rng;
+        let arrive =
+            self.fabric.rdma(now, from, to, eff_bytes.max(512), &self.fabric_knobs, hw_rng, out);
+        out.emit(
+            arrive,
+            to,
+            TelemetryKind::CollectiveBurst {
+                coll,
+                kind: crate::telemetry::event::CollKind::KvTransfer,
+                from_node: from,
+                rank: 0,
+                expected_ranks: 1,
+                bytes: eff_bytes.max(512),
+                latency_ns: (arrive - now).ns(),
+            },
+        );
+        arrive
+    }
+
     /// Window-tick maintenance: background load + PCIe utilization samples.
     pub fn on_window_tick(&mut self, now: SimTime, window_ns: u64, out: &mut Outbox) {
         for hw in &mut self.nodes {
@@ -262,6 +297,39 @@ mod tests {
         c2.fabric_knobs.kv_link_budget_factor = 0.25;
         let slow = c2.rdma(SimTime(0), NodeId(0), NodeId(1), 1 << 22, true, &mut out);
         assert!(slow.ns() > base.ns() * 2);
+    }
+
+    #[test]
+    fn handoff_budget_throttles_only_the_handoff_path() {
+        let mut c = Cluster::new(ClusterSpec::default(), 1);
+        let mut out = Outbox::new();
+        let base =
+            c.kv_handoff(SimTime(0), NodeId(0), NodeId(2), 1 << 22, crate::ids::CollId(1), &mut out);
+        assert!(matches!(
+            out.items.last().unwrap().2,
+            TelemetryKind::CollectiveBurst {
+                kind: crate::telemetry::event::CollKind::KvTransfer,
+                ..
+            }
+        ));
+        let mut c2 = Cluster::new(ClusterSpec::default(), 1);
+        c2.fabric_knobs.handoff_budget_factor = 0.2;
+        let slow = c2.kv_handoff(
+            SimTime(0),
+            NodeId(0),
+            NodeId(2),
+            1 << 22,
+            crate::ids::CollId(1),
+            &mut out,
+        );
+        assert!(slow.ns() > base.ns() * 3, "slow={} base={}", slow.ns(), base.ns());
+        // EW8's kv budget path is untouched by the handoff knob.
+        let mut c3 = Cluster::new(ClusterSpec::default(), 1);
+        c3.fabric_knobs.handoff_budget_factor = 0.2;
+        let kv = c3.rdma(SimTime(0), NodeId(0), NodeId(2), 1 << 22, true, &mut out);
+        let mut c4 = Cluster::new(ClusterSpec::default(), 1);
+        let kv_base = c4.rdma(SimTime(0), NodeId(0), NodeId(2), 1 << 22, true, &mut out);
+        assert_eq!(kv.ns(), kv_base.ns());
     }
 
     #[test]

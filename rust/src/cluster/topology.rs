@@ -7,6 +7,72 @@
 
 use crate::ids::{GpuId, NodeId};
 
+/// Which serving phase a replica's pool handles. Colocated replicas run the
+/// classic vLLM-style loop (prefill and decode interleaved on one engine);
+/// Prefill/Decode replicas form the two pools of a phase-disaggregated
+/// deployment, connected by an explicit KV handoff over the fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReplicaRole {
+    Colocated,
+    Prefill,
+    Decode,
+}
+
+impl ReplicaRole {
+    pub fn id(&self) -> &'static str {
+        match self {
+            ReplicaRole::Colocated => "colocated",
+            ReplicaRole::Prefill => "prefill",
+            ReplicaRole::Decode => "decode",
+        }
+    }
+
+    /// May the admission router place new prompts here?
+    pub fn serves_prefill(&self) -> bool {
+        matches!(self, ReplicaRole::Colocated | ReplicaRole::Prefill)
+    }
+
+    /// May the phase-transition router place decode work here?
+    pub fn serves_decode(&self) -> bool {
+        matches!(self, ReplicaRole::Colocated | ReplicaRole::Decode)
+    }
+}
+
+/// One replica's shape: its pool role and parallelism degrees. `tp` counts
+/// GPUs per pipeline stage (stages span whole nodes, so TP collectives cross
+/// the fabric and stay DPU-observable), `pp` counts pipeline stages; a
+/// replica therefore consumes `pp * tp / gpus_per_node` nodes. Pools can mix
+/// shapes — e.g. one TP8 prefill replica beside TP4×PP2 decode replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicaShape {
+    pub role: ReplicaRole,
+    pub tp: usize,
+    pub pp: usize,
+}
+
+impl ReplicaShape {
+    pub fn new(role: ReplicaRole, tp: usize, pp: usize) -> Self {
+        ReplicaShape { role, tp, pp }
+    }
+
+    /// Nodes this shape occupies on a cluster with `gpus_per_node` GPUs per
+    /// node (TP spans whole nodes).
+    pub fn nodes_needed(&self, gpus_per_node: usize) -> usize {
+        assert!(self.tp > 0 && self.pp > 0, "degenerate shape");
+        assert!(
+            gpus_per_node > 0 && self.tp % gpus_per_node == 0,
+            "tp {} must be a whole-node multiple of {gpus_per_node}",
+            self.tp
+        );
+        self.pp * (self.tp / gpus_per_node)
+    }
+
+    /// Stable label for tables and JSON, e.g. `prefill:tp8xpp1`.
+    pub fn label(&self) -> String {
+        format!("{}:tp{}xpp{}", self.role.id(), self.tp, self.pp)
+    }
+}
+
 /// Static description of the simulated cluster.
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {
@@ -205,6 +271,9 @@ pub struct FabricKnobs {
     pub credit_window: u32,
     /// Multiplies KV-transfer link budget (EW8: <1 shrinks it).
     pub kv_link_budget_factor: f64,
+    /// Multiplies the prefill→decode KV-handoff link budget (PD2: <1 makes
+    /// the phase-transition transfer crawl without touching EW8's path).
+    pub handoff_budget_factor: f64,
 }
 
 impl Default for FabricKnobs {
@@ -216,6 +285,7 @@ impl Default for FabricKnobs {
             hol_blocking: false,
             credit_window: 64,
             kv_link_budget_factor: 1.0,
+            handoff_budget_factor: 1.0,
         }
     }
 }
@@ -227,6 +297,7 @@ impl FabricKnobs {
             && !self.hol_blocking
             && self.credit_window >= 64
             && self.kv_link_budget_factor == 1.0
+            && self.handoff_budget_factor == 1.0
     }
 }
 
@@ -259,6 +330,34 @@ mod tests {
         assert_eq!(s.node_of_gpu(GpuId(5)), NodeId(1));
         assert_eq!(s.node_of_gpu(GpuId(15)), NodeId(3));
         assert_eq!(s.gpus_of_node(NodeId(1)), vec![GpuId(4), GpuId(5), GpuId(6), GpuId(7)]);
+    }
+
+    #[test]
+    fn replica_shapes_size_and_label() {
+        let p = ReplicaShape::new(ReplicaRole::Prefill, 8, 1);
+        assert_eq!(p.nodes_needed(4), 2);
+        assert_eq!(p.label(), "prefill:tp8xpp1");
+        assert!(p.role.serves_prefill() && !p.role.serves_decode());
+        let d = ReplicaShape::new(ReplicaRole::Decode, 4, 2);
+        assert_eq!(d.nodes_needed(4), 2);
+        assert!(d.role.serves_decode() && !d.role.serves_prefill());
+        let c = ReplicaShape::new(ReplicaRole::Colocated, 8, 2);
+        assert_eq!(c.nodes_needed(4), 4);
+        assert!(c.role.serves_prefill() && c.role.serves_decode());
+    }
+
+    #[test]
+    #[should_panic(expected = "whole-node multiple")]
+    fn fractional_node_shape_rejected() {
+        ReplicaShape::new(ReplicaRole::Prefill, 6, 1).nodes_needed(4);
+    }
+
+    #[test]
+    fn handoff_budget_is_a_health_knob() {
+        let mut f = FabricKnobs::default();
+        assert!(f.is_healthy());
+        f.handoff_budget_factor = 0.2;
+        assert!(!f.is_healthy());
     }
 
     #[test]

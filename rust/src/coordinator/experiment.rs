@@ -92,6 +92,8 @@ pub fn expected_cause_classes(c: Condition) -> &'static [&'static str] {
         | Ew8KvBottleneck => &["network"],
         Dp1RouterFlowSkew => &["network"],
         Dp2HotReplicaKv | Dp3StragglerReplica => &["gpu"],
+        Pd1PrefillSaturation => &["client"],
+        Pd2KvHandoffStall | Pd3DecodeStarvation => &["network"],
     }
 }
 
@@ -227,7 +229,8 @@ mod tests {
 
     #[test]
     fn expected_classes_cover_all_conditions() {
-        for c in ALL_CONDITIONS.iter().chain(DP_CONDITIONS.iter()) {
+        use crate::dpu::detectors::PD_CONDITIONS;
+        for c in ALL_CONDITIONS.iter().chain(DP_CONDITIONS.iter()).chain(PD_CONDITIONS.iter()) {
             assert!(!expected_cause_classes(*c).is_empty(), "{c:?}");
         }
         assert!(expected_cause_classes(Condition::Pc8HostCpuBottleneck).contains(&"host"));

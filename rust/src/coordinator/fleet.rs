@@ -14,9 +14,10 @@
 //! Aggregation order is fixed by the cell list, so the JSON form is
 //! byte-identical across runs and `--threads` values.
 
+use crate::cluster::{ReplicaRole, ReplicaShape};
 use crate::coordinator::experiment::{inject_time, standard_cfg};
 use crate::coordinator::scenario::{Scenario, ScenarioCfg};
-use crate::dpu::detectors::{Condition, DP_CONDITIONS};
+use crate::dpu::detectors::{Condition, DP_CONDITIONS, PD_CONDITIONS};
 use crate::engine::router::ALL_POLICIES;
 use crate::engine::RoutePolicy;
 use crate::sim::{SimDur, SimTime};
@@ -38,6 +39,9 @@ pub struct FleetConfig {
     pub policies: Vec<RoutePolicy>,
     /// Worker threads; 0 = one per available core.
     pub threads: usize,
+    /// Append the phase-disaggregation study (colocated-vs-disagg twin
+    /// cells + the PD1-PD3 triples); bumps the JSON schema to v2.
+    pub disagg: bool,
 }
 
 impl FleetConfig {
@@ -47,6 +51,7 @@ impl FleetConfig {
             replicas,
             policies: ALL_POLICIES.to_vec(),
             threads: 0,
+            disagg: false,
         }
     }
 }
@@ -67,6 +72,46 @@ pub fn fleet_base_cfg(replicas: usize) -> ScenarioCfg {
     cfg
 }
 
+/// The canonical two-pool topology of the disaggregation study: one TP8×PP1
+/// prefill replica beside two TP4×PP2 decode replicas on six nodes.
+pub fn disagg_shapes() -> Vec<ReplicaShape> {
+    vec![
+        ReplicaShape::new(ReplicaRole::Prefill, 8, 1),
+        ReplicaShape::new(ReplicaRole::Decode, 4, 2),
+        ReplicaShape::new(ReplicaRole::Decode, 4, 2),
+    ]
+}
+
+/// Base scenario for the phase-disaggregation study. The 7b cost profile
+/// makes prefill genuinely compute-dominated (the phase asymmetry the
+/// topology exists for); short prompts + short outputs keep the healthy
+/// fleet comfortably inside both pools' capacity.
+pub fn disagg_base_cfg() -> ScenarioCfg {
+    let mut cfg = standard_cfg();
+    cfg.cluster.n_nodes = 6;
+    cfg.cluster.pp_degree = 2;
+    cfg.engine.profile = crate::engine::preset("7b").unwrap();
+    cfg.engine.policy.max_batch = 8;
+    cfg.engine.shapes = Some(disagg_shapes());
+    cfg.workload.arrival = crate::sim::dist::Arrival::Poisson { rate: 500.0 };
+    cfg.workload.prompt_len = crate::sim::dist::LengthDist::Uniform { lo: 8, hi: 16 };
+    cfg.workload.output_len = crate::sim::dist::LengthDist::Uniform { lo: 4, hi: 12 };
+    // PD injections that resolve a victim node target the second decode
+    // replica, mirroring the DP sweep's last-lane convention.
+    cfg.victim_replica = 2;
+    cfg.duration = cfg.duration + SimDur::from_ms(DP_EXTRA_MS);
+    cfg
+}
+
+/// The colocated twin of [`disagg_base_cfg`]: same six nodes, same cost
+/// profile and workload, but three TP4×PP2 colocated replicas — the
+/// topology-comparison baseline.
+pub fn colocated_twin_cfg() -> ScenarioCfg {
+    let mut cfg = disagg_base_cfg();
+    cfg.engine.shapes = Some(vec![ReplicaShape::new(ReplicaRole::Colocated, 4, 2); 3]);
+    cfg
+}
+
 /// One cell of the fleet sweep.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum FleetCell {
@@ -76,6 +121,15 @@ enum FleetCell {
     DpHealthy(Condition),
     DpInjected(Condition),
     DpMitigated(Condition),
+    /// Topology comparison: the colocated twin of the disagg base.
+    DisaggColocatedTwin,
+    /// Topology comparison: the healthy disaggregated base.
+    DisaggHealthy,
+    /// PD condition triples on the disaggregated base (same healthy /
+    /// injected / mitigated discipline as the DP rows).
+    PdHealthy(Condition),
+    PdInjected(Condition),
+    PdMitigated(Condition),
 }
 
 /// The shared shaping every cell of one DP condition's triple (healthy /
@@ -109,6 +163,21 @@ fn dp_shaped(fc: &FleetConfig, c: Condition) -> ScenarioCfg {
     cfg
 }
 
+/// Per-condition shaping of the PD triples, applied on top of
+/// [`disagg_base_cfg`] (the healthy cell shares the shaping, so recovery is
+/// measured like for like).
+fn pd_shaped(c: Condition) -> ScenarioCfg {
+    let mut cfg = disagg_base_cfg();
+    if c == Condition::Pd3DecodeStarvation {
+        // Decode-slot pressure: the wedged replica must actually be the
+        // constraint, so lengthen outputs and raise demand until the decode
+        // pool runs near its slot capacity.
+        cfg.workload.output_len = crate::sim::dist::LengthDist::Uniform { lo: 24, hi: 48 };
+        scale_rate(&mut cfg, 2.0);
+    }
+    cfg
+}
+
 fn cell_cfg(fc: &FleetConfig, cell: FleetCell) -> ScenarioCfg {
     match cell {
         FleetCell::Policy(p) => {
@@ -123,6 +192,31 @@ fn cell_cfg(fc: &FleetConfig, cell: FleetCell) -> ScenarioCfg {
             cfg.mitigate = matches!(cell, FleetCell::DpMitigated(_));
             cfg
         }
+        // The disagg study shapes its own topology/workload/duration, but
+        // inherits the sweep's seed so `--seed` varies its replicates too
+        // (and the report's base_seed stays truthful for the v2 section).
+        FleetCell::DisaggColocatedTwin => {
+            let mut cfg = colocated_twin_cfg();
+            cfg.seed = fc.base.seed;
+            cfg
+        }
+        FleetCell::DisaggHealthy => {
+            let mut cfg = disagg_base_cfg();
+            cfg.seed = fc.base.seed;
+            cfg
+        }
+        FleetCell::PdHealthy(c) => {
+            let mut cfg = pd_shaped(c);
+            cfg.seed = fc.base.seed;
+            cfg
+        }
+        FleetCell::PdInjected(c) | FleetCell::PdMitigated(c) => {
+            let mut cfg = pd_shaped(c);
+            cfg.seed = fc.base.seed;
+            cfg.inject = Some((c, inject_time(&cfg)));
+            cfg.mitigate = matches!(cell, FleetCell::PdMitigated(_));
+            cfg
+        }
     }
 }
 
@@ -133,12 +227,28 @@ fn scale_rate(cfg: &mut ScenarioCfg, factor: f64) {
     }
 }
 
+/// The disagg cell block, in the exact order `disagg_report_from` decodes:
+/// topology twins first, then the PD triples. Shared by the full sweep and
+/// the standalone study so the two cannot drift.
+fn disagg_cells() -> Vec<FleetCell> {
+    let mut v = vec![FleetCell::DisaggColocatedTwin, FleetCell::DisaggHealthy];
+    for c in PD_CONDITIONS {
+        v.push(FleetCell::PdHealthy(c));
+        v.push(FleetCell::PdInjected(c));
+        v.push(FleetCell::PdMitigated(c));
+    }
+    v
+}
+
 fn cells(fc: &FleetConfig) -> Vec<FleetCell> {
     let mut v: Vec<FleetCell> = fc.policies.iter().map(|&p| FleetCell::Policy(p)).collect();
     for c in DP_CONDITIONS {
         v.push(FleetCell::DpHealthy(c));
         v.push(FleetCell::DpInjected(c));
         v.push(FleetCell::DpMitigated(c));
+    }
+    if fc.disagg {
+        v.extend(disagg_cells());
     }
     v
 }
@@ -161,14 +271,20 @@ struct CellOutcome {
     actions: u64,
     /// Telemetry events the cell's pipeline delivered (perf accounting).
     events: u64,
+    /// KV handoffs completed / logical bytes delivered (zero when colocated).
+    handoffs: u64,
+    handoff_bytes: u64,
 }
 
 fn run_cell(fc: &FleetConfig, cell: FleetCell) -> CellOutcome {
     let cfg = cell_cfg(fc, cell);
     let res = Scenario::new(cfg).run();
     let injected = match cell {
-        FleetCell::DpInjected(c) | FleetCell::DpMitigated(c) => Some(c),
-        FleetCell::Policy(_) | FleetCell::DpHealthy(_) => None,
+        FleetCell::DpInjected(c)
+        | FleetCell::DpMitigated(c)
+        | FleetCell::PdInjected(c)
+        | FleetCell::PdMitigated(c) => Some(c),
+        _ => None,
     };
     let t0 = res.injected_at.unwrap_or(SimTime(u64::MAX));
     let detected = injected
@@ -196,6 +312,8 @@ fn run_cell(fc: &FleetConfig, cell: FleetCell) -> CellOutcome {
         latency_ns,
         actions: res.actions.len() as u64,
         events: res.telemetry_published,
+        handoffs: res.handoffs.completed,
+        handoff_bytes: res.handoffs.bytes_delivered,
     }
 }
 
@@ -238,6 +356,23 @@ pub struct DpRow {
     pub actions: u64,
 }
 
+/// The phase-disaggregation study: the colocated-vs-disagg topology twins
+/// plus the PD1-PD3 inject → detect → mitigate triples.
+#[derive(Debug)]
+pub struct DisaggReport {
+    /// Healthy throughput/latency of the colocated twin topology.
+    pub colocated_tok_per_s: f64,
+    pub colocated_ttft_p50_ns: f64,
+    /// Healthy throughput/latency of the disaggregated base topology.
+    pub disagg_tok_per_s: f64,
+    pub disagg_ttft_p50_ns: f64,
+    /// Healthy disagg cell's KV-handoff volume (completed / logical bytes).
+    pub handoffs: u64,
+    pub handoff_bytes: u64,
+    /// PD condition rows (same shape/discipline as the DP rows).
+    pub pd_rows: Vec<DpRow>,
+}
+
 /// Everything a fleet sweep produces.
 #[derive(Debug)]
 pub struct FleetReport {
@@ -245,6 +380,8 @@ pub struct FleetReport {
     pub base_seed: u64,
     pub policy_rows: Vec<PolicyRow>,
     pub dp_rows: Vec<DpRow>,
+    /// The phase-disaggregation section (`--disagg`; bumps JSON to v2).
+    pub disagg: Option<DisaggReport>,
     pub cells_run: usize,
     pub threads_used: usize,
     /// Wall-clock of the parallel cell sweep, ms. Perf metadata: reported
@@ -276,7 +413,8 @@ pub fn run_fleet(fc: &FleetConfig) -> FleetReport {
     let n_pol = fc.policies.len();
     // The DP triples only need scalar outcomes; the policy rows take the
     // per-replica vectors by move (no re-clone of worker results).
-    let dp_outcomes = outcomes.split_off(n_pol);
+    let mut dp_outcomes = outcomes.split_off(n_pol);
+    let disagg_outcomes = dp_outcomes.split_off(3 * DP_CONDITIONS.len());
     let policy_rows: Vec<PolicyRow> = fc
         .policies
         .iter()
@@ -296,13 +434,32 @@ pub fn run_fleet(fc: &FleetConfig) -> FleetReport {
         })
         .collect();
 
-    let mut dp_rows = Vec::with_capacity(DP_CONDITIONS.len());
-    for (k, c) in DP_CONDITIONS.into_iter().enumerate() {
-        // Each condition's triple runs the SAME shaped config, so the
-        // healthy cell is a like-for-like recovery baseline.
-        let healthy = &dp_outcomes[3 * k];
-        let inj = &dp_outcomes[3 * k + 1];
-        let mit = &dp_outcomes[3 * k + 2];
+    let dp_rows = condition_rows(&dp_outcomes, &DP_CONDITIONS);
+    let disagg = if fc.disagg { Some(disagg_report_from(&disagg_outcomes)) } else { None };
+
+    FleetReport {
+        replicas: fc.replicas,
+        base_seed: fc.base.seed,
+        policy_rows,
+        dp_rows,
+        disagg,
+        cells_run: cell_list.len(),
+        threads_used,
+        elapsed_ms,
+        events_total,
+    }
+}
+
+/// Fold healthy/injected/mitigated triples into condition rows. Each triple
+/// runs the SAME shaped config, so the healthy cell is a like-for-like
+/// recovery baseline.
+fn condition_rows(outcomes: &[CellOutcome], conds: &[Condition]) -> Vec<DpRow> {
+    assert_eq!(outcomes.len(), 3 * conds.len());
+    let mut rows = Vec::with_capacity(conds.len());
+    for (k, &c) in conds.iter().enumerate() {
+        let healthy = &outcomes[3 * k];
+        let inj = &outcomes[3 * k + 1];
+        let mit = &outcomes[3 * k + 2];
         let recovery = if healthy.tok_per_s - inj.tok_per_s < 1e-9 {
             Some(1.0)
         } else {
@@ -311,7 +468,7 @@ pub fn run_fleet(fc: &FleetConfig) -> FleetReport {
                     .clamp(0.0, 1.5),
             )
         };
-        dp_rows.push(DpRow {
+        rows.push(DpRow {
             condition: c,
             detected: inj.detected,
             latency_ns: inj.latency_ns,
@@ -324,17 +481,35 @@ pub fn run_fleet(fc: &FleetConfig) -> FleetReport {
             actions: mit.actions,
         });
     }
+    rows
+}
 
-    FleetReport {
-        replicas: fc.replicas,
-        base_seed: fc.base.seed,
-        policy_rows,
-        dp_rows,
-        cells_run: cell_list.len(),
-        threads_used,
-        elapsed_ms,
-        events_total,
+/// Aggregate the disagg block (twin, healthy, then the PD triples) into a
+/// [`DisaggReport`].
+fn disagg_report_from(outcomes: &[CellOutcome]) -> DisaggReport {
+    assert_eq!(outcomes.len(), 2 + 3 * PD_CONDITIONS.len());
+    let twin = &outcomes[0];
+    let healthy = &outcomes[1];
+    DisaggReport {
+        colocated_tok_per_s: twin.tok_per_s,
+        colocated_ttft_p50_ns: twin.ttft_p50_ns,
+        disagg_tok_per_s: healthy.tok_per_s,
+        disagg_ttft_p50_ns: healthy.ttft_p50_ns,
+        handoffs: healthy.handoffs,
+        handoff_bytes: healthy.handoff_bytes,
+        pd_rows: condition_rows(&outcomes[2..], &PD_CONDITIONS),
     }
+}
+
+/// Run only the phase-disaggregation study (the `--disagg` block without
+/// the v1 policy/DP cells) — the disagg acceptance suite's entrypoint.
+/// Uses the default sweep seed; disagg cells only take the seed from the
+/// FleetConfig, so the rest of it is irrelevant here.
+pub fn run_disagg_study(threads: usize) -> DisaggReport {
+    let fc = FleetConfig::new(2);
+    let cell_list = disagg_cells();
+    let outcomes = parallel_map(&cell_list, threads, |&cell| run_cell(&fc, cell));
+    disagg_report_from(&outcomes)
 }
 
 impl FleetReport {
@@ -383,6 +558,9 @@ impl FleetReport {
             ]);
         }
         out.push_str(&d.render());
+        if let Some(disagg) = &self.disagg {
+            out.push_str(&disagg.render_tables());
+        }
         out
     }
 
@@ -399,6 +577,14 @@ impl FleetReport {
             detected,
             self.dp_rows.len()
         );
+        if let Some(d) = &self.disagg {
+            let pd = d.pd_rows.iter().filter(|r| r.detected).count();
+            s.push_str(&format!(
+                "; PD conditions detected {pd}/{} on the 2-pool topology ({} handoffs)",
+                d.pd_rows.len(),
+                d.handoffs
+            ));
+        }
         if let Some(b) = best {
             s.push_str(&format!(
                 "; best healthy policy {} at {:.0} tok/s (token skew {:.2})",
@@ -412,6 +598,8 @@ impl FleetReport {
 
     /// Deterministic JSON: same config + seed ⇒ byte-identical output,
     /// independent of worker-thread count (wallclock/threads excluded).
+    /// Without `--disagg` this is schema v1, byte-identical to the pre-PD
+    /// output; the disagg section bumps it to `dpulens.fleet.v2`.
     pub fn to_json(&self) -> Json {
         let mut policies = Json::arr();
         for r in &self.policy_rows {
@@ -438,31 +626,100 @@ impl FleetReport {
                     .set("replica_kv_peak", peaks),
             );
         }
-        let mut dp = Json::arr();
-        for r in &self.dp_rows {
-            dp.push(
-                Json::obj()
-                    .set("id", r.condition.id())
-                    .set("detected", r.detected)
-                    .set(
-                        "latency_ns",
-                        r.latency_ns.map(|n| Json::Int(n as i64)).unwrap_or(Json::Null),
-                    )
-                    .set("healthy_tok_per_s", r.healthy_tok_per_s)
-                    .set("injected_tok_per_s", r.injected_tok_per_s)
-                    .set("mitigated_tok_per_s", r.mitigated_tok_per_s)
-                    .set("recovery", r.recovery.map(Json::Num).unwrap_or(Json::Null))
-                    .set("injected_token_skew", r.injected_token_skew)
-                    .set("mitigated_token_skew", r.mitigated_token_skew)
-                    .set("actions", r.actions),
-            );
-        }
-        Json::obj()
-            .set("schema", "dpulens.fleet.v1")
+        let dp = condition_rows_json(&self.dp_rows);
+        let schema = if self.disagg.is_some() { "dpulens.fleet.v2" } else { "dpulens.fleet.v1" };
+        let mut out = Json::obj()
+            .set("schema", schema)
             .set("replicas", self.replicas)
             .set("base_seed", self.base_seed)
             .set("policies", policies)
-            .set("dp_conditions", dp)
+            .set("dp_conditions", dp);
+        if let Some(d) = &self.disagg {
+            out = out.set("disagg", d.to_json());
+        }
+        out
+    }
+}
+
+fn condition_rows_json(rows: &[DpRow]) -> Json {
+    let mut arr = Json::arr();
+    for r in rows {
+        arr.push(
+            Json::obj()
+                .set("id", r.condition.id())
+                .set("detected", r.detected)
+                .set(
+                    "latency_ns",
+                    r.latency_ns.map(|n| Json::Int(n as i64)).unwrap_or(Json::Null),
+                )
+                .set("healthy_tok_per_s", r.healthy_tok_per_s)
+                .set("injected_tok_per_s", r.injected_tok_per_s)
+                .set("mitigated_tok_per_s", r.mitigated_tok_per_s)
+                .set("recovery", r.recovery.map(Json::Num).unwrap_or(Json::Null))
+                .set("injected_token_skew", r.injected_token_skew)
+                .set("mitigated_token_skew", r.mitigated_token_skew)
+                .set("actions", r.actions),
+        );
+    }
+    arr
+}
+
+impl DisaggReport {
+    /// The deterministic `disagg` JSON section of `dpulens.fleet.v2`.
+    pub fn to_json(&self) -> Json {
+        let mut shapes = Json::arr();
+        for s in disagg_shapes() {
+            shapes.push(s.label());
+        }
+        Json::obj()
+            .set("topology", shapes)
+            .set("colocated_tok_per_s", self.colocated_tok_per_s)
+            .set("colocated_ttft_p50_ns", self.colocated_ttft_p50_ns)
+            .set("disagg_tok_per_s", self.disagg_tok_per_s)
+            .set("disagg_ttft_p50_ns", self.disagg_ttft_p50_ns)
+            .set("handoffs", self.handoffs)
+            .set("handoff_bytes", self.handoff_bytes)
+            .set("pd_conditions", condition_rows_json(&self.pd_rows))
+    }
+
+    /// Paper-style tables for the disaggregation study.
+    pub fn render_tables(&self) -> String {
+        let mut t = Table::new("Phase disaggregation — colocated twin vs 2-pool topology")
+            .header(&["topology", "tok/s", "ttft p50", "handoffs", "handoff MB"]);
+        t.row(vec![
+            "colocated 3x(tp4xpp2)".into(),
+            format!("{:.0}", self.colocated_tok_per_s),
+            fmt_ns(self.colocated_ttft_p50_ns),
+            "0".into(),
+            "0".into(),
+        ]);
+        t.row(vec![
+            "prefill tp8 + 2x decode tp4xpp2".into(),
+            format!("{:.0}", self.disagg_tok_per_s),
+            fmt_ns(self.disagg_ttft_p50_ns),
+            format!("{}", self.handoffs),
+            format!("{:.1}", self.handoff_bytes as f64 / 1e6),
+        ]);
+        let mut out = t.render();
+        let mut d = Table::new("PD condition family — inject, detect, mitigate (2-pool topology)")
+            .header(&[
+                "id", "detected", "latency", "healthy tok/s", "injected", "mitigated",
+                "recovered", "actions",
+            ]);
+        for r in &self.pd_rows {
+            d.row(vec![
+                r.condition.id().to_string(),
+                if r.detected { "yes".into() } else { "NO".into() },
+                r.latency_ns.map(|n| fmt_ns(n as f64)).unwrap_or_else(|| "-".into()),
+                format!("{:.0}", r.healthy_tok_per_s),
+                format!("{:.0}", r.injected_tok_per_s),
+                format!("{:.0}", r.mitigated_tok_per_s),
+                r.recovery.map(|f| format!("{:.0}%", f * 100.0)).unwrap_or_else(|| "-".into()),
+                format!("{}", r.actions),
+            ]);
+        }
+        out.push_str(&d.render());
+        out
     }
 }
 
@@ -480,6 +737,66 @@ mod tests {
         let plans =
             crate::engine::build_replicas(&cfg.cluster, cfg.engine.nodes_per_stage);
         assert_eq!(plans.len(), 4);
+    }
+
+    #[test]
+    fn disagg_configs_shape_the_two_pool_topology() {
+        let cfg = disagg_base_cfg();
+        cfg.cluster.validate().unwrap();
+        assert_eq!(cfg.cluster.n_nodes, 6);
+        let shapes = cfg.engine.shapes.as_ref().unwrap();
+        assert_eq!(shapes.len(), 3);
+        assert_eq!(shapes[0].role, ReplicaRole::Prefill);
+        assert_eq!(cfg.victim_replica, 2);
+        let plans = crate::engine::build_shaped_replicas(&cfg.cluster, shapes);
+        assert_eq!(plans.len(), 3);
+        // The colocated twin shares nodes/profile/workload but no pools.
+        let twin = colocated_twin_cfg();
+        assert_eq!(twin.cluster.n_nodes, cfg.cluster.n_nodes);
+        assert_eq!(twin.engine.profile.name, cfg.engine.profile.name);
+        assert!(twin
+            .engine
+            .shapes
+            .as_ref()
+            .unwrap()
+            .iter()
+            .all(|s| s.role == ReplicaRole::Colocated));
+    }
+
+    #[test]
+    fn disagg_cells_append_after_the_v1_sweep() {
+        let mut fc = FleetConfig::new(2);
+        assert_eq!(cells(&fc).len(), fc.policies.len() + 3 * DP_CONDITIONS.len());
+        fc.disagg = true;
+        let v = cells(&fc);
+        assert_eq!(
+            v.len(),
+            fc.policies.len() + 3 * DP_CONDITIONS.len() + 2 + 3 * PD_CONDITIONS.len()
+        );
+        let base = fc.policies.len() + 3 * DP_CONDITIONS.len();
+        assert_eq!(v[base], FleetCell::DisaggColocatedTwin);
+        assert_eq!(v[base + 1], FleetCell::DisaggHealthy);
+        assert_eq!(v[base + 2], FleetCell::PdHealthy(Condition::Pd1PrefillSaturation));
+        // PD triples share shaping; only inject/mitigate differ.
+        let healthy = cell_cfg(&fc, v[base + 2]);
+        let inj = cell_cfg(&fc, v[base + 3]);
+        let mit = cell_cfg(&fc, v[base + 4]);
+        assert!(healthy.inject.is_none() && !healthy.mitigate);
+        assert!(inj.inject.is_some() && !inj.mitigate);
+        assert!(mit.inject.is_some() && mit.mitigate);
+        assert_eq!(healthy.duration, inj.duration);
+        // PD3's shaping presses on decode slots.
+        let pd3 = cell_cfg(&fc, FleetCell::PdHealthy(Condition::Pd3DecodeStarvation));
+        assert!(matches!(
+            pd3.workload.output_len,
+            crate::sim::dist::LengthDist::Uniform { lo: 24, .. }
+        ));
+        // The sweep's seed reaches every disagg cell (so --seed varies the
+        // v2 section too, and base_seed in the JSON stays truthful).
+        fc.base.seed = 777;
+        for cell in disagg_cells() {
+            assert_eq!(cell_cfg(&fc, cell).seed, 777, "{cell:?} ignored the sweep seed");
+        }
     }
 
     #[test]

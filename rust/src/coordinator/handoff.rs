@@ -1,0 +1,113 @@
+//! The prefill→decode phase transition on a disaggregated fleet: launch the
+//! KV handoff over the fabric, land it on the decode pool, and adopt the
+//! sequence into its new replica's decode loop.
+//!
+//! The handoff is ordinary east-west traffic (RDMA + a KvTransfer burst at
+//! the destination), which is exactly why the paper's DPU vantage can see a
+//! disaggregated fleet's phase boundary at all: what a colocated engine
+//! keeps in HBM becomes wire bytes here. Accounting is strictly conserved —
+//! every started handoff either lands (bytes_delivered grows by its exact
+//! size) or is still on the fabric when the run ends.
+
+use crate::engine::AllocResult;
+use crate::ids::ReqId;
+use crate::sim::SimTime;
+use crate::workload::request::ReqState;
+
+use super::scenario::Scenario;
+use super::world::Ev;
+
+impl Scenario {
+    /// Prefill completed for `id` on `from_replica` and the request still
+    /// has tokens to generate: close the admission router's accounting,
+    /// pick a decode replica, and stream the KV across the fabric.
+    pub(crate) fn start_handoff(&mut self, from_replica: usize, id: ReqId, now: SimTime) {
+        // Prefill capacity is free the moment the batch completes.
+        self.engine.router.complete(from_replica);
+        let to = self.engine.route_decode(id);
+        let bytes = {
+            let r = self.engine.request(id);
+            self.cfg
+                .engine
+                .profile
+                .kv_bytes(r.prompt_len() + r.tokens_generated())
+                .max(512)
+        };
+        {
+            let r = self.engine.request_mut(id);
+            r.state = ReqState::KvHandoff;
+            r.handoff_start = Some(now);
+            r.kv_handoff_bytes = bytes;
+        }
+        self.handoff_stats.started += 1;
+        self.handoff_stats.bytes_sent += bytes;
+        let src = self.exit_node(from_replica);
+        let dst = self.entry_node(to);
+        let coll = self.handoff_colls.next();
+        let arrive = self.cluster.kv_handoff(now, src, dst, bytes, coll, &mut self.outbox);
+        self.flush_outbox();
+        self.cal.schedule_at(arrive, Ev::KvHandoffDone { req: id, to });
+    }
+
+    /// The handoff's last byte arrived at decode replica `to`: adopt the
+    /// sequence now, or park it until the replica can admit.
+    pub(crate) fn on_kv_handoff_done(&mut self, id: ReqId, to: usize, now: SimTime) {
+        self.handoff_stats.completed += 1;
+        self.handoff_stats.arrivals_per_replica[to] += 1;
+        let bytes = {
+            let r = self.engine.request_mut(id);
+            r.handoff_done = Some(now);
+            r.kv_handoff_bytes
+        };
+        self.handoff_stats.bytes_delivered += bytes;
+        if let Some(lat) = self.engine.request(id).handoff_latency() {
+            self.handoff_stats.lat_sum_ns += lat.ns();
+        }
+        if !self.try_adopt(to, id, now) {
+            self.handoff_stats.stalled_waits += 1;
+            self.handoff_wait[to].push_back(id);
+        }
+    }
+
+    /// Attempt to seat a landed handoff in `replica`'s decode loop: a free
+    /// decode slot, a free backend slot, and KV pages for the full context.
+    /// Returns false (state untouched) when the replica cannot admit yet.
+    fn try_adopt(&mut self, replica: usize, id: ReqId, now: SimTime) -> bool {
+        let (tokens, generated, budget) = {
+            let r = self.engine.request(id);
+            (
+                (r.prompt_len() + r.tokens_generated()) as u32,
+                r.tokens_generated() as u32,
+                r.max_new_tokens as u32,
+            )
+        };
+        if self.engine.replicas[replica].batcher.free_slots() == 0
+            || self.free_slots[replica].is_empty()
+        {
+            return false;
+        }
+        if self.engine.replicas[replica].kv.admit(id, tokens) != AllocResult::Ok {
+            return false;
+        }
+        let slot = self.free_slots[replica].pop().unwrap();
+        self.slot_of.insert(id, slot);
+        // Position sits one past the whole context, exactly where a
+        // colocated replica would be after its own prefill + first token.
+        self.engine.replicas[replica].batcher.adopt(id, tokens, generated, budget);
+        self.engine.request_mut(id).state = ReqState::Decoding;
+        self.kick(replica, now);
+        true
+    }
+
+    /// Seat as many parked handoffs as `replica` can now admit (called when
+    /// retirement frees capacity and at every window tick).
+    pub(crate) fn drain_handoff_wait(&mut self, replica: usize, now: SimTime) {
+        while let Some(&id) = self.handoff_wait[replica].front() {
+            if self.try_adopt(replica, id, now) {
+                self.handoff_wait[replica].pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+}

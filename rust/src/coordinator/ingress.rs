@@ -91,8 +91,16 @@ impl Scenario {
         if last {
             r.done_at = Some(now);
             r.state = ReqState::Done;
+            let transitioned = r.transitioned();
             let replica = self.engine.placement[&req];
-            self.engine.router.complete(replica);
+            // A request that crossed the pool boundary closed its admission
+            // accounting at the handoff; its terminal completion belongs to
+            // the decode router.
+            if transitioned {
+                self.engine.decode_router.complete(replica);
+            } else {
+                self.engine.router.complete(replica);
+            }
             let node = self.exit_node(replica);
             let flow = egress_flow(req);
             // Single dispatch: the bus delivers this to the node's DPU agent

@@ -1,7 +1,10 @@
 //! Per-replica iteration driving: batch formation and KV admission, the
 //! prefill/decode execution handoff to the compute backends, token egress,
-//! and retirement of finished sequences.
+//! and retirement of finished sequences. On disaggregated fleets a
+//! completed prefill hands its sequences to `coordinator::handoff` instead
+//! of its own decode loop.
 
+use crate::cluster::ReplicaRole;
 use crate::engine::exec::{run_iteration, IterKind};
 use crate::engine::Work;
 use crate::ids::ReqId;
@@ -126,21 +129,43 @@ impl Scenario {
                 let prompts: Vec<Vec<i32>> =
                     reqs.iter().map(|id| self.engine.request(*id).prompt.clone()).collect();
                 let first_tokens = self.backends[replica].prefill(&slots, &prompts);
-                let specs: Vec<(ReqId, u32, u32)> = reqs
-                    .iter()
-                    .zip(&prompt_lens)
-                    .map(|(id, &plen)| (*id, plen, self.engine.request(*id).max_new_tokens as u32))
-                    .collect();
-                self.engine.replicas[replica].batcher.start_decode(&specs);
-                for ((id, tok), _plen) in reqs.iter().zip(first_tokens).zip(&prompt_lens) {
-                    let r = self.engine.request_mut(*id);
-                    r.state = ReqState::Decoding;
-                    r.generated.push(tok);
-                    self.sw_window.record(SwSignal::DecodeProgress, r.generated.len() as f64);
-                    let finished = self.engine.replicas[replica].batcher.on_token(*id);
-                    self.emit_token(replica, *id, now, finished);
-                    if finished {
+                if self.engine.replicas[replica].plan.shape.role == ReplicaRole::Prefill {
+                    // Phase transition: the prefill pool produced the first
+                    // token; everything still decoding crosses the pool
+                    // boundary as an explicit KV handoff.
+                    for (id, tok) in reqs.iter().zip(first_tokens) {
+                        let r = self.engine.request_mut(*id);
+                        r.generated.push(tok);
+                        let finished = r.generated.len() >= r.max_new_tokens;
+                        if !finished {
+                            r.state = ReqState::KvHandoff;
+                        }
+                        self.sw_window.record(SwSignal::DecodeProgress, 1.0);
+                        self.emit_token(replica, *id, now, finished);
                         self.retire(replica, *id);
+                        if !finished {
+                            self.start_handoff(replica, *id, now);
+                        }
+                    }
+                } else {
+                    let specs: Vec<(ReqId, u32, u32)> = reqs
+                        .iter()
+                        .zip(&prompt_lens)
+                        .map(|(id, &plen)| {
+                            (*id, plen, self.engine.request(*id).max_new_tokens as u32)
+                        })
+                        .collect();
+                    self.engine.replicas[replica].batcher.start_decode(&specs);
+                    for ((id, tok), _plen) in reqs.iter().zip(first_tokens).zip(&prompt_lens) {
+                        let r = self.engine.request_mut(*id);
+                        r.state = ReqState::Decoding;
+                        r.generated.push(tok);
+                        self.sw_window.record(SwSignal::DecodeProgress, r.generated.len() as f64);
+                        let finished = self.engine.replicas[replica].batcher.on_token(*id);
+                        self.emit_token(replica, *id, now, finished);
+                        if finished {
+                            self.retire(replica, *id);
+                        }
                     }
                 }
             }
@@ -187,12 +212,20 @@ impl Scenario {
         self.cal.schedule_at(done, Ev::EgressDone { req: id, last });
     }
 
-    /// Free a finished sequence's batcher slot, KV pages, and backend slot.
+    /// Free a finished sequence's batcher slot, KV pages, and backend slot;
+    /// freed decode capacity immediately seats any parked KV handoffs.
     pub(crate) fn retire(&mut self, replica: usize, id: ReqId) {
         self.engine.replicas[replica].batcher.finish(id);
         self.engine.replicas[replica].kv.release(id);
         if let Some(slot) = self.slot_of.remove(&id) {
             self.free_slots[replica].push(slot);
+        }
+        if !self.handoff_wait[replica].is_empty() {
+            // `retire` runs inside finish_iteration's token loop, so adopt
+            // at the current sim time; the adopted sequence joins the next
+            // decode round.
+            let now = self.cal.now();
+            self.drain_handoff_wait(replica, now);
         }
     }
 }

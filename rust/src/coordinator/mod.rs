@@ -20,6 +20,7 @@
 
 pub mod experiment;
 pub mod fleet;
+pub mod handoff;
 pub mod ingress;
 pub mod iterate;
 pub mod matrix;
@@ -30,8 +31,9 @@ pub mod scenario;
 pub mod world;
 
 pub use experiment::{condition_experiment, ConditionReport};
-pub use fleet::{run_fleet, FleetConfig, FleetReport};
+pub use fleet::{run_disagg_study, run_fleet, DisaggReport, FleetConfig, FleetReport};
 pub use ingress::target_node_for;
 pub use matrix::{run_matrix, run_sweep, MatrixConfig, MatrixReport};
 pub use perf::{run_perf, PerfConfig, PerfReport};
 pub use scenario::{RunResult, Scenario, ScenarioCfg};
+pub use world::HandoffStats;

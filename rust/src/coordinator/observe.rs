@@ -3,7 +3,7 @@
 //! sensor fed from the router vantage, and the closed mitigation loop.
 
 use crate::dpu::attribution::attribute;
-use crate::dpu::fleet::FleetSample;
+use crate::dpu::fleet::{FleetSample, PdSample};
 use crate::sim::SimTime;
 
 use super::scenario::Scenario;
@@ -59,11 +59,24 @@ impl Scenario {
         }
         for r in 0..n {
             self.engine.router.update_telemetry(r, queue_depth[r] as f64, kv_occ[r]);
+            self.engine.decode_router.update_telemetry(r, queue_depth[r] as f64, kv_occ[r]);
+        }
+        // Disaggregated fleets: decode capacity freed since the last tick
+        // may be able to seat parked handoffs even if no retirement ran.
+        if self.engine.is_disaggregated() {
+            for r in 0..n {
+                if !self.handoff_wait[r].is_empty() {
+                    self.drain_handoff_wait(r, now);
+                }
+            }
         }
         if !self.dpu.is_calibrating() {
+            // Mitigation may have shifted replica roles since the last
+            // window; skew is judged against the *current* pools.
+            self.fleet.sync_pools(&self.engine.roles());
             let sample = FleetSample {
                 routed: self.engine.router.routed_per_replica().to_vec(),
-                queue_depth,
+                queue_depth: queue_depth.clone(),
                 kv_occupancy: kv_occ,
                 iterations: self.engine.replicas.iter().map(|r| r.iterations).collect(),
                 alloc_failures: self.engine.replicas.iter().map(|r| r.kv.alloc_failures).collect(),
@@ -74,6 +87,34 @@ impl Scenario {
                 // feeds attribution, mitigation, and the result bundle.
                 self.dpu.detections.extend(fleet_fired.iter().cloned());
                 detections.extend(fleet_fired);
+            }
+            if self.engine.is_disaggregated() {
+                let pd = PdSample {
+                    prefill_queue: queue_depth,
+                    decode_running: self
+                        .engine
+                        .replicas
+                        .iter()
+                        .map(|r| r.batcher.running().len() as u64)
+                        .collect(),
+                    decode_slots: self
+                        .engine
+                        .replicas
+                        .iter()
+                        .map(|r| r.batcher.policy().max_batch as u64)
+                        .collect(),
+                    handoff_arrivals: self.handoff_stats.arrivals_per_replica.clone(),
+                    handoffs_started: self.handoff_stats.started,
+                    handoffs_completed: self.handoff_stats.completed,
+                    handoff_lat_sum_ns: self.handoff_stats.lat_sum_ns,
+                    handoff_bytes: self.handoff_stats.bytes_delivered,
+                    stalled_wait_depth: self.handoff_wait.iter().map(|q| q.len() as u64).sum(),
+                };
+                let pd_fired = self.fleet.pd_window_tick(now, pd);
+                if !pd_fired.is_empty() {
+                    self.dpu.detections.extend(pd_fired.iter().cloned());
+                    detections.extend(pd_fired);
+                }
             }
         }
 

@@ -10,7 +10,7 @@
 //! the dispatch loop — byte-deterministic for a given config regardless of
 //! host thread counts.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::cluster::{Cluster, ClusterSpec, Outbox};
 use crate::dpu::agent::DpuPlane;
@@ -27,7 +27,7 @@ use crate::telemetry::sw::SwWindow;
 use crate::telemetry::TelemetryBus;
 use crate::workload::generator::{WorkloadGen, WorkloadSpec};
 
-use super::world::{Ev, PendingIter};
+use super::world::{Ev, HandoffStats, PendingIter};
 
 /// Scenario configuration.
 #[derive(Debug, Clone)]
@@ -100,11 +100,23 @@ pub struct RunResult {
     pub replica_kv_peak: Vec<f64>,
     pub real_compute: bool,
     pub class_counts: std::collections::HashMap<&'static str, u64>,
+    /// Cumulative prefill→decode KV-handoff accounting (zeros when the
+    /// fleet is colocated).
+    pub handoffs: HandoffStats,
+    /// Handoffs that arrived but were still parked awaiting decode-side
+    /// admission when the run ended.
+    pub handoffs_parked_at_end: u64,
 }
 
 impl RunResult {
     pub fn detected(&self, c: Condition) -> bool {
         self.detections.iter().any(|d| d.condition == c)
+    }
+
+    /// Handoffs launched but not yet landed when the run ended (their bytes
+    /// account for any sent/delivered gap).
+    pub fn handoffs_inflight_at_end(&self) -> u64 {
+        self.handoffs.started - self.handoffs.completed
     }
 
     pub fn detection_latency(&self, c: Condition) -> Option<SimDur> {
@@ -139,6 +151,12 @@ pub struct Scenario {
     pub(crate) iterations: u64,
     pub(crate) attributions: Vec<Attribution>,
     pub(crate) kv_peak: Vec<f64>,
+    /// Arrived-but-unadopted KV handoffs per decode replica (admission was
+    /// full on arrival; drained on retire and at window ticks).
+    pub(crate) handoff_wait: Vec<VecDeque<ReqId>>,
+    /// Collective-id allocator for cross-pool handoff bursts.
+    pub(crate) handoff_colls: crate::engine::CollSeq,
+    pub(crate) handoff_stats: HandoffStats,
     pub(crate) real_compute: bool,
 }
 
@@ -161,6 +179,7 @@ impl Scenario {
                 }
                 Ev::IterDone(replica) => self.finish_iteration(replica, now),
                 Ev::EgressDone { req, last } => self.on_egress_done(req, last, now),
+                Ev::KvHandoffDone { req, to } => self.on_kv_handoff_done(req, to, now),
                 Ev::WindowTick => {
                     self.on_window_tick(now);
                     if now < end {

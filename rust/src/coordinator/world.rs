@@ -11,7 +11,7 @@ use crate::dpu::detectors::DetectConfig;
 use crate::dpu::fleet::FleetSensor;
 use crate::dpu::swdet::SwSuite;
 use crate::engine::exec::{ComputeBackend, IterKind, SurrogateBackend};
-use crate::engine::{build_replicas, Engine};
+use crate::engine::{build_replicas, build_shaped_replicas, CollSeq, Engine};
 use crate::ids::{NodeId, ReqId};
 use crate::metrics::ServeMetrics;
 use crate::sim::{Engine as Calendar, SimTime};
@@ -35,8 +35,29 @@ pub(crate) enum Ev {
     Iterate(usize),
     IterDone(usize),
     EgressDone { req: ReqId, last: bool },
+    /// A prefill→decode KV handoff's last byte arrived at decode replica
+    /// `to` (disaggregated fleets only).
+    KvHandoffDone { req: ReqId, to: usize },
     WindowTick,
     End,
+}
+
+/// Cumulative KV-handoff accounting for one run (all zeros on colocated
+/// fleets). `bytes_sent` counts at handoff launch, `bytes_delivered` at
+/// fabric arrival — the conservation pair the property suite checks.
+#[derive(Debug, Default, Clone)]
+pub struct HandoffStats {
+    pub started: u64,
+    pub completed: u64,
+    pub bytes_sent: u64,
+    pub bytes_delivered: u64,
+    /// Sum of fabric latencies over completed handoffs, ns.
+    pub lat_sum_ns: u64,
+    /// Cumulative handoff arrivals per replica (decode-pool skew signal).
+    pub arrivals_per_replica: Vec<u64>,
+    /// Arrivals that could not be adopted immediately (decode admission
+    /// full) and were parked on the wait queue.
+    pub stalled_waits: u64,
 }
 
 /// An iteration in flight on one replica.
@@ -47,12 +68,21 @@ pub(crate) struct PendingIter {
     pub(crate) started: SimTime,
 }
 
+/// Replica plans for a scenario config: heterogeneous shapes when the
+/// engine declares pools, the uniform colocated layout otherwise.
+fn build_plans(cfg: &ScenarioCfg) -> Vec<crate::engine::ParallelPlan> {
+    match &cfg.engine.shapes {
+        Some(shapes) => build_shaped_replicas(&cfg.cluster, shapes),
+        None => build_replicas(&cfg.cluster, cfg.engine.nodes_per_stage),
+    }
+}
+
 impl Scenario {
     /// Build with surrogate (sim-only) compute backends.
     pub fn new(cfg: ScenarioCfg) -> Self {
         cfg.cluster.validate().expect("bad cluster spec");
         let vocab = cfg.engine.profile.vocab;
-        let plans = build_replicas(&cfg.cluster, cfg.engine.nodes_per_stage);
+        let plans = build_plans(&cfg);
         let backends: Vec<Box<dyn ComputeBackend>> = (0..plans.len())
             .map(|_| Box::new(SurrogateBackend::new(vocab)) as Box<dyn ComputeBackend>)
             .collect();
@@ -63,7 +93,7 @@ impl Scenario {
     /// `TransformerSession`), one per replica.
     pub fn with_backends(cfg: ScenarioCfg, backends: Vec<Box<dyn ComputeBackend>>) -> Self {
         cfg.cluster.validate().expect("bad cluster spec");
-        let plans = build_replicas(&cfg.cluster, cfg.engine.nodes_per_stage);
+        let plans = build_plans(&cfg);
         Self::assemble(cfg, plans, backends)
     }
 
@@ -95,7 +125,7 @@ impl Scenario {
             sw_suite: SwSuite::new(),
             sw_window: SwWindow::new(),
             controller: crate::mitigation::Controller::new(cfg.mitigate),
-            fleet: FleetSensor::new(n_rep, entry_nodes),
+            fleet: FleetSensor::new(n_rep, entry_nodes, engine.roles(), cfg.cluster.nic_bw),
             bus: TelemetryBus::new(cfg.cluster.n_nodes),
             cal: Calendar::new(),
             gen,
@@ -111,6 +141,12 @@ impl Scenario {
             iterations: 0,
             attributions: Vec::new(),
             kv_peak: vec![0.0; n_rep],
+            handoff_wait: (0..n_rep).map(|_| Default::default()).collect(),
+            handoff_colls: CollSeq::default(),
+            handoff_stats: HandoffStats {
+                arrivals_per_replica: vec![0; n_rep],
+                ..Default::default()
+            },
             engine,
             real_compute: real,
             cfg,
@@ -168,8 +204,11 @@ impl Scenario {
             span,
         );
         let sw_alarm_log = std::mem::take(&mut self.sw_suite.detections);
+        let handoff_parked: u64 = self.handoff_wait.iter().map(|q| q.len() as u64).sum();
         RunResult {
             metrics,
+            handoffs: std::mem::take(&mut self.handoff_stats),
+            handoffs_parked_at_end: handoff_parked,
             detections: std::mem::take(&mut self.dpu.detections),
             attributions: self.attributions,
             sw_detections: sw_alarm_log.len(),

@@ -61,6 +61,11 @@ fn default_cause(c: Condition, node: NodeId) -> RootCause {
         // (network infrastructure); DP2/DP3 localize to the hot/slow replica.
         Dp1RouterFlowSkew => RootCause::NetworkSide,
         Dp2HotReplicaKv | Dp3StragglerReplica => RootCause::GpuSide(node),
+        // Phase-disaggregation family: PD1 is demand-vs-pool-sizing (the
+        // clients' prompt mix overran the prefill pool); PD2/PD3 are the
+        // handoff path/routing — network infrastructure between pools.
+        Pd1PrefillSaturation => RootCause::ClientSide,
+        Pd2KvHandoffStall | Pd3DecodeStarvation => RootCause::NetworkSide,
     }
 }
 

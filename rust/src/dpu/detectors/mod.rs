@@ -52,6 +52,12 @@ pub enum Condition {
     Dp1RouterFlowSkew,
     Dp2HotReplicaKv,
     Dp3StragglerReplica,
+    // Phase-disaggregation family (prefill/decode pools + KV handoff) — the
+    // pathologies only a pool-split topology can exhibit, sensed from the
+    // router/handoff vantage where the pool boundary is network traffic.
+    Pd1PrefillSaturation,
+    Pd2KvHandoffStall,
+    Pd3DecodeStarvation,
 }
 
 pub const ALL_CONDITIONS: [Condition; 28] = [
@@ -95,6 +101,16 @@ pub const DP_CONDITIONS: [Condition; 3] = [
     Condition::Dp3StragglerReplica,
 ];
 
+/// The phase-disaggregation condition family (prefill-pool saturation,
+/// KV-handoff stall, decode-pool starvation). Sensed by `dpu::fleet` from
+/// the pool-boundary vantage; inert on colocated fleets, so neither the
+/// 28-condition matrix nor the v1 fleet study ever sees them.
+pub const PD_CONDITIONS: [Condition; 3] = [
+    Condition::Pd1PrefillSaturation,
+    Condition::Pd2KvHandoffStall,
+    Condition::Pd3DecodeStarvation,
+];
+
 impl Condition {
     pub fn id(&self) -> &'static str {
         use Condition::*;
@@ -130,11 +146,15 @@ impl Condition {
             Dp1RouterFlowSkew => "DP1",
             Dp2HotReplicaKv => "DP2",
             Dp3StragglerReplica => "DP3",
+            Pd1PrefillSaturation => "PD1",
+            Pd2KvHandoffStall => "PD2",
+            Pd3DecodeStarvation => "PD3",
         }
     }
 
     /// Which runbook table the condition belongs to ("3a"-"3c" are the
-    /// paper's; "dp" is the data-parallel fleet extension).
+    /// paper's; "dp" is the data-parallel fleet extension, "pd" the
+    /// phase-disaggregation family).
     pub fn table(&self) -> &'static str {
         let id = self.id();
         if id.starts_with("NS") {
@@ -143,8 +163,10 @@ impl Condition {
             "3b"
         } else if id.starts_with("EW") {
             "3c"
-        } else {
+        } else if id.starts_with("DP") {
             "dp"
+        } else {
+            "pd"
         }
     }
 
@@ -152,6 +174,7 @@ impl Condition {
         ALL_CONDITIONS
             .iter()
             .chain(DP_CONDITIONS.iter())
+            .chain(PD_CONDITIONS.iter())
             .copied()
             .find(|c| c.id() == id)
     }
@@ -317,7 +340,7 @@ mod tests {
         for c in ALL_CONDITIONS {
             assert_eq!(Condition::from_id(c.id()), Some(c));
         }
-        for c in DP_CONDITIONS {
+        for c in DP_CONDITIONS.into_iter().chain(PD_CONDITIONS) {
             assert_eq!(Condition::from_id(c.id()), Some(c));
         }
         assert_eq!(Condition::from_id("XX"), None);
@@ -325,8 +348,9 @@ mod tests {
         assert_eq!(Condition::Pc5PcieSaturation.table(), "3b");
         assert_eq!(Condition::Ew8KvBottleneck.table(), "3c");
         assert_eq!(Condition::Dp1RouterFlowSkew.table(), "dp");
-        // The DP family stays off the per-node detector diagonal.
-        for c in DP_CONDITIONS {
+        assert_eq!(Condition::Pd2KvHandoffStall.table(), "pd");
+        // The DP/PD families stay off the per-node detector diagonal.
+        for c in DP_CONDITIONS.into_iter().chain(PD_CONDITIONS) {
             assert!(!ALL_CONDITIONS.contains(&c));
         }
     }

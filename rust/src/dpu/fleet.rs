@@ -1,5 +1,6 @@
 //! Fleet-level (cross-replica) skew sensing from the router/LB vantage —
-//! the data-parallel condition family DP1-DP3.
+//! the data-parallel condition family DP1-DP3 and the phase-disaggregation
+//! family PD1-PD3.
 //!
 //! A DPU sitting bump-in-the-wire in front of the load balancer sees
 //! per-replica flow volume, queue drain, and admission behavior even when
@@ -13,11 +14,29 @@
 //! * **DP3 — straggler replica**: one replica's backlog dominates the fleet
 //!   while its iteration rate lags the peers that are keeping up.
 //!
+//! Skew is only defined among *like* replicas, so every DP comparison is
+//! scoped to a pool: on colocated fleets that is all replicas (the classic
+//! behavior, byte for byte), on phase-disaggregated fleets DP1 compares
+//! prefill-pool members and DP2/DP3 decode-pool members — a prefill replica
+//! legitimately absorbing 100% of admissions must not read as flow skew.
+//!
+//! Disaggregated fleets additionally expose the pool boundary itself as
+//! network traffic (the KV handoff), which the PD family watches:
+//!
+//! * **PD1 — prefill-pool saturation**: admission backlog accumulates across
+//!   the prefill pool while the decode pool sits far below slot capacity.
+//! * **PD2 — KV-handoff stall**: the phase-transition transfer's fabric
+//!   latency blows past its line-rate expectation.
+//! * **PD3 — decode-pool starvation**: handoff arrivals concentrate on one
+//!   decode replica while its pool peers starve.
+//!
 //! The sensor is inert on single-replica worlds (skew across replicas is
-//! undefined there), which keeps the paper's 28-condition matrix byte-stable.
+//! undefined there), which keeps the paper's 28-condition matrix byte-stable;
+//! PD sensing is inert on colocated fleets for the same reason.
 
 use std::collections::VecDeque;
 
+use crate::cluster::ReplicaRole;
 use crate::dpu::detectors::{Condition, Detection};
 use crate::ids::NodeId;
 use crate::sim::SimTime;
@@ -38,6 +57,31 @@ pub struct FleetSample {
     pub alloc_failures: Vec<u64>,
 }
 
+/// One window's phase-disaggregation observation (pool-boundary vantage).
+/// Vectors are globally indexed (length = fleet size); the sensor reads the
+/// pool-relevant entries. Counter fields are cumulative.
+#[derive(Debug, Clone)]
+pub struct PdSample {
+    /// Admission-queue depth per replica (prefill-pool backlog signal).
+    pub prefill_queue: Vec<u64>,
+    /// Running decode sequences per replica.
+    pub decode_running: Vec<u64>,
+    /// Decode slot capacity per replica.
+    pub decode_slots: Vec<u64>,
+    /// Cumulative KV-handoff arrivals per replica.
+    pub handoff_arrivals: Vec<u64>,
+    /// Cumulative handoffs launched fleet-wide.
+    pub handoffs_started: u64,
+    /// Cumulative handoffs completed fleet-wide.
+    pub handoffs_completed: u64,
+    /// Cumulative handoff fabric-latency sum, ns.
+    pub handoff_lat_sum_ns: u64,
+    /// Cumulative logical handoff bytes delivered.
+    pub handoff_bytes: u64,
+    /// Handoffs parked waiting for decode-side admission.
+    pub stalled_wait_depth: u64,
+}
+
 /// Windows of history the horizon skew metrics integrate over.
 const HORIZON: usize = 40;
 /// Minimum arrivals across the horizon before flow-share skew is judged.
@@ -53,6 +97,27 @@ const KV_DISPARITY: f64 = 0.3;
 const STRAGGLER_MIN_QUEUE: u64 = 10;
 const STRAGGLER_QUEUE_FACTOR: f64 = 5.0;
 const STRAGGLER_ITER_RATIO: f64 = 0.8;
+/// PD1: prefill-pool backlog floor and the decode-utilization ceiling that
+/// distinguishes "prefill starves decode" from "everything is busy".
+const PD1_MIN_QUEUE: u64 = 24;
+const PD1_DECODE_UTIL_MAX: f64 = 0.5;
+const CONFIRM_PD1: u32 = 3;
+/// PD2: observed-over-expected handoff latency ratio + a minimum population
+/// over the horizon so a few straggling transfers can't fire it. The
+/// in-flight floor catches the degenerate total stall, where so few
+/// transfers land that no latency sample exists at all.
+const PD2_LAT_FACTOR: f64 = 3.0;
+const PD2_MIN_HANDOFFS: u64 = 4;
+const PD2_STALL_INFLIGHT: u64 = 12;
+const CONFIRM_PD2: u32 = 2;
+/// PD3: handoff-share margin over the fair share (mirrors DP1's margin).
+const PD3_SHARE_MARGIN: f64 = 0.35;
+const PD3_MIN_ARRIVALS: u64 = 24;
+const CONFIRM_PD3: u32 = 3;
+/// Hops a handoff traverses (uplink → core → downlink) for the line-rate
+/// latency expectation, plus a fixed base allowance.
+const PD2_PATH_HOPS: f64 = 3.0;
+const PD2_BASE_ALLOWANCE_NS: f64 = 10_000.0;
 
 /// Cross-replica skew sensor (one per scenario, fed at window ticks).
 #[derive(Debug)]
@@ -60,19 +125,68 @@ pub struct FleetSensor {
     n_replicas: usize,
     /// Entry node per replica — the node a fleet detection is attributed to.
     entry_nodes: Vec<NodeId>,
+    /// Prefill-capable members (DP1's comparison pool).
+    prefill_members: Vec<usize>,
+    /// Decode-capable members (DP2/DP3's and PD3's comparison pool).
+    decode_members: Vec<usize>,
+    /// NIC line rate, bytes/sec — PD2's latency expectation reference.
+    nic_bw: f64,
     history: VecDeque<FleetSample>,
+    pd_history: VecDeque<PdSample>,
     /// Consecutive-hit counters for DP1/DP2/DP3.
     streaks: [u32; 3],
+    /// Consecutive-hit counters for PD1/PD2/PD3.
+    pd_streaks: [u32; 3],
 }
 
 impl FleetSensor {
-    pub fn new(n_replicas: usize, entry_nodes: Vec<NodeId>) -> Self {
+    /// `roles` scopes every skew comparison to its pool; a colocated fleet
+    /// (all `ReplicaRole::Colocated`) compares across the whole fleet,
+    /// exactly as the pre-disaggregation sensor did.
+    pub fn new(
+        n_replicas: usize,
+        entry_nodes: Vec<NodeId>,
+        roles: Vec<ReplicaRole>,
+        nic_bw: f64,
+    ) -> Self {
         assert_eq!(entry_nodes.len(), n_replicas);
+        assert_eq!(roles.len(), n_replicas);
+        let prefill_members: Vec<usize> = (0..n_replicas)
+            .filter(|&r| roles[r].serves_prefill())
+            .collect();
+        let decode_members: Vec<usize> = (0..n_replicas)
+            .filter(|&r| roles[r].serves_decode())
+            .collect();
         FleetSensor {
             n_replicas,
             entry_nodes,
+            prefill_members,
+            decode_members,
+            nic_bw,
             history: VecDeque::with_capacity(HORIZON + 1),
+            pd_history: VecDeque::with_capacity(HORIZON + 1),
             streaks: [0; 3],
+            pd_streaks: [0; 3],
+        }
+    }
+
+    /// Re-scope the pool comparisons after a role shift (`RebalancePools`
+    /// moves replicas between pools mid-run). No-op when membership is
+    /// unchanged; on a change, confirmation streaks reset — half-confirmed
+    /// skew against the old pools says nothing about the new ones, and a
+    /// stale decode pool would read the post-mitigation 100% handoff share
+    /// of the sole remaining decode replica as PD3.
+    pub fn sync_pools(&mut self, roles: &[ReplicaRole]) {
+        debug_assert_eq!(roles.len(), self.n_replicas);
+        let prefill: Vec<usize> =
+            (0..self.n_replicas).filter(|&r| roles[r].serves_prefill()).collect();
+        let decode: Vec<usize> =
+            (0..self.n_replicas).filter(|&r| roles[r].serves_decode()).collect();
+        if prefill != self.prefill_members || decode != self.decode_members {
+            self.prefill_members = prefill;
+            self.decode_members = decode;
+            self.streaks = [0; 3];
+            self.pd_streaks = [0; 3];
         }
     }
 
@@ -103,32 +217,37 @@ impl FleetSensor {
         let prev = if len >= 2 { Some(&self.history[len - 2]) } else { None };
         let mut fired = Vec::new();
 
-        // --- DP1: flow-share skew over the horizon ---
-        let arrivals: Vec<u64> =
-            (0..n).map(|r| cur.routed[r].saturating_sub(old.routed[r])).collect();
-        let total: u64 = arrivals.iter().sum();
+        // --- DP1: flow-share skew over the horizon (prefill pool) ---
+        let pool = &self.prefill_members;
+        let np = pool.len();
         let mut dp1_hit = false;
-        if total >= MIN_ARRIVALS {
-            let hot = argmax_u64(&arrivals);
-            let share = arrivals[hot] as f64 / total as f64;
-            let threshold = Self::share_threshold(n);
-            if share >= threshold {
-                dp1_hit = true;
-                self.streaks[0] += 1;
-                if self.streaks[0] >= CONFIRM_DP1 {
-                    fired.push(Detection {
-                        condition: Condition::Dp1RouterFlowSkew,
-                        node: self.entry_nodes[hot],
-                        at: now,
-                        severity: share * n as f64,
-                        evidence: format!(
-                            "replica {hot} absorbs {:.0}% of {total} arrivals \
-                             (fair share {:.0}%, threshold {:.0}%)",
-                            share * 100.0,
-                            100.0 / n as f64,
-                            threshold * 100.0
-                        ),
-                    });
+        if np >= 2 {
+            let arrivals: Vec<u64> =
+                pool.iter().map(|&r| cur.routed[r].saturating_sub(old.routed[r])).collect();
+            let total: u64 = arrivals.iter().sum();
+            if total >= MIN_ARRIVALS {
+                let hot_k = argmax_u64(&arrivals);
+                let hot = pool[hot_k];
+                let share = arrivals[hot_k] as f64 / total as f64;
+                let threshold = Self::share_threshold(np);
+                if share >= threshold {
+                    dp1_hit = true;
+                    self.streaks[0] += 1;
+                    if self.streaks[0] >= CONFIRM_DP1 {
+                        fired.push(Detection {
+                            condition: Condition::Dp1RouterFlowSkew,
+                            node: self.entry_nodes[hot],
+                            at: now,
+                            severity: share * np as f64,
+                            evidence: format!(
+                                "replica {hot} absorbs {:.0}% of {total} arrivals \
+                                 (fair share {:.0}%, threshold {:.0}%)",
+                                share * 100.0,
+                                100.0 / np as f64,
+                                threshold * 100.0
+                            ),
+                        });
+                    }
                 }
             }
         }
@@ -136,35 +255,37 @@ impl FleetSensor {
             self.streaks[0] = 0;
         }
 
-        // --- DP2: hot-replica KV exhaustion (window-level) ---
+        // --- DP2: hot-replica KV exhaustion (decode pool, window-level) ---
+        let pool = &self.decode_members;
+        let nd = pool.len();
         let mut dp2_hit = false;
-        if let Some(prev) = prev {
-            let hot = argmax_f64(&cur.kv_occupancy);
-            let hot_occ = cur.kv_occupancy[hot];
-            let min_occ = cur
-                .kv_occupancy
-                .iter()
-                .enumerate()
-                .filter(|&(r, _)| r != hot)
-                .map(|(_, &o)| o)
-                .fold(f64::INFINITY, f64::min);
-            let failures = cur.alloc_failures[hot].saturating_sub(prev.alloc_failures[hot]);
-            if hot_occ >= KV_HOT_OCC && failures >= 1 && hot_occ - min_occ >= KV_DISPARITY {
-                dp2_hit = true;
-                self.streaks[1] += 1;
-                if self.streaks[1] >= CONFIRM_DP2 {
-                    fired.push(Detection {
-                        condition: Condition::Dp2HotReplicaKv,
-                        node: self.entry_nodes[hot],
-                        at: now,
-                        severity: hot_occ - min_occ,
-                        evidence: format!(
-                            "replica {hot} KV at {:.0}% with {failures} admission \
-                             failures this window; coldest peer at {:.0}%",
-                            hot_occ * 100.0,
-                            min_occ * 100.0
-                        ),
-                    });
+        if nd >= 2 {
+            if let Some(prev) = prev {
+                let hot = first_max_by(pool, |r| cur.kv_occupancy[r]);
+                let hot_occ = cur.kv_occupancy[hot];
+                let min_occ = pool
+                    .iter()
+                    .filter(|&&r| r != hot)
+                    .map(|&r| cur.kv_occupancy[r])
+                    .fold(f64::INFINITY, f64::min);
+                let failures = cur.alloc_failures[hot].saturating_sub(prev.alloc_failures[hot]);
+                if hot_occ >= KV_HOT_OCC && failures >= 1 && hot_occ - min_occ >= KV_DISPARITY {
+                    dp2_hit = true;
+                    self.streaks[1] += 1;
+                    if self.streaks[1] >= CONFIRM_DP2 {
+                        fired.push(Detection {
+                            condition: Condition::Dp2HotReplicaKv,
+                            node: self.entry_nodes[hot],
+                            at: now,
+                            severity: hot_occ - min_occ,
+                            evidence: format!(
+                                "replica {hot} KV at {:.0}% with {failures} admission \
+                                 failures this window; coldest peer at {:.0}%",
+                                hot_occ * 100.0,
+                                min_occ * 100.0
+                            ),
+                        });
+                    }
                 }
             }
         }
@@ -172,35 +293,190 @@ impl FleetSensor {
             self.streaks[1] = 0;
         }
 
-        // --- DP3: straggler replica (backlog dominance + lagging rate) ---
-        let iters: Vec<u64> =
-            (0..n).map(|r| cur.iterations[r].saturating_sub(old.iterations[r])).collect();
-        let lag = argmax_u64(&cur.queue_depth);
-        let lag_q = cur.queue_depth[lag];
-        let others_q: u64 = cur.queue_depth.iter().enumerate().filter(|&(r, _)| r != lag).map(|(_, &q)| q).sum();
-        let others_mean_q = others_q as f64 / (n - 1) as f64;
-        let others_it: u64 = iters.iter().enumerate().filter(|&(r, _)| r != lag).map(|(_, &i)| i).sum();
-        let others_mean_it = others_it as f64 / (n - 1) as f64;
-        let dp3_hit = lag_q >= STRAGGLER_MIN_QUEUE
-            && lag_q as f64 >= STRAGGLER_QUEUE_FACTOR * (others_mean_q + 1.0)
-            && (iters[lag] as f64) < STRAGGLER_ITER_RATIO * (others_mean_it + 1.0);
-        if dp3_hit {
-            self.streaks[2] += 1;
-            if self.streaks[2] >= CONFIRM_DP3 {
+        // --- DP3: straggler replica (decode pool: backlog + lagging rate) ---
+        let mut dp3_hit = false;
+        if nd >= 2 {
+            let lag = first_max_by(pool, |r| cur.queue_depth[r] as f64);
+            let lag_q = cur.queue_depth[lag];
+            let iters_of =
+                |r: usize| cur.iterations[r].saturating_sub(old.iterations[r]);
+            let others_q: u64 =
+                pool.iter().filter(|&&r| r != lag).map(|&r| cur.queue_depth[r]).sum();
+            let others_mean_q = others_q as f64 / (nd - 1) as f64;
+            let others_it: u64 = pool.iter().filter(|&&r| r != lag).map(|&r| iters_of(r)).sum();
+            let others_mean_it = others_it as f64 / (nd - 1) as f64;
+            dp3_hit = lag_q >= STRAGGLER_MIN_QUEUE
+                && lag_q as f64 >= STRAGGLER_QUEUE_FACTOR * (others_mean_q + 1.0)
+                && (iters_of(lag) as f64) < STRAGGLER_ITER_RATIO * (others_mean_it + 1.0);
+            if dp3_hit {
+                self.streaks[2] += 1;
+                if self.streaks[2] >= CONFIRM_DP3 {
+                    fired.push(Detection {
+                        condition: Condition::Dp3StragglerReplica,
+                        node: self.entry_nodes[lag],
+                        at: now,
+                        severity: lag_q as f64 / (others_mean_q + 1.0),
+                        evidence: format!(
+                            "replica {lag} backlog {lag_q} vs peer mean {others_mean_q:.1}; \
+                             {} iterations over the horizon vs peer mean {others_mean_it:.0}",
+                            iters_of(lag)
+                        ),
+                    });
+                }
+            }
+        }
+        if !dp3_hit {
+            self.streaks[2] = 0;
+        }
+
+        fired
+    }
+
+    /// Feed one window's pool-boundary observation (disaggregated fleets
+    /// only); returns the PD detections fired.
+    pub fn pd_window_tick(&mut self, now: SimTime, sample: PdSample) -> Vec<Detection> {
+        debug_assert_eq!(sample.prefill_queue.len(), self.n_replicas);
+        self.pd_history.push_back(sample);
+        if self.pd_history.len() > HORIZON + 1 {
+            self.pd_history.pop_front();
+        }
+        let len = self.pd_history.len();
+        let cur = &self.pd_history[len - 1];
+        let old = &self.pd_history[0];
+        let prev = if len >= 2 { Some(&self.pd_history[len - 2]) } else { None };
+        let mut fired = Vec::new();
+
+        // --- PD1: prefill-pool saturation while the decode pool idles ---
+        let prefill_q: u64 = self.prefill_members.iter().map(|&r| cur.prefill_queue[r]).sum();
+        let old_q: u64 = self.prefill_members.iter().map(|&r| old.prefill_queue[r]).sum();
+        let slots: u64 = self.decode_members.iter().map(|&r| cur.decode_slots[r]).sum();
+        let running: u64 = self.decode_members.iter().map(|&r| cur.decode_running[r]).sum();
+        let decode_util = running as f64 / slots.max(1) as f64;
+        let pd1_hit =
+            prefill_q >= PD1_MIN_QUEUE && prefill_q > old_q && decode_util <= PD1_DECODE_UTIL_MAX;
+        if pd1_hit {
+            self.pd_streaks[0] += 1;
+            if self.pd_streaks[0] >= CONFIRM_PD1 {
+                let hot = first_max_by(&self.prefill_members, |r| cur.prefill_queue[r] as f64);
                 fired.push(Detection {
-                    condition: Condition::Dp3StragglerReplica,
-                    node: self.entry_nodes[lag],
+                    condition: Condition::Pd1PrefillSaturation,
+                    node: self.entry_nodes[hot],
                     at: now,
-                    severity: lag_q as f64 / (others_mean_q + 1.0),
+                    severity: prefill_q as f64 / PD1_MIN_QUEUE as f64,
                     evidence: format!(
-                        "replica {lag} backlog {lag_q} vs peer mean {others_mean_q:.1}; \
-                         {} iterations over the horizon vs peer mean {others_mean_it:.0}",
-                        iters[lag]
+                        "prefill pool backlog {prefill_q} (was {old_q} a horizon ago) while \
+                         the decode pool runs {running}/{slots} slots ({:.0}% busy)",
+                        decode_util * 100.0
                     ),
                 });
             }
         } else {
-            self.streaks[2] = 0;
+            self.pd_streaks[0] = 0;
+        }
+
+        // --- PD2: KV-handoff fabric latency vs line-rate expectation ---
+        // Measured over the whole horizon, not one window: completions under
+        // a stall arrive sparse-then-bursty, and a single thin window must
+        // neither fire nor reset the streak.
+        let mut pd2_hit = false;
+        if prev.is_some() {
+            let done = cur.handoffs_completed.saturating_sub(old.handoffs_completed);
+            let inflight = cur.handoffs_started.saturating_sub(cur.handoffs_completed);
+            if done < PD2_MIN_HANDOFFS && inflight >= PD2_STALL_INFLIGHT {
+                // Degenerate total stall: transfers pile up on the fabric
+                // with (almost) nothing landing — no latency sample will
+                // ever accumulate, so the backlog itself is the red flag.
+                pd2_hit = true;
+                self.pd_streaks[1] += 1;
+                if self.pd_streaks[1] >= CONFIRM_PD2 {
+                    let dst = first_max_by(&self.decode_members, |r| {
+                        cur.handoff_arrivals[r] as f64
+                    });
+                    fired.push(Detection {
+                        condition: Condition::Pd2KvHandoffStall,
+                        node: self.entry_nodes[dst],
+                        at: now,
+                        severity: inflight as f64 / PD2_STALL_INFLIGHT as f64,
+                        evidence: format!(
+                            "KV handoffs frozen: {inflight} in flight on the fabric with \
+                             only {done} landing over the horizon"
+                        ),
+                    });
+                }
+            } else if done >= PD2_MIN_HANDOFFS {
+                let lat_sum = cur.handoff_lat_sum_ns.saturating_sub(old.handoff_lat_sum_ns);
+                let bytes = cur.handoff_bytes.saturating_sub(old.handoff_bytes);
+                let mean_lat = lat_sum as f64 / done as f64;
+                let mean_bytes = bytes as f64 / done as f64;
+                let expected = mean_bytes / self.nic_bw.max(1.0) * 1e9 * PD2_PATH_HOPS
+                    + PD2_BASE_ALLOWANCE_NS;
+                if mean_lat >= PD2_LAT_FACTOR * expected {
+                    pd2_hit = true;
+                    self.pd_streaks[1] += 1;
+                    if self.pd_streaks[1] >= CONFIRM_PD2 {
+                        let dst = first_max_by(&self.decode_members, |r| {
+                            cur.handoff_arrivals[r].saturating_sub(old.handoff_arrivals[r])
+                                as f64
+                        });
+                        fired.push(Detection {
+                            condition: Condition::Pd2KvHandoffStall,
+                            node: self.entry_nodes[dst],
+                            at: now,
+                            severity: mean_lat / expected.max(1.0),
+                            evidence: format!(
+                                "KV handoffs average {:.0} us over {done} transfers vs \
+                                 {:.0} us line-rate expectation ({:.0} KB mean)",
+                                mean_lat / 1e3,
+                                expected / 1e3,
+                                mean_bytes / 1e3
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        if !pd2_hit {
+            self.pd_streaks[1] = 0;
+        }
+
+        // --- PD3: handoff arrivals concentrate on one decode replica ---
+        let pool = &self.decode_members;
+        let nd = pool.len();
+        let mut pd3_hit = false;
+        if nd >= 2 {
+            let arrivals: Vec<u64> = pool
+                .iter()
+                .map(|&r| cur.handoff_arrivals[r].saturating_sub(old.handoff_arrivals[r]))
+                .collect();
+            let total: u64 = arrivals.iter().sum();
+            if total >= PD3_MIN_ARRIVALS {
+                let hot_k = argmax_u64(&arrivals);
+                let hot = pool[hot_k];
+                let share = arrivals[hot_k] as f64 / total as f64;
+                let threshold = (1.0 / nd as f64 + PD3_SHARE_MARGIN).min(0.92);
+                if share >= threshold {
+                    pd3_hit = true;
+                    self.pd_streaks[2] += 1;
+                    if self.pd_streaks[2] >= CONFIRM_PD3 {
+                        fired.push(Detection {
+                            condition: Condition::Pd3DecodeStarvation,
+                            node: self.entry_nodes[hot],
+                            at: now,
+                            severity: share * nd as f64,
+                            evidence: format!(
+                                "decode replica {hot} receives {:.0}% of {total} KV handoffs \
+                                 (fair share {:.0}%); {} parked awaiting admission",
+                                share * 100.0,
+                                100.0 / nd as f64,
+                                cur.stalled_wait_depth
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        if !pd3_hit {
+            self.pd_streaks[2] = 0;
         }
 
         fired
@@ -217,11 +493,17 @@ fn argmax_u64(xs: &[u64]) -> usize {
     best
 }
 
-fn argmax_f64(xs: &[f64]) -> usize {
-    let mut best = 0;
-    for (i, &x) in xs.iter().enumerate() {
-        if x > xs[best] {
-            best = i;
+/// First (lowest-index) member maximizing `key` — strict-greater comparison
+/// keeps the pre-pool argmax tie-break, so a full-membership pool reproduces
+/// the classic sensor's picks exactly.
+fn first_max_by(members: &[usize], key: impl Fn(usize) -> f64) -> usize {
+    let mut best = members[0];
+    let mut best_k = key(best);
+    for &r in &members[1..] {
+        let k = key(r);
+        if k > best_k {
+            best = r;
+            best_k = k;
         }
     }
     best
@@ -233,6 +515,32 @@ mod tests {
 
     fn nodes(n: usize) -> Vec<NodeId> {
         (0..n).map(|i| NodeId(i as u32)).collect()
+    }
+
+    /// Classic colocated sensor (full-fleet comparisons).
+    fn sensor(n: usize) -> FleetSensor {
+        FleetSensor::new(n, nodes(n), vec![ReplicaRole::Colocated; n], 50e9)
+    }
+
+    /// Disaggregated sensor: replica 0 prefill, the rest decode.
+    fn pd_sensor(n: usize) -> FleetSensor {
+        let mut roles = vec![ReplicaRole::Decode; n];
+        roles[0] = ReplicaRole::Prefill;
+        FleetSensor::new(n, nodes(n), roles, 50e9)
+    }
+
+    fn quiet_pd(n: usize) -> PdSample {
+        PdSample {
+            prefill_queue: vec![0; n],
+            decode_running: vec![0; n],
+            decode_slots: vec![8; n],
+            handoff_arrivals: vec![0; n],
+            handoffs_started: 0,
+            handoffs_completed: 0,
+            handoff_lat_sum_ns: 0,
+            handoff_bytes: 0,
+            stalled_wait_depth: 0,
+        }
     }
 
     fn sample(routed: Vec<u64>, q: Vec<u64>, kv: Vec<f64>, it: Vec<u64>, af: Vec<u64>) -> FleetSample {
@@ -247,7 +555,7 @@ mod tests {
 
     #[test]
     fn single_replica_is_inert() {
-        let mut s = FleetSensor::new(1, nodes(1));
+        let mut s = sensor(1);
         for w in 0..200u64 {
             let fired = s.window_tick(
                 SimTime(w * 1_000_000),
@@ -259,7 +567,7 @@ mod tests {
 
     #[test]
     fn balanced_fleet_stays_quiet() {
-        let mut s = FleetSensor::new(3, nodes(3));
+        let mut s = sensor(3);
         for w in 0..200u64 {
             let fired = s.window_tick(
                 SimTime(w * 1_000_000),
@@ -277,7 +585,7 @@ mod tests {
 
     #[test]
     fn dp1_fires_on_flow_concentration() {
-        let mut s = FleetSensor::new(3, nodes(3));
+        let mut s = sensor(3);
         let mut fired_any = Vec::new();
         for w in 0..60u64 {
             fired_any.extend(s.window_tick(
@@ -301,7 +609,7 @@ mod tests {
 
     #[test]
     fn dp2_fires_on_hot_kv_with_failures() {
-        let mut s = FleetSensor::new(2, nodes(2));
+        let mut s = sensor(2);
         let mut fired_any = Vec::new();
         for w in 0..10u64 {
             fired_any.extend(s.window_tick(
@@ -327,7 +635,7 @@ mod tests {
 
     #[test]
     fn dp3_fires_on_backlogged_slow_replica() {
-        let mut s = FleetSensor::new(2, nodes(2));
+        let mut s = sensor(2);
         let mut fired_any = Vec::new();
         for w in 0..60u64 {
             fired_any.extend(s.window_tick(
@@ -351,8 +659,181 @@ mod tests {
     }
 
     #[test]
+    fn disagg_sole_prefill_replica_is_not_flow_skew() {
+        // A lone prefill replica legitimately absorbs 100% of admissions;
+        // pool scoping must keep DP1 quiet.
+        let mut s = pd_sensor(3);
+        for w in 0..80u64 {
+            let fired = s.window_tick(
+                SimTime(w * 1_000_000),
+                sample(
+                    vec![w * 30, 0, 0],
+                    vec![2, 0, 0],
+                    vec![0.2, 0.3, 0.3],
+                    vec![w * 5, w * 20, w * 20],
+                    vec![0, 0, 0],
+                ),
+            );
+            assert!(fired.is_empty(), "window {w}: {fired:?}");
+        }
+    }
+
+    #[test]
+    fn pd1_fires_on_prefill_backlog_with_idle_decode() {
+        let mut s = pd_sensor(3);
+        let mut fired_any = Vec::new();
+        for w in 0..20u64 {
+            let mut p = quiet_pd(3);
+            p.prefill_queue = vec![30 + w * 10, 0, 0];
+            p.decode_running = vec![0, 1, 1];
+            p.handoff_arrivals = vec![0, w * 3, w * 3];
+            p.handoffs_completed = w * 6;
+            p.handoff_lat_sum_ns = w * 6 * 20_000;
+            p.handoff_bytes = w * 6 * 256 * 1024;
+            fired_any.extend(s.pd_window_tick(SimTime(w * 1_000_000), p));
+        }
+        let pd1: Vec<_> = fired_any
+            .iter()
+            .filter(|d| d.condition == Condition::Pd1PrefillSaturation)
+            .collect();
+        assert!(!pd1.is_empty(), "{fired_any:?}");
+        assert_eq!(pd1[0].node, NodeId(0), "PD1 localizes to the backlogged prefill replica");
+        assert!(fired_any.iter().all(|d| d.condition != Condition::Pd2KvHandoffStall));
+    }
+
+    #[test]
+    fn pd2_fires_on_handoff_latency_blowout() {
+        let mut s = pd_sensor(3);
+        let mut fired_any = Vec::new();
+        for w in 0..10u64 {
+            let mut p = quiet_pd(3);
+            // 256 KB handoffs: line-rate expectation ~25 us; observed 400 us.
+            p.handoff_arrivals = vec![0, w * 4, w * 4];
+            p.handoffs_completed = w * 8;
+            p.handoff_lat_sum_ns = w * 8 * 400_000;
+            p.handoff_bytes = w * 8 * 256 * 1024;
+            p.decode_running = vec![0, 1, 1];
+            fired_any.extend(s.pd_window_tick(SimTime(w * 1_000_000), p));
+        }
+        assert!(
+            fired_any.iter().any(|d| d.condition == Condition::Pd2KvHandoffStall),
+            "{fired_any:?}"
+        );
+    }
+
+    #[test]
+    fn pd2_fires_on_a_total_stall_with_no_latency_samples() {
+        let mut s = pd_sensor(3);
+        let mut fired_any = Vec::new();
+        for w in 0..10u64 {
+            let mut p = quiet_pd(3);
+            // Handoffs launch but essentially never land: no usable latency
+            // population, just a growing in-flight backlog.
+            p.handoffs_started = 20 + w * 10;
+            p.handoffs_completed = 2;
+            p.handoff_arrivals = vec![0, 2, 0];
+            p.handoff_lat_sum_ns = 2 * 30_000;
+            p.handoff_bytes = 2 * 256 * 1024;
+            fired_any.extend(s.pd_window_tick(SimTime(w * 1_000_000), p));
+        }
+        assert!(
+            fired_any.iter().any(|d| d.condition == Condition::Pd2KvHandoffStall),
+            "{fired_any:?}"
+        );
+        assert!(fired_any.iter().any(|d| d.evidence.contains("frozen")));
+    }
+
+    #[test]
+    fn sync_pools_rescopes_after_a_role_shift() {
+        let mut s = pd_sensor(3); // decode pool {1, 2}
+        // Wedge-like concentration on replica 1 builds a PD3 streak...
+        for w in 0..2u64 {
+            let mut p = quiet_pd(3);
+            p.handoff_arrivals = vec![0, w * 30, 0];
+            p.handoffs_started = w * 30;
+            p.handoffs_completed = w * 30;
+            p.handoff_lat_sum_ns = w * 30 * 20_000;
+            p.handoff_bytes = w * 30 * 256 * 1024;
+            let fired = s.pd_window_tick(SimTime(w * 1_000_000), p);
+            assert!(fired.is_empty(), "confirmation not yet reached: {fired:?}");
+        }
+        // ...then RebalancePools moves replica 2 into the prefill pool:
+        // replica 1 is now the SOLE decode member, and its 100% share is
+        // simply correct — PD3 must go inert, not fire.
+        let roles =
+            vec![ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Prefill];
+        s.sync_pools(&roles);
+        for w in 2..10u64 {
+            let mut p = quiet_pd(3);
+            p.handoff_arrivals = vec![0, w * 30, 0];
+            p.handoffs_started = w * 30;
+            p.handoffs_completed = w * 30;
+            p.handoff_lat_sum_ns = w * 30 * 20_000;
+            p.handoff_bytes = w * 30 * 256 * 1024;
+            let fired = s.pd_window_tick(SimTime(w * 1_000_000), p);
+            assert!(fired.is_empty(), "stale-pool PD3 after role shift: {fired:?}");
+        }
+        // Unchanged roles are a no-op (streak state preserved elsewhere).
+        s.sync_pools(&roles);
+    }
+
+    #[test]
+    fn pd2_quiet_at_line_rate() {
+        let mut s = pd_sensor(3);
+        for w in 0..40u64 {
+            let mut p = quiet_pd(3);
+            // 256 KB at ~line-rate latency (expectation ~25 us, observed 30).
+            p.handoff_arrivals = vec![0, w * 4, w * 4];
+            p.handoffs_completed = w * 8;
+            p.handoff_lat_sum_ns = w * 8 * 30_000;
+            p.handoff_bytes = w * 8 * 256 * 1024;
+            let fired = s.pd_window_tick(SimTime(w * 1_000_000), p);
+            assert!(fired.is_empty(), "window {w}: {fired:?}");
+        }
+    }
+
+    #[test]
+    fn pd3_fires_on_handoff_concentration() {
+        let mut s = pd_sensor(3);
+        let mut fired_any = Vec::new();
+        for w in 0..20u64 {
+            let mut p = quiet_pd(3);
+            // All handoffs land on decode replica 1; replica 2 starves.
+            p.handoff_arrivals = vec![0, w * 10, 0];
+            p.handoffs_completed = w * 10;
+            p.handoff_lat_sum_ns = w * 10 * 20_000;
+            p.handoff_bytes = w * 10 * 256 * 1024;
+            p.decode_running = vec![0, 8, 0];
+            p.stalled_wait_depth = w;
+            fired_any.extend(s.pd_window_tick(SimTime(w * 1_000_000), p));
+        }
+        let pd3: Vec<_> = fired_any
+            .iter()
+            .filter(|d| d.condition == Condition::Pd3DecodeStarvation)
+            .collect();
+        assert!(!pd3.is_empty(), "{fired_any:?}");
+        assert_eq!(pd3[0].node, NodeId(1), "PD3 localizes to the wedged decode replica");
+    }
+
+    #[test]
+    fn balanced_disagg_pool_stays_quiet() {
+        let mut s = pd_sensor(3);
+        for w in 0..60u64 {
+            let mut p = quiet_pd(3);
+            p.prefill_queue = vec![2, 0, 0];
+            p.decode_running = vec![0, 6, 6];
+            p.handoff_arrivals = vec![0, w * 5, w * 5 + (w % 2)];
+            p.handoffs_completed = w * 10;
+            p.handoff_lat_sum_ns = w * 10 * 28_000;
+            p.handoff_bytes = w * 10 * 256 * 1024;
+            let fired = s.pd_window_tick(SimTime(w * 1_000_000), p);
+            assert!(fired.is_empty(), "window {w}: {fired:?}");
+        }
+    }
+
+    #[test]
     fn confirmation_requires_persistence() {
-        let mut s = FleetSensor::new(2, nodes(2));
+        let mut s = sensor(2);
         // A single anomalous window must not fire (DP2 needs 2 consecutive).
         let quiet = sample(vec![0, 0], vec![0, 0], vec![0.2, 0.2], vec![0, 0], vec![0, 0]);
         s.window_tick(SimTime(0), quiet.clone());

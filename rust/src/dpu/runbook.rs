@@ -239,15 +239,39 @@ pub fn entry(c: Condition) -> RunbookEntry {
             "Degraded node(s) in one replica: thermal/power/faulty GPU",
             Directive::DrainStragglerReplica,
         ),
+        // ---- phase-disaggregation extension (pool-boundary vantage) ----
+        Pd1PrefillSaturation => (
+            "Prefill-pool admission backlog grows while decode slots idle",
+            "Prefill pool (admission -> first token)",
+            "TTFT inflates fleet-wide; decode pool starves for handoffs",
+            "Prompt-heavy demand vs prefill pool sizing (roles misprovisioned)",
+            Directive::RebalancePools,
+        ),
+        Pd2KvHandoffStall => (
+            "KV-handoff fabric latency far above line-rate expectation",
+            "Phase transition (prefill -> decode pool)",
+            "Sequences pile up between pools; decode admission runs dry",
+            "Handoff link budget collapse: congestion, misrouted path, QoS",
+            Directive::CompressKvTransfers,
+        ),
+        Pd3DecodeStarvation => (
+            "KV handoffs concentrate on one decode replica; peers starve",
+            "Phase transition routing (decode pool)",
+            "One decode replica saturates its slots while peers sit idle",
+            "Wedged/skewed handoff routing after a config or failover event",
+            Directive::RebalanceHandoffRouting,
+        ),
     };
     RunbookEntry { condition: c, signal, stages, effect, root_cause, directive }
 }
 
-/// All runbook rows, table order: the paper's 28 plus the DP fleet family.
+/// All runbook rows, table order: the paper's 28 plus the DP fleet family
+/// and the PD phase-disaggregation family.
 pub fn all_entries() -> Vec<RunbookEntry> {
     crate::dpu::detectors::ALL_CONDITIONS
         .iter()
         .chain(crate::dpu::detectors::DP_CONDITIONS.iter())
+        .chain(crate::dpu::detectors::PD_CONDITIONS.iter())
         .map(|&c| entry(c))
         .collect()
 }
@@ -259,16 +283,33 @@ mod tests {
 
     #[test]
     fn runbook_is_complete() {
-        use crate::dpu::detectors::DP_CONDITIONS;
+        use crate::dpu::detectors::{DP_CONDITIONS, PD_CONDITIONS};
         let entries = all_entries();
-        assert_eq!(entries.len(), 31);
-        for (c, e) in ALL_CONDITIONS.iter().chain(DP_CONDITIONS.iter()).zip(&entries) {
+        assert_eq!(entries.len(), 34);
+        for (c, e) in ALL_CONDITIONS
+            .iter()
+            .chain(DP_CONDITIONS.iter())
+            .chain(PD_CONDITIONS.iter())
+            .zip(&entries)
+        {
             assert_eq!(*c, e.condition);
             assert!(!e.signal.is_empty());
             assert!(!e.stages.is_empty());
             assert!(!e.effect.is_empty());
             assert!(!e.root_cause.is_empty());
         }
+    }
+
+    #[test]
+    fn pd_family_has_pool_level_directives() {
+        assert_eq!(entry(Condition::Pd1PrefillSaturation).directive, Directive::RebalancePools);
+        assert_eq!(
+            entry(Condition::Pd3DecodeStarvation).directive,
+            Directive::RebalanceHandoffRouting
+        );
+        // PD2 shares EW8's KV-transfer directive: the handoff IS a KV
+        // transfer, just across the pool boundary.
+        assert_eq!(entry(Condition::Pd2KvHandoffStall).directive, Directive::CompressKvTransfers);
     }
 
     #[test]

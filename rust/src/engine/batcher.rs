@@ -212,6 +212,14 @@ impl Batcher {
         }
     }
 
+    /// Adopt a sequence arriving from another pool's prefill via KV handoff:
+    /// it enters decode directly, with `generated` tokens (the prefill-side
+    /// first token) already produced and its KV position past the prompt.
+    pub fn adopt(&mut self, req: ReqId, position: u32, generated: u32, budget: u32) {
+        debug_assert!(self.running.len() < self.policy.max_batch, "adopt into full batch");
+        self.running.push(RunningSeq { req, position, generated, budget });
+    }
+
     /// Record one generated token for `req`; returns true if it finished.
     pub fn on_token(&mut self, req: ReqId) -> bool {
         let Some(seq) = self.running.iter_mut().find(|s| s.req == req) else {

@@ -14,12 +14,13 @@ pub mod router;
 pub use batcher::{BatchPolicy, Batcher, Work};
 pub use exec::{CollSeq, ComputeBackend, IterKind, IterTiming, SurrogateBackend};
 pub use kvcache::{AllocResult, KvCache};
-pub use parallel::{build_replicas, ParallelPlan};
+pub use parallel::{build_replicas, build_shaped_replicas, ParallelPlan};
 pub use profile::{preset, ModelProfile};
 pub use router::{RoutePolicy, Router};
 
 use std::collections::HashMap;
 
+use crate::cluster::topology::{ReplicaRole, ReplicaShape};
 use crate::ids::ReqId;
 use crate::workload::request::InferenceRequest;
 
@@ -29,11 +30,19 @@ pub struct EngineConfig {
     pub profile: ModelProfile,
     pub policy: BatchPolicy,
     pub route_policy: RoutePolicy,
+    /// Phase-transition (prefill→decode pool) routing policy. Handoffs have
+    /// no session affinity to honor, so the default balances by load. Unused
+    /// on colocated fleets.
+    pub decode_route_policy: RoutePolicy,
     /// KV pages per replica and tokens per page.
     pub kv_pages: u32,
     pub kv_page_tokens: u32,
-    /// Nodes per pipeline stage (TP span across the fabric).
+    /// Nodes per pipeline stage (TP span across the fabric) for the uniform
+    /// colocated builder. Ignored when `shapes` is set.
     pub nodes_per_stage: usize,
+    /// Heterogeneous per-replica shapes (phase-disaggregated pools). `None`
+    /// keeps the classic uniform colocated fleet from `nodes_per_stage`.
+    pub shapes: Option<Vec<ReplicaShape>>,
 }
 
 impl Default for EngineConfig {
@@ -45,9 +54,11 @@ impl Default for EngineConfig {
             profile,
             policy,
             route_policy: RoutePolicy::FlowHash,
+            decode_route_policy: RoutePolicy::LeastLoaded,
             kv_pages: 1024,
             kv_page_tokens: 16,
             nodes_per_stage: 2,
+            shapes: None,
         }
     }
 }
@@ -66,21 +77,37 @@ pub struct Replica {
     pub decodes: u64,
 }
 
-/// The serving engine: router + replicas + request registry.
+/// The serving engine: the two-stage router pair (admission over the
+/// prefill-capable pool, phase transition over the decode-capable pool) +
+/// replicas + request registry. On a colocated fleet both pools are the full
+/// replica set and only the admission router ever routes, reproducing the
+/// classic single-stage plane exactly.
 #[derive(Debug)]
 pub struct Engine {
     pub cfg: EngineConfig,
+    /// Admission router: new requests land on a prefill-capable replica.
     pub router: Router,
+    /// Phase-transition router: completed prefills pick a decode-capable
+    /// replica for the KV handoff. Idle on colocated fleets.
+    pub decode_router: Router,
     pub replicas: Vec<Replica>,
     pub requests: HashMap<ReqId, InferenceRequest>,
-    /// Which replica each request landed on.
+    /// Which replica each request currently occupies (updated at the phase
+    /// transition on disaggregated fleets).
     pub placement: HashMap<ReqId, usize>,
+    /// Roles at construction time (heal/reset restores these after
+    /// `RebalancePools` role shifts).
+    base_roles: Vec<ReplicaRole>,
+    disaggregated: bool,
 }
 
 impl Engine {
     pub fn new(cfg: EngineConfig, plans: Vec<ParallelPlan>) -> Self {
         assert!(!plans.is_empty());
         let n = plans.len();
+        let base_roles: Vec<ReplicaRole> = plans.iter().map(|p| p.shape.role).collect();
+        let disaggregated = base_roles.iter().any(|&r| r != ReplicaRole::Colocated);
+        let (prefill_members, decode_members) = pool_members(&base_roles);
         let replicas = plans
             .into_iter()
             .map(|plan| Replica {
@@ -95,16 +122,55 @@ impl Engine {
             })
             .collect();
         Engine {
-            router: Router::new(n, cfg.route_policy),
+            router: Router::with_members(n, cfg.route_policy, prefill_members),
+            decode_router: Router::with_members(n, cfg.decode_route_policy, decode_members),
             cfg,
             replicas,
             requests: HashMap::new(),
             placement: HashMap::new(),
+            base_roles,
+            disaggregated,
         }
     }
 
     pub fn n_replicas(&self) -> usize {
         self.replicas.len()
+    }
+
+    /// Does this fleet run separate prefill/decode pools? (Sticky: a world
+    /// built disaggregated stays phase-split even if mitigation later makes
+    /// a pool's membership look colocated.)
+    pub fn is_disaggregated(&self) -> bool {
+        self.disaggregated
+    }
+
+    /// Current role of each replica (post any mitigation role shifts).
+    pub fn roles(&self) -> Vec<ReplicaRole> {
+        self.replicas.iter().map(|r| r.plan.shape.role).collect()
+    }
+
+    /// Reassign a replica's pool role (the `RebalancePools` autoscaling
+    /// primitive) and rebuild both routers' pool membership. In-flight work
+    /// on the replica is unaffected; only *new* routing follows the role.
+    pub fn shift_role(&mut self, replica: usize, role: ReplicaRole) {
+        assert!(replica < self.n_replicas());
+        self.replicas[replica].plan.shape.role = role;
+        self.refresh_pools();
+    }
+
+    /// Restore construction-time roles (heal between experiments).
+    pub fn reset_roles(&mut self) {
+        for r in 0..self.replicas.len() {
+            self.replicas[r].plan.shape.role = self.base_roles[r];
+        }
+        self.refresh_pools();
+    }
+
+    fn refresh_pools(&mut self) {
+        let roles = self.roles();
+        let (prefill_members, decode_members) = pool_members(&roles);
+        self.router.set_members(prefill_members);
+        self.decode_router.set_members(decode_members);
     }
 
     /// Which replica's plan owns `node` (victim-replica resolution for the
@@ -115,12 +181,23 @@ impl Engine {
             .position(|r| r.plan.stages.iter().any(|s| s.nodes.contains(&node)))
     }
 
-    /// Register an arriving request and route it. Returns the replica index.
+    /// Register an arriving request and route it onto the prefill-capable
+    /// pool. Returns the replica index.
     pub fn register(&mut self, req: InferenceRequest) -> usize {
         let r = self.router.route(req.flow);
         self.placement.insert(req.id, r);
         self.requests.insert(req.id, req);
         r
+    }
+
+    /// Phase transition: pick the decode-pool replica that will adopt this
+    /// request's KV, and move its placement there. The caller models the
+    /// actual handoff transfer.
+    pub fn route_decode(&mut self, req: ReqId) -> usize {
+        let flow = self.requests[&req].flow;
+        let d = self.decode_router.route(flow);
+        self.placement.insert(req, d);
+        d
     }
 
     pub fn request(&self, id: ReqId) -> &InferenceRequest {
@@ -146,6 +223,25 @@ impl Engine {
         let n = self.replicas.len() as f64;
         self.replicas.iter().map(|r| r.kv.occupancy()).sum::<f64>() / n
     }
+}
+
+/// Split replica indices into (prefill-capable, decode-capable) pools.
+fn pool_members(roles: &[ReplicaRole]) -> (Vec<usize>, Vec<usize>) {
+    let prefill: Vec<usize> = roles
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.serves_prefill())
+        .map(|(i, _)| i)
+        .collect();
+    let decode: Vec<usize> = roles
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.serves_decode())
+        .map(|(i, _)| i)
+        .collect();
+    assert!(!prefill.is_empty(), "fleet has no prefill-capable replica");
+    assert!(!decode.is_empty(), "fleet has no decode-capable replica");
+    (prefill, decode)
 }
 
 #[cfg(test)]
@@ -188,5 +284,55 @@ mod tests {
         assert_eq!(e.queue_depth(), 0);
         assert_eq!(e.kv_occupancy(), 0.0);
         assert_eq!(e.total_tokens(), 0);
+    }
+
+    fn disagg_engine() -> Engine {
+        let mut spec = ClusterSpec::default();
+        spec.n_nodes = 6;
+        let shapes = vec![
+            crate::cluster::ReplicaShape::new(crate::cluster::ReplicaRole::Prefill, 8, 1),
+            crate::cluster::ReplicaShape::new(crate::cluster::ReplicaRole::Decode, 4, 2),
+            crate::cluster::ReplicaShape::new(crate::cluster::ReplicaRole::Decode, 4, 2),
+        ];
+        let mut cfg = EngineConfig::default();
+        cfg.shapes = Some(shapes.clone());
+        let plans = build_shaped_replicas(&spec, &shapes);
+        Engine::new(cfg, plans)
+    }
+
+    #[test]
+    fn colocated_engine_is_not_disaggregated() {
+        let e = engine();
+        assert!(!e.is_disaggregated());
+        assert_eq!(e.router.members(), &[0]);
+        assert_eq!(e.decode_router.members(), &[0]);
+    }
+
+    #[test]
+    fn two_stage_routing_respects_pools() {
+        let mut e = disagg_engine();
+        assert!(e.is_disaggregated());
+        assert_eq!(e.router.members(), &[0]);
+        assert_eq!(e.decode_router.members(), &[1, 2]);
+        let p = e.register(req(1, 5));
+        assert_eq!(p, 0, "admission must land on the prefill pool");
+        let d = e.route_decode(ReqId(1));
+        assert!(d == 1 || d == 2, "transition must land on the decode pool");
+        assert_eq!(e.placement[&ReqId(1)], d);
+        // Accounting is split per stage.
+        assert_eq!(e.router.outstanding()[0], 1);
+        assert_eq!(e.decode_router.outstanding()[d], 1);
+    }
+
+    #[test]
+    fn role_shift_moves_pool_membership_and_heals() {
+        let mut e = disagg_engine();
+        e.shift_role(2, crate::cluster::ReplicaRole::Prefill);
+        assert_eq!(e.router.members(), &[0, 2]);
+        assert_eq!(e.decode_router.members(), &[1]);
+        assert!(e.is_disaggregated(), "role shifts don't collapse the phase split");
+        e.reset_roles();
+        assert_eq!(e.router.members(), &[0]);
+        assert_eq!(e.decode_router.members(), &[1, 2]);
     }
 }

@@ -3,7 +3,7 @@
 //! within a stage. Imbalance knobs here create EW2 (stage imbalance) and
 //! EW3 (shard imbalance).
 
-use crate::cluster::topology::ClusterSpec;
+use crate::cluster::topology::{ClusterSpec, ReplicaRole, ReplicaShape};
 use crate::ids::{GpuId, NodeId, StageId};
 
 /// One pipeline stage: the nodes (and their GPUs) executing a layer slice.
@@ -18,23 +18,52 @@ pub struct Stage {
     pub shard_frac: Vec<f64>,
 }
 
-/// A replica: a full copy of the model across `pp` stages.
+/// A replica: a full copy of the model across `pp` stages, tagged with its
+/// pool role + parallelism shape (heterogeneous fleets mix shapes).
 #[derive(Debug, Clone)]
 pub struct ParallelPlan {
     pub replica: usize,
+    pub shape: ReplicaShape,
     pub stages: Vec<Stage>,
 }
 
 impl ParallelPlan {
-    /// Build the canonical plan for one replica: stages take consecutive
-    /// node groups; every GPU of a stage's nodes participates (TP spans the
-    /// stage's nodes, so TP collectives cross the fabric and are
-    /// DPU-observable — see DESIGN.md).
+    /// Build the canonical colocated plan for one replica: stages take
+    /// consecutive node groups; every GPU of a stage's nodes participates
+    /// (TP spans the stage's nodes, so TP collectives cross the fabric and
+    /// are DPU-observable — see DESIGN.md).
     pub fn build(spec: &ClusterSpec, replica: usize, nodes: &[NodeId]) -> Self {
         assert!(!nodes.is_empty());
         assert_eq!(nodes.len() % spec.pp_degree, 0, "nodes must split evenly into stages");
-        let nodes_per_stage = nodes.len() / spec.pp_degree;
-        let stages = (0..spec.pp_degree)
+        let shape = ReplicaShape::new(
+            ReplicaRole::Colocated,
+            (nodes.len() / spec.pp_degree) * spec.gpus_per_node,
+            spec.pp_degree,
+        );
+        Self::build_shaped(spec, replica, nodes, shape)
+    }
+
+    /// Build a plan with an explicit [`ReplicaShape`] (possibly different
+    /// per replica: the phase-disaggregated pools use e.g. a TP8×PP1 prefill
+    /// replica next to TP4×PP2 decode replicas).
+    pub fn build_shaped(
+        spec: &ClusterSpec,
+        replica: usize,
+        nodes: &[NodeId],
+        shape: ReplicaShape,
+    ) -> Self {
+        assert!(!nodes.is_empty());
+        assert_eq!(nodes.len() % shape.pp, 0, "nodes must split evenly into stages");
+        let nodes_per_stage = nodes.len() / shape.pp;
+        assert_eq!(
+            nodes_per_stage * spec.gpus_per_node,
+            shape.tp,
+            "shape tp {} inconsistent with {} nodes/stage x {} gpus",
+            shape.tp,
+            nodes_per_stage,
+            spec.gpus_per_node
+        );
+        let stages = (0..shape.pp)
             .map(|s| {
                 let snodes: Vec<NodeId> =
                     nodes[s * nodes_per_stage..(s + 1) * nodes_per_stage].to_vec();
@@ -45,12 +74,12 @@ impl ParallelPlan {
                     id: StageId(s as u32),
                     nodes: snodes,
                     gpus,
-                    layer_frac: 1.0 / spec.pp_degree as f64,
+                    layer_frac: 1.0 / shape.pp as f64,
                     shard_frac: vec![1.0 / n_gpus as f64; n_gpus],
                 }
             })
             .collect();
-        ParallelPlan { replica, stages }
+        ParallelPlan { replica, shape, stages }
     }
 
     pub fn n_stages(&self) -> usize {
@@ -148,6 +177,31 @@ pub fn build_replicas(spec: &ClusterSpec, nodes_per_stage: usize) -> Vec<Paralle
         .collect()
 }
 
+/// Partition the cluster's nodes into heterogeneous replicas, one per shape
+/// (consecutive node ranges, shape order). This is the phase-disaggregated
+/// builder: roles split the fleet into prefill/decode pools and each pool
+/// may use a different TP×PP layout.
+pub fn build_shaped_replicas(spec: &ClusterSpec, shapes: &[ReplicaShape]) -> Vec<ParallelPlan> {
+    assert!(!shapes.is_empty(), "no replica shapes");
+    let mut next = 0usize;
+    shapes
+        .iter()
+        .enumerate()
+        .map(|(r, &shape)| {
+            let need = shape.nodes_needed(spec.gpus_per_node);
+            assert!(
+                next + need <= spec.n_nodes,
+                "cluster of {} nodes too small for shapes (need > {})",
+                spec.n_nodes,
+                next + need - 1
+            );
+            let nodes: Vec<NodeId> = (next..next + need).map(|i| NodeId(i as u32)).collect();
+            next += need;
+            ParallelPlan::build_shaped(spec, r, &nodes, shape)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,6 +243,54 @@ mod tests {
         p.rebalance();
         assert!((p.stages[0].layer_frac - 0.5).abs() < 1e-12);
         assert!((p.stages[1].shard_frac[0] - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_plans_carry_colocated_shapes() {
+        let spec = ClusterSpec::default();
+        let p = build_replicas(&spec, 2).remove(0);
+        assert_eq!(p.shape, ReplicaShape::new(ReplicaRole::Colocated, 8, 2));
+        let q = build_replicas(&spec, 1).remove(1);
+        assert_eq!(q.shape, ReplicaShape::new(ReplicaRole::Colocated, 4, 2));
+    }
+
+    #[test]
+    fn shaped_replicas_take_consecutive_node_ranges() {
+        let mut spec = ClusterSpec::default();
+        spec.n_nodes = 6;
+        let shapes = [
+            ReplicaShape::new(ReplicaRole::Prefill, 8, 1),
+            ReplicaShape::new(ReplicaRole::Decode, 4, 2),
+            ReplicaShape::new(ReplicaRole::Decode, 4, 2),
+        ];
+        let plans = build_shaped_replicas(&spec, &shapes);
+        assert_eq!(plans.len(), 3);
+        // TP8 prefill replica: one 2-node stage (TP spans the fabric).
+        assert_eq!(plans[0].n_stages(), 1);
+        assert_eq!(plans[0].stages[0].nodes, vec![NodeId(0), NodeId(1)]);
+        assert_eq!(plans[0].stages[0].gpus.len(), 8);
+        // TP4xPP2 decode replicas: two single-node stages each.
+        assert_eq!(plans[1].n_stages(), 2);
+        assert_eq!(plans[1].all_nodes(), vec![NodeId(2), NodeId(3)]);
+        assert_eq!(plans[2].all_nodes(), vec![NodeId(4), NodeId(5)]);
+        for p in &plans {
+            p.check().unwrap();
+        }
+        assert_eq!(plans[0].shape.role, ReplicaRole::Prefill);
+        assert_eq!(plans[2].shape.role, ReplicaRole::Decode);
+    }
+
+    #[test]
+    #[should_panic(expected = "too small for shapes")]
+    fn shaped_overflow_panics() {
+        let spec = ClusterSpec::default(); // 4 nodes
+        build_shaped_replicas(
+            &spec,
+            &[
+                ReplicaShape::new(ReplicaRole::Prefill, 8, 1),
+                ReplicaShape::new(ReplicaRole::Decode, 8, 2),
+            ],
+        );
     }
 
     #[test]

@@ -70,8 +70,17 @@ const OUTSTANDING_WEIGHT: f64 = 0.5;
 #[derive(Debug)]
 pub struct Router {
     n_replicas: usize,
+    /// The routable subset (pool membership): every pick lands on a member.
+    /// Full membership (`0..n_replicas`) reproduces the classic single-pool
+    /// router bit for bit; a phase-disaggregated engine runs one router over
+    /// the prefill pool and one over the decode pool, both indexing the same
+    /// global replica space.
+    members: Vec<usize>,
     policy: RoutePolicy,
     overrides: HashMap<FlowId, usize>,
+    /// Pathology hook (PD3): wedge every pick onto one replica. Overrides
+    /// still win (mitigation outranks the fault), policies are bypassed.
+    pin: Option<usize>,
     outstanding: Vec<i64>,
     routed_per_replica: Vec<u64>,
     /// Replicas taken out of rotation (DP3 straggler drain).
@@ -85,11 +94,22 @@ pub struct Router {
 
 impl Router {
     pub fn new(n_replicas: usize, policy: RoutePolicy) -> Self {
+        Self::with_members(n_replicas, policy, (0..n_replicas).collect())
+    }
+
+    /// Router over a pool: picks are restricted to `members` (sorted, unique
+    /// global replica indices). Load accounting stays globally indexed.
+    pub fn with_members(n_replicas: usize, policy: RoutePolicy, members: Vec<usize>) -> Self {
         assert!(n_replicas > 0);
+        assert!(!members.is_empty(), "router needs at least one member");
+        assert!(members.windows(2).all(|w| w[0] < w[1]), "members must be sorted unique");
+        assert!(*members.last().unwrap() < n_replicas, "member out of range");
         Router {
             n_replicas,
+            members,
             policy,
             overrides: HashMap::new(),
+            pin: None,
             outstanding: vec![0; n_replicas],
             routed_per_replica: vec![0; n_replicas],
             drained: vec![false; n_replicas],
@@ -105,14 +125,14 @@ impl Router {
         let mut x = (flow.0 as u64 ^ salt).wrapping_add(0x9E3779B97F4A7C15);
         x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
         x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
-        (x ^ (x >> 31)) as usize % self.n_replicas
+        self.members[(x ^ (x >> 31)) as usize % self.members.len()]
     }
 
-    /// Argmin of `key` over non-drained replicas (lowest index wins ties);
-    /// falls back to replica 0 when everything is drained.
+    /// Argmin of `key` over non-drained members (lowest index wins ties);
+    /// falls back to the first member when everything is drained.
     fn argmin_live(&self, key: impl Fn(usize) -> f64) -> usize {
         let mut best: Option<(usize, f64)> = None;
-        for i in 0..self.n_replicas {
+        for &i in &self.members {
             if self.drained[i] {
                 continue;
             }
@@ -122,7 +142,10 @@ impl Router {
                 _ => best = Some((i, k)),
             }
         }
-        best.map(|(i, _)| i).unwrap_or(0)
+        match best {
+            Some((i, _)) => i,
+            None => self.members[0],
+        }
     }
 
     /// When a hash-selected replica is drained, deterministically fall back
@@ -146,20 +169,25 @@ impl Router {
         if let Some(&r) = self.overrides.get(&flow) {
             return r;
         }
+        // The PD3 wedge bypasses policy (but not overrides or drains).
+        if let Some(p) = self.pin {
+            return self.redirect_if_drained(p);
+        }
         match self.policy {
             RoutePolicy::FlowHash | RoutePolicy::HashWithOverrides => {
                 self.redirect_if_drained(self.hash_flow(flow, 0))
             }
             RoutePolicy::RoundRobin => {
-                let mut r = self.rr_next % self.n_replicas;
-                for _ in 0..self.n_replicas {
-                    if !self.drained[r] {
+                let m = self.members.len();
+                let mut k = self.rr_next % m;
+                for _ in 0..m {
+                    if !self.drained[self.members[k]] {
                         break;
                     }
-                    r = (r + 1) % self.n_replicas;
+                    k = (k + 1) % m;
                 }
-                self.rr_next = (r + 1) % self.n_replicas;
-                r
+                self.rr_next = (k + 1) % m;
+                self.members[k]
             }
             RoutePolicy::LeastLoaded => self.argmin_live(|i| self.outstanding[i] as f64),
             RoutePolicy::PowerOfTwo => {
@@ -204,12 +232,49 @@ impl Router {
 
     /// Mitigation hook: steer a flow to a specific replica.
     pub fn set_override(&mut self, flow: FlowId, replica: usize) {
-        assert!(replica < self.n_replicas);
+        assert!(self.is_member(replica), "override target {replica} not in pool");
         self.overrides.insert(flow, replica);
     }
 
     pub fn clear_overrides(&mut self) {
         self.overrides.clear();
+    }
+
+    /// Pathology hook (PD3): wedge all picks onto `replica` / release it.
+    pub fn set_pin(&mut self, pin: Option<usize>) {
+        if let Some(p) = pin {
+            assert!(self.is_member(p), "pin target {p} not in pool");
+        }
+        self.pin = pin;
+    }
+
+    pub fn pin(&self) -> Option<usize> {
+        self.pin
+    }
+
+    /// Replace the pool membership (role shifts move replicas between
+    /// pools). Load accounting is globally indexed and carries over; a pin
+    /// or override pointing outside the new pool is dropped.
+    pub fn set_members(&mut self, members: Vec<usize>) {
+        assert!(!members.is_empty(), "router needs at least one member");
+        assert!(members.windows(2).all(|w| w[0] < w[1]), "members must be sorted unique");
+        assert!(*members.last().unwrap() < self.n_replicas, "member out of range");
+        self.members = members;
+        if let Some(p) = self.pin {
+            if !self.is_member(p) {
+                self.pin = None;
+            }
+        }
+        let members = &self.members;
+        self.overrides.retain(|_, r| members.binary_search(r).is_ok());
+    }
+
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    pub fn is_member(&self, replica: usize) -> bool {
+        self.members.binary_search(&replica).is_ok()
     }
 
     /// Mitigation hook (DP3): take a replica out of / back into rotation.
@@ -334,6 +399,64 @@ mod tests {
         }
         assert_eq!(RoutePolicy::from_id("hash-overrides"), Some(RoutePolicy::HashWithOverrides));
         assert_eq!(RoutePolicy::from_id("nope"), None);
+    }
+
+    #[test]
+    fn pool_router_only_picks_members() {
+        for policy in ALL_POLICIES {
+            let mut r = Router::with_members(5, policy, vec![1, 3, 4]);
+            for f in 0..200u32 {
+                let got = r.route(FlowId(f));
+                assert!(r.is_member(got), "{policy:?} picked non-member {got}");
+            }
+            assert_eq!(r.outstanding()[0], 0);
+            assert_eq!(r.outstanding()[2], 0);
+        }
+    }
+
+    #[test]
+    fn pin_wedges_all_picks_until_cleared() {
+        let mut r = Router::new(3, RoutePolicy::LeastLoaded);
+        r.set_pin(Some(2));
+        for f in 0..20u32 {
+            assert_eq!(r.route(FlowId(f)), 2);
+        }
+        // Overrides outrank the pin (mitigation beats the fault)...
+        r.set_override(FlowId(99), 0);
+        assert_eq!(r.route(FlowId(99)), 0);
+        // ...and draining the pinned replica redirects deterministically.
+        r.set_drained(2, true);
+        assert_ne!(r.route(FlowId(7)), 2);
+        r.set_drained(2, false);
+        r.set_pin(None);
+        let mut seen = std::collections::HashSet::new();
+        for f in 0..30u32 {
+            seen.insert(r.route(FlowId(f)));
+        }
+        assert!(seen.len() > 1, "pin not released");
+    }
+
+    #[test]
+    fn set_members_drops_out_of_pool_pins_and_overrides() {
+        let mut r = Router::with_members(4, RoutePolicy::FlowHash, vec![0, 1, 2, 3]);
+        r.set_pin(Some(3));
+        r.set_override(FlowId(5), 2);
+        r.set_members(vec![0, 1, 2]);
+        assert_eq!(r.pin(), None);
+        assert_eq!(r.route(FlowId(5)), 2, "in-pool override survives");
+        r.set_members(vec![0, 1]);
+        assert!(r.route(FlowId(5)) < 2, "out-of-pool override dropped");
+    }
+
+    #[test]
+    fn full_membership_matches_classic_hashing() {
+        // Router::new must reproduce the pre-pool arithmetic exactly: the
+        // member table is the identity, so hash % members.len() == hash % n.
+        let mut classic = Router::new(4, RoutePolicy::FlowHash);
+        let mut pooled = Router::with_members(4, RoutePolicy::FlowHash, vec![0, 1, 2, 3]);
+        for f in 0..500u32 {
+            assert_eq!(classic.route(FlowId(f)), pooled.route(FlowId(f)));
+        }
     }
 
     #[test]

@@ -25,10 +25,11 @@
 //! | `coordinator::world` | world construction, event alphabet, calendar wiring |
 //! | `coordinator::ingress` | arrival → routing/admission, egress accounting, replica-aware injection targeting |
 //! | `coordinator::iterate` | per-replica iteration driving: batching, KV, prefill/decode, retirement |
-//! | `coordinator::observe` | DPU/SW windows, fleet (DP1-DP3) skew sensing, closed mitigation loop |
+//! | `coordinator::handoff` | prefill→decode KV handoff: phase transition, decode-pool adoption (disaggregated fleets) |
+//! | `coordinator::observe` | DPU/SW windows, fleet (DP1-DP3) + pool (PD1-PD3) skew sensing, closed mitigation loop |
 //! | `coordinator::experiment` | three-phase condition experiments + per-condition shaping |
 //! | `coordinator::matrix` | the parallel 28-condition scorecard matrix |
-//! | `coordinator::fleet` | replicas × routing-policy sweep with the DP condition family (`dpulens fleet`) |
+//! | `coordinator::fleet` | replicas × routing-policy sweep with the DP condition family + the `--disagg` PD study (`dpulens fleet`) |
 //! | `coordinator::perf` | pipeline benchmark: ingest/snapshot microbenches + matrix/fleet wall-clock (`dpulens perf`) |
 //! | `coordinator::report` | machine-readable reports (run/runbook/matrix JSON) |
 

@@ -12,10 +12,13 @@
 //!             per-condition detection-quality scorecard as a table
 //!             and/or deterministic JSON for trajectory tracking
 //!   fleet     [--replicas N] [--threads N] [--json] [--json-out PATH]
+//!             [--duration-ms N] [--seed S] [--disagg]
 //!             replicas × routing-policy sweep plus the DP1-DP3
 //!             data-parallel condition experiments (inject → detect →
 //!             mitigate), with per-replica skew columns; deterministic
-//!             JSON across runs and thread counts
+//!             JSON across runs and thread counts. `--disagg` appends the
+//!             phase-disaggregation study (colocated vs 2-pool topology +
+//!             the PD1-PD3 family) and bumps the JSON to dpulens.fleet.v2
 //!   perf      [--quick] [--replicates N] [--threads N] [--json-out PATH]
 //!             pipeline benchmark: batched ingest throughput, snapshot
 //!             latency, and matrix/fleet end-to-end wall-clock, written
@@ -197,6 +200,7 @@ fn cmd_fleet(args: &[String]) {
     if let Some(t) = opt_parse::<usize>(args, "--threads") {
         fc.threads = t;
     }
+    fc.disagg = flag(args, "--disagg");
     let report = run_fleet(&fc);
     if flag(args, "--json") {
         println!("{}", report.to_json().render());
@@ -255,12 +259,13 @@ fn cmd_perf(args: &[String]) {
 }
 
 fn cmd_runbook() {
-    for table in ["3a", "3b", "3c", "dp"] {
+    for table in ["3a", "3b", "3c", "dp", "pd"] {
         let title = match table {
             "3a" => "Table 3(a) North-South Runbook",
             "3b" => "Table 3(b) PCIe Observer Runbook",
             "3c" => "Table 3(c) East-West Sensing Runbook",
-            _ => "DP Fleet Runbook (data-parallel extension)",
+            "dp" => "DP Fleet Runbook (data-parallel extension)",
+            _ => "PD Runbook (phase-disaggregation extension)",
         };
         let mut t =
             Table::new(title).header(&["id", "signal (red flag)", "root cause", "directive"]);
@@ -324,15 +329,89 @@ fn main() {
         Some("signals") => cmd_signals(),
         Some("attribution") => cmd_attribution(&args[1..]),
         _ => {
-            eprintln!(
-                "dpulens — DPU-vantage observability for LLM inference clusters\n\
-                 usage: dpulens <serve|inject|sweep|matrix|fleet|perf|runbook|signals|attribution> [flags]\n\
-                 flags: --real --mitigate --duration-ms N --rate R --seed S\n\
-                 matrix: --replicates N --threads N --json --json-out PATH --no-negative-control\n\
-                 fleet:  --replicas N --threads N --json --json-out PATH\n\
-                 perf:   --quick --micro-only --replicates N --replicas N --threads N --json-out PATH"
-            );
+            // Usage renders from util::cli::CLI — the registry the
+            // help-coverage test audits against the parsers above.
+            eprint!("{}", dpulens::util::cli::usage());
             std::process::exit(2);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    /// The flags each cmd_* handler above actually parses (via `flag` /
+    /// `opt_parse` / `opt_val` / `base_cfg`). Auditing happens here: when a
+    /// handler gains or loses a flag, this mirror table and the
+    /// `util::cli::CLI` spec must both move with it, and this test pins the
+    /// two together — so the printed help can never drift from the parser
+    /// again (the PR-3 `--threads`/`--json-out` drift).
+    const PARSED: &[(&str, &[&str])] = &[
+        ("serve", &["--real", "--duration-ms", "--rate", "--seed", "--profile", "--mitigate"]),
+        ("inject", &["--duration-ms", "--rate", "--seed", "--profile", "--mitigate"]),
+        (
+            "sweep",
+            &["--duration-ms", "--rate", "--seed", "--profile", "--mitigate", "--threads"],
+        ),
+        (
+            "matrix",
+            &[
+                "--replicates",
+                "--threads",
+                "--json",
+                "--json-out",
+                "--no-negative-control",
+                "--duration-ms",
+                "--rate",
+                "--seed",
+                "--profile",
+                "--mitigate",
+            ],
+        ),
+        (
+            "fleet",
+            &[
+                "--replicas",
+                "--threads",
+                "--json",
+                "--json-out",
+                "--duration-ms",
+                "--seed",
+                "--disagg",
+            ],
+        ),
+        (
+            "perf",
+            &["--quick", "--micro-only", "--replicates", "--replicas", "--threads", "--json-out"],
+        ),
+        ("runbook", &[]),
+        ("signals", &[]),
+        ("attribution", &["--duration-ms", "--rate", "--seed", "--profile", "--mitigate"]),
+    ];
+
+    #[test]
+    fn help_covers_every_parsed_flag() {
+        let usage = dpulens::util::cli::usage();
+        for (cmd, flags) in PARSED {
+            let spec = dpulens::util::cli::cmd_spec(cmd)
+                .unwrap_or_else(|| panic!("subcommand {cmd} missing from CLI spec"));
+            for fl in *flags {
+                assert!(
+                    spec.flags.iter().any(|s| s.name == *fl),
+                    "{cmd}: parsed flag {fl} missing from the CLI spec"
+                );
+                assert!(usage.contains(fl), "{cmd}: parsed flag {fl} missing from usage text");
+            }
+            // And the reverse: the spec advertises nothing the parser
+            // ignores.
+            for s in spec.flags {
+                assert!(
+                    flags.contains(&s.name),
+                    "{cmd}: spec advertises {} but the handler never parses it",
+                    s.name
+                );
+            }
+        }
+        // Every spec'd subcommand is audited.
+        assert_eq!(PARSED.len(), dpulens::util::cli::CLI.len());
     }
 }

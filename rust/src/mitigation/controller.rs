@@ -225,6 +225,10 @@ impl Controller {
             CompressKvTransfers => {
                 cluster.fabric_knobs.kv_link_budget_factor =
                     cluster.fabric_knobs.kv_link_budget_factor.max(1.0);
+                // The prefill→decode handoff is a KV transfer too (PD2's
+                // stalled pool-boundary link rides the same directive).
+                cluster.fabric_knobs.handoff_budget_factor =
+                    cluster.fabric_knobs.handoff_budget_factor.max(1.0);
                 "KV compressed/resharded to fit link budget".into()
             }
             KvAwareRouting => {
@@ -242,6 +246,36 @@ impl Controller {
                     }
                     None => "straggler replica unresolved; no drain applied".into(),
                 }
+            }
+            RebalancePools => {
+                // Move the least-loaded decode-only replica into the prefill
+                // pool — but never the last one (the decode pool must stay
+                // serviceable).
+                let decode_only: Vec<usize> = engine
+                    .roles()
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, r)| **r == crate::cluster::ReplicaRole::Decode)
+                    .map(|(i, _)| i)
+                    .collect();
+                if decode_only.len() >= 2 && engine.decode_router.members().len() >= 2 {
+                    let spare = *decode_only
+                        .iter()
+                        .min_by_key(|&&r| engine.decode_router.outstanding()[r])
+                        .unwrap();
+                    engine.shift_role(spare, crate::cluster::ReplicaRole::Prefill);
+                    format!("replica {spare} reassigned decode→prefill (pool rebalanced)")
+                } else {
+                    "no spare decode replica; pools unchanged".into()
+                }
+            }
+            RebalanceHandoffRouting => {
+                engine.decode_router.set_pin(None);
+                engine.decode_router.clear_overrides();
+                engine
+                    .decode_router
+                    .set_policy(crate::engine::RoutePolicy::LeastLoaded);
+                "handoff routing unwedged: pin cleared, decode pool balanced by load".into()
             }
         }
     }
@@ -340,6 +374,77 @@ mod tests {
         );
         assert!(!engine.replicas[1].kv.is_restricted());
         assert_eq!(engine.router.policy(), crate::engine::RoutePolicy::WeightedTelemetry);
+    }
+
+    #[test]
+    fn pd_directives_rebalance_pools_and_handoff_routing() {
+        use crate::cluster::{ReplicaRole, ReplicaShape};
+        let mut spec = ClusterSpec::default();
+        spec.n_nodes = 6;
+        let shapes = vec![
+            ReplicaShape::new(ReplicaRole::Prefill, 8, 1),
+            ReplicaShape::new(ReplicaRole::Decode, 4, 2),
+            ReplicaShape::new(ReplicaRole::Decode, 4, 2),
+        ];
+        let mut ecfg = EngineConfig::default();
+        ecfg.shapes = Some(shapes.clone());
+        let plans = crate::engine::build_shaped_replicas(&spec, &shapes);
+        let mut engine = Engine::new(ecfg, plans);
+        let mut cluster = Cluster::new(spec, 1);
+        // PD3's wedge, then its mitigation unwedges the decode router.
+        engine.decode_router.set_pin(Some(1));
+        let mut ctl = Controller::new(true);
+        ctl.react(
+            SimTime(0),
+            &[det(Condition::Pd3DecodeStarvation, 2)],
+            &mut cluster,
+            &mut engine,
+        );
+        assert_eq!(engine.decode_router.pin(), None);
+        assert_eq!(engine.decode_router.policy(), crate::engine::RoutePolicy::LeastLoaded);
+        // PD1's mitigation shifts a spare decode replica into the prefill
+        // pool, leaving the decode pool non-empty.
+        ctl.react(
+            SimTime(1),
+            &[det(Condition::Pd1PrefillSaturation, 0)],
+            &mut cluster,
+            &mut engine,
+        );
+        assert_eq!(engine.router.members().len(), 2, "{:?}", engine.roles());
+        assert_eq!(engine.decode_router.members().len(), 1);
+        // PD2's directive restores the handoff link budget.
+        cluster.fabric_knobs.handoff_budget_factor = 0.2;
+        ctl.react(
+            SimTime(2),
+            &[det(Condition::Pd2KvHandoffStall, 2)],
+            &mut cluster,
+            &mut engine,
+        );
+        assert_eq!(cluster.fabric_knobs.handoff_budget_factor, 1.0);
+    }
+
+    #[test]
+    fn rebalance_pools_never_empties_the_decode_pool() {
+        use crate::cluster::{ReplicaRole, ReplicaShape};
+        let mut spec = ClusterSpec::default();
+        spec.n_nodes = 4;
+        let shapes = vec![
+            ReplicaShape::new(ReplicaRole::Prefill, 8, 1),
+            ReplicaShape::new(ReplicaRole::Decode, 4, 2),
+        ];
+        let mut ecfg = EngineConfig::default();
+        ecfg.shapes = Some(shapes.clone());
+        let plans = crate::engine::build_shaped_replicas(&spec, &shapes);
+        let mut engine = Engine::new(ecfg, plans);
+        let mut cluster = Cluster::new(spec, 1);
+        let mut ctl = Controller::new(true);
+        ctl.react(
+            SimTime(0),
+            &[det(Condition::Pd1PrefillSaturation, 0)],
+            &mut cluster,
+            &mut engine,
+        );
+        assert_eq!(engine.decode_router.members(), &[1], "sole decode replica must stay");
     }
 
     #[test]

@@ -54,6 +54,12 @@ pub enum Directive {
     KvAwareRouting,
     /// DP3: take the straggling replica out of rotation until it recovers.
     DrainStragglerReplica,
+    /// PD1: shift a spare decode-pool replica into the prefill pool — the
+    /// role-level autoscaling primitive of a disaggregated fleet.
+    RebalancePools,
+    /// PD3: unwedge the phase-transition router (clear pins/overrides,
+    /// balance KV handoffs by decode-pool load).
+    RebalanceHandoffRouting,
 }
 
 impl Directive {
@@ -85,6 +91,8 @@ impl Directive {
             CompressKvTransfers => "Compress KV, shard differently, apply caching policies",
             KvAwareRouting => "Rebuild KV pools; weight LB by queue/KV telemetry from the DPU",
             DrainStragglerReplica => "Drain the straggler replica; respread its sessions",
+            RebalancePools => "Shift a replica between prefill/decode roles toward the saturated pool",
+            RebalanceHandoffRouting => "Rebalance KV-handoff routing across the decode pool",
         }
     }
 }

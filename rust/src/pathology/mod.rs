@@ -30,10 +30,12 @@ pub fn site(c: Condition) -> InjectSite {
     match c {
         Ns1BurstBacklog | Ns2IngressStarvation | Ns3FlowSkew => InjectSite::Workload,
         Ns8EarlyCompletion | Pc10DecodeEarlyStop => InjectSite::Workload,
-        Dp1RouterFlowSkew => InjectSite::Workload,
-        Ew2PpBubble | Ew3CrossNodeSkew | Dp2HotReplicaKv => InjectSite::Engine,
+        Dp1RouterFlowSkew | Pd1PrefillSaturation => InjectSite::Workload,
+        Ew2PpBubble | Ew3CrossNodeSkew | Dp2HotReplicaKv | Pd3DecodeStarvation => {
+            InjectSite::Engine
+        }
         Ew4Congestion | Ew5HolBlocking | Ew6Retransmissions | Ew7CreditStarvation
-        | Ew8KvBottleneck => InjectSite::Fabric,
+        | Ew8KvBottleneck | Pd2KvHandoffStall => InjectSite::Fabric,
         _ => InjectSite::Node,
     }
 }
@@ -243,6 +245,31 @@ pub fn inject(
             }
             format!("replica {ri} degraded: every GPU at 5% speed (straggler replica)")
         }
+        // ---- phase-disaggregation family (PD1-PD3) ----
+        Pd1PrefillSaturation => {
+            // Prompt flood: long prompts at a surged rate overrun the
+            // prefill pool while decode demand (tokens out) barely moves.
+            wl.prompt_len = LengthDist::Uniform { lo: 48, hi: 64 };
+            if let Arrival::Poisson { rate } = &wl.arrival {
+                let surged = rate * 2.5;
+                wl.arrival = Arrival::Poisson { rate: surged };
+            }
+            "prompt flood: 48-64-token prompts at 2.5x rate overrun the prefill pool".into()
+        }
+        Pd2KvHandoffStall => {
+            cluster.fabric_knobs.handoff_budget_factor = 0.2;
+            "prefill→decode KV-handoff link budget collapsed to 20%".into()
+        }
+        Pd3DecodeStarvation => {
+            // Wedged handoff routing: every phase transition lands on one
+            // decode replica; its pool peers starve.
+            let hot = engine
+                .replica_of_node(target)
+                .filter(|&ri| engine.replicas[ri].plan.shape.role.serves_decode())
+                .unwrap_or_else(|| engine.decode_router.members()[0]);
+            engine.decode_router.set_pin(Some(hot));
+            format!("handoff routing wedged: every KV handoff lands on decode replica {hot}")
+        }
     }
 }
 
@@ -256,8 +283,12 @@ pub fn heal_all(cluster: &mut Cluster, engine: &mut Engine, wl: &mut WorkloadSpe
         pol.inflight_remap = true;
         pol.continuous = true;
     }
+    engine.reset_roles();
     engine.router.clear_overrides();
     engine.router.clear_drained();
+    engine.decode_router.set_pin(None);
+    engine.decode_router.clear_overrides();
+    engine.decode_router.clear_drained();
     *wl = WorkloadSpec::default();
 }
 
@@ -346,6 +377,70 @@ mod tests {
             assert!(cluster.all_healthy(), "{c:?} not healed");
             assert!(engine.replicas.iter().all(|r| !r.kv.is_restricted()));
         }
+    }
+
+    #[test]
+    fn pd_family_injects_on_the_disaggregated_fleet_and_heals() {
+        use crate::cluster::{ReplicaRole, ReplicaShape};
+        use crate::dpu::detectors::PD_CONDITIONS;
+        for c in PD_CONDITIONS {
+            let mut spec = ClusterSpec::default();
+            spec.n_nodes = 6;
+            let shapes = vec![
+                ReplicaShape::new(ReplicaRole::Prefill, 8, 1),
+                ReplicaShape::new(ReplicaRole::Decode, 4, 2),
+                ReplicaShape::new(ReplicaRole::Decode, 4, 2),
+            ];
+            let mut ecfg = EngineConfig::default();
+            ecfg.shapes = Some(shapes.clone());
+            let plans = crate::engine::build_shaped_replicas(&spec, &shapes);
+            let mut engine = Engine::new(ecfg, plans);
+            let mut cluster = Cluster::new(spec, 1);
+            let mut wl = WorkloadSpec::default();
+            // Victimize the second decode replica (index 2), like the
+            // disagg sweep does.
+            let target = engine.replicas[2].plan.entry_nodes()[0];
+            let desc = inject(c, target, &mut cluster, &mut engine, &mut wl);
+            assert!(!desc.is_empty(), "{c:?}");
+            match c {
+                Condition::Pd1PrefillSaturation => {
+                    assert!(matches!(wl.prompt_len, LengthDist::Uniform { lo: 48, .. }));
+                }
+                Condition::Pd2KvHandoffStall => {
+                    assert!(cluster.fabric_knobs.handoff_budget_factor < 1.0);
+                    assert_eq!(cluster.fabric_knobs.kv_link_budget_factor, 1.0);
+                }
+                _ => {
+                    assert_eq!(engine.decode_router.pin(), Some(2));
+                }
+            }
+            heal_all(&mut cluster, &mut engine, &mut wl);
+            assert!(cluster.all_healthy(), "{c:?} not healed");
+            assert_eq!(engine.decode_router.pin(), None);
+        }
+    }
+
+    #[test]
+    fn pd3_pin_falls_back_to_a_decode_member_for_non_decode_targets() {
+        use crate::cluster::{ReplicaRole, ReplicaShape};
+        let mut spec = ClusterSpec::default();
+        spec.n_nodes = 6;
+        let shapes = vec![
+            ReplicaShape::new(ReplicaRole::Prefill, 8, 1),
+            ReplicaShape::new(ReplicaRole::Decode, 4, 2),
+            ReplicaShape::new(ReplicaRole::Decode, 4, 2),
+        ];
+        let mut ecfg = EngineConfig::default();
+        ecfg.shapes = Some(shapes.clone());
+        let plans = crate::engine::build_shaped_replicas(&spec, &shapes);
+        let mut engine = Engine::new(ecfg, plans);
+        let mut cluster = Cluster::new(spec, 1);
+        let mut wl = WorkloadSpec::default();
+        // Target the prefill replica's node: the pin must land in the
+        // decode pool anyway.
+        let target = engine.replicas[0].plan.entry_nodes()[0];
+        inject(Condition::Pd3DecodeStarvation, target, &mut cluster, &mut engine, &mut wl);
+        assert_eq!(engine.decode_router.pin(), Some(1));
     }
 
     #[test]

@@ -1,6 +1,154 @@
 //! Tiny argv helpers shared by the CLI binary and the bench mains (clap is
 //! not vendored offline). Flags are exact matches; values are positional
 //! (`--name value`).
+//!
+//! The [`CLI`] table is the single source of truth for `dpulens`'s
+//! subcommands and flags: `main.rs` renders its usage text from it, and the
+//! binary's `help_covers_every_parsed_flag` test audits it against the
+//! flags the command handlers actually parse — so help text can no longer
+//! drift from the parser (the PR-3 `--threads`/`--json-out` drift).
+
+/// One flag a subcommand accepts. `value` names the flag's argument in the
+/// usage text (None for boolean switches).
+#[derive(Debug, Clone, Copy)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub value: Option<&'static str>,
+}
+
+/// One `dpulens` subcommand: its usage line and full flag set.
+#[derive(Debug, Clone, Copy)]
+pub struct CmdSpec {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub flags: &'static [FlagSpec],
+}
+
+const fn f(name: &'static str) -> FlagSpec {
+    FlagSpec { name, value: None }
+}
+
+const fn fv(name: &'static str, value: &'static str) -> FlagSpec {
+    FlagSpec { name, value: Some(value) }
+}
+
+/// Flags shared by every scenario-driving subcommand (`base_cfg`).
+const BASE_FLAGS: [FlagSpec; 5] = [
+    fv("--duration-ms", "N"),
+    fv("--rate", "R"),
+    fv("--seed", "S"),
+    fv("--profile", "NAME"),
+    f("--mitigate"),
+];
+
+/// The dpulens subcommand registry (usage text renders from this).
+pub const CLI: &[CmdSpec] = &[
+    CmdSpec {
+        name: "serve",
+        summary: "run one serving scenario",
+        flags: &[
+            f("--real"),
+            fv("--duration-ms", "N"),
+            fv("--rate", "R"),
+            fv("--seed", "S"),
+            fv("--profile", "NAME"),
+            f("--mitigate"),
+        ],
+    },
+    CmdSpec {
+        name: "inject <COND>",
+        summary: "inject one condition, report detection + impact",
+        flags: &BASE_FLAGS,
+    },
+    CmdSpec {
+        name: "sweep",
+        summary: "all 28 condition experiments in parallel",
+        flags: &[
+            fv("--duration-ms", "N"),
+            fv("--rate", "R"),
+            fv("--seed", "S"),
+            fv("--profile", "NAME"),
+            f("--mitigate"),
+            fv("--threads", "N"),
+        ],
+    },
+    CmdSpec {
+        name: "matrix",
+        summary: "injection x detection scorecard matrix",
+        flags: &[
+            fv("--replicates", "N"),
+            fv("--threads", "N"),
+            f("--json"),
+            fv("--json-out", "PATH"),
+            f("--no-negative-control"),
+            fv("--duration-ms", "N"),
+            fv("--rate", "R"),
+            fv("--seed", "S"),
+            fv("--profile", "NAME"),
+            f("--mitigate"),
+        ],
+    },
+    CmdSpec {
+        name: "fleet",
+        summary: "replicas x routing-policy sweep + DP (and, with --disagg, PD) studies",
+        flags: &[
+            fv("--replicas", "N"),
+            fv("--threads", "N"),
+            f("--json"),
+            fv("--json-out", "PATH"),
+            fv("--duration-ms", "N"),
+            fv("--seed", "S"),
+            f("--disagg"),
+        ],
+    },
+    CmdSpec {
+        name: "perf",
+        summary: "telemetry-pipeline benchmark (BENCH_pipeline.json)",
+        flags: &[
+            f("--quick"),
+            f("--micro-only"),
+            fv("--replicates", "N"),
+            fv("--replicas", "N"),
+            fv("--threads", "N"),
+            fv("--json-out", "PATH"),
+        ],
+    },
+    CmdSpec { name: "runbook", summary: "print the encoded runbook tables", flags: &[] },
+    CmdSpec { name: "signals", summary: "print the Table 2(b) signal inventory", flags: &[] },
+    CmdSpec {
+        name: "attribution <COND>",
+        summary: "inject + show root-cause attribution",
+        flags: &BASE_FLAGS,
+    },
+];
+
+/// Look up a subcommand's spec by its bare name (`fleet`, not `fleet ...`).
+pub fn cmd_spec(name: &str) -> Option<&'static CmdSpec> {
+    CLI.iter().find(|c| c.name == name || c.name.starts_with(&format!("{name} ")))
+}
+
+/// Render the full usage text from the [`CLI`] registry.
+pub fn usage() -> String {
+    let mut s = String::from(
+        "dpulens — DPU-vantage observability for LLM inference clusters\n\
+         usage: dpulens <subcommand> [flags]\n",
+    );
+    for c in CLI {
+        s.push_str(&format!("  {:<20} {}\n", c.name, c.summary));
+        if !c.flags.is_empty() {
+            let rendered: Vec<String> = c
+                .flags
+                .iter()
+                .map(|fl| match fl.value {
+                    Some(v) => format!("{} {v}", fl.name),
+                    None => fl.name.to_string(),
+                })
+                .collect();
+            s.push_str(&format!("  {:<20}   {}\n", "", rendered.join(" ")));
+        }
+    }
+    s
+}
 
 /// Is the exact flag present?
 pub fn flag(args: &[String], name: &str) -> bool {
@@ -41,5 +189,40 @@ mod tests {
     fn value_at_end_is_none() {
         let args = argv(&["--seed"]);
         assert_eq!(opt_val(&args, "--seed"), None);
+    }
+
+    #[test]
+    fn usage_renders_every_spec_flag() {
+        let u = usage();
+        for c in CLI {
+            let bare = c.name.split_whitespace().next().unwrap();
+            assert!(u.contains(bare), "usage missing subcommand {bare}");
+            for fl in c.flags {
+                assert!(u.contains(fl.name), "usage missing {} for {}", fl.name, c.name);
+            }
+        }
+    }
+
+    #[test]
+    fn cmd_spec_lookup_handles_positional_args() {
+        assert_eq!(cmd_spec("fleet").unwrap().name, "fleet");
+        assert_eq!(cmd_spec("inject").unwrap().name, "inject <COND>");
+        assert!(cmd_spec("nope").is_none());
+        // Every spec is reachable by its bare name.
+        for c in CLI {
+            let bare = c.name.split_whitespace().next().unwrap();
+            assert!(cmd_spec(bare).is_some(), "{bare} unreachable");
+        }
+    }
+
+    #[test]
+    fn flag_names_are_well_formed_and_unique_per_command() {
+        for c in CLI {
+            let mut seen = std::collections::HashSet::new();
+            for fl in c.flags {
+                assert!(fl.name.starts_with("--"), "{} malformed", fl.name);
+                assert!(seen.insert(fl.name), "{} duplicated in {}", fl.name, c.name);
+            }
+        }
     }
 }

@@ -13,6 +13,9 @@ pub enum ReqState {
     Queued,
     /// Scheduled into a prefill batch.
     Prefilling,
+    /// Phase transition on a disaggregated fleet: prefill finished, the
+    /// sequence's KV is in flight (or parked) toward a decode-pool replica.
+    KvHandoff,
     /// Generating tokens.
     Decoding,
     /// All tokens generated and flushed.
@@ -42,6 +45,14 @@ pub struct InferenceRequest {
     pub first_token_at: Option<SimTime>,
     pub done_at: Option<SimTime>,
 
+    // --- phase transition (disaggregated fleets only; None/0 otherwise) ---
+    /// When the KV handoff left the prefill pool.
+    pub handoff_start: Option<SimTime>,
+    /// When the KV handoff arrived at the decode pool.
+    pub handoff_done: Option<SimTime>,
+    /// Modeled handoff size: f(prompt_len, model dims) KV bytes.
+    pub kv_handoff_bytes: u64,
+
     // --- decode progress ---
     pub generated: Vec<i32>,
 }
@@ -61,7 +72,24 @@ impl InferenceRequest {
             prefill_start: None,
             first_token_at: None,
             done_at: None,
+            handoff_start: None,
+            handoff_done: None,
+            kv_handoff_bytes: 0,
             generated: Vec::new(),
+        }
+    }
+
+    /// Did this request cross the prefill→decode pool boundary (or is it
+    /// crossing it now)? Decides which router's accounting it closes.
+    pub fn transitioned(&self) -> bool {
+        self.handoff_start.is_some()
+    }
+
+    /// Fabric latency of the KV handoff, if it completed.
+    pub fn handoff_latency(&self) -> Option<crate::sim::SimDur> {
+        match (self.handoff_start, self.handoff_done) {
+            (Some(s), Some(d)) => Some(d - s),
+            _ => None,
         }
     }
 
@@ -113,6 +141,19 @@ mod tests {
     #[should_panic(expected = "empty prompt")]
     fn empty_prompt_rejected() {
         InferenceRequest::new(ReqId(0), FlowId(0), SimTime(0), vec![], 1);
+    }
+
+    #[test]
+    fn handoff_lifecycle_fields() {
+        let mut r = InferenceRequest::new(ReqId(1), FlowId(2), SimTime(0), vec![1, 2], 4);
+        assert!(!r.transitioned());
+        assert!(r.handoff_latency().is_none());
+        r.state = ReqState::KvHandoff;
+        r.handoff_start = Some(SimTime(1_000));
+        assert!(r.transitioned() && r.handoff_latency().is_none());
+        r.handoff_done = Some(SimTime(3_500));
+        assert_eq!(r.handoff_latency().unwrap().ns(), 2_500);
+        assert!(!r.is_finished());
     }
 
     #[test]

@@ -1,0 +1,130 @@
+//! Acceptance coverage for the phase-disaggregated serving plane:
+//!
+//! * a healthy 2-pool world serves end to end, with every request crossing
+//!   the prefill→decode boundary through a conserved KV handoff;
+//! * `dpulens fleet --disagg` detects all of PD1-PD3 on the 2-pool topology
+//!   and the post-`RebalancePools` (and sibling PD directives) runs recover
+//!   ≥ 80% of healthy decode throughput;
+//! * with disaggregation off, the fleet JSON stays schema v1 with no disagg
+//!   section; with it on, the v2 JSON is byte-identical across thread
+//!   counts.
+
+use dpulens::coordinator::fleet::{disagg_base_cfg, run_disagg_study, run_fleet, FleetConfig};
+use dpulens::coordinator::Scenario;
+use dpulens::dpu::detectors::{Condition, PD_CONDITIONS};
+use dpulens::sim::SimDur;
+
+#[test]
+fn healthy_two_pool_world_serves_through_the_handoff() {
+    let mut cfg = disagg_base_cfg();
+    cfg.duration = SimDur::from_ms(1500);
+    cfg.warmup_windows = 10;
+    cfg.calib_windows = 40;
+    let res = Scenario::new(cfg).run();
+
+    assert!(res.metrics.completed > 100, "completed {}", res.metrics.completed);
+    // Every multi-token request crossed the pool boundary exactly once.
+    assert!(res.handoffs.started > 100, "handoffs {}", res.handoffs.started);
+    assert!(res.handoffs.completed <= res.handoffs.started);
+    // Conservation: every landed handoff delivered its exact byte count;
+    // the sent/delivered gap is precisely the in-flight tail.
+    assert!(res.handoffs.bytes_delivered <= res.handoffs.bytes_sent);
+    assert!(
+        res.handoffs_inflight_at_end() < 50,
+        "handoff backlog at end: {}",
+        res.handoffs_inflight_at_end()
+    );
+    // Decode work lands on the decode pool: the prefill replica (lane 0)
+    // retains only what it finished at prefill, the decode lanes the rest.
+    let decode_tokens: u64 =
+        res.metrics.per_replica[1].tokens_out + res.metrics.per_replica[2].tokens_out;
+    assert!(
+        decode_tokens > res.metrics.per_replica[0].tokens_out,
+        "decode pool served {:?}",
+        res.metrics.per_replica
+    );
+    // Both decode replicas participate under load-balanced handoff routing.
+    assert!(res.handoffs.arrivals_per_replica[1] > 0);
+    assert!(res.handoffs.arrivals_per_replica[2] > 0);
+    // A healthy disaggregated world raises no PD alarms.
+    for c in PD_CONDITIONS {
+        assert!(!res.detected(c), "{} fired on a healthy 2-pool world", c.id());
+    }
+}
+
+#[test]
+fn pd_family_detected_and_mitigated_on_the_two_pool_topology() {
+    let report = run_disagg_study(0);
+
+    assert_eq!(report.pd_rows.len(), PD_CONDITIONS.len());
+    assert!(report.handoffs > 0, "healthy disagg cell shipped no KV handoffs");
+    assert!(report.disagg_tok_per_s > 0.0 && report.colocated_tok_per_s > 0.0);
+
+    for row in &report.pd_rows {
+        assert!(row.detected, "{} not detected on the 2-pool topology", row.condition.id());
+        assert!(
+            row.latency_ns.is_some(),
+            "{} detected but no time-to-detect sample",
+            row.condition.id()
+        );
+        assert!(
+            row.actions >= 1,
+            "{} fired but the controller took no action",
+            row.condition.id()
+        );
+        assert!(row.injected_tok_per_s > 0.0, "{} served nothing", row.condition.id());
+        // The acceptance bar: the mitigated run recovers at least 80% of
+        // the healthy (same-shaped, uninjected) decode throughput.
+        assert!(
+            row.mitigated_tok_per_s >= 0.8 * row.healthy_tok_per_s,
+            "{}: mitigated {:.0} tok/s < 80% of healthy {:.0} tok/s",
+            row.condition.id(),
+            row.mitigated_tok_per_s,
+            row.healthy_tok_per_s
+        );
+    }
+
+    // PD3's wedge must visibly cost throughput (one decode replica cannot
+    // carry the slot-saturating load), and mitigation must win it back.
+    let pd3 = report
+        .pd_rows
+        .iter()
+        .find(|r| r.condition == Condition::Pd3DecodeStarvation)
+        .unwrap();
+    assert!(
+        pd3.injected_tok_per_s < 0.95 * pd3.healthy_tok_per_s,
+        "PD3 injection did not dent throughput: {:.0} vs healthy {:.0}",
+        pd3.injected_tok_per_s,
+        pd3.healthy_tok_per_s
+    );
+    assert!(
+        pd3.mitigated_tok_per_s > pd3.injected_tok_per_s,
+        "PD3 mitigation did not recover over injected"
+    );
+}
+
+#[test]
+fn fleet_json_stays_v1_without_disagg_and_v2_is_thread_stable() {
+    // Off by default: schema v1, no disagg section.
+    let mut base = dpulens::coordinator::fleet::fleet_base_cfg(2);
+    base.duration = SimDur::from_ms(1200);
+    base.warmup_windows = 10;
+    base.calib_windows = 40;
+    let mk = |threads: usize, disagg: bool| FleetConfig {
+        base: base.clone(),
+        replicas: 2,
+        policies: vec![dpulens::engine::RoutePolicy::FlowHash],
+        threads,
+        disagg,
+    };
+    let v1 = run_fleet(&mk(2, false)).to_json().render();
+    assert!(v1.contains("\"schema\":\"dpulens.fleet.v1\""));
+    assert!(!v1.contains("\"disagg\""));
+
+    // The disagg section itself is deterministic across thread counts.
+    let a = run_disagg_study(2).to_json().render();
+    let b = run_disagg_study(3).to_json().render();
+    assert_eq!(a, b, "disagg JSON differs across thread counts");
+    assert!(a.contains("\"pd_conditions\""));
+    assert!(a.contains("\"prefill:tp8xpp1\""));
+}

@@ -106,6 +106,7 @@ fn fleet_json_is_deterministic_across_threads() {
         replicas: 2,
         policies: vec![RoutePolicy::FlowHash, RoutePolicy::PowerOfTwo],
         threads,
+        disagg: false,
     };
 
     let a = run_fleet(&mk(2)).to_json().render();

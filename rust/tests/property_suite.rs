@@ -173,3 +173,175 @@ fn prop_fastmap_model_check() {
         Ok(())
     });
 }
+
+// ---- two-stage (phase-disaggregated) router properties ----
+
+/// A small disaggregated scenario: 2 prefill TP4x1 + 1 decode TP4x2 on four
+/// nodes, tiny model, bounded request count so runs drain fully.
+fn small_disagg_cfg(seed: u64, max_requests: usize) -> dpulens::coordinator::ScenarioCfg {
+    use dpulens::cluster::{ReplicaRole, ReplicaShape};
+    use dpulens::coordinator::ScenarioCfg;
+    use dpulens::sim::dist::{Arrival, LengthDist};
+    use dpulens::sim::SimDur;
+    let mut cfg = ScenarioCfg::default();
+    cfg.seed = seed;
+    cfg.duration = SimDur::from_ms(2000);
+    cfg.warmup_windows = 5;
+    cfg.calib_windows = 20;
+    cfg.max_requests = max_requests;
+    cfg.cluster.n_nodes = 4;
+    cfg.cluster.pp_degree = 2;
+    cfg.engine.shapes = Some(vec![
+        ReplicaShape::new(ReplicaRole::Prefill, 4, 1),
+        ReplicaShape::new(ReplicaRole::Prefill, 4, 1),
+        ReplicaShape::new(ReplicaRole::Decode, 4, 2),
+    ]);
+    cfg.workload.arrival = Arrival::Poisson { rate: 400.0 };
+    cfg.workload.prompt_len = LengthDist::Uniform { lo: 8, hi: 32 };
+    cfg.workload.output_len = LengthDist::Uniform { lo: 2, hi: 8 };
+    cfg
+}
+
+#[test]
+fn prop_disagg_no_request_loss_and_kv_bytes_conserved() {
+    // Across seeds: every generated request reaches a terminal state (no
+    // request is lost at the prefill->decode boundary), every handoff that
+    // started also landed (the run drains), and handoff bytes conserve
+    // exactly: bytes out of the prefill pool == bytes into the decode pool.
+    check("disagg-conservation", PropConfig::default().cases(6), |g| {
+        let seed = g.rng.next_u64() | 1;
+        let n = 40 + g.usize_in(0, 40);
+        let res = dpulens::coordinator::Scenario::new(small_disagg_cfg(seed, n)).run();
+        prop_assert!(
+            res.metrics.completed + res.metrics.rejected == n as u64,
+            "request loss: {} done + {} rejected != {n} generated (seed {seed})",
+            res.metrics.completed,
+            res.metrics.rejected
+        );
+        prop_assert!(
+            res.handoffs.completed == res.handoffs.started,
+            "handoffs stranded in flight: {}/{} (seed {seed})",
+            res.handoffs.completed,
+            res.handoffs.started
+        );
+        prop_assert!(
+            res.handoffs.bytes_delivered == res.handoffs.bytes_sent,
+            "KV bytes not conserved: {} sent vs {} delivered (seed {seed})",
+            res.handoffs.bytes_sent,
+            res.handoffs.bytes_delivered
+        );
+        prop_assert!(res.handoffs_parked_at_end == 0, "handoffs parked at end (seed {seed})");
+        prop_assert!(res.handoffs.started > 0, "no handoffs at all (seed {seed})");
+        // Per-replica arrival accounting sums to the completed handoffs.
+        let arrivals: u64 = res.handoffs.arrivals_per_replica.iter().sum();
+        prop_assert!(
+            arrivals == res.handoffs.completed,
+            "arrival accounting diverged (seed {seed})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_draining_a_prefill_replica_never_strands_requests() {
+    // With prefill replica 0 drained, admissions must all land on replica 1
+    // and every request still completes — nothing routes into, or strands
+    // on, the drained replica.
+    check("disagg-drain", PropConfig::default().cases(4), |g| {
+        let seed = g.rng.next_u64() | 1;
+        let n = 40;
+        let mut s = dpulens::coordinator::Scenario::new(small_disagg_cfg(seed, n));
+        s.engine.router.set_drained(0, true);
+        let res = s.run();
+        prop_assert!(
+            res.replica_routed[0] == 0,
+            "drained prefill replica still admitted {} (seed {seed})",
+            res.replica_routed[0]
+        );
+        prop_assert!(
+            res.metrics.completed + res.metrics.rejected == n as u64,
+            "drain stranded requests: {} + {} != {n} (seed {seed})",
+            res.metrics.completed,
+            res.metrics.rejected
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_two_stage_router_pools_and_accounting() {
+    // Engine-level: admissions only ever land in the prefill pool, phase
+    // transitions only in the decode pool, and each stage's outstanding
+    // accounting conserves independently.
+    use dpulens::cluster::{ClusterSpec, ReplicaRole, ReplicaShape};
+    use dpulens::engine::{build_shaped_replicas, Engine, EngineConfig};
+    use dpulens::ids::{FlowId, ReqId};
+    use dpulens::workload::request::InferenceRequest;
+    check("two-stage-router", PropConfig::default().cases(32), |g| {
+        let n_prefill = g.usize_in(1, 2);
+        let n_decode = g.usize_in(1, 2);
+        let mut spec = ClusterSpec::default();
+        spec.n_nodes = n_prefill + 2 * n_decode;
+        spec.pp_degree = 2.min(spec.n_nodes);
+        let mut shapes = Vec::new();
+        for _ in 0..n_prefill {
+            shapes.push(ReplicaShape::new(ReplicaRole::Prefill, 4, 1));
+        }
+        for _ in 0..n_decode {
+            shapes.push(ReplicaShape::new(ReplicaRole::Decode, 4, 2));
+        }
+        let mut cfg = EngineConfig::default();
+        cfg.shapes = Some(shapes.clone());
+        let plans = build_shaped_replicas(&spec, &shapes);
+        let mut e = Engine::new(cfg, plans);
+        let mut live_prefill: Vec<(ReqId, usize)> = Vec::new();
+        let mut live_decode: Vec<(ReqId, usize)> = Vec::new();
+        let mut next = 0u32;
+        for _ in 0..200 {
+            let coin = g.rng.f64();
+            if coin < 0.5 {
+                let id = ReqId(next);
+                let flow = FlowId(g.rng.below(32) as u32);
+                next += 1;
+                let req = InferenceRequest::new(
+                    id,
+                    flow,
+                    dpulens::sim::SimTime(0),
+                    vec![1, 2, 3],
+                    4,
+                );
+                let p = e.register(req);
+                prop_assert!(p < n_prefill, "admission left the prefill pool: {p}");
+                live_prefill.push((id, p));
+            } else if coin < 0.8 && !live_prefill.is_empty() {
+                // Phase transition: prefill done, route to the decode pool.
+                let idx = g.rng.index(live_prefill.len());
+                let (id, p) = live_prefill.swap_remove(idx);
+                e.router.complete(p);
+                let d = e.route_decode(id);
+                prop_assert!(
+                    d >= n_prefill,
+                    "transition left the decode pool: {d} (pools {n_prefill}+{n_decode})"
+                );
+                live_decode.push((id, d));
+            } else if !live_decode.is_empty() {
+                let idx = g.rng.index(live_decode.len());
+                let (_, d) = live_decode.swap_remove(idx);
+                e.decode_router.complete(d);
+            }
+            let pre: i64 = e.router.outstanding().iter().sum();
+            let dec: i64 = e.decode_router.outstanding().iter().sum();
+            prop_assert!(
+                pre == live_prefill.len() as i64,
+                "prefill outstanding {pre} != {}",
+                live_prefill.len()
+            );
+            prop_assert!(
+                dec == live_decode.len() as i64,
+                "decode outstanding {dec} != {}",
+                live_decode.len()
+            );
+        }
+        Ok(())
+    });
+}
