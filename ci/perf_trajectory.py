@@ -1,14 +1,24 @@
 #!/usr/bin/env python3
-"""Warn-only perf-trajectory step: compare a fresh `dpulens perf` JSON
-against the committed BENCH_pipeline.json baseline and print per-metric
-deltas.
+"""Perf-trajectory step: compare a fresh `dpulens perf` JSON against the
+committed BENCH_pipeline.json baseline and print per-metric deltas.
 
-Never fails the build: runner noise is not yet characterized, so this step
-reports trajectory instead of gating on it (see ROADMAP). It exits 0 even on
-regressions; the deltas land in the job log and the fresh JSON is uploaded
-as an artifact.
+Two modes:
 
-Usage: ci/perf_trajectory.py BASELINE.json FRESH.json
+* warn-only (default): never fails the build — runner noise is not yet
+  characterized, so this reports trajectory instead of gating on it (see
+  ROADMAP). Regressions land in the job log; exit code stays 0.
+* gate (`--gate [--tolerance-pct P]`): exits 1 when any metric regresses
+  more than the tolerance (default 10%). CI stays warn-only until the
+  baseline is replaced with a characterized runner's artifact; the gate
+  exists so flipping the switch is a one-flag change.
+
+A committed placeholder baseline (provenance "unrecorded-placeholder", or
+all-zero metrics) can't anchor a comparison in either mode: the script
+prints this run's values as the candidate baseline together with the exact
+commands to commit it, and exits 0.
+
+Usage: ci/perf_trajectory.py BASELINE.json FRESH.json [--gate]
+       [--tolerance-pct P]
 """
 
 import json
@@ -25,6 +35,8 @@ METRICS = [
     (("fleet", "events_per_sec"), "fleet events/s", True),
 ]
 
+DEFAULT_TOLERANCE_PCT = 10.0
+
 
 def lookup(doc, path):
     for key in path:
@@ -34,16 +46,91 @@ def lookup(doc, path):
     return doc if isinstance(doc, (int, float)) else None
 
 
-def main():
-    if len(sys.argv) != 3:
+def is_recorded(base):
+    """A usable baseline: not the committed placeholder, and at least one
+    comparable metric is non-zero."""
+    if not isinstance(base, dict):
+        return False
+    if base.get("provenance") == "unrecorded-placeholder":
+        return False
+    return any((lookup(base, p) or 0) > 0 for p, _, _ in METRICS)
+
+
+def compare(base, fresh, tolerance_pct=DEFAULT_TOLERANCE_PCT):
+    """Compare fresh against base metric by metric.
+
+    Returns a list of rows: (label, base, fresh, delta_pct, regressed).
+    base/fresh are None when a side has no comparable sample (delta_pct is
+    then None and regressed False).
+    """
+    rows = []
+    for path, label, higher_better in METRICS:
+        b, f = lookup(base, path), lookup(fresh, path)
+        if b is None or f is None or b == 0:
+            rows.append((label, b, f, None, False))
+            continue
+        ratio = f / b
+        delta_pct = (ratio - 1.0) * 100.0
+        threshold = tolerance_pct / 100.0
+        regressed = (
+            ratio < 1.0 - threshold if higher_better else ratio > 1.0 + threshold
+        )
+        rows.append((label, b, f, delta_pct, regressed))
+    return rows
+
+
+def print_candidate_instructions(base_path, fresh_path, fresh):
+    print("perf-trajectory: no recorded baseline yet (placeholder or empty).")
+    print("Candidate baseline from this run:")
+    for path, label, _ in METRICS:
+        v = lookup(fresh, path)
+        if v is not None:
+            print(f"  {label:>18}: {v:,.1f}")
+    print("To start the trajectory, commit this run's artifact as the baseline:")
+    print(f"  cp {fresh_path} {base_path}")
+    print(f"  git add {base_path}")
+    print('  git commit -m "Record perf baseline from characterized CI runner"')
+    print("(then flip the CI step to --gate once runner noise is characterized)")
+
+
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    gate = "--gate" in argv
+    argv = [a for a in argv if a != "--gate"]
+    tolerance = DEFAULT_TOLERANCE_PCT
+    if "--tolerance-pct" in argv:
+        i = argv.index("--tolerance-pct")
+        try:
+            tolerance = float(argv[i + 1])
+        except (IndexError, ValueError):
+            print("perf-trajectory: --tolerance-pct needs a numeric value")
+            return 2
+        del argv[i : i + 2]
+    # A typo'd flag must not silently degrade to "print usage, exit 0" —
+    # in gate mode that would pass CI without ever comparing.
+    unknown = [a for a in argv if a.startswith("--")]
+    if unknown:
+        print(f"perf-trajectory: unknown argument(s) {unknown}")
+        return 2
+    if not argv:
         print(__doc__)
         return 0
-    base_path, fresh_path = sys.argv[1], sys.argv[2]
+    if len(argv) != 2:
+        print(f"perf-trajectory: expected BASELINE.json FRESH.json, got {argv}")
+        return 2
+    base_path, fresh_path = argv
     try:
         with open(fresh_path) as f:
             fresh = json.load(f)
     except (OSError, ValueError) as e:
-        print(f"perf-trajectory: fresh perf JSON unreadable ({e}); skipping")
+        # Warn-only mode tolerates a missing sample; the gate must not go
+        # green without ever comparing — an unreadable fresh JSON means the
+        # measurement itself failed.
+        print(f"perf-trajectory: fresh perf JSON unreadable ({e})")
+        if gate:
+            print("perf-trajectory: GATING — no measurement to compare, failing")
+            return 1
+        print("perf-trajectory: skipping (warn-only)")
         return 0
     try:
         with open(base_path) as f:
@@ -51,36 +138,27 @@ def main():
     except (OSError, ValueError):
         base = {}
 
-    recorded = base.get("provenance") != "unrecorded-placeholder" and any(
-        (lookup(base, p) or 0) > 0 for p, _, _ in METRICS
-    )
-    if not recorded:
-        print("perf-trajectory: no recorded baseline yet.")
-        print("Candidate baseline from this run (commit the uploaded")
-        print(f"BENCH_pipeline artifact as {base_path} to start the trajectory):")
-        for path, label, _ in METRICS:
-            v = lookup(fresh, path)
-            if v is not None:
-                print(f"  {label:>18}: {v:,.1f}")
+    if not is_recorded(base):
+        print_candidate_instructions(base_path, fresh_path, fresh)
         return 0
 
-    print(f"perf-trajectory vs committed {base_path} (warn-only):")
+    mode = f"gate, tolerance {tolerance:g}%" if gate else "warn-only"
+    print(f"perf-trajectory vs committed {base_path} ({mode}):")
     worse = 0
-    for path, label, higher_better in METRICS:
-        b, f_ = lookup(base, path), lookup(fresh, path)
-        if b is None or f_ is None or b == 0:
+    for label, b, f_, delta_pct, regressed in compare(base, fresh, tolerance):
+        if delta_pct is None:
             print(f"  {label:>18}: (no comparable sample)")
             continue
-        ratio = f_ / b
-        delta_pct = (ratio - 1.0) * 100.0
-        regressed = ratio < 0.9 if higher_better else ratio > 1.1
-        marker = "  <-- WORSE (>10%)" if regressed else ""
+        marker = f"  <-- WORSE (>{tolerance:g}%)" if regressed else ""
         worse += regressed
         print(f"  {label:>18}: {b:,.1f} -> {f_:,.1f}  ({delta_pct:+.1f}%){marker}")
     if worse:
-        print(f"perf-trajectory: {worse} metric(s) regressed >10% (warn-only, not gating)")
-    else:
-        print("perf-trajectory: no metric regressed >10%")
+        print(
+            f"perf-trajectory: {worse} metric(s) regressed >{tolerance:g}% "
+            + ("(GATING: failing the build)" if gate else "(warn-only, not gating)")
+        )
+        return 1 if gate else 0
+    print(f"perf-trajectory: no metric regressed >{tolerance:g}%")
     return 0
 
 

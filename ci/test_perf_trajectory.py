@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""Unit tests for the ci/perf_trajectory.py comparator and gate mode.
+
+Run directly (`python3 ci/test_perf_trajectory.py`) or via unittest
+discovery; CI's bench-smoke job runs them before the trajectory step.
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import perf_trajectory as pt
+
+
+def doc(ingest=100_000.0, p50=50.0, mx=200.0, matrix_ms=9_000.0):
+    return {
+        "ingest": {"events_per_sec": ingest},
+        "snapshot": {"p50_us": p50, "max_us": mx},
+        "matrix": {"elapsed_ms": matrix_ms, "events_per_sec": ingest / 2},
+        "fleet": {"elapsed_ms": matrix_ms / 2, "events_per_sec": ingest / 3},
+    }
+
+
+class CompareTests(unittest.TestCase):
+    def row(self, rows, label):
+        matches = [r for r in rows if r[0] == label]
+        self.assertEqual(len(matches), 1, label)
+        return matches[0]
+
+    def test_identical_runs_have_no_regressions(self):
+        rows = pt.compare(doc(), doc())
+        self.assertEqual(len(rows), len(pt.METRICS))
+        self.assertTrue(all(not regressed for *_, regressed in rows))
+        _, b, f, delta, _ = self.row(rows, "ingest events/s")
+        self.assertEqual(b, f)
+        self.assertAlmostEqual(delta, 0.0)
+
+    def test_throughput_drop_beyond_tolerance_regresses(self):
+        # 20% fewer events/s: regressed at 10% tolerance, fine at 25%.
+        rows = pt.compare(doc(), doc(ingest=80_000.0), tolerance_pct=10.0)
+        self.assertTrue(self.row(rows, "ingest events/s")[4])
+        rows = pt.compare(doc(), doc(ingest=80_000.0), tolerance_pct=25.0)
+        self.assertFalse(self.row(rows, "ingest events/s")[4])
+
+    def test_latency_rise_is_a_regression_and_drop_is_not(self):
+        rows = pt.compare(doc(), doc(p50=60.0))  # +20% p50
+        self.assertTrue(self.row(rows, "snapshot p50 us")[4])
+        rows = pt.compare(doc(), doc(p50=30.0))  # improvement
+        self.assertFalse(self.row(rows, "snapshot p50 us")[4])
+
+    def test_exactly_at_tolerance_does_not_regress(self):
+        # A drop of exactly 10% sits on the boundary (strict inequality).
+        rows = pt.compare(doc(ingest=100_000.0), doc(ingest=90_000.0), 10.0)
+        self.assertFalse(self.row(rows, "ingest events/s")[4])
+
+    def test_missing_or_zero_metrics_are_skipped(self):
+        base = doc()
+        del base["fleet"]
+        rows = pt.compare(base, doc())
+        label, b, f, delta, regressed = self.row(rows, "fleet wall ms")
+        self.assertIsNone(delta)
+        self.assertFalse(regressed)
+        # Zero baselines can't anchor a ratio.
+        rows = pt.compare(doc(ingest=0.0), doc())
+        self.assertIsNone(self.row(rows, "ingest events/s")[3])
+
+
+class RecordedTests(unittest.TestCase):
+    def test_placeholder_is_not_a_baseline(self):
+        placeholder = doc()
+        placeholder["provenance"] = "unrecorded-placeholder"
+        self.assertFalse(pt.is_recorded(placeholder))
+
+    def test_all_zero_baseline_is_not_recorded(self):
+        self.assertFalse(pt.is_recorded(doc(ingest=0.0, p50=0.0, mx=0.0, matrix_ms=0.0)))
+
+    def test_real_baseline_is_recorded(self):
+        self.assertTrue(pt.is_recorded(doc()))
+
+
+class MainGateTests(unittest.TestCase):
+    def write(self, tmp, name, payload):
+        path = os.path.join(tmp, name)
+        with open(path, "w") as f:
+            json.dump(payload, f)
+        return path
+
+    def test_warn_only_never_fails(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = self.write(tmp, "base.json", doc())
+            fresh = self.write(tmp, "fresh.json", doc(ingest=50_000.0))
+            self.assertEqual(pt.main([base, fresh]), 0)
+
+    def test_gate_fails_on_regression(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = self.write(tmp, "base.json", doc())
+            fresh = self.write(tmp, "fresh.json", doc(ingest=50_000.0))
+            self.assertEqual(pt.main([base, fresh, "--gate"]), 1)
+
+    def test_gate_passes_within_tolerance(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = self.write(tmp, "base.json", doc())
+            fresh = self.write(tmp, "fresh.json", doc(ingest=95_000.0))
+            self.assertEqual(pt.main([base, fresh, "--gate"]), 0)
+
+    def test_gate_tolerance_flag_widens_the_band(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = self.write(tmp, "base.json", doc())
+            fresh = self.write(tmp, "fresh.json", doc(ingest=70_000.0))
+            self.assertEqual(pt.main([base, fresh, "--gate"]), 1)
+            self.assertEqual(
+                pt.main([base, fresh, "--gate", "--tolerance-pct", "40"]), 0
+            )
+
+    def test_malformed_tolerance_is_a_usage_error(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = self.write(tmp, "base.json", doc())
+            fresh = self.write(tmp, "fresh.json", doc())
+            self.assertEqual(pt.main([base, fresh, "--tolerance-pct", "lots"]), 2)
+
+    def test_unknown_flags_are_usage_errors_not_silent_passes(self):
+        # A typo'd gate flag must fail loudly, never skip the comparison.
+        with tempfile.TemporaryDirectory() as tmp:
+            base = self.write(tmp, "base.json", doc())
+            fresh = self.write(tmp, "fresh.json", doc(ingest=50_000.0))
+            self.assertEqual(
+                pt.main([base, fresh, "--gate", "--tolerence-pct", "5"]), 2
+            )
+            self.assertEqual(pt.main([base, fresh, "extra.json"]), 2)
+            # Bare invocation still prints usage and exits 0 (help path).
+            self.assertEqual(pt.main([]), 0)
+
+    def test_placeholder_baseline_prints_instructions_and_passes_gate(self):
+        placeholder = doc()
+        placeholder["provenance"] = "unrecorded-placeholder"
+        with tempfile.TemporaryDirectory() as tmp:
+            base = self.write(tmp, "base.json", placeholder)
+            fresh = self.write(tmp, "fresh.json", doc())
+            # Even under --gate: no baseline means nothing to gate on.
+            self.assertEqual(pt.main([base, fresh, "--gate"]), 0)
+
+    def test_unreadable_fresh_json_skips_warn_only_but_fails_the_gate(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = self.write(tmp, "base.json", doc())
+            missing = os.path.join(tmp, "nope.json")
+            self.assertEqual(pt.main([base, missing]), 0)
+            # Gate mode must not pass without a measurement to compare.
+            self.assertEqual(pt.main([base, missing, "--gate"]), 1)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -1,0 +1,256 @@
+//! Data-parallel fleet family (router/LB vantage): DP1-DP3, one
+//! [`ConditionSpec`] each. The detector bindings here ARE the fleet rules —
+//! `dpu::fleet::FleetSensor` is a generic streak-confirmation engine that
+//! evaluates them per pool each window; all per-condition thresholds and
+//! evidence live in this module.
+
+use super::{
+    cause_gpu, cause_network, scale_rate, ConditionSpec, DetectorBinding, Family, FleetScope,
+    InjectCtx, InjectSite,
+};
+use crate::coordinator::scenario::ScenarioCfg;
+use crate::dpu::detectors::Condition;
+use crate::dpu::fleet::{argmax_u64, first_max_by, DpCtx, RuleHit};
+use crate::engine::preset;
+use crate::mitigation::directive::Directive;
+use crate::sim::dist::Arrival;
+
+/// Minimum arrivals across the horizon before flow-share skew is judged.
+const MIN_ARRIVALS: u64 = 32;
+/// DP2: hot-replica occupancy floor and hot-cold disparity floor.
+const KV_HOT_OCC: f64 = 0.85;
+const KV_DISPARITY: f64 = 0.3;
+/// DP3: backlog dominance + lagging iteration rate.
+const STRAGGLER_MIN_QUEUE: u64 = 10;
+const STRAGGLER_QUEUE_FACTOR: f64 = 5.0;
+const STRAGGLER_ITER_RATIO: f64 = 0.8;
+
+/// DP1 fires when one replica's arrival share exceeds the hash-fair share
+/// by an absolute margin. The margin (0.3) sits well above the binomial
+/// noise of hashing the default 64-session population onto any pool size,
+/// while Zipf-concentrated floods land far past it.
+fn share_threshold(n: usize) -> f64 {
+    (1.0 / n as f64 + 0.3).min(0.92)
+}
+
+// ---- injections ----
+
+fn inject_dp1(cx: &mut InjectCtx) -> String {
+    cx.wl.n_sessions = 12;
+    cx.wl.session_skew = 2.5;
+    if let Arrival::Poisson { rate } = &cx.wl.arrival {
+        let surged = rate * 2.5;
+        cx.wl.arrival = Arrival::Poisson { rate: surged };
+    }
+    cx.engine.router.set_policy(crate::engine::RoutePolicy::FlowHash);
+    "flash crowd: Zipf(2.5) over 12 sessions at 2.5x rate under affinity hashing".into()
+}
+
+fn inject_dp2(cx: &mut InjectCtx) -> String {
+    let ri = cx.engine.replica_of_node(cx.target).unwrap_or(0);
+    cx.engine.replicas[ri].kv.start_leak();
+    format!("replica {ri} KV allocator leaks: freed pages never return, admissions thrash")
+}
+
+fn inject_dp3(cx: &mut InjectCtx) -> String {
+    let ri = cx.engine.replica_of_node(cx.target).unwrap_or(0);
+    for n in cx.engine.replicas[ri].plan.all_nodes() {
+        for f in &mut cx.cluster.nodes[n.idx()].knobs.gpu_speed_factor {
+            *f = 0.05;
+        }
+    }
+    format!("replica {ri} degraded: every GPU at 5% speed (straggler replica)")
+}
+
+// ---- fleet rules (evaluated per pool by the sensor) ----
+
+/// DP1 — router flow skew: one replica's share of routed arrivals far
+/// exceeds the hash-fair share over the horizon.
+fn rule_dp1(cx: &DpCtx) -> Option<RuleHit> {
+    let pool = cx.pool;
+    let np = pool.len();
+    if np < 2 {
+        return None;
+    }
+    let arrivals: Vec<u64> =
+        pool.iter().map(|&r| cx.cur.routed[r].saturating_sub(cx.old.routed[r])).collect();
+    let total: u64 = arrivals.iter().sum();
+    if total < MIN_ARRIVALS {
+        return None;
+    }
+    let hot_k = argmax_u64(&arrivals);
+    let hot = pool[hot_k];
+    let share = arrivals[hot_k] as f64 / total as f64;
+    let threshold = share_threshold(np);
+    if share < threshold {
+        return None;
+    }
+    Some(RuleHit {
+        replica: hot,
+        severity: share * np as f64,
+        evidence: format!(
+            "replica {hot} absorbs {:.0}% of {total} arrivals \
+             (fair share {:.0}%, threshold {:.0}%)",
+            share * 100.0,
+            100.0 / np as f64,
+            threshold * 100.0
+        ),
+    })
+}
+
+/// DP2 — hot-replica KV exhaustion: occupancy pinned near capacity with
+/// admission failures while the coldest peer sits far below.
+fn rule_dp2(cx: &DpCtx) -> Option<RuleHit> {
+    let pool = cx.pool;
+    if pool.len() < 2 {
+        return None;
+    }
+    let prev = cx.prev?;
+    let hot = first_max_by(pool, |r| cx.cur.kv_occupancy[r]);
+    let hot_occ = cx.cur.kv_occupancy[hot];
+    let min_occ = pool
+        .iter()
+        .filter(|&&r| r != hot)
+        .map(|&r| cx.cur.kv_occupancy[r])
+        .fold(f64::INFINITY, f64::min);
+    let failures = cx.cur.alloc_failures[hot].saturating_sub(prev.alloc_failures[hot]);
+    if hot_occ >= KV_HOT_OCC && failures >= 1 && hot_occ - min_occ >= KV_DISPARITY {
+        Some(RuleHit {
+            replica: hot,
+            severity: hot_occ - min_occ,
+            evidence: format!(
+                "replica {hot} KV at {:.0}% with {failures} admission \
+                 failures this window; coldest peer at {:.0}%",
+                hot_occ * 100.0,
+                min_occ * 100.0
+            ),
+        })
+    } else {
+        None
+    }
+}
+
+/// DP3 — straggler replica: backlog dominates the pool while the iteration
+/// rate lags the peers that are keeping up.
+fn rule_dp3(cx: &DpCtx) -> Option<RuleHit> {
+    let pool = cx.pool;
+    let nd = pool.len();
+    if nd < 2 {
+        return None;
+    }
+    let lag = first_max_by(pool, |r| cx.cur.queue_depth[r] as f64);
+    let lag_q = cx.cur.queue_depth[lag];
+    let iters_of = |r: usize| cx.cur.iterations[r].saturating_sub(cx.old.iterations[r]);
+    let others_q: u64 = pool.iter().filter(|&&r| r != lag).map(|&r| cx.cur.queue_depth[r]).sum();
+    let others_mean_q = others_q as f64 / (nd - 1) as f64;
+    let others_it: u64 = pool.iter().filter(|&&r| r != lag).map(|&r| iters_of(r)).sum();
+    let others_mean_it = others_it as f64 / (nd - 1) as f64;
+    let hit = lag_q >= STRAGGLER_MIN_QUEUE
+        && lag_q as f64 >= STRAGGLER_QUEUE_FACTOR * (others_mean_q + 1.0)
+        && (iters_of(lag) as f64) < STRAGGLER_ITER_RATIO * (others_mean_it + 1.0);
+    if !hit {
+        return None;
+    }
+    Some(RuleHit {
+        replica: lag,
+        severity: lag_q as f64 / (others_mean_q + 1.0),
+        evidence: format!(
+            "replica {lag} backlog {lag_q} vs peer mean {others_mean_q:.1}; \
+             {} iterations over the horizon vs peer mean {others_mean_it:.0}",
+            iters_of(lag)
+        ),
+    })
+}
+
+// ---- fleet-triple shaping ----
+// Saturation-sensitive conditions need a compute-dominated cost profile
+// (cf. the EW1 matrix shaping): on the fast `small` model a hot or slowed
+// replica never runs out of capacity, so flow concentration / degraded GPUs
+// would not move throughput. The rate scale keeps the hot/slow lane
+// decisively past the 7b compute bound while healthy lanes stay inside it.
+
+fn shape_dp1(cfg: &mut ScenarioCfg) {
+    cfg.engine.profile = preset("7b").unwrap();
+    cfg.engine.policy.max_batch = 8;
+    scale_rate(cfg, 3.0);
+}
+
+fn shape_dp3(cfg: &mut ScenarioCfg) {
+    cfg.engine.profile = preset("7b").unwrap();
+    cfg.engine.policy.max_batch = 8;
+    scale_rate(cfg, 2.0);
+}
+
+pub static SPECS: [ConditionSpec; 3] = [
+    ConditionSpec {
+        condition: Condition::Dp1RouterFlowSkew,
+        label: "router flow skew",
+        family: Family::DataParallel,
+        binding: DetectorBinding::FleetDp {
+            scope: FleetScope::PerPrefillPool,
+            confirm: 3,
+            min_pool: 2,
+            eval: rule_dp1,
+        },
+        site: InjectSite::Workload,
+        inject: inject_dp1,
+        signal: "One replica's routed-arrival share far exceeds hash-fair share",
+        stages: "Ingress routing (data-parallel)",
+        effect: "Hot replica queues while peers idle; fleet capped by one replica",
+        root_cause_text: "Session-affinity hashing + heavy-tailed session popularity",
+        directive: Directive::RebalanceFlows,
+        cause: cause_network,
+        expected_causes: &["network"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: Some(shape_dp1),
+    },
+    ConditionSpec {
+        condition: Condition::Dp2HotReplicaKv,
+        label: "hot-replica KV exhaustion",
+        family: Family::DataParallel,
+        binding: DetectorBinding::FleetDp {
+            scope: FleetScope::PerDecodePool,
+            confirm: 2,
+            min_pool: 2,
+            eval: rule_dp2,
+        },
+        site: InjectSite::Engine,
+        inject: inject_dp2,
+        signal: "One replica's KV pinned at capacity with admission failures",
+        stages: "Decode admission (data-parallel)",
+        effect: "Hot replica thrashes admissions; its flows see inflated TTFT",
+        root_cause_text: "KV fragmentation/leak or flow concentration on one replica",
+        directive: Directive::KvAwareRouting,
+        cause: cause_gpu,
+        expected_causes: &["gpu"],
+        compute_skew: false,
+        shape_matrix: None,
+        // DP2's KV leak is capacity-independent: the victim's pool starves
+        // outright regardless of the cost profile.
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Dp3StragglerReplica,
+        label: "straggler replica",
+        family: Family::DataParallel,
+        binding: DetectorBinding::FleetDp {
+            scope: FleetScope::PerDecodePool,
+            confirm: 2,
+            min_pool: 2,
+            eval: rule_dp3,
+        },
+        site: InjectSite::Node,
+        inject: inject_dp3,
+        signal: "A replica's backlog dominates while its iteration rate lags",
+        stages: "All phases on one replica (data-parallel)",
+        effect: "Affinity keeps feeding the slow replica; it dominates fleet p99",
+        root_cause_text: "Degraded node(s) in one replica: thermal/power/faulty GPU",
+        directive: Directive::DrainStragglerReplica,
+        cause: cause_gpu,
+        expected_causes: &["gpu"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: Some(shape_dp3),
+    },
+];

@@ -1,0 +1,250 @@
+//! East-West family (paper Table 3c): inter-node conditions sensed from the
+//! fabric vantage — EW1-EW9, one [`ConditionSpec`] each.
+
+use super::{
+    cause_gpu, cause_network, cause_workload, ConditionSpec, DetectorBinding, Family, InjectCtx,
+    InjectSite,
+};
+use crate::coordinator::scenario::ScenarioCfg;
+use crate::dpu::detectors::Condition;
+use crate::engine::preset;
+use crate::mitigation::directive::Directive;
+use crate::sim::dist::{Arrival, LengthDist};
+
+fn inject_ew1(cx: &mut InjectCtx) -> String {
+    let target = cx.target;
+    cx.knobs().gpu_speed_factor[0] = 0.2;
+    format!("GPU0 on {target} runs at 20% speed (straggling shard)")
+}
+
+fn inject_ew2(cx: &mut InjectCtx) -> String {
+    for r in &mut cx.engine.replicas {
+        r.plan.overload_stage(0, 3.0);
+    }
+    "stage 0 mispartitioned (3x recompute): downstream stages idle".into()
+}
+
+fn inject_ew3(cx: &mut InjectCtx) -> String {
+    for r in &mut cx.engine.replicas {
+        let n_g = r.plan.stages[0].shard_frac.len();
+        for g in 0..n_g / 2 {
+            r.plan.skew_shards(0, g, 4.0);
+        }
+    }
+    "activation partitioning misaligned: one node owns most shards".into()
+}
+
+fn inject_ew4(cx: &mut InjectCtx) -> String {
+    cx.cluster.fabric_knobs.hot_uplink_load = 5.0;
+    cx.cluster.fabric_knobs.hot_node = None;
+    "fat-tree uplinks oversubscribed 5x (hot ToR)".into()
+}
+
+fn inject_ew5(cx: &mut InjectCtx) -> String {
+    cx.cluster.fabric_knobs.hol_blocking = true;
+    "shared-queue exhaustion: flows serialize through one queue".into()
+}
+
+fn inject_ew6(cx: &mut InjectCtx) -> String {
+    cx.cluster.fabric_knobs.loss_prob = 0.10;
+    "10% fabric loss (misconfigured PFC)".into()
+}
+
+fn inject_ew7(cx: &mut InjectCtx) -> String {
+    cx.cluster.fabric_knobs.credit_window = 2;
+    "RDMA QP window shrunk to 2 (credit depletion)".into()
+}
+
+fn inject_ew8(cx: &mut InjectCtx) -> String {
+    cx.cluster.fabric_knobs.kv_link_budget_factor = 0.12;
+    cx.wl.prompt_len = LengthDist::Uniform { lo: 48, hi: 64 };
+    "sharded KV exceeds link budget (12%) with long prompts".into()
+}
+
+fn inject_ew9(cx: &mut InjectCtx) -> String {
+    let target = cx.target;
+    cx.knobs().collective_silence = 0.5;
+    format!("{target} goes silent in 50% of collectives (unmasked early exit)")
+}
+
+// Compute-skew conditions need a compute-dominated cost profile for a
+// straggler/mispartition to move collective timing.
+fn shape_ew_compute(cfg: &mut ScenarioCfg) {
+    cfg.engine.profile = preset("7b").unwrap();
+    cfg.engine.policy.max_batch = 8;
+    cfg.workload.arrival = Arrival::Poisson { rate: 150.0 };
+}
+
+// Pipeline-cadence detection needs a *busy* pipeline: idle lulls produce
+// ms-scale healthy gaps that mask a mispartitioned stage.
+fn shape_ew2(cfg: &mut ScenarioCfg) {
+    cfg.engine.profile = preset("7b").unwrap();
+    cfg.engine.policy.max_batch = 8;
+    cfg.workload.arrival = Arrival::Poisson { rate: 500.0 };
+    cfg.workload.output_len = LengthDist::Uniform { lo: 8, hi: 16 };
+}
+
+pub static SPECS: [ConditionSpec; 9] = [
+    ConditionSpec {
+        condition: Condition::Ew1TpStraggler,
+        label: "TP straggler",
+        family: Family::EastWest,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Node,
+        inject: inject_ew1,
+        signal: "Wide arrival spread of collective bursts (max-min gap up)",
+        stages: "Compute (tensor-parallel collectives)",
+        effect: "Collective ops stall waiting for slowest peer",
+        root_cause_text: "Skewed GPU load, PCIe starvation, memory imbalance on one node",
+        directive: Directive::RebalanceShards,
+        cause: cause_gpu,
+        expected_causes: &["gpu", "network"],
+        compute_skew: true,
+        shape_matrix: Some(shape_ew_compute),
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Ew2PpBubble,
+        label: "PP bubble",
+        family: Family::EastWest,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Engine,
+        inject: inject_ew2,
+        signal: "Large or growing gaps between stage handoff bursts",
+        stages: "Pipeline parallel",
+        effect: "Downstream stage idles; upstream builds backlog",
+        root_cause_text: "Load imbalance across pipeline stages, early token exit variance",
+        directive: Directive::RebalanceStages,
+        cause: cause_gpu,
+        expected_causes: &["gpu", "network"],
+        compute_skew: true,
+        shape_matrix: Some(shape_ew2),
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Ew3CrossNodeSkew,
+        label: "cross-node shard skew",
+        family: Family::EastWest,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Engine,
+        inject: inject_ew3,
+        signal: "Uneven traffic volume per node for same collective",
+        stages: "TP/PP compute -> internode",
+        effect: "Some nodes oversend/undersend; throughput uneven",
+        root_cause_text: "Shard imbalance, misaligned activation partitioning",
+        directive: Directive::RebalanceAcrossNodes,
+        cause: cause_gpu,
+        expected_causes: &["gpu", "network"],
+        compute_skew: true,
+        shape_matrix: Some(shape_ew_compute),
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Ew4Congestion,
+        label: "fabric congestion",
+        family: Family::EastWest,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Fabric,
+        inject: inject_ew4,
+        signal: "Periodic spikes in latency + jitter across many links",
+        stages: "Internode transfers (collectives & stage handoff)",
+        effect: "Token step elongates cluster-wide",
+        root_cause_text: "Fat-tree oversubscription, ToR link hot spot",
+        directive: Directive::AdaptiveRouting,
+        cause: cause_network,
+        expected_causes: &["network"],
+        compute_skew: false,
+        shape_matrix: Some(shape_ew_compute),
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Ew5HolBlocking,
+        label: "head-of-line blocking",
+        family: Family::EastWest,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Fabric,
+        inject: inject_ew5,
+        signal: "Some streams stall while others flow; out-of-order bursts",
+        stages: "Collective streams / P2P flows",
+        effect: "Latency-sensitive ops delayed",
+        root_cause_text: "Shared queue depth exhaustion, RoCE/NIC queue imbalance",
+        directive: Directive::FixQueueSharing,
+        cause: cause_network,
+        expected_causes: &["network"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Ew6Retransmissions,
+        label: "fabric retransmissions",
+        family: Family::EastWest,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Fabric,
+        inject: inject_ew6,
+        signal: "Gaps + duplicate traffic or sudden retransmit storms",
+        stages: "All distributed phases",
+        effect: "Bursty latency; collectives jitter",
+        root_cause_text: "Fabric errors, congestion collapse, misconfigured PFC",
+        directive: Directive::LosslessFabricConfig,
+        cause: cause_network,
+        expected_causes: &["network"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Ew7CreditStarvation,
+        label: "credit starvation",
+        family: Family::EastWest,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Fabric,
+        inject: inject_ew7,
+        signal: "Long silence periods until remote credit update",
+        stages: "Internode (RDMA ops)",
+        effect: "Under-utilized links; token latency grows",
+        root_cause_text: "Too-small RDMA window, NIC credit depletion",
+        directive: Directive::TuneCreditWindow,
+        cause: cause_network,
+        expected_causes: &["network"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Ew8KvBottleneck,
+        label: "KV-transfer bottleneck",
+        family: Family::EastWest,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Fabric,
+        inject: inject_ew8,
+        signal: "Repeated large bursts for some tokens, others silent",
+        stages: "Decode phase (PP handoff)",
+        effect: "Uneven memory pressure per stage; downstream skew",
+        root_cause_text: "Sharded KV too large for link budget; non-uniform length",
+        directive: Directive::CompressKvTransfers,
+        cause: cause_network,
+        expected_causes: &["network"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Ew9EarlyStopSkew,
+        label: "early-stop skew",
+        family: Family::EastWest,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Node,
+        inject: inject_ew9,
+        signal: "Some nodes stop sending mid-iteration while others continue",
+        stages: "Decode (multi-node)",
+        effect: "Collectives/pipeline hang waiting for peers",
+        root_cause_text: "Sequence length divergence; scheduler not masking early exits",
+        directive: Directive::EnableInflightRemap,
+        cause: cause_workload,
+        expected_causes: &["workload"],
+        compute_skew: false,
+        shape_matrix: Some(shape_ew_compute),
+        shape_fleet: None,
+    },
+];

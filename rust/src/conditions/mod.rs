@@ -1,0 +1,487 @@
+//! The condition catalog: one [`ConditionSpec`] per runbook condition, the
+//! single home of every piece of per-condition knowledge the system needs —
+//! inject site + recipe, runbook row (signal / stages / effect / likely root
+//! cause / mitigation directive), root-cause mapping, attribution scoring
+//! classes, detector binding, scenario shaping, and the scorecard label.
+//!
+//! Before this registry existed, each condition's knowledge was smeared
+//! across ~12 parallel `match`-on-`Condition` sites in eight files
+//! (`pathology`, `dpu/runbook`, `dpu/attribution`, `mitigation/controller`,
+//! the two fleet layers, `coordinator/experiment`, `main.rs`) — every new
+//! condition family paid that shotgun-surgery tax. Now `pathology`,
+//! `runbook`, `attribution`, the mitigation controller, and the fleet
+//! sensors all dispatch through [`spec`]; adding a condition is a one-module
+//! change (a new entry in its family's `SPECS` array) and the
+//! `catalog_covers_every_condition_exactly_once` test names any variant that
+//! is missing one.
+//!
+//! Specs are grouped into per-family modules mirroring the paper tables:
+//! `north_south` (3a), `pcie` (3b), `east_west` (3c), plus the two
+//! serving-scale extensions `data_parallel` (DP) and `phase_disagg` (PD).
+
+pub mod data_parallel;
+pub mod east_west;
+pub mod north_south;
+pub mod pcie;
+pub mod phase_disagg;
+
+use crate::cluster::Cluster;
+use crate::coordinator::scenario::ScenarioCfg;
+use crate::dpu::attribution::RootCause;
+use crate::dpu::detectors::Condition;
+use crate::dpu::fleet::{DpCtx, PdCtx, RuleHit};
+use crate::engine::Engine;
+use crate::ids::NodeId;
+use crate::mitigation::directive::Directive;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::workload::generator::WorkloadSpec;
+
+/// Which runbook family a condition belongs to (paper table or extension).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// Table 3(a) — North-South (ingress/egress) sensing.
+    NorthSouth,
+    /// Table 3(b) — PCIe observer.
+    Pcie,
+    /// Table 3(c) — East-West (inter-node) sensing.
+    EastWest,
+    /// Data-parallel fleet extension (router/LB vantage).
+    DataParallel,
+    /// Phase-disaggregation extension (pool-boundary vantage).
+    PhaseDisagg,
+}
+
+impl Family {
+    /// The runbook-table id the rest of the system keys on.
+    pub fn table(&self) -> &'static str {
+        match self {
+            Family::NorthSouth => "3a",
+            Family::Pcie => "3b",
+            Family::EastWest => "3c",
+            Family::DataParallel => "dp",
+            Family::PhaseDisagg => "pd",
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::NorthSouth => "north-south",
+            Family::Pcie => "pcie",
+            Family::EastWest => "east-west",
+            Family::DataParallel => "data-parallel",
+            Family::PhaseDisagg => "phase-disagg",
+        }
+    }
+}
+
+/// Where a condition's knobs live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InjectSite {
+    /// Per-node hardware knobs (which node matters).
+    Node,
+    /// Fabric-wide knobs.
+    Fabric,
+    /// Workload generator shape.
+    Workload,
+    /// Engine policy / parallel plan.
+    Engine,
+}
+
+impl InjectSite {
+    pub fn id(&self) -> &'static str {
+        match self {
+            InjectSite::Node => "node",
+            InjectSite::Fabric => "fabric",
+            InjectSite::Workload => "workload",
+            InjectSite::Engine => "engine",
+        }
+    }
+}
+
+/// Which pool a fleet rule is evaluated against each window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetScope {
+    /// Once per prefill pool (the paired decode pool is the counterpart).
+    PerPrefillPool,
+    /// Once per decode pool.
+    PerDecodePool,
+    /// Once over the union of all decode members (rules that read the
+    /// fleet-wide handoff counters rather than a per-pool signal).
+    DecodeUnion,
+}
+
+/// How a condition is sensed.
+#[derive(Clone, Copy)]
+pub enum DetectorBinding {
+    /// One of the 28 per-node window detectors (`dpu::detectors` registry —
+    /// the paper's Tables 3a-c diagonal).
+    NodeWindow,
+    /// Cross-replica rule run by `dpu::fleet::FleetSensor` at window ticks
+    /// on the per-replica serving sample.
+    FleetDp {
+        scope: FleetScope,
+        /// Consecutive confirming windows before the detection fires.
+        confirm: u32,
+        /// Smallest pool the rule can judge: 2 for peer-comparison rules
+        /// (skew across pool members is undefined on a singleton), 1 for
+        /// aggregate rules. The rule itself also guards; studies use this
+        /// to skip triples that are structurally inert on a topology.
+        min_pool: usize,
+        eval: fn(&DpCtx) -> Option<RuleHit>,
+    },
+    /// Pool-boundary rule run by the sensor on disaggregated fleets.
+    FleetPd {
+        scope: FleetScope,
+        confirm: u32,
+        min_pool: usize,
+        eval: fn(&PdCtx) -> Option<RuleHit>,
+    },
+}
+
+impl DetectorBinding {
+    pub fn id(&self) -> &'static str {
+        match self {
+            DetectorBinding::NodeWindow => "window",
+            DetectorBinding::FleetDp { .. } => "fleet-dp",
+            DetectorBinding::FleetPd { .. } => "fleet-pd",
+        }
+    }
+}
+
+impl std::fmt::Debug for DetectorBinding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// The live world an injection mutates.
+pub struct InjectCtx<'a> {
+    /// Victim node for node-scoped conditions (egress conditions get an exit
+    /// node, ingress/PCIe conditions an entry node; DP/PD injections resolve
+    /// their victim replica from it).
+    pub target: NodeId,
+    pub cluster: &'a mut Cluster,
+    pub engine: &'a mut Engine,
+    pub wl: &'a mut WorkloadSpec,
+}
+
+impl InjectCtx<'_> {
+    /// The victim node's pathology knobs.
+    pub fn knobs(&mut self) -> &mut crate::cluster::NodeKnobs {
+        &mut self.cluster.nodes[self.target.idx()].knobs
+    }
+}
+
+/// Everything the system knows about one condition — the catalog row.
+pub struct ConditionSpec {
+    pub condition: Condition,
+    /// Short human name: the scorecard / table label.
+    pub label: &'static str,
+    pub family: Family,
+    /// How the condition is sensed (per-node window detector or fleet rule).
+    pub binding: DetectorBinding,
+    /// Which subsystem the injection touches (scenarios use this to decide
+    /// whether the workload generator must be rebuilt).
+    pub site: InjectSite,
+    /// Turn the knobs that create exactly the paper's "likely root cause";
+    /// returns the evidence description for reports.
+    pub inject: fn(&mut InjectCtx) -> String,
+    /// Runbook row (paper Tables 3a-c and the DP/PD extensions).
+    pub signal: &'static str,
+    pub stages: &'static str,
+    pub effect: &'static str,
+    pub root_cause_text: &'static str,
+    pub directive: Directive,
+    /// Default root-cause verdict for a detection at `node` (§4.2).
+    pub cause: fn(NodeId) -> RootCause,
+    /// Cause classes that count as a correct attribution (matrix scoring).
+    pub expected_causes: &'static [&'static str],
+    /// §4.2 refinement tag: cross-node compute skew (EW1-EW3), which the
+    /// attribution layer refines against PCIe-vantage evidence.
+    pub compute_skew: bool,
+    /// Matrix/sweep scenario shaping (None = the standard config already
+    /// produces the red flag).
+    pub shape_matrix: Option<fn(&mut ScenarioCfg)>,
+    /// Fleet-triple shaping applied on top of the DP/PD/multi-pool base
+    /// configs (healthy cells share it, so recovery stays like-for-like).
+    pub shape_fleet: Option<fn(&mut ScenarioCfg)>,
+}
+
+/// Every catalog row, runbook-table order: NS1-NS9, PC1-PC10, EW1-EW9, then
+/// the DP and PD extensions — the same order as `ALL_CONDITIONS` +
+/// `DP_CONDITIONS` + `PD_CONDITIONS`.
+pub fn all_specs() -> impl Iterator<Item = &'static ConditionSpec> {
+    north_south::SPECS
+        .iter()
+        .chain(pcie::SPECS.iter())
+        .chain(east_west::SPECS.iter())
+        .chain(data_parallel::SPECS.iter())
+        .chain(phase_disagg::SPECS.iter())
+}
+
+/// Look up the catalog row for a condition. Panics (naming the variant) if a
+/// condition was added without a spec — the registry-audit test catches this
+/// before any runtime path does.
+pub fn spec(c: Condition) -> &'static ConditionSpec {
+    all_specs().find(|s| s.condition == c).unwrap_or_else(|| {
+        panic!("no ConditionSpec for {c:?} — add one to rust/src/conditions/")
+    })
+}
+
+/// Which subsystem an injection touches.
+pub fn site(c: Condition) -> InjectSite {
+    spec(c).site
+}
+
+/// Apply the injection for `c`; returns the evidence description.
+pub fn inject(
+    c: Condition,
+    target: NodeId,
+    cluster: &mut Cluster,
+    engine: &mut Engine,
+    wl: &mut WorkloadSpec,
+) -> String {
+    let mut cx = InjectCtx { target, cluster, engine, wl };
+    (spec(c).inject)(&mut cx)
+}
+
+/// Revert everything any injection touched (used between bench scenarios).
+/// Injections share the cluster/engine/workload knob surface, so healing is
+/// a catalog-level sweep rather than a per-row recipe.
+pub fn heal_all(cluster: &mut Cluster, engine: &mut Engine, wl: &mut WorkloadSpec) {
+    cluster.heal();
+    for r in &mut engine.replicas {
+        r.plan.rebalance();
+        r.kv.restore_capacity();
+        let pol = r.batcher.policy_mut();
+        pol.inflight_remap = true;
+        pol.continuous = true;
+    }
+    engine.reset_roles();
+    engine.router.clear_overrides();
+    engine.router.clear_drained();
+    engine.decode_router.set_pin(None);
+    engine.decode_router.clear_overrides();
+    engine.decode_router.clear_drained();
+    *wl = WorkloadSpec::default();
+}
+
+// Shared root-cause constructors for the per-family spec tables.
+pub(crate) fn cause_client(_: NodeId) -> RootCause {
+    RootCause::ClientSide
+}
+pub(crate) fn cause_network(_: NodeId) -> RootCause {
+    RootCause::NetworkSide
+}
+pub(crate) fn cause_workload(_: NodeId) -> RootCause {
+    RootCause::WorkloadShape
+}
+pub(crate) fn cause_host(n: NodeId) -> RootCause {
+    RootCause::HostLocal(n)
+}
+pub(crate) fn cause_gpu(n: NodeId) -> RootCause {
+    RootCause::GpuSide(n)
+}
+
+/// Shared shaping helper: scale a Poisson arrival rate (no-op for other
+/// arrival processes — injections that surge demand do it the same way).
+pub fn scale_rate(cfg: &mut ScenarioCfg, factor: f64) {
+    if let crate::sim::dist::Arrival::Poisson { rate } = &cfg.workload.arrival {
+        let scaled = rate * factor;
+        cfg.workload.arrival = crate::sim::dist::Arrival::Poisson { rate: scaled };
+    }
+}
+
+/// The catalog as a human table (`dpulens conditions`).
+pub fn render_table() -> String {
+    let mut t = Table::new("Condition catalog — one ConditionSpec per runbook row").header(&[
+        "id", "label", "family", "detector", "site", "directive",
+    ]);
+    for s in all_specs() {
+        t.row(vec![
+            s.condition.id().to_string(),
+            s.label.to_string(),
+            s.family.name().to_string(),
+            s.binding.id().to_string(),
+            s.site.id().to_string(),
+            format!("{:?}", s.directive),
+        ]);
+    }
+    t.render()
+}
+
+/// The catalog as a markdown table — EXPERIMENTS.md §Condition catalog is
+/// regenerated from this exact output (`dpulens conditions --md`), and the
+/// `experiments_md_condition_table_is_generated` test keeps them in sync.
+pub fn render_markdown() -> String {
+    let mut s = String::from(
+        "| id | label | family | detector | site | directive |\n\
+         |----|-------|--------|----------|------|-----------|\n",
+    );
+    for sp in all_specs() {
+        s.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {:?} |\n",
+            sp.condition.id(),
+            sp.label,
+            sp.family.name(),
+            sp.binding.id(),
+            sp.site.id(),
+            sp.directive,
+        ));
+    }
+    s
+}
+
+/// The catalog as deterministic JSON (`dpulens conditions --json`, schema
+/// `dpulens.conditions.v1`).
+pub fn to_json() -> Json {
+    let mut rows = Json::arr();
+    for s in all_specs() {
+        let mut causes = Json::arr();
+        for &c in s.expected_causes {
+            causes.push(c);
+        }
+        rows.push(
+            Json::obj()
+                .set("id", s.condition.id())
+                .set("label", s.label)
+                .set("family", s.family.name())
+                .set("table", s.family.table())
+                .set("detector", s.binding.id())
+                .set("site", s.site.id())
+                .set("signal", s.signal)
+                .set("stages", s.stages)
+                .set("effect", s.effect)
+                .set("root_cause", s.root_cause_text)
+                .set("directive", format!("{:?}", s.directive))
+                .set("directive_text", s.directive.paper_text())
+                .set("expected_causes", causes)
+                .set("compute_skew", s.compute_skew),
+        );
+    }
+    Json::obj()
+        .set("schema", "dpulens.conditions.v1")
+        .set("conditions", Json::Int(all_specs().count() as i64))
+        .set("catalog", rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpu::detectors::{ALL_CONDITIONS, DP_CONDITIONS, PD_CONDITIONS};
+
+    fn every_condition() -> Vec<Condition> {
+        ALL_CONDITIONS
+            .iter()
+            .chain(DP_CONDITIONS.iter())
+            .chain(PD_CONDITIONS.iter())
+            .copied()
+            .collect()
+    }
+
+    /// The registry-audit satellite: every `Condition` variant has exactly
+    /// one spec, and that spec carries the full knowledge set (inject +
+    /// runbook + attribution + label). A variant added without a catalog
+    /// entry fails here BY NAME.
+    #[test]
+    fn catalog_covers_every_condition_exactly_once() {
+        let conditions = every_condition();
+        assert_eq!(all_specs().count(), conditions.len(), "catalog/condition count mismatch");
+        let mut missing = Vec::new();
+        for &c in &conditions {
+            let n = all_specs().filter(|s| s.condition == c).count();
+            match n {
+                0 => missing.push(c),
+                1 => {}
+                n => panic!("{c:?} has {n} ConditionSpecs (must be exactly one)"),
+            }
+        }
+        assert!(missing.is_empty(), "conditions missing a ConditionSpec: {missing:?}");
+        for s in all_specs() {
+            let id = s.condition.id();
+            assert!(!s.label.is_empty(), "{id}: empty scorecard label");
+            assert!(!s.signal.is_empty(), "{id}: empty runbook signal");
+            assert!(!s.stages.is_empty(), "{id}: empty runbook stages");
+            assert!(!s.effect.is_empty(), "{id}: empty runbook effect");
+            assert!(!s.root_cause_text.is_empty(), "{id}: empty runbook root cause");
+            assert!(!s.expected_causes.is_empty(), "{id}: no attribution classes");
+        }
+    }
+
+    #[test]
+    fn catalog_order_matches_the_runbook_tables() {
+        let conditions = every_condition();
+        for (c, s) in conditions.iter().zip(all_specs()) {
+            assert_eq!(*c, s.condition, "catalog order diverges at {c:?}");
+        }
+        // Family tags agree with the id-prefix table mapping.
+        for s in all_specs() {
+            assert_eq!(s.family.table(), s.condition.table(), "{}", s.condition.id());
+        }
+    }
+
+    #[test]
+    fn bindings_partition_by_family() {
+        for s in all_specs() {
+            match s.family {
+                Family::NorthSouth | Family::Pcie | Family::EastWest => {
+                    assert!(
+                        matches!(s.binding, DetectorBinding::NodeWindow),
+                        "{} must bind to a per-node window detector",
+                        s.condition.id()
+                    );
+                }
+                Family::DataParallel => {
+                    assert!(
+                        matches!(s.binding, DetectorBinding::FleetDp { .. }),
+                        "{} must bind to a fleet DP rule",
+                        s.condition.id()
+                    );
+                }
+                Family::PhaseDisagg => {
+                    assert!(
+                        matches!(s.binding, DetectorBinding::FleetPd { .. }),
+                        "{} must bind to a fleet PD rule",
+                        s.condition.id()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn labels_are_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for s in all_specs() {
+            assert!(seen.insert(s.label), "duplicate label {:?}", s.label);
+        }
+    }
+
+    #[test]
+    fn renderers_cover_the_whole_catalog() {
+        let table = render_table();
+        let md = render_markdown();
+        let json = to_json().render();
+        for c in every_condition() {
+            assert!(table.contains(c.id()), "table missing {}", c.id());
+            assert!(md.contains(&format!("| {} |", c.id())), "markdown missing {}", c.id());
+            assert!(json.contains(&format!("\"id\":\"{}\"", c.id())), "json missing {}", c.id());
+        }
+        assert!(json.contains("\"schema\":\"dpulens.conditions.v1\""));
+        assert!(json.contains("\"conditions\":34"));
+    }
+
+    /// Docs can't drift: the EXPERIMENTS.md condition table is the exact
+    /// `render_markdown()` output (regenerate with `dpulens conditions --md`).
+    #[test]
+    fn experiments_md_condition_table_is_generated() {
+        let doc = include_str!("../../../EXPERIMENTS.md");
+        let md = render_markdown();
+        assert!(
+            doc.contains(&md),
+            "EXPERIMENTS.md §Condition catalog is stale — regenerate it with \
+             `dpulens conditions --md` and paste the table"
+        );
+    }
+}

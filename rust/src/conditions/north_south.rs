@@ -1,0 +1,252 @@
+//! North-South family (paper Table 3a): ingress/egress conditions sensed at
+//! the cluster boundary — NS1-NS9, one [`ConditionSpec`] each.
+
+use super::{
+    cause_client, cause_network, cause_workload, ConditionSpec, DetectorBinding, Family,
+    InjectCtx, InjectSite,
+};
+use crate::coordinator::scenario::ScenarioCfg;
+use crate::dpu::detectors::Condition;
+use crate::mitigation::directive::Directive;
+use crate::sim::dist::{Arrival, LengthDist};
+
+fn inject_ns1(cx: &mut InjectCtx) -> String {
+    cx.wl.arrival = Arrival::OnOff {
+        on_rate: 3000.0,
+        off_rate: 5.0,
+        mean_on_s: 0.02,
+        mean_off_s: 0.08,
+    };
+    "ON-OFF client bursts (3000 req/s in 20ms spikes)".into()
+}
+
+fn inject_ns2(cx: &mut InjectCtx) -> String {
+    // Upstream service jitter: traffic pauses entirely for long stretches,
+    // then resumes at the normal rate (thin, gappy feed).
+    cx.wl.arrival = Arrival::OnOff {
+        on_rate: 400.0,
+        off_rate: 0.0,
+        mean_on_s: 0.025,
+        mean_off_s: 0.12,
+    };
+    cx.wl.thin_session_frac = 0.4;
+    cx.wl.thin_extra_gap_s = 0.05;
+    "upstream jitter: ~120ms silences between normal-rate bursts".into()
+}
+
+fn inject_ns3(cx: &mut InjectCtx) -> String {
+    cx.wl.session_skew = 1.6;
+    "Zipf(1.6) session selection: few flows dominate ingress".into()
+}
+
+fn inject_ns4(cx: &mut InjectCtx) -> String {
+    let target = cx.target;
+    cx.knobs().nic_rx_loss = 0.15;
+    format!("15% ingress loss on {target} (MTU mismatch/link errors)")
+}
+
+fn inject_ns5(cx: &mut InjectCtx) -> String {
+    let target = cx.target;
+    let k = cx.knobs();
+    k.cpu_contention = 3.5;
+    k.nic_tx_buffer_factor = 0.35;
+    format!("CPU copy bottleneck + small TX buffers on {target}")
+}
+
+fn inject_ns6(cx: &mut InjectCtx) -> String {
+    let target = cx.target;
+    cx.knobs().egress_jitter = 3.0;
+    format!("egress scheduler variance on {target}")
+}
+
+fn inject_ns7(cx: &mut InjectCtx) -> String {
+    let target = cx.target;
+    cx.knobs().nic_tx_loss = 0.15;
+    format!("15% egress loss on {target} (offload misconfig)")
+}
+
+fn inject_ns8(cx: &mut InjectCtx) -> String {
+    cx.wl.output_len = LengthDist::Bimodal { short: 2, long: 48, p_short: 0.5 };
+    for r in &mut cx.engine.replicas {
+        r.batcher.policy_mut().inflight_remap = false;
+    }
+    "bimodal output lengths (2 vs 48 tokens), freed slots not remapped".into()
+}
+
+fn inject_ns9(cx: &mut InjectCtx) -> String {
+    let target = cx.target;
+    cx.knobs().nic_background_frac = 0.85;
+    format!("background tenant burns 85% of {target}'s NIC")
+}
+
+// Early-stop conditions only bite when decode slots are saturated.
+fn shape_ns8(cfg: &mut ScenarioCfg) {
+    cfg.workload.arrival = Arrival::Poisson { rate: 2000.0 };
+    cfg.workload.prompt_len = LengthDist::Uniform { lo: 8, hi: 16 };
+    cfg.workload.output_len = LengthDist::Uniform { lo: 8, hi: 24 };
+}
+
+pub static SPECS: [ConditionSpec; 9] = [
+    ConditionSpec {
+        condition: Condition::Ns1BurstBacklog,
+        label: "burst backlog at ingress",
+        family: Family::NorthSouth,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Workload,
+        inject: inject_ns1,
+        signal: "Sudden ingress spikes followed by queueing delay",
+        stages: "Ingress (prefill/start)",
+        effect: "Downstream GPU sees uneven load; internode bursts clump",
+        root_cause_text: "Client load spike, front-end batching, NIC queue limits",
+        directive: Directive::SmoothAdmission,
+        cause: cause_client,
+        expected_causes: &["client"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Ns2IngressStarvation,
+        label: "ingress starvation",
+        family: Family::NorthSouth,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Workload,
+        inject: inject_ns2,
+        signal: "Long gaps between ingress packets for some tokens",
+        stages: "Ingress -> PCIe feed",
+        effect: "Token stalls; fewer collective ops downstream",
+        root_cause_text: "Upstream service jitter, uneven client distribution",
+        directive: Directive::RebalanceFlows,
+        cause: cause_client,
+        expected_causes: &["client"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Ns3FlowSkew,
+        label: "ingress flow skew",
+        family: Family::NorthSouth,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Workload,
+        inject: inject_ns3,
+        signal: "Some ingress flows high-volume, others sparse",
+        stages: "Ingress (per-request)",
+        effect: "Imbalanced TP/PP participation across tokens",
+        root_cause_text: "Session affinity mismatch, QUIC stream imbalance",
+        directive: Directive::RebalanceFlows,
+        cause: cause_client,
+        expected_causes: &["client"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Ns4IngressRetx,
+        label: "ingress retransmissions",
+        family: Family::NorthSouth,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Node,
+        inject: inject_ns4,
+        signal: "Missing or retransmitted initial packets",
+        stages: "Ingress (request birth)",
+        effect: "Token ID not consistently assigned; lifecycle gaps",
+        root_cause_text: "Congestion, MTU mismatch, link errors",
+        directive: Directive::FixIngressPath,
+        cause: cause_network,
+        expected_causes: &["network"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Ns5EgressBacklog,
+        label: "egress backlog",
+        family: Family::NorthSouth,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Node,
+        inject: inject_ns5,
+        signal: "Responses accumulate in NIC queues before send",
+        stages: "Egress (response flush)",
+        effect: "Downstream clients see latency spikes",
+        root_cause_text: "CPU copy bottleneck, NIC buffer exhaustion",
+        directive: Directive::ZeroCopyEgress,
+        cause: cause_network,
+        expected_causes: &["network"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Ns6EgressJitter,
+        label: "egress jitter",
+        family: Family::NorthSouth,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Node,
+        inject: inject_ns6,
+        signal: "Outgoing packets for a token spread unevenly over time",
+        stages: "Egress (decode outputs)",
+        effect: "Clients see irregular token cadence",
+        root_cause_text: "Scheduler variance, CPU<->NIC contention",
+        directive: Directive::PinIrqsIsolateThreads,
+        cause: cause_network,
+        expected_causes: &["network"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Ns7EgressRetx,
+        label: "egress retransmissions",
+        family: Family::NorthSouth,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Node,
+        inject: inject_ns7,
+        signal: "Retransmissions or gaps in final response streams",
+        stages: "Egress",
+        effect: "Client-visible stalls; retries inflate latency",
+        root_cause_text: "NIC offload misconfig, fabric congestion, buffer underrun",
+        directive: Directive::FixEgressPath,
+        cause: cause_network,
+        expected_causes: &["network"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Ns8EarlyCompletion,
+        label: "early stream completion",
+        family: Family::NorthSouth,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Workload,
+        inject: inject_ns8,
+        signal: "Some egress flows terminate far earlier than peers",
+        stages: "Egress (multi-stream decode)",
+        effect: "Internode peers still busy; imbalance in final stages",
+        root_cause_text: "Early-stop on short sequences; no remap of freed resources",
+        directive: Directive::EnableInflightRemap,
+        cause: cause_workload,
+        expected_causes: &["workload"],
+        compute_skew: false,
+        shape_matrix: Some(shape_ns8),
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Ns9BandwidthSaturation,
+        label: "NIC bandwidth saturation",
+        family: Family::NorthSouth,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Node,
+        inject: inject_ns9,
+        signal: "NIC RX/TX at or near link capacity; queue buildup",
+        stages: "Ingress + Egress",
+        effect: "All internode phases elongated; cluster-level slowdown",
+        root_cause_text: "Shared NIC with storage/other jobs; insufficient link",
+        directive: Directive::QosPartitionNic,
+        cause: cause_network,
+        expected_causes: &["network"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+];

@@ -1,0 +1,295 @@
+//! PCIe-observer family (paper Table 3b): host↔GPU conditions sensed from
+//! the PCIe vantage — PC1-PC10, one [`ConditionSpec`] each.
+
+use super::{
+    cause_gpu, cause_host, cause_workload, ConditionSpec, DetectorBinding, Family, InjectCtx,
+    InjectSite,
+};
+use crate::coordinator::scenario::ScenarioCfg;
+use crate::dpu::detectors::Condition;
+use crate::engine::preset;
+use crate::mitigation::directive::Directive;
+use crate::sim::dist::{Arrival, LengthDist};
+
+fn inject_pc1(cx: &mut InjectCtx) -> String {
+    let target = cx.target;
+    let k = cx.knobs();
+    k.h2d_bw_factor = 0.12;
+    k.unpinned_buffers = true;
+    format!("H2D capped to 12% + pageable buffers on {target}")
+}
+
+fn inject_pc2(cx: &mut InjectCtx) -> String {
+    let target = cx.target;
+    let k = cx.knobs();
+    k.d2h_bw_factor = 0.12;
+    k.pcie_extra_lat_ns = 25_000;
+    format!("D2H capped to 12% + IOMMU contention on {target}")
+}
+
+fn inject_pc3(cx: &mut InjectCtx) -> String {
+    let target = cx.target;
+    let k = cx.knobs();
+    k.doorbell_delay_ns = 150_000;
+    k.kernel_fission = 12;
+    format!("runtime launch overhead + tiny-kernel storm on {target}")
+}
+
+fn inject_pc4(cx: &mut InjectCtx) -> String {
+    // Memory pressure on one GPU: the scheduler underfeeds it.
+    let target = cx.target;
+    let stage_idx = cx
+        .engine
+        .replicas
+        .iter()
+        .position(|r| r.plan.stages.iter().any(|s| s.nodes.contains(&target)));
+    if let Some(ri) = stage_idx {
+        let spec = &cx.cluster.spec;
+        let plan = &mut cx.engine.replicas[ri].plan;
+        let si = plan.stages.iter().position(|s| s.nodes.contains(&target)).unwrap();
+        let gi = plan.stages[si]
+            .gpus
+            .iter()
+            .position(|&g| spec.node_of_gpu(g) == target)
+            .unwrap();
+        plan.skew_shards(si, gi, 0.1);
+    }
+    cx.cluster.nodes[target.idx()].knobs.gpu_speed_factor[0] = 0.6;
+    format!("one GPU on {target} underfed (memory pressure) and slowed")
+}
+
+fn inject_pc5(cx: &mut InjectCtx) -> String {
+    let target = cx.target;
+    cx.knobs().pcie_background_load = 0.8;
+    format!("competing DMA tenant burns 80% of {target}'s PCIe")
+}
+
+fn inject_pc6(cx: &mut InjectCtx) -> String {
+    let target = cx.target;
+    let k = cx.knobs();
+    k.p2p_over_pcie = true;
+    k.pcie_background_load = 0.3;
+    format!("P2P forced over shared PCIe switch on {target}")
+}
+
+fn inject_pc7(cx: &mut InjectCtx) -> String {
+    let target = cx.target;
+    cx.knobs().pinned_pool_frag = true;
+    format!("pinned pool fragmented on {target}: DMAs split small")
+}
+
+fn inject_pc8(cx: &mut InjectCtx) -> String {
+    let target = cx.target;
+    let k = cx.knobs();
+    k.cpu_contention = 4.0;
+    k.doorbell_delay_ns = 60_000;
+    format!("host CPU contention on {target}: doorbells delayed")
+}
+
+fn inject_pc9(cx: &mut InjectCtx) -> String {
+    let target = cx.target;
+    cx.knobs().mem_reg_churn = true;
+    format!("short-lived buffers: map/unmap around every DMA on {target}")
+}
+
+fn inject_pc10(cx: &mut InjectCtx) -> String {
+    cx.wl.output_len = LengthDist::Bimodal { short: 2, long: 48, p_short: 0.6 };
+    for r in &mut cx.engine.replicas {
+        r.batcher.policy_mut().inflight_remap = false;
+    }
+    "sequence-length variance with no decode rebalancing".into()
+}
+
+// PC10's PCIe signature (shrinking decode D2H blocks) additionally needs
+// iterations slow enough that slots actually fill: compute-heavy profile
+// under sustained demand.
+fn shape_pc10(cfg: &mut ScenarioCfg) {
+    cfg.engine.profile = preset("7b").unwrap();
+    cfg.engine.policy.max_batch = 8;
+    cfg.workload.arrival = Arrival::Poisson { rate: 1500.0 };
+    cfg.workload.prompt_len = LengthDist::Uniform { lo: 8, hi: 16 };
+    cfg.workload.output_len = LengthDist::Uniform { lo: 8, hi: 24 };
+}
+
+pub static SPECS: [ConditionSpec; 10] = [
+    ConditionSpec {
+        condition: Condition::Pc1H2dStarvation,
+        label: "H2D starvation",
+        family: Family::Pcie,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Node,
+        inject: inject_pc1,
+        signal: "Large/clustered H2D DMAs then long gaps before doorbells",
+        stages: "Ingress -> PCIe (prefill & decode input feed)",
+        effect: "Fewer/late internode bursts; downstream TP/PP idles",
+        root_cause_text: "PCIe BW cap, NUMA miss, pageable (unpinned) host buffers",
+        directive: Directive::PinMemoryPools,
+        cause: cause_host,
+        expected_causes: &["host"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Pc2D2hBottleneck,
+        label: "D2H bottleneck",
+        family: Family::Pcie,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Node,
+        inject: inject_pc2,
+        signal: "D2H DMAs linger / complete slowly; backlog after kernels",
+        stages: "Egress (logits/tokens back to host)",
+        effect: "Late responses; backpressure into next token step",
+        root_cause_text: "PCIe saturation, IOMMU contention, CPU copy hotspots",
+        directive: Directive::FixReturnPath,
+        cause: cause_host,
+        expected_causes: &["host"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Pc3LaunchLatency,
+        label: "kernel launch latency",
+        family: Family::Pcie,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Node,
+        inject: inject_pc3,
+        signal: "Doorbells sporadic; idle gaps between H2D bursts and launch",
+        stages: "Compute (GPU underutilized across prefill/decode)",
+        effect: "TP collectives delayed, PP handoffs drift",
+        root_cause_text: "Runtime overhead, CPU scheduler delays, too many tiny kernels",
+        directive: Directive::FuseKernelsIsolateCpu,
+        cause: cause_host,
+        expected_causes: &["host"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Pc4IntraNodeSkew,
+        label: "intra-node GPU skew",
+        family: Family::Pcie,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Node,
+        inject: inject_pc4,
+        signal: "One GPU shows thin/irregular DMA; peers steady",
+        stages: "Compute (per-layer) -> propagates to internode",
+        effect: "TP collectives widen (straggler), PP stage misalignment",
+        root_cause_text: "Uneven microbatching, memory pressure on a single GPU",
+        directive: Directive::RebalanceShards,
+        cause: cause_gpu,
+        expected_causes: &["gpu"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Pc5PcieSaturation,
+        label: "PCIe saturation",
+        family: Family::Pcie,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Node,
+        inject: inject_pc5,
+        signal: "Sustained near-peak PCIe throughput; compute stalls periodically",
+        stages: "Ingress -> PCIe, Egress",
+        effect: "Burstiness in internode waves; elongates token step",
+        root_cause_text: "Oversubscribed PCIe switch / x8 link, competing DMAs",
+        directive: Directive::MovePcieTenants,
+        cause: cause_host,
+        expected_causes: &["host"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Pc6P2pThrottling,
+        label: "P2P throttling",
+        family: Family::Pcie,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Node,
+        inject: inject_pc6,
+        signal: "P2P DMAs slow/variable; no NVLink path",
+        stages: "Compute (intra-box TP/PP)",
+        effect: "Internode timing jitter (collectives wait on slow intra-box move)",
+        root_cause_text: "Shared uplink on PCIe switch; ACS/ATS settings",
+        directive: Directive::PreferNvlink,
+        cause: cause_host,
+        expected_causes: &["host"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Pc7PinnedShortage,
+        label: "pinned-memory shortage",
+        family: Family::Pcie,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Node,
+        inject: inject_pc7,
+        signal: "Many small DMAs vs large coalesced; rising DMA count",
+        stages: "Ingress -> PCIe (feed) and Egress (returns)",
+        effect: "Micro-jitter; uneven stage timing",
+        root_cause_text: "Insufficient pinned pools; fallback to pageable",
+        directive: Directive::PinMemoryPools,
+        cause: cause_host,
+        expected_causes: &["host"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Pc8HostCpuBottleneck,
+        label: "host CPU bottleneck",
+        family: Family::Pcie,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Node,
+        inject: inject_pc8,
+        signal: "Low DMA rate despite available PCIe BW; delayed doorbells",
+        stages: "Compute orchestration",
+        effect: "Irregular TP cadence; PP bubbles",
+        root_cause_text: "CPU contention, IRQ affinity, polling disabled",
+        directive: Directive::FuseKernelsIsolateCpu,
+        cause: cause_host,
+        expected_causes: &["host"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Pc9RegistrationChurn,
+        label: "registration churn",
+        family: Family::Pcie,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Node,
+        inject: inject_pc9,
+        signal: "Frequent map/unmap patterns around DMAs",
+        stages: "Ingress -> PCIe",
+        effect: "Small timing gaps accumulating per token",
+        root_cause_text: "Repeated registration due to short-lived buffers",
+        directive: Directive::PersistentRegistration,
+        cause: cause_host,
+        expected_causes: &["host"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Pc10DecodeEarlyStop,
+        label: "decode early stop",
+        family: Family::Pcie,
+        binding: DetectorBinding::NodeWindow,
+        site: InjectSite::Workload,
+        inject: inject_pc10,
+        signal: "D2H drops off early on some streams/GPUs",
+        stages: "Compute (decode) -> Egress",
+        effect: "Some peers go silent; collectives wait for remaining peers",
+        root_cause_text: "Sequence length variance; scheduler not rebalancing",
+        directive: Directive::EnableInflightRemap,
+        cause: cause_workload,
+        expected_causes: &["workload"],
+        compute_skew: false,
+        shape_matrix: Some(shape_pc10),
+        shape_fleet: None,
+    },
+];

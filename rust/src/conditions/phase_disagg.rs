@@ -1,0 +1,260 @@
+//! Phase-disaggregation family (pool-boundary vantage): PD1-PD3, one
+//! [`ConditionSpec`] each. Like the DP family, the detector bindings are
+//! fleet rules evaluated by `dpu::fleet::FleetSensor`; these read the
+//! pool-boundary sample (KV-handoff counters) that only disaggregated
+//! fleets produce.
+
+use super::{
+    cause_client, cause_network, scale_rate, ConditionSpec, DetectorBinding, Family, FleetScope,
+    InjectCtx, InjectSite,
+};
+use crate::coordinator::scenario::ScenarioCfg;
+use crate::dpu::detectors::Condition;
+use crate::dpu::fleet::{argmax_u64, first_max_by, PdCtx, RuleHit};
+use crate::mitigation::directive::Directive;
+use crate::sim::dist::{Arrival, LengthDist};
+
+/// PD1: prefill-pool backlog floor and the decode-utilization ceiling that
+/// distinguishes "prefill starves decode" from "everything is busy".
+const PD1_MIN_QUEUE: u64 = 24;
+const PD1_DECODE_UTIL_MAX: f64 = 0.5;
+/// PD2: observed-over-expected handoff latency ratio + a minimum population
+/// over the horizon so a few straggling transfers can't fire it. The
+/// in-flight floor catches the degenerate total stall, where so few
+/// transfers land that no latency sample exists at all.
+const PD2_LAT_FACTOR: f64 = 3.0;
+const PD2_MIN_HANDOFFS: u64 = 4;
+const PD2_STALL_INFLIGHT: u64 = 12;
+/// PD3: handoff-share margin over the fair share (mirrors DP1's margin).
+const PD3_SHARE_MARGIN: f64 = 0.35;
+const PD3_MIN_ARRIVALS: u64 = 24;
+/// Hops a handoff traverses (uplink → core → downlink) for the line-rate
+/// latency expectation, plus a fixed base allowance.
+const PD2_PATH_HOPS: f64 = 3.0;
+const PD2_BASE_ALLOWANCE_NS: f64 = 10_000.0;
+
+// ---- injections ----
+
+fn inject_pd1(cx: &mut InjectCtx) -> String {
+    // Prompt flood: long prompts at a surged rate overrun the prefill pool
+    // while decode demand (tokens out) barely moves.
+    cx.wl.prompt_len = LengthDist::Uniform { lo: 48, hi: 64 };
+    if let Arrival::Poisson { rate } = &cx.wl.arrival {
+        let surged = rate * 2.5;
+        cx.wl.arrival = Arrival::Poisson { rate: surged };
+    }
+    "prompt flood: 48-64-token prompts at 2.5x rate overrun the prefill pool".into()
+}
+
+fn inject_pd2(cx: &mut InjectCtx) -> String {
+    cx.cluster.fabric_knobs.handoff_budget_factor = 0.2;
+    "prefill→decode KV-handoff link budget collapsed to 20%".into()
+}
+
+fn inject_pd3(cx: &mut InjectCtx) -> String {
+    // Wedged handoff routing: every phase transition lands on one decode
+    // replica; its pool peers starve.
+    let hot = cx
+        .engine
+        .replica_of_node(cx.target)
+        .filter(|&ri| cx.engine.replicas[ri].plan.shape.role.serves_decode())
+        .unwrap_or_else(|| cx.engine.decode_router.members()[0]);
+    cx.engine.decode_router.set_pin(Some(hot));
+    format!("handoff routing wedged: every KV handoff lands on decode replica {hot}")
+}
+
+// ---- fleet rules ----
+
+/// PD1 — prefill-pool saturation: admission backlog accumulates across the
+/// prefill pool while its paired decode pool sits far below slot capacity.
+fn rule_pd1(cx: &PdCtx) -> Option<RuleHit> {
+    let prefill_q: u64 = cx.pool.iter().map(|&r| cx.cur.prefill_queue[r]).sum();
+    let old_q: u64 = cx.pool.iter().map(|&r| cx.old.prefill_queue[r]).sum();
+    let slots: u64 = cx.other_pool.iter().map(|&r| cx.cur.decode_slots[r]).sum();
+    let running: u64 = cx.other_pool.iter().map(|&r| cx.cur.decode_running[r]).sum();
+    let decode_util = running as f64 / slots.max(1) as f64;
+    let hit =
+        prefill_q >= PD1_MIN_QUEUE && prefill_q > old_q && decode_util <= PD1_DECODE_UTIL_MAX;
+    if !hit {
+        return None;
+    }
+    let hot = first_max_by(cx.pool, |r| cx.cur.prefill_queue[r] as f64);
+    Some(RuleHit {
+        replica: hot,
+        severity: prefill_q as f64 / PD1_MIN_QUEUE as f64,
+        evidence: format!(
+            "prefill pool backlog {prefill_q} (was {old_q} a horizon ago) while \
+             the decode pool runs {running}/{slots} slots ({:.0}% busy)",
+            decode_util * 100.0
+        ),
+    })
+}
+
+/// PD2 — KV-handoff stall: the phase-transition transfer's fabric latency
+/// blows past its line-rate expectation. Measured over the whole horizon,
+/// not one window: completions under a stall arrive sparse-then-bursty, and
+/// a single thin window must neither fire nor reset the streak.
+fn rule_pd2(cx: &PdCtx) -> Option<RuleHit> {
+    cx.prev?;
+    let done = cx.cur.handoffs_completed.saturating_sub(cx.old.handoffs_completed);
+    let inflight = cx.cur.handoffs_started.saturating_sub(cx.cur.handoffs_completed);
+    if done < PD2_MIN_HANDOFFS && inflight >= PD2_STALL_INFLIGHT {
+        // Degenerate total stall: transfers pile up on the fabric with
+        // (almost) nothing landing — no latency sample will ever
+        // accumulate, so the backlog itself is the red flag.
+        let dst = first_max_by(cx.pool, |r| cx.cur.handoff_arrivals[r] as f64);
+        return Some(RuleHit {
+            replica: dst,
+            severity: inflight as f64 / PD2_STALL_INFLIGHT as f64,
+            evidence: format!(
+                "KV handoffs frozen: {inflight} in flight on the fabric with \
+                 only {done} landing over the horizon"
+            ),
+        });
+    }
+    if done >= PD2_MIN_HANDOFFS {
+        let lat_sum = cx.cur.handoff_lat_sum_ns.saturating_sub(cx.old.handoff_lat_sum_ns);
+        let bytes = cx.cur.handoff_bytes.saturating_sub(cx.old.handoff_bytes);
+        let mean_lat = lat_sum as f64 / done as f64;
+        let mean_bytes = bytes as f64 / done as f64;
+        let expected =
+            mean_bytes / cx.nic_bw.max(1.0) * 1e9 * PD2_PATH_HOPS + PD2_BASE_ALLOWANCE_NS;
+        if mean_lat >= PD2_LAT_FACTOR * expected {
+            let dst = first_max_by(cx.pool, |r| {
+                cx.cur.handoff_arrivals[r].saturating_sub(cx.old.handoff_arrivals[r]) as f64
+            });
+            return Some(RuleHit {
+                replica: dst,
+                severity: mean_lat / expected.max(1.0),
+                evidence: format!(
+                    "KV handoffs average {:.0} us over {done} transfers vs \
+                     {:.0} us line-rate expectation ({:.0} KB mean)",
+                    mean_lat / 1e3,
+                    expected / 1e3,
+                    mean_bytes / 1e3
+                ),
+            });
+        }
+    }
+    None
+}
+
+/// PD3 — decode-pool starvation: handoff arrivals concentrate on one decode
+/// replica while its pool peers starve.
+fn rule_pd3(cx: &PdCtx) -> Option<RuleHit> {
+    let pool = cx.pool;
+    let nd = pool.len();
+    if nd < 2 {
+        return None;
+    }
+    let arrivals: Vec<u64> = pool
+        .iter()
+        .map(|&r| cx.cur.handoff_arrivals[r].saturating_sub(cx.old.handoff_arrivals[r]))
+        .collect();
+    let total: u64 = arrivals.iter().sum();
+    if total < PD3_MIN_ARRIVALS {
+        return None;
+    }
+    let hot_k = argmax_u64(&arrivals);
+    let hot = pool[hot_k];
+    let share = arrivals[hot_k] as f64 / total as f64;
+    let threshold = (1.0 / nd as f64 + PD3_SHARE_MARGIN).min(0.92);
+    if share < threshold {
+        return None;
+    }
+    Some(RuleHit {
+        replica: hot,
+        severity: share * nd as f64,
+        evidence: format!(
+            "decode replica {hot} receives {:.0}% of {total} KV handoffs \
+             (fair share {:.0}%); {} parked awaiting admission",
+            share * 100.0,
+            100.0 / nd as f64,
+            cx.cur.stalled_wait_depth
+        ),
+    })
+}
+
+// ---- fleet-triple shaping ----
+
+// Decode-slot pressure: the wedged replica must actually be the constraint,
+// so lengthen outputs and raise demand until the decode pool runs near its
+// slot capacity.
+fn shape_pd3(cfg: &mut ScenarioCfg) {
+    cfg.workload.output_len = LengthDist::Uniform { lo: 24, hi: 48 };
+    scale_rate(cfg, 2.0);
+}
+
+pub static SPECS: [ConditionSpec; 3] = [
+    ConditionSpec {
+        condition: Condition::Pd1PrefillSaturation,
+        label: "prefill-pool saturation",
+        family: Family::PhaseDisagg,
+        binding: DetectorBinding::FleetPd {
+            scope: FleetScope::PerPrefillPool,
+            confirm: 3,
+            min_pool: 1,
+            eval: rule_pd1,
+        },
+        site: InjectSite::Workload,
+        inject: inject_pd1,
+        signal: "Prefill-pool admission backlog grows while decode slots idle",
+        stages: "Prefill pool (admission -> first token)",
+        effect: "TTFT inflates fleet-wide; decode pool starves for handoffs",
+        root_cause_text: "Prompt-heavy demand vs prefill pool sizing (roles misprovisioned)",
+        directive: Directive::RebalancePools,
+        cause: cause_client,
+        expected_causes: &["client"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Pd2KvHandoffStall,
+        label: "KV-handoff stall",
+        family: Family::PhaseDisagg,
+        binding: DetectorBinding::FleetPd {
+            scope: FleetScope::DecodeUnion,
+            confirm: 2,
+            min_pool: 1,
+            eval: rule_pd2,
+        },
+        site: InjectSite::Fabric,
+        inject: inject_pd2,
+        signal: "KV-handoff fabric latency far above line-rate expectation",
+        stages: "Phase transition (prefill -> decode pool)",
+        effect: "Sequences pile up between pools; decode admission runs dry",
+        root_cause_text: "Handoff link budget collapse: congestion, misrouted path, QoS",
+        // PD2 shares EW8's KV-transfer directive: the handoff IS a KV
+        // transfer, just across the pool boundary.
+        directive: Directive::CompressKvTransfers,
+        cause: cause_network,
+        expected_causes: &["network"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Pd3DecodeStarvation,
+        label: "decode-pool starvation",
+        family: Family::PhaseDisagg,
+        binding: DetectorBinding::FleetPd {
+            scope: FleetScope::PerDecodePool,
+            confirm: 3,
+            min_pool: 2,
+            eval: rule_pd3,
+        },
+        site: InjectSite::Engine,
+        inject: inject_pd3,
+        signal: "KV handoffs concentrate on one decode replica; peers starve",
+        stages: "Phase transition routing (decode pool)",
+        effect: "One decode replica saturates its slots while peers sit idle",
+        root_cause_text: "Wedged/skewed handoff routing after a config or failover event",
+        directive: Directive::RebalanceHandoffRouting,
+        cause: cause_network,
+        expected_causes: &["network"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: Some(shape_pd3),
+    },
+];

@@ -7,7 +7,6 @@
 use crate::dpu::attribution::RootCause;
 use crate::dpu::detectors::Condition;
 use crate::dpu::runbook;
-use crate::engine::preset;
 use crate::sim::{SimDur, SimTime, MS};
 use crate::coordinator::scenario::{RunResult, Scenario, ScenarioCfg};
 
@@ -30,71 +29,23 @@ pub fn inject_time(cfg: &ScenarioCfg) -> SimTime {
 
 /// Per-condition scenario shaping (see DESIGN.md §4): some runbook rows only
 /// produce their red flag under a compute-dominated profile or a saturated
-/// decode pool. Shared by the matrix, the sweep CLI, and the benches.
+/// decode pool. The recipes live in the condition catalog (`shape_matrix`
+/// on each [`crate::conditions::ConditionSpec`]); this applies them on top
+/// of a base config. Shared by the matrix, the sweep CLI, and the benches.
 pub fn shaped_cfg(c: Condition, base: &ScenarioCfg) -> ScenarioCfg {
     let mut cfg = base.clone();
-    match c {
-        // Compute-skew conditions need a compute-dominated cost profile for
-        // a straggler/mispartition to move collective timing.
-        Condition::Ew1TpStraggler
-        | Condition::Ew3CrossNodeSkew
-        | Condition::Ew4Congestion
-        | Condition::Ew9EarlyStopSkew => {
-            cfg.engine.profile = preset("7b").unwrap();
-            cfg.engine.policy.max_batch = 8;
-            cfg.workload.arrival = crate::sim::dist::Arrival::Poisson { rate: 150.0 };
-        }
-        // Pipeline-cadence detection needs a *busy* pipeline: idle lulls
-        // produce ms-scale healthy gaps that mask a mispartitioned stage.
-        Condition::Ew2PpBubble => {
-            cfg.engine.profile = preset("7b").unwrap();
-            cfg.engine.policy.max_batch = 8;
-            cfg.workload.arrival = crate::sim::dist::Arrival::Poisson { rate: 500.0 };
-            cfg.workload.output_len = crate::sim::dist::LengthDist::Uniform { lo: 8, hi: 16 };
-        }
-        // Early-stop conditions only bite when decode slots are saturated.
-        Condition::Ns8EarlyCompletion => {
-            cfg.workload.arrival = crate::sim::dist::Arrival::Poisson { rate: 2000.0 };
-            cfg.workload.prompt_len = crate::sim::dist::LengthDist::Uniform { lo: 8, hi: 16 };
-            cfg.workload.output_len = crate::sim::dist::LengthDist::Uniform { lo: 8, hi: 24 };
-        }
-        // PC10's PCIe signature (shrinking decode D2H blocks) additionally
-        // needs iterations slow enough that slots actually fill: use the
-        // compute-heavy profile under sustained demand.
-        Condition::Pc10DecodeEarlyStop => {
-            cfg.engine.profile = preset("7b").unwrap();
-            cfg.engine.policy.max_batch = 8;
-            cfg.workload.arrival = crate::sim::dist::Arrival::Poisson { rate: 1500.0 };
-            cfg.workload.prompt_len = crate::sim::dist::LengthDist::Uniform { lo: 8, hi: 16 };
-            cfg.workload.output_len = crate::sim::dist::LengthDist::Uniform { lo: 8, hi: 24 };
-        }
-        _ => {}
+    if let Some(shape) = crate::conditions::spec(c).shape_matrix {
+        shape(&mut cfg);
     }
     cfg
 }
 
-/// Which root-cause classes count as a correct attribution per condition.
-/// EW1-EW3 accept both verdicts of the §4.2 refinement: GPU/host-side when a
-/// PCIe-vantage anomaly corroborates, network-side when PCIe looks healthy.
+/// Which root-cause classes count as a correct attribution per condition
+/// (the catalog's `expected_causes`). EW1-EW3 accept both verdicts of the
+/// §4.2 refinement: GPU/host-side when a PCIe-vantage anomaly corroborates,
+/// network-side when PCIe looks healthy.
 pub fn expected_cause_classes(c: Condition) -> &'static [&'static str] {
-    use Condition::*;
-    match c {
-        Ns1BurstBacklog | Ns2IngressStarvation | Ns3FlowSkew => &["client"],
-        Ns4IngressRetx | Ns5EgressBacklog | Ns6EgressJitter | Ns7EgressRetx
-        | Ns9BandwidthSaturation => &["network"],
-        Ns8EarlyCompletion | Pc10DecodeEarlyStop | Ew9EarlyStopSkew => &["workload"],
-        Pc1H2dStarvation | Pc2D2hBottleneck | Pc3LaunchLatency | Pc5PcieSaturation
-        | Pc6P2pThrottling | Pc7PinnedShortage | Pc8HostCpuBottleneck
-        | Pc9RegistrationChurn => &["host"],
-        Pc4IntraNodeSkew => &["gpu"],
-        Ew1TpStraggler | Ew2PpBubble | Ew3CrossNodeSkew => &["gpu", "network"],
-        Ew4Congestion | Ew5HolBlocking | Ew6Retransmissions | Ew7CreditStarvation
-        | Ew8KvBottleneck => &["network"],
-        Dp1RouterFlowSkew => &["network"],
-        Dp2HotReplicaKv | Dp3StragglerReplica => &["gpu"],
-        Pd1PrefillSaturation => &["client"],
-        Pd2KvHandoffStall | Pd3DecodeStarvation => &["network"],
-    }
+    crate::conditions::spec(c).expected_causes
 }
 
 /// Cause-class label of an attribution verdict.

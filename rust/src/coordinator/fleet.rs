@@ -42,6 +42,52 @@ pub struct FleetConfig {
     /// Append the phase-disaggregation study (colocated-vs-disagg twin
     /// cells + the PD1-PD3 triples); bumps the JSON schema to v2.
     pub disagg: bool,
+    /// Append the multi-pool study (`--prefill-pools` / `--decode-pools`):
+    /// an arbitrary K×M pool topology with the full fleet condition family
+    /// run as catalog-driven triples; bumps the JSON schema to v3.
+    pub multipool: Option<MultiPoolSpec>,
+}
+
+/// Knobs of the multi-pool study topology.
+#[derive(Debug, Clone, Copy)]
+pub struct MultiPoolSpec {
+    pub replicas: usize,
+    pub prefill_pools: usize,
+    pub decode_pools: usize,
+}
+
+impl MultiPoolSpec {
+    /// Check the topology is buildable (enough decode replicas for the
+    /// requested pools) — the CLI's graceful-error path; the shape builder
+    /// asserts the same invariant.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.replicas < 2 || self.prefill_pools < 1 || self.decode_pools < 1 {
+            return Err(format!(
+                "multi-pool topology needs >= 2 replicas and >= 1 pool per side \
+                 (got {} replicas, {} prefill pools, {} decode pools)",
+                self.replicas, self.prefill_pools, self.decode_pools
+            ));
+        }
+        if self.decode_pools > self.prefill_pools {
+            return Err(format!(
+                "{} decode pools need at least as many prefill pools (got {}): \
+                 handoffs pair prefill pool p with decode pool p % M, so a decode \
+                 pool beyond the prefill pool count would never receive traffic",
+                self.decode_pools, self.prefill_pools
+            ));
+        }
+        let n_prefill = self.prefill_pools.max(self.replicas.div_ceil(3));
+        let n_decode = self.replicas.saturating_sub(n_prefill);
+        if n_decode < self.decode_pools.max(1) {
+            return Err(format!(
+                "{} replicas leave {n_decode} decode replicas ({n_prefill} go to the \
+                 prefill tier): too few for {} decode pools — raise --replicas or \
+                 lower the pool counts",
+                self.replicas, self.decode_pools
+            ));
+        }
+        Ok(())
+    }
 }
 
 impl FleetConfig {
@@ -52,6 +98,7 @@ impl FleetConfig {
             policies: ALL_POLICIES.to_vec(),
             threads: 0,
             disagg: false,
+            multipool: None,
         }
     }
 }
@@ -112,6 +159,105 @@ pub fn colocated_twin_cfg() -> ScenarioCfg {
     cfg
 }
 
+/// Replica shapes of an N-replica multi-pool topology: single-node TP4×PP1
+/// replicas, the first `max(K, ceil(N/3))` prefill and the rest decode —
+/// one node per replica keeps arbitrary replica counts cheap to simulate.
+pub fn multipool_shapes(mp: &MultiPoolSpec) -> Vec<ReplicaShape> {
+    let n_prefill = mp.prefill_pools.max(mp.replicas.div_ceil(3));
+    let n_decode = mp.replicas.saturating_sub(n_prefill);
+    assert!(
+        n_decode >= mp.decode_pools && n_decode >= 1,
+        "{} replicas leave {n_decode} decode replicas: too few for {} decode pools",
+        mp.replicas,
+        mp.decode_pools
+    );
+    let mut shapes = vec![ReplicaShape::new(ReplicaRole::Prefill, 4, 1); n_prefill];
+    shapes.extend(vec![ReplicaShape::new(ReplicaRole::Decode, 4, 1); n_decode]);
+    shapes
+}
+
+/// Base scenario of the multi-pool study: N single-node replicas on N
+/// nodes, split into K admission pools and M handoff pools, on the
+/// compute-dominated 7b profile (so fleet pathologies move throughput).
+/// Demand scales with the prefill-side GPU count, mirroring the calibrated
+/// disagg study (~60 req/s per prefill GPU keeps the healthy fleet inside
+/// both pools' capacity with a decisive margin for 2-3x injection surges).
+pub fn multipool_base_cfg(mp: &MultiPoolSpec) -> ScenarioCfg {
+    let shapes = multipool_shapes(mp);
+    let n_prefill = shapes.iter().filter(|s| s.role == ReplicaRole::Prefill).count();
+    let mut cfg = standard_cfg();
+    cfg.cluster.n_nodes = mp.replicas;
+    cfg.cluster.pp_degree = 1;
+    cfg.engine.profile = crate::engine::preset("7b").unwrap();
+    cfg.engine.policy.max_batch = 8;
+    cfg.engine.shapes = Some(shapes);
+    cfg.engine.prefill_pools = mp.prefill_pools;
+    cfg.engine.decode_pools = mp.decode_pools;
+    cfg.workload.arrival =
+        crate::sim::dist::Arrival::Poisson { rate: 60.0 * (n_prefill * 4) as f64 };
+    cfg.workload.prompt_len = crate::sim::dist::LengthDist::Uniform { lo: 8, hi: 16 };
+    cfg.workload.output_len = crate::sim::dist::LengthDist::Uniform { lo: 4, hi: 12 };
+    // Victimize the last decode replica (the last lane of the last decode
+    // pool), mirroring the DP/PD sweeps' last-lane convention.
+    cfg.victim_replica = mp.replicas - 1;
+    cfg.duration = cfg.duration + SimDur::from_ms(DP_EXTRA_MS);
+    cfg
+}
+
+/// Every fleet-sensed condition (DP + PD families), catalog order.
+pub fn fleet_conditions() -> Vec<Condition> {
+    crate::conditions::all_specs()
+        .filter(|s| {
+            matches!(
+                s.binding,
+                crate::conditions::DetectorBinding::FleetDp { .. }
+                    | crate::conditions::DetectorBinding::FleetPd { .. }
+            )
+        })
+        .map(|s| s.condition)
+        .collect()
+}
+
+/// The pool partition a multi-pool spec builds (shapes' roles × K × M).
+fn multipool_pools(mp: &MultiPoolSpec) -> crate::engine::PoolTopology {
+    let roles: Vec<ReplicaRole> = multipool_shapes(mp).iter().map(|s| s.role).collect();
+    crate::engine::PoolTopology::build(&roles, mp.prefill_pools, mp.decode_pools)
+}
+
+/// Can `c`'s fleet rule ever fire on this pool partition? Rules declare
+/// their smallest judgeable pool in the catalog (`min_pool`: 2 for
+/// peer-comparison skew, 1 for aggregates); a topology whose every pool of
+/// the rule's scope is smaller makes the rule structurally inert, and
+/// running its triple would be three guaranteed-negative simulations.
+fn mp_applicable(c: Condition, pools: &crate::engine::PoolTopology) -> bool {
+    use crate::conditions::{DetectorBinding, FleetScope};
+    let (scope, min_pool) = match crate::conditions::spec(c).binding {
+        DetectorBinding::FleetDp { scope, min_pool, .. }
+        | DetectorBinding::FleetPd { scope, min_pool, .. } => (scope, min_pool),
+        DetectorBinding::NodeWindow => return false,
+    };
+    match scope {
+        FleetScope::PerPrefillPool => pools.prefill_pools.iter().any(|p| p.len() >= min_pool),
+        FleetScope::PerDecodePool => pools.decode_pools.iter().any(|p| p.len() >= min_pool),
+        FleetScope::DecodeUnion => pools.decode_members.len() >= min_pool,
+    }
+}
+
+/// The fleet conditions a multi-pool topology can host, and those it
+/// structurally cannot (reported, never silently dropped).
+pub fn multipool_conditions(mp: &MultiPoolSpec) -> (Vec<Condition>, Vec<Condition>) {
+    let pools = multipool_pools(mp);
+    fleet_conditions().into_iter().partition(|&c| mp_applicable(c, &pools))
+}
+
+/// Does `c`'s triple shape its own config? Unshaped conditions run on a
+/// config byte-identical to the topology cell (cell_cfg's explicit DP
+/// affinity baseline is already the multipool default), so their healthy
+/// reference IS the topology cell — no dedicated healthy simulation.
+fn mp_has_dedicated_healthy(c: Condition) -> bool {
+    crate::conditions::spec(c).shape_fleet.is_some()
+}
+
 /// One cell of the fleet sweep.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum FleetCell {
@@ -130,50 +276,37 @@ enum FleetCell {
     PdHealthy(Condition),
     PdInjected(Condition),
     PdMitigated(Condition),
+    /// Multi-pool study: the healthy K×M topology cell.
+    MpTopology,
+    /// Multi-pool condition triples (every fleet-sensed condition, DP + PD,
+    /// catalog order).
+    MpHealthy(Condition),
+    MpInjected(Condition),
+    MpMitigated(Condition),
 }
 
 /// The shared shaping every cell of one DP condition's triple (healthy /
-/// injected / mitigated) runs on, so their throughputs are comparable.
+/// injected / mitigated) runs on, so their throughputs are comparable. The
+/// per-condition recipe is catalog knowledge (`shape_fleet` on each
+/// [`crate::conditions::ConditionSpec`]); this applies it on the sweep base.
 fn dp_shaped(fc: &FleetConfig, c: Condition) -> ScenarioCfg {
     let mut cfg = fc.base.clone();
     // DP conditions are studied on the skew-prone affinity baseline.
     cfg.engine.route_policy = RoutePolicy::FlowHash;
     cfg.duration = cfg.duration + SimDur::from_ms(DP_EXTRA_MS);
-    match c {
-        // Saturation-sensitive conditions need a compute-dominated cost
-        // profile (cf. `shaped_cfg` for EW1): on the fast `small` model a
-        // hot or slowed replica never runs out of capacity, so flow
-        // concentration / degraded GPUs would not move throughput. The rate
-        // scale keeps the hot/slow lane decisively past the 7b compute
-        // bound while healthy lanes stay inside it.
-        Condition::Dp1RouterFlowSkew => {
-            cfg.engine.profile = crate::engine::preset("7b").unwrap();
-            cfg.engine.policy.max_batch = 8;
-            scale_rate(&mut cfg, 3.0);
-        }
-        Condition::Dp3StragglerReplica => {
-            cfg.engine.profile = crate::engine::preset("7b").unwrap();
-            cfg.engine.policy.max_batch = 8;
-            scale_rate(&mut cfg, 2.0);
-        }
-        // DP2's KV leak is capacity-independent: the victim's pool starves
-        // outright regardless of the cost profile.
-        _ => {}
+    if let Some(shape) = crate::conditions::spec(c).shape_fleet {
+        shape(&mut cfg);
     }
     cfg
 }
 
-/// Per-condition shaping of the PD triples, applied on top of
-/// [`disagg_base_cfg`] (the healthy cell shares the shaping, so recovery is
-/// measured like for like).
+/// Per-condition shaping of the PD triples (the catalog's `shape_fleet`),
+/// applied on top of [`disagg_base_cfg`] (the healthy cell shares the
+/// shaping, so recovery is measured like for like).
 fn pd_shaped(c: Condition) -> ScenarioCfg {
     let mut cfg = disagg_base_cfg();
-    if c == Condition::Pd3DecodeStarvation {
-        // Decode-slot pressure: the wedged replica must actually be the
-        // constraint, so lengthen outputs and raise demand until the decode
-        // pool runs near its slot capacity.
-        cfg.workload.output_len = crate::sim::dist::LengthDist::Uniform { lo: 24, hi: 48 };
-        scale_rate(&mut cfg, 2.0);
+    if let Some(shape) = crate::conditions::spec(c).shape_fleet {
+        shape(&mut cfg);
     }
     cfg
 }
@@ -217,13 +350,32 @@ fn cell_cfg(fc: &FleetConfig, cell: FleetCell) -> ScenarioCfg {
             cfg.mitigate = matches!(cell, FleetCell::PdMitigated(_));
             cfg
         }
-    }
-}
-
-fn scale_rate(cfg: &mut ScenarioCfg, factor: f64) {
-    if let crate::sim::dist::Arrival::Poisson { rate } = &cfg.workload.arrival {
-        let scaled = rate * factor;
-        cfg.workload.arrival = crate::sim::dist::Arrival::Poisson { rate: scaled };
+        FleetCell::MpTopology => {
+            let mp = fc.multipool.as_ref().expect("multipool cells need a spec");
+            let mut cfg = multipool_base_cfg(mp);
+            cfg.seed = fc.base.seed;
+            cfg
+        }
+        FleetCell::MpHealthy(c) | FleetCell::MpInjected(c) | FleetCell::MpMitigated(c) => {
+            let mp = fc.multipool.as_ref().expect("multipool cells need a spec");
+            let mut cfg = multipool_base_cfg(mp);
+            cfg.seed = fc.base.seed;
+            // DP conditions are studied on the skew-prone affinity baseline
+            // (the admission default is already FlowHash; set explicitly for
+            // parity with the v1 DP triples), with the catalog shaping the
+            // triple like for like.
+            if crate::conditions::spec(c).family == crate::conditions::Family::DataParallel {
+                cfg.engine.route_policy = RoutePolicy::FlowHash;
+            }
+            if let Some(shape) = crate::conditions::spec(c).shape_fleet {
+                shape(&mut cfg);
+            }
+            if !matches!(cell, FleetCell::MpHealthy(_)) {
+                cfg.inject = Some((c, inject_time(&cfg)));
+                cfg.mitigate = matches!(cell, FleetCell::MpMitigated(_));
+            }
+            cfg
+        }
     }
 }
 
@@ -240,6 +392,23 @@ fn disagg_cells() -> Vec<FleetCell> {
     v
 }
 
+/// The multi-pool cell block, in the exact order `multipool_report_from`
+/// decodes: the healthy topology cell, then — per applicable fleet
+/// condition, catalog order — an optional dedicated healthy cell (only
+/// when the triple shapes its own config) and the injected/mitigated pair.
+fn multipool_cells(mp: &MultiPoolSpec) -> Vec<FleetCell> {
+    let (run, _skipped) = multipool_conditions(mp);
+    let mut v = vec![FleetCell::MpTopology];
+    for c in run {
+        if mp_has_dedicated_healthy(c) {
+            v.push(FleetCell::MpHealthy(c));
+        }
+        v.push(FleetCell::MpInjected(c));
+        v.push(FleetCell::MpMitigated(c));
+    }
+    v
+}
+
 fn cells(fc: &FleetConfig) -> Vec<FleetCell> {
     let mut v: Vec<FleetCell> = fc.policies.iter().map(|&p| FleetCell::Policy(p)).collect();
     for c in DP_CONDITIONS {
@@ -249,6 +418,9 @@ fn cells(fc: &FleetConfig) -> Vec<FleetCell> {
     }
     if fc.disagg {
         v.extend(disagg_cells());
+    }
+    if let Some(mp) = &fc.multipool {
+        v.extend(multipool_cells(mp));
     }
     v
 }
@@ -274,6 +446,8 @@ struct CellOutcome {
     /// KV handoffs completed / logical bytes delivered (zero when colocated).
     handoffs: u64,
     handoff_bytes: u64,
+    /// Per (prefill pool, decode pool) launches and bytes (multi-pool cells).
+    handoff_pairs: Vec<(u32, u32, u64, u64)>,
 }
 
 fn run_cell(fc: &FleetConfig, cell: FleetCell) -> CellOutcome {
@@ -283,7 +457,9 @@ fn run_cell(fc: &FleetConfig, cell: FleetCell) -> CellOutcome {
         FleetCell::DpInjected(c)
         | FleetCell::DpMitigated(c)
         | FleetCell::PdInjected(c)
-        | FleetCell::PdMitigated(c) => Some(c),
+        | FleetCell::PdMitigated(c)
+        | FleetCell::MpInjected(c)
+        | FleetCell::MpMitigated(c) => Some(c),
         _ => None,
     };
     let t0 = res.injected_at.unwrap_or(SimTime(u64::MAX));
@@ -314,6 +490,12 @@ fn run_cell(fc: &FleetConfig, cell: FleetCell) -> CellOutcome {
         events: res.telemetry_published,
         handoffs: res.handoffs.completed,
         handoff_bytes: res.handoffs.bytes_delivered,
+        handoff_pairs: res
+            .handoffs
+            .per_pair
+            .iter()
+            .map(|p| (p.prefill_pool, p.decode_pool, p.started, p.bytes_sent))
+            .collect(),
     }
 }
 
@@ -373,6 +555,37 @@ pub struct DisaggReport {
     pub pd_rows: Vec<DpRow>,
 }
 
+/// The multi-pool study: an arbitrary K×M pool topology with per-pool DP
+/// scoping, per-pool-pair handoff accounting, and the full fleet condition
+/// family as catalog-driven triples.
+#[derive(Debug)]
+pub struct MultiPoolReport {
+    pub replicas: usize,
+    pub prefill_pool_count: usize,
+    pub decode_pool_count: usize,
+    /// Shape label per replica, lane order.
+    pub topology: Vec<String>,
+    /// Pool membership (global replica indices) the study ran on — the
+    /// partition every DP/PD comparison was scoped to.
+    pub prefill_pools: Vec<Vec<usize>>,
+    pub decode_pools: Vec<Vec<usize>>,
+    /// Healthy topology cell.
+    pub healthy_tok_per_s: f64,
+    pub healthy_ttft_p50_ns: f64,
+    pub handoffs: u64,
+    pub handoff_bytes: u64,
+    /// Healthy cell's (prefill pool, decode pool, handoffs started, bytes)
+    /// traffic matrix.
+    pub handoff_pairs: Vec<(u32, u32, u64, u64)>,
+    /// One inject → detect → mitigate row per applicable fleet condition
+    /// (DP + PD, catalog order).
+    pub rows: Vec<DpRow>,
+    /// Conditions whose rule is structurally inert on this topology (every
+    /// pool of its scope smaller than the catalog's `min_pool`) — reported
+    /// rather than run as guaranteed-negative triples.
+    pub skipped: Vec<Condition>,
+}
+
 /// Everything a fleet sweep produces.
 #[derive(Debug)]
 pub struct FleetReport {
@@ -382,6 +595,9 @@ pub struct FleetReport {
     pub dp_rows: Vec<DpRow>,
     /// The phase-disaggregation section (`--disagg`; bumps JSON to v2).
     pub disagg: Option<DisaggReport>,
+    /// The multi-pool section (`--prefill-pools`/`--decode-pools`; bumps
+    /// the JSON to v3).
+    pub multipool: Option<MultiPoolReport>,
     pub cells_run: usize,
     pub threads_used: usize,
     /// Wall-clock of the parallel cell sweep, ms. Perf metadata: reported
@@ -414,7 +630,12 @@ pub fn run_fleet(fc: &FleetConfig) -> FleetReport {
     // The DP triples only need scalar outcomes; the policy rows take the
     // per-replica vectors by move (no re-clone of worker results).
     let mut dp_outcomes = outcomes.split_off(n_pol);
-    let disagg_outcomes = dp_outcomes.split_off(3 * DP_CONDITIONS.len());
+    let mut disagg_outcomes = dp_outcomes.split_off(3 * DP_CONDITIONS.len());
+    let mp_outcomes = if fc.disagg {
+        disagg_outcomes.split_off(2 + 3 * PD_CONDITIONS.len())
+    } else {
+        std::mem::take(&mut disagg_outcomes)
+    };
     let policy_rows: Vec<PolicyRow> = fc
         .policies
         .iter()
@@ -436,6 +657,7 @@ pub fn run_fleet(fc: &FleetConfig) -> FleetReport {
 
     let dp_rows = condition_rows(&dp_outcomes, &DP_CONDITIONS);
     let disagg = if fc.disagg { Some(disagg_report_from(&disagg_outcomes)) } else { None };
+    let multipool = fc.multipool.map(|mp| multipool_report_from(&mp, &mp_outcomes));
 
     FleetReport {
         replicas: fc.replicas,
@@ -443,6 +665,7 @@ pub fn run_fleet(fc: &FleetConfig) -> FleetReport {
         policy_rows,
         dp_rows,
         disagg,
+        multipool,
         cells_run: cell_list.len(),
         threads_used,
         elapsed_ms,
@@ -450,38 +673,47 @@ pub fn run_fleet(fc: &FleetConfig) -> FleetReport {
     }
 }
 
-/// Fold healthy/injected/mitigated triples into condition rows. Each triple
-/// runs the SAME shaped config, so the healthy cell is a like-for-like
-/// recovery baseline.
+/// Fold one healthy/injected/mitigated triple into a condition row. The
+/// triple runs the SAME shaped config, so the healthy cell is a
+/// like-for-like recovery baseline.
+fn condition_row(
+    c: Condition,
+    healthy: &CellOutcome,
+    inj: &CellOutcome,
+    mit: &CellOutcome,
+) -> DpRow {
+    let recovery = if healthy.tok_per_s - inj.tok_per_s < 1e-9 {
+        Some(1.0)
+    } else {
+        Some(
+            ((mit.tok_per_s - inj.tok_per_s) / (healthy.tok_per_s - inj.tok_per_s))
+                .clamp(0.0, 1.5),
+        )
+    };
+    DpRow {
+        condition: c,
+        detected: inj.detected,
+        latency_ns: inj.latency_ns,
+        healthy_tok_per_s: healthy.tok_per_s,
+        injected_tok_per_s: inj.tok_per_s,
+        mitigated_tok_per_s: mit.tok_per_s,
+        recovery,
+        injected_token_skew: inj.token_skew,
+        mitigated_token_skew: mit.token_skew,
+        actions: mit.actions,
+    }
+}
+
+/// Fold back-to-back triples into condition rows.
 fn condition_rows(outcomes: &[CellOutcome], conds: &[Condition]) -> Vec<DpRow> {
     assert_eq!(outcomes.len(), 3 * conds.len());
-    let mut rows = Vec::with_capacity(conds.len());
-    for (k, &c) in conds.iter().enumerate() {
-        let healthy = &outcomes[3 * k];
-        let inj = &outcomes[3 * k + 1];
-        let mit = &outcomes[3 * k + 2];
-        let recovery = if healthy.tok_per_s - inj.tok_per_s < 1e-9 {
-            Some(1.0)
-        } else {
-            Some(
-                ((mit.tok_per_s - inj.tok_per_s) / (healthy.tok_per_s - inj.tok_per_s))
-                    .clamp(0.0, 1.5),
-            )
-        };
-        rows.push(DpRow {
-            condition: c,
-            detected: inj.detected,
-            latency_ns: inj.latency_ns,
-            healthy_tok_per_s: healthy.tok_per_s,
-            injected_tok_per_s: inj.tok_per_s,
-            mitigated_tok_per_s: mit.tok_per_s,
-            recovery,
-            injected_token_skew: inj.token_skew,
-            mitigated_token_skew: mit.token_skew,
-            actions: mit.actions,
-        });
-    }
-    rows
+    conds
+        .iter()
+        .enumerate()
+        .map(|(k, &c)| {
+            condition_row(c, &outcomes[3 * k], &outcomes[3 * k + 1], &outcomes[3 * k + 2])
+        })
+        .collect()
 }
 
 /// Aggregate the disagg block (twin, healthy, then the PD triples) into a
@@ -510,6 +742,54 @@ pub fn run_disagg_study(threads: usize) -> DisaggReport {
     let cell_list = disagg_cells();
     let outcomes = parallel_map(&cell_list, threads, |&cell| run_cell(&fc, cell));
     disagg_report_from(&outcomes)
+}
+
+/// Aggregate the multi-pool block (topology cell, then the applicable
+/// condition triples — unshaped non-DP triples reuse the topology cell as
+/// their healthy reference) into a [`MultiPoolReport`].
+fn multipool_report_from(mp: &MultiPoolSpec, outcomes: &[CellOutcome]) -> MultiPoolReport {
+    let (run, skipped) = multipool_conditions(mp);
+    let topo = &outcomes[0];
+    let mut rows = Vec::with_capacity(run.len());
+    let mut it = outcomes[1..].iter();
+    for c in run {
+        let healthy = if mp_has_dedicated_healthy(c) {
+            it.next().expect("missing healthy cell")
+        } else {
+            topo
+        };
+        let inj = it.next().expect("missing injected cell");
+        let mit = it.next().expect("missing mitigated cell");
+        rows.push(condition_row(c, healthy, inj, mit));
+    }
+    assert!(it.next().is_none(), "unconsumed multipool outcomes");
+    let shapes = multipool_shapes(mp);
+    let pools = multipool_pools(mp);
+    MultiPoolReport {
+        replicas: mp.replicas,
+        prefill_pool_count: pools.prefill_pools.len(),
+        decode_pool_count: pools.decode_pools.len(),
+        topology: shapes.iter().map(|s| s.label()).collect(),
+        prefill_pools: pools.prefill_pools,
+        decode_pools: pools.decode_pools,
+        healthy_tok_per_s: topo.tok_per_s,
+        healthy_ttft_p50_ns: topo.ttft_p50_ns,
+        handoffs: topo.handoffs,
+        handoff_bytes: topo.handoff_bytes,
+        handoff_pairs: topo.handoff_pairs.clone(),
+        rows,
+        skipped,
+    }
+}
+
+/// Run only the multi-pool study (the v3 block without the v1/v2 cells) —
+/// the multipool acceptance suite's entrypoint.
+pub fn run_multipool_study(mp: MultiPoolSpec, threads: usize) -> MultiPoolReport {
+    let mut fc = FleetConfig::new(2);
+    fc.multipool = Some(mp);
+    let cell_list = multipool_cells(&mp);
+    let outcomes = parallel_map(&cell_list, threads, |&cell| run_cell(&fc, cell));
+    multipool_report_from(&mp, &outcomes)
 }
 
 impl FleetReport {
@@ -561,6 +841,9 @@ impl FleetReport {
         if let Some(disagg) = &self.disagg {
             out.push_str(&disagg.render_tables());
         }
+        if let Some(mp) = &self.multipool {
+            out.push_str(&mp.render_tables());
+        }
         out
     }
 
@@ -583,6 +866,15 @@ impl FleetReport {
                 "; PD conditions detected {pd}/{} on the 2-pool topology ({} handoffs)",
                 d.pd_rows.len(),
                 d.handoffs
+            ));
+        }
+        if let Some(m) = &self.multipool {
+            let det = m.rows.iter().filter(|r| r.detected).count();
+            s.push_str(&format!(
+                "; multi-pool {}x{} study detected {det}/{} fleet conditions",
+                m.prefill_pool_count,
+                m.decode_pool_count,
+                m.rows.len()
             ));
         }
         if let Some(b) = best {
@@ -627,7 +919,13 @@ impl FleetReport {
             );
         }
         let dp = condition_rows_json(&self.dp_rows);
-        let schema = if self.disagg.is_some() { "dpulens.fleet.v2" } else { "dpulens.fleet.v1" };
+        let schema = if self.multipool.is_some() {
+            "dpulens.fleet.v3"
+        } else if self.disagg.is_some() {
+            "dpulens.fleet.v2"
+        } else {
+            "dpulens.fleet.v1"
+        };
         let mut out = Json::obj()
             .set("schema", schema)
             .set("replicas", self.replicas)
@@ -636,6 +934,9 @@ impl FleetReport {
             .set("dp_conditions", dp);
         if let Some(d) = &self.disagg {
             out = out.set("disagg", d.to_json());
+        }
+        if let Some(m) = &self.multipool {
+            out = out.set("multipool", m.to_json());
         }
         out
     }
@@ -723,6 +1024,117 @@ impl DisaggReport {
     }
 }
 
+impl MultiPoolReport {
+    /// The deterministic `multipool` JSON section of `dpulens.fleet.v3`.
+    pub fn to_json(&self) -> Json {
+        let mut topo = Json::arr();
+        for label in &self.topology {
+            topo.push(label.as_str());
+        }
+        let pools_json = |pools: &[Vec<usize>]| {
+            let mut arr = Json::arr();
+            for p in pools {
+                let mut inner = Json::arr();
+                for &r in p {
+                    inner.push(r as i64);
+                }
+                arr.push(inner);
+            }
+            arr
+        };
+        let mut pairs = Json::arr();
+        for &(p, d, started, bytes) in &self.handoff_pairs {
+            pairs.push(
+                Json::obj()
+                    .set("prefill_pool", p as i64)
+                    .set("decode_pool", d as i64)
+                    .set("handoffs", started)
+                    .set("bytes", bytes),
+            );
+        }
+        Json::obj()
+            .set("replicas", self.replicas)
+            .set("prefill_pool_count", self.prefill_pool_count)
+            .set("decode_pool_count", self.decode_pool_count)
+            .set("topology", topo)
+            .set("prefill_pools", pools_json(&self.prefill_pools))
+            .set("decode_pools", pools_json(&self.decode_pools))
+            .set("healthy_tok_per_s", self.healthy_tok_per_s)
+            .set("healthy_ttft_p50_ns", self.healthy_ttft_p50_ns)
+            .set("handoffs", self.handoffs)
+            .set("handoff_bytes", self.handoff_bytes)
+            .set("handoff_pairs", pairs)
+            .set("conditions", condition_rows_json(&self.rows))
+            .set("skipped", {
+                let mut arr = Json::arr();
+                for c in &self.skipped {
+                    arr.push(c.id());
+                }
+                arr
+            })
+    }
+
+    /// Paper-style tables for the multi-pool study.
+    pub fn render_tables(&self) -> String {
+        let mut t = Table::new(&format!(
+            "Multi-pool fleet — {} replicas, {} prefill x {} decode pools",
+            self.replicas, self.prefill_pool_count, self.decode_pool_count
+        ))
+        .header(&["section", "value"]);
+        t.row(vec!["topology".into(), self.topology.join(", ")]);
+        t.row(vec![
+            "prefill pools".into(),
+            format!("{:?}", self.prefill_pools),
+        ]);
+        t.row(vec!["decode pools".into(), format!("{:?}", self.decode_pools)]);
+        t.row(vec![
+            "healthy tok/s".into(),
+            format!(
+                "{:.0} (ttft p50 {})",
+                self.healthy_tok_per_s,
+                fmt_ns(self.healthy_ttft_p50_ns)
+            ),
+        ]);
+        t.row(vec![
+            "handoffs".into(),
+            format!("{} ({:.1} MB)", self.handoffs, self.handoff_bytes as f64 / 1e6),
+        ]);
+        for &(p, d, n, bytes) in &self.handoff_pairs {
+            t.row(vec![
+                format!("pool pair P{p}->D{d}"),
+                format!("{n} handoffs, {:.1} MB", bytes as f64 / 1e6),
+            ]);
+        }
+        if !self.skipped.is_empty() {
+            t.row(vec![
+                "skipped (inert on topology)".into(),
+                self.skipped.iter().map(|c| c.id()).collect::<Vec<_>>().join(", "),
+            ]);
+        }
+        let mut out = t.render();
+        let mut c =
+            Table::new("Fleet conditions on the multi-pool topology — inject, detect, mitigate")
+                .header(&[
+                    "id", "detected", "latency", "healthy tok/s", "injected", "mitigated",
+                    "recovered", "actions",
+                ]);
+        for r in &self.rows {
+            c.row(vec![
+                r.condition.id().to_string(),
+                if r.detected { "yes".into() } else { "NO".into() },
+                r.latency_ns.map(|n| fmt_ns(n as f64)).unwrap_or_else(|| "-".into()),
+                format!("{:.0}", r.healthy_tok_per_s),
+                format!("{:.0}", r.injected_tok_per_s),
+                format!("{:.0}", r.mitigated_tok_per_s),
+                r.recovery.map(|f| format!("{:.0}%", f * 100.0)).unwrap_or_else(|| "-".into()),
+                format!("{}", r.actions),
+            ]);
+        }
+        out.push_str(&c.render());
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -797,6 +1209,105 @@ mod tests {
         for cell in disagg_cells() {
             assert_eq!(cell_cfg(&fc, cell).seed, 777, "{cell:?} ignored the sweep seed");
         }
+    }
+
+    #[test]
+    fn multipool_cfg_shapes_an_arbitrary_topology() {
+        let mp = MultiPoolSpec { replicas: 6, prefill_pools: 2, decode_pools: 1 };
+        let cfg = multipool_base_cfg(&mp);
+        cfg.cluster.validate().unwrap();
+        assert_eq!(cfg.cluster.n_nodes, 6);
+        let shapes = cfg.engine.shapes.as_ref().unwrap();
+        assert_eq!(shapes.len(), 6);
+        assert_eq!(shapes.iter().filter(|s| s.role == ReplicaRole::Prefill).count(), 2);
+        assert_eq!(shapes.iter().filter(|s| s.role == ReplicaRole::Decode).count(), 4);
+        assert_eq!(cfg.engine.prefill_pools, 2);
+        assert_eq!(cfg.victim_replica, 5);
+        let plans = crate::engine::build_shaped_replicas(&cfg.cluster, shapes);
+        assert_eq!(plans.len(), 6);
+        // Larger fleets scale the node budget one-to-one.
+        let big = multipool_base_cfg(&MultiPoolSpec {
+            replicas: 9,
+            prefill_pools: 3,
+            decode_pools: 2,
+        });
+        big.cluster.validate().unwrap();
+        assert_eq!(big.cluster.n_nodes, 9);
+        assert_eq!(big.engine.shapes.as_ref().unwrap().len(), 9);
+    }
+
+    #[test]
+    fn multipool_cells_are_catalog_driven_triples() {
+        let conds = fleet_conditions();
+        assert_eq!(
+            conds,
+            DP_CONDITIONS.iter().chain(PD_CONDITIONS.iter()).copied().collect::<Vec<_>>()
+        );
+        let mp = MultiPoolSpec { replicas: 6, prefill_pools: 2, decode_pools: 1 };
+        mp.validate().unwrap();
+        // On 6/2x1 the prefill pools are singletons, so DP1's peer-skew
+        // rule is structurally inert: skipped (reported), never simulated.
+        let (run, skipped) = multipool_conditions(&mp);
+        assert_eq!(skipped, vec![Condition::Dp1RouterFlowSkew]);
+        assert_eq!(run.len(), 5);
+        let v = multipool_cells(&mp);
+        // Topology cell + 3 cells per self-shaping triple (DP3, PD3) + 2
+        // per topology-shaped triple (DP2, PD1, PD2 reuse the topology
+        // cell as their healthy reference).
+        assert_eq!(v.len(), 1 + 3 * 2 + 2 * 3);
+        assert_eq!(v[0], FleetCell::MpTopology);
+        assert_eq!(v[1], FleetCell::MpInjected(Condition::Dp2HotReplicaKv));
+        let mut fc = FleetConfig::new(6);
+        fc.multipool = Some(mp);
+        // DP2's would-be healthy cell IS the topology cell: identical
+        // routing policy (affinity default) and workload.
+        let topo = cell_cfg(&fc, FleetCell::MpTopology);
+        let dp2h = cell_cfg(&fc, FleetCell::MpHealthy(Condition::Dp2HotReplicaKv));
+        assert_eq!(topo.engine.route_policy, dp2h.engine.route_policy);
+        assert_eq!(topo.duration, dp2h.duration);
+        // Triples share shaping; only inject/mitigate differ — and the v3
+        // block rides behind the v1 (+ optional v2) cells in the sweep.
+        let all = cells(&fc);
+        assert_eq!(all.len(), fc.policies.len() + 3 * DP_CONDITIONS.len() + v.len());
+        let base = fc.policies.len() + 3 * DP_CONDITIONS.len();
+        assert_eq!(all[base], FleetCell::MpTopology);
+        let healthy = cell_cfg(&fc, FleetCell::MpHealthy(Condition::Dp3StragglerReplica));
+        let inj = cell_cfg(&fc, FleetCell::MpInjected(Condition::Dp3StragglerReplica));
+        let mit = cell_cfg(&fc, FleetCell::MpMitigated(Condition::Dp3StragglerReplica));
+        assert!(healthy.inject.is_none() && !healthy.mitigate);
+        assert!(inj.inject.is_some() && !inj.mitigate);
+        assert!(mit.inject.is_some() && mit.mitigate);
+        assert_eq!(healthy.duration, inj.duration);
+        // DP cells ride the affinity baseline; catalog shaping scales DP3's
+        // demand 2x over the topology cell.
+        assert_eq!(inj.engine.route_policy, RoutePolicy::FlowHash);
+        if let (
+            crate::sim::dist::Arrival::Poisson { rate: topo_rate },
+            crate::sim::dist::Arrival::Poisson { rate: dp3 },
+        ) = (topo.workload.arrival, inj.workload.arrival)
+        {
+            assert!((dp3 - 2.0 * topo_rate).abs() < 1e-6, "{dp3} vs {topo_rate}");
+        } else {
+            panic!("multipool cells must use Poisson arrivals");
+        }
+        // A wider prefill tier (12 replicas: 4 prefill split into 2 pools
+        // of 2) makes DP1's pools peer-capable: nothing skipped.
+        let wide = MultiPoolSpec { replicas: 12, prefill_pools: 2, decode_pools: 2 };
+        let (run, skipped) = multipool_conditions(&wide);
+        assert!(skipped.is_empty(), "{skipped:?}");
+        assert_eq!(run.len(), 6);
+        // The sweep's seed reaches every multipool cell.
+        fc.base.seed = 909;
+        for cell in multipool_cells(&mp) {
+            assert_eq!(cell_cfg(&fc, cell).seed, 909, "{cell:?} ignored the sweep seed");
+        }
+        // Invalid topologies are rejected before any cell runs.
+        assert!(MultiPoolSpec { replicas: 4, prefill_pools: 1, decode_pools: 3 }
+            .validate()
+            .is_err());
+        assert!(MultiPoolSpec { replicas: 2, prefill_pools: 2, decode_pools: 1 }
+            .validate()
+            .is_err());
     }
 
     #[test]

@@ -41,6 +41,13 @@ impl Scenario {
         }
         self.handoff_stats.started += 1;
         self.handoff_stats.bytes_sent += bytes;
+        // Pool-pair accounting: which admission pool fed which handoff pool.
+        if let (Some(p), Some(d)) = (
+            self.engine.pools().prefill_pool_of(from_replica),
+            self.engine.pools().decode_pool_of(to),
+        ) {
+            self.handoff_stats.record_pair(p, d, bytes);
+        }
         let src = self.exit_node(from_replica);
         let dst = self.entry_node(to);
         let coll = self.handoff_colls.next();

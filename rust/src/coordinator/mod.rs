@@ -31,9 +31,12 @@ pub mod scenario;
 pub mod world;
 
 pub use experiment::{condition_experiment, ConditionReport};
-pub use fleet::{run_disagg_study, run_fleet, DisaggReport, FleetConfig, FleetReport};
+pub use fleet::{
+    run_disagg_study, run_fleet, run_multipool_study, DisaggReport, FleetConfig, FleetReport,
+    MultiPoolReport, MultiPoolSpec,
+};
 pub use ingress::target_node_for;
 pub use matrix::{run_matrix, run_sweep, MatrixConfig, MatrixReport};
 pub use perf::{run_perf, PerfConfig, PerfReport};
 pub use scenario::{RunResult, Scenario, ScenarioCfg};
-pub use world::HandoffStats;
+pub use world::{HandoffStats, PairFlow};

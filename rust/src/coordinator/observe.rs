@@ -73,7 +73,7 @@ impl Scenario {
         if !self.dpu.is_calibrating() {
             // Mitigation may have shifted replica roles since the last
             // window; skew is judged against the *current* pools.
-            self.fleet.sync_pools(&self.engine.roles());
+            self.fleet.sync_pools(self.engine.pools());
             let sample = FleetSample {
                 routed: self.engine.router.routed_per_replica().to_vec(),
                 queue_depth: queue_depth.clone(),

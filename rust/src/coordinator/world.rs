@@ -58,6 +58,45 @@ pub struct HandoffStats {
     /// Arrivals that could not be adopted immediately (decode admission
     /// full) and were parked on the wait queue.
     pub stalled_waits: u64,
+    /// Per (prefill pool, decode pool) launch accounting — the pool-pair
+    /// traffic matrix of a multi-pool plane (one all-zero row on colocated
+    /// and classic 2-pool fleets until handoffs flow).
+    pub per_pair: Vec<PairFlow>,
+}
+
+/// One pool pair's handoff volume (counted at launch, like `started` /
+/// `bytes_sent`; the pair's share of the global conservation identity).
+#[derive(Debug, Default, Clone)]
+pub struct PairFlow {
+    pub prefill_pool: u32,
+    pub decode_pool: u32,
+    pub started: u64,
+    pub bytes_sent: u64,
+}
+
+impl HandoffStats {
+    /// Record one launched handoff on the (p, d) pool pair.
+    pub(crate) fn record_pair(&mut self, p: usize, d: usize, bytes: u64) {
+        let (p, d) = (p as u32, d as u32);
+        match self
+            .per_pair
+            .iter_mut()
+            .find(|e| e.prefill_pool == p && e.decode_pool == d)
+        {
+            Some(e) => {
+                e.started += 1;
+                e.bytes_sent += bytes;
+            }
+            // A role shift can mint a pool pair that didn't exist at
+            // construction; append it (deterministic first-launch order).
+            None => self.per_pair.push(PairFlow {
+                prefill_pool: p,
+                decode_pool: d,
+                started: 1,
+                bytes_sent: bytes,
+            }),
+        }
+    }
 }
 
 /// An iteration in flight on one replica.
@@ -125,7 +164,12 @@ impl Scenario {
             sw_suite: SwSuite::new(),
             sw_window: SwWindow::new(),
             controller: crate::mitigation::Controller::new(cfg.mitigate),
-            fleet: FleetSensor::new(n_rep, entry_nodes, engine.roles(), cfg.cluster.nic_bw),
+            fleet: FleetSensor::with_pools(
+                n_rep,
+                entry_nodes,
+                engine.pools().clone(),
+                cfg.cluster.nic_bw,
+            ),
             bus: TelemetryBus::new(cfg.cluster.n_nodes),
             cal: Calendar::new(),
             gen,
@@ -145,6 +189,21 @@ impl Scenario {
             handoff_colls: CollSeq::default(),
             handoff_stats: HandoffStats {
                 arrivals_per_replica: vec![0; n_rep],
+                // Pre-populate the pool-pair matrix so the healthy report
+                // shows every pair (including zero-traffic ones) in a
+                // deterministic order.
+                per_pair: {
+                    let pools = engine.pools();
+                    (0..pools.prefill_pools.len())
+                        .flat_map(|p| {
+                            (0..pools.decode_pools.len()).map(move |d| PairFlow {
+                                prefill_pool: p as u32,
+                                decode_pool: d as u32,
+                                ..Default::default()
+                            })
+                        })
+                        .collect()
+                },
                 ..Default::default()
             },
             engine,

@@ -36,37 +36,17 @@ pub struct Attribution {
     pub evidence: String,
 }
 
+/// A detection's default verdict comes from its catalog entry (the
+/// `cause` mapping of [`crate::conditions::ConditionSpec`]) — no
+/// per-condition arms live here.
 fn default_cause(c: Condition, node: NodeId) -> RootCause {
-    use Condition::*;
-    match c {
-        // Host-local PCIe/CPU/memory problems.
-        Pc1H2dStarvation | Pc2D2hBottleneck | Pc3LaunchLatency | Pc5PcieSaturation
-        | Pc6P2pThrottling | Pc7PinnedShortage | Pc8HostCpuBottleneck | Pc9RegistrationChurn => {
-            RootCause::HostLocal(node)
-        }
-        // GPU-side stragglers.
-        Pc4IntraNodeSkew => RootCause::GpuSide(node),
-        // Network path.
-        Ns4IngressRetx | Ns5EgressBacklog | Ns6EgressJitter | Ns7EgressRetx
-        | Ns9BandwidthSaturation | Ew4Congestion | Ew5HolBlocking | Ew6Retransmissions
-        | Ew7CreditStarvation | Ew8KvBottleneck => RootCause::NetworkSide,
-        // Workload shape.
-        Ns8EarlyCompletion | Pc10DecodeEarlyStop | Ew9EarlyStopSkew => RootCause::WorkloadShape,
-        // Client-side arrival patterns.
-        Ns1BurstBacklog | Ns2IngressStarvation | Ns3FlowSkew => RootCause::ClientSide,
-        // Cross-node compute imbalance: attribute to the straggling side if
-        // corroborated, else network-visible compute skew.
-        Ew1TpStraggler | Ew2PpBubble | Ew3CrossNodeSkew => RootCause::GpuSide(node),
-        // Data-parallel fleet family: DP1 is the load balancer's hashing
-        // (network infrastructure); DP2/DP3 localize to the hot/slow replica.
-        Dp1RouterFlowSkew => RootCause::NetworkSide,
-        Dp2HotReplicaKv | Dp3StragglerReplica => RootCause::GpuSide(node),
-        // Phase-disaggregation family: PD1 is demand-vs-pool-sizing (the
-        // clients' prompt mix overran the prefill pool); PD2/PD3 are the
-        // handoff path/routing — network infrastructure between pools.
-        Pd1PrefillSaturation => RootCause::ClientSide,
-        Pd2KvHandoffStall | Pd3DecodeStarvation => RootCause::NetworkSide,
-    }
+    (crate::conditions::spec(c).cause)(node)
+}
+
+/// §4.2's refinement class: cross-node compute-skew conditions (EW1-EW3),
+/// tagged in the catalog, which PCIe-vantage evidence localizes.
+fn is_compute_skew(c: Condition) -> bool {
+    crate::conditions::spec(c).compute_skew
 }
 
 /// Attribute a window's detections. The refinement rules implement §4.2:
@@ -84,15 +64,8 @@ pub fn attribute(detections: &[Detection]) -> Vec<Attribution> {
         by_node.entry(d.node).or_default().push(d);
     }
 
-    let ew_compute: Vec<&Detection> = detections
-        .iter()
-        .filter(|d| {
-            matches!(
-                d.condition,
-                Condition::Ew1TpStraggler | Condition::Ew2PpBubble | Condition::Ew3CrossNodeSkew
-            )
-        })
-        .collect();
+    let ew_compute: Vec<&Detection> =
+        detections.iter().filter(|d| is_compute_skew(d.condition)).collect();
     let pcie_nodes: Vec<NodeId> = detections
         .iter()
         .filter(|d| d.condition.table() == "3b")
@@ -132,12 +105,7 @@ pub fn attribute(detections: &[Detection]) -> Vec<Attribution> {
     // Remaining detections get their default attribution, grouped by cause.
     let mut grouped: BTreeMap<String, Attribution> = BTreeMap::new();
     for d in detections {
-        if !ew_compute.is_empty()
-            && matches!(
-                d.condition,
-                Condition::Ew1TpStraggler | Condition::Ew2PpBubble | Condition::Ew3CrossNodeSkew
-            )
-        {
+        if !ew_compute.is_empty() && is_compute_skew(d.condition) {
             continue; // already covered by the refined verdict
         }
         let cause = default_cause(d.condition, d.node);

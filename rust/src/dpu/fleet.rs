@@ -1,43 +1,39 @@
 //! Fleet-level (cross-replica) skew sensing from the router/LB vantage —
-//! the data-parallel condition family DP1-DP3 and the phase-disaggregation
-//! family PD1-PD3.
+//! the generic streak-confirmation engine behind the data-parallel (DP1-DP3)
+//! and phase-disaggregation (PD1-PD3) condition families.
 //!
 //! A DPU sitting bump-in-the-wire in front of the load balancer sees
 //! per-replica flow volume, queue drain, and admission behavior even when
-//! intra-replica traffic (NVLink collectives) is invisible to it. This
-//! sensor encodes the three fleet signatures:
+//! intra-replica traffic (NVLink collectives) is invisible to it.
 //!
-//! * **DP1 — router flow skew**: one replica's share of routed arrivals far
-//!   exceeds the hash-fair share over a sliding horizon.
-//! * **DP2 — hot-replica KV exhaustion**: one replica's KV occupancy pins
-//!   near capacity with admission failures while peers sit far below it.
-//! * **DP3 — straggler replica**: one replica's backlog dominates the fleet
-//!   while its iteration rate lags the peers that are keeping up.
+//! The per-condition knowledge (thresholds, confirmation windows, evidence)
+//! does NOT live here: each fleet condition's rule is declared in its
+//! [`crate::conditions`] catalog entry (`DetectorBinding::FleetDp` /
+//! `FleetPd`), and this sensor is a data-driven evaluator — it feeds each
+//! rule a windowed view of the horizon, scoped to one pool at a time, and
+//! turns consecutive confirming windows into [`Detection`]s. Adding a fleet
+//! condition is a catalog change; the sensor never grows another arm.
 //!
-//! Skew is only defined among *like* replicas, so every DP comparison is
-//! scoped to a pool: on colocated fleets that is all replicas (the classic
-//! behavior, byte for byte), on phase-disaggregated fleets DP1 compares
-//! prefill-pool members and DP2/DP3 decode-pool members — a prefill replica
-//! legitimately absorbing 100% of admissions must not read as flow skew.
-//!
-//! Disaggregated fleets additionally expose the pool boundary itself as
-//! network traffic (the KV handoff), which the PD family watches:
-//!
-//! * **PD1 — prefill-pool saturation**: admission backlog accumulates across
-//!   the prefill pool while the decode pool sits far below slot capacity.
-//! * **PD2 — KV-handoff stall**: the phase-transition transfer's fabric
-//!   latency blows past its line-rate expectation.
-//! * **PD3 — decode-pool starvation**: handoff arrivals concentrate on one
-//!   decode replica while its pool peers starve.
+//! Skew is only defined among *like* replicas, so every comparison is
+//! scoped to a pool ([`crate::engine::PoolTopology`]): on colocated fleets
+//! that is all replicas (the classic behavior, byte for byte), on
+//! phase-disaggregated fleets DP1 compares prefill-pool members and DP2/DP3
+//! decode-pool members — a prefill replica legitimately absorbing 100% of
+//! admissions must not read as flow skew. Multi-pool topologies (K prefill
+//! pools × M decode pools) evaluate per-pool rules once per pool, each with
+//! its own confirmation streak, and `PerPrefillPool` rules see their paired
+//! decode pool (pool `p` pairs with `p % M`) as the counterpart.
 //!
 //! The sensor is inert on single-replica worlds (skew across replicas is
-//! undefined there), which keeps the paper's 28-condition matrix byte-stable;
-//! PD sensing is inert on colocated fleets for the same reason.
+//! undefined there), which keeps the paper's 28-condition matrix
+//! byte-stable; PD sensing is inert on colocated fleets for the same reason.
 
 use std::collections::VecDeque;
 
 use crate::cluster::ReplicaRole;
+use crate::conditions::{DetectorBinding, FleetScope};
 use crate::dpu::detectors::{Condition, Detection};
+use crate::engine::PoolTopology;
 use crate::ids::NodeId;
 use crate::sim::SimTime;
 
@@ -58,7 +54,7 @@ pub struct FleetSample {
 }
 
 /// One window's phase-disaggregation observation (pool-boundary vantage).
-/// Vectors are globally indexed (length = fleet size); the sensor reads the
+/// Vectors are globally indexed (length = fleet size); the rules read the
 /// pool-relevant entries. Counter fields are cumulative.
 #[derive(Debug, Clone)]
 pub struct PdSample {
@@ -84,40 +80,58 @@ pub struct PdSample {
 
 /// Windows of history the horizon skew metrics integrate over.
 const HORIZON: usize = 40;
-/// Minimum arrivals across the horizon before flow-share skew is judged.
-const MIN_ARRIVALS: u64 = 32;
-/// Consecutive confirmations required per condition.
-const CONFIRM_DP1: u32 = 3;
-const CONFIRM_DP2: u32 = 2;
-const CONFIRM_DP3: u32 = 2;
-/// DP2: hot-replica occupancy floor and hot-cold disparity floor.
-const KV_HOT_OCC: f64 = 0.85;
-const KV_DISPARITY: f64 = 0.3;
-/// DP3: backlog dominance + lagging iteration rate.
-const STRAGGLER_MIN_QUEUE: u64 = 10;
-const STRAGGLER_QUEUE_FACTOR: f64 = 5.0;
-const STRAGGLER_ITER_RATIO: f64 = 0.8;
-/// PD1: prefill-pool backlog floor and the decode-utilization ceiling that
-/// distinguishes "prefill starves decode" from "everything is busy".
-const PD1_MIN_QUEUE: u64 = 24;
-const PD1_DECODE_UTIL_MAX: f64 = 0.5;
-const CONFIRM_PD1: u32 = 3;
-/// PD2: observed-over-expected handoff latency ratio + a minimum population
-/// over the horizon so a few straggling transfers can't fire it. The
-/// in-flight floor catches the degenerate total stall, where so few
-/// transfers land that no latency sample exists at all.
-const PD2_LAT_FACTOR: f64 = 3.0;
-const PD2_MIN_HANDOFFS: u64 = 4;
-const PD2_STALL_INFLIGHT: u64 = 12;
-const CONFIRM_PD2: u32 = 2;
-/// PD3: handoff-share margin over the fair share (mirrors DP1's margin).
-const PD3_SHARE_MARGIN: f64 = 0.35;
-const PD3_MIN_ARRIVALS: u64 = 24;
-const CONFIRM_PD3: u32 = 3;
-/// Hops a handoff traverses (uplink → core → downlink) for the line-rate
-/// latency expectation, plus a fixed base allowance.
-const PD2_PATH_HOPS: f64 = 3.0;
-const PD2_BASE_ALLOWANCE_NS: f64 = 10_000.0;
+
+/// What a DP rule sees for one (window, pool) evaluation: the scoped pool
+/// and the horizon endpoints of the serving sample ring.
+pub struct DpCtx<'a> {
+    /// The pool under judgment (global replica indices).
+    pub pool: &'a [usize],
+    pub cur: &'a FleetSample,
+    pub old: &'a FleetSample,
+    pub prev: Option<&'a FleetSample>,
+}
+
+/// What a PD rule sees: the scoped pool, its counterpart pool (a
+/// `PerPrefillPool` rule's paired decode pool; the prefill union otherwise),
+/// the pool-boundary sample ring, and the NIC line rate for line-rate
+/// latency expectations.
+pub struct PdCtx<'a> {
+    pub pool: &'a [usize],
+    pub other_pool: &'a [usize],
+    pub cur: &'a PdSample,
+    pub old: &'a PdSample,
+    pub prev: Option<&'a PdSample>,
+    /// NIC line rate, bytes/sec.
+    pub nic_bw: f64,
+}
+
+/// A rule's confirming observation for one window: which replica it
+/// localizes to (resolved to that replica's entry node) and the detection
+/// payload once the streak confirms.
+#[derive(Debug, Clone)]
+pub struct RuleHit {
+    pub replica: usize,
+    pub severity: f64,
+    pub evidence: String,
+}
+
+/// One catalog-declared DP rule, flattened for the evaluation loop.
+#[derive(Clone, Copy)]
+struct DpRule {
+    condition: Condition,
+    scope: FleetScope,
+    confirm: u32,
+    eval: fn(&DpCtx) -> Option<RuleHit>,
+}
+
+/// One catalog-declared PD rule.
+#[derive(Clone, Copy)]
+struct PdRule {
+    condition: Condition,
+    scope: FleetScope,
+    confirm: u32,
+    eval: fn(&PdCtx) -> Option<RuleHit>,
+}
 
 /// Cross-replica skew sensor (one per scenario, fed at window ticks).
 #[derive(Debug)]
@@ -125,86 +139,126 @@ pub struct FleetSensor {
     n_replicas: usize,
     /// Entry node per replica — the node a fleet detection is attributed to.
     entry_nodes: Vec<NodeId>,
-    /// Prefill-capable members (DP1's comparison pool).
-    prefill_members: Vec<usize>,
-    /// Decode-capable members (DP2/DP3's and PD3's comparison pool).
-    decode_members: Vec<usize>,
+    /// Pool partition every comparison is scoped to.
+    pools: PoolTopology,
     /// NIC line rate, bytes/sec — PD2's latency expectation reference.
     nic_bw: f64,
     history: VecDeque<FleetSample>,
     pd_history: VecDeque<PdSample>,
-    /// Consecutive-hit counters for DP1/DP2/DP3.
-    streaks: [u32; 3],
-    /// Consecutive-hit counters for PD1/PD2/PD3.
-    pd_streaks: [u32; 3],
+    dp_rules: Vec<DpRule>,
+    pd_rules: Vec<PdRule>,
+    /// Consecutive-hit counters, per rule × pool instance.
+    dp_streaks: Vec<Vec<u32>>,
+    pd_streaks: Vec<Vec<u32>>,
+}
+
+impl std::fmt::Debug for DpRule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "DpRule({:?})", self.condition)
+    }
+}
+
+impl std::fmt::Debug for PdRule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PdRule({:?})", self.condition)
+    }
+}
+
+/// How many pool instances a rule of `scope` evaluates against.
+fn n_instances(scope: FleetScope, pools: &PoolTopology) -> usize {
+    match scope {
+        FleetScope::PerPrefillPool => pools.prefill_pools.len(),
+        FleetScope::PerDecodePool => pools.decode_pools.len(),
+        FleetScope::DecodeUnion => 1,
+    }
 }
 
 impl FleetSensor {
-    /// `roles` scopes every skew comparison to its pool; a colocated fleet
-    /// (all `ReplicaRole::Colocated`) compares across the whole fleet,
-    /// exactly as the pre-disaggregation sensor did.
+    /// Classic constructor: `roles` scopes every comparison to the
+    /// single-pool partition (one prefill pool, one decode pool); a
+    /// colocated fleet compares across the whole fleet, exactly as the
+    /// pre-disaggregation sensor did.
     pub fn new(
         n_replicas: usize,
         entry_nodes: Vec<NodeId>,
         roles: Vec<ReplicaRole>,
         nic_bw: f64,
     ) -> Self {
-        assert_eq!(entry_nodes.len(), n_replicas);
         assert_eq!(roles.len(), n_replicas);
-        let prefill_members: Vec<usize> = (0..n_replicas)
-            .filter(|&r| roles[r].serves_prefill())
-            .collect();
-        let decode_members: Vec<usize> = (0..n_replicas)
-            .filter(|&r| roles[r].serves_decode())
-            .collect();
+        Self::with_pools(n_replicas, entry_nodes, PoolTopology::from_roles(&roles), nic_bw)
+    }
+
+    /// Multi-pool constructor: comparisons are scoped to the given pool
+    /// partition (the engine's [`PoolTopology`]).
+    pub fn with_pools(
+        n_replicas: usize,
+        entry_nodes: Vec<NodeId>,
+        pools: PoolTopology,
+        nic_bw: f64,
+    ) -> Self {
+        assert_eq!(entry_nodes.len(), n_replicas);
+        let mut dp_rules = Vec::new();
+        let mut pd_rules = Vec::new();
+        for spec in crate::conditions::all_specs() {
+            match spec.binding {
+                DetectorBinding::NodeWindow => {}
+                // `min_pool` is study-planning knowledge (which triples a
+                // topology can host); the rules themselves guard pool size.
+                DetectorBinding::FleetDp { scope, confirm, eval, .. } => {
+                    dp_rules.push(DpRule { condition: spec.condition, scope, confirm, eval });
+                }
+                DetectorBinding::FleetPd { scope, confirm, eval, .. } => {
+                    pd_rules.push(PdRule { condition: spec.condition, scope, confirm, eval });
+                }
+            }
+        }
+        let dp_streaks =
+            dp_rules.iter().map(|r| vec![0; n_instances(r.scope, &pools)]).collect();
+        let pd_streaks =
+            pd_rules.iter().map(|r| vec![0; n_instances(r.scope, &pools)]).collect();
         FleetSensor {
             n_replicas,
             entry_nodes,
-            prefill_members,
-            decode_members,
+            pools,
             nic_bw,
             history: VecDeque::with_capacity(HORIZON + 1),
             pd_history: VecDeque::with_capacity(HORIZON + 1),
-            streaks: [0; 3],
-            pd_streaks: [0; 3],
+            dp_rules,
+            pd_rules,
+            dp_streaks,
+            pd_streaks,
         }
     }
 
     /// Re-scope the pool comparisons after a role shift (`RebalancePools`
-    /// moves replicas between pools mid-run). No-op when membership is
+    /// moves replicas between pools mid-run). No-op when the partition is
     /// unchanged; on a change, confirmation streaks reset — half-confirmed
     /// skew against the old pools says nothing about the new ones, and a
     /// stale decode pool would read the post-mitigation 100% handoff share
     /// of the sole remaining decode replica as PD3.
-    pub fn sync_pools(&mut self, roles: &[ReplicaRole]) {
-        debug_assert_eq!(roles.len(), self.n_replicas);
-        let prefill: Vec<usize> =
-            (0..self.n_replicas).filter(|&r| roles[r].serves_prefill()).collect();
-        let decode: Vec<usize> =
-            (0..self.n_replicas).filter(|&r| roles[r].serves_decode()).collect();
-        if prefill != self.prefill_members || decode != self.decode_members {
-            self.prefill_members = prefill;
-            self.decode_members = decode;
-            self.streaks = [0; 3];
-            self.pd_streaks = [0; 3];
+    pub fn sync_pools(&mut self, pools: &PoolTopology) {
+        if *pools != self.pools {
+            self.pools = pools.clone();
+            self.dp_streaks = self
+                .dp_rules
+                .iter()
+                .map(|r| vec![0; n_instances(r.scope, &self.pools)])
+                .collect();
+            self.pd_streaks = self
+                .pd_rules
+                .iter()
+                .map(|r| vec![0; n_instances(r.scope, &self.pools)])
+                .collect();
         }
     }
 
-    /// DP1 fires when one replica's arrival share exceeds the hash-fair
-    /// share by an absolute margin. The margin (0.3) sits well above the
-    /// binomial noise of hashing the default 64-session population onto any
-    /// fleet size, while Zipf-concentrated floods land far past it.
-    fn share_threshold(n: usize) -> f64 {
-        (1.0 / n as f64 + 0.3).min(0.92)
-    }
-
-    /// Feed one window's sample; returns the fleet detections fired.
+    /// Feed one window's sample; returns the fleet detections fired, rule
+    /// (catalog) order then pool order.
     pub fn window_tick(&mut self, now: SimTime, sample: FleetSample) -> Vec<Detection> {
-        let n = self.n_replicas;
-        if n < 2 {
+        if self.n_replicas < 2 {
             return Vec::new();
         }
-        debug_assert_eq!(sample.routed.len(), n);
+        debug_assert_eq!(sample.routed.len(), self.n_replicas);
         self.history.push_back(sample);
         if self.history.len() > HORIZON + 1 {
             self.history.pop_front();
@@ -217,118 +271,31 @@ impl FleetSensor {
         let prev = if len >= 2 { Some(&self.history[len - 2]) } else { None };
         let mut fired = Vec::new();
 
-        // --- DP1: flow-share skew over the horizon (prefill pool) ---
-        let pool = &self.prefill_members;
-        let np = pool.len();
-        let mut dp1_hit = false;
-        if np >= 2 {
-            let arrivals: Vec<u64> =
-                pool.iter().map(|&r| cur.routed[r].saturating_sub(old.routed[r])).collect();
-            let total: u64 = arrivals.iter().sum();
-            if total >= MIN_ARRIVALS {
-                let hot_k = argmax_u64(&arrivals);
-                let hot = pool[hot_k];
-                let share = arrivals[hot_k] as f64 / total as f64;
-                let threshold = Self::share_threshold(np);
-                if share >= threshold {
-                    dp1_hit = true;
-                    self.streaks[0] += 1;
-                    if self.streaks[0] >= CONFIRM_DP1 {
-                        fired.push(Detection {
-                            condition: Condition::Dp1RouterFlowSkew,
-                            node: self.entry_nodes[hot],
-                            at: now,
-                            severity: share * np as f64,
-                            evidence: format!(
-                                "replica {hot} absorbs {:.0}% of {total} arrivals \
-                                 (fair share {:.0}%, threshold {:.0}%)",
-                                share * 100.0,
-                                100.0 / np as f64,
-                                threshold * 100.0
-                            ),
-                        });
+        for ri in 0..self.dp_rules.len() {
+            let rule = self.dp_rules[ri];
+            let pools: &[Vec<usize>] = match rule.scope {
+                FleetScope::PerPrefillPool => &self.pools.prefill_pools,
+                FleetScope::PerDecodePool => &self.pools.decode_pools,
+                FleetScope::DecodeUnion => std::slice::from_ref(&self.pools.decode_members),
+            };
+            for (pi, pool) in pools.iter().enumerate() {
+                match (rule.eval)(&DpCtx { pool: pool.as_slice(), cur, old, prev }) {
+                    Some(hit) => {
+                        self.dp_streaks[ri][pi] += 1;
+                        if self.dp_streaks[ri][pi] >= rule.confirm {
+                            fired.push(Detection {
+                                condition: rule.condition,
+                                node: self.entry_nodes[hit.replica],
+                                at: now,
+                                severity: hit.severity,
+                                evidence: hit.evidence,
+                            });
+                        }
                     }
+                    None => self.dp_streaks[ri][pi] = 0,
                 }
             }
         }
-        if !dp1_hit {
-            self.streaks[0] = 0;
-        }
-
-        // --- DP2: hot-replica KV exhaustion (decode pool, window-level) ---
-        let pool = &self.decode_members;
-        let nd = pool.len();
-        let mut dp2_hit = false;
-        if nd >= 2 {
-            if let Some(prev) = prev {
-                let hot = first_max_by(pool, |r| cur.kv_occupancy[r]);
-                let hot_occ = cur.kv_occupancy[hot];
-                let min_occ = pool
-                    .iter()
-                    .filter(|&&r| r != hot)
-                    .map(|&r| cur.kv_occupancy[r])
-                    .fold(f64::INFINITY, f64::min);
-                let failures = cur.alloc_failures[hot].saturating_sub(prev.alloc_failures[hot]);
-                if hot_occ >= KV_HOT_OCC && failures >= 1 && hot_occ - min_occ >= KV_DISPARITY {
-                    dp2_hit = true;
-                    self.streaks[1] += 1;
-                    if self.streaks[1] >= CONFIRM_DP2 {
-                        fired.push(Detection {
-                            condition: Condition::Dp2HotReplicaKv,
-                            node: self.entry_nodes[hot],
-                            at: now,
-                            severity: hot_occ - min_occ,
-                            evidence: format!(
-                                "replica {hot} KV at {:.0}% with {failures} admission \
-                                 failures this window; coldest peer at {:.0}%",
-                                hot_occ * 100.0,
-                                min_occ * 100.0
-                            ),
-                        });
-                    }
-                }
-            }
-        }
-        if !dp2_hit {
-            self.streaks[1] = 0;
-        }
-
-        // --- DP3: straggler replica (decode pool: backlog + lagging rate) ---
-        let mut dp3_hit = false;
-        if nd >= 2 {
-            let lag = first_max_by(pool, |r| cur.queue_depth[r] as f64);
-            let lag_q = cur.queue_depth[lag];
-            let iters_of =
-                |r: usize| cur.iterations[r].saturating_sub(old.iterations[r]);
-            let others_q: u64 =
-                pool.iter().filter(|&&r| r != lag).map(|&r| cur.queue_depth[r]).sum();
-            let others_mean_q = others_q as f64 / (nd - 1) as f64;
-            let others_it: u64 = pool.iter().filter(|&&r| r != lag).map(|&r| iters_of(r)).sum();
-            let others_mean_it = others_it as f64 / (nd - 1) as f64;
-            dp3_hit = lag_q >= STRAGGLER_MIN_QUEUE
-                && lag_q as f64 >= STRAGGLER_QUEUE_FACTOR * (others_mean_q + 1.0)
-                && (iters_of(lag) as f64) < STRAGGLER_ITER_RATIO * (others_mean_it + 1.0);
-            if dp3_hit {
-                self.streaks[2] += 1;
-                if self.streaks[2] >= CONFIRM_DP3 {
-                    fired.push(Detection {
-                        condition: Condition::Dp3StragglerReplica,
-                        node: self.entry_nodes[lag],
-                        at: now,
-                        severity: lag_q as f64 / (others_mean_q + 1.0),
-                        evidence: format!(
-                            "replica {lag} backlog {lag_q} vs peer mean {others_mean_q:.1}; \
-                             {} iterations over the horizon vs peer mean {others_mean_it:.0}",
-                            iters_of(lag)
-                        ),
-                    });
-                }
-            }
-        }
-        if !dp3_hit {
-            self.streaks[2] = 0;
-        }
-
         fired
     }
 
@@ -346,144 +313,51 @@ impl FleetSensor {
         let prev = if len >= 2 { Some(&self.pd_history[len - 2]) } else { None };
         let mut fired = Vec::new();
 
-        // --- PD1: prefill-pool saturation while the decode pool idles ---
-        let prefill_q: u64 = self.prefill_members.iter().map(|&r| cur.prefill_queue[r]).sum();
-        let old_q: u64 = self.prefill_members.iter().map(|&r| old.prefill_queue[r]).sum();
-        let slots: u64 = self.decode_members.iter().map(|&r| cur.decode_slots[r]).sum();
-        let running: u64 = self.decode_members.iter().map(|&r| cur.decode_running[r]).sum();
-        let decode_util = running as f64 / slots.max(1) as f64;
-        let pd1_hit =
-            prefill_q >= PD1_MIN_QUEUE && prefill_q > old_q && decode_util <= PD1_DECODE_UTIL_MAX;
-        if pd1_hit {
-            self.pd_streaks[0] += 1;
-            if self.pd_streaks[0] >= CONFIRM_PD1 {
-                let hot = first_max_by(&self.prefill_members, |r| cur.prefill_queue[r] as f64);
-                fired.push(Detection {
-                    condition: Condition::Pd1PrefillSaturation,
-                    node: self.entry_nodes[hot],
-                    at: now,
-                    severity: prefill_q as f64 / PD1_MIN_QUEUE as f64,
-                    evidence: format!(
-                        "prefill pool backlog {prefill_q} (was {old_q} a horizon ago) while \
-                         the decode pool runs {running}/{slots} slots ({:.0}% busy)",
-                        decode_util * 100.0
+        let n_decode = self.pools.decode_pools.len();
+        for ri in 0..self.pd_rules.len() {
+            let rule = self.pd_rules[ri];
+            for pi in 0..n_instances(rule.scope, &self.pools) {
+                // A prefill-scoped rule judges its pool against the decode
+                // pool it hands off to (pool p pairs with p % M); decode
+                // scopes see the prefill union as the counterpart.
+                let (pool, other): (&[usize], &[usize]) = match rule.scope {
+                    FleetScope::PerPrefillPool => (
+                        self.pools.prefill_pools[pi].as_slice(),
+                        self.pools.decode_pools[pi % n_decode].as_slice(),
                     ),
-                });
-            }
-        } else {
-            self.pd_streaks[0] = 0;
-        }
-
-        // --- PD2: KV-handoff fabric latency vs line-rate expectation ---
-        // Measured over the whole horizon, not one window: completions under
-        // a stall arrive sparse-then-bursty, and a single thin window must
-        // neither fire nor reset the streak.
-        let mut pd2_hit = false;
-        if prev.is_some() {
-            let done = cur.handoffs_completed.saturating_sub(old.handoffs_completed);
-            let inflight = cur.handoffs_started.saturating_sub(cur.handoffs_completed);
-            if done < PD2_MIN_HANDOFFS && inflight >= PD2_STALL_INFLIGHT {
-                // Degenerate total stall: transfers pile up on the fabric
-                // with (almost) nothing landing — no latency sample will
-                // ever accumulate, so the backlog itself is the red flag.
-                pd2_hit = true;
-                self.pd_streaks[1] += 1;
-                if self.pd_streaks[1] >= CONFIRM_PD2 {
-                    let dst = first_max_by(&self.decode_members, |r| {
-                        cur.handoff_arrivals[r] as f64
-                    });
-                    fired.push(Detection {
-                        condition: Condition::Pd2KvHandoffStall,
-                        node: self.entry_nodes[dst],
-                        at: now,
-                        severity: inflight as f64 / PD2_STALL_INFLIGHT as f64,
-                        evidence: format!(
-                            "KV handoffs frozen: {inflight} in flight on the fabric with \
-                             only {done} landing over the horizon"
-                        ),
-                    });
-                }
-            } else if done >= PD2_MIN_HANDOFFS {
-                let lat_sum = cur.handoff_lat_sum_ns.saturating_sub(old.handoff_lat_sum_ns);
-                let bytes = cur.handoff_bytes.saturating_sub(old.handoff_bytes);
-                let mean_lat = lat_sum as f64 / done as f64;
-                let mean_bytes = bytes as f64 / done as f64;
-                let expected = mean_bytes / self.nic_bw.max(1.0) * 1e9 * PD2_PATH_HOPS
-                    + PD2_BASE_ALLOWANCE_NS;
-                if mean_lat >= PD2_LAT_FACTOR * expected {
-                    pd2_hit = true;
-                    self.pd_streaks[1] += 1;
-                    if self.pd_streaks[1] >= CONFIRM_PD2 {
-                        let dst = first_max_by(&self.decode_members, |r| {
-                            cur.handoff_arrivals[r].saturating_sub(old.handoff_arrivals[r])
-                                as f64
-                        });
-                        fired.push(Detection {
-                            condition: Condition::Pd2KvHandoffStall,
-                            node: self.entry_nodes[dst],
-                            at: now,
-                            severity: mean_lat / expected.max(1.0),
-                            evidence: format!(
-                                "KV handoffs average {:.0} us over {done} transfers vs \
-                                 {:.0} us line-rate expectation ({:.0} KB mean)",
-                                mean_lat / 1e3,
-                                expected / 1e3,
-                                mean_bytes / 1e3
-                            ),
-                        });
+                    FleetScope::PerDecodePool => (
+                        self.pools.decode_pools[pi].as_slice(),
+                        self.pools.prefill_members.as_slice(),
+                    ),
+                    FleetScope::DecodeUnion => (
+                        self.pools.decode_members.as_slice(),
+                        self.pools.prefill_members.as_slice(),
+                    ),
+                };
+                let cx = PdCtx { pool, other_pool: other, cur, old, prev, nic_bw: self.nic_bw };
+                match (rule.eval)(&cx) {
+                    Some(hit) => {
+                        self.pd_streaks[ri][pi] += 1;
+                        if self.pd_streaks[ri][pi] >= rule.confirm {
+                            fired.push(Detection {
+                                condition: rule.condition,
+                                node: self.entry_nodes[hit.replica],
+                                at: now,
+                                severity: hit.severity,
+                                evidence: hit.evidence,
+                            });
+                        }
                     }
+                    None => self.pd_streaks[ri][pi] = 0,
                 }
             }
         }
-        if !pd2_hit {
-            self.pd_streaks[1] = 0;
-        }
-
-        // --- PD3: handoff arrivals concentrate on one decode replica ---
-        let pool = &self.decode_members;
-        let nd = pool.len();
-        let mut pd3_hit = false;
-        if nd >= 2 {
-            let arrivals: Vec<u64> = pool
-                .iter()
-                .map(|&r| cur.handoff_arrivals[r].saturating_sub(old.handoff_arrivals[r]))
-                .collect();
-            let total: u64 = arrivals.iter().sum();
-            if total >= PD3_MIN_ARRIVALS {
-                let hot_k = argmax_u64(&arrivals);
-                let hot = pool[hot_k];
-                let share = arrivals[hot_k] as f64 / total as f64;
-                let threshold = (1.0 / nd as f64 + PD3_SHARE_MARGIN).min(0.92);
-                if share >= threshold {
-                    pd3_hit = true;
-                    self.pd_streaks[2] += 1;
-                    if self.pd_streaks[2] >= CONFIRM_PD3 {
-                        fired.push(Detection {
-                            condition: Condition::Pd3DecodeStarvation,
-                            node: self.entry_nodes[hot],
-                            at: now,
-                            severity: share * nd as f64,
-                            evidence: format!(
-                                "decode replica {hot} receives {:.0}% of {total} KV handoffs \
-                                 (fair share {:.0}%); {} parked awaiting admission",
-                                share * 100.0,
-                                100.0 / nd as f64,
-                                cur.stalled_wait_depth
-                            ),
-                        });
-                    }
-                }
-            }
-        }
-        if !pd3_hit {
-            self.pd_streaks[2] = 0;
-        }
-
         fired
     }
 }
 
-fn argmax_u64(xs: &[u64]) -> usize {
+/// Index of the (first) maximum — shared by the catalog's fleet rules.
+pub fn argmax_u64(xs: &[u64]) -> usize {
     let mut best = 0;
     for (i, &x) in xs.iter().enumerate() {
         if x > xs[best] {
@@ -496,7 +370,7 @@ fn argmax_u64(xs: &[u64]) -> usize {
 /// First (lowest-index) member maximizing `key` — strict-greater comparison
 /// keeps the pre-pool argmax tie-break, so a full-membership pool reproduces
 /// the classic sensor's picks exactly.
-fn first_max_by(members: &[usize], key: impl Fn(usize) -> f64) -> usize {
+pub fn first_max_by(members: &[usize], key: impl Fn(usize) -> f64) -> usize {
     let mut best = members[0];
     let mut best_k = key(best);
     for &r in &members[1..] {
@@ -551,6 +425,15 @@ mod tests {
             iterations: it,
             alloc_failures: af,
         }
+    }
+
+    #[test]
+    fn rules_come_from_the_catalog() {
+        let s = sensor(2);
+        let dp: Vec<Condition> = s.dp_rules.iter().map(|r| r.condition).collect();
+        let pd: Vec<Condition> = s.pd_rules.iter().map(|r| r.condition).collect();
+        assert_eq!(dp, crate::dpu::detectors::DP_CONDITIONS.to_vec());
+        assert_eq!(pd, crate::dpu::detectors::PD_CONDITIONS.to_vec());
     }
 
     #[test]
@@ -762,7 +645,7 @@ mod tests {
         // simply correct — PD3 must go inert, not fire.
         let roles =
             vec![ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Prefill];
-        s.sync_pools(&roles);
+        s.sync_pools(&PoolTopology::from_roles(&roles));
         for w in 2..10u64 {
             let mut p = quiet_pd(3);
             p.handoff_arrivals = vec![0, w * 30, 0];
@@ -774,7 +657,7 @@ mod tests {
             assert!(fired.is_empty(), "stale-pool PD3 after role shift: {fired:?}");
         }
         // Unchanged roles are a no-op (streak state preserved elsewhere).
-        s.sync_pools(&roles);
+        s.sync_pools(&PoolTopology::from_roles(&roles));
     }
 
     #[test]
@@ -842,5 +725,36 @@ mod tests {
         assert!(fired.is_empty(), "{fired:?}");
         let calm = s.window_tick(SimTime(2_000_000), quiet);
         assert!(calm.is_empty());
+    }
+
+    #[test]
+    fn multi_pool_scoping_judges_each_pool_independently() {
+        // 4 colocated replicas split into 2 prefill pools {0,1} and {2,3}:
+        // concentration INSIDE pool {2,3} must fire DP1 localized there,
+        // even though the fleet-wide share (50%) looks fair.
+        let roles = vec![ReplicaRole::Colocated; 4];
+        let pools = PoolTopology::build(&roles, 2, 2);
+        assert_eq!(pools.prefill_pools, vec![vec![0, 1], vec![2, 3]]);
+        let mut s = FleetSensor::with_pools(4, nodes(4), pools, 50e9);
+        let mut fired_any = Vec::new();
+        for w in 0..60u64 {
+            fired_any.extend(s.window_tick(
+                SimTime(w * 1_000_000),
+                sample(
+                    // Pool {0,1} balanced; pool {2,3} fully concentrated.
+                    vec![w * 10, w * 10, w * 20, 0],
+                    vec![0, 0, 0, 0],
+                    vec![0.2, 0.2, 0.2, 0.2],
+                    vec![w * 5, w * 5, w * 5, w * 5],
+                    vec![0, 0, 0, 0],
+                ),
+            ));
+        }
+        let dp1: Vec<_> = fired_any
+            .iter()
+            .filter(|d| d.condition == Condition::Dp1RouterFlowSkew)
+            .collect();
+        assert!(!dp1.is_empty(), "{fired_any:?}");
+        assert!(dp1.iter().all(|d| d.node == NodeId(2)), "must localize into pool {{2,3}}");
     }
 }

@@ -1,7 +1,10 @@
-//! The runbooks of paper Tables 3(a)-(c), encoded: for every condition, the
-//! red-flag signal, affected lifecycle stages, node↔node effect, likely root
-//! cause, and the mitigation directive. This is the lookup the closed loop
-//! uses, and `metrics::report` renders it back out as the paper tables.
+//! The runbooks of paper Tables 3(a)-(c), as a stable view over the
+//! condition catalog: for every condition, the red-flag signal, affected
+//! lifecycle stages, node↔node effect, likely root cause, and the mitigation
+//! directive. The knowledge itself lives in [`crate::conditions`] (one
+//! `ConditionSpec` per condition); this module projects it into the shape
+//! the closed loop and `metrics::report` render back out as paper tables —
+//! no per-condition arms remain here.
 
 use crate::dpu::detectors::Condition;
 use crate::mitigation::directive::Directive;
@@ -17,263 +20,24 @@ pub struct RunbookEntry {
     pub directive: Directive,
 }
 
-/// Look up the runbook row for a condition.
+/// Look up the runbook row for a condition — a projection of its
+/// [`crate::conditions::ConditionSpec`] catalog entry.
 pub fn entry(c: Condition) -> RunbookEntry {
-    use Condition::*;
-    let (signal, stages, effect, root_cause, directive) = match c {
-        Ns1BurstBacklog => (
-            "Sudden ingress spikes followed by queueing delay",
-            "Ingress (prefill/start)",
-            "Downstream GPU sees uneven load; internode bursts clump",
-            "Client load spike, front-end batching, NIC queue limits",
-            Directive::SmoothAdmission,
-        ),
-        Ns2IngressStarvation => (
-            "Long gaps between ingress packets for some tokens",
-            "Ingress -> PCIe feed",
-            "Token stalls; fewer collective ops downstream",
-            "Upstream service jitter, uneven client distribution",
-            Directive::RebalanceFlows,
-        ),
-        Ns3FlowSkew => (
-            "Some ingress flows high-volume, others sparse",
-            "Ingress (per-request)",
-            "Imbalanced TP/PP participation across tokens",
-            "Session affinity mismatch, QUIC stream imbalance",
-            Directive::RebalanceFlows,
-        ),
-        Ns4IngressRetx => (
-            "Missing or retransmitted initial packets",
-            "Ingress (request birth)",
-            "Token ID not consistently assigned; lifecycle gaps",
-            "Congestion, MTU mismatch, link errors",
-            Directive::FixIngressPath,
-        ),
-        Ns5EgressBacklog => (
-            "Responses accumulate in NIC queues before send",
-            "Egress (response flush)",
-            "Downstream clients see latency spikes",
-            "CPU copy bottleneck, NIC buffer exhaustion",
-            Directive::ZeroCopyEgress,
-        ),
-        Ns6EgressJitter => (
-            "Outgoing packets for a token spread unevenly over time",
-            "Egress (decode outputs)",
-            "Clients see irregular token cadence",
-            "Scheduler variance, CPU<->NIC contention",
-            Directive::PinIrqsIsolateThreads,
-        ),
-        Ns7EgressRetx => (
-            "Retransmissions or gaps in final response streams",
-            "Egress",
-            "Client-visible stalls; retries inflate latency",
-            "NIC offload misconfig, fabric congestion, buffer underrun",
-            Directive::FixEgressPath,
-        ),
-        Ns8EarlyCompletion => (
-            "Some egress flows terminate far earlier than peers",
-            "Egress (multi-stream decode)",
-            "Internode peers still busy; imbalance in final stages",
-            "Early-stop on short sequences; no remap of freed resources",
-            Directive::EnableInflightRemap,
-        ),
-        Ns9BandwidthSaturation => (
-            "NIC RX/TX at or near link capacity; queue buildup",
-            "Ingress + Egress",
-            "All internode phases elongated; cluster-level slowdown",
-            "Shared NIC with storage/other jobs; insufficient link",
-            Directive::QosPartitionNic,
-        ),
-        Pc1H2dStarvation => (
-            "Large/clustered H2D DMAs then long gaps before doorbells",
-            "Ingress -> PCIe (prefill & decode input feed)",
-            "Fewer/late internode bursts; downstream TP/PP idles",
-            "PCIe BW cap, NUMA miss, pageable (unpinned) host buffers",
-            Directive::PinMemoryPools,
-        ),
-        Pc2D2hBottleneck => (
-            "D2H DMAs linger / complete slowly; backlog after kernels",
-            "Egress (logits/tokens back to host)",
-            "Late responses; backpressure into next token step",
-            "PCIe saturation, IOMMU contention, CPU copy hotspots",
-            Directive::FixReturnPath,
-        ),
-        Pc3LaunchLatency => (
-            "Doorbells sporadic; idle gaps between H2D bursts and launch",
-            "Compute (GPU underutilized across prefill/decode)",
-            "TP collectives delayed, PP handoffs drift",
-            "Runtime overhead, CPU scheduler delays, too many tiny kernels",
-            Directive::FuseKernelsIsolateCpu,
-        ),
-        Pc4IntraNodeSkew => (
-            "One GPU shows thin/irregular DMA; peers steady",
-            "Compute (per-layer) -> propagates to internode",
-            "TP collectives widen (straggler), PP stage misalignment",
-            "Uneven microbatching, memory pressure on a single GPU",
-            Directive::RebalanceShards,
-        ),
-        Pc5PcieSaturation => (
-            "Sustained near-peak PCIe throughput; compute stalls periodically",
-            "Ingress -> PCIe, Egress",
-            "Burstiness in internode waves; elongates token step",
-            "Oversubscribed PCIe switch / x8 link, competing DMAs",
-            Directive::MovePcieTenants,
-        ),
-        Pc6P2pThrottling => (
-            "P2P DMAs slow/variable; no NVLink path",
-            "Compute (intra-box TP/PP)",
-            "Internode timing jitter (collectives wait on slow intra-box move)",
-            "Shared uplink on PCIe switch; ACS/ATS settings",
-            Directive::PreferNvlink,
-        ),
-        Pc7PinnedShortage => (
-            "Many small DMAs vs large coalesced; rising DMA count",
-            "Ingress -> PCIe (feed) and Egress (returns)",
-            "Micro-jitter; uneven stage timing",
-            "Insufficient pinned pools; fallback to pageable",
-            Directive::PinMemoryPools,
-        ),
-        Pc8HostCpuBottleneck => (
-            "Low DMA rate despite available PCIe BW; delayed doorbells",
-            "Compute orchestration",
-            "Irregular TP cadence; PP bubbles",
-            "CPU contention, IRQ affinity, polling disabled",
-            Directive::FuseKernelsIsolateCpu,
-        ),
-        Pc9RegistrationChurn => (
-            "Frequent map/unmap patterns around DMAs",
-            "Ingress -> PCIe",
-            "Small timing gaps accumulating per token",
-            "Repeated registration due to short-lived buffers",
-            Directive::PersistentRegistration,
-        ),
-        Pc10DecodeEarlyStop => (
-            "D2H drops off early on some streams/GPUs",
-            "Compute (decode) -> Egress",
-            "Some peers go silent; collectives wait for remaining peers",
-            "Sequence length variance; scheduler not rebalancing",
-            Directive::EnableInflightRemap,
-        ),
-        Ew1TpStraggler => (
-            "Wide arrival spread of collective bursts (max-min gap up)",
-            "Compute (tensor-parallel collectives)",
-            "Collective ops stall waiting for slowest peer",
-            "Skewed GPU load, PCIe starvation, memory imbalance on one node",
-            Directive::RebalanceShards,
-        ),
-        Ew2PpBubble => (
-            "Large or growing gaps between stage handoff bursts",
-            "Pipeline parallel",
-            "Downstream stage idles; upstream builds backlog",
-            "Load imbalance across pipeline stages, early token exit variance",
-            Directive::RebalanceStages,
-        ),
-        Ew3CrossNodeSkew => (
-            "Uneven traffic volume per node for same collective",
-            "TP/PP compute -> internode",
-            "Some nodes oversend/undersend; throughput uneven",
-            "Shard imbalance, misaligned activation partitioning",
-            Directive::RebalanceAcrossNodes,
-        ),
-        Ew4Congestion => (
-            "Periodic spikes in latency + jitter across many links",
-            "Internode transfers (collectives & stage handoff)",
-            "Token step elongates cluster-wide",
-            "Fat-tree oversubscription, ToR link hot spot",
-            Directive::AdaptiveRouting,
-        ),
-        Ew5HolBlocking => (
-            "Some streams stall while others flow; out-of-order bursts",
-            "Collective streams / P2P flows",
-            "Latency-sensitive ops delayed",
-            "Shared queue depth exhaustion, RoCE/NIC queue imbalance",
-            Directive::FixQueueSharing,
-        ),
-        Ew6Retransmissions => (
-            "Gaps + duplicate traffic or sudden retransmit storms",
-            "All distributed phases",
-            "Bursty latency; collectives jitter",
-            "Fabric errors, congestion collapse, misconfigured PFC",
-            Directive::LosslessFabricConfig,
-        ),
-        Ew7CreditStarvation => (
-            "Long silence periods until remote credit update",
-            "Internode (RDMA ops)",
-            "Under-utilized links; token latency grows",
-            "Too-small RDMA window, NIC credit depletion",
-            Directive::TuneCreditWindow,
-        ),
-        Ew8KvBottleneck => (
-            "Repeated large bursts for some tokens, others silent",
-            "Decode phase (PP handoff)",
-            "Uneven memory pressure per stage; downstream skew",
-            "Sharded KV too large for link budget; non-uniform length",
-            Directive::CompressKvTransfers,
-        ),
-        Ew9EarlyStopSkew => (
-            "Some nodes stop sending mid-iteration while others continue",
-            "Decode (multi-node)",
-            "Collectives/pipeline hang waiting for peers",
-            "Sequence length divergence; scheduler not masking early exits",
-            Directive::EnableInflightRemap,
-        ),
-        // ---- data-parallel fleet extension (router/LB vantage) ----
-        Dp1RouterFlowSkew => (
-            "One replica's routed-arrival share far exceeds hash-fair share",
-            "Ingress routing (data-parallel)",
-            "Hot replica queues while peers idle; fleet capped by one replica",
-            "Session-affinity hashing + heavy-tailed session popularity",
-            Directive::RebalanceFlows,
-        ),
-        Dp2HotReplicaKv => (
-            "One replica's KV pinned at capacity with admission failures",
-            "Decode admission (data-parallel)",
-            "Hot replica thrashes admissions; its flows see inflated TTFT",
-            "KV fragmentation/leak or flow concentration on one replica",
-            Directive::KvAwareRouting,
-        ),
-        Dp3StragglerReplica => (
-            "A replica's backlog dominates while its iteration rate lags",
-            "All phases on one replica (data-parallel)",
-            "Affinity keeps feeding the slow replica; it dominates fleet p99",
-            "Degraded node(s) in one replica: thermal/power/faulty GPU",
-            Directive::DrainStragglerReplica,
-        ),
-        // ---- phase-disaggregation extension (pool-boundary vantage) ----
-        Pd1PrefillSaturation => (
-            "Prefill-pool admission backlog grows while decode slots idle",
-            "Prefill pool (admission -> first token)",
-            "TTFT inflates fleet-wide; decode pool starves for handoffs",
-            "Prompt-heavy demand vs prefill pool sizing (roles misprovisioned)",
-            Directive::RebalancePools,
-        ),
-        Pd2KvHandoffStall => (
-            "KV-handoff fabric latency far above line-rate expectation",
-            "Phase transition (prefill -> decode pool)",
-            "Sequences pile up between pools; decode admission runs dry",
-            "Handoff link budget collapse: congestion, misrouted path, QoS",
-            Directive::CompressKvTransfers,
-        ),
-        Pd3DecodeStarvation => (
-            "KV handoffs concentrate on one decode replica; peers starve",
-            "Phase transition routing (decode pool)",
-            "One decode replica saturates its slots while peers sit idle",
-            "Wedged/skewed handoff routing after a config or failover event",
-            Directive::RebalanceHandoffRouting,
-        ),
-    };
-    RunbookEntry { condition: c, signal, stages, effect, root_cause, directive }
+    let s = crate::conditions::spec(c);
+    RunbookEntry {
+        condition: c,
+        signal: s.signal,
+        stages: s.stages,
+        effect: s.effect,
+        root_cause: s.root_cause_text,
+        directive: s.directive,
+    }
 }
 
 /// All runbook rows, table order: the paper's 28 plus the DP fleet family
 /// and the PD phase-disaggregation family.
 pub fn all_entries() -> Vec<RunbookEntry> {
-    crate::dpu::detectors::ALL_CONDITIONS
-        .iter()
-        .chain(crate::dpu::detectors::DP_CONDITIONS.iter())
-        .chain(crate::dpu::detectors::PD_CONDITIONS.iter())
-        .map(|&c| entry(c))
-        .collect()
+    crate::conditions::all_specs().map(|s| entry(s.condition)).collect()
 }
 
 #[cfg(test)]
@@ -321,6 +85,15 @@ mod tests {
             Condition::Ew9EarlyStopSkew,
         ] {
             assert_eq!(entry(c).directive, Directive::EnableInflightRemap);
+        }
+    }
+
+    #[test]
+    fn entries_project_the_catalog_verbatim() {
+        for s in crate::conditions::all_specs() {
+            let e = entry(s.condition);
+            assert_eq!(e.signal, s.signal);
+            assert_eq!(e.directive, s.directive);
         }
     }
 }

@@ -43,6 +43,13 @@ pub struct EngineConfig {
     /// Heterogeneous per-replica shapes (phase-disaggregated pools). `None`
     /// keeps the classic uniform colocated fleet from `nodes_per_stage`.
     pub shapes: Option<Vec<ReplicaShape>>,
+    /// How many admission pools the prefill-capable replicas split into
+    /// (contiguous near-even partition). 1 = the classic single-pool plane,
+    /// byte-identical to the pre-multi-pool engine.
+    pub prefill_pools: usize,
+    /// How many handoff pools the decode-capable replicas split into.
+    /// Prefill pool `p` hands off to decode pool `p % decode_pools`.
+    pub decode_pools: usize,
 }
 
 impl Default for EngineConfig {
@@ -59,8 +66,98 @@ impl Default for EngineConfig {
             kv_page_tokens: 16,
             nodes_per_stage: 2,
             shapes: None,
+            prefill_pools: 1,
+            decode_pools: 1,
         }
     }
+}
+
+/// The fleet's pool partition: prefill-capable replicas grouped into K
+/// admission pools and decode-capable replicas into M handoff pools, all
+/// indexing the same global replica space. The classic serving plane is the
+/// K = M = 1 degenerate case (each union is its own single pool), and every
+/// consumer — the two routers, the fleet sensor's skew scoping, the per-pair
+/// handoff accounting — reproduces the pre-multi-pool arithmetic exactly
+/// there.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolTopology {
+    /// All prefill-capable replicas (the admission router's membership).
+    pub prefill_members: Vec<usize>,
+    /// All decode-capable replicas (the phase-transition router's membership).
+    pub decode_members: Vec<usize>,
+    /// Admission pools: contiguous near-even partition of `prefill_members`.
+    pub prefill_pools: Vec<Vec<usize>>,
+    /// Handoff pools: contiguous near-even partition of `decode_members`.
+    pub decode_pools: Vec<Vec<usize>>,
+}
+
+/// Contiguous near-even partition of `members` into `k` pools (pool `i`
+/// takes `members[i*n/k .. (i+1)*n/k]`). `k` is clamped so every pool is
+/// non-empty.
+fn chunk_even(members: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let n = members.len();
+    let k = k.clamp(1, n.max(1));
+    (0..k).map(|i| members[i * n / k..(i + 1) * n / k].to_vec()).collect()
+}
+
+impl PoolTopology {
+    /// Partition by role into `k` prefill and `m` decode pools. Colocated
+    /// replicas are members of both sides (classic single-stage serving).
+    /// `m` additionally clamps to the effective `k`: under the `p % M`
+    /// handoff pairing a decode pool with no prefill pool mapping to it
+    /// would be permanently unreachable (silently starved), so extra decode
+    /// pools merge instead. The CLI rejects K < M loudly before this.
+    pub fn build(roles: &[ReplicaRole], k: usize, m: usize) -> Self {
+        let prefill_members: Vec<usize> = roles
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.serves_prefill())
+            .map(|(i, _)| i)
+            .collect();
+        let decode_members: Vec<usize> = roles
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.serves_decode())
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!prefill_members.is_empty(), "fleet has no prefill-capable replica");
+        assert!(!decode_members.is_empty(), "fleet has no decode-capable replica");
+        let prefill_pools = chunk_even(&prefill_members, k);
+        let decode_pools = chunk_even(&decode_members, m.min(prefill_pools.len()));
+        PoolTopology { prefill_members, decode_members, prefill_pools, decode_pools }
+    }
+
+    /// The classic single-pool partition (K = M = 1).
+    pub fn from_roles(roles: &[ReplicaRole]) -> Self {
+        Self::build(roles, 1, 1)
+    }
+
+    /// Which prefill pool `replica` belongs to (None if not prefill-capable).
+    pub fn prefill_pool_of(&self, replica: usize) -> Option<usize> {
+        self.prefill_pools.iter().position(|p| p.contains(&replica))
+    }
+
+    /// Which decode pool `replica` belongs to (None if not decode-capable).
+    pub fn decode_pool_of(&self, replica: usize) -> Option<usize> {
+        self.decode_pools.iter().position(|p| p.contains(&replica))
+    }
+
+    /// The decode pool that prefill pool `p` hands off to.
+    pub fn paired_decode_pool(&self, p: usize) -> usize {
+        p % self.decode_pools.len()
+    }
+
+    /// More than one pool on either side?
+    pub fn is_multi_pool(&self) -> bool {
+        self.prefill_pools.len() > 1 || self.decode_pools.len() > 1
+    }
+}
+
+/// Deterministic flow → pool spreading for multi-pool admission (the
+/// router's avalanche with a distinct salt, so the two hash levels don't
+/// correlate but can never drift apart).
+fn pool_of_flow(flow: crate::ids::FlowId, n_pools: usize) -> usize {
+    (router::avalanche(flow.0 as u64 ^ 0xA5A5_D00D_F00D_5EED) % n_pools as u64) as usize
 }
 
 /// Per-replica serving state.
@@ -98,6 +195,9 @@ pub struct Engine {
     /// Roles at construction time (heal/reset restores these after
     /// `RebalancePools` role shifts).
     base_roles: Vec<ReplicaRole>,
+    /// Pool partition (admission + handoff pools) derived from the current
+    /// roles and the configured pool counts.
+    pools: PoolTopology,
     disaggregated: bool,
 }
 
@@ -107,7 +207,7 @@ impl Engine {
         let n = plans.len();
         let base_roles: Vec<ReplicaRole> = plans.iter().map(|p| p.shape.role).collect();
         let disaggregated = base_roles.iter().any(|&r| r != ReplicaRole::Colocated);
-        let (prefill_members, decode_members) = pool_members(&base_roles);
+        let pools = PoolTopology::build(&base_roles, cfg.prefill_pools, cfg.decode_pools);
         let replicas = plans
             .into_iter()
             .map(|plan| Replica {
@@ -122,13 +222,18 @@ impl Engine {
             })
             .collect();
         Engine {
-            router: Router::with_members(n, cfg.route_policy, prefill_members),
-            decode_router: Router::with_members(n, cfg.decode_route_policy, decode_members),
+            router: Router::with_members(n, cfg.route_policy, pools.prefill_members.clone()),
+            decode_router: Router::with_members(
+                n,
+                cfg.decode_route_policy,
+                pools.decode_members.clone(),
+            ),
             cfg,
             replicas,
             requests: HashMap::new(),
             placement: HashMap::new(),
             base_roles,
+            pools,
             disaggregated,
         }
     }
@@ -168,9 +273,14 @@ impl Engine {
 
     fn refresh_pools(&mut self) {
         let roles = self.roles();
-        let (prefill_members, decode_members) = pool_members(&roles);
-        self.router.set_members(prefill_members);
-        self.decode_router.set_members(decode_members);
+        self.pools = PoolTopology::build(&roles, self.cfg.prefill_pools, self.cfg.decode_pools);
+        self.router.set_members(self.pools.prefill_members.clone());
+        self.decode_router.set_members(self.pools.decode_members.clone());
+    }
+
+    /// The current pool partition (kept in sync with role shifts).
+    pub fn pools(&self) -> &PoolTopology {
+        &self.pools
     }
 
     /// Which replica's plan owns `node` (victim-replica resolution for the
@@ -182,20 +292,35 @@ impl Engine {
     }
 
     /// Register an arriving request and route it onto the prefill-capable
-    /// pool. Returns the replica index.
+    /// pool. On a multi-pool plane the flow first hashes to an admission
+    /// pool, then the router picks within it; single-pool fleets take the
+    /// classic full-membership path bit for bit. Returns the replica index.
     pub fn register(&mut self, req: InferenceRequest) -> usize {
-        let r = self.router.route(req.flow);
+        let r = if self.pools.prefill_pools.len() > 1 {
+            let p = pool_of_flow(req.flow, self.pools.prefill_pools.len());
+            self.router.route_in(req.flow, &self.pools.prefill_pools[p])
+        } else {
+            self.router.route(req.flow)
+        };
         self.placement.insert(req.id, r);
         self.requests.insert(req.id, req);
         r
     }
 
     /// Phase transition: pick the decode-pool replica that will adopt this
-    /// request's KV, and move its placement there. The caller models the
-    /// actual handoff transfer.
+    /// request's KV, and move its placement there. With multiple handoff
+    /// pools the pick is confined to the decode pool paired with the
+    /// request's prefill pool. The caller models the actual transfer.
     pub fn route_decode(&mut self, req: ReqId) -> usize {
         let flow = self.requests[&req].flow;
-        let d = self.decode_router.route(flow);
+        let d = if self.pools.decode_pools.len() > 1 {
+            let from = self.placement[&req];
+            let p = self.pools.prefill_pool_of(from).unwrap_or(0);
+            let pair = self.pools.paired_decode_pool(p);
+            self.decode_router.route_in(flow, &self.pools.decode_pools[pair])
+        } else {
+            self.decode_router.route(flow)
+        };
         self.placement.insert(req, d);
         d
     }
@@ -223,25 +348,6 @@ impl Engine {
         let n = self.replicas.len() as f64;
         self.replicas.iter().map(|r| r.kv.occupancy()).sum::<f64>() / n
     }
-}
-
-/// Split replica indices into (prefill-capable, decode-capable) pools.
-fn pool_members(roles: &[ReplicaRole]) -> (Vec<usize>, Vec<usize>) {
-    let prefill: Vec<usize> = roles
-        .iter()
-        .enumerate()
-        .filter(|(_, r)| r.serves_prefill())
-        .map(|(i, _)| i)
-        .collect();
-    let decode: Vec<usize> = roles
-        .iter()
-        .enumerate()
-        .filter(|(_, r)| r.serves_decode())
-        .map(|(i, _)| i)
-        .collect();
-    assert!(!prefill.is_empty(), "fleet has no prefill-capable replica");
-    assert!(!decode.is_empty(), "fleet has no decode-capable replica");
-    (prefill, decode)
 }
 
 #[cfg(test)]
@@ -322,6 +428,115 @@ mod tests {
         // Accounting is split per stage.
         assert_eq!(e.router.outstanding()[0], 1);
         assert_eq!(e.decode_router.outstanding()[d], 1);
+    }
+
+    #[test]
+    fn pool_topology_partitions_evenly_and_pairs() {
+        use crate::cluster::ReplicaRole::*;
+        // 2 prefill + 4 decode split into 2 admission / 1 handoff pools.
+        let roles = vec![Prefill, Prefill, Decode, Decode, Decode, Decode];
+        let t = PoolTopology::build(&roles, 2, 1);
+        assert_eq!(t.prefill_pools, vec![vec![0], vec![1]]);
+        assert_eq!(t.decode_pools, vec![vec![2, 3, 4, 5]]);
+        assert_eq!(t.prefill_pool_of(1), Some(1));
+        assert_eq!(t.prefill_pool_of(3), None);
+        assert_eq!(t.decode_pool_of(5), Some(0));
+        assert_eq!(t.paired_decode_pool(0), 0);
+        assert_eq!(t.paired_decode_pool(1), 0);
+        assert!(t.is_multi_pool());
+        // Near-even decode split with M = 2 (K = 2 keeps every decode pool
+        // reachable under the p % M pairing).
+        let t2 = PoolTopology::build(&roles, 2, 2);
+        assert_eq!(t2.decode_pools, vec![vec![2, 3], vec![4, 5]]);
+        assert_eq!(t2.paired_decode_pool(0), 0);
+        assert_eq!(t2.paired_decode_pool(1), 1);
+        // M clamps to K: a decode pool no prefill pool maps to would be
+        // permanently starved, so K = 1 merges the decode side into one.
+        let merged = PoolTopology::build(&roles, 1, 2);
+        assert_eq!(merged.decode_pools, vec![vec![2, 3, 4, 5]]);
+        // Pool counts clamp to the member population.
+        let t3 = PoolTopology::build(&roles, 5, 1);
+        assert_eq!(t3.prefill_pools.len(), 2);
+        assert!(t3.prefill_pools.iter().all(|p| !p.is_empty()));
+        // The classic partition is the K = M = 1 case and is not multi-pool.
+        let classic = PoolTopology::from_roles(&vec![Colocated; 3]);
+        assert_eq!(classic.prefill_pools, vec![vec![0, 1, 2]]);
+        assert_eq!(classic.decode_pools, vec![vec![0, 1, 2]]);
+        assert!(!classic.is_multi_pool());
+    }
+
+    #[test]
+    fn multi_pool_admission_confines_flows_to_their_pool() {
+        // 4 colocated single-node replicas, 2 admission pools.
+        let mut spec = ClusterSpec::default();
+        spec.n_nodes = 4;
+        spec.pp_degree = 1;
+        let mut cfg = EngineConfig::default();
+        cfg.nodes_per_stage = 1;
+        cfg.prefill_pools = 2;
+        let plans = build_replicas(&spec, 1);
+        let mut e = Engine::new(cfg, plans);
+        assert_eq!(e.pools().prefill_pools, vec![vec![0, 1], vec![2, 3]]);
+        // Every flow lands inside the pool its hash selects, and repeats
+        // land on the same replica (affinity survives pooling).
+        let mut first: HashMap<u32, usize> = HashMap::new();
+        for round in 0..3u32 {
+            for f in 0..64u32 {
+                let req = InferenceRequest::new(
+                    ReqId(round * 64 + f),
+                    crate::ids::FlowId(f),
+                    SimTime(0),
+                    vec![1, 2, 3],
+                    2,
+                );
+                let r = e.register(req);
+                let p = pool_of_flow(crate::ids::FlowId(f), 2);
+                assert!(e.pools().prefill_pools[p].contains(&r), "flow {f} escaped pool {p}");
+                assert_eq!(*first.entry(f).or_insert(r), r, "affinity broken for flow {f}");
+            }
+        }
+        // Both pools see traffic.
+        let routed = e.router.routed_per_replica();
+        assert!(routed[..2].iter().sum::<u64>() > 0);
+        assert!(routed[2..].iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn multi_pool_handoff_respects_pool_pairing() {
+        use crate::cluster::{ReplicaRole, ReplicaShape};
+        // 2 prefill + 4 decode single-node replicas; 2 admission pools,
+        // 2 handoff pools: prefill pool p must hand off into decode pool p.
+        let mut spec = ClusterSpec::default();
+        spec.n_nodes = 6;
+        spec.pp_degree = 1;
+        let shapes = vec![
+            ReplicaShape::new(ReplicaRole::Prefill, 4, 1),
+            ReplicaShape::new(ReplicaRole::Prefill, 4, 1),
+            ReplicaShape::new(ReplicaRole::Decode, 4, 1),
+            ReplicaShape::new(ReplicaRole::Decode, 4, 1),
+            ReplicaShape::new(ReplicaRole::Decode, 4, 1),
+            ReplicaShape::new(ReplicaRole::Decode, 4, 1),
+        ];
+        let mut cfg = EngineConfig::default();
+        cfg.shapes = Some(shapes.clone());
+        cfg.prefill_pools = 2;
+        cfg.decode_pools = 2;
+        let plans = build_shaped_replicas(&spec, &shapes);
+        let mut e = Engine::new(cfg, plans);
+        assert_eq!(e.pools().decode_pools, vec![vec![2, 3], vec![4, 5]]);
+        for f in 0..80u32 {
+            let req =
+                InferenceRequest::new(ReqId(f), crate::ids::FlowId(f), SimTime(0), vec![1], 4);
+            let id = req.id;
+            let pre = e.register(req);
+            let p = e.pools().prefill_pool_of(pre).unwrap();
+            let d = e.route_decode(id);
+            let pair = e.pools().paired_decode_pool(p);
+            assert!(
+                e.pools().decode_pools[pair].contains(&d),
+                "handoff from prefill pool {p} landed outside decode pool {pair}"
+            );
+        }
     }
 
     #[test]

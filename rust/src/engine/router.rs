@@ -60,6 +60,17 @@ impl RoutePolicy {
     }
 }
 
+/// Splitmix-style avalanche so consecutive flow ids spread — shared by the
+/// full-membership and pool-scoped hash paths, and by the engine's
+/// flow-to-pool hash (same mix, different salt, so the two levels stay in
+/// the same hash family without correlating).
+pub(crate) fn avalanche(x: u64) -> u64 {
+    let mut x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
 /// Score weights for [`RoutePolicy::WeightedTelemetry`]: queue depth counts
 /// requests, KV occupancy is 0..1 (scaled up so a near-full cache outweighs
 /// a short queue), outstanding load breaks ties within a window.
@@ -88,7 +99,12 @@ pub struct Router {
     /// Last window's per-replica telemetry (queue depth, KV occupancy).
     telemetry_queue: Vec<f64>,
     telemetry_kv: Vec<f64>,
-    rr_next: usize,
+    /// Round-robin cursors, one per candidate set, keyed by the set's first
+    /// member (pools of a partition are disjoint, so `allowed[0]` uniquely
+    /// identifies a pool; the full membership keys `members[0]`). A shared
+    /// cursor would degenerate under interleaved pool picks — alternating
+    /// pools of equal size would pin each pool to one replica.
+    rr_cursors: Vec<usize>,
     pub routed: u64,
 }
 
@@ -115,24 +131,61 @@ impl Router {
             drained: vec![false; n_replicas],
             telemetry_queue: vec![0.0; n_replicas],
             telemetry_kv: vec![0.0; n_replicas],
-            rr_next: 0,
+            rr_cursors: vec![0; n_replicas],
             routed: 0,
         }
     }
 
     fn hash_flow(&self, flow: FlowId, salt: u64) -> usize {
-        // splitmix-style avalanche so consecutive flow ids spread.
-        let mut x = (flow.0 as u64 ^ salt).wrapping_add(0x9E3779B97F4A7C15);
-        x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-        x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
-        self.members[(x ^ (x >> 31)) as usize % self.members.len()]
+        self.members[avalanche(flow.0 as u64 ^ salt) as usize % self.members.len()]
     }
 
-    /// Argmin of `key` over non-drained members (lowest index wins ties);
-    /// falls back to the first member when everything is drained.
-    fn argmin_live(&self, key: impl Fn(usize) -> f64) -> usize {
+    /// The two hash candidates a flow has under power-of-two-choices
+    /// (exposed for the property tests).
+    pub fn po2_candidates(&self, flow: FlowId) -> (usize, usize) {
+        (self.hash_flow(flow, 0), self.hash_flow(flow, 0x51F7_A2C9))
+    }
+
+    /// Route a request's flow to a replica index (over the full membership).
+    pub fn route(&mut self, flow: FlowId) -> usize {
+        // One pick path serves both the classic and the pool-scoped routes:
+        // take the member table out for the pick (pick_in never reads it),
+        // so the full membership IS just the widest candidate set.
+        let members = std::mem::take(&mut self.members);
+        let r = self.route_in_inner(flow, &members);
+        self.members = members;
+        r
+    }
+
+    /// Route confined to `allowed` (a pool of the router's membership) —
+    /// the multi-pool plane's per-pick scoping. A full-pool `allowed` is
+    /// exactly the classic [`Router::route`]. Scoped picks honor overrides
+    /// and the pin only when their target sits inside the pool (pool
+    /// confinement outranks steering into another pool), and skip drained
+    /// replicas exactly like the classic path.
+    pub fn route_in(&mut self, flow: FlowId, allowed: &[usize]) -> usize {
+        debug_assert!(
+            allowed.iter().all(|&r| self.is_member(r)),
+            "pool {allowed:?} not a subset of members {:?}",
+            self.members
+        );
+        self.route_in_inner(flow, allowed)
+    }
+
+    fn route_in_inner(&mut self, flow: FlowId, allowed: &[usize]) -> usize {
+        self.routed += 1;
+        let r = self.pick_in(flow, allowed);
+        self.outstanding[r] += 1;
+        self.routed_per_replica[r] += 1;
+        r
+    }
+
+    /// Argmin of `key` over non-drained entries of `allowed` (lowest index
+    /// wins ties); falls back to the pool's first entry when everything in
+    /// it is drained.
+    fn argmin_live_in(&self, allowed: &[usize], key: impl Fn(usize) -> f64) -> usize {
         let mut best: Option<(usize, f64)> = None;
-        for &i in &self.members {
+        for &i in allowed {
             if self.drained[i] {
                 continue;
             }
@@ -144,54 +197,65 @@ impl Router {
         }
         match best {
             Some((i, _)) => i,
-            None => self.members[0],
+            None => allowed[0],
         }
     }
 
-    /// When a hash-selected replica is drained, deterministically fall back
-    /// to the least-loaded live replica.
-    fn redirect_if_drained(&self, r: usize) -> usize {
+    fn hash_in(&self, flow: FlowId, salt: u64, allowed: &[usize]) -> usize {
+        allowed[(avalanche(flow.0 as u64 ^ salt) % allowed.len() as u64) as usize]
+    }
+
+    fn redirect_if_drained_in(&self, r: usize, allowed: &[usize]) -> usize {
         if self.drained[r] {
-            self.argmin_live(|i| self.outstanding[i] as f64)
+            self.argmin_live_in(allowed, |i| self.outstanding[i] as f64)
         } else {
             r
         }
     }
 
-    /// The two hash candidates a flow has under power-of-two-choices
-    /// (exposed for the property tests).
-    pub fn po2_candidates(&self, flow: FlowId) -> (usize, usize) {
-        (self.hash_flow(flow, 0), self.hash_flow(flow, 0x51F7_A2C9))
-    }
-
-    fn pick(&mut self, flow: FlowId) -> usize {
-        // Mitigation overrides take precedence under every policy.
+    /// The single pick path: policy semantics over an explicit candidate
+    /// set (the full membership for classic routes, one pool for scoped
+    /// ones). Overrides take precedence under every policy, the PD3 pin
+    /// bypasses policy (but not overrides or drains) — both only when
+    /// their target sits inside the candidate set.
+    fn pick_in(&mut self, flow: FlowId, allowed: &[usize]) -> usize {
+        assert!(!allowed.is_empty(), "route over an empty candidate set");
         if let Some(&r) = self.overrides.get(&flow) {
-            return r;
+            if allowed.contains(&r) {
+                return r;
+            }
         }
-        // The PD3 wedge bypasses policy (but not overrides or drains).
         if let Some(p) = self.pin {
-            return self.redirect_if_drained(p);
+            if allowed.contains(&p) {
+                return self.redirect_if_drained_in(p, allowed);
+            }
         }
         match self.policy {
             RoutePolicy::FlowHash | RoutePolicy::HashWithOverrides => {
-                self.redirect_if_drained(self.hash_flow(flow, 0))
+                let r = self.hash_in(flow, 0, allowed);
+                self.redirect_if_drained_in(r, allowed)
             }
             RoutePolicy::RoundRobin => {
-                let m = self.members.len();
-                let mut k = self.rr_next % m;
+                // Per-pool cursor (keyed by the set's first member): each
+                // pool rotates independently of interleaved picks on its
+                // siblings.
+                let m = allowed.len();
+                let mut k = self.rr_cursors[allowed[0]] % m;
                 for _ in 0..m {
-                    if !self.drained[self.members[k]] {
+                    if !self.drained[allowed[k]] {
                         break;
                     }
                     k = (k + 1) % m;
                 }
-                self.rr_next = (k + 1) % m;
-                self.members[k]
+                self.rr_cursors[allowed[0]] = (k + 1) % m;
+                allowed[k]
             }
-            RoutePolicy::LeastLoaded => self.argmin_live(|i| self.outstanding[i] as f64),
+            RoutePolicy::LeastLoaded => {
+                self.argmin_live_in(allowed, |i| self.outstanding[i] as f64)
+            }
             RoutePolicy::PowerOfTwo => {
-                let (a, b) = self.po2_candidates(flow);
+                let (a, b) =
+                    (self.hash_in(flow, 0, allowed), self.hash_in(flow, 0x51F7_A2C9, allowed));
                 let r = match (self.drained[a], self.drained[b]) {
                     (true, false) => b,
                     (false, true) => a,
@@ -205,23 +269,14 @@ impl Router {
                         }
                     }
                 };
-                self.redirect_if_drained(r)
+                self.redirect_if_drained_in(r, allowed)
             }
-            RoutePolicy::WeightedTelemetry => self.argmin_live(|i| {
+            RoutePolicy::WeightedTelemetry => self.argmin_live_in(allowed, |i| {
                 self.telemetry_queue[i] * QUEUE_WEIGHT
                     + self.telemetry_kv[i] * KV_WEIGHT
                     + self.outstanding[i] as f64 * OUTSTANDING_WEIGHT
             }),
         }
-    }
-
-    /// Route a request's flow to a replica index.
-    pub fn route(&mut self, flow: FlowId) -> usize {
-        self.routed += 1;
-        let r = self.pick(flow);
-        self.outstanding[r] += 1;
-        self.routed_per_replica[r] += 1;
-        r
     }
 
     /// A request finished on replica `r` (load accounting).
@@ -434,6 +489,79 @@ mod tests {
             seen.insert(r.route(FlowId(f)));
         }
         assert!(seen.len() > 1, "pin not released");
+    }
+
+    #[test]
+    fn route_in_confines_picks_and_keeps_accounting() {
+        for policy in ALL_POLICIES {
+            let mut r = Router::new(6, policy);
+            let (pool_a, pool_b): (&[usize], &[usize]) = (&[0, 1, 2], &[3, 4, 5]);
+            for f in 0..200u32 {
+                let pool = if f % 2 == 0 { pool_a } else { pool_b };
+                let got = r.route_in(FlowId(f), pool);
+                assert!(pool.contains(&got), "{policy:?} escaped pool: {got}");
+            }
+            let per_replica: u64 = r.routed_per_replica().iter().sum();
+            assert_eq!(per_replica, r.routed);
+            assert_eq!(r.outstanding().iter().sum::<i64>(), 200);
+        }
+    }
+
+    #[test]
+    fn route_in_full_pool_matches_classic_route() {
+        for policy in ALL_POLICIES {
+            let mut classic = Router::new(4, policy);
+            let mut scoped = Router::new(4, policy);
+            for f in 0..300u32 {
+                assert_eq!(
+                    classic.route(FlowId(f)),
+                    scoped.route_in(FlowId(f), &[0, 1, 2, 3]),
+                    "{policy:?} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn route_in_round_robin_rotates_per_pool() {
+        // Interleaved picks across sibling pools must not collapse either
+        // pool's rotation (a shared cursor would pin each pool to one
+        // member under alternation).
+        let mut r = Router::new(4, RoutePolicy::RoundRobin);
+        let (a, b): (&[usize], &[usize]) = (&[0, 1], &[2, 3]);
+        let mut picks_a = Vec::new();
+        let mut picks_b = Vec::new();
+        for f in 0..8u32 {
+            picks_a.push(r.route_in(FlowId(f), a));
+            picks_b.push(r.route_in(FlowId(f), b));
+        }
+        assert_eq!(picks_a, vec![0, 1, 0, 1, 0, 1, 0, 1]);
+        assert_eq!(picks_b, vec![2, 3, 2, 3, 2, 3, 2, 3]);
+    }
+
+    #[test]
+    fn route_in_ignores_out_of_pool_pin_and_override() {
+        let mut r = Router::new(4, RoutePolicy::LeastLoaded);
+        r.set_pin(Some(0));
+        r.set_override(FlowId(7), 1);
+        // Pool {2, 3}: neither the pin (0) nor the override (1) may pull a
+        // pick out of the pool.
+        for f in [7u32, 8, 9] {
+            let got = r.route_in(FlowId(f), &[2, 3]);
+            assert!(got == 2 || got == 3, "escaped pool: {got}");
+        }
+        // In-pool pin and override still win.
+        assert_eq!(r.route_in(FlowId(3), &[0, 2]), 0, "in-pool pin ignored");
+        assert_eq!(r.route_in(FlowId(7), &[1, 3]), 1, "in-pool override ignored");
+    }
+
+    #[test]
+    fn route_in_skips_drained_replicas() {
+        let mut r = Router::new(4, RoutePolicy::FlowHash);
+        r.set_drained(2, true);
+        for f in 0..60u32 {
+            assert_eq!(r.route_in(FlowId(f), &[2, 3]), 3);
+        }
     }
 
     #[test]

@@ -14,6 +14,13 @@
 //!   kernels plus a Pallas telemetry-scoring kernel, AOT-lowered to HLO text
 //!   and executed from Rust via PJRT (`runtime/`). Python never serves.
 //!
+//! Per-condition knowledge (inject recipe, runbook row, root-cause mapping,
+//! directive, detector binding, shaping, label) lives in ONE place: the
+//! [`conditions`] catalog, one `ConditionSpec` per condition. `pathology`,
+//! `dpu::runbook`, `dpu::attribution`, the mitigation controller, and the
+//! fleet sensors dispatch through it — adding a condition is a one-module
+//! change (see `dpulens conditions`).
+//!
 //! ## Coordinator module map
 //!
 //! The serving plane (`coordinator/`) is decomposed into composable
@@ -44,6 +51,7 @@ pub mod cluster;
 pub mod workload;
 pub mod engine;
 
+pub mod conditions;
 pub mod dpu;
 pub mod mitigation;
 pub mod pathology;

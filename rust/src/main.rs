@@ -13,16 +13,24 @@
 //!             and/or deterministic JSON for trajectory tracking
 //!   fleet     [--replicas N] [--threads N] [--json] [--json-out PATH]
 //!             [--duration-ms N] [--seed S] [--disagg]
+//!             [--prefill-pools K] [--decode-pools M]
 //!             replicas × routing-policy sweep plus the DP1-DP3
 //!             data-parallel condition experiments (inject → detect →
 //!             mitigate), with per-replica skew columns; deterministic
 //!             JSON across runs and thread counts. `--disagg` appends the
 //!             phase-disaggregation study (colocated vs 2-pool topology +
-//!             the PD1-PD3 family) and bumps the JSON to dpulens.fleet.v2
+//!             the PD1-PD3 family) and bumps the JSON to dpulens.fleet.v2;
+//!             a pool-count flag appends the K×M multi-pool study (per-pool
+//!             DP scoping, pool-pair handoff accounting, every fleet
+//!             condition as a catalog-driven triple) and bumps it to v3
 //!   perf      [--quick] [--replicates N] [--threads N] [--json-out PATH]
 //!             pipeline benchmark: batched ingest throughput, snapshot
 //!             latency, and matrix/fleet end-to-end wall-clock, written
 //!             as BENCH_pipeline.json (schema dpulens.perf.v1)
+//!   conditions [--md] [--json] [--json-out PATH]
+//!             render the condition catalog (rust/src/conditions/) as a
+//!             table, markdown (the EXPERIMENTS.md source of truth), or
+//!             deterministic JSON (dpulens.conditions.v1)
 //!   runbook                          print the encoded runbook tables
 //!   signals                          print the Table 2(b) signal inventory
 //!   attribution <COND>               inject + show root-cause attribution
@@ -188,7 +196,7 @@ fn cmd_matrix(args: &[String]) {
 }
 
 fn cmd_fleet(args: &[String]) {
-    use dpulens::coordinator::fleet::{run_fleet, FleetConfig};
+    use dpulens::coordinator::fleet::{run_fleet, FleetConfig, MultiPoolSpec};
     let replicas = opt_parse::<usize>(args, "--replicas").unwrap_or(4).max(1);
     let mut fc = FleetConfig::new(replicas);
     if let Some(ms) = opt_parse::<u64>(args, "--duration-ms") {
@@ -201,6 +209,22 @@ fn cmd_fleet(args: &[String]) {
         fc.threads = t;
     }
     fc.disagg = flag(args, "--disagg");
+    // Any pool-count flag opts into the multi-pool study (schema v3); the
+    // topology takes its replica count from --replicas.
+    let prefill_pools = opt_parse::<usize>(args, "--prefill-pools");
+    let decode_pools = opt_parse::<usize>(args, "--decode-pools");
+    if prefill_pools.is_some() || decode_pools.is_some() {
+        let mp = MultiPoolSpec {
+            replicas,
+            prefill_pools: prefill_pools.unwrap_or(1).max(1),
+            decode_pools: decode_pools.unwrap_or(1).max(1),
+        };
+        if let Err(e) = mp.validate() {
+            eprintln!("fleet: {e}");
+            std::process::exit(2);
+        }
+        fc.multipool = Some(mp);
+    }
     let report = run_fleet(&fc);
     if flag(args, "--json") {
         println!("{}", report.to_json().render());
@@ -258,6 +282,25 @@ fn cmd_perf(args: &[String]) {
     eprintln!("perf JSON written to {path}");
 }
 
+fn cmd_conditions(args: &[String]) {
+    // The condition catalog, straight from rust/src/conditions/ — the
+    // single source every layer dispatches through. `--md` emits the
+    // markdown table EXPERIMENTS.md §Condition catalog is regenerated from.
+    if flag(args, "--md") {
+        print!("{}", dpulens::conditions::render_markdown());
+    } else if flag(args, "--json") {
+        println!("{}", dpulens::conditions::to_json().render());
+    } else {
+        print!("{}", dpulens::conditions::render_table());
+    }
+    if let Some(path) = opt_val(args, "--json-out") {
+        let mut body = dpulens::conditions::to_json().render();
+        body.push('\n');
+        std::fs::write(&path, body).expect("writing conditions JSON");
+        eprintln!("conditions JSON written to {path}");
+    }
+}
+
 fn cmd_runbook() {
     for table in ["3a", "3b", "3c", "dp", "pd"] {
         let title = match table {
@@ -267,11 +310,12 @@ fn cmd_runbook() {
             "dp" => "DP Fleet Runbook (data-parallel extension)",
             _ => "PD Runbook (phase-disaggregation extension)",
         };
-        let mut t =
-            Table::new(title).header(&["id", "signal (red flag)", "root cause", "directive"]);
+        let mut t = Table::new(title)
+            .header(&["id", "label", "signal (red flag)", "root cause", "directive"]);
         for e in runbook::all_entries().into_iter().filter(|e| e.condition.table() == table) {
             t.row(vec![
                 e.condition.id().into(),
+                dpulens::conditions::spec(e.condition).label.into(),
                 e.signal.into(),
                 e.root_cause.into(),
                 e.directive.paper_text().into(),
@@ -325,6 +369,7 @@ fn main() {
         Some("matrix") => cmd_matrix(&args[1..]),
         Some("fleet") => cmd_fleet(&args[1..]),
         Some("perf") => cmd_perf(&args[1..]),
+        Some("conditions") => cmd_conditions(&args[1..]),
         Some("runbook") => cmd_runbook(),
         Some("signals") => cmd_signals(),
         Some("attribution") => cmd_attribution(&args[1..]),
@@ -377,12 +422,15 @@ mod tests {
                 "--duration-ms",
                 "--seed",
                 "--disagg",
+                "--prefill-pools",
+                "--decode-pools",
             ],
         ),
         (
             "perf",
             &["--quick", "--micro-only", "--replicates", "--replicas", "--threads", "--json-out"],
         ),
+        ("conditions", &["--md", "--json", "--json-out"]),
         ("runbook", &[]),
         ("signals", &[]),
         ("attribution", &["--duration-ms", "--rate", "--seed", "--profile", "--mitigate"]),

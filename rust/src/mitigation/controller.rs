@@ -8,7 +8,6 @@
 
 use crate::cluster::Cluster;
 use crate::dpu::detectors::Detection;
-use crate::dpu::runbook;
 use crate::engine::Engine;
 use crate::ids::NodeId;
 use crate::mitigation::directive::Directive;
@@ -50,24 +49,10 @@ impl Controller {
         }
         let mut applied = 0;
         for det in detections {
-            let directive = runbook::entry(det.condition).directive;
-            let node_scope = match directive {
-                // Node-scoped host fixes target the detected node.
-                Directive::PinMemoryPools
-                | Directive::FixReturnPath
-                | Directive::FuseKernelsIsolateCpu
-                | Directive::MovePcieTenants
-                | Directive::PreferNvlink
-                | Directive::PersistentRegistration
-                | Directive::ZeroCopyEgress
-                | Directive::PinIrqsIsolateThreads
-                | Directive::FixIngressPath
-                | Directive::FixEgressPath
-                | Directive::QosPartitionNic
-                | Directive::SmoothAdmission
-                | Directive::DrainStragglerReplica => Some(det.node),
-                _ => None,
-            };
+            // The detection → directive mapping is catalog knowledge; the
+            // node scope is directive knowledge. No condition arms here.
+            let directive = crate::conditions::spec(det.condition).directive;
+            let node_scope = if directive.node_scoped() { Some(det.node) } else { None };
             if !self.applied.insert((directive, node_scope)) {
                 continue; // already applied
             }

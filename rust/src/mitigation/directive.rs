@@ -63,6 +63,30 @@ pub enum Directive {
 }
 
 impl Directive {
+    /// Whether the directive's knob changes target the detected node (host
+    /// fixes, NIC path fixes, per-replica drains) rather than the fabric,
+    /// engine policy, or fleet-wide state. Directive-level knowledge: the
+    /// controller applies one action per (directive, scope) pair.
+    pub fn node_scoped(&self) -> bool {
+        use Directive::*;
+        matches!(
+            self,
+            PinMemoryPools
+                | FixReturnPath
+                | FuseKernelsIsolateCpu
+                | MovePcieTenants
+                | PreferNvlink
+                | PersistentRegistration
+                | ZeroCopyEgress
+                | PinIrqsIsolateThreads
+                | FixIngressPath
+                | FixEgressPath
+                | QosPartitionNic
+                | SmoothAdmission
+                | DrainStragglerReplica
+        )
+    }
+
     /// The paper's own wording for the directive (report rendering).
     pub fn paper_text(&self) -> &'static str {
         use Directive::*;

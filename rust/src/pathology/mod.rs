@@ -1,303 +1,21 @@
-//! Fault injection: one injector per runbook condition. Each injector turns
-//! the knobs that create exactly the paper's "likely root cause" for that
-//! row, so the detection benches validate signal → condition → directive
-//! end to end.
+//! Fault injection, dispatched through the condition catalog: each
+//! condition's injector (the knobs that create exactly the paper's "likely
+//! root cause" for that row) lives in its [`crate::conditions`] spec, and
+//! this module is the stable facade the scenario loop and benches call.
+//! The behavioral tests stay here: they pin down what injection and healing
+//! DO, regardless of where the recipes live.
 
-use crate::cluster::Cluster;
-use crate::dpu::detectors::Condition;
-use crate::engine::Engine;
-use crate::ids::NodeId;
-use crate::sim::dist::{Arrival, LengthDist};
-use crate::workload::generator::WorkloadSpec;
-
-/// Where a condition's knobs live.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum InjectSite {
-    /// Per-node hardware knobs (which node matters).
-    Node,
-    /// Fabric-wide knobs.
-    Fabric,
-    /// Workload generator shape.
-    Workload,
-    /// Engine policy / parallel plan.
-    Engine,
-}
-
-/// Which subsystem an injection touches (used by scenarios to decide whether
-/// the workload generator must be rebuilt).
-pub fn site(c: Condition) -> InjectSite {
-    use Condition::*;
-    match c {
-        Ns1BurstBacklog | Ns2IngressStarvation | Ns3FlowSkew => InjectSite::Workload,
-        Ns8EarlyCompletion | Pc10DecodeEarlyStop => InjectSite::Workload,
-        Dp1RouterFlowSkew | Pd1PrefillSaturation => InjectSite::Workload,
-        Ew2PpBubble | Ew3CrossNodeSkew | Dp2HotReplicaKv | Pd3DecodeStarvation => {
-            InjectSite::Engine
-        }
-        Ew4Congestion | Ew5HolBlocking | Ew6Retransmissions | Ew7CreditStarvation
-        | Ew8KvBottleneck | Pd2KvHandoffStall => InjectSite::Fabric,
-        _ => InjectSite::Node,
-    }
-}
-
-/// Apply the injection for `c`. `target` selects the victim node for
-/// node-scoped conditions (for egress-side conditions pass an exit node;
-/// for ingress/PCIe conditions an entry node). Returns a description of
-/// what was injected (for EXPERIMENTS.md / report evidence).
-pub fn inject(
-    c: Condition,
-    target: NodeId,
-    cluster: &mut Cluster,
-    engine: &mut Engine,
-    wl: &mut WorkloadSpec,
-) -> String {
-    use Condition::*;
-    let knobs = &mut cluster.nodes[target.idx()].knobs;
-    match c {
-        // ---- workload-shaped (Table 3a root causes) ----
-        Ns1BurstBacklog => {
-            wl.arrival = Arrival::OnOff {
-                on_rate: 3000.0,
-                off_rate: 5.0,
-                mean_on_s: 0.02,
-                mean_off_s: 0.08,
-            };
-            "ON-OFF client bursts (3000 req/s in 20ms spikes)".into()
-        }
-        Ns2IngressStarvation => {
-            // Upstream service jitter: traffic pauses entirely for long
-            // stretches, then resumes at the normal rate (thin, gappy feed).
-            wl.arrival = Arrival::OnOff {
-                on_rate: 400.0,
-                off_rate: 0.0,
-                mean_on_s: 0.025,
-                mean_off_s: 0.12,
-            };
-            wl.thin_session_frac = 0.4;
-            wl.thin_extra_gap_s = 0.05;
-            "upstream jitter: ~120ms silences between normal-rate bursts".into()
-        }
-        Ns3FlowSkew => {
-            wl.session_skew = 1.6;
-            "Zipf(1.6) session selection: few flows dominate ingress".into()
-        }
-        Ns8EarlyCompletion => {
-            wl.output_len = LengthDist::Bimodal { short: 2, long: 48, p_short: 0.5 };
-            for r in &mut engine.replicas {
-                r.batcher.policy_mut().inflight_remap = false;
-            }
-            "bimodal output lengths (2 vs 48 tokens), freed slots not remapped".into()
-        }
-        Pc10DecodeEarlyStop => {
-            wl.output_len = LengthDist::Bimodal { short: 2, long: 48, p_short: 0.6 };
-            for r in &mut engine.replicas {
-                r.batcher.policy_mut().inflight_remap = false;
-            }
-            "sequence-length variance with no decode rebalancing".into()
-        }
-        // ---- node hardware knobs (Tables 3a/3b root causes) ----
-        Ns4IngressRetx => {
-            knobs.nic_rx_loss = 0.15;
-            format!("15% ingress loss on {target} (MTU mismatch/link errors)")
-        }
-        Ns5EgressBacklog => {
-            knobs.cpu_contention = 3.5;
-            knobs.nic_tx_buffer_factor = 0.35;
-            format!("CPU copy bottleneck + small TX buffers on {target}")
-        }
-        Ns6EgressJitter => {
-            knobs.egress_jitter = 3.0;
-            format!("egress scheduler variance on {target}")
-        }
-        Ns7EgressRetx => {
-            knobs.nic_tx_loss = 0.15;
-            format!("15% egress loss on {target} (offload misconfig)")
-        }
-        Ns9BandwidthSaturation => {
-            knobs.nic_background_frac = 0.85;
-            format!("background tenant burns 85% of {target}'s NIC")
-        }
-        Pc1H2dStarvation => {
-            knobs.h2d_bw_factor = 0.12;
-            knobs.unpinned_buffers = true;
-            format!("H2D capped to 12% + pageable buffers on {target}")
-        }
-        Pc2D2hBottleneck => {
-            knobs.d2h_bw_factor = 0.12;
-            knobs.pcie_extra_lat_ns = 25_000;
-            format!("D2H capped to 12% + IOMMU contention on {target}")
-        }
-        Pc3LaunchLatency => {
-            knobs.doorbell_delay_ns = 150_000;
-            knobs.kernel_fission = 12;
-            format!("runtime launch overhead + tiny-kernel storm on {target}")
-        }
-        Pc4IntraNodeSkew => {
-            // Memory pressure on one GPU: the scheduler underfeeds it.
-            let stage_idx = engine
-                .replicas
-                .iter()
-                .position(|r| r.plan.stages.iter().any(|s| s.nodes.contains(&target)));
-            if let Some(ri) = stage_idx {
-                let plan = &mut engine.replicas[ri].plan;
-                let si = plan.stages.iter().position(|s| s.nodes.contains(&target)).unwrap();
-                let gi = plan.stages[si]
-                    .gpus
-                    .iter()
-                    .position(|&g| cluster.spec.node_of_gpu(g) == target)
-                    .unwrap();
-                plan.skew_shards(si, gi, 0.1);
-            }
-            cluster.nodes[target.idx()].knobs.gpu_speed_factor[0] = 0.6;
-            format!("one GPU on {target} underfed (memory pressure) and slowed")
-        }
-        Pc5PcieSaturation => {
-            knobs.pcie_background_load = 0.8;
-            format!("competing DMA tenant burns 80% of {target}'s PCIe")
-        }
-        Pc6P2pThrottling => {
-            knobs.p2p_over_pcie = true;
-            knobs.pcie_background_load = 0.3;
-            format!("P2P forced over shared PCIe switch on {target}")
-        }
-        Pc7PinnedShortage => {
-            knobs.pinned_pool_frag = true;
-            format!("pinned pool fragmented on {target}: DMAs split small")
-        }
-        Pc8HostCpuBottleneck => {
-            knobs.cpu_contention = 4.0;
-            knobs.doorbell_delay_ns = 60_000;
-            format!("host CPU contention on {target}: doorbells delayed")
-        }
-        Pc9RegistrationChurn => {
-            knobs.mem_reg_churn = true;
-            format!("short-lived buffers: map/unmap around every DMA on {target}")
-        }
-        Ew1TpStraggler => {
-            knobs.gpu_speed_factor[0] = 0.2;
-            format!("GPU0 on {target} runs at 20% speed (straggling shard)")
-        }
-        Ew9EarlyStopSkew => {
-            knobs.collective_silence = 0.5;
-            format!("{target} goes silent in 50% of collectives (unmasked early exit)")
-        }
-        // ---- engine / plan (Table 3c root causes) ----
-        Ew2PpBubble => {
-            for r in &mut engine.replicas {
-                r.plan.overload_stage(0, 3.0);
-            }
-            "stage 0 mispartitioned (3x recompute): downstream stages idle".into()
-        }
-        Ew3CrossNodeSkew => {
-            for r in &mut engine.replicas {
-                let n_g = r.plan.stages[0].shard_frac.len();
-                for g in 0..n_g / 2 {
-                    r.plan.skew_shards(0, g, 4.0);
-                }
-            }
-            "activation partitioning misaligned: one node owns most shards".into()
-        }
-        // ---- fabric knobs ----
-        Ew4Congestion => {
-            cluster.fabric_knobs.hot_uplink_load = 5.0;
-            cluster.fabric_knobs.hot_node = None;
-            "fat-tree uplinks oversubscribed 5x (hot ToR)".into()
-        }
-        Ew5HolBlocking => {
-            cluster.fabric_knobs.hol_blocking = true;
-            "shared-queue exhaustion: flows serialize through one queue".into()
-        }
-        Ew6Retransmissions => {
-            cluster.fabric_knobs.loss_prob = 0.10;
-            "10% fabric loss (misconfigured PFC)".into()
-        }
-        Ew7CreditStarvation => {
-            cluster.fabric_knobs.credit_window = 2;
-            "RDMA QP window shrunk to 2 (credit depletion)".into()
-        }
-        Ew8KvBottleneck => {
-            cluster.fabric_knobs.kv_link_budget_factor = 0.12;
-            wl.prompt_len = LengthDist::Uniform { lo: 48, hi: 64 };
-            "sharded KV exceeds link budget (12%) with long prompts".into()
-        }
-        // ---- data-parallel fleet family (DP1-DP3) ----
-        Dp1RouterFlowSkew => {
-            wl.n_sessions = 12;
-            wl.session_skew = 2.5;
-            if let Arrival::Poisson { rate } = &wl.arrival {
-                let surged = rate * 2.5;
-                wl.arrival = Arrival::Poisson { rate: surged };
-            }
-            engine.router.set_policy(crate::engine::RoutePolicy::FlowHash);
-            "flash crowd: Zipf(2.5) over 12 sessions at 2.5x rate under affinity hashing".into()
-        }
-        Dp2HotReplicaKv => {
-            let ri = engine.replica_of_node(target).unwrap_or(0);
-            engine.replicas[ri].kv.start_leak();
-            format!("replica {ri} KV allocator leaks: freed pages never return, admissions thrash")
-        }
-        Dp3StragglerReplica => {
-            let ri = engine.replica_of_node(target).unwrap_or(0);
-            for n in engine.replicas[ri].plan.all_nodes() {
-                for f in &mut cluster.nodes[n.idx()].knobs.gpu_speed_factor {
-                    *f = 0.05;
-                }
-            }
-            format!("replica {ri} degraded: every GPU at 5% speed (straggler replica)")
-        }
-        // ---- phase-disaggregation family (PD1-PD3) ----
-        Pd1PrefillSaturation => {
-            // Prompt flood: long prompts at a surged rate overrun the
-            // prefill pool while decode demand (tokens out) barely moves.
-            wl.prompt_len = LengthDist::Uniform { lo: 48, hi: 64 };
-            if let Arrival::Poisson { rate } = &wl.arrival {
-                let surged = rate * 2.5;
-                wl.arrival = Arrival::Poisson { rate: surged };
-            }
-            "prompt flood: 48-64-token prompts at 2.5x rate overrun the prefill pool".into()
-        }
-        Pd2KvHandoffStall => {
-            cluster.fabric_knobs.handoff_budget_factor = 0.2;
-            "prefill→decode KV-handoff link budget collapsed to 20%".into()
-        }
-        Pd3DecodeStarvation => {
-            // Wedged handoff routing: every phase transition lands on one
-            // decode replica; its pool peers starve.
-            let hot = engine
-                .replica_of_node(target)
-                .filter(|&ri| engine.replicas[ri].plan.shape.role.serves_decode())
-                .unwrap_or_else(|| engine.decode_router.members()[0]);
-            engine.decode_router.set_pin(Some(hot));
-            format!("handoff routing wedged: every KV handoff lands on decode replica {hot}")
-        }
-    }
-}
-
-/// Revert everything an injection touched (used between bench scenarios).
-pub fn heal_all(cluster: &mut Cluster, engine: &mut Engine, wl: &mut WorkloadSpec) {
-    cluster.heal();
-    for r in &mut engine.replicas {
-        r.plan.rebalance();
-        r.kv.restore_capacity();
-        let pol = r.batcher.policy_mut();
-        pol.inflight_remap = true;
-        pol.continuous = true;
-    }
-    engine.reset_roles();
-    engine.router.clear_overrides();
-    engine.router.clear_drained();
-    engine.decode_router.set_pin(None);
-    engine.decode_router.clear_overrides();
-    engine.decode_router.clear_drained();
-    *wl = WorkloadSpec::default();
-}
+pub use crate::conditions::{heal_all, inject, site, InjectCtx, InjectSite};
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::ClusterSpec;
-    use crate::dpu::detectors::ALL_CONDITIONS;
-    use crate::engine::{build_replicas, EngineConfig};
+    use crate::cluster::{Cluster, ClusterSpec};
+    use crate::dpu::detectors::{Condition, ALL_CONDITIONS};
+    use crate::engine::{build_replicas, Engine, EngineConfig};
+    use crate::ids::NodeId;
+    use crate::sim::dist::{Arrival, LengthDist};
+    use crate::workload::generator::WorkloadSpec;
 
     fn setup() -> (Cluster, Engine, WorkloadSpec) {
         let cfg = EngineConfig::default();
@@ -454,5 +172,21 @@ mod tests {
         for r in &engine.replicas {
             r.plan.check().unwrap();
         }
+    }
+
+    #[test]
+    fn injected_descriptions_match_the_catalog_recipes() {
+        // The facade and the catalog agree: dispatching through either path
+        // produces the same world mutation and description.
+        let (mut cluster, mut engine, mut wl) = setup();
+        let desc =
+            inject(Condition::Ew6Retransmissions, NodeId(0), &mut cluster, &mut engine, &mut wl);
+        assert!(desc.contains("10% fabric loss"));
+        assert_eq!(cluster.fabric_knobs.loss_prob, 0.10);
+        let mut arrival_changed = false;
+        if let Arrival::OnOff { .. } = wl.arrival {
+            arrival_changed = true;
+        }
+        assert!(!arrival_changed, "EW6 must not touch the workload");
     }
 }

@@ -90,7 +90,7 @@ pub const CLI: &[CmdSpec] = &[
     },
     CmdSpec {
         name: "fleet",
-        summary: "replicas x routing-policy sweep + DP (and, with --disagg, PD) studies",
+        summary: "replicas x routing-policy sweep + DP/PD studies (+ multi-pool via pool flags)",
         flags: &[
             fv("--replicas", "N"),
             fv("--threads", "N"),
@@ -99,6 +99,8 @@ pub const CLI: &[CmdSpec] = &[
             fv("--duration-ms", "N"),
             fv("--seed", "S"),
             f("--disagg"),
+            fv("--prefill-pools", "K"),
+            fv("--decode-pools", "M"),
         ],
     },
     CmdSpec {
@@ -112,6 +114,11 @@ pub const CLI: &[CmdSpec] = &[
             fv("--threads", "N"),
             fv("--json-out", "PATH"),
         ],
+    },
+    CmdSpec {
+        name: "conditions",
+        summary: "render the condition catalog (table, markdown, or JSON)",
+        flags: &[f("--md"), f("--json"), fv("--json-out", "PATH")],
     },
     CmdSpec { name: "runbook", summary: "print the encoded runbook tables", flags: &[] },
     CmdSpec { name: "signals", summary: "print the Table 2(b) signal inventory", flags: &[] },

@@ -107,6 +107,7 @@ fn fleet_json_is_deterministic_across_threads() {
         policies: vec![RoutePolicy::FlowHash, RoutePolicy::PowerOfTwo],
         threads,
         disagg: false,
+        multipool: None,
     };
 
     let a = run_fleet(&mk(2)).to_json().render();
