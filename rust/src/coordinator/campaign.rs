@@ -1,0 +1,1014 @@
+//! The campaign runner: `dpulens campaign <manifest>` expands a declarative
+//! manifest into workload × topology × condition permutations and runs every
+//! cell through the same parallel machinery as the matrix/fleet sweeps.
+//!
+//! A manifest is a small TOML-subset file (serde/toml are not vendored
+//! offline, so the parser here is hand-rolled and strict):
+//!
+//! ```toml
+//! [campaign]
+//! name = "smoke"
+//! seed = 42
+//! duration_ms = 1200
+//! conditions = ["healthy", "NS2"]
+//!
+//! [[tenant]]
+//! name = "interactive"
+//! priority = 0
+//! share = 0.5
+//! ttft_slo_ms = 2.0
+//! tpot_slo_ms = 1.0
+//!
+//! [[workload]]
+//! name = "steady"
+//! arrival = "poisson:300"
+//! prompt = "pareto:1.4:8:96"
+//!
+//! [[topology]]
+//! name = "single"
+//! kind = "single"
+//! ```
+//!
+//! Supported value grammars (all colon-separated spec strings):
+//!
+//! * `arrival`    — `poisson:RATE` | `uniform:RATE` |
+//!   `onoff:ON_RATE:OFF_RATE:MEAN_ON_S:MEAN_OFF_S`
+//! * `rate_shape` — `constant` | `diurnal:PERIOD_S:MIN_FACTOR` |
+//!   `ramp:FROM:TO:RAMP_S` | `flash:AT_S:SURGE:DECAY_S`, composable with
+//!   `*` (product), e.g. `diurnal:60:0.5*flash:0.6:4:0.2`
+//! * `prompt`/`output` — `fixed:N` | `uniform:LO:HI` |
+//!   `lognormal:MU:SIGMA:LO:HI` | `bimodal:SHORT:LONG:P_SHORT` |
+//!   `pareto:ALPHA:LO:HI`
+//! * `conditions` — `"healthy"` or any catalog id (`NS2`, `PC5`, ...)
+//! * topology `kind` — `single` | `fleet` (with `replicas`) | `disagg`
+//!
+//! Each cell runs the manifest workload *verbatim* (no catalog shaping —
+//! the campaign answers "what does MY traffic look like under condition C",
+//! not "can the detector fire on its tuned scenario"), injecting at the
+//! standard post-calibration instant. The report carries per-cell detection
+//! metrics and per-tenant SLO attainment, and its JSON
+//! (`dpulens.campaign.v1`) is byte-identical across runs and thread counts:
+//! cells are enumerated in manifest order, results come back in input order
+//! (`util::par`), detection counts aggregate through a `BTreeMap`, and
+//! wall-clock/thread fields stay out of the JSON.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::experiment::{inject_time, standard_cfg};
+use crate::coordinator::fleet::{disagg_base_cfg, fleet_base_cfg};
+use crate::coordinator::scenario::{Scenario, ScenarioCfg};
+use crate::dpu::detectors::Condition;
+use crate::metrics::TenantLane;
+use crate::sim::dist::{Arrival, LengthDist, RateShape};
+use crate::sim::{SimDur, SimTime};
+use crate::util::json::Json;
+use crate::util::par::{parallel_map, resolve_threads};
+use crate::util::table::Table;
+use crate::workload::generator::WorkloadSpec;
+use crate::workload::TenantClass;
+
+// ---------------------------------------------------------------------------
+// Manifest model
+// ---------------------------------------------------------------------------
+
+/// One axis value of the condition dimension: the healthy control or an
+/// injected catalog condition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellCondition {
+    Healthy,
+    Injected(Condition),
+}
+
+impl CellCondition {
+    pub fn id(self) -> &'static str {
+        match self {
+            CellCondition::Healthy => "healthy",
+            CellCondition::Injected(c) => c.id(),
+        }
+    }
+}
+
+/// One `[[workload]]` entry: a named set of overrides on the topology's
+/// base [`WorkloadSpec`]. Unset fields keep the topology default.
+#[derive(Debug, Clone, Default)]
+pub struct WorkloadDef {
+    pub name: String,
+    pub arrival: Option<Arrival>,
+    pub rate_shape: Option<RateShape>,
+    pub prompt: Option<LengthDist>,
+    pub output: Option<LengthDist>,
+    pub sessions: Option<usize>,
+    pub skew: Option<f64>,
+    pub thin_frac: Option<f64>,
+    pub thin_gap_s: Option<f64>,
+}
+
+impl WorkloadDef {
+    fn apply(&self, wl: &mut WorkloadSpec) {
+        if let Some(a) = self.arrival {
+            wl.arrival = a;
+        }
+        if let Some(ref s) = self.rate_shape {
+            wl.rate_shape = s.clone();
+        }
+        if let Some(p) = self.prompt {
+            wl.prompt_len = p;
+        }
+        if let Some(o) = self.output {
+            wl.output_len = o;
+        }
+        if let Some(n) = self.sessions {
+            wl.n_sessions = n.max(1);
+        }
+        if let Some(s) = self.skew {
+            wl.session_skew = s;
+        }
+        if let Some(f) = self.thin_frac {
+            wl.thin_session_frac = f;
+        }
+        if let Some(g) = self.thin_gap_s {
+            wl.thin_extra_gap_s = g;
+        }
+    }
+}
+
+/// The topology a cell is simulated on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// The standard single-replica serving scenario.
+    Single,
+    /// N colocated replicas (the fleet study's base world).
+    Fleet { replicas: usize },
+    /// The canonical 2-pool phase-disaggregated world (1 prefill + 2 decode).
+    Disagg,
+}
+
+/// One `[[topology]]` entry.
+#[derive(Debug, Clone)]
+pub struct TopologyDef {
+    pub name: String,
+    pub kind: TopologyKind,
+}
+
+impl TopologyDef {
+    fn base_cfg(&self) -> ScenarioCfg {
+        match self.kind {
+            TopologyKind::Single => standard_cfg(),
+            TopologyKind::Fleet { replicas } => fleet_base_cfg(replicas),
+            TopologyKind::Disagg => disagg_base_cfg(),
+        }
+    }
+}
+
+/// A parsed campaign manifest: the cell axes plus the shared run knobs.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    pub name: String,
+    pub seed: u64,
+    pub duration: SimDur,
+    pub warmup_windows: u64,
+    pub calib_windows: u64,
+    pub tenants: Vec<TenantClass>,
+    pub conditions: Vec<CellCondition>,
+    pub workloads: Vec<WorkloadDef>,
+    pub topologies: Vec<TopologyDef>,
+    /// Worker threads; 0 = one per available core. CLI-set, not manifest.
+    pub threads: usize,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        CampaignConfig {
+            name: "campaign".to_string(),
+            seed: 42,
+            duration: SimDur::from_ms(1200),
+            warmup_windows: 10,
+            calib_windows: 40,
+            tenants: Vec::new(),
+            conditions: Vec::new(),
+            workloads: Vec::new(),
+            topologies: Vec::new(),
+            threads: 0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TOML-subset parser
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum TomlVal {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    StrArr(Vec<String>),
+}
+
+impl TomlVal {
+    fn kind(&self) -> &'static str {
+        match self {
+            TomlVal::Str(_) => "string",
+            TomlVal::Num(_) => "number",
+            TomlVal::Bool(_) => "bool",
+            TomlVal::StrArr(_) => "string array",
+        }
+    }
+}
+
+/// One `[header]` or `[[header]]` block and its `key = value` entries.
+#[derive(Debug)]
+struct Section {
+    header: String,
+    array: bool,
+    line: usize,
+    entries: Vec<(String, TomlVal)>,
+}
+
+impl Section {
+    fn get(&self, key: &str) -> Option<&TomlVal> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    fn str(&self, key: &str) -> Result<Option<&str>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(TomlVal::Str(s)) => Ok(Some(s)),
+            Some(v) => Err(format!("[{}] {key}: expected a string, got {}", self.header, v.kind())),
+        }
+    }
+
+    fn num(&self, key: &str) -> Result<Option<f64>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(TomlVal::Num(x)) => Ok(Some(*x)),
+            Some(v) => Err(format!("[{}] {key}: expected a number, got {}", self.header, v.kind())),
+        }
+    }
+
+    fn strs(&self, key: &str) -> Result<Option<&[String]>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(TomlVal::StrArr(v)) => Ok(Some(v)),
+            Some(v) => Err(format!(
+                "[{}] {key}: expected a string array, got {}",
+                self.header,
+                v.kind()
+            )),
+        }
+    }
+
+    /// Reject unknown keys — a typo'd knob must fail loudly, not silently
+    /// run the default.
+    fn check_keys(&self, allowed: &[&str]) -> Result<(), String> {
+        for (k, _) in &self.entries {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!(
+                    "[{}] (line {}): unknown key {k:?}; allowed: {}",
+                    self.header,
+                    self.line,
+                    allowed.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Strip a trailing `#` comment, ignoring `#` inside quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str, ln: usize) -> Result<TomlVal, String> {
+    if let Some(s) = v.strip_prefix('"') {
+        let s = s
+            .strip_suffix('"')
+            .ok_or_else(|| format!("line {ln}: unterminated string {v:?}"))?;
+        return Ok(TomlVal::Str(s.to_string()));
+    }
+    if v == "true" {
+        return Ok(TomlVal::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlVal::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| format!("line {ln}: arrays must open and close on one line"))?;
+        let mut items = Vec::new();
+        for piece in inner.split(',') {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                continue; // trailing comma
+            }
+            let s = piece
+                .strip_prefix('"')
+                .and_then(|p| p.strip_suffix('"'))
+                .ok_or_else(|| format!("line {ln}: array items must be quoted strings"))?;
+            items.push(s.to_string());
+        }
+        return Ok(TomlVal::StrArr(items));
+    }
+    v.parse::<f64>()
+        .map(TomlVal::Num)
+        .map_err(|_| format!("line {ln}: unparsable value {v:?}"))
+}
+
+fn parse_sections(text: &str) -> Result<Vec<Section>, String> {
+    let mut sections: Vec<Section> = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let ln = i + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(h) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            sections.push(Section {
+                header: h.trim().to_string(),
+                array: true,
+                line: ln,
+                entries: Vec::new(),
+            });
+        } else if let Some(h) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            sections.push(Section {
+                header: h.trim().to_string(),
+                array: false,
+                line: ln,
+                entries: Vec::new(),
+            });
+        } else if let Some((k, v)) = line.split_once('=') {
+            let section = sections
+                .last_mut()
+                .ok_or_else(|| format!("line {ln}: key before any [section]"))?;
+            section.entries.push((k.trim().to_string(), parse_value(v.trim(), ln)?));
+        } else {
+            return Err(format!("line {ln}: expected [section] or key = value, got {line:?}"));
+        }
+    }
+    Ok(sections)
+}
+
+// ---------------------------------------------------------------------------
+// Spec-string grammars
+// ---------------------------------------------------------------------------
+
+fn numf(s: &str, what: &str) -> Result<f64, String> {
+    s.parse::<f64>().map_err(|_| format!("{what}: bad number {s:?}"))
+}
+
+fn parse_arrival(s: &str) -> Result<Arrival, String> {
+    let p: Vec<&str> = s.split(':').collect();
+    match (p[0], p.len()) {
+        ("poisson", 2) => Ok(Arrival::Poisson { rate: numf(p[1], "arrival")? }),
+        ("uniform", 2) => Ok(Arrival::Uniform { rate: numf(p[1], "arrival")? }),
+        ("onoff", 5) => Ok(Arrival::OnOff {
+            on_rate: numf(p[1], "arrival")?,
+            off_rate: numf(p[2], "arrival")?,
+            mean_on_s: numf(p[3], "arrival")?,
+            mean_off_s: numf(p[4], "arrival")?,
+        }),
+        _ => Err(format!(
+            "arrival {s:?}: expected poisson:RATE | uniform:RATE | \
+             onoff:ON:OFF:MEAN_ON_S:MEAN_OFF_S"
+        )),
+    }
+}
+
+fn parse_one_shape(s: &str) -> Result<RateShape, String> {
+    let p: Vec<&str> = s.split(':').collect();
+    match (p[0], p.len()) {
+        ("constant", 1) => Ok(RateShape::Constant),
+        ("diurnal", 3) => Ok(RateShape::Diurnal {
+            period_s: numf(p[1], "rate_shape")?,
+            min_factor: numf(p[2], "rate_shape")?,
+        }),
+        ("ramp", 4) => Ok(RateShape::Ramp {
+            from: numf(p[1], "rate_shape")?,
+            to: numf(p[2], "rate_shape")?,
+            ramp_s: numf(p[3], "rate_shape")?,
+        }),
+        ("flash", 4) => Ok(RateShape::FlashCrowd {
+            at_s: numf(p[1], "rate_shape")?,
+            surge: numf(p[2], "rate_shape")?,
+            decay_s: numf(p[3], "rate_shape")?,
+        }),
+        _ => Err(format!(
+            "rate_shape {s:?}: expected constant | diurnal:PERIOD_S:MIN | \
+             ramp:FROM:TO:RAMP_S | flash:AT_S:SURGE:DECAY_S"
+        )),
+    }
+}
+
+/// `A*B*...` composes shapes multiplicatively (diurnal baseline × flash
+/// crowd is the production pattern the paper's NS family stresses).
+fn parse_shape(s: &str) -> Result<RateShape, String> {
+    let mut shape: Option<RateShape> = None;
+    for part in s.split('*') {
+        let one = parse_one_shape(part.trim())?;
+        shape = Some(match shape {
+            None => one,
+            Some(a) => RateShape::compose(a, one),
+        });
+    }
+    shape.ok_or_else(|| "rate_shape: empty spec".to_string())
+}
+
+fn parse_len(s: &str, what: &str) -> Result<LengthDist, String> {
+    let p: Vec<&str> = s.split(':').collect();
+    let n = |i: usize| -> Result<usize, String> {
+        p[i].parse::<usize>().map_err(|_| format!("{what}: bad length {:?}", p[i]))
+    };
+    match (p[0], p.len()) {
+        ("fixed", 2) => Ok(LengthDist::Fixed(n(1)?)),
+        ("uniform", 3) => Ok(LengthDist::Uniform { lo: n(1)?, hi: n(2)? }),
+        ("lognormal", 5) => Ok(LengthDist::LogNormal {
+            mu: numf(p[1], what)?,
+            sigma: numf(p[2], what)?,
+            lo: n(3)?,
+            hi: n(4)?,
+        }),
+        ("bimodal", 4) => Ok(LengthDist::Bimodal {
+            short: n(1)?,
+            long: n(2)?,
+            p_short: numf(p[3], what)?,
+        }),
+        ("pareto", 4) => Ok(LengthDist::Pareto { alpha: numf(p[1], what)?, lo: n(2)?, hi: n(3)? }),
+        _ => Err(format!(
+            "{what} {s:?}: expected fixed:N | uniform:LO:HI | lognormal:MU:SIGMA:LO:HI | \
+             bimodal:SHORT:LONG:P | pareto:ALPHA:LO:HI"
+        )),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Manifest -> CampaignConfig
+// ---------------------------------------------------------------------------
+
+fn parse_campaign_section(cc: &mut CampaignConfig, s: &Section) -> Result<(), String> {
+    let keys = ["name", "seed", "duration_ms", "warmup_windows", "calib_windows", "conditions"];
+    s.check_keys(&keys)?;
+    if let Some(n) = s.str("name")? {
+        cc.name = n.to_string();
+    }
+    if let Some(x) = s.num("seed")? {
+        cc.seed = x as u64;
+    }
+    if let Some(x) = s.num("duration_ms")? {
+        cc.duration = SimDur::from_ms(x as u64);
+    }
+    if let Some(x) = s.num("warmup_windows")? {
+        cc.warmup_windows = x as u64;
+    }
+    if let Some(x) = s.num("calib_windows")? {
+        cc.calib_windows = x as u64;
+    }
+    if let Some(ids) = s.strs("conditions")? {
+        for id in ids {
+            if id.eq_ignore_ascii_case("healthy") {
+                cc.conditions.push(CellCondition::Healthy);
+            } else {
+                let c = Condition::from_id(&id.to_uppercase())
+                    .ok_or_else(|| format!("[campaign] conditions: unknown condition {id:?}"))?;
+                cc.conditions.push(CellCondition::Injected(c));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn parse_tenant_section(s: &Section) -> Result<TenantClass, String> {
+    s.check_keys(&["name", "priority", "share", "ttft_slo_ms", "tpot_slo_ms"])?;
+    let name = s.str("name")?.ok_or("[[tenant]]: missing name")?;
+    Ok(TenantClass::new(
+        name,
+        s.num("priority")?.unwrap_or(0.0) as u8,
+        s.num("share")?.unwrap_or(1.0),
+        s.num("ttft_slo_ms")?.unwrap_or(f64::INFINITY),
+        s.num("tpot_slo_ms")?.unwrap_or(f64::INFINITY),
+    ))
+}
+
+fn parse_workload_section(s: &Section) -> Result<WorkloadDef, String> {
+    s.check_keys(&[
+        "name",
+        "arrival",
+        "rate_shape",
+        "prompt",
+        "output",
+        "sessions",
+        "skew",
+        "thin_frac",
+        "thin_gap_s",
+    ])?;
+    let name = s.str("name")?.ok_or("[[workload]]: missing name")?;
+    Ok(WorkloadDef {
+        name: name.to_string(),
+        arrival: s.str("arrival")?.map(parse_arrival).transpose()?,
+        rate_shape: s.str("rate_shape")?.map(parse_shape).transpose()?,
+        prompt: s.str("prompt")?.map(|p| parse_len(p, "prompt")).transpose()?,
+        output: s.str("output")?.map(|o| parse_len(o, "output")).transpose()?,
+        sessions: s.num("sessions")?.map(|x| x as usize),
+        skew: s.num("skew")?,
+        thin_frac: s.num("thin_frac")?,
+        thin_gap_s: s.num("thin_gap_s")?,
+    })
+}
+
+fn parse_topology_section(s: &Section) -> Result<TopologyDef, String> {
+    s.check_keys(&["name", "kind", "replicas"])?;
+    let kind_str = s.str("kind")?.ok_or("[[topology]]: missing kind")?;
+    let kind = match kind_str {
+        "single" => TopologyKind::Single,
+        "fleet" => {
+            let replicas = s.num("replicas")?.map(|x| x as usize).unwrap_or(2).max(1);
+            TopologyKind::Fleet { replicas }
+        }
+        "disagg" => TopologyKind::Disagg,
+        other => {
+            return Err(format!("[[topology]] kind {other:?}: expected single | fleet | disagg"))
+        }
+    };
+    if kind_str != "fleet" && s.get("replicas").is_some() {
+        return Err(format!(
+            "[[topology]] replicas only applies to kind \"fleet\" (got {kind_str:?})"
+        ));
+    }
+    let name = s.str("name")?.unwrap_or(kind_str).to_string();
+    Ok(TopologyDef { name, kind })
+}
+
+impl CampaignConfig {
+    /// Parse a manifest. Missing sections fall back to a single default
+    /// workload/topology/condition, so the smallest valid manifest is an
+    /// empty file (one healthy single-topology cell).
+    pub fn parse(text: &str) -> Result<CampaignConfig, String> {
+        let mut cc = CampaignConfig::default();
+        for s in &parse_sections(text)? {
+            match (s.header.as_str(), s.array) {
+                ("campaign", false) => parse_campaign_section(&mut cc, s)?,
+                ("tenant", true) => cc.tenants.push(parse_tenant_section(s)?),
+                ("workload", true) => cc.workloads.push(parse_workload_section(s)?),
+                ("topology", true) => cc.topologies.push(parse_topology_section(s)?),
+                (h, array) => {
+                    let brackets = if array { format!("[[{h}]]") } else { format!("[{h}]") };
+                    return Err(format!(
+                        "line {}: unknown section {brackets}; expected [campaign], \
+                         [[tenant]], [[workload]], or [[topology]]",
+                        s.line
+                    ));
+                }
+            }
+        }
+        if cc.workloads.is_empty() {
+            cc.workloads.push(WorkloadDef { name: "default".to_string(), ..Default::default() });
+        }
+        if cc.topologies.is_empty() {
+            let single = TopologyDef { name: "single".to_string(), kind: TopologyKind::Single };
+            cc.topologies.push(single);
+        }
+        if cc.conditions.is_empty() {
+            cc.conditions.push(CellCondition::Healthy);
+        }
+        Ok(cc)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cells and execution
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Cell {
+    workload: String,
+    topology: String,
+    condition: CellCondition,
+    cfg: ScenarioCfg,
+}
+
+/// Enumerate cells in deterministic manifest order:
+/// workload-major, then topology, then condition.
+fn cells(cc: &CampaignConfig) -> Vec<Cell> {
+    let mut v = Vec::with_capacity(cc.workloads.len() * cc.topologies.len() * cc.conditions.len());
+    for w in &cc.workloads {
+        for t in &cc.topologies {
+            for &cond in &cc.conditions {
+                let mut cfg = t.base_cfg();
+                cfg.seed = cc.seed;
+                cfg.duration = cc.duration;
+                cfg.warmup_windows = cc.warmup_windows;
+                cfg.calib_windows = cc.calib_windows;
+                w.apply(&mut cfg.workload);
+                cfg.workload.tenants = cc.tenants.clone();
+                cfg.inject = match cond {
+                    CellCondition::Healthy => None,
+                    CellCondition::Injected(c) => Some((c, inject_time(&cfg))),
+                };
+                v.push(Cell {
+                    workload: w.name.clone(),
+                    topology: t.name.clone(),
+                    condition: cond,
+                    cfg,
+                });
+            }
+        }
+    }
+    v
+}
+
+/// One executed permutation: detection metrics plus per-tenant SLO lanes.
+#[derive(Debug, Clone)]
+pub struct CampaignCell {
+    pub workload: String,
+    pub topology: String,
+    pub condition: CellCondition,
+    /// The injection never landed (duration too short): a hard miss, and
+    /// the cell's detection counts are withheld rather than crediting
+    /// pre-injection firings.
+    pub missed_injection: bool,
+    pub detected: bool,
+    pub latency_ns: Option<u64>,
+    /// Post-injection detection counts (full-run for healthy cells),
+    /// sorted by condition.
+    pub detections: Vec<(Condition, u64)>,
+    pub windows: u64,
+    pub requests_generated: usize,
+    pub requests_arrived: usize,
+    pub requests_tracked: usize,
+    pub tenants: Vec<TenantLane>,
+}
+
+impl CampaignCell {
+    fn injected(&self) -> bool {
+        matches!(self.condition, CellCondition::Injected(_))
+    }
+
+    fn min_ttft_attainment(&self) -> f64 {
+        self.tenants.iter().map(|l| l.ttft_attainment()).fold(1.0, f64::min)
+    }
+
+    fn min_tpot_attainment(&self) -> f64 {
+        self.tenants.iter().map(|l| l.tpot_attainment()).fold(1.0, f64::min)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut dets = Json::arr();
+        for (c, n) in &self.detections {
+            dets.push(Json::obj().set("condition", c.id()).set("count", *n));
+        }
+        let mut lanes = Json::arr();
+        for l in &self.tenants {
+            lanes.push(l.to_json());
+        }
+        Json::obj()
+            .set("workload", self.workload.as_str())
+            .set("topology", self.topology.as_str())
+            .set("condition", self.condition.id())
+            .set("injected", self.injected())
+            .set("missed_injection", self.missed_injection)
+            .set("detected", self.detected)
+            .set("latency_ns", self.latency_ns.map(Json::from).unwrap_or(Json::Null))
+            .set("detections", dets)
+            .set("windows", self.windows)
+            .set(
+                "requests",
+                Json::obj()
+                    .set("generated", self.requests_generated)
+                    .set("arrived", self.requests_arrived)
+                    .set("tracked", self.requests_tracked),
+            )
+            .set("tenants", lanes)
+    }
+}
+
+fn run_cell(cell: &Cell) -> CampaignCell {
+    let res = Scenario::new(cell.cfg.clone()).run();
+    let injected = match cell.condition {
+        CellCondition::Injected(c) => Some(c),
+        CellCondition::Healthy => None,
+    };
+    let missed_injection = injected.is_some() && res.injected_at.is_none();
+    let t0 = res.injected_at.unwrap_or(SimTime::ZERO);
+    let mut counts: BTreeMap<Condition, u64> = BTreeMap::new();
+    if !missed_injection {
+        for d in &res.detections {
+            if d.at >= t0 {
+                *counts.entry(d.condition).or_insert(0) += 1;
+            }
+        }
+    }
+    let detected = injected.map(|c| counts.get(&c).copied().unwrap_or(0) > 0).unwrap_or(false);
+    let latency_ns = injected.and_then(|c| res.detection_latency(c)).map(|d| d.ns());
+    CampaignCell {
+        workload: cell.workload.clone(),
+        topology: cell.topology.clone(),
+        condition: cell.condition,
+        missed_injection,
+        detected,
+        latency_ns,
+        detections: counts.into_iter().collect(),
+        windows: res.windows,
+        requests_generated: res.requests_generated,
+        requests_arrived: res.requests_arrived,
+        requests_tracked: res.requests_tracked,
+        tenants: res.tenants,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Report
+// ---------------------------------------------------------------------------
+
+/// The aggregated campaign: every cell in manifest order. JSON is
+/// byte-deterministic across runs and thread counts (wall-clock and
+/// thread fields are report-only).
+#[derive(Debug)]
+pub struct CampaignReport {
+    pub name: String,
+    pub seed: u64,
+    pub n_workloads: usize,
+    pub n_topologies: usize,
+    pub n_conditions: usize,
+    pub cells: Vec<CampaignCell>,
+    pub threads_used: usize,
+    pub elapsed_ms: f64,
+}
+
+impl CampaignReport {
+    pub fn to_json(&self) -> Json {
+        let mut cells = Json::arr();
+        for c in &self.cells {
+            cells.push(c.to_json());
+        }
+        Json::obj()
+            .set("schema", "dpulens.campaign.v1")
+            .set("campaign", self.name.as_str())
+            .set("seed", self.seed)
+            .set("workloads", self.n_workloads)
+            .set("topologies", self.n_topologies)
+            .set("conditions", self.n_conditions)
+            .set("cells", cells)
+    }
+
+    pub fn render_tables(&self) -> String {
+        let fmt_att = |x: f64| format!("{:.3}", x);
+        let mut t = Table::new(&format!("campaign {}", self.name)).header(&[
+            "workload",
+            "topology",
+            "condition",
+            "det",
+            "lat ms",
+            "tracked",
+            "ttft att",
+            "tpot att",
+        ]);
+        for c in &self.cells {
+            let det = if !c.injected() {
+                "-".to_string()
+            } else if c.missed_injection {
+                "miss".to_string()
+            } else if c.detected {
+                "yes".to_string()
+            } else {
+                "no".to_string()
+            };
+            let lat = c
+                .latency_ns
+                .map(|l| format!("{:.1}", l as f64 / 1e6))
+                .unwrap_or_else(|| "-".to_string());
+            t.row(vec![
+                c.workload.clone(),
+                c.topology.clone(),
+                c.condition.id().to_string(),
+                det,
+                lat,
+                c.requests_tracked.to_string(),
+                fmt_att(c.min_ttft_attainment()),
+                fmt_att(c.min_tpot_attainment()),
+            ]);
+        }
+        let mut s = t.render();
+        // Per-tenant SLO lanes, only when the manifest declared classes
+        // (the implicit "all" lane would just repeat the cell table).
+        if self.cells.iter().any(|c| c.tenants.len() > 1) {
+            let mut lt = Table::new("tenant SLO lanes").header(&[
+                "workload",
+                "topology",
+                "condition",
+                "tenant",
+                "prio",
+                "done",
+                "rej",
+                "ttft att",
+                "tpot att",
+            ]);
+            for c in &self.cells {
+                for l in &c.tenants {
+                    lt.row(vec![
+                        c.workload.clone(),
+                        c.topology.clone(),
+                        c.condition.id().to_string(),
+                        l.name.clone(),
+                        l.priority.to_string(),
+                        l.completed.to_string(),
+                        l.rejected.to_string(),
+                        fmt_att(l.ttft_attainment()),
+                        fmt_att(l.tpot_attainment()),
+                    ]);
+                }
+            }
+            s.push_str(&lt.render());
+        }
+        s
+    }
+
+    pub fn summary_line(&self) -> String {
+        let injected = self.cells.iter().filter(|c| c.injected()).count();
+        let detected = self.cells.iter().filter(|c| c.injected() && c.detected).count();
+        let min_ttft = self.cells.iter().map(|c| c.min_ttft_attainment()).fold(1.0, f64::min);
+        let min_tpot = self.cells.iter().map(|c| c.min_tpot_attainment()).fold(1.0, f64::min);
+        format!(
+            "campaign {}: {} cells ({detected}/{injected} injected detected), \
+             min tenant attainment ttft {min_ttft:.3} tpot {min_tpot:.3}",
+            self.name,
+            self.cells.len()
+        )
+    }
+}
+
+/// Expand the manifest into cells and execute them on the shared scoped
+/// worker pool.
+pub fn run_campaign(cc: &CampaignConfig) -> CampaignReport {
+    let cells = cells(cc);
+    let threads_used = resolve_threads(cc.threads, cells.len());
+    let timer = crate::util::perf::PhaseTimer::start();
+    let outcomes = parallel_map(&cells, cc.threads, run_cell);
+    let elapsed_ms = timer.total_ms();
+    CampaignReport {
+        name: cc.name.clone(),
+        seed: cc.seed,
+        n_workloads: cc.workloads.len(),
+        n_topologies: cc.topologies.len(),
+        n_conditions: cc.conditions.len(),
+        cells: outcomes,
+        threads_used,
+        elapsed_ms,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"
+# exercise every section and grammar
+[campaign]
+name = "unit"
+seed = 7
+duration_ms = 1000
+warmup_windows = 8
+calib_windows = 30
+conditions = ["healthy", "NS2"]
+
+[[tenant]]
+name = "interactive"
+priority = 0
+share = 0.5
+ttft_slo_ms = 2.0
+tpot_slo_ms = 1.0
+
+[[tenant]]
+name = "batch"
+priority = 1
+share = 0.5
+
+[[workload]]
+name = "steady"
+arrival = "poisson:280"
+prompt = "uniform:8:32"
+output = "uniform:2:8"
+
+[[workload]]
+name = "spiky"
+arrival = "onoff:400:50:0.2:0.2"
+rate_shape = "diurnal:2:0.6*flash:0.6:3:0.2"  # composed shape
+prompt = "pareto:1.4:8:96"
+sessions = 32
+skew = 1.2
+
+[[topology]]
+name = "single"
+kind = "single"
+"#;
+
+    #[test]
+    fn parses_a_full_manifest() {
+        let cc = CampaignConfig::parse(MANIFEST).unwrap();
+        assert_eq!(cc.name, "unit");
+        assert_eq!(cc.seed, 7);
+        assert_eq!(cc.duration, SimDur::from_ms(1000));
+        assert_eq!(cc.warmup_windows, 8);
+        assert_eq!(cc.calib_windows, 30);
+        assert_eq!(cc.tenants.len(), 2);
+        assert_eq!(cc.tenants[1].name, "batch");
+        assert!(cc.tenants[1].ttft_slo_ms.is_infinite());
+        assert_eq!(
+            cc.conditions,
+            vec![CellCondition::Healthy, CellCondition::Injected(Condition::Ns2IngressStarvation)]
+        );
+        assert_eq!(cc.workloads.len(), 2);
+        assert_eq!(cc.workloads[0].arrival, Some(Arrival::Poisson { rate: 280.0 }));
+        assert!(matches!(cc.workloads[1].rate_shape, Some(RateShape::Compose(_, _))));
+        assert_eq!(
+            cc.workloads[1].prompt,
+            Some(LengthDist::Pareto { alpha: 1.4, lo: 8, hi: 96 })
+        );
+        assert_eq!(cc.topologies.len(), 1);
+        assert_eq!(cc.topologies[0].kind, TopologyKind::Single);
+    }
+
+    #[test]
+    fn empty_manifest_yields_one_healthy_cell() {
+        let cc = CampaignConfig::parse("").unwrap();
+        assert_eq!(cc.workloads.len(), 1);
+        assert_eq!(cc.topologies.len(), 1);
+        assert_eq!(cc.conditions, vec![CellCondition::Healthy]);
+        let v = cells(&cc);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].cfg.inject.is_none());
+    }
+
+    #[test]
+    fn cells_expand_in_manifest_order() {
+        let cc = CampaignConfig::parse(MANIFEST).unwrap();
+        let v = cells(&cc);
+        assert_eq!(v.len(), 4); // 2 workloads x 1 topology x 2 conditions
+        assert_eq!((v[0].workload.as_str(), v[0].condition.id()), ("steady", "healthy"));
+        assert_eq!((v[1].workload.as_str(), v[1].condition.id()), ("steady", "NS2"));
+        assert_eq!((v[3].workload.as_str(), v[3].condition.id()), ("spiky", "NS2"));
+        // Shared knobs thread into every cell; injection lands after
+        // calibration.
+        for c in &v {
+            assert_eq!(c.cfg.seed, 7);
+            assert_eq!(c.cfg.workload.tenants.len(), 2);
+            if let Some((_, at)) = c.cfg.inject {
+                assert!(at > SimTime((8 + 30) * c.cfg.window.ns()));
+            }
+        }
+        // The spiky workload's overrides landed; the steady one kept the
+        // topology sessions default.
+        assert_eq!(v[2].cfg.workload.n_sessions, 32);
+        assert!(matches!(v[2].cfg.workload.prompt_len, LengthDist::Pareto { .. }));
+    }
+
+    #[test]
+    fn parser_rejects_typos_and_garbage() {
+        for (bad, needle) in [
+            ("[campaign]\nnmae = \"x\"", "unknown key"),
+            ("[campaign]\nconditions = [\"XX99\"]", "unknown condition"),
+            ("[[workload]]\nname = \"w\"\narrival = \"poisson\"", "arrival"),
+            ("[[workload]]\narrival = \"poisson:1\"", "missing name"),
+            ("[[topology]]\nname = \"t\"", "missing kind"),
+            ("[[topology]]\nkind = \"mesh\"", "expected single | fleet | disagg"),
+            ("[[topology]]\nkind = \"single\"\nreplicas = 4", "only applies to kind"),
+            ("[workload]\nname = \"w\"", "unknown section"),
+            ("stray", "expected [section]"),
+            ("[campaign]\nseed = \"many\"", "expected a number"),
+            ("[campaign]\nname = \"unterminated", "unterminated string"),
+        ] {
+            let err = CampaignConfig::parse(bad).unwrap_err();
+            assert!(err.contains(needle), "manifest {bad:?}: error {err:?} lacks {needle:?}");
+        }
+    }
+
+    #[test]
+    fn comments_and_quotes_interact_correctly() {
+        let cc =
+            CampaignConfig::parse("[campaign]\nname = \"a # not a comment\" # real comment\n")
+                .unwrap();
+        assert_eq!(cc.name, "a # not a comment");
+    }
+
+    #[test]
+    fn fleet_and_disagg_topologies_build() {
+        let cc = CampaignConfig::parse(
+            "[[topology]]\nkind = \"fleet\"\nreplicas = 3\n[[topology]]\nkind = \"disagg\"\n",
+        )
+        .unwrap();
+        assert_eq!(cc.topologies[0].kind, TopologyKind::Fleet { replicas: 3 });
+        assert_eq!(cc.topologies[0].name, "fleet"); // name defaults to kind
+        let v = cells(&cc);
+        assert_eq!(v[0].cfg.cluster.n_nodes, 6); // 2 nodes per fleet replica
+        assert_eq!(v[1].cfg.cluster.n_nodes, 6); // disagg world is 6 nodes
+        assert!(v[1].cfg.engine.shapes.is_some());
+    }
+}

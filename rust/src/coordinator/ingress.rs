@@ -46,9 +46,12 @@ pub fn target_node_for(c: Condition, engine: &Engine, replica: usize) -> NodeId 
 }
 
 impl Scenario {
-    /// A request reaches the cluster boundary: route it, start its ingress
-    /// transfer, and schedule the next arrival.
+    /// A request reaches the cluster boundary: route it and start its
+    /// ingress transfer. (Generation is chained separately via `Ev::GenNext`
+    /// at the generator's undelayed clock — a late-delivered thin-session
+    /// request must not gate the stream behind it.)
     pub(crate) fn on_arrival(&mut self, mut req: InferenceRequest, now: SimTime) {
+        self.arrived += 1;
         let replica = self.engine.register(req.clone());
         let node = self.entry_node(replica);
         req.assigned_node = Some(node);
@@ -59,7 +62,6 @@ impl Scenario {
         let delivered = self.cluster.ingress(now, node, req.flow, bytes, &mut self.outbox);
         self.flush_outbox();
         self.cal.schedule_at(delivered, Ev::Delivered(req.id));
-        self.schedule_next_arrival();
     }
 
     /// Ingress transfer done: admit into the replica's batcher (or reject).
@@ -121,8 +123,14 @@ impl Scenario {
         let mut wl = self.cfg.workload.clone();
         let desc = pathology::inject(cond, target, &mut self.cluster, &mut self.engine, &mut wl);
         if pathology::site(cond) == pathology::InjectSite::Workload {
-            let mut gen =
-                WorkloadGen::new(wl.clone(), self.cfg.engine.profile.vocab, self.cfg.seed ^ 0x5EED);
+            // Resume, don't restart: a fresh generator would reissue ReqIds
+            // starting at 0 and silently overwrite live engine bookkeeping.
+            let mut gen = WorkloadGen::resume(
+                wl.clone(),
+                self.cfg.engine.profile.vocab,
+                self.cfg.seed ^ 0x5EED,
+                &self.gen,
+            );
             gen.fast_forward(now);
             self.gen = gen;
         }

@@ -14,10 +14,12 @@
 //!
 //! On top sit the runners: `experiment` (three-phase condition experiments),
 //! `matrix` (the parallel 28-condition scorecard), `fleet` (the replicas ×
-//! routing-policy sweep with the DP condition family), `perf` (the pipeline
-//! benchmark behind `dpulens perf` / `BENCH_pipeline.json`), and `report`
-//! (machine-readable outputs).
+//! routing-policy sweep with the DP condition family), `campaign` (the
+//! manifest-driven workload × topology × condition expander behind
+//! `dpulens campaign`), `perf` (the pipeline benchmark behind `dpulens perf`
+//! / `BENCH_pipeline.json`), and `report` (machine-readable outputs).
 
+pub mod campaign;
 pub mod experiment;
 pub mod fleet;
 pub mod handoff;
@@ -30,6 +32,7 @@ pub mod report;
 pub mod scenario;
 pub mod world;
 
+pub use campaign::{run_campaign, CampaignConfig, CampaignReport};
 pub use experiment::{condition_experiment, ConditionReport};
 pub use fleet::{
     run_disagg_study, run_fleet, run_multipool_study, DisaggReport, FleetConfig, FleetReport,

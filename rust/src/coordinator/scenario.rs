@@ -78,6 +78,17 @@ impl Default for ScenarioCfg {
 #[derive(Debug)]
 pub struct RunResult {
     pub metrics: ServeMetrics,
+    /// Per-tenant SLO lanes (`WorkloadSpec::tenants` order); a single
+    /// implicit lane when no tenant classes are configured.
+    pub tenants: Vec<crate::metrics::TenantLane>,
+    /// Requests the workload generator produced (a tail may still be in
+    /// flight toward the cluster when the run ends).
+    pub requests_generated: usize,
+    /// Requests that reached the cluster boundary (`Ev::Arrival` fired).
+    pub requests_arrived: usize,
+    /// Distinct requests the engine tracked; `< requests_arrived` means
+    /// ids collided and bookkeeping was silently overwritten.
+    pub requests_tracked: usize,
     pub detections: Vec<Detection>,
     pub attributions: Vec<Attribution>,
     pub sw_detections: usize,
@@ -148,6 +159,7 @@ pub struct Scenario {
     pub(crate) injected_at: Option<SimTime>,
     pub(crate) injection_desc: Option<String>,
     pub(crate) generated: usize,
+    pub(crate) arrived: usize,
     pub(crate) iterations: u64,
     pub(crate) attributions: Vec<Attribution>,
     pub(crate) kv_peak: Vec<f64>,
@@ -171,6 +183,7 @@ impl Scenario {
         while let Some((now, ev)) = self.cal.pop() {
             match ev {
                 Ev::End => break,
+                Ev::GenNext => self.schedule_next_arrival(),
                 Ev::Arrival(req) => self.on_arrival(*req, now),
                 Ev::Delivered(id) => self.on_delivered(id, now),
                 Ev::Iterate(replica) => {
@@ -237,6 +250,51 @@ mod tests {
         assert_eq!(a.metrics.completed, b.metrics.completed);
         assert_eq!(a.telemetry_published, b.telemetry_published);
         assert_eq!(a.detections.len(), b.detections.len());
+    }
+
+    #[test]
+    fn thin_sessions_delay_only_their_own_requests() {
+        // Regression: generation used to chain off request *delivery*, so a
+        // thin-session request delayed by 0.5s stalled every arrival behind
+        // it (~2 requests generated per second instead of ~300). With the
+        // generation clock decoupled, the stream keeps its configured rate.
+        let mut cfg = quick_cfg();
+        cfg.workload.thin_session_frac = 0.3;
+        cfg.workload.thin_extra_gap_s = 0.5;
+        let res = Scenario::new(cfg).run();
+        // 300 req/s over 0.9s ≈ 270 generated; the pre-fix stall produced
+        // single digits. Thin requests themselves may still be in flight.
+        assert!(
+            res.requests_generated > 150,
+            "arrival stream stalled: only {} requests generated",
+            res.requests_generated
+        );
+        assert!(res.metrics.completed > 20, "completed {}", res.metrics.completed);
+    }
+
+    #[test]
+    fn every_arrived_request_is_tracked() {
+        let res = Scenario::new(quick_cfg()).run();
+        assert_eq!(res.requests_tracked, res.requests_arrived);
+        assert!(res.requests_arrived <= res.requests_generated);
+    }
+
+    #[test]
+    fn workload_swap_does_not_reissue_live_req_ids() {
+        // Regression: a workload-site injection used to rebuild the
+        // generator with `next_id` back at 0, so post-swap requests reused
+        // live ReqIds and overwrote engine bookkeeping (tracked < arrived).
+        let mut cfg = quick_cfg();
+        cfg.duration = SimDur::from_ms(1100);
+        cfg.inject = Some((Condition::Ns2IngressStarvation, SimTime(600 * MS)));
+        let res = Scenario::new(cfg).run();
+        assert!(res.injected_at.is_some());
+        // The swapped NS2 stream must keep flowing after injection.
+        assert!(res.requests_generated > 100, "generated {}", res.requests_generated);
+        assert_eq!(
+            res.requests_tracked, res.requests_arrived,
+            "ReqIds were reused across the workload swap"
+        );
     }
 
     #[test]

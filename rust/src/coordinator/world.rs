@@ -30,6 +30,11 @@ use super::scenario::{RunResult, Scenario, ScenarioCfg};
 /// delivery), not one-heap-op-per-event through the calendar.
 #[derive(Debug, Clone)]
 pub(crate) enum Ev {
+    /// Generate the next request. Chained at the workload generator's
+    /// *undelayed* clock, not at request delivery: per-request delivery
+    /// jitter (thin sessions) must delay only that request, never the
+    /// generation of everything behind it.
+    GenNext,
     Arrival(Box<InferenceRequest>),
     Delivered(ReqId),
     Iterate(usize),
@@ -182,6 +187,7 @@ impl Scenario {
             injected_at: None,
             injection_desc: None,
             generated: 0,
+            arrived: 0,
             iterations: 0,
             attributions: Vec::new(),
             kv_peak: vec![0.0; n_rep],
@@ -222,12 +228,17 @@ impl Scenario {
         }
     }
 
+    /// Generate one request: chain the *next* generation at the generator's
+    /// undelayed clock, and schedule this request's delivery at its (possibly
+    /// jittered) arrival time. Keeping the two decoupled is what lets a thin
+    /// session dribble in late without stalling the rest of the stream.
     pub(crate) fn schedule_next_arrival(&mut self) {
         if self.cfg.max_requests > 0 && self.generated >= self.cfg.max_requests {
             return;
         }
         let req = self.gen.next_request();
         self.generated += 1;
+        self.cal.schedule_at(self.gen.clock(), Ev::GenNext);
         self.cal.schedule_at(req.arrival, Ev::Arrival(Box::new(req)));
     }
 
@@ -262,10 +273,18 @@ impl Scenario {
             n_rep,
             span,
         );
+        let tenants = crate::metrics::collect_tenants(
+            self.engine.requests.values(),
+            &self.cfg.workload.tenants,
+        );
         let sw_alarm_log = std::mem::take(&mut self.sw_suite.detections);
         let handoff_parked: u64 = self.handoff_wait.iter().map(|q| q.len() as u64).sum();
         RunResult {
             metrics,
+            tenants,
+            requests_generated: self.generated,
+            requests_arrived: self.arrived,
+            requests_tracked: self.engine.requests.len(),
             handoffs: std::mem::take(&mut self.handoff_stats),
             handoffs_parked_at_end: handoff_parked,
             detections: std::mem::take(&mut self.dpu.detections),

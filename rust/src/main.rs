@@ -23,6 +23,13 @@
 //!             a pool-count flag appends the K×M multi-pool study (per-pool
 //!             DP scoping, pool-pair handoff accounting, every fleet
 //!             condition as a catalog-driven triple) and bumps it to v3
+//!   campaign  <MANIFEST> [--threads N] [--json] [--json-out PATH]
+//!             expand a TOML-subset manifest into workload × topology ×
+//!             condition permutations (tenant SLO classes, diurnal/flash
+//!             arrival shapes, heavy-tailed length mixes) and run every
+//!             cell in parallel; emits deterministic dpulens.campaign.v1
+//!             JSON with per-cell detection metrics and per-tenant
+//!             TTFT/TPOT SLO attainment
 //!   perf      [--quick] [--replicates N] [--threads N] [--json-out PATH]
 //!             pipeline benchmark: batched ingest throughput, snapshot
 //!             latency, and matrix/fleet end-to-end wall-clock, written
@@ -248,6 +255,50 @@ fn cmd_fleet(args: &[String]) {
     }
 }
 
+fn cmd_campaign(args: &[String]) {
+    use dpulens::coordinator::campaign::{run_campaign, CampaignConfig};
+    let Some(path) = args.first().filter(|a| !a.starts_with("--")) else {
+        eprintln!("usage: dpulens campaign <MANIFEST> [--threads N] [--json] [--json-out PATH]");
+        std::process::exit(2);
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("campaign: cannot read {path}: {e}");
+            std::process::exit(2);
+        }
+    };
+    let mut cc = match CampaignConfig::parse(&text) {
+        Ok(cc) => cc,
+        Err(e) => {
+            eprintln!("campaign: {path}: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Some(t) = opt_parse::<usize>(args, "--threads") {
+        cc.threads = t;
+    }
+    let report = run_campaign(&cc);
+    if flag(args, "--json") {
+        println!("{}", report.to_json().render());
+    } else {
+        print!("{}", report.render_tables());
+        println!("{}", report.summary_line());
+        println!(
+            "wallclock {:.1}s for {} cells on {} threads",
+            report.elapsed_ms / 1e3,
+            report.cells.len(),
+            report.threads_used
+        );
+    }
+    if let Some(out) = opt_val(args, "--json-out") {
+        let mut body = report.to_json().render();
+        body.push('\n');
+        std::fs::write(&out, body).expect("writing campaign JSON");
+        eprintln!("campaign JSON written to {out}");
+    }
+}
+
 fn cmd_perf(args: &[String]) {
     use dpulens::coordinator::perf::{run_perf, PerfConfig};
     let mut pc = if flag(args, "--quick") { PerfConfig::quick() } else { PerfConfig::full() };
@@ -368,6 +419,7 @@ fn main() {
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("matrix") => cmd_matrix(&args[1..]),
         Some("fleet") => cmd_fleet(&args[1..]),
+        Some("campaign") => cmd_campaign(&args[1..]),
         Some("perf") => cmd_perf(&args[1..]),
         Some("conditions") => cmd_conditions(&args[1..]),
         Some("runbook") => cmd_runbook(),
@@ -426,6 +478,7 @@ mod tests {
                 "--decode-pools",
             ],
         ),
+        ("campaign", &["--threads", "--json", "--json-out"]),
         (
             "perf",
             &["--quick", "--micro-only", "--replicates", "--replicas", "--threads", "--json-out"],

@@ -167,6 +167,123 @@ impl ServeMetrics {
     }
 }
 
+/// One tenant class's SLO lane: latency summaries plus exact attainment
+/// counts. Everything here is either an integer count or a sort-based
+/// percentile, so collection order (e.g. hash-map iteration) cannot perturb
+/// the reported numbers — the campaign JSON stays byte-deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct TenantLane {
+    pub name: String,
+    pub priority: u8,
+    pub ttft_slo_ms: f64,
+    pub tpot_slo_ms: f64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub tokens_out: u64,
+    pub ttft_ns: Summary,
+    pub tpot_ns: Summary,
+    /// Completed requests whose TTFT met the class SLO / had a TTFT at all.
+    pub ttft_ok: u64,
+    pub ttft_n: u64,
+    /// Completed requests whose mean TPOT met the class SLO / had a TPOT.
+    pub tpot_ok: u64,
+    pub tpot_n: u64,
+}
+
+impl TenantLane {
+    /// Fraction of measured requests meeting the TTFT SLO (1.0 when none
+    /// were measured — an idle class has not missed its SLO).
+    pub fn ttft_attainment(&self) -> f64 {
+        if self.ttft_n == 0 {
+            1.0
+        } else {
+            self.ttft_ok as f64 / self.ttft_n as f64
+        }
+    }
+
+    pub fn tpot_attainment(&self) -> f64 {
+        if self.tpot_n == 0 {
+            1.0
+        } else {
+            self.tpot_ok as f64 / self.tpot_n as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("tenant", self.name.as_str())
+            .set("priority", self.priority)
+            .set("ttft_slo_ms", self.ttft_slo_ms)
+            .set("tpot_slo_ms", self.tpot_slo_ms)
+            .set("completed", self.completed)
+            .set("rejected", self.rejected)
+            .set("tokens_out", self.tokens_out)
+            .set("ttft_p50_ns", self.ttft_ns.p50())
+            .set("ttft_p95_ns", self.ttft_ns.p95())
+            .set("ttft_p99_ns", self.ttft_ns.p99())
+            .set("tpot_p50_ns", self.tpot_ns.p50())
+            .set("tpot_p99_ns", self.tpot_ns.p99())
+            .set("ttft_attainment", self.ttft_attainment())
+            .set("tpot_attainment", self.tpot_attainment())
+    }
+}
+
+/// Collect per-tenant SLO lanes from finished requests. Classes come from
+/// `WorkloadSpec::tenants`; when empty, everything lands in one implicit
+/// lane named "all" with unbounded SLOs (attainment 1.0 by construction).
+/// Order-insensitive over `reqs` — safe on hash-map iteration.
+pub fn collect_tenants<'a>(
+    reqs: impl Iterator<Item = &'a InferenceRequest>,
+    classes: &[crate::workload::tenant::TenantClass],
+) -> Vec<TenantLane> {
+    let mut lanes: Vec<TenantLane> = if classes.is_empty() {
+        vec![TenantLane {
+            name: "all".to_string(),
+            ttft_slo_ms: f64::INFINITY,
+            tpot_slo_ms: f64::INFINITY,
+            ..Default::default()
+        }]
+    } else {
+        classes
+            .iter()
+            .map(|c| TenantLane {
+                name: c.name.clone(),
+                priority: c.priority,
+                ttft_slo_ms: c.ttft_slo_ms,
+                tpot_slo_ms: c.tpot_slo_ms,
+                ..Default::default()
+            })
+            .collect()
+    };
+    const MS: f64 = 1_000_000.0;
+    for r in reqs {
+        let lane = &mut lanes[(r.tenant as usize).min(lanes.len() - 1)];
+        match r.state {
+            crate::workload::request::ReqState::Done => {
+                lane.completed += 1;
+                lane.tokens_out += r.tokens_generated() as u64;
+                if let Some(ttft) = r.ttft() {
+                    lane.ttft_ns.push(ttft.ns() as f64);
+                    lane.ttft_n += 1;
+                    if ttft.ns() as f64 <= lane.ttft_slo_ms * MS {
+                        lane.ttft_ok += 1;
+                    }
+                }
+                if let Some(tpot) = r.tpot_ns() {
+                    lane.tpot_ns.push(tpot);
+                    lane.tpot_n += 1;
+                    if tpot <= lane.tpot_slo_ms * MS {
+                        lane.tpot_ok += 1;
+                    }
+                }
+            }
+            crate::workload::request::ReqState::Rejected => lane.rejected += 1,
+            _ => {}
+        }
+    }
+    lanes
+}
+
 /// Max-over-mean of a lane counter (shared by the skew columns).
 fn lane_skew(lanes: impl Iterator<Item = u64>) -> f64 {
     let v: Vec<u64> = lanes.collect();
@@ -491,6 +608,38 @@ mod tests {
         let single = ServeMetrics::collect(reqs.iter(), SimDur(10_000));
         assert!(single.per_replica.is_empty());
         assert_eq!(single.replica_token_skew(), 1.0);
+    }
+
+    #[test]
+    fn tenant_lanes_score_slo_attainment() {
+        use crate::workload::tenant::TenantClass;
+        let classes = vec![
+            TenantClass::new("interactive", 0, 0.5, 0.003, 0.001), // 3µs TTFT, 1µs TPOT
+            TenantClass::new("batch", 1, 0.5, 10.0, 10.0),
+        ];
+        // interactive: TTFT 1µs (ok) and 5µs (miss); batch: TTFT 2µs (ok).
+        let mut a = done_req(1, 0, 1_000, 5_000, 5);
+        a.tenant = 0;
+        let mut b = done_req(2, 0, 5_000, 9_000, 5);
+        b.tenant = 0;
+        let mut c = done_req(3, 0, 2_000, 6_000, 5);
+        c.tenant = 1;
+        let reqs = vec![a, b, c];
+        let lanes = collect_tenants(reqs.iter(), &classes);
+        assert_eq!(lanes.len(), 2);
+        assert_eq!(lanes[0].completed, 2);
+        assert_eq!((lanes[0].ttft_ok, lanes[0].ttft_n), (1, 2));
+        assert!((lanes[0].ttft_attainment() - 0.5).abs() < 1e-12);
+        assert_eq!(lanes[1].completed, 1);
+        assert!((lanes[1].ttft_attainment() - 1.0).abs() < 1e-12);
+        // TPOT: (done-first)/(toks-1) = 1000ns = 1µs; interactive SLO is 1µs.
+        assert_eq!(lanes[0].tpot_n, 2);
+        assert!(lanes[0].to_json().render().contains("\"ttft_attainment\""));
+        // No classes: one implicit lane, attainment 1.0 by construction.
+        let implicit = collect_tenants(reqs.iter(), &[]);
+        assert_eq!(implicit.len(), 1);
+        assert_eq!(implicit[0].completed, 3);
+        assert_eq!(implicit[0].ttft_attainment(), 1.0);
     }
 
     #[test]

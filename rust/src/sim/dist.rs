@@ -8,7 +8,7 @@ use crate::sim::time::{SimDur, SEC};
 use crate::util::rng::Rng;
 
 /// Inter-arrival process for requests.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Arrival {
     /// Poisson arrivals at `rate` req/s.
     Poisson { rate: f64 },
@@ -73,7 +73,7 @@ impl ArrivalSampler {
 }
 
 /// Sequence-length distribution for prompts and outputs.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum LengthDist {
     /// All sequences the same length.
     Fixed(usize),
@@ -84,6 +84,10 @@ pub enum LengthDist {
     /// Bimodal mixture: short with prob p_short, else long — the shape that
     /// drives early-completion skew (NS8/PC10/EW9).
     Bimodal { short: usize, long: usize, p_short: f64 },
+    /// Heavy-tailed Pareto with scale `lo` (the minimum) and tail exponent
+    /// `alpha`, clamped at `hi` — production prompt/output mixes where a
+    /// small fraction of giant sequences carries most of the token mass.
+    Pareto { alpha: f64, lo: usize, hi: usize },
 }
 
 impl LengthDist {
@@ -96,6 +100,9 @@ impl LengthDist {
             }
             LengthDist::Bimodal { short, long, p_short } => {
                 if rng.chance(p_short) { short } else { long }
+            }
+            LengthDist::Pareto { alpha, lo, hi } => {
+                (rng.pareto(lo.max(1) as f64, alpha).round() as usize).clamp(lo, hi)
             }
         }
     }
@@ -111,21 +118,44 @@ impl LengthDist {
             LengthDist::Bimodal { short, long, p_short } => {
                 p_short * short as f64 + (1.0 - p_short) * long as f64
             }
+            LengthDist::Pareto { alpha, lo, hi } => {
+                // Analytic mean alpha·x_m/(alpha-1) for alpha > 1; the
+                // clamped tail keeps it below hi. alpha ≤ 1 has no finite
+                // mean — the clamp bound is the honest summary.
+                if alpha > 1.0 {
+                    (alpha * lo.max(1) as f64 / (alpha - 1.0)).min(hi as f64)
+                } else {
+                    hi as f64
+                }
+            }
         }
     }
 }
 
-/// Multiplicative rate modulation over sim time (diurnal / ramp shapes).
-#[derive(Debug, Clone)]
+/// Multiplicative rate modulation over sim time (diurnal / ramp / flash
+/// shapes). Shapes compose multiplicatively via [`RateShape::Compose`], so
+/// a diurnal curve can carry ON-OFF bursts *and* a flash crowd at once.
+#[derive(Debug, Clone, PartialEq)]
 pub enum RateShape {
     Constant,
     /// Sinusoidal between `min_factor` and 1.0 with the given period.
     Diurnal { period_s: f64, min_factor: f64 },
     /// Linear ramp from `from` to `to` across `ramp_s`, then hold.
     Ramp { from: f64, to: f64, ramp_s: f64 },
+    /// Flash crowd: baseline 1.0 until `at_s`, then an instantaneous jump
+    /// to `surge`× decaying exponentially back toward baseline with time
+    /// constant `decay_s` (the thundering-herd arrival spike).
+    FlashCrowd { at_s: f64, surge: f64, decay_s: f64 },
+    /// Product of two shapes (e.g. diurnal × flash crowd).
+    Compose(Box<RateShape>, Box<RateShape>),
 }
 
 impl RateShape {
+    /// Convenience constructor for the composed (product) shape.
+    pub fn compose(a: RateShape, b: RateShape) -> RateShape {
+        RateShape::Compose(Box::new(a), Box::new(b))
+    }
+
     pub fn factor_at(&self, t_ns: u64) -> f64 {
         let t_s = t_ns as f64 / SEC as f64;
         match *self {
@@ -142,6 +172,14 @@ impl RateShape {
                     from + (to - from) * (t_s / ramp_s)
                 }
             }
+            RateShape::FlashCrowd { at_s, surge, decay_s } => {
+                if t_s < at_s {
+                    1.0
+                } else {
+                    1.0 + (surge - 1.0) * (-(t_s - at_s) / decay_s.max(1e-9)).exp()
+                }
+            }
+            RateShape::Compose(ref a, ref b) => a.factor_at(t_ns) * b.factor_at(t_ns),
         }
     }
 }
@@ -196,6 +234,47 @@ mod tests {
         let xs: Vec<usize> = (0..5000).map(|_| bi.sample(&mut r)).collect();
         let n_short = xs.iter().filter(|&&x| x == 4).count();
         assert!((3000..4000).contains(&n_short), "n_short={n_short}");
+    }
+
+    #[test]
+    fn pareto_lengths_are_heavy_tailed_and_bounded() {
+        let mut r = Rng::seeded(7);
+        let d = LengthDist::Pareto { alpha: 1.3, lo: 8, hi: 512 };
+        let xs: Vec<usize> = (0..5000).map(|_| d.sample(&mut r)).collect();
+        assert!(xs.iter().all(|&x| (8..=512).contains(&x)));
+        // Heavy tail: some samples far above the scale, most near it.
+        let big = xs.iter().filter(|&&x| x > 80).count();
+        let small = xs.iter().filter(|&&x| x < 16).count();
+        assert!(big > 50, "big={big}");
+        assert!(small > 2500, "small={small}");
+        let m = d.mean();
+        assert!(m > 8.0 && m < 512.0, "mean={m}");
+        // alpha ≤ 1: no finite mean, report the clamp bound.
+        assert_eq!(LengthDist::Pareto { alpha: 0.9, lo: 8, hi: 512 }.mean(), 512.0);
+    }
+
+    #[test]
+    fn flash_crowd_surges_then_decays() {
+        let f = RateShape::FlashCrowd { at_s: 2.0, surge: 5.0, decay_s: 0.5 };
+        assert!((f.factor_at(SEC) - 1.0).abs() < 1e-9, "baseline before the flash");
+        assert!((f.factor_at(2 * SEC) - 5.0).abs() < 1e-9, "full surge at onset");
+        let mid = f.factor_at(2 * SEC + SEC / 2); // one decay constant later
+        assert!(mid > 1.0 && mid < 5.0, "mid={mid}");
+        assert!(f.factor_at(20 * SEC) < 1.01, "decayed back to baseline");
+    }
+
+    #[test]
+    fn composed_shapes_multiply() {
+        let c = RateShape::compose(
+            RateShape::Diurnal { period_s: 10.0, min_factor: 0.5 },
+            RateShape::FlashCrowd { at_s: 1.0, surge: 4.0, decay_s: 1.0 },
+        );
+        let d = RateShape::Diurnal { period_s: 10.0, min_factor: 0.5 };
+        let f = RateShape::FlashCrowd { at_s: 1.0, surge: 4.0, decay_s: 1.0 };
+        for t in [0, SEC, 3 * SEC / 2, 5 * SEC] {
+            let want = d.factor_at(t) * f.factor_at(t);
+            assert!((c.factor_at(t) - want).abs() < 1e-12);
+        }
     }
 
     #[test]

@@ -104,6 +104,11 @@ pub const CLI: &[CmdSpec] = &[
         ],
     },
     CmdSpec {
+        name: "campaign <MANIFEST>",
+        summary: "run a manifest's workload x topology x condition permutations",
+        flags: &[fv("--threads", "N"), f("--json"), fv("--json-out", "PATH")],
+    },
+    CmdSpec {
         name: "perf",
         summary: "telemetry-pipeline benchmark (BENCH_pipeline.json)",
         flags: &[

@@ -8,6 +8,7 @@ use crate::sim::SimTime;
 use crate::util::rng::{Rng, Zipf};
 use crate::workload::corpus;
 use crate::workload::request::InferenceRequest;
+use crate::workload::tenant::{tenant_of_session, TenantClass};
 use crate::workload::tokenizer::ToyTokenizer;
 
 /// Declarative workload description.
@@ -23,8 +24,13 @@ pub struct WorkloadSpec {
     pub session_skew: f64,
     /// Thin-traffic injection (NS2): fraction of sessions that send with long
     /// idle gaps (their requests are delayed by an extra exponential gap).
+    /// The thin slice is drawn from the *cold tail* of the session space
+    /// (the highest session ids — the least popular ranks under Zipf skew).
     pub thin_session_frac: f64,
     pub thin_extra_gap_s: f64,
+    /// Multi-tenant SLO classes; empty = one implicit tenant (class 0).
+    /// Sessions partition into contiguous ranges by `TenantClass::share`.
+    pub tenants: Vec<TenantClass>,
 }
 
 impl Default for WorkloadSpec {
@@ -38,6 +44,7 @@ impl Default for WorkloadSpec {
             session_skew: 0.0,
             thin_session_frac: 0.0,
             thin_extra_gap_s: 0.0,
+            tenants: Vec::new(),
         }
     }
 }
@@ -76,11 +83,38 @@ impl WorkloadGen {
         }
     }
 
+    /// Rebuild the generator for a new spec while *continuing* the id and
+    /// prompt-corpus streams of `prev` (and its arrival clock). Mid-run
+    /// workload swaps (workload-site injections) must use this: a fresh
+    /// `new()` restarts `next_id` at 0, so post-swap requests would reuse
+    /// live `ReqId`s and silently overwrite engine bookkeeping.
+    pub fn resume(spec: WorkloadSpec, vocab: usize, seed: u64, prev: &WorkloadGen) -> Self {
+        let mut g = WorkloadGen::new(spec, vocab, seed);
+        g.next_id = prev.next_id;
+        g.prompt_cursor = prev.prompt_cursor;
+        g.clock = prev.clock;
+        g
+    }
+
     pub fn tokenizer(&self) -> &ToyTokenizer {
         &self.tok
     }
 
-    /// Generate the next request (arrival times strictly increase).
+    /// The undelayed generation clock: the base arrival time of the last
+    /// generated request, *before* any per-request delivery jitter. The
+    /// scenario loop chains generation off this clock so thin-session
+    /// delays never stall the rest of the stream.
+    pub fn clock(&self) -> SimTime {
+        self.clock
+    }
+
+    /// Id the next generated request will carry (diagnostics/tests).
+    pub fn peek_next_id(&self) -> u32 {
+        self.next_id
+    }
+
+    /// Generate the next request (base arrival times strictly increase;
+    /// thin-session requests carry extra *delivery* jitter on top).
     pub fn next_request(&mut self) -> InferenceRequest {
         // Arrival gap, modulated by the rate shape (higher factor = faster).
         let base_gap = self.sampler.next_gap();
@@ -95,8 +129,12 @@ impl WorkloadGen {
         };
         let mut arrival = self.clock;
         // Thin sessions (NS2): a slice of sessions dribbles traffic in late.
-        let thin_cut = (self.spec.n_sessions as f64 * self.spec.thin_session_frac) as usize;
-        if session < thin_cut && self.spec.thin_extra_gap_s > 0.0 {
+        // The slice is the *cold tail* (highest session ids = least popular
+        // Zipf ranks) — carving it from rank 0 would make the hottest
+        // sessions thin and invert the NS2×NS3 composition.
+        let n = self.spec.n_sessions.max(1);
+        let thin_cut = (n as f64 * self.spec.thin_session_frac) as usize;
+        if thin_cut > 0 && session >= n - thin_cut && self.spec.thin_extra_gap_s > 0.0 {
             let extra = self.rng.exponential(1.0 / self.spec.thin_extra_gap_s);
             arrival = arrival + crate::sim::SimDur::from_secs_f64(extra);
         }
@@ -110,7 +148,11 @@ impl WorkloadGen {
         let out_len = self.spec.output_len.sample(&mut self.rng).max(1);
         let id = ReqId(self.next_id);
         self.next_id += 1;
-        InferenceRequest::new(id, FlowId(session as u32), arrival, prompt, out_len)
+        let mut req = InferenceRequest::new(id, FlowId(session as u32), arrival, prompt, out_len);
+        // Deterministic session→tenant partition: no RNG draws, so the
+        // request stream is identical with or without tenant classes.
+        req.tenant = tenant_of_session(&self.spec.tenants, session, n);
+        req
     }
 
     /// Jump the arrival clock forward (used when an injector swaps the
@@ -181,6 +223,72 @@ mod tests {
         let reqs = g.take(200);
         let shorts = reqs.iter().filter(|r| r.max_new_tokens == 2).count();
         assert!((60..140).contains(&shorts), "shorts={shorts}");
+    }
+
+    #[test]
+    fn thin_sessions_come_from_the_cold_tail() {
+        // NS2×NS3 composition: with Zipf skew the thin slice must be the
+        // *least popular* session ranks, never the hot head.
+        let mut spec = WorkloadSpec::default();
+        spec.session_skew = 1.6;
+        spec.thin_session_frac = 0.25; // cold tail: sessions 48..64
+        spec.thin_extra_gap_s = 0.05;
+        let mut g = WorkloadGen::new(spec, 512, 11);
+        let mut jittered = 0u32;
+        for _ in 0..400 {
+            let r = g.next_request();
+            let delayed = r.arrival > g.clock();
+            if delayed {
+                jittered += 1;
+                assert!(
+                    r.flow.0 >= 48,
+                    "hot session {} got thin-session jitter (thin slice must be the cold tail)",
+                    r.flow.0
+                );
+            }
+        }
+        assert!(jittered > 0, "no thin-session request observed");
+    }
+
+    #[test]
+    fn resume_continues_id_and_prompt_streams() {
+        // A mid-run workload swap must not restart ReqIds at 0 (live ids
+        // would be silently overwritten in the engine's bookkeeping).
+        let mut a = WorkloadGen::new(WorkloadSpec::default(), 512, 3);
+        let pre: Vec<u32> = (0..20).map(|_| a.next_request().id.0).collect();
+        assert_eq!(*pre.last().unwrap(), 19);
+        let mut swapped = WorkloadSpec::default();
+        swapped.thin_session_frac = 0.4;
+        swapped.thin_extra_gap_s = 0.05;
+        let mut b = WorkloadGen::resume(swapped, 512, 3 ^ 0x5EED, &a);
+        assert_eq!(b.peek_next_id(), 20);
+        let clock_before = a.clock();
+        assert_eq!(b.clock(), clock_before);
+        let post: Vec<u32> = (0..20).map(|_| b.next_request().id.0).collect();
+        assert_eq!(post[0], 20, "resumed generator restarted its id stream");
+        assert!(pre.iter().all(|id| !post.contains(id)), "duplicate ids across swap");
+        assert!(b.next_request().arrival > clock_before);
+    }
+
+    #[test]
+    fn tenants_partition_sessions_deterministically() {
+        use crate::workload::tenant::TenantClass;
+        let mut spec = WorkloadSpec::default();
+        spec.tenants = vec![
+            TenantClass::new("interactive", 0, 0.5, 250.0, 40.0),
+            TenantClass::new("batch", 1, 0.5, 2000.0, 200.0),
+        ];
+        let mut g = WorkloadGen::new(spec, 512, 3);
+        // Same seed without tenants: identical ids/arrivals/flows (tenancy
+        // adds no RNG draws), and the tenant label follows the session id.
+        let mut plain = WorkloadGen::new(WorkloadSpec::default(), 512, 3);
+        for _ in 0..100 {
+            let (rt, rp) = (g.next_request(), plain.next_request());
+            assert_eq!(rt.arrival, rp.arrival);
+            assert_eq!(rt.flow, rp.flow);
+            assert_eq!(rt.tenant, u8::from(rt.flow.0 >= 32));
+            assert_eq!(rp.tenant, 0);
+        }
     }
 
     #[test]

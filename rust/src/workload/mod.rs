@@ -4,9 +4,11 @@
 pub mod corpus;
 pub mod generator;
 pub mod request;
+pub mod tenant;
 pub mod tokenizer;
 pub mod trace;
 
 pub use generator::{WorkloadGen, WorkloadSpec};
 pub use request::{InferenceRequest, ReqState};
+pub use tenant::TenantClass;
 pub use tokenizer::ToyTokenizer;

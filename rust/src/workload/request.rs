@@ -36,6 +36,9 @@ pub struct InferenceRequest {
     /// Generation budget for this request.
     pub max_new_tokens: usize,
     pub state: ReqState,
+    /// Tenant-class index (`WorkloadSpec::tenants`); 0 when no classes are
+    /// configured (the single implicit tenant).
+    pub tenant: u8,
     /// Node group (replica) the router assigned.
     pub assigned_node: Option<NodeId>,
 
@@ -67,6 +70,7 @@ impl InferenceRequest {
             prompt,
             max_new_tokens: max_new.max(1),
             state: ReqState::InFlight,
+            tenant: 0,
             assigned_node: None,
             admitted_at: None,
             prefill_start: None,

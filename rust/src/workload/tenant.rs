@@ -1,0 +1,109 @@
+//! Multi-tenant session classes: priority/SLO labels threaded from the
+//! workload spec through every [`InferenceRequest`] into per-tenant
+//! TTFT/TPOT attainment scoring (`metrics::TenantLane`).
+//!
+//! Tenancy is a *deterministic partition of the session space*: each class
+//! owns a contiguous range of session ids sized by its `share`, so the
+//! request stream for a given seed is byte-identical whether or not tenants
+//! are configured (no extra RNG draws). Under Zipf session skew the low
+//! session ranks are the hottest, so classes listed first receive the
+//! hotter traffic — list the latency-sensitive class first to stress its
+//! SLOs the hardest.
+
+/// One tenant class: a named priority band with TTFT/TPOT SLO targets and a
+/// share of the session space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantClass {
+    pub name: String,
+    /// Smaller = more latency-sensitive (0 is the premium band).
+    pub priority: u8,
+    /// Fraction of sessions owned by this class (normalized over the list).
+    pub share: f64,
+    /// Time-to-first-token SLO, milliseconds.
+    pub ttft_slo_ms: f64,
+    /// Time-per-output-token SLO, milliseconds.
+    pub tpot_slo_ms: f64,
+}
+
+impl TenantClass {
+    pub fn new(name: &str, priority: u8, share: f64, ttft_slo_ms: f64, tpot_slo_ms: f64) -> Self {
+        TenantClass { name: name.to_string(), priority, share, ttft_slo_ms, tpot_slo_ms }
+    }
+}
+
+/// Map a session id to its tenant-class index: contiguous ranges over
+/// `[0, n_sessions)` proportional to each class's normalized share, with the
+/// last class absorbing the rounding remainder. Returns 0 when no classes
+/// are configured (the single implicit tenant).
+pub fn tenant_of_session(classes: &[TenantClass], session: usize, n_sessions: usize) -> u8 {
+    if classes.len() <= 1 {
+        return 0;
+    }
+    let total: f64 = classes.iter().map(|c| c.share.max(0.0)).sum();
+    if total <= 0.0 {
+        return 0;
+    }
+    let n = n_sessions.max(1) as f64;
+    let mut cum = 0.0;
+    for (i, c) in classes.iter().enumerate().take(classes.len() - 1) {
+        cum += c.share.max(0.0) / total;
+        if (session as f64) < (cum * n).floor() {
+            return i as u8;
+        }
+    }
+    (classes.len() - 1) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn classes() -> Vec<TenantClass> {
+        vec![
+            TenantClass::new("interactive", 0, 0.5, 250.0, 40.0),
+            TenantClass::new("batch", 1, 0.5, 2000.0, 200.0),
+        ]
+    }
+
+    #[test]
+    fn contiguous_partition_covers_all_sessions() {
+        let cs = classes();
+        let n = 64;
+        let mut counts = [0usize; 2];
+        for s in 0..n {
+            counts[tenant_of_session(&cs, s, n) as usize] += 1;
+        }
+        assert_eq!(counts[0] + counts[1], n);
+        assert_eq!(counts[0], 32);
+        // First class owns the low (hot-under-Zipf) session ranks.
+        assert_eq!(tenant_of_session(&cs, 0, n), 0);
+        assert_eq!(tenant_of_session(&cs, n - 1, n), 1);
+    }
+
+    #[test]
+    fn shares_are_normalized_and_remainder_goes_last() {
+        let cs = vec![
+            TenantClass::new("a", 0, 2.0, 100.0, 10.0),
+            TenantClass::new("b", 1, 1.0, 100.0, 10.0),
+            TenantClass::new("c", 2, 1.0, 100.0, 10.0),
+        ];
+        let n = 10;
+        let mut counts = [0usize; 3];
+        for s in 0..n {
+            counts[tenant_of_session(&cs, s, n) as usize] += 1;
+        }
+        assert_eq!(counts, [5, 2, 3], "{counts:?}");
+    }
+
+    #[test]
+    fn degenerate_configs_map_to_tenant_zero() {
+        assert_eq!(tenant_of_session(&[], 5, 64), 0);
+        let one = vec![TenantClass::new("solo", 0, 1.0, 100.0, 10.0)];
+        assert_eq!(tenant_of_session(&one, 63, 64), 0);
+        let zeroed = vec![
+            TenantClass::new("a", 0, 0.0, 100.0, 10.0),
+            TenantClass::new("b", 1, 0.0, 100.0, 10.0),
+        ];
+        assert_eq!(tenant_of_session(&zeroed, 5, 64), 0);
+    }
+}
