@@ -17,6 +17,11 @@ all-zero metrics) can't anchor a comparison in either mode: the script
 prints this run's values as the candidate baseline together with the exact
 commands to commit it, and exits 0.
 
+`dpulens.perf.v2` documents additionally carry a `fleet_stress` scaling
+curve; its points are compared pair-wise by replica count (a point present
+on only one side — e.g. a `--quick` fresh run against a full baseline — is
+skipped, never a failure). v1 documents compare exactly as before.
+
 Usage: ci/perf_trajectory.py BASELINE.json FRESH.json [--gate]
        [--tolerance-pct P]
 """
@@ -35,6 +40,14 @@ METRICS = [
     (("fleet", "events_per_sec"), "fleet events/s", True),
 ]
 
+# Per-scaling-point metrics (v2 `fleet_stress.points`), appended after the
+# base rows and matched by replica count: (key, label-suffix,
+# higher-is-better).
+STRESS_METRICS = [
+    ("events_per_sec", "events/s", True),
+    ("wall_ms_per_sim_s", "wall ms/sim s", False),
+]
+
 DEFAULT_TOLERANCE_PCT = 10.0
 
 
@@ -46,6 +59,20 @@ def lookup(doc, path):
     return doc if isinstance(doc, (int, float)) else None
 
 
+def stress_points(doc):
+    """The v2 `fleet_stress` points keyed by replica count ({} for v1)."""
+    if not isinstance(doc, dict):
+        return {}
+    fs = doc.get("fleet_stress")
+    if not isinstance(fs, dict) or not isinstance(fs.get("points"), list):
+        return {}
+    out = {}
+    for point in fs["points"]:
+        if isinstance(point, dict) and isinstance(point.get("replicas"), int):
+            out[point["replicas"]] = point
+    return out
+
+
 def is_recorded(base):
     """A usable baseline: not the committed placeholder, and at least one
     comparable metric is non-zero."""
@@ -53,7 +80,14 @@ def is_recorded(base):
         return False
     if base.get("provenance") == "unrecorded-placeholder":
         return False
-    return any((lookup(base, p) or 0) > 0 for p, _, _ in METRICS)
+    if any((lookup(base, p) or 0) > 0 for p, _, _ in METRICS):
+        return True
+    for point in stress_points(base).values():
+        for key, _, _ in STRESS_METRICS:
+            v = point.get(key)
+            if isinstance(v, (int, float)) and v > 0:
+                return True
+    return False
 
 
 def compare(base, fresh, tolerance_pct=DEFAULT_TOLERANCE_PCT):
@@ -61,21 +95,34 @@ def compare(base, fresh, tolerance_pct=DEFAULT_TOLERANCE_PCT):
 
     Returns a list of rows: (label, base, fresh, delta_pct, regressed).
     base/fresh are None when a side has no comparable sample (delta_pct is
-    then None and regressed False).
+    then None and regressed False). The base METRICS rows come first (always
+    all of them, so v1 documents see an unchanged row set); v2 stress-point
+    rows follow, one pair per replica count present on both sides.
     """
     rows = []
-    for path, label, higher_better in METRICS:
-        b, f = lookup(base, path), lookup(fresh, path)
+    threshold = tolerance_pct / 100.0
+
+    def add_row(label, b, f, higher_better):
         if b is None or f is None or b == 0:
             rows.append((label, b, f, None, False))
-            continue
+            return
         ratio = f / b
         delta_pct = (ratio - 1.0) * 100.0
-        threshold = tolerance_pct / 100.0
         regressed = (
             ratio < 1.0 - threshold if higher_better else ratio > 1.0 + threshold
         )
         rows.append((label, b, f, delta_pct, regressed))
+
+    for path, label, higher_better in METRICS:
+        add_row(label, lookup(base, path), lookup(fresh, path), higher_better)
+    b_pts, f_pts = stress_points(base), stress_points(fresh)
+    for replicas in sorted(k for k in b_pts if k in f_pts):
+        for key, suffix, higher_better in STRESS_METRICS:
+            b = b_pts[replicas].get(key)
+            f = f_pts[replicas].get(key)
+            b = b if isinstance(b, (int, float)) else None
+            f = f if isinstance(f, (int, float)) else None
+            add_row(f"stress {replicas} {suffix}", b, f, higher_better)
     return rows
 
 
@@ -86,6 +133,11 @@ def print_candidate_instructions(base_path, fresh_path, fresh):
         v = lookup(fresh, path)
         if v is not None:
             print(f"  {label:>18}: {v:,.1f}")
+    for replicas, point in sorted(stress_points(fresh).items()):
+        for key, suffix, _ in STRESS_METRICS:
+            v = point.get(key)
+            if isinstance(v, (int, float)):
+                print(f"  {f'stress {replicas} {suffix}':>18}: {v:,.1f}")
     print("To start the trajectory, commit this run's artifact as the baseline:")
     print(f"  cp {fresh_path} {base_path}")
     print(f"  git add {base_path}")

@@ -25,6 +25,31 @@ def doc(ingest=100_000.0, p50=50.0, mx=200.0, matrix_ms=9_000.0):
     }
 
 
+def stress_doc(points, **kw):
+    """A dpulens.perf.v2 document; points = [(replicas, events_per_sec,
+    wall_ms_per_sim_s), ...]."""
+    d = doc(**kw)
+    d["schema"] = "dpulens.perf.v2"
+    d["fleet_stress"] = {
+        "threads": 8,
+        "points": [
+            {
+                "replicas": r,
+                "sim_ms": 400.0,
+                "wall_ms": wall_per_sim_s * 0.4,
+                "events": 1_000 * r,
+                "events_per_sec": eps,
+                "wall_ms_per_sim_s": wall_per_sim_s,
+                "completed": 10 * r,
+                "alloc_bytes": 1_000_000,
+                "peak_alloc_bytes": 2_000_000,
+            }
+            for r, eps, wall_per_sim_s in points
+        ],
+    }
+    return d
+
+
 class CompareTests(unittest.TestCase):
     def row(self, rows, label):
         matches = [r for r in rows if r[0] == label]
@@ -67,6 +92,73 @@ class CompareTests(unittest.TestCase):
         # Zero baselines can't anchor a ratio.
         rows = pt.compare(doc(ingest=0.0), doc())
         self.assertIsNone(self.row(rows, "ingest events/s")[3])
+
+
+class StressTests(unittest.TestCase):
+    def row(self, rows, label):
+        matches = [r for r in rows if r[0] == label]
+        self.assertEqual(len(matches), 1, label)
+        return matches[0]
+
+    def test_stress_rows_append_after_the_base_metrics(self):
+        base = stress_doc([(100, 50_000.0, 900.0), (1000, 40_000.0, 8_000.0)])
+        rows = pt.compare(base, base)
+        # Base rows first and complete, then 2 rows per shared point.
+        self.assertEqual(len(rows), len(pt.METRICS) + 4)
+        self.assertEqual(
+            [r[0] for r in rows[: len(pt.METRICS)]],
+            [label for _, label, _ in pt.METRICS],
+        )
+        self.assertEqual(
+            [r[0] for r in rows[len(pt.METRICS) :]],
+            [
+                "stress 100 events/s",
+                "stress 100 wall ms/sim s",
+                "stress 1000 events/s",
+                "stress 1000 wall ms/sim s",
+            ],
+        )
+        self.assertTrue(all(not regressed for *_, regressed in rows))
+
+    def test_stress_throughput_drop_and_wall_clock_rise_regress(self):
+        base = stress_doc([(1000, 50_000.0, 8_000.0)])
+        slower = stress_doc([(1000, 35_000.0, 8_000.0)])  # -30% events/s
+        rows = pt.compare(base, slower, tolerance_pct=25.0)
+        self.assertTrue(self.row(rows, "stress 1000 events/s")[4])
+        self.assertFalse(self.row(rows, "stress 1000 wall ms/sim s")[4])
+        heavier = stress_doc([(1000, 50_000.0, 12_000.0)])  # +50% wall/sim-s
+        rows = pt.compare(base, heavier, tolerance_pct=25.0)
+        self.assertTrue(self.row(rows, "stress 1000 wall ms/sim s")[4])
+        faster = stress_doc([(1000, 60_000.0, 6_000.0)])  # improvements
+        rows = pt.compare(base, faster, tolerance_pct=25.0)
+        self.assertTrue(all(not regressed for *_, regressed in rows))
+
+    def test_points_are_matched_by_replica_count(self):
+        # A --quick fresh run (100-replica point only) against a full
+        # baseline compares just the shared point; 250/500/1000 are skipped.
+        full = stress_doc(
+            [(100, 50_000.0, 900.0), (250, 48_000.0, 2_000.0), (1000, 40_000.0, 8_000.0)]
+        )
+        quick = stress_doc([(100, 50_000.0, 900.0)])
+        rows = pt.compare(full, quick)
+        stress_rows = rows[len(pt.METRICS) :]
+        self.assertEqual(
+            [r[0] for r in stress_rows],
+            ["stress 100 events/s", "stress 100 wall ms/sim s"],
+        )
+        self.assertTrue(all(not regressed for *_, regressed in stress_rows))
+        # And the reverse direction (fresh grew a point) is also just skipped.
+        self.assertEqual(len(pt.compare(quick, full)), len(pt.METRICS) + 2)
+
+    def test_v1_documents_grow_no_stress_rows(self):
+        rows = pt.compare(doc(), stress_doc([(100, 50_000.0, 900.0)]))
+        self.assertEqual(len(rows), len(pt.METRICS))
+
+    def test_stress_only_baseline_counts_as_recorded(self):
+        zeros = stress_doc(
+            [(100, 50_000.0, 900.0)], ingest=0.0, p50=0.0, mx=0.0, matrix_ms=0.0
+        )
+        self.assertTrue(pt.is_recorded(zeros))
 
 
 class RecordedTests(unittest.TestCase):

@@ -174,6 +174,9 @@ pub struct CampaignConfig {
     pub topologies: Vec<TopologyDef>,
     /// Worker threads; 0 = one per available core. CLI-set, not manifest.
     pub threads: usize,
+    /// Event-calendar backend every cell runs on (programmatic knob — the
+    /// equivalence suite pins `Heap` to diff against the bucket default).
+    pub calendar: crate::sim::CalendarKind,
 }
 
 impl Default for CampaignConfig {
@@ -189,6 +192,7 @@ impl Default for CampaignConfig {
             workloads: Vec::new(),
             topologies: Vec::new(),
             threads: 0,
+            calendar: crate::sim::CalendarKind::Bucket,
         }
     }
 }
@@ -604,6 +608,7 @@ fn cells(cc: &CampaignConfig) -> Vec<Cell> {
             for &cond in &cc.conditions {
                 let mut cfg = t.base_cfg();
                 cfg.seed = cc.seed;
+                cfg.calendar = cc.calendar;
                 cfg.duration = cc.duration;
                 cfg.warmup_windows = cc.warmup_windows;
                 cfg.calib_windows = cc.calib_windows;

@@ -312,6 +312,16 @@ fn pd_shaped(c: Condition) -> ScenarioCfg {
 }
 
 fn cell_cfg(fc: &FleetConfig, cell: FleetCell) -> ScenarioCfg {
+    let mut cfg = cell_cfg_inner(fc, cell);
+    // Engine plumbing follows the sweep's base config even in the cells
+    // that build their topology from scratch: the equivalence suite pins
+    // `base.calendar` and expects every cell to honor it.
+    cfg.calendar = fc.base.calendar;
+    cfg.observe_threads = fc.base.observe_threads;
+    cfg
+}
+
+fn cell_cfg_inner(fc: &FleetConfig, cell: FleetCell) -> ScenarioCfg {
     match cell {
         FleetCell::Policy(p) => {
             let mut cfg = fc.base.clone();

@@ -53,7 +53,7 @@ impl Scenario {
         let coll = self.handoff_colls.next();
         let arrive = self.cluster.kv_handoff(now, src, dst, bytes, coll, &mut self.outbox);
         self.flush_outbox();
-        self.cal.schedule_at(arrive, Ev::KvHandoffDone { req: id, to });
+        self.schedule_replica_at(to, arrive, Ev::KvHandoffDone { req: id, to });
     }
 
     /// The handoff's last byte arrived at decode replica `to`: adopt the

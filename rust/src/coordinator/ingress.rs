@@ -61,7 +61,7 @@ impl Scenario {
         let bytes = req.prompt_len() as u64 * 4 + INGRESS_OVERHEAD;
         let delivered = self.cluster.ingress(now, node, req.flow, bytes, &mut self.outbox);
         self.flush_outbox();
-        self.cal.schedule_at(delivered, Ev::Delivered(req.id));
+        self.schedule_replica_at(replica, delivered, Ev::Delivered(req.id));
     }
 
     /// Ingress transfer done: admit into the replica's batcher (or reject).

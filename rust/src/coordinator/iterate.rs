@@ -116,7 +116,7 @@ impl Scenario {
         self.sw_window
             .record(SwSignal::KvOccupancy, self.engine.replicas[replica].kv.occupancy());
         self.pending[replica] = Some(PendingIter { kind, started: now });
-        self.cal.schedule_at(timing.done, Ev::IterDone(replica));
+        self.schedule_replica_at(replica, timing.done, Ev::IterDone(replica));
     }
 
     /// An iteration's hardware time elapsed: produce tokens via the compute
@@ -209,7 +209,7 @@ impl Scenario {
         let flow = egress_flow(id);
         let done = self.cluster.egress(now, node, flow, TOKEN_EGRESS_BYTES, &mut self.outbox);
         self.flush_outbox();
-        self.cal.schedule_at(done, Ev::EgressDone { req: id, last });
+        self.schedule_replica_at(replica, done, Ev::EgressDone { req: id, last });
     }
 
     /// Free a finished sequence's batcher slot, KV pages, and backend slot;

@@ -40,6 +40,6 @@ pub use fleet::{
 };
 pub use ingress::target_node_for;
 pub use matrix::{run_matrix, run_sweep, MatrixConfig, MatrixReport};
-pub use perf::{run_perf, PerfConfig, PerfReport};
+pub use perf::{run_perf, FleetStressConfig, PerfConfig, PerfReport};
 pub use scenario::{RunResult, Scenario, ScenarioCfg};
 pub use world::{HandoffStats, PairFlow};

@@ -17,7 +17,14 @@ impl Scenario {
     /// `TelemetryBus::deliver_due` for the tie-break fine print).
     pub(crate) fn deliver_telemetry(&mut self, now: SimTime) {
         let dpu = &mut self.dpu;
-        self.bus.deliver_due(now, |node, events| dpu.ingest(node, events));
+        if self.cfg.observe_threads == 1 {
+            self.bus.deliver_due(now, |node, events| dpu.ingest(node, events));
+        } else {
+            // Fan the per-node buffers out across workers; accounting is
+            // reduced with order-independent sums, so this is byte-identical
+            // to the serial path for any thread count.
+            dpu.ingest_due_parallel(&mut self.bus, now);
+        }
     }
 
     /// Window cadence: deliver the window's telemetry batches, close DPU/SW

@@ -15,13 +15,22 @@
 //! deterministic *shape* — fixed keys, deterministic event counts — while
 //! the timing values vary by machine; CI uploads it per PR so the bench
 //! trajectory accumulates.
+//!
+//! With `--fleet-stress` a fifth phase runs: healthy multi-pool worlds at
+//! 100/250/500/1000 replicas (just 100 under `--quick`), each measured for
+//! wall-clock per simulated second, pipeline events/sec, and allocation
+//! volume via [`crate::util::alloc`] (the peak-RSS proxy). The schema
+//! becomes `dpulens.perf.v2`: v1's keys unchanged, plus a `fleet_stress`
+//! scaling curve — `ci/perf_trajectory.py` compares its points by replica
+//! count.
 
-use crate::coordinator::fleet::{run_fleet, FleetConfig};
+use crate::coordinator::fleet::{multipool_base_cfg, run_fleet, FleetConfig, MultiPoolSpec};
 use crate::coordinator::matrix::{run_matrix, MatrixConfig};
+use crate::coordinator::scenario::Scenario;
 use crate::dpu::agent::DpuPlane;
 use crate::dpu::detectors::DetectConfig;
 use crate::ids::{FlowId, GpuId, NodeId, QpId, ReqId, StageId};
-use crate::sim::SimTime;
+use crate::sim::{SimDur, SimTime};
 use crate::telemetry::event::{Phase, TelemetryEvent, TelemetryKind};
 use crate::telemetry::window::WindowAccum;
 use crate::util::json::Json;
@@ -49,6 +58,33 @@ pub struct PerfConfig {
     pub micro_only: bool,
     /// Label recorded in the JSON (`--quick` vs full).
     pub quick: bool,
+    /// Optional fleet-scale scaling curve (`--fleet-stress`); its presence
+    /// switches the JSON schema to `dpulens.perf.v2`.
+    pub fleet_stress: Option<FleetStressConfig>,
+}
+
+/// Fleet-stress phase configuration: which replica-count scaling points to
+/// run and on how many observe-path workers.
+#[derive(Debug, Clone)]
+pub struct FleetStressConfig {
+    /// Replica counts, one healthy multi-pool world per entry.
+    pub points: Vec<usize>,
+    /// Observe-path worker threads per world (0 = one per core).
+    pub threads: usize,
+    /// Shorter simulated duration per point.
+    pub quick: bool,
+}
+
+impl FleetStressConfig {
+    /// CI sizing: the 100-replica point only.
+    pub fn quick(threads: usize) -> Self {
+        FleetStressConfig { points: vec![100], threads, quick: true }
+    }
+
+    /// The full scaling curve up to the paper-scale 1000-replica fleet.
+    pub fn full(threads: usize) -> Self {
+        FleetStressConfig { points: vec![100, 250, 500, 1000], threads, quick: false }
+    }
 }
 
 impl PerfConfig {
@@ -65,6 +101,7 @@ impl PerfConfig {
             threads: 0,
             micro_only: false,
             quick: true,
+            fleet_stress: None,
         }
     }
 
@@ -81,6 +118,7 @@ impl PerfConfig {
             threads: 0,
             micro_only: false,
             quick: false,
+            fleet_stress: None,
         }
     }
 }
@@ -105,6 +143,50 @@ pub struct PerfReport {
     pub fleet_threads: u64,
     pub fleet_ms: f64,
     pub fleet_events: u64,
+    pub fleet_stress: Option<FleetStressReport>,
+}
+
+/// The fleet-stress phase's scaling curve.
+#[derive(Debug)]
+pub struct FleetStressReport {
+    /// Resolved observe-path worker count the points ran on.
+    pub threads: u64,
+    pub points: Vec<StressPoint>,
+}
+
+/// One scaling point: a healthy multi-pool world at `replicas` scale.
+#[derive(Debug, Clone)]
+pub struct StressPoint {
+    pub replicas: u64,
+    /// Simulated span, milliseconds.
+    pub sim_ms: f64,
+    /// Wall-clock for the whole run, milliseconds.
+    pub wall_ms: f64,
+    /// Telemetry events published through the pipeline.
+    pub events: u64,
+    /// Requests completed (a sanity anchor — zero means the world stalled).
+    pub completed: u64,
+    /// Bytes allocated over the run (zeros when the counting allocator is
+    /// not registered, i.e. in library unit tests).
+    pub alloc_bytes: u64,
+    /// High-water mark of live heap bytes during the run (RSS proxy).
+    pub peak_alloc_bytes: u64,
+}
+
+impl StressPoint {
+    pub fn events_per_sec(&self) -> f64 {
+        events_per_sec(self.events, self.wall_ms)
+    }
+
+    /// Wall milliseconds per simulated second — the scaling headline
+    /// (lower is better; linear scaling holds it flat per replica).
+    pub fn wall_ms_per_sim_s(&self) -> f64 {
+        if self.sim_ms <= 0.0 {
+            0.0
+        } else {
+            self.wall_ms * 1_000.0 / self.sim_ms
+        }
+    }
 }
 
 impl PerfReport {
@@ -120,10 +202,13 @@ impl PerfReport {
         events_per_sec(self.fleet_events, self.fleet_ms)
     }
 
-    /// `dpulens.perf.v1`: fixed key shape; timing values machine-dependent.
+    /// `dpulens.perf.v1` (or `.v2` when the fleet-stress curve ran): fixed
+    /// key shape; timing values machine-dependent.
     pub fn to_json(&self) -> Json {
-        Json::obj()
-            .set("schema", "dpulens.perf.v1")
+        let schema =
+            if self.fleet_stress.is_some() { "dpulens.perf.v2" } else { "dpulens.perf.v1" };
+        let mut j = Json::obj()
+            .set("schema", schema)
             .set("quick", self.quick)
             .set(
                 "ingest",
@@ -159,7 +244,29 @@ impl PerfReport {
                     .set("elapsed_ms", self.fleet_ms)
                     .set("events", self.fleet_events)
                     .set("events_per_sec", self.fleet_events_per_sec()),
-            )
+            );
+        if let Some(fs) = &self.fleet_stress {
+            let mut pts = Json::arr();
+            for p in &fs.points {
+                pts.push(
+                    Json::obj()
+                        .set("replicas", p.replicas)
+                        .set("sim_ms", p.sim_ms)
+                        .set("wall_ms", p.wall_ms)
+                        .set("events", p.events)
+                        .set("events_per_sec", p.events_per_sec())
+                        .set("wall_ms_per_sim_s", p.wall_ms_per_sim_s())
+                        .set("completed", p.completed)
+                        .set("alloc_bytes", p.alloc_bytes)
+                        .set("peak_alloc_bytes", p.peak_alloc_bytes),
+                );
+            }
+            j = j.set(
+                "fleet_stress",
+                Json::obj().set("threads", fs.threads).set("points", pts),
+            );
+        }
+        j
     }
 
     /// Human-readable summary lines.
@@ -199,6 +306,23 @@ impl PerfReport {
                 self.fleet_events,
                 self.fleet_events_per_sec()
             ));
+        }
+        if let Some(fs) = &self.fleet_stress {
+            for p in &fs.points {
+                s.push_str(&format!(
+                    "stress:   {} replicas: {:.0} ms wall / {:.0} ms sim \
+                     ({:.1} wall-ms/sim-s, {} events, {:.0} events/s, \
+                     peak alloc {} MiB) on {} threads\n",
+                    p.replicas,
+                    p.wall_ms,
+                    p.sim_ms,
+                    p.wall_ms_per_sim_s(),
+                    p.events,
+                    p.events_per_sec(),
+                    p.peak_alloc_bytes >> 20,
+                    fs.threads
+                ));
+            }
         }
         s
     }
@@ -309,6 +433,44 @@ fn bench_snapshot(cfg: &PerfConfig) -> Summary {
     lat_us
 }
 
+/// One fleet-stress point's world: a healthy multi-pool serving plane at
+/// `replicas` scale (K = M = replicas/100 pools, floor 2), short enough to
+/// bench but long enough that warmup + calibration end and the fleet sensor
+/// runs live windows.
+pub fn stress_cfg(replicas: usize, threads: usize, quick: bool) -> crate::coordinator::ScenarioCfg {
+    let pools = (replicas / 100).max(2);
+    let mp = MultiPoolSpec { replicas, prefill_pools: pools, decode_pools: pools };
+    mp.validate().expect("stress topology must be buildable");
+    let mut cfg = multipool_base_cfg(&mp);
+    cfg.duration = SimDur::from_ms(if quick { 300 } else { 400 });
+    cfg.warmup_windows = 5;
+    cfg.calib_windows = 15;
+    cfg.observe_threads = threads;
+    cfg
+}
+
+/// Run one scaling point and measure it (wall clock, pipeline events,
+/// allocation counters around the run).
+fn run_stress_point(replicas: usize, threads: usize, quick: bool) -> StressPoint {
+    let cfg = stress_cfg(replicas, threads, quick);
+    let sim_ms = cfg.duration.ns() as f64 / 1e6;
+    let before = crate::util::alloc::stats();
+    crate::util::alloc::reset_peak();
+    let timer = PhaseTimer::start();
+    let res = Scenario::new(cfg).run();
+    let wall_ms = timer.total_ms();
+    let after = crate::util::alloc::stats();
+    StressPoint {
+        replicas: replicas as u64,
+        sim_ms,
+        wall_ms,
+        events: res.telemetry_published,
+        completed: res.metrics.completed,
+        alloc_bytes: after.allocated - before.allocated,
+        peak_alloc_bytes: after.peak,
+    }
+}
+
 /// Run the full perf harness.
 pub fn run_perf(cfg: &PerfConfig) -> PerfReport {
     let ingest_ms = bench_ingest(cfg);
@@ -342,6 +504,18 @@ pub fn run_perf(cfg: &PerfConfig) -> PerfReport {
         (rep.cells_run as u64, rep.threads_used as u64, rep.elapsed_ms, rep.events_total)
     };
 
+    let fleet_stress = cfg.fleet_stress.as_ref().map(|fs| {
+        let points: Vec<StressPoint> = fs
+            .points
+            .iter()
+            .map(|&r| run_stress_point(r, fs.threads, fs.quick))
+            .collect();
+        FleetStressReport {
+            threads: crate::util::par::resolve_threads(fs.threads, usize::MAX) as u64,
+            points,
+        }
+    });
+
     PerfReport {
         quick: cfg.quick,
         ingest_events: cfg.ingest_events as u64,
@@ -360,6 +534,7 @@ pub fn run_perf(cfg: &PerfConfig) -> PerfReport {
         fleet_threads,
         fleet_ms,
         fleet_events,
+        fleet_stress,
     }
 }
 
@@ -378,6 +553,7 @@ mod tests {
             threads: 1,
             micro_only: true,
             quick: true,
+            fleet_stress: None,
         }
     }
 
@@ -397,6 +573,34 @@ mod tests {
             "\"p50_us\"",
             "\"matrix\"",
             "\"fleet\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(!json.contains("NaN") && !json.contains("inf"));
+    }
+
+    #[test]
+    fn stress_report_has_the_v2_shape() {
+        let mut cfg = micro_cfg();
+        cfg.fleet_stress = Some(FleetStressConfig { points: vec![20], threads: 1, quick: true });
+        let rep = run_perf(&cfg);
+        let fs = rep.fleet_stress.as_ref().expect("stress phase must run");
+        assert_eq!(fs.points.len(), 1);
+        assert_eq!(fs.points[0].replicas, 20);
+        assert!(fs.points[0].events > 0, "stress world published no telemetry");
+        assert!(fs.points[0].completed > 0, "stress world served no requests");
+        assert!(fs.points[0].wall_ms > 0.0);
+        let json = rep.to_json().render();
+        for key in [
+            "\"schema\":\"dpulens.perf.v2\"",
+            "\"fleet_stress\"",
+            "\"replicas\":20",
+            "\"wall_ms_per_sim_s\"",
+            "\"events_per_sec\"",
+            // Present even when zero (the library test binary does not
+            // register the counting allocator).
+            "\"alloc_bytes\"",
+            "\"peak_alloc_bytes\"",
         ] {
             assert!(json.contains(key), "missing {key} in {json}");
         }

@@ -53,6 +53,16 @@ pub struct ScenarioCfg {
     pub mitigate: bool,
     /// Stop generating new arrivals after this many requests (0 = unlimited).
     pub max_requests: usize,
+    /// Event-calendar backend. The default bucket calendar shards per pool
+    /// and is the fleet-scale fast path; `Heap` keeps the classic global
+    /// binary heap (the equivalence-suite reference). Identical event order
+    /// either way.
+    pub calendar: crate::sim::CalendarKind,
+    /// Worker threads for the per-window observe path (telemetry ingest +
+    /// fleet-sensor rule sweep); `1` = the classic serial path. Output is
+    /// byte-identical for any value; sweeps that parallelize at the cell
+    /// level keep 1 to avoid oversubscription.
+    pub observe_threads: usize,
 }
 
 impl Default for ScenarioCfg {
@@ -70,6 +80,8 @@ impl Default for ScenarioCfg {
             victim_replica: 0,
             mitigate: false,
             max_requests: 0,
+            calendar: crate::sim::CalendarKind::Bucket,
+            observe_threads: 1,
         }
     }
 }
@@ -149,6 +161,11 @@ pub struct Scenario {
     pub(crate) fleet: FleetSensor,
     pub(crate) bus: TelemetryBus,
     pub(crate) cal: Calendar<Ev>,
+    /// Replica → calendar shard (shard 0 is the global lane; one shard per
+    /// prefill pool, then one per decode pool). Sharding never affects pop
+    /// order — ties are broken by the global sequence number — it only keeps
+    /// each bucket ring short at fleet scale.
+    pub(crate) cal_shard: Vec<usize>,
     pub(crate) gen: WorkloadGen,
     pub(crate) backends: Vec<Box<dyn ComputeBackend>>,
     pub(crate) pending: Vec<Option<PendingIter>>,

@@ -157,26 +157,49 @@ impl Scenario {
             DetectConfig { nic_bw: cfg.cluster.nic_bw, z_fire: 4.0 },
         );
         dpu.warmup_windows = cfg.warmup_windows;
+        dpu.observe_threads = cfg.observe_threads;
         let gen = WorkloadGen::new(cfg.workload.clone(), cfg.engine.profile.vocab, cfg.seed);
         let n_rep = engine.n_replicas();
         let entry_nodes: Vec<NodeId> =
             engine.replicas.iter().map(|r| r.plan.entry_nodes()[0]).collect();
         let max_batch = cfg.engine.policy.max_batch;
         let real = backends.iter().any(|b| b.is_real());
+        let mut fleet =
+            FleetSensor::with_pools(n_rep, entry_nodes, engine.pools().clone(), cfg.cluster.nic_bw);
+        fleet.threads = cfg.observe_threads;
+        // Replica → calendar shard: shard 0 is the global lane (workload
+        // generation, arrivals, window ticks), then one shard per prefill
+        // pool, then one per decode pool. Pop order is globally determined
+        // by `(time, seq)` regardless of shard, so a map gone stale after a
+        // mid-run role shift stays correct — it only changes which bucket
+        // ring an event waits in.
+        let (n_shards, cal_shard) = {
+            let pools = engine.pools();
+            let k = pools.prefill_pools.len();
+            let m = pools.decode_pools.len();
+            let mut map = vec![1usize; n_rep];
+            for (p, pool) in pools.prefill_pools.iter().enumerate() {
+                for &r in pool {
+                    map[r] = 1 + p;
+                }
+            }
+            for (d, pool) in pools.decode_pools.iter().enumerate() {
+                for &r in pool {
+                    map[r] = 1 + k + d;
+                }
+            }
+            (1 + k + m, map)
+        };
         Scenario {
             cluster,
             dpu,
             sw_suite: SwSuite::new(),
             sw_window: SwWindow::new(),
             controller: crate::mitigation::Controller::new(cfg.mitigate),
-            fleet: FleetSensor::with_pools(
-                n_rep,
-                entry_nodes,
-                engine.pools().clone(),
-                cfg.cluster.nic_bw,
-            ),
+            fleet,
             bus: TelemetryBus::new(cfg.cluster.n_nodes),
-            cal: Calendar::new(),
+            cal: Calendar::with_shards(cfg.calendar, n_shards),
+            cal_shard,
             gen,
             backends,
             pending: (0..n_rep).map(|_| None).collect(),
@@ -250,12 +273,19 @@ impl Scenario {
         self.engine.replicas[replica].plan.exit_nodes()[0]
     }
 
+    /// Schedule a replica-scoped event on that replica's calendar shard
+    /// (shard choice never affects pop order; it only spreads the bucket
+    /// rings so no single shard serializes a 1000-replica fleet's churn).
+    pub(crate) fn schedule_replica_at(&mut self, replica: usize, at: SimTime, ev: Ev) {
+        self.cal.schedule_at_shard(self.cal_shard[replica], at, ev);
+    }
+
     /// Schedule an iteration on an idle replica; the placeholder pending
     /// entry marks it busy so we don't double-schedule (replaced in
     /// `Ev::Iterate`).
     pub(crate) fn kick(&mut self, replica: usize, now: SimTime) {
         if self.pending[replica].is_none() {
-            self.cal.schedule_at(now, Ev::Iterate(replica));
+            self.schedule_replica_at(replica, now, Ev::Iterate(replica));
             self.pending[replica] = Some(PendingIter {
                 kind: IterKind::Decode { reqs: vec![], ctx_lens: vec![] },
                 started: now,
@@ -265,6 +295,11 @@ impl Scenario {
 
     /// Assemble the result bundle after the loop ends.
     pub(crate) fn finish(mut self) -> RunResult {
+        // Scenario teardown: fully reset the calendar (clock, seq, processed
+        // count) so nothing can leak between back-to-back cells if a caller
+        // ever recycles the world — `clear()` alone deliberately keeps the
+        // clock and sequence running for mid-run teardown.
+        self.cal.reset();
         let span = self.cfg.duration;
         let n_rep = self.engine.n_replicas();
         let metrics = ServeMetrics::collect_fleet(

@@ -7,8 +7,9 @@ use crate::dpu::detectors::{
 };
 use crate::ids::NodeId;
 use crate::sim::SimTime;
-use crate::telemetry::event::TelemetryEvent;
+use crate::telemetry::event::{TelemetryEvent, TelemetryKind};
 use crate::telemetry::window::{WindowAccum, WindowSnapshot};
+use crate::telemetry::TelemetryBus;
 
 /// Snapshots of history kept per agent for trend detectors.
 const HISTORY_DEPTH: usize = 8;
@@ -58,14 +59,25 @@ impl Agent {
         }
     }
 
-    /// Close the current window; returns the snapshot.
-    pub fn tick(&mut self, now: SimTime) -> WindowSnapshot {
-        let snap = self.accum.snapshot(now);
-        if self.history.len() == HISTORY_DEPTH {
-            self.history.remove(0);
-        }
-        self.history.push(snap.clone());
-        snap
+    /// Advance the window: close the accumulator into a new history entry.
+    /// The evicted oldest snapshot's heap buffers are recycled into the
+    /// accumulator, so a steady-state tick allocates nothing (and the old
+    /// per-tick snapshot clone is gone — observers borrow from history).
+    fn roll_window(&mut self, now: SimTime) {
+        let spare = if self.history.len() == HISTORY_DEPTH {
+            Some(self.history.remove(0))
+        } else {
+            None
+        };
+        let snap = self.accum.snapshot_reusing(now, spare);
+        self.history.push(snap);
+    }
+
+    /// Close the current window; returns the snapshot (the history's
+    /// newest entry).
+    pub fn tick(&mut self, now: SimTime) -> &WindowSnapshot {
+        self.roll_window(now);
+        self.history.last().expect("roll_window pushed")
     }
 
     pub fn history(&self) -> &[WindowSnapshot] {
@@ -84,6 +96,12 @@ pub struct DpuPlane {
     /// Full detection log (node-attributed, timestamped).
     pub detections: Vec<Detection>,
     pub windows_processed: u64,
+    /// Worker threads for the per-window observe fan-out (`util::par`
+    /// semantics: 0 = auto, 1 = serial). Per-agent work is independent and
+    /// results reduce in agent order, so the thread count never changes a
+    /// result — scenario sweeps keep the default 1 (the cells themselves
+    /// parallelize); fleet-stress worlds raise it.
+    pub observe_threads: usize,
 }
 
 impl std::fmt::Debug for DpuPlane {
@@ -108,6 +126,7 @@ impl DpuPlane {
             warmup_windows: 50,
             detections: Vec::new(),
             windows_processed: 0,
+            observe_threads: 1,
         }
     }
 
@@ -128,77 +147,154 @@ impl DpuPlane {
         self.agents[node.idx()].ingest(events);
     }
 
+    /// Parallel single-dispatch fan-out: each node's due telemetry is
+    /// sorted, consumed by its own agent, and drained on the observe pool
+    /// (`observe_threads`; 1 = plain serial loop). Per-node work is
+    /// independent and the delivery accounting reduces by integer sums, so
+    /// the result is byte-identical to a serial
+    /// [`TelemetryBus::deliver_due`] + [`DpuPlane::ingest`] sweep for any
+    /// thread count.
+    pub fn ingest_due_parallel(&mut self, bus: &mut TelemetryBus, now: SimTime) {
+        let threads = self.observe_threads;
+        let bufs = bus.pending_buffers_mut();
+        debug_assert_eq!(bufs.len(), self.agents.len(), "one bus buffer per agent");
+        let per_node = crate::util::par::parallel_zip_mut(
+            &mut self.agents,
+            bufs,
+            threads,
+            |_, agent, buf| {
+                let mut counts = (0u64, [0u64; TelemetryKind::N_CLASSES]);
+                if buf.is_empty() {
+                    return counts;
+                }
+                let due = crate::telemetry::bus::sort_and_partition(buf, now);
+                if due == 0 {
+                    return counts;
+                }
+                counts.0 = due as u64;
+                for ev in &buf[..due] {
+                    counts.1[ev.kind.class_id()] += 1;
+                }
+                agent.ingest(&buf[..due]);
+                buf.drain(..due);
+                counts
+            },
+        );
+        let mut total = 0u64;
+        let mut classes = [0u64; TelemetryKind::N_CLASSES];
+        for (t, c) in per_node {
+            total += t;
+            for (acc, n) in classes.iter_mut().zip(c.iter()) {
+                *acc += n;
+            }
+        }
+        bus.commit_delivered(total, &classes);
+    }
+
     /// Window tick across all agents: snapshot, then calibrate or detect.
-    /// Returns the detections fired this tick.
+    /// Returns the detections fired this tick. Fans out across the observe
+    /// pool; per-agent results concatenate in agent order, so any thread
+    /// count reproduces the serial detection sequence exactly.
     pub fn window_tick(&mut self, now: SimTime) -> Vec<Detection> {
-        let mut fired = Vec::new();
         let in_warmup = self.calibrating
             && self.windows_processed < self.warmup_windows * self.agents.len() as u64;
-        for a in &mut self.agents {
-            self.windows_processed += 1;
-            let snap = a.tick(now);
-            if in_warmup {
-                // Startup transient: observe nothing.
-            } else if self.calibrating {
-                for d in &self.detectors {
-                    d.calibrate(&snap, &mut a.baseline);
+        let calibrating = self.calibrating;
+        // Hoisted off the per-agent path (and the parallel workers).
+        let debug = std::env::var("DPULENS_DEBUG").is_ok();
+        let detectors = &self.detectors;
+        let cfg = &self.cfg;
+        let per_agent = crate::util::par::parallel_map_mut(
+            &mut self.agents,
+            self.observe_threads,
+            |_, a| Self::agent_window_tick(a, now, in_warmup, calibrating, debug, detectors, cfg),
+        );
+        self.windows_processed += self.agents.len() as u64;
+        let fired: Vec<Detection> = per_agent.into_iter().flatten().collect();
+        self.detections.extend(fired.iter().cloned());
+        fired
+    }
+
+    /// One agent's share of a window tick: roll the window, then calibrate
+    /// or detect against the agent-local baseline/history. Touches nothing
+    /// outside `a`, which is what makes the fan-out deterministic.
+    fn agent_window_tick(
+        a: &mut Agent,
+        now: SimTime,
+        in_warmup: bool,
+        calibrating: bool,
+        debug: bool,
+        detectors: &[Box<dyn Detector>],
+        cfg: &DetectConfig,
+    ) -> Vec<Detection> {
+        a.roll_window(now);
+        let mut fired = Vec::new();
+        if in_warmup {
+            // Startup transient: observe nothing.
+            return fired;
+        }
+        if calibrating {
+            let (hist, baseline) = (&a.history, &mut a.baseline);
+            let snap = hist.last().expect("just rolled");
+            for d in detectors {
+                d.calibrate(snap, baseline);
+            }
+            baseline.end_window();
+            return fired;
+        }
+        {
+            // History excludes the snapshot just taken (it's the last
+            // element) so trend detectors compare against the past.
+            let hist_len = a.history.len().saturating_sub(1);
+            let snap = a.history.last().expect("just rolled");
+            let ctx = DetectCtx {
+                snap,
+                baseline: &a.baseline,
+                history: &a.history[..hist_len],
+                cfg,
+            };
+            if debug && snap.node.0 <= 3 {
+                eprintln!(
+                    "[dbg n{} t={}ms] h2d_rate={:.0} z={:.2} db2h={:.0}us z={:.2} beyond={:.2} busy={:.2} | hgap={:.0}us z={:.2} beyond={:.2} cnt={} | ends={} ratio={:.2} z={:.2} act={}",
+                    snap.node.0, now.ns()/1_000_000,
+                    snap.h2d_rate(), a.baseline.z("pc8.h2d_rate", snap.h2d_rate()),
+                    snap.h2d_to_doorbell_ns.mean()/1e3, a.baseline.z("pc8.h2d_to_db", snap.h2d_to_doorbell_ns.mean()),
+                    a.baseline.above_max("pc8.h2d_to_db", snap.h2d_to_doorbell_ns.mean()),
+                    snap.pcie_busy.mean(),
+                    snap.handoff_gap_ns.mean()/1e3, a.baseline.z("ew2.handoff_gap", snap.handoff_gap_ns.mean()),
+                    a.baseline.above_max("ew2.handoff_gap", snap.handoff_gap_ns.mean()),
+                    snap.handoff_count,
+                    snap.flow_ends, snap.end_len_ratio, a.baseline.z("ns8.end_ratio", snap.end_len_ratio),
+                    snap.active_flows,
+                );
+                eprintln!(
+                    "[dbg2 n{} t={}ms] span={:.0}us n={} z={:.2} beyond={:.2} | d2h_dec_bytes={:.0} z={:.2} cnt={}",
+                    snap.node.0, now.ns()/1_000_000,
+                    snap.db_to_handoff_ns.mean()/1e3, snap.db_to_handoff_ns.count(),
+                    a.baseline.z("ew2.stage_span", snap.db_to_handoff_ns.mean()),
+                    a.baseline.above_max("ew2.stage_span", snap.db_to_handoff_ns.mean()),
+                    snap.d2h.decode_bytes.mean(),
+                    a.baseline.z("pc10.decode_bytes", snap.d2h.decode_bytes.mean()),
+                    snap.d2h.decode_count,
+                );
+            }
+            let mut this_window: Vec<Detection> = Vec::new();
+            for d in detectors {
+                if let Some(det) = d.check(&ctx) {
+                    this_window.push(det);
                 }
-                a.baseline.end_window();
-            } else {
-                // History excludes the snapshot just taken (it's the last
-                // element) so trend detectors compare against the past.
-                let hist_len = a.history.len().saturating_sub(1);
-                let ctx = DetectCtx {
-                    snap: &snap,
-                    baseline: &a.baseline,
-                    history: &a.history[..hist_len],
-                    cfg: &self.cfg,
-                };
-                if std::env::var("DPULENS_DEBUG").is_ok() && snap.node.0 <= 3 {
-                    eprintln!(
-                        "[dbg n{} t={}ms] h2d_rate={:.0} z={:.2} db2h={:.0}us z={:.2} beyond={:.2} busy={:.2} | hgap={:.0}us z={:.2} beyond={:.2} cnt={} | ends={} ratio={:.2} z={:.2} act={}",
-                        snap.node.0, now.ns()/1_000_000,
-                        snap.h2d_rate(), a.baseline.z("pc8.h2d_rate", snap.h2d_rate()),
-                        snap.h2d_to_doorbell_ns.mean()/1e3, a.baseline.z("pc8.h2d_to_db", snap.h2d_to_doorbell_ns.mean()),
-                        a.baseline.above_max("pc8.h2d_to_db", snap.h2d_to_doorbell_ns.mean()),
-                        snap.pcie_busy.mean(),
-                        snap.handoff_gap_ns.mean()/1e3, a.baseline.z("ew2.handoff_gap", snap.handoff_gap_ns.mean()),
-                        a.baseline.above_max("ew2.handoff_gap", snap.handoff_gap_ns.mean()),
-                        snap.handoff_count,
-                        snap.flow_ends, snap.end_len_ratio, a.baseline.z("ns8.end_ratio", snap.end_len_ratio),
-                        snap.active_flows,
-                    );
-                    eprintln!(
-                        "[dbg2 n{} t={}ms] span={:.0}us n={} z={:.2} beyond={:.2} | d2h_dec_bytes={:.0} z={:.2} cnt={}",
-                        snap.node.0, now.ns()/1_000_000,
-                        snap.db_to_handoff_ns.mean()/1e3, snap.db_to_handoff_ns.count(),
-                        a.baseline.z("ew2.stage_span", snap.db_to_handoff_ns.mean()),
-                        a.baseline.above_max("ew2.stage_span", snap.db_to_handoff_ns.mean()),
-                        snap.d2h.decode_bytes.mean(),
-                        a.baseline.z("pc10.decode_bytes", snap.d2h.decode_bytes.mean()),
-                        snap.d2h.decode_count,
-                    );
-                }
-                let mut this_window: Vec<Detection> = Vec::new();
-                for d in &self.detectors {
-                    if let Some(det) = d.check(&ctx) {
-                        this_window.push(det);
-                    }
-                }
-                // Confirmation hysteresis: report when the condition fired
-                // twice within a CONFIRM_SPAN-window span on this node.
-                a.window_idx += 1;
-                for det in this_window {
-                    let prev = a.last_fired.insert(det.condition, a.window_idx);
-                    if let Some(p) = prev {
-                        if a.window_idx - p < CONFIRM_SPAN {
-                            fired.push(det);
-                        }
+            }
+            // Confirmation hysteresis: report when the condition fired
+            // twice within a CONFIRM_SPAN-window span on this node.
+            a.window_idx += 1;
+            for det in this_window {
+                let prev = a.last_fired.insert(det.condition, a.window_idx);
+                if let Some(p) = prev {
+                    if a.window_idx - p < CONFIRM_SPAN {
+                        fired.push(det);
                     }
                 }
             }
         }
-        self.detections.extend(fired.iter().cloned());
         fired
     }
 
@@ -338,6 +434,68 @@ mod tests {
             "slow D2H must fire PC2, got {fired_any:?}"
         );
         assert!(plane.first_detection_after(Condition::Pc2D2hBottleneck, SimTime(21_000_000)).is_some());
+    }
+
+    fn d2h_ev(t: u64, node: u32, lat: u64) -> TelemetryEvent {
+        TelemetryEvent {
+            t: SimTime(t),
+            node: NodeId(node),
+            kind: TelemetryKind::DmaD2h {
+                gpu: GpuId(0),
+                bytes: 4096,
+                latency_ns: lat,
+                phase: Phase::Decode,
+            },
+        }
+    }
+
+    /// The parallel observe fan-out (sorted bus buffers → per-node agents →
+    /// per-agent window ticks) must reproduce the serial
+    /// `deliver_due` + `ingest` + `window_tick` path exactly, for any
+    /// thread count.
+    #[test]
+    fn parallel_observe_path_matches_serial() {
+        let run = |threads: usize, parallel_path: bool| {
+            let mut plane = DpuPlane::new(6, 4, DetectConfig::default());
+            plane.warmup_windows = 0;
+            plane.observe_threads = threads;
+            let mut bus = TelemetryBus::new(6);
+            for w in 0..26u64 {
+                let base = w * 1_000_000;
+                // Healthy D2H during calibration; nodes 0-2 turn slow after
+                // go-live so real detections flow through both paths.
+                let lat = if w >= 21 { 90_000 } else { 3_000 };
+                for n in 0..6u32 {
+                    let node_lat = if n <= 2 { lat } else { 3_000 };
+                    for i in 0..10u64 {
+                        bus.enqueue(d2h_ev(base + i * 50_000 + n as u64, n, node_lat));
+                    }
+                }
+                let now = SimTime(base + 1_000_000);
+                if parallel_path {
+                    plane.ingest_due_parallel(&mut bus, now);
+                } else {
+                    let p = &mut plane;
+                    bus.deliver_due(now, |node, evs| p.ingest(node, evs));
+                }
+                plane.window_tick(now);
+                if w == 20 {
+                    plane.go_live();
+                }
+            }
+            (
+                plane.counts_by_condition(),
+                plane.total_ingested(),
+                plane.windows_processed,
+                bus.total_published(),
+                bus.class_counts().to_vec(),
+            )
+        };
+        let serial = run(1, false);
+        assert!(!serial.0.is_empty(), "the fixture must produce detections");
+        for threads in [1, 2, 8] {
+            assert_eq!(run(threads, true), serial, "threads={threads}");
+        }
     }
 
     #[test]

@@ -290,8 +290,10 @@ pub struct DetectCtx<'a> {
     pub cfg: &'a DetectConfig,
 }
 
-/// One runbook-row detector.
-pub trait Detector: Send {
+/// One runbook-row detector. `Send + Sync` because the registry is shared
+/// read-only across the parallel per-window observe path (detectors are
+/// stateless — all mutable state lives in the per-node `Agent`).
+pub trait Detector: Send + Sync {
     fn condition(&self) -> Condition;
     /// Update the baseline with this window's features (calibration phase).
     fn calibrate(&self, snap: &WindowSnapshot, baseline: &mut Baseline);

@@ -150,6 +150,18 @@ pub struct FleetSensor {
     /// Consecutive-hit counters, per rule × pool instance.
     dp_streaks: Vec<Vec<u32>>,
     pd_streaks: Vec<Vec<u32>>,
+    /// Flattened (rule index, pool index) work lists for the window sweep —
+    /// kept in lockstep with the streak tables so the parallel fan-out has a
+    /// plain slice to chunk over.
+    dp_instances: Vec<(usize, usize)>,
+    pd_instances: Vec<(usize, usize)>,
+    /// Worker count for the per-window rule sweep ([`crate::util::par`]
+    /// semantics; `1` = serial, the default — matrix/fleet sweeps already
+    /// parallelize at the cell level, only fleet-stress worlds raise this).
+    /// Evaluation order never affects output: rules only read shared window
+    /// state, and streak updates are applied serially in (rule, pool) order
+    /// afterwards, exactly the serial sweep's order.
+    pub threads: usize,
 }
 
 impl std::fmt::Debug for DpRule {
@@ -171,6 +183,21 @@ fn n_instances(scope: FleetScope, pools: &PoolTopology) -> usize {
         FleetScope::PerDecodePool => pools.decode_pools.len(),
         FleetScope::DecodeUnion => 1,
     }
+}
+
+/// Flattened (rule index, pool index) evaluation list — one entry per streak
+/// counter, in the serial sweep's rule-then-pool order.
+fn instance_list(
+    scopes: impl Iterator<Item = FleetScope>,
+    pools: &PoolTopology,
+) -> Vec<(usize, usize)> {
+    let mut v = Vec::new();
+    for (ri, scope) in scopes.enumerate() {
+        for pi in 0..n_instances(scope, pools) {
+            v.push((ri, pi));
+        }
+    }
+    v
 }
 
 impl FleetSensor {
@@ -216,6 +243,8 @@ impl FleetSensor {
             dp_rules.iter().map(|r| vec![0; n_instances(r.scope, &pools)]).collect();
         let pd_streaks =
             pd_rules.iter().map(|r| vec![0; n_instances(r.scope, &pools)]).collect();
+        let dp_instances = instance_list(dp_rules.iter().map(|r| r.scope), &pools);
+        let pd_instances = instance_list(pd_rules.iter().map(|r| r.scope), &pools);
         FleetSensor {
             n_replicas,
             entry_nodes,
@@ -227,6 +256,9 @@ impl FleetSensor {
             pd_rules,
             dp_streaks,
             pd_streaks,
+            dp_instances,
+            pd_instances,
+            threads: 1,
         }
     }
 
@@ -249,6 +281,8 @@ impl FleetSensor {
                 .iter()
                 .map(|r| vec![0; n_instances(r.scope, &self.pools)])
                 .collect();
+            self.dp_instances = instance_list(self.dp_rules.iter().map(|r| r.scope), &self.pools);
+            self.pd_instances = instance_list(self.pd_rules.iter().map(|r| r.scope), &self.pools);
         }
     }
 
@@ -269,31 +303,43 @@ impl FleetSensor {
         let cur = &self.history[len - 1];
         let old = &self.history[0];
         let prev = if len >= 2 { Some(&self.history[len - 2]) } else { None };
-        let mut fired = Vec::new();
 
-        for ri in 0..self.dp_rules.len() {
+        // Evaluate every (rule, pool) instance — pure reads of shared window
+        // state, so the fan-out is order-free. Streaks are then advanced
+        // serially below in instance order, which IS the classic
+        // rule-then-pool order, so serial and parallel sweeps fire the same
+        // detections in the same order.
+        let eval_one = |&(ri, pi): &(usize, usize)| -> Option<RuleHit> {
             let rule = self.dp_rules[ri];
-            let pools: &[Vec<usize>] = match rule.scope {
-                FleetScope::PerPrefillPool => &self.pools.prefill_pools,
-                FleetScope::PerDecodePool => &self.pools.decode_pools,
-                FleetScope::DecodeUnion => std::slice::from_ref(&self.pools.decode_members),
+            let pool: &[usize] = match rule.scope {
+                FleetScope::PerPrefillPool => &self.pools.prefill_pools[pi],
+                FleetScope::PerDecodePool => &self.pools.decode_pools[pi],
+                FleetScope::DecodeUnion => &self.pools.decode_members,
             };
-            for (pi, pool) in pools.iter().enumerate() {
-                match (rule.eval)(&DpCtx { pool: pool.as_slice(), cur, old, prev }) {
-                    Some(hit) => {
-                        self.dp_streaks[ri][pi] += 1;
-                        if self.dp_streaks[ri][pi] >= rule.confirm {
-                            fired.push(Detection {
-                                condition: rule.condition,
-                                node: self.entry_nodes[hit.replica],
-                                at: now,
-                                severity: hit.severity,
-                                evidence: hit.evidence,
-                            });
-                        }
+            (rule.eval)(&DpCtx { pool, cur, old, prev })
+        };
+        let hits: Vec<Option<RuleHit>> = if self.threads != 1 && self.dp_instances.len() > 1 {
+            crate::util::par::parallel_map(&self.dp_instances, self.threads, eval_one)
+        } else {
+            self.dp_instances.iter().map(eval_one).collect()
+        };
+
+        let mut fired = Vec::new();
+        for (&(ri, pi), hit) in self.dp_instances.iter().zip(hits) {
+            match hit {
+                Some(hit) => {
+                    self.dp_streaks[ri][pi] += 1;
+                    if self.dp_streaks[ri][pi] >= self.dp_rules[ri].confirm {
+                        fired.push(Detection {
+                            condition: self.dp_rules[ri].condition,
+                            node: self.entry_nodes[hit.replica],
+                            at: now,
+                            severity: hit.severity,
+                            evidence: hit.evidence,
+                        });
                     }
-                    None => self.dp_streaks[ri][pi] = 0,
                 }
+                None => self.dp_streaks[ri][pi] = 0,
             }
         }
         fired
@@ -311,45 +357,55 @@ impl FleetSensor {
         let cur = &self.pd_history[len - 1];
         let old = &self.pd_history[0];
         let prev = if len >= 2 { Some(&self.pd_history[len - 2]) } else { None };
-        let mut fired = Vec::new();
 
         let n_decode = self.pools.decode_pools.len();
-        for ri in 0..self.pd_rules.len() {
+        // Same shape as the DP sweep: side-effect-free evaluations (fanned
+        // out when `threads` asks for it), then serial streak advancement in
+        // instance order — byte-identical to the classic nested loop.
+        let eval_one = |&(ri, pi): &(usize, usize)| -> Option<RuleHit> {
             let rule = self.pd_rules[ri];
-            for pi in 0..n_instances(rule.scope, &self.pools) {
-                // A prefill-scoped rule judges its pool against the decode
-                // pool it hands off to (pool p pairs with p % M); decode
-                // scopes see the prefill union as the counterpart.
-                let (pool, other): (&[usize], &[usize]) = match rule.scope {
-                    FleetScope::PerPrefillPool => (
-                        self.pools.prefill_pools[pi].as_slice(),
-                        self.pools.decode_pools[pi % n_decode].as_slice(),
-                    ),
-                    FleetScope::PerDecodePool => (
-                        self.pools.decode_pools[pi].as_slice(),
-                        self.pools.prefill_members.as_slice(),
-                    ),
-                    FleetScope::DecodeUnion => (
-                        self.pools.decode_members.as_slice(),
-                        self.pools.prefill_members.as_slice(),
-                    ),
-                };
-                let cx = PdCtx { pool, other_pool: other, cur, old, prev, nic_bw: self.nic_bw };
-                match (rule.eval)(&cx) {
-                    Some(hit) => {
-                        self.pd_streaks[ri][pi] += 1;
-                        if self.pd_streaks[ri][pi] >= rule.confirm {
-                            fired.push(Detection {
-                                condition: rule.condition,
-                                node: self.entry_nodes[hit.replica],
-                                at: now,
-                                severity: hit.severity,
-                                evidence: hit.evidence,
-                            });
-                        }
+            // A prefill-scoped rule judges its pool against the decode
+            // pool it hands off to (pool p pairs with p % M); decode
+            // scopes see the prefill union as the counterpart.
+            let (pool, other): (&[usize], &[usize]) = match rule.scope {
+                FleetScope::PerPrefillPool => (
+                    self.pools.prefill_pools[pi].as_slice(),
+                    self.pools.decode_pools[pi % n_decode].as_slice(),
+                ),
+                FleetScope::PerDecodePool => (
+                    self.pools.decode_pools[pi].as_slice(),
+                    self.pools.prefill_members.as_slice(),
+                ),
+                FleetScope::DecodeUnion => (
+                    self.pools.decode_members.as_slice(),
+                    self.pools.prefill_members.as_slice(),
+                ),
+            };
+            let cx = PdCtx { pool, other_pool: other, cur, old, prev, nic_bw: self.nic_bw };
+            (rule.eval)(&cx)
+        };
+        let hits: Vec<Option<RuleHit>> = if self.threads != 1 && self.pd_instances.len() > 1 {
+            crate::util::par::parallel_map(&self.pd_instances, self.threads, eval_one)
+        } else {
+            self.pd_instances.iter().map(eval_one).collect()
+        };
+
+        let mut fired = Vec::new();
+        for (&(ri, pi), hit) in self.pd_instances.iter().zip(hits) {
+            match hit {
+                Some(hit) => {
+                    self.pd_streaks[ri][pi] += 1;
+                    if self.pd_streaks[ri][pi] >= self.pd_rules[ri].confirm {
+                        fired.push(Detection {
+                            condition: self.pd_rules[ri].condition,
+                            node: self.entry_nodes[hit.replica],
+                            at: now,
+                            severity: hit.severity,
+                            evidence: hit.evidence,
+                        });
                     }
-                    None => self.pd_streaks[ri][pi] = 0,
                 }
+                None => self.pd_streaks[ri][pi] = 0,
             }
         }
         fired
@@ -756,5 +812,52 @@ mod tests {
             .collect();
         assert!(!dp1.is_empty(), "{fired_any:?}");
         assert!(dp1.iter().all(|d| d.node == NodeId(2)), "must localize into pool {{2,3}}");
+    }
+
+    #[test]
+    fn parallel_rule_sweep_matches_serial_exactly() {
+        // Multi-pool world (2 prefill pools × 2 decode pools over 8
+        // replicas) driven through both the DP and PD sweeps: the fired
+        // detection sequence — order, nodes, severities, evidence strings —
+        // must be identical for any worker count.
+        let run = |threads: usize| -> String {
+            let mut roles = vec![ReplicaRole::Prefill; 4];
+            roles.extend(vec![ReplicaRole::Decode; 4]);
+            let pools = PoolTopology::build(&roles, 2, 2);
+            let mut s = FleetSensor::with_pools(8, nodes(8), pools, 50e9);
+            s.threads = threads;
+            let mut fired = Vec::new();
+            for w in 0..60u64 {
+                let t = SimTime(w * 1_000_000);
+                fired.extend(s.window_tick(
+                    t,
+                    sample(
+                        // Prefill pool {0,1} concentrated; the rest balanced.
+                        vec![w * 20, 0, w * 10, w * 10, 0, 0, 0, 0],
+                        vec![6, 0, 0, 0, 0, 0, 0, 0],
+                        vec![0.5, 0.1, 0.2, 0.2, 0.3, 0.3, 0.3, 0.3],
+                        vec![w * 5, w, w * 3, w * 3, w * 4, w * 4, w * 4, w * 4],
+                        vec![0; 8],
+                    ),
+                ));
+                let mut p = quiet_pd(8);
+                // Prefill backlog grows while handoffs crawl: PD territory.
+                p.prefill_queue = vec![w * 3, w * 3, 0, 0, 0, 0, 0, 0];
+                p.decode_running = vec![0, 0, 0, 0, 8, 8, 8, 8];
+                p.handoff_arrivals = vec![0, 0, 0, 0, w * 4, w, w * 4, w * 4];
+                p.handoffs_started = w * 14;
+                p.handoffs_completed = w * 13;
+                p.handoff_lat_sum_ns = w * 13 * 2_000_000;
+                p.handoff_bytes = w * 13 * 256 * 1024;
+                p.stalled_wait_depth = w / 10;
+                fired.extend(s.pd_window_tick(t, p));
+            }
+            format!("{fired:?}")
+        };
+        let serial = run(1);
+        assert!(serial.contains("Dp1RouterFlowSkew"), "world must actually fire: {serial}");
+        assert_eq!(serial, run(2));
+        assert_eq!(serial, run(8));
+        assert_eq!(serial, run(0));
     }
 }

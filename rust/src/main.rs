@@ -31,9 +31,13 @@
 //!             JSON with per-cell detection metrics and per-tenant
 //!             TTFT/TPOT SLO attainment
 //!   perf      [--quick] [--replicates N] [--threads N] [--json-out PATH]
+//!             [--fleet-stress]
 //!             pipeline benchmark: batched ingest throughput, snapshot
 //!             latency, and matrix/fleet end-to-end wall-clock, written
-//!             as BENCH_pipeline.json (schema dpulens.perf.v1)
+//!             as BENCH_pipeline.json (schema dpulens.perf.v1);
+//!             --fleet-stress appends the 100→1000-replica multi-pool
+//!             scaling curve (events/sec, wall-clock per sim-second,
+//!             allocation counters) and bumps the schema to v2
 //!   conditions [--md] [--json] [--json-out PATH]
 //!             render the condition catalog (rust/src/conditions/) as a
 //!             table, markdown (the EXPERIMENTS.md source of truth), or
@@ -53,6 +57,12 @@ use dpulens::sim::{SimDur, SimTime, MS};
 use dpulens::telemetry::ALL_SW_SIGNALS;
 use dpulens::util::cli::{flag, opt_parse, opt_val};
 use dpulens::util::table::Table;
+
+// The fleet-stress bench's allocation counters (peak-RSS proxy); registered
+// in the binary only, so library unit tests keep the default allocator and
+// read zeroed counters.
+#[global_allocator]
+static ALLOC: dpulens::util::alloc::CountingAlloc = dpulens::util::alloc::CountingAlloc;
 
 fn base_cfg(args: &[String]) -> ScenarioCfg {
     let mut cfg = experiment::standard_cfg();
@@ -300,7 +310,7 @@ fn cmd_campaign(args: &[String]) {
 }
 
 fn cmd_perf(args: &[String]) {
-    use dpulens::coordinator::perf::{run_perf, PerfConfig};
+    use dpulens::coordinator::perf::{run_perf, FleetStressConfig, PerfConfig};
     let mut pc = if flag(args, "--quick") { PerfConfig::quick() } else { PerfConfig::full() };
     if let Some(r) = opt_parse::<usize>(args, "--replicates") {
         pc.matrix_replicates = r;
@@ -313,6 +323,13 @@ fn cmd_perf(args: &[String]) {
     }
     if flag(args, "--micro-only") {
         pc.micro_only = true;
+    }
+    if flag(args, "--fleet-stress") {
+        pc.fleet_stress = Some(if pc.quick {
+            FleetStressConfig::quick(pc.threads)
+        } else {
+            FleetStressConfig::full(pc.threads)
+        });
     }
     let report = run_perf(&pc);
     print!("{}", report.render());
@@ -481,7 +498,15 @@ mod tests {
         ("campaign", &["--threads", "--json", "--json-out"]),
         (
             "perf",
-            &["--quick", "--micro-only", "--replicates", "--replicas", "--threads", "--json-out"],
+            &[
+                "--quick",
+                "--micro-only",
+                "--fleet-stress",
+                "--replicates",
+                "--replicas",
+                "--threads",
+                "--json-out",
+            ],
         ),
         ("conditions", &["--md", "--json", "--json-out"]),
         ("runbook", &[]),

@@ -3,11 +3,46 @@
 //!
 //! Generic over the world's event payload type `E`. The world (see
 //! `coordinator::scenario`) owns all state; this engine only orders time.
+//!
+//! # Backends
+//!
+//! Two interchangeable backends produce the SAME total order — `(t, seq)`
+//! with a globally monotone insertion sequence — so every simulation result
+//! is byte-identical whichever one runs (asserted by the in-module
+//! equivalence property tests and by `rust/tests/perf_scale_suite.rs` on
+//! full worlds):
+//!
+//! - [`CalendarKind::Heap`]: the original global `BinaryHeap`. O(log n) per
+//!   operation; kept as the reference implementation.
+//! - [`CalendarKind::Bucket`] (default): a two-level calendar queue. A ring
+//!   of fixed-width time buckets covers the near horizon where the dense
+//!   event mass lives (iteration completions, arrivals, window ticks);
+//!   events beyond the ring land in an overflow heap that is drained into
+//!   the ring as the horizon slides forward. Schedule and pop are O(1)
+//!   amortized for near-horizon events, independent of calendar size.
+//!
+//! The bucket backend is additionally **sharded**: the world routes each
+//! event to a shard (by pool, see `coordinator::world`), and `pop` runs a
+//! k-way merge over the shard heads on `(t, seq)`. Because `seq` is unique
+//! and globally monotone across shards, the merge reproduces exactly the
+//! single-queue total order — shard assignment is a locality optimization
+//! with no semantic content, which is the determinism argument for the
+//! sharded merge.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use super::time::{SimDur, SimTime};
+
+/// Which calendar implementation a scenario runs on. Both produce identical
+/// event orders (see the module docs); `Bucket` is the default, `Heap` is
+/// kept for the old-vs-new equivalence suites.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CalendarKind {
+    #[default]
+    Bucket,
+    Heap,
+}
 
 #[derive(Debug, Clone)]
 struct Scheduled<E> {
@@ -34,12 +69,174 @@ impl<E> Ord for Scheduled<E> {
     }
 }
 
+/// Ring size × width of one two-level shard. 128 buckets of 2^18 ns cover a
+/// ~33.6 ms horizon: iteration completions (tens to hundreds of µs out) and
+/// the 10 ms window tick land in the ring; only scenario-end style events
+/// take the overflow path.
+const N_BUCKETS: usize = 128;
+const BUCKET_NS: u64 = 1 << 18;
+const RING_SPAN_NS: u64 = N_BUCKETS as u64 * BUCKET_NS;
+
+/// One two-level bucket queue (a "calendar queue" shard).
+///
+/// Invariants that make `front()`/`pop_front()` correct:
+/// - every item in `cur` has `t < base`;
+/// - every item in the ring has `t` within its bucket's span, all spans
+///   `>= base`;
+/// - every item in `overflow` has `t >=` the ring end as of the last drain,
+///   which is `>= base`.
+///
+/// So whenever `cur` is non-empty its back (smallest `(t, seq)`) is the
+/// shard minimum. New events landing before `base` — always legal, the
+/// engine clamps to `now` and `now` can trail `base` arbitrarily — are
+/// merge-inserted into `cur`, preserving the invariant.
+#[derive(Debug)]
+struct BucketShard<E> {
+    /// Promoted working set, sorted DESCENDING by `(t, seq)`; popped from
+    /// the back. The promoted bucket's `Vec` is swapped in, so steady-state
+    /// promotion allocates nothing.
+    cur: Vec<Scheduled<E>>,
+    /// The ring: `buckets[(head + i) % N_BUCKETS]` covers
+    /// `[base + i*BUCKET_NS, base + (i+1)*BUCKET_NS)`.
+    buckets: Vec<Vec<Scheduled<E>>>,
+    head: usize,
+    /// Start (ns) of the ring's coverage.
+    base: u64,
+    /// Events at or beyond the ring end (min-first via the inverted `Ord`).
+    overflow: BinaryHeap<Scheduled<E>>,
+    len: usize,
+}
+
+impl<E> BucketShard<E> {
+    fn new() -> Self {
+        BucketShard {
+            cur: Vec::new(),
+            buckets: (0..N_BUCKETS).map(|_| Vec::new()).collect(),
+            head: 0,
+            base: 0,
+            overflow: BinaryHeap::new(),
+            len: 0,
+        }
+    }
+
+    fn schedule(&mut self, at: SimTime, seq: u64, payload: E) {
+        let t = at.0;
+        let it = Scheduled { at, seq, payload };
+        if t < self.base {
+            // Before the cursor: merge into the working set. Correct even
+            // though earlier items may already have popped — a new event
+            // carries the globally largest seq and (after the engine's
+            // clamp) t >= now >= every popped timestamp, so it can never
+            // sort before an already-delivered event.
+            let key = (it.at, it.seq);
+            let pos = self.cur.partition_point(|x| (x.at, x.seq) > key);
+            self.cur.insert(pos, it);
+        } else if t - self.base >= RING_SPAN_NS {
+            self.overflow.push(it);
+        } else {
+            let idx = ((t - self.base) / BUCKET_NS) as usize;
+            self.buckets[(self.head + idx) % N_BUCKETS].push(it);
+        }
+        self.len += 1;
+    }
+
+    /// Move overflow events the sliding ring has reached into their buckets.
+    fn drain_overflow(&mut self) {
+        let end = self.base + RING_SPAN_NS;
+        while let Some(s) = self.overflow.peek() {
+            if s.at.0 >= end {
+                break;
+            }
+            let s = self.overflow.pop().expect("peeked");
+            debug_assert!(s.at.0 >= self.base, "overflow fell behind the ring");
+            let idx = ((s.at.0 - self.base) / BUCKET_NS) as usize;
+            self.buckets[(self.head + idx) % N_BUCKETS].push(s);
+        }
+    }
+
+    /// Refill `cur` from the next non-empty bucket (advancing the ring), or
+    /// from the overflow heap when the ring runs dry. Leaves `cur` empty
+    /// only when the shard is empty.
+    fn refill(&mut self) {
+        debug_assert!(self.cur.is_empty());
+        loop {
+            self.drain_overflow();
+            let found = (0..N_BUCKETS)
+                .find(|&i| !self.buckets[(self.head + i) % N_BUCKETS].is_empty());
+            if let Some(i) = found {
+                let idx = (self.head + i) % N_BUCKETS;
+                std::mem::swap(&mut self.cur, &mut self.buckets[idx]);
+                self.cur.sort_unstable_by(|a, b| (b.at, b.seq).cmp(&(a.at, a.seq)));
+                self.head = (idx + 1) % N_BUCKETS;
+                self.base += (i as u64 + 1) * BUCKET_NS;
+                return;
+            }
+            // Ring empty: jump the horizon to the overflow minimum.
+            let Some(min) = self.overflow.peek() else { return };
+            self.base = (min.at.0 / BUCKET_NS) * BUCKET_NS;
+            self.head = 0;
+        }
+    }
+
+    /// Shard head key, lazily promoting so the check is O(1) amortized.
+    fn front(&mut self) -> Option<(SimTime, u64)> {
+        if self.cur.is_empty() {
+            self.refill();
+        }
+        self.cur.last().map(|s| (s.at, s.seq))
+    }
+
+    fn pop_front(&mut self) -> Option<Scheduled<E>> {
+        if self.cur.is_empty() {
+            self.refill();
+        }
+        let s = self.cur.pop()?;
+        self.len -= 1;
+        Some(s)
+    }
+
+    /// Read-only head timestamp (for `peek_time`): min over `cur`, the
+    /// first non-empty ring bucket (earlier buckets cover earlier spans),
+    /// and the overflow heap.
+    fn peek_at(&self) -> Option<SimTime> {
+        if let Some(s) = self.cur.last() {
+            return Some(s.at);
+        }
+        let bucket_min = (0..N_BUCKETS)
+            .map(|i| &self.buckets[(self.head + i) % N_BUCKETS])
+            .find(|b| !b.is_empty())
+            .and_then(|b| b.iter().map(|s| s.at).min());
+        let over_min = self.overflow.peek().map(|s| s.at);
+        match (bucket_min, over_min) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    fn clear(&mut self) {
+        self.cur.clear();
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.overflow.clear();
+        self.head = 0;
+        self.base = 0;
+        self.len = 0;
+    }
+}
+
+#[derive(Debug)]
+enum Backend<E> {
+    Heap(BinaryHeap<Scheduled<E>>),
+    Bucket(Vec<BucketShard<E>>),
+}
+
 /// The event calendar + clock.
 #[derive(Debug)]
 pub struct Engine<E> {
     now: SimTime,
     seq: u64,
-    heap: BinaryHeap<Scheduled<E>>,
+    backend: Backend<E>,
     processed: u64,
 }
 
@@ -50,8 +247,27 @@ impl<E> Default for Engine<E> {
 }
 
 impl<E> Engine<E> {
+    /// Default calendar: single-shard bucket queue.
     pub fn new() -> Self {
-        Engine { now: SimTime::ZERO, seq: 0, heap: BinaryHeap::new(), processed: 0 }
+        Self::with_shards(CalendarKind::default(), 1)
+    }
+
+    /// A calendar on an explicit backend (single shard).
+    pub fn with_backend(kind: CalendarKind) -> Self {
+        Self::with_shards(kind, 1)
+    }
+
+    /// A calendar with `shards` independent bucket queues merged on
+    /// `(t, seq)` at pop. The heap backend ignores the shard count (it is a
+    /// single global queue by construction).
+    pub fn with_shards(kind: CalendarKind, shards: usize) -> Self {
+        let backend = match kind {
+            CalendarKind::Heap => Backend::Heap(BinaryHeap::new()),
+            CalendarKind::Bucket => {
+                Backend::Bucket((0..shards.max(1)).map(|_| BucketShard::new()).collect())
+            }
+        };
+        Engine { now: SimTime::ZERO, seq: 0, backend, processed: 0 }
     }
 
     pub fn now(&self) -> SimTime {
@@ -64,24 +280,58 @@ impl<E> Engine<E> {
     }
 
     pub fn pending(&self) -> usize {
-        self.heap.len()
+        match &self.backend {
+            Backend::Heap(h) => h.len(),
+            Backend::Bucket(shards) => shards.iter().map(|s| s.len).sum(),
+        }
     }
 
-    /// Schedule `payload` at absolute time `at` (clamped to now if in the past).
+    /// Schedule `payload` at absolute time `at` (clamped to now if in the
+    /// past) on shard 0.
     pub fn schedule_at(&mut self, at: SimTime, payload: E) {
-        let at = at.max(self.now);
-        self.heap.push(Scheduled { at, seq: self.seq, payload });
-        self.seq += 1;
+        self.schedule_at_shard(0, at, payload);
     }
 
-    /// Schedule `payload` after a delay from now.
+    /// Schedule on a specific shard (clamped to the shard count). Shard
+    /// choice never affects pop order — the merge key `(t, seq)` is global —
+    /// only which queue absorbs the event's bucket traffic.
+    pub fn schedule_at_shard(&mut self, shard: usize, at: SimTime, payload: E) {
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        match &mut self.backend {
+            Backend::Heap(h) => h.push(Scheduled { at, seq, payload }),
+            Backend::Bucket(shards) => {
+                let i = shard.min(shards.len() - 1);
+                shards[i].schedule(at, seq, payload);
+            }
+        }
+    }
+
+    /// Schedule `payload` after a delay from now (shard 0).
     pub fn schedule_in(&mut self, delay: SimDur, payload: E) {
         self.schedule_at(self.now + delay, payload);
     }
 
     /// Pop the next event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        let ev = self.heap.pop()?;
+        let ev = match &mut self.backend {
+            Backend::Heap(h) => h.pop()?,
+            Backend::Bucket(shards) => {
+                // Deterministic k-way merge: the smallest (t, seq) across
+                // shard heads. seq is globally unique, so the winner is too.
+                let mut best: Option<(usize, (SimTime, u64))> = None;
+                for (i, sh) in shards.iter_mut().enumerate() {
+                    if let Some(k) = sh.front() {
+                        if best.map_or(true, |(_, bk)| k < bk) {
+                            best = Some((i, k));
+                        }
+                    }
+                }
+                let (i, _) = best?;
+                shards[i].pop_front().expect("front() guaranteed an event")
+            }
+        };
         debug_assert!(ev.at >= self.now, "time went backwards");
         self.now = ev.at;
         self.processed += 1;
@@ -90,69 +340,234 @@ impl<E> Engine<E> {
 
     /// Peek the next event time without popping.
     pub fn peek_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|e| e.at)
+        match &self.backend {
+            Backend::Heap(h) => h.peek().map(|e| e.at),
+            Backend::Bucket(shards) => shards.iter().filter_map(|s| s.peek_at()).min(),
+        }
     }
 
-    /// Drop all pending events (scenario teardown).
+    /// Drop all pending events. This is a *partial* teardown: the clock
+    /// (`now`), the insertion sequence (`seq`), and the `processed` count
+    /// keep running, so events scheduled afterwards still clamp to the old
+    /// clock and tie-break after everything that came before. Use
+    /// [`Engine::reset`] when the calendar is being reused for a fresh
+    /// world (back-to-back scenario cells on one worker thread).
     pub fn clear(&mut self) {
-        self.heap.clear();
+        match &mut self.backend {
+            Backend::Heap(h) => h.clear(),
+            Backend::Bucket(shards) => {
+                for s in shards {
+                    s.clear();
+                }
+            }
+        }
+    }
+
+    /// Full teardown: drop pending events AND rewind the clock, insertion
+    /// sequence, and processed count to a fresh-engine state. Scenario
+    /// teardown calls this so a calendar (or worker) reused for the next
+    /// cell cannot inherit clock/seq state from the previous run.
+    pub fn reset(&mut self) {
+        self.clear();
+        self.now = SimTime::ZERO;
+        self.seq = 0;
+        self.processed = 0;
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
+
+    fn both_kinds() -> [CalendarKind; 2] {
+        [CalendarKind::Bucket, CalendarKind::Heap]
+    }
 
     #[test]
     fn pops_in_time_order() {
-        let mut e: Engine<u32> = Engine::new();
-        e.schedule_at(SimTime(30), 3);
-        e.schedule_at(SimTime(10), 1);
-        e.schedule_at(SimTime(20), 2);
-        let order: Vec<u32> = std::iter::from_fn(|| e.pop().map(|(_, p)| p)).collect();
-        assert_eq!(order, vec![1, 2, 3]);
+        for kind in both_kinds() {
+            let mut e: Engine<u32> = Engine::with_backend(kind);
+            e.schedule_at(SimTime(30), 3);
+            e.schedule_at(SimTime(10), 1);
+            e.schedule_at(SimTime(20), 2);
+            let order: Vec<u32> = std::iter::from_fn(|| e.pop().map(|(_, p)| p)).collect();
+            assert_eq!(order, vec![1, 2, 3], "{kind:?}");
+        }
     }
 
     #[test]
     fn ties_break_by_insertion_order() {
-        let mut e: Engine<u32> = Engine::new();
-        for i in 0..10 {
-            e.schedule_at(SimTime(5), i);
+        for kind in both_kinds() {
+            let mut e: Engine<u32> = Engine::with_backend(kind);
+            for i in 0..10 {
+                e.schedule_at(SimTime(5), i);
+            }
+            let order: Vec<u32> = std::iter::from_fn(|| e.pop().map(|(_, p)| p)).collect();
+            assert_eq!(order, (0..10).collect::<Vec<_>>(), "{kind:?}");
         }
-        let order: Vec<u32> = std::iter::from_fn(|| e.pop().map(|(_, p)| p)).collect();
-        assert_eq!(order, (0..10).collect::<Vec<_>>());
     }
 
     #[test]
     fn clock_advances_monotonically() {
-        let mut e: Engine<u32> = Engine::new();
-        e.schedule_at(SimTime(100), 0);
-        e.schedule_at(SimTime(50), 1);
-        let mut last = SimTime::ZERO;
-        while let Some((t, _)) = e.pop() {
-            assert!(t >= last);
-            last = t;
+        for kind in both_kinds() {
+            let mut e: Engine<u32> = Engine::with_backend(kind);
+            e.schedule_at(SimTime(100), 0);
+            e.schedule_at(SimTime(50), 1);
+            let mut last = SimTime::ZERO;
+            while let Some((t, _)) = e.pop() {
+                assert!(t >= last);
+                last = t;
+            }
+            assert_eq!(e.now(), SimTime(100));
+            assert_eq!(e.processed(), 2);
         }
-        assert_eq!(e.now(), SimTime(100));
-        assert_eq!(e.processed(), 2);
     }
 
     #[test]
     fn past_schedules_clamp_to_now() {
-        let mut e: Engine<u32> = Engine::new();
-        e.schedule_at(SimTime(100), 0);
-        e.pop();
-        e.schedule_at(SimTime(10), 1); // in the past
-        let (t, _) = e.pop().unwrap();
-        assert_eq!(t, SimTime(100));
+        for kind in both_kinds() {
+            let mut e: Engine<u32> = Engine::with_backend(kind);
+            e.schedule_at(SimTime(100), 0);
+            e.pop();
+            e.schedule_at(SimTime(10), 1); // in the past
+            let (t, _) = e.pop().unwrap();
+            assert_eq!(t, SimTime(100));
+        }
     }
 
     #[test]
     fn schedule_in_is_relative() {
-        let mut e: Engine<u32> = Engine::new();
-        e.schedule_at(SimTime(1000), 0);
+        for kind in both_kinds() {
+            let mut e: Engine<u32> = Engine::with_backend(kind);
+            e.schedule_at(SimTime(1000), 0);
+            e.pop();
+            e.schedule_in(SimDur(500), 1);
+            assert_eq!(e.peek_time(), Some(SimTime(1500)));
+        }
+    }
+
+    #[test]
+    fn far_horizon_events_take_the_overflow_path_in_order() {
+        let mut e: Engine<u32> = Engine::with_backend(CalendarKind::Bucket);
+        // Far beyond the ring span (33.6 ms), near the ring, and in between.
+        e.schedule_at(SimTime(10 * RING_SPAN_NS), 3);
+        e.schedule_at(SimTime(100), 1);
+        e.schedule_at(SimTime(2 * RING_SPAN_NS), 2);
+        e.schedule_at(SimTime(30 * RING_SPAN_NS), 4);
+        let order: Vec<u32> = std::iter::from_fn(|| e.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec![1, 2, 3, 4]);
+        assert_eq!(e.now(), SimTime(30 * RING_SPAN_NS));
+    }
+
+    #[test]
+    fn schedule_behind_the_ring_cursor_stays_ordered() {
+        let mut e: Engine<u32> = Engine::with_backend(CalendarKind::Bucket);
+        // Promote the ring cursor far forward, then schedule at `now`
+        // (behind the cursor's bucket base) — the common `kick()` pattern.
+        e.schedule_at(SimTime(5 * RING_SPAN_NS), 0);
         e.pop();
-        e.schedule_in(SimDur(500), 1);
-        assert_eq!(e.peek_time(), Some(SimTime(1500)));
+        e.schedule_at(e.now() + SimDur(10), 1);
+        e.schedule_at(e.now(), 2); // same t as pending? no: t = now < now+10
+        let (t2, p2) = e.pop().unwrap();
+        assert_eq!((t2, p2), (SimTime(5 * RING_SPAN_NS), 2));
+        let (t1, p1) = e.pop().unwrap();
+        assert_eq!((t1, p1), (SimTime(5 * RING_SPAN_NS + 10), 1));
+    }
+
+    /// The headline invariant: both backends — and any shard assignment —
+    /// produce the identical pop sequence under a random interleaving of
+    /// schedules and pops.
+    #[test]
+    fn bucket_heap_and_sharded_calendars_agree() {
+        for seed in 0..8u64 {
+            let mut rng = Rng::seeded(0xCA1E_0000 + seed);
+            let mut heap: Engine<u64> = Engine::with_backend(CalendarKind::Heap);
+            let mut bucket: Engine<u64> = Engine::with_backend(CalendarKind::Bucket);
+            let mut sharded: Engine<u64> = Engine::with_shards(CalendarKind::Bucket, 5);
+            let mut popped: Vec<(SimTime, u64)> = Vec::new();
+            let mut id = 0u64;
+            for _ in 0..4000 {
+                if rng.chance(0.6) {
+                    // Mix of near-horizon, mid, far, and at-now times.
+                    let dt = match rng.below(10) {
+                        0..=5 => rng.below(200_000),          // dense near mass
+                        6 | 7 => rng.below(RING_SPAN_NS),     // within the ring
+                        8 => rng.below(4 * RING_SPAN_NS),     // overflow
+                        _ => 0,                               // exactly now
+                    };
+                    let at = heap.now() + SimDur(dt);
+                    heap.schedule_at(at, id);
+                    bucket.schedule_at(at, id);
+                    sharded.schedule_at_shard(rng.index(5), at, id);
+                    id += 1;
+                } else {
+                    let h = heap.pop();
+                    let b = bucket.pop();
+                    let s = sharded.pop();
+                    assert_eq!(h, b, "heap vs bucket diverged (seed {seed})");
+                    assert_eq!(h, s, "heap vs sharded diverged (seed {seed})");
+                    if let Some(ev) = h {
+                        popped.push((ev.0, ev.1));
+                    }
+                }
+            }
+            // Drain the rest and check the total order end to end.
+            loop {
+                let h = heap.pop();
+                assert_eq!(h, bucket.pop(), "drain: heap vs bucket (seed {seed})");
+                assert_eq!(h, sharded.pop(), "drain: heap vs sharded (seed {seed})");
+                match h {
+                    Some(ev) => popped.push((ev.0, ev.1)),
+                    None => break,
+                }
+            }
+            assert_eq!(popped.len() as u64, id, "every scheduled event popped");
+            assert!(popped.windows(2).all(|w| w[0].0 <= w[1].0), "time-ordered");
+        }
+    }
+
+    #[test]
+    fn clear_keeps_clock_and_seq_running() {
+        for kind in both_kinds() {
+            let mut e: Engine<u32> = Engine::with_backend(kind);
+            e.schedule_at(SimTime(100), 0);
+            e.pop();
+            e.schedule_at(SimTime(200), 1);
+            e.clear();
+            assert_eq!(e.pending(), 0);
+            // The documented invariant: clear() is partial — the clock and
+            // processed count survive, and past schedules still clamp.
+            assert_eq!(e.now(), SimTime(100));
+            assert_eq!(e.processed(), 1);
+            e.schedule_at(SimTime(10), 2);
+            assert_eq!(e.pop(), Some((SimTime(100), 2)), "{kind:?}");
+        }
+    }
+
+    /// Satellite regression: back-to-back scenario cells reusing one worker
+    /// must not inherit clock/seq state — reset() restores a fresh engine.
+    #[test]
+    fn reset_restores_a_fresh_engine() {
+        for kind in both_kinds() {
+            let run = |e: &mut Engine<u32>| -> Vec<(SimTime, u32)> {
+                e.schedule_at(SimTime(500), 0);
+                e.schedule_at(SimTime(250), 1);
+                e.schedule_at(SimTime(250), 2);
+                std::iter::from_fn(|| e.pop()).collect()
+            };
+            let mut fresh: Engine<u32> = Engine::with_backend(kind);
+            let first = run(&mut fresh);
+            let mut reused: Engine<u32> = Engine::with_backend(kind);
+            reused.schedule_at(SimTime(9_999), 7);
+            let _ = reused.pop();
+            reused.schedule_at(SimTime(1), 8); // left pending on purpose
+            reused.reset();
+            assert_eq!(reused.now(), SimTime::ZERO);
+            assert_eq!(reused.processed(), 0);
+            assert_eq!(reused.pending(), 0);
+            let second = run(&mut reused);
+            assert_eq!(first, second, "{kind:?}: reused engine must replay identically");
+        }
     }
 }

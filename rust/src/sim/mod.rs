@@ -5,5 +5,5 @@ pub mod dist;
 pub mod engine;
 pub mod time;
 
-pub use engine::Engine;
+pub use engine::{CalendarKind, Engine};
 pub use time::{SimDur, SimTime, MS, NS, SEC, US};

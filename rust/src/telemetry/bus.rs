@@ -30,6 +30,33 @@ use std::collections::HashMap;
 /// standard scenarios run a few hundred to a few thousand events.
 const NODE_BUF_CAPACITY: usize = 1024;
 
+/// Above this node count the per-node prealloc is scaled down (fleet-stress
+/// worlds run 1000+ single-node replicas; 1024 slots × 64-byte events ×
+/// thousands of nodes is real memory, and huge worlds see proportionally
+/// fewer events per node per window anyway). Buffers still grow on demand.
+const PREALLOC_FULL_NODES: usize = 256;
+
+/// Per-node buffer prealloc for an `n_nodes`-node bus.
+fn node_buf_capacity(n_nodes: usize) -> usize {
+    if n_nodes <= PREALLOC_FULL_NODES {
+        NODE_BUF_CAPACITY
+    } else {
+        (NODE_BUF_CAPACITY * PREALLOC_FULL_NODES / n_nodes).max(64)
+    }
+}
+
+/// Sort `buf` into delivery order — stable on `t`, so emission order breaks
+/// ties, reproducing the calendar's `(t, seq)` order per node — and return
+/// how many leading events are due (strictly before `now`). Skips the sort
+/// when the buffer is already ordered, the overwhelmingly common case:
+/// hardware models emit near-monotone timestamps.
+pub(crate) fn sort_and_partition(buf: &mut [TelemetryEvent], now: crate::sim::SimTime) -> usize {
+    if !buf.windows(2).all(|w| w[0].t <= w[1].t) {
+        buf.sort_by_key(|e| e.t);
+    }
+    buf.partition_point(|e| e.t < now)
+}
+
 /// Reusable pending-event buffers, one per node, plus class counters and an
 /// optional bounded trace recorder.
 #[derive(Debug)]
@@ -42,8 +69,9 @@ pub struct TelemetryBus {
 
 impl TelemetryBus {
     pub fn new(n_nodes: usize) -> Self {
+        let cap = node_buf_capacity(n_nodes);
         TelemetryBus {
-            pending: (0..n_nodes).map(|_| Vec::with_capacity(NODE_BUF_CAPACITY)).collect(),
+            pending: (0..n_nodes).map(|_| Vec::with_capacity(cap)).collect(),
             class_counts: [0; TelemetryKind::N_CLASSES],
             total: 0,
             recorder: None,
@@ -92,10 +120,9 @@ impl TelemetryBus {
             if buf.is_empty() {
                 continue;
             }
-            // Stable sort on t keeps emission order within a timestamp —
-            // the old calendar's (t, seq) delivery order for this node.
-            buf.sort_by_key(|e| e.t);
-            let due = buf.partition_point(|e| e.t < now);
+            // (t, emission-order) delivery — the old calendar's order for
+            // this node; already-sorted buffers skip the sort entirely.
+            let due = sort_and_partition(buf, now);
             if due == 0 {
                 continue;
             }
@@ -105,6 +132,25 @@ impl TelemetryBus {
             }
             f(NodeId(i as u32), &buf[..due]);
             buf.drain(..due);
+        }
+    }
+
+    /// The per-node pending buffers, exposed for the parallel observe path
+    /// (`DpuPlane::ingest_due_parallel`): each worker sorts, consumes, and
+    /// drains its own nodes' buffers, then the caller folds the delivery
+    /// counts back in via [`TelemetryBus::commit_delivered`] so the
+    /// accounting matches a serial [`TelemetryBus::deliver_due`] exactly.
+    pub fn pending_buffers_mut(&mut self) -> &mut [Vec<TelemetryEvent>] {
+        &mut self.pending
+    }
+
+    /// Fold per-node delivery counts from a parallel observer back into the
+    /// bus accounting. Integer sums, so the result is independent of worker
+    /// scheduling.
+    pub fn commit_delivered(&mut self, total: u64, class_counts: &[u64; TelemetryKind::N_CLASSES]) {
+        self.total += total;
+        for (acc, n) in self.class_counts.iter_mut().zip(class_counts.iter()) {
+            *acc += n;
         }
     }
 
@@ -222,6 +268,78 @@ mod tests {
         });
         // Time order, and gpu1 before gpu2 at the shared timestamp.
         assert_eq!(order, vec![(10, 1), (10, 2), (30, 0)]);
+    }
+
+    #[test]
+    fn out_of_order_buffer_still_sorts() {
+        // The sorted-skip fast path must not leak unsorted buffers through:
+        // a deliberately out-of-order emission sequence still delivers in
+        // (t, emission) order.
+        let mut bus = TelemetryBus::new(1);
+        for &t in &[50, 10, 40, 10, 30] {
+            bus.enqueue(doorbell(t, 0));
+        }
+        let mut order = Vec::new();
+        bus.deliver_due(SimTime(100), |_, evs| {
+            order.extend(evs.iter().map(|e| e.t.ns()));
+        });
+        assert_eq!(order, vec![10, 10, 30, 40, 50]);
+    }
+
+    #[test]
+    fn already_sorted_buffer_delivers_identically() {
+        // Same events, pre-sorted (fast path) vs shuffled (sort path):
+        // identical delivery.
+        let deliver = |ts: &[u64]| {
+            let mut bus = TelemetryBus::new(1);
+            for &t in ts {
+                bus.enqueue(doorbell(t, 0));
+            }
+            let mut order = Vec::new();
+            bus.deliver_due(SimTime(100), |_, evs| {
+                order.extend(evs.iter().map(|e| e.t.ns()));
+            });
+            order
+        };
+        assert_eq!(deliver(&[5, 10, 20, 20, 30]), deliver(&[20, 5, 30, 10, 20]));
+    }
+
+    #[test]
+    fn parallel_commit_matches_serial_accounting() {
+        let mut serial = TelemetryBus::new(2);
+        let mut par = TelemetryBus::new(2);
+        for bus in [&mut serial, &mut par] {
+            bus.enqueue(doorbell(1, 0));
+            bus.enqueue(doorbell(2, 1));
+            bus.enqueue(doorbell(30, 1)); // not due
+        }
+        serial.deliver_due(SimTime(10), |_, _| {});
+        // Parallel-shaped path: consume buffers directly, commit the sums.
+        let mut total = 0u64;
+        let mut classes = [0u64; TelemetryKind::N_CLASSES];
+        for buf in par.pending_buffers_mut() {
+            let due = sort_and_partition(buf, SimTime(10));
+            total += due as u64;
+            for ev in &buf[..due] {
+                classes[ev.kind.class_id()] += 1;
+            }
+            buf.drain(..due);
+        }
+        par.commit_delivered(total, &classes);
+        assert_eq!(par.total_published(), serial.total_published());
+        assert_eq!(par.class_counts(), serial.class_counts());
+        assert_eq!(par.pending_events(), serial.pending_events());
+    }
+
+    #[test]
+    fn huge_fleets_scale_down_the_prealloc() {
+        assert_eq!(node_buf_capacity(8), NODE_BUF_CAPACITY);
+        assert_eq!(node_buf_capacity(PREALLOC_FULL_NODES), NODE_BUF_CAPACITY);
+        let big = node_buf_capacity(2048);
+        assert!(big < NODE_BUF_CAPACITY, "prealloc must shrink for huge fleets");
+        assert!(big >= 64, "floor keeps buffers useful");
+        let bus = TelemetryBus::new(2048);
+        assert!(bus.pending[0].capacity() < NODE_BUF_CAPACITY);
     }
 
     #[test]

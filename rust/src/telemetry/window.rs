@@ -518,6 +518,18 @@ impl WindowAccum {
 
     /// Close the window at `now`, emit the snapshot, and reset per-window state.
     pub fn snapshot(&mut self, now: SimTime) -> WindowSnapshot {
+        self.snapshot_reusing(now, None)
+    }
+
+    /// [`WindowAccum::snapshot`], recycling a spent snapshot's heap storage
+    /// (the per-GPU lane vector) as the next window's accumulator, so
+    /// steady-state ticks allocate nothing. The caller hands back a
+    /// snapshot it has finished with — the agent's history eviction.
+    pub fn snapshot_reusing(
+        &mut self,
+        now: SimTime,
+        spare: Option<WindowSnapshot>,
+    ) -> WindowSnapshot {
         // Finalize flow-derived dispersion features. The median inputs go
         // into scratch buffers that persist across windows (capacity reuse;
         // quickselect instead of clone + full sort).
@@ -610,7 +622,17 @@ impl WindowAccum {
 
         let mut snap = WindowSnapshot::default();
         snap.node = self.node;
-        snap.per_gpu = vec![GpuWindow::default(); self.n_gpus_hint];
+        snap.per_gpu = match spare {
+            // Reuse the retired snapshot's lane vector in place of a fresh
+            // allocation; contents are overwritten to defaults.
+            Some(mut old) => {
+                let mut lanes = std::mem::take(&mut old.per_gpu);
+                lanes.clear();
+                lanes.resize(self.n_gpus_hint, GpuWindow::default());
+                lanes
+            }
+            None => vec![GpuWindow::default(); self.n_gpus_hint],
+        };
         std::mem::swap(&mut snap, &mut self.cur);
         snap.start = self.window_start;
         snap.end = now;

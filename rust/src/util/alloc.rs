@@ -1,0 +1,131 @@
+//! Counting global allocator — the fleet-stress bench's peak-RSS proxy.
+//!
+//! A thin wrapper over [`std::alloc::System`] that keeps three relaxed
+//! atomic counters: cumulative bytes allocated, live bytes, and the
+//! high-water mark of live bytes. The binary registers it as the
+//! `#[global_allocator]` (in `main.rs` only — library unit tests run on the
+//! default allocator and read zeros, so tests assert on field *presence*,
+//! not positivity).
+//!
+//! Counters are a proxy, not an RSS measurement: they track what the
+//! program asked the allocator for, ignoring allocator slack, fragmentation,
+//! and non-heap mappings. For a bench curve that only needs to show "the
+//! steady-state observe path allocates nothing", that is exactly the right
+//! instrument — it moves by zero when the arena/reuse paths hold.
+//!
+//! Ordering is `Relaxed` throughout: the counters are statistics, never
+//! synchronization, and the bench reads them from the single driver thread
+//! after worker scopes have joined (the join is the happens-before edge).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATED: AtomicU64 = AtomicU64::new(0);
+static LIVE: AtomicU64 = AtomicU64::new(0);
+static PEAK: AtomicU64 = AtomicU64::new(0);
+
+/// The counting allocator. Register with
+/// `#[global_allocator] static A: CountingAlloc = CountingAlloc;`.
+pub struct CountingAlloc;
+
+/// One snapshot of the allocation counters, in bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocStats {
+    /// Cumulative bytes ever allocated (monotone).
+    pub allocated: u64,
+    /// Bytes currently live (allocated minus freed).
+    pub live: u64,
+    /// High-water mark of `live` since the last [`reset_peak`].
+    pub peak: u64,
+}
+
+/// Read the counters. All zeros when [`CountingAlloc`] is not the
+/// registered global allocator (library unit tests).
+pub fn stats() -> AllocStats {
+    AllocStats {
+        allocated: ALLOCATED.load(Ordering::Relaxed),
+        live: LIVE.load(Ordering::Relaxed),
+        peak: PEAK.load(Ordering::Relaxed),
+    }
+}
+
+/// Restart the high-water mark from the current live volume — called at the
+/// start of each bench point so `peak` reports that point's own excursion,
+/// not a predecessor's.
+pub fn reset_peak() {
+    PEAK.store(LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+fn on_alloc(size: u64) {
+    ALLOCATED.fetch_add(size, Ordering::Relaxed);
+    let live = LIVE.fetch_add(size, Ordering::Relaxed) + size;
+    // Lock-free max: racing updates may each retry, but the final value is
+    // the true maximum of every observed `live`.
+    let mut peak = PEAK.load(Ordering::Relaxed);
+    while live > peak {
+        match PEAK.compare_exchange_weak(peak, live, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => break,
+            Err(cur) => peak = cur,
+        }
+    }
+}
+
+fn on_dealloc(size: u64) {
+    LIVE.fetch_sub(size, Ordering::Relaxed);
+}
+
+// SAFETY: delegates every allocation verbatim to `System`; the counters are
+// pure bookkeeping and never influence pointer values or layouts.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            on_alloc(layout.size() as u64);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        on_dealloc(layout.size() as u64);
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            on_alloc(layout.size() as u64);
+        }
+        p
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            on_dealloc(layout.size() as u64);
+            on_alloc(new_size as u64);
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The test binary does not register the allocator, so the counters stay
+    // wherever direct calls put them — exercise the bookkeeping directly.
+    #[test]
+    fn counters_track_alloc_and_peak() {
+        let before = stats();
+        on_alloc(1000);
+        on_alloc(500);
+        on_dealloc(800);
+        let after = stats();
+        assert_eq!(after.allocated - before.allocated, 1500);
+        assert_eq!(after.live, before.live + 700);
+        assert!(after.peak >= before.live + 1500);
+        on_dealloc(700);
+        reset_peak();
+        assert_eq!(stats().peak, stats().live);
+    }
+}

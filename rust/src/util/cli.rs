@@ -114,6 +114,7 @@ pub const CLI: &[CmdSpec] = &[
         flags: &[
             f("--quick"),
             f("--micro-only"),
+            f("--fleet-stress"),
             fv("--replicates", "N"),
             fv("--replicas", "N"),
             fv("--threads", "N"),

@@ -3,6 +3,7 @@
 //! harness. Everything here is dependency-free (offline vendoring constraint)
 //! and deterministic.
 
+pub mod alloc;
 pub mod cli;
 pub mod fastmap;
 pub mod json;

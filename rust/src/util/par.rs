@@ -51,6 +51,84 @@ where
     v.into_iter().map(|(_, r)| r).collect()
 }
 
+/// Apply `f` to every item of a mutable slice on scoped workers, returning
+/// the per-item results in input order. The slice is split into contiguous
+/// chunks (one per worker) so each item is mutated by exactly one thread;
+/// results are concatenated in chunk order, which is input order. With
+/// independent per-item work this is byte-identical to the serial loop for
+/// any thread count. `threads == 0` means auto; `1` is a plain serial loop.
+pub fn parallel_map_mut<T, R, F>(items: &mut [T], threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let len = items.len();
+    let n = resolve_threads(threads, len);
+    if n <= 1 {
+        return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let chunk = (len + n - 1) / n;
+    let mut out: Vec<Vec<R>> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(n);
+        for (ci, part) in items.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            handles.push(s.spawn(move || {
+                let base = ci * chunk;
+                part.iter_mut()
+                    .enumerate()
+                    .map(|(j, t)| f(base + j, t))
+                    .collect::<Vec<R>>()
+            }));
+        }
+        out = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    });
+    out.into_iter().flatten().collect()
+}
+
+/// [`parallel_map_mut`] over two equal-length mutable slices zipped
+/// item-wise (the telemetry-bus buffer + its node's agent). Both slices use
+/// the same chunk boundaries, so item `i` of each is visited together by
+/// one worker.
+pub fn parallel_zip_mut<A, B, R, F>(a: &mut [A], b: &mut [B], threads: usize, f: F) -> Vec<R>
+where
+    A: Send,
+    B: Send,
+    R: Send,
+    F: Fn(usize, &mut A, &mut B) -> R + Sync,
+{
+    assert_eq!(a.len(), b.len(), "parallel_zip_mut: slice lengths differ");
+    let len = a.len();
+    let n = resolve_threads(threads, len);
+    if n <= 1 {
+        return a
+            .iter_mut()
+            .zip(b.iter_mut())
+            .enumerate()
+            .map(|(i, (x, y))| f(i, x, y))
+            .collect();
+    }
+    let chunk = (len + n - 1) / n;
+    let mut out: Vec<Vec<R>> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(n);
+        for (ci, (pa, pb)) in a.chunks_mut(chunk).zip(b.chunks_mut(chunk)).enumerate() {
+            let f = &f;
+            handles.push(s.spawn(move || {
+                let base = ci * chunk;
+                pa.iter_mut()
+                    .zip(pb.iter_mut())
+                    .enumerate()
+                    .map(|(j, (x, y))| f(base + j, x, y))
+                    .collect::<Vec<R>>()
+            }));
+        }
+        out = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    });
+    out.into_iter().flatten().collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,6 +163,43 @@ mod tests {
         let empty: Vec<u32> = Vec::new();
         assert!(parallel_map(&empty, 4, |&x| x).is_empty());
         assert_eq!(parallel_map(&[7u32], 4, |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn map_mut_mutates_every_item_and_orders_results() {
+        for threads in [1, 2, 8, 0] {
+            let mut items: Vec<u64> = (0..101).collect();
+            let out = parallel_map_mut(&mut items, threads, |i, x| {
+                *x += 1;
+                (*x) * 10 + i as u64 % 10
+            });
+            assert_eq!(items, (1..102).collect::<Vec<_>>(), "threads={threads}");
+            assert_eq!(out.len(), 101);
+            let serial: Vec<u64> = (0..101u64).map(|i| (i + 1) * 10 + i % 10).collect();
+            assert_eq!(out, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn zip_mut_pairs_items_by_index() {
+        for threads in [1, 3, 8, 0] {
+            let mut a: Vec<u64> = (0..67).collect();
+            let mut b: Vec<u64> = (0..67).map(|x| x * 100).collect();
+            let out = parallel_zip_mut(&mut a, &mut b, threads, |i, x, y| {
+                assert_eq!(*y, *x * 100, "zip must pair index {i} items");
+                *x += *y;
+                *x
+            });
+            let expect: Vec<u64> = (0..67).map(|x| x + x * 100).collect();
+            assert_eq!(a, expect, "threads={threads}");
+            assert_eq!(out, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_mut_empty_slice() {
+        let mut items: Vec<u32> = Vec::new();
+        assert!(parallel_map_mut(&mut items, 4, |_, x| *x).is_empty());
     }
 
     #[test]

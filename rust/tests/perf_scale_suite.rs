@@ -1,0 +1,145 @@
+//! Perf-scale equivalence suite — the headline invariant behind the
+//! bucket/sharded event calendar and the parallel observe path: both are
+//! pure performance work, so every report schema must stay **byte-identical**
+//! to the classic global heap calendar and the serial observe path.
+//!
+//! * matrix / fleet-v3 / campaign-smoke worlds render the same JSON under
+//!   `CalendarKind::Heap` and the default `CalendarKind::Bucket`;
+//! * the observe path (parallel telemetry ingest + fleet-sensor rule sweep)
+//!   is byte-stable across `observe_threads` 1/2/8, and composes with either
+//!   calendar backend;
+//! * `perf --fleet-stress --quick` completes its 100-replica point under
+//!   `cargo test` (the CI bench-smoke contract);
+//! * back-to-back cells share no calendar state (scenario teardown resets).
+
+use dpulens::coordinator::campaign::{run_campaign, CampaignConfig};
+use dpulens::coordinator::experiment::standard_cfg;
+use dpulens::coordinator::fleet::{run_fleet, FleetConfig, MultiPoolSpec};
+use dpulens::coordinator::matrix::{run_matrix, MatrixConfig};
+use dpulens::coordinator::perf::{run_perf, stress_cfg, FleetStressConfig, PerfConfig};
+use dpulens::coordinator::Scenario;
+use dpulens::sim::{CalendarKind, SimDur};
+
+#[test]
+fn matrix_json_is_byte_identical_across_calendar_backends() {
+    // Trimmed like matrix_suite's determinism test: detection success is
+    // irrelevant here, only that the calendar swap changes no byte.
+    let mut base = standard_cfg();
+    base.duration = SimDur::from_ms(1300);
+    base.warmup_windows = 10;
+    base.calib_windows = 50;
+    let mk = |calendar: CalendarKind| {
+        let mut base = base.clone();
+        base.calendar = calendar;
+        MatrixConfig { base, replicates: 1, threads: 0, negative_control: true }
+    };
+    let heap = run_matrix(&mk(CalendarKind::Heap)).to_json().render();
+    let bucket = run_matrix(&mk(CalendarKind::Bucket)).to_json().render();
+    assert_eq!(heap, bucket, "matrix JSON differs between calendar backends");
+    assert!(heap.contains("\"schema\":\"dpulens.matrix.v1\""));
+}
+
+#[test]
+fn fleet_v3_json_is_byte_identical_across_calendar_backends() {
+    // Mirror run_multipool_study's sweep shape (2-replica base + the 6/2/1
+    // multi-pool study block), but drive run_fleet directly so the base
+    // config's calendar knob reaches every cell.
+    let mk = |calendar: CalendarKind| {
+        let mut fc = FleetConfig::new(2);
+        fc.multipool = Some(MultiPoolSpec { replicas: 6, prefill_pools: 2, decode_pools: 1 });
+        fc.threads = 0;
+        fc.base.calendar = calendar;
+        fc
+    };
+    let heap = run_fleet(&mk(CalendarKind::Heap)).to_json().render();
+    let bucket = run_fleet(&mk(CalendarKind::Bucket)).to_json().render();
+    assert_eq!(heap, bucket, "fleet v3 JSON differs between calendar backends");
+    assert!(heap.contains("\"schema\":\"dpulens.fleet.v3\""));
+}
+
+#[test]
+fn campaign_smoke_json_is_byte_identical_across_calendar_backends() {
+    let text = include_str!("../../examples/campaign_smoke.toml");
+    let base = CampaignConfig::parse(text).unwrap();
+    let mk = |calendar: CalendarKind| {
+        let mut cc = base.clone();
+        cc.threads = 2;
+        cc.calendar = calendar;
+        cc
+    };
+    let heap = run_campaign(&mk(CalendarKind::Heap)).to_json().render();
+    let bucket = run_campaign(&mk(CalendarKind::Bucket)).to_json().render();
+    assert_eq!(heap, bucket, "campaign JSON differs between calendar backends");
+    assert!(heap.starts_with("{\"schema\":\"dpulens.campaign.v1\""));
+}
+
+#[test]
+fn observe_path_is_byte_stable_across_worker_counts() {
+    // A 20-replica multi-pool stress world exercises both parallel observe
+    // stages (per-node ingest fan-out + the fleet sensor's rule sweep).
+    let digest = |threads: usize, calendar: CalendarKind| {
+        let mut cfg = stress_cfg(20, threads, true);
+        cfg.calendar = calendar;
+        let res = Scenario::new(cfg).run();
+        assert!(res.metrics.completed > 0, "stress world served nothing");
+        format!(
+            "{:?}",
+            (
+                res.metrics.completed,
+                res.telemetry_published,
+                res.dpu_ingested,
+                res.dpu_invisible_dropped,
+                res.windows,
+                res.iterations,
+                res.replica_iterations,
+                res.replica_routed,
+                res.detections,
+                res.handoffs.started,
+                res.handoffs.bytes_delivered,
+            )
+        )
+    };
+    let serial = digest(1, CalendarKind::Bucket);
+    assert_eq!(serial, digest(2, CalendarKind::Bucket), "2 workers diverged");
+    assert_eq!(serial, digest(8, CalendarKind::Bucket), "8 workers diverged");
+    // The observe fan-out composes with the calendar swap: still identical.
+    assert_eq!(serial, digest(8, CalendarKind::Heap), "heap + workers diverged");
+}
+
+#[test]
+fn quick_fleet_stress_completes_the_100_replica_point() {
+    let cfg = PerfConfig {
+        ingest_events: 4_000,
+        ingest_batch: 256,
+        snapshot_windows: 8,
+        snapshot_events_per_window: 200,
+        matrix_replicates: 1,
+        fleet_replicas: 2,
+        threads: 0,
+        micro_only: true,
+        quick: true,
+        fleet_stress: Some(FleetStressConfig::quick(0)),
+    };
+    let rep = run_perf(&cfg);
+    let fs = rep.fleet_stress.as_ref().expect("fleet-stress must run");
+    assert_eq!(fs.points.len(), 1);
+    let p = &fs.points[0];
+    assert_eq!(p.replicas, 100);
+    assert!(p.completed > 0, "100-replica world served nothing");
+    assert!(p.events > 0, "100-replica world published no telemetry");
+    let json = rep.to_json().render();
+    assert!(json.contains("\"schema\":\"dpulens.perf.v2\""));
+    assert!(json.contains("\"replicas\":100"));
+    assert!(!json.contains("NaN") && !json.contains("inf"));
+}
+
+#[test]
+fn back_to_back_cells_share_no_calendar_state() {
+    // Teardown resets the calendar (clock, sequence, counters); two
+    // consecutive cells of the same config must be bit-equal.
+    let run = || {
+        let res = Scenario::new(stress_cfg(20, 2, true)).run();
+        (res.metrics.completed, res.telemetry_published, res.detections.len())
+    };
+    assert_eq!(run(), run(), "a fresh cell was affected by its predecessor");
+}
