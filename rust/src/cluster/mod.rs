@@ -12,6 +12,7 @@ pub use topology::{ClusterSpec, FabricKnobs, NodeKnobs, ReplicaRole, ReplicaShap
 use crate::ids::{GpuId, NodeId};
 use crate::sim::SimTime;
 use crate::telemetry::event::{Phase, TelemetryKind};
+use crate::telemetry::faults::TeleFaultMode;
 use crate::util::rng::Rng;
 
 /// One host node's hardware.
@@ -32,6 +33,10 @@ pub struct Cluster {
     pub nodes: Vec<NodeHw>,
     pub fabric: Fabric,
     pub fabric_knobs: FabricKnobs,
+    /// Per-node telemetry fault mode (TD family): the monitoring path's own
+    /// pathology knob. Set by TD injections, read live by the scenario's
+    /// `TelemetryFaults` runtime, cleared by `heal` and the TD directives.
+    pub tele_faults: Vec<TeleFaultMode>,
 }
 
 /// Default simulated GPU peak throughput (FLOP/s) — A100-class bf16 order.
@@ -59,7 +64,8 @@ impl Cluster {
             })
             .collect();
         let fabric = Fabric::new(&spec);
-        Cluster { spec, nodes, fabric, fabric_knobs: FabricKnobs::default() }
+        let tele_faults = vec![TeleFaultMode::None; spec.n_nodes];
+        Cluster { spec, nodes, fabric, fabric_knobs: FabricKnobs::default(), tele_faults }
     }
 
     pub fn node(&self, n: NodeId) -> &NodeHw {
@@ -246,10 +252,15 @@ impl Cluster {
             hw.knobs = NodeKnobs::healthy(g);
         }
         self.fabric_knobs = FabricKnobs::default();
+        for m in &mut self.tele_faults {
+            *m = TeleFaultMode::None;
+        }
     }
 
     pub fn all_healthy(&self) -> bool {
-        self.fabric_knobs.is_healthy() && self.nodes.iter().all(|n| n.knobs.is_healthy())
+        self.fabric_knobs.is_healthy()
+            && self.nodes.iter().all(|n| n.knobs.is_healthy())
+            && self.tele_faults.iter().all(|m| m.is_none())
     }
 }
 
@@ -286,6 +297,17 @@ mod tests {
         assert!(!c.all_healthy());
         c.heal();
         assert!(c.all_healthy());
+    }
+
+    #[test]
+    fn telemetry_faults_count_as_unhealthy_and_heal() {
+        let mut c = Cluster::new(ClusterSpec::default(), 1);
+        assert!(c.all_healthy());
+        c.tele_faults[2] = TeleFaultMode::Freeze;
+        assert!(!c.all_healthy(), "a wedged exporter is a pathology");
+        c.heal();
+        assert!(c.all_healthy());
+        assert!(c.tele_faults.iter().all(|m| m.is_none()));
     }
 
     #[test]

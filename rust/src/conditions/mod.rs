@@ -16,20 +16,22 @@
 //! is missing one.
 //!
 //! Specs are grouped into per-family modules mirroring the paper tables:
-//! `north_south` (3a), `pcie` (3b), `east_west` (3c), plus the two
-//! serving-scale extensions `data_parallel` (DP) and `phase_disagg` (PD).
+//! `north_south` (3a), `pcie` (3b), `east_west` (3c), plus the
+//! serving-scale extensions `data_parallel` (DP), `phase_disagg` (PD), and
+//! `telemetry_dropout` (TD — the monitoring path itself as the victim).
 
 pub mod data_parallel;
 pub mod east_west;
 pub mod north_south;
 pub mod pcie;
 pub mod phase_disagg;
+pub mod telemetry_dropout;
 
 use crate::cluster::Cluster;
 use crate::coordinator::scenario::ScenarioCfg;
 use crate::dpu::attribution::RootCause;
 use crate::dpu::detectors::Condition;
-use crate::dpu::fleet::{DpCtx, PdCtx, RuleHit};
+use crate::dpu::fleet::{DpCtx, PdCtx, RuleHit, TdCtx};
 use crate::engine::Engine;
 use crate::ids::NodeId;
 use crate::mitigation::directive::Directive;
@@ -50,6 +52,10 @@ pub enum Family {
     DataParallel,
     /// Phase-disaggregation extension (pool-boundary vantage).
     PhaseDisagg,
+    /// Telemetry-dropout extension (the monitoring path itself degrades:
+    /// stale, lossy, or lagging DPU signal — sensed by the freshness
+    /// watchdog rather than the signal content).
+    TelemetryDropout,
 }
 
 impl Family {
@@ -61,6 +67,7 @@ impl Family {
             Family::EastWest => "3c",
             Family::DataParallel => "dp",
             Family::PhaseDisagg => "pd",
+            Family::TelemetryDropout => "td",
         }
     }
 
@@ -71,6 +78,7 @@ impl Family {
             Family::EastWest => "east-west",
             Family::DataParallel => "data-parallel",
             Family::PhaseDisagg => "phase-disagg",
+            Family::TelemetryDropout => "telemetry-dropout",
         }
     }
 }
@@ -137,6 +145,15 @@ pub enum DetectorBinding {
         min_pool: usize,
         eval: fn(&PdCtx) -> Option<RuleHit>,
     },
+    /// Freshness-plane rule run by the sensor on the per-replica telemetry
+    /// delivery stats (`TdCtx`). No scope/min-pool: the rule judges the
+    /// whole fleet once per window (freshness of a single replica's signal
+    /// is well-defined, unlike peer skew) and the hit names the worst
+    /// replica.
+    FleetTd {
+        confirm: u32,
+        eval: fn(&TdCtx) -> Option<RuleHit>,
+    },
 }
 
 impl DetectorBinding {
@@ -145,6 +162,7 @@ impl DetectorBinding {
             DetectorBinding::NodeWindow => "window",
             DetectorBinding::FleetDp { .. } => "fleet-dp",
             DetectorBinding::FleetPd { .. } => "fleet-pd",
+            DetectorBinding::FleetTd { .. } => "fleet-td",
         }
     }
 }
@@ -209,8 +227,8 @@ pub struct ConditionSpec {
 }
 
 /// Every catalog row, runbook-table order: NS1-NS9, PC1-PC10, EW1-EW9, then
-/// the DP and PD extensions — the same order as `ALL_CONDITIONS` +
-/// `DP_CONDITIONS` + `PD_CONDITIONS`.
+/// the DP, PD, and TD extensions — the same order as `ALL_CONDITIONS` +
+/// `DP_CONDITIONS` + `PD_CONDITIONS` + `TD_CONDITIONS`.
 pub fn all_specs() -> impl Iterator<Item = &'static ConditionSpec> {
     north_south::SPECS
         .iter()
@@ -218,6 +236,7 @@ pub fn all_specs() -> impl Iterator<Item = &'static ConditionSpec> {
         .chain(east_west::SPECS.iter())
         .chain(data_parallel::SPECS.iter())
         .chain(phase_disagg::SPECS.iter())
+        .chain(telemetry_dropout::SPECS.iter())
 }
 
 /// Look up the catalog row for a condition. Panics (naming the variant) if a
@@ -369,13 +388,14 @@ pub fn to_json() -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dpu::detectors::{ALL_CONDITIONS, DP_CONDITIONS, PD_CONDITIONS};
+    use crate::dpu::detectors::{ALL_CONDITIONS, DP_CONDITIONS, PD_CONDITIONS, TD_CONDITIONS};
 
     fn every_condition() -> Vec<Condition> {
         ALL_CONDITIONS
             .iter()
             .chain(DP_CONDITIONS.iter())
             .chain(PD_CONDITIONS.iter())
+            .chain(TD_CONDITIONS.iter())
             .copied()
             .collect()
     }
@@ -446,6 +466,13 @@ mod tests {
                         s.condition.id()
                     );
                 }
+                Family::TelemetryDropout => {
+                    assert!(
+                        matches!(s.binding, DetectorBinding::FleetTd { .. }),
+                        "{} must bind to a fleet TD (freshness) rule",
+                        s.condition.id()
+                    );
+                }
             }
         }
     }
@@ -469,7 +496,7 @@ mod tests {
             assert!(json.contains(&format!("\"id\":\"{}\"", c.id())), "json missing {}", c.id());
         }
         assert!(json.contains("\"schema\":\"dpulens.conditions.v1\""));
-        assert!(json.contains("\"conditions\":34"));
+        assert!(json.contains("\"conditions\":37"));
     }
 
     /// Docs can't drift: the EXPERIMENTS.md condition table is the exact

@@ -1,0 +1,213 @@
+//! Telemetry-dropout family (the monitoring path as the victim): TD1-TD3,
+//! one [`ConditionSpec`] each. Unlike every other family, these conditions
+//! degrade the *signal about* the cluster rather than the cluster itself:
+//! the injection flips the victim node's `Cluster::tele_faults` mode and the
+//! `telemetry::faults` boundary layer does the damage. Detection reads the
+//! per-replica freshness stats that same boundary maintains — the DPU can
+//! always see whether its own inbox is stale, thin, or late, even when the
+//! events themselves never arrive — via `DetectorBinding::FleetTd` rules
+//! evaluated by `dpu::fleet::FleetSensor::td_window_tick`.
+//!
+//! The three signatures are mutually exclusive by construction:
+//! - TD1 (stale-frozen): signal age grows with an EMPTY hold queue — the
+//!   exporter is wedged, nothing is merely delayed.
+//! - TD2 (lossy-drop): deliveries keep flowing but a material fraction of
+//!   the emitted events never arrive — partial loss, not silence.
+//! - TD3 (lagging-delivery): events arrive complete but windows late, with
+//!   a standing in-flight backlog — fabric-visible as a queue, not a gap.
+
+use super::{
+    cause_network, ConditionSpec, DetectorBinding, Family, InjectCtx, InjectSite,
+};
+use crate::dpu::detectors::Condition;
+use crate::dpu::fleet::{RuleHit, TdCtx};
+use crate::mitigation::directive::Directive;
+use crate::telemetry::faults::TeleFaultMode;
+
+/// TD1: windows of total silence (with nothing held) before the signal
+/// counts as frozen rather than momentarily quiet.
+const TD1_STALE_WINDOWS: u64 = 4;
+/// TD2: horizon drop ratio that counts as lossy, and the emission floor
+/// that keeps a thin window from producing a meaningless ratio.
+const TD2_DROP_RATIO: f64 = 0.2;
+const TD2_MIN_EMITTED: u64 = 16;
+/// TD3: release delay (windows) that counts as lagging rather than jitter.
+const TD3_LAG_WINDOWS: u64 = 3;
+
+/// Injection magnitudes: strong enough that every signature clears its
+/// threshold with margin on the standard fleet configs.
+const TD2_INJECT_DROP_P: f64 = 0.75;
+const TD3_INJECT_LAG: u64 = 6;
+
+// ---- injections ----
+
+fn inject_td1(cx: &mut InjectCtx) -> String {
+    cx.cluster.tele_faults[cx.target.idx()] = TeleFaultMode::Freeze;
+    format!("telemetry exporter wedged on node {}: all DPU signal frozen", cx.target)
+}
+
+fn inject_td2(cx: &mut InjectCtx) -> String {
+    cx.cluster.tele_faults[cx.target.idx()] = TeleFaultMode::Drop { p: TD2_INJECT_DROP_P };
+    format!(
+        "telemetry path lossy on node {}: {:.0}% of DPU events dropped",
+        cx.target,
+        TD2_INJECT_DROP_P * 100.0
+    )
+}
+
+fn inject_td3(cx: &mut InjectCtx) -> String {
+    cx.cluster.tele_faults[cx.target.idx()] = TeleFaultMode::Lag { windows: TD3_INJECT_LAG };
+    format!(
+        "telemetry delivery lagging on node {}: DPU signal arrives {TD3_INJECT_LAG} windows late",
+        cx.target
+    )
+}
+
+// ---- freshness rules ----
+
+/// TD1 — stale-frozen signal: a replica's telemetry age grows past the
+/// stale threshold while its hold queue is empty (nothing is merely in
+/// flight) and the node demonstrably kept emitting over the horizon — the
+/// exporter died, the node did not.
+fn rule_td1(cx: &TdCtx) -> Option<RuleHit> {
+    cx.prev?;
+    let mut best: Option<(usize, u64)> = None;
+    for r in 0..cx.cur.age_windows.len() {
+        let age = cx.cur.age_windows[r];
+        let emitted_h = cx.cur.emitted[r].saturating_sub(cx.old.emitted[r]);
+        if age >= TD1_STALE_WINDOWS && cx.cur.held[r] == 0 && emitted_h > 0 {
+            match best {
+                Some((_, b)) if b >= age => {}
+                _ => best = Some((r, age)),
+            }
+        }
+    }
+    let (r, age) = best?;
+    let emitted_h = cx.cur.emitted[r].saturating_sub(cx.old.emitted[r]);
+    Some(RuleHit {
+        replica: r,
+        severity: age as f64 / TD1_STALE_WINDOWS as f64,
+        evidence: format!(
+            "replica {r} telemetry frozen: nothing delivered for {age} windows \
+             while {emitted_h} events were emitted over the horizon"
+        ),
+    })
+}
+
+/// TD2 — lossy-drop: deliveries still flow (this is loss, not silence) but
+/// the horizon drop ratio is material.
+fn rule_td2(cx: &TdCtx) -> Option<RuleHit> {
+    cx.prev?;
+    let mut best: Option<(usize, f64)> = None;
+    for r in 0..cx.cur.age_windows.len() {
+        let emitted_h = cx.cur.emitted[r].saturating_sub(cx.old.emitted[r]);
+        let delivered_h = cx.cur.delivered[r].saturating_sub(cx.old.delivered[r]);
+        let dropped_h = cx.cur.dropped[r].saturating_sub(cx.old.dropped[r]);
+        if emitted_h < TD2_MIN_EMITTED || delivered_h == 0 {
+            continue;
+        }
+        let ratio = dropped_h as f64 / emitted_h as f64;
+        if ratio >= TD2_DROP_RATIO {
+            match best {
+                Some((_, b)) if b >= ratio => {}
+                _ => best = Some((r, ratio)),
+            }
+        }
+    }
+    let (r, ratio) = best?;
+    let emitted_h = cx.cur.emitted[r].saturating_sub(cx.old.emitted[r]);
+    let dropped_h = cx.cur.dropped[r].saturating_sub(cx.old.dropped[r]);
+    Some(RuleHit {
+        replica: r,
+        severity: ratio / TD2_DROP_RATIO,
+        evidence: format!(
+            "replica {r} telemetry lossy: {dropped_h} of {emitted_h} events \
+             ({:.0}%) lost over the horizon with partial signal still flowing",
+            ratio * 100.0
+        ),
+    })
+}
+
+/// TD3 — lagging delivery: a standing in-flight backlog whose release delay
+/// exceeds jitter — events arrive complete but windows late, which from the
+/// DPU vantage is a visible queue, not a gap.
+fn rule_td3(cx: &TdCtx) -> Option<RuleHit> {
+    cx.prev?;
+    let mut best: Option<(usize, u64)> = None;
+    for r in 0..cx.cur.age_windows.len() {
+        let lag = cx.cur.lag_windows[r];
+        if cx.cur.held[r] > 0 && lag >= TD3_LAG_WINDOWS {
+            match best {
+                Some((_, b)) if b >= lag => {}
+                _ => best = Some((r, lag)),
+            }
+        }
+    }
+    let (r, lag) = best?;
+    Some(RuleHit {
+        replica: r,
+        severity: lag as f64 / TD3_LAG_WINDOWS as f64,
+        evidence: format!(
+            "replica {r} telemetry lagging: delivery {lag} windows late with \
+             {} events in flight",
+            cx.cur.held[r]
+        ),
+    })
+}
+
+pub static SPECS: [ConditionSpec; 3] = [
+    ConditionSpec {
+        condition: Condition::Td1StaleFrozen,
+        label: "stale-frozen telemetry",
+        family: Family::TelemetryDropout,
+        binding: DetectorBinding::FleetTd { confirm: 3, eval: rule_td1 },
+        site: InjectSite::Node,
+        inject: inject_td1,
+        signal: "Signal age grows unbounded: zero deliveries, empty hold queue",
+        stages: "Monitoring path (node exporter -> DPU observer)",
+        effect: "Detectors and router weights reason over a dead snapshot",
+        root_cause_text: "Wedged telemetry exporter/agent on the node (process hung, buffer pinned)",
+        directive: Directive::RestartTelemetryExporter,
+        cause: cause_network,
+        expected_causes: &["network"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Td2LossyDrop,
+        label: "lossy telemetry drop",
+        family: Family::TelemetryDropout,
+        binding: DetectorBinding::FleetTd { confirm: 3, eval: rule_td2 },
+        site: InjectSite::Node,
+        inject: inject_td2,
+        signal: "Delivered/emitted completeness collapses while signal still flows",
+        stages: "Monitoring path (per-event loss on the export channel)",
+        effect: "Windowed rates read low; z-score baselines drift on thin samples",
+        root_cause_text: "Lossy export channel: overflowing mirror queue, drops on the oob path",
+        directive: Directive::RepairTelemetryPath,
+        cause: cause_network,
+        expected_causes: &["network"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+    ConditionSpec {
+        condition: Condition::Td3LaggingDelivery,
+        label: "lagging telemetry delivery",
+        family: Family::TelemetryDropout,
+        binding: DetectorBinding::FleetTd { confirm: 3, eval: rule_td3 },
+        site: InjectSite::Node,
+        inject: inject_td3,
+        signal: "Standing export backlog: events arrive complete but windows late",
+        stages: "Monitoring path (delayed delivery, in-order backlog)",
+        effect: "Router weights and detections trail reality by the lag depth",
+        root_cause_text: "Starved/deprioritized telemetry class on a congested export path",
+        directive: Directive::PrioritizeTelemetryClass,
+        cause: cause_network,
+        expected_causes: &["network"],
+        compute_skew: false,
+        shape_matrix: None,
+        shape_fleet: None,
+    },
+];

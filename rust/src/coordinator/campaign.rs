@@ -976,6 +976,29 @@ kind = "single"
     }
 
     #[test]
+    fn td_conditions_are_addressable_by_catalog_id() {
+        // The TD family rides the same catalog-id grammar as every other
+        // condition: a manifest can summon a degraded-telemetry cell
+        // without any new manifest syntax.
+        let cc = CampaignConfig::parse(
+            "[campaign]\nconditions = [\"healthy\", \"TD1\", \"td2\", \"TD3\"]\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cc.conditions,
+            vec![
+                CellCondition::Healthy,
+                CellCondition::Injected(Condition::Td1StaleFrozen),
+                CellCondition::Injected(Condition::Td2LossyDrop),
+                CellCondition::Injected(Condition::Td3LaggingDelivery),
+            ]
+        );
+        let v = cells(&cc);
+        assert_eq!(v.len(), 4);
+        assert!(matches!(v[1].cfg.inject, Some((Condition::Td1StaleFrozen, _))));
+    }
+
+    #[test]
     fn parser_rejects_typos_and_garbage() {
         for (bad, needle) in [
             ("[campaign]\nnmae = \"x\"", "unknown key"),

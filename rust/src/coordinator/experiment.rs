@@ -180,14 +180,22 @@ mod tests {
 
     #[test]
     fn expected_classes_cover_all_conditions() {
-        use crate::dpu::detectors::PD_CONDITIONS;
-        for c in ALL_CONDITIONS.iter().chain(DP_CONDITIONS.iter()).chain(PD_CONDITIONS.iter()) {
+        use crate::dpu::detectors::{PD_CONDITIONS, TD_CONDITIONS};
+        for c in ALL_CONDITIONS
+            .iter()
+            .chain(DP_CONDITIONS.iter())
+            .chain(PD_CONDITIONS.iter())
+            .chain(TD_CONDITIONS.iter())
+        {
             assert!(!expected_cause_classes(*c).is_empty(), "{c:?}");
         }
         assert!(expected_cause_classes(Condition::Pc8HostCpuBottleneck).contains(&"host"));
         assert!(expected_cause_classes(Condition::Ew1TpStraggler).contains(&"network"));
         assert!(expected_cause_classes(Condition::Ns8EarlyCompletion).contains(&"workload"));
         assert!(expected_cause_classes(Condition::Dp3StragglerReplica).contains(&"gpu"));
+        // The TD family degrades the monitoring path itself; the paper's
+        // vantage-point logic files that under the network-side class.
+        assert!(expected_cause_classes(Condition::Td1StaleFrozen).contains(&"network"));
     }
 
     #[test]

@@ -17,7 +17,7 @@
 use crate::cluster::{ReplicaRole, ReplicaShape};
 use crate::coordinator::experiment::{inject_time, standard_cfg};
 use crate::coordinator::scenario::{Scenario, ScenarioCfg};
-use crate::dpu::detectors::{Condition, DP_CONDITIONS, PD_CONDITIONS};
+use crate::dpu::detectors::{Condition, DP_CONDITIONS, PD_CONDITIONS, TD_CONDITIONS};
 use crate::engine::router::ALL_POLICIES;
 use crate::engine::RoutePolicy;
 use crate::sim::{SimDur, SimTime};
@@ -46,6 +46,11 @@ pub struct FleetConfig {
     /// an arbitrary K×M pool topology with the full fleet condition family
     /// run as catalog-driven triples; bumps the JSON schema to v3.
     pub multipool: Option<MultiPoolSpec>,
+    /// Append the degraded-telemetry study (`--telemetry-faults`): TD1-TD3
+    /// triples on the telemetry-weighted routing baseline, reporting the
+    /// freshness watchdog's fallback-ladder transitions alongside detection;
+    /// bumps the JSON schema to v4.
+    pub telemetry_faults: bool,
 }
 
 /// Knobs of the multi-pool study topology.
@@ -99,6 +104,7 @@ impl FleetConfig {
             threads: 0,
             disagg: false,
             multipool: None,
+            telemetry_faults: false,
         }
     }
 }
@@ -283,6 +289,11 @@ enum FleetCell {
     MpHealthy(Condition),
     MpInjected(Condition),
     MpMitigated(Condition),
+    /// Degraded-telemetry triples (TD1-TD3) on the telemetry-weighted
+    /// routing baseline — the policy the fallback ladder protects.
+    TdHealthy(Condition),
+    TdInjected(Condition),
+    TdMitigated(Condition),
 }
 
 /// The shared shaping every cell of one DP condition's triple (healthy /
@@ -305,6 +316,21 @@ fn dp_shaped(fc: &FleetConfig, c: Condition) -> ScenarioCfg {
 /// shaping, so recovery is measured like for like).
 fn pd_shaped(c: Condition) -> ScenarioCfg {
     let mut cfg = disagg_base_cfg();
+    if let Some(shape) = crate::conditions::spec(c).shape_fleet {
+        shape(&mut cfg);
+    }
+    cfg
+}
+
+/// The shared shaping of one TD condition's triple: the sweep base on the
+/// telemetry-weighted routing policy — the only policy whose picks consume
+/// the gauges the injection degrades, so the fallback ladder has something
+/// to protect. The extra measurement time leaves room for inject → detect →
+/// mitigate → ladder recovery inside one cell.
+fn td_shaped(fc: &FleetConfig, c: Condition) -> ScenarioCfg {
+    let mut cfg = fc.base.clone();
+    cfg.engine.route_policy = RoutePolicy::WeightedTelemetry;
+    cfg.duration = cfg.duration + SimDur::from_ms(DP_EXTRA_MS);
     if let Some(shape) = crate::conditions::spec(c).shape_fleet {
         shape(&mut cfg);
     }
@@ -386,6 +412,13 @@ fn cell_cfg_inner(fc: &FleetConfig, cell: FleetCell) -> ScenarioCfg {
             }
             cfg
         }
+        FleetCell::TdHealthy(c) => td_shaped(fc, c),
+        FleetCell::TdInjected(c) | FleetCell::TdMitigated(c) => {
+            let mut cfg = td_shaped(fc, c);
+            cfg.inject = Some((c, inject_time(&cfg)));
+            cfg.mitigate = matches!(cell, FleetCell::TdMitigated(_));
+            cfg
+        }
     }
 }
 
@@ -419,6 +452,20 @@ fn multipool_cells(mp: &MultiPoolSpec) -> Vec<FleetCell> {
     v
 }
 
+/// The degraded-telemetry cell block, in the exact order
+/// `telemetry_report_from` decodes: one healthy / injected / mitigated
+/// triple per TD condition. Shared by the full sweep and the standalone
+/// study so the two cannot drift.
+fn td_cells() -> Vec<FleetCell> {
+    let mut v = Vec::new();
+    for c in TD_CONDITIONS {
+        v.push(FleetCell::TdHealthy(c));
+        v.push(FleetCell::TdInjected(c));
+        v.push(FleetCell::TdMitigated(c));
+    }
+    v
+}
+
 fn cells(fc: &FleetConfig) -> Vec<FleetCell> {
     let mut v: Vec<FleetCell> = fc.policies.iter().map(|&p| FleetCell::Policy(p)).collect();
     for c in DP_CONDITIONS {
@@ -431,6 +478,9 @@ fn cells(fc: &FleetConfig) -> Vec<FleetCell> {
     }
     if let Some(mp) = &fc.multipool {
         v.extend(multipool_cells(mp));
+    }
+    if fc.telemetry_faults {
+        v.extend(td_cells());
     }
     v
 }
@@ -458,6 +508,12 @@ struct CellOutcome {
     handoff_bytes: u64,
     /// Per (prefill pool, decode pool) launches and bytes (multi-pool cells).
     handoff_pairs: Vec<(u32, u32, u64, u64)>,
+    /// Fallback-ladder transitions `(window, level)` and fault-layer loss
+    /// accounting — empty/zero on every cell that never engages a telemetry
+    /// fault (only the TD rows consume these).
+    ladder: Vec<(u64, u8)>,
+    fault_dropped: u64,
+    fault_held: u64,
 }
 
 fn run_cell(fc: &FleetConfig, cell: FleetCell) -> CellOutcome {
@@ -506,6 +562,9 @@ fn run_cell(fc: &FleetConfig, cell: FleetCell) -> CellOutcome {
             .iter()
             .map(|p| (p.prefill_pool, p.decode_pool, p.started, p.bytes_sent))
             .collect(),
+        ladder: res.ladder_transitions,
+        fault_dropped: res.fault_dropped,
+        fault_held: res.fault_held_at_end,
     }
 }
 
@@ -596,6 +655,42 @@ pub struct MultiPoolReport {
     pub skipped: Vec<Condition>,
 }
 
+/// One TD condition's degraded-telemetry row: detection plus how the
+/// router's fallback ladder behaved while the telemetry plane was under
+/// fault — the injected cell's ladder path and the mitigated cell's
+/// recovery level.
+#[derive(Debug, Clone)]
+pub struct TdRow {
+    pub condition: Condition,
+    pub detected: bool,
+    pub latency_ns: Option<u64>,
+    pub healthy_tok_per_s: f64,
+    pub injected_tok_per_s: f64,
+    pub mitigated_tok_per_s: f64,
+    /// Injected/healthy throughput ratio — how much serving the ladder held
+    /// onto while routing on degraded (or no) telemetry.
+    pub throughput_held: f64,
+    /// `(window, level)` fallback-ladder transitions of the injected cell.
+    pub ladder_transitions: Vec<(u64, u8)>,
+    /// Deepest fallback level the injected cell reached.
+    pub max_ladder_level: u8,
+    /// Ladder level the mitigated cell ended on (0 = fully recovered
+    /// through the hysteresis streaks).
+    pub recovered_level: u8,
+    /// Fault-layer loss accounting of the injected cell.
+    pub fault_dropped: u64,
+    pub fault_held: u64,
+    /// Mitigation actions taken in the mitigated run.
+    pub actions: u64,
+}
+
+/// The degraded-telemetry study: TD1-TD3 inject → detect → mitigate triples
+/// on the telemetry-weighted baseline, with the fallback-ladder trace.
+#[derive(Debug)]
+pub struct TelemetryReport {
+    pub rows: Vec<TdRow>,
+}
+
 /// Everything a fleet sweep produces.
 #[derive(Debug)]
 pub struct FleetReport {
@@ -608,6 +703,9 @@ pub struct FleetReport {
     /// The multi-pool section (`--prefill-pools`/`--decode-pools`; bumps
     /// the JSON to v3).
     pub multipool: Option<MultiPoolReport>,
+    /// The degraded-telemetry section (`--telemetry-faults`; bumps the
+    /// JSON to v4).
+    pub telemetry: Option<TelemetryReport>,
     pub cells_run: usize,
     pub threads_used: usize,
     /// Wall-clock of the parallel cell sweep, ms. Perf metadata: reported
@@ -637,6 +735,13 @@ pub fn run_fleet(fc: &FleetConfig) -> FleetReport {
     let events_total: u64 = outcomes.iter().map(|o| o.events).sum();
 
     let n_pol = fc.policies.len();
+    // The TD block rides at the very end of the cell list, so peeling it
+    // off first leaves the v1/v2/v3 split chain untouched.
+    let td_outcomes = if fc.telemetry_faults {
+        outcomes.split_off(outcomes.len() - 3 * TD_CONDITIONS.len())
+    } else {
+        Vec::new()
+    };
     // The DP triples only need scalar outcomes; the policy rows take the
     // per-replica vectors by move (no re-clone of worker results).
     let mut dp_outcomes = outcomes.split_off(n_pol);
@@ -668,6 +773,8 @@ pub fn run_fleet(fc: &FleetConfig) -> FleetReport {
     let dp_rows = condition_rows(&dp_outcomes, &DP_CONDITIONS);
     let disagg = if fc.disagg { Some(disagg_report_from(&disagg_outcomes)) } else { None };
     let multipool = fc.multipool.map(|mp| multipool_report_from(&mp, &mp_outcomes));
+    let telemetry =
+        if fc.telemetry_faults { Some(telemetry_report_from(&td_outcomes)) } else { None };
 
     FleetReport {
         replicas: fc.replicas,
@@ -676,6 +783,7 @@ pub fn run_fleet(fc: &FleetConfig) -> FleetReport {
         dp_rows,
         disagg,
         multipool,
+        telemetry,
         cells_run: cell_list.len(),
         threads_used,
         elapsed_ms,
@@ -802,6 +910,51 @@ pub fn run_multipool_study(mp: MultiPoolSpec, threads: usize) -> MultiPoolReport
     multipool_report_from(&mp, &outcomes)
 }
 
+/// Aggregate the degraded-telemetry block (back-to-back TD triples) into a
+/// [`TelemetryReport`]. The ladder trace comes from the injected cell (how
+/// deep the fallback went and when); the recovered level from the mitigated
+/// cell (whether the hysteresis streaks walked it back to full telemetry).
+fn telemetry_report_from(outcomes: &[CellOutcome]) -> TelemetryReport {
+    assert_eq!(outcomes.len(), 3 * TD_CONDITIONS.len());
+    let rows = TD_CONDITIONS
+        .iter()
+        .enumerate()
+        .map(|(k, &c)| {
+            let (healthy, inj, mit) =
+                (&outcomes[3 * k], &outcomes[3 * k + 1], &outcomes[3 * k + 2]);
+            TdRow {
+                condition: c,
+                detected: inj.detected,
+                latency_ns: inj.latency_ns,
+                healthy_tok_per_s: healthy.tok_per_s,
+                injected_tok_per_s: inj.tok_per_s,
+                mitigated_tok_per_s: mit.tok_per_s,
+                throughput_held: if healthy.tok_per_s <= 0.0 {
+                    1.0
+                } else {
+                    inj.tok_per_s / healthy.tok_per_s
+                },
+                max_ladder_level: inj.ladder.iter().map(|&(_, l)| l).max().unwrap_or(0),
+                ladder_transitions: inj.ladder.clone(),
+                recovered_level: mit.ladder.last().map(|&(_, l)| l).unwrap_or(0),
+                fault_dropped: inj.fault_dropped,
+                fault_held: inj.fault_held,
+                actions: mit.actions,
+            }
+        })
+        .collect();
+    TelemetryReport { rows }
+}
+
+/// Run only the degraded-telemetry study (the v4 block without the v1-v3
+/// cells) — the telemetry-faults acceptance suite's entrypoint.
+pub fn run_telemetry_study(threads: usize) -> TelemetryReport {
+    let fc = FleetConfig::new(2);
+    let cell_list = td_cells();
+    let outcomes = parallel_map(&cell_list, threads, |&cell| run_cell(&fc, cell));
+    telemetry_report_from(&outcomes)
+}
+
 impl FleetReport {
     /// Paper-style tables: the policy study and the DP condition study.
     pub fn render_tables(&self) -> String {
@@ -854,6 +1007,9 @@ impl FleetReport {
         if let Some(mp) = &self.multipool {
             out.push_str(&mp.render_tables());
         }
+        if let Some(t) = &self.telemetry {
+            out.push_str(&t.render_tables());
+        }
         out
     }
 
@@ -885,6 +1041,14 @@ impl FleetReport {
                 m.prefill_pool_count,
                 m.decode_pool_count,
                 m.rows.len()
+            ));
+        }
+        if let Some(t) = &self.telemetry {
+            let det = t.rows.iter().filter(|r| r.detected).count();
+            let peak = t.rows.iter().map(|r| r.max_ladder_level).max().unwrap_or(0);
+            s.push_str(&format!(
+                "; TD conditions detected {det}/{} with fallback-ladder peak level {peak}",
+                t.rows.len()
             ));
         }
         if let Some(b) = best {
@@ -929,7 +1093,9 @@ impl FleetReport {
             );
         }
         let dp = condition_rows_json(&self.dp_rows);
-        let schema = if self.multipool.is_some() {
+        let schema = if self.telemetry.is_some() {
+            "dpulens.fleet.v4"
+        } else if self.multipool.is_some() {
             "dpulens.fleet.v3"
         } else if self.disagg.is_some() {
             "dpulens.fleet.v2"
@@ -947,6 +1113,9 @@ impl FleetReport {
         }
         if let Some(m) = &self.multipool {
             out = out.set("multipool", m.to_json());
+        }
+        if let Some(t) = &self.telemetry {
+            out = out.set("telemetry", t.to_json());
         }
         out
     }
@@ -1145,6 +1314,76 @@ impl MultiPoolReport {
     }
 }
 
+impl TelemetryReport {
+    /// The deterministic `telemetry` JSON section of `dpulens.fleet.v4`.
+    pub fn to_json(&self) -> Json {
+        let mut arr = Json::arr();
+        for r in &self.rows {
+            let mut ladder = Json::arr();
+            for &(w, l) in &r.ladder_transitions {
+                ladder.push(Json::obj().set("window", w).set("level", l as i64));
+            }
+            arr.push(
+                Json::obj()
+                    .set("id", r.condition.id())
+                    .set("detected", r.detected)
+                    .set(
+                        "latency_ns",
+                        r.latency_ns.map(|n| Json::Int(n as i64)).unwrap_or(Json::Null),
+                    )
+                    .set("healthy_tok_per_s", r.healthy_tok_per_s)
+                    .set("injected_tok_per_s", r.injected_tok_per_s)
+                    .set("mitigated_tok_per_s", r.mitigated_tok_per_s)
+                    .set("throughput_held", r.throughput_held)
+                    .set("ladder", ladder)
+                    .set("max_ladder_level", r.max_ladder_level as i64)
+                    .set("recovered_level", r.recovered_level as i64)
+                    .set("fault_dropped", r.fault_dropped)
+                    .set("fault_held", r.fault_held)
+                    .set("actions", r.actions),
+            );
+        }
+        Json::obj().set("td_conditions", arr)
+    }
+
+    /// Paper-style table for the degraded-telemetry study. The ladder
+    /// column prints the injected cell's `level@window` transition path.
+    pub fn render_tables(&self) -> String {
+        let mut t = Table::new(
+            "TD condition family — degraded telemetry, fallback ladder (weighted baseline)",
+        )
+        .header(&[
+            "id", "detected", "latency", "healthy tok/s", "injected", "mitigated", "held",
+            "ladder", "recovered", "dropped/held", "actions",
+        ]);
+        for r in &self.rows {
+            let ladder = if r.ladder_transitions.is_empty() {
+                "-".into()
+            } else {
+                r.ladder_transitions
+                    .iter()
+                    .map(|&(w, l)| format!("{l}@w{w}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            };
+            t.row(vec![
+                r.condition.id().to_string(),
+                if r.detected { "yes".into() } else { "NO".into() },
+                r.latency_ns.map(|n| fmt_ns(n as f64)).unwrap_or_else(|| "-".into()),
+                format!("{:.0}", r.healthy_tok_per_s),
+                format!("{:.0}", r.injected_tok_per_s),
+                format!("{:.0}", r.mitigated_tok_per_s),
+                format!("{:.0}%", r.throughput_held * 100.0),
+                ladder,
+                format!("level {}", r.recovered_level),
+                format!("{}/{}", r.fault_dropped, r.fault_held),
+                format!("{}", r.actions),
+            ]);
+        }
+        t.render()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1318,6 +1557,42 @@ mod tests {
         assert!(MultiPoolSpec { replicas: 2, prefill_pools: 2, decode_pools: 1 }
             .validate()
             .is_err());
+    }
+
+    #[test]
+    fn td_cells_ride_last_on_the_weighted_baseline() {
+        let mut fc = FleetConfig::new(2);
+        let v1_len = cells(&fc).len();
+        fc.telemetry_faults = true;
+        let v = cells(&fc);
+        // The TD block is appended LAST (after any disagg/multipool block),
+        // so the v1-v3 cell prefix — and their JSON — never move.
+        assert_eq!(v.len(), v1_len + 3 * TD_CONDITIONS.len());
+        assert_eq!(v[v1_len], FleetCell::TdHealthy(Condition::Td1StaleFrozen));
+        assert_eq!(v[v1_len + 1], FleetCell::TdInjected(Condition::Td1StaleFrozen));
+        assert_eq!(v[v1_len + 2], FleetCell::TdMitigated(Condition::Td1StaleFrozen));
+        fc.disagg = true;
+        let with_disagg = cells(&fc);
+        assert_eq!(
+            with_disagg[with_disagg.len() - 3 * TD_CONDITIONS.len()],
+            FleetCell::TdHealthy(Condition::Td1StaleFrozen)
+        );
+        // Triples share one shaped config on the telemetry-weighted policy
+        // (the one the fallback ladder protects); only inject/mitigate
+        // differ, and the sweep's seed reaches every cell.
+        fc.base.seed = 4242;
+        let healthy = cell_cfg(&fc, v[v1_len]);
+        let inj = cell_cfg(&fc, v[v1_len + 1]);
+        let mit = cell_cfg(&fc, v[v1_len + 2]);
+        assert_eq!(healthy.engine.route_policy, RoutePolicy::WeightedTelemetry);
+        assert!(healthy.inject.is_none() && !healthy.mitigate);
+        assert!(inj.inject.is_some() && !inj.mitigate);
+        assert!(mit.inject.is_some() && mit.mitigate);
+        assert_eq!(healthy.duration, inj.duration);
+        assert!(inj.duration > fc.base.duration);
+        for cell in td_cells() {
+            assert_eq!(cell_cfg(&fc, cell).seed, 4242, "{cell:?} ignored the sweep seed");
+        }
     }
 
     #[test]

@@ -3,8 +3,9 @@
 //! sensor fed from the router vantage, and the closed mitigation loop.
 
 use crate::dpu::attribution::attribute;
-use crate::dpu::fleet::{FleetSample, PdSample};
+use crate::dpu::fleet::{FleetSample, PdSample, TdSample};
 use crate::sim::SimTime;
+use crate::telemetry::faults::FreshnessStat;
 
 use super::scenario::Scenario;
 
@@ -17,7 +18,19 @@ impl Scenario {
     /// `TelemetryBus::deliver_due` for the tie-break fine print).
     pub(crate) fn deliver_telemetry(&mut self, now: SimTime) {
         let dpu = &mut self.dpu;
-        if self.cfg.observe_threads == 1 {
+        if self.tele_faults.check_engaged(&self.cluster.tele_faults) {
+            // TD fault boundary: once any node has ever carried a fault
+            // mode, delivery routes through the fault layer for the rest of
+            // the run (recovery — ages resetting, backlogs flushing — is
+            // tracked there too). Always serial: the fault path trades the
+            // parallel fan-out for thread-stable drop/hold bookkeeping.
+            self.tele_faults.deliver_due_faulted(
+                &mut self.bus,
+                now,
+                &self.cluster.tele_faults,
+                |node, events| dpu.ingest(node, events),
+            );
+        } else if self.cfg.observe_threads == 1 {
             self.bus.deliver_due(now, |node, events| dpu.ingest(node, events));
         } else {
             // Fan the per-node buffers out across workers; accounting is
@@ -64,9 +77,23 @@ impl Scenario {
             queue_depth.push(qd);
             kv_occ.push(occ);
         }
+        let faults_on = self.tele_faults.is_engaged();
         for r in 0..n {
-            self.engine.router.update_telemetry(r, queue_depth[r] as f64, kv_occ[r]);
-            self.engine.decode_router.update_telemetry(r, queue_depth[r] as f64, kv_occ[r]);
+            let fresh = (queue_depth[r] as f64, kv_occ[r]);
+            let gauge = if faults_on {
+                // The router's weighted-policy feed rides the same faulted
+                // path as the event stream: a frozen node's gauges never
+                // update, a lossy node's update sometimes, a lagging node's
+                // arrive windows stale.
+                let node = self.entry_node(r).idx();
+                self.tele_faults.rot_gauge(node, self.cluster.tele_faults[node], fresh)
+            } else {
+                Some(fresh)
+            };
+            if let Some((qd, occ)) = gauge {
+                self.engine.router.update_telemetry(r, qd, occ);
+                self.engine.decode_router.update_telemetry(r, qd, occ);
+            }
         }
         // Disaggregated fleets: decode capacity freed since the last tick
         // may be able to seat parked handoffs even if no retirement ran.
@@ -122,6 +149,44 @@ impl Scenario {
                     self.dpu.detections.extend(pd_fired.iter().cloned());
                     detections.extend(pd_fired);
                 }
+            }
+            if faults_on {
+                // TD vantage: the DPU always knows the health of its own
+                // inbox. Fold each replica's entry-node freshness into the
+                // TD sample (detection) and the watchdog (ladder level).
+                let mut td = TdSample {
+                    age_windows: Vec::with_capacity(n),
+                    emitted: Vec::with_capacity(n),
+                    delivered: Vec::with_capacity(n),
+                    dropped: Vec::with_capacity(n),
+                    held: Vec::with_capacity(n),
+                    lag_windows: Vec::with_capacity(n),
+                };
+                let mut replica_stats: Vec<FreshnessStat> = Vec::with_capacity(n);
+                for r in 0..n {
+                    let s = self.tele_faults.stats()[self.entry_node(r).idx()];
+                    td.age_windows.push(s.age_windows);
+                    td.emitted.push(s.emitted);
+                    td.delivered.push(s.delivered);
+                    td.dropped.push(s.dropped);
+                    td.held.push(s.held);
+                    td.lag_windows.push(s.lag_windows);
+                    replica_stats.push(s);
+                }
+                let td_fired = self.fleet.td_window_tick(now, td);
+                if !td_fired.is_empty() {
+                    self.dpu.detections.extend(td_fired.iter().cloned());
+                    detections.extend(td_fired);
+                }
+                // Freshness watchdog → staged router fallback: both routers
+                // of the plane degrade and recover together (they share the
+                // one telemetry feed).
+                let level = self.watchdog.window_tick(&replica_stats);
+                if level != self.engine.router.degraded_level() {
+                    self.ladder_log.push((self.windows_seen, level));
+                }
+                self.engine.router.set_degraded_level(level);
+                self.engine.decode_router.set_degraded_level(level);
             }
         }
 

@@ -18,13 +18,14 @@ use crate::dpu::attribution::Attribution;
 use crate::dpu::detectors::{Condition, Detection};
 use crate::dpu::fleet::FleetSensor;
 use crate::dpu::swdet::SwSuite;
+use crate::dpu::watchdog::FreshnessWatchdog;
 use crate::engine::exec::ComputeBackend;
 use crate::engine::{Engine, EngineConfig};
 use crate::ids::ReqId;
 use crate::metrics::ServeMetrics;
 use crate::sim::{Engine as Calendar, SimDur, SimTime};
 use crate::telemetry::sw::SwWindow;
-use crate::telemetry::TelemetryBus;
+use crate::telemetry::{TelemetryBus, TelemetryFaults};
 use crate::workload::generator::{WorkloadGen, WorkloadSpec};
 
 use super::world::{Ev, HandoffStats, PendingIter};
@@ -129,6 +130,16 @@ pub struct RunResult {
     /// Handoffs that arrived but were still parked awaiting decode-side
     /// admission when the run ended.
     pub handoffs_parked_at_end: u64,
+    /// Telemetry events discarded at the fault boundary (TD1/TD2); zero on
+    /// every run that never set a fault mode.
+    pub fault_dropped: u64,
+    /// Telemetry events still parked in lag hold queues at run end (TD3).
+    /// With faults the conservation identity widens to
+    /// `published == ingested + invisible + fault_dropped + fault_held`.
+    pub fault_held_at_end: u64,
+    /// Router-fallback ladder transitions: (window index, new level), one
+    /// entry per change. Empty on every never-faulted run.
+    pub ladder_transitions: Vec<(u64, u8)>,
 }
 
 impl RunResult {
@@ -186,6 +197,14 @@ pub struct Scenario {
     /// Collective-id allocator for cross-pool handoff bursts.
     pub(crate) handoff_colls: crate::engine::CollSeq,
     pub(crate) handoff_stats: HandoffStats,
+    /// Telemetry fault boundary (TD conditions). Engages lazily on the
+    /// first non-None mode in `Cluster::tele_faults`; until then delivery
+    /// runs the pristine bus path, byte-identically.
+    pub(crate) tele_faults: TelemetryFaults,
+    /// Freshness watchdog driving the router-fallback ladder.
+    pub(crate) watchdog: FreshnessWatchdog,
+    /// Ladder transition log: (window index, new level) per change.
+    pub(crate) ladder_log: Vec<(u64, u8)>,
     pub(crate) real_compute: bool,
 }
 

@@ -215,6 +215,9 @@ impl Scenario {
             attributions: Vec::new(),
             kv_peak: vec![0.0; n_rep],
             handoff_wait: (0..n_rep).map(|_| Default::default()).collect(),
+            tele_faults: crate::telemetry::TelemetryFaults::new(cfg.seed, cfg.cluster.n_nodes),
+            watchdog: crate::dpu::watchdog::FreshnessWatchdog::new(),
+            ladder_log: Vec::new(),
             handoff_colls: CollSeq::default(),
             handoff_stats: HandoffStats {
                 arrivals_per_replica: vec![0; n_rep],
@@ -339,6 +342,9 @@ impl Scenario {
             replica_kv_peak: self.kv_peak,
             real_compute: self.real_compute,
             class_counts: self.bus.class_counts_map(),
+            fault_dropped: self.tele_faults.total_dropped(),
+            fault_held_at_end: self.tele_faults.total_held(),
+            ladder_transitions: self.ladder_log,
         }
     }
 }

@@ -175,6 +175,18 @@ mod tests {
     }
 
     #[test]
+    fn td_family_attributes_to_the_export_path() {
+        // Telemetry-dropout detections carry the catalog's network-side
+        // verdict: the monitoring path (exporter -> oob channel -> DPU) is
+        // fabric, not the node's serving plane.
+        let ds = vec![det(Condition::Td1StaleFrozen, 1), det(Condition::Td3LaggingDelivery, 2)];
+        let attr = attribute(&ds);
+        assert_eq!(attr.len(), 1);
+        assert_eq!(attr[0].cause, RootCause::NetworkSide);
+        assert!(!attr[0].conditions.contains(&Condition::Td2LossyDrop));
+    }
+
+    #[test]
     fn empty_detections_empty_attribution() {
         assert!(attribute(&[]).is_empty());
     }

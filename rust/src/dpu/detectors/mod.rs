@@ -58,6 +58,13 @@ pub enum Condition {
     Pd1PrefillSaturation,
     Pd2KvHandoffStall,
     Pd3DecodeStarvation,
+    // Telemetry-dropout family (the monitoring path itself degrades) — the
+    // DPU's own signal goes stale, lossy, or late, and the router
+    // mis-balances *because its weights rotted*. Sensed by the freshness
+    // watchdog in `dpu::fleet`, not by any detector that trusts the signal.
+    Td1StaleFrozen,
+    Td2LossyDrop,
+    Td3LaggingDelivery,
 }
 
 pub const ALL_CONDITIONS: [Condition; 28] = [
@@ -111,6 +118,17 @@ pub const PD_CONDITIONS: [Condition; 3] = [
     Condition::Pd3DecodeStarvation,
 ];
 
+/// The telemetry-dropout condition family (stale-frozen, lossy-drop,
+/// lagging-delivery monitoring signal). Sensed by the freshness watchdog in
+/// `dpu::fleet::FleetSensor` — deliberately a detector that does NOT trust
+/// the telemetry content, only its age/completeness/latency — so it stays
+/// off the Tables 3a-c diagonal like the DP/PD families.
+pub const TD_CONDITIONS: [Condition; 3] = [
+    Condition::Td1StaleFrozen,
+    Condition::Td2LossyDrop,
+    Condition::Td3LaggingDelivery,
+];
+
 impl Condition {
     pub fn id(&self) -> &'static str {
         use Condition::*;
@@ -149,12 +167,15 @@ impl Condition {
             Pd1PrefillSaturation => "PD1",
             Pd2KvHandoffStall => "PD2",
             Pd3DecodeStarvation => "PD3",
+            Td1StaleFrozen => "TD1",
+            Td2LossyDrop => "TD2",
+            Td3LaggingDelivery => "TD3",
         }
     }
 
     /// Which runbook table the condition belongs to ("3a"-"3c" are the
     /// paper's; "dp" is the data-parallel fleet extension, "pd" the
-    /// phase-disaggregation family).
+    /// phase-disaggregation family, "td" the telemetry-dropout family).
     pub fn table(&self) -> &'static str {
         let id = self.id();
         if id.starts_with("NS") {
@@ -165,6 +186,8 @@ impl Condition {
             "3c"
         } else if id.starts_with("DP") {
             "dp"
+        } else if id.starts_with("TD") {
+            "td"
         } else {
             "pd"
         }
@@ -175,6 +198,7 @@ impl Condition {
             .iter()
             .chain(DP_CONDITIONS.iter())
             .chain(PD_CONDITIONS.iter())
+            .chain(TD_CONDITIONS.iter())
             .copied()
             .find(|c| c.id() == id)
     }
@@ -342,7 +366,7 @@ mod tests {
         for c in ALL_CONDITIONS {
             assert_eq!(Condition::from_id(c.id()), Some(c));
         }
-        for c in DP_CONDITIONS.into_iter().chain(PD_CONDITIONS) {
+        for c in DP_CONDITIONS.into_iter().chain(PD_CONDITIONS).chain(TD_CONDITIONS) {
             assert_eq!(Condition::from_id(c.id()), Some(c));
         }
         assert_eq!(Condition::from_id("XX"), None);
@@ -351,8 +375,9 @@ mod tests {
         assert_eq!(Condition::Ew8KvBottleneck.table(), "3c");
         assert_eq!(Condition::Dp1RouterFlowSkew.table(), "dp");
         assert_eq!(Condition::Pd2KvHandoffStall.table(), "pd");
-        // The DP/PD families stay off the per-node detector diagonal.
-        for c in DP_CONDITIONS.into_iter().chain(PD_CONDITIONS) {
+        assert_eq!(Condition::Td1StaleFrozen.table(), "td");
+        // The DP/PD/TD families stay off the per-node detector diagonal.
+        for c in DP_CONDITIONS.into_iter().chain(PD_CONDITIONS).chain(TD_CONDITIONS) {
             assert!(!ALL_CONDITIONS.contains(&c));
         }
     }

@@ -78,6 +78,37 @@ pub struct PdSample {
     pub stalled_wait_depth: u64,
 }
 
+/// One window's telemetry-freshness observation (TD family): what the
+/// fault boundary between the bus and the DPU observer reports about each
+/// replica's signal health. Vectors are per-replica (entry-node stats mapped
+/// to replicas by the scenario). `emitted`/`delivered`/`dropped` are
+/// cumulative; `age_windows`/`held`/`lag_windows` are instantaneous.
+#[derive(Debug, Clone)]
+pub struct TdSample {
+    /// Windows since the observer last received anything from this replica.
+    pub age_windows: Vec<u64>,
+    /// Cumulative events that became due at the fault boundary.
+    pub emitted: Vec<u64>,
+    /// Cumulative events actually handed to the observer.
+    pub delivered: Vec<u64>,
+    /// Cumulative events discarded at the boundary.
+    pub dropped: Vec<u64>,
+    /// Events currently parked in the replica's lag hold queue.
+    pub held: Vec<u64>,
+    /// Current release delay (windows) of the replica's telemetry path.
+    pub lag_windows: Vec<u64>,
+}
+
+/// What a TD rule sees: the horizon endpoints of the freshness ring. TD
+/// rules are fleet-wide (no pool scoping — a single replica's signal age is
+/// well-defined, unlike peer skew), so there is exactly one instance per
+/// rule and the hit names the worst replica.
+pub struct TdCtx<'a> {
+    pub cur: &'a TdSample,
+    pub old: &'a TdSample,
+    pub prev: Option<&'a TdSample>,
+}
+
 /// Windows of history the horizon skew metrics integrate over.
 const HORIZON: usize = 40;
 
@@ -133,6 +164,15 @@ struct PdRule {
     eval: fn(&PdCtx) -> Option<RuleHit>,
 }
 
+/// One catalog-declared TD (telemetry-freshness) rule. Fleet-wide scope:
+/// one streak per rule, no pool instances.
+#[derive(Clone, Copy)]
+struct TdRule {
+    condition: Condition,
+    confirm: u32,
+    eval: fn(&TdCtx) -> Option<RuleHit>,
+}
+
 /// Cross-replica skew sensor (one per scenario, fed at window ticks).
 #[derive(Debug)]
 pub struct FleetSensor {
@@ -145,11 +185,15 @@ pub struct FleetSensor {
     nic_bw: f64,
     history: VecDeque<FleetSample>,
     pd_history: VecDeque<PdSample>,
+    td_history: VecDeque<TdSample>,
     dp_rules: Vec<DpRule>,
     pd_rules: Vec<PdRule>,
+    td_rules: Vec<TdRule>,
     /// Consecutive-hit counters, per rule × pool instance.
     dp_streaks: Vec<Vec<u32>>,
     pd_streaks: Vec<Vec<u32>>,
+    /// TD streaks: one per rule (fleet-wide scope, no pool instances).
+    td_streaks: Vec<u32>,
     /// Flattened (rule index, pool index) work lists for the window sweep —
     /// kept in lockstep with the streak tables so the parallel fan-out has a
     /// plain slice to chunk over.
@@ -173,6 +217,12 @@ impl std::fmt::Debug for DpRule {
 impl std::fmt::Debug for PdRule {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "PdRule({:?})", self.condition)
+    }
+}
+
+impl std::fmt::Debug for TdRule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TdRule({:?})", self.condition)
     }
 }
 
@@ -226,6 +276,7 @@ impl FleetSensor {
         assert_eq!(entry_nodes.len(), n_replicas);
         let mut dp_rules = Vec::new();
         let mut pd_rules = Vec::new();
+        let mut td_rules = Vec::new();
         for spec in crate::conditions::all_specs() {
             match spec.binding {
                 DetectorBinding::NodeWindow => {}
@@ -237,12 +288,16 @@ impl FleetSensor {
                 DetectorBinding::FleetPd { scope, confirm, eval, .. } => {
                     pd_rules.push(PdRule { condition: spec.condition, scope, confirm, eval });
                 }
+                DetectorBinding::FleetTd { confirm, eval } => {
+                    td_rules.push(TdRule { condition: spec.condition, confirm, eval });
+                }
             }
         }
         let dp_streaks =
             dp_rules.iter().map(|r| vec![0; n_instances(r.scope, &pools)]).collect();
         let pd_streaks =
             pd_rules.iter().map(|r| vec![0; n_instances(r.scope, &pools)]).collect();
+        let td_streaks = vec![0; td_rules.len()];
         let dp_instances = instance_list(dp_rules.iter().map(|r| r.scope), &pools);
         let pd_instances = instance_list(pd_rules.iter().map(|r| r.scope), &pools);
         FleetSensor {
@@ -252,10 +307,13 @@ impl FleetSensor {
             nic_bw,
             history: VecDeque::with_capacity(HORIZON + 1),
             pd_history: VecDeque::with_capacity(HORIZON + 1),
+            td_history: VecDeque::with_capacity(HORIZON + 1),
             dp_rules,
             pd_rules,
+            td_rules,
             dp_streaks,
             pd_streaks,
+            td_streaks,
             dp_instances,
             pd_instances,
             threads: 1,
@@ -410,6 +468,45 @@ impl FleetSensor {
         }
         fired
     }
+
+    /// Feed one window's telemetry-freshness observation (runs only once the
+    /// fault layer is engaged); returns the TD detections fired. Unlike the
+    /// skew sweeps this has no single-replica guard — the freshness of one
+    /// replica's signal is judgeable on its own — and stays serial: three
+    /// rules over pre-diffed vectors is far below fan-out break-even, and a
+    /// serial sweep is trivially identical for every worker count.
+    pub fn td_window_tick(&mut self, now: SimTime, sample: TdSample) -> Vec<Detection> {
+        debug_assert_eq!(sample.age_windows.len(), self.n_replicas);
+        self.td_history.push_back(sample);
+        if self.td_history.len() > HORIZON + 1 {
+            self.td_history.pop_front();
+        }
+        let len = self.td_history.len();
+        let cur = &self.td_history[len - 1];
+        let old = &self.td_history[0];
+        let prev = if len >= 2 { Some(&self.td_history[len - 2]) } else { None };
+        let cx = TdCtx { cur, old, prev };
+
+        let mut fired = Vec::new();
+        for (ri, rule) in self.td_rules.iter().enumerate() {
+            match (rule.eval)(&cx) {
+                Some(hit) => {
+                    self.td_streaks[ri] += 1;
+                    if self.td_streaks[ri] >= rule.confirm {
+                        fired.push(Detection {
+                            condition: rule.condition,
+                            node: self.entry_nodes[hit.replica],
+                            at: now,
+                            severity: hit.severity,
+                            evidence: hit.evidence,
+                        });
+                    }
+                }
+                None => self.td_streaks[ri] = 0,
+            }
+        }
+        fired
+    }
 }
 
 /// Index of the (first) maximum — shared by the catalog's fleet rules.
@@ -488,8 +585,140 @@ mod tests {
         let s = sensor(2);
         let dp: Vec<Condition> = s.dp_rules.iter().map(|r| r.condition).collect();
         let pd: Vec<Condition> = s.pd_rules.iter().map(|r| r.condition).collect();
+        let td: Vec<Condition> = s.td_rules.iter().map(|r| r.condition).collect();
         assert_eq!(dp, crate::dpu::detectors::DP_CONDITIONS.to_vec());
         assert_eq!(pd, crate::dpu::detectors::PD_CONDITIONS.to_vec());
+        assert_eq!(td, crate::dpu::detectors::TD_CONDITIONS.to_vec());
+        assert_eq!(s.td_streaks.len(), td.len(), "one fleet-wide streak per TD rule");
+    }
+
+    /// A healthy freshness sample: everything delivered promptly.
+    fn fresh_td(n: usize, w: u64) -> TdSample {
+        TdSample {
+            age_windows: vec![0; n],
+            emitted: vec![w * 100; n],
+            delivered: vec![w * 100; n],
+            dropped: vec![0; n],
+            held: vec![0; n],
+            lag_windows: vec![0; n],
+        }
+    }
+
+    #[test]
+    fn healthy_freshness_stays_quiet() {
+        let mut s = sensor(3);
+        for w in 0..100u64 {
+            let fired = s.td_window_tick(SimTime(w * 1_000_000), fresh_td(3, w));
+            assert!(fired.is_empty(), "window {w}: {fired:?}");
+        }
+    }
+
+    #[test]
+    fn td1_fires_on_frozen_signal_and_only_td1() {
+        // Replica 1 goes silent (emissions continue, nothing delivered,
+        // nothing held) — the TD1 signature, distinct from TD2/TD3.
+        let mut s = sensor(2);
+        let mut fired_any = Vec::new();
+        for w in 0..12u64 {
+            let mut t = fresh_td(2, w);
+            t.delivered[1] = 300; // frozen at the pre-fault total
+            t.dropped[1] = (w * 100).saturating_sub(300);
+            t.age_windows[1] = w.saturating_sub(3);
+            fired_any.extend(s.td_window_tick(SimTime(w * 1_000_000), t));
+        }
+        assert!(
+            fired_any.iter().any(|d| d.condition == Condition::Td1StaleFrozen),
+            "{fired_any:?}"
+        );
+        assert_eq!(
+            fired_any.iter().find(|d| d.condition == Condition::Td1StaleFrozen).unwrap().node,
+            NodeId(1),
+            "TD1 localizes to the silent replica"
+        );
+        // Zero deliveries over the horizon is silence, not partial loss.
+        assert!(fired_any.iter().all(|d| d.condition != Condition::Td2LossyDrop));
+        assert!(fired_any.iter().all(|d| d.condition != Condition::Td3LaggingDelivery));
+    }
+
+    #[test]
+    fn td2_fires_on_partial_loss_and_only_td2() {
+        // Replica 0 loses 60% of its events but keeps delivering: TD2's
+        // signature. Age stays 0 (TD1 quiet) and nothing is held (TD3 quiet).
+        let mut s = sensor(2);
+        let mut fired_any = Vec::new();
+        for w in 0..12u64 {
+            let mut t = fresh_td(2, w);
+            t.delivered[0] = w * 40;
+            t.dropped[0] = w * 60;
+            fired_any.extend(s.td_window_tick(SimTime(w * 1_000_000), t));
+        }
+        let td2: Vec<_> =
+            fired_any.iter().filter(|d| d.condition == Condition::Td2LossyDrop).collect();
+        assert!(!td2.is_empty(), "{fired_any:?}");
+        assert_eq!(td2[0].node, NodeId(0));
+        assert!(td2[0].evidence.contains("lossy"), "{}", td2[0].evidence);
+        assert!(fired_any.iter().all(|d| d.condition != Condition::Td1StaleFrozen));
+        assert!(fired_any.iter().all(|d| d.condition != Condition::Td3LaggingDelivery));
+    }
+
+    #[test]
+    fn td3_fires_on_lagging_delivery_and_only_td3() {
+        // Replica 1's events arrive complete but 6 windows late with a
+        // standing backlog: TD3. The held>0 guard keeps TD1 quiet even
+        // while age grows during the initial build-up.
+        let mut s = sensor(2);
+        let mut fired_any = Vec::new();
+        for w in 0..12u64 {
+            let mut t = fresh_td(2, w);
+            t.delivered[1] = (w * 100).saturating_sub(600);
+            t.held[1] = 600.min(w * 100);
+            t.lag_windows[1] = 6.min(w);
+            t.age_windows[1] = if w < 6 { w } else { 0 };
+            fired_any.extend(s.td_window_tick(SimTime(w * 1_000_000), t));
+        }
+        let td3: Vec<_> =
+            fired_any.iter().filter(|d| d.condition == Condition::Td3LaggingDelivery).collect();
+        assert!(!td3.is_empty(), "{fired_any:?}");
+        assert_eq!(td3[0].node, NodeId(1));
+        assert!(fired_any.iter().all(|d| d.condition != Condition::Td1StaleFrozen));
+        assert!(fired_any.iter().all(|d| d.condition != Condition::Td2LossyDrop));
+    }
+
+    #[test]
+    fn td_sensing_works_on_a_single_replica_world() {
+        // Unlike skew rules, freshness is judgeable on a singleton fleet —
+        // campaign TD cells on the single topology depend on this.
+        let mut s = sensor(1);
+        let mut fired_any = Vec::new();
+        for w in 0..12u64 {
+            let mut t = fresh_td(1, w);
+            t.delivered[0] = 0;
+            t.dropped[0] = w * 100;
+            t.age_windows[0] = w;
+            fired_any.extend(s.td_window_tick(SimTime(w * 1_000_000), t));
+        }
+        assert!(
+            fired_any.iter().any(|d| d.condition == Condition::Td1StaleFrozen),
+            "{fired_any:?}"
+        );
+    }
+
+    #[test]
+    fn td_confirmation_requires_a_streak() {
+        let mut s = sensor(2);
+        // Two frozen windows (below confirm=3), then recovery: never fires.
+        for w in 0..2u64 {
+            let mut t = fresh_td(2, w);
+            t.delivered[1] = 0;
+            t.dropped[1] = w * 100;
+            t.age_windows[1] = w + 4;
+            let fired = s.td_window_tick(SimTime(w * 1_000_000), t);
+            assert!(fired.is_empty(), "window {w}: {fired:?}");
+        }
+        for w in 2..20u64 {
+            let fired = s.td_window_tick(SimTime(w * 1_000_000), fresh_td(2, w));
+            assert!(fired.is_empty(), "window {w}: {fired:?}");
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@ pub mod runbook;
 pub mod scorer;
 pub mod swdet;
 pub mod visibility;
+pub mod watchdog;
 
 pub use agent::{Agent, DpuPlane};
 pub use attribution::{attribute, Attribution, RootCause};
@@ -22,3 +23,4 @@ pub use fleet::{FleetSample, FleetSensor};
 pub use runbook::{all_entries, entry, RunbookEntry};
 pub use scorer::{NativeScorer, ScorerBackend};
 pub use swdet::{SwAlarm, SwSuite};
+pub use watchdog::FreshnessWatchdog;

@@ -47,13 +47,14 @@ mod tests {
 
     #[test]
     fn runbook_is_complete() {
-        use crate::dpu::detectors::{DP_CONDITIONS, PD_CONDITIONS};
+        use crate::dpu::detectors::{DP_CONDITIONS, PD_CONDITIONS, TD_CONDITIONS};
         let entries = all_entries();
-        assert_eq!(entries.len(), 34);
+        assert_eq!(entries.len(), 37);
         for (c, e) in ALL_CONDITIONS
             .iter()
             .chain(DP_CONDITIONS.iter())
             .chain(PD_CONDITIONS.iter())
+            .chain(TD_CONDITIONS.iter())
             .zip(&entries)
         {
             assert_eq!(*c, e.condition);

@@ -1,0 +1,268 @@
+//! Freshness watchdog — the DPU-side brain of the router-fallback ladder.
+//!
+//! The telemetry fault boundary (`telemetry::faults`) maintains per-replica
+//! [`FreshnessStat`]s: how old the newest delivered signal is, how complete
+//! the delivered stream is against what the node emitted, and how far behind
+//! a lagging export path is running. The watchdog folds the fleet's worst
+//! replica into a single ladder level for the router:
+//!
+//! | level | trust                | router behaviour                     |
+//! |-------|----------------------|--------------------------------------|
+//! | 0     | telemetry fresh      | full telemetry-weighted score        |
+//! | 1     | mildly degraded      | drop the KV term (rots fastest)      |
+//! | 2     | badly degraded       | outstanding-count only (least-loaded)|
+//! | 3     | telemetry unusable   | round-robin                          |
+//!
+//! Degradation is asymmetric by design: the level jumps *up* to the raw
+//! assessment immediately (one window of rotted weights is one window too
+//! many), but steps *down* one level at a time, and only after
+//! [`RECOVERY_STREAK`] consecutive windows assessed calmer than the current
+//! level — the hysteresis that keeps a flapping exporter from whipsawing
+//! the routing policy.
+
+use crate::telemetry::faults::FreshnessStat;
+
+/// Signal age (windows since the last delivery) at which each ladder level
+/// engages. A freeze crosses all three in order as the silence stretches.
+const AGE_L1: u64 = 3;
+const AGE_L2: u64 = 6;
+const AGE_L3: u64 = 12;
+
+/// Horizon completeness (delivered/emitted) below which levels engage: a
+/// lossy path thins the windowed rates before it silences them.
+const COMPLETENESS_L1: f64 = 0.9;
+const COMPLETENESS_L2: f64 = 0.5;
+
+/// Release lag (windows) at which levels engage. Lag alone never forces
+/// level 3: a late-but-complete signal still beats a blind rotation.
+const LAG_L1: u64 = 3;
+const LAG_L2: u64 = 6;
+
+/// Consecutive calmer-than-current windows required before the watchdog
+/// steps the ladder down one level.
+pub const RECOVERY_STREAK: u32 = 5;
+
+/// Horizon (windows) of cumulative (emitted, delivered) counters kept for
+/// the completeness ratio — long enough to smooth per-window jitter, short
+/// enough that a repaired path recovers within one recovery streak.
+const COMPLETENESS_HORIZON: usize = 8;
+
+/// Maps per-replica freshness to a router ladder level with degrade-fast /
+/// recover-slow hysteresis. One instance watches one router's feed.
+#[derive(Debug)]
+pub struct FreshnessWatchdog {
+    level: u8,
+    /// Ring of fleet-wide cumulative (emitted, delivered) totals, newest
+    /// last, for the horizon completeness ratio.
+    totals: Vec<(u64, u64)>,
+    calm_streak: u32,
+}
+
+impl Default for FreshnessWatchdog {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FreshnessWatchdog {
+    pub fn new() -> Self {
+        FreshnessWatchdog { level: 0, totals: Vec::new(), calm_streak: 0 }
+    }
+
+    pub fn level(&self) -> u8 {
+        self.level
+    }
+
+    /// The raw (memoryless) ladder level a single replica's freshness
+    /// warrants: the max over the age, completeness, and lag axes, each
+    /// mapped monotonically.
+    fn raw_replica_level(stat: &FreshnessStat, completeness: f64) -> u8 {
+        let by_age = if stat.age_windows >= AGE_L3 {
+            3
+        } else if stat.age_windows >= AGE_L2 {
+            2
+        } else if stat.age_windows >= AGE_L1 {
+            1
+        } else {
+            0
+        };
+        let by_completeness = if completeness < COMPLETENESS_L2 {
+            2
+        } else if completeness < COMPLETENESS_L1 {
+            1
+        } else {
+            0
+        };
+        let by_lag = if stat.lag_windows >= LAG_L2 {
+            2
+        } else if stat.lag_windows >= LAG_L1 {
+            1
+        } else {
+            0
+        };
+        by_age.max(by_completeness).max(by_lag)
+    }
+
+    /// One window tick: fold the fleet's freshness stats into the ladder
+    /// level. Returns the (possibly unchanged) level after hysteresis.
+    pub fn window_tick(&mut self, stats: &[FreshnessStat]) -> u8 {
+        // Horizon completeness is assessed fleet-wide (one ring instead of
+        // one per replica): the ladder level is a fleet-wide max anyway,
+        // and per-replica localization is the TD detectors' job, not the
+        // watchdog's.
+        let fleet_totals: (u64, u64) = stats
+            .iter()
+            .fold((0, 0), |(e, d), s| (e + s.emitted, d + s.delivered));
+        self.totals.push(fleet_totals);
+        if self.totals.len() > COMPLETENESS_HORIZON + 1 {
+            self.totals.remove(0);
+        }
+        let (old_e, old_d) = self.totals[0];
+        let emitted_h = fleet_totals.0.saturating_sub(old_e);
+        let delivered_h = fleet_totals.1.saturating_sub(old_d);
+        // An idle horizon (nothing emitted) is complete, not suspicious.
+        let fleet_completeness =
+            if emitted_h == 0 { 1.0 } else { delivered_h as f64 / emitted_h as f64 };
+
+        let raw = stats
+            .iter()
+            .map(|s| Self::raw_replica_level(s, fleet_completeness))
+            .max()
+            .unwrap_or(0);
+
+        if raw > self.level {
+            // Degrade fast: jump straight to the assessment.
+            self.level = raw;
+            self.calm_streak = 0;
+        } else if raw < self.level {
+            // Recover slow: one level per sustained calm streak.
+            self.calm_streak += 1;
+            if self.calm_streak >= RECOVERY_STREAK {
+                self.level -= 1;
+                self.calm_streak = 0;
+            }
+        } else {
+            self.calm_streak = 0;
+        }
+        self.level
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh() -> FreshnessStat {
+        FreshnessStat { emitted: 100, delivered: 100, ..Default::default() }
+    }
+
+    fn tick_n(w: &mut FreshnessWatchdog, stats: &[FreshnessStat], n: usize) -> u8 {
+        let mut l = w.level();
+        for _ in 0..n {
+            l = w.window_tick(stats);
+        }
+        l
+    }
+
+    #[test]
+    fn fresh_fleet_stays_at_level_zero() {
+        let mut w = FreshnessWatchdog::new();
+        assert_eq!(tick_n(&mut w, &[fresh(), fresh()], 20), 0);
+    }
+
+    #[test]
+    fn raw_level_is_monotone_in_each_axis() {
+        // Worsening any single axis never lowers the raw level.
+        let mut last = 0;
+        for age in 0..20u64 {
+            let s = FreshnessStat { age_windows: age, ..Default::default() };
+            let l = FreshnessWatchdog::raw_replica_level(&s, 1.0);
+            assert!(l >= last, "age {age}: level dropped {last} -> {l}");
+            last = l;
+        }
+        assert_eq!(last, 3);
+        let mut last = 0;
+        for lag in 0..10u64 {
+            let s = FreshnessStat { lag_windows: lag, ..Default::default() };
+            let l = FreshnessWatchdog::raw_replica_level(&s, 1.0);
+            assert!(l >= last, "lag {lag}: level dropped {last} -> {l}");
+            last = l;
+        }
+        assert_eq!(last, 2, "lag alone must not force round-robin");
+        let mut last = 0;
+        for pct in (0..=100u64).rev() {
+            let s = FreshnessStat::default();
+            let l = FreshnessWatchdog::raw_replica_level(&s, pct as f64 / 100.0);
+            assert!(l >= last, "completeness {pct}%: level dropped {last} -> {l}");
+            last = l;
+        }
+        assert_eq!(last, 2, "loss alone must not force round-robin");
+    }
+
+    #[test]
+    fn worst_replica_sets_the_fleet_level() {
+        let mut w = FreshnessWatchdog::new();
+        let mut stats = vec![fresh(); 4];
+        stats[2].age_windows = AGE_L2; // one replica badly stale
+        assert_eq!(w.window_tick(&stats), 2);
+    }
+
+    #[test]
+    fn degrades_immediately_recovers_one_level_per_streak() {
+        let mut w = FreshnessWatchdog::new();
+        let frozen = [FreshnessStat { age_windows: AGE_L3, emitted: 50, ..Default::default() }];
+        // Degrade-fast: a single bad window jumps straight to level 3.
+        assert_eq!(w.window_tick(&frozen), 3);
+
+        // Recovery: RECOVERY_STREAK calm windows per step, one level each.
+        let calm = [fresh()];
+        for _ in 0..RECOVERY_STREAK - 1 {
+            assert_eq!(w.window_tick(&calm), 3, "recovered before the streak");
+        }
+        assert_eq!(w.window_tick(&calm), 2);
+        assert_eq!(tick_n(&mut w, &calm, RECOVERY_STREAK as usize), 1);
+        assert_eq!(tick_n(&mut w, &calm, RECOVERY_STREAK as usize), 0);
+    }
+
+    #[test]
+    fn relapse_resets_the_recovery_streak() {
+        let mut w = FreshnessWatchdog::new();
+        let stale = [FreshnessStat { age_windows: AGE_L1, emitted: 50, ..Default::default() }];
+        let calm = [fresh()];
+        assert_eq!(w.window_tick(&stale), 1);
+        // Almost recovered...
+        tick_n(&mut w, &calm, RECOVERY_STREAK as usize - 1);
+        // ...then one equally-bad window: the streak starts over.
+        assert_eq!(w.window_tick(&stale), 1);
+        assert_eq!(
+            tick_n(&mut w, &calm, RECOVERY_STREAK as usize - 1),
+            1,
+            "partial streak must not carry across a relapse"
+        );
+        assert_eq!(w.window_tick(&calm), 0);
+    }
+
+    #[test]
+    fn fleet_loss_ratio_raises_the_level() {
+        let mut w = FreshnessWatchdog::new();
+        // Cumulative counters: every window emits 100, delivers 40 — a 60%
+        // loss ratio over the horizon must push the ladder to level 2.
+        let mut emitted = 0;
+        let mut delivered = 0;
+        let mut level = 0;
+        for _ in 0..COMPLETENESS_HORIZON + 2 {
+            emitted += 100;
+            delivered += 40;
+            let s = [FreshnessStat { emitted, delivered, ..Default::default() }];
+            level = w.window_tick(&s);
+        }
+        assert_eq!(level, 2);
+    }
+
+    #[test]
+    fn idle_horizon_counts_as_complete() {
+        let mut w = FreshnessWatchdog::new();
+        // Nothing emitted at all: not a loss signature.
+        assert_eq!(tick_n(&mut w, &[FreshnessStat::default()], 10), 0);
+    }
+}

@@ -105,6 +105,14 @@ pub struct Router {
     /// cursor would degenerate under interleaved pool picks — alternating
     /// pools of equal size would pin each pool to one replica.
     rr_cursors: Vec<usize>,
+    /// Telemetry-degradation ladder level, driven by the DPU freshness
+    /// watchdog. Only the [`RoutePolicy::WeightedTelemetry`] pick consults
+    /// it — the other policies never trusted the telemetry feed in the
+    /// first place. 0 = full telemetry-weighted score (the byte-identical
+    /// default), 1 = drop the KV term (occupancy rots fastest under stale
+    /// feeds), 2 = outstanding-count only (least-loaded on router-local
+    /// truth), 3 = round-robin (trust nothing but the rotation).
+    degraded: u8,
     pub routed: u64,
 }
 
@@ -132,6 +140,7 @@ impl Router {
             telemetry_queue: vec![0.0; n_replicas],
             telemetry_kv: vec![0.0; n_replicas],
             rr_cursors: vec![0; n_replicas],
+            degraded: 0,
             routed: 0,
         }
     }
@@ -181,15 +190,21 @@ impl Router {
     }
 
     /// Argmin of `key` over non-drained entries of `allowed` (lowest index
-    /// wins ties); falls back to the pool's first entry when everything in
-    /// it is drained.
+    /// wins ties). Non-finite keys (a NaN/inf telemetry gauge must never
+    /// poison the comparison chain) are treated as +inf, so a replica with
+    /// a degenerate score is picked only when every candidate's score is
+    /// degenerate — and then the lowest index wins, deterministically.
+    /// When everything in the pool is drained, falls back to least-loaded
+    /// over the whole pool (drains included) rather than a silent
+    /// first-entry pick: the caller still gets the sanest replica.
     fn argmin_live_in(&self, allowed: &[usize], key: impl Fn(usize) -> f64) -> usize {
         let mut best: Option<(usize, f64)> = None;
         for &i in allowed {
             if self.drained[i] {
                 continue;
             }
-            let k = key(i);
+            let raw = key(i);
+            let k = if raw.is_finite() { raw } else { f64::INFINITY };
             match best {
                 Some((_, bk)) if bk <= k => {}
                 _ => best = Some((i, k)),
@@ -197,7 +212,16 @@ impl Router {
         }
         match best {
             Some((i, _)) => i,
-            None => allowed[0],
+            None => {
+                // Every candidate is drained: least-loaded beats allowed[0].
+                let mut fb = allowed[0];
+                for &i in &allowed[1..] {
+                    if self.outstanding[i] < self.outstanding[fb] {
+                        fb = i;
+                    }
+                }
+                fb
+            }
         }
     }
 
@@ -235,21 +259,7 @@ impl Router {
                 let r = self.hash_in(flow, 0, allowed);
                 self.redirect_if_drained_in(r, allowed)
             }
-            RoutePolicy::RoundRobin => {
-                // Per-pool cursor (keyed by the set's first member): each
-                // pool rotates independently of interleaved picks on its
-                // siblings.
-                let m = allowed.len();
-                let mut k = self.rr_cursors[allowed[0]] % m;
-                for _ in 0..m {
-                    if !self.drained[allowed[k]] {
-                        break;
-                    }
-                    k = (k + 1) % m;
-                }
-                self.rr_cursors[allowed[0]] = (k + 1) % m;
-                allowed[k]
-            }
+            RoutePolicy::RoundRobin => self.pick_round_robin_in(allowed),
             RoutePolicy::LeastLoaded => {
                 self.argmin_live_in(allowed, |i| self.outstanding[i] as f64)
             }
@@ -271,11 +281,48 @@ impl Router {
                 };
                 self.redirect_if_drained_in(r, allowed)
             }
-            RoutePolicy::WeightedTelemetry => self.argmin_live_in(allowed, |i| {
+            RoutePolicy::WeightedTelemetry => self.pick_weighted_in(allowed),
+        }
+    }
+
+    /// Per-pool round-robin (keyed by the set's first member): each pool
+    /// rotates independently of interleaved picks on its siblings. Shared
+    /// by the [`RoutePolicy::RoundRobin`] policy and ladder level 3, so a
+    /// fully degraded weighted router rotates bit-identically to the real
+    /// round-robin policy.
+    fn pick_round_robin_in(&mut self, allowed: &[usize]) -> usize {
+        let m = allowed.len();
+        let mut k = self.rr_cursors[allowed[0]] % m;
+        for _ in 0..m {
+            if !self.drained[allowed[k]] {
+                break;
+            }
+            k = (k + 1) % m;
+        }
+        self.rr_cursors[allowed[0]] = (k + 1) % m;
+        allowed[k]
+    }
+
+    /// The [`RoutePolicy::WeightedTelemetry`] pick under the staged
+    /// fallback ladder. Each level strips one more telemetry-derived term
+    /// from the score, in rot order: the KV gauge goes first (a stale
+    /// occupancy reading is the most misleading term — a replica that
+    /// filled its cache after the freeze looks permanently empty), then
+    /// the queue gauge, leaving router-local outstanding counts, and
+    /// finally even those give way to a blind rotation.
+    fn pick_weighted_in(&mut self, allowed: &[usize]) -> usize {
+        match self.degraded {
+            0 => self.argmin_live_in(allowed, |i| {
                 self.telemetry_queue[i] * QUEUE_WEIGHT
                     + self.telemetry_kv[i] * KV_WEIGHT
                     + self.outstanding[i] as f64 * OUTSTANDING_WEIGHT
             }),
+            1 => self.argmin_live_in(allowed, |i| {
+                self.telemetry_queue[i] * QUEUE_WEIGHT
+                    + self.outstanding[i] as f64 * OUTSTANDING_WEIGHT
+            }),
+            2 => self.argmin_live_in(allowed, |i| self.outstanding[i] as f64),
+            _ => self.pick_round_robin_in(allowed),
         }
     }
 
@@ -350,6 +397,17 @@ impl Router {
     pub fn update_telemetry(&mut self, replica: usize, queue_depth: f64, kv_occupancy: f64) {
         self.telemetry_queue[replica] = queue_depth;
         self.telemetry_kv[replica] = kv_occupancy;
+    }
+
+    /// Watchdog feed: set the telemetry-degradation ladder level (clamped
+    /// to 3 = round-robin). Level 0 restores the full weighted score; only
+    /// [`RoutePolicy::WeightedTelemetry`] picks are affected.
+    pub fn set_degraded_level(&mut self, level: u8) {
+        self.degraded = level.min(3);
+    }
+
+    pub fn degraded_level(&self) -> u8 {
+        self.degraded
     }
 
     pub fn set_policy(&mut self, p: RoutePolicy) {
@@ -445,6 +503,88 @@ mod tests {
         r.update_telemetry(1, 2.0, 0.10);
         r.update_telemetry(2, 40.0, 0.10); // deep queue
         assert_eq!(r.route(FlowId(1)), 1);
+    }
+
+    #[test]
+    fn weighted_nan_gauge_never_poisons_the_pick() {
+        // A non-finite telemetry gauge (degenerate input from a rotted or
+        // absent feed) must lose to every finite score, and an all-NaN
+        // field must still pick deterministically (lowest index).
+        let mut r = Router::new(3, RoutePolicy::WeightedTelemetry);
+        r.update_telemetry(0, 5.0, 0.1);
+        r.update_telemetry(1, 0.0, f64::NAN);
+        r.update_telemetry(2, 1.0, 0.1);
+        assert_eq!(r.route(FlowId(1)), 2, "NaN gauge captured the pick");
+        let mut all_bad = Router::new(3, RoutePolicy::WeightedTelemetry);
+        for i in 0..3 {
+            all_bad.update_telemetry(i, f64::NAN, f64::NAN);
+        }
+        assert_eq!(all_bad.route(FlowId(1)), 0, "all-NaN pick not deterministic");
+    }
+
+    #[test]
+    fn all_drained_pool_falls_back_to_least_loaded() {
+        // When every candidate is drained the router must still answer —
+        // with the least-loaded replica, not a silent first-entry pick.
+        let mut r = Router::new(3, RoutePolicy::LeastLoaded);
+        for f in 0..5u32 {
+            r.route(FlowId(f)); // outstanding ends [2, 2, 1]
+        }
+        assert_eq!(r.outstanding(), &[2, 2, 1]);
+        for i in 0..3 {
+            r.set_drained(i, true);
+        }
+        assert_eq!(r.route(FlowId(9)), 2, "all-drained fallback ignored load");
+    }
+
+    #[test]
+    fn ladder_levels_strip_telemetry_terms() {
+        // Level 1 drops the KV term: a replica whose only liability is a
+        // (possibly rotted) KV gauge becomes eligible again.
+        let mut r = Router::new(2, RoutePolicy::WeightedTelemetry);
+        r.update_telemetry(0, 0.0, 0.99);
+        r.update_telemetry(1, 5.0, 0.0);
+        assert_eq!(r.route(FlowId(1)), 1, "level 0 must weigh KV");
+        r.complete(1);
+        r.set_degraded_level(1);
+        assert_eq!(r.route(FlowId(2)), 0, "level 1 must ignore KV");
+        r.complete(0);
+
+        // Level 2 drops the queue gauge too: outstanding-only least-loaded.
+        let mut r = Router::new(2, RoutePolicy::WeightedTelemetry);
+        r.update_telemetry(0, 50.0, 0.9);
+        r.set_degraded_level(2);
+        assert_eq!(r.route(FlowId(1)), 0, "level 2 must ignore all telemetry");
+        for f in 2..5u32 {
+            r.route(FlowId(f));
+        }
+        assert_eq!(r.outstanding(), &[2, 2], "level 2 is least-loaded");
+
+        // Level 3 is a blind rotation, whatever the gauges say.
+        let mut r = Router::new(3, RoutePolicy::WeightedTelemetry);
+        r.update_telemetry(1, 1000.0, 1.0);
+        r.set_degraded_level(3);
+        let picks: Vec<usize> = (0..6u32).map(|f| r.route(FlowId(f))).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+
+        // The level clamps at 3 and level 0 restores the full score.
+        r.set_degraded_level(9);
+        assert_eq!(r.degraded_level(), 3);
+        r.set_degraded_level(0);
+        r.update_telemetry(0, 0.0, 0.99);
+        r.update_telemetry(1, 2.0, 0.1);
+        r.update_telemetry(2, 40.0, 0.1);
+        let got = r.route(FlowId(99));
+        assert_eq!(got, 1, "level 0 must restore the weighted score");
+    }
+
+    #[test]
+    fn ladder_only_affects_weighted_policy() {
+        let mut r = Router::new(4, RoutePolicy::FlowHash);
+        let natural = r.route(FlowId(7));
+        r.complete(natural);
+        r.set_degraded_level(3);
+        assert_eq!(r.route(FlowId(7)), natural, "ladder must not touch hashing");
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //!             and/or deterministic JSON for trajectory tracking
 //!   fleet     [--replicas N] [--threads N] [--json] [--json-out PATH]
 //!             [--duration-ms N] [--seed S] [--disagg]
-//!             [--prefill-pools K] [--decode-pools M]
+//!             [--prefill-pools K] [--decode-pools M] [--telemetry-faults]
 //!             replicas × routing-policy sweep plus the DP1-DP3
 //!             data-parallel condition experiments (inject → detect →
 //!             mitigate), with per-replica skew columns; deterministic
@@ -22,7 +22,10 @@
 //!             the PD1-PD3 family) and bumps the JSON to dpulens.fleet.v2;
 //!             a pool-count flag appends the K×M multi-pool study (per-pool
 //!             DP scoping, pool-pair handoff accounting, every fleet
-//!             condition as a catalog-driven triple) and bumps it to v3
+//!             condition as a catalog-driven triple) and bumps it to v3;
+//!             `--telemetry-faults` appends the degraded-telemetry study
+//!             (TD1-TD3 triples on the telemetry-weighted baseline with the
+//!             router fallback-ladder trace) and bumps it to v4
 //!   campaign  <MANIFEST> [--threads N] [--json] [--json-out PATH]
 //!             expand a TOML-subset manifest into workload × topology ×
 //!             condition permutations (tenant SLO classes, diurnal/flash
@@ -226,6 +229,7 @@ fn cmd_fleet(args: &[String]) {
         fc.threads = t;
     }
     fc.disagg = flag(args, "--disagg");
+    fc.telemetry_faults = flag(args, "--telemetry-faults");
     // Any pool-count flag opts into the multi-pool study (schema v3); the
     // topology takes its replica count from --replicas.
     let prefill_pools = opt_parse::<usize>(args, "--prefill-pools");
@@ -493,6 +497,7 @@ mod tests {
                 "--disagg",
                 "--prefill-pools",
                 "--decode-pools",
+                "--telemetry-faults",
             ],
         ),
         ("campaign", &["--threads", "--json", "--json-out"]),

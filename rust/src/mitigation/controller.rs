@@ -262,6 +262,27 @@ impl Controller {
                     .set_policy(crate::engine::RoutePolicy::LeastLoaded);
                 "handoff routing unwedged: pin cleared, decode pool balanced by load".into()
             }
+            // The three TD directives all clear the victim node's telemetry
+            // fault mode — the distinct real-world action (restart the
+            // exporter / repair the channel / reprioritize the class) is the
+            // directive text; the lever is the same knob the injector set.
+            // Recovery of the router's fallback ladder then happens on its
+            // own through the freshness watchdog's hysteresis.
+            RestartTelemetryExporter => {
+                let idx = node.map(|n| n.idx()).unwrap_or(0);
+                cluster.tele_faults[idx] = crate::telemetry::faults::TeleFaultMode::None;
+                "telemetry exporter restarted: signal flowing again".into()
+            }
+            RepairTelemetryPath => {
+                let idx = node.map(|n| n.idx()).unwrap_or(0);
+                cluster.tele_faults[idx] = crate::telemetry::faults::TeleFaultMode::None;
+                "telemetry export channel repaired: event loss stopped".into()
+            }
+            PrioritizeTelemetryClass => {
+                let idx = node.map(|n| n.idx()).unwrap_or(0);
+                cluster.tele_faults[idx] = crate::telemetry::faults::TeleFaultMode::None;
+                "telemetry class prioritized: delivery backlog drains".into()
+            }
         }
     }
 
@@ -430,6 +451,24 @@ mod tests {
             &mut engine,
         );
         assert_eq!(engine.decode_router.members(), &[1], "sole decode replica must stay");
+    }
+
+    #[test]
+    fn td_directives_clear_the_node_fault_mode() {
+        use crate::telemetry::faults::TeleFaultMode;
+        let (mut cluster, mut engine) = setup();
+        cluster.tele_faults[1] = TeleFaultMode::Freeze;
+        cluster.tele_faults[2] = TeleFaultMode::Drop { p: 0.75 };
+        cluster.tele_faults[3] = TeleFaultMode::Lag { windows: 6 };
+        let mut ctl = Controller::new(true);
+        ctl.react(SimTime(0), &[det(Condition::Td1StaleFrozen, 1)], &mut cluster, &mut engine);
+        assert!(cluster.tele_faults[1].is_none(), "TD1 directive restarts the exporter");
+        assert!(!cluster.tele_faults[2].is_none(), "other nodes' faults untouched");
+        ctl.react(SimTime(1), &[det(Condition::Td2LossyDrop, 2)], &mut cluster, &mut engine);
+        assert!(cluster.tele_faults[2].is_none(), "TD2 directive repairs the path");
+        ctl.react(SimTime(2), &[det(Condition::Td3LaggingDelivery, 3)], &mut cluster, &mut engine);
+        assert!(cluster.tele_faults[3].is_none(), "TD3 directive reprioritizes the class");
+        assert_eq!(ctl.actions_taken(), 3);
     }
 
     #[test]

@@ -60,6 +60,14 @@ pub enum Directive {
     /// PD3: unwedge the phase-transition router (clear pins/overrides,
     /// balance KV handoffs by decode-pool load).
     RebalanceHandoffRouting,
+    /// TD1: bounce the wedged telemetry exporter/agent on the node.
+    RestartTelemetryExporter,
+    /// TD2: repair the lossy export channel (resize mirror queues, fix the
+    /// oob path) so every emitted event reaches the observer again.
+    RepairTelemetryPath,
+    /// TD3: lift the telemetry class out of the congested queue (QoS
+    /// priority for the export path) so delivery catches back up.
+    PrioritizeTelemetryClass,
 }
 
 impl Directive {
@@ -84,6 +92,9 @@ impl Directive {
                 | QosPartitionNic
                 | SmoothAdmission
                 | DrainStragglerReplica
+                | RestartTelemetryExporter
+                | RepairTelemetryPath
+                | PrioritizeTelemetryClass
         )
     }
 
@@ -117,6 +128,9 @@ impl Directive {
             DrainStragglerReplica => "Drain the straggler replica; respread its sessions",
             RebalancePools => "Shift a replica between prefill/decode roles toward the saturated pool",
             RebalanceHandoffRouting => "Rebalance KV-handoff routing across the decode pool",
+            RestartTelemetryExporter => "Restart the node's telemetry exporter; verify agent liveness probes",
+            RepairTelemetryPath => "Resize mirror queues, repair the oob export channel, stop event loss",
+            PrioritizeTelemetryClass => "Give the telemetry class QoS priority on the congested export path",
         }
     }
 }

@@ -1,0 +1,502 @@
+//! Telemetry fault injection — the monitoring path itself as the victim.
+//!
+//! Every detector and the `WeightedTelemetry` router assume the DPU signal
+//! is fresh, complete, and on time. This layer sits between the per-node
+//! [`TelemetryBus`] buffers and `DpuPlane::ingest` and breaks exactly that
+//! assumption, per node, in one of three ways (the TD condition family):
+//!
+//! - **Freeze** (TD1, stale-frozen): every due event is discarded at the
+//!   boundary — the exporter is wedged, the observer sees *nothing* new and
+//!   keeps reasoning over its last window forever.
+//! - **Drop { p }** (TD2, lossy-drop): each due event independently survives
+//!   with probability `1 - p` (seeded Bernoulli, own PCG stream forked from
+//!   the scenario seed — other subsystems' draw counts are untouched).
+//! - **Lag { windows }** (TD3, lagging-delivery): due events are parked in a
+//!   per-node hold queue and released, in original order, `windows` delivery
+//!   ticks later. Clearing the fault flushes the backlog.
+//!
+//! Accounting: all due events are counted into the bus publish totals at the
+//! moment they become due (the cluster *did* publish them), so with faults
+//! the pristine `published == ingested + invisible` invariant widens to
+//! `published == ingested + invisible + fault_dropped + fault_held_at_end`.
+//!
+//! The layer keeps a per-node [`FreshnessStat`] — signal age, delivery
+//! completeness, hold-queue depth, release delay — which is exactly what the
+//! `dpu::watchdog::FreshnessWatchdog` and the fleet sensor's TD rules
+//! consume. When no fault mode has ever been set the scenario never routes
+//! delivery through this layer at all, so the disabled path is byte-identical
+//! to the pristine pipeline by construction.
+
+use crate::ids::NodeId;
+use crate::sim::SimTime;
+use crate::telemetry::bus::{sort_and_partition, TelemetryBus};
+use crate::telemetry::event::{TelemetryEvent, TelemetryKind};
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+
+/// Per-node fault mode, stored on the cluster (`Cluster::tele_faults`) so
+/// injections set it, `Cluster::heal` clears it, and mitigation directives
+/// clear one node's entry.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum TeleFaultMode {
+    /// Healthy delivery.
+    #[default]
+    None,
+    /// Exporter wedged: due events discarded, signal frozen at its last value.
+    Freeze,
+    /// Lossy path: each event independently dropped with probability `p`.
+    Drop { p: f64 },
+    /// Delayed path: events delivered `windows` ticks late, in order.
+    Lag { windows: u64 },
+}
+
+impl TeleFaultMode {
+    pub fn is_none(&self) -> bool {
+        matches!(self, TeleFaultMode::None)
+    }
+
+    /// Evidence label for injection descriptions and reports.
+    pub fn describe(&self) -> String {
+        match self {
+            TeleFaultMode::None => "healthy".to_string(),
+            TeleFaultMode::Freeze => "telemetry frozen (exporter wedged)".to_string(),
+            TeleFaultMode::Drop { p } => format!("telemetry lossy (drop p={p:.2})"),
+            TeleFaultMode::Lag { windows } => {
+                format!("telemetry lagging ({windows} windows late)")
+            }
+        }
+    }
+}
+
+/// Per-node signal-health counters maintained at each delivery tick. The
+/// cumulative counters (`emitted`/`delivered`/`dropped`) are monotone so the
+/// fleet sensor can diff them over its horizon; `age_windows`, `held`, and
+/// `lag_windows` are instantaneous.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FreshnessStat {
+    /// Delivery ticks since the observer last received anything from this
+    /// node (0 = delivered this tick).
+    pub age_windows: u64,
+    /// Cumulative events that reached the fault boundary (became due).
+    pub emitted: u64,
+    /// Cumulative events handed to the observer.
+    pub delivered: u64,
+    /// Cumulative events discarded (freeze or lossy drop).
+    pub dropped: u64,
+    /// Events currently parked in the lag hold queue.
+    pub held: u64,
+    /// Release delay: windows between enqueue and release of the most
+    /// recently released batch, or the age of the oldest held event while
+    /// the backlog is still building; 0 when nothing is held or late.
+    pub lag_windows: u64,
+}
+
+/// Gauge history depth for the router-feed rot path — bounds the largest
+/// expressible lag on the queue/kv gauges.
+const MAX_GAUGE_HIST: usize = 64;
+
+/// RNG stream tag for the fault layer's private PCG stream.
+const FAULT_STREAM: u64 = 0x7D;
+
+/// The runtime: hold queues, seeded RNG, per-node freshness stats, and the
+/// delivery-tick counter. Owned by the scenario; reads the per-node modes
+/// live from the cluster at every delivery so injections and mitigations
+/// take effect mid-run.
+#[derive(Debug)]
+pub struct TelemetryFaults {
+    rng: Rng,
+    /// Delivery ticks seen (bumped once per `deliver_due_faulted` call).
+    window: u64,
+    /// Per-node lag hold queue: (enqueue_window, release_window, event).
+    hold: Vec<VecDeque<(u64, u64, TelemetryEvent)>>,
+    stats: Vec<FreshnessStat>,
+    /// Per-node (queue_depth, kv_occ) gauge history for router-feed rot.
+    gauges: Vec<VecDeque<(f64, f64)>>,
+    /// Reused delivery batch buffer.
+    scratch: Vec<TelemetryEvent>,
+    /// Latched true the first time any non-None mode is observed; the
+    /// scenario keeps using the pristine delivery path until then.
+    engaged: bool,
+}
+
+impl TelemetryFaults {
+    pub fn new(seed: u64, n_nodes: usize) -> Self {
+        TelemetryFaults {
+            rng: Rng::new(seed, FAULT_STREAM),
+            window: 0,
+            hold: (0..n_nodes).map(|_| VecDeque::new()).collect(),
+            stats: vec![FreshnessStat::default(); n_nodes],
+            gauges: (0..n_nodes).map(|_| VecDeque::new()).collect(),
+            scratch: Vec::new(),
+            engaged: false,
+        }
+    }
+
+    /// Latch the layer on the first sight of a non-None mode; returns
+    /// whether the faulted delivery path should be used. Once engaged the
+    /// layer stays engaged (recovery runs through it too, so ages and the
+    /// backlog flush are tracked), but a never-faulted run never enters it.
+    pub fn check_engaged(&mut self, modes: &[TeleFaultMode]) -> bool {
+        if !self.engaged && modes.iter().any(|m| !m.is_none()) {
+            self.engaged = true;
+        }
+        self.engaged
+    }
+
+    pub fn is_engaged(&self) -> bool {
+        self.engaged
+    }
+
+    /// Delivery ticks processed so far.
+    pub fn window(&self) -> u64 {
+        self.window
+    }
+
+    pub fn stats(&self) -> &[FreshnessStat] {
+        &self.stats
+    }
+
+    /// Cumulative events discarded at the fault boundary.
+    pub fn total_dropped(&self) -> u64 {
+        self.stats.iter().map(|s| s.dropped).sum()
+    }
+
+    /// Events still parked in hold queues.
+    pub fn total_held(&self) -> u64 {
+        self.hold.iter().map(|q| q.len() as u64).sum()
+    }
+
+    /// The faulted counterpart of [`TelemetryBus::deliver_due`]: same
+    /// delivery order and accounting when every mode is `None`, fault
+    /// semantics per node otherwise. Always serial — the fault path trades
+    /// the parallel observe fan-out for trivially thread-stable bookkeeping.
+    pub fn deliver_due_faulted(
+        &mut self,
+        bus: &mut TelemetryBus,
+        now: SimTime,
+        modes: &[TeleFaultMode],
+        mut f: impl FnMut(NodeId, &[TelemetryEvent]),
+    ) {
+        self.window += 1;
+        let mut total = 0u64;
+        let mut classes = [0u64; TelemetryKind::N_CLASSES];
+        let bufs = bus.pending_buffers_mut();
+        let n = bufs.len();
+        debug_assert_eq!(n, modes.len());
+        for i in 0..n {
+            let mode = modes[i];
+            self.scratch.clear();
+            // Release lag-held events first — they are older than anything
+            // due this tick. A cleared fault (mode no longer Lag) flushes
+            // the whole backlog at once: the path recovered and the queued
+            // telemetry arrives in a burst.
+            let flush = !matches!(mode, TeleFaultMode::Lag { .. });
+            let mut released_lag = 0u64;
+            loop {
+                let (enq_w, rel_w) = match self.hold[i].front() {
+                    Some(&(e, r, _)) => (e, r),
+                    None => break,
+                };
+                if !flush && rel_w > self.window {
+                    break;
+                }
+                let (_, _, ev) = self.hold[i].pop_front().unwrap();
+                released_lag = released_lag.max(self.window.saturating_sub(enq_w));
+                self.scratch.push(ev);
+            }
+            // Current-tick due events, (t, emission) order as the bus would.
+            let buf = &mut bufs[i];
+            let due = if buf.is_empty() { 0 } else { sort_and_partition(buf, now) };
+            if due > 0 {
+                total += due as u64;
+                for ev in &buf[..due] {
+                    classes[ev.kind.class_id()] += 1;
+                }
+                self.stats[i].emitted += due as u64;
+                match mode {
+                    TeleFaultMode::None => {
+                        self.scratch.extend(buf.drain(..due));
+                    }
+                    TeleFaultMode::Freeze => {
+                        self.stats[i].dropped += due as u64;
+                        buf.drain(..due);
+                    }
+                    TeleFaultMode::Drop { p } => {
+                        for ev in buf.drain(..due) {
+                            if self.rng.chance(p) {
+                                self.stats[i].dropped += 1;
+                            } else {
+                                self.scratch.push(ev);
+                            }
+                        }
+                    }
+                    TeleFaultMode::Lag { windows } => {
+                        let rel = self.window + windows;
+                        for ev in buf.drain(..due) {
+                            self.hold[i].push_back((self.window, rel, ev));
+                        }
+                    }
+                }
+            }
+            let st = &mut self.stats[i];
+            st.held = self.hold[i].len() as u64;
+            st.lag_windows = if released_lag > 0 {
+                released_lag
+            } else if let Some(&(enq_w, _, _)) = self.hold[i].front() {
+                self.window.saturating_sub(enq_w)
+            } else {
+                0
+            };
+            if self.scratch.is_empty() {
+                st.age_windows += 1;
+            } else {
+                st.delivered += self.scratch.len() as u64;
+                st.age_windows = 0;
+                f(NodeId(i as u32), &self.scratch);
+                self.scratch.clear();
+            }
+        }
+        bus.commit_delivered(total, &classes);
+    }
+
+    /// Router-feed rot: pass a ground-truth (queue_depth, kv_occ) gauge pair
+    /// through the node's fault mode. `None` return = no update reaches the
+    /// router this window (it keeps its previous value — exactly what a
+    /// frozen or dropped gauge looks like); `Some` = the value that arrives,
+    /// which under lag is the gauge from `windows` ticks ago.
+    pub fn rot_gauge(
+        &mut self,
+        node: usize,
+        mode: TeleFaultMode,
+        fresh: (f64, f64),
+    ) -> Option<(f64, f64)> {
+        let hist = &mut self.gauges[node];
+        match mode {
+            // Exporter wedged: nothing arrives, nothing new is recorded.
+            TeleFaultMode::Freeze => None,
+            TeleFaultMode::None => {
+                hist.push_back(fresh);
+                if hist.len() > MAX_GAUGE_HIST {
+                    hist.pop_front();
+                }
+                Some(fresh)
+            }
+            TeleFaultMode::Drop { p } => {
+                hist.push_back(fresh);
+                if hist.len() > MAX_GAUGE_HIST {
+                    hist.pop_front();
+                }
+                if self.rng.chance(p) {
+                    None
+                } else {
+                    Some(fresh)
+                }
+            }
+            TeleFaultMode::Lag { windows } => {
+                hist.push_back(fresh);
+                if hist.len() > MAX_GAUGE_HIST {
+                    hist.pop_front();
+                }
+                let k = windows as usize;
+                if hist.len() > k {
+                    Some(hist[hist.len() - 1 - k])
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::GpuId;
+
+    fn doorbell(t: u64, node: u32) -> TelemetryEvent {
+        TelemetryEvent {
+            t: SimTime(t),
+            node: NodeId(node),
+            kind: TelemetryKind::Doorbell { gpu: GpuId(0) },
+        }
+    }
+
+    fn filled_bus(n_nodes: usize, per_node: u64) -> TelemetryBus {
+        let mut bus = TelemetryBus::new(n_nodes);
+        for node in 0..n_nodes as u32 {
+            for t in 0..per_node {
+                bus.enqueue(doorbell(t + 1, node));
+            }
+        }
+        bus
+    }
+
+    #[test]
+    fn all_none_matches_pristine_delivery_exactly() {
+        let mut pristine = filled_bus(3, 5);
+        let mut faulted = filled_bus(3, 5);
+        let mut a = Vec::new();
+        pristine.deliver_due(SimTime(100), |n, evs| {
+            a.push((n, evs.iter().map(|e| e.t.ns()).collect::<Vec<_>>()));
+        });
+        let mut fl = TelemetryFaults::new(42, 3);
+        let modes = vec![TeleFaultMode::None; 3];
+        let mut b = Vec::new();
+        fl.deliver_due_faulted(&mut faulted, SimTime(100), &modes, |n, evs| {
+            b.push((n, evs.iter().map(|e| e.t.ns()).collect::<Vec<_>>()));
+        });
+        assert_eq!(a, b);
+        assert_eq!(pristine.total_published(), faulted.total_published());
+        assert_eq!(pristine.class_counts(), faulted.class_counts());
+        assert_eq!(fl.total_dropped(), 0);
+        assert_eq!(fl.total_held(), 0);
+        assert_eq!(fl.stats()[0].delivered, 5);
+        assert_eq!(fl.stats()[0].emitted, 5);
+    }
+
+    #[test]
+    fn freeze_discards_and_ages_the_signal() {
+        let mut fl = TelemetryFaults::new(7, 2);
+        let modes = [TeleFaultMode::Freeze, TeleFaultMode::None];
+        for tick in 1..=4u64 {
+            let mut bus = filled_bus(2, 3);
+            let mut seen = Vec::new();
+            fl.deliver_due_faulted(&mut bus, SimTime(100), &modes, |n, evs| {
+                seen.push((n, evs.len()));
+            });
+            // Only the healthy node delivers; published counts both.
+            assert_eq!(seen, vec![(NodeId(1), 3)]);
+            assert_eq!(bus.total_published(), 6);
+            assert_eq!(fl.stats()[0].age_windows, tick);
+            assert_eq!(fl.stats()[1].age_windows, 0);
+        }
+        assert_eq!(fl.stats()[0].dropped, 12);
+        assert_eq!(fl.stats()[0].delivered, 0);
+        assert_eq!(fl.total_dropped(), 12);
+    }
+
+    #[test]
+    fn drop_is_partial_and_seed_deterministic() {
+        let run = |seed| {
+            let mut fl = TelemetryFaults::new(seed, 1);
+            let modes = [TeleFaultMode::Drop { p: 0.5 }];
+            let mut delivered = Vec::new();
+            for _ in 0..10 {
+                let mut bus = filled_bus(1, 20);
+                fl.deliver_due_faulted(&mut bus, SimTime(100), &modes, |_, evs| {
+                    delivered.extend(evs.iter().map(|e| e.t.ns()));
+                });
+            }
+            (delivered, fl.stats()[0].dropped, fl.stats()[0].delivered)
+        };
+        let (d1, drop1, del1) = run(5);
+        let (d2, drop2, del2) = run(5);
+        assert_eq!(d1, d2, "same seed must drop the same events");
+        assert_eq!((drop1, del1), (drop2, del2));
+        assert_eq!(drop1 + del1, 200, "every emitted event is dropped or delivered");
+        assert!(drop1 > 50 && del1 > 50, "p=0.5 loses some, passes some: {drop1}/{del1}");
+        let (d3, _, _) = run(6);
+        assert_ne!(d1, d3, "different seed, different loss pattern");
+    }
+
+    #[test]
+    fn lag_holds_then_releases_in_order() {
+        let mut fl = TelemetryFaults::new(1, 1);
+        let modes = [TeleFaultMode::Lag { windows: 2 }];
+        // Tick 1: 2 events become due, parked.
+        let mut bus = filled_bus(1, 2);
+        fl.deliver_due_faulted(&mut bus, SimTime(100), &modes, |_, _| {
+            panic!("nothing may deliver while lagged")
+        });
+        assert_eq!(fl.stats()[0].held, 2);
+        assert_eq!(fl.stats()[0].age_windows, 1);
+        // Tick 2: nothing due, backlog not yet released.
+        let mut empty = TelemetryBus::new(1);
+        fl.deliver_due_faulted(&mut empty, SimTime(100), &modes, |_, _| {
+            panic!("release is at enqueue+2")
+        });
+        assert_eq!(fl.stats()[0].lag_windows, 1, "backlog age while building");
+        // Tick 3: release window reached; both arrive, original order.
+        let mut empty = TelemetryBus::new(1);
+        let mut got = Vec::new();
+        fl.deliver_due_faulted(&mut empty, SimTime(100), &modes, |_, evs| {
+            got.extend(evs.iter().map(|e| e.t.ns()));
+        });
+        assert_eq!(got, vec![1, 2]);
+        assert_eq!(fl.stats()[0].held, 0);
+        assert_eq!(fl.stats()[0].lag_windows, 2);
+        assert_eq!(fl.stats()[0].age_windows, 0);
+        assert_eq!(fl.stats()[0].delivered, 2);
+    }
+
+    #[test]
+    fn clearing_lag_flushes_the_backlog() {
+        let mut fl = TelemetryFaults::new(1, 1);
+        let lag = [TeleFaultMode::Lag { windows: 50 }];
+        let mut bus = filled_bus(1, 4);
+        fl.deliver_due_faulted(&mut bus, SimTime(100), &lag, |_, _| panic!("parked"));
+        assert_eq!(fl.total_held(), 4);
+        // Mitigation cleared the mode: held events arrive immediately.
+        let healed = [TeleFaultMode::None];
+        let mut empty = TelemetryBus::new(1);
+        let mut got = Vec::new();
+        fl.deliver_due_faulted(&mut empty, SimTime(100), &healed, |_, evs| {
+            got.extend(evs.iter().map(|e| e.t.ns()));
+        });
+        assert_eq!(got, vec![1, 2, 3, 4]);
+        assert_eq!(fl.total_held(), 0);
+    }
+
+    #[test]
+    fn engagement_latches_on_first_fault() {
+        let mut fl = TelemetryFaults::new(1, 2);
+        assert!(!fl.check_engaged(&[TeleFaultMode::None, TeleFaultMode::None]));
+        assert!(!fl.is_engaged());
+        assert!(fl.check_engaged(&[TeleFaultMode::None, TeleFaultMode::Freeze]));
+        // Stays engaged after the fault clears (recovery tracking).
+        assert!(fl.check_engaged(&[TeleFaultMode::None, TeleFaultMode::None]));
+    }
+
+    #[test]
+    fn rot_gauge_models_all_three_faults() {
+        let mut fl = TelemetryFaults::new(9, 1);
+        // Healthy: identity.
+        assert_eq!(fl.rot_gauge(0, TeleFaultMode::None, (3.0, 0.5)), Some((3.0, 0.5)));
+        // Freeze: no update ever arrives.
+        assert_eq!(fl.rot_gauge(0, TeleFaultMode::Freeze, (9.0, 0.9)), None);
+        // Lag k=2: the value from two windows ago arrives.
+        let mut fl = TelemetryFaults::new(9, 1);
+        let lag = TeleFaultMode::Lag { windows: 2 };
+        assert_eq!(fl.rot_gauge(0, lag, (1.0, 0.1)), None);
+        assert_eq!(fl.rot_gauge(0, lag, (2.0, 0.2)), None);
+        assert_eq!(fl.rot_gauge(0, lag, (3.0, 0.3)), Some((1.0, 0.1)));
+        assert_eq!(fl.rot_gauge(0, lag, (4.0, 0.4)), Some((2.0, 0.2)));
+        // Drop p=1: every update lost; p=0: none lost.
+        let mut fl = TelemetryFaults::new(9, 1);
+        assert_eq!(fl.rot_gauge(0, TeleFaultMode::Drop { p: 1.0 }, (1.0, 0.1)), None);
+        assert_eq!(fl.rot_gauge(0, TeleFaultMode::Drop { p: 0.0 }, (2.0, 0.2)), Some((2.0, 0.2)));
+    }
+
+    #[test]
+    fn conservation_extends_to_fault_counters() {
+        let mut fl = TelemetryFaults::new(3, 3);
+        let modes =
+            [TeleFaultMode::Freeze, TeleFaultMode::Drop { p: 0.6 }, TeleFaultMode::Lag { windows: 8 }];
+        let mut delivered = 0u64;
+        let mut published = 0u64;
+        for _ in 0..5 {
+            let mut bus = filled_bus(3, 10);
+            fl.deliver_due_faulted(&mut bus, SimTime(100), &modes, |_, evs| {
+                delivered += evs.len() as u64;
+            });
+            published += bus.total_published();
+        }
+        assert_eq!(published, 150, "all due events count as published");
+        assert_eq!(
+            published,
+            delivered + fl.total_dropped() + fl.total_held(),
+            "published == delivered + dropped + still-held"
+        );
+        assert!(fl.total_held() > 0, "lagged node must be holding a backlog");
+    }
+}

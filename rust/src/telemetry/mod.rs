@@ -3,10 +3,12 @@
 
 pub mod bus;
 pub mod event;
+pub mod faults;
 pub mod sw;
 pub mod window;
 
 pub use bus::TelemetryBus;
+pub use faults::{FreshnessStat, TeleFaultMode, TelemetryFaults};
 pub use event::{CollKind, Phase, TelemetryEvent, TelemetryKind};
 pub use sw::{SwSignal, SwSnapshot, SwWindow, ALL_SW_SIGNALS};
 pub use window::{WindowAccum, WindowSnapshot};

@@ -101,6 +101,7 @@ pub const CLI: &[CmdSpec] = &[
             f("--disagg"),
             fv("--prefill-pools", "K"),
             fv("--decode-pools", "M"),
+            f("--telemetry-faults"),
         ],
     },
     CmdSpec {

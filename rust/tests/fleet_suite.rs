@@ -108,6 +108,7 @@ fn fleet_json_is_deterministic_across_threads() {
         threads,
         disagg: false,
         multipool: None,
+        telemetry_faults: false,
     };
 
     let a = run_fleet(&mk(2)).to_json().render();

@@ -1,0 +1,241 @@
+//! Acceptance coverage for the degraded-telemetry plane:
+//!
+//! * each TD condition (frozen exporter, lossy path, lagging delivery) is
+//!   detected from the DPU vantage on a telemetry-weighted fleet, and the
+//!   widened conservation identity (`published == ingested + invisible +
+//!   fault_dropped + fault_held`) holds exactly;
+//! * the router's fallback ladder traverses all three levels under an
+//!   unmitigated freeze and walks back to full telemetry — one level per
+//!   hysteresis streak — once mitigation repairs the path;
+//! * a healthy run never touches the fault plane: no ladder transitions, no
+//!   fault counters, no TD alarms, pristine conservation;
+//! * `run_telemetry_study` (the `dpulens fleet --telemetry-faults` section)
+//!   detects all of TD1-TD3 and the v4 fleet JSON is byte-identical across
+//!   thread counts.
+
+use dpulens::coordinator::experiment::inject_time;
+use dpulens::coordinator::fleet::{fleet_base_cfg, run_fleet, run_telemetry_study, FleetConfig};
+use dpulens::coordinator::{Scenario, ScenarioCfg};
+use dpulens::dpu::detectors::{Condition, TD_CONDITIONS};
+use dpulens::dpu::watchdog::{FreshnessWatchdog, RECOVERY_STREAK};
+use dpulens::engine::RoutePolicy;
+use dpulens::sim::SimDur;
+use dpulens::telemetry::FreshnessStat;
+
+/// A trimmed 2-replica fleet on the telemetry-weighted baseline — the
+/// routing policy whose picks actually consume the gauges the faults rot,
+/// so the fallback ladder has something to protect.
+fn td_cfg() -> ScenarioCfg {
+    let mut cfg = fleet_base_cfg(2);
+    cfg.engine.route_policy = RoutePolicy::WeightedTelemetry;
+    cfg.duration = SimDur::from_ms(2000);
+    cfg.warmup_windows = 10;
+    cfg.calib_windows = 40;
+    cfg
+}
+
+#[test]
+fn td_family_detected_with_widened_conservation() {
+    for c in TD_CONDITIONS {
+        let mut cfg = td_cfg();
+        cfg.inject = Some((c, inject_time(&cfg)));
+        let res = Scenario::new(cfg).run();
+
+        assert!(res.detected(c), "{} not detected on the weighted fleet", c.id());
+        assert!(
+            res.detection_latency(c).is_some(),
+            "{} detected but no time-to-detect sample",
+            c.id()
+        );
+        // Every event the cluster published is accounted for: delivered,
+        // invisibly dropped pre-DPU, discarded at the fault boundary, or
+        // still parked in a lag hold queue at run end.
+        assert_eq!(
+            res.telemetry_published,
+            res.dpu_ingested + res.dpu_invisible_dropped + res.fault_dropped + res.fault_held_at_end,
+            "{}: widened conservation identity broken",
+            c.id()
+        );
+        assert!(
+            !res.ladder_transitions.is_empty(),
+            "{} degraded the feed but the ladder never moved",
+            c.id()
+        );
+        match c {
+            // Freeze and lossy-drop discard events at the boundary.
+            Condition::Td1StaleFrozen | Condition::Td2LossyDrop => {
+                assert!(res.fault_dropped > 0, "{} dropped nothing", c.id());
+            }
+            // Lag loses nothing — it parks, so the run ends with a backlog.
+            _ => {
+                assert_eq!(res.fault_dropped, 0, "TD3 must not drop");
+                assert!(res.fault_held_at_end > 0, "TD3 ended with no held backlog");
+            }
+        }
+    }
+}
+
+#[test]
+fn fallback_ladder_traverses_three_levels_and_recovers_with_hysteresis() {
+    // Unmitigated freeze: the victim's signal age grows without bound, so
+    // the watchdog must walk the full ladder — weighted, KV-blind,
+    // least-loaded, round-robin — and never come back.
+    let mut cfg = td_cfg();
+    cfg.inject = Some((Condition::Td1StaleFrozen, inject_time(&cfg)));
+    let res = Scenario::new(cfg).run();
+    let levels: Vec<u8> = res.ladder_transitions.iter().map(|&(_, l)| l).collect();
+    for lvl in [1u8, 2, 3] {
+        assert!(levels.contains(&lvl), "ladder skipped level {lvl}: {levels:?}");
+    }
+    assert!(
+        levels.windows(2).all(|w| w[1] > w[0]),
+        "unmitigated freeze may only descend deeper into fallback: {levels:?}"
+    );
+
+    // Mitigated freeze: the closed loop restarts the exporter, freshness
+    // returns, and the ladder steps back one level per hysteresis streak.
+    let mut cfg = td_cfg();
+    cfg.inject = Some((Condition::Td1StaleFrozen, inject_time(&cfg)));
+    cfg.mitigate = true;
+    let res = Scenario::new(cfg).run();
+    let t = &res.ladder_transitions;
+    assert!(!t.is_empty(), "mitigated run recorded no ladder transitions");
+    assert_eq!(t.last().unwrap().1, 0, "ladder did not recover to full telemetry: {t:?}");
+    let peak = t.iter().enumerate().max_by_key(|&(_, &(_, l))| l).map(|(i, _)| i).unwrap();
+    assert!(t[peak].1 >= 1, "mitigated run never degraded: {t:?}");
+    for pair in t[peak..].windows(2) {
+        let (w0, l0) = pair[0];
+        let (w1, l1) = pair[1];
+        assert_eq!(l1 + 1, l0, "recovery must step down one level at a time: {t:?}");
+        assert!(
+            w1 - w0 >= u64::from(RECOVERY_STREAK),
+            "stepped down after only {} calm windows: {t:?}",
+            w1 - w0
+        );
+    }
+}
+
+#[test]
+fn healthy_runs_never_touch_the_fault_plane() {
+    let res = Scenario::new(td_cfg()).run();
+    assert!(
+        res.ladder_transitions.is_empty(),
+        "ladder moved on a healthy run: {:?}",
+        res.ladder_transitions
+    );
+    assert_eq!(res.fault_dropped, 0);
+    assert_eq!(res.fault_held_at_end, 0);
+    for c in TD_CONDITIONS {
+        assert!(!res.detected(c), "{} fired on a healthy fleet", c.id());
+    }
+    // With the fault counters at zero the widened identity collapses back
+    // to the pristine pipeline's exact conservation.
+    assert_eq!(res.telemetry_published, res.dpu_ingested + res.dpu_invisible_dropped);
+}
+
+/// The watchdog's public surface, driven from outside the crate the way the
+/// observe loop drives it: degrade-fast to the raw assessment, recover-slow
+/// one level per full calm streak, relapse resets the streak.
+#[test]
+fn watchdog_hysteresis_over_the_public_api() {
+    let fresh = FreshnessStat { emitted: 100, delivered: 100, ..Default::default() };
+
+    // Monotone: a signal that only gets older never lowers the level.
+    let mut wd = FreshnessWatchdog::new();
+    let mut prev = 0u8;
+    for age in 0..30u64 {
+        let lvl = wd.window_tick(&[FreshnessStat { age_windows: age, ..fresh }]);
+        assert!(lvl >= prev, "level dropped {prev} -> {lvl} while freshness only worsened");
+        prev = lvl;
+    }
+    assert_eq!(prev, 3, "unbounded staleness must reach round-robin");
+
+    // Hysteresis: one bad window jumps straight to 3; each step back down
+    // costs a full calm streak, and a relapse jumps right back up.
+    let mut wd = FreshnessWatchdog::new();
+    assert_eq!(wd.window_tick(&[FreshnessStat { age_windows: 20, ..fresh }]), 3);
+    for i in 1..RECOVERY_STREAK {
+        assert_eq!(wd.window_tick(&[fresh]), 3, "recovered after only {i} calm windows");
+    }
+    assert_eq!(wd.window_tick(&[fresh]), 2, "full streak must step down exactly one level");
+    for _ in 0..RECOVERY_STREAK - 1 {
+        wd.window_tick(&[fresh]);
+    }
+    wd.window_tick(&[FreshnessStat { age_windows: 20, ..fresh }]);
+    assert_eq!(wd.level(), 3, "a relapse must jump back up immediately");
+}
+
+#[test]
+fn telemetry_study_detects_all_td_conditions_and_recovers_the_ladder() {
+    let report = run_telemetry_study(0);
+
+    assert_eq!(report.rows.len(), TD_CONDITIONS.len());
+    for (row, &c) in report.rows.iter().zip(TD_CONDITIONS.iter()) {
+        assert_eq!(row.condition, c, "study rows out of catalog order");
+        assert!(row.detected, "{} not detected in the telemetry study", c.id());
+        assert!(row.latency_ns.is_some(), "{} has no time-to-detect sample", c.id());
+        assert!(row.actions >= 1, "{} fired but the controller took no action", c.id());
+        assert!(
+            !row.ladder_transitions.is_empty(),
+            "{} never moved the fallback ladder",
+            c.id()
+        );
+        assert_eq!(
+            row.recovered_level, 0,
+            "{} mitigated cell did not walk the ladder back to full telemetry",
+            c.id()
+        );
+        // The ladder's whole point: routing on degraded (or no) telemetry
+        // must not collapse serving throughput.
+        assert!(
+            row.throughput_held >= 0.7,
+            "{}: ladder held only {:.0}% of healthy throughput",
+            c.id(),
+            row.throughput_held * 100.0
+        );
+    }
+
+    // The frozen exporter is the only signature whose staleness grows
+    // without bound: it must bottom out at round-robin and lose events.
+    let td1 = &report.rows[0];
+    assert_eq!(
+        td1.max_ladder_level, 3,
+        "frozen telemetry must walk the full ladder: {:?}",
+        td1.ladder_transitions
+    );
+    assert!(td1.fault_dropped > 0, "TD1 discarded nothing at the boundary");
+}
+
+#[test]
+fn fleet_json_bumps_to_v4_only_with_telemetry_faults() {
+    let mut base = fleet_base_cfg(2);
+    base.duration = SimDur::from_ms(1200);
+    base.warmup_windows = 10;
+    base.calib_windows = 40;
+    let mk = |threads: usize, telemetry_faults: bool| FleetConfig {
+        base: base.clone(),
+        replicas: 2,
+        policies: vec![RoutePolicy::WeightedTelemetry],
+        threads,
+        disagg: false,
+        multipool: None,
+        telemetry_faults,
+    };
+
+    let off = run_fleet(&mk(2, false)).to_json().render();
+    assert!(off.contains("\"schema\":\"dpulens.fleet.v1\""));
+    assert!(!off.contains("\"telemetry\""));
+
+    let a = run_fleet(&mk(2, true)).to_json().render();
+    let b = run_fleet(&mk(3, true)).to_json().render();
+    assert_eq!(a, b, "fleet v4 JSON differs across thread counts");
+    assert!(a.contains("\"schema\":\"dpulens.fleet.v4\""));
+    assert!(a.contains("\"td_conditions\""));
+    assert!(a.contains("\"max_ladder_level\""));
+
+    // The TD block rides at the end of the cell list: everything before the
+    // DP section renders byte-identically with the study on and off.
+    let prefix_off = off.split("\"dp_conditions\"").next().unwrap().replace(".v1", "");
+    let prefix_on = a.split("\"dp_conditions\"").next().unwrap().replace(".v4", "");
+    assert_eq!(prefix_off, prefix_on, "enabling the TD study perturbed the v1 cells");
+}
