@@ -20,7 +20,10 @@ commands to commit it, and exits 0.
 `dpulens.perf.v2` documents additionally carry a `fleet_stress` scaling
 curve; its points are compared pair-wise by replica count (a point present
 on only one side — e.g. a `--quick` fresh run against a full baseline — is
-skipped, never a failure). v1 documents compare exactly as before.
+skipped, never a failure). `dpulens.perf.v3` documents further carry a
+`reuse` section (snapshot-and-branch prefix-reuse counters); its rows sit
+in the base METRICS list, so documents missing the section simply show
+"(no comparable sample)". v1 documents compare exactly as before.
 
 Usage: ci/perf_trajectory.py BASELINE.json FRESH.json [--gate]
        [--tolerance-pct P]
@@ -38,6 +41,11 @@ METRICS = [
     (("matrix", "events_per_sec"), "matrix events/s", True),
     (("fleet", "elapsed_ms"), "fleet wall ms", False),
     (("fleet", "events_per_sec"), "fleet events/s", True),
+    # v3 `reuse` section: snapshot-and-branch effectiveness. A shrinking
+    # ratio means cells stopped sharing prefixes (a grouping regression),
+    # so higher is better for both.
+    (("reuse", "reuse_ratio"), "prefix reuse ratio", True),
+    (("reuse", "sim_ns_saved"), "reuse sim ns saved", True),
 ]
 
 # Per-scaling-point metrics (v2 `fleet_stress.points`), appended after the

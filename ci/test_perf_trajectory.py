@@ -161,6 +161,55 @@ class StressTests(unittest.TestCase):
         self.assertTrue(pt.is_recorded(zeros))
 
 
+def reuse_doc(ratio=3.0, saved=2_000_000_000.0, **kw):
+    """A dpulens.perf.v3 document with a snapshot-and-branch reuse section."""
+    d = doc(**kw)
+    d["schema"] = "dpulens.perf.v3"
+    d["reuse"] = {
+        "cells_total": 87,
+        "prefixes_simulated": 29,
+        "forked_branches": 58,
+        "sim_ns_saved": saved,
+        "reuse_ratio": ratio,
+    }
+    return d
+
+
+class ReuseTests(unittest.TestCase):
+    def row(self, rows, label):
+        matches = [r for r in rows if r[0] == label]
+        self.assertEqual(len(matches), 1, label)
+        return matches[0]
+
+    def test_reuse_rows_compare_in_the_base_metric_set(self):
+        rows = pt.compare(reuse_doc(), reuse_doc())
+        self.assertEqual(len(rows), len(pt.METRICS))
+        _, b, f, delta, regressed = self.row(rows, "prefix reuse ratio")
+        self.assertEqual(b, f)
+        self.assertAlmostEqual(delta, 0.0)
+        self.assertFalse(regressed)
+
+    def test_shrinking_reuse_ratio_is_a_regression(self):
+        # Cells stopped sharing prefixes: -50% ratio regresses, growth never.
+        rows = pt.compare(reuse_doc(ratio=3.0), reuse_doc(ratio=1.5))
+        self.assertTrue(self.row(rows, "prefix reuse ratio")[4])
+        rows = pt.compare(reuse_doc(ratio=3.0), reuse_doc(ratio=6.0))
+        self.assertFalse(self.row(rows, "prefix reuse ratio")[4])
+
+    def test_pre_v3_documents_show_no_comparable_sample(self):
+        # A v1/v2 baseline has no reuse section: delta is None, never a
+        # regression, and the row set stays the full METRICS list.
+        rows = pt.compare(doc(), reuse_doc())
+        self.assertEqual(len(rows), len(pt.METRICS))
+        label, b, f, delta, regressed = self.row(rows, "prefix reuse ratio")
+        self.assertIsNone(delta)
+        self.assertFalse(regressed)
+
+    def test_reuse_only_baseline_counts_as_recorded(self):
+        zeros = reuse_doc(ingest=0.0, p50=0.0, mx=0.0, matrix_ms=0.0)
+        self.assertTrue(pt.is_recorded(zeros))
+
+
 class RecordedTests(unittest.TestCase):
     def test_placeholder_is_not_a_baseline(self):
         placeholder = doc()

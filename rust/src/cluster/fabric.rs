@@ -24,7 +24,7 @@ struct QpState {
 }
 
 /// The cluster fabric: per-node up/down links + a shared core.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Fabric {
     pub uplinks: Vec<LinkModel>,
     pub downlinks: Vec<LinkModel>,

@@ -16,7 +16,7 @@ use crate::telemetry::faults::TeleFaultMode;
 use crate::util::rng::Rng;
 
 /// One host node's hardware.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct NodeHw {
     pub node: NodeId,
     pub pcie: PcieComplex,
@@ -27,7 +27,7 @@ pub struct NodeHw {
 }
 
 /// The whole cluster: nodes + fabric + fabric knobs.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Cluster {
     pub spec: ClusterSpec,
     pub nodes: Vec<NodeHw>,

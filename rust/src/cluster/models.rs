@@ -15,7 +15,7 @@ use crate::util::rng::Rng;
 /// Deferred telemetry emissions: (timestamp, node, kind). The scenario loop
 /// drains `items` into the telemetry bus's per-node buffers (capacity is
 /// reused), and the bus batch-delivers them time-ordered at window ticks.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct Outbox {
     pub items: Vec<(SimTime, NodeId, TelemetryKind)>,
 }
@@ -114,7 +114,7 @@ const UNPINNED_STAGE_NS: u64 = 15_000;
 
 /// Per-node PCIe root complex: per-GPU x16 links plus a shared switch uplink
 /// that P2P and background tenants contend on.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct PcieComplex {
     node: NodeId,
     pub per_gpu: Vec<LinkModel>,
@@ -269,7 +269,7 @@ const PKT_BYTES: u64 = 4096;
 
 /// NIC model: RX and TX queues at line rate with loss/retransmit and
 /// background-traffic contention.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Nic {
     node: NodeId,
     pub rx: LinkModel,
@@ -381,7 +381,7 @@ impl Nic {
 const KERNEL_LAUNCH_NS: u64 = 4_000;
 
 /// GPU execution model: serial kernel slots with a per-GPU speed factor.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct GpuModel {
     pub gpu: GpuId,
     node: NodeId,

@@ -56,13 +56,14 @@ use std::collections::BTreeMap;
 
 use crate::coordinator::experiment::{inject_time, standard_cfg};
 use crate::coordinator::fleet::{disagg_base_cfg, fleet_base_cfg};
-use crate::coordinator::scenario::{Scenario, ScenarioCfg};
+use crate::coordinator::scenario::{RunResult, ScenarioCfg};
+use crate::coordinator::snapshot::{self, ReuseStats};
 use crate::dpu::detectors::Condition;
 use crate::metrics::TenantLane;
 use crate::sim::dist::{Arrival, LengthDist, RateShape};
 use crate::sim::{SimDur, SimTime};
 use crate::util::json::Json;
-use crate::util::par::{parallel_map, resolve_threads};
+use crate::util::par::resolve_threads;
 use crate::util::table::Table;
 use crate::workload::generator::WorkloadSpec;
 use crate::workload::TenantClass;
@@ -177,6 +178,9 @@ pub struct CampaignConfig {
     /// Event-calendar backend every cell runs on (programmatic knob — the
     /// equivalence suite pins `Heap` to diff against the bucket default).
     pub calendar: crate::sim::CalendarKind,
+    /// Run every cell from scratch instead of forking shared pre-injection
+    /// prefixes (`--no-reuse`; equivalence debugging). CLI-set, not manifest.
+    pub no_reuse: bool,
 }
 
 impl Default for CampaignConfig {
@@ -193,6 +197,7 @@ impl Default for CampaignConfig {
             topologies: Vec::new(),
             threads: 0,
             calendar: crate::sim::CalendarKind::Bucket,
+            no_reuse: false,
         }
     }
 }
@@ -695,9 +700,13 @@ impl CampaignCell {
     }
 }
 
-fn run_cell(cell: &Cell) -> CampaignCell {
-    let res = Scenario::new(cell.cfg.clone()).run();
-    let injected = match cell.condition {
+fn score_cell(
+    workload: String,
+    topology: String,
+    condition: CellCondition,
+    res: &RunResult,
+) -> CampaignCell {
+    let injected = match condition {
         CellCondition::Injected(c) => Some(c),
         CellCondition::Healthy => None,
     };
@@ -714,9 +723,9 @@ fn run_cell(cell: &Cell) -> CampaignCell {
     let detected = injected.map(|c| counts.get(&c).copied().unwrap_or(0) > 0).unwrap_or(false);
     let latency_ns = injected.and_then(|c| res.detection_latency(c)).map(|d| d.ns());
     CampaignCell {
-        workload: cell.workload.clone(),
-        topology: cell.topology.clone(),
-        condition: cell.condition,
+        workload,
+        topology,
+        condition,
         missed_injection,
         detected,
         latency_ns,
@@ -725,7 +734,7 @@ fn run_cell(cell: &Cell) -> CampaignCell {
         requests_generated: res.requests_generated,
         requests_arrived: res.requests_arrived,
         requests_tracked: res.requests_tracked,
-        tenants: res.tenants,
+        tenants: res.tenants.clone(),
     }
 }
 
@@ -746,6 +755,10 @@ pub struct CampaignReport {
     pub cells: Vec<CampaignCell>,
     pub threads_used: usize,
     pub elapsed_ms: f64,
+    /// Snapshot-and-branch prefix-reuse accounting. Perf metadata like
+    /// `elapsed_ms`: excluded from `to_json` so the campaign JSON stays
+    /// byte-identical whether or not reuse was enabled.
+    pub reuse: ReuseStats,
 }
 
 impl CampaignReport {
@@ -853,10 +866,21 @@ impl CampaignReport {
 /// Expand the manifest into cells and execute them on the shared scoped
 /// worker pool.
 pub fn run_campaign(cc: &CampaignConfig) -> CampaignReport {
-    let cells = cells(cc);
-    let threads_used = resolve_threads(cc.threads, cells.len());
+    let cell_list = cells(cc);
+    let threads_used = resolve_threads(cc.threads, cell_list.len());
     let timer = crate::util::perf::PhaseTimer::start();
-    let outcomes = parallel_map(&cells, cc.threads, run_cell);
+    // Cells are consumed: the identity columns stay behind for scoring, the
+    // configs move into the snapshot runner (no per-cell ScenarioCfg clone).
+    let (metas, cfgs): (Vec<(String, String, CellCondition)>, Vec<ScenarioCfg>) = cell_list
+        .into_iter()
+        .map(|c| ((c.workload, c.topology, c.condition), c.cfg))
+        .unzip();
+    let (results, reuse) = snapshot::run_all(cfgs, cc.threads, cc.no_reuse);
+    let outcomes = metas
+        .into_iter()
+        .zip(results.iter())
+        .map(|((w, t, cond), res)| score_cell(w, t, cond, res))
+        .collect();
     let elapsed_ms = timer.total_ms();
     CampaignReport {
         name: cc.name.clone(),
@@ -867,6 +891,7 @@ pub fn run_campaign(cc: &CampaignConfig) -> CampaignReport {
         cells: outcomes,
         threads_used,
         elapsed_ms,
+        reuse,
     }
 }
 

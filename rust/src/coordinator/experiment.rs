@@ -8,7 +8,8 @@ use crate::dpu::attribution::RootCause;
 use crate::dpu::detectors::Condition;
 use crate::dpu::runbook;
 use crate::sim::{SimDur, SimTime, MS};
-use crate::coordinator::scenario::{RunResult, Scenario, ScenarioCfg};
+use crate::coordinator::scenario::{RunResult, ScenarioCfg};
+use crate::coordinator::snapshot;
 
 /// Standard experiment timing: calibration + measurement phases.
 pub fn standard_cfg() -> ScenarioCfg {
@@ -109,25 +110,27 @@ impl ConditionReport {
     }
 }
 
-/// Run the standard three-phase experiment for one condition.
+/// Run the standard three-phase experiment for one condition. The phases
+/// share every pre-injection event, so they go through the snapshot runner
+/// as one prefix group: the world is simulated once up to the injection
+/// instant and the healthy / injected / mitigated branches fork from that
+/// checkpoint (no duplicate healthy prefix simulation).
 pub fn condition_experiment(
     c: Condition,
     base: &ScenarioCfg,
     with_mitigation: bool,
 ) -> ConditionReport {
-    let healthy = Scenario::new(base.clone()).run();
-
     let mut inj_cfg = base.clone();
     inj_cfg.inject = Some((c, inject_time(base)));
-    let injected = Scenario::new(inj_cfg.clone()).run();
-
-    let mitigated = if with_mitigation {
-        let mut mit_cfg = inj_cfg.clone();
-        mit_cfg.mitigate = true;
-        Some(Scenario::new(mit_cfg).run())
-    } else {
-        None
-    };
+    let mut cfgs = vec![base.clone(), inj_cfg.clone()];
+    if with_mitigation {
+        inj_cfg.mitigate = true;
+        cfgs.push(inj_cfg);
+    }
+    let (mut results, _) = snapshot::run_all(cfgs, 1, false);
+    let mitigated = if with_mitigation { results.pop() } else { None };
+    let injected = results.pop().expect("injected phase result");
+    let healthy = results.pop().expect("healthy phase result");
 
     let t0 = injected.injected_at.unwrap_or(SimTime::ZERO);
     let detected = injected.detections.iter().any(|d| d.condition == c && d.at >= t0);

@@ -16,13 +16,14 @@
 
 use crate::cluster::{ReplicaRole, ReplicaShape};
 use crate::coordinator::experiment::{inject_time, standard_cfg};
-use crate::coordinator::scenario::{Scenario, ScenarioCfg};
+use crate::coordinator::scenario::{RunResult, ScenarioCfg};
+use crate::coordinator::snapshot::{self, ReuseStats};
 use crate::dpu::detectors::{Condition, DP_CONDITIONS, PD_CONDITIONS, TD_CONDITIONS};
 use crate::engine::router::ALL_POLICIES;
 use crate::engine::RoutePolicy;
 use crate::sim::{SimDur, SimTime};
 use crate::util::json::Json;
-use crate::util::par::{parallel_map, resolve_threads};
+use crate::util::par::resolve_threads;
 use crate::util::table::{fmt_ns, Table};
 
 /// Extra measurement time DP cells get past the standard duration, so the
@@ -51,6 +52,9 @@ pub struct FleetConfig {
     /// freshness watchdog's fallback-ladder transitions alongside detection;
     /// bumps the JSON schema to v4.
     pub telemetry_faults: bool,
+    /// Run every cell from scratch instead of forking shared
+    /// pre-injection prefixes (`--no-reuse`; equivalence debugging).
+    pub no_reuse: bool,
 }
 
 /// Knobs of the multi-pool study topology.
@@ -105,6 +109,7 @@ impl FleetConfig {
             disagg: false,
             multipool: None,
             telemetry_faults: false,
+            no_reuse: false,
         }
     }
 }
@@ -516,9 +521,25 @@ struct CellOutcome {
     fault_held: u64,
 }
 
-fn run_cell(fc: &FleetConfig, cell: FleetCell) -> CellOutcome {
-    let cfg = cell_cfg(fc, cell);
-    let res = Scenario::new(cfg).run();
+/// Simulate every cell through the snapshot runner (cells whose worlds are
+/// identical until injection simulate their shared pre-injection prefix once
+/// and fork per-cell branches) and score the results in cell order. Configs
+/// are fingerprinted AFTER `cell_cfg`, so the sweep-level calendar and
+/// observe-thread overrides are part of the prefix identity.
+fn run_cells(
+    fc: &FleetConfig,
+    cell_list: &[FleetCell],
+    threads: usize,
+    no_reuse: bool,
+) -> (Vec<CellOutcome>, ReuseStats) {
+    let cfgs: Vec<ScenarioCfg> = cell_list.iter().map(|&cell| cell_cfg(fc, cell)).collect();
+    let (results, reuse) = snapshot::run_all(cfgs, threads, no_reuse);
+    let outcomes =
+        cell_list.iter().zip(results.iter()).map(|(&cell, res)| score_cell(cell, res)).collect();
+    (outcomes, reuse)
+}
+
+fn score_cell(cell: FleetCell, res: &RunResult) -> CellOutcome {
     let injected = match cell {
         FleetCell::DpInjected(c)
         | FleetCell::DpMitigated(c)
@@ -549,7 +570,7 @@ fn run_cell(fc: &FleetConfig, cell: FleetCell) -> CellOutcome {
         token_skew: res.metrics.replica_token_skew(),
         max_flow_share,
         replica_tokens: res.metrics.per_replica.iter().map(|l| l.tokens_out).collect(),
-        kv_peak: res.replica_kv_peak,
+        kv_peak: res.replica_kv_peak.clone(),
         detected,
         latency_ns,
         actions: res.actions.len() as u64,
@@ -562,7 +583,7 @@ fn run_cell(fc: &FleetConfig, cell: FleetCell) -> CellOutcome {
             .iter()
             .map(|p| (p.prefill_pool, p.decode_pool, p.started, p.bytes_sent))
             .collect(),
-        ladder: res.ladder_transitions,
+        ladder: res.ladder_transitions.clone(),
         fault_dropped: res.fault_dropped,
         fault_held: res.fault_held_at_end,
     }
@@ -714,6 +735,11 @@ pub struct FleetReport {
     pub elapsed_ms: f64,
     /// Telemetry events delivered across all cells' pipelines.
     pub events_total: u64,
+    /// Snapshot-and-branch prefix-reuse accounting for the sweep. Perf
+    /// metadata like `elapsed_ms`: surfaced by the human output and
+    /// `dpulens perf`, excluded from `to_json` so the fleet JSON stays
+    /// byte-identical whether or not reuse was enabled.
+    pub reuse: ReuseStats,
 }
 
 impl FleetReport {
@@ -730,7 +756,7 @@ pub fn run_fleet(fc: &FleetConfig) -> FleetReport {
     let cell_list = cells(fc);
     let threads_used = resolve_threads(fc.threads, cell_list.len());
     let timer = crate::util::perf::PhaseTimer::start();
-    let mut outcomes = parallel_map(&cell_list, fc.threads, |&cell| run_cell(fc, cell));
+    let (mut outcomes, reuse) = run_cells(fc, &cell_list, fc.threads, fc.no_reuse);
     let elapsed_ms = timer.total_ms();
     let events_total: u64 = outcomes.iter().map(|o| o.events).sum();
 
@@ -788,6 +814,7 @@ pub fn run_fleet(fc: &FleetConfig) -> FleetReport {
         threads_used,
         elapsed_ms,
         events_total,
+        reuse,
     }
 }
 
@@ -858,7 +885,7 @@ fn disagg_report_from(outcomes: &[CellOutcome]) -> DisaggReport {
 pub fn run_disagg_study(threads: usize) -> DisaggReport {
     let fc = FleetConfig::new(2);
     let cell_list = disagg_cells();
-    let outcomes = parallel_map(&cell_list, threads, |&cell| run_cell(&fc, cell));
+    let (outcomes, _) = run_cells(&fc, &cell_list, threads, false);
     disagg_report_from(&outcomes)
 }
 
@@ -906,7 +933,7 @@ pub fn run_multipool_study(mp: MultiPoolSpec, threads: usize) -> MultiPoolReport
     let mut fc = FleetConfig::new(2);
     fc.multipool = Some(mp);
     let cell_list = multipool_cells(&mp);
-    let outcomes = parallel_map(&cell_list, threads, |&cell| run_cell(&fc, cell));
+    let (outcomes, _) = run_cells(&fc, &cell_list, threads, false);
     multipool_report_from(&mp, &outcomes)
 }
 
@@ -951,7 +978,7 @@ fn telemetry_report_from(outcomes: &[CellOutcome]) -> TelemetryReport {
 pub fn run_telemetry_study(threads: usize) -> TelemetryReport {
     let fc = FleetConfig::new(2);
     let cell_list = td_cells();
-    let outcomes = parallel_map(&cell_list, threads, |&cell| run_cell(&fc, cell));
+    let (outcomes, _) = run_cells(&fc, &cell_list, threads, false);
     telemetry_report_from(&outcomes)
 }
 

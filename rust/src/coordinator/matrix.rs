@@ -26,7 +26,8 @@ use crate::coordinator::experiment::{
     cause_class, condition_experiment, expected_cause_classes, inject_time, shaped_cfg,
     standard_cfg, ConditionReport,
 };
-use crate::coordinator::scenario::{Scenario, ScenarioCfg};
+use crate::coordinator::scenario::{RunResult, ScenarioCfg};
+use crate::coordinator::snapshot;
 use crate::dpu::detectors::{Condition, ALL_CONDITIONS};
 use crate::dpu::swdet;
 use crate::engine::preset;
@@ -47,6 +48,9 @@ pub struct MatrixConfig {
     pub threads: usize,
     /// Include the §4.3 NVLink-blindness negative control cells.
     pub negative_control: bool,
+    /// Force every cell to simulate from scratch instead of forking shared
+    /// pre-injection prefixes (`--no-reuse`; equivalence debugging).
+    pub no_reuse: bool,
 }
 
 impl Default for MatrixConfig {
@@ -56,6 +60,7 @@ impl Default for MatrixConfig {
             replicates: 3,
             threads: 0,
             negative_control: true,
+            no_reuse: false,
         }
     }
 }
@@ -149,9 +154,11 @@ fn cells(mc: &MatrixConfig) -> Vec<Cell> {
     v
 }
 
-fn run_cell(cell: &Cell) -> CellOutcome {
-    let res = Scenario::new(cell.cfg.clone()).run();
-    let injected = cell.kind.injected();
+/// Score one executed cell. Cells run through the snapshot runner (shared
+/// pre-injection prefixes fork instead of re-simulating); the scoring is
+/// identical either way because forked results are byte-identical.
+fn score_cell(kind: CellKind, res: &RunResult) -> CellOutcome {
+    let injected = kind.injected();
     // An injection cell whose injection never landed (duration too short)
     // counts as a hard miss rather than crediting pre-injection firings.
     let missed_injection = injected.is_some() && res.injected_at.is_none();
@@ -191,7 +198,7 @@ fn run_cell(cell: &Cell) -> CellOutcome {
         _ => false,
     };
     CellOutcome {
-        kind: cell.kind,
+        kind,
         detections: counts.into_iter().collect(),
         detected,
         latency_ns,
@@ -209,16 +216,27 @@ fn run_cell(cell: &Cell) -> CellOutcome {
 /// from the deterministic JSON; see `MatrixReport::to_json`).
 pub fn run_matrix(mc: &MatrixConfig) -> MatrixReport {
     let cells = cells(mc);
-    let threads_used = resolve_threads(mc.threads, cells.len());
+    let n_cells = cells.len();
+    let threads_used = resolve_threads(mc.threads, n_cells);
     let timer = crate::util::perf::PhaseTimer::start();
-    let outcomes = parallel_map(&cells, mc.threads, run_cell);
+    // Cells are consumed: kinds stay behind for scoring, configs move into
+    // the snapshot runner (no per-cell ScenarioCfg deep-clone).
+    let (kinds, cfgs): (Vec<CellKind>, Vec<ScenarioCfg>) =
+        cells.into_iter().map(|c| (c.kind, c.cfg)).unzip();
+    let (results, reuse) = snapshot::run_all(cfgs, mc.threads, mc.no_reuse);
+    let outcomes: Vec<CellOutcome> = kinds
+        .into_iter()
+        .zip(results.iter())
+        .map(|(kind, res)| score_cell(kind, res))
+        .collect();
     let elapsed_ms = timer.total_ms();
-    aggregate(mc, outcomes, cells.len(), threads_used, elapsed_ms)
+    aggregate(mc, outcomes, reuse, n_cells, threads_used, elapsed_ms)
 }
 
 fn aggregate(
     mc: &MatrixConfig,
     outcomes: Vec<CellOutcome>,
+    reuse: snapshot::ReuseStats,
     cells_run: usize,
     threads_used: usize,
     elapsed_ms: f64,
@@ -318,6 +336,7 @@ fn aggregate(
         threads_used,
         elapsed_ms,
         events_total,
+        reuse,
     }
 }
 

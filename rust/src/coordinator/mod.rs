@@ -18,6 +18,9 @@
 //! manifest-driven workload × topology × condition expander behind
 //! `dpulens campaign`), `perf` (the pipeline benchmark behind `dpulens perf`
 //! / `BENCH_pipeline.json`), and `report` (machine-readable outputs).
+//! `snapshot` threads the runners through shared-prefix checkpoint/fork
+//! execution: cells whose worlds are identical until injection simulate
+//! their pre-injection prefix once and fork per-cell branches from it.
 
 pub mod campaign;
 pub mod experiment;
@@ -30,6 +33,7 @@ pub mod observe;
 pub mod perf;
 pub mod report;
 pub mod scenario;
+pub mod snapshot;
 pub mod world;
 
 pub use campaign::{run_campaign, CampaignConfig, CampaignReport};
@@ -42,4 +46,5 @@ pub use ingress::target_node_for;
 pub use matrix::{run_matrix, run_sweep, MatrixConfig, MatrixReport};
 pub use perf::{run_perf, FleetStressConfig, PerfConfig, PerfReport};
 pub use scenario::{RunResult, Scenario, ScenarioCfg};
+pub use snapshot::{ReuseStats, WorldSnapshot};
 pub use world::{HandoffStats, PairFlow};

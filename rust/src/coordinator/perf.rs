@@ -11,22 +11,24 @@
 //! 3. **matrix** — `run_matrix` end-to-end wall-clock and pipeline events/sec;
 //! 4. **fleet** — `run_fleet` end-to-end wall-clock and pipeline events/sec.
 //!
-//! The JSON form (`BENCH_pipeline.json`, schema `dpulens.perf.v1`) has a
+//! The JSON form (`BENCH_pipeline.json`, schema `dpulens.perf.v3`) has a
 //! deterministic *shape* — fixed keys, deterministic event counts — while
 //! the timing values vary by machine; CI uploads it per PR so the bench
-//! trajectory accumulates.
+//! trajectory accumulates. v3 = v2's keys plus a `reuse` section: the
+//! snapshot-and-branch prefix-reuse counters merged across the matrix and
+//! fleet end-to-end phases (all zeros under `--micro`).
 //!
 //! With `--fleet-stress` a fifth phase runs: healthy multi-pool worlds at
 //! 100/250/500/1000 replicas (just 100 under `--quick`), each measured for
 //! wall-clock per simulated second, pipeline events/sec, and allocation
-//! volume via [`crate::util::alloc`] (the peak-RSS proxy). The schema
-//! becomes `dpulens.perf.v2`: v1's keys unchanged, plus a `fleet_stress`
-//! scaling curve — `ci/perf_trajectory.py` compares its points by replica
-//! count.
+//! volume via [`crate::util::alloc`] (the peak-RSS proxy). The optional
+//! `fleet_stress` scaling curve keeps its v2 shape — `ci/perf_trajectory.py`
+//! compares its points by replica count.
 
 use crate::coordinator::fleet::{multipool_base_cfg, run_fleet, FleetConfig, MultiPoolSpec};
 use crate::coordinator::matrix::{run_matrix, MatrixConfig};
 use crate::coordinator::scenario::Scenario;
+use crate::coordinator::snapshot::ReuseStats;
 use crate::dpu::agent::DpuPlane;
 use crate::dpu::detectors::DetectConfig;
 use crate::ids::{FlowId, GpuId, NodeId, QpId, ReqId, StageId};
@@ -143,6 +145,9 @@ pub struct PerfReport {
     pub fleet_threads: u64,
     pub fleet_ms: f64,
     pub fleet_events: u64,
+    /// Snapshot-and-branch prefix-reuse counters, merged across the matrix
+    /// and fleet end-to-end phases (all zeros under `--micro`).
+    pub reuse: ReuseStats,
     pub fleet_stress: Option<FleetStressReport>,
 }
 
@@ -202,13 +207,11 @@ impl PerfReport {
         events_per_sec(self.fleet_events, self.fleet_ms)
     }
 
-    /// `dpulens.perf.v1` (or `.v2` when the fleet-stress curve ran): fixed
-    /// key shape; timing values machine-dependent.
+    /// `dpulens.perf.v3`: fixed key shape (the `fleet_stress` section only
+    /// when that phase ran); timing values machine-dependent.
     pub fn to_json(&self) -> Json {
-        let schema =
-            if self.fleet_stress.is_some() { "dpulens.perf.v2" } else { "dpulens.perf.v1" };
         let mut j = Json::obj()
-            .set("schema", schema)
+            .set("schema", "dpulens.perf.v3")
             .set("quick", self.quick)
             .set(
                 "ingest",
@@ -244,6 +247,15 @@ impl PerfReport {
                     .set("elapsed_ms", self.fleet_ms)
                     .set("events", self.fleet_events)
                     .set("events_per_sec", self.fleet_events_per_sec()),
+            )
+            .set(
+                "reuse",
+                Json::obj()
+                    .set("cells_total", self.reuse.cells_total)
+                    .set("prefixes_simulated", self.reuse.prefixes_simulated)
+                    .set("forked_branches", self.reuse.forked_branches)
+                    .set("sim_ns_saved", self.reuse.sim_ns_saved())
+                    .set("reuse_ratio", self.reuse.reuse_ratio()),
             );
         if let Some(fs) = &self.fleet_stress {
             let mut pts = Json::arr();
@@ -305,6 +317,17 @@ impl PerfReport {
                 self.fleet_threads,
                 self.fleet_events,
                 self.fleet_events_per_sec()
+            ));
+        }
+        if self.reuse.cells_total > 0 {
+            s.push_str(&format!(
+                "reuse:    {} cells from {} simulated prefixes ({} forked branches, \
+                 {:.0} sim-ms saved, {:.1}x prefix reuse)\n",
+                self.reuse.cells_total,
+                self.reuse.prefixes_simulated,
+                self.reuse.forked_branches,
+                self.reuse.sim_ns_saved() as f64 / 1e6,
+                self.reuse.reuse_ratio()
             ));
         }
         if let Some(fs) = &self.fleet_stress {
@@ -475,6 +498,7 @@ fn run_stress_point(replicas: usize, threads: usize, quick: bool) -> StressPoint
 pub fn run_perf(cfg: &PerfConfig) -> PerfReport {
     let ingest_ms = bench_ingest(cfg);
     let snap = bench_snapshot(cfg);
+    let mut reuse = ReuseStats::default();
 
     let (matrix_cells, matrix_threads, matrix_ms, matrix_events, matrix_detected) =
         if cfg.micro_only {
@@ -486,6 +510,7 @@ pub fn run_perf(cfg: &PerfConfig) -> PerfReport {
                 ..MatrixConfig::default()
             };
             let rep = run_matrix(&mc);
+            reuse.absorb(rep.reuse);
             (
                 rep.cells_run as u64,
                 rep.threads_used as u64,
@@ -501,6 +526,7 @@ pub fn run_perf(cfg: &PerfConfig) -> PerfReport {
         let mut fc = FleetConfig::new(cfg.fleet_replicas.max(1));
         fc.threads = cfg.threads;
         let rep = run_fleet(&fc);
+        reuse.absorb(rep.reuse);
         (rep.cells_run as u64, rep.threads_used as u64, rep.elapsed_ms, rep.events_total)
     };
 
@@ -534,6 +560,7 @@ pub fn run_perf(cfg: &PerfConfig) -> PerfReport {
         fleet_threads,
         fleet_ms,
         fleet_events,
+        reuse,
         fleet_stress,
     }
 }
@@ -558,21 +585,29 @@ mod tests {
     }
 
     #[test]
-    fn micro_perf_report_has_the_v1_shape() {
+    fn micro_perf_report_has_the_v3_shape() {
         let rep = run_perf(&micro_cfg());
         assert_eq!(rep.ingest_events, 4_000);
         assert_eq!(rep.snapshot_windows, 8);
         assert!(rep.ingest_ms >= 0.0);
         assert!(rep.snapshot_max_us >= rep.snapshot_p50_us);
+        // --micro skips the end-to-end phases: the reuse counters stay zero
+        // but the section is still present (fixed key shape).
+        assert_eq!(rep.reuse, ReuseStats::default());
         let json = rep.to_json().render();
         for key in [
-            "\"schema\":\"dpulens.perf.v1\"",
+            "\"schema\":\"dpulens.perf.v3\"",
             "\"ingest\"",
             "\"events_per_sec\"",
             "\"snapshot\"",
             "\"p50_us\"",
             "\"matrix\"",
             "\"fleet\"",
+            "\"reuse\"",
+            "\"prefixes_simulated\"",
+            "\"forked_branches\"",
+            "\"sim_ns_saved\"",
+            "\"reuse_ratio\"",
         ] {
             assert!(json.contains(key), "missing {key} in {json}");
         }
@@ -580,7 +615,7 @@ mod tests {
     }
 
     #[test]
-    fn stress_report_has_the_v2_shape() {
+    fn stress_report_keeps_the_fleet_stress_section() {
         let mut cfg = micro_cfg();
         cfg.fleet_stress = Some(FleetStressConfig { points: vec![20], threads: 1, quick: true });
         let rep = run_perf(&cfg);
@@ -592,7 +627,7 @@ mod tests {
         assert!(fs.points[0].wall_ms > 0.0);
         let json = rep.to_json().render();
         for key in [
-            "\"schema\":\"dpulens.perf.v2\"",
+            "\"schema\":\"dpulens.perf.v3\"",
             "\"fleet_stress\"",
             "\"replicas\":20",
             "\"wall_ms_per_sim_s\"",

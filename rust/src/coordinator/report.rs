@@ -160,6 +160,11 @@ pub struct MatrixReport {
     pub elapsed_ms: f64,
     /// Telemetry events delivered across all cells' pipelines.
     pub events_total: u64,
+    /// Snapshot-and-branch prefix-reuse accounting for the sweep. Perf
+    /// metadata like `elapsed_ms`: surfaced by the human output and
+    /// `dpulens perf`, excluded from `to_json` so the scorecard JSON stays
+    /// byte-identical whether or not reuse was enabled.
+    pub reuse: crate::coordinator::snapshot::ReuseStats,
 }
 
 impl MatrixReport {

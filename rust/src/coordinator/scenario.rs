@@ -206,19 +206,50 @@ pub struct Scenario {
     /// Ladder transition log: (window index, new level) per change.
     pub(crate) ladder_log: Vec<(u64, u8)>,
     pub(crate) real_compute: bool,
+    /// Loop lifecycle for snapshot/fork execution: `started` makes calendar
+    /// arming idempotent across `run_to` + `run`, and `finished` latches
+    /// when `Ev::End` pops so resuming past the end is a no-op.
+    pub(crate) started: bool,
+    pub(crate) finished: bool,
 }
 
 impl Scenario {
-    /// Run to completion; returns the result bundle.
-    pub fn run(mut self) -> RunResult {
+    /// Arm the calendar (end marker, first window tick, first arrival).
+    /// Idempotent: a world advanced by `run_to` and later finished by
+    /// `run` arms exactly once.
+    fn start(&mut self) {
+        if self.started {
+            return;
+        }
+        self.started = true;
         let end = SimTime::ZERO + self.cfg.duration;
         self.cal.schedule_at(end, Ev::End);
         self.cal.schedule_in(self.cfg.window, Ev::WindowTick);
         self.schedule_next_arrival();
+    }
 
-        while let Some((now, ev)) = self.cal.pop() {
+    /// The dispatch loop. With a `stop`, only events strictly earlier than
+    /// it run (`peek < stop`); ties at `stop` stay pending — they belong to
+    /// the branch resumed from the checkpoint, which replays them in the
+    /// identical `(t, seq)` order a from-scratch run would.
+    fn run_loop(&mut self, stop: Option<SimTime>) {
+        if self.finished {
+            return;
+        }
+        let end = SimTime::ZERO + self.cfg.duration;
+        loop {
+            if let Some(stop) = stop {
+                match self.cal.peek_time() {
+                    Some(t) if t < stop => {}
+                    _ => break,
+                }
+            }
+            let Some((now, ev)) = self.cal.pop() else { break };
             match ev {
-                Ev::End => break,
+                Ev::End => {
+                    self.finished = true;
+                    break;
+                }
                 Ev::GenNext => self.schedule_next_arrival(),
                 Ev::Arrival(req) => self.on_arrival(*req, now),
                 Ev::Delivered(id) => self.on_delivered(id, now),
@@ -237,11 +268,27 @@ impl Scenario {
                 }
             }
         }
+    }
+
+    /// Advance the world up to (not including) `stop` and pause — the
+    /// snapshot capture point for fork execution. Everything scheduled at
+    /// `t >= stop` stays pending for the resumed branch.
+    pub(crate) fn run_to(&mut self, stop: SimTime) {
+        self.start();
+        self.run_loop(Some(stop));
+    }
+
+    /// Run to completion (from scratch, or resuming a world advanced by
+    /// `run_to`); returns the result bundle.
+    pub fn run(mut self) -> RunResult {
+        self.start();
+        self.run_loop(None);
 
         // Final partial window: events already buffered with t < end would
         // have been popped from the old calendar before `Ev::End`; deliver
         // them so every observed event is counted (published == ingested +
         // invisible_dropped) and nothing pending leaks into the totals.
+        let end = SimTime::ZERO + self.cfg.duration;
         self.deliver_telemetry(end);
         self.finish()
     }

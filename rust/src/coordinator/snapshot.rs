@@ -1,0 +1,368 @@
+//! Snapshot-and-branch execution: checkpoint a simulated world at its
+//! injection instant once, then fork healthy / injected / mitigated branches
+//! from the checkpoint instead of re-simulating the identical pre-injection
+//! prefix per cell.
+//!
+//! Soundness rests on three facts the suite (`snapshot_fork_suite.rs`)
+//! pins down as byte-identical forked-vs-scratch JSON:
+//!
+//! 1. **The prefix is injection-invariant.** Before its injection instant a
+//!    cell's world evolves exactly like the neutral world: `cfg.inject` is
+//!    only compared against `now` (no state changes until it trips),
+//!    `cfg.victim_replica` is only read when an injection applies, and the
+//!    mitigation controller is a total no-op while no detection has fired
+//!    (`Controller::react` short-circuits on disabled, and it is only
+//!    invoked with a non-empty detection batch). So the checkpoint captured
+//!    from the neutralized config *is* every branch's state at the fork
+//!    point — except a mitigated branch forked after a pre-injection false
+//!    alarm, which [`run_all`] detects via [`WorldSnapshot::neutral`] and
+//!    re-simulates from scratch.
+//! 2. **The fork boundary is exact.** [`Scenario::run_to`] drains events
+//!    with `t < stop` only (peek-before-pop); ties at `stop` stay pending
+//!    and replay in the branch in the identical global `(t, seq)` order.
+//! 3. **The copy is deep.** [`WorldSnapshot::fork`] deep-clones every state
+//!    plane — sharded calendar (bucket lanes, overflow heaps, seq counter),
+//!    engine (batcher, KV, routers incl. the degraded ladder), telemetry
+//!    (bus buffers, fault layer incl. its PCG stream, window accumulators),
+//!    DPU plane (baselines, fleet-sensor streaks, watchdog trust), and the
+//!    workload generator's RNG streams — so branches share nothing.
+
+use std::collections::HashMap;
+
+use crate::sim::SimTime;
+
+use super::experiment::inject_time;
+use super::scenario::{RunResult, Scenario, ScenarioCfg};
+
+/// Prefix-reuse accounting for one `run_all` sweep. All counters are plain
+/// sums, so per-group contributions absorb in any order and the totals are
+/// deterministic for every `--threads` value.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReuseStats {
+    /// Cells executed (every cell yields exactly one `RunResult`).
+    pub cells_total: u64,
+    /// Shared prefixes actually simulated (one per fingerprint group, plus
+    /// one per from-scratch fallback cell).
+    pub prefixes_simulated: u64,
+    /// Cells served by forking a checkpoint instead of re-simulating.
+    pub forked_branches: u64,
+    /// Simulated prefix nanoseconds a from-scratch sweep would burn
+    /// (`fork point × cells`).
+    pub prefix_ns_total: u64,
+    /// Simulated prefix nanoseconds actually burned.
+    pub prefix_ns_simulated: u64,
+}
+
+impl ReuseStats {
+    /// Fold another sweep's (or group's) counters into this one.
+    pub fn absorb(&mut self, o: ReuseStats) {
+        self.cells_total += o.cells_total;
+        self.prefixes_simulated += o.prefixes_simulated;
+        self.forked_branches += o.forked_branches;
+        self.prefix_ns_total += o.prefix_ns_total;
+        self.prefix_ns_simulated += o.prefix_ns_simulated;
+    }
+
+    /// Simulated prefix time eliminated by reuse.
+    pub fn sim_ns_saved(&self) -> u64 {
+        self.prefix_ns_total.saturating_sub(self.prefix_ns_simulated)
+    }
+
+    /// From-scratch prefix time over actually-simulated prefix time
+    /// (1.0 when nothing was simulated or nothing was saved).
+    pub fn reuse_ratio(&self) -> f64 {
+        if self.prefix_ns_simulated == 0 {
+            1.0
+        } else {
+            self.prefix_ns_total as f64 / self.prefix_ns_simulated as f64
+        }
+    }
+}
+
+/// The canonical prefix identity of a cell: its config with the
+/// injection-variant fields (condition, mitigation, victim) neutralized.
+/// Two cells with equal fingerprints evolve identically until the fork
+/// point, so they can share one simulated prefix.
+fn neutralized(cfg: &ScenarioCfg) -> ScenarioCfg {
+    let mut n = cfg.clone();
+    n.inject = None;
+    n.mitigate = false;
+    n.victim_replica = 0;
+    n
+}
+
+/// Render the neutralized config into a grouping key. `ScenarioCfg` is a
+/// plain data tree (no maps, no pointers), so its `Debug` rendering is a
+/// canonical, collision-honest fingerprint of everything that shapes the
+/// prefix: cluster, engine, workload, seed, durations, calendar backend,
+/// observe threads.
+pub fn fingerprint(cfg: &ScenarioCfg) -> String {
+    format!("{:?}", neutralized(cfg))
+}
+
+/// The shared fork point of a cell group: the earliest injection instant
+/// (the standard post-calibration instant for never-injecting groups),
+/// clamped to the run's end. Every event strictly before it is
+/// injection-invariant across the group.
+fn fork_point<'a, I>(cfgs: I) -> SimTime
+where
+    I: IntoIterator<Item = &'a ScenarioCfg>,
+{
+    let mut iter = cfgs.into_iter();
+    let first = iter.next().expect("fork_point of an empty group");
+    let mut at = first.inject.map(|(_, t)| t).unwrap_or_else(|| inject_time(first));
+    for c in iter {
+        if let Some((_, t)) = c.inject {
+            at = at.min(t);
+        }
+    }
+    let end = SimTime::ZERO + first.duration;
+    at.min(end)
+}
+
+/// A paused deep copy of a simulated world at its fork boundary.
+pub struct WorldSnapshot {
+    world: Scenario,
+    /// The fork boundary: every event with `t < at` has run; ties at `at`
+    /// are still pending and belong to the branches.
+    pub at: SimTime,
+    /// True when no detection had fired by the fork point. Mitigated
+    /// branches may only fork from a neutral checkpoint (a pre-fork false
+    /// alarm would have armed a from-scratch run's controller earlier).
+    pub neutral: bool,
+}
+
+impl WorldSnapshot {
+    /// Simulate `cfg`'s world up to `stop` and freeze it. `cfg` should be
+    /// the group's neutralized config; the world must use forkable
+    /// (surrogate) compute backends — real PJRT backends hold device state
+    /// and panic in `clone_box`.
+    pub fn capture(cfg: ScenarioCfg, stop: SimTime) -> Self {
+        let mut world = Scenario::new(cfg);
+        world.run_to(stop);
+        let neutral = world.dpu.detections.is_empty();
+        WorldSnapshot { world, at: stop, neutral }
+    }
+
+    /// Deep-copy the checkpoint and retarget the copy at `cfg` — the
+    /// branch's own injection/mitigation identity. The clone shares no
+    /// state with the checkpoint or with sibling branches.
+    pub fn fork(&self, cfg: ScenarioCfg) -> Scenario {
+        let mut w = clone_world(&self.world);
+        // `mitigate` is baked into the controller at construction; re-arm
+        // it for the branch. Sound from a neutral checkpoint: a disabled
+        // controller is a total no-op, so the from-scratch branch's
+        // controller held identical (empty) state at this instant.
+        w.controller.enabled = cfg.mitigate;
+        w.cfg = cfg;
+        w
+    }
+
+    /// Fork a branch and run it to completion.
+    pub fn resume_from(&self, cfg: ScenarioCfg) -> RunResult {
+        self.fork(cfg).run()
+    }
+}
+
+/// Field-wise deep copy of a paused world. Lives here (not as a `Clone`
+/// impl) so a scenario can't be cloned casually: the backends copy goes
+/// through [`crate::engine::exec::ComputeBackend::clone_box`], which only
+/// surrogate backends support.
+fn clone_world(s: &Scenario) -> Scenario {
+    Scenario {
+        cfg: s.cfg.clone(),
+        cluster: s.cluster.clone(),
+        engine: s.engine.clone(),
+        dpu: s.dpu.clone(),
+        sw_suite: s.sw_suite.clone(),
+        sw_window: s.sw_window.clone(),
+        controller: s.controller.clone(),
+        fleet: s.fleet.clone(),
+        bus: s.bus.clone(),
+        cal: s.cal.clone(),
+        cal_shard: s.cal_shard.clone(),
+        gen: s.gen.clone(),
+        backends: s.backends.iter().map(|b| b.clone_box()).collect(),
+        pending: s.pending.clone(),
+        slot_of: s.slot_of.clone(),
+        free_slots: s.free_slots.clone(),
+        outbox: s.outbox.clone(),
+        windows_seen: s.windows_seen,
+        injected_at: s.injected_at,
+        injection_desc: s.injection_desc.clone(),
+        generated: s.generated,
+        arrived: s.arrived,
+        iterations: s.iterations,
+        attributions: s.attributions.clone(),
+        kv_peak: s.kv_peak.clone(),
+        handoff_wait: s.handoff_wait.clone(),
+        handoff_colls: s.handoff_colls.clone(),
+        handoff_stats: s.handoff_stats.clone(),
+        tele_faults: s.tele_faults.clone(),
+        watchdog: s.watchdog.clone(),
+        ladder_log: s.ladder_log.clone(),
+        real_compute: s.real_compute,
+        started: s.started,
+        finished: s.finished,
+    }
+}
+
+/// Run one fingerprint group: simulate the shared prefix once, then fork a
+/// branch per member. Singleton groups (and `--no-reuse` sweeps, which make
+/// every cell a singleton) skip the checkpoint — it would have no second
+/// consumer.
+fn run_group(members: Vec<(usize, ScenarioCfg)>) -> (Vec<(usize, RunResult)>, ReuseStats) {
+    let stop = fork_point(members.iter().map(|(_, c)| c));
+    let mut stats = ReuseStats {
+        cells_total: members.len() as u64,
+        prefix_ns_total: stop.ns() * members.len() as u64,
+        ..Default::default()
+    };
+    if members.len() == 1 {
+        stats.prefixes_simulated = 1;
+        stats.prefix_ns_simulated = stop.ns();
+        let (i, cfg) = members.into_iter().next().expect("singleton group");
+        return (vec![(i, Scenario::new(cfg).run())], stats);
+    }
+    let snap = WorldSnapshot::capture(neutralized(&members[0].1), stop);
+    stats.prefixes_simulated = 1;
+    stats.prefix_ns_simulated = stop.ns();
+    let mut out = Vec::with_capacity(members.len());
+    for (i, cfg) in members {
+        if cfg.mitigate && !snap.neutral {
+            // Pre-fork false alarm: a from-scratch mitigated run would have
+            // reacted before the fork point. Fall back to scratch.
+            stats.prefixes_simulated += 1;
+            stats.prefix_ns_simulated += stop.ns();
+            out.push((i, Scenario::new(cfg).run()));
+        } else {
+            stats.forked_branches += 1;
+            out.push((i, snap.resume_from(cfg)));
+        }
+    }
+    (out, stats)
+}
+
+/// Execute every cell, reusing shared prefixes: cells group by
+/// [`fingerprint`], each group's prefix simulates once, and members fork
+/// from the checkpoint. Results come back in input order and are
+/// byte-identical to per-cell `Scenario::new(cfg).run()` for any thread
+/// count (groups parallelize; a snapshot never crosses a thread boundary).
+/// `no_reuse` forces every cell into its own from-scratch group — the
+/// `--no-reuse` equivalence-debugging escape hatch.
+pub fn run_all(
+    cfgs: Vec<ScenarioCfg>,
+    threads: usize,
+    no_reuse: bool,
+) -> (Vec<RunResult>, ReuseStats) {
+    let n = cfgs.len();
+    let mut groups: Vec<Vec<(usize, ScenarioCfg)>> = Vec::new();
+    let mut index: HashMap<String, usize> = HashMap::new();
+    for (i, cfg) in cfgs.into_iter().enumerate() {
+        if no_reuse {
+            groups.push(vec![(i, cfg)]);
+            continue;
+        }
+        let fp = fingerprint(&cfg);
+        match index.get(&fp) {
+            Some(&g) => groups[g].push((i, cfg)),
+            None => {
+                index.insert(fp, groups.len());
+                groups.push(vec![(i, cfg)]);
+            }
+        }
+    }
+    let outcomes = crate::util::par::parallel_map_owned(groups, threads, run_group);
+    let mut stats = ReuseStats::default();
+    let mut slots: Vec<Option<RunResult>> = (0..n).map(|_| None).collect();
+    for (group_results, group_stats) in outcomes {
+        stats.absorb(group_stats);
+        for (i, res) in group_results {
+            slots[i] = Some(res);
+        }
+    }
+    let results = slots
+        .into_iter()
+        .map(|r| r.expect("every cell produces exactly one result"))
+        .collect();
+    (results, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpu::detectors::Condition;
+    use crate::sim::{SimDur, MS};
+
+    fn quick_cfg() -> ScenarioCfg {
+        let mut cfg = ScenarioCfg::default();
+        cfg.duration = SimDur::from_ms(900);
+        cfg.window = SimDur::from_ms(10);
+        cfg.warmup_windows = 10;
+        cfg.calib_windows = 40;
+        cfg.workload.arrival = crate::sim::dist::Arrival::Poisson { rate: 300.0 };
+        cfg.workload.prompt_len = crate::sim::dist::LengthDist::Uniform { lo: 8, hi: 32 };
+        cfg.workload.output_len = crate::sim::dist::LengthDist::Uniform { lo: 2, hi: 8 };
+        cfg
+    }
+
+    fn injected_cfg() -> ScenarioCfg {
+        let mut cfg = quick_cfg();
+        cfg.inject = Some((Condition::Ew6Retransmissions, SimTime(600 * MS)));
+        cfg
+    }
+
+    #[test]
+    fn fingerprint_ignores_injection_identity_only() {
+        let base = quick_cfg();
+        assert_eq!(fingerprint(&base), fingerprint(&injected_cfg()));
+        let mut mitigated = injected_cfg();
+        mitigated.mitigate = true;
+        assert_eq!(fingerprint(&base), fingerprint(&mitigated));
+        let mut other_seed = quick_cfg();
+        other_seed.seed += 1;
+        assert_ne!(fingerprint(&base), fingerprint(&other_seed));
+        let mut other_cal = quick_cfg();
+        other_cal.calendar = crate::sim::CalendarKind::Heap;
+        assert_ne!(fingerprint(&base), fingerprint(&other_cal));
+    }
+
+    #[test]
+    fn forked_branch_matches_scratch_run() {
+        let cfg = injected_cfg();
+        let scratch = Scenario::new(cfg.clone()).run();
+        let snap = WorldSnapshot::capture(neutralized(&cfg), fork_point(&[cfg.clone()]));
+        let forked = snap.resume_from(cfg);
+        assert_eq!(format!("{scratch:?}"), format!("{forked:?}"));
+    }
+
+    #[test]
+    fn sibling_branches_do_not_leak_into_each_other() {
+        let healthy = quick_cfg();
+        let injected = injected_cfg();
+        let snap = WorldSnapshot::capture(neutralized(&healthy), fork_point(&[injected.clone()]));
+        // Run the injected branch first; the healthy branch forked after it
+        // must still match a from-scratch healthy run exactly.
+        let _ = snap.resume_from(injected);
+        let forked_healthy = snap.resume_from(healthy.clone());
+        let scratch_healthy = Scenario::new(healthy).run();
+        assert_eq!(format!("{scratch_healthy:?}"), format!("{forked_healthy:?}"));
+    }
+
+    #[test]
+    fn run_all_groups_and_reports_reuse() {
+        let cells = vec![quick_cfg(), injected_cfg(), quick_cfg(), injected_cfg()];
+        let (results, stats) = run_all(cells.clone(), 2, false);
+        assert_eq!(results.len(), 4);
+        assert_eq!(stats.cells_total, 4);
+        assert_eq!(stats.prefixes_simulated, 1);
+        assert_eq!(stats.forked_branches, 4);
+        assert!(stats.reuse_ratio() >= 2.0, "ratio {}", stats.reuse_ratio());
+        let (scratch, no_stats) = run_all(cells, 1, true);
+        assert_eq!(no_stats.forked_branches, 0);
+        assert_eq!(no_stats.sim_ns_saved(), 0);
+        for (a, b) in results.iter().zip(scratch.iter()) {
+            assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        }
+    }
+}

@@ -105,7 +105,7 @@ impl HandoffStats {
 }
 
 /// An iteration in flight on one replica.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub(crate) struct PendingIter {
     pub(crate) kind: IterKind,
     #[allow(dead_code)]
@@ -240,6 +240,8 @@ impl Scenario {
             },
             engine,
             real_compute: real,
+            started: false,
+            finished: false,
             cfg,
         }
     }

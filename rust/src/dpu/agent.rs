@@ -19,7 +19,7 @@ const HISTORY_DEPTH: usize = 8;
 const CONFIRM_SPAN: u64 = 3;
 
 /// One node's DPU agent.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Agent {
     pub node: NodeId,
     accum: WindowAccum,
@@ -102,6 +102,24 @@ pub struct DpuPlane {
     /// result — scenario sweeps keep the default 1 (the cells themselves
     /// parallelize); fleet-stress worlds raise it.
     pub observe_threads: usize,
+}
+
+/// Snapshot/fork support: detectors are stateless registry entries (all
+/// per-node state lives in the agents), so a clone rebuilds the registry
+/// via [`all_detectors`] instead of copying trait objects.
+impl Clone for DpuPlane {
+    fn clone(&self) -> Self {
+        DpuPlane {
+            agents: self.agents.clone(),
+            detectors: all_detectors(),
+            cfg: self.cfg.clone(),
+            calibrating: self.calibrating,
+            warmup_windows: self.warmup_windows,
+            detections: self.detections.clone(),
+            windows_processed: self.windows_processed,
+            observe_threads: self.observe_threads,
+        }
+    }
 }
 
 impl std::fmt::Debug for DpuPlane {

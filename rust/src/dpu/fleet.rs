@@ -174,7 +174,7 @@ struct TdRule {
 }
 
 /// Cross-replica skew sensor (one per scenario, fed at window ticks).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct FleetSensor {
     n_replicas: usize,
     /// Entry node per replica — the node a fleet detection is attributed to.

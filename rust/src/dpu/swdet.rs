@@ -50,7 +50,7 @@ pub fn identifies(alarm: SwAlarm) -> &'static [Condition] {
 }
 
 /// Software-only detector suite with its own baseline.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct SwSuite {
     base: [Welford; 6],
     calibrating: bool,

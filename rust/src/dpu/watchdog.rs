@@ -49,7 +49,7 @@ const COMPLETENESS_HORIZON: usize = 8;
 
 /// Maps per-replica freshness to a router ladder level with degrade-fast /
 /// recover-slow hysteresis. One instance watches one router's feed.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct FreshnessWatchdog {
     level: u8,
     /// Ring of fleet-wide cumulative (emitted, delivered) totals, newest

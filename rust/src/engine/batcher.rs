@@ -73,7 +73,7 @@ struct Waiting {
 }
 
 /// Per-replica batcher state.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Batcher {
     policy: BatchPolicy,
     waiting: VecDeque<Waiting>,

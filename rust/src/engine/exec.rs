@@ -27,11 +27,18 @@ pub trait ComputeBackend {
     fn is_real(&self) -> bool {
         false
     }
+    /// Deep-copy this backend for snapshot/fork execution. Only surrogate
+    /// backends support forking; real (PJRT) backends hold device state
+    /// that cannot be checkpointed, so they keep the panicking default and
+    /// the snapshot layer must fall back to from-scratch runs.
+    fn clone_box(&self) -> Box<dyn ComputeBackend> {
+        panic!("this ComputeBackend does not support snapshot/fork cloning")
+    }
 }
 
 /// Deterministic hash-based token sampler (sim-only runs). EOS is decided by
 /// the engine's budget bookkeeping, not the backend.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct SurrogateBackend {
     pub vocab: i32,
 }
@@ -67,6 +74,10 @@ impl ComputeBackend for SurrogateBackend {
             .map(|(&t, &p)| self.hash_next(t as i64 * 131 + p as i64))
             .collect()
     }
+
+    fn clone_box(&self) -> Box<dyn ComputeBackend> {
+        Box::new(self.clone())
+    }
 }
 
 /// One iteration's description.
@@ -90,7 +101,7 @@ pub struct IterTiming {
 }
 
 /// Monotonic collective-id allocator (one per replica executor).
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct CollSeq(u64);
 
 impl CollSeq {

@@ -20,7 +20,7 @@ struct SeqAlloc {
 }
 
 /// Paged allocator for one replica's KV memory.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct KvCache {
     total_pages: u32,
     /// The pool size the cache was built with; `total_pages` can fall below

@@ -161,7 +161,7 @@ fn pool_of_flow(flow: crate::ids::FlowId, n_pools: usize) -> usize {
 }
 
 /// Per-replica serving state.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Replica {
     pub plan: ParallelPlan,
     pub batcher: Batcher,
@@ -179,7 +179,7 @@ pub struct Replica {
 /// replicas + request registry. On a colocated fleet both pools are the full
 /// replica set and only the admission router ever routes, reproducing the
 /// classic single-stage plane exactly.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Engine {
     pub cfg: EngineConfig,
     /// Admission router: new requests land on a prefill-capable replica.

@@ -78,7 +78,7 @@ const QUEUE_WEIGHT: f64 = 1.0;
 const KV_WEIGHT: f64 = 64.0;
 const OUTSTANDING_WEIGHT: f64 = 0.5;
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Router {
     n_replicas: usize,
     /// The routable subset (pool membership): every pick lands on a member.

@@ -6,13 +6,16 @@
 //!   sweep     [--mitigate] [--threads N]   all 28 condition experiments,
 //!                                          fanned out over worker threads
 //!   matrix    [--replicates N] [--threads N] [--json] [--json-out PATH]
+//!             [--no-reuse]
 //!             run the full injection × detection scorecard matrix
 //!             (28 conditions × seed replicates + healthy and §4.3
 //!             NVLink-blindness controls, in parallel) and emit the
 //!             per-condition detection-quality scorecard as a table
-//!             and/or deterministic JSON for trajectory tracking
+//!             and/or deterministic JSON for trajectory tracking; cells
+//!             sharing a pre-injection prefix fork from one checkpoint
+//!             (`--no-reuse` forces every cell from scratch)
 //!   fleet     [--replicas N] [--threads N] [--json] [--json-out PATH]
-//!             [--duration-ms N] [--seed S] [--disagg]
+//!             [--duration-ms N] [--seed S] [--disagg] [--no-reuse]
 //!             [--prefill-pools K] [--decode-pools M] [--telemetry-faults]
 //!             replicas × routing-policy sweep plus the DP1-DP3
 //!             data-parallel condition experiments (inject → detect →
@@ -27,6 +30,7 @@
 //!             (TD1-TD3 triples on the telemetry-weighted baseline with the
 //!             router fallback-ladder trace) and bumps it to v4
 //!   campaign  <MANIFEST> [--threads N] [--json] [--json-out PATH]
+//!             [--no-reuse]
 //!             expand a TOML-subset manifest into workload × topology ×
 //!             condition permutations (tenant SLO classes, diurnal/flash
 //!             arrival shapes, heavy-tailed length mixes) and run every
@@ -36,11 +40,12 @@
 //!   perf      [--quick] [--replicates N] [--threads N] [--json-out PATH]
 //!             [--fleet-stress]
 //!             pipeline benchmark: batched ingest throughput, snapshot
-//!             latency, and matrix/fleet end-to-end wall-clock, written
-//!             as BENCH_pipeline.json (schema dpulens.perf.v1);
+//!             latency, matrix/fleet end-to-end wall-clock, and the
+//!             snapshot-and-branch prefix-reuse counters, written as
+//!             BENCH_pipeline.json (schema dpulens.perf.v3);
 //!             --fleet-stress appends the 100→1000-replica multi-pool
 //!             scaling curve (events/sec, wall-clock per sim-second,
-//!             allocation counters) and bumps the schema to v2
+//!             allocation counters)
 //!   conditions [--md] [--json] [--json-out PATH]
 //!             render the condition catalog (rust/src/conditions/) as a
 //!             table, markdown (the EXPERIMENTS.md source of truth), or
@@ -84,6 +89,20 @@ fn base_cfg(args: &[String]) -> ScenarioCfg {
     }
     cfg.mitigate = flag(args, "--mitigate");
     cfg
+}
+
+/// The snapshot-and-branch accounting line the matrix/fleet/campaign
+/// runners print under their wallclock summary.
+fn reuse_line(r: &dpulens::coordinator::ReuseStats) -> String {
+    format!(
+        "prefix reuse: {} cells from {} simulated prefixes ({} forked branches, \
+         {:.0} sim-ms saved, {:.1}x)",
+        r.cells_total,
+        r.prefixes_simulated,
+        r.forked_branches,
+        r.sim_ns_saved() as f64 / 1e6,
+        r.reuse_ratio()
+    )
 }
 
 #[cfg(feature = "pjrt")]
@@ -192,6 +211,7 @@ fn cmd_matrix(args: &[String]) {
     if flag(args, "--no-negative-control") {
         mc.negative_control = false;
     }
+    mc.no_reuse = flag(args, "--no-reuse");
     let report = run_matrix(&mc);
     if flag(args, "--json") {
         println!("{}", report.to_json().render());
@@ -206,6 +226,7 @@ fn cmd_matrix(args: &[String]) {
             report.events_total,
             report.events_per_sec()
         );
+        println!("{}", reuse_line(&report.reuse));
     }
     if let Some(path) = opt_val(args, "--json-out") {
         let mut body = report.to_json().render();
@@ -230,6 +251,7 @@ fn cmd_fleet(args: &[String]) {
     }
     fc.disagg = flag(args, "--disagg");
     fc.telemetry_faults = flag(args, "--telemetry-faults");
+    fc.no_reuse = flag(args, "--no-reuse");
     // Any pool-count flag opts into the multi-pool study (schema v3); the
     // topology takes its replica count from --replicas.
     let prefill_pools = opt_parse::<usize>(args, "--prefill-pools");
@@ -260,6 +282,7 @@ fn cmd_fleet(args: &[String]) {
             report.events_total,
             report.events_per_sec()
         );
+        println!("{}", reuse_line(&report.reuse));
     }
     if let Some(path) = opt_val(args, "--json-out") {
         let mut body = report.to_json().render();
@@ -292,6 +315,7 @@ fn cmd_campaign(args: &[String]) {
     if let Some(t) = opt_parse::<usize>(args, "--threads") {
         cc.threads = t;
     }
+    cc.no_reuse = flag(args, "--no-reuse");
     let report = run_campaign(&cc);
     if flag(args, "--json") {
         println!("{}", report.to_json().render());
@@ -304,6 +328,7 @@ fn cmd_campaign(args: &[String]) {
             report.cells.len(),
             report.threads_used
         );
+        println!("{}", reuse_line(&report.reuse));
     }
     if let Some(out) = opt_val(args, "--json-out") {
         let mut body = report.to_json().render();
@@ -478,6 +503,7 @@ mod tests {
                 "--json",
                 "--json-out",
                 "--no-negative-control",
+                "--no-reuse",
                 "--duration-ms",
                 "--rate",
                 "--seed",
@@ -498,9 +524,10 @@ mod tests {
                 "--prefill-pools",
                 "--decode-pools",
                 "--telemetry-faults",
+                "--no-reuse",
             ],
         ),
-        ("campaign", &["--threads", "--json", "--json-out"]),
+        ("campaign", &["--threads", "--json", "--json-out", "--no-reuse"]),
         (
             "perf",
             &[

@@ -23,7 +23,7 @@ pub struct AppliedAction {
 }
 
 /// The controller: consumes detections, applies directives, keeps a log.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct Controller {
     pub log: Vec<AppliedAction>,
     /// Directives applied at most once per (directive, node) pair.

@@ -90,7 +90,7 @@ const RING_SPAN_NS: u64 = N_BUCKETS as u64 * BUCKET_NS;
 /// shard minimum. New events landing before `base` — always legal, the
 /// engine clamps to `now` and `now` can trail `base` arbitrarily — are
 /// merge-inserted into `cur`, preserving the invariant.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 struct BucketShard<E> {
     /// Promoted working set, sorted DESCENDING by `(t, seq)`; popped from
     /// the back. The promoted bucket's `Vec` is swapped in, so steady-state
@@ -225,14 +225,14 @@ impl<E> BucketShard<E> {
     }
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 enum Backend<E> {
     Heap(BinaryHeap<Scheduled<E>>),
     Bucket(Vec<BucketShard<E>>),
 }
 
 /// The event calendar + clock.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Engine<E> {
     now: SimTime,
     seq: u64,

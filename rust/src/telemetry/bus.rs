@@ -67,6 +67,29 @@ pub struct TelemetryBus {
     recorder: Option<Ring<TelemetryEvent>>,
 }
 
+/// Snapshot/fork support. Pending events are copied field-wise rather than
+/// via `TelemetryEvent::clone`, which would trip the zero-copy pipeline's
+/// clone probe: a snapshot is a world copy, not a pipeline copy. The
+/// recorder ring stays a plain clone — it is the sanctioned clone site.
+impl Clone for TelemetryBus {
+    fn clone(&self) -> Self {
+        TelemetryBus {
+            pending: self
+                .pending
+                .iter()
+                .map(|buf| {
+                    buf.iter()
+                        .map(|e| TelemetryEvent { t: e.t, node: e.node, kind: e.kind.clone() })
+                        .collect()
+                })
+                .collect(),
+            class_counts: self.class_counts,
+            total: self.total,
+            recorder: self.recorder.clone(),
+        }
+    }
+}
+
 impl TelemetryBus {
     pub fn new(n_nodes: usize) -> Self {
         let cap = node_buf_capacity(n_nodes);

@@ -119,6 +119,34 @@ pub struct TelemetryFaults {
     engaged: bool,
 }
 
+/// Snapshot/fork support. Held events are copied field-wise rather than via
+/// `TelemetryEvent::clone` (which counts against the zero-copy pipeline's
+/// clone probe); `scratch` is a delivery-tick scratch buffer that is always
+/// empty between ticks, so the copy starts it fresh.
+impl Clone for TelemetryFaults {
+    fn clone(&self) -> Self {
+        TelemetryFaults {
+            rng: self.rng.clone(),
+            window: self.window,
+            hold: self
+                .hold
+                .iter()
+                .map(|q| {
+                    q.iter()
+                        .map(|(enq, rel, e)| {
+                            (*enq, *rel, TelemetryEvent { t: e.t, node: e.node, kind: e.kind.clone() })
+                        })
+                        .collect()
+                })
+                .collect(),
+            stats: self.stats.clone(),
+            gauges: self.gauges.clone(),
+            scratch: Vec::new(),
+            engaged: self.engaged,
+        }
+    }
+}
+
 impl TelemetryFaults {
     pub fn new(seed: u64, n_nodes: usize) -> Self {
         TelemetryFaults {

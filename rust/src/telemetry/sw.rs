@@ -94,7 +94,7 @@ impl SwSignal {
 }
 
 /// Windowed accumulation of software signals for one engine instance.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct SwWindow {
     stats: [Welford; ALL_SW_SIGNALS.len()],
     samples: u64,

@@ -233,7 +233,7 @@ impl WindowSnapshot {
 }
 
 /// Streaming accumulator; one per (node, vantage).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct WindowAccum {
     node: NodeId,
     n_gpus_hint: usize,

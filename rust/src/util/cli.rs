@@ -81,6 +81,7 @@ pub const CLI: &[CmdSpec] = &[
             f("--json"),
             fv("--json-out", "PATH"),
             f("--no-negative-control"),
+            f("--no-reuse"),
             fv("--duration-ms", "N"),
             fv("--rate", "R"),
             fv("--seed", "S"),
@@ -102,12 +103,13 @@ pub const CLI: &[CmdSpec] = &[
             fv("--prefill-pools", "K"),
             fv("--decode-pools", "M"),
             f("--telemetry-faults"),
+            f("--no-reuse"),
         ],
     },
     CmdSpec {
         name: "campaign <MANIFEST>",
         summary: "run a manifest's workload x topology x condition permutations",
-        flags: &[fv("--threads", "N"), f("--json"), fv("--json-out", "PATH")],
+        flags: &[fv("--threads", "N"), f("--json"), fv("--json-out", "PATH"), f("--no-reuse")],
     },
     CmdSpec {
         name: "perf",

@@ -51,6 +51,42 @@ where
     v.into_iter().map(|(_, r)| r).collect()
 }
 
+/// [`parallel_map`] over owned items: each item is *moved* into exactly one
+/// worker's `f` call (the snapshot runner hands whole cell groups, configs
+/// included, to workers without cloning). Results return in input order;
+/// `threads == 0` means auto and a single worker is a plain serial map.
+pub fn parallel_map_owned<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = resolve_threads(threads, items.len());
+    if n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let len = items.len();
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(len));
+    std::thread::scope(|s| {
+        for _ in 0..n {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= len {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().take().expect("item claimed once");
+                let r = f(item);
+                out.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut v = out.into_inner().unwrap();
+    v.sort_by_key(|&(i, _)| i);
+    v.into_iter().map(|(_, r)| r).collect()
+}
+
 /// Apply `f` to every item of a mutable slice on scoped workers, returning
 /// the per-item results in input order. The slice is split into contiguous
 /// chunks (one per worker) so each item is mutated by exactly one thread;
@@ -163,6 +199,17 @@ mod tests {
         let empty: Vec<u32> = Vec::new();
         assert!(parallel_map(&empty, 4, |&x| x).is_empty());
         assert_eq!(parallel_map(&[7u32], 4, |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn map_owned_moves_items_and_orders_results() {
+        for threads in [1, 2, 8, 0] {
+            // Box<u64> is not Copy: every item must be moved exactly once.
+            let items: Vec<Box<u64>> = (0..103u64).map(Box::new).collect();
+            let out = parallel_map_owned(items, threads, |b| *b * 2);
+            assert_eq!(out, (0..103u64).map(|x| x * 2).collect::<Vec<_>>(), "threads={threads}");
+        }
+        assert!(parallel_map_owned(Vec::<u32>::new(), 4, |x| x).is_empty());
     }
 
     #[test]

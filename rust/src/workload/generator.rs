@@ -50,7 +50,7 @@ impl Default for WorkloadSpec {
 }
 
 /// Stateful generator producing timestamped requests with real token ids.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct WorkloadGen {
     spec: WorkloadSpec,
     sampler: ArrivalSampler,

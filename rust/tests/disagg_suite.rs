@@ -118,6 +118,7 @@ fn fleet_json_stays_v1_without_disagg_and_v2_is_thread_stable() {
         disagg,
         multipool: None,
         telemetry_faults: false,
+        no_reuse: false,
     };
     let v1 = run_fleet(&mk(2, false)).to_json().render();
     assert!(v1.contains("\"schema\":\"dpulens.fleet.v1\""));

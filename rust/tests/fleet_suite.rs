@@ -109,6 +109,7 @@ fn fleet_json_is_deterministic_across_threads() {
         disagg: false,
         multipool: None,
         telemetry_faults: false,
+        no_reuse: false,
     };
 
     let a = run_fleet(&mk(2)).to_json().render();

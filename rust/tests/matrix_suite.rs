@@ -71,6 +71,7 @@ fn matrix_scorecard_json_is_deterministic() {
         replicates: 1,
         threads,
         negative_control: true,
+        no_reuse: false,
     };
 
     let a = run_matrix(&mk(2)).to_json().render();

@@ -31,7 +31,7 @@ fn matrix_json_is_byte_identical_across_calendar_backends() {
     let mk = |calendar: CalendarKind| {
         let mut base = base.clone();
         base.calendar = calendar;
-        MatrixConfig { base, replicates: 1, threads: 0, negative_control: true }
+        MatrixConfig { base, replicates: 1, threads: 0, negative_control: true, no_reuse: false }
     };
     let heap = run_matrix(&mk(CalendarKind::Heap)).to_json().render();
     let bucket = run_matrix(&mk(CalendarKind::Bucket)).to_json().render();
@@ -128,7 +128,7 @@ fn quick_fleet_stress_completes_the_100_replica_point() {
     assert!(p.completed > 0, "100-replica world served nothing");
     assert!(p.events > 0, "100-replica world published no telemetry");
     let json = rep.to_json().render();
-    assert!(json.contains("\"schema\":\"dpulens.perf.v2\""));
+    assert!(json.contains("\"schema\":\"dpulens.perf.v3\""));
     assert!(json.contains("\"replicas\":100"));
     assert!(!json.contains("NaN") && !json.contains("inf"));
 }

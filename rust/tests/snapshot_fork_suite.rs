@@ -1,0 +1,175 @@
+//! Snapshot-and-branch equivalence suite — the headline invariant behind
+//! `coordinator::snapshot`: forking experiment cells from a shared
+//! pre-injection checkpoint is pure performance work, so every report
+//! schema must stay **byte-identical** to from-scratch execution
+//! (`--no-reuse`), for any worker-thread count and either calendar backend.
+//!
+//! * the matrix scorecard renders the same JSON forked and from scratch,
+//!   across threads 1/2/8 and under `CalendarKind::Heap`;
+//! * a fleet sweep with every study enabled (disagg + multi-pool +
+//!   telemetry-faults, schema v4) and a plain v1 sweep both survive the
+//!   forked-vs-scratch comparison;
+//! * the campaign runner's manifest cells do too;
+//! * branches forked from one checkpoint share no state (running one
+//!   branch cannot perturb a sibling forked afterwards);
+//! * the default-shaped matrix actually reuses: its cells collapse into
+//!   few enough prefix groups that at least half the prefix simulation
+//!   time is eliminated (`reuse_ratio >= 2`).
+
+use dpulens::coordinator::campaign::{run_campaign, CampaignConfig};
+use dpulens::coordinator::experiment::{inject_time, standard_cfg};
+use dpulens::coordinator::fleet::{fleet_base_cfg, run_fleet, FleetConfig, MultiPoolSpec};
+use dpulens::coordinator::matrix::{run_matrix, MatrixConfig};
+use dpulens::coordinator::{Scenario, WorldSnapshot};
+use dpulens::dpu::detectors::Condition;
+use dpulens::engine::RoutePolicy;
+use dpulens::sim::{CalendarKind, SimDur};
+
+/// Trimmed matrix base (matrix_suite's determinism shape): detection
+/// success is irrelevant here, only forked-vs-scratch byte equality.
+fn trimmed_matrix(threads: usize, no_reuse: bool, calendar: CalendarKind) -> MatrixConfig {
+    let mut base = standard_cfg();
+    base.duration = SimDur::from_ms(1300);
+    base.warmup_windows = 10;
+    base.calib_windows = 50;
+    base.calendar = calendar;
+    MatrixConfig { base, replicates: 1, threads, negative_control: true, no_reuse }
+}
+
+#[test]
+fn matrix_forked_json_matches_scratch_across_threads() {
+    let scratch = run_matrix(&trimmed_matrix(2, true, CalendarKind::Bucket));
+    let forked1 = run_matrix(&trimmed_matrix(1, false, CalendarKind::Bucket));
+    let forked8 = run_matrix(&trimmed_matrix(8, false, CalendarKind::Bucket));
+
+    let s = scratch.to_json().render();
+    assert_eq!(s, forked1.to_json().render(), "forked (1 thread) JSON diverged");
+    assert_eq!(s, forked8.to_json().render(), "forked (8 threads) JSON diverged");
+    assert!(s.contains("\"schema\":\"dpulens.matrix.v1\""));
+
+    // Scratch mode really ran every cell from scratch...
+    assert_eq!(scratch.reuse.forked_branches, 0);
+    assert_eq!(scratch.reuse.sim_ns_saved(), 0);
+    assert_eq!(scratch.reuse.cells_total, scratch.reuse.prefixes_simulated);
+    // ...while the forked sweeps shared prefixes, identically at any
+    // thread count (the counters are order-independent sums).
+    assert!(forked1.reuse.forked_branches > 0, "no cell forked: {:?}", forked1.reuse);
+    assert!(forked1.reuse.prefixes_simulated < forked1.reuse.cells_total);
+    assert_eq!(forked1.reuse, forked8.reuse, "reuse counters vary with threads");
+
+    // The acceptance floor: the standard-shaped cells collapse into few
+    // enough groups that reuse halves the total prefix simulation time.
+    let ratio = forked1.reuse.reuse_ratio();
+    assert!(ratio >= 2.0, "reuse ratio {ratio:.2} below 2x: {:?}", forked1.reuse);
+}
+
+#[test]
+fn matrix_forked_json_matches_scratch_on_the_heap_calendar() {
+    let scratch = run_matrix(&trimmed_matrix(2, true, CalendarKind::Heap));
+    let forked = run_matrix(&trimmed_matrix(2, false, CalendarKind::Heap));
+    assert_eq!(
+        scratch.to_json().render(),
+        forked.to_json().render(),
+        "forked JSON diverged on the heap calendar"
+    );
+    assert!(forked.reuse.forked_branches > 0);
+}
+
+/// Trimmed 2-replica fleet config (telemetry_faults_suite's shape).
+fn trimmed_fleet(no_reuse: bool, all_studies: bool) -> FleetConfig {
+    let mut base = fleet_base_cfg(2);
+    base.duration = SimDur::from_ms(1200);
+    base.warmup_windows = 10;
+    base.calib_windows = 40;
+    FleetConfig {
+        base,
+        replicas: 2,
+        policies: vec![RoutePolicy::FlowHash, RoutePolicy::PowerOfTwo],
+        threads: 2,
+        disagg: all_studies,
+        multipool: if all_studies {
+            Some(MultiPoolSpec { replicas: 6, prefill_pools: 2, decode_pools: 1 })
+        } else {
+            None
+        },
+        telemetry_faults: all_studies,
+        no_reuse,
+    }
+}
+
+#[test]
+fn fleet_v1_forked_json_matches_scratch() {
+    let scratch = run_fleet(&trimmed_fleet(true, false));
+    let forked = run_fleet(&trimmed_fleet(false, false));
+    let s = scratch.to_json().render();
+    assert_eq!(s, forked.to_json().render(), "fleet v1 forked JSON diverged");
+    assert!(s.contains("\"schema\":\"dpulens.fleet.v1\""));
+    assert_eq!(scratch.reuse.forked_branches, 0);
+    // The DP condition triples (healthy/injected/mitigated per condition)
+    // share their shaped config, so the plain sweep already forks.
+    assert!(forked.reuse.forked_branches > 0, "no fleet cell forked: {:?}", forked.reuse);
+}
+
+#[test]
+fn fleet_v4_all_studies_forked_json_matches_scratch() {
+    // Every cell family at once — policy sweep, DP triples, disagg study,
+    // multi-pool study, TD telemetry-fault block — through the positional
+    // outcome decode. A grouping bug that reordered or dropped one cell
+    // would corrupt a section here, not just flip a number.
+    let scratch = run_fleet(&trimmed_fleet(true, true));
+    let forked = run_fleet(&trimmed_fleet(false, true));
+    let s = scratch.to_json().render();
+    assert_eq!(s, forked.to_json().render(), "fleet v4 forked JSON diverged");
+    assert!(s.contains("\"schema\":\"dpulens.fleet.v4\""));
+    assert!(s.contains("\"disagg\""));
+    assert!(s.contains("\"multipool\""));
+    assert!(s.contains("\"td_conditions\""));
+    assert!(forked.reuse.forked_branches > 0);
+    assert!(forked.reuse.sim_ns_saved() > 0);
+}
+
+#[test]
+fn campaign_forked_json_matches_scratch() {
+    let text = include_str!("../../examples/campaign_smoke.toml");
+    let base = CampaignConfig::parse(text).unwrap();
+    let mk = |no_reuse: bool| {
+        let mut cc = base.clone();
+        cc.threads = 2;
+        cc.no_reuse = no_reuse;
+        cc
+    };
+    let scratch = run_campaign(&mk(true));
+    let forked = run_campaign(&mk(false));
+    let s = scratch.to_json().render();
+    assert_eq!(s, forked.to_json().render(), "campaign forked JSON diverged");
+    assert!(s.starts_with("{\"schema\":\"dpulens.campaign.v1\""));
+    // 2 workloads x (healthy + NS2): each workload's pair shares a prefix.
+    assert_eq!(forked.reuse.cells_total, 4);
+    assert_eq!(forked.reuse.prefixes_simulated, 2);
+    assert_eq!(forked.reuse.forked_branches, 4);
+}
+
+#[test]
+fn sibling_branches_forked_from_one_checkpoint_stay_isolated() {
+    // Integration-level isolation proof on the public API: capture one
+    // checkpoint, burn an injected branch first, then fork the healthy
+    // branch — it must still match a from-scratch healthy run exactly.
+    let mut healthy = standard_cfg();
+    healthy.duration = SimDur::from_ms(1300);
+    healthy.warmup_windows = 10;
+    healthy.calib_windows = 50;
+    let at = inject_time(&healthy);
+    let mut injected = healthy.clone();
+    injected.inject = Some((Condition::Ew6Retransmissions, at));
+
+    let snap = WorldSnapshot::capture(healthy.clone(), at);
+    let injected_res = snap.resume_from(injected);
+    assert!(injected_res.injected_at.is_some(), "injection never landed");
+    let forked_healthy = snap.resume_from(healthy.clone());
+    let scratch_healthy = Scenario::new(healthy).run();
+    assert_eq!(
+        format!("{scratch_healthy:?}"),
+        format!("{forked_healthy:?}"),
+        "running the injected sibling first perturbed the healthy branch"
+    );
+}

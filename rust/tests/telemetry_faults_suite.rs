@@ -220,6 +220,7 @@ fn fleet_json_bumps_to_v4_only_with_telemetry_faults() {
         disagg: false,
         multipool: None,
         telemetry_faults,
+        no_reuse: false,
     };
 
     let off = run_fleet(&mk(2, false)).to_json().render();
