@@ -23,7 +23,14 @@ on only one side — e.g. a `--quick` fresh run against a full baseline — is
 skipped, never a failure). `dpulens.perf.v3` documents further carry a
 `reuse` section (snapshot-and-branch prefix-reuse counters); its rows sit
 in the base METRICS list, so documents missing the section simply show
-"(no comparable sample)". v1 documents compare exactly as before.
+"(no comparable sample)". `dpulens.perf.v4` documents add an `iteration`
+array (the decode-iteration microbench); its points are compared pair-wise
+by batch size — decode iterations/sec higher-is-better, heap bytes per
+iteration lower-is-better. A pre-v4 baseline has no iteration points, so
+those rows are simply absent until the baseline is refreshed. Note a 0.0
+bytes/iter baseline (the expected steady state) cannot anchor a ratio; the
+exact zero-allocation property is gated by `tests/iter_hot_path.rs`, not
+here. v1 documents compare exactly as before.
 
 Usage: ci/perf_trajectory.py BASELINE.json FRESH.json [--gate]
        [--tolerance-pct P]
@@ -56,6 +63,12 @@ STRESS_METRICS = [
     ("wall_ms_per_sim_s", "wall ms/sim s", False),
 ]
 
+# Per-batch-size metrics (v4 `iteration` points), matched by batch size.
+ITER_METRICS = [
+    ("iters_per_sec", "iters/s", True),
+    ("alloc_bytes_per_iter", "alloc B/iter", False),
+]
+
 DEFAULT_TOLERANCE_PCT = 10.0
 
 
@@ -81,6 +94,20 @@ def stress_points(doc):
     return out
 
 
+def iteration_points(doc):
+    """The v4 `iteration` points keyed by batch size ({} for pre-v4)."""
+    if not isinstance(doc, dict):
+        return {}
+    pts = doc.get("iteration")
+    if not isinstance(pts, list):
+        return {}
+    out = {}
+    for point in pts:
+        if isinstance(point, dict) and isinstance(point.get("batch"), int):
+            out[point["batch"]] = point
+    return out
+
+
 def is_recorded(base):
     """A usable baseline: not the committed placeholder, and at least one
     comparable metric is non-zero."""
@@ -90,6 +117,11 @@ def is_recorded(base):
         return False
     if any((lookup(base, p) or 0) > 0 for p, _, _ in METRICS):
         return True
+    for point in iteration_points(base).values():
+        for key, _, _ in ITER_METRICS:
+            v = point.get(key)
+            if isinstance(v, (int, float)) and v > 0:
+                return True
     for point in stress_points(base).values():
         for key, _, _ in STRESS_METRICS:
             v = point.get(key)
@@ -104,8 +136,9 @@ def compare(base, fresh, tolerance_pct=DEFAULT_TOLERANCE_PCT):
     Returns a list of rows: (label, base, fresh, delta_pct, regressed).
     base/fresh are None when a side has no comparable sample (delta_pct is
     then None and regressed False). The base METRICS rows come first (always
-    all of them, so v1 documents see an unchanged row set); v2 stress-point
-    rows follow, one pair per replica count present on both sides.
+    all of them, so v1 documents see an unchanged row set); v4 iteration
+    rows follow, one pair per batch size present on both sides; then v2
+    stress-point rows, one pair per replica count present on both sides.
     """
     rows = []
     threshold = tolerance_pct / 100.0
@@ -123,6 +156,14 @@ def compare(base, fresh, tolerance_pct=DEFAULT_TOLERANCE_PCT):
 
     for path, label, higher_better in METRICS:
         add_row(label, lookup(base, path), lookup(fresh, path), higher_better)
+    b_it, f_it = iteration_points(base), iteration_points(fresh)
+    for batch in sorted(k for k in b_it if k in f_it):
+        for key, suffix, higher_better in ITER_METRICS:
+            b = b_it[batch].get(key)
+            f = f_it[batch].get(key)
+            b = b if isinstance(b, (int, float)) else None
+            f = f if isinstance(f, (int, float)) else None
+            add_row(f"iter b{batch} {suffix}", b, f, higher_better)
     b_pts, f_pts = stress_points(base), stress_points(fresh)
     for replicas in sorted(k for k in b_pts if k in f_pts):
         for key, suffix, higher_better in STRESS_METRICS:
@@ -141,6 +182,11 @@ def print_candidate_instructions(base_path, fresh_path, fresh):
         v = lookup(fresh, path)
         if v is not None:
             print(f"  {label:>18}: {v:,.1f}")
+    for batch, point in sorted(iteration_points(fresh).items()):
+        for key, suffix, _ in ITER_METRICS:
+            v = point.get(key)
+            if isinstance(v, (int, float)):
+                print(f"  {f'iter b{batch} {suffix}':>18}: {v:,.1f}")
     for replicas, point in sorted(stress_points(fresh).items()):
         for key, suffix, _ in STRESS_METRICS:
             v = point.get(key)

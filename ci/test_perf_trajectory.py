@@ -210,6 +210,105 @@ class ReuseTests(unittest.TestCase):
         self.assertTrue(pt.is_recorded(zeros))
 
 
+def iteration_doc(points, **kw):
+    """A dpulens.perf.v4 document; points = [(batch, iters_per_sec,
+    alloc_bytes_per_iter), ...]."""
+    d = doc(**kw)
+    d["schema"] = "dpulens.perf.v4"
+    d["iteration"] = [
+        {
+            "batch": batch,
+            "iters": 5_000,
+            "wall_ms": 40.0,
+            "iters_per_sec": ips,
+            "alloc_bytes": int(bpi * 5_000),
+            "alloc_bytes_per_iter": bpi,
+        }
+        for batch, ips, bpi in points
+    ]
+    return d
+
+
+class IterationTests(unittest.TestCase):
+    def row(self, rows, label):
+        matches = [r for r in rows if r[0] == label]
+        self.assertEqual(len(matches), 1, label)
+        return matches[0]
+
+    def test_iteration_rows_append_after_the_base_metrics(self):
+        base = iteration_doc([(8, 90_000.0, 64.0), (256, 20_000.0, 64.0)])
+        rows = pt.compare(base, base)
+        self.assertEqual(len(rows), len(pt.METRICS) + 4)
+        self.assertEqual(
+            [r[0] for r in rows[len(pt.METRICS) :]],
+            [
+                "iter b8 iters/s",
+                "iter b8 alloc B/iter",
+                "iter b256 iters/s",
+                "iter b256 alloc B/iter",
+            ],
+        )
+        self.assertTrue(all(not regressed for *_, regressed in rows))
+
+    def test_iteration_throughput_drop_and_alloc_rise_regress(self):
+        base = iteration_doc([(64, 50_000.0, 64.0)])
+        slower = iteration_doc([(64, 35_000.0, 64.0)])  # -30% iters/s
+        rows = pt.compare(base, slower, tolerance_pct=25.0)
+        self.assertTrue(self.row(rows, "iter b64 iters/s")[4])
+        self.assertFalse(self.row(rows, "iter b64 alloc B/iter")[4])
+        heavier = iteration_doc([(64, 50_000.0, 96.0)])  # +50% B/iter
+        rows = pt.compare(base, heavier, tolerance_pct=25.0)
+        self.assertTrue(self.row(rows, "iter b64 alloc B/iter")[4])
+        leaner = iteration_doc([(64, 60_000.0, 32.0)])  # improvements
+        rows = pt.compare(base, leaner, tolerance_pct=25.0)
+        self.assertTrue(all(not regressed for *_, regressed in rows))
+
+    def test_points_are_matched_by_batch_size(self):
+        full = iteration_doc([(8, 90_000.0, 0.0), (64, 50_000.0, 0.0)])
+        partial = iteration_doc([(64, 50_000.0, 0.0)])
+        rows = pt.compare(full, partial)
+        iter_rows = rows[len(pt.METRICS) :]
+        self.assertEqual(
+            [r[0] for r in iter_rows],
+            ["iter b64 iters/s", "iter b64 alloc B/iter"],
+        )
+        self.assertTrue(all(not regressed for *_, regressed in iter_rows))
+
+    def test_zero_alloc_baseline_rows_are_incomparable_not_regressions(self):
+        # The expected steady state is 0 B/iter; a zero baseline can't
+        # anchor a ratio (the exact property gates in tests/iter_hot_path.rs).
+        base = iteration_doc([(64, 50_000.0, 0.0)])
+        fresh = iteration_doc([(64, 50_000.0, 512.0)])
+        rows = pt.compare(base, fresh)
+        label, b, f, delta, regressed = self.row(rows, "iter b64 alloc B/iter")
+        self.assertIsNone(delta)
+        self.assertFalse(regressed)
+
+    def test_pre_v4_baselines_grow_no_iteration_rows(self):
+        rows = pt.compare(doc(), iteration_doc([(8, 90_000.0, 0.0)]))
+        self.assertEqual(len(rows), len(pt.METRICS))
+
+    def test_iteration_only_baseline_counts_as_recorded(self):
+        zeros = iteration_doc(
+            [(8, 90_000.0, 0.0)], ingest=0.0, p50=0.0, mx=0.0, matrix_ms=0.0
+        )
+        self.assertTrue(pt.is_recorded(zeros))
+
+    def test_iteration_and_stress_rows_compose_in_order(self):
+        d = iteration_doc([(8, 90_000.0, 0.0)])
+        d["fleet_stress"] = stress_doc([(100, 50_000.0, 900.0)])["fleet_stress"]
+        rows = pt.compare(d, d)
+        self.assertEqual(
+            [r[0] for r in rows[len(pt.METRICS) :]],
+            [
+                "iter b8 iters/s",
+                "iter b8 alloc B/iter",
+                "stress 100 events/s",
+                "stress 100 wall ms/sim s",
+            ],
+        )
+
+
 class RecordedTests(unittest.TestCase):
     def test_placeholder_is_not_a_baseline(self):
         placeholder = doc()

@@ -99,8 +99,10 @@ impl Scenario {
         let slot = self.free_slots[replica].pop().unwrap();
         self.slot_of.insert(id, slot);
         // Position sits one past the whole context, exactly where a
-        // colocated replica would be after its own prefill + first token.
-        self.engine.replicas[replica].batcher.adopt(id, tokens, generated, budget);
+        // colocated replica would be after its own prefill + first token;
+        // the prefill-side first token seeds the lane's decode input.
+        let last_token = self.engine.request(id).generated.last().copied().unwrap_or(1);
+        self.engine.replicas[replica].batcher.adopt(id, tokens, generated, budget, slot, last_token);
         self.engine.request_mut(id).state = ReqState::Decoding;
         self.kick(replica, now);
         true

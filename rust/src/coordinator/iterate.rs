@@ -3,10 +3,19 @@
 //! and retirement of finished sequences. On disaggregated fleets a
 //! completed prefill hands its sequences to `coordinator::handoff` instead
 //! of its own decode loop.
+//!
+//! This is the simulator's hot path. A steady-state decode round is O(B)
+//! and allocation-free: batch state is read straight off the batcher's SoA
+//! [`Lanes`](crate::engine::Lanes) columns, every staging buffer lives in
+//! the replica's [`IterScratch`], and per-token egress completions are
+//! coalesced into one batched calendar event per iteration
+//! ([`Ev::EgressBatch`]) that replays them at their exact legacy
+//! `(time, seq)` keys — so the event *order* (and therefore every report
+//! byte) is identical to the one-event-per-token path.
 
 use crate::cluster::ReplicaRole;
-use crate::engine::exec::{run_iteration, IterKind};
-use crate::engine::Work;
+use crate::engine::exec::{run_iteration_in, IterKind};
+use crate::engine::{DecodeSpec, Work};
 use crate::ids::ReqId;
 use crate::sim::SimTime;
 use crate::telemetry::sw::SwSignal;
@@ -14,7 +23,7 @@ use crate::workload::request::ReqState;
 
 use super::ingress::{egress_flow, TOKEN_EGRESS_BYTES};
 use super::scenario::Scenario;
-use super::world::{Ev, PendingIter};
+use super::world::{EgressEntry, Ev, PendingIter};
 
 impl Scenario {
     /// Form the next batch of work on `replica` and launch it.
@@ -22,9 +31,9 @@ impl Scenario {
         // KV admission happens at prefill-batch formation.
         let work = {
             let rep = &mut self.engine.replicas[replica];
-            if !rep.batcher.may_refill() && !rep.batcher.running().is_empty() {
+            if !rep.batcher.may_refill() && !rep.batcher.lanes().is_empty() {
                 // Static/no-remap mode with a draining batch: decode only.
-                Work::DecodeRound(rep.batcher.running().iter().map(|s| s.req).collect())
+                Work::DecodeRound
             } else {
                 rep.batcher.next_work()
             }
@@ -65,23 +74,22 @@ impl Scenario {
                 let kind = IterKind::Prefill { reqs: admitted, prompt_lens };
                 self.execute(replica, now, kind);
             }
-            Work::DecodeRound(reqs) => {
-                let ctx_lens: Vec<u32> = reqs
-                    .iter()
-                    .map(|id| {
-                        self.engine.replicas[replica]
-                            .batcher
-                            .running()
-                            .iter()
-                            .find(|s| s.req == *id)
-                            .map(|s| s.position)
-                            .unwrap_or(1)
-                    })
-                    .collect();
+            Work::DecodeRound => {
+                // The round *is* the lane slice: copy the admission-ordered
+                // columns into the recycled `IterKind` vectors (O(B), no
+                // allocation once capacities plateau).
+                let mut reqs = std::mem::take(&mut self.iter_scratch[replica].reqs);
+                let mut ctx_lens = std::mem::take(&mut self.iter_scratch[replica].ctx_lens);
+                reqs.clear();
+                ctx_lens.clear();
+                {
+                    let lanes = self.engine.replicas[replica].batcher.lanes();
+                    reqs.extend_from_slice(lanes.reqs());
+                    ctx_lens.extend_from_slice(lanes.positions());
+                }
                 // KV growth for the step.
                 for &id in &reqs {
-                    let rep = &mut self.engine.replicas[replica];
-                    let _ = rep.kv.append_token(id);
+                    let _ = self.engine.replicas[replica].kv.append_token(id);
                 }
                 let kind = IterKind::Decode { reqs, ctx_lens };
                 self.execute(replica, now, kind);
@@ -92,14 +100,15 @@ impl Scenario {
     /// Run one iteration through the cluster hardware model and schedule its
     /// completion.
     pub(crate) fn execute(&mut self, replica: usize, now: SimTime, kind: IterKind) {
-        let timing = {
+        let (done, _flops) = {
+            let scratch = &mut self.iter_scratch[replica];
             let rep = &mut self.engine.replicas[replica];
             rep.iterations += 1;
             match &kind {
                 IterKind::Prefill { .. } => rep.prefills += 1,
                 IterKind::Decode { .. } => rep.decodes += 1,
             }
-            run_iteration(
+            run_iteration_in(
                 now,
                 &kind,
                 &mut self.cluster,
@@ -107,28 +116,39 @@ impl Scenario {
                 &self.cfg.engine.profile,
                 &mut rep.colls,
                 &mut self.outbox,
+                &mut scratch.exec,
             )
         };
         self.iterations += 1;
         self.flush_outbox();
-        self.sw_window.record(SwSignal::StepTime, (timing.done - now).ns() as f64);
+        self.sw_window.record(SwSignal::StepTime, (done - now).ns() as f64);
         self.sw_window.record(SwSignal::GpuUtil, 0.8);
         self.sw_window
             .record(SwSignal::KvOccupancy, self.engine.replicas[replica].kv.occupancy());
         self.pending[replica] = Some(PendingIter { kind, started: now });
-        self.schedule_replica_at(replica, timing.done, Ev::IterDone(replica));
+        self.schedule_replica_at(replica, done, Ev::IterDone(replica));
     }
 
     /// An iteration's hardware time elapsed: produce tokens via the compute
-    /// backend, advance batcher/KV state, and emit egress.
+    /// backend, advance batcher/KV state, and emit egress. Hardware-model
+    /// telemetry accumulated across the token loop is flushed to the bus
+    /// once per iteration, not once per token.
     pub(crate) fn finish_iteration(&mut self, replica: usize, now: SimTime) {
         let Some(pending) = self.pending[replica].take() else { return };
         match pending.kind {
             IterKind::Prefill { reqs, prompt_lens } => {
-                let slots: Vec<usize> = reqs.iter().map(|id| self.slot_of[id]).collect();
-                let prompts: Vec<Vec<i32>> =
-                    reqs.iter().map(|id| self.engine.request(*id).prompt.clone()).collect();
+                let mut slots = std::mem::take(&mut self.iter_scratch[replica].slots);
+                slots.clear();
+                slots.extend(reqs.iter().map(|id| self.slot_of[id]));
+                // Prompts cross to the backend as borrowed slices — a
+                // completed prefill never clones token buffers.
+                let mut prompts: Vec<&[i32]> = Vec::with_capacity(reqs.len());
+                for id in &reqs {
+                    prompts.push(self.engine.request(*id).prompt.as_slice());
+                }
                 let first_tokens = self.backends[replica].prefill(&slots, &prompts);
+                drop(prompts);
+                self.iter_scratch[replica].slots = slots;
                 if self.engine.replicas[replica].plan.shape.role == ReplicaRole::Prefill {
                     // Phase transition: the prefill pool produced the first
                     // token; everything still decoding crosses the pool
@@ -148,20 +168,25 @@ impl Scenario {
                         }
                     }
                 } else {
-                    let specs: Vec<(ReqId, u32, u32)> = reqs
-                        .iter()
-                        .zip(&prompt_lens)
-                        .map(|(id, &plen)| {
-                            (*id, plen, self.engine.request(*id).max_new_tokens as u32)
-                        })
-                        .collect();
+                    let mut specs = std::mem::take(&mut self.iter_scratch[replica].specs);
+                    specs.clear();
+                    for (id, &plen) in reqs.iter().zip(&prompt_lens) {
+                        specs.push(DecodeSpec {
+                            req: *id,
+                            prompt_len: plen,
+                            budget: self.engine.request(*id).max_new_tokens as u32,
+                            slot: self.slot_of[id],
+                        });
+                    }
                     self.engine.replicas[replica].batcher.start_decode(&specs);
-                    for ((id, tok), _plen) in reqs.iter().zip(first_tokens).zip(&prompt_lens) {
+                    specs.clear();
+                    self.iter_scratch[replica].specs = specs;
+                    for (id, tok) in reqs.iter().zip(first_tokens) {
                         let r = self.engine.request_mut(*id);
                         r.state = ReqState::Decoding;
                         r.generated.push(tok);
                         self.sw_window.record(SwSignal::DecodeProgress, r.generated.len() as f64);
-                        let finished = self.engine.replicas[replica].batcher.on_token(*id);
+                        let finished = self.engine.replicas[replica].batcher.on_token(*id, tok);
                         self.emit_token(replica, *id, now, finished);
                         if finished {
                             self.retire(replica, *id);
@@ -169,47 +194,113 @@ impl Scenario {
                     }
                 }
             }
-            IterKind::Decode { reqs, .. } => {
-                let slots: Vec<usize> = reqs.iter().map(|id| self.slot_of[id]).collect();
-                let last_tokens: Vec<i32> = reqs
-                    .iter()
-                    .map(|id| *self.engine.request(*id).generated.last().unwrap_or(&1))
-                    .collect();
-                let positions: Vec<u32> = reqs
-                    .iter()
-                    .map(|id| {
-                        self.engine.replicas[replica]
-                            .batcher
-                            .running()
-                            .iter()
-                            .find(|s| s.req == *id)
-                            .map(|s| s.position)
-                            .unwrap_or(1)
-                            .min(self.cfg.engine.profile.max_seq as u32 - 1)
-                    })
-                    .collect();
-                let next = self.backends[replica].decode(&slots, &last_tokens, &positions);
-                for (id, tok) in reqs.iter().zip(next) {
-                    let r = self.engine.request_mut(*id);
-                    r.generated.push(tok);
-                    let finished = self.engine.replicas[replica].batcher.on_token(*id);
-                    self.emit_token(replica, *id, now, finished);
-                    if finished {
-                        self.retire(replica, *id);
+            IterKind::Decode { reqs, ctx_lens } => {
+                // O(B) backend staging straight off the SoA lanes. The round
+                // was copied from the lane slice at formation, but `try_adopt`
+                // may have *appended* lanes since (a KV handoff landing
+                // mid-flight), so resolve each member through the O(1) index.
+                // Members can never vanish mid-flight — `finish` only runs
+                // inside this function's retire path — so a missing lane is a
+                // bookkeeping bug, not a race.
+                let mut slots = std::mem::take(&mut self.iter_scratch[replica].slots);
+                let mut last_tokens = std::mem::take(&mut self.iter_scratch[replica].last_tokens);
+                let mut positions = std::mem::take(&mut self.iter_scratch[replica].positions);
+                let mut next_tokens = std::mem::take(&mut self.iter_scratch[replica].next_tokens);
+                slots.clear();
+                last_tokens.clear();
+                positions.clear();
+                let max_pos = self.cfg.engine.profile.max_seq as u32 - 1;
+                {
+                    let lanes = self.engine.replicas[replica].batcher.lanes();
+                    for &id in &reqs {
+                        let lane = lanes.lane_of(id).unwrap_or_else(|| {
+                            panic!("decode round contains untracked request {id:?}")
+                        });
+                        slots.push(lanes.slots()[lane]);
+                        last_tokens.push(lanes.last_tokens()[lane]);
+                        positions.push(lanes.positions()[lane].min(max_pos));
                     }
                 }
+                self.backends[replica].decode_into(&slots, &last_tokens, &positions, &mut next_tokens);
+                for (i, &id) in reqs.iter().enumerate() {
+                    let tok = next_tokens[i];
+                    let r = self.engine.request_mut(id);
+                    r.generated.push(tok);
+                    let finished = self.engine.replicas[replica].batcher.on_token(id, tok);
+                    self.emit_token(replica, id, now, finished);
+                    if finished {
+                        self.retire(replica, id);
+                    }
+                }
+                let scratch = &mut self.iter_scratch[replica];
+                scratch.slots = slots;
+                scratch.last_tokens = last_tokens;
+                scratch.positions = positions;
+                scratch.next_tokens = next_tokens;
+                scratch.reqs = reqs;
+                scratch.ctx_lens = ctx_lens;
             }
         }
+        self.flush_outbox();
         self.kick(replica, now);
     }
 
-    /// Stream one generated token out through the replica's exit node.
+    /// Stream one generated token out through the replica's exit node. The
+    /// egress completion time (and all NIC telemetry) is computed per token
+    /// exactly as before, but the completion is parked on the replica's
+    /// coalesced lane and dispatched by one `Ev::EgressBatch` calendar event
+    /// per iteration. Each entry carries the `(time, seq)` key its legacy
+    /// per-token event would have occupied — minted here, at the same point
+    /// in the deterministic sequence stream — so dispatch order and every
+    /// downstream timestamp are byte-identical.
     pub(crate) fn emit_token(&mut self, replica: usize, id: ReqId, now: SimTime, last: bool) {
         let node = self.exit_node(replica);
         let flow = egress_flow(id);
         let done = self.cluster.egress(now, node, flow, TOKEN_EGRESS_BYTES, &mut self.outbox);
-        self.flush_outbox();
-        self.schedule_replica_at(replica, done, Ev::EgressDone { req: id, last });
+        let done = done.max(now); // the calendar clamp a scheduled event gets
+        if self.cfg.per_token_egress {
+            self.schedule_replica_at(replica, done, Ev::EgressDone { req: id, last });
+            return;
+        }
+        let seq = self.cal.alloc_seq();
+        let lane = &mut self.egress_lanes[replica];
+        let arm = lane.is_empty();
+        lane.push_back(EgressEntry { req: id, done, seq, last });
+        if arm {
+            // First entry on an idle lane: arm the batch event at this
+            // entry's own key. A non-empty lane already has its event in
+            // flight at the front entry's key (NIC completion times are
+            // monotone per node, so later entries never precede it).
+            self.schedule_replica_at_seq(replica, done, seq, Ev::EgressBatch(replica));
+        }
+    }
+
+    /// Dispatch a replica's coalesced egress lane: drain every entry whose
+    /// `(done, seq)` key precedes the calendar's next event — exactly the
+    /// set of legacy per-token events that would have popped consecutively
+    /// here — then re-arm the batch event at the first survivor's key.
+    pub(crate) fn on_egress_batch(&mut self, replica: usize) {
+        // `on_egress_done` never schedules calendar events (it only mutates
+        // request/router/bus state), so the drain limit is computed once.
+        let limit = self.cal.peek_key();
+        loop {
+            let Some(front) = self.egress_lanes[replica].front().copied() else { return };
+            if let Some(limit) = limit {
+                if (front.done, front.seq) >= limit {
+                    // The remainder belongs after the calendar's next event:
+                    // re-arm at the front's own pre-minted key and yield.
+                    self.schedule_replica_at_seq(
+                        replica,
+                        front.done,
+                        front.seq,
+                        Ev::EgressBatch(replica),
+                    );
+                    return;
+                }
+            }
+            self.egress_lanes[replica].pop_front();
+            self.on_egress_done(front.req, front.last, front.done);
+        }
     }
 
     /// Free a finished sequence's batcher slot, KV pages, and backend slot;

@@ -129,7 +129,7 @@ impl Scenario {
                         .engine
                         .replicas
                         .iter()
-                        .map(|r| r.batcher.running().len() as u64)
+                        .map(|r| r.batcher.lanes().len() as u64)
                         .collect(),
                     decode_slots: self
                         .engine
@@ -203,7 +203,7 @@ impl Scenario {
         for r in 0..self.engine.n_replicas() {
             if self.pending[r].is_none()
                 && (self.engine.replicas[r].batcher.queue_depth() > 0
-                    || !self.engine.replicas[r].batcher.running().is_empty())
+                    || !self.engine.replicas[r].batcher.lanes().is_empty())
             {
                 self.kick(r, now);
             }

@@ -1,22 +1,28 @@
 //! The `dpulens perf` pipeline benchmark — the measured baseline for the
 //! telemetry hot path (see EXPERIMENTS.md §Perf).
 //!
-//! Four phases, each timed with [`crate::util::perf::PhaseTimer`]:
+//! Five phases, each timed with [`crate::util::perf::PhaseTimer`]:
 //!
 //! 1. **ingest** — raw batched throughput of the bus → agent → window path:
 //!    a synthetic, deterministic event mix streamed through one node's DPU
 //!    agent in slices, reported as events/sec;
 //! 2. **snapshot** — `WindowAccum::snapshot` latency under a realistic flow
 //!    population (p50/max µs over many windows);
-//! 3. **matrix** — `run_matrix` end-to-end wall-clock and pipeline events/sec;
-//! 4. **fleet** — `run_fleet` end-to-end wall-clock and pipeline events/sec.
+//! 3. **iteration** — the decode-iteration microbench: a single replica
+//!    pinned at batch 8/64/256 decode lanes, measured over a mid-window
+//!    steady-state span (decode rounds/sec and heap bytes per iteration);
+//! 4. **matrix** — `run_matrix` end-to-end wall-clock and pipeline events/sec;
+//! 5. **fleet** — `run_fleet` end-to-end wall-clock and pipeline events/sec.
 //!
-//! The JSON form (`BENCH_pipeline.json`, schema `dpulens.perf.v3`) has a
+//! The JSON form (`BENCH_pipeline.json`, schema `dpulens.perf.v4`) has a
 //! deterministic *shape* — fixed keys, deterministic event counts — while
 //! the timing values vary by machine; CI uploads it per PR so the bench
 //! trajectory accumulates. v3 = v2's keys plus a `reuse` section: the
 //! snapshot-and-branch prefix-reuse counters merged across the matrix and
-//! fleet end-to-end phases (all zeros under `--micro`).
+//! fleet end-to-end phases (all zeros under `--micro`). v4 adds an
+//! `iteration` section: the decode-iteration microbench (steady-state
+//! decode rounds/sec at batch 8/64/256 plus heap bytes allocated per
+//! iteration — zero in steady state, asserted by `tests/iter_hot_path.rs`).
 //!
 //! With `--fleet-stress` a fifth phase runs: healthy multi-pool worlds at
 //! 100/250/500/1000 replicas (just 100 under `--quick`), each measured for
@@ -27,12 +33,13 @@
 
 use crate::coordinator::fleet::{multipool_base_cfg, run_fleet, FleetConfig, MultiPoolSpec};
 use crate::coordinator::matrix::{run_matrix, MatrixConfig};
-use crate::coordinator::scenario::Scenario;
+use crate::coordinator::scenario::{Scenario, ScenarioCfg};
 use crate::coordinator::snapshot::ReuseStats;
 use crate::dpu::agent::DpuPlane;
 use crate::dpu::detectors::DetectConfig;
 use crate::ids::{FlowId, GpuId, NodeId, QpId, ReqId, StageId};
-use crate::sim::{SimDur, SimTime};
+use crate::sim::dist::{Arrival, LengthDist};
+use crate::sim::{SimDur, SimTime, MS};
 use crate::telemetry::event::{Phase, TelemetryEvent, TelemetryKind};
 use crate::telemetry::window::WindowAccum;
 use crate::util::json::Json;
@@ -60,8 +67,9 @@ pub struct PerfConfig {
     pub micro_only: bool,
     /// Label recorded in the JSON (`--quick` vs full).
     pub quick: bool,
-    /// Optional fleet-scale scaling curve (`--fleet-stress`); its presence
-    /// switches the JSON schema to `dpulens.perf.v2`.
+    /// Optional fleet-scale scaling curve (`--fleet-stress`); adds the
+    /// `fleet_stress` section (historically the `dpulens.perf.v2`
+    /// addition — the document schema is always v4 today).
     pub fleet_stress: Option<FleetStressConfig>,
 }
 
@@ -148,6 +156,8 @@ pub struct PerfReport {
     /// Snapshot-and-branch prefix-reuse counters, merged across the matrix
     /// and fleet end-to-end phases (all zeros under `--micro`).
     pub reuse: ReuseStats,
+    /// The decode-iteration microbench curve, one point per batch size.
+    pub iteration: Vec<IterBenchPoint>,
     pub fleet_stress: Option<FleetStressReport>,
 }
 
@@ -194,6 +204,41 @@ impl StressPoint {
     }
 }
 
+/// Batch sizes measured by the decode-iteration microbench.
+pub const ITER_BATCHES: [usize; 3] = [8, 64, 256];
+
+/// One decode-iteration microbench point: a single replica saturated at
+/// `batch` decode lanes, timed over a mid-window steady-state span (no
+/// window tick inside the span, reusable-buffer capacities plateaued).
+#[derive(Debug, Clone)]
+pub struct IterBenchPoint {
+    pub batch: u64,
+    /// Decode iterations completed in the measured span.
+    pub iters: u64,
+    /// Wall-clock for the measured span, milliseconds.
+    pub wall_ms: f64,
+    /// Heap bytes allocated over the measured span (zeros when the counting
+    /// allocator is not registered, i.e. in library unit tests).
+    pub alloc_bytes: u64,
+}
+
+impl IterBenchPoint {
+    pub fn iters_per_sec(&self) -> f64 {
+        events_per_sec(self.iters, self.wall_ms)
+    }
+
+    /// The steady-state headline: heap bytes per decode iteration. Zero on
+    /// the v4 hot path — `tests/iter_hot_path.rs` asserts it exactly under
+    /// `--features perf-probe`.
+    pub fn alloc_bytes_per_iter(&self) -> f64 {
+        if self.iters == 0 {
+            0.0
+        } else {
+            self.alloc_bytes as f64 / self.iters as f64
+        }
+    }
+}
+
 impl PerfReport {
     pub fn ingest_events_per_sec(&self) -> f64 {
         events_per_sec(self.ingest_events, self.ingest_ms)
@@ -207,11 +252,23 @@ impl PerfReport {
         events_per_sec(self.fleet_events, self.fleet_ms)
     }
 
-    /// `dpulens.perf.v3`: fixed key shape (the `fleet_stress` section only
+    /// `dpulens.perf.v4`: fixed key shape (the `fleet_stress` section only
     /// when that phase ran); timing values machine-dependent.
     pub fn to_json(&self) -> Json {
+        let mut iter_pts = Json::arr();
+        for p in &self.iteration {
+            iter_pts.push(
+                Json::obj()
+                    .set("batch", p.batch)
+                    .set("iters", p.iters)
+                    .set("wall_ms", p.wall_ms)
+                    .set("iters_per_sec", p.iters_per_sec())
+                    .set("alloc_bytes", p.alloc_bytes)
+                    .set("alloc_bytes_per_iter", p.alloc_bytes_per_iter()),
+            );
+        }
         let mut j = Json::obj()
-            .set("schema", "dpulens.perf.v3")
+            .set("schema", "dpulens.perf.v4")
             .set("quick", self.quick)
             .set(
                 "ingest",
@@ -227,6 +284,7 @@ impl PerfReport {
                     .set("p50_us", self.snapshot_p50_us)
                     .set("max_us", self.snapshot_max_us),
             )
+            .set("iteration", iter_pts)
             .set(
                 "matrix",
                 Json::obj()
@@ -294,6 +352,17 @@ impl PerfReport {
             "snapshot: {} windows, p50 {:.1} us, max {:.1} us\n",
             self.snapshot_windows, self.snapshot_p50_us, self.snapshot_max_us
         ));
+        for p in &self.iteration {
+            s.push_str(&format!(
+                "iter:     batch {:>3}: {} decode rounds in {:.1} ms \
+                 ({:.0} iters/s, {:.1} heap B/iter)\n",
+                p.batch,
+                p.iters,
+                p.wall_ms,
+                p.iters_per_sec(),
+                p.alloc_bytes_per_iter()
+            ));
+        }
         if self.matrix_cells > 0 {
             s.push_str(&format!(
                 "matrix:   {} cells ({} replicates) in {:.1} ms on {} threads \
@@ -472,6 +541,57 @@ pub fn stress_cfg(replicas: usize, threads: usize, quick: bool) -> crate::coordi
     cfg
 }
 
+/// One decode-iteration bench world: exactly `batch` requests arrive up
+/// front (then arrivals stop), prompts are tiny, budgets far outlast the
+/// bench span, and the KV pool is sized so page growth never fails — a
+/// single replica pinned at `batch` decode lanes for the whole run.
+pub fn iter_bench_cfg(batch: usize) -> ScenarioCfg {
+    let mut cfg = ScenarioCfg::default();
+    cfg.duration = SimDur::from_ms(1_000);
+    cfg.window = SimDur::from_ms(20);
+    cfg.workload.arrival = Arrival::Poisson { rate: 200_000.0 };
+    cfg.workload.prompt_len = LengthDist::Uniform { lo: 8, hi: 8 };
+    // Budgets far beyond any tokens the bench span can decode: no request
+    // ever retires, so the lanes stay pinned at `batch` for the whole run.
+    cfg.workload.output_len = LengthDist::Uniform { lo: 65_536, hi: 65_536 };
+    cfg.max_requests = batch;
+    cfg.engine.policy.max_batch = batch;
+    cfg.engine.policy.queue_cap = batch.max(512);
+    // KV pages are pool accounting only (u32 counters), so an oversized
+    // pool costs nothing and keeps `append_token` succeeding all run.
+    cfg.engine.kv_pages = 1 << 22;
+    cfg
+}
+
+/// Phase 3: the decode-iteration microbench. Each batch size warms its
+/// world past arrival/prefill and several full telemetry windows (so every
+/// reusable buffer reaches its plateau capacity), then times a mid-window
+/// span containing no window tick: everything in the span is steady-state
+/// decode rounds plus their coalesced egress deliveries.
+fn bench_decode_iterations(quick: bool) -> Vec<IterBenchPoint> {
+    // Window = 20 ms; endpoints sit 2 ms past / 2 ms before a tick.
+    let (warm_ms, end_ms) = if quick { (62, 78) } else { (122, 138) };
+    ITER_BATCHES
+        .iter()
+        .map(|&batch| {
+            let mut world = Scenario::new(iter_bench_cfg(batch));
+            world.run_to(SimTime(warm_ms * MS));
+            let iters0 = world.iterations;
+            let before = crate::util::alloc::stats();
+            let timer = PhaseTimer::start();
+            world.run_to(SimTime(end_ms * MS));
+            let wall_ms = timer.total_ms();
+            let after = crate::util::alloc::stats();
+            IterBenchPoint {
+                batch: batch as u64,
+                iters: world.iterations - iters0,
+                wall_ms,
+                alloc_bytes: after.allocated - before.allocated,
+            }
+        })
+        .collect()
+}
+
 /// Run one scaling point and measure it (wall clock, pipeline events,
 /// allocation counters around the run).
 fn run_stress_point(replicas: usize, threads: usize, quick: bool) -> StressPoint {
@@ -498,6 +618,7 @@ fn run_stress_point(replicas: usize, threads: usize, quick: bool) -> StressPoint
 pub fn run_perf(cfg: &PerfConfig) -> PerfReport {
     let ingest_ms = bench_ingest(cfg);
     let snap = bench_snapshot(cfg);
+    let iteration = bench_decode_iterations(cfg.quick);
     let mut reuse = ReuseStats::default();
 
     let (matrix_cells, matrix_threads, matrix_ms, matrix_events, matrix_detected) =
@@ -561,6 +682,7 @@ pub fn run_perf(cfg: &PerfConfig) -> PerfReport {
         fleet_ms,
         fleet_events,
         reuse,
+        iteration,
         fleet_stress,
     }
 }
@@ -585,7 +707,7 @@ mod tests {
     }
 
     #[test]
-    fn micro_perf_report_has_the_v3_shape() {
+    fn micro_perf_report_has_the_v4_shape() {
         let rep = run_perf(&micro_cfg());
         assert_eq!(rep.ingest_events, 4_000);
         assert_eq!(rep.snapshot_windows, 8);
@@ -594,13 +716,25 @@ mod tests {
         // --micro skips the end-to-end phases: the reuse counters stay zero
         // but the section is still present (fixed key shape).
         assert_eq!(rep.reuse, ReuseStats::default());
+        // The iteration microbench always runs: one point per batch size,
+        // each with a non-trivial steady-state span.
+        assert_eq!(rep.iteration.len(), ITER_BATCHES.len());
+        for (p, &batch) in rep.iteration.iter().zip(ITER_BATCHES.iter()) {
+            assert_eq!(p.batch, batch as u64);
+            assert!(p.iters > 0, "batch {batch} measured no decode rounds");
+            assert!(p.wall_ms > 0.0);
+        }
         let json = rep.to_json().render();
         for key in [
-            "\"schema\":\"dpulens.perf.v3\"",
+            "\"schema\":\"dpulens.perf.v4\"",
             "\"ingest\"",
             "\"events_per_sec\"",
             "\"snapshot\"",
             "\"p50_us\"",
+            "\"iteration\"",
+            "\"iters_per_sec\"",
+            "\"alloc_bytes_per_iter\"",
+            "\"batch\":256",
             "\"matrix\"",
             "\"fleet\"",
             "\"reuse\"",
@@ -627,7 +761,7 @@ mod tests {
         assert!(fs.points[0].wall_ms > 0.0);
         let json = rep.to_json().render();
         for key in [
-            "\"schema\":\"dpulens.perf.v3\"",
+            "\"schema\":\"dpulens.perf.v4\"",
             "\"fleet_stress\"",
             "\"replicas\":20",
             "\"wall_ms_per_sim_s\"",

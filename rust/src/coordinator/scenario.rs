@@ -28,7 +28,7 @@ use crate::telemetry::sw::SwWindow;
 use crate::telemetry::{TelemetryBus, TelemetryFaults};
 use crate::workload::generator::{WorkloadGen, WorkloadSpec};
 
-use super::world::{Ev, HandoffStats, PendingIter};
+use super::world::{EgressEntry, Ev, HandoffStats, IterScratch, PendingIter};
 
 /// Scenario configuration.
 #[derive(Debug, Clone)]
@@ -64,6 +64,12 @@ pub struct ScenarioCfg {
     /// byte-identical for any value; sweeps that parallelize at the cell
     /// level keep 1 to avoid oversubscription.
     pub observe_threads: usize,
+    /// Schedule one calendar event per generated token (the legacy egress
+    /// path) instead of one coalesced `Ev::EgressBatch` per iteration.
+    /// Output is byte-identical either way — the coalesced lane replays
+    /// per-token completions at their exact legacy `(time, seq)` keys —
+    /// so this exists only for the equivalence harness.
+    pub per_token_egress: bool,
 }
 
 impl Default for ScenarioCfg {
@@ -83,6 +89,7 @@ impl Default for ScenarioCfg {
             max_requests: 0,
             calendar: crate::sim::CalendarKind::Bucket,
             observe_threads: 1,
+            per_token_egress: false,
         }
     }
 }
@@ -180,6 +187,12 @@ pub struct Scenario {
     pub(crate) gen: WorkloadGen,
     pub(crate) backends: Vec<Box<dyn ComputeBackend>>,
     pub(crate) pending: Vec<Option<PendingIter>>,
+    /// Per-replica reusable iteration buffers (see `world::IterScratch`):
+    /// the steady-state decode round runs entirely out of these.
+    pub(crate) iter_scratch: Vec<IterScratch>,
+    /// Per-replica coalesced egress lanes: tokens awaiting their batched
+    /// `Ev::EgressBatch` dispatch, in `(done, seq)` order.
+    pub(crate) egress_lanes: Vec<VecDeque<EgressEntry>>,
     pub(crate) slot_of: HashMap<ReqId, usize>,
     pub(crate) free_slots: Vec<Vec<usize>>,
     pub(crate) outbox: Outbox,
@@ -259,6 +272,7 @@ impl Scenario {
                 }
                 Ev::IterDone(replica) => self.finish_iteration(replica, now),
                 Ev::EgressDone { req, last } => self.on_egress_done(req, last, now),
+                Ev::EgressBatch(replica) => self.on_egress_batch(replica),
                 Ev::KvHandoffDone { req, to } => self.on_kv_handoff_done(req, to, now),
                 Ev::WindowTick => {
                     self.on_window_tick(now);
@@ -271,11 +285,21 @@ impl Scenario {
     }
 
     /// Advance the world up to (not including) `stop` and pause — the
-    /// snapshot capture point for fork execution. Everything scheduled at
-    /// `t >= stop` stays pending for the resumed branch.
-    pub(crate) fn run_to(&mut self, stop: SimTime) {
+    /// snapshot capture point for fork execution, and the measurement hook
+    /// for the decode-iteration microbench and the steady-state hot-path
+    /// tests (`tests/iter_hot_path.rs` brackets a mid-window span with it).
+    /// Everything scheduled at `t >= stop` stays pending for the resumed
+    /// branch.
+    pub fn run_to(&mut self, stop: SimTime) {
         self.start();
         self.run_loop(Some(stop));
+    }
+
+    /// Engine iterations (prefill batches + decode rounds) completed so far
+    /// across all replicas — the denominator for per-iteration measurements
+    /// taken around a `run_to` span.
+    pub fn iterations_so_far(&self) -> u64 {
+        self.iterations
     }
 
     /// Run to completion (from scratch, or resuming a world advanced by

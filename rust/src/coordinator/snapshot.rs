@@ -184,6 +184,8 @@ fn clone_world(s: &Scenario) -> Scenario {
         gen: s.gen.clone(),
         backends: s.backends.iter().map(|b| b.clone_box()).collect(),
         pending: s.pending.clone(),
+        iter_scratch: s.iter_scratch.clone(),
+        egress_lanes: s.egress_lanes.clone(),
         slot_of: s.slot_of.clone(),
         free_slots: s.free_slots.clone(),
         outbox: s.outbox.clone(),

@@ -10,8 +10,8 @@ use crate::dpu::agent::DpuPlane;
 use crate::dpu::detectors::DetectConfig;
 use crate::dpu::fleet::FleetSensor;
 use crate::dpu::swdet::SwSuite;
-use crate::engine::exec::{ComputeBackend, IterKind, SurrogateBackend};
-use crate::engine::{build_replicas, build_shaped_replicas, CollSeq, Engine};
+use crate::engine::exec::{ComputeBackend, ExecScratch, IterKind, SurrogateBackend};
+use crate::engine::{build_replicas, build_shaped_replicas, CollSeq, DecodeSpec, Engine};
 use crate::ids::{NodeId, ReqId};
 use crate::metrics::ServeMetrics;
 use crate::sim::{Engine as Calendar, SimTime};
@@ -40,6 +40,12 @@ pub(crate) enum Ev {
     Iterate(usize),
     IterDone(usize),
     EgressDone { req: ReqId, last: bool },
+    /// Batched egress dispatch for one replica's coalesced token lane: one
+    /// calendar event per iteration instead of one per token. The event is
+    /// always scheduled at its lane-front entry's pre-minted `(time, seq)`
+    /// key, so it pops exactly when the front's legacy per-token event
+    /// would have (see `Scenario::on_egress_batch`).
+    EgressBatch(usize),
     /// A prefill→decode KV handoff's last byte arrived at decode replica
     /// `to` (disaggregated fleets only).
     KvHandoffDone { req: ReqId, to: usize },
@@ -110,6 +116,41 @@ pub(crate) struct PendingIter {
     pub(crate) kind: IterKind,
     #[allow(dead_code)]
     pub(crate) started: SimTime,
+}
+
+/// One generated token parked on a replica's coalesced egress lane,
+/// awaiting batched dispatch.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct EgressEntry {
+    pub(crate) req: ReqId,
+    /// NIC egress completion time, computed per token exactly as the
+    /// legacy per-token `Ev::EgressDone` would have carried (clamped to
+    /// the emission instant like any calendar entry).
+    pub(crate) done: SimTime,
+    /// The calendar sequence number minted for this token at emission.
+    /// `(done, seq)` is the key the legacy event would have popped at;
+    /// batched dispatch replays entries in exactly that global order.
+    pub(crate) seq: u64,
+    pub(crate) last: bool,
+}
+
+/// Per-replica reusable buffers for the iteration hot path. After warmup
+/// every vector's capacity plateaus, so a steady-state decode round touches
+/// the heap zero times (asserted by `tests/iter_hot_path.rs` under
+/// `--features perf-probe`).
+#[derive(Debug, Clone, Default)]
+pub(crate) struct IterScratch {
+    /// `IterKind::Decode` vectors, recycled through `pending` each round.
+    pub(crate) reqs: Vec<ReqId>,
+    pub(crate) ctx_lens: Vec<u32>,
+    /// Backend-call staging, read straight off the batcher's SoA lanes.
+    pub(crate) slots: Vec<usize>,
+    pub(crate) last_tokens: Vec<i32>,
+    pub(crate) positions: Vec<u32>,
+    pub(crate) next_tokens: Vec<i32>,
+    pub(crate) specs: Vec<DecodeSpec>,
+    /// Stage-walk arena for `run_iteration_in`.
+    pub(crate) exec: ExecScratch,
 }
 
 /// Replica plans for a scenario config: heterogeneous shapes when the
@@ -203,6 +244,8 @@ impl Scenario {
             gen,
             backends,
             pending: (0..n_rep).map(|_| None).collect(),
+            iter_scratch: (0..n_rep).map(|_| Default::default()).collect(),
+            egress_lanes: (0..n_rep).map(|_| Default::default()).collect(),
             slot_of: Default::default(),
             free_slots: (0..n_rep).map(|_| (0..max_batch).rev().collect()).collect(),
             outbox: Outbox::new(),
@@ -283,6 +326,13 @@ impl Scenario {
     /// rings so no single shard serializes a 1000-replica fleet's churn).
     pub(crate) fn schedule_replica_at(&mut self, replica: usize, at: SimTime, ev: Ev) {
         self.cal.schedule_at_shard(self.cal_shard[replica], at, ev);
+    }
+
+    /// Schedule a replica-scoped event at a pre-minted `(time, seq)` key —
+    /// how the coalesced egress path re-arms its batch event at exactly the
+    /// calendar position a legacy per-token event held.
+    pub(crate) fn schedule_replica_at_seq(&mut self, replica: usize, at: SimTime, seq: u64, ev: Ev) {
+        self.cal.schedule_at_shard_seq(self.cal_shard[replica], at, seq, ev);
     }
 
     /// Schedule an iteration on an idle replica; the placeholder pending

@@ -4,8 +4,17 @@
 //! continuous (vLLM-style) vs static batching, optional length bucketing,
 //! and in-flight remapping of freed decode slots (the mitigation for
 //! early-completion skew, NS8/PC10/EW9).
+//!
+//! The running set is stored as structure-of-arrays [`Lanes`]: parallel
+//! `req`/`position`/`slot`/`last_token` columns plus an O(1) req→lane index,
+//! so the per-iteration hot path (`coordinator::iterate`) reads positions,
+//! KV slots, and last tokens as direct indexed slices instead of searching a
+//! `Vec<RunningSeq>` per request. Lane order is admission order and every
+//! mutation preserves it, which keeps decode-round iteration order — and
+//! therefore every downstream event sequence — byte-identical to the old
+//! AoS layout.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use crate::ids::ReqId;
 use crate::sim::SimTime;
@@ -38,19 +47,92 @@ impl Default for BatchPolicy {
     }
 }
 
-/// A sequence occupying a decode slot.
-#[derive(Debug, Clone)]
-pub struct RunningSeq {
+/// One prefill-completed sequence entering decode (input to
+/// [`Batcher::start_decode`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeSpec {
     pub req: ReqId,
-    /// Next KV slot to write (== tokens so far: prompt + generated).
-    pub position: u32,
-    pub generated: u32,
+    /// KV position after prefill (== prompt length).
+    pub prompt_len: u32,
+    /// Output-token budget (`max_new_tokens`).
     pub budget: u32,
+    /// The replica-local KV slot this sequence occupies.
+    pub slot: usize,
 }
 
-impl RunningSeq {
-    pub fn remaining(&self) -> u32 {
-        self.budget.saturating_sub(self.generated)
+/// Structure-of-arrays running set: one lane per in-flight decode sequence,
+/// in admission order. All columns are index-parallel; `index` maps a
+/// request id to its lane in O(1).
+#[derive(Debug, Clone, Default)]
+pub struct Lanes {
+    req: Vec<ReqId>,
+    /// Next KV slot to write (== tokens so far: prompt + generated).
+    position: Vec<u32>,
+    generated: Vec<u32>,
+    budget: Vec<u32>,
+    slot: Vec<usize>,
+    /// Most recent token (the next decode step's input). 0 until the first
+    /// `on_token`, which always precedes the first decode round.
+    last_token: Vec<i32>,
+    index: HashMap<ReqId, usize>,
+}
+
+impl Lanes {
+    pub fn len(&self) -> usize {
+        self.req.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.req.is_empty()
+    }
+
+    pub fn reqs(&self) -> &[ReqId] {
+        &self.req
+    }
+
+    pub fn positions(&self) -> &[u32] {
+        &self.position
+    }
+
+    pub fn slots(&self) -> &[usize] {
+        &self.slot
+    }
+
+    pub fn last_tokens(&self) -> &[i32] {
+        &self.last_token
+    }
+
+    /// O(1) lane lookup. A request missing from a decode round it is part
+    /// of is a bookkeeping bug (see `coordinator::iterate`).
+    pub fn lane_of(&self, req: ReqId) -> Option<usize> {
+        self.index.get(&req).copied()
+    }
+
+    fn push(&mut self, req: ReqId, position: u32, generated: u32, budget: u32, slot: usize, last_token: i32) {
+        let lane = self.req.len();
+        self.req.push(req);
+        self.position.push(position);
+        self.generated.push(generated);
+        self.budget.push(budget);
+        self.slot.push(slot);
+        self.last_token.push(last_token);
+        let prev = self.index.insert(req, lane);
+        debug_assert!(prev.is_none(), "request {req:?} already running");
+    }
+
+    /// Order-preserving removal: shift every later lane down one and
+    /// reindex. O(B), matching the old `Vec::retain` exactly.
+    fn remove(&mut self, lane: usize) {
+        let req = self.req.remove(lane);
+        self.position.remove(lane);
+        self.generated.remove(lane);
+        self.budget.remove(lane);
+        self.slot.remove(lane);
+        self.last_token.remove(lane);
+        self.index.remove(&req);
+        for j in lane..self.req.len() {
+            self.index.insert(self.req[j], j);
+        }
     }
 }
 
@@ -59,8 +141,9 @@ impl RunningSeq {
 pub enum Work {
     /// Prefill these queued requests (<= max_batch).
     Prefill(Vec<ReqId>),
-    /// One decode step over the current running set.
-    DecodeRound(Vec<ReqId>),
+    /// One decode step over the current running set (read it straight off
+    /// [`Batcher::lanes`] — the round is the lane slice, not a copied list).
+    DecodeRound,
     /// Nothing to do.
     Idle,
 }
@@ -77,7 +160,7 @@ struct Waiting {
 pub struct Batcher {
     policy: BatchPolicy,
     waiting: VecDeque<Waiting>,
-    running: Vec<RunningSeq>,
+    lanes: Lanes,
     /// Static-batching latch: set while a batch is draining.
     draining: bool,
     pub rejected: u64,
@@ -91,7 +174,7 @@ impl Batcher {
         Batcher {
             policy,
             waiting: VecDeque::new(),
-            running: Vec::new(),
+            lanes: Lanes::default(),
             draining: false,
             rejected: 0,
             admitted: 0,
@@ -123,16 +206,13 @@ impl Batcher {
         self.waiting.len()
     }
 
-    pub fn running(&self) -> &[RunningSeq] {
-        &self.running
-    }
-
-    pub fn running_mut(&mut self) -> &mut [RunningSeq] {
-        &mut self.running
+    /// The running set as SoA lanes (admission order).
+    pub fn lanes(&self) -> &Lanes {
+        &self.lanes
     }
 
     pub fn free_slots(&self) -> usize {
-        self.policy.max_batch.saturating_sub(self.running.len())
+        self.policy.max_batch.saturating_sub(self.lanes.len())
     }
 
     /// Oldest enqueue time in the waiting queue (admission-wait signal).
@@ -149,7 +229,7 @@ impl Batcher {
             self.free_slots() > 0 && !self.waiting.is_empty()
         } else {
             // Static: only start a new batch when the previous fully drained.
-            !self.draining && self.running.is_empty() && !self.waiting.is_empty()
+            !self.draining && self.lanes.is_empty() && !self.waiting.is_empty()
         };
 
         if can_prefill {
@@ -162,8 +242,8 @@ impl Batcher {
                 return Work::Prefill(picked);
             }
         }
-        if !self.running.is_empty() {
-            return Work::DecodeRound(self.running.iter().map(|r| r.req).collect());
+        if !self.lanes.is_empty() {
+            return Work::DecodeRound;
         }
         self.draining = false;
         Work::Idle
@@ -204,37 +284,52 @@ impl Batcher {
         }
     }
 
-    /// Prefill finished: move requests into decode slots.
-    pub fn start_decode(&mut self, reqs: &[(ReqId, u32 /*prompt_len*/, u32 /*budget*/)]) {
-        for &(req, prompt_len, budget) in reqs {
-            debug_assert!(self.running.len() < self.policy.max_batch);
-            self.running.push(RunningSeq { req, position: prompt_len, generated: 0, budget });
+    /// Prefill finished: move requests into decode lanes.
+    pub fn start_decode(&mut self, specs: &[DecodeSpec]) {
+        for s in specs {
+            debug_assert!(self.lanes.len() < self.policy.max_batch);
+            self.lanes.push(s.req, s.prompt_len, 0, s.budget, s.slot, 0);
         }
     }
 
     /// Adopt a sequence arriving from another pool's prefill via KV handoff:
     /// it enters decode directly, with `generated` tokens (the prefill-side
-    /// first token) already produced and its KV position past the prompt.
-    pub fn adopt(&mut self, req: ReqId, position: u32, generated: u32, budget: u32) {
-        debug_assert!(self.running.len() < self.policy.max_batch, "adopt into full batch");
-        self.running.push(RunningSeq { req, position, generated, budget });
+    /// first token, `last_token`) already produced and its KV position past
+    /// the prompt.
+    pub fn adopt(
+        &mut self,
+        req: ReqId,
+        position: u32,
+        generated: u32,
+        budget: u32,
+        slot: usize,
+        last_token: i32,
+    ) {
+        debug_assert!(self.lanes.len() < self.policy.max_batch, "adopt into full batch");
+        self.lanes.push(req, position, generated, budget, slot, last_token);
     }
 
     /// Record one generated token for `req`; returns true if it finished.
-    pub fn on_token(&mut self, req: ReqId) -> bool {
-        let Some(seq) = self.running.iter_mut().find(|s| s.req == req) else {
+    /// An untracked request is a bookkeeping bug (decode rounds only ever
+    /// contain running lanes), asserted in debug builds.
+    pub fn on_token(&mut self, req: ReqId, token: i32) -> bool {
+        let Some(lane) = self.lanes.lane_of(req) else {
+            debug_assert!(false, "on_token for untracked request {req:?}");
             return false;
         };
-        seq.generated += 1;
-        seq.position += 1;
-        seq.generated >= seq.budget
+        self.lanes.generated[lane] += 1;
+        self.lanes.position[lane] += 1;
+        self.lanes.last_token[lane] = token;
+        self.lanes.generated[lane] >= self.lanes.budget[lane]
     }
 
     /// Remove a finished sequence; returns whether its slot can be refilled
     /// immediately (in-flight remap policy).
     pub fn finish(&mut self, req: ReqId) -> bool {
-        self.running.retain(|s| s.req != req);
-        if self.running.is_empty() {
+        if let Some(lane) = self.lanes.lane_of(req) {
+            self.lanes.remove(lane);
+        }
+        if self.lanes.is_empty() {
             self.draining = false;
         }
         self.policy.inflight_remap
@@ -246,7 +341,7 @@ impl Batcher {
         if self.policy.inflight_remap {
             true
         } else {
-            self.running.is_empty()
+            self.lanes.is_empty()
         }
     }
 }
@@ -261,6 +356,10 @@ mod tests {
         ReqId(i)
     }
 
+    fn spec(i: u32, prompt_len: u32, budget: u32) -> DecodeSpec {
+        DecodeSpec { req: rid(i), prompt_len, budget, slot: i as usize }
+    }
+
     #[test]
     fn continuous_prefers_prefill_when_slots_free() {
         let mut b = Batcher::new(BatchPolicy::default());
@@ -270,13 +369,11 @@ mod tests {
             Work::Prefill(v) => assert_eq!(v.len(), 2),
             w => panic!("expected prefill, got {w:?}"),
         }
-        b.start_decode(&[(rid(1), 16, 4), (rid(2), 16, 4)]);
+        b.start_decode(&[spec(1, 16, 4), spec(2, 16, 4)]);
         assert_eq!(b.free_slots(), 2);
-        // No waiting -> decode round
-        match b.next_work() {
-            Work::DecodeRound(v) => assert_eq!(v.len(), 2),
-            w => panic!("expected decode, got {w:?}"),
-        }
+        // No waiting -> decode round over the lane slice.
+        assert_eq!(b.next_work(), Work::DecodeRound);
+        assert_eq!(b.lanes().len(), 2);
     }
 
     #[test]
@@ -290,11 +387,11 @@ mod tests {
         b.enqueue(rid(3), 8, SimTime(0));
         let Work::Prefill(v) = b.next_work() else { panic!() };
         assert_eq!(v.len(), 2);
-        b.start_decode(&[(rid(1), 8, 2), (rid(2), 8, 2)]);
+        b.start_decode(&[spec(1, 8, 2), spec(2, 8, 2)]);
         // Even though a request waits, static policy decodes the batch.
-        assert!(matches!(b.next_work(), Work::DecodeRound(_)));
+        assert!(matches!(b.next_work(), Work::DecodeRound));
         b.finish(rid(1));
-        assert!(matches!(b.next_work(), Work::DecodeRound(_)));
+        assert!(matches!(b.next_work(), Work::DecodeRound));
         b.finish(rid(2));
         // Drained: now the next batch may start.
         assert!(matches!(b.next_work(), Work::Prefill(_)));
@@ -328,11 +425,14 @@ mod tests {
     #[test]
     fn token_and_finish_lifecycle() {
         let mut b = Batcher::new(BatchPolicy::default());
-        b.start_decode(&[(rid(1), 8, 2)]);
-        assert!(!b.on_token(rid(1)));
-        assert!(b.on_token(rid(1))); // budget reached
+        b.start_decode(&[spec(1, 8, 2)]);
+        assert!(!b.on_token(rid(1), 42));
+        assert_eq!(b.lanes().last_tokens(), &[42]);
+        assert_eq!(b.lanes().positions(), &[9]);
+        assert!(b.on_token(rid(1), 43)); // budget reached
         assert!(b.finish(rid(1)));
-        assert!(b.running().is_empty());
+        assert!(b.lanes().is_empty());
+        assert_eq!(b.lanes().lane_of(rid(1)), None);
     }
 
     #[test]
@@ -340,11 +440,34 @@ mod tests {
         let mut pol = BatchPolicy::default();
         pol.inflight_remap = false;
         let mut b = Batcher::new(pol);
-        b.start_decode(&[(rid(1), 8, 4), (rid(2), 8, 4)]);
+        b.start_decode(&[spec(1, 8, 4), spec(2, 8, 4)]);
         b.finish(rid(1));
         assert!(!b.may_refill());
         b.finish(rid(2));
         assert!(b.may_refill());
+    }
+
+    #[test]
+    fn lane_removal_preserves_order_and_reindexes() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        b.start_decode(&[spec(1, 8, 4), spec(2, 9, 4), spec(3, 10, 4), spec(4, 11, 4)]);
+        b.finish(rid(2));
+        assert_eq!(b.lanes().reqs(), &[rid(1), rid(3), rid(4)]);
+        assert_eq!(b.lanes().positions(), &[8, 10, 11]);
+        assert_eq!(b.lanes().slots(), &[1, 3, 4]);
+        assert_eq!(b.lanes().lane_of(rid(3)), Some(1));
+        assert_eq!(b.lanes().lane_of(rid(4)), Some(2));
+        assert_eq!(b.lanes().lane_of(rid(2)), None);
+    }
+
+    #[test]
+    fn adopted_lane_carries_slot_and_last_token() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        b.adopt(rid(7), 33, 1, 8, 3, 1234);
+        assert_eq!(b.lanes().reqs(), &[rid(7)]);
+        assert_eq!(b.lanes().positions(), &[33]);
+        assert_eq!(b.lanes().slots(), &[3]);
+        assert_eq!(b.lanes().last_tokens(), &[1234]);
     }
 
     #[test]
@@ -374,13 +497,27 @@ mod tests {
                             prop_assert!(seen_prefill.insert(r.0), "req {r} prefilled twice");
                         }
                         in_queue -= v.len();
-                        let specs: Vec<_> = v.iter().map(|r| (*r, 8u32, 2u32)).collect();
+                        let specs: Vec<DecodeSpec> = v
+                            .iter()
+                            .enumerate()
+                            .map(|(i, r)| DecodeSpec {
+                                req: *r,
+                                prompt_len: 8,
+                                budget: 2,
+                                slot: i,
+                            })
+                            .collect();
                         b.start_decode(&specs);
                     }
-                    Work::DecodeRound(v) => {
-                        prop_assert!(!v.is_empty(), "empty decode round");
-                        for r in v {
-                            if b.on_token(r) {
+                    Work::DecodeRound => {
+                        prop_assert!(!b.lanes().is_empty(), "empty decode round");
+                        let round: Vec<ReqId> = b.lanes().reqs().to_vec();
+                        for r in round {
+                            prop_assert!(
+                                b.lanes().lane_of(r).is_some(),
+                                "round member {r} untracked"
+                            );
+                            if b.on_token(r, r.0 as i32) {
                                 b.finish(r);
                             }
                         }
@@ -394,7 +531,7 @@ mod tests {
                     in_queue
                 );
                 prop_assert!(
-                    b.running().len() <= b.policy().max_batch,
+                    b.lanes().len() <= b.policy().max_batch,
                     "running overflow"
                 );
             }

@@ -6,6 +6,11 @@
 //! Every step emits the telemetry a DPU (or software observer) would see.
 //! Token *content* is produced by a [`ComputeBackend`]: either the real
 //! PJRT-compiled transformer (`runtime::model`) or a fast surrogate sampler.
+//!
+//! The hot entry point is [`run_iteration_in`], which threads an
+//! [`ExecScratch`] arena through the stage walk so a steady-state iteration
+//! allocates nothing; [`run_iteration`] is the allocating convenience
+//! wrapper (tests, one-shot callers) returning an owned [`IterTiming`].
 
 use crate::cluster::{Cluster, Outbox};
 use crate::engine::parallel::ParallelPlan;
@@ -17,12 +22,27 @@ use crate::telemetry::event::{CollKind, Phase, TelemetryKind};
 /// Produces actual next tokens for sequences. Implemented by the PJRT
 /// runtime (real model) and by [`SurrogateBackend`] (hash sampler).
 pub trait ComputeBackend {
-    /// Prefill `prompts` into the given batch slots; returns the first
-    /// generated token per sequence (same order as `slots`).
-    fn prefill(&mut self, slots: &[usize], prompts: &[Vec<i32>]) -> Vec<i32>;
-    /// One decode step for the given slots: last tokens + KV positions ->
-    /// next token per sequence.
-    fn decode(&mut self, slots: &[usize], last_tokens: &[i32], positions: &[u32]) -> Vec<i32>;
+    /// Prefill the prompts into the given batch slots; returns the first
+    /// generated token per sequence (same order as `slots`). Prompts are
+    /// borrowed slices — completing a prefill must not clone token buffers.
+    fn prefill(&mut self, slots: &[usize], prompts: &[&[i32]]) -> Vec<i32>;
+    /// One decode step for the given slots: last tokens + KV positions →
+    /// next token per sequence, appended into `out` (cleared first). The
+    /// steady-state entry point: implementations must not allocate beyond
+    /// `out`'s existing capacity.
+    fn decode_into(
+        &mut self,
+        slots: &[usize],
+        last_tokens: &[i32],
+        positions: &[u32],
+        out: &mut Vec<i32>,
+    );
+    /// Allocating convenience wrapper over [`ComputeBackend::decode_into`].
+    fn decode(&mut self, slots: &[usize], last_tokens: &[i32], positions: &[u32]) -> Vec<i32> {
+        let mut out = Vec::with_capacity(slots.len());
+        self.decode_into(slots, last_tokens, positions, &mut out);
+        out
+    }
     /// True when this backend runs the real compiled model.
     fn is_real(&self) -> bool {
         false
@@ -57,7 +77,7 @@ impl SurrogateBackend {
 }
 
 impl ComputeBackend for SurrogateBackend {
-    fn prefill(&mut self, _slots: &[usize], prompts: &[Vec<i32>]) -> Vec<i32> {
+    fn prefill(&mut self, _slots: &[usize], prompts: &[&[i32]]) -> Vec<i32> {
         prompts
             .iter()
             .map(|p| {
@@ -67,12 +87,17 @@ impl ComputeBackend for SurrogateBackend {
             .collect()
     }
 
-    fn decode(&mut self, _slots: &[usize], last_tokens: &[i32], positions: &[u32]) -> Vec<i32> {
-        last_tokens
-            .iter()
-            .zip(positions)
-            .map(|(&t, &p)| self.hash_next(t as i64 * 131 + p as i64))
-            .collect()
+    fn decode_into(
+        &mut self,
+        _slots: &[usize],
+        last_tokens: &[i32],
+        positions: &[u32],
+        out: &mut Vec<i32>,
+    ) {
+        out.clear();
+        for (&t, &p) in last_tokens.iter().zip(positions) {
+            out.push(self.hash_next(t as i64 * 131 + p as i64));
+        }
     }
 
     fn clone_box(&self) -> Box<dyn ComputeBackend> {
@@ -85,7 +110,8 @@ impl ComputeBackend for SurrogateBackend {
 pub enum IterKind {
     /// Prefill of `reqs` with these (padded) prompt lengths.
     Prefill { reqs: Vec<ReqId>, prompt_lens: Vec<u32> },
-    /// One decode step across `reqs` at these context lengths.
+    /// One decode step across `reqs` at these context lengths. The vectors
+    /// are recycled through the coordinator's `IterScratch` between rounds.
     Decode { reqs: Vec<ReqId>, ctx_lens: Vec<u32> },
 }
 
@@ -111,8 +137,26 @@ impl CollSeq {
     }
 }
 
+/// Reusable buffers for the stage walk. One per replica, recycled every
+/// iteration: after warmup the capacities plateau and `run_iteration_in`
+/// touches the heap zero times per round.
+#[derive(Debug, Clone, Default)]
+pub struct ExecScratch {
+    /// Per-stage completion times (the wrapper moves this into
+    /// [`IterTiming`]; hot callers read it in place).
+    pub stage_done: Vec<SimTime>,
+    node_done: Vec<SimTime>,
+    gpus_here: Vec<usize>,
+    node_frac: Vec<f64>,
+    silent: Vec<bool>,
+}
+
 /// Execute one iteration over the cluster, emitting telemetry into `out`.
-pub fn run_iteration(
+/// Allocation-free: all intermediate buffers live in `scratch`. Returns
+/// `(done, flops)`; per-stage completion times are left in
+/// `scratch.stage_done`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_iteration_in(
     now: SimTime,
     kind: &IterKind,
     cluster: &mut Cluster,
@@ -120,7 +164,8 @@ pub fn run_iteration(
     profile: &ModelProfile,
     colls: &mut CollSeq,
     out: &mut Outbox,
-) -> IterTiming {
+    scratch: &mut ExecScratch,
+) -> (SimTime, f64) {
     let (phase, total_tokens, batch, mean_ctx) = match kind {
         IterKind::Prefill { prompt_lens, .. } => {
             let toks: u32 = prompt_lens.iter().sum();
@@ -138,7 +183,7 @@ pub fn run_iteration(
         Phase::Decode => profile.flops_decode(batch, mean_ctx),
     };
 
-    let mut stage_done: Vec<SimTime> = Vec::with_capacity(plan.n_stages());
+    scratch.stage_done.clear();
     let mut stage_input_ready = now;
 
     for (si, stage) in plan.stages.iter().enumerate() {
@@ -155,13 +200,14 @@ pub fn run_iteration(
         };
 
         // --- per-GPU compute, fed by per-GPU H2D slices ---
-        let mut node_done: Vec<SimTime> = Vec::with_capacity(n_nodes);
+        scratch.node_done.clear();
         for (ni, &node) in stage.nodes.iter().enumerate() {
             let mut gpu_done_max = stage_input_ready;
-            let gpus_here: Vec<usize> = (0..stage.gpus.len())
-                .filter(|&gi| cluster.node_of(stage.gpus[gi]) == node)
-                .collect();
-            for &gi in &gpus_here {
+            scratch.gpus_here.clear();
+            scratch.gpus_here.extend(
+                (0..stage.gpus.len()).filter(|&gi| cluster.node_of(stage.gpus[gi]) == node),
+            );
+            for &gi in &scratch.gpus_here {
                 let gpu = stage.gpus[gi];
                 let frac = stage.shard_frac[gi];
                 let ready = if feed_bytes > 0 {
@@ -178,68 +224,66 @@ pub fn run_iteration(
             }
             // Intra-node TP reduce over NVLink (DPU-invisible): lead GPU
             // gathers peers' partials.
-            if gpus_here.len() > 1 {
-                let lead = stage.gpus[gpus_here[0]];
+            if scratch.gpus_here.len() > 1 {
+                let lead = stage.gpus[scratch.gpus_here[0]];
                 let part_bytes = profile.activation_bytes(total_tokens.max(batch))
-                    / gpus_here.len() as u64;
+                    / scratch.gpus_here.len() as u64;
                 let mut reduce_done = gpu_done_max;
-                for &gi in &gpus_here[1..] {
+                for &gi in &scratch.gpus_here[1..] {
                     let done =
                         cluster.p2p(gpu_done_max, stage.gpus[gi], lead, part_bytes.max(64), out);
                     reduce_done = reduce_done.max(done);
                 }
                 gpu_done_max = reduce_done;
             }
-            node_done.push(gpu_done_max);
+            scratch.node_done.push(gpu_done_max);
             let _ = ni;
         }
 
         // --- cross-node TP allreduce (DPU-visible collective bursts) ---
-        let mut stage_complete = *node_done.iter().max().unwrap_or(&stage_input_ready);
+        let mut stage_complete =
+            *scratch.node_done.iter().max().unwrap_or(&stage_input_ready);
         if n_nodes > 1 {
             let coll = colls.next();
             let total_act = profile.activation_bytes(total_tokens.max(batch)).max(256);
             // Per-node payload follows that node's shard ownership: a
             // misaligned activation partitioning (EW3) shows up as uneven
             // per-source volume at every destination DPU.
-            let node_frac: Vec<f64> = stage
-                .nodes
-                .iter()
-                .map(|&n| {
+            scratch.node_frac.clear();
+            for &n in stage.nodes.iter() {
+                scratch.node_frac.push(
                     stage
                         .gpus
                         .iter()
                         .zip(&stage.shard_frac)
                         .filter(|(g, _)| cluster.node_of(**g) == n)
                         .map(|(_, f)| *f)
-                        .sum::<f64>()
-                })
-                .collect();
+                        .sum::<f64>(),
+                );
+            }
             let expected = n_nodes as u32;
             let mut last_arrival = stage_complete;
             // EW9: a node early-stopping without remap goes silent — its
             // bursts never arrive and destination collectives stall.
-            let silent: Vec<bool> = stage
-                .nodes
-                .iter()
-                .map(|&n| {
-                    let p = cluster.nodes[n.idx()].knobs.collective_silence;
-                    p > 0.0 && cluster.nodes[n.idx()].rng.chance(p)
-                })
-                .collect();
+            scratch.silent.clear();
+            for &n in stage.nodes.iter() {
+                let p = cluster.nodes[n.idx()].knobs.collective_silence;
+                scratch.silent.push(p > 0.0 && cluster.nodes[n.idx()].rng.chance(p));
+            }
             for &dst in stage.nodes.iter() {
                 // Each destination sees: its own shard completion ("self burst",
                 // the outgoing RDMA doorbell) + one burst per peer.
                 for (bi, &src) in stage.nodes.iter().enumerate() {
-                    if silent[bi] && src != dst {
+                    if scratch.silent[bi] && src != dst {
                         continue;
                     }
-                    let act_bytes =
-                        ((total_act as f64) * node_frac[bi] * n_nodes as f64).max(256.0) as u64;
+                    let act_bytes = ((total_act as f64) * scratch.node_frac[bi]
+                        * n_nodes as f64)
+                        .max(256.0) as u64;
                     let t_arrive = if src == dst {
-                        node_done[bi]
+                        scratch.node_done[bi]
                     } else {
-                        cluster.rdma(node_done[bi], src, dst, act_bytes, false, out)
+                        cluster.rdma(scratch.node_done[bi], src, dst, act_bytes, false, out)
                     };
                     out.emit(
                         t_arrive,
@@ -251,7 +295,7 @@ pub fn run_iteration(
                             rank: bi as u32,
                             expected_ranks: expected,
                             bytes: act_bytes,
-                            latency_ns: (t_arrive - node_done[bi]).ns(),
+                            latency_ns: (t_arrive - scratch.node_done[bi]).ns(),
                         },
                     );
                     last_arrival = last_arrival.max(t_arrive);
@@ -336,7 +380,7 @@ pub fn run_iteration(
             }
             stage_input_ready = handoff_done;
         }
-        stage_done.push(stage_complete);
+        scratch.stage_done.push(stage_complete);
     }
 
     // --- D2H logits on the exit stage's lead node ---
@@ -347,14 +391,30 @@ pub fn run_iteration(
         .find(|&&g| cluster.node_of(g) == exit)
         .expect("exit node has gpus");
     let logits_at = cluster.d2h(
-        *stage_done.last().unwrap(),
+        *scratch.stage_done.last().unwrap(),
         exit_gpu,
         profile.logits_bytes(batch).max(256),
         phase,
         out,
     );
 
-    IterTiming { done: logits_at, stage_done, flops: total_flops }
+    (logits_at, total_flops)
+}
+
+/// Allocating wrapper over [`run_iteration_in`] returning an owned
+/// [`IterTiming`] (tests, one-shot callers).
+pub fn run_iteration(
+    now: SimTime,
+    kind: &IterKind,
+    cluster: &mut Cluster,
+    plan: &ParallelPlan,
+    profile: &ModelProfile,
+    colls: &mut CollSeq,
+    out: &mut Outbox,
+) -> IterTiming {
+    let mut scratch = ExecScratch::default();
+    let (done, flops) = run_iteration_in(now, kind, cluster, plan, profile, colls, out, &mut scratch);
+    IterTiming { done, stage_done: scratch.stage_done, flops }
 }
 
 #[cfg(test)]
@@ -396,6 +456,36 @@ mod tests {
             })
             .count();
         assert!(kv_bursts > 0);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_the_allocating_wrapper() {
+        // The same iteration through a warm ExecScratch must reproduce the
+        // wrapper's outcome exactly (same RNG-free path, same timings).
+        let (mut c1, plan1, profile) = setup();
+        let mut out1 = Outbox::new();
+        let mut colls1 = CollSeq::default();
+        let kind = IterKind::Decode { reqs: vec![ReqId(1); 3], ctx_lens: vec![40, 50, 60] };
+        let t = run_iteration(SimTime(500), &kind, &mut c1, &plan1, &profile, &mut colls1, &mut out1);
+
+        let (mut c2, plan2, _) = setup();
+        let mut out2 = Outbox::new();
+        let mut colls2 = CollSeq::default();
+        let mut scratch = ExecScratch::default();
+        // Warm the scratch on an unrelated iteration first.
+        let warm = IterKind::Prefill { reqs: vec![ReqId(9)], prompt_lens: vec![16] };
+        let mut warm_cluster = setup().0;
+        let _ = run_iteration_in(
+            SimTime(0), &warm, &mut warm_cluster, &plan2, &profile, &mut CollSeq::default(),
+            &mut Outbox::new(), &mut scratch,
+        );
+        let (done, flops) = run_iteration_in(
+            SimTime(500), &kind, &mut c2, &plan2, &profile, &mut colls2, &mut out2, &mut scratch,
+        );
+        assert_eq!(done, t.done);
+        assert_eq!(flops, t.flops);
+        assert_eq!(scratch.stage_done, t.stage_done);
+        assert_eq!(out1.items, out2.items);
     }
 
     #[test]
@@ -463,8 +553,9 @@ mod tests {
     #[test]
     fn surrogate_backend_deterministic() {
         let mut b = SurrogateBackend::new(512);
-        let p1 = b.prefill(&[0, 1], &[vec![1, 2, 3], vec![4, 5]]);
-        let p2 = b.prefill(&[0, 1], &[vec![1, 2, 3], vec![4, 5]]);
+        let (pa, pb): (&[i32], &[i32]) = (&[1, 2, 3], &[4, 5]);
+        let p1 = b.prefill(&[0, 1], &[pa, pb]);
+        let p2 = b.prefill(&[0, 1], &[pa, pb]);
         assert_eq!(p1, p2);
         assert!(p1.iter().all(|&t| (3..512).contains(&t)));
         let d1 = b.decode(&[0, 1], &[7, 9], &[10, 20]);
@@ -472,5 +563,9 @@ mod tests {
         assert_eq!(d1, d2);
         assert_ne!(d1[0], d1[1]);
         assert!(!b.is_real());
+        // decode_into reuses the caller's buffer and matches decode.
+        let mut buf = vec![0; 8];
+        b.decode_into(&[0, 1], &[7, 9], &[10, 20], &mut buf);
+        assert_eq!(buf, d1);
     }
 }

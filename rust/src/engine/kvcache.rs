@@ -117,6 +117,11 @@ impl KvCache {
     }
 
     /// Grow a sequence by one generated token; may allocate a page.
+    ///
+    /// "Allocate" here means pool accounting only: a [`SeqAlloc`] is a pair
+    /// of `u32` counters, so this is pure arithmetic on the existing entry
+    /// and the decode hot path (`coordinator::iterate`) can call it per
+    /// lane per round without touching the heap.
     pub fn append_token(&mut self, req: ReqId) -> AllocResult {
         let Some(s) = self.seqs.get_mut(&req) else {
             debug_assert!(false, "append on unknown {req}");

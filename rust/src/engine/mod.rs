@@ -11,8 +11,8 @@ pub mod parallel;
 pub mod profile;
 pub mod router;
 
-pub use batcher::{BatchPolicy, Batcher, Work};
-pub use exec::{CollSeq, ComputeBackend, IterKind, IterTiming, SurrogateBackend};
+pub use batcher::{BatchPolicy, Batcher, DecodeSpec, Lanes, Work};
+pub use exec::{CollSeq, ComputeBackend, ExecScratch, IterKind, IterTiming, SurrogateBackend};
 pub use kvcache::{AllocResult, KvCache};
 pub use parallel::{build_replicas, build_shaped_replicas, ParallelPlan};
 pub use profile::{preset, ModelProfile};
@@ -295,7 +295,11 @@ impl Engine {
     /// pool. On a multi-pool plane the flow first hashes to an admission
     /// pool, then the router picks within it; single-pool fleets take the
     /// classic full-membership path bit for bit. Returns the replica index.
-    pub fn register(&mut self, req: InferenceRequest) -> usize {
+    pub fn register(&mut self, mut req: InferenceRequest) -> usize {
+        // The registered copy is the one decode pushes tokens into; give it
+        // full-budget capacity so the steady-state iteration never grows it
+        // (clones don't inherit spare capacity from `InferenceRequest::new`).
+        req.generated.reserve(req.max_new_tokens.saturating_sub(req.generated.len()));
         let r = if self.pools.prefill_pools.len() > 1 {
             let p = pool_of_flow(req.flow, self.pools.prefill_pools.len());
             self.router.route_in(req.flow, &self.pools.prefill_pools[p])

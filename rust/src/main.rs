@@ -40,9 +40,11 @@
 //!   perf      [--quick] [--replicates N] [--threads N] [--json-out PATH]
 //!             [--fleet-stress]
 //!             pipeline benchmark: batched ingest throughput, snapshot
-//!             latency, matrix/fleet end-to-end wall-clock, and the
+//!             latency, the decode-iteration microbench (rounds/sec and
+//!             heap bytes per steady-state iteration at batch 8/64/256),
+//!             matrix/fleet end-to-end wall-clock, and the
 //!             snapshot-and-branch prefix-reuse counters, written as
-//!             BENCH_pipeline.json (schema dpulens.perf.v3);
+//!             BENCH_pipeline.json (schema dpulens.perf.v4);
 //!             --fleet-stress appends the 100→1000-replica multi-pool
 //!             scaling curve (events/sec, wall-clock per sim-second,
 //!             allocation counters)

@@ -116,7 +116,7 @@ impl TransformerSession {
     pub fn prefill_slots(
         &mut self,
         slots: &[usize],
-        prompts: &[Vec<i32>],
+        prompts: &[&[i32]],
     ) -> Result<Vec<Vec<f32>>> {
         assert_eq!(slots.len(), prompts.len());
         let mut tokens = vec![vec![0i32; self.prefill_len]; self.batch];
@@ -180,14 +180,22 @@ impl TransformerSession {
 }
 
 impl ComputeBackend for TransformerSession {
-    fn prefill(&mut self, slots: &[usize], prompts: &[Vec<i32>]) -> Vec<i32> {
+    fn prefill(&mut self, slots: &[usize], prompts: &[&[i32]]) -> Vec<i32> {
         let logits = self
             .prefill_slots(slots, prompts)
             .expect("PJRT prefill failed");
         logits.iter().map(|l| Self::argmax(l)).collect()
     }
 
-    fn decode(&mut self, slots: &[usize], last_tokens: &[i32], positions: &[u32]) -> Vec<i32> {
+    fn decode_into(
+        &mut self,
+        slots: &[usize],
+        last_tokens: &[i32],
+        positions: &[u32],
+        out: &mut Vec<i32>,
+    ) {
+        // The real backend allocates internally (device transfers dwarf
+        // it); only the output buffer is the caller's.
         let mut toks = vec![0i32; self.batch];
         let mut pos = vec![0i32; self.batch];
         for (i, &slot) in slots.iter().enumerate() {
@@ -195,7 +203,8 @@ impl ComputeBackend for TransformerSession {
             pos[slot] = (positions[i] as i32).min(self.max_seq as i32 - 1);
         }
         let logits = self.decode_step(&toks, &pos).expect("PJRT decode failed");
-        slots.iter().map(|&s| Self::argmax(&logits[s])).collect()
+        out.clear();
+        out.extend(slots.iter().map(|&s| Self::argmax(&logits[s])));
     }
 
     fn is_real(&self) -> bool {

@@ -308,6 +308,34 @@ impl<E> Engine<E> {
         }
     }
 
+    /// Mint the next insertion sequence without scheduling anything. Event
+    /// coalescing (see `coordinator::iterate`) pre-mints one seq per logical
+    /// sub-event at the exact program point the uncoalesced code would have
+    /// scheduled it, then carries the batch under a single calendar entry —
+    /// the `(t, seq)` keyspace, and therefore the total order, is identical
+    /// to the per-event schedule it replaces.
+    pub fn alloc_seq(&mut self) -> u64 {
+        let seq = self.seq;
+        self.seq += 1;
+        seq
+    }
+
+    /// Schedule with a pre-minted sequence from [`Engine::alloc_seq`]. The
+    /// caller must pass each minted seq at most once; `(at, seq)` then slots
+    /// into the total order exactly where an inline schedule at mint time
+    /// would have.
+    pub fn schedule_at_shard_seq(&mut self, shard: usize, at: SimTime, seq: u64, payload: E) {
+        let at = at.max(self.now);
+        debug_assert!(seq < self.seq, "seq {seq} was never minted");
+        match &mut self.backend {
+            Backend::Heap(h) => h.push(Scheduled { at, seq, payload }),
+            Backend::Bucket(shards) => {
+                let i = shard.min(shards.len() - 1);
+                shards[i].schedule(at, seq, payload);
+            }
+        }
+    }
+
     /// Schedule `payload` after a delay from now (shard 0).
     pub fn schedule_in(&mut self, delay: SimDur, payload: E) {
         self.schedule_at(self.now + delay, payload);
@@ -343,6 +371,27 @@ impl<E> Engine<E> {
         match &self.backend {
             Backend::Heap(h) => h.peek().map(|e| e.at),
             Backend::Bucket(shards) => shards.iter().filter_map(|s| s.peek_at()).min(),
+        }
+    }
+
+    /// Peek the next event's full `(t, seq)` merge key without popping —
+    /// the drain limit for coalesced-event dispatch: everything in a batch
+    /// with a key below this would have popped before the calendar's next
+    /// entry. Uses the same lazy shard promotion as `pop`, hence `&mut`.
+    pub fn peek_key(&mut self) -> Option<(SimTime, u64)> {
+        match &mut self.backend {
+            Backend::Heap(h) => h.peek().map(|e| (e.at, e.seq)),
+            Backend::Bucket(shards) => {
+                let mut best: Option<(SimTime, u64)> = None;
+                for sh in shards.iter_mut() {
+                    if let Some(k) = sh.front() {
+                        if best.map_or(true, |bk| k < bk) {
+                            best = Some(k);
+                        }
+                    }
+                }
+                best
+            }
         }
     }
 
@@ -568,6 +617,38 @@ mod tests {
             assert_eq!(reused.pending(), 0);
             let second = run(&mut reused);
             assert_eq!(first, second, "{kind:?}: reused engine must replay identically");
+        }
+    }
+
+    /// Pre-minted seqs slot into the total order exactly where an inline
+    /// schedule at mint time would have, on both backends and across shards.
+    #[test]
+    fn pre_minted_seqs_keep_the_inline_total_order() {
+        for kind in both_kinds() {
+            let mut e: Engine<u32> = Engine::with_shards(kind, 3);
+            e.schedule_at_shard(1, SimTime(50), 0);
+            let s1 = e.alloc_seq(); // would have been the tie at t=50
+            e.schedule_at_shard(2, SimTime(50), 2); // later mint, same t
+            e.schedule_at_shard_seq(0, SimTime(50), s1, 1);
+            let order: Vec<u32> = std::iter::from_fn(|| e.pop().map(|(_, p)| p)).collect();
+            assert_eq!(order, vec![0, 1, 2], "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn peek_key_matches_the_next_pop() {
+        for kind in both_kinds() {
+            let mut e: Engine<u64> = Engine::with_shards(kind, 4);
+            assert_eq!(e.peek_key(), None, "{kind:?}");
+            let mut rng = Rng::seeded(0xBEEF);
+            for i in 0..500u64 {
+                e.schedule_at_shard(rng.index(4), SimTime(rng.below(300_000)), i);
+            }
+            while let Some(key) = e.peek_key() {
+                let (t, _) = e.pop().expect("peek_key implies a pending event");
+                assert_eq!(t, key.0, "{kind:?}");
+            }
+            assert_eq!(e.pending(), 0);
         }
     }
 }

@@ -79,7 +79,9 @@ impl InferenceRequest {
             handoff_start: None,
             handoff_done: None,
             kv_handoff_bytes: 0,
-            generated: Vec::new(),
+            // Full-budget capacity up front so steady-state decode pushes
+            // never reallocate (the zero-alloc iteration invariant).
+            generated: Vec::with_capacity(max_new.max(1)),
         }
     }
 

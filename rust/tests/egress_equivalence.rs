@@ -1,0 +1,124 @@
+//! Egress-coalescing equivalence (runs in the perf-probe tier beside
+//! `iter_hot_path`, the other half of the iteration hot-path contract).
+//!
+//! `ScenarioCfg::per_token_egress = true` replays the legacy scheduling —
+//! one calendar event per generated token — while the default path arms a
+//! single `Ev::EgressBatch` per iteration whose lane replays each token
+//! completion at the exact `(time, seq)` calendar key the legacy event
+//! would have carried. Equivalence is therefore total: every field of the
+//! result bundle (metrics, detections, conservation counters, per-replica
+//! accounting) must match byte for byte, on both calendar backends.
+//!
+//! The schedules are deliberately tie-heavy: arrival rates near capacity
+//! with short outputs make many events share timestamps (egress completions
+//! against iteration boundaries, window ticks, and each other), so the
+//! sequence-number tiebreak — the part the coalesced lane must reproduce
+//! exactly — decides pop order constantly.
+
+use dpulens::coordinator::fleet::{disagg_base_cfg, fleet_base_cfg};
+use dpulens::coordinator::{RunResult, Scenario, ScenarioCfg};
+use dpulens::sim::dist::{Arrival, LengthDist};
+use dpulens::sim::{CalendarKind, SimDur};
+
+/// Deterministic fingerprint over the result bundle. `class_counts` is the
+/// one HashMap-keyed field (iteration order varies run to run), so fold it
+/// through a sorted view instead of `{:?}`.
+fn digest(r: &RunResult) -> String {
+    let mut classes: Vec<_> = r.class_counts.iter().map(|(k, v)| (*k, *v)).collect();
+    classes.sort_unstable();
+    format!(
+        "{:?}|{:?}|{:?}|{:?}|{:?}|{}|{}|{}|{}|{}|{:?}|{:?}|{:?}|{:?}|{:?}|{}|{}|{:?}",
+        r.metrics,
+        r.tenants,
+        r.detections,
+        r.sw_alarm_log,
+        r.actions,
+        r.telemetry_published,
+        r.dpu_ingested,
+        r.dpu_invisible_dropped,
+        r.windows,
+        r.iterations,
+        r.replica_iterations,
+        r.replica_routed,
+        r.replica_kv_peak,
+        r.handoffs,
+        classes,
+        r.requests_arrived,
+        r.handoffs_parked_at_end,
+        r.ladder_transitions,
+    )
+}
+
+fn run_with(mut cfg: ScenarioCfg, per_token: bool, calendar: CalendarKind) -> RunResult {
+    cfg.per_token_egress = per_token;
+    cfg.calendar = calendar;
+    Scenario::new(cfg).run()
+}
+
+/// All four mode combinations of one scenario must produce one digest.
+fn assert_equivalent(mk: impl Fn() -> ScenarioCfg, label: &str) {
+    let baseline = run_with(mk(), true, CalendarKind::Bucket);
+    assert!(
+        baseline.metrics.completed > 0,
+        "{label}: baseline world served no requests; equivalence would be vacuous"
+    );
+    assert!(baseline.telemetry_published > 1_000, "{label}: run too small to be meaningful");
+    let want = digest(&baseline);
+    let coalesced = digest(&run_with(mk(), false, CalendarKind::Bucket));
+    assert_eq!(want, coalesced, "{label}: coalesced egress diverged on the bucket calendar");
+    let heap_legacy = digest(&run_with(mk(), true, CalendarKind::Heap));
+    assert_eq!(want, heap_legacy, "{label}: legacy egress diverged on the heap calendar");
+    let heap_coalesced = digest(&run_with(mk(), false, CalendarKind::Heap));
+    assert_eq!(want, heap_coalesced, "{label}: coalesced egress diverged on the heap calendar");
+}
+
+/// Near-capacity single-replica colocated world: decode batches stay full,
+/// so every iteration emits a multi-token egress burst.
+fn busy_colocated() -> ScenarioCfg {
+    let mut cfg = ScenarioCfg::default();
+    cfg.duration = SimDur::from_ms(400);
+    cfg.window = SimDur::from_ms(5);
+    cfg.warmup_windows = 5;
+    cfg.calib_windows = 20;
+    cfg.workload.arrival = Arrival::Poisson { rate: 2_000.0 };
+    cfg.workload.prompt_len = LengthDist::Uniform { lo: 8, hi: 16 };
+    cfg.workload.output_len = LengthDist::Uniform { lo: 4, hi: 16 };
+    cfg
+}
+
+/// Four colocated replicas at fleet scale: concurrent egress lanes whose
+/// batch events interleave with each other and with every replica's
+/// iteration events.
+fn busy_fleet() -> ScenarioCfg {
+    let mut cfg = fleet_base_cfg(4);
+    cfg.duration = SimDur::from_ms(400);
+    cfg.window = SimDur::from_ms(5);
+    cfg.warmup_windows = 5;
+    cfg.calib_windows = 20;
+    cfg.workload.arrival = Arrival::Poisson { rate: 3_000.0 };
+    cfg
+}
+
+/// The disaggregation topology: prefill-pool replicas emit their first
+/// token through the same egress path before the KV handoff, so the
+/// coalesced lane must also replay the cross-pool case exactly.
+fn busy_disagg() -> ScenarioCfg {
+    let mut cfg = disagg_base_cfg();
+    cfg.duration = SimDur::from_ms(500);
+    cfg
+}
+
+#[test]
+fn coalesced_egress_is_byte_identical_on_a_colocated_replica() {
+    assert_equivalent(busy_colocated, "colocated");
+}
+
+#[test]
+fn coalesced_egress_is_byte_identical_across_a_fleet() {
+    assert_equivalent(busy_fleet, "fleet");
+}
+
+#[test]
+fn coalesced_egress_is_byte_identical_through_the_disagg_handoff() {
+    assert_equivalent(busy_disagg, "disagg");
+}

@@ -1,0 +1,62 @@
+//! Steady-state decode hot-path assertions (requires `--features
+//! perf-probe`).
+//!
+//! This binary registers [`dpulens::util::alloc::CountingAlloc`] as its
+//! global allocator and asserts an *exact zero* allocation delta over a
+//! measured span, so it deliberately holds a single `#[test]` fn: the std
+//! harness runs sibling tests on concurrent threads of the same process,
+//! and any of their allocations would land in the shared counters
+//! mid-measurement. Everything sequential in one body keeps every counted
+//! byte attributable.
+//!
+//! The measured span is the same mid-window design as the `dpulens perf`
+//! iteration microbench (`iter_bench_cfg`): warm past arrival/prefill and
+//! six full telemetry windows so every reusable buffer — bus lanes, outbox,
+//! calendar shards, `IterScratch`, backend staging, egress lanes — reaches
+//! its plateau capacity, then bracket a span that contains no window tick,
+//! no admission, and no retirement: nothing but decode rounds and their
+//! coalesced egress deliveries.
+
+use dpulens::coordinator::perf::iter_bench_cfg;
+use dpulens::coordinator::Scenario;
+use dpulens::sim::{SimTime, MS};
+use dpulens::util::alloc::{stats, CountingAlloc};
+use dpulens::util::perf::probe;
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_decode_iterations_allocate_and_clone_nothing() {
+    for batch in [64usize, 256] {
+        let mut world = Scenario::new(iter_bench_cfg(batch));
+        world.run_to(SimTime(122 * MS));
+        assert_eq!(
+            world.engine.replicas[0].batcher.lanes().len(),
+            batch,
+            "world must be saturated at batch {batch} before measuring"
+        );
+        let iters0 = world.iterations_so_far();
+        probe::reset();
+        let before = stats().allocated;
+        world.run_to(SimTime(138 * MS));
+        let span_bytes = stats().allocated - before;
+        let iters = world.iterations_so_far() - iters0;
+        assert!(iters > 0, "measured span ran no decode iterations at batch {batch}");
+        assert_eq!(
+            world.engine.replicas[0].batcher.lanes().len(),
+            batch,
+            "a lane retired mid-span at batch {batch}; the span is not steady-state"
+        );
+        assert_eq!(
+            span_bytes, 0,
+            "steady-state decode allocated {span_bytes} heap bytes over \
+             {iters} iterations at batch {batch}"
+        );
+        assert_eq!(
+            probe::event_clones(),
+            0,
+            "the decode hot path cloned telemetry events at batch {batch}"
+        );
+    }
+}

@@ -128,7 +128,7 @@ fn quick_fleet_stress_completes_the_100_replica_point() {
     assert!(p.completed > 0, "100-replica world served nothing");
     assert!(p.events > 0, "100-replica world published no telemetry");
     let json = rep.to_json().render();
-    assert!(json.contains("\"schema\":\"dpulens.perf.v3\""));
+    assert!(json.contains("\"schema\":\"dpulens.perf.v4\""));
     assert!(json.contains("\"replicas\":100"));
     assert!(!json.contains("NaN") && !json.contains("inf"));
 }

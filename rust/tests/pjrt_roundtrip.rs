@@ -97,17 +97,17 @@ fn slot_surgery_preserves_other_sequences() {
     use dpulens::engine::exec::ComputeBackend;
     // Reference run: only slot 0 live the whole time.
     let mut a = TransformerSession::load(&client, &arts).expect("load");
-    let t0 = a.prefill(&[0], &[prompt0.clone()])[0];
+    let t0 = a.prefill(&[0], &[prompt0.as_slice()])[0];
     let a1 = a.decode(&[0], &[t0], &[16])[0];
     let a2 = a.decode(&[0], &[a1], &[17])[0];
 
     // Test run: slot 1 gets prefilled mid-stream; slot 0 must not notice.
     let mut b = TransformerSession::load(&client, &arts).expect("load");
-    let u0 = b.prefill(&[0, 1], &[prompt0, prompt1])[0];
+    let u0 = b.prefill(&[0, 1], &[prompt0.as_slice(), prompt1.as_slice()])[0];
     assert_eq!(t0, u0, "same prompt, same first token");
     let b1 = b.decode(&[0], &[u0], &[16])[0];
     assert_eq!(a1, b1);
-    let _ = b.prefill(&[1], &[prompt_new]); // slot-1 replacement
+    let _ = b.prefill(&[1], &[prompt_new.as_slice()]); // slot-1 replacement
     let b2 = b.decode(&[0], &[b1], &[17])[0];
     assert_eq!(a2, b2, "slot-1 prefill corrupted slot 0's KV");
 }
